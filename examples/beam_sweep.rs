@@ -1,0 +1,118 @@
+//! Beam-width ablation (ABL2): sweep the hypothesis unit's beam and
+//! capacity and measure WER, search effort and hypothesis-unit occupancy
+//! — the §3.5 / §2.3.1 trade-off between pruning aggressiveness and
+//! transcription quality, plus what each point implies for the simulated
+//! accelerator's hypothesis-expansion time.
+//!
+//!     make artifacts && cargo run --release --example beam_sweep
+
+use asrpu::accel::{simulate_step, HypWorkload, SimMode};
+use asrpu::config::{artifacts_dir, AccelConfig, DecoderConfig, ModelConfig};
+use asrpu::coordinator::Engine;
+use asrpu::runtime::Runtime;
+use asrpu::synth::{spec, Synthesizer, WerAccum};
+use asrpu::util::rng::Rng;
+use asrpu::util::table::Table;
+
+const N_UTTERANCES: usize = 24;
+/// Beam points are evaluated at elevated noise (the model is trained
+/// with 0.0–0.2 noise augmentation; the protocol default is 0.01) so
+/// pruning aggressiveness actually costs accuracy.
+const SWEEP_NOISE: f64 = 1.0;
+
+fn main() -> anyhow::Result<()> {
+    anyhow::ensure!(
+        artifacts_dir().join("meta.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    let rt = Runtime::cpu()?;
+    let accel = AccelConfig::paper();
+    let model = ModelConfig::paper_tds();
+
+    // Noise robustness at the default beam (context for the sweep).
+    let engine = Engine::from_artifacts(&rt, &artifacts_dir(), DecoderConfig::default())?;
+    let mut tn = Table::new(
+        "ABL2a — noise robustness (default beam 14, greedy vs beam)",
+        &["Noise σ", "Beam WER", "Greedy WER", "Sent acc"],
+    );
+    for noise in [0.01, 0.3, 0.6, 0.9, 1.1, 1.3] {
+        let synth = Synthesizer { noise_std: noise, ..Default::default() };
+        let mut rng = Rng::new(4242);
+        let mut wer = WerAccum::default();
+        let mut gw = WerAccum::default();
+        for _ in 0..N_UTTERANCES {
+            let words = spec::sample_sentence(&mut rng);
+            let u = synth.render(&words, &mut rng);
+            let mut s = engine.open(true)?;
+            engine.feed(&mut s, &u.samples)?;
+            let tr = engine.finish(&mut s)?;
+            let gr = engine.greedy_of(&s)?;
+            wer.add(&u.words, &tr.words);
+            gw.add(&u.words, &gr.words);
+        }
+        tn.row(&[
+            format!("{noise}"),
+            format!("{:.2}%", wer.wer() * 100.0),
+            format!("{:.2}%", gw.wer() * 100.0),
+            format!("{:.0}%", wer.sentence_acc() * 100.0),
+        ]);
+    }
+    println!("{}", tn.render());
+
+    let mut t = Table::new(
+        "ABL2 — beam width vs WER / search effort / simulated hyp-expansion time",
+        &[
+            "Beam", "Max hyps", "WER", "Sent acc", "Mean live", "Peak live",
+            "Cands/frame", "Sim hyp-exp (ms/step)",
+        ],
+    );
+    for (beam, max_hyps) in [
+        (1.0f32, 8usize),
+        (3.0, 32),
+        (6.0, 96),
+        (10.0, 192),
+        (14.0, 384),
+        (20.0, 384),
+    ] {
+        let dec = DecoderConfig { beam, max_hyps, ..Default::default() };
+        let engine = Engine::from_artifacts(&rt, &artifacts_dir(), dec)?;
+        let synth = Synthesizer { noise_std: SWEEP_NOISE, ..Default::default() };
+        let mut rng = Rng::new(4242); // same corpus for every beam point
+        let mut wer = WerAccum::default();
+        let mut stats = asrpu::decoder::PruneStats::default();
+        for _ in 0..N_UTTERANCES {
+            let words = spec::sample_sentence(&mut rng);
+            let u = synth.render(&words, &mut rng);
+            let mut s = engine.open(false)?;
+            engine.feed(&mut s, &u.samples)?;
+            let tr = engine.finish(&mut s)?;
+            wer.add(&u.words, &tr.words);
+            stats.generated += s.decode.stats.generated;
+            stats.merged += s.decode.stats.merged;
+            stats.beam_pruned += s.decode.stats.beam_pruned;
+            stats.capacity_pruned += s.decode.stats.capacity_pruned;
+            stats.peak_live = stats.peak_live.max(s.decode.stats.peak_live);
+            stats.rounds += s.decode.stats.rounds;
+        }
+        // Feed the measured workload to the simulator.
+        let hyp = HypWorkload::from_stats(&stats, 8.0, 0.12);
+        let r = simulate_step(&model, &accel, &hyp, SimMode::Ideal);
+        let hyp_ms = r.hyp_cycles as f64 * accel.cycle_s() * 1e3;
+        t.row(&[
+            format!("{beam}"),
+            max_hyps.to_string(),
+            format!("{:.2}%", wer.wer() * 100.0),
+            format!("{:.0}%", wer.sentence_acc() * 100.0),
+            format!("{:.1}", stats.mean_live()),
+            stats.peak_live.to_string(),
+            format!("{:.1}", stats.generated as f64 / stats.rounds as f64),
+            format!("{hyp_ms:.2}"),
+        ]);
+    }
+    t.footnote = Some(format!(
+        "{N_UTTERANCES} utterances per point, same corpus; capacity capped at the \
+         hypothesis memory's 384 records (Table 2)"
+    ));
+    println!("{}", t.render());
+    Ok(())
+}

@@ -1,0 +1,120 @@
+//! End-to-end validation driver (DESIGN.md experiment E2E): decode a
+//! 64-utterance synthetic test corpus through the full stack — Rust
+//! synthesis → XLA MFCC (AOT) → trained TDS model with Pallas kernels
+//! (AOT, via PJRT) → CTC beam search with lexicon + bigram LM — and
+//! report WER, sentence accuracy, latency and real-time factor. In
+//! parallel, replay the same search workload through the ASRPU simulator
+//! to report what the accelerator would have done (cycles, energy).
+//!
+//!     make artifacts && cargo run --release --example e2e_corpus
+//!
+//! Results are recorded in EXPERIMENTS.md.
+
+use asrpu::accel::{simulate_step, HypWorkload, SimMode};
+use asrpu::config::{artifacts_dir, AccelConfig, DecoderConfig, ModelConfig};
+use asrpu::coordinator::{Engine, LatencyStats};
+use asrpu::power::{step_energy_j, ChipBudget};
+use asrpu::runtime::Runtime;
+use asrpu::synth::{spec, Synthesizer, WerAccum};
+use asrpu::util::rng::Rng;
+use asrpu::util::table::Table;
+
+const N_UTTERANCES: usize = 64;
+const SEED: u64 = 20260710;
+
+fn main() -> anyhow::Result<()> {
+    anyhow::ensure!(
+        artifacts_dir().join("meta.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    let rt = Runtime::cpu()?;
+    let engine = Engine::from_artifacts(&rt, &artifacts_dir(), DecoderConfig::default())?;
+    let synth = Synthesizer::default();
+    let mut rng = Rng::new(SEED);
+
+    let mut wer = WerAccum::default();
+    let mut greedy_wer = WerAccum::default();
+    let mut step_latency = LatencyStats::default();
+    let (mut audio_s, mut compute_s, mut am_s, mut search_s) = (0.0, 0.0, 0.0, 0.0);
+    let mut stats_total = asrpu::decoder::PruneStats::default();
+    let mut mistakes: Vec<(String, String)> = Vec::new();
+
+    for i in 0..N_UTTERANCES {
+        let words = spec::sample_sentence(&mut rng);
+        let u = synth.render(&words, &mut rng);
+        let mut s = engine.open(true)?;
+        // Stream in realistic 80 ms microphone chunks.
+        for chunk in u.samples.chunks(1280) {
+            let t0 = std::time::Instant::now();
+            let ran = engine.feed(&mut s, chunk)?;
+            if ran > 0 {
+                step_latency.record(t0.elapsed());
+            }
+        }
+        let transcript = engine.finish(&mut s)?;
+        let greedy = engine.greedy_of(&s)?;
+        wer.add(&u.words, &transcript.words);
+        greedy_wer.add(&u.words, &greedy.words);
+        if transcript.words != u.words && mistakes.len() < 5 {
+            mistakes.push((u.text.clone(), transcript.text.clone()));
+        }
+        audio_s += s.metrics.audio_s;
+        compute_s += s.metrics.compute_s;
+        am_s += s.metrics.am_s;
+        search_s += s.metrics.search_s;
+        stats_total.generated += s.decode.stats.generated;
+        stats_total.merged += s.decode.stats.merged;
+        stats_total.beam_pruned += s.decode.stats.beam_pruned;
+        stats_total.capacity_pruned += s.decode.stats.capacity_pruned;
+        stats_total.peak_live = stats_total.peak_live.max(s.decode.stats.peak_live);
+        stats_total.rounds += s.decode.stats.rounds;
+        if (i + 1) % 16 == 0 {
+            eprintln!("  {}/{N_UTTERANCES} decoded...", i + 1);
+        }
+    }
+
+    let mut t = Table::new("E2E — 64-utterance synthetic corpus", &["Metric", "Value"]);
+    t.row(&["Utterances".into(), N_UTTERANCES.to_string()]);
+    t.row(&["Beam WER".into(), format!("{:.2}%", wer.wer() * 100.0)]);
+    t.row(&["Greedy (no lexicon/LM) WER".into(), format!("{:.2}%", greedy_wer.wer() * 100.0)]);
+    t.row(&["Sentence accuracy".into(), format!("{:.1}%", wer.sentence_acc() * 100.0)]);
+    t.row(&["Audio decoded".into(), format!("{audio_s:.1} s")]);
+    t.row(&["Compute".into(), format!("{compute_s:.2} s")]);
+    t.row(&["Real-time factor".into(), format!("{:.1}x", audio_s / compute_s)]);
+    t.row(&["AM share of compute".into(), format!("{:.0}%", 100.0 * am_s / compute_s)]);
+    t.row(&["Search share of compute".into(), format!("{:.0}%", 100.0 * search_s / compute_s)]);
+    t.row(&["Step latency p50".into(), format!("{:.2} ms", step_latency.percentile(50.0))]);
+    t.row(&["Step latency p99".into(), format!("{:.2} ms", step_latency.percentile(99.0))]);
+    t.row(&["Mean live hypotheses".into(), format!("{:.1}", stats_total.mean_live())]);
+    t.row(&["Peak live hypotheses".into(), stats_total.peak_live.to_string()]);
+    println!("{}", t.render());
+    if !mistakes.is_empty() {
+        println!("sample errors:");
+        for (r, h) in &mistakes {
+            println!("  ref: {r}\n  hyp: {h}");
+        }
+    }
+
+    // What the ASRPU chip itself would have done with the measured search
+    // workload (paper-scale model, Table 2 config).
+    let accel = AccelConfig::paper();
+    let model = ModelConfig::paper_tds();
+    let hyp = HypWorkload::from_stats(&stats_total, 8.0, 0.12);
+    let r = simulate_step(&model, &accel, &hyp, SimMode::Ideal);
+    let b = ChipBudget::for_config(&accel);
+    let e = step_energy_j(&r, &accel);
+    let mut sim = Table::new(
+        "Same search workload on simulated ASRPU (paper-scale AM)",
+        &["Metric", "Value"],
+    );
+    sim.row(&["Live hypotheses fed to simulator".into(), hyp.n_hyps.to_string()]);
+    sim.row(&["Decoding step".into(), format!("{:.1} ms", r.seconds(&accel) * 1e3)]);
+    sim.row(&["Real-time factor".into(), format!("{:.2}x", r.rtf(&model, &accel))]);
+    sim.row(&["Energy / step".into(), format!("{:.1} mJ", e * 1e3)]);
+    sim.row(&[
+        "Avg power while decoding".into(),
+        format!("{:.2} W (peak budget {:.2} W)", e / r.seconds(&accel), b.total_peak_w()),
+    ]);
+    println!("{}", sim.render());
+    Ok(())
+}

@@ -1,0 +1,46 @@
+//! Quickstart: synthesize one utterance, decode it end-to-end, print the
+//! transcript — the smallest complete use of the public API.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! Falls back to the native backend with random weights (gibberish
+//! transcripts, but the full pipeline) if artifacts are missing.
+
+use asrpu::config::{artifacts_dir, DecoderConfig, ModelConfig};
+use asrpu::coordinator::Engine;
+use asrpu::runtime::Runtime;
+use asrpu::synth::Synthesizer;
+use asrpu::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // 1. An engine: MFCC front-end + TDS acoustic model + CTC beam search
+    //    with lexicon and n-gram LM.
+    let engine = if artifacts_dir().join("meta.json").exists() {
+        let rt = Runtime::cpu()?;
+        Engine::from_artifacts(&rt, &artifacts_dir(), DecoderConfig::default())?
+    } else {
+        eprintln!("(artifacts missing — native backend with random weights)");
+        Engine::native(
+            asrpu::am::TdsModel::random(ModelConfig::tiny_tds(), 1),
+            DecoderConfig::default(),
+        )?
+    };
+
+    // 2. A test utterance from the synthetic-speech protocol.
+    let mut rng = Rng::new(7);
+    let utterance = Synthesizer::default().render_random(&mut rng);
+    println!("reference:  {}", utterance.text);
+
+    // 3. Decode (streaming internally: 80 ms decoding steps).
+    let (transcript, metrics) = engine.decode_utterance(&utterance.samples)?;
+    println!("hypothesis: {}", transcript.text);
+    println!(
+        "score {:.2} | {} steps | {:.2}s audio in {:.0}ms compute ({:.0}x real time)",
+        transcript.score,
+        metrics.steps,
+        metrics.audio_s,
+        metrics.compute_s * 1e3,
+        metrics.rtf()
+    );
+    Ok(())
+}

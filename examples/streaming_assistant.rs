@@ -1,0 +1,93 @@
+//! Streaming-assistant scenario (§2.4): a "microphone" thread feeds 80 ms
+//! chunks in real time over the TCP serving protocol while the device
+//! thread decodes; partial transcripts print as they stabilize — the
+//! low-latency on-edge UX the paper motivates. Ends with server metrics
+//! (p50/p99 feed latency, aggregate RTF).
+//!
+//!     make artifacts && cargo run --release --example streaming_assistant
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use asrpu::config::{artifacts_dir, DecoderConfig, ModelConfig};
+use asrpu::coordinator::{Engine, Server};
+use asrpu::runtime::Runtime;
+use asrpu::synth::Synthesizer;
+use asrpu::util::json::Json;
+use asrpu::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let server = Server::start(
+        "127.0.0.1:0",
+        || {
+            if artifacts_dir().join("meta.json").exists() {
+                let rt = Runtime::cpu()?;
+                Engine::from_artifacts(&rt, &artifacts_dir(), DecoderConfig::default())
+            } else {
+                eprintln!("(artifacts missing — native backend with random weights)");
+                Engine::native(
+                    asrpu::am::TdsModel::random(ModelConfig::tiny_tds(), 1),
+                    DecoderConfig::default(),
+                )
+            }
+        },
+        64,
+    )?;
+    println!("server on {}", server.addr);
+
+    let stream = TcpStream::connect(&server.addr)?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let mut request = |line: String| -> anyhow::Result<Json> {
+        writeln!(writer, "{line}")?;
+        let mut resp = String::new();
+        reader.read_line(&mut resp)?;
+        Ok(Json::parse(resp.trim())?)
+    };
+
+    // Three utterances, streamed back-to-back like an assistant session.
+    let synth = Synthesizer::default();
+    let mut rng = Rng::new(99);
+    for utt_no in 0..3 {
+        let u = synth.render_random(&mut rng);
+        println!("\n--- utterance {utt_no}: \"{}\" ({:.2}s)", u.text, u.samples.len() as f64 / 16000.0);
+        let open = request(r#"{"op":"open"}"#.into())?;
+        let session = open
+            .get("session")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow::anyhow!("open failed: {open}"))?;
+        let mut last_partial = String::new();
+        let t_start = std::time::Instant::now();
+        for (i, chunk) in u.samples.chunks(1280).enumerate() {
+            // Real-time pacing: one 80 ms chunk every 80 ms.
+            let due = std::time::Duration::from_millis(80 * i as u64);
+            if let Some(wait) = due.checked_sub(t_start.elapsed()) {
+                std::thread::sleep(wait);
+            }
+            let samples: Vec<String> = chunk.iter().map(|s| format!("{s:.4}")).collect();
+            let resp = request(format!(
+                r#"{{"op":"feed","session":{session},"samples":[{}]}}"#,
+                samples.join(",")
+            ))?;
+            if let Some(p) = resp.get("partial").and_then(Json::as_str) {
+                if p != last_partial && !p.is_empty() {
+                    println!("  [{:5.2}s] partial: {p}", t_start.elapsed().as_secs_f64());
+                    last_partial = p.to_string();
+                }
+            }
+        }
+        let fin = request(format!(r#"{{"op":"finish","session":{session}}}"#))?;
+        println!(
+            "  final: \"{}\"  (rtf {:.1}x)",
+            fin.get("text").and_then(Json::as_str).unwrap_or("?"),
+            fin.get("rtf").and_then(Json::as_f64).unwrap_or(0.0)
+        );
+    }
+    let stats = request(r#"{"op":"stats"}"#.into())?;
+    println!(
+        "\nserver stats: {}",
+        stats.get("summary").and_then(Json::as_str).unwrap_or("?")
+    );
+    server.shutdown();
+    Ok(())
+}

@@ -1,0 +1,168 @@
+"""AOT export: train the tiny TDS model, lower the streaming step and
+the MFCC front-end to HLO **text**, and write the weights + metadata the
+Rust runtime consumes.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProtos with 64-bit instruction ids that xla_extension
+0.5.1 rejects; the text parser reassigns ids (see /opt/xla-example).
+
+Artifacts (``artifacts/``):
+  model_step.hlo.txt — step(feats, conv_states..., params...) ->
+                       (logits, new_states...)
+  mfcc.hlo.txt       — mfcc(samples[1520]) -> (frames[8, n_mels],)
+  weights.bin        — tensor container (rust/src/util/tensor_io.rs)
+  meta.json          — model geometry, parameter order, training metrics
+
+Run: ``cd python && python -m compile.aot --out-dir ../artifacts``
+"""
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data
+from .features import MfccConfig, mfcc_step_fn
+from .model import (
+    ModelConfig,
+    conv_state_shapes,
+    param_order,
+    streaming_step_fn,
+)
+from .tensor_io import save_tensors
+from .train import train
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # The default printer ELIDES large constants ("constant({...})"),
+    # which the 0.5.1 text parser silently reads back as zeros — the mel
+    # filterbank / DCT matrices and trained weights baked as constants
+    # would vanish. Print them in full; drop metadata noise.
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    opts.print_metadata = False
+    return comp.as_hlo_module().to_string(opts)
+
+
+def export(
+    out_dir: Path,
+    steps: int,
+    ctc_steps: int,
+    seed: int,
+    use_pallas: bool = True,
+    reuse_weights: bool = False,
+):
+    out_dir.mkdir(parents=True, exist_ok=True)
+    cfg = ModelConfig()
+    t0 = time.time()
+    if reuse_weights and (out_dir / "weights.bin").exists():
+        from .tensor_io import load_tensors
+        import jax.numpy as _jnp
+
+        loaded = load_tensors(out_dir / "weights.bin")
+        params = {n: _jnp.asarray(a) for n, a in loaded.items()}
+        try:
+            metrics = json.loads((out_dir / "meta.json").read_text())["training"]
+        except Exception:
+            metrics = {"reused": True}
+        print("[aot] reusing existing weights.bin (skipping training)")
+    else:
+        params, metrics = train(cfg, steps=steps, ctc_steps=ctc_steps, seed=seed)
+
+    # ---- weights.bin ----
+    names = param_order(cfg)
+    tensors = [(n, np.asarray(params[n], np.float32)) for n in names]
+    save_tensors(out_dir / "weights.bin", tensors)
+
+    # ---- model_step.hlo.txt (Pallas kernels, interpret=True) ----
+    step = streaming_step_fn(cfg, use_pallas=use_pallas)
+    feats_spec = jax.ShapeDtypeStruct((cfg.frames_per_step, cfg.n_mels), jnp.float32)
+    state_specs = [jax.ShapeDtypeStruct(s, jnp.float32) for s in conv_state_shapes(cfg)]
+    param_specs = [jax.ShapeDtypeStruct(params[n].shape, jnp.float32) for n in names]
+    lowered = jax.jit(step).lower(feats_spec, *state_specs, *param_specs)
+    (out_dir / "model_step.hlo.txt").write_text(to_hlo_text(lowered))
+
+    # ---- mfcc.hlo.txt ----
+    mcfg = MfccConfig(cfg.sample_rate, cfg.win_len, cfg.hop_len, cfg.n_mels)
+    mf, samples_per_step = mfcc_step_fn(mcfg, cfg.frames_per_step)
+    assert samples_per_step == cfg.samples_per_step
+    mf_lowered = jax.jit(mf).lower(
+        jax.ShapeDtypeStruct((samples_per_step,), jnp.float32)
+    )
+    (out_dir / "mfcc.hlo.txt").write_text(to_hlo_text(mf_lowered))
+
+    # ---- meta.json ----
+    meta = {
+        "model": {
+            "name": cfg.name,
+            "sample_rate": cfg.sample_rate,
+            "win_len": cfg.win_len,
+            "hop_len": cfg.hop_len,
+            "n_mels": cfg.n_mels,
+            "step_len": cfg.step_len,
+            "groups": [
+                {
+                    "channels": g.channels,
+                    "blocks": g.blocks,
+                    "kw": g.kw,
+                    "entry_stride": g.entry_stride,
+                }
+                for g in cfg.groups
+            ],
+            "final_conv_kw": cfg.final_conv_kw,
+            "tokens": cfg.tokens,
+        },
+        "params": [{"name": n, "shape": list(params[n].shape)} for n in names],
+        "states": [list(s) for s in conv_state_shapes(cfg)],
+        "artifacts": {
+            "model_hlo": "model_step.hlo.txt",
+            "mfcc_hlo": "mfcc.hlo.txt",
+            "weights": "weights.bin",
+        },
+        "training": metrics,
+        "protocol": {
+            "syllables": data.SYLLABLES,
+            "num_words": data.NUM_WORDS,
+            "f1_base": data.F1_BASE,
+            "f1_ratio": data.F1_RATIO,
+            "f2_mult": data.F2_MULT,
+        },
+        "use_pallas": use_pallas,
+        "export_seconds": time.time() - t0,
+    }
+    (out_dir / "meta.json").write_text(json.dumps(meta, indent=2) + "\n")
+    print(f"[aot] wrote artifacts to {out_dir} in {time.time()-t0:.0f}s")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--ctc-steps", type=int, default=60)
+    ap.add_argument("--seed", type=int, default=1234)
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="export with reference ops instead of Pallas kernels")
+    ap.add_argument("--reuse-weights", action="store_true",
+                    help="skip training, re-export from existing weights.bin")
+    args = ap.parse_args()
+    export(
+        Path(args.out_dir),
+        steps=args.steps,
+        ctc_steps=args.ctc_steps,
+        seed=args.seed,
+        use_pallas=not args.no_pallas,
+        reuse_weights=args.reuse_weights,
+    )
+
+
+if __name__ == "__main__":
+    main()

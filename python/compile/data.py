@@ -1,0 +1,171 @@
+"""Synthetic tone-phoneme speech — the exact mirror of
+``rust/src/synth/spec.rs`` and ``audio.rs``.
+
+The model is trained on audio from this module and evaluated (from Rust)
+on audio from the Rust twin; the constants below are the shared protocol
+— any drift between the two implementations shows up directly as WER in
+the end-to-end example.
+"""
+
+import numpy as np
+
+# ---- mirrored constants (rust/src/synth/spec.rs) ----
+SYLLABLES = [
+    "ba", "be", "bi", "bo", "bu", "da", "de", "di", "do", "du", "ka", "ke",
+    "ki", "ko", "ku", "la", "le", "li", "lo", "lu", "ma", "me", "mi", "mo",
+    "mu", "na",
+]
+F1_BASE = 300.0
+F1_RATIO = 1.1047
+F2_MULT = 2.1
+AMP1 = 0.35
+AMP2 = 0.25
+DUR_MS = (80, 140)
+SIL_MS = (60, 120)
+EDGE_SIL_MS = 100
+GEMINATE_GAP_MS = 30
+NOISE_STD = 0.01
+NUM_WORDS = 40
+SAMPLE_RATE = 16_000
+HOP = 160
+
+N_TOKENS = 1 + len(SYLLABLES)  # blank + syllables
+
+
+def tone(phoneme: int):
+    """(f1, f2) for 1-based phoneme id (0 is blank)."""
+    assert 1 <= phoneme <= 26
+    f1 = F1_BASE * F1_RATIO ** (phoneme - 1)
+    return f1, f1 * F2_MULT
+
+
+def vocab():
+    """[(word, [token ids])] — mirror of ``spec::vocab()``."""
+    out = []
+    for k in range(NUM_WORDS):
+        s1 = k % 26
+        s2 = (9 * (k // 26) + 5 * (k % 26) + 7) % 26
+        s3 = (13 * k + 11) % 26
+        word = SYLLABLES[s1] + SYLLABLES[s2] + SYLLABLES[s3]
+        out.append((word, [s1 + 1, s2 + 1, s3 + 1]))
+    return out
+
+
+def successors(word: int):
+    return [
+        ((word * 5 + 1) % NUM_WORDS, 3.0),
+        ((word * 7 + 2) % NUM_WORDS, 2.0),
+        ((word * 11 + 3) % NUM_WORDS, 1.0),
+    ]
+
+
+def sample_sentence(rng: np.random.Generator):
+    """3–7 words from the Markov chain (10% uniform escape)."""
+    length = rng.integers(3, 8)
+    words = [int(rng.integers(0, NUM_WORDS))]
+    for _ in range(length - 1):
+        if rng.random() < 0.1:
+            words.append(int(rng.integers(0, NUM_WORDS)))
+        else:
+            succ = successors(words[-1])
+            w = np.array([s[1] for s in succ])
+            words.append(succ[rng.choice(len(succ), p=w / w.sum())][0])
+    return words
+
+
+def _ms(ms: int) -> int:
+    return SAMPLE_RATE * ms // 1000
+
+
+def render(words, rng: np.random.Generator, noise_std=None):
+    """Render words -> (samples f32, frame_labels int32 at HOP rate).
+
+    Mirror of ``Synthesizer::render`` (same timeline construction, 5 ms
+    ramps, amplitude jitter, geminate gaps, additive noise).
+    ``noise_std`` overrides the protocol default (used by the trainer's
+    noise augmentation).
+    """
+    if noise_std is None:
+        noise_std = NOISE_STD
+    voc = vocab()
+    timeline = [(0, _ms(EDGE_SIL_MS))]
+    for i, w in enumerate(words):
+        if i > 0:
+            timeline.append((0, _ms(int(rng.integers(SIL_MS[0], SIL_MS[1] + 1)))))
+        for ph in voc[w][1]:
+            if timeline[-1][0] == ph:
+                timeline.append((0, _ms(GEMINATE_GAP_MS)))
+            dur = int(rng.integers(DUR_MS[0], DUR_MS[1] + 1))
+            timeline.append((ph, _ms(dur)))
+    timeline.append((0, _ms(EDGE_SIL_MS)))
+
+    total = sum(n for _, n in timeline)
+    samples = np.zeros(total, np.float32)
+    pos = 0
+    ramp_len = max(_ms(5), 1)
+    for tok, n in timeline:
+        if tok != 0:
+            f1, f2 = tone(tok)
+            amp = 0.85 + 0.3 * rng.random()
+            ph1 = rng.random() * 2 * np.pi
+            ph2 = rng.random() * 2 * np.pi
+            t = (pos + np.arange(n)) / SAMPLE_RATE
+            k = np.arange(n)
+            ramp = np.minimum(np.minimum(k, n - 1 - k) / ramp_len, 1.0)
+            samples[pos : pos + n] = amp * ramp * (
+                AMP1 * np.sin(2 * np.pi * f1 * t + ph1)
+                + AMP2 * np.sin(2 * np.pi * f2 * t + ph2)
+            )
+        pos += n
+    if noise_std > 0:
+        samples += rng.normal(0, noise_std, total).astype(np.float32)
+
+    # Frame labels at hop centers.
+    bounds = []
+    acc = 0
+    for tok, n in timeline:
+        bounds.append((acc, acc + n, tok))
+        acc += n
+    n_frames = total // HOP
+    labels = np.zeros(n_frames, np.int32)
+    seg = 0
+    for f in range(n_frames):
+        center = f * HOP + HOP // 2
+        while seg + 1 < len(bounds) and center >= bounds[seg][1]:
+            seg += 1
+        labels[f] = bounds[seg][2]
+    return samples, labels
+
+
+def training_batch(cfg, mfcc_cfg, mfcc_fn, rng, batch, max_frames):
+    """Render a batch, extract features, build acoustic-rate targets.
+
+    Returns (feats (B, max_frames, n_mels), labels (B, T_ac), mask (B,
+    T_ac)) with T_ac = max_frames // subsample; target t is the label of
+    the newest feature frame the causal model has seen at that output.
+    """
+    sub = cfg.subsample
+    t_ac = max_frames // sub
+    # Fixed sample length so the jitted MFCC compiles exactly once
+    # (frames_in(max_samples) == max_frames).
+    max_samples = (max_frames - 1) * HOP + cfg.win_len
+    feats = np.zeros((batch, max_frames, cfg.n_mels), np.float32)
+    labels = np.zeros((batch, t_ac), np.int32)
+    mask = np.zeros((batch, t_ac), np.float32)
+    for i in range(batch):
+        words = sample_sentence(rng)
+        # Noise augmentation: the eval protocol uses NOISE_STD = 0.01,
+        # but training across a noise range makes the model robust for
+        # the noise-robustness ablation (examples/beam_sweep.rs).
+        noise = float(rng.uniform(0.0, 0.2))
+        samples, frame_labels = render(words, rng, noise_std=noise)
+        padded = np.zeros(max_samples, np.float32)
+        n_s = min(len(samples), max_samples)
+        padded[:n_s] = samples[:n_s]
+        f = np.asarray(mfcc_fn(padded))  # (max_frames, n_mels)
+        n = min(max_frames, len(frame_labels))
+        feats[i] = f
+        n_ac = n // sub
+        labels[i, :n_ac] = frame_labels[: n_ac * sub][sub - 1 :: sub]
+        mask[i, :n_ac] = 1.0
+    return feats, labels, mask

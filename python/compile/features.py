@@ -1,0 +1,114 @@
+"""MFCC front-end in JAX — the exact mirror of ``rust/src/dsp``.
+
+Every constant and step matches the Rust implementation (Fig. 3 of the
+paper: framing -> per-frame pre-emphasis -> Hamming window -> FFT power
+spectrum -> HTK mel filterbank -> log -> orthonormal DCT-II), so features
+computed by the exported ``mfcc.hlo.txt`` artifact agree with the native
+front-end to float tolerance. An integration test asserts this.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Mirrored constants — keep in sync with rust/src/dsp/mfcc.rs.
+PREEMPH = 0.97
+HAMMING_A = 0.54
+HAMMING_B = 0.46
+FMIN_HZ = 20.0
+FMAX_HZ = 7600.0
+LOG_FLOOR = 1e-10
+
+
+def hz_to_mel(hz):
+    return 2595.0 * np.log10(1.0 + hz / 700.0)
+
+
+def mel_to_hz(mel):
+    return 700.0 * (10.0 ** (mel / 2595.0) - 1.0)
+
+
+def mel_bank(sample_rate: int, n_fft: int, n_mels: int) -> np.ndarray:
+    """Dense (n_mels, n_bins) triangular filterbank, HTK mel scale.
+
+    Mirrors ``MelBank::new`` in rust/src/dsp/mel.rs.
+    """
+    n_bins = n_fft // 2 + 1
+    lo, hi = hz_to_mel(FMIN_HZ), hz_to_mel(FMAX_HZ)
+    pts = mel_to_hz(lo + (hi - lo) * np.arange(n_mels + 2) / (n_mels + 1))
+    bin_hz = sample_rate / n_fft
+    weights = np.zeros((n_mels, n_bins), dtype=np.float32)
+    for m in range(n_mels):
+        f_lo, f_c, f_hi = pts[m], pts[m + 1], pts[m + 2]
+        f = np.arange(n_bins) * bin_hz
+        up = (f - f_lo) / (f_c - f_lo)
+        down = (f_hi - f) / (f_hi - f_c)
+        w = np.minimum(up, down)
+        w[(f <= f_lo) | (f >= f_hi)] = 0.0
+        weights[m] = np.maximum(w, 0.0)
+    return weights
+
+
+def dct_matrix(n: int) -> np.ndarray:
+    """Orthonormal DCT-II matrix, mirrors ``Dct::new``."""
+    k = np.arange(n)[:, None]
+    t = np.arange(n)[None, :]
+    mat = np.cos(np.pi / n * (t + 0.5) * k)
+    mat[0] *= np.sqrt(1.0 / n)
+    mat[1:] *= np.sqrt(2.0 / n)
+    return mat.astype(np.float32)
+
+
+class MfccConfig:
+    """Geometry + precomputed constant matrices."""
+
+    def __init__(self, sample_rate=16_000, win_len=400, hop_len=160, n_mels=40):
+        self.sample_rate = sample_rate
+        self.win_len = win_len
+        self.hop_len = hop_len
+        self.n_mels = n_mels
+        self.n_fft = 1 << (win_len - 1).bit_length()
+        n = np.arange(win_len)
+        self.window = (
+            HAMMING_A - HAMMING_B * np.cos(2.0 * np.pi * n / (win_len - 1))
+        ).astype(np.float32)
+        self.bank = mel_bank(sample_rate, self.n_fft, n_mels)
+        self.dct = dct_matrix(n_mels)
+
+    def frames_in(self, n_samples: int) -> int:
+        if n_samples < self.win_len:
+            return 0
+        return (n_samples - self.win_len) // self.hop_len + 1
+
+
+@partial(jax.jit, static_argnums=1)
+def mfcc(samples, cfg: MfccConfig):
+    """Extract all complete frames: (n_samples,) -> (frames, n_mels)."""
+    n_frames = cfg.frames_in(samples.shape[0])
+    starts = jnp.arange(n_frames) * cfg.hop_len
+    idx = starts[:, None] + jnp.arange(cfg.win_len)[None, :]
+    frames = samples[idx]  # (F, win_len)
+    # Per-frame pre-emphasis, Kaldi-style first sample (mirrors Rust).
+    prev = jnp.concatenate([frames[:, :1], frames[:, :-1]], axis=1)
+    emph = frames - PREEMPH * prev
+    windowed = emph * cfg.window[None, :]
+    padded = jnp.pad(windowed, ((0, 0), (0, cfg.n_fft - cfg.win_len)))
+    spec = jnp.fft.rfft(padded, axis=1)
+    power = (spec.real**2 + spec.imag**2).astype(jnp.float32)
+    mel = power @ cfg.bank.T
+    logmel = jnp.log(jnp.maximum(mel, LOG_FLOOR))
+    return logmel @ cfg.dct.T
+
+
+def mfcc_step_fn(cfg: MfccConfig, frames_per_step: int):
+    """The fixed-shape per-decoding-step extractor for AOT export:
+    (samples_per_step,) -> (frames_per_step, n_mels)."""
+    samples_per_step = (frames_per_step - 1) * cfg.hop_len + cfg.win_len
+
+    def fn(samples):
+        assert samples.shape == (samples_per_step,)
+        return (mfcc(samples, cfg),)
+
+    return fn, samples_per_step

@@ -1,0 +1,11 @@
+"""Layer-1 Pallas kernels (build-time only; always ``interpret=True`` —
+the CPU PJRT plugin cannot execute Mosaic custom-calls, see DESIGN.md
+§Hardware-Adaptation)."""
+
+# Single switch so every kernel lowers to plain HLO.
+INTERPRET = True
+
+from .fc import fc_pallas  # noqa: E402,F401
+from .tds_conv import conv_pallas  # noqa: E402,F401
+from .layernorm import layernorm_pallas  # noqa: E402,F401
+from .logsoftmax import logsoftmax_pallas  # noqa: E402,F401

@@ -1,0 +1,60 @@
+"""Fully-connected Pallas kernel.
+
+Hardware adaptation of the paper's FC kernels (§4.2: "each FC thread
+computes a single neuron"): on a TPU-shaped target one *grid step*
+computes a (row-tile × neuron-tile) output block on the MXU instead of
+one scalar neuron per RISC-V thread. The grid dimension over neuron
+tiles is exactly the paper's §5.2 kernel-splitting trick — each grid
+step's weight tile (``bn × K``) is what must fit the VMEM budget, as the
+paper's split FC kernels fit the 1 MB model memory.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile sizes: bn neurons × bm rows per grid step. With f32 weights a
+# 128×K tile of the tiny model's widest FC (K=120) is ~61 KB — far
+# inside a 512 KB VMEM budget (the shared-memory analogue, Table 2).
+BM = 128
+BN = 128
+
+
+def _fc_kernel(x_ref, w_ref, b_ref, o_ref, *, relu):
+    x = x_ref[...]  # (bm, K)
+    w = w_ref[...]  # (bn, K)
+    b = b_ref[...]  # (bn,)
+    acc = jnp.dot(x, w.T, preferred_element_type=jnp.float32) + b[None, :]
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc
+
+
+def fc_pallas(x, w, b, relu=False, interpret=True):
+    """x: (T, in_dim), w: (out_dim, in_dim), b: (out_dim,) -> (T, out_dim).
+
+    Pads to tile multiples outside the kernel (zero rows/neurons), runs a
+    (rows/BM, neurons/BN) grid, slices the result back.
+    """
+    t, k = x.shape
+    n = w.shape[0]
+    assert w.shape == (n, k) and b.shape == (n,)
+    bm, bn = min(BM, t), min(BN, n)
+    tp = pl.cdiv(t, bm) * bm
+    np_ = pl.cdiv(n, bn) * bn
+    xp = jnp.pad(x, ((0, tp - t), (0, 0)))
+    wp = jnp.pad(w, ((0, np_ - n), (0, 0)))
+    bp = jnp.pad(b, (0, np_ - n))
+    out = pl.pallas_call(
+        lambda xr, wr, br, orf: _fc_kernel(xr, wr, br, orf, relu=relu),
+        grid=(tp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, k), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((tp, np_), x.dtype),
+        interpret=interpret,
+    )(xp, wp, bp)
+    return out[:t, :n]

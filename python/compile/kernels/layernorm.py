@@ -1,0 +1,41 @@
+"""LayerNorm Pallas kernel — one grid step normalizes a tile of
+timesteps (the paper's LayerNorm kernel runs one thread per timestep,
+§4.2; a row-tile per grid step is the MXU-era equivalent)."""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import LN_EPS
+
+BT = 128
+
+
+def _ln_kernel(x_ref, g_ref, b_ref, o_ref):
+    x = x_ref[...]  # (bt, D)
+    mean = x.mean(axis=-1, keepdims=True)
+    var = ((x - mean) ** 2).mean(axis=-1, keepdims=True)
+    o_ref[...] = (x - mean) * jax.lax.rsqrt(var + LN_EPS) * g_ref[...][None, :] + b_ref[...][
+        None, :
+    ]
+
+
+def layernorm_pallas(x, g, b, interpret=True):
+    """x: (T, D), g/b: (D,) -> (T, D). Matches ``ref.layernorm_ref``."""
+    t, d = x.shape
+    bt = min(BT, t)
+    tp = pl.cdiv(t, bt) * bt
+    xp = jnp.pad(x, ((0, tp - t), (0, 0)))
+    out = pl.pallas_call(
+        _ln_kernel,
+        grid=(tp // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bt, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((tp, d), x.dtype),
+        interpret=interpret,
+    )(xp, g, b)
+    return out[:t]

@@ -1,0 +1,34 @@
+"""Log-softmax Pallas kernel over token scores (the tail of the output
+FC kernel: the paper's PEs use their exp/log SFUs here, §3.4)."""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BT = 128
+
+
+def _lsm_kernel(x_ref, o_ref):
+    x = x_ref[...]  # (bt, D)
+    m = x.max(axis=-1, keepdims=True)
+    lse = m + jnp.log(jnp.exp(x - m).sum(axis=-1, keepdims=True))
+    o_ref[...] = x - lse
+
+
+def logsoftmax_pallas(x, interpret=True):
+    """x: (T, D) -> (T, D). Matches ``ref.logsoftmax_ref``."""
+    t, d = x.shape
+    bt = min(BT, t)
+    tp = pl.cdiv(t, bt) * bt
+    # Pad rows with zeros — padded rows produce garbage log-probs that are
+    # sliced away; they cannot NaN because the row max is finite.
+    xp = jnp.pad(x, ((0, tp - t), (0, 0)))
+    out = pl.pallas_call(
+        _lsm_kernel,
+        grid=(tp // bt,),
+        in_specs=[pl.BlockSpec((bt, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bt, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((tp, d), x.dtype),
+        interpret=interpret,
+    )(xp)
+    return out[:t]

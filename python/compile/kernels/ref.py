@@ -1,0 +1,60 @@
+"""Pure-jnp reference implementations — the correctness oracle for every
+Pallas kernel (pytest asserts allclose under hypothesis-driven shape
+sweeps), and the ops used on the *training* path (Pallas kernels carry no
+VJP; the exported inference graph uses the Pallas versions, training uses
+these — identical math, verified by the kernel tests).
+
+Conventions (mirroring rust/src/am):
+ * a timestep is a flat ``[channels * width]`` vector, channel-major;
+ * convolutions are causal over time, full channel mixing, kernel
+   ``(out_ch, in_ch, kw)``, shared across the ``width`` mel bands;
+ * FC weights are ``(out_dim, in_dim)`` (row-major like the Rust side).
+"""
+
+import jax.numpy as jnp
+
+LN_EPS = 1e-5
+
+
+def fc_ref(x, w, b, relu=False):
+    """x: (T, in_dim), w: (out_dim, in_dim), b: (out_dim,)."""
+    y = x @ w.T + b[None, :]
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y
+
+
+def conv_ref(x_ext, w, b, stride=1):
+    """Causal temporal conv over pre-extended input.
+
+    x_ext: (T_ext, in_ch, width) where T_ext = (kw-1) + T_in (history or
+    zero padding already prepended — mirrors the Rust streaming ``ext``).
+    w: (out_ch, in_ch, kw); b: (out_ch,).
+    Returns (T_out, out_ch, width) with T_out = T_in // stride and
+    y[o] = b + sum_k w[:, :, k] . x_ext[o*stride + k].
+    """
+    t_ext, in_ch, width = x_ext.shape
+    out_ch, in_ch_w, kw = w.shape
+    assert in_ch == in_ch_w, (in_ch, in_ch_w)
+    t_in = t_ext - (kw - 1)
+    assert t_in % stride == 0
+    t_out = t_in // stride
+    y = jnp.zeros((t_out, out_ch, width), dtype=x_ext.dtype) + b[None, :, None]
+    for k in range(kw):
+        xk = x_ext[k : k + (t_out - 1) * stride + 1 : stride]  # (T_out, in_ch, W)
+        y = y + jnp.einsum("oi,tiw->tow", w[:, :, k], xk)
+    return y
+
+
+def layernorm_ref(x, g, b):
+    """Per-timestep layer norm. x: (T, D), g/b: (D,)."""
+    mean = x.mean(axis=-1, keepdims=True)
+    var = ((x - mean) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + LN_EPS) * g[None, :] + b[None, :]
+
+
+def logsoftmax_ref(x):
+    """Numerically stable log-softmax over the last axis. x: (T, D)."""
+    m = x.max(axis=-1, keepdims=True)
+    lse = m + jnp.log(jnp.exp(x - m).sum(axis=-1, keepdims=True))
+    return x - lse

@@ -1,0 +1,58 @@
+"""Causal temporal-convolution Pallas kernel (the TDS conv, §4.2).
+
+Hardware adaptation: the paper launches one RISC-V thread per output
+element (out_ch × mel-band) and stages the shifting input window in the
+shared-memory scratchpad. Here one grid step computes an out-channel
+tile across all timesteps of the decoding step; the kw-deep input window
+lives in VMEM (the scratchpad analogue), staged once per grid step —
+the HBM->VMEM schedule BlockSpec expresses is exactly the paper's
+"setup thread stages the window into shared memory".
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Out-channel tile. The tiny model has <=3 channels; the paper model 15.
+BC = 8
+
+
+def _conv_kernel(x_ref, w_ref, b_ref, o_ref, *, kw, stride, t_out):
+    x = x_ref[...]  # (T_ext, in_ch, W) — whole extended window in VMEM
+    w = w_ref[...]  # (bc, in_ch, kw)
+    b = b_ref[...]  # (bc,)
+    acc = jnp.zeros((t_out, w.shape[0], x.shape[2]), jnp.float32) + b[None, :, None]
+    for k in range(kw):  # kw is small and static: unrolled taps
+        xk = jax.lax.slice_in_dim(x, k, k + (t_out - 1) * stride + 1, stride=stride, axis=0)
+        acc = acc + jnp.einsum("oi,tiw->tow", w[:, :, k], xk)
+    o_ref[...] = acc
+
+
+def conv_pallas(x_ext, w, b, stride=1, interpret=True):
+    """x_ext: (T_ext, in_ch, W) (history prepended), w: (out_ch, in_ch, kw),
+    b: (out_ch,) -> (T_out, out_ch, W). Matches ``ref.conv_ref``."""
+    t_ext, in_ch, width = x_ext.shape
+    out_ch, in_ch_w, kw = w.shape
+    assert in_ch == in_ch_w
+    t_in = t_ext - (kw - 1)
+    assert t_in % stride == 0, (t_in, stride)
+    t_out = t_in // stride
+    bc = min(BC, out_ch)
+    cp = pl.cdiv(out_ch, bc) * bc
+    wp = jnp.pad(w, ((0, cp - out_ch), (0, 0), (0, 0)))
+    bp = jnp.pad(b, (0, cp - out_ch))
+    out = pl.pallas_call(
+        lambda xr, wr, br, orf: _conv_kernel(
+            xr, wr, br, orf, kw=kw, stride=stride, t_out=t_out
+        ),
+        grid=(cp // bc,),
+        in_specs=[
+            pl.BlockSpec((t_ext, in_ch, width), lambda j: (0, 0, 0)),
+            pl.BlockSpec((bc, in_ch, kw), lambda j: (j, 0, 0)),
+            pl.BlockSpec((bc,), lambda j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((t_out, bc, width), lambda j: (0, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((t_out, cp, width), x_ext.dtype),
+        interpret=interpret,
+    )(x_ext, wp, bp)
+    return out[:, :out_ch, :]

@@ -1,0 +1,260 @@
+"""Layer-2: the TDS acoustic model in JAX (§4.2 of the paper), mirroring
+``rust/src/config/model.rs`` layer for layer and ``rust/src/am/tds.rs``
+op for op.
+
+Two execution forms over the same parameters:
+
+* ``forward_full`` — full-sequence causal model used for training
+  (reference ops, which carry gradients);
+* ``streaming_step_fn`` — the fixed-shape one-decoding-step function with
+  explicit conv-history state, built on the Pallas kernels, lowered by
+  ``aot.py`` to ``artifacts/model_step.hlo.txt`` and executed from Rust
+  through PJRT. Causality makes the two numerically identical.
+"""
+
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import kernels
+from .kernels import ref
+
+
+@dataclass(frozen=True)
+class Group:
+    channels: int
+    blocks: int
+    kw: int
+    entry_stride: int
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Mirror of ``rust/src/config/model.rs::ModelConfig``."""
+
+    name: str = "tiny-tds"
+    sample_rate: int = 16_000
+    win_len: int = 400
+    hop_len: int = 160
+    n_mels: int = 40
+    step_len: int = 1280
+    groups: Tuple[Group, ...] = (
+        Group(channels=2, blocks=1, kw=5, entry_stride=2),
+        Group(channels=3, blocks=2, kw=5, entry_stride=1),
+    )
+    final_conv_kw: int | None = None
+    tokens: int = 27
+
+    @property
+    def frames_per_step(self) -> int:
+        return self.step_len // self.hop_len
+
+    @property
+    def subsample(self) -> int:
+        s = 1
+        for g in self.groups:
+            s *= g.entry_stride
+        return s
+
+    @property
+    def vectors_per_step(self) -> int:
+        return self.frames_per_step // self.subsample
+
+    @property
+    def samples_per_step(self) -> int:
+        return self.step_len + self.win_len - self.hop_len
+
+
+@dataclass(frozen=True)
+class Layer:
+    kind: str  # 'conv' | 'fc' | 'ln'
+    name: str
+    # conv
+    in_ch: int = 0
+    out_ch: int = 0
+    kw: int = 0
+    stride: int = 1
+    residual: bool = False
+    # fc
+    in_dim: int = 0
+    out_dim: int = 0
+    relu: bool = False
+    # ln
+    dim: int = 0
+
+
+def build_layers(cfg: ModelConfig) -> List[Layer]:
+    """Mirror of ``ModelConfig::layers()`` — same names, same order."""
+    layers: List[Layer] = []
+    in_ch = 1
+    for gi, g in enumerate(cfg.groups):
+        c = g.channels
+        layers.append(
+            Layer("conv", f"g{gi}.sub", in_ch=in_ch, out_ch=c, kw=g.kw, stride=g.entry_stride)
+        )
+        layers.append(Layer("ln", f"g{gi}.sub.ln", dim=c * cfg.n_mels))
+        for b in range(g.blocks):
+            dim = c * cfg.n_mels
+            layers.append(
+                Layer("conv", f"g{gi}.b{b}.conv", in_ch=c, out_ch=c, kw=g.kw, residual=True)
+            )
+            layers.append(Layer("ln", f"g{gi}.b{b}.ln0", dim=dim))
+            layers.append(Layer("fc", f"g{gi}.b{b}.fc0", in_dim=dim, out_dim=dim, relu=True))
+            layers.append(
+                Layer("fc", f"g{gi}.b{b}.fc1", in_dim=dim, out_dim=dim, residual=True)
+            )
+            layers.append(Layer("ln", f"g{gi}.b{b}.ln1", dim=dim))
+        in_ch = c
+    last_c = cfg.groups[-1].channels
+    if cfg.final_conv_kw is not None:
+        layers.append(
+            Layer("conv", "final.conv", in_ch=last_c, out_ch=last_c, kw=cfg.final_conv_kw)
+        )
+        layers.append(Layer("ln", "final.ln", dim=last_c * cfg.n_mels))
+    layers.append(Layer("fc", "output.fc", in_dim=last_c * cfg.n_mels, out_dim=cfg.tokens))
+    return layers
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    """He-init parameters keyed ``{layer}.w/.b/.g`` (the Rust naming)."""
+    params = {}
+    for layer in build_layers(cfg):
+        key, sub = jax.random.split(key)
+        if layer.kind == "conv":
+            fan_in = layer.in_ch * layer.kw
+            params[f"{layer.name}.w"] = (
+                jax.random.normal(sub, (layer.out_ch, layer.in_ch, layer.kw))
+                * np.sqrt(2.0 / fan_in)
+            ).astype(jnp.float32)
+            params[f"{layer.name}.b"] = jnp.zeros((layer.out_ch,), jnp.float32)
+        elif layer.kind == "fc":
+            params[f"{layer.name}.w"] = (
+                jax.random.normal(sub, (layer.out_dim, layer.in_dim))
+                * np.sqrt(2.0 / layer.in_dim)
+            ).astype(jnp.float32)
+            params[f"{layer.name}.b"] = jnp.zeros((layer.out_dim,), jnp.float32)
+        else:
+            params[f"{layer.name}.g"] = jnp.ones((layer.dim,), jnp.float32)
+            params[f"{layer.name}.b"] = jnp.zeros((layer.dim,), jnp.float32)
+    return params
+
+
+def _ops(use_pallas: bool):
+    if use_pallas:
+        return (
+            lambda xe, w, b, stride: kernels.conv_pallas(xe, w, b, stride=stride),
+            lambda x, w, b, relu: kernels.fc_pallas(x, w, b, relu=relu),
+            kernels.layernorm_pallas,
+            kernels.logsoftmax_pallas,
+        )
+    return (
+        lambda xe, w, b, stride: ref.conv_ref(xe, w, b, stride=stride),
+        lambda x, w, b, relu: ref.fc_ref(x, w, b, relu=relu),
+        ref.layernorm_ref,
+        ref.logsoftmax_ref,
+    )
+
+
+def _apply_layers(cfg, params, x, conv_states, use_pallas):
+    """Shared forward: x (T, D) with per-conv extended history provided by
+    ``conv_states`` (list of (kw-1, D_in) arrays, None = zeros). Returns
+    (log-probs (T_out, tokens), new conv states)."""
+    conv, fc, ln, lsm = _ops(use_pallas)
+    new_states = []
+    ci = 0
+    for layer in build_layers(cfg):
+        if layer.kind == "conv":
+            w = params[f"{layer.name}.w"]
+            b = params[f"{layer.name}.b"]
+            t, d = x.shape
+            state = conv_states[ci]
+            if state is None:
+                state = jnp.zeros((layer.kw - 1, d), x.dtype)
+            ci += 1
+            ext_flat = jnp.concatenate([state, x], axis=0)  # (kw-1+T, D)
+            new_states.append(ext_flat[-(layer.kw - 1) :])
+            ext = ext_flat.reshape(-1, layer.in_ch, cfg.n_mels)
+            y = conv(ext, w, b, layer.stride)  # (T_out, out_ch, W)
+            y = jnp.maximum(y, 0.0)
+            if layer.residual:
+                # Newest input of each window == x itself (stride 1).
+                y = y + ext_flat[layer.kw - 1 :].reshape(-1, layer.in_ch, cfg.n_mels)
+            x = y.reshape(y.shape[0], -1)
+        elif layer.kind == "fc":
+            w = params[f"{layer.name}.w"]
+            b = params[f"{layer.name}.b"]
+            y = fc(x, w, b, layer.relu)
+            if layer.residual:
+                y = y + x
+            x = y
+        else:
+            x = ln(x, params[f"{layer.name}.g"], params[f"{layer.name}.b"])
+    return lsm(x), new_states
+
+
+def num_conv_layers(cfg: ModelConfig) -> int:
+    return sum(1 for l in build_layers(cfg) if l.kind == "conv")
+
+
+def conv_state_shapes(cfg: ModelConfig) -> List[Tuple[int, int]]:
+    """Shapes of the streaming conv-history states, in layer order."""
+    shapes = []
+    in_dim = cfg.n_mels
+    for layer in build_layers(cfg):
+        if layer.kind == "conv":
+            shapes.append((layer.kw - 1, in_dim))
+            in_dim = layer.out_ch * cfg.n_mels
+        elif layer.kind == "fc":
+            in_dim = layer.out_dim
+    return shapes
+
+
+def forward_full(params, cfg: ModelConfig, feats, use_pallas=False):
+    """Training forward: feats (T, n_mels) -> log-probs (T/subsample,
+    tokens), zero conv history (= the streaming start state)."""
+    out, _ = _apply_layers(cfg, params, feats, [None] * num_conv_layers(cfg), use_pallas)
+    return out
+
+
+def forward_batch(params, cfg: ModelConfig, feats):
+    """vmapped training forward over (B, T, n_mels)."""
+    return jax.vmap(lambda f: forward_full(params, cfg, f))(feats)
+
+
+def streaming_step_fn(cfg: ModelConfig, use_pallas=True):
+    """Build the AOT-export function:
+
+    ``step(feats (frames_per_step, n_mels), states..., params...) ->
+    (logits (vectors_per_step, tokens), new_states...)``
+
+    Parameter order — the Rust runtime feeds literals in exactly this
+    order: feats, conv states (conv-layer order), then parameters in
+    ``param_order(cfg)`` order (recorded in meta.json).
+    """
+    names = param_order(cfg)
+
+    def step(feats, *rest):
+        n_states = num_conv_layers(cfg)
+        states = list(rest[:n_states])
+        params = dict(zip(names, rest[n_states:]))
+        out, new_states = _apply_layers(cfg, params, feats, states, use_pallas)
+        return (out, *new_states)
+
+    return step
+
+
+def param_order(cfg: ModelConfig) -> List[str]:
+    """Deterministic parameter name order for export (layer order, w/g
+    before b — matches ``init_params`` insertion order)."""
+    names = []
+    for layer in build_layers(cfg):
+        if layer.kind in ("conv", "fc"):
+            names.append(f"{layer.name}.w")
+            names.append(f"{layer.name}.b")
+        else:
+            names.append(f"{layer.name}.g")
+            names.append(f"{layer.name}.b")
+    return names

@@ -1,0 +1,62 @@
+"""Writer for the binary tensor container consumed by
+``rust/src/util/tensor_io.rs`` (see that file for the layout spec)."""
+
+import struct
+
+import numpy as np
+
+MAGIC = b"ASRPUTNS"
+
+
+def save_tensors(path, tensors):
+    """tensors: list of (name, np.ndarray[float32 or int8])."""
+    out = bytearray()
+    out += MAGIC
+    out += struct.pack("<I", len(tensors))
+    for name, arr in tensors:
+        arr = np.ascontiguousarray(arr)
+        if arr.dtype == np.float32:
+            dtype = 0
+        elif arr.dtype == np.int8:
+            dtype = 1
+        else:
+            raise ValueError(f"{name}: unsupported dtype {arr.dtype}")
+        nb = name.encode()
+        out += struct.pack("<I", len(nb)) + nb
+        out += struct.pack("<I", arr.ndim)
+        for d in arr.shape:
+            out += struct.pack("<I", d)
+        payload = arr.tobytes()
+        out += struct.pack("<I", dtype)
+        out += struct.pack("<Q", len(payload))
+        out += payload
+    with open(path, "wb") as f:
+        f.write(bytes(out))
+
+
+def load_tensors(path):
+    """Reader (for python-side round-trip tests)."""
+    with open(path, "rb") as f:
+        data = f.read()
+    assert data[:8] == MAGIC, "bad magic"
+    pos = 8
+    (count,) = struct.unpack_from("<I", data, pos)
+    pos += 4
+    out = {}
+    for _ in range(count):
+        (nlen,) = struct.unpack_from("<I", data, pos)
+        pos += 4
+        name = data[pos : pos + nlen].decode()
+        pos += nlen
+        (ndim,) = struct.unpack_from("<I", data, pos)
+        pos += 4
+        dims = struct.unpack_from(f"<{ndim}I", data, pos)
+        pos += 4 * ndim
+        dtype, blen = struct.unpack_from("<IQ", data, pos)
+        pos += 12
+        raw = data[pos : pos + blen]
+        pos += blen
+        np_dtype = np.float32 if dtype == 0 else np.int8
+        out[name] = np.frombuffer(raw, np_dtype).reshape(dims)
+    assert pos == len(data), "trailing bytes"
+    return out

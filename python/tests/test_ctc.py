@@ -1,0 +1,112 @@
+"""CTC loss: log-space forward recursion vs brute-force path enumeration
+on tiny cases, plus gradient and batching sanity."""
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.ctc import BLANK, ctc_loss, ctc_loss_batch, greedy_collapse
+
+
+def brute_force_nll(log_probs, labels):
+    """Sum over ALL alignments that collapse to `labels`."""
+    t, v = log_probs.shape
+    total = -np.inf
+    for path in itertools.product(range(v), repeat=t):
+        # collapse: remove repeats then blanks
+        out = []
+        last = None
+        for s in path:
+            if s != last and s != BLANK:
+                out.append(s)
+            last = s
+        if out == list(labels):
+            lp = sum(log_probs[i, s] for i, s in enumerate(path))
+            total = np.logaddexp(total, lp)
+    return -total
+
+
+def rand_logp(rng, t, v):
+    x = rng.normal(size=(t, v)).astype(np.float32)
+    x = x - np.log(np.exp(x).sum(-1, keepdims=True))
+    return x
+
+
+@pytest.mark.parametrize("t,v,labels", [
+    (3, 3, [1]),
+    (4, 3, [1, 2]),
+    (5, 4, [2, 2]),      # repeat needs a blank between
+    (5, 3, [1, 2, 1]),
+    (2, 3, [1, 2]),      # minimum-length fit
+])
+def test_matches_brute_force(t, v, labels):
+    rng = np.random.default_rng(42 + t * 10 + v)
+    logp = rand_logp(rng, t, v)
+    got = float(
+        ctc_loss(
+            jnp.asarray(logp),
+            jnp.asarray(labels, jnp.int32),
+            jnp.asarray(len(labels)),
+            jnp.asarray(t),
+        )
+    )
+    want = brute_force_nll(logp, labels)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_impossible_label_is_infinite():
+    # 1 frame cannot emit 2 labels.
+    rng = np.random.default_rng(0)
+    logp = rand_logp(rng, 1, 3)
+    loss = float(
+        ctc_loss(jnp.asarray(logp), jnp.asarray([1, 2], jnp.int32), jnp.asarray(2), jnp.asarray(1))
+    )
+    assert loss > 1e20
+
+
+def test_perfect_prediction_low_loss():
+    # Sharp distribution exactly on the label path.
+    t, v = 6, 4
+    logp = np.full((t, v), -20.0, np.float32)
+    path = [1, 1, BLANK, 2, 2, BLANK]
+    for i, s in enumerate(path):
+        logp[i, s] = 0.0
+    loss = float(
+        ctc_loss(jnp.asarray(logp), jnp.asarray([1, 2], jnp.int32), jnp.asarray(2), jnp.asarray(t))
+    )
+    assert loss < 0.1, loss
+
+
+def test_gradients_finite():
+    rng = np.random.default_rng(3)
+    logp = jnp.asarray(rand_logp(rng, 8, 5))
+    labels = jnp.asarray([1, 3, 2], jnp.int32)
+
+    def f(lp):
+        return ctc_loss(lp, labels, jnp.asarray(3), jnp.asarray(8))
+
+    g = jax.grad(f)(logp)
+    assert np.isfinite(np.asarray(g)).all()
+
+
+def test_batch_mean():
+    rng = np.random.default_rng(4)
+    lp = jnp.asarray(np.stack([rand_logp(rng, 6, 4), rand_logp(rng, 6, 4)]))
+    labels = jnp.asarray([[1, 2, 0], [3, 0, 0]], jnp.int32)
+    lens = jnp.asarray([2, 1])
+    logit_lens = jnp.asarray([6, 6])
+    batch = float(ctc_loss_batch(lp, labels, lens, logit_lens))
+    singles = [
+        float(ctc_loss(lp[i], labels[i], lens[i], logit_lens[i])) for i in range(2)
+    ]
+    np.testing.assert_allclose(batch, np.mean(singles), rtol=1e-5)
+
+
+def test_greedy_collapse():
+    logp = np.full((5, 3), -10.0, np.float32)
+    for i, s in enumerate([1, 1, 0, 2, 2]):
+        logp[i, s] = 0.0
+    assert greedy_collapse(jnp.asarray(logp)) == [1, 2]

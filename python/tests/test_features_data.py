@@ -1,0 +1,120 @@
+"""Front-end + data-protocol invariants (the python half of the
+cross-language contract; the Rust half is tested in rust/tests)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data
+from compile.features import MfccConfig, mel_bank, dct_matrix, mfcc
+from compile.tensor_io import load_tensors, save_tensors
+
+
+def test_mel_bank_shape_and_positivity():
+    bank = mel_bank(16_000, 512, 40)
+    assert bank.shape == (40, 257)
+    assert (bank >= 0).all()
+    assert (bank.max(axis=1) > 0).all()
+
+
+def test_dct_orthonormal():
+    d = dct_matrix(40)
+    np.testing.assert_allclose(d @ d.T, np.eye(40), atol=1e-5)
+
+
+def test_mfcc_shapes_and_shift():
+    cfg = MfccConfig()
+    rng = np.random.default_rng(0)
+    sig = rng.normal(size=2000).astype(np.float32) * 0.3
+    f = np.asarray(mfcc(jnp.asarray(sig), cfg))
+    assert f.shape == (cfg.frames_in(2000), 40)
+    # Hop-shift property (mirrors the Rust test).
+    f2 = np.asarray(mfcc(jnp.asarray(sig[160:]), cfg))
+    np.testing.assert_allclose(f[1 : 1 + len(f2)], f2, atol=1e-3)
+
+
+def test_vocab_mirrors_rust_formula():
+    v = data.vocab()
+    assert len(v) == 40
+    # Spot-check the deterministic formula for k = 0 and k = 39.
+    assert v[0][1] == [1, 8, 12]  # s1=0, s2=7, s3=11 (1-based)
+    prons = [tuple(p) for _, p in v]
+    assert len(set(prons)) == 40, "homophones!"
+
+
+def test_geminate_gap_inserted():
+    # Word 6 has s2 == s3; the rendered timeline must contain silence
+    # between the repeated phonemes (labels return to blank).
+    rng = np.random.default_rng(1)
+    _, labels = data.render([6], rng)
+    pron = data.vocab()[6][1]
+    assert pron[1] == pron[2]
+    # Find the segment boundaries in the label track.
+    segs = []
+    for lab in labels:
+        if not segs or segs[-1] != lab:
+            segs.append(int(lab))
+    # Expect ...,s1,?,s2,0,s2,... (a blank between the repeats).
+    s = segs
+    i = s.index(pron[1])
+    assert s[i + 1] == 0 and s[i + 2] == pron[2], f"segments {s}"
+
+
+def test_sentence_chain_statistics():
+    rng = np.random.default_rng(2)
+    follow, total = 0, 0
+    for _ in range(300):
+        sent = data.sample_sentence(rng)
+        assert 3 <= len(sent) <= 7
+        for a, b in zip(sent, sent[1:]):
+            total += 1
+            follow += any(n == b for n, _ in data.successors(a))
+    assert follow / total > 0.8
+
+
+def test_labels_align_with_tones():
+    rng = np.random.default_rng(3)
+    samples, labels = data.render([0], rng, noise_std=0.0)
+    # Labelled phoneme regions must carry energy; blank regions ~none
+    # (away from boundaries).
+    hop = data.HOP
+    for f in range(2, len(labels) - 2):
+        frame = samples[f * hop : (f + 1) * hop]
+        rms = float(np.sqrt((frame**2).mean()))
+        if labels[f - 1] == labels[f] == labels[f + 1]:  # interior frame
+            if labels[f] == 0:
+                assert rms < 0.05, f"silence frame {f} has energy {rms}"
+            else:
+                assert rms > 0.05, f"phoneme frame {f} silent ({rms})"
+
+
+def test_tensor_io_roundtrip(tmp_path):
+    path = tmp_path / "t.bin"
+    tensors = [
+        ("a.w", np.arange(12, dtype=np.float32).reshape(3, 4)),
+        ("b.q", np.array([-1, 0, 127], np.int8)),
+    ]
+    save_tensors(path, tensors)
+    out = load_tensors(path)
+    np.testing.assert_array_equal(out["a.w"], tensors[0][1])
+    np.testing.assert_array_equal(out["b.q"], tensors[1][1])
+
+
+def test_tensor_io_rejects_bad_dtype(tmp_path):
+    with pytest.raises(ValueError):
+        save_tensors(tmp_path / "x.bin", [("z", np.zeros(3, np.float64))])
+
+
+def test_training_batch_shapes():
+    from compile.model import ModelConfig
+    from compile.train import make_mfcc_fn
+
+    cfg = ModelConfig()
+    mcfg, fn = make_mfcc_fn(cfg)
+    rng = np.random.default_rng(4)
+    feats, labels, mask = data.training_batch(cfg, mcfg, fn, rng, 2, 64)
+    assert feats.shape == (2, 64, cfg.n_mels)
+    assert labels.shape == (2, 32)
+    assert mask.shape == (2, 32)
+    assert mask.sum() > 0
+    assert (labels[mask == 0] == 0).all()

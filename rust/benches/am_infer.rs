@@ -1,0 +1,31 @@
+//! Bench: acoustic-model decoding step — native TDS vs XLA artifact
+//! (the engine's hot path; §Perf L2/L3 target).
+use asrpu::am::TdsModel;
+use asrpu::bench::Bench;
+use asrpu::config::{artifacts_dir, ModelConfig};
+use asrpu::runtime::{Runtime, XlaAm};
+use asrpu::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::default();
+    let mut rng = Rng::new(2);
+    let cfg = ModelConfig::tiny_tds();
+    let feats: Vec<f32> =
+        (0..cfg.frames_per_step() * cfg.n_mels).map(|_| rng.uniform(-1.0, 1.0)).collect();
+
+    let native = TdsModel::random(cfg.clone(), 3);
+    let mut st = native.state();
+    b.run("am/native/tiny/step", || native.step(&mut st, &feats));
+
+    if artifacts_dir().join("meta.json").exists() {
+        let rt = Runtime::cpu().unwrap();
+        let am = XlaAm::load(&rt, &artifacts_dir()).unwrap();
+        let mut xst = am.state().unwrap();
+        b.run("am/xla/tiny/step", || am.step(&mut xst, &feats).unwrap());
+        let samples: Vec<f32> =
+            (0..cfg.samples_per_step()).map(|_| rng.uniform(-0.5, 0.5)).collect();
+        b.run("am/xla/tiny/mfcc", || am.mfcc(&samples).unwrap());
+    } else {
+        eprintln!("(artifacts missing; xla benches skipped)");
+    }
+}

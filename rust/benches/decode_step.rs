@@ -1,0 +1,43 @@
+//! Bench: full engine decoding step (MFCC + AM + search) and a whole
+//! utterance — the end-to-end hot path (§Perf L3 target: step ≪ 80 ms).
+use asrpu::am::TdsModel;
+use asrpu::bench::Bench;
+use asrpu::config::{artifacts_dir, DecoderConfig, ModelConfig};
+use asrpu::coordinator::Engine;
+use asrpu::runtime::Runtime;
+use asrpu::synth::Synthesizer;
+use asrpu::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::default();
+    let mut rng = Rng::new(4);
+    let u = Synthesizer::default().render(&[1, 2, 3, 4], &mut rng);
+    let chunk: Vec<f32> = u.samples[..1520].to_vec();
+
+    let native = Engine::native(
+        TdsModel::random(ModelConfig::tiny_tds(), 5),
+        DecoderConfig::default(),
+    )
+    .unwrap();
+    b.run("engine/native/step", || {
+        let mut s = native.open(false).unwrap();
+        native.feed(&mut s, &chunk).unwrap()
+    });
+    b.run("engine/native/utterance", || {
+        native.decode_utterance(&u.samples).unwrap().0.words.len()
+    });
+
+    if artifacts_dir().join("meta.json").exists() {
+        let rt = Runtime::cpu().unwrap();
+        let xla = Engine::from_artifacts(&rt, &artifacts_dir(), DecoderConfig::default()).unwrap();
+        b.run("engine/xla/step", || {
+            let mut s = xla.open(false).unwrap();
+            xla.feed(&mut s, &chunk).unwrap()
+        });
+        b.run("engine/xla/utterance", || {
+            xla.decode_utterance(&u.samples).unwrap().0.words.len()
+        });
+    } else {
+        eprintln!("(artifacts missing; xla benches skipped)");
+    }
+}

@@ -1,0 +1,42 @@
+//! Bench: hypothesis expansion + prune — the decoder's per-frame work
+//! (the paper's hypothesis-expansion kernel + hypothesis unit, §4.3).
+use asrpu::bench::Bench;
+use asrpu::config::DecoderConfig;
+use asrpu::decoder::BeamDecoder;
+use asrpu::lm::NgramLm;
+use asrpu::synth::spec;
+use asrpu::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::default();
+    let lex = spec::lexicon();
+    let lm = NgramLm::estimate(&spec::sample_corpus(2000, 7777), 0.4).unwrap();
+    let tokens = lex.tokens.len();
+    let mut rng = Rng::new(3);
+    for (beam, max_hyps) in [(6.0f32, 96usize), (14.0, 384)] {
+        let dec = BeamDecoder::new(
+            &lex,
+            &lm,
+            DecoderConfig { beam, max_hyps, ..Default::default() },
+        )
+        .unwrap();
+        // Grow a realistic live set by stepping noisy frames.
+        let mut state = dec.start();
+        let frames: Vec<Vec<f32>> = (0..32)
+            .map(|_| {
+                let mut row: Vec<f32> = (0..tokens).map(|_| rng.uniform(-8.0, 0.0)).collect();
+                row[rng.below(tokens as u64) as usize] = -0.1;
+                row
+            })
+            .collect();
+        for f in &frames {
+            dec.step(&mut state, f);
+        }
+        let live = state.hyps.len();
+        b.run(&format!("decoder/frame/beam{beam}/live{live}"), || {
+            let mut s = state.clone();
+            dec.step(&mut s, &frames[0]);
+            s.hyps.len()
+        });
+    }
+}

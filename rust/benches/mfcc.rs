@@ -1,0 +1,25 @@
+//! Bench: native MFCC front-end — one decoding step of feature
+//! extraction (the accelerator's kernel 0).
+use asrpu::bench::Bench;
+use asrpu::config::ModelConfig;
+use asrpu::dsp::Mfcc;
+use asrpu::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::default();
+    let mut rng = Rng::new(1);
+    for cfg in [ModelConfig::tiny_tds(), ModelConfig::paper_tds()] {
+        let mfcc = Mfcc::for_model(&cfg);
+        let samples: Vec<f32> =
+            (0..cfg.samples_per_step()).map(|_| rng.uniform(-0.5, 0.5)).collect();
+        b.run(&format!("mfcc/step/{}mel", cfg.n_mels), || mfcc.extract(&samples));
+    }
+    // Per-frame cost (the simulator's per-thread unit).
+    let mfcc = Mfcc::new(16_000, 400, 160, 80);
+    let samples: Vec<f32> = (0..400).map(|_| rng.uniform(-0.5, 0.5)).collect();
+    let mut out = Vec::new();
+    b.run("mfcc/frame/80mel", || {
+        mfcc.frame(&samples, 0, &mut out);
+        out.len()
+    });
+}

@@ -1,0 +1,24 @@
+//! Bench: accelerator-simulator throughput — a full paper-scale decoding
+//! step simulation (169 kernel executions) must be fast enough for
+//! design-space sweeps (§Perf L3 target: ≥10k steps/s).
+use asrpu::accel::{build_step_kernels, simulate_step, HypWorkload, SimMode};
+use asrpu::bench::Bench;
+use asrpu::config::{AccelConfig, ModelConfig};
+use asrpu::power::ChipBudget;
+
+fn main() {
+    let mut b = Bench::default();
+    let model = ModelConfig::paper_tds();
+    let accel = AccelConfig::paper();
+    let hyp = HypWorkload::default();
+    b.run("sim/build_kernels/paper", || build_step_kernels(&model, &accel, &hyp).len());
+    let r = b.run("sim/step/ideal", || {
+        simulate_step(&model, &accel, &hyp, SimMode::Ideal).total_cycles
+    });
+    let per_s = r.per_sec();
+    b.run("sim/step/detailed", || {
+        simulate_step(&model, &accel, &hyp, SimMode::Detailed).total_cycles
+    });
+    b.run("sim/chip_budget", || ChipBudget::for_config(&accel).total_area_mm2());
+    println!("sim throughput: {per_s:.0} ideal steps/s");
+}

@@ -1,0 +1,252 @@
+//! The command decoder (§3.7, Table 1): the interface between ASRPU and
+//! the host SoC. Commands are encoded as MMIO-style words (opcode +
+//! operands) and drive a stateful device model: configuration must
+//! precede decoding, `DecodingStep` runs the simulator, `CleanDecoding`
+//! resets utterance state.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::config::{AccelConfig, ModelConfig};
+
+use super::controller::{simulate_step, SimMode, StepReport};
+use super::kernels::HypWorkload;
+
+/// Table 1 commands.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Command {
+    /// Configure kernel `n` of the acoustic scoring phase: external
+    /// memory addresses of its setup program and kernel program.
+    ConfigureAcousticScoring { n: u16, setup_addr: u32, kernel_addr: u32 },
+    /// Configure the hypothesis-expansion kernel.
+    ConfigureHypExpansion { kernel_addr: u32 },
+    /// Configure the hypothesis unit's score beam (fixed-point ×256).
+    ConfigureBeamWidth { beam_q8: u32 },
+    /// Reset hypothesis memory and internal state for a new utterance.
+    CleanDecoding,
+    /// Decode the signal at `signal_addr`, appending to the current
+    /// utterance's hypotheses.
+    DecodingStep { signal_addr: u32 },
+}
+
+const OP_CFG_AS: u64 = 0x1;
+const OP_CFG_HYP: u64 = 0x2;
+const OP_CFG_BEAM: u64 = 0x3;
+const OP_CLEAN: u64 = 0x4;
+const OP_STEP: u64 = 0x5;
+
+impl Command {
+    /// Encode as a (cmd, arg) register-write pair: opcode in the top
+    /// byte of `cmd`, small operands packed below; `arg` carries the
+    /// address operand.
+    pub fn encode(&self) -> (u64, u64) {
+        match *self {
+            Command::ConfigureAcousticScoring { n, setup_addr, kernel_addr } => (
+                (OP_CFG_AS << 56) | ((n as u64) << 32) | setup_addr as u64,
+                kernel_addr as u64,
+            ),
+            Command::ConfigureHypExpansion { kernel_addr } => {
+                ((OP_CFG_HYP << 56), kernel_addr as u64)
+            }
+            Command::ConfigureBeamWidth { beam_q8 } => ((OP_CFG_BEAM << 56), beam_q8 as u64),
+            Command::CleanDecoding => ((OP_CLEAN << 56), 0),
+            Command::DecodingStep { signal_addr } => ((OP_STEP << 56), signal_addr as u64),
+        }
+    }
+
+    pub fn decode(cmd: u64, arg: u64) -> Result<Command> {
+        Ok(match cmd >> 56 {
+            OP_CFG_AS => Command::ConfigureAcousticScoring {
+                n: ((cmd >> 32) & 0xFFFF) as u16,
+                setup_addr: (cmd & 0xFFFF_FFFF) as u32,
+                kernel_addr: arg as u32,
+            },
+            OP_CFG_HYP => Command::ConfigureHypExpansion { kernel_addr: arg as u32 },
+            OP_CFG_BEAM => Command::ConfigureBeamWidth { beam_q8: arg as u32 },
+            OP_CLEAN => Command::CleanDecoding,
+            OP_STEP => Command::DecodingStep { signal_addr: arg as u32 },
+            op => bail!("unknown ASRPU opcode {op:#x}"),
+        })
+    }
+}
+
+/// Per-utterance accumulated timing.
+#[derive(Debug, Clone, Default)]
+pub struct UtteranceTiming {
+    pub steps: usize,
+    pub total_cycles: u64,
+    pub audio_seconds: f64,
+}
+
+/// The device model: command decoder + ASR controller + simulator.
+#[derive(Debug)]
+pub struct AsrpuDevice {
+    pub accel: AccelConfig,
+    pub model: ModelConfig,
+    pub mode: SimMode,
+    pub hyp: HypWorkload,
+    /// Configured acoustic-scoring kernels (n → (setup, kernel) addrs).
+    as_kernels: Vec<Option<(u32, u32)>>,
+    hyp_kernel: Option<u32>,
+    beam_q8: Option<u32>,
+    pub utterance: UtteranceTiming,
+    pub last_step: Option<StepReport>,
+}
+
+impl AsrpuDevice {
+    pub fn new(accel: AccelConfig, model: ModelConfig, mode: SimMode) -> Result<Self> {
+        accel.validate()?;
+        let n_as = model.layers().len() + 1; // + feature extraction
+        Ok(AsrpuDevice {
+            accel,
+            model,
+            mode,
+            hyp: HypWorkload::default(),
+            as_kernels: vec![None; n_as],
+            hyp_kernel: None,
+            beam_q8: None,
+            utterance: UtteranceTiming::default(),
+            last_step: None,
+        })
+    }
+
+    /// Expected number of acoustic-scoring kernel slots.
+    pub fn num_as_kernels(&self) -> usize {
+        self.as_kernels.len()
+    }
+
+    fn configured(&self) -> bool {
+        self.as_kernels.iter().all(Option::is_some)
+            && self.hyp_kernel.is_some()
+            && self.beam_q8.is_some()
+    }
+
+    /// Issue the standard configuration sequence (all kernels + beam).
+    pub fn configure_all(&mut self, beam: f32) -> Result<()> {
+        for n in 0..self.num_as_kernels() {
+            self.issue(Command::ConfigureAcousticScoring {
+                n: n as u16,
+                setup_addr: 0x1000_0000 + (n as u32) * 0x800,
+                kernel_addr: 0x2000_0000 + (n as u32) * 0x800,
+            })?;
+        }
+        self.issue(Command::ConfigureHypExpansion { kernel_addr: 0x3000_0000 })?;
+        self.issue(Command::ConfigureBeamWidth { beam_q8: (beam * 256.0) as u32 })?;
+        Ok(())
+    }
+
+    /// Execute one command (the §3.7 semantics).
+    pub fn issue(&mut self, cmd: Command) -> Result<()> {
+        match cmd {
+            Command::ConfigureAcousticScoring { n, setup_addr, kernel_addr } => {
+                ensure!(
+                    (n as usize) < self.as_kernels.len(),
+                    "acoustic-scoring kernel index {n} out of range (model has {})",
+                    self.as_kernels.len()
+                );
+                self.as_kernels[n as usize] = Some((setup_addr, kernel_addr));
+            }
+            Command::ConfigureHypExpansion { kernel_addr } => {
+                self.hyp_kernel = Some(kernel_addr);
+            }
+            Command::ConfigureBeamWidth { beam_q8 } => {
+                ensure!(beam_q8 > 0, "beam width must be positive");
+                self.beam_q8 = Some(beam_q8);
+            }
+            Command::CleanDecoding => {
+                self.utterance = UtteranceTiming::default();
+                self.last_step = None;
+            }
+            Command::DecodingStep { signal_addr: _ } => {
+                ensure!(
+                    self.configured(),
+                    "DecodingStep before configuration is complete (Table 1: \
+                     configuration commands must be used before any decoding begins)"
+                );
+                let report = simulate_step(&self.model, &self.accel, &self.hyp, self.mode);
+                self.utterance.steps += 1;
+                self.utterance.total_cycles += report.total_cycles;
+                self.utterance.audio_seconds += self.model.step_seconds();
+                self.last_step = Some(report);
+            }
+        }
+        Ok(())
+    }
+
+    /// Utterance-level real-time factor so far.
+    pub fn utterance_rtf(&self) -> f64 {
+        if self.utterance.total_cycles == 0 {
+            return f64::INFINITY;
+        }
+        self.utterance.audio_seconds
+            / (self.utterance.total_cycles as f64 * self.accel.cycle_s())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn command_encode_decode_roundtrip() {
+        let cmds = [
+            Command::ConfigureAcousticScoring { n: 79, setup_addr: 0xDEAD, kernel_addr: 0xBEEF },
+            Command::ConfigureHypExpansion { kernel_addr: 0x1234 },
+            Command::ConfigureBeamWidth { beam_q8: 3584 },
+            Command::CleanDecoding,
+            Command::DecodingStep { signal_addr: 0xCAFE },
+        ];
+        for c in cmds {
+            let (w, a) = c.encode();
+            assert_eq!(Command::decode(w, a).unwrap(), c);
+        }
+        assert!(Command::decode(0xFF << 56, 0).is_err());
+    }
+
+    fn device() -> AsrpuDevice {
+        AsrpuDevice::new(
+            AccelConfig::paper(),
+            ModelConfig::paper_tds(),
+            SimMode::Ideal,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn decoding_before_configuration_is_rejected() {
+        let mut d = device();
+        assert!(d.issue(Command::DecodingStep { signal_addr: 0 }).is_err());
+        d.configure_all(14.0).unwrap();
+        assert!(d.issue(Command::DecodingStep { signal_addr: 0 }).is_ok());
+    }
+
+    #[test]
+    fn paper_model_has_80_as_kernel_slots() {
+        // 79 layers + feature extraction (§4.2).
+        assert_eq!(device().num_as_kernels(), 80);
+    }
+
+    #[test]
+    fn out_of_range_kernel_index_rejected() {
+        let mut d = device();
+        assert!(d
+            .issue(Command::ConfigureAcousticScoring { n: 200, setup_addr: 0, kernel_addr: 0 })
+            .is_err());
+    }
+
+    #[test]
+    fn utterance_timing_accumulates_and_cleans() {
+        let mut d = device();
+        d.configure_all(14.0).unwrap();
+        d.issue(Command::DecodingStep { signal_addr: 0 }).unwrap();
+        d.issue(Command::DecodingStep { signal_addr: 1280 }).unwrap();
+        assert_eq!(d.utterance.steps, 2);
+        assert!((d.utterance.audio_seconds - 0.16).abs() < 1e-9);
+        let rtf = d.utterance_rtf();
+        assert!((1.5..3.0).contains(&rtf), "rtf {rtf}");
+        d.issue(Command::CleanDecoding).unwrap();
+        assert_eq!(d.utterance.steps, 0);
+        // Configuration survives CleanDecoding (only hypothesis state is
+        // cleared, §3.7).
+        assert!(d.issue(Command::DecodingStep { signal_addr: 0 }).is_ok());
+    }
+}

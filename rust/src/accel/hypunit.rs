@@ -1,0 +1,118 @@
+//! Hypothesis-unit model (§3.5): a dedicated memory plus controller that
+//! receives hypotheses from expansion threads, keeps them sorted, and
+//! prunes by beam and capacity. Timing: the controller inserts one
+//! hypothesis per cycle into its score-sorted memory (hardware insertion
+//! sort over a small SRAM), overlapped with expansion-thread execution.
+
+use crate::config::AccelConfig;
+use crate::decoder::PruneStats;
+
+use super::kernels::HypWorkload;
+
+/// Timing/occupancy outcome of one expansion round through the unit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HypUnitRound {
+    /// Cycles the unit spends inserting + pruning.
+    pub insert_cycles: u64,
+    /// Candidates that arrived after the outgoing set filled (dropped by
+    /// capacity, exactly like `Pruner::capacity_pruned`).
+    pub overflow: u64,
+    /// Live hypotheses kept for the next round.
+    pub kept: u64,
+}
+
+/// The unit itself (hardware parameters only; search behaviour lives in
+/// [`crate::decoder::Pruner`], which this model mirrors in time).
+#[derive(Debug, Clone, Copy)]
+pub struct HypUnit {
+    pub capacity: u64,
+}
+
+impl HypUnit {
+    pub fn new(accel: &AccelConfig) -> Self {
+        HypUnit { capacity: accel.hyp_capacity() as u64 }
+    }
+
+    /// Process `candidates` arriving hypotheses of which `within_beam`
+    /// survive the score beam.
+    pub fn round(&self, candidates: u64, within_beam: u64) -> HypUnitRound {
+        let within_beam = within_beam.min(candidates);
+        let kept = within_beam.min(self.capacity);
+        HypUnitRound {
+            // One insertion per arriving candidate (beam-rejected ones
+            // are still compared: 1 cycle each).
+            insert_cycles: candidates,
+            overflow: within_beam - kept,
+            kept,
+        }
+    }
+}
+
+impl HypWorkload {
+    /// Derive the simulator workload from measured functional-decoder
+    /// statistics, coupling the timing experiments to real search
+    /// behaviour (DESIGN.md: simulator and engine share one workload).
+    pub fn from_stats(stats: &PruneStats, avg_children: f64, word_commit_frac: f64) -> Self {
+        HypWorkload {
+            n_hyps: stats.mean_live().ceil().max(1.0) as u64,
+            avg_children,
+            word_commit_frac,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacity_from_table2() {
+        let u = HypUnit::new(&AccelConfig::paper());
+        assert_eq!(u.capacity, 384);
+    }
+
+    #[test]
+    fn round_respects_capacity() {
+        let u = HypUnit { capacity: 10 };
+        let r = u.round(100, 40);
+        assert_eq!(r.kept, 10);
+        assert_eq!(r.overflow, 30);
+        assert_eq!(r.insert_cycles, 100);
+    }
+
+    #[test]
+    fn round_clamps_inconsistent_inputs() {
+        let u = HypUnit { capacity: 10 };
+        let r = u.round(5, 50); // within_beam > candidates
+        assert_eq!(r.kept, 5);
+        assert_eq!(r.overflow, 0);
+    }
+
+    #[test]
+    fn insertion_hides_behind_expansion() {
+        // 256 candidates = 256 insert cycles; a single expansion thread
+        // costs hundreds of instructions, so with any pool the unit is
+        // never the bottleneck — the §3.5 design point.
+        let u = HypUnit::new(&AccelConfig::paper());
+        let r = u.round(256 * 8, 256 * 8);
+        let expansion_cycles = super::super::kernels::hyp_expansion_thread_instrs(8.0, 0.12)
+            * 256
+            / 8; // 256 threads on 8 PEs
+        assert!(r.insert_cycles < expansion_cycles);
+    }
+
+    #[test]
+    fn workload_from_stats() {
+        let stats = PruneStats {
+            generated: 1000,
+            merged: 100,
+            beam_pruned: 300,
+            capacity_pruned: 200,
+            peak_live: 80,
+            rounds: 10,
+        };
+        let w = HypWorkload::from_stats(&stats, 5.0, 0.2);
+        assert_eq!(w.n_hyps, 40); // survived 400 / 10 rounds
+        assert_eq!(w.avg_children, 5.0);
+    }
+}

@@ -1,0 +1,16 @@
+//! The ASRPU accelerator simulator (§3): command decoder, ASR controller
+//! with Fig. 7 setup/DMA pipelining, PE-pool scheduling, hypothesis unit
+//! and the §5.1 instruction-count kernel models.
+
+pub mod command;
+pub mod controller;
+pub mod hypunit;
+pub mod kernels;
+pub mod memory;
+pub mod pool;
+
+pub use command::{AsrpuDevice, Command};
+pub use controller::{simulate_step, SimMode, StepReport};
+pub use hypunit::HypUnit;
+pub use memory::{Cache, GraphWorkload};
+pub use kernels::{build_step_kernels, HypWorkload, KernelClass, KernelExec};

@@ -1,0 +1,135 @@
+//! PE-pool thread scheduler (§3.3): the ASR controller dispatches kernel
+//! threads to idle PEs; every time a PE becomes idle it receives the next
+//! thread, until the kernel's threads are exhausted. This is classic
+//! online list scheduling, simulated exactly with a min-heap of PE
+//! free times.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Outcome of scheduling one kernel on the pool.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PoolRun {
+    /// Cycles from dispatch start to last thread completion.
+    pub makespan: u64,
+    /// Σ busy cycles across PEs (= total instructions at 1 IPC).
+    pub busy_cycles: u64,
+    /// busy / (makespan × PEs) — pool utilization.
+    pub utilization: f64,
+}
+
+/// Schedule `threads` equal-cost threads of `cycles_per_thread` each on
+/// `num_pes` PEs (the common case: one thread per neuron, §3.1) — closed
+/// form.
+pub fn schedule_uniform(threads: u64, cycles_per_thread: u64, num_pes: u64) -> PoolRun {
+    if threads == 0 || cycles_per_thread == 0 {
+        return PoolRun { makespan: 0, busy_cycles: 0, utilization: 1.0 };
+    }
+    let waves = threads.div_ceil(num_pes);
+    let makespan = waves * cycles_per_thread;
+    let busy = threads * cycles_per_thread;
+    PoolRun {
+        makespan,
+        busy_cycles: busy,
+        utilization: busy as f64 / (makespan * num_pes) as f64,
+    }
+}
+
+/// Schedule threads with heterogeneous costs (hypothesis expansion with
+/// per-hypothesis branching) in dispatch order.
+pub fn schedule(thread_cycles: &[u64], num_pes: usize) -> PoolRun {
+    assert!(num_pes > 0);
+    let mut heap: BinaryHeap<Reverse<u64>> = (0..num_pes).map(|_| Reverse(0u64)).collect();
+    let mut makespan = 0u64;
+    let mut busy = 0u64;
+    for &c in thread_cycles {
+        let Reverse(free_at) = heap.pop().unwrap();
+        let done = free_at + c;
+        busy += c;
+        makespan = makespan.max(done);
+        heap.push(Reverse(done));
+    }
+    let util = if makespan == 0 {
+        1.0
+    } else {
+        busy as f64 / (makespan * num_pes as u64) as f64
+    };
+    PoolRun { makespan, busy_cycles: busy, utilization: util }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn uniform_closed_form_matches_simulation() {
+        prop::check("uniform-schedule-closed-form", 40, |g| {
+            let threads = g.len(0) as u64;
+            let cycles = 1 + g.index(1000) as u64;
+            let pes = 1 + g.index(16);
+            let fast = schedule_uniform(threads, cycles, pes as u64);
+            let slow = schedule(&vec![cycles; threads as usize], pes);
+            crate::prop_assert!(
+                fast.makespan == slow.makespan,
+                "makespan {} != {}",
+                fast.makespan,
+                slow.makespan
+            );
+            crate::prop_assert!(fast.busy_cycles == slow.busy_cycles, "busy mismatch");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn makespan_bounds_property() {
+        prop::check("schedule-bounds", 40, |g| {
+            let n = g.len(1);
+            let costs = g.vec_of(n, |r| 1 + r.below(500));
+            let pes = 1 + g.index(12);
+            let run = schedule(&costs, pes);
+            let total: u64 = costs.iter().sum();
+            let max = *costs.iter().max().unwrap();
+            // Lower bounds: critical path and perfect balance.
+            crate::prop_assert!(run.makespan >= max, "below critical path");
+            crate::prop_assert!(
+                run.makespan >= total.div_ceil(pes as u64),
+                "below perfect balance"
+            );
+            // Graham bound for list scheduling: ≤ total/p + max.
+            crate::prop_assert!(
+                run.makespan <= total / pes as u64 + max,
+                "above Graham bound: {} > {}",
+                run.makespan,
+                total / pes as u64 + max
+            );
+            crate::prop_assert!(run.busy_cycles == total, "busy != total");
+            crate::prop_assert!(run.utilization <= 1.0 + 1e-9, "util > 1");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn single_pe_serializes() {
+        let run = schedule(&[5, 7, 3], 1);
+        assert_eq!(run.makespan, 15);
+        assert_eq!(run.utilization, 1.0);
+    }
+
+    #[test]
+    fn more_pes_never_slower() {
+        let costs: Vec<u64> = (0..100).map(|i| 10 + (i * 7) % 90).collect();
+        let mut prev = u64::MAX;
+        for pes in [1, 2, 4, 8, 16] {
+            let m = schedule(&costs, pes).makespan;
+            assert!(m <= prev, "{pes} PEs slower");
+            prev = m;
+        }
+    }
+
+    #[test]
+    fn empty_kernel_is_free() {
+        assert_eq!(schedule(&[], 8).makespan, 0);
+        assert_eq!(schedule_uniform(0, 100, 8).makespan, 0);
+    }
+}

@@ -1,0 +1,7 @@
+//! Acoustic model: native TDS inference (streaming + offline), weight
+//! loading and the dense primitives it is built from (§2.2, §4.2).
+
+pub mod ops;
+pub mod tds;
+
+pub use tds::{TdsModel, TdsState};

@@ -1,0 +1,182 @@
+//! Dense primitives for the native TDS acoustic model: causal temporal
+//! convolution over (channels × mel-width) timesteps, fully-connected
+//! layers, layer normalization and log-softmax.
+//!
+//! Timestep layout: a timestep is a flat `[channels × width]` vector,
+//! channel-major (`v[ch * width + mel]`) — the "view a spectrogram as
+//! channels over mel bands" convention of the TDS paper, mirrored by
+//! `python/compile/model.py`.
+
+/// `y = W·x + b` where `w` is row-major `[out_dim × in_dim]`.
+pub fn fc(w: &[f32], b: &[f32], x: &[f32], out: &mut Vec<f32>) {
+    let in_dim = x.len();
+    let out_dim = b.len();
+    debug_assert_eq!(w.len(), in_dim * out_dim);
+    out.clear();
+    for o in 0..out_dim {
+        let row = &w[o * in_dim..(o + 1) * in_dim];
+        let mut acc = b[o];
+        // Plain loop: rustc autovectorizes this; profiled in §Perf.
+        for (wi, xi) in row.iter().zip(x) {
+            acc += wi * xi;
+        }
+        out.push(acc);
+    }
+}
+
+pub fn relu_inplace(x: &mut [f32]) {
+    for v in x {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Layer norm over the whole timestep vector with learned gain/bias.
+pub fn layer_norm(gain: &[f32], bias: &[f32], x: &mut [f32], eps: f32) {
+    let n = x.len() as f32;
+    let mean = x.iter().sum::<f32>() / n;
+    let var = x.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / n;
+    let inv = 1.0 / (var + eps).sqrt();
+    for (i, v) in x.iter_mut().enumerate() {
+        *v = (*v - mean) * inv * gain[i] + bias[i];
+    }
+}
+
+/// Numerically-stable log-softmax.
+pub fn log_softmax(x: &mut [f32]) {
+    let max = x.iter().cloned().fold(f32::MIN, f32::max);
+    let mut sum = 0.0f32;
+    for v in x.iter() {
+        sum += (v - max).exp();
+    }
+    let lse = max + sum.ln();
+    for v in x.iter_mut() {
+        *v -= lse;
+    }
+}
+
+/// Causal temporal conv at one output position.
+///
+/// `window` holds `kw` timesteps (oldest first), each `[in_ch × width]`;
+/// `w` is `[out_ch × in_ch × kw]`; output is `[out_ch × width]`.
+pub fn conv_step(
+    w: &[f32],
+    b: &[f32],
+    window: &[&[f32]],
+    in_ch: usize,
+    out_ch: usize,
+    kw: usize,
+    width: usize,
+    out: &mut Vec<f32>,
+) {
+    debug_assert_eq!(window.len(), kw);
+    debug_assert_eq!(w.len(), out_ch * in_ch * kw);
+    out.clear();
+    out.resize(out_ch * width, 0.0);
+    for o in 0..out_ch {
+        let out_row = &mut out[o * width..(o + 1) * width];
+        for v in out_row.iter_mut() {
+            *v = b[o];
+        }
+        for i in 0..in_ch {
+            for k in 0..kw {
+                let wk = w[(o * in_ch + i) * kw + k];
+                if wk == 0.0 {
+                    continue;
+                }
+                let x_row = &window[k][i * width..(i + 1) * width];
+                for (v, x) in out_row.iter_mut().zip(x_row) {
+                    *v += wk * x;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn fc_identity() {
+        // 2x2 identity matrix.
+        let w = vec![1.0, 0.0, 0.0, 1.0];
+        let b = vec![0.5, -0.5];
+        let mut out = Vec::new();
+        fc(&w, &b, &[3.0, 4.0], &mut out);
+        assert_eq!(out, vec![3.5, 3.5]);
+    }
+
+    #[test]
+    fn relu_clamps() {
+        let mut x = vec![-1.0, 0.0, 2.0];
+        relu_inplace(&mut x);
+        assert_eq!(x, vec![0.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn layer_norm_standardizes() {
+        let gain = vec![1.0; 8];
+        let bias = vec![0.0; 8];
+        let mut x: Vec<f32> = (0..8).map(|i| i as f32 * 3.0 + 1.0).collect();
+        layer_norm(&gain, &bias, &mut x, 1e-5);
+        let mean: f32 = x.iter().sum::<f32>() / 8.0;
+        let var: f32 = x.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 8.0;
+        assert!(mean.abs() < 1e-5);
+        assert!((var - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn log_softmax_normalizes() {
+        prop::check("log-softmax-normalizes", 30, |g| {
+            let n = g.len(2).max(2);
+            let mut x = g.vec_of(n, |r| r.uniform(-20.0, 20.0));
+            log_softmax(&mut x);
+            let total: f32 = x.iter().map(|v| v.exp()).sum();
+            crate::prop_assert!((total - 1.0).abs() < 1e-4, "sum(exp) = {total}");
+            crate::prop_assert!(x.iter().all(|v| *v <= 1e-6), "log-prob above 0");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn log_softmax_preserves_argmax() {
+        let mut x = vec![0.1, 5.0, -3.0, 4.9];
+        log_softmax(&mut x);
+        let arg = x
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(arg, 1);
+    }
+
+    #[test]
+    fn conv_step_impulse_weight_selects_timestep() {
+        // kw=3, single channel, width=4; weight only on k=0 (oldest).
+        let w = vec![1.0, 0.0, 0.0];
+        let b = vec![0.0];
+        let t0 = vec![1.0, 2.0, 3.0, 4.0];
+        let t1 = vec![9.0; 4];
+        let t2 = vec![7.0; 4];
+        let window: Vec<&[f32]> = vec![&t0, &t1, &t2];
+        let mut out = Vec::new();
+        conv_step(&w, &b, &window, 1, 1, 3, 4, &mut out);
+        assert_eq!(out, t0);
+    }
+
+    #[test]
+    fn conv_step_channel_mixing() {
+        // 2 in-ch → 1 out-ch, kw=1, width=2: out = 2*chan0 + 3*chan1 + b.
+        let w = vec![2.0, 3.0];
+        let b = vec![1.0];
+        let t = vec![1.0, 2.0, 10.0, 20.0]; // ch0=[1,2], ch1=[10,20]
+        let window: Vec<&[f32]> = vec![&t];
+        let mut out = Vec::new();
+        conv_step(&w, &b, &window, 2, 1, 1, 2, &mut out);
+        assert_eq!(out, vec![2.0 + 30.0 + 1.0, 4.0 + 60.0 + 1.0]);
+    }
+}

@@ -1,0 +1,363 @@
+//! Native TDS acoustic model with exact streaming execution.
+//!
+//! Mirrors `python/compile/model.py` layer for layer (same weight names,
+//! same causal-conv semantics), so the engine can run either through the
+//! AOT-compiled XLA artifact ([`crate::runtime`]) or natively here, with
+//! tests asserting the two paths agree. The streaming step consumes the
+//! feature frames of one decoding step and carries conv history across
+//! steps — reproducing the offline full-sequence output exactly (causal
+//! convolutions, §Hardware-Adaptation in DESIGN.md).
+
+use crate::config::{Layer, ModelConfig};
+use crate::util::rng::Rng;
+use crate::util::tensor_io::{Tensor, TensorFile};
+use anyhow::{ensure, Context, Result};
+
+use super::ops;
+
+const LN_EPS: f32 = 1e-5;
+
+/// Weights for one layer, resolved from the tensor file.
+#[derive(Debug, Clone)]
+enum LayerWeights {
+    Conv { w: Vec<f32>, b: Vec<f32> },
+    Fc { w: Vec<f32>, b: Vec<f32> },
+    LayerNorm { g: Vec<f32>, b: Vec<f32> },
+}
+
+/// The model: topology + weights.
+#[derive(Debug, Clone)]
+pub struct TdsModel {
+    pub cfg: ModelConfig,
+    layers: Vec<(Layer, LayerWeights)>,
+}
+
+/// Streaming state: per conv layer, the last `kw-1` input timesteps.
+#[derive(Debug, Clone)]
+pub struct TdsState {
+    conv_hist: Vec<Vec<Vec<f32>>>,
+}
+
+impl TdsModel {
+    /// Load weights (naming convention: `{layer}.w`/`{layer}.b` for conv
+    /// and fc, `{layer}.g`/`{layer}.b` for layer norm).
+    pub fn from_weights(cfg: ModelConfig, weights: &TensorFile) -> Result<Self> {
+        let mut layers = Vec::new();
+        for layer in cfg.layers() {
+            let name = layer.name().to_string();
+            let lw = match &layer {
+                Layer::Conv { in_ch, out_ch, kw, .. } => {
+                    let w = weights.require(&format!("{name}.w"))?;
+                    ensure!(
+                        w.dims == vec![*out_ch, *in_ch, *kw],
+                        "conv '{name}': dims {:?}, expected [{out_ch},{in_ch},{kw}]",
+                        w.dims
+                    );
+                    let b = weights.require(&format!("{name}.b"))?;
+                    ensure!(b.dims == vec![*out_ch], "conv '{name}' bias dims {:?}", b.dims);
+                    LayerWeights::Conv {
+                        w: w.as_f32()?.to_vec(),
+                        b: b.as_f32()?.to_vec(),
+                    }
+                }
+                Layer::Fc { in_dim, out_dim, .. } => {
+                    let w = weights.require(&format!("{name}.w"))?;
+                    ensure!(
+                        w.dims == vec![*out_dim, *in_dim],
+                        "fc '{name}': dims {:?}, expected [{out_dim},{in_dim}]",
+                        w.dims
+                    );
+                    let b = weights.require(&format!("{name}.b"))?;
+                    LayerWeights::Fc {
+                        w: w.as_f32()?.to_vec(),
+                        b: b.as_f32()?.to_vec(),
+                    }
+                }
+                Layer::LayerNorm { dim, .. } => {
+                    let g = weights.require(&format!("{name}.g"))?;
+                    ensure!(g.dims == vec![*dim], "ln '{name}' gain dims {:?}", g.dims);
+                    let b = weights.require(&format!("{name}.b"))?;
+                    LayerWeights::LayerNorm {
+                        g: g.as_f32()?.to_vec(),
+                        b: b.as_f32()?.to_vec(),
+                    }
+                }
+            };
+            layers.push((layer, lw));
+        }
+        Ok(TdsModel { cfg, layers })
+    }
+
+    /// Load from `artifacts/weights.bin`.
+    pub fn from_artifacts(cfg: ModelConfig, dir: &std::path::Path) -> Result<Self> {
+        let tf = TensorFile::load(&dir.join("weights.bin"))
+            .context("loading weights.bin (run `make artifacts` first)")?;
+        Self::from_weights(cfg, &tf)
+    }
+
+    /// Random (He-initialized) weights — used by benches and simulator
+    /// workloads where the numerics don't matter, only the shapes.
+    pub fn random(cfg: ModelConfig, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut tf = TensorFile::new();
+        for layer in cfg.layers() {
+            let name = layer.name().to_string();
+            match &layer {
+                Layer::Conv { in_ch, out_ch, kw, .. } => {
+                    let fan_in = (in_ch * kw) as f32;
+                    let std = (2.0 / fan_in).sqrt();
+                    let n = out_ch * in_ch * kw;
+                    tf.push(Tensor::f32(
+                        format!("{name}.w"),
+                        vec![*out_ch, *in_ch, *kw],
+                        (0..n).map(|_| rng.normal() * std).collect(),
+                    ));
+                    tf.push(Tensor::f32(format!("{name}.b"), vec![*out_ch], vec![0.0; *out_ch]));
+                }
+                Layer::Fc { in_dim, out_dim, .. } => {
+                    let std = (2.0 / *in_dim as f32).sqrt();
+                    let n = in_dim * out_dim;
+                    tf.push(Tensor::f32(
+                        format!("{name}.w"),
+                        vec![*out_dim, *in_dim],
+                        (0..n).map(|_| rng.normal() * std).collect(),
+                    ));
+                    tf.push(Tensor::f32(format!("{name}.b"), vec![*out_dim], vec![0.0; *out_dim]));
+                }
+                Layer::LayerNorm { dim, .. } => {
+                    tf.push(Tensor::f32(format!("{name}.g"), vec![*dim], vec![1.0; *dim]));
+                    tf.push(Tensor::f32(format!("{name}.b"), vec![*dim], vec![0.0; *dim]));
+                }
+            }
+        }
+        Self::from_weights(cfg, &tf).expect("random weights must validate")
+    }
+
+    /// Fresh streaming state (conv histories zeroed — equivalent to the
+    /// left zero-padding of the offline causal model).
+    pub fn state(&self) -> TdsState {
+        let mut conv_hist = Vec::new();
+        for (layer, _) in &self.layers {
+            if let Layer::Conv { in_ch, kw, w, .. } = layer {
+                conv_hist.push(vec![vec![0.0f32; in_ch * w]; kw - 1]);
+            }
+        }
+        TdsState { conv_hist }
+    }
+
+    /// Process one decoding step: `feats` is `frames × n_mels` row-major;
+    /// returns `vectors_per_step × tokens` log-probabilities.
+    pub fn step(&self, state: &mut TdsState, feats: &[f32]) -> Vec<f32> {
+        let n_mels = self.cfg.n_mels;
+        assert_eq!(feats.len() % n_mels, 0, "feats not a whole number of frames");
+        let n_frames = feats.len() / n_mels;
+        // Current activations: one Vec per timestep.
+        let mut acts: Vec<Vec<f32>> = (0..n_frames)
+            .map(|f| feats[f * n_mels..(f + 1) * n_mels].to_vec())
+            .collect();
+        let mut conv_idx = 0;
+        for (layer, lw) in &self.layers {
+            match (layer, lw) {
+                (
+                    Layer::Conv { in_ch, out_ch, kw, stride, w, residual, .. },
+                    LayerWeights::Conv { w: cw, b: cb },
+                ) => {
+                    let hist = &mut state.conv_hist[conv_idx];
+                    conv_idx += 1;
+                    // ext = hist ++ acts, length (kw-1) + T.
+                    let mut ext: Vec<&[f32]> = Vec::with_capacity(kw - 1 + acts.len());
+                    for h in hist.iter() {
+                        ext.push(h);
+                    }
+                    for a in acts.iter() {
+                        ext.push(a);
+                    }
+                    assert_eq!(
+                        acts.len() % stride,
+                        0,
+                        "chunk length {} not divisible by stride {stride}",
+                        acts.len()
+                    );
+                    let t_out = acts.len() / stride;
+                    let mut outs: Vec<Vec<f32>> = Vec::with_capacity(t_out);
+                    let mut buf = Vec::new();
+                    for o in 0..t_out {
+                        let win = &ext[o * stride..o * stride + kw];
+                        ops::conv_step(cw, cb, win, *in_ch, *out_ch, *kw, *w, &mut buf);
+                        ops::relu_inplace(&mut buf);
+                        if *residual {
+                            // Residual aligns with the newest input of the
+                            // window (stride 1 inside TDS blocks).
+                            debug_assert_eq!(*stride, 1);
+                            for (v, x) in buf.iter_mut().zip(win[kw - 1].iter()) {
+                                *v += x;
+                            }
+                        }
+                        outs.push(buf.clone());
+                    }
+                    // Update history: last kw-1 ext entries.
+                    let total = ext.len();
+                    let new_hist: Vec<Vec<f32>> =
+                        ext[total - (kw - 1)..].iter().map(|s| s.to_vec()).collect();
+                    *hist = new_hist;
+                    acts = outs;
+                }
+                (
+                    Layer::Fc { residual, relu, .. },
+                    LayerWeights::Fc { w: fw, b: fb },
+                ) => {
+                    let mut buf = Vec::new();
+                    for t in acts.iter_mut() {
+                        ops::fc(fw, fb, t, &mut buf);
+                        if *relu {
+                            ops::relu_inplace(&mut buf);
+                        }
+                        if *residual {
+                            for (v, x) in buf.iter_mut().zip(t.iter()) {
+                                *v += x;
+                            }
+                        }
+                        std::mem::swap(t, &mut buf);
+                    }
+                }
+                (Layer::LayerNorm { .. }, LayerWeights::LayerNorm { g, b }) => {
+                    for t in acts.iter_mut() {
+                        ops::layer_norm(g, b, t, LN_EPS);
+                    }
+                }
+                _ => unreachable!("layer/weights mismatch"),
+            }
+        }
+        // Log-softmax over tokens, flatten.
+        let tokens = self.cfg.tokens;
+        let mut out = Vec::with_capacity(acts.len() * tokens);
+        for t in acts.iter_mut() {
+            ops::log_softmax(t);
+            out.extend_from_slice(t);
+        }
+        out
+    }
+
+    /// Offline full-sequence forward: chunk the features into decoding
+    /// steps and stream through a fresh state (drops a ragged tail).
+    pub fn forward_full(&self, feats: &[f32]) -> Vec<f32> {
+        let n_mels = self.cfg.n_mels;
+        let fps = self.cfg.frames_per_step();
+        let n_frames = feats.len() / n_mels;
+        let mut state = self.state();
+        let mut out = Vec::new();
+        let mut f = 0;
+        while f + fps <= n_frames {
+            out.extend(self.step(&mut state, &feats[f * n_mels..(f + fps) * n_mels]));
+            f += fps;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+
+    fn tiny() -> TdsModel {
+        TdsModel::random(ModelConfig::tiny_tds(), 42)
+    }
+
+    #[test]
+    fn step_output_shape() {
+        let m = tiny();
+        let mut st = m.state();
+        let feats = vec![0.1f32; m.cfg.frames_per_step() * m.cfg.n_mels];
+        let out = m.step(&mut st, &feats);
+        assert_eq!(out.len(), m.cfg.vectors_per_step() * m.cfg.tokens);
+    }
+
+    #[test]
+    fn outputs_are_log_probs() {
+        let m = tiny();
+        let mut st = m.state();
+        let feats = vec![0.3f32; m.cfg.frames_per_step() * m.cfg.n_mels];
+        let out = m.step(&mut st, &feats);
+        for v in out.chunks(m.cfg.tokens) {
+            let total: f32 = v.iter().map(|x| x.exp()).sum();
+            assert!((total - 1.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn streaming_equals_offline() {
+        // Two chunks through one state == both chunks through forward_full.
+        let m = tiny();
+        let n = m.cfg.frames_per_step() * m.cfg.n_mels;
+        let mut rng = crate::util::rng::Rng::new(7);
+        let feats: Vec<f32> = (0..3 * n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let full = m.forward_full(&feats);
+        let mut st = m.state();
+        let mut streamed = Vec::new();
+        for c in 0..3 {
+            streamed.extend(m.step(&mut st, &feats[c * n..(c + 1) * n]));
+        }
+        assert_eq!(full.len(), streamed.len());
+        for (a, b) in full.iter().zip(&streamed) {
+            assert!((a - b).abs() < 1e-5, "streaming != offline: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn state_carries_context() {
+        // Same second chunk gives different output if the first chunk
+        // differed — i.e. conv history actually crosses step boundaries.
+        let m = tiny();
+        let n = m.cfg.frames_per_step() * m.cfg.n_mels;
+        let mut rng = crate::util::rng::Rng::new(9);
+        let a: Vec<f32> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let b: Vec<f32> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let c: Vec<f32> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let mut st1 = m.state();
+        m.step(&mut st1, &a);
+        let out1 = m.step(&mut st1, &c);
+        let mut st2 = m.state();
+        m.step(&mut st2, &b);
+        let out2 = m.step(&mut st2, &c);
+        let diff: f32 = out1.iter().zip(&out2).map(|(x, y)| (x - y).abs()).sum();
+        assert!(diff > 1e-3, "conv state had no effect");
+    }
+
+    #[test]
+    fn from_weights_rejects_bad_dims() {
+        let cfg = ModelConfig::tiny_tds();
+        let good = TdsModel::random(cfg.clone(), 1);
+        // Rebuild the tensor file but corrupt one tensor's dims.
+        let mut tf = TensorFile::new();
+        for (layer, _) in &good.layers {
+            let name = layer.name();
+            match layer {
+                Layer::Conv { in_ch, out_ch, kw, .. } => {
+                    tf.push(Tensor::f32(
+                        format!("{name}.w"),
+                        vec![*out_ch, *in_ch, *kw + 1], // wrong kw
+                        vec![0.0; out_ch * in_ch * (kw + 1)],
+                    ));
+                    tf.push(Tensor::f32(format!("{name}.b"), vec![*out_ch], vec![0.0; *out_ch]));
+                }
+                _ => break,
+            }
+        }
+        assert!(TdsModel::from_weights(cfg, &tf).is_err());
+    }
+
+    #[test]
+    fn paper_scale_shapes_run() {
+        // One (expensive-ish) smoke test that the 79-layer paper topology
+        // actually executes. Random weights; just shape/finiteness.
+        let cfg = ModelConfig::paper_tds();
+        let cfg = ModelConfig { quantized: false, ..cfg };
+        let m = TdsModel::random(cfg, 3);
+        let mut st = m.state();
+        let feats = vec![0.05f32; m.cfg.frames_per_step() * m.cfg.n_mels];
+        let out = m.step(&mut st, &feats);
+        assert_eq!(out.len(), m.cfg.vectors_per_step() * 9000);
+        assert!(out.iter().all(|v| v.is_finite()));
+    }
+}

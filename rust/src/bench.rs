@@ -1,0 +1,126 @@
+//! Minimal benchmarking harness (criterion is not in the offline crate
+//! set). Used by the `rust/benches/*.rs` targets (`harness = false`).
+//!
+//! Methodology: warm up, then run timed batches until both a minimum
+//! wall-clock budget and a minimum iteration count are met; report
+//! median / mean / p95 per-iteration time and derived throughput.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub median: Duration,
+    pub mean: Duration,
+    pub p95: Duration,
+}
+
+impl BenchResult {
+    pub fn per_sec(&self) -> f64 {
+        1.0 / self.median.as_secs_f64()
+    }
+}
+
+/// Benchmark runner with fixed budgets.
+pub struct Bench {
+    /// Minimum measured iterations.
+    pub min_iters: u64,
+    /// Minimum total measurement time.
+    pub min_time: Duration,
+    /// Warm-up time.
+    pub warmup: Duration,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            min_iters: 20,
+            min_time: Duration::from_millis(800),
+            warmup: Duration::from_millis(150),
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench {
+            min_iters: 5,
+            min_time: Duration::from_millis(200),
+            warmup: Duration::from_millis(50),
+            ..Default::default()
+        }
+    }
+
+    /// Time `f`; the closure should return something observable to keep
+    /// the optimizer honest (its result is passed to `std::hint::black_box`).
+    pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        // Warm-up.
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        // Measure.
+        let mut samples: Vec<Duration> = Vec::new();
+        let m0 = Instant::now();
+        while samples.len() < self.min_iters as usize || m0.elapsed() < self.min_time {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t.elapsed());
+            if samples.len() > 100_000 {
+                break;
+            }
+        }
+        samples.sort();
+        let median = samples[samples.len() / 2];
+        let p95 = samples[((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)];
+        let mean = samples.iter().sum::<Duration>() / samples.len() as u32;
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: samples.len() as u64,
+            median,
+            mean,
+            p95,
+        };
+        println!(
+            "bench {name:<44} median {:>10.3?}  mean {:>10.3?}  p95 {:>10.3?}  ({} iters)",
+            result.median, result.mean, result.p95, result.iters
+        );
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bench::quick();
+        let r = b.run("spin", || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(r.iters >= 5);
+        assert!(r.median.as_nanos() > 0);
+    }
+
+    #[test]
+    fn results_accumulate() {
+        let mut b = Bench::quick();
+        b.run("a", || 1);
+        b.run("b", || 2);
+        assert_eq!(b.results().len(), 2);
+    }
+}

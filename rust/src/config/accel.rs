@@ -1,0 +1,124 @@
+//! Accelerator configuration — the paper's Table 2.
+//!
+//! The preset [`AccelConfig::paper`] is the exact configuration evaluated
+//! in §5 (500 MHz, 8 PEs, 8-wide int8 vector MAC, 24 KB hypothesis memory,
+//! 64 KB shared I-cache, 512 KB shared scratchpad, 1 MB model memory /
+//! D-cache, per-PE 4 KB I$ / 24 KB D$). Sweep examples mutate copies of it.
+
+/// Hardware parameters of one ASRPU instance (Table 2).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AccelConfig {
+    /// Core clock in Hz (paper: 500 MHz).
+    pub frequency_hz: u64,
+    /// Number of processing elements in the pool (paper: 8).
+    pub num_pes: usize,
+    /// Vector MAC width in 8-bit lanes (paper: 8).
+    pub mac_vector_width: usize,
+    /// Hypothesis memory inside the hypothesis unit, bytes (paper: 24 KB).
+    pub hyp_mem_bytes: usize,
+    /// Shared instruction cache, bytes (paper: 64 KB).
+    pub shared_icache_bytes: usize,
+    /// Shared scratchpad ("Shared Memory"), bytes (paper: 512 KB).
+    pub shared_mem_bytes: usize,
+    /// Model memory / shared D-cache, bytes (paper: 1 MB).
+    pub model_mem_bytes: usize,
+    /// Per-PE instruction cache, bytes (paper: 4 KB).
+    pub pe_icache_bytes: usize,
+    /// Per-PE data cache, bytes (paper: 24 KB).
+    pub pe_dcache_bytes: usize,
+    /// External-memory (DRAM) bandwidth available to the DMA engine,
+    /// bytes/second. Not in Table 2; used to model the DMA prefetch
+    /// latency the paper's Fig. 7 hides behind setup threads
+    /// (LPDDR4-class edge device: ~8 GB/s).
+    pub ext_mem_bw_bytes_per_s: u64,
+    /// Size of a hypothesis record in hypothesis memory, bytes (hash,
+    /// score, backlink, lexicon-node ptr, LM-state ptr, token id — §3.5).
+    pub hyp_record_bytes: usize,
+}
+
+impl AccelConfig {
+    /// Table 2 configuration.
+    pub fn paper() -> Self {
+        AccelConfig {
+            frequency_hz: 500_000_000,
+            num_pes: 8,
+            mac_vector_width: 8,
+            hyp_mem_bytes: 24 << 10,
+            shared_icache_bytes: 64 << 10,
+            shared_mem_bytes: 512 << 10,
+            model_mem_bytes: 1 << 20,
+            pe_icache_bytes: 4 << 10,
+            pe_dcache_bytes: 24 << 10,
+            ext_mem_bw_bytes_per_s: 8_000_000_000,
+            hyp_record_bytes: 32,
+        }
+    }
+
+    /// Maximum number of hypotheses the hypothesis memory can hold. The
+    /// memory is split between the incoming (active) and outgoing (newly
+    /// generated, pre-prune) sets, hence the /2.
+    pub fn hyp_capacity(&self) -> usize {
+        self.hyp_mem_bytes / self.hyp_record_bytes / 2
+    }
+
+    /// Seconds per core cycle.
+    pub fn cycle_s(&self) -> f64 {
+        1.0 / self.frequency_hz as f64
+    }
+
+    /// Sanity checks used by constructors and property tests.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.frequency_hz > 0, "frequency must be positive");
+        anyhow::ensure!(self.num_pes > 0, "need at least one PE");
+        anyhow::ensure!(
+            self.mac_vector_width.is_power_of_two(),
+            "MAC width must be a power of two"
+        );
+        anyhow::ensure!(self.hyp_capacity() >= 2, "hypothesis memory too small");
+        anyhow::ensure!(self.model_mem_bytes >= 64 << 10, "model memory too small");
+        Ok(())
+    }
+}
+
+impl Default for AccelConfig {
+    fn default() -> Self {
+        Self::paper()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_preset_matches_table2() {
+        let c = AccelConfig::paper();
+        assert_eq!(c.frequency_hz, 500_000_000);
+        assert_eq!(c.num_pes, 8);
+        assert_eq!(c.mac_vector_width, 8);
+        assert_eq!(c.hyp_mem_bytes, 24 * 1024);
+        assert_eq!(c.shared_icache_bytes, 64 * 1024);
+        assert_eq!(c.shared_mem_bytes, 512 * 1024);
+        assert_eq!(c.model_mem_bytes, 1024 * 1024);
+        assert_eq!(c.pe_icache_bytes, 4 * 1024);
+        assert_eq!(c.pe_dcache_bytes, 24 * 1024);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn hyp_capacity_is_sane() {
+        let c = AccelConfig::paper();
+        // 24 KB / 32 B / 2 = 384 live hypotheses.
+        assert_eq!(c.hyp_capacity(), 384);
+    }
+
+    #[test]
+    fn validate_rejects_degenerate() {
+        let mut c = AccelConfig::paper();
+        c.num_pes = 0;
+        assert!(c.validate().is_err());
+        let mut c = AccelConfig::paper();
+        c.mac_vector_width = 6;
+        assert!(c.validate().is_err());
+    }
+}

@@ -1,0 +1,80 @@
+//! Configuration: accelerator hardware (Table 2), model topology (§4) and
+//! decoder search parameters, plus artifact-directory resolution.
+
+pub mod accel;
+pub mod model;
+
+pub use accel::AccelConfig;
+pub use model::{Group, Layer, ModelConfig};
+
+use std::path::{Path, PathBuf};
+
+/// Beam-search / decoding parameters (configured through the command
+/// decoder in hardware: `ConfigureBeamWidth` etc., Table 1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DecoderConfig {
+    /// Score beam: hypotheses more than this below the best are pruned.
+    pub beam: f32,
+    /// Maximum live hypotheses (bounded by hypothesis-memory capacity).
+    pub max_hyps: usize,
+    /// Language-model score weight.
+    pub lm_weight: f32,
+    /// Additive penalty per emitted word (discourages over-segmentation).
+    pub word_penalty: f32,
+    /// Score bonus for staying in blank/repeat (0 = none).
+    pub silence_bonus: f32,
+}
+
+impl Default for DecoderConfig {
+    fn default() -> Self {
+        DecoderConfig {
+            beam: 14.0,
+            max_hyps: AccelConfig::paper().hyp_capacity(),
+            lm_weight: 1.2,
+            word_penalty: -0.6,
+            silence_bonus: 0.0,
+        }
+    }
+}
+
+impl DecoderConfig {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.beam > 0.0, "beam must be positive");
+        anyhow::ensure!(self.max_hyps >= 1, "need at least one hypothesis");
+        anyhow::ensure!(self.lm_weight >= 0.0, "lm weight must be non-negative");
+        Ok(())
+    }
+}
+
+/// Resolve the artifacts directory: `$ASRPU_ARTIFACTS`, else `artifacts/`
+/// relative to the working directory, else relative to the crate root
+/// (for `cargo test` run from anywhere).
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("ASRPU_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    let cwd = Path::new("artifacts");
+    if cwd.exists() {
+        return cwd.to_path_buf();
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decoder_defaults_fit_hyp_memory() {
+        let d = DecoderConfig::default();
+        d.validate().unwrap();
+        assert!(d.max_hyps <= AccelConfig::paper().hyp_capacity());
+    }
+
+    #[test]
+    fn decoder_validation() {
+        let mut d = DecoderConfig::default();
+        d.beam = -1.0;
+        assert!(d.validate().is_err());
+    }
+}

@@ -1,0 +1,410 @@
+//! Model topology descriptions — the paper's case-study TDS network (§4)
+//! and the tiny trained variant used by the functional end-to-end path.
+//!
+//! The paper-scale preset reproduces the §4.2 kernel inventory exactly:
+//! **18 CONV, 29 FC and 32 LayerNorm kernels** (79 acoustic-model kernels)
+//! over 80-dim MFCC features, emitting scores for 9000 word-pieces. The
+//! same [`ModelConfig`] drives the accelerator simulator (instruction
+//! counts, Fig. 11), the layer-size report (Fig. 9) and the native AM
+//! shape checks, so all experiments see one consistent workload.
+
+/// One layer of the TDS acoustic model, in execution order.
+///
+/// Convolutions are 2D over (time × mel-width) with full channel mixing
+/// and kernel `(kw, 1)`, the TDS formulation: an input of `in_ch` channels
+/// by `w` mel bands convolved along time only. They are **causal** (left
+/// context only) so streaming execution with a `(kw-1)`-deep state buffer
+/// reproduces offline outputs exactly.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Layer {
+    Conv {
+        name: String,
+        in_ch: usize,
+        out_ch: usize,
+        /// Temporal kernel width.
+        kw: usize,
+        /// Temporal stride (subsampling).
+        stride: usize,
+        /// Mel-band width the channels are laid over (80 in the paper).
+        w: usize,
+        /// True for the conv inside a TDS block (has a residual add).
+        residual: bool,
+    },
+    Fc {
+        name: String,
+        in_dim: usize,
+        out_dim: usize,
+        /// ReLU after this FC (first FC of a TDS block pair; the output
+        /// layer and second FCs are linear).
+        relu: bool,
+        /// True for the second FC of a TDS block pair (residual add).
+        residual: bool,
+    },
+    LayerNorm { name: String, dim: usize },
+}
+
+impl Layer {
+    pub fn name(&self) -> &str {
+        match self {
+            Layer::Conv { name, .. } | Layer::Fc { name, .. } | Layer::LayerNorm { name, .. } => {
+                name
+            }
+        }
+    }
+
+    /// Number of trainable parameters (weights + biases / gains).
+    pub fn params(&self) -> usize {
+        match self {
+            Layer::Conv {
+                in_ch, out_ch, kw, ..
+            } => in_ch * out_ch * kw + out_ch,
+            Layer::Fc {
+                in_dim, out_dim, ..
+            } => in_dim * out_dim + out_dim,
+            Layer::LayerNorm { dim, .. } => 2 * dim,
+        }
+    }
+
+    /// Model-data bytes for this layer as stored in model memory.
+    /// The paper quantizes weights to 8 bits (the MAC unit consumes 8-bit
+    /// vectors), so int8 ⇒ 1 byte/param; the functional f32 path uses 4.
+    pub fn model_bytes(&self, quantized: bool) -> usize {
+        self.params() * if quantized { 1 } else { 4 }
+    }
+
+    /// Multiply-accumulates needed to produce ONE output timestep.
+    pub fn macs_per_timestep(&self) -> usize {
+        match self {
+            Layer::Conv {
+                in_ch,
+                out_ch,
+                kw,
+                w,
+                ..
+            } => in_ch * out_ch * kw * w,
+            Layer::Fc {
+                in_dim, out_dim, ..
+            } => in_dim * out_dim,
+            // LayerNorm is not MAC work; costed separately.
+            Layer::LayerNorm { .. } => 0,
+        }
+    }
+
+    /// Number of kernel threads ASRPU launches per output timestep
+    /// (§3.1: "each thread computes a single neuron"; LayerNorm threads
+    /// each normalize one timestep vector).
+    pub fn threads_per_timestep(&self, w: usize) -> usize {
+        match self {
+            Layer::Conv { out_ch, .. } => out_ch * w,
+            Layer::Fc { out_dim, .. } => *out_dim,
+            Layer::LayerNorm { .. } => 1,
+        }
+    }
+
+    /// Per-thread dot-product length (inputs accumulated by one neuron).
+    pub fn dot_len(&self) -> usize {
+        match self {
+            Layer::Conv { in_ch, kw, .. } => in_ch * kw,
+            Layer::Fc { in_dim, .. } => *in_dim,
+            Layer::LayerNorm { dim, .. } => *dim,
+        }
+    }
+}
+
+/// One TDS group: `blocks` TDS blocks at `channels` channels, entered
+/// through a standalone subsampling conv.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Group {
+    pub channels: usize,
+    pub blocks: usize,
+    /// Temporal kernel width of convs in this group.
+    pub kw: usize,
+    /// Stride of the group's entry conv.
+    pub entry_stride: usize,
+}
+
+/// Complete description of an ASR model + front-end geometry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    /// Audio sample rate (Hz).
+    pub sample_rate: usize,
+    /// MFCC analysis window (samples) — 25 ms.
+    pub win_len: usize,
+    /// MFCC hop (samples) — 10 ms.
+    pub hop_len: usize,
+    /// Mel bands / feature dimension (80 in the paper).
+    pub n_mels: usize,
+    /// Audio per decoding step (samples) — 80 ms ⇒ 8 feature frames.
+    pub step_len: usize,
+    /// TDS groups.
+    pub groups: Vec<Group>,
+    /// Optional final context conv (kw) at the last group's channels.
+    pub final_conv_kw: Option<usize>,
+    /// Output tokens (9000 word-pieces in the paper; blank = id 0).
+    pub tokens: usize,
+    /// Whether model data is int8-quantized (paper) or f32 (functional).
+    pub quantized: bool,
+}
+
+impl ModelConfig {
+    /// The paper's case-study network (§4.2, §5.2): 80-dim MFCC, three TDS
+    /// groups split by a 2× subsampling entry conv on the first group, a
+    /// final context conv, and a 9000-way word-piece output layer.
+    /// Yields exactly 18 CONV / 29 FC / 32 LN kernels.
+    pub fn paper_tds() -> Self {
+        ModelConfig {
+            name: "paper-tds".into(),
+            sample_rate: 16_000,
+            win_len: 400,
+            hop_len: 160,
+            n_mels: 80,
+            step_len: 1280,
+            groups: vec![
+                Group { channels: 10, blocks: 4, kw: 21, entry_stride: 2 },
+                Group { channels: 12, blocks: 5, kw: 21, entry_stride: 1 },
+                Group { channels: 15, blocks: 5, kw: 21, entry_stride: 1 },
+            ],
+            final_conv_kw: Some(11),
+            tokens: 9000,
+            quantized: true,
+        }
+    }
+
+    /// The tiny trained variant used end-to-end (see python/compile):
+    /// same structure, small dims, 27 tokens (blank + 26 syllables).
+    pub fn tiny_tds() -> Self {
+        ModelConfig {
+            name: "tiny-tds".into(),
+            sample_rate: 16_000,
+            win_len: 400,
+            hop_len: 160,
+            n_mels: 40,
+            step_len: 1280,
+            groups: vec![
+                Group { channels: 2, blocks: 1, kw: 5, entry_stride: 2 },
+                Group { channels: 3, blocks: 2, kw: 5, entry_stride: 1 },
+            ],
+            final_conv_kw: None,
+            tokens: 27,
+            quantized: false,
+        }
+    }
+
+    /// Overall temporal subsampling factor (feature frames per acoustic
+    /// score vector).
+    pub fn subsample(&self) -> usize {
+        self.groups.iter().map(|g| g.entry_stride).product()
+    }
+
+    /// Feature frames produced per decoding step.
+    pub fn frames_per_step(&self) -> usize {
+        self.step_len / self.hop_len
+    }
+
+    /// Acoustic score vectors per decoding step (hypothesis-expansion
+    /// repetitions, Fig. 6).
+    pub fn vectors_per_step(&self) -> usize {
+        self.frames_per_step() / self.subsample()
+    }
+
+    /// Samples the front-end must see per step: `step_len` new samples
+    /// plus the `win_len - hop_len` look-back tail.
+    pub fn samples_per_step(&self) -> usize {
+        self.step_len + self.win_len - self.hop_len
+    }
+
+    /// Audio seconds per decoding step.
+    pub fn step_seconds(&self) -> f64 {
+        self.step_len as f64 / self.sample_rate as f64
+    }
+
+    /// The full layer sequence in execution order.
+    pub fn layers(&self) -> Vec<Layer> {
+        let mut layers = Vec::new();
+        let mut in_ch = 1; // MFCC frame enters as 1 channel × n_mels
+        for (gi, g) in self.groups.iter().enumerate() {
+            let c = g.channels;
+            layers.push(Layer::Conv {
+                name: format!("g{gi}.sub"),
+                in_ch,
+                out_ch: c,
+                kw: g.kw,
+                stride: g.entry_stride,
+                w: self.n_mels,
+                residual: false,
+            });
+            layers.push(Layer::LayerNorm {
+                name: format!("g{gi}.sub.ln"),
+                dim: c * self.n_mels,
+            });
+            for b in 0..g.blocks {
+                let dim = c * self.n_mels;
+                layers.push(Layer::Conv {
+                    name: format!("g{gi}.b{b}.conv"),
+                    in_ch: c,
+                    out_ch: c,
+                    kw: g.kw,
+                    stride: 1,
+                    w: self.n_mels,
+                    residual: true,
+                });
+                layers.push(Layer::LayerNorm {
+                    name: format!("g{gi}.b{b}.ln0"),
+                    dim,
+                });
+                layers.push(Layer::Fc {
+                    name: format!("g{gi}.b{b}.fc0"),
+                    in_dim: dim,
+                    out_dim: dim,
+                    relu: true,
+                    residual: false,
+                });
+                layers.push(Layer::Fc {
+                    name: format!("g{gi}.b{b}.fc1"),
+                    in_dim: dim,
+                    out_dim: dim,
+                    relu: false,
+                    residual: true,
+                });
+                layers.push(Layer::LayerNorm {
+                    name: format!("g{gi}.b{b}.ln1"),
+                    dim,
+                });
+            }
+            in_ch = c;
+        }
+        let last_c = self.groups.last().map(|g| g.channels).unwrap_or(1);
+        if let Some(kw) = self.final_conv_kw {
+            layers.push(Layer::Conv {
+                name: "final.conv".into(),
+                in_ch: last_c,
+                out_ch: last_c,
+                kw,
+                stride: 1,
+                w: self.n_mels,
+                residual: false,
+            });
+            layers.push(Layer::LayerNorm {
+                name: "final.ln".into(),
+                dim: last_c * self.n_mels,
+            });
+        }
+        layers.push(Layer::Fc {
+            name: "output.fc".into(),
+            in_dim: last_c * self.n_mels,
+            out_dim: self.tokens,
+            relu: false,
+            residual: false,
+        });
+        layers
+    }
+
+    /// (conv, fc, layernorm) kernel counts — the §4.2 inventory.
+    pub fn kernel_counts(&self) -> (usize, usize, usize) {
+        let mut c = (0, 0, 0);
+        for l in self.layers() {
+            match l {
+                Layer::Conv { .. } => c.0 += 1,
+                Layer::Fc { .. } => c.1 += 1,
+                Layer::LayerNorm { .. } => c.2 += 1,
+            }
+        }
+        c
+    }
+
+    /// Total model-data bytes.
+    pub fn model_bytes(&self) -> usize {
+        self.layers().iter().map(|l| l.model_bytes(self.quantized)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_tds_matches_section_4_2_inventory() {
+        let m = ModelConfig::paper_tds();
+        assert_eq!(m.kernel_counts(), (18, 29, 32), "18 CONV, 29 FC, 32 LN");
+        assert_eq!(m.layers().len(), 79, "79 acoustic-model kernels");
+    }
+
+    #[test]
+    fn paper_geometry() {
+        let m = ModelConfig::paper_tds();
+        assert_eq!(m.frames_per_step(), 8, "80 ms step, 10 ms hop");
+        assert_eq!(m.subsample(), 2);
+        assert_eq!(m.vectors_per_step(), 4);
+        assert_eq!(m.samples_per_step(), 1520, "80 ms + 15 ms tail");
+        assert!((m.step_seconds() - 0.080).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fc_layer_sizes_match_section_5_2() {
+        // §5.2: "each of the first FC layers consists of 1200 neurons with
+        // 1200 inputs each, which results in 1.4MB of model data" — that is
+        // the widest group's FCs at int8.
+        let m = ModelConfig::paper_tds();
+        let fc_bytes: Vec<usize> = m
+            .layers()
+            .iter()
+            .filter(|l| matches!(l, Layer::Fc { .. }))
+            .map(|l| l.model_bytes(true))
+            .collect();
+        let max_hidden_fc = fc_bytes[..fc_bytes.len() - 1].iter().max().unwrap();
+        assert!(
+            (1_350_000..1_500_000).contains(max_hidden_fc),
+            "widest hidden FC ≈1.4 MB, got {max_hidden_fc}"
+        );
+        // Output layer 1200×9000 ≈ 10.8 MB — must be split (tested in accel).
+        assert!(*fc_bytes.last().unwrap() > 10_000_000);
+    }
+
+    #[test]
+    fn conv_layers_are_a_few_kb() {
+        // §5.2: "Convolutional layers fit in a few KB".
+        let m = ModelConfig::paper_tds();
+        for l in m.layers() {
+            if matches!(l, Layer::Conv { .. }) {
+                let kb = l.model_bytes(true) / 1024;
+                assert!(kb < 8, "conv layer {} is {kb} KB", l.name());
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_tds_is_consistent() {
+        let m = ModelConfig::tiny_tds();
+        assert_eq!(m.subsample(), 2);
+        assert_eq!(m.vectors_per_step(), 4);
+        assert_eq!(m.tokens, 27);
+        // Small enough to train at build time.
+        assert!(m.layers().iter().map(|l| l.params()).sum::<usize>() < 300_000);
+    }
+
+    #[test]
+    fn layer_shapes_chain() {
+        // Output dim of each layer must equal input dim of the next
+        // (conv/fc dims expressed over c*w flattening).
+        for m in [ModelConfig::paper_tds(), ModelConfig::tiny_tds()] {
+            let mut cur = m.n_mels; // 1 channel × n_mels
+            for l in m.layers() {
+                match &l {
+                    Layer::Conv { in_ch, out_ch, w, .. } => {
+                        assert_eq!(cur, in_ch * w, "layer {}", l.name());
+                        cur = out_ch * w;
+                    }
+                    Layer::Fc { in_dim, out_dim, .. } => {
+                        assert_eq!(cur, *in_dim, "layer {}", l.name());
+                        cur = *out_dim;
+                    }
+                    Layer::LayerNorm { dim, .. } => {
+                        assert_eq!(cur, *dim, "layer {}", l.name());
+                    }
+                }
+            }
+            assert_eq!(cur, m.tokens);
+        }
+    }
+}

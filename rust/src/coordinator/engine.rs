@@ -1,0 +1,306 @@
+//! The streaming ASR engine — the functional counterpart of the paper's
+//! "main process + accelerator" loop (§4.1): audio arrives in chunks,
+//! every 80 ms of accumulated signal triggers a decoding step (feature
+//! extraction → acoustic scoring → hypothesis expansion), hypotheses are
+//! carried across steps, and `finish` extracts the transcript.
+//!
+//! The acoustic model runs through either backend:
+//!  * **Xla** — the AOT artifacts via PJRT (`runtime::XlaAm`); python is
+//!    never on this path;
+//!  * **Native** — the in-crate mirror (`am::TdsModel`), used when
+//!    artifacts are absent and as the cross-check oracle in tests.
+//!
+//! Frame alignment: decoding step *k* emits feature frames `k·8 … k·8+7`
+//! on the absolute 10 ms grid, which requires 15 ms of lookahead
+//! (`samples_per_step = 1520` for a 1280-sample step) — so streaming
+//! features equal offline features exactly, matching training.
+
+use anyhow::Result;
+use std::time::Instant;
+
+use crate::am::{TdsModel, TdsState};
+use crate::config::{DecoderConfig, ModelConfig};
+use crate::decoder::{BeamDecoder, DecodeState, Transcript};
+use crate::dsp::Mfcc;
+use crate::lexicon::Lexicon;
+use crate::lm::NgramLm;
+use crate::runtime::{Runtime, XlaAm};
+use crate::synth::spec;
+
+/// Acoustic-model backend.
+pub enum Backend {
+    Native { model: TdsModel, mfcc: Mfcc },
+    Xla { am: XlaAm },
+}
+
+enum AmState {
+    Native(TdsState),
+    Xla(crate::runtime::xla_am::XlaState),
+}
+
+/// The engine: one per process; sessions are cheap.
+pub struct Engine {
+    pub model_cfg: ModelConfig,
+    backend: Backend,
+    pub lexicon: Lexicon,
+    pub lm: NgramLm,
+    pub dec_cfg: DecoderConfig,
+}
+
+/// Per-utterance decoding session.
+pub struct Session {
+    /// Buffered samples not yet consumed by a step.
+    buf: Vec<f32>,
+    am_state: AmState,
+    pub decode: DecodeState,
+    /// Collected log-probs (for greedy-baseline comparisons), if enabled.
+    pub logits: Option<Vec<f32>>,
+    pub metrics: SessionMetrics,
+}
+
+/// Timing and search statistics for one session.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SessionMetrics {
+    pub steps: usize,
+    pub audio_s: f64,
+    pub compute_s: f64,
+    /// Wall-clock of AM (mfcc+model) vs decoder within compute_s.
+    pub am_s: f64,
+    pub search_s: f64,
+}
+
+impl SessionMetrics {
+    /// Real-time factor (>1 = faster than real time).
+    pub fn rtf(&self) -> f64 {
+        if self.compute_s == 0.0 {
+            f64::INFINITY
+        } else {
+            self.audio_s / self.compute_s
+        }
+    }
+}
+
+impl Engine {
+    /// Build with the synthetic-protocol lexicon and an LM estimated
+    /// from the word chain (2000 sentences, fixed seed — deterministic).
+    pub fn with_backend(backend: Backend, dec_cfg: DecoderConfig) -> Result<Self> {
+        let model_cfg = match &backend {
+            Backend::Native { model, .. } => model.cfg.clone(),
+            Backend::Xla { am } => am.meta.model.clone(),
+        };
+        let lexicon = spec::lexicon();
+        let corpus = spec::sample_corpus(2000, 7777);
+        let lm = NgramLm::estimate(&corpus, 0.4)?;
+        anyhow::ensure!(
+            model_cfg.tokens == lexicon.tokens.len(),
+            "model emits {} tokens but lexicon has {}",
+            model_cfg.tokens,
+            lexicon.tokens.len()
+        );
+        Ok(Engine { model_cfg, backend, lexicon, lm, dec_cfg })
+    }
+
+    /// Native backend from an in-memory model.
+    pub fn native(model: TdsModel, dec_cfg: DecoderConfig) -> Result<Self> {
+        let mfcc = Mfcc::for_model(&model.cfg);
+        Self::with_backend(Backend::Native { model, mfcc }, dec_cfg)
+    }
+
+    /// XLA backend from the artifacts directory.
+    pub fn from_artifacts(
+        runtime: &Runtime,
+        dir: &std::path::Path,
+        dec_cfg: DecoderConfig,
+    ) -> Result<Self> {
+        let am = XlaAm::load(runtime, dir)?;
+        Self::with_backend(Backend::Xla { am }, dec_cfg)
+    }
+
+    fn decoder(&self) -> Result<BeamDecoder<'_>> {
+        BeamDecoder::new(&self.lexicon, &self.lm, self.dec_cfg.clone())
+    }
+
+    /// Open a session. `collect_logits` keeps per-frame log-probs for
+    /// baseline comparisons (costs memory; off for serving).
+    pub fn open(&self, collect_logits: bool) -> Result<Session> {
+        let am_state = match &self.backend {
+            Backend::Native { model, .. } => AmState::Native(model.state()),
+            Backend::Xla { am } => AmState::Xla(am.state()?),
+        };
+        Ok(Session {
+            buf: Vec::with_capacity(2 * self.model_cfg.samples_per_step()),
+            am_state,
+            decode: self.decoder()?.start(),
+            logits: if collect_logits { Some(Vec::new()) } else { None },
+            metrics: SessionMetrics::default(),
+        })
+    }
+
+    /// Feed audio; runs as many decoding steps as the buffer allows.
+    /// Returns the number of steps executed.
+    pub fn feed(&self, s: &mut Session, samples: &[f32]) -> Result<usize> {
+        s.buf.extend_from_slice(samples);
+        let need = self.model_cfg.samples_per_step();
+        let step_len = self.model_cfg.step_len;
+        let mut ran = 0;
+        while s.buf.len() >= need {
+            self.run_step(s)?;
+            s.buf.drain(..step_len);
+            ran += 1;
+        }
+        Ok(ran)
+    }
+
+    fn run_step(&self, s: &mut Session) -> Result<()> {
+        let t0 = Instant::now();
+        let need = self.model_cfg.samples_per_step();
+        let window = &s.buf[..need];
+        let logits = match (&self.backend, &mut s.am_state) {
+            (Backend::Native { model, mfcc }, AmState::Native(state)) => {
+                let feats = mfcc.extract(window);
+                debug_assert_eq!(
+                    feats.len(),
+                    self.model_cfg.frames_per_step() * self.model_cfg.n_mels
+                );
+                model.step(state, &feats)
+            }
+            (Backend::Xla { am }, AmState::Xla(state)) => {
+                let feats = am.mfcc(window)?;
+                am.step(state, &feats)?
+            }
+            _ => unreachable!("backend/state mismatch"),
+        };
+        let t_am = Instant::now();
+        if let Some(all) = &mut s.logits {
+            all.extend_from_slice(&logits);
+        }
+        let decoder = self.decoder()?;
+        for frame in logits.chunks(self.model_cfg.tokens) {
+            decoder.step(&mut s.decode, frame);
+        }
+        let t_end = Instant::now();
+        s.metrics.steps += 1;
+        s.metrics.audio_s += self.model_cfg.step_seconds();
+        s.metrics.am_s += (t_am - t0).as_secs_f64();
+        s.metrics.search_s += (t_end - t_am).as_secs_f64();
+        s.metrics.compute_s += (t_end - t0).as_secs_f64();
+        Ok(())
+    }
+
+    /// Flush buffered audio (zero-padding to whole steps) and extract the
+    /// final transcript.
+    pub fn finish(&self, s: &mut Session) -> Result<Transcript> {
+        let step_len = self.model_cfg.step_len;
+        let lookahead = self.model_cfg.samples_per_step() - step_len;
+        if !s.buf.is_empty() {
+            // Pad so every real sample is covered by a step (+ lookahead).
+            let target = s.buf.len().div_ceil(step_len) * step_len + lookahead;
+            s.buf.resize(target, 0.0);
+            while s.buf.len() >= self.model_cfg.samples_per_step() {
+                self.run_step(s)?;
+                s.buf.drain(..step_len);
+            }
+        }
+        Ok(self.decoder()?.finish(&s.decode))
+    }
+
+    /// Current best partial transcript (streaming UX, §2.4).
+    pub fn partial(&self, s: &Session) -> Result<Transcript> {
+        Ok(self.decoder()?.finish(&s.decode))
+    }
+
+    /// Convenience: decode a whole utterance.
+    pub fn decode_utterance(&self, samples: &[f32]) -> Result<(Transcript, SessionMetrics)> {
+        let mut s = self.open(false)?;
+        self.feed(&mut s, samples)?;
+        let t = self.finish(&mut s)?;
+        Ok((t, s.metrics))
+    }
+
+    /// Greedy baseline over collected logits (requires `collect_logits`).
+    pub fn greedy_of(&self, s: &Session) -> Result<Transcript> {
+        let logits = s
+            .logits
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("session did not collect logits"))?;
+        Ok(self.decoder()?.greedy(logits))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synth::Synthesizer;
+    use crate::util::rng::Rng;
+
+    fn native_engine() -> Engine {
+        // Random weights: decode quality is meaningless, but shapes,
+        // streaming and search must all hold together.
+        let model = TdsModel::random(ModelConfig::tiny_tds(), 11);
+        Engine::native(model, DecoderConfig::default()).unwrap()
+    }
+
+    #[test]
+    fn feed_runs_steps_at_80ms_granularity() {
+        let e = native_engine();
+        let mut s = e.open(false).unwrap();
+        // 1279 samples: no step (needs 1280 + 240 lookahead).
+        assert_eq!(e.feed(&mut s, &vec![0.0; 1279]).unwrap(), 0);
+        // +241 = 1520 total: one step.
+        assert_eq!(e.feed(&mut s, &vec![0.0; 241]).unwrap(), 1);
+        // Ten more steps' worth at once.
+        assert_eq!(e.feed(&mut s, &vec![0.0; 12800]).unwrap(), 10);
+        assert_eq!(s.metrics.steps, 11);
+        assert!((s.metrics.audio_s - 11.0 * 0.08).abs() < 1e-9);
+    }
+
+    #[test]
+    fn chunk_size_does_not_change_result() {
+        // Feeding sample-by-sample chunks vs all at once must give the
+        // same transcript (streaming correctness).
+        let e = native_engine();
+        let mut rng = Rng::new(3);
+        let u = Synthesizer::default().render(&[1, 2], &mut rng);
+        let (t_all, _) = e.decode_utterance(&u.samples).unwrap();
+        let mut s = e.open(false).unwrap();
+        for chunk in u.samples.chunks(333) {
+            e.feed(&mut s, chunk).unwrap();
+        }
+        let t_chunked = e.finish(&mut s).unwrap();
+        assert_eq!(t_all.text, t_chunked.text);
+        assert!((t_all.score - t_chunked.score).abs() < 1e-3);
+    }
+
+    #[test]
+    fn partial_transcripts_available_mid_stream() {
+        let e = native_engine();
+        let mut rng = Rng::new(5);
+        let u = Synthesizer::default().render(&[0, 7, 3], &mut rng);
+        let mut s = e.open(false).unwrap();
+        e.feed(&mut s, &u.samples[..u.samples.len() / 2]).unwrap();
+        // Must not panic and must be a valid (possibly empty) transcript.
+        let p = e.partial(&s).unwrap();
+        assert!(p.words.len() <= 10);
+    }
+
+    #[test]
+    fn metrics_accumulate() {
+        let e = native_engine();
+        let mut rng = Rng::new(7);
+        let u = Synthesizer::default().render(&[4], &mut rng);
+        let (_, m) = e.decode_utterance(&u.samples).unwrap();
+        assert!(m.steps >= 5, "utterance shorter than expected: {}", m.steps);
+        assert!(m.compute_s > 0.0);
+        assert!((m.am_s + m.search_s - m.compute_s).abs() < 1e-6);
+    }
+
+    #[test]
+    fn greedy_requires_collected_logits() {
+        let e = native_engine();
+        let s = e.open(false).unwrap();
+        assert!(e.greedy_of(&s).is_err());
+        let mut s = e.open(true).unwrap();
+        e.feed(&mut s, &vec![0.0; 1520]).unwrap();
+        assert!(e.greedy_of(&s).is_ok());
+    }
+}

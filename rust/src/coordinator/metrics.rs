@@ -1,0 +1,108 @@
+//! Serving metrics: latency percentiles, throughput, queue depth — what
+//! a deployment of the paper's "main process + ASRPU" loop would watch.
+
+use std::time::Duration;
+
+/// Online latency recorder (stores all samples; serving runs here are
+/// bounded, so simplicity beats a sketch).
+#[derive(Debug, Clone, Default)]
+pub struct LatencyStats {
+    samples_ms: Vec<f64>,
+}
+
+impl LatencyStats {
+    pub fn record(&mut self, d: Duration) {
+        self.samples_ms.push(d.as_secs_f64() * 1e3);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_ms.len()
+    }
+
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples_ms.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.samples_ms.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+        v[idx.min(v.len() - 1)]
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples_ms.is_empty() {
+            return 0.0;
+        }
+        self.samples_ms.iter().sum::<f64>() / self.samples_ms.len() as f64
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples_ms.iter().cloned().fold(0.0, f64::max)
+    }
+}
+
+/// Aggregate serving counters.
+#[derive(Debug, Clone, Default)]
+pub struct ServeMetrics {
+    pub sessions_opened: u64,
+    pub sessions_finished: u64,
+    pub steps_executed: u64,
+    pub audio_seconds: f64,
+    pub compute_seconds: f64,
+    pub rejected_backpressure: u64,
+    /// Queue-wait + execution latency per feed request.
+    pub feed_latency: LatencyStats,
+}
+
+impl ServeMetrics {
+    /// Aggregate real-time factor across all sessions.
+    pub fn rtf(&self) -> f64 {
+        if self.compute_seconds == 0.0 {
+            f64::INFINITY
+        } else {
+            self.audio_seconds / self.compute_seconds
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "sessions {}/{} steps {} audio {:.1}s rtf {:.1}x \
+             feed p50 {:.2}ms p99 {:.2}ms max {:.2}ms rejected {}",
+            self.sessions_finished,
+            self.sessions_opened,
+            self.steps_executed,
+            self.audio_seconds,
+            self.rtf(),
+            self.feed_latency.percentile(50.0),
+            self.feed_latency.percentile(99.0),
+            self.feed_latency.max(),
+            self.rejected_backpressure,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles() {
+        let mut l = LatencyStats::default();
+        for i in 1..=100 {
+            l.record(Duration::from_millis(i));
+        }
+        assert!((l.percentile(50.0) - 50.0).abs() <= 1.0);
+        assert!((l.percentile(99.0) - 99.0).abs() <= 1.0);
+        assert_eq!(l.max(), 100.0);
+        assert!((l.mean() - 50.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn empty_stats_are_zero() {
+        let l = LatencyStats::default();
+        assert_eq!(l.percentile(99.0), 0.0);
+        assert_eq!(l.mean(), 0.0);
+        let m = ServeMetrics::default();
+        assert!(m.rtf().is_infinite());
+    }
+}

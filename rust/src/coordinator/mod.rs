@@ -1,0 +1,11 @@
+//! Streaming coordinator: the engine (per-session decode pipeline), the
+//! serving front-end (JSON-lines TCP, bounded queue, single device
+//! thread — the §4.1 host-process shape) and serving metrics.
+
+pub mod engine;
+pub mod metrics;
+pub mod server;
+
+pub use engine::{Backend, Engine, Session, SessionMetrics};
+pub use metrics::{LatencyStats, ServeMetrics};
+pub use server::Server;

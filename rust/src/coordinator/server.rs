@@ -1,0 +1,343 @@
+//! The serving front-end: a JSON-lines TCP server multiplexing many
+//! streaming sessions onto one engine — the shape of the paper's §4.1
+//! deployment (a host process feeding DecodingStep commands to a single
+//! ASRPU device), extended with the queueing, backpressure and metrics a
+//! production router needs.
+//!
+//! Protocol (one JSON object per line):
+//!   → {"op":"open"}                                  ← {"session":N}
+//!   → {"op":"feed","session":N,"samples":[...]}      ← {"steps":K,"partial":"..."}
+//!   → {"op":"finish","session":N}                    ← {"text":"...","rtf":X}
+//!   → {"op":"stats"}                                 ← {"summary":"..."}
+//!
+//! Architecture: connection threads parse requests and enqueue jobs on a
+//! bounded channel (backpressure = immediate error response when full);
+//! a single device thread owns the engine and all session state —
+//! mirroring the serialized DecodingStep semantics of the hardware.
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::util::json::{Json, JsonObj};
+
+use super::engine::{Engine, Session};
+use super::metrics::ServeMetrics;
+
+/// A queued unit of device work.
+pub(crate) enum Job {
+    Open { reply: mpsc::Sender<Json> },
+    Feed { session: u64, samples: Vec<f32>, enqueued: Instant, reply: mpsc::Sender<Json> },
+    Finish { session: u64, reply: mpsc::Sender<Json> },
+    Stats { reply: mpsc::Sender<Json> },
+    Shutdown,
+}
+
+/// Server handle (owns the listener thread).
+pub struct Server {
+    pub addr: String,
+    jobs: mpsc::SyncSender<Job>,
+}
+
+fn obj(pairs: &[(&str, Json)]) -> Json {
+    let mut o = JsonObj::new();
+    for (k, v) in pairs {
+        o.insert(*k, v.clone());
+    }
+    Json::Obj(o)
+}
+
+fn err_json(msg: &str) -> Json {
+    obj(&[("error", Json::Str(msg.to_string()))])
+}
+
+/// Run the device loop over the job channel (blocks). Exposed for
+/// in-process use (tests, examples) without TCP.
+pub(crate) fn device_loop(engine: Engine, jobs: mpsc::Receiver<Job>) {
+    let mut sessions: HashMap<u64, Session> = HashMap::new();
+    let mut next_id: u64 = 1;
+    let mut metrics = ServeMetrics::default();
+    for job in jobs {
+        match job {
+            Job::Shutdown => break,
+            Job::Open { reply } => {
+                let resp = match engine.open(false) {
+                    Ok(s) => {
+                        let id = next_id;
+                        next_id += 1;
+                        sessions.insert(id, s);
+                        metrics.sessions_opened += 1;
+                        obj(&[("session", Json::Num(id as f64))])
+                    }
+                    Err(e) => err_json(&format!("open failed: {e:#}")),
+                };
+                let _ = reply.send(resp);
+            }
+            Job::Feed { session, samples, enqueued, reply } => {
+                let resp = match sessions.get_mut(&session) {
+                    None => err_json("unknown session"),
+                    Some(s) => match engine.feed(s, &samples) {
+                        Ok(steps) => {
+                            metrics.steps_executed += steps as u64;
+                            metrics.audio_seconds +=
+                                steps as f64 * engine.model_cfg.step_seconds();
+                            let partial = engine
+                                .partial(s)
+                                .map(|t| t.text)
+                                .unwrap_or_default();
+                            metrics.feed_latency.record(enqueued.elapsed());
+                            obj(&[
+                                ("steps", Json::Num(steps as f64)),
+                                ("partial", Json::Str(partial)),
+                            ])
+                        }
+                        Err(e) => err_json(&format!("feed failed: {e:#}")),
+                    },
+                };
+                let _ = reply.send(resp);
+            }
+            Job::Finish { session, reply } => {
+                let resp = match sessions.remove(&session) {
+                    None => err_json("unknown session"),
+                    Some(mut s) => match engine.finish(&mut s) {
+                        Ok(t) => {
+                            metrics.sessions_finished += 1;
+                            metrics.compute_seconds += s.metrics.compute_s;
+                            obj(&[
+                                ("text", Json::Str(t.text)),
+                                ("score", Json::Num(t.score as f64)),
+                                ("rtf", Json::Num(s.metrics.rtf())),
+                                ("steps", Json::Num(s.metrics.steps as f64)),
+                            ])
+                        }
+                        Err(e) => err_json(&format!("finish failed: {e:#}")),
+                    },
+                };
+                let _ = reply.send(resp);
+            }
+            Job::Stats { reply } => {
+                let _ = reply.send(obj(&[("summary", Json::Str(metrics.summary()))]));
+            }
+        }
+    }
+}
+
+/// Parse one request line into a job.
+fn parse_request(line: &str, reply: mpsc::Sender<Json>) -> Result<Job, String> {
+    let v = Json::parse(line).map_err(|e| format!("bad json: {e}"))?;
+    let op = v
+        .get("op")
+        .and_then(Json::as_str)
+        .ok_or_else(|| "missing 'op'".to_string())?;
+    match op {
+        "open" => Ok(Job::Open { reply }),
+        "stats" => Ok(Job::Stats { reply }),
+        "feed" | "finish" => {
+            let session = v
+                .get("session")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| "missing 'session'".to_string())? as u64;
+            if op == "finish" {
+                return Ok(Job::Finish { session, reply });
+            }
+            let samples = v
+                .get("samples")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| "missing 'samples'".to_string())?
+                .iter()
+                .map(|x| x.as_f64().unwrap_or(0.0) as f32)
+                .collect();
+            Ok(Job::Feed { session, samples, enqueued: Instant::now(), reply })
+        }
+        other => Err(format!("unknown op '{other}'")),
+    }
+}
+
+fn handle_conn(stream: TcpStream, jobs: mpsc::SyncSender<Job>) -> Result<()> {
+    let peer = stream.peer_addr().ok();
+    let reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (tx, rx) = mpsc::channel();
+        let response = match parse_request(&line, tx) {
+            Err(msg) => err_json(&msg),
+            Ok(job) => match jobs.try_send(job) {
+                Err(mpsc::TrySendError::Full(_)) => err_json("backpressure: queue full"),
+                Err(mpsc::TrySendError::Disconnected(_)) => err_json("server shutting down"),
+                Ok(()) => rx
+                    .recv()
+                    .unwrap_or_else(|_| err_json("device loop dropped request")),
+            },
+        };
+        writeln!(writer, "{response}")?;
+    }
+    let _ = peer;
+    Ok(())
+}
+
+impl Server {
+    /// Bind and serve. `make_engine` runs on the device thread (PJRT
+    /// handles are not `Send`). Returns once bound; serving continues on
+    /// background threads.
+    pub fn start(
+        addr: &str,
+        make_engine: impl FnOnce() -> Result<Engine> + Send + 'static,
+        queue_depth: usize,
+    ) -> Result<Server> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding {addr}"))?;
+        let local = listener.local_addr()?.to_string();
+        let (jobs_tx, jobs_rx) = mpsc::sync_channel::<Job>(queue_depth);
+        std::thread::Builder::new()
+            .name("asrpu-device".into())
+            .spawn(move || match make_engine() {
+                Ok(engine) => device_loop(engine, jobs_rx),
+                Err(e) => eprintln!("engine init failed: {e:#}"),
+            })?;
+        let accept_tx = jobs_tx.clone();
+        std::thread::Builder::new()
+            .name("asrpu-accept".into())
+            .spawn(move || {
+                for stream in listener.incoming().flatten() {
+                    let tx = accept_tx.clone();
+                    std::thread::spawn(move || {
+                        let _ = handle_conn(stream, tx);
+                    });
+                }
+            })?;
+        Ok(Server { addr: local, jobs: jobs_tx })
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.jobs.try_send(Job::Shutdown);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::am::TdsModel;
+    use crate::config::{DecoderConfig, ModelConfig};
+
+    fn start_test_server() -> Server {
+        Server::start(
+            "127.0.0.1:0",
+            || {
+                Engine::native(
+                    TdsModel::random(ModelConfig::tiny_tds(), 5),
+                    DecoderConfig::default(),
+                )
+            },
+            64,
+        )
+        .unwrap()
+    }
+
+    fn roundtrip(addr: &str, lines: &[String]) -> Vec<Json> {
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = BufReader::new(stream);
+        let mut out = Vec::new();
+        for l in lines {
+            writeln!(writer, "{l}").unwrap();
+            let mut resp = String::new();
+            reader.read_line(&mut resp).unwrap();
+            out.push(Json::parse(resp.trim()).unwrap());
+        }
+        out
+    }
+
+    #[test]
+    fn open_feed_finish_over_tcp() {
+        let server = start_test_server();
+        let samples: Vec<String> = (0..3200).map(|i| format!("{:.4}", (i as f32 * 0.01).sin() * 0.1)).collect();
+        let feed = format!(
+            r#"{{"op":"feed","session":1,"samples":[{}]}}"#,
+            samples.join(",")
+        );
+        let resps = roundtrip(
+            &server.addr,
+            &[
+                r#"{"op":"open"}"#.to_string(),
+                feed,
+                r#"{"op":"finish","session":1}"#.to_string(),
+                r#"{"op":"stats"}"#.to_string(),
+            ],
+        );
+        assert_eq!(resps[0].get("session").unwrap().as_f64(), Some(1.0));
+        // 3200 samples = 2 steps (needs 1520, consumes 1280 each).
+        assert_eq!(resps[1].get("steps").unwrap().as_f64(), Some(2.0));
+        assert!(resps[2].get("text").is_some(), "{:?}", resps[2]);
+        let summary = resps[3].get("summary").unwrap().as_str().unwrap().to_string();
+        assert!(summary.contains("sessions 1/1"), "{summary}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn malformed_requests_get_errors_not_crashes() {
+        let server = start_test_server();
+        let resps = roundtrip(
+            &server.addr,
+            &[
+                "not json".to_string(),
+                r#"{"op":"nope"}"#.to_string(),
+                r#"{"op":"feed","session":999,"samples":[0.0]}"#.to_string(),
+                r#"{"op":"finish","session":999}"#.to_string(),
+            ],
+        );
+        for r in &resps {
+            assert!(r.get("error").is_some(), "{r:?}");
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn concurrent_sessions_are_isolated() {
+        let server = start_test_server();
+        let addr = server.addr.clone();
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    let n = 1600 + i * 320;
+                    let samples: Vec<String> =
+                        (0..n).map(|t| format!("{:.3}", (t as f32 * 0.02).sin() * 0.2)).collect();
+                    let resps = roundtrip(
+                        &addr,
+                        &[
+                            r#"{"op":"open"}"#.to_string(),
+                            format!(
+                                r#"{{"op":"feed","session":SESS,"samples":[{}]}}"#,
+                                samples.join(",")
+                            ),
+                        ],
+                    );
+                    let sess = resps[0].get("session").unwrap().as_f64().unwrap();
+                    // Re-issue feed with the real session id.
+                    let resps2 = roundtrip(
+                        &addr,
+                        &[
+                            format!(
+                                r#"{{"op":"feed","session":{sess},"samples":[{}]}}"#,
+                                samples.join(",")
+                            ),
+                            format!(r#"{{"op":"finish","session":{sess}}}"#),
+                        ],
+                    );
+                    assert!(resps2[1].get("text").is_some());
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        server.shutdown();
+    }
+}

@@ -1,0 +1,457 @@
+//! CTC beam-search decoding with lexicon trie and n-gram LM — the
+//! functional twin of ASRPU's hypothesis-expansion kernel (§4.3).
+//!
+//! Per acoustic frame, every live hypothesis expands into:
+//!  * a **blank** hypothesis (CTC blank symbol),
+//!  * a **repeat** hypothesis (the last phonetic unit again — a valid CTC
+//!    path that does not advance the lexicon),
+//!  * one **advance** hypothesis per outgoing lexicon-trie link; when the
+//!    reached node completes a word, the LM transitions one n-gram
+//!    further and contributes `lm_weight · lnP(w|h) + word_penalty`
+//!    (§4.3), forking into "commit word" and "keep extending" paths.
+//!
+//! Identical expansion logic drives the accelerator simulator's
+//! hypothesis-expansion cost model (`accel::kernels`), so timing
+//! experiments see the same search behaviour measured here.
+
+pub mod prune;
+
+use crate::config::DecoderConfig;
+use crate::lexicon::{Lexicon, BLANK, ROOT};
+use crate::lm::{LmState, NgramLm};
+use anyhow::Result;
+pub use prune::{PruneStats, Pruner};
+
+/// Sentinel for "no backtrack entry".
+const NO_BACK: u32 = u32::MAX;
+
+/// One transcription hypothesis — the §3.5 record: identifying hash
+/// (derived from the state tuple), score, and the programmer-defined
+/// fields (lexicon node, LM state, last token, backlink).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Hyp {
+    pub score: f32,
+    /// Lexicon-trie node of the partially spelled word.
+    pub node: u32,
+    /// LM state (last committed word).
+    pub lm: LmState,
+    /// Last CTC symbol on this path (BLANK or a token id).
+    pub last_token: u32,
+    /// Index into the word backtrack arena (NO_BACK = no words yet).
+    back: u32,
+}
+
+impl Hyp {
+    /// Merge key: hypotheses with equal state are duplicates; the
+    /// hypothesis unit keeps the best ("all but the best scoring are
+    /// discarded", §2.3.1).
+    pub fn state_key(&self) -> u64 {
+        // node(24b) | lm(24b) | last_token(16b) — fits our scales.
+        ((self.node as u64) << 40) ^ ((self.lm.0 as u64) << 16) ^ self.last_token as u64
+    }
+}
+
+/// Decoding state carried across acoustic frames (and decoding steps).
+#[derive(Debug, Clone)]
+pub struct DecodeState {
+    pub hyps: Vec<Hyp>,
+    /// Backtrack arena: (parent entry, word id).
+    arena: Vec<(u32, u32)>,
+    /// Acoustic frames consumed so far.
+    pub frames: usize,
+    /// Accumulated pruning statistics (drives ABL2 + simulator coupling).
+    pub stats: PruneStats,
+}
+
+/// Final transcription.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Transcript {
+    pub words: Vec<u32>,
+    pub text: String,
+    pub score: f32,
+}
+
+/// The beam-search decoder.
+pub struct BeamDecoder<'a> {
+    pub lex: &'a Lexicon,
+    pub lm: &'a NgramLm,
+    pub cfg: DecoderConfig,
+    /// lexicon word id → LM word id (unk for OOV-in-LM).
+    word_lm_ids: Vec<u32>,
+}
+
+impl<'a> BeamDecoder<'a> {
+    pub fn new(lex: &'a Lexicon, lm: &'a NgramLm, cfg: DecoderConfig) -> Result<Self> {
+        cfg.validate()?;
+        let unk = lm
+            .word_id(crate::lm::UNK)
+            .ok_or_else(|| anyhow::anyhow!("LM missing <unk>"))?;
+        let word_lm_ids = lex
+            .words
+            .iter()
+            .map(|w| lm.word_id(w).unwrap_or(unk))
+            .collect();
+        Ok(BeamDecoder { lex, lm, cfg, word_lm_ids })
+    }
+
+    /// Fresh state: a single empty hypothesis at the trie root.
+    pub fn start(&self) -> DecodeState {
+        DecodeState {
+            hyps: vec![Hyp {
+                score: 0.0,
+                node: ROOT,
+                lm: self.lm.start(),
+                last_token: BLANK,
+                back: NO_BACK,
+            }],
+            arena: Vec::new(),
+            frames: 0,
+            stats: PruneStats::default(),
+        }
+    }
+
+    /// Expand all hypotheses with one acoustic frame of token
+    /// log-probabilities, then sort + prune (the hypothesis unit's job).
+    pub fn step(&self, state: &mut DecodeState, logp: &[f32]) {
+        debug_assert_eq!(logp.len(), self.lex.tokens.len());
+        let mut cands: Vec<Hyp> = Vec::with_capacity(state.hyps.len() * 8);
+        for h in &state.hyps {
+            // (1) blank.
+            cands.push(Hyp {
+                score: h.score + logp[BLANK as usize] + self.cfg.silence_bonus,
+                last_token: BLANK,
+                ..*h
+            });
+            // (2) repeat of the last unit (valid CTC path, no advance).
+            if h.last_token != BLANK {
+                cands.push(Hyp {
+                    score: h.score + logp[h.last_token as usize],
+                    ..*h
+                });
+            }
+            // (3) advance along every lexicon link.
+            for (&tok, &child) in &self.lex.node(h.node).children {
+                // CTC collapse rule: re-emitting the same unit without an
+                // intervening blank is the 'repeat' path, not a new unit.
+                if tok == h.last_token {
+                    continue;
+                }
+                let base = h.score + logp[tok as usize];
+                match self.lex.node(child).word {
+                    None => cands.push(Hyp {
+                        score: base,
+                        node: child,
+                        last_token: tok,
+                        ..*h
+                    }),
+                    Some(word) => {
+                        // Commit the word: LM transition + word penalty,
+                        // return to the trie root for the next word.
+                        let lm_word = self.word_lm_ids[word as usize];
+                        let (lm_lp, lm_next) = self.lm.score(h.lm, lm_word);
+                        let back = state.arena.len() as u32;
+                        state.arena.push((h.back, word));
+                        cands.push(Hyp {
+                            score: base
+                                + self.cfg.lm_weight * lm_lp
+                                + self.cfg.word_penalty,
+                            node: ROOT,
+                            lm: lm_next,
+                            last_token: tok,
+                            back,
+                        });
+                        // Keep extending if longer words share this prefix.
+                        if !self.lex.node(child).children.is_empty() {
+                            cands.push(Hyp {
+                                score: base,
+                                node: child,
+                                last_token: tok,
+                                ..*h
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        state.frames += 1;
+        let pruner = Pruner {
+            beam: self.cfg.beam,
+            max_hyps: self.cfg.max_hyps,
+        };
+        state.hyps = pruner.prune(cands, &mut state.stats);
+    }
+
+    /// Extract the best transcription: commit any word completed at the
+    /// current node, apply the LM sentence-end score, backtrack words.
+    pub fn finish(&self, state: &DecodeState) -> Transcript {
+        let mut best: Option<(f32, Vec<u32>)> = None;
+        for h in &state.hyps {
+            let mut score = h.score;
+            let mut back = h.back;
+            let mut lm = h.lm;
+            if let Some(word) = self.lex.node(h.node).word {
+                let lm_word = self.word_lm_ids[word as usize];
+                let (lm_lp, lm_next) = self.lm.score(lm, lm_word);
+                score += self.cfg.lm_weight * lm_lp + self.cfg.word_penalty;
+                lm = lm_next;
+                // Virtual arena entry (not stored; we backtrack manually).
+                let mut words = self.backtrack(state, back);
+                words.push(word);
+                score += self.cfg.lm_weight * self.lm.score_end(lm);
+                match &best {
+                    Some((b, _)) if *b >= score => {}
+                    _ => best = Some((score, words)),
+                }
+                continue;
+            }
+            score += self.cfg.lm_weight * self.lm.score_end(lm);
+            let words = self.backtrack(state, back);
+            let _ = &mut back;
+            match &best {
+                Some((b, _)) if *b >= score => {}
+                _ => best = Some((score, words)),
+            }
+        }
+        let (score, words) = best.unwrap_or((f32::MIN, Vec::new()));
+        let text = words
+            .iter()
+            .map(|&w| self.lex.word_name(w))
+            .collect::<Vec<_>>()
+            .join(" ");
+        Transcript { words, text, score }
+    }
+
+    fn backtrack(&self, state: &DecodeState, mut back: u32) -> Vec<u32> {
+        let mut words = Vec::new();
+        while back != NO_BACK {
+            let (parent, word) = state.arena[back as usize];
+            words.push(word);
+            back = parent;
+        }
+        words.reverse();
+        words
+    }
+
+    /// Greedy (no-search) decode, the "simplest approach" baseline of §1:
+    /// argmax per frame, CTC-collapse, then spell through the lexicon
+    /// greedily. Used as the quality baseline in ABL2.
+    pub fn greedy(&self, logps: &[f32]) -> Transcript {
+        let tokens = self.lex.tokens.len();
+        let mut path = Vec::new();
+        for frame in logps.chunks(tokens) {
+            let arg = frame
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0 as u32;
+            path.push(arg);
+        }
+        // Collapse repeats then remove blanks.
+        let mut units = Vec::new();
+        let mut last = BLANK;
+        for t in path {
+            if t != last && t != BLANK {
+                units.push(t);
+            }
+            last = t;
+        }
+        // Greedy longest-match spell through the trie.
+        let mut words = Vec::new();
+        let mut node = ROOT;
+        let mut pending: Option<u32> = None;
+        for t in units {
+            node = match self.lex.node(node).children.get(&t) {
+                Some(&child) => child,
+                None => {
+                    if let Some(w) = pending.take() {
+                        words.push(w);
+                    }
+                    // Restart from root; drop the unit if it doesn't start
+                    // a word (OOV path).
+                    node = ROOT;
+                    match self.lex.node(node).children.get(&t) {
+                        Some(&child) => child,
+                        None => continue,
+                    }
+                }
+            };
+            if let Some(w) = self.lex.node(node).word {
+                pending = Some(w);
+                if self.lex.node(node).children.is_empty() {
+                    words.push(w);
+                    pending = None;
+                    node = ROOT;
+                }
+            }
+        }
+        if let Some(w) = pending {
+            words.push(w);
+        }
+        let text = words
+            .iter()
+            .map(|&w| self.lex.word_name(w))
+            .collect::<Vec<_>>()
+            .join(" ");
+        Transcript { words, text, score: 0.0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexicon::TokenSet;
+
+    /// Lexicon: words "ab", "abc", "ba" over tokens a,b,c + LM favouring
+    /// "ab ba".
+    fn fixtures() -> (Lexicon, NgramLm) {
+        let tokens = TokenSet::new(vec!["a".into(), "b".into(), "c".into()]);
+        let a = tokens.id("a").unwrap();
+        let b = tokens.id("b").unwrap();
+        let c = tokens.id("c").unwrap();
+        let lex = Lexicon::build(
+            tokens,
+            &[
+                ("ab".into(), vec![a, b]),
+                ("abc".into(), vec![a, b, c]),
+                ("ba".into(), vec![b, a]),
+            ],
+        )
+        .unwrap();
+        let corpus: Vec<Vec<String>> = [
+            "ab ba", "ab ba", "ab abc", "ba ab", "ab ba ab",
+        ]
+        .iter()
+        .map(|s| s.split_whitespace().map(str::to_string).collect())
+        .collect();
+        let lm = NgramLm::estimate(&corpus, 0.4).unwrap();
+        (lex, lm)
+    }
+
+    /// Build per-frame log-prob rows that strongly favour a token path.
+    fn frames_for(path: &[u32], tokens: usize) -> Vec<f32> {
+        let mut out = Vec::new();
+        for &t in path {
+            let mut row = vec![(0.01f32 / (tokens - 1) as f32).ln(); tokens];
+            row[t as usize] = 0.99f32.ln();
+            out.extend(row);
+        }
+        out
+    }
+
+    fn decode(lex: &Lexicon, lm: &NgramLm, frames: &[f32]) -> Transcript {
+        let dec = BeamDecoder::new(lex, lm, DecoderConfig::default()).unwrap();
+        let mut st = dec.start();
+        for row in frames.chunks(lex.tokens.len()) {
+            dec.step(&mut st, row);
+        }
+        dec.finish(&st)
+    }
+
+    #[test]
+    fn decodes_clean_single_word() {
+        let (lex, lm) = fixtures();
+        let a = lex.tokens.id("a").unwrap();
+        let b = lex.tokens.id("b").unwrap();
+        // a a b b (CTC repeats collapse) → "ab".
+        let frames = frames_for(&[a, a, b, b], lex.tokens.len());
+        assert_eq!(decode(&lex, &lm, &frames).text, "ab");
+    }
+
+    #[test]
+    fn blank_separates_repeated_units() {
+        let (lex, lm) = fixtures();
+        let a = lex.tokens.id("a").unwrap();
+        let b = lex.tokens.id("b").unwrap();
+        // "ab" then "ba": a b <blank> b a — blank needed between b,b.
+        let frames = frames_for(&[a, b, BLANK, b, a], lex.tokens.len());
+        assert_eq!(decode(&lex, &lm, &frames).text, "ab ba");
+    }
+
+    #[test]
+    fn prefix_word_vs_longer_word() {
+        let (lex, lm) = fixtures();
+        let a = lex.tokens.id("a").unwrap();
+        let b = lex.tokens.id("b").unwrap();
+        let c = lex.tokens.id("c").unwrap();
+        // Clean "abc" must decode as the longer word, not "ab"+dangling c.
+        let frames = frames_for(&[a, b, c], lex.tokens.len());
+        assert_eq!(decode(&lex, &lm, &frames).text, "abc");
+    }
+
+    #[test]
+    fn lm_breaks_acoustic_ties() {
+        let (lex, lm) = fixtures();
+        let a = lex.tokens.id("a").unwrap();
+        let b = lex.tokens.id("b").unwrap();
+        // After "ab", an ambiguous frame between starting "ba" vs "abc"
+        // continuation is resolved by the LM (corpus favours "ab ba").
+        let tokens = lex.tokens.len();
+        let mut frames = frames_for(&[a, b, BLANK], tokens);
+        // Ambiguous frame: b and c equally likely.
+        let mut row = vec![0.02f32.ln(); tokens];
+        row[b as usize] = 0.48f32.ln();
+        row[lex.tokens.id("c").unwrap() as usize] = 0.48f32.ln();
+        frames.extend(row);
+        frames.extend(frames_for(&[a], tokens));
+        let t = decode(&lex, &lm, &frames);
+        assert_eq!(t.text, "ab ba");
+    }
+
+    #[test]
+    fn empty_input_gives_empty_transcript() {
+        let (lex, lm) = fixtures();
+        let t = decode(&lex, &lm, &[]);
+        assert_eq!(t.text, "");
+    }
+
+    #[test]
+    fn beam_width_zero_pruning_is_greedy_like() {
+        let (lex, lm) = fixtures();
+        let a = lex.tokens.id("a").unwrap();
+        let b = lex.tokens.id("b").unwrap();
+        let dec = BeamDecoder::new(
+            &lex,
+            &lm,
+            DecoderConfig { beam: 0.5, max_hyps: 2, ..Default::default() },
+        )
+        .unwrap();
+        let frames = frames_for(&[a, b], lex.tokens.len());
+        let mut st = dec.start();
+        for row in frames.chunks(lex.tokens.len()) {
+            dec.step(&mut st, row);
+            assert!(st.hyps.len() <= 2, "capacity violated");
+        }
+        assert_eq!(dec.finish(&st).text, "ab");
+    }
+
+    #[test]
+    fn greedy_baseline_decodes_clean_path() {
+        let (lex, lm) = fixtures();
+        let a = lex.tokens.id("a").unwrap();
+        let b = lex.tokens.id("b").unwrap();
+        let dec = BeamDecoder::new(&lex, &lm, DecoderConfig::default()).unwrap();
+        let frames = frames_for(&[a, a, b, BLANK, b, a], lex.tokens.len());
+        assert_eq!(dec.greedy(&frames).text, "ab ba");
+    }
+
+    #[test]
+    fn scores_are_monotone_decreasing() {
+        // Adding frames can only lower the (log-prob) score of the best
+        // path when every frame's best log-prob is ≤ 0 and no word bonus
+        // exceeds it — with word_penalty ≤ 0 and lm_weight ≥ 0 this holds.
+        let (lex, lm) = fixtures();
+        let a = lex.tokens.id("a").unwrap();
+        let b = lex.tokens.id("b").unwrap();
+        let dec = BeamDecoder::new(&lex, &lm, DecoderConfig::default()).unwrap();
+        let mut st = dec.start();
+        let mut prev_best = 0.0f32;
+        for &t in &[a, b, BLANK, b, a, BLANK] {
+            let frames = frames_for(&[t], lex.tokens.len());
+            dec.step(&mut st, &frames);
+            let best = st.hyps.iter().map(|h| h.score).fold(f32::MIN, f32::max);
+            assert!(best <= prev_best + 1e-5);
+            prev_best = best;
+        }
+    }
+}

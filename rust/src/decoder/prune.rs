@@ -1,0 +1,234 @@
+//! Sort + prune of candidate hypotheses — the software mirror of the
+//! hypothesis unit (§3.5): merge duplicates (keep best), apply the score
+//! beam, cap at hypothesis-memory capacity.
+
+use super::Hyp;
+use std::collections::HashMap;
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// Multiply-xor hasher for the (already well-mixed) 64-bit state keys —
+/// SipHash showed up in the §Perf profile at large beams; state keys are
+/// not attacker-controlled, so a fast non-cryptographic hash is fine.
+#[derive(Default)]
+pub struct KeyHasher(u64);
+
+impl Hasher for KeyHasher {
+    fn finish(&self) -> u64 {
+        self.0
+    }
+
+    fn write(&mut self, _bytes: &[u8]) {
+        unreachable!("KeyHasher is only used with u64 keys");
+    }
+
+    fn write_u64(&mut self, k: u64) {
+        // Fibonacci multiply + xor-shift: enough mixing for trie/LM ids.
+        let h = k.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        self.0 = h ^ (h >> 29);
+    }
+}
+
+type KeyMap<V> = HashMap<u64, V, BuildHasherDefault<KeyHasher>>;
+
+/// Pruning parameters (hardware: `ConfigureBeamWidth` + memory size).
+#[derive(Debug, Clone, Copy)]
+pub struct Pruner {
+    pub beam: f32,
+    pub max_hyps: usize,
+}
+
+/// Statistics accumulated across `prune` calls; consumed by the
+/// simulator's hypothesis-unit occupancy model and the ABL2 ablation.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PruneStats {
+    /// Candidate hypotheses generated (pre-merge).
+    pub generated: u64,
+    /// Removed as duplicates of a better-scoring equal state.
+    pub merged: u64,
+    /// Removed by the score beam.
+    pub beam_pruned: u64,
+    /// Removed by the capacity cap.
+    pub capacity_pruned: u64,
+    /// Max simultaneous live hypotheses seen.
+    pub peak_live: u64,
+    /// Prune invocations (= acoustic frames).
+    pub rounds: u64,
+}
+
+impl PruneStats {
+    /// Survivors across all rounds.
+    pub fn survived(&self) -> u64 {
+        self.generated - self.merged - self.beam_pruned - self.capacity_pruned
+    }
+
+    /// Mean live hypotheses per round.
+    pub fn mean_live(&self) -> f64 {
+        if self.rounds == 0 {
+            0.0
+        } else {
+            self.survived() as f64 / self.rounds as f64
+        }
+    }
+}
+
+impl Pruner {
+    /// Merge → beam → capacity. Returns the surviving set sorted by
+    /// descending score (the hypothesis unit keeps them sorted).
+    pub fn prune(&self, cands: Vec<Hyp>, stats: &mut PruneStats) -> Vec<Hyp> {
+        stats.rounds += 1;
+        stats.generated += cands.len() as u64;
+        if cands.is_empty() {
+            return cands;
+        }
+        // Merge duplicates by state key, keeping the max score.
+        let mut best: KeyMap<Hyp> =
+            KeyMap::with_capacity_and_hasher(cands.len(), Default::default());
+        let mut merged = 0u64;
+        for h in cands {
+            match best.entry(h.state_key()) {
+                std::collections::hash_map::Entry::Occupied(mut e) => {
+                    merged += 1;
+                    if h.score > e.get().score {
+                        e.insert(h);
+                    }
+                }
+                std::collections::hash_map::Entry::Vacant(e) => {
+                    e.insert(h);
+                }
+            }
+        }
+        stats.merged += merged;
+        let mut survivors: Vec<Hyp> = best.into_values().collect();
+        // Score beam relative to the best candidate.
+        let top = survivors.iter().map(|h| h.score).fold(f32::MIN, f32::max);
+        let floor = top - self.beam;
+        let before = survivors.len();
+        survivors.retain(|h| h.score >= floor);
+        stats.beam_pruned += (before - survivors.len()) as u64;
+        // Capacity: keep the max_hyps best.
+        survivors.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+        if survivors.len() > self.max_hyps {
+            stats.capacity_pruned += (survivors.len() - self.max_hyps) as u64;
+            survivors.truncate(self.max_hyps);
+        }
+        stats.peak_live = stats.peak_live.max(survivors.len() as u64);
+        survivors
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lm::LmState;
+    use crate::util::prop;
+
+    fn hyp(score: f32, node: u32, lm: u32, last: u32) -> Hyp {
+        Hyp {
+            score,
+            node,
+            lm: LmState(lm),
+            last_token: last,
+            back: u32::MAX,
+        }
+    }
+
+    #[test]
+    fn merges_equal_states_keeping_best() {
+        let p = Pruner { beam: 100.0, max_hyps: 10 };
+        let mut stats = PruneStats::default();
+        let out = p.prune(
+            vec![hyp(-1.0, 5, 2, 1), hyp(-3.0, 5, 2, 1), hyp(-2.0, 6, 2, 1)],
+            &mut stats,
+        );
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].score, -1.0);
+        assert_eq!(stats.merged, 1);
+    }
+
+    #[test]
+    fn beam_prunes_far_scores() {
+        let p = Pruner { beam: 5.0, max_hyps: 10 };
+        let mut stats = PruneStats::default();
+        let out = p.prune(
+            vec![hyp(0.0, 1, 0, 0), hyp(-4.9, 2, 0, 0), hyp(-5.1, 3, 0, 0)],
+            &mut stats,
+        );
+        assert_eq!(out.len(), 2);
+        assert_eq!(stats.beam_pruned, 1);
+    }
+
+    #[test]
+    fn capacity_caps_and_sorts() {
+        let p = Pruner { beam: 1000.0, max_hyps: 3 };
+        let mut stats = PruneStats::default();
+        let cands: Vec<Hyp> = (0..10).map(|i| hyp(-(i as f32), i, 0, 0)).collect();
+        let out = p.prune(cands, &mut stats);
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0].score, 0.0);
+        assert_eq!(out[2].score, -2.0);
+        assert_eq!(stats.capacity_pruned, 7);
+    }
+
+    #[test]
+    fn prune_invariants_property() {
+        prop::check("prune-invariants", 60, |g| {
+            let n = g.len(1);
+            let cands: Vec<Hyp> = (0..n)
+                .map(|_| {
+                    hyp(
+                        g.f32(20.0),
+                        g.index(8) as u32,
+                        g.index(4) as u32,
+                        g.index(3) as u32,
+                    )
+                })
+                .collect();
+            let beam = 1.0 + g.rng.f32() * 10.0;
+            let max_hyps = 1 + g.index(16);
+            let p = Pruner { beam, max_hyps };
+            let mut stats = PruneStats::default();
+            let best_in = cands.iter().map(|h| h.score).fold(f32::MIN, f32::max);
+            let out = p.prune(cands.clone(), &mut stats);
+            // 1. Conservation: generated = survivors + all prune causes.
+            crate::prop_assert!(
+                stats.survived() == out.len() as u64,
+                "conservation violated"
+            );
+            // 2. Capacity respected.
+            crate::prop_assert!(out.len() <= max_hyps, "over capacity");
+            // 3. Sorted descending.
+            crate::prop_assert!(
+                out.windows(2).all(|w| w[0].score >= w[1].score),
+                "not sorted"
+            );
+            // 4. The best candidate always survives.
+            crate::prop_assert!(
+                (out[0].score - best_in).abs() < 1e-6,
+                "best lost: {} vs {}",
+                out[0].score,
+                best_in
+            );
+            // 5. Everything within beam of best... that survived capacity.
+            for h in &out {
+                crate::prop_assert!(h.score >= best_in - beam - 1e-5, "beam violated");
+            }
+            // 6. No duplicate states among survivors.
+            let mut keys: Vec<u64> = out.iter().map(|h| h.state_key()).collect();
+            keys.sort_unstable();
+            keys.dedup();
+            crate::prop_assert!(keys.len() == out.len(), "duplicate states survive");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn stats_accumulate_across_rounds() {
+        let p = Pruner { beam: 100.0, max_hyps: 100 };
+        let mut stats = PruneStats::default();
+        p.prune(vec![hyp(0.0, 1, 0, 0)], &mut stats);
+        p.prune(vec![hyp(0.0, 1, 0, 0), hyp(-1.0, 2, 0, 0)], &mut stats);
+        assert_eq!(stats.rounds, 2);
+        assert_eq!(stats.generated, 3);
+        assert_eq!(stats.mean_live(), 1.5);
+    }
+}

@@ -1,0 +1,214 @@
+//! Radix-2 Cooley–Tukey FFT, implemented from scratch (the feature
+//! extraction kernel of §2.1 / §4.2 — on ASRPU this is kernel 0 of the
+//! acoustic scoring phase, here it is the native front-end and the
+//! instruction-count reference for the simulator's MFCC kernel model).
+
+use std::f64::consts::PI;
+
+/// Precomputed plan for a power-of-two complex FFT.
+#[derive(Debug, Clone)]
+pub struct FftPlan {
+    n: usize,
+    /// Bit-reversal permutation.
+    rev: Vec<u32>,
+    /// Twiddle factors for each butterfly stage, concatenated.
+    twiddles_re: Vec<f32>,
+    twiddles_im: Vec<f32>,
+}
+
+impl FftPlan {
+    /// Build a plan for size `n` (must be a power of two ≥ 2).
+    pub fn new(n: usize) -> Self {
+        assert!(n.is_power_of_two() && n >= 2, "FFT size must be a power of two, got {n}");
+        let bits = n.trailing_zeros();
+        let rev: Vec<u32> = (0..n as u32)
+            .map(|i| i.reverse_bits() >> (32 - bits))
+            .collect();
+        // Stage s has half-width m = 2^s; twiddle w^k = exp(-2πik/(2m)).
+        let mut twiddles_re = Vec::with_capacity(n - 1);
+        let mut twiddles_im = Vec::with_capacity(n - 1);
+        let mut m = 1;
+        while m < n {
+            for k in 0..m {
+                let ang = -PI * (k as f64) / (m as f64);
+                twiddles_re.push(ang.cos() as f32);
+                twiddles_im.push(ang.sin() as f32);
+            }
+            m *= 2;
+        }
+        FftPlan { n, rev, twiddles_re, twiddles_im }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// In-place forward FFT over split re/im buffers of length `n`.
+    pub fn forward(&self, re: &mut [f32], im: &mut [f32]) {
+        let n = self.n;
+        assert_eq!(re.len(), n);
+        assert_eq!(im.len(), n);
+        // Bit-reversal permutation.
+        for i in 0..n {
+            let j = self.rev[i] as usize;
+            if i < j {
+                re.swap(i, j);
+                im.swap(i, j);
+            }
+        }
+        // Butterflies.
+        let mut m = 1;
+        let mut tw_base = 0;
+        while m < n {
+            for start in (0..n).step_by(2 * m) {
+                for k in 0..m {
+                    let wr = self.twiddles_re[tw_base + k];
+                    let wi = self.twiddles_im[tw_base + k];
+                    let i = start + k;
+                    let j = i + m;
+                    let tr = wr * re[j] - wi * im[j];
+                    let ti = wr * im[j] + wi * re[j];
+                    re[j] = re[i] - tr;
+                    im[j] = im[i] - ti;
+                    re[i] += tr;
+                    im[i] += ti;
+                }
+            }
+            tw_base += m;
+            m *= 2;
+        }
+    }
+
+    /// Real-input FFT: returns the one-sided power spectrum
+    /// `|X[k]|²` for `k = 0..=n/2` (length n/2 + 1). Input shorter than
+    /// `n` is zero-padded.
+    pub fn power_spectrum(&self, input: &[f32], out: &mut Vec<f32>) {
+        let mut re = Vec::new();
+        let mut im = Vec::new();
+        self.power_spectrum_scratch(input, &mut re, &mut im, out);
+    }
+
+    /// Allocation-free variant: `re`/`im` are reused scratch buffers
+    /// (§Perf: the MFCC hot loop calls this once per frame).
+    pub fn power_spectrum_scratch(
+        &self,
+        input: &[f32],
+        re: &mut Vec<f32>,
+        im: &mut Vec<f32>,
+        out: &mut Vec<f32>,
+    ) {
+        let n = self.n;
+        assert!(input.len() <= n, "input longer than FFT size");
+        re.clear();
+        re.extend_from_slice(input);
+        re.resize(n, 0.0);
+        im.clear();
+        im.resize(n, 0.0);
+        self.forward(re, im);
+        out.clear();
+        out.extend((0..=n / 2).map(|k| re[k] * re[k] + im[k] * im[k]));
+    }
+}
+
+/// Naive O(n²) DFT power spectrum — correctness oracle for tests.
+#[cfg(test)]
+pub fn naive_power_spectrum(input: &[f32], n: usize) -> Vec<f32> {
+    (0..=n / 2)
+        .map(|k| {
+            let (mut re, mut im) = (0.0f64, 0.0f64);
+            for (t, &x) in input.iter().enumerate() {
+                let ang = -2.0 * PI * (k * t) as f64 / n as f64;
+                re += x as f64 * ang.cos();
+                im += x as f64 * ang.sin();
+            }
+            (re * re + im * im) as f32
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn impulse_has_flat_spectrum() {
+        let plan = FftPlan::new(64);
+        let mut input = vec![0.0; 64];
+        input[0] = 1.0;
+        let mut ps = Vec::new();
+        plan.power_spectrum(&input, &mut ps);
+        for &p in &ps {
+            assert!((p - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn pure_tone_peaks_at_bin() {
+        let n = 512;
+        let plan = FftPlan::new(n);
+        let bin = 37;
+        let input: Vec<f32> = (0..n)
+            .map(|t| (2.0 * PI * bin as f64 * t as f64 / n as f64).cos() as f32)
+            .collect();
+        let mut ps = Vec::new();
+        plan.power_spectrum(&input, &mut ps);
+        let peak = ps
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(peak, bin);
+        // Energy of cos at exact bin: (n/2)^2.
+        let expect = (n as f32 / 2.0).powi(2);
+        assert!((ps[bin] / expect - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn matches_naive_dft_random_inputs() {
+        prop::check("fft-matches-naive-dft", 30, |g| {
+            let n = 1 << (3 + g.index(5)); // 8..128
+            let len = g.len(1).min(n);
+            let input = g.vec_of(len, |r| r.uniform(-1.0, 1.0));
+            let plan = FftPlan::new(n);
+            let mut fast = Vec::new();
+            plan.power_spectrum(&input, &mut fast);
+            let slow = naive_power_spectrum(&input, n);
+            for (k, (a, b)) in fast.iter().zip(&slow).enumerate() {
+                let scale = 1.0 + b.abs();
+                crate::prop_assert!(
+                    (a - b).abs() / scale < 1e-3,
+                    "n={n} bin {k}: fft={a} dft={b}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn parseval_energy_conservation() {
+        let n = 256;
+        let plan = FftPlan::new(n);
+        let mut rng = Rng::new(99);
+        let input: Vec<f32> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let mut re = input.clone();
+        let mut im = vec![0.0; n];
+        plan.forward(&mut re, &mut im);
+        let time_energy: f64 = input.iter().map(|&x| (x as f64).powi(2)).sum();
+        let freq_energy: f64 = re
+            .iter()
+            .zip(&im)
+            .map(|(&r, &i)| (r as f64).powi(2) + (i as f64).powi(2))
+            .sum::<f64>()
+            / n as f64;
+        assert!((time_energy - freq_energy).abs() / time_energy < 1e-5);
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn rejects_non_power_of_two() {
+        FftPlan::new(100);
+    }
+}

@@ -1,0 +1,191 @@
+//! Mel filterbank and DCT-II — the §2.1 front-end steps between the FFT
+//! and the feature frame. The construction here is mirrored exactly by
+//! `python/compile/features.py` so the trained model and the native
+//! engine consume identical features (tests assert allclose).
+
+/// HTK mel scale.
+pub fn hz_to_mel(hz: f64) -> f64 {
+    2595.0 * (1.0 + hz / 700.0).log10()
+}
+
+pub fn mel_to_hz(mel: f64) -> f64 {
+    700.0 * (10f64.powf(mel / 2595.0) - 1.0)
+}
+
+/// Triangular mel filterbank over a one-sided power spectrum.
+#[derive(Debug, Clone)]
+pub struct MelBank {
+    pub n_mels: usize,
+    pub n_bins: usize,
+    /// Dense (n_mels × n_bins) filter matrix — kept because the JAX
+    /// mirror is dense and tests compare row-for-row.
+    pub weights: Vec<f32>,
+    /// Sparse view: per filter, (first nonzero bin, nonzero weights).
+    /// Triangular filters touch ~2·n_bins entries total vs
+    /// n_mels·n_bins dense — the §Perf hot path uses this.
+    sparse: Vec<(usize, Vec<f32>)>,
+}
+
+impl MelBank {
+    /// `n_fft`-point analysis at `sample_rate`, `n_mels` filters spanning
+    /// `[fmin, fmax]` Hz.
+    pub fn new(sample_rate: usize, n_fft: usize, n_mels: usize, fmin: f64, fmax: f64) -> Self {
+        assert!(fmax <= sample_rate as f64 / 2.0, "fmax above Nyquist");
+        assert!(fmin < fmax);
+        let n_bins = n_fft / 2 + 1;
+        // n_mels + 2 equally spaced points on the mel axis.
+        let lo = hz_to_mel(fmin);
+        let hi = hz_to_mel(fmax);
+        let pts: Vec<f64> = (0..n_mels + 2)
+            .map(|i| mel_to_hz(lo + (hi - lo) * i as f64 / (n_mels + 1) as f64))
+            .collect();
+        let bin_hz = sample_rate as f64 / n_fft as f64;
+        let mut weights = vec![0.0f32; n_mels * n_bins];
+        for m in 0..n_mels {
+            let (f_lo, f_c, f_hi) = (pts[m], pts[m + 1], pts[m + 2]);
+            for b in 0..n_bins {
+                let f = b as f64 * bin_hz;
+                let w = if f <= f_lo || f >= f_hi {
+                    0.0
+                } else if f <= f_c {
+                    (f - f_lo) / (f_c - f_lo)
+                } else {
+                    (f_hi - f) / (f_hi - f_c)
+                };
+                weights[m * n_bins + b] = w as f32;
+            }
+        }
+        let sparse = (0..n_mels)
+            .map(|m| {
+                let row = &weights[m * n_bins..(m + 1) * n_bins];
+                let first = row.iter().position(|&w| w != 0.0).unwrap_or(0);
+                let last = row.iter().rposition(|&w| w != 0.0).unwrap_or(0);
+                (first, row[first..=last].to_vec())
+            })
+            .collect();
+        MelBank { n_mels, n_bins, weights, sparse }
+    }
+
+    /// Apply the bank: `out[m] = Σ_b w[m,b] · ps[b]` (sparse inner loop).
+    pub fn apply(&self, power_spectrum: &[f32], out: &mut Vec<f32>) {
+        assert_eq!(power_spectrum.len(), self.n_bins);
+        out.clear();
+        for (first, ws) in &self.sparse {
+            let mut acc = 0.0f32;
+            for (w, p) in ws.iter().zip(&power_spectrum[*first..]) {
+                acc += w * p;
+            }
+            out.push(acc);
+        }
+    }
+}
+
+/// Orthonormal DCT-II matrix (n × n), row-major: `out = D · in`.
+#[derive(Debug, Clone)]
+pub struct Dct {
+    pub n: usize,
+    pub matrix: Vec<f32>,
+}
+
+impl Dct {
+    pub fn new(n: usize) -> Self {
+        let mut matrix = vec![0.0f32; n * n];
+        let norm0 = (1.0 / n as f64).sqrt();
+        let norm = (2.0 / n as f64).sqrt();
+        for k in 0..n {
+            for t in 0..n {
+                let v = (std::f64::consts::PI / n as f64 * (t as f64 + 0.5) * k as f64).cos();
+                matrix[k * n + t] = (v * if k == 0 { norm0 } else { norm }) as f32;
+            }
+        }
+        Dct { n, matrix }
+    }
+
+    pub fn apply(&self, input: &[f32], out: &mut Vec<f32>) {
+        assert_eq!(input.len(), self.n);
+        out.clear();
+        for k in 0..self.n {
+            let row = &self.matrix[k * self.n..(k + 1) * self.n];
+            out.push(row.iter().zip(input).map(|(a, b)| a * b).sum());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn mel_scale_roundtrip() {
+        for hz in [20.0, 440.0, 1000.0, 7600.0] {
+            assert!((mel_to_hz(hz_to_mel(hz)) - hz).abs() < 1e-6);
+        }
+        assert!((hz_to_mel(1000.0) - 999.985).abs() < 0.1, "1 kHz ≈ 1000 mel");
+    }
+
+    #[test]
+    fn filters_partition_reasonably() {
+        let bank = MelBank::new(16_000, 512, 80, 20.0, 7600.0);
+        // Each filter is non-empty and peaks ≤ 1.
+        for m in 0..bank.n_mels {
+            let row = &bank.weights[m * bank.n_bins..(m + 1) * bank.n_bins];
+            let peak = row.iter().cloned().fold(0.0f32, f32::max);
+            assert!(peak > 0.0, "filter {m} empty");
+            assert!(peak <= 1.0 + 1e-6);
+        }
+        // Flat spectrum maps to strictly positive mel energies.
+        let ps = vec![1.0f32; bank.n_bins];
+        let mut mel = Vec::new();
+        bank.apply(&ps, &mut mel);
+        assert!(mel.iter().all(|&m| m > 0.0));
+    }
+
+    #[test]
+    fn tone_lands_in_matching_filter() {
+        let bank = MelBank::new(16_000, 512, 40, 20.0, 7600.0);
+        // Power concentrated at bin for 1 kHz: bin = 1000/ (16000/512) = 32.
+        let mut ps = vec![0.0f32; bank.n_bins];
+        ps[32] = 1.0;
+        let mut mel = Vec::new();
+        bank.apply(&ps, &mut mel);
+        let peak = mel
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        // 1 kHz ≈ 1000 mel; filters span 20..7600 Hz ≈ 31.6..2840 mel.
+        // Expected filter ≈ (1000-31.6)/(2840-31.6)*41 ≈ 14.
+        assert!((12..=16).contains(&peak), "peak filter {peak}");
+    }
+
+    #[test]
+    fn dct_is_orthonormal() {
+        let d = Dct::new(32);
+        // D·Dᵀ = I.
+        for i in 0..d.n {
+            for j in 0..d.n {
+                let dot: f32 = (0..d.n)
+                    .map(|t| d.matrix[i * d.n + t] * d.matrix[j * d.n + t])
+                    .sum();
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!((dot - expect).abs() < 1e-5, "({i},{j}) = {dot}");
+            }
+        }
+    }
+
+    #[test]
+    fn dct_preserves_energy_property() {
+        prop::check("dct-parseval", 25, |g| {
+            let d = Dct::new(40);
+            let x = g.vec_of(40, |r| r.uniform(-2.0, 2.0));
+            let mut y = Vec::new();
+            d.apply(&x, &mut y);
+            let ex: f32 = x.iter().map(|v| v * v).sum();
+            let ey: f32 = y.iter().map(|v| v * v).sum();
+            crate::prop_assert!((ex - ey).abs() / (1.0 + ex) < 1e-4, "ex={ex} ey={ey}");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,10 @@
+//! Signal-processing front-end: framing, pre-emphasis, windowing, FFT,
+//! mel filterbank, DCT — the MFCC pipeline of §2.1 (Fig. 3).
+
+pub mod fft;
+pub mod mel;
+pub mod mfcc;
+
+pub use fft::FftPlan;
+pub use mel::{Dct, MelBank};
+pub use mfcc::Mfcc;

@@ -1,0 +1,271 @@
+//! Lexicon: acoustic-token inventory and the pronunciation trie the
+//! decoder walks (§2.3.2: "the lexicon can be efficiently represented
+//! with a tree structure of phonetic units; the path from the root to a
+//! leaf contains a sequence of phonetic units that form a complete
+//! word").
+
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::BTreeMap;
+
+/// The acoustic-token inventory. Token 0 is the CTC blank; the rest are
+/// the phonetic units the acoustic model scores.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TokenSet {
+    names: Vec<String>,
+}
+
+pub const BLANK: u32 = 0;
+
+impl TokenSet {
+    /// `names` excludes the blank; token ids are `1 + index`.
+    pub fn new(names: Vec<String>) -> Self {
+        let mut all = vec!["<blank>".to_string()];
+        all.extend(names);
+        TokenSet { names: all }
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    pub fn name(&self, id: u32) -> &str {
+        &self.names[id as usize]
+    }
+
+    pub fn id(&self, name: &str) -> Option<u32> {
+        self.names.iter().position(|n| n == name).map(|i| i as u32)
+    }
+}
+
+/// One node of the lexicon trie.
+#[derive(Debug, Clone, Default)]
+pub struct TrieNode {
+    /// Outgoing links: token id → child node index. BTreeMap keeps
+    /// expansion order deterministic.
+    pub children: BTreeMap<u32, u32>,
+    /// Word completed at this node, if any.
+    pub word: Option<u32>,
+    /// Depth (tokens from root) — used by the hypothesis-expansion cost
+    /// model and for invariant checks.
+    pub depth: u32,
+}
+
+/// The lexicon: a token inventory, a word list, and the trie.
+#[derive(Debug, Clone)]
+pub struct Lexicon {
+    pub tokens: TokenSet,
+    pub words: Vec<String>,
+    nodes: Vec<TrieNode>,
+}
+
+pub const ROOT: u32 = 0;
+
+impl Lexicon {
+    /// Build from `(word, pronunciation)` pairs.
+    pub fn build(tokens: TokenSet, entries: &[(String, Vec<u32>)]) -> Result<Self> {
+        let mut lex = Lexicon {
+            tokens,
+            words: Vec::new(),
+            nodes: vec![TrieNode::default()],
+        };
+        for (word, pron) in entries {
+            ensure!(!pron.is_empty(), "word '{word}' has empty pronunciation");
+            for &t in pron {
+                ensure!(
+                    t != BLANK && (t as usize) < lex.tokens.len(),
+                    "word '{word}': token {t} out of range"
+                );
+            }
+            let word_id = lex.words.len() as u32;
+            let mut node = ROOT;
+            for &t in pron {
+                node = match lex.nodes[node as usize].children.get(&t) {
+                    Some(&child) => child,
+                    None => {
+                        let child = lex.nodes.len() as u32;
+                        let depth = lex.nodes[node as usize].depth + 1;
+                        lex.nodes.push(TrieNode { depth, ..Default::default() });
+                        lex.nodes[node as usize].children.insert(t, child);
+                        child
+                    }
+                };
+            }
+            if let Some(prev) = lex.nodes[node as usize].word {
+                bail!(
+                    "homophone: '{}' and '{}' share a pronunciation",
+                    lex.words[prev as usize],
+                    word
+                );
+            }
+            lex.nodes[node as usize].word = Some(word_id);
+            lex.words.push(word.clone());
+        }
+        Ok(lex)
+    }
+
+    pub fn node(&self, id: u32) -> &TrieNode {
+        &self.nodes[id as usize]
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn word_name(&self, id: u32) -> &str {
+        &self.words[id as usize]
+    }
+
+    /// Estimated bytes of the trie as laid out in ASRPU external memory
+    /// (node header + links) — feeds the simulator's hypothesis-expansion
+    /// memory model.
+    pub fn graph_bytes(&self) -> usize {
+        self.nodes
+            .iter()
+            .map(|n| 12 + 8 * n.children.len())
+            .sum()
+    }
+
+    /// Parse the `lexicon.txt` artifact format: `word<TAB>tok tok tok`,
+    /// first line `#tokens: a b c ...` (names excluding blank).
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut lines = text.lines();
+        let header = lines.next().context("empty lexicon file")?;
+        let names = header
+            .strip_prefix("#tokens:")
+            .context("lexicon missing '#tokens:' header")?
+            .split_whitespace()
+            .map(str::to_string)
+            .collect();
+        let tokens = TokenSet::new(names);
+        let mut entries = Vec::new();
+        for (lno, line) in lines.enumerate() {
+            if line.trim().is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (word, pron) = line
+                .split_once('\t')
+                .with_context(|| format!("lexicon line {}: missing tab", lno + 2))?;
+            let ids = pron
+                .split_whitespace()
+                .map(|t| {
+                    tokens
+                        .id(t)
+                        .with_context(|| format!("lexicon line {}: unknown token '{t}'", lno + 2))
+                })
+                .collect::<Result<Vec<u32>>>()?;
+            entries.push((word.to_string(), ids));
+        }
+        Self::build(tokens, &entries)
+    }
+
+    /// Serialize in the artifact format.
+    pub fn serialize(&self) -> String {
+        let mut out = String::from("#tokens:");
+        for i in 1..self.tokens.len() {
+            out.push(' ');
+            out.push_str(self.tokens.name(i as u32));
+        }
+        out.push('\n');
+        // Reconstruct pronunciations by DFS.
+        let mut prons: Vec<(u32, Vec<u32>)> = Vec::new();
+        let mut stack: Vec<(u32, Vec<u32>)> = vec![(ROOT, Vec::new())];
+        while let Some((node, path)) = stack.pop() {
+            let n = self.node(node);
+            if let Some(w) = n.word {
+                prons.push((w, path.clone()));
+            }
+            for (&tok, &child) in n.children.iter().rev() {
+                let mut p = path.clone();
+                p.push(tok);
+                stack.push((child, p));
+            }
+        }
+        prons.sort_by_key(|(w, _)| *w);
+        for (w, path) in prons {
+            out.push_str(&self.words[w as usize]);
+            out.push('\t');
+            let toks: Vec<&str> = path.iter().map(|&t| self.tokens.name(t)).collect();
+            out.push_str(&toks.join(" "));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Lexicon {
+        let tokens = TokenSet::new(vec!["a".into(), "b".into(), "c".into()]);
+        let a = tokens.id("a").unwrap();
+        let b = tokens.id("b").unwrap();
+        let c = tokens.id("c").unwrap();
+        Lexicon::build(
+            tokens,
+            &[
+                ("ab".into(), vec![a, b]),
+                ("abc".into(), vec![a, b, c]),
+                ("ba".into(), vec![b, a]),
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn trie_shares_prefixes() {
+        let lex = toy();
+        // root + a + ab + abc + b + ba = 6 nodes.
+        assert_eq!(lex.num_nodes(), 6);
+        let a = lex.tokens.id("a").unwrap();
+        let b = lex.tokens.id("b").unwrap();
+        let n_a = *lex.node(ROOT).children.get(&a).unwrap();
+        let n_ab = *lex.node(n_a).children.get(&b).unwrap();
+        assert_eq!(lex.node(n_ab).word, Some(0));
+        assert_eq!(lex.node(n_ab).depth, 2);
+        // 'abc' extends the same path.
+        assert_eq!(lex.node(n_ab).children.len(), 1);
+    }
+
+    #[test]
+    fn rejects_homophones_and_bad_tokens() {
+        let tokens = TokenSet::new(vec!["a".into()]);
+        let a = tokens.id("a").unwrap();
+        assert!(Lexicon::build(
+            tokens.clone(),
+            &[("x".into(), vec![a]), ("y".into(), vec![a])]
+        )
+        .is_err());
+        assert!(Lexicon::build(tokens.clone(), &[("x".into(), vec![BLANK])]).is_err());
+        assert!(Lexicon::build(tokens.clone(), &[("x".into(), vec![99])]).is_err());
+        assert!(Lexicon::build(tokens, &[("x".into(), vec![])]).is_err());
+    }
+
+    #[test]
+    fn parse_serialize_roundtrip() {
+        let lex = toy();
+        let text = lex.serialize();
+        let re = Lexicon::parse(&text).unwrap();
+        assert_eq!(re.words, lex.words);
+        assert_eq!(re.num_nodes(), lex.num_nodes());
+        assert_eq!(re.serialize(), text);
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        assert!(Lexicon::parse("").is_err());
+        assert!(Lexicon::parse("no header\n").is_err());
+        assert!(Lexicon::parse("#tokens: a\nword without tab\n").is_err());
+        assert!(Lexicon::parse("#tokens: a\nw\tz\n").is_err());
+    }
+
+    #[test]
+    fn graph_bytes_scales_with_nodes() {
+        let lex = toy();
+        assert!(lex.graph_bytes() >= lex.num_nodes() * 12);
+    }
+}

@@ -1,0 +1,29 @@
+//! ASRPU — a programmable accelerator for low-power automatic speech
+//! recognition (Pinto, Arnau & González, 2022) as a running system.
+//!
+//! Two coupled halves share one configuration:
+//!
+//! * a **functional streaming ASR engine** — MFCC front-end ([`dsp`]), a
+//!   time-depth-separable acoustic model executed natively ([`am`]) or via
+//!   AOT-compiled XLA artifacts ([`runtime`]), and a CTC beam-search
+//!   decoder with lexicon trie and n-gram LM ([`decoder`], [`lexicon`],
+//!   [`lm`]), orchestrated by the streaming [`coordinator`];
+//! * a **cycle-approximate simulator of the ASRPU chip** ([`accel`]) with
+//!   analytical area/power models ([`power`]) that regenerates every table
+//!   and figure from the paper's evaluation ([`report`]).
+//!
+//! See DESIGN.md for the system inventory and the per-experiment index.
+pub mod accel;
+pub mod am;
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod decoder;
+pub mod dsp;
+pub mod lexicon;
+pub mod lm;
+pub mod power;
+pub mod report;
+pub mod runtime;
+pub mod synth;
+pub mod util;

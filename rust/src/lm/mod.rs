@@ -1,0 +1,343 @@
+//! n-gram language model (§2.3, §4.3): a backoff bigram LM with ARPA
+//! read/write and a Katz-style estimator, plus the per-hypothesis LM
+//! state the decoder walks ("each hypothesis contains a link to the
+//! language model graph, pointing to the last n-gram").
+//!
+//! Scores are natural-log probabilities internally; the ARPA text format
+//! uses log10 per convention and is converted on read/write.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+pub const SENT_START: &str = "<s>";
+pub const SENT_END: &str = "</s>";
+pub const UNK: &str = "<unk>";
+
+const LN10: f64 = std::f64::consts::LN_10;
+
+/// Backoff bigram LM.
+///
+/// `p(w|h) = p2(h,w)` if the bigram exists, else `bo(h) + p1(w)` — all in
+/// natural log.
+#[derive(Debug, Clone)]
+pub struct NgramLm {
+    vocab: Vec<String>,
+    index: BTreeMap<String, u32>,
+    /// Unigram log-probs and backoff weights, indexed by word id.
+    uni_logp: Vec<f32>,
+    uni_backoff: Vec<f32>,
+    /// Bigram log-probs: (h, w) → logp.
+    bi_logp: BTreeMap<(u32, u32), f32>,
+}
+
+/// Decoder-side LM state: the history word (bigram ⇒ one word).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct LmState(pub u32);
+
+impl NgramLm {
+    pub fn vocab_len(&self) -> usize {
+        self.vocab.len()
+    }
+
+    pub fn word_id(&self, w: &str) -> Option<u32> {
+        self.index.get(w).copied()
+    }
+
+    pub fn word(&self, id: u32) -> &str {
+        &self.vocab[id as usize]
+    }
+
+    /// Initial state at sentence start.
+    pub fn start(&self) -> LmState {
+        LmState(self.word_id(SENT_START).expect("LM missing <s>"))
+    }
+
+    /// Score a word given the state; returns (ln-prob, next state).
+    /// Unknown words map to `<unk>`.
+    pub fn score(&self, state: LmState, word_id: u32) -> (f32, LmState) {
+        let h = state.0;
+        let lp = match self.bi_logp.get(&(h, word_id)) {
+            Some(&lp) => lp,
+            None => self.uni_backoff[h as usize] + self.uni_logp[word_id as usize],
+        };
+        (lp, LmState(word_id))
+    }
+
+    /// Score the sentence-end from a state.
+    pub fn score_end(&self, state: LmState) -> f32 {
+        let end = self.word_id(SENT_END).expect("LM missing </s>");
+        self.score(state, end).0
+    }
+
+    /// Log-prob of a whole sentence (space-separated words), for tests
+    /// and perplexity reports.
+    pub fn sentence_logp(&self, sentence: &[&str]) -> f32 {
+        let unk = self.word_id(UNK).expect("LM missing <unk>");
+        let mut state = self.start();
+        let mut total = 0.0;
+        for w in sentence {
+            let id = self.word_id(w).unwrap_or(unk);
+            let (lp, next) = self.score(state, id);
+            total += lp;
+            state = next;
+        }
+        total + self.score_end(state)
+    }
+
+    /// Estimate from a corpus of sentences (each a Vec of words) with
+    /// absolute discounting (Katz-style backoff weights).
+    pub fn estimate(corpus: &[Vec<String>], discount: f64) -> Result<Self> {
+        anyhow::ensure!((0.0..1.0).contains(&discount), "discount must be in [0,1)");
+        anyhow::ensure!(!corpus.is_empty(), "empty corpus");
+        // Vocabulary: corpus words + specials, deterministic order.
+        let mut index: BTreeMap<String, u32> = BTreeMap::new();
+        let mut vocab: Vec<String> = Vec::new();
+        let intern = |w: &str, vocab: &mut Vec<String>, index: &mut BTreeMap<String, u32>| {
+            if let Some(&id) = index.get(w) {
+                return id;
+            }
+            let id = vocab.len() as u32;
+            vocab.push(w.to_string());
+            index.insert(w.to_string(), id);
+            id
+        };
+        let start = intern(SENT_START, &mut vocab, &mut index);
+        let end = intern(SENT_END, &mut vocab, &mut index);
+        let _unk = intern(UNK, &mut vocab, &mut index);
+        let mut uni_count: BTreeMap<u32, u64> = BTreeMap::new();
+        let mut bi_count: BTreeMap<(u32, u32), u64> = BTreeMap::new();
+        let mut hist_total: BTreeMap<u32, u64> = BTreeMap::new();
+        for sent in corpus {
+            let mut h = start;
+            for w in sent.iter().chain(std::iter::once(&SENT_END.to_string())) {
+                let id = intern(w, &mut vocab, &mut index);
+                *uni_count.entry(id).or_default() += 1;
+                *bi_count.entry((h, id)).or_default() += 1;
+                *hist_total.entry(h).or_default() += 1;
+                h = id;
+            }
+        }
+        let _ = end;
+        let v = vocab.len();
+        // Unigram ML with add-1 smoothing so <unk>/<s> get mass.
+        let total_uni: u64 = uni_count.values().sum();
+        let mut uni_logp = vec![0.0f32; v];
+        for id in 0..v as u32 {
+            let c = uni_count.get(&id).copied().unwrap_or(0);
+            let p = (c as f64 + 1.0) / (total_uni as f64 + v as f64);
+            uni_logp[id as usize] = p.ln() as f32;
+        }
+        // Bigrams with absolute discounting; leftover mass becomes the
+        // backoff weight, normalized against the unigram mass of unseen
+        // continuations.
+        let mut bi_logp = BTreeMap::new();
+        let mut uni_backoff = vec![0.0f32; v];
+        for (&h, &ht) in &hist_total {
+            let seen: Vec<(u32, u64)> = bi_count
+                .range((h, 0)..=(h, u32::MAX))
+                .map(|(&(_, w), &c)| (w, c))
+                .collect();
+            let discounted_mass = discount * seen.len() as f64 / ht as f64;
+            let mut seen_uni_mass = 0.0f64;
+            for &(w, c) in &seen {
+                let p = (c as f64 - discount).max(1e-10) / ht as f64;
+                bi_logp.insert((h, w), p.ln() as f32);
+                seen_uni_mass += (uni_logp[w as usize] as f64).exp();
+            }
+            let bo = discounted_mass / (1.0 - seen_uni_mass).max(1e-10);
+            uni_backoff[h as usize] = (bo.max(1e-10)).ln() as f32;
+        }
+        Ok(NgramLm { vocab, index, uni_logp, uni_backoff, bi_logp })
+    }
+
+    /// Serialize in ARPA format (log10).
+    pub fn to_arpa(&self) -> String {
+        let mut out = String::from("\\data\\\n");
+        out.push_str(&format!("ngram 1={}\n", self.vocab.len()));
+        out.push_str(&format!("ngram 2={}\n\n", self.bi_logp.len()));
+        out.push_str("\\1-grams:\n");
+        for (id, w) in self.vocab.iter().enumerate() {
+            out.push_str(&format!(
+                "{:.6}\t{}\t{:.6}\n",
+                self.uni_logp[id] as f64 / LN10,
+                w,
+                self.uni_backoff[id] as f64 / LN10,
+            ));
+        }
+        out.push_str("\n\\2-grams:\n");
+        for (&(h, w), &lp) in &self.bi_logp {
+            out.push_str(&format!(
+                "{:.6}\t{} {}\n",
+                lp as f64 / LN10,
+                self.vocab[h as usize],
+                self.vocab[w as usize]
+            ));
+        }
+        out.push_str("\n\\end\\\n");
+        out
+    }
+
+    /// Parse ARPA text (orders 1–2; higher orders rejected).
+    pub fn from_arpa(text: &str) -> Result<Self> {
+        enum Sect {
+            None,
+            Uni,
+            Bi,
+        }
+        let mut sect = Sect::None;
+        let mut vocab = Vec::new();
+        let mut index = BTreeMap::new();
+        let mut uni: Vec<(f32, f32)> = Vec::new();
+        let mut bi_raw: Vec<(String, String, f32)> = Vec::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line == "\\data\\" || line.starts_with("ngram ") {
+                continue;
+            }
+            match line {
+                "\\1-grams:" => {
+                    sect = Sect::Uni;
+                    continue;
+                }
+                "\\2-grams:" => {
+                    sect = Sect::Bi;
+                    continue;
+                }
+                "\\end\\" => break,
+                l if l.starts_with('\\') => bail!("unsupported ARPA section '{l}' (order > 2?)"),
+                _ => {}
+            }
+            let fields: Vec<&str> = line.split_whitespace().collect();
+            match sect {
+                Sect::Uni => {
+                    let (lp, w) = (fields[0], fields[1]);
+                    let bo = fields.get(2).copied().unwrap_or("0");
+                    let id = vocab.len() as u32;
+                    index.insert(w.to_string(), id);
+                    vocab.push(w.to_string());
+                    uni.push((
+                        (lp.parse::<f64>().context("bad unigram logp")? * LN10) as f32,
+                        (bo.parse::<f64>().context("bad backoff")? * LN10) as f32,
+                    ));
+                }
+                Sect::Bi => {
+                    if fields.len() != 3 {
+                        bail!("bad bigram line '{line}'");
+                    }
+                    bi_raw.push((
+                        fields[1].to_string(),
+                        fields[2].to_string(),
+                        (fields[0].parse::<f64>().context("bad bigram logp")? * LN10) as f32,
+                    ));
+                }
+                Sect::None => bail!("ARPA content before any section: '{line}'"),
+            }
+        }
+        let mut bi_logp = BTreeMap::new();
+        for (h, w, lp) in bi_raw {
+            let hid = *index.get(&h).with_context(|| format!("bigram history '{h}' not in unigrams"))?;
+            let wid = *index.get(&w).with_context(|| format!("bigram word '{w}' not in unigrams"))?;
+            bi_logp.insert((hid, wid), lp);
+        }
+        for special in [SENT_START, SENT_END, UNK] {
+            anyhow::ensure!(index.contains_key(special), "ARPA missing {special}");
+        }
+        let (uni_logp, uni_backoff) = uni.into_iter().unzip();
+        Ok(NgramLm { vocab, index, uni_logp, uni_backoff, bi_logp })
+    }
+
+    /// Estimated external-memory footprint of the LM graph (simulator).
+    pub fn graph_bytes(&self) -> usize {
+        self.vocab.len() * 16 + self.bi_logp.len() * 12
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn corpus() -> Vec<Vec<String>> {
+        let sents = [
+            "the cat sat",
+            "the cat ran",
+            "the dog sat",
+            "a dog ran",
+            "the cat sat here",
+        ];
+        sents
+            .iter()
+            .map(|s| s.split_whitespace().map(str::to_string).collect())
+            .collect()
+    }
+
+    #[test]
+    fn seen_bigrams_beat_backoff() {
+        let lm = NgramLm::estimate(&corpus(), 0.4).unwrap();
+        let the = lm.word_id("the").unwrap();
+        let cat = lm.word_id("cat").unwrap();
+        let dog = lm.word_id("dog").unwrap();
+        let (p_cat, _) = lm.score(LmState(the), cat);
+        let (p_dog, _) = lm.score(LmState(the), dog);
+        // "the cat" (3×) more likely than "the dog" (1×).
+        assert!(p_cat > p_dog, "{p_cat} !> {p_dog}");
+    }
+
+    #[test]
+    fn probabilities_sum_to_at_most_one() {
+        let lm = NgramLm::estimate(&corpus(), 0.4).unwrap();
+        // For each history, Σ_w p(w|h) should be ≈ ≤ 1 (backoff approx).
+        for h in 0..lm.vocab_len() as u32 {
+            let total: f64 = (0..lm.vocab_len() as u32)
+                .map(|w| (lm.score(LmState(h), w).0 as f64).exp())
+                .sum();
+            assert!(total < 1.35, "history {h}: Σp = {total}");
+        }
+    }
+
+    #[test]
+    fn likely_sentence_scores_higher() {
+        let lm = NgramLm::estimate(&corpus(), 0.4).unwrap();
+        let likely = lm.sentence_logp(&["the", "cat", "sat"]);
+        let unlikely = lm.sentence_logp(&["here", "a", "the"]);
+        assert!(likely > unlikely);
+    }
+
+    #[test]
+    fn unknown_words_fall_back_to_unk() {
+        let lm = NgramLm::estimate(&corpus(), 0.4).unwrap();
+        let lp = lm.sentence_logp(&["zebra"]);
+        assert!(lp.is_finite());
+    }
+
+    #[test]
+    fn arpa_roundtrip() {
+        let lm = NgramLm::estimate(&corpus(), 0.4).unwrap();
+        let text = lm.to_arpa();
+        let re = NgramLm::from_arpa(&text).unwrap();
+        assert_eq!(re.vocab_len(), lm.vocab_len());
+        // Scores survive the log10 roundtrip.
+        let the = lm.word_id("the").unwrap();
+        let cat = lm.word_id("cat").unwrap();
+        let a = lm.score(LmState(the), cat).0;
+        let b = re.score(
+            LmState(re.word_id("the").unwrap()),
+            re.word_id("cat").unwrap(),
+        )
+        .0;
+        assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+    }
+
+    #[test]
+    fn arpa_rejects_malformed() {
+        assert!(NgramLm::from_arpa("\\3-grams:\n").is_err());
+        assert!(NgramLm::from_arpa("0.5 stray line").is_err());
+        // Missing specials.
+        assert!(NgramLm::from_arpa("\\1-grams:\n-1.0\tfoo\t0\n\\end\\\n").is_err());
+    }
+
+    #[test]
+    fn estimate_rejects_bad_args() {
+        assert!(NgramLm::estimate(&[], 0.4).is_err());
+        assert!(NgramLm::estimate(&corpus(), 1.5).is_err());
+    }
+}

@@ -1,0 +1,287 @@
+//! `asrpu` — CLI for the ASRPU reproduction.
+//!
+//! Subcommands:
+//!   decode    decode synthetic utterances end-to-end (XLA artifacts or
+//!             native backend), report transcripts + WER + RTF
+//!   serve     JSON-lines TCP streaming server (see coordinator::server)
+//!   simulate  run the accelerator simulator for N decoding steps
+//!   report    regenerate paper tables/figures: table1 table2 fig9 fig10
+//!             fig11 headline all
+//!   sweep     design-space sweep over PEs / MAC width / frequency
+//!   synth     render a synthetic utterance to raw f32 samples on stdout
+
+use anyhow::{bail, Result};
+
+use asrpu::accel::{simulate_step, HypWorkload, SimMode};
+use asrpu::am::TdsModel;
+use asrpu::config::{artifacts_dir, AccelConfig, DecoderConfig, ModelConfig};
+use asrpu::coordinator::{Engine, Server};
+use asrpu::power::ChipBudget;
+use asrpu::report;
+use asrpu::runtime::Runtime;
+use asrpu::synth::{spec, Synthesizer, WerAccum};
+use asrpu::util::cli;
+use asrpu::util::rng::Rng;
+use asrpu::util::table::Table;
+
+const VALUE_KEYS: &[&str] = &[
+    "n", "seed", "beam", "port", "pes", "mac", "freq-mhz", "backend", "mode", "steps",
+    "queue",
+];
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = cli::parse(argv, VALUE_KEYS)?;
+    match args.subcommand.as_deref() {
+        Some("decode") => cmd_decode(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("report") => cmd_report(&args),
+        Some("sweep") => cmd_sweep(&args),
+        Some("synth") => cmd_synth(&args),
+        _ => {
+            eprintln!(
+                "usage: asrpu <decode|serve|simulate|report|sweep|synth> [options]\n\
+                 see rust/src/main.rs header for details"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn build_engine(args: &cli::Args) -> Result<Engine> {
+    let beam = args.f64_or("beam", DecoderConfig::default().beam as f64)? as f32;
+    let dec = DecoderConfig { beam, ..Default::default() };
+    match args.str_or("backend", "auto").as_str() {
+        "native" => Engine::native(TdsModel::random(ModelConfig::tiny_tds(), 1), dec),
+        "xla" => {
+            let rt = Runtime::cpu()?;
+            Engine::from_artifacts(&rt, &artifacts_dir(), dec)
+        }
+        "auto" => {
+            if artifacts_dir().join("meta.json").exists() {
+                let rt = Runtime::cpu()?;
+                Engine::from_artifacts(&rt, &artifacts_dir(), dec)
+            } else {
+                eprintln!("note: artifacts missing; using native backend with random weights");
+                Engine::native(TdsModel::random(ModelConfig::tiny_tds(), 1), dec)
+            }
+        }
+        other => bail!("unknown backend '{other}' (native|xla|auto)"),
+    }
+}
+
+fn cmd_decode(args: &cli::Args) -> Result<()> {
+    let n = args.usize_or("n", 8)?;
+    let seed = args.usize_or("seed", 42)? as u64;
+    let engine = build_engine(args)?;
+    let synth = Synthesizer::default();
+    let mut rng = Rng::new(seed);
+    let mut wer = WerAccum::default();
+    let mut table = Table::new(
+        "decode — synthetic utterances",
+        &["#", "reference", "hypothesis", "edits", "steps", "RTF"],
+    );
+    let mut total_compute = 0.0;
+    let mut total_audio = 0.0;
+    for i in 0..n {
+        let words = spec::sample_sentence(&mut rng);
+        let u = synth.render(&words, &mut rng);
+        let (t, m) = engine.decode_utterance(&u.samples)?;
+        let edits = asrpu::synth::edit_distance(&u.words, &t.words);
+        wer.add(&u.words, &t.words);
+        total_compute += m.compute_s;
+        total_audio += m.audio_s;
+        table.row(&[
+            i.to_string(),
+            u.text.clone(),
+            t.text.clone(),
+            edits.to_string(),
+            m.steps.to_string(),
+            format!("{:.1}x", m.rtf()),
+        ]);
+    }
+    table.footnote = Some(format!(
+        "WER {:.2}% ({} edits / {} words), sentence acc {:.0}%, aggregate RTF {:.1}x",
+        wer.wer() * 100.0,
+        wer.edits,
+        wer.ref_words,
+        wer.sentence_acc() * 100.0,
+        total_audio / total_compute
+    ));
+    println!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_serve(args: &cli::Args) -> Result<()> {
+    let port = args.usize_or("port", 7700)?;
+    let queue = args.usize_or("queue", 128)?;
+    let backend = args.str_or("backend", "auto");
+    let server = Server::start(
+        &format!("127.0.0.1:{port}"),
+        move || {
+            // Rebuild the engine on the device thread (PJRT not Send).
+            let argv = vec!["serve".to_string(), "--backend".into(), backend.clone()];
+            let args = cli::parse(&argv, VALUE_KEYS)?;
+            build_engine(&args)
+        },
+        queue,
+    )?;
+    println!(
+        "asrpu serving on {} (JSON lines; ops: open/feed/finish/stats)",
+        server.addr
+    );
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_simulate(args: &cli::Args) -> Result<()> {
+    let steps = args.usize_or("steps", 10)?;
+    let mut accel = AccelConfig::paper();
+    accel.num_pes = args.usize_or("pes", accel.num_pes)?;
+    accel.mac_vector_width = args.usize_or("mac", accel.mac_vector_width)?;
+    accel.frequency_hz = args.usize_or("freq-mhz", 500)? as u64 * 1_000_000;
+    accel.validate()?;
+    let model = ModelConfig::paper_tds();
+    let mode = match args.str_or("mode", "ideal").as_str() {
+        "ideal" => SimMode::Ideal,
+        "detailed" => SimMode::Detailed,
+        other => bail!("unknown mode '{other}' (ideal|detailed)"),
+    };
+    let r = simulate_step(&model, &accel, &HypWorkload::default(), mode);
+    let ms = r.seconds(&accel) * 1e3;
+    println!(
+        "decoding step: {:.2} ms ({} cycles, {} instrs, util {:.1}%)",
+        ms,
+        r.total_cycles,
+        r.total_instrs,
+        100.0 * r.utilization(&accel)
+    );
+    println!(
+        "rtf {:.2}x  acoustic {:.2} ms  hyp-expansion {:.2} ms  dma stalls {} cycles",
+        r.rtf(&model, &accel),
+        r.acoustic_cycles as f64 * accel.cycle_s() * 1e3,
+        r.hyp_cycles as f64 * accel.cycle_s() * 1e3,
+        r.dma_stall_cycles
+    );
+    println!(
+        "utterance of {} steps: {:.1} ms audio decoded in {:.1} ms",
+        steps,
+        steps as f64 * model.step_seconds() * 1e3,
+        steps as f64 * ms
+    );
+    Ok(())
+}
+
+fn cmd_report(args: &cli::Args) -> Result<()> {
+    let accel = AccelConfig::paper();
+    let model = ModelConfig::paper_tds();
+    let which = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let out = match which {
+        "table1" => report::table1().render(),
+        "table2" => report::table2(&accel).render(),
+        "fig9" => {
+            let (t, c) = report::fig9(&model);
+            format!("{}{}", t.render(), c)
+        }
+        "fig10" => {
+            let (t, c) = report::fig10(&accel);
+            format!("{}{}", t.render(), c)
+        }
+        "fig11" => {
+            let (t, c, _) = report::fig11(&model, &accel, SimMode::Ideal);
+            format!("{}{}", t.render(), c)
+        }
+        "headline" => report::headline(&model, &accel).render(),
+        "all" => report::all_reports(),
+        other => bail!("unknown report '{other}'"),
+    };
+    println!("{out}");
+    Ok(())
+}
+
+fn cmd_sweep(args: &cli::Args) -> Result<()> {
+    let pes = args.range_or("pes", (1, 16, 1))?;
+    let model = ModelConfig::paper_tds();
+    let mut t = Table::new(
+        "design-space sweep — PEs vs step time / RTF / area / peak power",
+        &["PEs", "Step (ms)", "RTF", "Area (mm2)", "Peak (W)", "mJ/step"],
+    );
+    for p in pes {
+        let mut accel = AccelConfig::paper();
+        accel.num_pes = p;
+        accel.validate()?;
+        let r = simulate_step(&model, &accel, &HypWorkload::default(), SimMode::Ideal);
+        let b = ChipBudget::for_config(&accel);
+        let e = asrpu::power::step_energy_j(&r, &accel);
+        t.row(&[
+            p.to_string(),
+            format!("{:.1}", r.seconds(&accel) * 1e3),
+            format!("{:.2}", r.rtf(&model, &accel)),
+            format!("{:.2}", b.total_area_mm2()),
+            format!("{:.2}", b.total_peak_w()),
+            format!("{:.1}", e * 1e3),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_synth(args: &cli::Args) -> Result<()> {
+    let seed = args.usize_or("seed", 1)? as u64;
+    let mut rng = Rng::new(seed);
+    let synth = Synthesizer::default();
+    let u = synth.render_random(&mut rng);
+    eprintln!("text: {}", u.text);
+    eprintln!(
+        "samples: {} ({:.2}s)",
+        u.samples.len(),
+        u.samples.len() as f64 / 16000.0
+    );
+    // Raw little-endian f32 samples on stdout (pipe to a file / player).
+    use std::io::Write;
+    let mut out = std::io::stdout().lock();
+    for s in &u.samples {
+        out.write_all(&s.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_subcommands_run() {
+        for which in ["table1", "table2", "fig9", "fig10", "fig11", "headline"] {
+            run(&["report".to_string(), which.to_string()]).unwrap();
+        }
+    }
+
+    #[test]
+    fn simulate_runs() {
+        run(&["simulate".to_string()]).unwrap();
+    }
+
+    #[test]
+    fn unknown_backend_errors() {
+        let args = cli::parse(
+            &["decode".to_string(), "--backend".into(), "bogus".into()],
+            VALUE_KEYS,
+        )
+        .unwrap();
+        assert!(build_engine(&args).is_err());
+    }
+}

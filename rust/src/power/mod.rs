@@ -1,0 +1,293 @@
+//! Area and power estimation (§5.3, Fig. 10): CACTI-like memories
+//! ([`sram`]), McPAT-like PE cores and Design-Compiler-like special
+//! function units, all at the 32 nm node, composed into the full-chip
+//! budget with the paper's peak-power methodology:
+//!
+//! > "Peak power is estimated by adding together the leakage power and
+//! > peak dynamic power for the logic units … In the case of memories we
+//! > assume as peak power the scenario where all the ports are accessed
+//! > once per cycle."
+
+pub mod sram;
+
+use crate::accel::StepReport;
+use crate::config::AccelConfig;
+use sram::{MacroKind, SramMacro};
+
+/// McPAT-like PE-core constants at 32 nm (in-order RISC-V with FP ALU,
+/// 8-lane int8 vector MAC and log/exp/cos SFUs, §3.4).
+pub mod core32 {
+    /// Core area including register files, vector unit and SFUs (mm²).
+    pub const PE_AREA_MM2: f64 = 0.775;
+    /// Core leakage (W).
+    pub const PE_LEAK_W: f64 = 55e-3;
+    /// Average energy per executed instruction (J) — dominates peak
+    /// dynamic power ("the rest comes from dynamic power, mainly from
+    /// the PE cores", §5.3).
+    pub const PE_ENERGY_PER_INSTR_J: f64 = 165e-12;
+    /// PE interconnect bus (§3.4: PE↔memories + PE↔controller buses).
+    pub const BUS_AREA_MM2: f64 = 0.35;
+    pub const BUS_LEAK_W: f64 = 10e-3;
+    pub const BUS_PEAK_DYN_W: f64 = 50e-3;
+    /// ASR controller + command decoder logic.
+    pub const CTRL_AREA_MM2: f64 = 0.08;
+    pub const CTRL_LEAK_W: f64 = 5e-3;
+    pub const CTRL_PEAK_DYN_W: f64 = 8e-3;
+    /// Hypothesis-unit controller (sort/prune logic, §3.5).
+    pub const HYP_CTRL_AREA_MM2: f64 = 0.03;
+    pub const HYP_CTRL_LEAK_W: f64 = 2e-3;
+    pub const HYP_CTRL_PEAK_DYN_W: f64 = 5e-3;
+    /// External-memory (LPDDR4-class) energy per byte transferred (J/B),
+    /// used for per-step energy, not chip peak power.
+    pub const EXT_MEM_J_PER_BYTE: f64 = 15e-12;
+}
+
+/// One row of the Fig. 10 component breakdown.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ComponentBudget {
+    pub name: String,
+    pub area_mm2: f64,
+    pub leakage_w: f64,
+    pub peak_dynamic_w: f64,
+}
+
+impl ComponentBudget {
+    pub fn peak_w(&self) -> f64 {
+        self.leakage_w + self.peak_dynamic_w
+    }
+}
+
+/// Full-chip budget.
+#[derive(Debug, Clone)]
+pub struct ChipBudget {
+    pub components: Vec<ComponentBudget>,
+}
+
+impl ChipBudget {
+    /// Build the budget for an accelerator configuration.
+    pub fn for_config(accel: &AccelConfig) -> Self {
+        let freq = accel.frequency_hz as f64;
+        let n = accel.num_pes as f64;
+        let mut components = Vec::new();
+
+        // Execution unit: PE cores.
+        components.push(ComponentBudget {
+            name: "PE cores".into(),
+            area_mm2: core32::PE_AREA_MM2 * n,
+            leakage_w: core32::PE_LEAK_W * n,
+            peak_dynamic_w: core32::PE_ENERGY_PER_INSTR_J * freq * n,
+        });
+        // Per-PE caches.
+        let pe_d = SramMacro::new(accel.pe_dcache_bytes, 1, MacroKind::Cache);
+        let pe_i = SramMacro::new(accel.pe_icache_bytes, 1, MacroKind::Cache);
+        components.push(ComponentBudget {
+            name: "PE d-caches".into(),
+            area_mm2: pe_d.area_mm2() * n,
+            leakage_w: pe_d.leakage_w() * n,
+            peak_dynamic_w: pe_d.peak_dynamic_w(freq) * n,
+        });
+        components.push(ComponentBudget {
+            name: "PE i-caches".into(),
+            area_mm2: pe_i.area_mm2() * n,
+            leakage_w: pe_i.leakage_w() * n,
+            peak_dynamic_w: pe_i.peak_dynamic_w(freq) * n,
+        });
+        // PE bus.
+        components.push(ComponentBudget {
+            name: "PE bus".into(),
+            area_mm2: core32::BUS_AREA_MM2,
+            leakage_w: core32::BUS_LEAK_W,
+            peak_dynamic_w: core32::BUS_PEAK_DYN_W,
+        });
+        // Shared memories.
+        let shared = SramMacro::new(accel.shared_mem_bytes, 2, MacroKind::Scratchpad);
+        components.push(ComponentBudget {
+            name: "Shared memory".into(),
+            area_mm2: shared.area_mm2(),
+            leakage_w: shared.leakage_w(),
+            peak_dynamic_w: shared.peak_dynamic_w(freq),
+        });
+        let model = SramMacro::new(accel.model_mem_bytes, 1, MacroKind::Cache);
+        components.push(ComponentBudget {
+            name: "Model memory / d-cache".into(),
+            area_mm2: model.area_mm2(),
+            leakage_w: model.leakage_w(),
+            peak_dynamic_w: model.peak_dynamic_w(freq),
+        });
+        let icache = SramMacro::new(accel.shared_icache_bytes, 1, MacroKind::Cache);
+        components.push(ComponentBudget {
+            name: "Shared i-cache".into(),
+            area_mm2: icache.area_mm2(),
+            leakage_w: icache.leakage_w(),
+            peak_dynamic_w: icache.peak_dynamic_w(freq),
+        });
+        // Hypothesis unit: memory + sort/prune controller.
+        let hyp = SramMacro::new(accel.hyp_mem_bytes, 1, MacroKind::Scratchpad);
+        components.push(ComponentBudget {
+            name: "Hypothesis unit".into(),
+            area_mm2: hyp.area_mm2() + core32::HYP_CTRL_AREA_MM2,
+            leakage_w: hyp.leakage_w() + core32::HYP_CTRL_LEAK_W,
+            peak_dynamic_w: hyp.peak_dynamic_w(freq) + core32::HYP_CTRL_PEAK_DYN_W,
+        });
+        // ASR controller + command decoder.
+        components.push(ComponentBudget {
+            name: "Controller".into(),
+            area_mm2: core32::CTRL_AREA_MM2,
+            leakage_w: core32::CTRL_LEAK_W,
+            peak_dynamic_w: core32::CTRL_PEAK_DYN_W,
+        });
+        ChipBudget { components }
+    }
+
+    pub fn total_area_mm2(&self) -> f64 {
+        self.components.iter().map(|c| c.area_mm2).sum()
+    }
+
+    pub fn total_leakage_w(&self) -> f64 {
+        self.components.iter().map(|c| c.leakage_w).sum()
+    }
+
+    pub fn total_peak_dynamic_w(&self) -> f64 {
+        self.components.iter().map(|c| c.peak_dynamic_w).sum()
+    }
+
+    pub fn total_peak_w(&self) -> f64 {
+        self.total_leakage_w() + self.total_peak_dynamic_w()
+    }
+
+    /// Area share of the execution unit (PEs + PE caches + PE bus) — the
+    /// paper reports 65%.
+    pub fn execution_unit_share(&self) -> f64 {
+        let exec: f64 = self
+            .components
+            .iter()
+            .filter(|c| c.name.starts_with("PE"))
+            .map(|c| c.area_mm2)
+            .sum();
+        exec / self.total_area_mm2()
+    }
+
+    /// Area share of the shared + model memories — the paper reports 32%.
+    pub fn memories_share(&self) -> f64 {
+        let mem: f64 = self
+            .components
+            .iter()
+            .filter(|c| c.name.starts_with("Shared memory") || c.name.starts_with("Model"))
+            .map(|c| c.area_mm2)
+            .sum();
+        mem / self.total_area_mm2()
+    }
+
+    pub fn component(&self, name: &str) -> &ComponentBudget {
+        self.components
+            .iter()
+            .find(|c| c.name == name)
+            .unwrap_or_else(|| panic!("no component '{name}'"))
+    }
+}
+
+/// Energy of one simulated decoding step (average power = energy / time):
+/// instruction energy + memory access energy approximated from traffic +
+/// external-memory transfer energy + leakage over the step duration.
+pub fn step_energy_j(report: &StepReport, accel: &AccelConfig) -> f64 {
+    let budget = ChipBudget::for_config(accel);
+    let shared = SramMacro::new(accel.shared_mem_bytes, 2, MacroKind::Scratchpad);
+    let model = SramMacro::new(accel.model_mem_bytes, 1, MacroKind::Cache);
+    let instr_e = report.total_instrs as f64 * core32::PE_ENERGY_PER_INSTR_J;
+    // Shared-memory traffic: one access per 8 bytes (64-bit port).
+    let smem_bytes: u64 = report.kernels.iter().map(|k| k.instrs / 2).sum::<u64>().min(u64::MAX);
+    let _ = smem_bytes;
+    let smem_accesses: f64 = report
+        .kernels
+        .iter()
+        .map(|k| k.instrs as f64 * 0.4) // ~40% of instructions touch memory
+        .sum();
+    let mem_e = smem_accesses * 0.5 * (shared.access_energy_j() + model.access_energy_j());
+    let dma_e = report.dma_bytes as f64 * core32::EXT_MEM_J_PER_BYTE;
+    let leak_e = budget.total_leakage_w() * report.total_cycles as f64 / accel.frequency_hz as f64;
+    instr_e + mem_e + dma_e + leak_e
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::{simulate_step, HypWorkload, SimMode};
+    use crate::config::ModelConfig;
+
+    #[test]
+    fn total_area_matches_paper() {
+        // §5.3: "the total area is 11.68 mm²".
+        let b = ChipBudget::for_config(&AccelConfig::paper());
+        let a = b.total_area_mm2();
+        assert!((11.68 - a).abs() / 11.68 < 0.08, "area {a:.2} mm² vs 11.68");
+    }
+
+    #[test]
+    fn area_shares_match_paper() {
+        // §5.3: execution unit 65%, shared+model memories 32%,
+        // hypothesis unit < 1%.
+        let b = ChipBudget::for_config(&AccelConfig::paper());
+        let exec = b.execution_unit_share();
+        let mem = b.memories_share();
+        assert!((exec - 0.65).abs() < 0.05, "execution unit share {exec:.3}");
+        assert!((mem - 0.32).abs() < 0.05, "memories share {mem:.3}");
+        let hyp = b.component("Hypothesis unit").area_mm2 / b.total_area_mm2();
+        assert!(hyp < 0.012, "hypothesis unit share {hyp:.4}");
+    }
+
+    #[test]
+    fn peak_power_matches_paper() {
+        // §5.3: "slightly more than 1.8 W assuming peak power. Around
+        // 800 mW come from static power".
+        let b = ChipBudget::for_config(&AccelConfig::paper());
+        let peak = b.total_peak_w();
+        let leak = b.total_leakage_w();
+        assert!((1.65..2.05).contains(&peak), "peak {peak:.3} W vs ≈1.8+");
+        assert!((0.70..0.90).contains(&leak), "static {leak:.3} W vs ≈0.8");
+    }
+
+    #[test]
+    fn static_power_dominated_by_cores_and_big_memories() {
+        // §5.3: "mostly from the PE cores and the shared and model
+        // memories".
+        let b = ChipBudget::for_config(&AccelConfig::paper());
+        let cores = b.component("PE cores").leakage_w;
+        let mems = b.component("Shared memory").leakage_w
+            + b.component("Model memory / d-cache").leakage_w;
+        assert!((cores + mems) / b.total_leakage_w() > 0.75);
+    }
+
+    #[test]
+    fn dynamic_power_mainly_pe_cores() {
+        let b = ChipBudget::for_config(&AccelConfig::paper());
+        let cores = b.component("PE cores").peak_dynamic_w;
+        assert!(cores / b.total_peak_dynamic_w() > 0.6);
+    }
+
+    #[test]
+    fn budget_scales_with_pes() {
+        let mut cfg = AccelConfig::paper();
+        let base = ChipBudget::for_config(&cfg).total_area_mm2();
+        cfg.num_pes = 16;
+        let doubled = ChipBudget::for_config(&cfg).total_area_mm2();
+        assert!(doubled > base * 1.4);
+    }
+
+    #[test]
+    fn step_energy_is_sane() {
+        // Average power during a decoding step must be below chip peak
+        // and above leakage alone.
+        let accel = AccelConfig::paper();
+        let model = ModelConfig::paper_tds();
+        let r = simulate_step(&model, &accel, &HypWorkload::default(), SimMode::Ideal);
+        let e = step_energy_j(&r, &accel);
+        let seconds = r.seconds(&accel);
+        let avg_w = e / seconds;
+        let b = ChipBudget::for_config(&accel);
+        assert!(avg_w < b.total_peak_w(), "avg {avg_w:.3} W above peak");
+        assert!(avg_w > b.total_leakage_w(), "avg {avg_w:.3} W below leakage");
+        // Energy per second of decoded audio, order of 10s of mJ–1 J.
+        let e_per_audio_s = e / model.step_seconds();
+        assert!((0.01..3.0).contains(&e_per_audio_s), "{e_per_audio_s} J/s");
+    }
+}

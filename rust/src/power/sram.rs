@@ -1,0 +1,134 @@
+//! CACTI-like SRAM macro model at the 32 nm node.
+//!
+//! The paper (§5.1) uses CACTI for all memories: area, leakage power and
+//! per-access energy. We implement the same interface as a calibrated
+//! analytical model — linear area and leakage in capacity (high-Vt cells)
+//! plus a periphery constant, and access energy growing with √capacity
+//! (bitline/wordline lengths). Constants are calibrated so the full-chip
+//! budget reproduces the paper's Fig. 10 totals (see `power::tests`).
+
+/// Calibrated 32 nm constants.
+pub mod k32 {
+    /// Cell-array area per KB (mm²) including array periphery.
+    pub const AREA_MM2_PER_KB: f64 = 0.0020;
+    /// Fixed macro overhead (decoders, sense amps) per instance (mm²).
+    pub const AREA_MACRO_MM2: f64 = 0.02;
+    /// Cache overhead (tags, replacement state, control) multiplier for
+    /// small caches; large caches amortize tags over longer lines.
+    pub const CACHE_OVERHEAD_SMALL: f64 = 1.35;
+    pub const CACHE_OVERHEAD_LARGE: f64 = 1.18;
+    /// Boundary between the two (KB).
+    pub const CACHE_LARGE_KB: f64 = 256.0;
+    /// Leakage per KB (W), high-Vt (Saed32hvt-class) cells.
+    pub const LEAK_W_PER_KB: f64 = 0.18e-3;
+    /// Access energy: `E = E0 · √KB` (J/access).
+    pub const ACCESS_J_SQRT_KB: f64 = 3.5e-12;
+}
+
+/// Kind of memory macro (affects overhead factor).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MacroKind {
+    /// Software-managed scratchpad or plain SRAM.
+    Scratchpad,
+    /// Hardware-managed cache (tag/control overhead).
+    Cache,
+}
+
+/// One SRAM macro.
+#[derive(Debug, Clone, Copy)]
+pub struct SramMacro {
+    pub bytes: usize,
+    pub ports: usize,
+    pub kind: MacroKind,
+}
+
+impl SramMacro {
+    pub fn new(bytes: usize, ports: usize, kind: MacroKind) -> Self {
+        assert!(bytes > 0 && ports > 0);
+        SramMacro { bytes, ports, kind }
+    }
+
+    fn kb(&self) -> f64 {
+        self.bytes as f64 / 1024.0
+    }
+
+    fn overhead(&self) -> f64 {
+        match self.kind {
+            MacroKind::Scratchpad => 1.0,
+            MacroKind::Cache if self.kb() >= k32::CACHE_LARGE_KB => k32::CACHE_OVERHEAD_LARGE,
+            MacroKind::Cache => k32::CACHE_OVERHEAD_SMALL,
+        }
+    }
+
+    /// Area in mm² (multi-port cells grow ~30% per extra port).
+    pub fn area_mm2(&self) -> f64 {
+        let port_factor = 1.0 + 0.3 * (self.ports - 1) as f64;
+        (k32::AREA_MM2_PER_KB * self.kb() * port_factor + k32::AREA_MACRO_MM2) * self.overhead()
+    }
+
+    /// Leakage power in W.
+    pub fn leakage_w(&self) -> f64 {
+        k32::LEAK_W_PER_KB * self.kb() * self.overhead()
+    }
+
+    /// Energy per access in J.
+    pub fn access_energy_j(&self) -> f64 {
+        k32::ACCESS_J_SQRT_KB * self.kb().sqrt() * self.overhead()
+    }
+
+    /// Peak dynamic power at `freq` Hz — the §5.3 methodology: "we assume
+    /// as peak power the scenario where all the ports are accessed once
+    /// per cycle".
+    pub fn peak_dynamic_w(&self, freq: f64) -> f64 {
+        self.access_energy_j() * self.ports as f64 * freq
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn monotone_in_size() {
+        let small = SramMacro::new(4 << 10, 1, MacroKind::Scratchpad);
+        let big = SramMacro::new(1 << 20, 1, MacroKind::Scratchpad);
+        assert!(big.area_mm2() > small.area_mm2());
+        assert!(big.leakage_w() > small.leakage_w());
+        assert!(big.access_energy_j() > small.access_energy_j());
+        // Access energy grows sublinearly (√).
+        let ratio = big.access_energy_j() / small.access_energy_j();
+        assert!(ratio < 20.0, "access energy ratio {ratio} not sublinear");
+    }
+
+    #[test]
+    fn cache_overhead_applies() {
+        let s = SramMacro::new(24 << 10, 1, MacroKind::Scratchpad);
+        let c = SramMacro::new(24 << 10, 1, MacroKind::Cache);
+        assert!(c.area_mm2() > s.area_mm2());
+        assert!((c.leakage_w() / s.leakage_w() - k32::CACHE_OVERHEAD_SMALL).abs() < 1e-9);
+        // Large caches amortize tag overhead.
+        let big = SramMacro::new(1 << 20, 1, MacroKind::Cache);
+        let big_s = SramMacro::new(1 << 20, 1, MacroKind::Scratchpad);
+        assert!((big.leakage_w() / big_s.leakage_w() - k32::CACHE_OVERHEAD_LARGE).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paper_scale_magnitudes() {
+        // 1 MB model memory at 32 nm: ~2.5 mm², fraction-of-mW-per-KB
+        // leakage, tens of pJ per access — CACTI-like magnitudes.
+        let m = SramMacro::new(1 << 20, 1, MacroKind::Scratchpad);
+        assert!((1.8..3.2).contains(&m.area_mm2()), "{}", m.area_mm2());
+        let leak_uw_per_kb = m.leakage_w() / 1024.0 * 1e6;
+        assert!((100.0..300.0).contains(&leak_uw_per_kb), "leak {leak_uw_per_kb} µW/KB");
+        let pj = m.access_energy_j() * 1e12;
+        assert!((50.0..200.0).contains(&pj), "access energy {pj} pJ");
+    }
+
+    #[test]
+    fn multi_port_costs_area_and_power() {
+        let p1 = SramMacro::new(64 << 10, 1, MacroKind::Scratchpad);
+        let p2 = SramMacro::new(64 << 10, 2, MacroKind::Scratchpad);
+        assert!(p2.area_mm2() > p1.area_mm2());
+        assert!(p2.peak_dynamic_w(5e8) > 1.9 * p1.peak_dynamic_w(5e8));
+    }
+}

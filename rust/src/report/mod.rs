@@ -1,0 +1,303 @@
+//! Regenerates every table and figure of the paper's evaluation (§5) as
+//! aligned text tables + ASCII charts (and CSV via `--csv`). See
+//! DESIGN.md's per-experiment index: T1, T2, F9, F10a/b, F11, H1, H2.
+
+use crate::accel::{
+    simulate_step, HypWorkload, KernelClass, SimMode, StepReport,
+};
+use crate::accel::controller::inter_step_state_bytes;
+use crate::config::{AccelConfig, Layer, ModelConfig};
+use crate::power::ChipBudget;
+use crate::util::table::{bar_chart, Table};
+
+/// Table 1 — the command set (regenerated from the `Command` enum so the
+/// doc never drifts from the implementation).
+pub fn table1() -> Table {
+    let mut t = Table::new(
+        "Table 1 — Commands provided by the command decoder",
+        &["Command", "Parameters", "Description"],
+    );
+    t.row(&[
+        "ConfigureASR_AcousticScoring".into(),
+        "n, setup_addr, kernel_addr".into(),
+        "Configure kernel n of the acoustic scoring phase (call with incremental n)".into(),
+    ]);
+    t.row(&[
+        "ConfigureASR_HypExpansion".into(),
+        "kernel_addr".into(),
+        "Configure the hypothesis expansion kernel".into(),
+    ]);
+    t.row(&[
+        "ConfigureBeamWidth".into(),
+        "beam".into(),
+        "Set the hypothesis unit's pruning beam".into(),
+    ]);
+    t.row(&[
+        "CleanDecoding".into(),
+        "".into(),
+        "Reset hypothesis memory / internal state for a new utterance".into(),
+    ]);
+    t.row(&[
+        "DecodingStep".into(),
+        "signal_addr".into(),
+        "Decode a signal chunk, extending the current hypotheses".into(),
+    ]);
+    t
+}
+
+/// Table 2 — accelerator configuration.
+pub fn table2(accel: &AccelConfig) -> Table {
+    let kb = |b: usize| format!("{} KB", b / 1024);
+    let mut t = Table::new(
+        "Table 2 — Configuration parameters of the accelerator",
+        &["Parameter", "Value"],
+    );
+    t.row(&["Frequency".into(), format!("{} MHz", accel.frequency_hz / 1_000_000)]);
+    t.row(&["Hypothesis Memory".into(), kb(accel.hyp_mem_bytes)]);
+    t.row(&["I-Cache".into(), kb(accel.shared_icache_bytes)]);
+    t.row(&["Shared Memory".into(), kb(accel.shared_mem_bytes)]);
+    t.row(&["Model Memory / D-Cache".into(), kb(accel.model_mem_bytes)]);
+    t.row(&["Num. PEs".into(), accel.num_pes.to_string()]);
+    t.row(&["PE i-Cache".into(), kb(accel.pe_icache_bytes)]);
+    t.row(&["PE d-Cache".into(), kb(accel.pe_dcache_bytes)]);
+    t.row(&["MAC vector size".into(), accel.mac_vector_width.to_string()]);
+    t
+}
+
+/// Fig. 9 — per-layer model-data size (KB), conv layers and FC layers.
+pub fn fig9(model: &ModelConfig) -> (Table, String) {
+    let mut t = Table::new(
+        "Fig. 9 — Size (KB) of each layer of the TDS DNN",
+        &["Layer", "Kind", "Size (KB)"],
+    );
+    let mut conv_items = Vec::new();
+    let mut fc_items = Vec::new();
+    for layer in model.layers() {
+        let kb = layer.model_bytes(model.quantized) as f64 / 1024.0;
+        match &layer {
+            Layer::Conv { .. } => {
+                t.row(&[layer.name().into(), "conv".into(), format!("{kb:.2}")]);
+                conv_items.push((layer.name().to_string(), kb));
+            }
+            Layer::Fc { .. } => {
+                t.row(&[layer.name().into(), "fc".into(), format!("{kb:.1}")]);
+                fc_items.push((layer.name().to_string(), kb));
+            }
+            Layer::LayerNorm { .. } => {}
+        }
+    }
+    let charts = format!(
+        "{}\n{}",
+        bar_chart("Fig. 9 (left) — convolutional layers", &conv_items, "KB", 40),
+        bar_chart("Fig. 9 (right) — fully-connected layers", &fc_items, "KB", 40)
+    );
+    (t, charts)
+}
+
+/// Fig. 10 — area and peak power by component + dynamic/static split.
+pub fn fig10(accel: &AccelConfig) -> (Table, String) {
+    let b = ChipBudget::for_config(accel);
+    let mut t = Table::new(
+        "Fig. 10 — Area and peak power by component (32 nm)",
+        &["Component", "Area (mm2)", "Area %", "Leakage (mW)", "Peak dyn (mW)", "Peak (mW)"],
+    );
+    let total_area = b.total_area_mm2();
+    for c in &b.components {
+        t.row(&[
+            c.name.clone(),
+            format!("{:.3}", c.area_mm2),
+            format!("{:.1}%", 100.0 * c.area_mm2 / total_area),
+            format!("{:.1}", c.leakage_w * 1e3),
+            format!("{:.1}", c.peak_dynamic_w * 1e3),
+            format!("{:.1}", c.peak_w() * 1e3),
+        ]);
+    }
+    t.row(&[
+        "TOTAL".into(),
+        format!("{:.2}", total_area),
+        "100%".into(),
+        format!("{:.1}", b.total_leakage_w() * 1e3),
+        format!("{:.1}", b.total_peak_dynamic_w() * 1e3),
+        format!("{:.1}", b.total_peak_w() * 1e3),
+    ]);
+    t.footnote = Some(format!(
+        "paper: 11.68 mm2 total, execution unit 65% (here {:.0}%), \
+         shared+model memories 32% (here {:.0}%), hypothesis unit <1% ; \
+         peak ~1.8 W with ~0.8 W static (here {:.2} W / {:.2} W)",
+        100.0 * b.execution_unit_share(),
+        100.0 * b.memories_share(),
+        b.total_peak_w(),
+        b.total_leakage_w(),
+    ));
+    let split = bar_chart(
+        "Fig. 10b — static vs dynamic peak power",
+        &[
+            ("static (leakage)".into(), b.total_leakage_w()),
+            ("dynamic (peak)".into(), b.total_peak_dynamic_w()),
+        ],
+        "W",
+        40,
+    );
+    (t, split)
+}
+
+/// Fig. 11 — execution time of every kernel in a decoding step.
+pub fn fig11(model: &ModelConfig, accel: &AccelConfig, mode: SimMode) -> (Table, String, StepReport) {
+    let hyp = HypWorkload::default();
+    let report = simulate_step(model, accel, &hyp, mode);
+    let mut t = Table::new(
+        "Fig. 11 — Execution time per kernel (one decoding step)",
+        &["Kernel", "Class", "Threads", "Instructions", "Cycles", "Time (us)"],
+    );
+    let us = |c: u64| c as f64 * accel.cycle_s() * 1e6;
+    for k in &report.kernels {
+        t.row(&[
+            k.name.clone(),
+            format!("{:?}", k.class),
+            k.threads.to_string(),
+            k.instrs.to_string(),
+            k.cycles().to_string(),
+            format!("{:.1}", us(k.cycles())),
+        ]);
+    }
+    // The paper plots conv + hyp-expansion on the left axis, FC + feature
+    // extraction on the right.
+    let mut left = Vec::new();
+    let mut right = Vec::new();
+    for k in &report.kernels {
+        let ms = us(k.cycles()) / 1e3;
+        match k.class {
+            KernelClass::Conv | KernelClass::HypExpansion => {
+                left.push((k.name.clone(), ms));
+            }
+            KernelClass::Fc | KernelClass::FeatureExtraction => {
+                right.push((k.name.clone(), ms));
+            }
+            KernelClass::LayerNorm => {}
+        }
+    }
+    let charts = format!(
+        "{}\n{}",
+        bar_chart("Fig. 11 (left) — conv + hypothesis expansion", &left, "ms", 40),
+        bar_chart("Fig. 11 (right) — FC + feature extraction", &right, "ms", 40)
+    );
+    (t, charts, report)
+}
+
+/// §5.4 headline: decoding-step time, real-time factor, phase split.
+pub fn headline(model: &ModelConfig, accel: &AccelConfig) -> Table {
+    let hyp = HypWorkload::default();
+    let ideal = simulate_step(model, accel, &hyp, SimMode::Ideal);
+    let detailed = simulate_step(model, accel, &hyp, SimMode::Detailed);
+    let budget = ChipBudget::for_config(accel);
+    let mut t = Table::new(
+        "Headline (§5.3–§5.4) — paper vs simulated",
+        &["Metric", "Paper", "This repo"],
+    );
+    let ms = ideal.seconds(accel) * 1e3;
+    t.row(&["Decoding step (80 ms audio)".into(), "~40 ms".into(), format!("{ms:.1} ms")]);
+    t.row(&[
+        "Real-time factor".into(),
+        "2x".into(),
+        format!("{:.2}x", ideal.rtf(model, accel)),
+    ]);
+    t.row(&[
+        "Step w/ DMA+setup modeled".into(),
+        "(hidden by Fig. 7 pipelining)".into(),
+        format!("{:.1} ms (+{:.1}%)", detailed.seconds(accel) * 1e3,
+            100.0 * (detailed.total_cycles as f64 / ideal.total_cycles as f64 - 1.0)),
+    ]);
+    t.row(&[
+        "Inter-step state in shared mem".into(),
+        "~275 KB".into(),
+        format!("{:.0} KB", inter_step_state_bytes(model) as f64 / 1024.0),
+    ]);
+    t.row(&[
+        "Total area (32 nm)".into(),
+        "11.68 mm2".into(),
+        format!("{:.2} mm2", budget.total_area_mm2()),
+    ]);
+    t.row(&[
+        "Peak power".into(),
+        ">1.8 W".into(),
+        format!("{:.2} W", budget.total_peak_w()),
+    ]);
+    t.row(&[
+        "Static power".into(),
+        "~0.8 W".into(),
+        format!("{:.2} W", budget.total_leakage_w()),
+    ]);
+    t
+}
+
+/// Everything, concatenated (the `report all` subcommand).
+pub fn all_reports() -> String {
+    let accel = AccelConfig::paper();
+    let model = ModelConfig::paper_tds();
+    let mut out = String::new();
+    out.push_str(&table1().render());
+    out.push('\n');
+    out.push_str(&table2(&accel).render());
+    out.push('\n');
+    let (t9, c9) = fig9(&model);
+    out.push_str(&t9.render());
+    out.push_str(&c9);
+    out.push('\n');
+    let (t10, c10) = fig10(&accel);
+    out.push_str(&t10.render());
+    out.push_str(&c10);
+    out.push('\n');
+    let (t11, c11, _) = fig11(&model, &accel, SimMode::Ideal);
+    out.push_str(&t11.render());
+    out.push_str(&c11);
+    out.push('\n');
+    out.push_str(&headline(&model, &accel).render());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_covers_all_five_commands() {
+        let t = table1();
+        assert_eq!(t.rows.len(), 5);
+    }
+
+    #[test]
+    fn table2_matches_paper_values() {
+        let t = table2(&AccelConfig::paper());
+        let r = t.render();
+        for needle in ["500 MHz", "24 KB", "64 KB", "512 KB", "1024 KB", "8", "4 KB"] {
+            assert!(r.contains(needle), "missing {needle} in:\n{r}");
+        }
+    }
+
+    #[test]
+    fn fig9_has_18_conv_and_29_fc_rows() {
+        let (t, charts) = fig9(&ModelConfig::paper_tds());
+        assert_eq!(t.rows.len(), 18 + 29);
+        assert!(charts.contains("convolutional"));
+    }
+
+    #[test]
+    fn fig11_totals_match_headline() {
+        let accel = AccelConfig::paper();
+        let model = ModelConfig::paper_tds();
+        let (_, _, report) = fig11(&model, &accel, SimMode::Ideal);
+        let ms = report.seconds(&accel) * 1e3;
+        assert!((27.0..55.0).contains(&ms), "{ms}");
+    }
+
+    #[test]
+    fn all_reports_renders() {
+        let r = all_reports();
+        assert!(r.contains("Table 1"));
+        assert!(r.contains("Fig. 9"));
+        assert!(r.contains("Fig. 10"));
+        assert!(r.contains("Fig. 11"));
+        assert!(r.contains("Headline"));
+        assert!(r.len() > 4000);
+    }
+}

@@ -1,0 +1,248 @@
+//! `artifacts/meta.json` — the contract between the python build path
+//! and the Rust runtime: model geometry, parameter order/shapes,
+//! streaming-state shapes and training metrics.
+
+use crate::config::{Group, ModelConfig};
+use crate::util::json::Json;
+use anyhow::{ensure, Context, Result};
+use std::path::Path;
+
+/// Parsed artifact metadata.
+#[derive(Debug, Clone)]
+pub struct Meta {
+    pub model: ModelConfig,
+    /// Parameter (name, shape) in the exact order the exported step
+    /// function expects them.
+    pub params: Vec<(String, Vec<usize>)>,
+    /// Conv-history state shapes, in conv-layer order.
+    pub states: Vec<Vec<usize>>,
+    pub model_hlo: String,
+    pub mfcc_hlo: String,
+    pub weights_file: String,
+    pub frame_acc: f64,
+    pub token_seq_acc: f64,
+}
+
+impl Meta {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text).context("parsing meta.json")?;
+        let m = j.get("model").context("meta.json missing 'model'")?;
+        let req_num = |path: &str| -> Result<usize> {
+            m.get(path)
+                .and_then(Json::as_usize)
+                .with_context(|| format!("meta.json model.{path} missing"))
+        };
+        let groups = m
+            .get("groups")
+            .and_then(Json::as_arr)
+            .context("meta.json missing model.groups")?
+            .iter()
+            .map(|g| {
+                Ok(Group {
+                    channels: g.get("channels").and_then(Json::as_usize).context("channels")?,
+                    blocks: g.get("blocks").and_then(Json::as_usize).context("blocks")?,
+                    kw: g.get("kw").and_then(Json::as_usize).context("kw")?,
+                    entry_stride: g
+                        .get("entry_stride")
+                        .and_then(Json::as_usize)
+                        .context("entry_stride")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let model = ModelConfig {
+            name: m
+                .get("name")
+                .and_then(Json::as_str)
+                .unwrap_or("artifact-model")
+                .to_string(),
+            sample_rate: req_num("sample_rate")?,
+            win_len: req_num("win_len")?,
+            hop_len: req_num("hop_len")?,
+            n_mels: req_num("n_mels")?,
+            step_len: req_num("step_len")?,
+            groups,
+            final_conv_kw: m.get("final_conv_kw").and_then(Json::as_usize),
+            tokens: req_num("tokens")?,
+            quantized: false,
+        };
+        let params = j
+            .get("params")
+            .and_then(Json::as_arr)
+            .context("meta.json missing 'params'")?
+            .iter()
+            .map(|p| {
+                let name = p
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .context("param name")?
+                    .to_string();
+                let shape = p
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .context("param shape")?
+                    .iter()
+                    .map(|d| d.as_usize().context("param dim"))
+                    .collect::<Result<Vec<_>>>()?;
+                Ok((name, shape))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let states = j
+            .get("states")
+            .and_then(Json::as_arr)
+            .context("meta.json missing 'states'")?
+            .iter()
+            .map(|s| {
+                s.as_arr()
+                    .context("state shape")?
+                    .iter()
+                    .map(|d| d.as_usize().context("state dim"))
+                    .collect::<Result<Vec<_>>>()
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let arts = j.get("artifacts").context("meta.json missing 'artifacts'")?;
+        let art = |k: &str| -> Result<String> {
+            Ok(arts
+                .get(k)
+                .and_then(Json::as_str)
+                .with_context(|| format!("artifacts.{k}"))?
+                .to_string())
+        };
+        let meta = Meta {
+            model,
+            params,
+            states,
+            model_hlo: art("model_hlo")?,
+            mfcc_hlo: art("mfcc_hlo")?,
+            weights_file: art("weights")?,
+            frame_acc: j
+                .get("training.frame_acc")
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0),
+            token_seq_acc: j
+                .get("training.token_seq_acc")
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0),
+        };
+        meta.validate()?;
+        Ok(meta)
+    }
+
+    fn validate(&self) -> Result<()> {
+        // The state count must equal the number of conv layers, and the
+        // parameter list must cover every layer (2 tensors each).
+        let layers = self.model.layers();
+        let n_conv = layers
+            .iter()
+            .filter(|l| matches!(l, crate::config::Layer::Conv { .. }))
+            .count();
+        ensure!(
+            self.states.len() == n_conv,
+            "meta.json: {} states but model has {} conv layers",
+            self.states.len(),
+            n_conv
+        );
+        ensure!(
+            self.params.len() == 2 * layers.len(),
+            "meta.json: {} params but model has {} layers",
+            self.params.len(),
+            layers.len()
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A meta.json for the tiny model, matching python's export format.
+    pub fn tiny_meta_json() -> String {
+        let cfg = ModelConfig::tiny_tds();
+        let mut params = String::new();
+        for layer in cfg.layers() {
+            let name = layer.name();
+            use crate::config::Layer;
+            let (a, ashape, b, bshape) = match &layer {
+                Layer::Conv { in_ch, out_ch, kw, .. } => (
+                    format!("{name}.w"),
+                    vec![*out_ch, *in_ch, *kw],
+                    format!("{name}.b"),
+                    vec![*out_ch],
+                ),
+                Layer::Fc { in_dim, out_dim, .. } => (
+                    format!("{name}.w"),
+                    vec![*out_dim, *in_dim],
+                    format!("{name}.b"),
+                    vec![*out_dim],
+                ),
+                Layer::LayerNorm { dim, .. } => {
+                    (format!("{name}.g"), vec![*dim], format!("{name}.b"), vec![*dim])
+                }
+            };
+            let fmt = |s: &[usize]| {
+                s.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(",")
+            };
+            params.push_str(&format!(
+                r#"{{"name":"{a}","shape":[{}]}},{{"name":"{b}","shape":[{}]}},"#,
+                fmt(&ashape),
+                fmt(&bshape)
+            ));
+        }
+        params.pop();
+        // State shapes in conv order.
+        let mut states = String::new();
+        let mut in_dim = cfg.n_mels;
+        for layer in cfg.layers() {
+            use crate::config::Layer;
+            match &layer {
+                Layer::Conv { out_ch, kw, w, .. } => {
+                    states.push_str(&format!("[{},{}],", kw - 1, in_dim));
+                    in_dim = out_ch * w;
+                }
+                Layer::Fc { out_dim, .. } => in_dim = *out_dim,
+                _ => {}
+            }
+        }
+        states.pop();
+        format!(
+            r#"{{"model":{{"name":"tiny-tds","sample_rate":16000,"win_len":400,"hop_len":160,
+"n_mels":40,"step_len":1280,
+"groups":[{{"channels":2,"blocks":1,"kw":5,"entry_stride":2}},
+          {{"channels":3,"blocks":2,"kw":5,"entry_stride":1}}],
+"final_conv_kw":null,"tokens":27}},
+"params":[{params}],
+"states":[{states}],
+"artifacts":{{"model_hlo":"model_step.hlo.txt","mfcc_hlo":"mfcc.hlo.txt","weights":"weights.bin"}},
+"training":{{"frame_acc":0.99,"token_seq_acc":0.97}}}}"#
+        )
+    }
+
+    #[test]
+    fn parses_tiny_meta() {
+        let meta = Meta::parse(&tiny_meta_json()).unwrap();
+        assert_eq!(meta.model, ModelConfig::tiny_tds());
+        assert_eq!(meta.states.len(), 5, "5 conv layers");
+        assert_eq!(meta.params.len(), 2 * meta.model.layers().len());
+        assert!((meta.frame_acc - 0.99).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rejects_inconsistent_states() {
+        let text = tiny_meta_json().replace(r#""states":[[4,40],"#, r#""states":["#);
+        assert!(Meta::parse(&text).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_sections() {
+        assert!(Meta::parse("{}").is_err());
+        let text = tiny_meta_json().replace("\"params\"", "\"paramsX\"");
+        assert!(Meta::parse(&text).is_err());
+    }
+}

@@ -1,0 +1,143 @@
+//! The artifact-backed acoustic model: MFCC + streaming TDS step, both
+//! executed as AOT-compiled XLA computations through PJRT — the
+//! functional analogue of ASRPU's acoustic-scoring phase where the
+//! "kernels" were compiled ahead of time from JAX/Pallas instead of
+//! hand-written RISC-V programs.
+//!
+//! Hot-path design (§Perf, EXPERIMENTS.md): weights are uploaded to
+//! device buffers **once** at load; streaming conv states stay as device
+//! buffers across steps whenever the PJRT execute path returns untupled
+//! outputs (it does on the CPU plugin); only the per-step features go up
+//! and the per-step log-probs come down. This removed the per-step
+//! literal round-trip of every weight tensor (~7× step-time reduction).
+
+use anyhow::{ensure, Context, Result};
+use std::path::Path;
+
+use crate::util::tensor_io::TensorFile;
+
+use super::meta::Meta;
+use super::{literal_f32, literal_to_f32, Executable, Runtime};
+
+/// Streaming state: one device buffer per conv layer.
+pub struct XlaState {
+    states: Vec<xla::PjRtBuffer>,
+}
+
+/// The compiled model + device-resident weights.
+pub struct XlaAm {
+    pub meta: Meta,
+    client: xla::PjRtClient,
+    mfcc_exe: Executable,
+    step_exe: Executable,
+    /// Weight buffers in export parameter order (uploaded once).
+    weights: Vec<xla::PjRtBuffer>,
+}
+
+impl XlaAm {
+    /// Load everything from an artifacts directory.
+    pub fn load(runtime: &Runtime, dir: &Path) -> Result<Self> {
+        let meta = Meta::load(dir)?;
+        let mfcc_exe = runtime.load_hlo(&dir.join(&meta.mfcc_hlo))?;
+        let step_exe = runtime.load_hlo(&dir.join(&meta.model_hlo))?;
+        let client = runtime.client_handle().clone();
+        let tf = TensorFile::load(&dir.join(&meta.weights_file))?;
+        let mut weights = Vec::with_capacity(meta.params.len());
+        for (name, shape) in &meta.params {
+            let t = tf.require(name)?;
+            ensure!(
+                &t.dims == shape,
+                "weights.bin '{name}' dims {:?} != meta {shape:?}",
+                t.dims
+            );
+            weights.push(
+                client
+                    .buffer_from_host_buffer::<f32>(t.as_f32()?, shape, None)
+                    .with_context(|| format!("uploading weight '{name}'"))?,
+            );
+        }
+        Ok(XlaAm { meta, client, mfcc_exe, step_exe, weights })
+    }
+
+    /// Fresh streaming state (zero conv histories) as device buffers.
+    pub fn state(&self) -> Result<XlaState> {
+        let states = self
+            .meta
+            .states
+            .iter()
+            .map(|s| {
+                let n: usize = s.iter().product();
+                self.client
+                    .buffer_from_host_buffer::<f32>(&vec![0.0; n], s, None)
+                    .context("allocating state buffer")
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(XlaState { states })
+    }
+
+    /// Feature extraction for one decoding step:
+    /// `samples_per_step` samples → `frames_per_step × n_mels`.
+    pub fn mfcc(&self, samples: &[f32]) -> Result<Vec<f32>> {
+        let m = &self.meta.model;
+        ensure!(
+            samples.len() == m.samples_per_step(),
+            "mfcc expects {} samples, got {}",
+            m.samples_per_step(),
+            samples.len()
+        );
+        let input = literal_f32(samples, &[samples.len() as i64])?;
+        let out = self.mfcc_exe.run(&[input])?;
+        literal_to_f32(&out[0])
+    }
+
+    /// One acoustic-scoring step: features in, log-probs out, conv state
+    /// advanced in place (device-resident).
+    pub fn step(&self, state: &mut XlaState, feats: &[f32]) -> Result<Vec<f32>> {
+        let m = &self.meta.model;
+        ensure!(
+            feats.len() == m.frames_per_step() * m.n_mels,
+            "step expects {}x{} features",
+            m.frames_per_step(),
+            m.n_mels
+        );
+        let feats_buf = self
+            .client
+            .buffer_from_host_buffer::<f32>(feats, &[m.frames_per_step(), m.n_mels], None)?;
+        let mut args: Vec<&xla::PjRtBuffer> =
+            Vec::with_capacity(1 + state.states.len() + self.weights.len());
+        args.push(&feats_buf);
+        args.extend(state.states.iter());
+        args.extend(self.weights.iter());
+        let mut result = self
+            .step_exe
+            .run_buffers(&args)
+            .context("model step (execute_b)")?;
+        let n_states = state.states.len();
+        if result.len() == 1 + n_states {
+            // Untupled outputs: keep the new states on device.
+            let logits_lit = result[0].to_literal_sync()?;
+            let logits = literal_to_f32(&logits_lit)?;
+            ensure!(logits.len() == m.vectors_per_step() * m.tokens);
+            state.states = result.split_off(1);
+            Ok(logits)
+        } else {
+            // Tupled single output: decompose on host, re-upload states.
+            ensure!(result.len() == 1, "unexpected output arity {}", result.len());
+            let tuple = result[0].to_literal_sync()?.to_tuple()?;
+            ensure!(tuple.len() == 1 + n_states);
+            let logits = literal_to_f32(&tuple[0])?;
+            ensure!(logits.len() == m.vectors_per_step() * m.tokens);
+            let mut new_states = Vec::with_capacity(n_states);
+            for (lit, shape) in tuple[1..].iter().zip(&self.meta.states) {
+                let data = literal_to_f32(lit)?;
+                new_states.push(self.client.buffer_from_host_buffer::<f32>(
+                    &data,
+                    shape,
+                    None,
+                )?);
+            }
+            state.states = new_states;
+            Ok(logits)
+        }
+    }
+}

@@ -1,0 +1,194 @@
+//! Waveform synthesis for the tone-phoneme protocol: render a word
+//! sequence to 16 kHz samples with per-phoneme dual tones, inter-word
+//! silences, amplitude jitter and additive noise.
+
+use super::spec;
+use crate::util::rng::Rng;
+
+/// An utterance: samples plus its ground truth.
+#[derive(Debug, Clone)]
+pub struct Utterance {
+    pub samples: Vec<f32>,
+    pub words: Vec<u32>,
+    pub text: String,
+    /// Frame-aligned phoneme labels at `hop`-sample granularity
+    /// (token id active at each frame center; blank = 0). Used by the
+    /// python trainer (mirrored there) and alignment tests.
+    pub frame_labels: Vec<u32>,
+}
+
+/// Synthesizer with fixed sample rate and label hop.
+#[derive(Debug, Clone)]
+pub struct Synthesizer {
+    pub sample_rate: usize,
+    pub hop: usize,
+    pub noise_std: f64,
+}
+
+impl Default for Synthesizer {
+    fn default() -> Self {
+        Synthesizer { sample_rate: 16_000, hop: 160, noise_std: spec::NOISE_STD }
+    }
+}
+
+impl Synthesizer {
+    fn ms(&self, ms: u32) -> usize {
+        self.sample_rate * ms as usize / 1000
+    }
+
+    /// Render a word sequence. `rng` drives durations, phase, amplitude
+    /// jitter and noise.
+    pub fn render(&self, words: &[u32], rng: &mut Rng) -> Utterance {
+        let voc = spec::vocab();
+        // Build the phoneme timeline: (token, n_samples); 0 = silence.
+        let mut timeline: Vec<(u32, usize)> = Vec::new();
+        timeline.push((0, self.ms(spec::EDGE_SIL_MS)));
+        for (i, &w) in words.iter().enumerate() {
+            if i > 0 {
+                let sil = rng.range_i64(spec::SIL_MS.0 as i64, spec::SIL_MS.1 as i64) as u32;
+                timeline.push((0, self.ms(sil)));
+            }
+            for &ph in &voc[w as usize].1 {
+                // Geminate gap: identical adjacent phonemes need a blank
+                // in the CTC path; give the decoder real silence.
+                if timeline.last().map(|&(t, _)| t) == Some(ph) {
+                    timeline.push((0, self.ms(spec::GEMINATE_GAP_MS)));
+                }
+                let dur = rng.range_i64(spec::DUR_MS.0 as i64, spec::DUR_MS.1 as i64) as u32;
+                timeline.push((ph, self.ms(dur)));
+            }
+        }
+        timeline.push((0, self.ms(spec::EDGE_SIL_MS)));
+
+        let total: usize = timeline.iter().map(|&(_, n)| n).sum();
+        let mut samples = Vec::with_capacity(total);
+        let two_pi = 2.0 * std::f64::consts::PI;
+        for &(tok, n) in &timeline {
+            if tok == 0 {
+                samples.resize(samples.len() + n, 0.0);
+                continue;
+            }
+            let (f1, f2) = spec::tone(tok);
+            let amp_jitter = 0.85 + 0.3 * rng.f64();
+            let phase1 = rng.f64() * two_pi;
+            let phase2 = rng.f64() * two_pi;
+            let start = samples.len();
+            for t in 0..n {
+                let time = (start + t) as f64 / self.sample_rate as f64;
+                // 5 ms attack/decay ramp to avoid clicks.
+                let ramp_len = self.ms(5).max(1);
+                let ramp = (t.min(n - 1 - t) as f64 / ramp_len as f64).min(1.0);
+                let v = amp_jitter
+                    * ramp
+                    * (spec::AMP1 * (two_pi * f1 * time + phase1).sin()
+                        + spec::AMP2 * (two_pi * f2 * time + phase2).sin());
+                samples.push(v as f32);
+            }
+        }
+        // Additive noise.
+        if self.noise_std > 0.0 {
+            for s in samples.iter_mut() {
+                *s += (rng.normal() as f64 * self.noise_std) as f32;
+            }
+        }
+        // Frame labels at hop granularity (frame center sample).
+        let n_frames = samples.len() / self.hop;
+        let mut frame_labels = Vec::with_capacity(n_frames);
+        let mut bounds = Vec::with_capacity(timeline.len());
+        let mut acc = 0usize;
+        for &(tok, n) in &timeline {
+            bounds.push((acc, acc + n, tok));
+            acc += n;
+        }
+        let mut seg = 0usize;
+        for f in 0..n_frames {
+            let center = f * self.hop + self.hop / 2;
+            while seg + 1 < bounds.len() && center >= bounds[seg].1 {
+                seg += 1;
+            }
+            frame_labels.push(bounds[seg].2);
+        }
+        let text = words
+            .iter()
+            .map(|&w| voc[w as usize].0.clone())
+            .collect::<Vec<_>>()
+            .join(" ");
+        Utterance { samples, words: words.to_vec(), text, frame_labels }
+    }
+
+    /// Render a random sentence from the word chain.
+    pub fn render_random(&self, rng: &mut Rng) -> Utterance {
+        let words = spec::sample_sentence(rng);
+        self.render(&words, rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsp::Mfcc;
+
+    #[test]
+    fn renders_expected_duration() {
+        let s = Synthesizer::default();
+        let mut rng = Rng::new(1);
+        let u = s.render(&[0, 1], &mut rng);
+        // 2 words × 3 phonemes × 80–140 ms + 1 gap 60–120 ms + 200 ms edges.
+        let lo = 16 * (6 * 80 + 60 + 200);
+        let hi = 16 * (6 * 140 + 120 + 200);
+        assert!((lo..=hi).contains(&u.samples.len()), "{}", u.samples.len());
+        assert!(u.samples.iter().all(|v| v.abs() < 1.2));
+    }
+
+    #[test]
+    fn labels_cover_all_phonemes() {
+        let s = Synthesizer::default();
+        let mut rng = Rng::new(2);
+        let u = s.render(&[5], &mut rng);
+        let voc = spec::vocab();
+        let mut seen: Vec<u32> = u.frame_labels.iter().cloned().filter(|&t| t != 0).collect();
+        seen.dedup();
+        assert_eq!(seen, voc[5].1, "labels should walk the pronunciation");
+        // Starts and ends with silence.
+        assert_eq!(u.frame_labels[0], 0);
+        assert_eq!(*u.frame_labels.last().unwrap(), 0);
+    }
+
+    #[test]
+    fn tone_energy_lands_in_expected_mel_band() {
+        // Phoneme tones must be separable by the front-end: check that
+        // the MFCC c0 (energy) of a phoneme is much higher than silence,
+        // and that two distinct phonemes give distinct features.
+        let s = Synthesizer { noise_std: 0.0, ..Default::default() };
+        let mut rng = Rng::new(3);
+        let u1 = s.render(&[0], &mut rng);
+        let u2 = s.render(&[13], &mut rng);
+        let mfcc = Mfcc::new(16_000, 400, 160, 40);
+        let f1 = mfcc.extract(&u1.samples);
+        let f2 = mfcc.extract(&u2.samples);
+        // Compare mid-utterance frames.
+        let m1 = &f1[(f1.len() / 80) * 40..(f1.len() / 80) * 40 + 40];
+        let m2 = &f2[(f2.len() / 80) * 40..(f2.len() / 80) * 40 + 40];
+        let dist: f32 = m1.iter().zip(m2).map(|(a, b)| (a - b).powi(2)).sum();
+        assert!(dist > 1.0, "phonemes not separable: {dist}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let s = Synthesizer::default();
+        let mut r1 = Rng::new(7);
+        let mut r2 = Rng::new(7);
+        let a = s.render(&[1, 2], &mut r1);
+        let b = s.render(&[1, 2], &mut r2);
+        assert_eq!(a.samples, b.samples);
+        assert_eq!(a.frame_labels, b.frame_labels);
+    }
+
+    #[test]
+    fn render_random_roundtrips_text() {
+        let s = Synthesizer::default();
+        let mut rng = Rng::new(11);
+        let u = s.render_random(&mut rng);
+        assert_eq!(u.text.split(' ').count(), u.words.len());
+    }
+}

@@ -1,0 +1,10 @@
+//! Synthetic speech: the tone-phoneme protocol (vocabulary, tones, word
+//! chain), waveform rendering, and WER scoring. Stands in for the
+//! paper's LibriSpeech data — see DESIGN.md §Substitutions.
+
+pub mod audio;
+pub mod spec;
+pub mod wer;
+
+pub use audio::{Synthesizer, Utterance};
+pub use wer::{edit_distance, WerAccum};

@@ -1,0 +1,190 @@
+//! The synthetic-speech protocol: phoneme→tone mapping, vocabulary,
+//! word-sequence distribution.
+//!
+//! This replaces the paper's LibriSpeech-trained wav2letter stack with a
+//! fully deterministic, self-contained equivalent (see DESIGN.md
+//! §Substitutions): each of 26 phonemes (rendered as syllables "ba",
+//! "de", …) is a dual sine tone; words are fixed 3-syllable
+//! concatenations; sentences are sampled from a fixed Markov chain.
+//!
+//! **Mirrored constants**: `python/compile/data.py` hardcodes the same
+//! values — the model is trained on python-synthesized audio and
+//! evaluated on rust-synthesized audio, so any drift shows up directly
+//! as WER in the end-to-end example.
+
+use crate::lexicon::{Lexicon, TokenSet};
+use crate::util::rng::Rng;
+
+/// The 26 syllable names, index = phoneme id - 1 (0 is CTC blank).
+pub const SYLLABLES: [&str; 26] = [
+    "ba", "be", "bi", "bo", "bu", "da", "de", "di", "do", "du", "ka", "ke",
+    "ki", "ko", "ku", "la", "le", "li", "lo", "lu", "ma", "me", "mi", "mo",
+    "mu", "na",
+];
+
+/// Base frequency of phoneme 0's fundamental (Hz).
+pub const F1_BASE: f64 = 300.0;
+/// Geometric step between adjacent phonemes (≈2 mel filters apart).
+pub const F1_RATIO: f64 = 1.1047;
+/// Second partial = F2_MULT × fundamental.
+pub const F2_MULT: f64 = 2.1;
+/// Tone amplitudes.
+pub const AMP1: f64 = 0.35;
+pub const AMP2: f64 = 0.25;
+/// Phoneme duration range (ms).
+pub const DUR_MS: (u32, u32) = (80, 140);
+/// Inter-word silence range (ms).
+pub const SIL_MS: (u32, u32) = (60, 120);
+/// Leading/trailing silence (ms).
+pub const EDGE_SIL_MS: u32 = 100;
+/// Micro-gap inserted between identical adjacent phonemes (geminates) so
+/// the CTC blank can separate them (words 6, 19 and 35 contain repeats).
+pub const GEMINATE_GAP_MS: u32 = 30;
+/// Additive white noise σ.
+pub const NOISE_STD: f64 = 0.01;
+/// Vocabulary size.
+pub const NUM_WORDS: usize = 40;
+
+/// Tone pair for a phoneme id (1-based; blank has no tone).
+pub fn tone(phoneme: u32) -> (f64, f64) {
+    assert!((1..=26).contains(&phoneme), "phoneme {phoneme} out of range");
+    let f1 = F1_BASE * F1_RATIO.powi(phoneme as i32 - 1);
+    (f1, f1 * F2_MULT)
+}
+
+/// The token inventory (blank + 26 syllables).
+pub fn token_set() -> TokenSet {
+    TokenSet::new(SYLLABLES.iter().map(|s| s.to_string()).collect())
+}
+
+/// Deterministic vocabulary: word `k` = syllables `s1 s2 s3` with
+/// `s1 = k mod 26`, `s2 = (9·(k div 26) + 5·(k mod 26) + 7) mod 26`,
+/// `s3 = (13·k + 11) mod 26`. Chosen so all NUM_WORDS pronunciations are
+/// distinct (verified by a test and by `Lexicon::build`'s homophone
+/// check).
+pub fn vocab() -> Vec<(String, Vec<u32>)> {
+    (0..NUM_WORDS)
+        .map(|k| {
+            let s1 = k % 26;
+            let s2 = (9 * (k / 26) + 5 * (k % 26) + 7) % 26;
+            let s3 = (13 * k + 11) % 26;
+            let word = format!("{}{}{}", SYLLABLES[s1], SYLLABLES[s2], SYLLABLES[s3]);
+            // Token ids are 1-based (0 = blank).
+            (word, vec![s1 as u32 + 1, s2 as u32 + 1, s3 as u32 + 1])
+        })
+        .collect()
+}
+
+/// Build the lexicon for the synthetic vocabulary.
+pub fn lexicon() -> Lexicon {
+    Lexicon::build(token_set(), &vocab()).expect("synthetic vocab must build")
+}
+
+/// Markov chain over words: each word prefers three successors with
+/// weights 3:2:1, plus a uniform 10% escape to any word. Sentence length
+/// is 3–7 words. Same chain in `python/compile/data.py`.
+pub fn successors(word: u32) -> [(u32, f64); 3] {
+    let w = word as usize;
+    [
+        (((w * 5 + 1) % NUM_WORDS) as u32, 3.0),
+        (((w * 7 + 2) % NUM_WORDS) as u32, 2.0),
+        (((w * 11 + 3) % NUM_WORDS) as u32, 1.0),
+    ]
+}
+
+/// Sample a sentence (word ids) from the chain.
+pub fn sample_sentence(rng: &mut Rng) -> Vec<u32> {
+    let len = rng.range_i64(3, 7) as usize;
+    let mut words = Vec::with_capacity(len);
+    let mut cur = rng.below(NUM_WORDS as u64) as u32;
+    words.push(cur);
+    for _ in 1..len {
+        // 10% escape to uniform, else weighted successor.
+        cur = if rng.f64() < 0.1 {
+            rng.below(NUM_WORDS as u64) as u32
+        } else {
+            let succ = successors(cur);
+            let weights: Vec<f64> = succ.iter().map(|&(_, w)| w).collect();
+            succ[rng.categorical(&weights)].0
+        };
+        words.push(cur);
+    }
+    words
+}
+
+/// Sample a text corpus for LM estimation (word *names*).
+pub fn sample_corpus(n_sentences: usize, seed: u64) -> Vec<Vec<String>> {
+    let voc = vocab();
+    let mut rng = Rng::new(seed);
+    (0..n_sentences)
+        .map(|_| {
+            sample_sentence(&mut rng)
+                .into_iter()
+                .map(|w| voc[w as usize].0.clone())
+                .collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vocab_has_no_homophones() {
+        let v = vocab();
+        assert_eq!(v.len(), NUM_WORDS);
+        let mut prons: Vec<&Vec<u32>> = v.iter().map(|(_, p)| p).collect();
+        prons.sort();
+        prons.dedup();
+        assert_eq!(prons.len(), NUM_WORDS, "duplicate pronunciations");
+        // Lexicon::build would also reject homophones.
+        lexicon();
+    }
+
+    #[test]
+    fn tones_are_ordered_and_below_nyquist() {
+        let mut prev = 0.0;
+        for p in 1..=26 {
+            let (f1, f2) = tone(p);
+            assert!(f1 > prev);
+            assert!(f2 < 8000.0, "phoneme {p}: f2 = {f2} ≥ Nyquist");
+            assert!(f2 <= 7700.0, "phoneme {p}: f2 = {f2} above mel fmax");
+            prev = f1;
+        }
+    }
+
+    #[test]
+    fn chain_sentences_in_range() {
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let s = sample_sentence(&mut rng);
+            assert!((3..=7).contains(&s.len()));
+            assert!(s.iter().all(|&w| (w as usize) < NUM_WORDS));
+        }
+    }
+
+    #[test]
+    fn chain_is_biased_toward_successors() {
+        let mut rng = Rng::new(2);
+        let mut follow = 0usize;
+        let mut total = 0usize;
+        for _ in 0..500 {
+            let s = sample_sentence(&mut rng);
+            for w in s.windows(2) {
+                total += 1;
+                if successors(w[0]).iter().any(|&(n, _)| n == w[1]) {
+                    follow += 1;
+                }
+            }
+        }
+        let frac = follow as f64 / total as f64;
+        assert!(frac > 0.8, "chain bias too weak: {frac}");
+    }
+
+    #[test]
+    fn corpus_is_deterministic_per_seed() {
+        assert_eq!(sample_corpus(5, 42), sample_corpus(5, 42));
+        assert_ne!(sample_corpus(5, 42), sample_corpus(5, 43));
+    }
+}

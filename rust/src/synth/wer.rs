@@ -1,0 +1,112 @@
+//! Word-error-rate: Levenshtein distance over word sequences, with an
+//! accumulator for corpus-level reporting.
+
+/// Minimum edit distance (substitutions + insertions + deletions).
+pub fn edit_distance<T: PartialEq>(reference: &[T], hypothesis: &[T]) -> usize {
+    let (n, m) = (reference.len(), hypothesis.len());
+    if n == 0 {
+        return m;
+    }
+    if m == 0 {
+        return n;
+    }
+    let mut prev: Vec<usize> = (0..=m).collect();
+    let mut cur = vec![0usize; m + 1];
+    for i in 1..=n {
+        cur[0] = i;
+        for j in 1..=m {
+            let sub = prev[j - 1] + usize::from(reference[i - 1] != hypothesis[j - 1]);
+            cur[j] = sub.min(prev[j] + 1).min(cur[j - 1] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[m]
+}
+
+/// Corpus-level WER accumulator.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct WerAccum {
+    pub edits: usize,
+    pub ref_words: usize,
+    pub utterances: usize,
+    pub exact: usize,
+}
+
+impl WerAccum {
+    pub fn add<T: PartialEq>(&mut self, reference: &[T], hypothesis: &[T]) {
+        let e = edit_distance(reference, hypothesis);
+        self.edits += e;
+        self.ref_words += reference.len();
+        self.utterances += 1;
+        if e == 0 {
+            self.exact += 1;
+        }
+    }
+
+    /// WER as a fraction (edits / reference words).
+    pub fn wer(&self) -> f64 {
+        if self.ref_words == 0 {
+            0.0
+        } else {
+            self.edits as f64 / self.ref_words as f64
+        }
+    }
+
+    /// Sentence accuracy.
+    pub fn sentence_acc(&self) -> f64 {
+        if self.utterances == 0 {
+            0.0
+        } else {
+            self.exact as f64 / self.utterances as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn known_distances() {
+        assert_eq!(edit_distance(&[1, 2, 3], &[1, 2, 3]), 0);
+        assert_eq!(edit_distance(&[1, 2, 3], &[1, 3]), 1); // deletion
+        assert_eq!(edit_distance(&[1, 2], &[1, 2, 3]), 1); // insertion
+        assert_eq!(edit_distance(&[1, 2, 3], &[1, 9, 3]), 1); // substitution
+        assert_eq!(edit_distance::<u32>(&[], &[]), 0);
+        assert_eq!(edit_distance(&[1, 2], &[]), 2);
+    }
+
+    #[test]
+    fn metric_properties() {
+        prop::check("edit-distance-metric", 40, |g| {
+            let (la, lb, lc) = (g.len(0).min(12), g.len(0).min(12), g.len(0).min(12));
+            let a: Vec<u8> = g.vec_of(la, |r| r.below(4) as u8);
+            let b: Vec<u8> = g.vec_of(lb, |r| r.below(4) as u8);
+            let c: Vec<u8> = g.vec_of(lc, |r| r.below(4) as u8);
+            let dab = edit_distance(&a, &b);
+            let dba = edit_distance(&b, &a);
+            crate::prop_assert!(dab == dba, "not symmetric");
+            crate::prop_assert!((dab == 0) == (a == b), "identity violated");
+            let dac = edit_distance(&a, &c);
+            let dbc = edit_distance(&b, &c);
+            crate::prop_assert!(dac <= dab + dbc, "triangle inequality violated");
+            crate::prop_assert!(
+                dab <= a.len().max(b.len()),
+                "distance exceeds max length"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn accumulator() {
+        let mut acc = WerAccum::default();
+        acc.add(&[1, 2, 3], &[1, 2, 3]);
+        acc.add(&[1, 2], &[1, 9]);
+        assert_eq!(acc.utterances, 2);
+        assert_eq!(acc.exact, 1);
+        assert!((acc.wer() - 0.2).abs() < 1e-12);
+        assert!((acc.sentence_acc() - 0.5).abs() < 1e-12);
+    }
+}

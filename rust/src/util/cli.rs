@@ -1,0 +1,157 @@
+//! Minimal command-line parsing (no `clap` in the offline crate set).
+//!
+//! Grammar: `asrpu <subcommand> [--flag] [--key value]... [positional]...`.
+//! Typed accessors return `anyhow` errors with the flag name so `main` can
+//! print actionable messages.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Parsed arguments: a subcommand, `--key value` options, bare `--flag`
+/// switches, and positionals, in the order given.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+/// Option keys that take a value; everything else starting with `--` is a
+/// boolean switch.
+pub fn parse(argv: &[String], value_keys: &[&str]) -> Result<Args> {
+    let mut args = Args::default();
+    let mut it = argv.iter().peekable();
+    while let Some(a) = it.next() {
+        if let Some(key) = a.strip_prefix("--") {
+            if let Some((k, v)) = key.split_once('=') {
+                args.opts.insert(k.to_string(), v.to_string());
+            } else if value_keys.contains(&key) {
+                let v = it
+                    .next()
+                    .ok_or_else(|| anyhow!("--{key} requires a value"))?;
+                args.opts.insert(key.to_string(), v.clone());
+            } else {
+                args.flags.push(key.to_string());
+            }
+        } else if args.subcommand.is_none() && args.positional.is_empty() {
+            args.subcommand = Some(a.clone());
+        } else {
+            args.positional.push(a.clone());
+        }
+    }
+    Ok(args)
+}
+
+impl Args {
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{name} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str> {
+        self.get(name)
+            .ok_or_else(|| anyhow!("missing required option --{name}"))
+    }
+
+    /// Parse `a..b` or `a..b..step` integer ranges used by sweep commands.
+    pub fn range_or(&self, name: &str, default: (usize, usize, usize)) -> Result<Vec<usize>> {
+        let (lo, hi, step) = match self.get(name) {
+            None => default,
+            Some(v) => {
+                let parts: Vec<&str> = v.split("..").collect();
+                match parts.as_slice() {
+                    [a, b] => (parse_usize(name, a)?, parse_usize(name, b)?, 1),
+                    [a, b, s] => (
+                        parse_usize(name, a)?,
+                        parse_usize(name, b)?,
+                        parse_usize(name, s)?,
+                    ),
+                    _ => bail!("--{name} expects 'lo..hi' or 'lo..hi..step', got '{v}'"),
+                }
+            }
+        };
+        if step == 0 || lo > hi {
+            bail!("--{name}: invalid range {lo}..{hi}..{step}");
+        }
+        Ok((lo..=hi).step_by(step).collect())
+    }
+}
+
+fn parse_usize(name: &str, v: &str) -> Result<usize> {
+    v.parse()
+        .with_context(|| format!("--{name}: '{v}' is not an integer"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(str::to_string).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_opts_flags_positionals() {
+        let a = parse(&argv("report fig11 --config paper --verbose"), &["config"]).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("report"));
+        assert_eq!(a.positional, vec!["fig11"]);
+        assert_eq!(a.get("config"), Some("paper"));
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse(&argv("decode --beam=24"), &[]).unwrap();
+        assert_eq!(a.get("beam"), Some("24"));
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = parse(&argv("x --n 8 --t 2.5"), &["n", "t"]).unwrap();
+        assert_eq!(a.usize_or("n", 1).unwrap(), 8);
+        assert_eq!(a.f64_or("t", 0.0).unwrap(), 2.5);
+        assert_eq!(a.usize_or("absent", 7).unwrap(), 7);
+        assert!(a.usize_or("t", 0).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(parse(&argv("x --config"), &["config"]).is_err());
+    }
+
+    #[test]
+    fn ranges() {
+        let a = parse(&argv("x --pes 2..8..2"), &["pes"]).unwrap();
+        assert_eq!(a.range_or("pes", (1, 1, 1)).unwrap(), vec![2, 4, 6, 8]);
+        let b = parse(&argv("x --pes 1..3"), &["pes"]).unwrap();
+        assert_eq!(b.range_or("pes", (1, 1, 1)).unwrap(), vec![1, 2, 3]);
+        let c = parse(&argv("x"), &[]).unwrap();
+        assert_eq!(c.range_or("pes", (4, 6, 1)).unwrap(), vec![4, 5, 6]);
+    }
+}

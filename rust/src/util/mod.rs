@@ -1,0 +1,10 @@
+//! Infrastructure the offline crate set doesn't provide: seeded RNG, a
+//! JSON codec, CLI parsing, table/figure rendering, binary tensor I/O and
+//! a property-testing mini-framework.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod table;
+pub mod tensor_io;

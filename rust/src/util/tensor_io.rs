@@ -1,0 +1,244 @@
+//! Binary tensor container shared with the python build path.
+//!
+//! `python/compile/aot.py` writes `artifacts/weights.bin` in this format;
+//! the Rust side loads it both for native inference ([`crate::am`]) and to
+//! feed weight parameters into the PJRT executable ([`crate::runtime`]).
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic   : 8 bytes  = b"ASRPUTNS"
+//! count   : u32      — number of tensors
+//! per tensor:
+//!   name_len : u32, name : utf-8 bytes
+//!   ndim     : u32, dims : u32 × ndim
+//!   dtype    : u32   (0 = f32, 1 = i8)
+//!   byte_len : u64, data : bytes (f32 little-endian or raw i8)
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"ASRPUTNS";
+
+/// A named dense tensor (f32 or i8 payload).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub data: TensorData,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I8(Vec<i8>),
+}
+
+impl Tensor {
+    pub fn f32(name: impl Into<String>, dims: Vec<usize>, data: Vec<f32>) -> Self {
+        let t = Tensor {
+            name: name.into(),
+            dims,
+            data: TensorData::F32(data),
+        };
+        t.validate().expect("invalid tensor");
+        t
+    }
+
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        let len = match &self.data {
+            TensorData::F32(v) => v.len(),
+            TensorData::I8(v) => v.len(),
+        };
+        if len != self.numel() {
+            bail!(
+                "tensor '{}': dims {:?} imply {} elements, payload has {}",
+                self.name,
+                self.dims,
+                self.numel(),
+                len
+            );
+        }
+        Ok(())
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            TensorData::I8(_) => bail!("tensor '{}' is i8, expected f32", self.name),
+        }
+    }
+}
+
+/// An ordered collection of named tensors.
+#[derive(Debug, Default, Clone)]
+pub struct TensorFile {
+    pub tensors: Vec<Tensor>,
+    index: BTreeMap<String, usize>,
+}
+
+impl TensorFile {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, t: Tensor) {
+        self.index.insert(t.name.clone(), self.tensors.len());
+        self.tensors.push(t);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.index.get(name).map(|&i| &self.tensors[i])
+    }
+
+    pub fn require(&self, name: &str) -> Result<&Tensor> {
+        self.get(name)
+            .with_context(|| format!("weights file missing tensor '{name}'"))
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&(self.tensors.len() as u32).to_le_bytes());
+        for t in &self.tensors {
+            t.validate()?;
+            buf.extend_from_slice(&(t.name.len() as u32).to_le_bytes());
+            buf.extend_from_slice(t.name.as_bytes());
+            buf.extend_from_slice(&(t.dims.len() as u32).to_le_bytes());
+            for &d in &t.dims {
+                buf.extend_from_slice(&(d as u32).to_le_bytes());
+            }
+            match &t.data {
+                TensorData::F32(v) => {
+                    buf.extend_from_slice(&0u32.to_le_bytes());
+                    buf.extend_from_slice(&((v.len() * 4) as u64).to_le_bytes());
+                    for x in v {
+                        buf.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
+                TensorData::I8(v) => {
+                    buf.extend_from_slice(&1u32.to_le_bytes());
+                    buf.extend_from_slice(&(v.len() as u64).to_le_bytes());
+                    buf.extend(v.iter().map(|&b| b as u8));
+                }
+            }
+        }
+        std::fs::File::create(path)
+            .and_then(|mut f| f.write_all(&buf))
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut bytes = Vec::new();
+        std::fs::File::open(path)
+            .and_then(|mut f| f.read_to_end(&mut bytes))
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_bytes(&bytes)
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        let mut pos = 0usize;
+        let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+            let s = bytes
+                .get(*pos..*pos + n)
+                .context("weights file truncated")?;
+            *pos += n;
+            Ok(s)
+        };
+        if take(&mut pos, 8)? != MAGIC {
+            bail!("bad magic: not an ASRPU tensor file");
+        }
+        let count = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+        let mut file = TensorFile::new();
+        for _ in 0..count {
+            let name_len = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+            let name = String::from_utf8(take(&mut pos, name_len)?.to_vec())
+                .context("tensor name not utf-8")?;
+            let ndim = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+            if ndim > 8 {
+                bail!("tensor '{name}': ndim {ndim} too large (corrupt file?)");
+            }
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize);
+            }
+            let dtype = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+            let byte_len = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap()) as usize;
+            let payload = take(&mut pos, byte_len)?;
+            let data = match dtype {
+                0 => {
+                    if byte_len % 4 != 0 {
+                        bail!("tensor '{name}': f32 payload not multiple of 4");
+                    }
+                    TensorData::F32(
+                        payload
+                            .chunks_exact(4)
+                            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                            .collect(),
+                    )
+                }
+                1 => TensorData::I8(payload.iter().map(|&b| b as i8).collect()),
+                d => bail!("tensor '{name}': unknown dtype {d}"),
+            };
+            let t = Tensor { name, dims, data };
+            t.validate()?;
+            file.push(t);
+        }
+        if pos != bytes.len() {
+            bail!("trailing bytes after last tensor");
+        }
+        Ok(file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_in_memory() {
+        let mut f = TensorFile::new();
+        f.push(Tensor::f32("w", vec![2, 3], vec![1., 2., 3., 4., 5., 6.]));
+        f.push(Tensor {
+            name: "q".into(),
+            dims: vec![4],
+            data: TensorData::I8(vec![-1, 0, 1, 127]),
+        });
+        let dir = std::env::temp_dir().join(format!("asrpu-tio-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.bin");
+        f.save(&path).unwrap();
+        let g = TensorFile::load(&path).unwrap();
+        assert_eq!(g.tensors.len(), 2);
+        assert_eq!(g.get("w").unwrap(), &f.tensors[0]);
+        assert_eq!(g.get("q").unwrap(), &f.tensors[1]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_corrupt() {
+        assert!(TensorFile::from_bytes(b"NOTMAGIC").is_err());
+        let mut f = TensorFile::new();
+        f.push(Tensor::f32("w", vec![2], vec![1., 2.]));
+        let dir = std::env::temp_dir().join(format!("asrpu-tio2-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.bin");
+        f.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.truncate(bytes.len() - 3);
+        assert!(TensorFile::from_bytes(&bytes).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid tensor")]
+    fn dims_payload_mismatch_panics() {
+        Tensor::f32("bad", vec![2, 2], vec![1.0]);
+    }
+}

@@ -1,0 +1,121 @@
+//! Cross-layer agreement tests: the native Rust acoustic model and the
+//! AOT-compiled XLA artifact must compute the same function from the
+//! same weights — this pins the whole L1/L2/L3 contract (weight naming,
+//! tensor layouts, causal-conv semantics, streaming-state handling).
+//! Requires `make artifacts`; skips gracefully otherwise.
+
+use asrpu::am::TdsModel;
+use asrpu::config::artifacts_dir;
+use asrpu::dsp::Mfcc;
+use asrpu::runtime::{Meta, Runtime, XlaAm};
+use asrpu::synth::Synthesizer;
+use asrpu::util::rng::Rng;
+
+fn ready() -> bool {
+    let ok = artifacts_dir().join("meta.json").exists();
+    if !ok {
+        eprintln!("skipping: run `make artifacts` first");
+    }
+    ok
+}
+
+#[test]
+fn native_am_from_artifact_weights_matches_xla_am() {
+    if !ready() {
+        return;
+    }
+    let dir = artifacts_dir();
+    let meta = Meta::load(&dir).unwrap();
+    let native = TdsModel::from_artifacts(meta.model.clone(), &dir).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let xla = XlaAm::load(&rt, &dir).unwrap();
+
+    let m = &meta.model;
+    let mut rng = Rng::new(1);
+    let feats_a: Vec<f32> = (0..m.frames_per_step() * m.n_mels)
+        .map(|_| rng.uniform(-1.0, 1.0))
+        .collect();
+    let feats_b: Vec<f32> = (0..m.frames_per_step() * m.n_mels)
+        .map(|_| rng.uniform(-1.0, 1.0))
+        .collect();
+
+    let mut ns = native.state();
+    let mut xs = xla.state().unwrap();
+    for feats in [&feats_a, &feats_b, &feats_a] {
+        let n_out = native.step(&mut ns, feats);
+        let x_out = xla.step(&mut xs, feats).unwrap();
+        assert_eq!(n_out.len(), x_out.len());
+        for (i, (a, b)) in n_out.iter().zip(&x_out).enumerate() {
+            assert!(
+                (a - b).abs() < 5e-3 * (1.0 + a.abs()),
+                "logit[{i}]: native {a} vs xla {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn native_pipeline_matches_xla_pipeline_on_real_audio() {
+    if !ready() {
+        return;
+    }
+    let dir = artifacts_dir();
+    let meta = Meta::load(&dir).unwrap();
+    let native = TdsModel::from_artifacts(meta.model.clone(), &dir).unwrap();
+    let mfcc = Mfcc::for_model(&meta.model);
+    let rt = Runtime::cpu().unwrap();
+    let xla = XlaAm::load(&rt, &dir).unwrap();
+
+    let mut rng = Rng::new(77);
+    let u = Synthesizer::default().render(&[9, 21], &mut rng);
+    let m = &meta.model;
+    let mut ns = native.state();
+    let mut xs = xla.state().unwrap();
+    let mut max_err = 0.0f32;
+    let mut offset = 0;
+    let mut steps = 0;
+    while offset + m.samples_per_step() <= u.samples.len() && steps < 6 {
+        let window = &u.samples[offset..offset + m.samples_per_step()];
+        let nf = mfcc.extract(window);
+        let xf = xla.mfcc(window).unwrap();
+        let n_out = native.step(&mut ns, &nf);
+        let x_out = xla.step(&mut xs, &xf).unwrap();
+        for (a, b) in n_out.iter().zip(&x_out) {
+            max_err = max_err.max((a - b).abs());
+        }
+        // Both must agree on the argmax token per frame (the decode
+        // decision) even where float error accumulates.
+        for (ra, rb) in n_out.chunks(m.tokens).zip(x_out.chunks(m.tokens)) {
+            let arg = |r: &[f32]| {
+                r.iter()
+                    .enumerate()
+                    .max_by(|x, y| x.1.partial_cmp(y.1).unwrap())
+                    .unwrap()
+                    .0
+            };
+            assert_eq!(arg(ra), arg(rb), "argmax diverged");
+        }
+        offset += m.step_len;
+        steps += 1;
+    }
+    assert!(steps >= 4, "utterance too short for the test");
+    assert!(max_err < 0.05, "max logit error {max_err}");
+}
+
+#[test]
+fn weights_file_covers_every_meta_param() {
+    if !ready() {
+        return;
+    }
+    let dir = artifacts_dir();
+    let meta = Meta::load(&dir).unwrap();
+    let tf = asrpu::util::tensor_io::TensorFile::load(&dir.join(&meta.weights_file)).unwrap();
+    for (name, shape) in &meta.params {
+        let t = tf.require(name).unwrap();
+        assert_eq!(&t.dims, shape, "tensor {name}");
+        let data = t.as_f32().unwrap();
+        assert!(data.iter().all(|v| v.is_finite()), "{name} has non-finite weights");
+    }
+    // And nothing extra.
+    assert_eq!(tf.tensors.len(), meta.params.len());
+}

@@ -1,0 +1,146 @@
+//! Integration tests over the real AOT artifacts (require
+//! `make artifacts` to have run; they are skipped with a message if the
+//! artifacts directory is absent so `cargo test` works pre-build).
+//!
+//! These are the tests that prove the three layers compose: Pallas
+//! kernels (inside the exported HLO) → JAX streaming model → PJRT
+//! runtime → beam-search decoder, on audio synthesized by the Rust twin
+//! of the python training-data generator.
+
+use asrpu::config::{artifacts_dir, DecoderConfig, ModelConfig};
+use asrpu::coordinator::Engine;
+use asrpu::dsp::Mfcc;
+use asrpu::runtime::{Runtime, XlaAm};
+use asrpu::synth::{spec, Synthesizer, WerAccum};
+use asrpu::util::rng::Rng;
+
+fn artifacts_ready() -> bool {
+    let dir = artifacts_dir();
+    if dir.join("meta.json").exists() {
+        true
+    } else {
+        eprintln!(
+            "skipping: artifacts not built (run `make artifacts`); looked in {}",
+            dir.display()
+        );
+        false
+    }
+}
+
+#[test]
+fn meta_matches_builtin_tiny_config() {
+    if !artifacts_ready() {
+        return;
+    }
+    let meta = asrpu::runtime::Meta::load(&artifacts_dir()).unwrap();
+    assert_eq!(meta.model, ModelConfig::tiny_tds());
+    assert!(
+        meta.frame_acc > 0.9,
+        "trained model frame accuracy {} too low",
+        meta.frame_acc
+    );
+}
+
+#[test]
+fn xla_mfcc_matches_native_mfcc() {
+    if !artifacts_ready() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let am = XlaAm::load(&rt, &artifacts_dir()).unwrap();
+    let m = &am.meta.model;
+    let native = Mfcc::for_model(m);
+    let mut rng = Rng::new(42);
+    let mut u = Synthesizer::default().render(&[3, 17], &mut rng);
+    u.samples.truncate(m.samples_per_step());
+    assert_eq!(u.samples.len(), m.samples_per_step());
+    let ours = native.extract(&u.samples);
+    let theirs = am.mfcc(&u.samples).unwrap();
+    assert_eq!(ours.len(), theirs.len());
+    for (i, (a, b)) in ours.iter().zip(&theirs).enumerate() {
+        assert!(
+            (a - b).abs() < 2e-2 * (1.0 + a.abs()),
+            "mfcc[{i}]: native {a} vs xla {b}"
+        );
+    }
+}
+
+#[test]
+fn xla_step_produces_log_probs_and_carries_state() {
+    if !artifacts_ready() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let am = XlaAm::load(&rt, &artifacts_dir()).unwrap();
+    let m = am.meta.model.clone();
+    let mut state = am.state().unwrap();
+    let feats = vec![0.25f32; m.frames_per_step() * m.n_mels];
+    let l1 = am.step(&mut state, &feats).unwrap();
+    assert_eq!(l1.len(), m.vectors_per_step() * m.tokens);
+    for row in l1.chunks(m.tokens) {
+        let total: f32 = row.iter().map(|v| v.exp()).sum();
+        assert!((total - 1.0).abs() < 1e-3, "not log-probs: sum {total}");
+    }
+    // Same features again must differ (conv history advanced).
+    let l2 = am.step(&mut state, &feats).unwrap();
+    let diff: f32 = l1.iter().zip(&l2).map(|(a, b)| (a - b).abs()).sum();
+    assert!(diff > 1e-3, "state had no effect");
+}
+
+#[test]
+fn e2e_decodes_synthetic_utterances_with_low_wer() {
+    if !artifacts_ready() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let engine =
+        Engine::from_artifacts(&rt, &artifacts_dir(), DecoderConfig::default()).unwrap();
+    let synth = Synthesizer::default();
+    let mut rng = Rng::new(2026);
+    let mut wer = WerAccum::default();
+    for _ in 0..12 {
+        let words = spec::sample_sentence(&mut rng);
+        let u = synth.render(&words, &mut rng);
+        let (t, m) = engine.decode_utterance(&u.samples).unwrap();
+        assert!(m.steps > 0);
+        wer.add(&u.words, &t.words);
+    }
+    // The trained tiny model + lexicon + LM should transcribe nearly all
+    // synthetic test utterances; allow a modest error budget.
+    assert!(
+        wer.wer() < 0.15,
+        "e2e WER {:.3} too high ({} edits / {} words)",
+        wer.wer(),
+        wer.edits,
+        wer.ref_words
+    );
+}
+
+#[test]
+fn beam_beats_greedy_baseline() {
+    if !artifacts_ready() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let engine =
+        Engine::from_artifacts(&rt, &artifacts_dir(), DecoderConfig::default()).unwrap();
+    let synth = Synthesizer::default();
+    let mut rng = Rng::new(555);
+    let (mut beam_wer, mut greedy_wer) = (WerAccum::default(), WerAccum::default());
+    for _ in 0..8 {
+        let words = spec::sample_sentence(&mut rng);
+        let u = synth.render(&words, &mut rng);
+        let mut s = engine.open(true).unwrap();
+        engine.feed(&mut s, &u.samples).unwrap();
+        let beam = engine.finish(&mut s).unwrap();
+        let greedy = engine.greedy_of(&s).unwrap();
+        beam_wer.add(&u.words, &beam.words);
+        greedy_wer.add(&u.words, &greedy.words);
+    }
+    assert!(
+        beam_wer.wer() <= greedy_wer.wer() + 1e-9,
+        "beam {:.3} worse than greedy {:.3}",
+        beam_wer.wer(),
+        greedy_wer.wer()
+    );
+}

@@ -1,0 +1,169 @@
+//! Simulator-side integration: the Table 1 command flow drives the same
+//! decoding-step model the reports use; simulator outputs respect
+//! cross-mode and cross-config invariants (these are the properties the
+//! paper's evaluation numbers rest on).
+
+use asrpu::accel::{
+    build_step_kernels, simulate_step, AsrpuDevice, Command, HypWorkload, KernelClass,
+    SimMode,
+};
+use asrpu::config::{AccelConfig, ModelConfig};
+use asrpu::power::{step_energy_j, ChipBudget};
+use asrpu::util::prop;
+
+#[test]
+fn device_command_flow_matches_direct_simulation() {
+    let accel = AccelConfig::paper();
+    let model = ModelConfig::paper_tds();
+    let direct = simulate_step(&model, &accel, &HypWorkload::default(), SimMode::Ideal);
+    let mut dev = AsrpuDevice::new(accel, model, SimMode::Ideal).unwrap();
+    dev.configure_all(14.0).unwrap();
+    dev.issue(Command::DecodingStep { signal_addr: 0 }).unwrap();
+    let via_device = dev.last_step.as_ref().unwrap();
+    assert_eq!(via_device.total_cycles, direct.total_cycles);
+    assert_eq!(via_device.kernels.len(), direct.kernels.len());
+}
+
+#[test]
+fn ideal_is_lower_bound_of_detailed_under_random_configs() {
+    prop::check("ideal<=detailed", 25, |g| {
+        let mut accel = AccelConfig::paper();
+        accel.num_pes = 1 + g.index(16);
+        accel.mac_vector_width = 1 << g.index(5);
+        accel.ext_mem_bw_bytes_per_s = 200_000_000 + g.index(8) as u64 * 2_000_000_000;
+        accel.frequency_hz = 100_000_000 + g.index(10) as u64 * 100_000_000;
+        if accel.validate().is_err() {
+            return Ok(());
+        }
+        let model = ModelConfig::paper_tds();
+        let hyp = HypWorkload {
+            n_hyps: 1 + g.index(384) as u64,
+            avg_children: 1.0 + g.rng.f64() * 20.0,
+            word_commit_frac: g.rng.f64() * 0.5,
+        };
+        let ideal = simulate_step(&model, &accel, &hyp, SimMode::Ideal);
+        let detailed = simulate_step(&model, &accel, &hyp, SimMode::Detailed);
+        crate::sim_props::assert_report_invariants(&ideal)?;
+        crate::sim_props::assert_report_invariants(&detailed)?;
+        asrpu::prop_assert!(
+            detailed.total_cycles >= ideal.total_cycles,
+            "detailed {} < ideal {}",
+            detailed.total_cycles,
+            ideal.total_cycles
+        );
+        // Same work in both modes.
+        asrpu::prop_assert!(
+            detailed.total_instrs == ideal.total_instrs,
+            "instruction counts differ between modes"
+        );
+        Ok(())
+    });
+}
+
+mod sim_props {
+    use asrpu::accel::StepReport;
+
+    pub fn assert_report_invariants(r: &StepReport) -> Result<(), String> {
+        if r.kernels.is_empty() {
+            return Err("no kernels".into());
+        }
+        let mut prev_end = 0;
+        for k in &r.kernels {
+            if k.start < prev_end {
+                return Err(format!("kernel {} starts before predecessor ends", k.name));
+            }
+            if k.end < k.start {
+                return Err(format!("kernel {} ends before start", k.name));
+            }
+            prev_end = k.end;
+        }
+        if prev_end != r.total_cycles {
+            return Err("total_cycles != last kernel end".into());
+        }
+        let sum_instr: u64 = r.kernels.iter().map(|k| k.instrs).sum();
+        if sum_instr != r.total_instrs {
+            return Err("instruction sum mismatch".into());
+        }
+        Ok(())
+    }
+}
+
+#[test]
+fn throughput_scales_sublinearly_but_monotonically_with_pes() {
+    let model = ModelConfig::paper_tds();
+    let mut prev = u64::MAX;
+    for pes in [1, 2, 4, 8, 16, 32] {
+        let accel = AccelConfig { num_pes: pes, ..AccelConfig::paper() };
+        let r = simulate_step(&model, &accel, &HypWorkload::default(), SimMode::Ideal);
+        assert!(r.total_cycles <= prev, "{pes} PEs slower than fewer");
+        prev = r.total_cycles;
+    }
+}
+
+#[test]
+fn energy_decreases_per_step_with_more_pes_despite_higher_power() {
+    // More PEs burn more watts but finish sooner; leakage amortizes, so
+    // energy/step falls (the design_space result) — pin it as a test.
+    let model = ModelConfig::paper_tds();
+    let e = |pes: usize| {
+        let accel = AccelConfig { num_pes: pes, ..AccelConfig::paper() };
+        let r = simulate_step(&model, &accel, &HypWorkload::default(), SimMode::Ideal);
+        step_energy_j(&r, &accel)
+    };
+    assert!(e(8) < e(2), "energy should fall from 2 to 8 PEs");
+}
+
+#[test]
+fn mac_width_only_affects_dot_product_kernels() {
+    let model = ModelConfig::paper_tds();
+    let a8 = AccelConfig::paper();
+    let a16 = AccelConfig { mac_vector_width: 16, ..AccelConfig::paper() };
+    let k8 = build_step_kernels(&model, &a8, &HypWorkload::default());
+    let k16 = build_step_kernels(&model, &a16, &HypWorkload::default());
+    for (x, y) in k8.iter().zip(&k16) {
+        match x.class {
+            KernelClass::Conv | KernelClass::Fc => {
+                assert!(y.instr_per_thread < x.instr_per_thread, "{}", x.name)
+            }
+            _ => assert_eq!(x.instr_per_thread, y.instr_per_thread, "{}", x.name),
+        }
+    }
+}
+
+#[test]
+fn hypothesis_workload_scales_hyp_phase_only() {
+    let model = ModelConfig::paper_tds();
+    let accel = AccelConfig::paper();
+    let small = simulate_step(
+        &model,
+        &accel,
+        &HypWorkload { n_hyps: 16, ..Default::default() },
+        SimMode::Ideal,
+    );
+    let large = simulate_step(
+        &model,
+        &accel,
+        &HypWorkload { n_hyps: 384, ..Default::default() },
+        SimMode::Ideal,
+    );
+    assert_eq!(small.acoustic_cycles, large.acoustic_cycles);
+    assert!(large.hyp_cycles > small.hyp_cycles);
+}
+
+#[test]
+fn area_power_budget_consistent_across_sweep() {
+    for pes in [1, 4, 8, 16] {
+        for mem_kb in [256usize, 512, 1024, 2048] {
+            let accel = AccelConfig {
+                num_pes: pes,
+                shared_mem_bytes: mem_kb << 10,
+                ..AccelConfig::paper()
+            };
+            let b = ChipBudget::for_config(&accel);
+            assert!(b.total_area_mm2() > 0.0);
+            assert!(b.total_peak_w() > b.total_leakage_w());
+            let sum: f64 = b.components.iter().map(|c| c.area_mm2).sum();
+            assert!((sum - b.total_area_mm2()).abs() < 1e-9);
+        }
+    }
+}
