@@ -9,7 +9,7 @@
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 
-use asrpu::config::{artifacts_dir, DecoderConfig, ModelConfig};
+use asrpu::config::{artifacts_dir, BatchConfig, DecoderConfig, ModelConfig};
 use asrpu::coordinator::{Engine, Server};
 use asrpu::runtime::Runtime;
 use asrpu::synth::Synthesizer;
@@ -32,6 +32,7 @@ fn main() -> anyhow::Result<()> {
             }
         },
         64,
+        BatchConfig::default(),
     )?;
     println!("server on {}", server.addr);
 

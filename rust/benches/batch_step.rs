@@ -1,0 +1,93 @@
+//! Bench: the lane-batched execution core — fused AM+decoder steps at
+//! B ∈ {1, 4, 16, 64} lanes, reporting frames/sec per configuration.
+//!
+//! Two workloads:
+//!  * `tiny` — the end-to-end serving model (AM + beam search), swept
+//!    across the full lane range;
+//!  * `paper-f32` — the paper-scale acoustic model in f32 (AM only: its
+//!    9000-token output layer has no matching lexicon), where the weight
+//!    matrices dwarf every cache level and batching's
+//!    stream-weights-once behaviour pays the most. The acceptance target
+//!    for this refactor is ≥2× frames/sec at B=16 vs B=1 here.
+
+use asrpu::am::{TdsModel, TdsState};
+use asrpu::bench::Bench;
+use asrpu::config::{DecoderConfig, ModelConfig};
+use asrpu::decoder::{BeamDecoder, DecodeState};
+use asrpu::lm::NgramLm;
+use asrpu::synth::spec;
+use asrpu::util::rng::Rng;
+
+/// frames/sec of one fused step at `batch` lanes.
+fn fps(batch: usize, frames_per_step: usize, median_s: f64) -> f64 {
+    batch as f64 * frames_per_step as f64 / median_s
+}
+
+fn main() {
+    let mut rng = Rng::new(11);
+
+    // --- tiny serving model: fused AM + decoder step.
+    let mut b = Bench::default();
+    let model = TdsModel::random(ModelConfig::tiny_tds(), 3);
+    let lex = spec::lexicon();
+    let lm = NgramLm::estimate(&spec::sample_corpus(2000, 7777), 0.4).unwrap();
+    let dec = BeamDecoder::new(&lex, &lm, DecoderConfig::default()).unwrap();
+    let cfg = model.cfg.clone();
+    let f = cfg.frames_per_step() * cfg.n_mels;
+    let tokens = cfg.tokens;
+    let vps = cfg.vectors_per_step();
+    let mut tiny_fps = Vec::new();
+    for batch in [1usize, 4, 16, 64] {
+        let feats: Vec<f32> = (0..batch * f).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let mut am_states: Vec<TdsState> = (0..batch).map(|_| model.state()).collect();
+        let mut dec_states: Vec<DecodeState> = (0..batch).map(|_| dec.start()).collect();
+        let mut block = vec![0.0f32; batch * tokens];
+        let r = b.run(&format!("batch/tiny/am+dec/B{batch}"), || {
+            // Bound backtrack-arena growth across iterations while keeping
+            // a realistically-sized live hypothesis set.
+            if dec_states[0].frames > 256 {
+                for st in dec_states.iter_mut() {
+                    *st = dec.start();
+                }
+            }
+            let mut refs: Vec<&mut TdsState> = am_states.iter_mut().collect();
+            let logits = model.step_batch(&mut refs, &feats);
+            for fr in 0..vps {
+                for lane in 0..batch {
+                    let src = (lane * vps + fr) * tokens;
+                    block[lane * tokens..(lane + 1) * tokens]
+                        .copy_from_slice(&logits[src..src + tokens]);
+                }
+                let mut drefs: Vec<&mut DecodeState> = dec_states.iter_mut().collect();
+                dec.step_batch(&mut drefs, &block);
+            }
+            logits.len()
+        });
+        tiny_fps.push((batch, fps(batch, cfg.frames_per_step(), r.median.as_secs_f64())));
+    }
+
+    // --- paper-scale AM in f32: the memory-bound headline.
+    let mut bq = Bench::quick();
+    let paper_cfg = ModelConfig { quantized: false, ..ModelConfig::paper_tds() };
+    let fps_frames = paper_cfg.frames_per_step();
+    let paper = TdsModel::random(paper_cfg, 5);
+    let pf = paper.cfg.frames_per_step() * paper.cfg.n_mels;
+    let mut paper_fps = Vec::new();
+    for batch in [1usize, 4, 16] {
+        let feats: Vec<f32> = (0..batch * pf).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let mut states: Vec<TdsState> = (0..batch).map(|_| paper.state()).collect();
+        let r = bq.run(&format!("batch/paper-f32/am/B{batch}"), || {
+            let mut refs: Vec<&mut TdsState> = states.iter_mut().collect();
+            paper.step_batch(&mut refs, &feats).len()
+        });
+        paper_fps.push((batch, fps(batch, fps_frames, r.median.as_secs_f64())));
+    }
+
+    println!("\nframes/sec by lane count (speedup vs B=1):");
+    for (tag, series) in [("tiny am+dec", &tiny_fps), ("paper-f32 am", &paper_fps)] {
+        let base = series[0].1;
+        for &(batch, v) in series {
+            println!("  {tag:<14} B={batch:<3} {v:>12.0} f/s   {:>5.2}x", v / base);
+        }
+    }
+}

@@ -11,7 +11,7 @@ fn main() {
     let model = ModelConfig::paper_tds();
     let accel = AccelConfig::paper();
     let hyp = HypWorkload::default();
-    b.run("sim/build_kernels/paper", || build_step_kernels(&model, &accel, &hyp).len());
+    b.run("sim/build_kernels/paper", || build_step_kernels(&model, &accel, &hyp, 1).len());
     let r = b.run("sim/step/ideal", || {
         simulate_step(&model, &accel, &hyp, SimMode::Ideal).total_cycles
     });

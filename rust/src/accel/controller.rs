@@ -76,6 +76,13 @@ impl StepReport {
         model.step_seconds() / self.seconds(accel)
     }
 
+    /// Aggregate real-time factor of a `batch`-stream fused step (from
+    /// [`simulate_step_batched`]): the step covers `batch × step_seconds`
+    /// of audio.
+    pub fn rtf_batched(&self, model: &ModelConfig, accel: &AccelConfig, batch: usize) -> f64 {
+        batch as f64 * model.step_seconds() / self.seconds(accel)
+    }
+
     /// Mean pool utilization over the step.
     pub fn utilization(&self, accel: &AccelConfig) -> f64 {
         self.total_instrs as f64 / (self.total_cycles * accel.num_pes as u64) as f64
@@ -107,14 +114,30 @@ pub fn inter_step_state_bytes(model: &ModelConfig) -> u64 {
     bytes
 }
 
-/// Simulate one decoding step.
+/// Simulate one decoding step (single stream).
 pub fn simulate_step(
     model: &ModelConfig,
     accel: &AccelConfig,
     hyp: &HypWorkload,
     mode: SimMode,
 ) -> StepReport {
-    let kernels = build_step_kernels(model, accel, hyp);
+    simulate_step_batched(model, accel, hyp, mode, 1)
+}
+
+/// Simulate one decoding step fused over `batch` concurrent streams
+/// (the coordinator's lane-batched serving mapped onto the device):
+/// every kernel launches ×batch threads over the same staged model data,
+/// so PE-pool utilization and RTF reflect multi-stream load. Compare
+/// [`StepReport::rtf_batched`] against `rtf` at batch 1 to read off the
+/// consolidation win.
+pub fn simulate_step_batched(
+    model: &ModelConfig,
+    accel: &AccelConfig,
+    hyp: &HypWorkload,
+    mode: SimMode,
+    batch: usize,
+) -> StepReport {
+    let kernels = build_step_kernels(model, accel, hyp, batch);
     simulate_kernels(&kernels, model, accel, mode)
 }
 
@@ -349,5 +372,29 @@ mod tests {
         let (m, a) = paper();
         let r = simulate_step(&m, &a, &HypWorkload::default(), SimMode::Ideal);
         assert!(r.utilization(&a) > 0.9, "util {}", r.utilization(&a));
+    }
+
+    #[test]
+    fn batched_streams_amortize_the_step() {
+        // Fusing B streams must cost less than B single-stream steps
+        // (shared model staging + better pool packing on narrow kernels),
+        // while executing exactly B× the instructions.
+        let (m, a) = paper();
+        let hyp = HypWorkload::default();
+        let one = simulate_step_batched(&m, &a, &hyp, SimMode::Ideal, 1);
+        let four = simulate_step_batched(&m, &a, &hyp, SimMode::Ideal, 4);
+        assert_eq!(four.total_instrs, 4 * one.total_instrs);
+        assert!(
+            four.total_cycles < 4 * one.total_cycles,
+            "batched step {} !< 4×{}",
+            four.total_cycles,
+            one.total_cycles
+        );
+        // Same weights stream once regardless of batch.
+        assert_eq!(four.dma_bytes, one.dma_bytes);
+        // Aggregate RTF grows with consolidation.
+        assert!(four.rtf_batched(&m, &a, 4) > one.rtf(&m, &a));
+        // Utilization can only improve when kernels get wider.
+        assert!(four.utilization(&a) >= one.utilization(&a) - 1e-9);
     }
 }

@@ -133,11 +133,23 @@ impl Default for HypWorkload {
 /// Build the full decoding-step kernel sequence for a model on a given
 /// accelerator config: MFCC, the 79 AM kernels (FC kernels split to fit
 /// model memory, §5.2), then `vectors_per_step` hypothesis expansions.
+///
+/// `batch` is the number of concurrent audio streams fused into the step
+/// (the coordinator's lane-batched serving, `coordinator::Batcher`). Each
+/// stream contributes its own threads and activation traffic, so thread
+/// counts and shared-memory bytes scale ×batch — but `model_bytes` does
+/// not: the staged weights are shared across lanes, which is exactly the
+/// amortization the batched engine exploits. Wider kernels also raise
+/// PE-pool utilization on the small layers whose thread count alone
+/// cannot fill the pool.
 pub fn build_step_kernels(
     model: &ModelConfig,
     accel: &AccelConfig,
     hyp: &HypWorkload,
+    batch: usize,
 ) -> Vec<KernelExec> {
+    assert!(batch >= 1, "batch factor must be at least 1");
+    let batch = batch as u64;
     let v = accel.mac_vector_width as u64;
     let mut kernels = Vec::new();
     // Feature extraction: one thread per output frame.
@@ -220,6 +232,14 @@ pub fn build_step_kernels(
             smem_bytes: hyp.n_hyps * accel.hyp_record_bytes as u64 * 2,
         });
     }
+    // Lane-batching: every stream runs its own threads over the same
+    // staged model data.
+    if batch > 1 {
+        for k in &mut kernels {
+            k.threads *= batch;
+            k.smem_bytes *= batch;
+        }
+    }
     kernels
 }
 
@@ -242,7 +262,7 @@ mod tests {
     fn paper_step_kernel_inventory() {
         let m = ModelConfig::paper_tds();
         let a = AccelConfig::paper();
-        let ks = build_step_kernels(&m, &a, &HypWorkload::default());
+        let ks = build_step_kernels(&m, &a, &HypWorkload::default(), 1);
         let count = |c: KernelClass| ks.iter().filter(|k| k.class == c).count();
         assert_eq!(count(KernelClass::FeatureExtraction), 1);
         assert_eq!(count(KernelClass::Conv), 18);
@@ -258,7 +278,7 @@ mod tests {
     fn split_kernels_fit_model_memory() {
         let m = ModelConfig::paper_tds();
         let a = AccelConfig::paper();
-        let ks = build_step_kernels(&m, &a, &HypWorkload::default());
+        let ks = build_step_kernels(&m, &a, &HypWorkload::default(), 1);
         for k in &ks {
             assert!(
                 k.model_bytes <= a.model_mem_bytes as u64,
@@ -283,7 +303,7 @@ mod tests {
         // computing 600 neurons."
         let m = ModelConfig::paper_tds();
         let a = AccelConfig::paper();
-        let ks = build_step_kernels(&m, &a, &HypWorkload::default());
+        let ks = build_step_kernels(&m, &a, &HypWorkload::default(), 1);
         let g2_fc: Vec<&KernelExec> =
             ks.iter().filter(|k| k.name.starts_with("g2.b0.fc0")).collect();
         assert_eq!(g2_fc.len(), 2, "1.44 MB FC splits into exactly 2 kernels");
@@ -295,12 +315,28 @@ mod tests {
     fn subsampling_reduces_downstream_threads() {
         let m = ModelConfig::paper_tds();
         let a = AccelConfig::paper();
-        let ks = build_step_kernels(&m, &a, &HypWorkload::default());
+        let ks = build_step_kernels(&m, &a, &HypWorkload::default(), 1);
         let sub = ks.iter().find(|k| k.name == "g0.sub").unwrap();
         let blk = ks.iter().find(|k| k.name == "g0.b0.conv").unwrap();
         // Entry conv emits at stride 2 → 4 timesteps; so does the block.
         assert_eq!(sub.threads, (10 * 80 * 4) as u64);
         assert_eq!(blk.threads, (10 * 80 * 4) as u64);
+    }
+
+    #[test]
+    fn batch_factor_scales_threads_not_model_bytes() {
+        let m = ModelConfig::paper_tds();
+        let a = AccelConfig::paper();
+        let one = build_step_kernels(&m, &a, &HypWorkload::default(), 1);
+        let eight = build_step_kernels(&m, &a, &HypWorkload::default(), 8);
+        assert_eq!(one.len(), eight.len(), "batching adds lanes, not kernels");
+        for (x, y) in one.iter().zip(&eight) {
+            assert_eq!(y.threads, 8 * x.threads, "{}", x.name);
+            assert_eq!(y.smem_bytes, 8 * x.smem_bytes, "{}", x.name);
+            // Staged weights are shared across lanes.
+            assert_eq!(y.model_bytes, x.model_bytes, "{}", x.name);
+            assert_eq!(y.instr_per_thread, x.instr_per_thread, "{}", x.name);
+        }
     }
 
     #[test]
@@ -317,7 +353,7 @@ mod tests {
         // the same order (50–160 M) for the headline claim to reproduce.
         let m = ModelConfig::paper_tds();
         let a = AccelConfig::paper();
-        let ks = build_step_kernels(&m, &a, &HypWorkload::default());
+        let ks = build_step_kernels(&m, &a, &HypWorkload::default(), 1);
         let total: u64 = ks.iter().map(|k| k.total_instrs()).sum();
         assert!(
             (50_000_000..170_000_000).contains(&total),

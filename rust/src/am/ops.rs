@@ -6,6 +6,15 @@
 //! channel-major (`v[ch * width + mel]`) — the "view a spectrogram as
 //! channels over mel bands" convention of the TDS paper, mirrored by
 //! `python/compile/model.py`.
+//!
+//! Every primitive also has a **lane-batched** variant operating on
+//! `[B × D]` row-major blocks (lane-major: lane `l`'s timestep is
+//! `x[l*D .. (l+1)*D]`). Batched variants perform the exact same
+//! floating-point operations in the exact same order per lane as the
+//! scalar functions — B-lane output is bit-identical to B independent
+//! scalar calls (asserted by `tests/batch_parity.rs`) — while streaming
+//! each weight row once across all lanes, which is where the batched
+//! serving path gets its memory-bandwidth amortization.
 
 /// `y = W·x + b` where `w` is row-major `[out_dim × in_dim]`.
 pub fn fc(w: &[f32], b: &[f32], x: &[f32], out: &mut Vec<f32>) {
@@ -21,6 +30,31 @@ pub fn fc(w: &[f32], b: &[f32], x: &[f32], out: &mut Vec<f32>) {
             acc += wi * xi;
         }
         out.push(acc);
+    }
+}
+
+/// Lane-batched [`fc`]: `xs` is `[batch × in_dim]` row-major, `out`
+/// becomes `[batch × out_dim]`. Each weight row is loaded once and
+/// applied to every lane, so at B lanes the weight matrix is streamed
+/// from memory once instead of B times.
+pub fn fc_batch(w: &[f32], b: &[f32], xs: &[f32], batch: usize, out: &mut Vec<f32>) {
+    assert!(batch > 0, "fc_batch needs at least one lane");
+    debug_assert_eq!(xs.len() % batch, 0);
+    let in_dim = xs.len() / batch;
+    let out_dim = b.len();
+    debug_assert_eq!(w.len(), in_dim * out_dim);
+    out.clear();
+    out.resize(batch * out_dim, 0.0);
+    for o in 0..out_dim {
+        let row = &w[o * in_dim..(o + 1) * in_dim];
+        for lane in 0..batch {
+            let x = &xs[lane * in_dim..(lane + 1) * in_dim];
+            let mut acc = b[o];
+            for (wi, xi) in row.iter().zip(x) {
+                acc += wi * xi;
+            }
+            out[lane * out_dim + o] = acc;
+        }
     }
 }
 
@@ -43,6 +77,17 @@ pub fn layer_norm(gain: &[f32], bias: &[f32], x: &mut [f32], eps: f32) {
     }
 }
 
+/// Lane-batched [`layer_norm`]: `x` is `[batch × dim]` row-major; each
+/// lane is normalized independently (identical op order per lane).
+pub fn layer_norm_batch(gain: &[f32], bias: &[f32], x: &mut [f32], batch: usize, eps: f32) {
+    assert!(batch > 0, "layer_norm_batch needs at least one lane");
+    debug_assert_eq!(x.len() % batch, 0);
+    let dim = x.len() / batch;
+    for lane in x.chunks_mut(dim) {
+        layer_norm(gain, bias, lane, eps);
+    }
+}
+
 /// Numerically-stable log-softmax.
 pub fn log_softmax(x: &mut [f32]) {
     let max = x.iter().cloned().fold(f32::MIN, f32::max);
@@ -56,10 +101,21 @@ pub fn log_softmax(x: &mut [f32]) {
     }
 }
 
+/// Lane-batched [`log_softmax`]: `x` is `[batch × dim]` row-major.
+pub fn log_softmax_batch(x: &mut [f32], batch: usize) {
+    assert!(batch > 0, "log_softmax_batch needs at least one lane");
+    debug_assert_eq!(x.len() % batch, 0);
+    let dim = x.len() / batch;
+    for lane in x.chunks_mut(dim) {
+        log_softmax(lane);
+    }
+}
+
 /// Causal temporal conv at one output position.
 ///
 /// `window` holds `kw` timesteps (oldest first), each `[in_ch × width]`;
 /// `w` is `[out_ch × in_ch × kw]`; output is `[out_ch × width]`.
+#[allow(clippy::too_many_arguments)]
 pub fn conv_step(
     w: &[f32],
     b: &[f32],
@@ -88,6 +144,55 @@ pub fn conv_step(
                 let x_row = &window[k][i * width..(i + 1) * width];
                 for (v, x) in out_row.iter_mut().zip(x_row) {
                     *v += wk * x;
+                }
+            }
+        }
+    }
+}
+
+/// Lane-batched [`conv_step`]: each `window` entry is `[batch × in_ch ×
+/// width]` row-major (lane-major), `out` becomes `[batch × out_ch ×
+/// width]`. Each weight scalar is loaded once per (o, i, k) and swept
+/// across every lane's mel row.
+#[allow(clippy::too_many_arguments)]
+pub fn conv_step_batch(
+    w: &[f32],
+    b: &[f32],
+    window: &[&[f32]],
+    batch: usize,
+    in_ch: usize,
+    out_ch: usize,
+    kw: usize,
+    width: usize,
+    out: &mut Vec<f32>,
+) {
+    assert!(batch > 0, "conv_step_batch needs at least one lane");
+    debug_assert_eq!(window.len(), kw);
+    debug_assert_eq!(w.len(), out_ch * in_ch * kw);
+    let lane_in = in_ch * width;
+    let lane_out = out_ch * width;
+    out.clear();
+    out.resize(batch * lane_out, 0.0);
+    for o in 0..out_ch {
+        for lane in 0..batch {
+            let base = lane * lane_out + o * width;
+            for v in out[base..base + width].iter_mut() {
+                *v = b[o];
+            }
+        }
+        for i in 0..in_ch {
+            for k in 0..kw {
+                let wk = w[(o * in_ch + i) * kw + k];
+                if wk == 0.0 {
+                    continue;
+                }
+                for lane in 0..batch {
+                    let x_start = lane * lane_in + i * width;
+                    let x_row = &window[k][x_start..x_start + width];
+                    let base = lane * lane_out + o * width;
+                    for (v, x) in out[base..base + width].iter_mut().zip(x_row) {
+                        *v += wk * x;
+                    }
                 }
             }
         }
@@ -166,6 +271,85 @@ mod tests {
         let mut out = Vec::new();
         conv_step(&w, &b, &window, 1, 1, 3, 4, &mut out);
         assert_eq!(out, t0);
+    }
+
+    #[test]
+    fn fc_batch_matches_scalar_lanes() {
+        prop::check("fc-batch-parity", 30, |g| {
+            let in_dim = g.len(1).min(24).max(1);
+            let out_dim = g.len(1).min(16).max(1);
+            let batch = 1 + g.index(5);
+            let w = g.vec_of(in_dim * out_dim, |r| r.uniform(-1.0, 1.0));
+            let b = g.vec_of(out_dim, |r| r.uniform(-1.0, 1.0));
+            let xs = g.vec_of(batch * in_dim, |r| r.uniform(-2.0, 2.0));
+            let mut batched = Vec::new();
+            fc_batch(&w, &b, &xs, batch, &mut batched);
+            let mut lane_out = Vec::new();
+            for lane in 0..batch {
+                fc(&w, &b, &xs[lane * in_dim..(lane + 1) * in_dim], &mut lane_out);
+                crate::prop_assert!(
+                    lane_out == batched[lane * out_dim..(lane + 1) * out_dim],
+                    "lane {lane} diverged"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn layer_norm_and_log_softmax_batch_match_scalar() {
+        prop::check("ln-lsm-batch-parity", 30, |g| {
+            let dim = g.len(2).min(32).max(2);
+            let batch = 1 + g.index(5);
+            let gain = g.vec_of(dim, |r| r.uniform(0.5, 1.5));
+            let bias = g.vec_of(dim, |r| r.uniform(-0.5, 0.5));
+            let xs = g.vec_of(batch * dim, |r| r.uniform(-4.0, 4.0));
+            let mut a = xs.clone();
+            layer_norm_batch(&gain, &bias, &mut a, batch, 1e-5);
+            log_softmax_batch(&mut a, batch);
+            let mut b = xs;
+            for lane in b.chunks_mut(dim) {
+                layer_norm(&gain, &bias, lane, 1e-5);
+                log_softmax(lane);
+            }
+            crate::prop_assert!(a == b, "batched LN/log-softmax diverged");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn conv_step_batch_matches_scalar_lanes() {
+        prop::check("conv-batch-parity", 20, |g| {
+            let in_ch = 1 + g.index(3);
+            let out_ch = 1 + g.index(3);
+            let kw = 1 + g.index(3);
+            let width = 1 + g.index(6);
+            let batch = 1 + g.index(4);
+            let w = g.vec_of(out_ch * in_ch * kw, |r| r.uniform(-1.0, 1.0));
+            let b = g.vec_of(out_ch, |r| r.uniform(-0.5, 0.5));
+            // Batched window: kw blocks of [batch × in_ch × width].
+            let blocks: Vec<Vec<f32>> = (0..kw)
+                .map(|_| g.vec_of(batch * in_ch * width, |r| r.uniform(-2.0, 2.0)))
+                .collect();
+            let window: Vec<&[f32]> = blocks.iter().map(|v| v.as_slice()).collect();
+            let mut batched = Vec::new();
+            conv_step_batch(&w, &b, &window, batch, in_ch, out_ch, kw, width, &mut batched);
+            let lane_in = in_ch * width;
+            let lane_out = out_ch * width;
+            let mut scalar = Vec::new();
+            for lane in 0..batch {
+                let lane_win: Vec<&[f32]> = blocks
+                    .iter()
+                    .map(|blk| &blk[lane * lane_in..(lane + 1) * lane_in])
+                    .collect();
+                conv_step(&w, &b, &lane_win, in_ch, out_ch, kw, width, &mut scalar);
+                crate::prop_assert!(
+                    scalar == batched[lane * lane_out..(lane + 1) * lane_out],
+                    "lane {lane} diverged"
+                );
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -238,6 +238,144 @@ impl TdsModel {
         out
     }
 
+    /// Lane-batched streaming step: advance `B = states.len()` independent
+    /// streams through one fused forward pass.
+    ///
+    /// `feats` is lane-major `[B × (frames × n_mels)]` (lane `l`'s chunk at
+    /// `feats[l*F .. (l+1)*F]`); the return value is lane-major
+    /// `[B × (vectors_per_step × tokens)]`. Internally activations are kept
+    /// as per-timestep `[B × D]` blocks so each weight row is streamed once
+    /// for all lanes (see `am::ops`). Per-lane results are **bit-identical**
+    /// to calling [`Self::step`] on each lane separately — the batched ops
+    /// replay the scalar op order exactly — which is what lets the serving
+    /// path batch opportunistically without changing transcripts.
+    pub fn step_batch(&self, states: &mut [&mut TdsState], feats: &[f32]) -> Vec<f32> {
+        let batch = states.len();
+        assert!(batch > 0, "step_batch needs at least one lane");
+        let n_mels = self.cfg.n_mels;
+        assert_eq!(
+            feats.len() % (batch * n_mels),
+            0,
+            "feats not whole frames across {batch} lanes"
+        );
+        let n_frames = feats.len() / (batch * n_mels);
+        let lane_feats = n_frames * n_mels;
+        // Per-timestep activations as [B × D] lane-major blocks.
+        let mut acts: Vec<Vec<f32>> = (0..n_frames)
+            .map(|f| {
+                let mut block = Vec::with_capacity(batch * n_mels);
+                for lane in 0..batch {
+                    let base = lane * lane_feats + f * n_mels;
+                    block.extend_from_slice(&feats[base..base + n_mels]);
+                }
+                block
+            })
+            .collect();
+        let mut conv_idx = 0;
+        for (layer, lw) in &self.layers {
+            match (layer, lw) {
+                (
+                    Layer::Conv { in_ch, out_ch, kw, stride, w, residual, .. },
+                    LayerWeights::Conv { w: cw, b: cb },
+                ) => {
+                    let d_in = in_ch * w;
+                    // Gather each lane's conv history into [B × D] blocks.
+                    let hist_blocks: Vec<Vec<f32>> = (0..kw - 1)
+                        .map(|h| {
+                            let mut block = Vec::with_capacity(batch * d_in);
+                            for st in states.iter() {
+                                block.extend_from_slice(&st.conv_hist[conv_idx][h]);
+                            }
+                            block
+                        })
+                        .collect();
+                    let mut ext: Vec<&[f32]> = Vec::with_capacity(kw - 1 + acts.len());
+                    for h in hist_blocks.iter() {
+                        ext.push(h);
+                    }
+                    for a in acts.iter() {
+                        ext.push(a);
+                    }
+                    assert_eq!(
+                        acts.len() % stride,
+                        0,
+                        "chunk length {} not divisible by stride {stride}",
+                        acts.len()
+                    );
+                    let t_out = acts.len() / stride;
+                    let mut outs: Vec<Vec<f32>> = Vec::with_capacity(t_out);
+                    let mut buf = Vec::new();
+                    for o in 0..t_out {
+                        let win = &ext[o * stride..o * stride + kw];
+                        ops::conv_step_batch(
+                            cw, cb, win, batch, *in_ch, *out_ch, *kw, *w, &mut buf,
+                        );
+                        ops::relu_inplace(&mut buf);
+                        if *residual {
+                            debug_assert_eq!(*stride, 1);
+                            for (v, x) in buf.iter_mut().zip(win[kw - 1].iter()) {
+                                *v += x;
+                            }
+                        }
+                        outs.push(buf.clone());
+                    }
+                    // Scatter the last kw-1 ext blocks back into per-lane
+                    // histories.
+                    let total = ext.len();
+                    let tail: Vec<Vec<f32>> =
+                        ext[total - (kw - 1)..].iter().map(|s| s.to_vec()).collect();
+                    drop(ext);
+                    for (lane, st) in states.iter_mut().enumerate() {
+                        let hist = &mut st.conv_hist[conv_idx];
+                        for (h, block) in tail.iter().enumerate() {
+                            hist[h].clear();
+                            hist[h].extend_from_slice(&block[lane * d_in..(lane + 1) * d_in]);
+                        }
+                    }
+                    conv_idx += 1;
+                    acts = outs;
+                }
+                (
+                    Layer::Fc { residual, relu, .. },
+                    LayerWeights::Fc { w: fw, b: fb },
+                ) => {
+                    let mut buf = Vec::new();
+                    for t in acts.iter_mut() {
+                        ops::fc_batch(fw, fb, t, batch, &mut buf);
+                        if *relu {
+                            ops::relu_inplace(&mut buf);
+                        }
+                        if *residual {
+                            for (v, x) in buf.iter_mut().zip(t.iter()) {
+                                *v += x;
+                            }
+                        }
+                        std::mem::swap(t, &mut buf);
+                    }
+                }
+                (Layer::LayerNorm { .. }, LayerWeights::LayerNorm { g, b }) => {
+                    for t in acts.iter_mut() {
+                        ops::layer_norm_batch(g, b, t, batch, LN_EPS);
+                    }
+                }
+                _ => unreachable!("layer/weights mismatch"),
+            }
+        }
+        // Log-softmax over tokens, de-interleave to lane-major output.
+        let tokens = self.cfg.tokens;
+        let vps = acts.len();
+        let mut out = vec![0.0f32; batch * vps * tokens];
+        for (t_idx, t) in acts.iter_mut().enumerate() {
+            ops::log_softmax_batch(t, batch);
+            for lane in 0..batch {
+                let src = &t[lane * tokens..(lane + 1) * tokens];
+                let dst = (lane * vps + t_idx) * tokens;
+                out[dst..dst + tokens].copy_from_slice(src);
+            }
+        }
+        out
+    }
+
     /// Offline full-sequence forward: chunk the features into decoding
     /// steps and stream through a fresh state (drops a ragged tail).
     pub fn forward_full(&self, feats: &[f32]) -> Vec<f32> {
@@ -322,6 +460,52 @@ mod tests {
         let out2 = m.step(&mut st2, &c);
         let diff: f32 = out1.iter().zip(&out2).map(|(x, y)| (x - y).abs()).sum();
         assert!(diff > 1e-3, "conv state had no effect");
+    }
+
+    #[test]
+    fn step_batch_is_bit_identical_to_scalar_lanes() {
+        // Three lanes with different histories and inputs, stepped twice:
+        // the fused pass must reproduce each scalar lane exactly (==, not
+        // approx — the batched ops replay the scalar op order).
+        let m = tiny();
+        let batch = 3;
+        let f = m.cfg.frames_per_step() * m.cfg.n_mels;
+        let mut rng = crate::util::rng::Rng::new(21);
+        let mut scalar_states: Vec<TdsState> = (0..batch).map(|_| m.state()).collect();
+        let mut batch_states: Vec<TdsState> = (0..batch).map(|_| m.state()).collect();
+        for _ in 0..2 {
+            let feats: Vec<f32> = (0..batch * f).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let mut refs: Vec<&mut TdsState> = batch_states.iter_mut().collect();
+            let fused = m.step_batch(&mut refs, &feats);
+            let lane_out = fused.len() / batch;
+            for (lane, st) in scalar_states.iter_mut().enumerate() {
+                let out = m.step(st, &feats[lane * f..(lane + 1) * f]);
+                assert_eq!(out.len(), lane_out);
+                assert_eq!(
+                    out,
+                    fused[lane * lane_out..(lane + 1) * lane_out],
+                    "lane {lane} diverged"
+                );
+            }
+        }
+        // Streaming states must match exactly too.
+        for (a, b) in scalar_states.iter().zip(&batch_states) {
+            assert_eq!(a.conv_hist, b.conv_hist);
+        }
+    }
+
+    #[test]
+    fn step_batch_single_lane_equals_step() {
+        let m = tiny();
+        let f = m.cfg.frames_per_step() * m.cfg.n_mels;
+        let mut rng = crate::util::rng::Rng::new(23);
+        let feats: Vec<f32> = (0..f).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let mut s1 = m.state();
+        let out1 = m.step(&mut s1, &feats);
+        let mut s2 = m.state();
+        let mut refs = vec![&mut s2];
+        let out2 = m.step_batch(&mut refs, &feats);
+        assert_eq!(out1, out2);
     }
 
     #[test]

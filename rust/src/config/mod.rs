@@ -46,6 +46,42 @@ impl DecoderConfig {
     }
 }
 
+/// Dynamic-batching policy for the serving coordinator: how many ready
+/// sessions a device batch may fuse, and how long the batcher may hold a
+/// ready session waiting for lane-mates (measured in 10 ms feature
+/// frames, the system's native time unit).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchConfig {
+    /// Maximum sessions fused into one lane-batched step.
+    pub max_batch: usize,
+    /// Maximum wait for additional lanes, in feature frames (one frame =
+    /// `hop_len` samples = 10 ms at 16 kHz). 0 = never wait.
+    pub max_wait_frames: usize,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        // 8 lanes × 8 frames: wait at most one decoding step (80 ms) to
+        // fill a batch — latency bounded by one step, like the paper's
+        // per-step device loop.
+        BatchConfig { max_batch: 8, max_wait_frames: 8 }
+    }
+}
+
+impl BatchConfig {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.max_batch >= 1, "max_batch must be at least 1");
+        Ok(())
+    }
+
+    /// The wait budget as wall-clock time for a given front-end geometry.
+    pub fn max_wait(&self, model: &ModelConfig) -> std::time::Duration {
+        std::time::Duration::from_secs_f64(
+            self.max_wait_frames as f64 * model.hop_len as f64 / model.sample_rate as f64,
+        )
+    }
+}
+
 /// Resolve the artifacts directory: `$ASRPU_ARTIFACTS`, else `artifacts/`
 /// relative to the working directory, else relative to the crate root
 /// (for `cargo test` run from anywhere).
@@ -76,5 +112,15 @@ mod tests {
         let mut d = DecoderConfig::default();
         d.beam = -1.0;
         assert!(d.validate().is_err());
+    }
+
+    #[test]
+    fn batch_config_wait_is_frame_scaled() {
+        let b = BatchConfig::default();
+        b.validate().unwrap();
+        let m = ModelConfig::tiny_tds();
+        // 8 frames × 10 ms = one decoding step.
+        assert!((b.max_wait(&m).as_secs_f64() - 0.080).abs() < 1e-9);
+        assert!(BatchConfig { max_batch: 0, ..b }.validate().is_err());
     }
 }

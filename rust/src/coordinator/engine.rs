@@ -16,10 +16,10 @@
 //! features equal offline features exactly, matching training.
 
 use anyhow::Result;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::am::{TdsModel, TdsState};
-use crate::config::{DecoderConfig, ModelConfig};
+use crate::config::{BatchConfig, DecoderConfig, ModelConfig};
 use crate::decoder::{BeamDecoder, DecodeState, Transcript};
 use crate::dsp::Mfcc;
 use crate::lexicon::Lexicon;
@@ -67,6 +67,11 @@ pub struct SessionMetrics {
     /// Wall-clock of AM (mfcc+model) vs decoder within compute_s.
     pub am_s: f64,
     pub search_s: f64,
+    /// Steps that ran through the lane-batched path.
+    pub batched_steps: usize,
+    /// Σ batch occupancy over those steps (lanes this session shared its
+    /// fused steps with, itself included).
+    pub batch_lanes: usize,
 }
 
 impl SessionMetrics {
@@ -76,6 +81,82 @@ impl SessionMetrics {
             f64::INFINITY
         } else {
             self.audio_s / self.compute_s
+        }
+    }
+
+    /// Mean lanes per fused step this session took part in (1.0 = batched
+    /// path but always alone; 0.0 = never batched).
+    pub fn avg_batch_occupancy(&self) -> f64 {
+        if self.batched_steps == 0 {
+            0.0
+        } else {
+            self.batch_lanes as f64 / self.batched_steps as f64
+        }
+    }
+}
+
+/// Collects sessions with a full decoding step buffered into dynamic
+/// batches for [`Engine::step_batch`]. A pending batch closes when
+/// `max_batch` lanes are staged or the oldest lane has waited
+/// `max_wait_frames` feature frames; the server additionally flushes
+/// early when every open session is already staged (no one left to wait
+/// for), so a lone stream never pays the wait.
+pub struct Batcher {
+    cfg: BatchConfig,
+    max_wait: Duration,
+    pending: Vec<u64>,
+    oldest: Option<Instant>,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatchConfig, model: &ModelConfig) -> Self {
+        let max_wait = cfg.max_wait(model);
+        Batcher { cfg, max_wait, pending: Vec::new(), oldest: None }
+    }
+
+    /// Stage a session id (idempotent). Returns true if the batch is now
+    /// full and should flush.
+    pub fn push(&mut self, id: u64) -> bool {
+        if !self.pending.contains(&id) {
+            self.pending.push(id);
+        }
+        if self.oldest.is_none() {
+            self.oldest = Some(Instant::now());
+        }
+        self.is_full()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.pending.len() >= self.cfg.max_batch
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Remaining wall-clock budget before the pending batch must flush.
+    pub fn wait_budget(&self) -> Duration {
+        match self.oldest {
+            None => self.max_wait,
+            Some(t0) => self.max_wait.saturating_sub(t0.elapsed()),
+        }
+    }
+
+    /// Drain the pending lane set for execution.
+    pub fn take(&mut self) -> Vec<u64> {
+        self.oldest = None;
+        std::mem::take(&mut self.pending)
+    }
+
+    /// Forget a session (e.g. finished before its batch flushed).
+    pub fn remove(&mut self, id: u64) {
+        self.pending.retain(|&p| p != id);
+        if self.pending.is_empty() {
+            self.oldest = None;
         }
     }
 }
@@ -141,17 +222,136 @@ impl Engine {
     pub fn feed(&self, s: &mut Session, samples: &[f32]) -> Result<usize> {
         s.buf.extend_from_slice(samples);
         let need = self.model_cfg.samples_per_step();
+        if s.buf.len() < need {
+            return Ok(0);
+        }
         let step_len = self.model_cfg.step_len;
+        // One decoder for the whole drain (built only when steps will
+        // run): the word→LM id mapping is O(vocabulary) to build and
+        // must not be rebuilt per step.
+        let decoder = self.decoder()?;
         let mut ran = 0;
         while s.buf.len() >= need {
-            self.run_step(s)?;
+            self.run_step(s, &decoder)?;
             s.buf.drain(..step_len);
             ran += 1;
         }
         Ok(ran)
     }
 
-    fn run_step(&self, s: &mut Session) -> Result<()> {
+    /// Stage audio into a session **without** running decoding steps —
+    /// the batching server buffers here, then drains ready sessions
+    /// together through [`Self::step_batch`].
+    pub fn push_audio(&self, s: &mut Session, samples: &[f32]) {
+        s.buf.extend_from_slice(samples);
+    }
+
+    /// Decoding steps `s` could run right now from its buffered audio.
+    pub fn ready_steps(&self, s: &Session) -> usize {
+        let need = self.model_cfg.samples_per_step();
+        if s.buf.len() < need {
+            0
+        } else {
+            (s.buf.len() - need) / self.model_cfg.step_len + 1
+        }
+    }
+
+    /// Run fused decoding steps across every lane with a full step
+    /// buffered, repeating until no lane is ready; returns total
+    /// (lane, step) executions. Native lanes advance through
+    /// [`TdsModel::step_batch`] + [`BeamDecoder::step_batch`] — one
+    /// weight stream serves all lanes — and per-lane results stay
+    /// bit-identical to scalar [`Self::feed`]. The XLA backend has no
+    /// batched entry point yet and falls back to per-lane scalar steps.
+    pub fn step_batch(&self, lanes: &mut [&mut Session]) -> Result<usize> {
+        let need = self.model_cfg.samples_per_step();
+        if !lanes.iter().any(|s| s.buf.len() >= need) {
+            return Ok(0);
+        }
+        // Built once per drain, and only when at least one step will run.
+        let decoder = self.decoder()?;
+        let step_len = self.model_cfg.step_len;
+        let mut total = 0usize;
+        loop {
+            let mut ready: Vec<&mut Session> = lanes
+                .iter_mut()
+                .map(|s| &mut **s)
+                .filter(|s| s.buf.len() >= need)
+                .collect();
+            if ready.is_empty() {
+                return Ok(total);
+            }
+            let model_mfcc = match &self.backend {
+                Backend::Native { model, mfcc } => Some((model, mfcc)),
+                Backend::Xla { .. } => None,
+            };
+            let Some((model, mfcc)) = model_mfcc else {
+                for s in ready {
+                    self.run_step(s, &decoder)?;
+                    s.buf.drain(..step_len);
+                    total += 1;
+                }
+                continue;
+            };
+            let t0 = Instant::now();
+            let b = ready.len();
+            let fdim = self.model_cfg.frames_per_step() * self.model_cfg.n_mels;
+            let mut feats = Vec::with_capacity(b * fdim);
+            for s in ready.iter() {
+                feats.extend(mfcc.extract(&s.buf[..need]));
+            }
+            // AM phase: one fused forward pass for all lanes.
+            let mut am_states: Vec<&mut TdsState> = Vec::with_capacity(b);
+            for s in ready.iter_mut() {
+                match &mut s.am_state {
+                    AmState::Native(st) => am_states.push(st),
+                    AmState::Xla(_) => unreachable!("native backend with xla state"),
+                }
+            }
+            let logits = model.step_batch(&mut am_states, &feats);
+            drop(am_states);
+            let t_am = Instant::now();
+            // Decoder phase: re-block lane-major logits into per-frame
+            // [B × tokens] rows and advance every lane per frame.
+            let tokens = self.model_cfg.tokens;
+            let vps = self.model_cfg.vectors_per_step();
+            let lane_out = vps * tokens;
+            for (lane, s) in ready.iter_mut().enumerate() {
+                if let Some(all) = &mut s.logits {
+                    all.extend_from_slice(&logits[lane * lane_out..(lane + 1) * lane_out]);
+                }
+            }
+            let mut block = vec![0.0f32; b * tokens];
+            for f in 0..vps {
+                for lane in 0..b {
+                    let src = (lane * vps + f) * tokens;
+                    block[lane * tokens..(lane + 1) * tokens]
+                        .copy_from_slice(&logits[src..src + tokens]);
+                }
+                let mut decode_states: Vec<&mut DecodeState> =
+                    ready.iter_mut().map(|s| &mut s.decode).collect();
+                decoder.step_batch(&mut decode_states, &block);
+            }
+            let t_end = Instant::now();
+            // Fused wall time is shared: attribute an even share per lane
+            // so per-session RTF stays meaningful under batching.
+            let am_share = (t_am - t0).as_secs_f64() / b as f64;
+            let search_share = (t_end - t_am).as_secs_f64() / b as f64;
+            for s in ready.iter_mut() {
+                s.buf.drain(..step_len);
+                s.metrics.steps += 1;
+                s.metrics.batched_steps += 1;
+                s.metrics.batch_lanes += b;
+                s.metrics.audio_s += self.model_cfg.step_seconds();
+                s.metrics.am_s += am_share;
+                s.metrics.search_s += search_share;
+                s.metrics.compute_s += am_share + search_share;
+            }
+            total += b;
+        }
+    }
+
+    fn run_step(&self, s: &mut Session, decoder: &BeamDecoder) -> Result<()> {
         let t0 = Instant::now();
         let need = self.model_cfg.samples_per_step();
         let window = &s.buf[..need];
@@ -174,7 +374,6 @@ impl Engine {
         if let Some(all) = &mut s.logits {
             all.extend_from_slice(&logits);
         }
-        let decoder = self.decoder()?;
         for frame in logits.chunks(self.model_cfg.tokens) {
             decoder.step(&mut s.decode, frame);
         }
@@ -192,16 +391,17 @@ impl Engine {
     pub fn finish(&self, s: &mut Session) -> Result<Transcript> {
         let step_len = self.model_cfg.step_len;
         let lookahead = self.model_cfg.samples_per_step() - step_len;
+        let decoder = self.decoder()?;
         if !s.buf.is_empty() {
             // Pad so every real sample is covered by a step (+ lookahead).
             let target = s.buf.len().div_ceil(step_len) * step_len + lookahead;
             s.buf.resize(target, 0.0);
             while s.buf.len() >= self.model_cfg.samples_per_step() {
-                self.run_step(s)?;
+                self.run_step(s, &decoder)?;
                 s.buf.drain(..step_len);
             }
         }
-        Ok(self.decoder()?.finish(&s.decode))
+        Ok(decoder.finish(&s.decode))
     }
 
     /// Current best partial transcript (streaming UX, §2.4).
@@ -292,6 +492,93 @@ mod tests {
         assert!(m.steps >= 5, "utterance shorter than expected: {}", m.steps);
         assert!(m.compute_s > 0.0);
         assert!((m.am_s + m.search_s - m.compute_s).abs() < 1e-6);
+    }
+
+    #[test]
+    fn step_batch_matches_scalar_feed_transcripts() {
+        // Four sessions decoded through the fused batch path must produce
+        // exactly the transcripts (text AND score) of four scalar feeds.
+        let e = native_engine();
+        let synth = Synthesizer::default();
+        let utts: Vec<Vec<f32>> = (0..4u64)
+            .map(|i| {
+                let mut rng = Rng::new(40 + i);
+                synth.render(&[i as u32, (i + 3) as u32], &mut rng).samples
+            })
+            .collect();
+        let scalar: Vec<_> = utts
+            .iter()
+            .map(|u| e.decode_utterance(u).unwrap().0)
+            .collect();
+        let mut sessions: Vec<Session> = (0..4).map(|_| e.open(false).unwrap()).collect();
+        // Stage audio in uneven chunks, stepping the batch as we go so
+        // lanes join and leave ready sets at different times.
+        let chunk = 1000;
+        let max_len = utts.iter().map(Vec::len).max().unwrap();
+        let mut off = 0;
+        while off < max_len {
+            for (s, u) in sessions.iter_mut().zip(&utts) {
+                if off < u.len() {
+                    e.push_audio(s, &u[off..(off + chunk).min(u.len())]);
+                }
+            }
+            off += chunk;
+            let mut refs: Vec<&mut Session> = sessions.iter_mut().collect();
+            e.step_batch(&mut refs).unwrap();
+        }
+        for (s, t_ref) in sessions.iter_mut().zip(&scalar) {
+            let t = e.finish(s).unwrap();
+            assert_eq!(t.text, t_ref.text);
+            assert_eq!(t.score, t_ref.score);
+            assert!(s.metrics.batched_steps > 0);
+            assert!(s.metrics.avg_batch_occupancy() >= 1.0);
+        }
+    }
+
+    #[test]
+    fn step_batch_runs_all_buffered_steps() {
+        let e = native_engine();
+        let mut a = e.open(false).unwrap();
+        let mut b = e.open(false).unwrap();
+        // Lane a: 3 steps buffered; lane b: 1 step; fused loop must drain
+        // both fully (occupancy 2 then 1 then 1).
+        e.push_audio(&mut a, &vec![0.0; 1520 + 2 * 1280]);
+        e.push_audio(&mut b, &vec![0.0; 1520]);
+        assert_eq!(e.ready_steps(&a), 3);
+        assert_eq!(e.ready_steps(&b), 1);
+        let mut refs = vec![&mut a, &mut b];
+        let ran = e.step_batch(&mut refs).unwrap();
+        assert_eq!(ran, 4);
+        assert_eq!(a.metrics.steps, 3);
+        assert_eq!(b.metrics.steps, 1);
+        assert_eq!(e.ready_steps(&a), 0);
+        // b shared its single step with a: occupancy 2.
+        assert_eq!(b.metrics.batch_lanes, 2);
+        assert_eq!(a.metrics.batch_lanes, 2 + 1 + 1);
+    }
+
+    #[test]
+    fn batcher_policy_full_take_remove() {
+        let cfg = crate::config::BatchConfig { max_batch: 2, max_wait_frames: 8 };
+        let model = ModelConfig::tiny_tds();
+        let mut b = Batcher::new(cfg, &model);
+        assert!(b.is_empty());
+        assert!(!b.push(1));
+        assert!(!b.push(1), "staging is idempotent");
+        assert_eq!(b.len(), 1);
+        assert!(b.push(2), "second lane fills the batch");
+        assert!(b.wait_budget() <= std::time::Duration::from_millis(80));
+        let ids = b.take();
+        assert_eq!(ids, vec![1, 2]);
+        assert!(b.is_empty());
+        b.push(3);
+        b.remove(3);
+        assert!(b.is_empty());
+        assert_eq!(b.wait_budget(), cfg_wait(&model));
+    }
+
+    fn cfg_wait(model: &ModelConfig) -> std::time::Duration {
+        crate::config::BatchConfig { max_batch: 2, max_wait_frames: 8 }.max_wait(model)
     }
 
     #[test]

@@ -52,6 +52,12 @@ pub struct ServeMetrics {
     pub rejected_backpressure: u64,
     /// Queue-wait + execution latency per feed request.
     pub feed_latency: LatencyStats,
+    /// Fused device batches executed by the lane-batched core.
+    pub batches_executed: u64,
+    /// Σ lanes over those batches (occupancy numerator).
+    pub batch_lanes: u64,
+    /// Wall-clock latency of each fused batch (all its steps).
+    pub batch_latency: LatencyStats,
 }
 
 impl ServeMetrics {
@@ -64,10 +70,28 @@ impl ServeMetrics {
         }
     }
 
+    /// Mean sessions fused per device batch (1.0 = batching never found
+    /// lane-mates; 0.0 = no batches ran).
+    pub fn avg_batch_occupancy(&self) -> f64 {
+        if self.batches_executed == 0 {
+            0.0
+        } else {
+            self.batch_lanes as f64 / self.batches_executed as f64
+        }
+    }
+
+    /// Record one fused batch execution.
+    pub fn record_batch(&mut self, lanes: usize, latency: Duration) {
+        self.batches_executed += 1;
+        self.batch_lanes += lanes as u64;
+        self.batch_latency.record(latency);
+    }
+
     pub fn summary(&self) -> String {
         format!(
             "sessions {}/{} steps {} audio {:.1}s rtf {:.1}x \
-             feed p50 {:.2}ms p99 {:.2}ms max {:.2}ms rejected {}",
+             feed p50 {:.2}ms p99 {:.2}ms max {:.2}ms rejected {} \
+             batches {} occ {:.2} batch p99 {:.2}ms",
             self.sessions_finished,
             self.sessions_opened,
             self.steps_executed,
@@ -77,6 +101,9 @@ impl ServeMetrics {
             self.feed_latency.percentile(99.0),
             self.feed_latency.max(),
             self.rejected_backpressure,
+            self.batches_executed,
+            self.avg_batch_occupancy(),
+            self.batch_latency.percentile(99.0),
         )
     }
 }
@@ -104,5 +131,18 @@ mod tests {
         assert_eq!(l.mean(), 0.0);
         let m = ServeMetrics::default();
         assert!(m.rtf().is_infinite());
+        assert_eq!(m.avg_batch_occupancy(), 0.0);
+    }
+
+    #[test]
+    fn batch_occupancy_averages() {
+        let mut m = ServeMetrics::default();
+        m.record_batch(4, Duration::from_millis(2));
+        m.record_batch(2, Duration::from_millis(4));
+        assert_eq!(m.batches_executed, 2);
+        assert!((m.avg_batch_occupancy() - 3.0).abs() < 1e-9);
+        assert_eq!(m.batch_latency.count(), 2);
+        let s = m.summary();
+        assert!(s.contains("batches 2 occ 3.00"), "{s}");
     }
 }

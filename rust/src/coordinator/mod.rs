@@ -6,6 +6,6 @@ pub mod engine;
 pub mod metrics;
 pub mod server;
 
-pub use engine::{Backend, Engine, Session, SessionMetrics};
+pub use engine::{Backend, Batcher, Engine, Session, SessionMetrics};
 pub use metrics::{LatencyStats, ServeMetrics};
 pub use server::Server;

@@ -14,6 +14,12 @@
 //! bounded channel (backpressure = immediate error response when full);
 //! a single device thread owns the engine and all session state —
 //! mirroring the serialized DecodingStep semantics of the hardware.
+//!
+//! Feeds drain through the lane-batched execution core: the device loop
+//! stages each feed behind a [`Batcher`] and fuses ready sessions into
+//! one `Engine::step_batch` call. A batch flushes when it is full, when
+//! every open session is already staged (a lone stream never waits), or
+//! when the oldest staged lane exhausts the configured wait budget.
 
 use anyhow::{Context, Result};
 use std::collections::HashMap;
@@ -22,9 +28,10 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc;
 use std::time::Instant;
 
+use crate::config::BatchConfig;
 use crate::util::json::{Json, JsonObj};
 
-use super::engine::{Engine, Session};
+use super::engine::{Batcher, Engine, Session};
 use super::metrics::ServeMetrics;
 
 /// A queued unit of device work.
@@ -54,15 +61,119 @@ fn err_json(msg: &str) -> Json {
     obj(&[("error", Json::Str(msg.to_string()))])
 }
 
+/// A feed waiting for its batch to flush.
+struct StagedFeed {
+    session: u64,
+    reply: mpsc::Sender<Json>,
+    enqueued: Instant,
+}
+
+/// Run the pending batch: pull its sessions out of the map, fuse their
+/// ready steps through `Engine::step_batch`, record occupancy/latency,
+/// then answer every staged feed with its session's step count + partial.
+///
+/// Known coarseness, acceptable at this layer: if one session was fed
+/// twice before the flush (two connections), both replies report the
+/// same since-staging step delta; and a batch-level engine error is
+/// reported to every staged feed in the batch, not just the failing
+/// lane's.
+fn flush_batch(
+    engine: &Engine,
+    sessions: &mut HashMap<u64, Session>,
+    batcher: &mut Batcher,
+    staged: &mut Vec<StagedFeed>,
+    metrics: &mut ServeMetrics,
+) {
+    let ids = batcher.take();
+    // Pull the batch's sessions out of the map so every lane can be
+    // borrowed mutably at once; they go back right after the fused step.
+    let mut lanes: Vec<(u64, Session, usize)> = Vec::with_capacity(ids.len());
+    for id in ids {
+        if let Some(s) = sessions.remove(&id) {
+            let steps_before = s.metrics.steps;
+            lanes.push((id, s, steps_before));
+        }
+    }
+    let occupancy = lanes.iter().filter(|(_, s, _)| engine.ready_steps(s) > 0).count();
+    let t0 = Instant::now();
+    let result = {
+        let mut refs: Vec<&mut Session> = lanes.iter_mut().map(|(_, s, _)| s).collect();
+        engine.step_batch(&mut refs)
+    };
+    if occupancy > 0 {
+        metrics.record_batch(occupancy, t0.elapsed());
+    }
+    let err = result.err().map(|e| format!("feed failed: {e:#}"));
+    for (id, s, steps_before) in lanes {
+        let steps = s.metrics.steps - steps_before;
+        metrics.steps_executed += steps as u64;
+        metrics.audio_seconds += steps as f64 * engine.model_cfg.step_seconds();
+        let partial = engine.partial(&s).map(|t| t.text).unwrap_or_default();
+        sessions.insert(id, s);
+        staged.retain(|f| {
+            if f.session != id {
+                return true;
+            }
+            let resp = match &err {
+                Some(msg) => err_json(msg),
+                None => obj(&[
+                    ("steps", Json::Num(steps as f64)),
+                    ("partial", Json::Str(partial.clone())),
+                ]),
+            };
+            metrics.feed_latency.record(f.enqueued.elapsed());
+            let _ = f.reply.send(resp);
+            false
+        });
+    }
+    // Staged feeds whose session vanished from the map (finished from
+    // another connection mid-batch): answer rather than hang the client.
+    for f in staged.drain(..) {
+        let _ = f.reply.send(err_json("session closed before its batch ran"));
+    }
+}
+
 /// Run the device loop over the job channel (blocks). Exposed for
 /// in-process use (tests, examples) without TCP.
-pub(crate) fn device_loop(engine: Engine, jobs: mpsc::Receiver<Job>) {
+pub(crate) fn device_loop(engine: Engine, jobs: mpsc::Receiver<Job>, batch_cfg: BatchConfig) {
     let mut sessions: HashMap<u64, Session> = HashMap::new();
     let mut next_id: u64 = 1;
     let mut metrics = ServeMetrics::default();
-    for job in jobs {
+    let mut batcher = Batcher::new(batch_cfg, &engine.model_cfg);
+    let mut staged: Vec<StagedFeed> = Vec::new();
+    loop {
+        // Enforce the wait budget even under sustained job traffic: a
+        // queued message makes recv_timeout return Ok without ever timing
+        // out, so an expired partial batch must flush here, not just on
+        // the Timeout arm.
+        if !staged.is_empty() && batcher.wait_budget().is_zero() {
+            flush_batch(&engine, &mut sessions, &mut batcher, &mut staged, &mut metrics);
+        }
+        // Block for the next job; with feeds staged, cap the wait at the
+        // batcher's remaining budget so a partial batch still flushes.
+        let job = if staged.is_empty() {
+            match jobs.recv() {
+                Ok(j) => j,
+                Err(_) => break,
+            }
+        } else {
+            match jobs.recv_timeout(batcher.wait_budget()) {
+                Ok(j) => j,
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    flush_batch(&engine, &mut sessions, &mut batcher, &mut staged, &mut metrics);
+                    continue;
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    flush_batch(&engine, &mut sessions, &mut batcher, &mut staged, &mut metrics);
+                    break;
+                }
+            }
+        };
         match job {
-            Job::Shutdown => break,
+            Job::Shutdown => {
+                flush_batch(&engine, &mut sessions, &mut batcher, &mut staged, &mut metrics);
+                break;
+            }
             Job::Open { reply } => {
                 let resp = match engine.open(false) {
                     Ok(s) => {
@@ -77,29 +188,35 @@ pub(crate) fn device_loop(engine: Engine, jobs: mpsc::Receiver<Job>) {
                 let _ = reply.send(resp);
             }
             Job::Feed { session, samples, enqueued, reply } => {
-                let resp = match sessions.get_mut(&session) {
-                    None => err_json("unknown session"),
-                    Some(s) => match engine.feed(s, &samples) {
-                        Ok(steps) => {
-                            metrics.steps_executed += steps as u64;
-                            metrics.audio_seconds +=
-                                steps as f64 * engine.model_cfg.step_seconds();
-                            let partial = engine
-                                .partial(s)
-                                .map(|t| t.text)
-                                .unwrap_or_default();
-                            metrics.feed_latency.record(enqueued.elapsed());
-                            obj(&[
-                                ("steps", Json::Num(steps as f64)),
-                                ("partial", Json::Str(partial)),
-                            ])
+                match sessions.get_mut(&session) {
+                    None => {
+                        let _ = reply.send(err_json("unknown session"));
+                    }
+                    Some(s) => {
+                        engine.push_audio(s, &samples);
+                        staged.push(StagedFeed { session, reply, enqueued });
+                        // Flush when the batch is full — or when every open
+                        // session is already staged, since no further lane
+                        // can arrive before some staged client unblocks.
+                        if batcher.push(session) || batcher.len() >= sessions.len() {
+                            flush_batch(
+                                &engine,
+                                &mut sessions,
+                                &mut batcher,
+                                &mut staged,
+                                &mut metrics,
+                            );
                         }
-                        Err(e) => err_json(&format!("feed failed: {e:#}")),
-                    },
-                };
-                let _ = reply.send(resp);
+                    }
+                }
             }
             Job::Finish { session, reply } => {
+                // Any staged work (this session's included) runs first so
+                // the transcript covers all fed audio.
+                if !staged.is_empty() {
+                    flush_batch(&engine, &mut sessions, &mut batcher, &mut staged, &mut metrics);
+                }
+                batcher.remove(session);
                 let resp = match sessions.remove(&session) {
                     None => err_json("unknown session"),
                     Some(mut s) => match engine.finish(&mut s) {
@@ -111,6 +228,7 @@ pub(crate) fn device_loop(engine: Engine, jobs: mpsc::Receiver<Job>) {
                                 ("score", Json::Num(t.score as f64)),
                                 ("rtf", Json::Num(s.metrics.rtf())),
                                 ("steps", Json::Num(s.metrics.steps as f64)),
+                                ("batch_occupancy", Json::Num(s.metrics.avg_batch_occupancy())),
                             ])
                         }
                         Err(e) => err_json(&format!("finish failed: {e:#}")),
@@ -184,13 +302,16 @@ fn handle_conn(stream: TcpStream, jobs: mpsc::SyncSender<Job>) -> Result<()> {
 
 impl Server {
     /// Bind and serve. `make_engine` runs on the device thread (PJRT
-    /// handles are not `Send`). Returns once bound; serving continues on
+    /// handles are not `Send`). `batch` sets the dynamic-batching policy
+    /// feeds drain through. Returns once bound; serving continues on
     /// background threads.
     pub fn start(
         addr: &str,
         make_engine: impl FnOnce() -> Result<Engine> + Send + 'static,
         queue_depth: usize,
+        batch: BatchConfig,
     ) -> Result<Server> {
+        batch.validate()?;
         let listener = TcpListener::bind(addr)
             .with_context(|| format!("binding {addr}"))?;
         let local = listener.local_addr()?.to_string();
@@ -198,7 +319,7 @@ impl Server {
         std::thread::Builder::new()
             .name("asrpu-device".into())
             .spawn(move || match make_engine() {
-                Ok(engine) => device_loop(engine, jobs_rx),
+                Ok(engine) => device_loop(engine, jobs_rx, batch),
                 Err(e) => eprintln!("engine init failed: {e:#}"),
             })?;
         let accept_tx = jobs_tx.clone();
@@ -236,6 +357,7 @@ mod tests {
                 )
             },
             64,
+            BatchConfig::default(),
         )
         .unwrap()
     }
@@ -277,6 +399,38 @@ mod tests {
         assert!(resps[2].get("text").is_some(), "{:?}", resps[2]);
         let summary = resps[3].get("summary").unwrap().as_str().unwrap().to_string();
         assert!(summary.contains("sessions 1/1"), "{summary}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn batched_feeds_report_occupancy() {
+        // Two sessions fed from one connection: the second feed finds both
+        // sessions open with one staged, so the device batches them when
+        // the wait budget allows — and stats must expose batch counters
+        // either way.
+        let server = start_test_server();
+        let samples: Vec<String> = (0..1600)
+            .map(|i| format!("{:.4}", (i as f32 * 0.01).sin() * 0.1))
+            .collect();
+        let joined = samples.join(",");
+        let resps = roundtrip(
+            &server.addr,
+            &[
+                r#"{"op":"open"}"#.to_string(),
+                r#"{"op":"open"}"#.to_string(),
+                format!(r#"{{"op":"feed","session":1,"samples":[{joined}]}}"#),
+                format!(r#"{{"op":"feed","session":2,"samples":[{joined}]}}"#),
+                r#"{"op":"finish","session":1}"#.to_string(),
+                r#"{"op":"finish","session":2}"#.to_string(),
+                r#"{"op":"stats"}"#.to_string(),
+            ],
+        );
+        assert_eq!(resps[2].get("steps").unwrap().as_f64(), Some(1.0));
+        assert_eq!(resps[3].get("steps").unwrap().as_f64(), Some(1.0));
+        assert!(resps[4].get("batch_occupancy").is_some(), "{:?}", resps[4]);
+        let summary = resps[6].get("summary").unwrap().as_str().unwrap().to_string();
+        assert!(summary.contains("batches"), "{summary}");
+        assert!(summary.contains("sessions 2/2"), "{summary}");
         server.shutdown();
     }
 

@@ -113,6 +113,25 @@ impl<'a> BeamDecoder<'a> {
     /// Expand all hypotheses with one acoustic frame of token
     /// log-probabilities, then sort + prune (the hypothesis unit's job).
     pub fn step(&self, state: &mut DecodeState, logp: &[f32]) {
+        self.expand_and_prune(state, logp);
+    }
+
+    /// Advance `B = states.len()` independent per-lane decode states over a
+    /// lane-major `[B × tokens]` logit block — the decoder half of the
+    /// lane-batched execution core. The lexicon trie, LM and word-id
+    /// mapping are borrowed once for the whole block instead of once per
+    /// lane; each lane's expansion + prune is identical to [`Self::step`],
+    /// so batched decoding is bit-identical to B sequential scalar decodes.
+    pub fn step_batch(&self, states: &mut [&mut DecodeState], logps: &[f32]) {
+        let tokens = self.lex.tokens.len();
+        debug_assert_eq!(logps.len(), states.len() * tokens);
+        for (lane, state) in states.iter_mut().enumerate() {
+            self.expand_and_prune(state, &logps[lane * tokens..(lane + 1) * tokens]);
+        }
+    }
+
+    /// One frame of hypothesis expansion + prune for a single lane.
+    fn expand_and_prune(&self, state: &mut DecodeState, logp: &[f32]) {
         debug_assert_eq!(logp.len(), self.lex.tokens.len());
         let mut cands: Vec<Hyp> = Vec::with_capacity(state.hyps.len() * 8);
         for h in &state.hyps {
@@ -396,6 +415,49 @@ mod tests {
         frames.extend(frames_for(&[a], tokens));
         let t = decode(&lex, &lm, &frames);
         assert_eq!(t.text, "ab ba");
+    }
+
+    #[test]
+    fn step_batch_matches_sequential_lanes() {
+        // Two lanes decoding different audio through one decoder: batched
+        // stepping must reproduce each scalar lane exactly (hypothesis
+        // sets, scores and final transcripts).
+        let (lex, lm) = fixtures();
+        let a = lex.tokens.id("a").unwrap();
+        let b = lex.tokens.id("b").unwrap();
+        let c = lex.tokens.id("c").unwrap();
+        let dec = BeamDecoder::new(&lex, &lm, DecoderConfig::default()).unwrap();
+        let tokens = lex.tokens.len();
+        let lane_paths: Vec<Vec<u32>> =
+            vec![vec![a, b, BLANK, b, a], vec![a, b, c, BLANK, BLANK]];
+        let frames: Vec<Vec<f32>> =
+            lane_paths.iter().map(|p| frames_for(p, tokens)).collect();
+        // Scalar reference.
+        let mut scalar: Vec<DecodeState> = (0..2).map(|_| dec.start()).collect();
+        for (lane, st) in scalar.iter_mut().enumerate() {
+            for row in frames[lane].chunks(tokens) {
+                dec.step(st, row);
+            }
+        }
+        // Batched: interleave the same frames as [B × tokens] blocks.
+        let mut batched: Vec<DecodeState> = (0..2).map(|_| dec.start()).collect();
+        let n_frames = lane_paths[0].len();
+        for f in 0..n_frames {
+            let mut block = Vec::with_capacity(2 * tokens);
+            for lane_frames in &frames {
+                block.extend_from_slice(&lane_frames[f * tokens..(f + 1) * tokens]);
+            }
+            let mut refs: Vec<&mut DecodeState> = batched.iter_mut().collect();
+            dec.step_batch(&mut refs, &block);
+        }
+        for lane in 0..2 {
+            assert_eq!(scalar[lane].hyps, batched[lane].hyps, "lane {lane} hyps");
+            assert_eq!(scalar[lane].stats, batched[lane].stats, "lane {lane} stats");
+            let ts = dec.finish(&scalar[lane]);
+            let tb = dec.finish(&batched[lane]);
+            assert_eq!(ts.text, tb.text);
+            assert_eq!(ts.score, tb.score);
+        }
     }
 
     #[test]

@@ -7,7 +7,9 @@
 //!   time-depth-separable acoustic model executed natively ([`am`]) or via
 //!   AOT-compiled XLA artifacts ([`runtime`]), and a CTC beam-search
 //!   decoder with lexicon trie and n-gram LM ([`decoder`], [`lexicon`],
-//!   [`lm`]), orchestrated by the streaming [`coordinator`];
+//!   [`lm`]), orchestrated by the streaming [`coordinator`] whose
+//!   lane-batched execution core fuses concurrent sessions into shared
+//!   device steps (bit-identical to scalar decoding per lane);
 //! * a **cycle-approximate simulator of the ASRPU chip** ([`accel`]) with
 //!   analytical area/power models ([`power`]) that regenerates every table
 //!   and figure from the paper's evaluation ([`report`]).

@@ -14,7 +14,7 @@ use anyhow::{bail, Result};
 
 use asrpu::accel::{simulate_step, HypWorkload, SimMode};
 use asrpu::am::TdsModel;
-use asrpu::config::{artifacts_dir, AccelConfig, DecoderConfig, ModelConfig};
+use asrpu::config::{artifacts_dir, AccelConfig, BatchConfig, DecoderConfig, ModelConfig};
 use asrpu::coordinator::{Engine, Server};
 use asrpu::power::ChipBudget;
 use asrpu::report;
@@ -26,7 +26,7 @@ use asrpu::util::table::Table;
 
 const VALUE_KEYS: &[&str] = &[
     "n", "seed", "beam", "port", "pes", "mac", "freq-mhz", "backend", "mode", "steps",
-    "queue",
+    "queue", "batch", "batch-wait",
 ];
 
 fn main() {
@@ -124,6 +124,11 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
     let port = args.usize_or("port", 7700)?;
     let queue = args.usize_or("queue", 128)?;
     let backend = args.str_or("backend", "auto");
+    let batch_default = BatchConfig::default();
+    let batch = BatchConfig {
+        max_batch: args.usize_or("batch", batch_default.max_batch)?,
+        max_wait_frames: args.usize_or("batch-wait", batch_default.max_wait_frames)?,
+    };
     let server = Server::start(
         &format!("127.0.0.1:{port}"),
         move || {
@@ -133,9 +138,11 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
             build_engine(&args)
         },
         queue,
+        batch,
     )?;
     println!(
-        "asrpu serving on {} (JSON lines; ops: open/feed/finish/stats)",
+        "asrpu serving on {} (JSON lines; ops: open/feed/finish/stats; \
+         lane-batched device loop)",
         server.addr
     );
     loop {

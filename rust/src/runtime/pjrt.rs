@@ -1,0 +1,109 @@
+//! PJRT runtime: load the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py`, compile them on the CPU PJRT client, and
+//! execute them from the request path — python never runs at inference
+//! time.
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 emits protos with 64-bit
+//! instruction ids which xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A PJRT client plus the executables loaded on it.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+/// One compiled computation.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Runtime {
+    /// CPU PJRT client (the only backend in this environment; a TPU
+    /// plugin would slot in here unchanged).
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// The underlying PJRT client (cheap `Rc` clone; buffers keep it
+    /// alive).
+    pub fn client_handle(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Load an HLO-text file and compile it.
+    pub fn load_hlo(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable {
+            exe,
+            name: path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+        })
+    }
+}
+
+impl Executable {
+    /// Execute with host literals; the jax export wraps results in a
+    /// tuple (`return_tuple=True`), which is decomposed here.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        Ok(tuple.to_tuple()?)
+    }
+
+    /// Execute with device buffers (hot path: no host round-trips for
+    /// the inputs). Returns the raw output buffers — either one tuple
+    /// buffer or one buffer per result leaf, depending on the PJRT
+    /// plugin's untupling behaviour; callers handle both.
+    pub fn run_buffers(&self, inputs: &[&xla::PjRtBuffer]) -> Result<Vec<xla::PjRtBuffer>> {
+        let mut result = self
+            .exe
+            .execute_b(inputs)
+            .with_context(|| format!("executing {} (buffers)", self.name))?;
+        anyhow::ensure!(!result.is_empty(), "no execution results");
+        Ok(std::mem::take(&mut result[0]))
+    }
+}
+
+/// Build an f32 literal of the given shape.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(
+        n as usize == data.len(),
+        "literal shape {dims:?} != data len {}",
+        data.len()
+    );
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Zero-filled f32 literal.
+pub fn literal_zeros(dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    literal_f32(&vec![0.0; n as usize], dims)
+}
+
+/// Extract f32 data from a literal.
+pub fn literal_to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}

@@ -1,0 +1,58 @@
+//! Stub runtime compiled when the `xla` feature is off (the offline
+//! default): same types and signatures as the PJRT-backed implementation,
+//! but every entry point reports that the artifact runtime is
+//! unavailable. Callers already gate on `artifacts/meta.json` before
+//! touching the runtime, so in practice these errors only surface when
+//! artifacts exist but the crate was built without PJRT support.
+
+use anyhow::{bail, Result};
+use std::path::Path;
+
+use super::meta::Meta;
+
+const NO_XLA: &str =
+    "built without the `xla` feature: the PJRT artifact runtime is unavailable \
+     (use the native backend, or rebuild with --features xla)";
+
+/// Stub PJRT client handle.
+pub struct Runtime {
+    _private: (),
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        bail!(NO_XLA)
+    }
+
+    pub fn platform(&self) -> String {
+        "stub".into()
+    }
+}
+
+/// Stub streaming state.
+pub struct XlaState {
+    _private: (),
+}
+
+/// Stub artifact-backed acoustic model.
+pub struct XlaAm {
+    pub meta: Meta,
+}
+
+impl XlaAm {
+    pub fn load(_runtime: &Runtime, _dir: &Path) -> Result<Self> {
+        bail!(NO_XLA)
+    }
+
+    pub fn state(&self) -> Result<XlaState> {
+        bail!(NO_XLA)
+    }
+
+    pub fn mfcc(&self, _samples: &[f32]) -> Result<Vec<f32>> {
+        bail!(NO_XLA)
+    }
+
+    pub fn step(&self, _state: &mut XlaState, _feats: &[f32]) -> Result<Vec<f32>> {
+        bail!(NO_XLA)
+    }
+}

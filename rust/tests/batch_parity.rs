@@ -1,0 +1,213 @@
+//! Batched-vs-scalar parity: the lane-batched execution core must be
+//! **bit-identical** to running each lane alone — `==` on f32, no
+//! epsilon. This is the contract that lets the serving coordinator batch
+//! sessions opportunistically (whatever lanes happen to be ready) without
+//! ever changing a transcript: batching is purely a throughput decision.
+//!
+//! Covered here end-to-end and per primitive: `fc`, `layer_norm`,
+//! `log_softmax`, `conv_step`, `TdsModel::step_batch`,
+//! `BeamDecoder::step_batch` and `Engine::step_batch`.
+
+use asrpu::am::{ops, TdsModel, TdsState};
+use asrpu::config::{DecoderConfig, ModelConfig};
+use asrpu::coordinator::{Engine, Session};
+use asrpu::decoder::{BeamDecoder, DecodeState};
+use asrpu::lm::NgramLm;
+use asrpu::synth::spec;
+use asrpu::util::prop;
+use asrpu::util::rng::Rng;
+
+#[test]
+fn fc_batch_parity() {
+    prop::check("fc-batch-parity-e2e", 40, |g| {
+        let in_dim = 1 + g.index(48);
+        let out_dim = 1 + g.index(32);
+        let batch = 1 + g.index(8);
+        let w = g.vec_of(in_dim * out_dim, |r| r.uniform(-1.5, 1.5));
+        let b = g.vec_of(out_dim, |r| r.uniform(-1.0, 1.0));
+        let xs = g.vec_of(batch * in_dim, |r| r.uniform(-3.0, 3.0));
+        let mut fused = Vec::new();
+        ops::fc_batch(&w, &b, &xs, batch, &mut fused);
+        let mut lane = Vec::new();
+        for l in 0..batch {
+            ops::fc(&w, &b, &xs[l * in_dim..(l + 1) * in_dim], &mut lane);
+            asrpu::prop_assert!(
+                lane == fused[l * out_dim..(l + 1) * out_dim],
+                "fc lane {l} not bit-identical"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn layer_norm_batch_parity() {
+    prop::check("layer-norm-batch-parity-e2e", 40, |g| {
+        let dim = 2 + g.index(64);
+        let batch = 1 + g.index(8);
+        let gain = g.vec_of(dim, |r| r.uniform(0.1, 2.0));
+        let bias = g.vec_of(dim, |r| r.uniform(-1.0, 1.0));
+        let xs = g.vec_of(batch * dim, |r| r.uniform(-5.0, 5.0));
+        let mut fused = xs.clone();
+        ops::layer_norm_batch(&gain, &bias, &mut fused, batch, 1e-5);
+        let mut scalar = xs;
+        for l in scalar.chunks_mut(dim) {
+            ops::layer_norm(&gain, &bias, l, 1e-5);
+        }
+        asrpu::prop_assert!(fused == scalar, "layer_norm lanes not bit-identical");
+        Ok(())
+    });
+}
+
+#[test]
+fn log_softmax_batch_parity() {
+    prop::check("log-softmax-batch-parity-e2e", 40, |g| {
+        let dim = 2 + g.index(64);
+        let batch = 1 + g.index(8);
+        let xs = g.vec_of(batch * dim, |r| r.uniform(-20.0, 20.0));
+        let mut fused = xs.clone();
+        ops::log_softmax_batch(&mut fused, batch);
+        let mut scalar = xs;
+        for l in scalar.chunks_mut(dim) {
+            ops::log_softmax(l);
+        }
+        asrpu::prop_assert!(fused == scalar, "log_softmax lanes not bit-identical");
+        Ok(())
+    });
+}
+
+#[test]
+fn conv_step_batch_parity() {
+    prop::check("conv-batch-parity-e2e", 30, |g| {
+        let in_ch = 1 + g.index(4);
+        let out_ch = 1 + g.index(4);
+        let kw = 1 + g.index(4);
+        let width = 1 + g.index(10);
+        let batch = 1 + g.index(6);
+        let w = g.vec_of(out_ch * in_ch * kw, |r| r.uniform(-1.0, 1.0));
+        let b = g.vec_of(out_ch, |r| r.uniform(-0.5, 0.5));
+        let lane_in = in_ch * width;
+        let lane_out = out_ch * width;
+        let blocks: Vec<Vec<f32>> =
+            (0..kw).map(|_| g.vec_of(batch * lane_in, |r| r.uniform(-2.0, 2.0))).collect();
+        let window: Vec<&[f32]> = blocks.iter().map(|v| v.as_slice()).collect();
+        let mut fused = Vec::new();
+        ops::conv_step_batch(&w, &b, &window, batch, in_ch, out_ch, kw, width, &mut fused);
+        let mut scalar = Vec::new();
+        for l in 0..batch {
+            let lane_win: Vec<&[f32]> = blocks
+                .iter()
+                .map(|blk| &blk[l * lane_in..(l + 1) * lane_in])
+                .collect();
+            ops::conv_step(&w, &b, &lane_win, in_ch, out_ch, kw, width, &mut scalar);
+            asrpu::prop_assert!(
+                scalar == fused[l * lane_out..(l + 1) * lane_out],
+                "conv lane {l} not bit-identical"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn tds_model_step_batch_parity() {
+    // Multi-step streaming parity: B lanes through step_batch (carrying
+    // per-lane conv history) vs B independent scalar streams.
+    let model = TdsModel::random(ModelConfig::tiny_tds(), 77);
+    let f = model.cfg.frames_per_step() * model.cfg.n_mels;
+    prop::check("tds-step-batch-parity", 10, |g| {
+        let batch = 1 + g.index(6);
+        let steps = 1 + g.index(3);
+        let mut scalar_states: Vec<TdsState> = (0..batch).map(|_| model.state()).collect();
+        let mut batch_states: Vec<TdsState> = (0..batch).map(|_| model.state()).collect();
+        for _ in 0..steps {
+            let feats = g.vec_of(batch * f, |r| r.uniform(-1.0, 1.0));
+            let mut refs: Vec<&mut TdsState> = batch_states.iter_mut().collect();
+            let fused = model.step_batch(&mut refs, &feats);
+            let lane_out = fused.len() / batch;
+            for (l, st) in scalar_states.iter_mut().enumerate() {
+                let out = model.step(st, &feats[l * f..(l + 1) * f]);
+                asrpu::prop_assert!(
+                    out == fused[l * lane_out..(l + 1) * lane_out],
+                    "AM lane {l} not bit-identical at batch {batch}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn beam_decoder_step_batch_parity() {
+    // Random (realistically messy) log-prob frames through the synthetic
+    // protocol's lexicon + LM: batched decode states must track scalar
+    // ones exactly, including final transcript scores.
+    let lex = spec::lexicon();
+    let lm = NgramLm::estimate(&spec::sample_corpus(500, 1234), 0.4).unwrap();
+    let dec = BeamDecoder::new(&lex, &lm, DecoderConfig::default()).unwrap();
+    let tokens = lex.tokens.len();
+    prop::check("decoder-step-batch-parity", 8, |g| {
+        let batch = 1 + g.index(4);
+        let frames = 4 + g.index(12);
+        let mut scalar: Vec<DecodeState> = (0..batch).map(|_| dec.start()).collect();
+        let mut fused: Vec<DecodeState> = (0..batch).map(|_| dec.start()).collect();
+        for _ in 0..frames {
+            // One sharp token per lane over a noisy floor.
+            let mut block = Vec::with_capacity(batch * tokens);
+            for _ in 0..batch {
+                let mut row: Vec<f32> = (0..tokens).map(|_| g.rng.uniform(-9.0, -2.0)).collect();
+                row[g.index(tokens)] = -0.1;
+                block.extend_from_slice(&row);
+            }
+            for (l, st) in scalar.iter_mut().enumerate() {
+                dec.step(st, &block[l * tokens..(l + 1) * tokens]);
+            }
+            let mut refs: Vec<&mut DecodeState> = fused.iter_mut().collect();
+            dec.step_batch(&mut refs, &block);
+        }
+        for l in 0..batch {
+            asrpu::prop_assert!(
+                scalar[l].hyps == fused[l].hyps,
+                "decoder lane {l} hypothesis sets diverged"
+            );
+            let a = dec.finish(&scalar[l]);
+            let b = dec.finish(&fused[l]);
+            asrpu::prop_assert!(a.text == b.text, "lane {l} text diverged");
+            asrpu::prop_assert!(a.score == b.score, "lane {l} score diverged");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn engine_step_batch_end_to_end_parity() {
+    // Whole pipeline: MFCC → AM → beam search. Batched sessions must
+    // produce byte-identical transcripts and bit-identical scores to
+    // scalar feeds of the same audio.
+    let engine = Engine::native(
+        TdsModel::random(ModelConfig::tiny_tds(), 9),
+        DecoderConfig::default(),
+    )
+    .unwrap();
+    let synth = asrpu::synth::Synthesizer::default();
+    let utts: Vec<Vec<f32>> = (0..3u64)
+        .map(|i| {
+            let mut rng = Rng::new(100 + i);
+            synth.render(&[(2 * i) as u32, (2 * i + 1) as u32], &mut rng).samples
+        })
+        .collect();
+    let scalar: Vec<_> = utts.iter().map(|u| engine.decode_utterance(u).unwrap().0).collect();
+    let mut sessions: Vec<Session> =
+        (0..utts.len()).map(|_| engine.open(false).unwrap()).collect();
+    for (s, u) in sessions.iter_mut().zip(&utts) {
+        engine.push_audio(s, u);
+    }
+    let mut refs: Vec<&mut Session> = sessions.iter_mut().collect();
+    engine.step_batch(&mut refs).unwrap();
+    for (s, reference) in sessions.iter_mut().zip(&scalar) {
+        let t = engine.finish(s).unwrap();
+        assert_eq!(t.text, reference.text);
+        assert_eq!(t.score, reference.score);
+        assert_eq!(t.words, reference.words);
+    }
+}

@@ -118,8 +118,8 @@ fn mac_width_only_affects_dot_product_kernels() {
     let model = ModelConfig::paper_tds();
     let a8 = AccelConfig::paper();
     let a16 = AccelConfig { mac_vector_width: 16, ..AccelConfig::paper() };
-    let k8 = build_step_kernels(&model, &a8, &HypWorkload::default());
-    let k16 = build_step_kernels(&model, &a16, &HypWorkload::default());
+    let k8 = build_step_kernels(&model, &a8, &HypWorkload::default(), 1);
+    let k16 = build_step_kernels(&model, &a16, &HypWorkload::default(), 1);
     for (x, y) in k8.iter().zip(&k16) {
         match x.class {
             KernelClass::Conv | KernelClass::Fc => {
