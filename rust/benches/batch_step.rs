@@ -12,7 +12,7 @@
 
 use asrpu::am::{TdsModel, TdsState};
 use asrpu::bench::Bench;
-use asrpu::config::{DecoderConfig, ModelConfig};
+use asrpu::config::{DecoderConfig, ModelConfig, Precision};
 use asrpu::decoder::{BeamDecoder, DecodeState};
 use asrpu::lm::NgramLm;
 use asrpu::synth::spec;
@@ -68,7 +68,7 @@ fn main() {
 
     // --- paper-scale AM in f32: the memory-bound headline.
     let mut bq = Bench::quick();
-    let paper_cfg = ModelConfig { quantized: false, ..ModelConfig::paper_tds() };
+    let paper_cfg = ModelConfig { precision: Precision::F32, ..ModelConfig::paper_tds() };
     let fps_frames = paper_cfg.frames_per_step();
     let paper = TdsModel::random(paper_cfg, 5);
     let pf = paper.cfg.frames_per_step() * paper.cfg.n_mels;

@@ -1,0 +1,93 @@
+//! Bench: the AM micro-kernels head-to-head — naive (reference) vs tiled
+//! (register-blocked 4×4) vs int8 `fc_batch` at a paper-scale FC shape
+//! (1200×1200, the widest hidden FC of §5.2), swept over
+//! B ∈ {1, 4, 16, 64} lanes.
+//!
+//! Reports GMAC/s per kernel per lane count and the tiled/int8 speedups
+//! over naive, and writes the whole table to `BENCH_gemm.json` at the
+//! repository root (consumed by CHANGES.md / perf tracking).
+
+use asrpu::am::gemm;
+use asrpu::am::quant::quantize_rows;
+use asrpu::bench::Bench;
+use asrpu::util::json::{Json, JsonObj};
+use asrpu::util::rng::Rng;
+
+const IN_DIM: usize = 1200;
+const OUT_DIM: usize = 1200;
+
+fn gmacs(batch: usize, secs: f64) -> f64 {
+    (batch * IN_DIM * OUT_DIM) as f64 / secs / 1e9
+}
+
+fn main() {
+    let mut rng = Rng::new(17);
+    let w: Vec<f32> = (0..IN_DIM * OUT_DIM).map(|_| rng.uniform(-0.05, 0.05)).collect();
+    let bias: Vec<f32> = (0..OUT_DIM).map(|_| rng.uniform(-0.1, 0.1)).collect();
+    let qw = quantize_rows(&w, OUT_DIM, IN_DIM);
+
+    let mut b = Bench::quick();
+    let mut rows = Vec::new();
+    for batch in [1usize, 4, 16, 64] {
+        let xs: Vec<f32> = (0..batch * IN_DIM).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let mut out = vec![0.0f32; batch * OUT_DIM];
+        let mut xsum = Vec::new();
+
+        let naive = b
+            .run(&format!("gemm/fc/naive/B{batch}"), || {
+                gemm::fc_batch_naive_into(&w, &bias, &xs, batch, &mut out);
+                out[0]
+            })
+            .median
+            .as_secs_f64();
+        let tiled = b
+            .run(&format!("gemm/fc/tiled/B{batch}"), || {
+                gemm::fc_batch_into(&w, &bias, &xs, batch, &mut out);
+                out[0]
+            })
+            .median
+            .as_secs_f64();
+        let int8 = b
+            .run(&format!("gemm/fc/int8/B{batch}"), || {
+                gemm::fc_batch_int8_into(
+                    &qw.q, &qw.scale, &qw.zp, &bias, &xs, batch, &mut xsum, &mut out,
+                );
+                out[0]
+            })
+            .median
+            .as_secs_f64();
+        rows.push((batch, naive, tiled, int8));
+    }
+
+    println!("\nGMAC/s by kernel and lane count (speedup vs naive):");
+    let mut json_rows = Vec::new();
+    for &(batch, naive, tiled, int8) in &rows {
+        println!(
+            "  B={batch:<3} naive {:>7.2}   tiled {:>7.2} ({:>5.2}x)   int8 {:>7.2} ({:>5.2}x)",
+            gmacs(batch, naive),
+            gmacs(batch, tiled),
+            naive / tiled,
+            gmacs(batch, int8),
+            naive / int8,
+        );
+        let mut o = JsonObj::new();
+        o.insert("batch", Json::Num(batch as f64));
+        o.insert("naive_gmacs", Json::Num(gmacs(batch, naive)));
+        o.insert("tiled_gmacs", Json::Num(gmacs(batch, tiled)));
+        o.insert("int8_gmacs", Json::Num(gmacs(batch, int8)));
+        o.insert("tiled_speedup", Json::Num(naive / tiled));
+        o.insert("int8_speedup", Json::Num(naive / int8));
+        json_rows.push(Json::Obj(o));
+    }
+    let mut doc = JsonObj::new();
+    doc.insert("bench", Json::Str("gemm_kernels".into()));
+    doc.insert("shape", Json::Str(format!("fc {OUT_DIM}x{IN_DIM}")));
+    doc.insert("rows", Json::Arr(json_rows));
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_gemm.json");
+    match std::fs::write(&path, Json::Obj(doc).to_pretty()) {
+        Ok(()) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}

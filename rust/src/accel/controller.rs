@@ -104,11 +104,11 @@ impl StepReport {
 /// in-flight activation buffers, at int8 activation width for the
 /// quantized paper model.
 pub fn inter_step_state_bytes(model: &ModelConfig) -> u64 {
-    let elem = if model.quantized { 1 } else { 4 };
+    let elem = model.precision.bytes_per_weight() as u64;
     let mut bytes = 0u64;
     for layer in model.layers() {
         if let Layer::Conv { in_ch, kw, w, .. } = &layer {
-            bytes += ((kw - 1) * in_ch * w * elem) as u64;
+            bytes += ((kw - 1) * in_ch * w) as u64 * elem;
         }
     }
     bytes

@@ -169,7 +169,7 @@ pub fn build_step_kernels(
     // Acoustic model layers. Track each layer's temporal rate.
     let mut rate_div = 1usize; // output timesteps = frames / rate_div
     for layer in model.layers() {
-        let bytes_per_elem = if model.quantized { 1 } else { 4 };
+        let bytes_per_elem = model.precision.bytes_per_weight();
         match &layer {
             Layer::Conv { out_ch, stride, w, in_ch, kw, .. } => {
                 rate_div *= stride;
@@ -179,13 +179,13 @@ pub fn build_step_kernels(
                     class: KernelClass::Conv,
                     threads: (out_ch * w) as u64 * t_out,
                     instr_per_thread: dot_thread_instrs(layer.dot_len() as u64, v),
-                    model_bytes: layer.model_bytes(model.quantized) as u64,
+                    model_bytes: layer.model_bytes(model.precision) as u64,
                     smem_bytes: ((in_ch * w * kw + out_ch * w) * bytes_per_elem) as u64 * t_out,
                 });
             }
             Layer::Fc { in_dim, out_dim, .. } => {
                 let t_out = (model.frames_per_step() / rate_div) as u64;
-                let bytes = layer.model_bytes(model.quantized) as u64;
+                let bytes = layer.model_bytes(model.precision) as u64;
                 // §5.2: split kernels larger than model memory into neuron
                 // subsets, each fitting.
                 let splits = bytes.div_ceil(accel.model_mem_bytes as u64).max(1);
@@ -337,6 +337,34 @@ mod tests {
             assert_eq!(y.model_bytes, x.model_bytes, "{}", x.name);
             assert_eq!(y.instr_per_thread, x.instr_per_thread, "{}", x.name);
         }
+    }
+
+    #[test]
+    fn precision_knob_scales_weight_traffic_4x() {
+        use crate::config::Precision;
+        let m8 = ModelConfig::paper_tds();
+        assert!(m8.precision.is_quantized());
+        let m32 = ModelConfig { precision: Precision::F32, ..ModelConfig::paper_tds() };
+        let a = AccelConfig::paper();
+        let hyp = HypWorkload::default();
+        let k8 = build_step_kernels(&m8, &a, &hyp, 1);
+        let k32 = build_step_kernels(&m32, &a, &hyp, 1);
+        let weight_bytes = |ks: &[KernelExec]| {
+            ks.iter()
+                .filter(|k| matches!(k.class, KernelClass::Conv | KernelClass::Fc))
+                .map(|k| k.model_bytes)
+                .sum::<u64>()
+        };
+        // Exactly 4× less conv/FC weight traffic at int8 (LayerNorm
+        // params stay f32 in both presets).
+        assert_eq!(weight_bytes(&k32), 4 * weight_bytes(&k8));
+        // f32 FCs overflow model memory more often, so the §5.2 splitting
+        // produces strictly more kernel executions.
+        assert!(k32.len() > k8.len(), "{} !> {}", k32.len(), k8.len());
+        // Same total compute either way: threads and per-thread cost are
+        // precision-independent (the MAC unit is 8-bit wide regardless).
+        let instrs = |ks: &[KernelExec]| ks.iter().map(|k| k.total_instrs()).sum::<u64>();
+        assert_eq!(instrs(&k8), instrs(&k32));
     }
 
     #[test]

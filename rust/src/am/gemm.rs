@@ -1,0 +1,524 @@
+//! Register-blocked micro-kernels for the AM hot path — the compute core
+//! behind [`super::TdsModel`] and [`super::QuantizedTdsModel`].
+//!
+//! Layout contract (shared with `am::tds`):
+//!  * activations are lane-major `[batch × dim]` blocks, one block per
+//!    timestep; conv layers see all timesteps of a decoding step as one
+//!    contiguous `ext` buffer of `(kw-1) + T` such blocks (history first),
+//!    so a window is a contiguous slice — no per-position pointer chasing;
+//!  * weights are row-major `[out × in]` (f32) or `[out × in]` int8 with
+//!    per-output-row affine parameters (see [`super::quant`]);
+//!  * every kernel writes into a caller-sized `&mut [f32]`, so the caller
+//!    (the scratch-arena step driver) fully controls allocation.
+//!
+//! Blocking: the f32 FC kernel tiles `TILE_ROWS` weight rows ×
+//! `TILE_LANES` lanes and keeps the 4×4 accumulator block in registers
+//! through the shared `k` loop — each weight load feeds 4 lanes and each
+//! activation load feeds 4 rows, which is what lets rustc autovectorize
+//! the body to FMA-shaped code without losing IEEE semantics. Convolution
+//! kernels hoist each weight scalar once per `(out_ch, in_ch, k)` and
+//! sweep it across every lane's mel row (width-vectorized).
+//!
+//! **Parity contract:** for every f32 output element the floating-point
+//! reduction order is IDENTICAL to the naive scalar kernels in
+//! [`super::ops`] — one accumulator per output, seeded with the bias,
+//! `k` ascending. Register blocking only interleaves *independent*
+//! reductions, so results are bit-exact (`==`), not approximately equal;
+//! `tests` below and `tests/batch_parity.rs` assert this. (rustc does not
+//! contract `a*b + c` to fma without explicit opt-in, so the comparison
+//! is stable across optimization levels.)
+
+/// Weight rows per register tile.
+pub const TILE_ROWS: usize = 4;
+/// Lanes (batch columns) per register tile.
+pub const TILE_LANES: usize = 4;
+
+/// Tiled `[batch × out] = [batch × in] · Wᵀ + b`. `xs` is lane-major
+/// `[batch × in_dim]`, `out` must be `batch * bias.len()` long.
+pub fn fc_batch_into(w: &[f32], bias: &[f32], xs: &[f32], batch: usize, out: &mut [f32]) {
+    assert!(batch > 0, "fc_batch_into needs at least one lane");
+    let out_dim = bias.len();
+    debug_assert_eq!(xs.len() % batch, 0);
+    let in_dim = xs.len() / batch;
+    debug_assert_eq!(w.len(), in_dim * out_dim);
+    debug_assert_eq!(out.len(), batch * out_dim);
+    let mut o = 0;
+    while o < out_dim {
+        let rows = TILE_ROWS.min(out_dim - o);
+        let mut l = 0;
+        while l < batch {
+            let lanes = TILE_LANES.min(batch - l);
+            if rows == TILE_ROWS && lanes == TILE_LANES {
+                fc_tile_4x4(w, bias, xs, in_dim, out_dim, o, l, out);
+            } else {
+                fc_tile_edge(w, bias, xs, in_dim, out_dim, o, l, rows, lanes, out);
+            }
+            l += lanes;
+        }
+        o += rows;
+    }
+}
+
+/// Full 4×4 register tile: 16 accumulators, shared `k` loop.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn fc_tile_4x4(
+    w: &[f32],
+    bias: &[f32],
+    xs: &[f32],
+    in_dim: usize,
+    out_dim: usize,
+    o: usize,
+    l: usize,
+    out: &mut [f32],
+) {
+    let r0 = &w[o * in_dim..][..in_dim];
+    let r1 = &w[(o + 1) * in_dim..][..in_dim];
+    let r2 = &w[(o + 2) * in_dim..][..in_dim];
+    let r3 = &w[(o + 3) * in_dim..][..in_dim];
+    let x0 = &xs[l * in_dim..][..in_dim];
+    let x1 = &xs[(l + 1) * in_dim..][..in_dim];
+    let x2 = &xs[(l + 2) * in_dim..][..in_dim];
+    let x3 = &xs[(l + 3) * in_dim..][..in_dim];
+    let mut acc = [[0.0f32; TILE_LANES]; TILE_ROWS];
+    for (r, acc_row) in acc.iter_mut().enumerate() {
+        *acc_row = [bias[o + r]; TILE_LANES];
+    }
+    for k in 0..in_dim {
+        let wv = [r0[k], r1[k], r2[k], r3[k]];
+        let xv = [x0[k], x1[k], x2[k], x3[k]];
+        for (acc_row, wr) in acc.iter_mut().zip(wv) {
+            for (a, xc) in acc_row.iter_mut().zip(xv) {
+                *a += wr * xc;
+            }
+        }
+    }
+    for (r, acc_row) in acc.iter().enumerate() {
+        for (c, a) in acc_row.iter().enumerate() {
+            out[(l + c) * out_dim + o + r] = *a;
+        }
+    }
+}
+
+/// Ragged edge tile (rows < 4 or lanes < 4): same per-output reduction
+/// order, plain loops.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn fc_tile_edge(
+    w: &[f32],
+    bias: &[f32],
+    xs: &[f32],
+    in_dim: usize,
+    out_dim: usize,
+    o: usize,
+    l: usize,
+    rows: usize,
+    lanes: usize,
+    out: &mut [f32],
+) {
+    for r in 0..rows {
+        let row = &w[(o + r) * in_dim..][..in_dim];
+        for c in 0..lanes {
+            let x = &xs[(l + c) * in_dim..][..in_dim];
+            let mut acc = bias[o + r];
+            for (wi, xi) in row.iter().zip(x) {
+                acc += wi * xi;
+            }
+            out[(l + c) * out_dim + o + r] = acc;
+        }
+    }
+}
+
+/// Reference (naive) batched FC — one output at a time, weight matrix
+/// re-streamed per lane. Kept for the `benches/gemm_kernels.rs` sweep and
+/// as the bit-exactness oracle for the tiled kernel.
+pub fn fc_batch_naive_into(w: &[f32], bias: &[f32], xs: &[f32], batch: usize, out: &mut [f32]) {
+    assert!(batch > 0);
+    let out_dim = bias.len();
+    let in_dim = xs.len() / batch;
+    debug_assert_eq!(out.len(), batch * out_dim);
+    for lane in 0..batch {
+        let x = &xs[lane * in_dim..(lane + 1) * in_dim];
+        for o in 0..out_dim {
+            let row = &w[o * in_dim..(o + 1) * in_dim];
+            let mut acc = bias[o];
+            for (wi, xi) in row.iter().zip(x) {
+                acc += wi * xi;
+            }
+            out[lane * out_dim + o] = acc;
+        }
+    }
+}
+
+/// Int8-weight FC with per-output-row affine parameters and f32
+/// accumulation:
+///
+/// `y[l][o] = bias[o] + scale[o] · (Σₖ q[o][k]·x[l][k] − zp[o] · Σₖ x[l][k])`
+///
+/// which is algebraically `Σ dequant(q)·x + bias` with the per-row
+/// constants factored out of the inner loop — the weight stream is one
+/// byte per MAC. `xsum` is a reusable per-lane Σx scratch buffer.
+#[allow(clippy::too_many_arguments)]
+pub fn fc_batch_int8_into(
+    q: &[i8],
+    scale: &[f32],
+    zp: &[f32],
+    bias: &[f32],
+    xs: &[f32],
+    batch: usize,
+    xsum: &mut Vec<f32>,
+    out: &mut [f32],
+) {
+    assert!(batch > 0, "fc_batch_int8_into needs at least one lane");
+    let out_dim = bias.len();
+    debug_assert_eq!(xs.len() % batch, 0);
+    let in_dim = xs.len() / batch;
+    debug_assert_eq!(q.len(), in_dim * out_dim);
+    debug_assert_eq!(scale.len(), out_dim);
+    debug_assert_eq!(zp.len(), out_dim);
+    debug_assert_eq!(out.len(), batch * out_dim);
+    xsum.clear();
+    xsum.resize(batch, 0.0);
+    for (lane, s) in xsum.iter_mut().enumerate() {
+        *s = xs[lane * in_dim..(lane + 1) * in_dim].iter().sum();
+    }
+    // Lane-blocked only: each weight byte is widened to f32 once and
+    // feeds up to TILE_LANES lanes (row blocking buys nothing here — the
+    // i8→f32 convert, not weight bandwidth, bounds the inner loop).
+    for o in 0..out_dim {
+        let row = &q[o * in_dim..][..in_dim];
+        let mut l = 0;
+        while l < batch {
+            let lanes = TILE_LANES.min(batch - l);
+            let mut acc = [0.0f32; TILE_LANES];
+            for (k, &qk) in row.iter().enumerate() {
+                let wq = qk as f32;
+                for (c, a) in acc.iter_mut().take(lanes).enumerate() {
+                    *a += wq * xs[(l + c) * in_dim + k];
+                }
+            }
+            for (c, a) in acc.iter().take(lanes).enumerate() {
+                out[(l + c) * out_dim + o] =
+                    bias[o] + scale[o] * (a - zp[o] * xsum[l + c]);
+            }
+            l += lanes;
+        }
+    }
+}
+
+/// All `t_out` output positions of a causal temporal convolution over a
+/// contiguous `ext` buffer of `(kw-1) + t_out·stride` lane-major
+/// `[batch × in_ch·width]` timestep blocks (conv history first). Output
+/// is `t_out` blocks of `[batch × out_ch·width]`.
+///
+/// Per output element the reduction order matches [`super::ops::conv_step`]
+/// exactly: bias seed, then `(in_ch, k)` ascending, zero weights skipped.
+#[allow(clippy::too_many_arguments)]
+pub fn conv_steps_into(
+    w: &[f32],
+    bias: &[f32],
+    ext: &[f32],
+    t_out: usize,
+    stride: usize,
+    batch: usize,
+    in_ch: usize,
+    out_ch: usize,
+    kw: usize,
+    width: usize,
+    out: &mut [f32],
+) {
+    assert!(batch > 0, "conv_steps_into needs at least one lane");
+    let d_in = in_ch * width;
+    let d_out = out_ch * width;
+    let in_block = batch * d_in;
+    let out_block = batch * d_out;
+    debug_assert_eq!(w.len(), out_ch * in_ch * kw);
+    debug_assert_eq!(ext.len(), (kw - 1 + t_out * stride) * in_block);
+    debug_assert_eq!(out.len(), t_out * out_block);
+    for t in 0..t_out {
+        let out_t = &mut out[t * out_block..][..out_block];
+        let base = t * stride;
+        for o in 0..out_ch {
+            for lane_out in out_t.chunks_exact_mut(d_out) {
+                lane_out[o * width..(o + 1) * width].fill(bias[o]);
+            }
+            for i in 0..in_ch {
+                for k in 0..kw {
+                    let wk = w[(o * in_ch + i) * kw + k];
+                    if wk == 0.0 {
+                        continue;
+                    }
+                    let xblk = &ext[(base + k) * in_block..][..in_block];
+                    // wk stays in a register while it sweeps every lane's
+                    // mel row (the width loop autovectorizes).
+                    for (lane_out, lane_in) in
+                        out_t.chunks_exact_mut(d_out).zip(xblk.chunks_exact(d_in))
+                    {
+                        let dst = &mut lane_out[o * width..(o + 1) * width];
+                        let src = &lane_in[i * width..(i + 1) * width];
+                        for (v, x) in dst.iter_mut().zip(src) {
+                            *v += wk * x;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Int8-weight causal temporal convolution, per-output-channel affine
+/// parameters, f32 accumulate:
+///
+/// `y[o][m] = bias[o] + scale[o] · (Σᵢₖ q[o][i][k]·x[i][k][m] − zp[o]·W[m])`
+///
+/// where `W[m] = Σᵢₖ x[i][k][m]` is the per-position window sum, computed
+/// once per timestep into the reusable `wsum` buffer (`batch × width`)
+/// and shared by every output channel.
+#[allow(clippy::too_many_arguments)]
+pub fn conv_steps_int8_into(
+    q: &[i8],
+    scale: &[f32],
+    zp: &[f32],
+    bias: &[f32],
+    ext: &[f32],
+    t_out: usize,
+    stride: usize,
+    batch: usize,
+    in_ch: usize,
+    out_ch: usize,
+    kw: usize,
+    width: usize,
+    wsum: &mut Vec<f32>,
+    out: &mut [f32],
+) {
+    assert!(batch > 0, "conv_steps_int8_into needs at least one lane");
+    let d_in = in_ch * width;
+    let d_out = out_ch * width;
+    let in_block = batch * d_in;
+    let out_block = batch * d_out;
+    debug_assert_eq!(q.len(), out_ch * in_ch * kw);
+    debug_assert_eq!(scale.len(), out_ch);
+    debug_assert_eq!(zp.len(), out_ch);
+    debug_assert_eq!(ext.len(), (kw - 1 + t_out * stride) * in_block);
+    debug_assert_eq!(out.len(), t_out * out_block);
+    for t in 0..t_out {
+        let out_t = &mut out[t * out_block..][..out_block];
+        let base = t * stride;
+        // Window sums, shared across output channels.
+        wsum.clear();
+        wsum.resize(batch * width, 0.0);
+        for i in 0..in_ch {
+            for k in 0..kw {
+                let xblk = &ext[(base + k) * in_block..][..in_block];
+                for (ws, lane_in) in wsum.chunks_exact_mut(width).zip(xblk.chunks_exact(d_in)) {
+                    let src = &lane_in[i * width..(i + 1) * width];
+                    for (s, x) in ws.iter_mut().zip(src) {
+                        *s += x;
+                    }
+                }
+            }
+        }
+        for o in 0..out_ch {
+            for lane_out in out_t.chunks_exact_mut(d_out) {
+                lane_out[o * width..(o + 1) * width].fill(0.0);
+            }
+            for i in 0..in_ch {
+                for k in 0..kw {
+                    let qk = q[(o * in_ch + i) * kw + k];
+                    if qk == 0 {
+                        continue;
+                    }
+                    let wq = qk as f32;
+                    let xblk = &ext[(base + k) * in_block..][..in_block];
+                    for (lane_out, lane_in) in
+                        out_t.chunks_exact_mut(d_out).zip(xblk.chunks_exact(d_in))
+                    {
+                        let dst = &mut lane_out[o * width..(o + 1) * width];
+                        let src = &lane_in[i * width..(i + 1) * width];
+                        for (v, x) in dst.iter_mut().zip(src) {
+                            *v += wq * x;
+                        }
+                    }
+                }
+            }
+            // Finalize: apply the affine transform.
+            for (lane_out, ws) in out_t.chunks_exact_mut(d_out).zip(wsum.chunks_exact(width)) {
+                let dst = &mut lane_out[o * width..(o + 1) * width];
+                for (v, s) in dst.iter_mut().zip(ws) {
+                    *v = bias[o] + scale[o] * (*v - zp[o] * s);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::am::ops;
+    use crate::util::prop;
+
+    #[test]
+    fn tiled_fc_is_bit_exact_vs_naive() {
+        // All edge-tile shapes: dims and batches around the 4×4 tile.
+        prop::check("gemm-fc-tiled-vs-naive", 60, |g| {
+            let in_dim = 1 + g.index(40);
+            let out_dim = 1 + g.index(24);
+            let batch = 1 + g.index(10);
+            let w = g.vec_of(in_dim * out_dim, |r| r.uniform(-1.5, 1.5));
+            let b = g.vec_of(out_dim, |r| r.uniform(-1.0, 1.0));
+            let xs = g.vec_of(batch * in_dim, |r| r.uniform(-3.0, 3.0));
+            let mut tiled = vec![0.0; batch * out_dim];
+            let mut naive = vec![0.0; batch * out_dim];
+            fc_batch_into(&w, &b, &xs, batch, &mut tiled);
+            fc_batch_naive_into(&w, &b, &xs, batch, &mut naive);
+            crate::prop_assert!(tiled == naive, "tiled FC diverged from naive");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn tiled_fc_matches_scalar_ops_fc() {
+        prop::check("gemm-fc-vs-ops-fc", 40, |g| {
+            let in_dim = 1 + g.index(32);
+            let out_dim = 1 + g.index(16);
+            let batch = 1 + g.index(6);
+            let w = g.vec_of(in_dim * out_dim, |r| r.uniform(-1.0, 1.0));
+            let b = g.vec_of(out_dim, |r| r.uniform(-1.0, 1.0));
+            let xs = g.vec_of(batch * in_dim, |r| r.uniform(-2.0, 2.0));
+            let mut tiled = vec![0.0; batch * out_dim];
+            fc_batch_into(&w, &b, &xs, batch, &mut tiled);
+            let mut lane = Vec::new();
+            for l in 0..batch {
+                ops::fc(&w, &b, &xs[l * in_dim..(l + 1) * in_dim], &mut lane);
+                crate::prop_assert!(
+                    lane == tiled[l * out_dim..(l + 1) * out_dim],
+                    "lane {l} diverged from scalar fc"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn conv_steps_matches_per_position_ops_conv() {
+        prop::check("gemm-conv-vs-ops-conv", 30, |g| {
+            let in_ch = 1 + g.index(3);
+            let out_ch = 1 + g.index(3);
+            let kw = 1 + g.index(4);
+            let width = 1 + g.index(8);
+            let batch = 1 + g.index(5);
+            let stride = 1 + g.index(2);
+            let t_out = 1 + g.index(3);
+            let t_in = t_out * stride;
+            let d_in = in_ch * width;
+            let in_block = batch * d_in;
+            let w = g.vec_of(out_ch * in_ch * kw, |r| r.uniform(-1.0, 1.0));
+            let b = g.vec_of(out_ch, |r| r.uniform(-0.5, 0.5));
+            let ext = g.vec_of((kw - 1 + t_in) * in_block, |r| r.uniform(-2.0, 2.0));
+            let out_block = batch * out_ch * width;
+            let mut fused = vec![0.0; t_out * out_block];
+            conv_steps_into(
+                &w, &b, &ext, t_out, stride, batch, in_ch, out_ch, kw, width, &mut fused,
+            );
+            // Oracle: per-position per-lane scalar conv_step over slices.
+            let mut scalar = Vec::new();
+            for t in 0..t_out {
+                for lane in 0..batch {
+                    let win: Vec<&[f32]> = (0..kw)
+                        .map(|k| {
+                            let blk = (t * stride + k) * in_block + lane * d_in;
+                            &ext[blk..blk + d_in]
+                        })
+                        .collect();
+                    ops::conv_step(&w, &b, &win, in_ch, out_ch, kw, width, &mut scalar);
+                    let got =
+                        &fused[t * out_block + lane * out_ch * width..][..out_ch * width];
+                    crate::prop_assert!(
+                        scalar == got,
+                        "t={t} lane={lane} diverged from scalar conv_step"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn int8_fc_factored_form_matches_dequantized_naive() {
+        // The factored affine accumulation must agree with explicit
+        // per-element dequantization up to f32 reassociation noise.
+        prop::check("gemm-int8-fc-vs-dequant", 40, |g| {
+            let in_dim = 1 + g.index(64);
+            let out_dim = 1 + g.index(16);
+            let batch = 1 + g.index(6);
+            let q = g.vec_of(in_dim * out_dim, |r| r.range_i64(-128, 127) as i8);
+            let scale = g.vec_of(out_dim, |r| r.uniform(0.001, 0.05));
+            let zp = g.vec_of(out_dim, |r| r.range_i64(-20, 20) as f32);
+            let bias = g.vec_of(out_dim, |r| r.uniform(-1.0, 1.0));
+            let xs = g.vec_of(batch * in_dim, |r| r.uniform(-2.0, 2.0));
+            let mut xsum = Vec::new();
+            let mut fused = vec![0.0; batch * out_dim];
+            fc_batch_int8_into(&q, &scale, &zp, &bias, &xs, batch, &mut xsum, &mut fused);
+            // Dequantize and run the f32 reference.
+            let deq: Vec<f32> = q
+                .iter()
+                .enumerate()
+                .map(|(idx, &v)| (v as f32 - zp[idx / in_dim]) * scale[idx / in_dim])
+                .collect();
+            let mut reference = vec![0.0; batch * out_dim];
+            fc_batch_naive_into(&deq, &bias, &xs, batch, &mut reference);
+            for (i, (a, b)) in fused.iter().zip(&reference).enumerate() {
+                let tol = 1e-3 * (1.0 + a.abs().max(b.abs()));
+                crate::prop_assert!(
+                    (a - b).abs() <= tol,
+                    "int8 fc elem {i}: {a} vs {b}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn int8_conv_factored_form_matches_dequantized_reference() {
+        prop::check("gemm-int8-conv-vs-dequant", 25, |g| {
+            let in_ch = 1 + g.index(3);
+            let out_ch = 1 + g.index(3);
+            let kw = 1 + g.index(3);
+            let width = 1 + g.index(6);
+            let batch = 1 + g.index(4);
+            let t_out = 1 + g.index(2);
+            let d_in = in_ch * width;
+            let in_block = batch * d_in;
+            let q = g.vec_of(out_ch * in_ch * kw, |r| r.range_i64(-128, 127) as i8);
+            let scale = g.vec_of(out_ch, |r| r.uniform(0.001, 0.05));
+            let zp = g.vec_of(out_ch, |r| r.range_i64(-20, 20) as f32);
+            let bias = g.vec_of(out_ch, |r| r.uniform(-0.5, 0.5));
+            let ext = g.vec_of((kw - 1 + t_out) * in_block, |r| r.uniform(-2.0, 2.0));
+            let out_block = batch * out_ch * width;
+            let mut wsum = Vec::new();
+            let mut fused = vec![0.0; t_out * out_block];
+            conv_steps_int8_into(
+                &q, &scale, &zp, &bias, &ext, t_out, 1, batch, in_ch, out_ch, kw, width,
+                &mut wsum, &mut fused,
+            );
+            let deq: Vec<f32> = q
+                .iter()
+                .enumerate()
+                .map(|(idx, &v)| (v as f32 - zp[idx / (in_ch * kw)]) * scale[idx / (in_ch * kw)])
+                .collect();
+            let mut reference = vec![0.0; t_out * out_block];
+            conv_steps_into(
+                &deq, &bias, &ext, t_out, 1, batch, in_ch, out_ch, kw, width, &mut reference,
+            );
+            for (i, (a, b)) in fused.iter().zip(&reference).enumerate() {
+                let tol = 1e-3 * (1.0 + a.abs().max(b.abs()));
+                crate::prop_assert!(
+                    (a - b).abs() <= tol,
+                    "int8 conv elem {i}: {a} vs {b}"
+                );
+            }
+            Ok(())
+        });
+    }
+}

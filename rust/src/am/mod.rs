@@ -1,7 +1,17 @@
 //! Acoustic model: native TDS inference (streaming + offline), weight
-//! loading and the dense primitives it is built from (§2.2, §4.2).
+//! loading, int8 quantization and the compute kernels it is built from
+//! (§2.2, §3.4, §4.2).
+//!
+//! Layering: [`gemm`] holds the register-blocked micro-kernels (f32 and
+//! int8), [`tds`] the streaming step driver and scratch arena shared by
+//! [`TdsModel`] (f32) and [`quant::QuantizedTdsModel`] (int8 weights),
+//! and [`ops`] the naive reference primitives the tiled kernels are
+//! verified bit-exact against.
 
+pub mod gemm;
 pub mod ops;
+pub mod quant;
 pub mod tds;
 
-pub use tds::{TdsModel, TdsState};
+pub use quant::QuantizedTdsModel;
+pub use tds::{LaneStates, Scratch, TdsModel, TdsState};

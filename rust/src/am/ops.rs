@@ -15,6 +15,12 @@
 //! scalar calls (asserted by `tests/batch_parity.rs`) — while streaming
 //! each weight row once across all lanes, which is where the batched
 //! serving path gets its memory-bandwidth amortization.
+//!
+//! These are the **reference (naive) kernels**: simple, obviously
+//! correct, and the bit-exactness oracle for the register-blocked tiled
+//! kernels in [`super::gemm`] that the serving path actually executes
+//! (`benches/gemm_kernels.rs` measures the gap). `layer_norm`,
+//! `log_softmax` and `relu` remain the production implementations.
 
 /// `y = W·x + b` where `w` is row-major `[out_dim × in_dim]`.
 pub fn fc(w: &[f32], b: &[f32], x: &[f32], out: &mut Vec<f32>) {
@@ -89,8 +95,22 @@ pub fn layer_norm_batch(gain: &[f32], bias: &[f32], x: &mut [f32], batch: usize,
 }
 
 /// Numerically-stable log-softmax.
+///
+/// The max fold is seeded with `NEG_INFINITY` (not `f32::MIN`) so rows
+/// containing `-inf` logits are handled exactly: finite entries dominate
+/// the max and `-inf` entries keep zero probability. An all-`-inf` row
+/// has no mass anywhere; it normalizes to the uniform distribution
+/// (`-ln n`), the only output that preserves the `Σ exp = 1` contract
+/// (the old `f32::MIN` seed produced a row of NaNs).
 pub fn log_softmax(x: &mut [f32]) {
-    let max = x.iter().cloned().fold(f32::MIN, f32::max);
+    let max = x.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    if max == f32::NEG_INFINITY {
+        let uniform = -(x.len().max(1) as f32).ln();
+        for v in x.iter_mut() {
+            *v = uniform;
+        }
+        return;
+    }
     let mut sum = 0.0f32;
     for v in x.iter() {
         sum += (v - max).exp();
@@ -244,6 +264,31 @@ mod tests {
             crate::prop_assert!(x.iter().all(|v| *v <= 1e-6), "log-prob above 0");
             Ok(())
         });
+    }
+
+    #[test]
+    fn log_softmax_handles_neg_infinity_rows() {
+        // All-(-inf): normalizes to uniform (old f32::MIN seed gave NaN).
+        let mut x = vec![f32::NEG_INFINITY; 4];
+        log_softmax(&mut x);
+        for v in &x {
+            assert!((v - (-(4.0f32).ln())).abs() < 1e-6, "got {v}");
+        }
+        let total: f32 = x.iter().map(|v| v.exp()).sum();
+        assert!((total - 1.0).abs() < 1e-5);
+        // Mixed row: -inf entries keep zero probability, finite ones
+        // normalize among themselves.
+        let mut x = vec![f32::NEG_INFINITY, 0.0, 0.0, f32::NEG_INFINITY];
+        log_softmax(&mut x);
+        assert_eq!(x[0], f32::NEG_INFINITY);
+        assert_eq!(x[3], f32::NEG_INFINITY);
+        assert!((x[1] - (-(2.0f32).ln())).abs() < 1e-6);
+        // Extreme-negative finite rows stay finite and normalized.
+        let mut x = vec![-3.0e38, -3.0e38];
+        log_softmax(&mut x);
+        let total: f32 = x.iter().map(|v| v.exp()).sum();
+        assert!(x.iter().all(|v| v.is_finite()));
+        assert!((total - 1.0).abs() < 1e-4);
     }
 
     #[test]

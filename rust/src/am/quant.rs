@@ -1,0 +1,330 @@
+//! Int8 weight quantization for the TDS acoustic model — the functional
+//! counterpart of the paper's 8-bit MAC-unit assumption (§3.4): weights
+//! are stored as `i8` with **per-output-row** affine parameters, and the
+//! kernels accumulate in f32 ([`super::gemm`]).
+//!
+//! Scheme, per weight row `w` (an FC output neuron's inputs, or a conv
+//! output channel's `[in_ch × kw]` taps):
+//!
+//! ```text
+//!   lo = min(w)∧0,  hi = max(w)∨0          (0 always representable)
+//!   scale = (hi − lo) / 255                (or 1 for a constant-0 row)
+//!   zp    = round(−128 − lo/scale)         (lo ↦ −128, hi ↦ ≈127)
+//!   q_i   = clamp(round(w_i/scale) + zp, −128, 127)
+//!   deq_i = (q_i − zp) · scale
+//! ```
+//!
+//! **Error bound:** rounding is to the nearest of 256 levels spanning
+//! `[lo, hi]`, so `|deq_i − w_i| ≤ scale/2 = (hi−lo)/510`, i.e. at most
+//! `max|w|/255` of the row's largest-magnitude weight —
+//! [`INT8_MAX_ROW_REL_ERR`], asserted by `tests/quant_parity.rs`.
+//! Activations, biases, layer-norm parameters and all accumulations stay
+//! f32, matching the hardware's f32 special-function path.
+
+use crate::config::{Layer, ModelConfig, Precision};
+use anyhow::Result;
+
+use super::tds::{KernelWeights, LaneStates, Scratch, TdsModel, TdsState};
+
+/// Documented per-row relative quantization error bound: for every weight
+/// `|dequant(quant(w)) − w| ≤ INT8_MAX_ROW_REL_ERR · max|row|` (with a
+/// hair of slack for f32 rounding in the quantizer itself).
+pub const INT8_MAX_ROW_REL_ERR: f32 = 1.0 / 255.0;
+
+/// One int8-quantized weight matrix: `[rows × cols]` i8 data plus
+/// per-row affine parameters. `zp` is integral-valued but stored as f32
+/// because the kernels consume it in f32 accumulation.
+#[derive(Debug, Clone)]
+pub struct QuantizedWeights {
+    pub q: Vec<i8>,
+    pub scale: Vec<f32>,
+    pub zp: Vec<f32>,
+}
+
+/// Quantize a row-major `[rows × cols]` f32 matrix, one affine pair per
+/// row.
+pub fn quantize_rows(w: &[f32], rows: usize, cols: usize) -> QuantizedWeights {
+    assert_eq!(w.len(), rows * cols, "quantize_rows: shape mismatch");
+    let mut q = Vec::with_capacity(rows * cols);
+    let mut scale = Vec::with_capacity(rows);
+    let mut zp = Vec::with_capacity(rows);
+    for row in w.chunks_exact(cols.max(1)) {
+        let lo = row.iter().cloned().fold(0.0f32, f32::min);
+        let hi = row.iter().cloned().fold(0.0f32, f32::max);
+        let s = if hi > lo { (hi - lo) / 255.0 } else { 1.0 };
+        let z = (-128.0 - lo / s).round();
+        scale.push(s);
+        zp.push(z);
+        for &x in row {
+            let v = (x / s).round() + z;
+            q.push(v.clamp(-128.0, 127.0) as i8);
+        }
+    }
+    QuantizedWeights { q, scale, zp }
+}
+
+/// Dequantize one element of a row (test/diagnostic helper).
+pub fn dequantize(qw: &QuantizedWeights, row: usize, cols: usize, col: usize) -> f32 {
+    (qw.q[row * cols + col] as f32 - qw.zp[row]) * qw.scale[row]
+}
+
+/// Weights for one layer of the quantized model. Conv/FC weights are
+/// int8; biases and LayerNorm parameters stay f32 (they are a vanishing
+/// fraction of the model bytes and feed the f32 accumulate directly).
+#[derive(Debug, Clone)]
+enum QLayerWeights {
+    Conv { qw: QuantizedWeights, b: Vec<f32> },
+    Fc { qw: QuantizedWeights, b: Vec<f32> },
+    LayerNorm { g: Vec<f32>, b: Vec<f32> },
+}
+
+impl super::tds::AsKernel for QLayerWeights {
+    fn kernel(&self) -> KernelWeights<'_> {
+        match self {
+            QLayerWeights::Conv { qw, b } => KernelWeights::ConvI8 {
+                q: &qw.q,
+                scale: &qw.scale,
+                zp: &qw.zp,
+                b,
+            },
+            QLayerWeights::Fc { qw, b } => KernelWeights::FcI8 {
+                q: &qw.q,
+                scale: &qw.scale,
+                zp: &qw.zp,
+                b,
+            },
+            QLayerWeights::LayerNorm { g, b } => KernelWeights::Ln { g, b },
+        }
+    }
+}
+
+/// The int8-quantized TDS acoustic model. Drop-in for [`TdsModel`] on the
+/// serving path: same streaming [`TdsState`] (activations and conv
+/// history stay f32), same step entry points, ~4× smaller weight
+/// footprint and one-byte-per-MAC weight streams in the hot kernels.
+#[derive(Debug, Clone)]
+pub struct QuantizedTdsModel {
+    pub cfg: ModelConfig,
+    layers: Vec<(Layer, QLayerWeights)>,
+}
+
+impl QuantizedTdsModel {
+    /// Quantize an f32 model. The config is stamped [`Precision::Int8`]
+    /// so downstream cost models (accel/power) see int8 weight traffic.
+    pub fn from_model(model: &TdsModel) -> Result<Self> {
+        let mut layers = Vec::with_capacity(model.layer_count());
+        for idx in 0..model.layer_count() {
+            let (layer, view) = model.layer_kernel(idx);
+            let qlw = match view {
+                KernelWeights::ConvF32 { w, b } => {
+                    let Layer::Conv { in_ch, out_ch, kw, .. } = layer else {
+                        unreachable!("conv weights on non-conv layer")
+                    };
+                    QLayerWeights::Conv {
+                        qw: quantize_rows(w, *out_ch, in_ch * kw),
+                        b: b.to_vec(),
+                    }
+                }
+                KernelWeights::FcF32 { w, b } => {
+                    let Layer::Fc { in_dim, out_dim, .. } = layer else {
+                        unreachable!("fc weights on non-fc layer")
+                    };
+                    QLayerWeights::Fc {
+                        qw: quantize_rows(w, *out_dim, *in_dim),
+                        b: b.to_vec(),
+                    }
+                }
+                KernelWeights::Ln { g, b } => QLayerWeights::LayerNorm {
+                    g: g.to_vec(),
+                    b: b.to_vec(),
+                },
+                _ => unreachable!("TdsModel only yields f32 kernels"),
+            };
+            layers.push((layer.clone(), qlw));
+        }
+        let cfg = ModelConfig { precision: Precision::Int8, ..model.cfg.clone() };
+        Ok(QuantizedTdsModel { cfg, layers })
+    }
+
+    /// Fresh streaming state — identical layout to [`TdsModel::state`].
+    pub fn state(&self) -> TdsState {
+        TdsState::for_layers(self.layers.iter().map(|(l, _)| l))
+    }
+
+    /// Scratch-arena batched step; see [`TdsModel::step_batch_into`].
+    pub fn step_batch_into<S: LaneStates + ?Sized>(
+        &self,
+        states: &mut S,
+        feats: &[f32],
+        sc: &mut Scratch,
+        out: &mut Vec<f32>,
+    ) {
+        super::tds::step_batch_driver(&self.cfg, &self.layers, states, feats, sc, out);
+    }
+
+    /// Convenience batched step (allocates a fresh scratch per call).
+    pub fn step_batch(&self, states: &mut [&mut TdsState], feats: &[f32]) -> Vec<f32> {
+        let mut sc = Scratch::default();
+        let mut out = Vec::new();
+        self.step_batch_into(states, feats, &mut sc, &mut out);
+        out
+    }
+
+    /// Convenience scalar step (one lane through the batched driver).
+    pub fn step(&self, state: &mut TdsState, feats: &[f32]) -> Vec<f32> {
+        let mut lanes = [state];
+        self.step_batch(&mut lanes, feats)
+    }
+
+    /// Total quantized model-data bytes (int8 weights + f32 biases).
+    pub fn weight_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|(_, lw)| match lw {
+                QLayerWeights::Conv { qw, b } | QLayerWeights::Fc { qw, b } => {
+                    qw.q.len() + 4 * (b.len() + qw.scale.len() + qw.zp.len())
+                }
+                QLayerWeights::LayerNorm { g, b } => 4 * (g.len() + b.len()),
+            })
+            .sum()
+    }
+}
+
+/// Greedy CTC argmax over a `[frames × tokens]` log-prob matrix —
+/// convenience for parity diagnostics.
+pub fn argmax_path(logps: &[f32], tokens: usize) -> Vec<usize> {
+    logps
+        .chunks_exact(tokens)
+        .map(|row| {
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap_or(0)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn quantize_dequantize_within_documented_bound() {
+        prop::check("quant-row-rel-err", 50, |g| {
+            let rows = 1 + g.index(8);
+            let cols = 1 + g.index(64);
+            let mag = 0.01 + g.rng.uniform(0.0, 4.0);
+            let w = g.vec_of(rows * cols, |r| r.uniform(-mag, mag));
+            let qw = quantize_rows(&w, rows, cols);
+            for r in 0..rows {
+                let row = &w[r * cols..(r + 1) * cols];
+                let amax = row.iter().fold(0.0f32, |a, v| a.max(v.abs()));
+                let bound = INT8_MAX_ROW_REL_ERR * amax.max(f32::EPSILON) + 1e-7;
+                for c in 0..cols {
+                    let deq = dequantize(&qw, r, cols, c);
+                    crate::prop_assert!(
+                        (deq - row[c]).abs() <= bound,
+                        "row {r} col {c}: |{deq} - {}| > {bound}",
+                        row[c]
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn zero_and_constant_rows_are_handled() {
+        let qw = quantize_rows(&[0.0; 8], 1, 8);
+        for c in 0..8 {
+            assert_eq!(dequantize(&qw, 0, 8, c), 0.0);
+        }
+        // All-positive constant row: lo clamps to 0, hi = c.
+        let qw = quantize_rows(&[3.0; 4], 1, 4);
+        for c in 0..4 {
+            assert!((dequantize(&qw, 0, 4, c) - 3.0).abs() < 3.0 * INT8_MAX_ROW_REL_ERR + 1e-6);
+        }
+    }
+
+    #[test]
+    fn quantized_model_step_shape_and_finiteness() {
+        let m = TdsModel::random(ModelConfig::tiny_tds(), 42);
+        let qm = QuantizedTdsModel::from_model(&m).unwrap();
+        assert_eq!(qm.cfg.precision, Precision::Int8);
+        let mut st = qm.state();
+        let feats = vec![0.1f32; qm.cfg.frames_per_step() * qm.cfg.n_mels];
+        let out = qm.step(&mut st, &feats);
+        assert_eq!(out.len(), qm.cfg.vectors_per_step() * qm.cfg.tokens);
+        assert!(out.iter().all(|v| v.is_finite()));
+        // Log-softmax rows must still normalize.
+        for row in out.chunks(qm.cfg.tokens) {
+            let total: f32 = row.iter().map(|v| v.exp()).sum();
+            assert!((total - 1.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn quantized_logits_track_f32_logits() {
+        // Multi-step streaming: int8 log-probs must stay close to f32
+        // ones (loose bound — the tight transcript-level guarantee lives
+        // in tests/quant_parity.rs).
+        let m = TdsModel::random(ModelConfig::tiny_tds(), 7);
+        let qm = QuantizedTdsModel::from_model(&m).unwrap();
+        let f = m.cfg.frames_per_step() * m.cfg.n_mels;
+        let mut rng = Rng::new(5);
+        let mut st_f = m.state();
+        let mut st_q = qm.state();
+        for _ in 0..3 {
+            let feats: Vec<f32> = (0..f).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let a = m.step(&mut st_f, &feats);
+            let b = qm.step(&mut st_q, &feats);
+            assert_eq!(a.len(), b.len());
+            let max_diff = a
+                .iter()
+                .zip(&b)
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0f32, f32::max);
+            assert!(max_diff < 0.5, "int8 logits drifted {max_diff} from f32");
+        }
+    }
+
+    #[test]
+    fn quantized_weight_bytes_are_roughly_quarter() {
+        let m = TdsModel::random(ModelConfig::tiny_tds(), 11);
+        let qm = QuantizedTdsModel::from_model(&m).unwrap();
+        let f32_bytes: usize = m.cfg.layers().iter().map(|l| l.params() * 4).sum();
+        let q_bytes = qm.weight_bytes();
+        assert!(
+            (q_bytes as f64) < 0.5 * f32_bytes as f64,
+            "int8 model {q_bytes} B not ≪ f32 {f32_bytes} B"
+        );
+    }
+
+    #[test]
+    fn batched_quantized_step_matches_scalar_lanes() {
+        let m = TdsModel::random(ModelConfig::tiny_tds(), 21);
+        let qm = QuantizedTdsModel::from_model(&m).unwrap();
+        let f = qm.cfg.frames_per_step() * qm.cfg.n_mels;
+        let batch = 3;
+        let mut rng = Rng::new(17);
+        let mut scalar_states: Vec<TdsState> = (0..batch).map(|_| qm.state()).collect();
+        let mut batch_states: Vec<TdsState> = (0..batch).map(|_| qm.state()).collect();
+        for _ in 0..2 {
+            let feats: Vec<f32> = (0..batch * f).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let mut refs: Vec<&mut TdsState> = batch_states.iter_mut().collect();
+            let fused = qm.step_batch(&mut refs, &feats);
+            let lane_out = fused.len() / batch;
+            for (l, st) in scalar_states.iter_mut().enumerate() {
+                let out = qm.step(st, &feats[l * f..(l + 1) * f]);
+                assert_eq!(
+                    out,
+                    fused[l * lane_out..(l + 1) * lane_out],
+                    "int8 lane {l} diverged"
+                );
+            }
+        }
+    }
+}

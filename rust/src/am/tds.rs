@@ -7,12 +7,27 @@
 //! feature frames of one decoding step and carries conv history across
 //! steps — reproducing the offline full-sequence output exactly (causal
 //! convolutions, §Hardware-Adaptation in DESIGN.md).
+//!
+//! ## Execution core
+//!
+//! All four entry points (`step`, `step_batch`, and the int8 pair on
+//! [`super::QuantizedTdsModel`]) funnel into one [`step_batch_driver`]:
+//! activations live in contiguous lane-major `[T × B × D]` buffers owned
+//! by a reusable [`Scratch`] arena, conv layers see history + current
+//! timesteps as one contiguous `ext` buffer (windows become slices, not
+//! vectors of pointers), and the dense math runs through the
+//! register-blocked kernels in [`super::gemm`]. A scalar step is the
+//! B = 1 case of the same driver, so batched-vs-scalar parity is
+//! structural, not merely tested. With a caller-provided `Scratch`
+//! (`step_batch_into`) the steady-state loop performs **zero heap
+//! allocations** after warm-up — asserted by `tests/alloc_free.rs`.
 
 use crate::config::{Layer, ModelConfig};
 use crate::util::rng::Rng;
 use crate::util::tensor_io::{Tensor, TensorFile};
 use anyhow::{ensure, Context, Result};
 
+use super::gemm;
 use super::ops;
 
 const LN_EPS: f32 = 1e-5;
@@ -25,6 +40,87 @@ enum LayerWeights {
     LayerNorm { g: Vec<f32>, b: Vec<f32> },
 }
 
+/// Borrowed view of one layer's weights, dispatching the step driver to
+/// the matching [`super::gemm`] kernel. The int8 variants are produced by
+/// [`super::QuantizedTdsModel`].
+pub(crate) enum KernelWeights<'a> {
+    ConvF32 { w: &'a [f32], b: &'a [f32] },
+    ConvI8 { q: &'a [i8], scale: &'a [f32], zp: &'a [f32], b: &'a [f32] },
+    FcF32 { w: &'a [f32], b: &'a [f32] },
+    FcI8 { q: &'a [i8], scale: &'a [f32], zp: &'a [f32], b: &'a [f32] },
+    Ln { g: &'a [f32], b: &'a [f32] },
+}
+
+/// Anything that can present its per-layer weights as [`KernelWeights`].
+pub(crate) trait AsKernel {
+    fn kernel(&self) -> KernelWeights<'_>;
+}
+
+impl AsKernel for LayerWeights {
+    fn kernel(&self) -> KernelWeights<'_> {
+        match self {
+            LayerWeights::Conv { w, b } => KernelWeights::ConvF32 { w, b },
+            LayerWeights::Fc { w, b } => KernelWeights::FcF32 { w, b },
+            LayerWeights::LayerNorm { g, b } => KernelWeights::Ln { g, b },
+        }
+    }
+}
+
+/// Reusable buffers for the step driver. One `Scratch` serves any model
+/// shape: buffers grow to the high-water mark of whatever they are used
+/// for and are then recycled in place (`resize()` keeps capacity; every
+/// element is overwritten each step), so a warmed scratch makes every
+/// subsequent step allocation-free.
+///
+/// Ownership model: the arena owns all *transient* per-step data —
+/// activations (`acts`/`next` ping-pong), the conv `ext` gather buffer
+/// and the int8 partial-sum buffer. *Persistent* streaming data (conv
+/// histories) stays in [`TdsState`], per session; model weights stay in
+/// the model. Nothing in `Scratch` outlives a step, so one arena can be
+/// shared across sessions, batches and even models.
+#[derive(Debug, Default)]
+pub struct Scratch {
+    /// Current activations, `[T × B × D]` timestep-major.
+    acts: Vec<f32>,
+    /// Next layer's activations (ping-pong partner of `acts`).
+    next: Vec<f32>,
+    /// Conv input: `(kw-1)` history blocks + `T` activation blocks.
+    ext: Vec<f32>,
+    /// Int8 kernels' reusable partial sums (Σx per lane / window sums).
+    tmp: Vec<f32>,
+}
+
+impl Scratch {
+    /// Capacity fingerprint (pointer + capacity per buffer) — lets tests
+    /// assert steady-state reuse without a counting allocator.
+    pub fn fingerprint(&self) -> [(usize, usize); 4] {
+        [
+            (self.acts.as_ptr() as usize, self.acts.capacity()),
+            (self.next.as_ptr() as usize, self.next.capacity()),
+            (self.ext.as_ptr() as usize, self.ext.capacity()),
+            (self.tmp.as_ptr() as usize, self.tmp.capacity()),
+        ]
+    }
+}
+
+/// Per-lane streaming-state access for the batched driver. Implemented
+/// by plain `[&mut TdsState]` slices and by the engine's session adapter,
+/// so the serving loop never has to materialize a `Vec` of references.
+pub trait LaneStates {
+    fn lane_count(&self) -> usize;
+    fn state(&mut self, lane: usize) -> &mut TdsState;
+}
+
+impl<'a> LaneStates for [&'a mut TdsState] {
+    fn lane_count(&self) -> usize {
+        self.len()
+    }
+
+    fn state(&mut self, lane: usize) -> &mut TdsState {
+        &mut *self[lane]
+    }
+}
+
 /// The model: topology + weights.
 #[derive(Debug, Clone)]
 pub struct TdsModel {
@@ -33,9 +129,193 @@ pub struct TdsModel {
 }
 
 /// Streaming state: per conv layer, the last `kw-1` input timesteps.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct TdsState {
     conv_hist: Vec<Vec<Vec<f32>>>,
+}
+
+impl TdsState {
+    /// Zeroed conv histories for a layer sequence (the streaming
+    /// equivalent of the offline causal left zero-padding).
+    pub(crate) fn for_layers<'a>(layers: impl Iterator<Item = &'a Layer>) -> TdsState {
+        let mut conv_hist = Vec::new();
+        for layer in layers {
+            if let Layer::Conv { in_ch, kw, w, .. } = layer {
+                conv_hist.push(vec![vec![0.0f32; in_ch * w]; kw - 1]);
+            }
+        }
+        TdsState { conv_hist }
+    }
+}
+
+/// One fused decoding step over `B = states.lane_count()` lanes — THE
+/// compute path shared by every model variant and batch size.
+///
+/// `feats` is lane-major `[B × (T × n_mels)]`; `out` becomes lane-major
+/// `[B × (vectors_per_step × tokens)]` log-probabilities. Per-lane f32
+/// results are bit-identical to a single-lane call: the register-blocked
+/// kernels preserve each output's scalar reduction order exactly (see
+/// `am::gemm`).
+pub(crate) fn step_batch_driver<S, W>(
+    cfg: &ModelConfig,
+    layers: &[(Layer, W)],
+    states: &mut S,
+    feats: &[f32],
+    sc: &mut Scratch,
+    out: &mut Vec<f32>,
+) where
+    S: LaneStates + ?Sized,
+    W: AsKernel,
+{
+    let batch = states.lane_count();
+    assert!(batch > 0, "step needs at least one lane");
+    let n_mels = cfg.n_mels;
+    assert_eq!(
+        feats.len() % (batch * n_mels),
+        0,
+        "feats not whole frames across {batch} lanes"
+    );
+    let Scratch { acts, next, ext, tmp } = sc;
+    let mut cur_t = feats.len() / (batch * n_mels);
+    let mut cur_d = n_mels;
+    let lane_feats = cur_t * n_mels;
+    // De-interleave lane-major feats into [T × B × n_mels] blocks.
+    // (Transient buffers are resized without clear(): every element is
+    // overwritten below, so only newly grown capacity pays a memset.)
+    acts.resize(cur_t * batch * n_mels, 0.0);
+    for f in 0..cur_t {
+        for lane in 0..batch {
+            let src = lane * lane_feats + f * n_mels;
+            let dst = (f * batch + lane) * n_mels;
+            acts[dst..dst + n_mels].copy_from_slice(&feats[src..src + n_mels]);
+        }
+    }
+    let mut conv_idx = 0;
+    for (layer, lw) in layers {
+        match (layer, lw.kernel()) {
+            (
+                Layer::Conv { in_ch, out_ch, kw, stride, w: width, residual, .. },
+                kern @ (KernelWeights::ConvF32 { .. } | KernelWeights::ConvI8 { .. }),
+            ) => {
+                let d_in = in_ch * width;
+                debug_assert_eq!(cur_d, d_in, "conv {} input dim", layer.name());
+                let in_block = batch * d_in;
+                let ext_t = kw - 1 + cur_t;
+                // Gather: history blocks first, then the current
+                // activations as one contiguous run (fully overwritten).
+                ext.resize(ext_t * in_block, 0.0);
+                for h in 0..kw - 1 {
+                    for lane in 0..batch {
+                        let hist = &states.state(lane).conv_hist[conv_idx][h];
+                        let dst = h * in_block + lane * d_in;
+                        ext[dst..dst + d_in].copy_from_slice(hist);
+                    }
+                }
+                ext[(kw - 1) * in_block..].copy_from_slice(&acts[..cur_t * in_block]);
+                assert_eq!(
+                    cur_t % stride,
+                    0,
+                    "chunk length {cur_t} not divisible by stride {stride}"
+                );
+                let t_out = cur_t / stride;
+                let d_out = out_ch * width;
+                let out_block = batch * d_out;
+                next.resize(t_out * out_block, 0.0);
+                match kern {
+                    KernelWeights::ConvF32 { w, b } => gemm::conv_steps_into(
+                        w, b, ext, t_out, *stride, batch, *in_ch, *out_ch, *kw, *width, next,
+                    ),
+                    KernelWeights::ConvI8 { q, scale, zp, b } => gemm::conv_steps_int8_into(
+                        q, scale, zp, b, ext, t_out, *stride, batch, *in_ch, *out_ch, *kw,
+                        *width, tmp, next,
+                    ),
+                    _ => unreachable!(),
+                }
+                ops::relu_inplace(next);
+                if *residual {
+                    // Residual aligns with the newest input of each
+                    // window (stride 1 inside TDS blocks, d_out == d_in).
+                    debug_assert_eq!(*stride, 1);
+                    debug_assert_eq!(d_out, d_in);
+                    for t in 0..t_out {
+                        let x = &ext[(t * stride + kw - 1) * in_block..][..in_block];
+                        let dst = &mut next[t * out_block..][..out_block];
+                        for (v, xi) in dst.iter_mut().zip(x) {
+                            *v += xi;
+                        }
+                    }
+                }
+                // Scatter the last kw-1 ext blocks back into per-lane
+                // histories.
+                for h in 0..kw - 1 {
+                    let src_block = (ext_t - (kw - 1) + h) * in_block;
+                    for lane in 0..batch {
+                        let src = &ext[src_block + lane * d_in..][..d_in];
+                        let hist = &mut states.state(lane).conv_hist[conv_idx][h];
+                        hist.clear();
+                        hist.extend_from_slice(src);
+                    }
+                }
+                conv_idx += 1;
+                std::mem::swap(acts, next);
+                cur_t = t_out;
+                cur_d = d_out;
+            }
+            (
+                Layer::Fc { in_dim, out_dim, relu, residual, .. },
+                kern @ (KernelWeights::FcF32 { .. } | KernelWeights::FcI8 { .. }),
+            ) => {
+                debug_assert_eq!(cur_d, *in_dim, "fc {} input dim", layer.name());
+                let in_block = batch * in_dim;
+                let out_block = batch * out_dim;
+                next.resize(cur_t * out_block, 0.0);
+                for t in 0..cur_t {
+                    let xs = &acts[t * in_block..][..in_block];
+                    let dst = &mut next[t * out_block..][..out_block];
+                    match &kern {
+                        KernelWeights::FcF32 { w, b } => gemm::fc_batch_into(w, b, xs, batch, dst),
+                        KernelWeights::FcI8 { q, scale, zp, b } => {
+                            gemm::fc_batch_int8_into(q, scale, zp, b, xs, batch, tmp, dst)
+                        }
+                        _ => unreachable!(),
+                    }
+                }
+                if *relu {
+                    ops::relu_inplace(next);
+                }
+                if *residual {
+                    debug_assert_eq!(in_dim, out_dim);
+                    for (v, x) in next.iter_mut().zip(acts.iter()) {
+                        *v += x;
+                    }
+                }
+                std::mem::swap(acts, next);
+                cur_d = *out_dim;
+            }
+            (Layer::LayerNorm { dim, .. }, KernelWeights::Ln { g, b }) => {
+                debug_assert_eq!(cur_d, *dim, "ln {} input dim", layer.name());
+                let block = batch * dim;
+                for t in 0..cur_t {
+                    ops::layer_norm_batch(g, b, &mut acts[t * block..][..block], batch, LN_EPS);
+                }
+            }
+            _ => unreachable!("layer/weights mismatch"),
+        }
+    }
+    // Log-softmax over tokens, de-interleave to lane-major output.
+    let tokens = cfg.tokens;
+    debug_assert_eq!(cur_d, tokens);
+    let vps = cur_t;
+    out.resize(batch * vps * tokens, 0.0);
+    for t in 0..vps {
+        let block = &mut acts[t * batch * tokens..][..batch * tokens];
+        ops::log_softmax_batch(block, batch);
+        for lane in 0..batch {
+            let src = &block[lane * tokens..(lane + 1) * tokens];
+            let dst = (lane * vps + t) * tokens;
+            out[dst..dst + tokens].copy_from_slice(src);
+        }
+    }
 }
 
 impl TdsModel {
@@ -136,106 +416,26 @@ impl TdsModel {
     /// Fresh streaming state (conv histories zeroed — equivalent to the
     /// left zero-padding of the offline causal model).
     pub fn state(&self) -> TdsState {
-        let mut conv_hist = Vec::new();
-        for (layer, _) in &self.layers {
-            if let Layer::Conv { in_ch, kw, w, .. } = layer {
-                conv_hist.push(vec![vec![0.0f32; in_ch * w]; kw - 1]);
-            }
-        }
-        TdsState { conv_hist }
+        TdsState::for_layers(self.layers.iter().map(|(l, _)| l))
+    }
+
+    /// Number of layers (for weight-view iteration by the quantizer).
+    pub(crate) fn layer_count(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Borrowed weight view of one layer (for the quantizer).
+    pub(crate) fn layer_kernel(&self, idx: usize) -> (&Layer, KernelWeights<'_>) {
+        let (layer, lw) = &self.layers[idx];
+        (layer, lw.kernel())
     }
 
     /// Process one decoding step: `feats` is `frames × n_mels` row-major;
-    /// returns `vectors_per_step × tokens` log-probabilities.
+    /// returns `vectors_per_step × tokens` log-probabilities. One-lane
+    /// case of [`Self::step_batch`].
     pub fn step(&self, state: &mut TdsState, feats: &[f32]) -> Vec<f32> {
-        let n_mels = self.cfg.n_mels;
-        assert_eq!(feats.len() % n_mels, 0, "feats not a whole number of frames");
-        let n_frames = feats.len() / n_mels;
-        // Current activations: one Vec per timestep.
-        let mut acts: Vec<Vec<f32>> = (0..n_frames)
-            .map(|f| feats[f * n_mels..(f + 1) * n_mels].to_vec())
-            .collect();
-        let mut conv_idx = 0;
-        for (layer, lw) in &self.layers {
-            match (layer, lw) {
-                (
-                    Layer::Conv { in_ch, out_ch, kw, stride, w, residual, .. },
-                    LayerWeights::Conv { w: cw, b: cb },
-                ) => {
-                    let hist = &mut state.conv_hist[conv_idx];
-                    conv_idx += 1;
-                    // ext = hist ++ acts, length (kw-1) + T.
-                    let mut ext: Vec<&[f32]> = Vec::with_capacity(kw - 1 + acts.len());
-                    for h in hist.iter() {
-                        ext.push(h);
-                    }
-                    for a in acts.iter() {
-                        ext.push(a);
-                    }
-                    assert_eq!(
-                        acts.len() % stride,
-                        0,
-                        "chunk length {} not divisible by stride {stride}",
-                        acts.len()
-                    );
-                    let t_out = acts.len() / stride;
-                    let mut outs: Vec<Vec<f32>> = Vec::with_capacity(t_out);
-                    let mut buf = Vec::new();
-                    for o in 0..t_out {
-                        let win = &ext[o * stride..o * stride + kw];
-                        ops::conv_step(cw, cb, win, *in_ch, *out_ch, *kw, *w, &mut buf);
-                        ops::relu_inplace(&mut buf);
-                        if *residual {
-                            // Residual aligns with the newest input of the
-                            // window (stride 1 inside TDS blocks).
-                            debug_assert_eq!(*stride, 1);
-                            for (v, x) in buf.iter_mut().zip(win[kw - 1].iter()) {
-                                *v += x;
-                            }
-                        }
-                        outs.push(buf.clone());
-                    }
-                    // Update history: last kw-1 ext entries.
-                    let total = ext.len();
-                    let new_hist: Vec<Vec<f32>> =
-                        ext[total - (kw - 1)..].iter().map(|s| s.to_vec()).collect();
-                    *hist = new_hist;
-                    acts = outs;
-                }
-                (
-                    Layer::Fc { residual, relu, .. },
-                    LayerWeights::Fc { w: fw, b: fb },
-                ) => {
-                    let mut buf = Vec::new();
-                    for t in acts.iter_mut() {
-                        ops::fc(fw, fb, t, &mut buf);
-                        if *relu {
-                            ops::relu_inplace(&mut buf);
-                        }
-                        if *residual {
-                            for (v, x) in buf.iter_mut().zip(t.iter()) {
-                                *v += x;
-                            }
-                        }
-                        std::mem::swap(t, &mut buf);
-                    }
-                }
-                (Layer::LayerNorm { .. }, LayerWeights::LayerNorm { g, b }) => {
-                    for t in acts.iter_mut() {
-                        ops::layer_norm(g, b, t, LN_EPS);
-                    }
-                }
-                _ => unreachable!("layer/weights mismatch"),
-            }
-        }
-        // Log-softmax over tokens, flatten.
-        let tokens = self.cfg.tokens;
-        let mut out = Vec::with_capacity(acts.len() * tokens);
-        for t in acts.iter_mut() {
-            ops::log_softmax(t);
-            out.extend_from_slice(t);
-        }
-        out
+        let mut lanes = [state];
+        self.step_batch(&mut lanes, feats)
     }
 
     /// Lane-batched streaming step: advance `B = states.len()` independent
@@ -243,137 +443,31 @@ impl TdsModel {
     ///
     /// `feats` is lane-major `[B × (frames × n_mels)]` (lane `l`'s chunk at
     /// `feats[l*F .. (l+1)*F]`); the return value is lane-major
-    /// `[B × (vectors_per_step × tokens)]`. Internally activations are kept
-    /// as per-timestep `[B × D]` blocks so each weight row is streamed once
-    /// for all lanes (see `am::ops`). Per-lane results are **bit-identical**
-    /// to calling [`Self::step`] on each lane separately — the batched ops
-    /// replay the scalar op order exactly — which is what lets the serving
-    /// path batch opportunistically without changing transcripts.
+    /// `[B × (vectors_per_step × tokens)]`. Per-lane results are
+    /// **bit-identical** to calling [`Self::step`] on each lane separately
+    /// — scalar and batched execution are the same driver — which is what
+    /// lets the serving path batch opportunistically without changing
+    /// transcripts. Allocates a fresh scratch; hot loops should hold a
+    /// [`Scratch`] and call [`Self::step_batch_into`].
     pub fn step_batch(&self, states: &mut [&mut TdsState], feats: &[f32]) -> Vec<f32> {
-        let batch = states.len();
-        assert!(batch > 0, "step_batch needs at least one lane");
-        let n_mels = self.cfg.n_mels;
-        assert_eq!(
-            feats.len() % (batch * n_mels),
-            0,
-            "feats not whole frames across {batch} lanes"
-        );
-        let n_frames = feats.len() / (batch * n_mels);
-        let lane_feats = n_frames * n_mels;
-        // Per-timestep activations as [B × D] lane-major blocks.
-        let mut acts: Vec<Vec<f32>> = (0..n_frames)
-            .map(|f| {
-                let mut block = Vec::with_capacity(batch * n_mels);
-                for lane in 0..batch {
-                    let base = lane * lane_feats + f * n_mels;
-                    block.extend_from_slice(&feats[base..base + n_mels]);
-                }
-                block
-            })
-            .collect();
-        let mut conv_idx = 0;
-        for (layer, lw) in &self.layers {
-            match (layer, lw) {
-                (
-                    Layer::Conv { in_ch, out_ch, kw, stride, w, residual, .. },
-                    LayerWeights::Conv { w: cw, b: cb },
-                ) => {
-                    let d_in = in_ch * w;
-                    // Gather each lane's conv history into [B × D] blocks.
-                    let hist_blocks: Vec<Vec<f32>> = (0..kw - 1)
-                        .map(|h| {
-                            let mut block = Vec::with_capacity(batch * d_in);
-                            for st in states.iter() {
-                                block.extend_from_slice(&st.conv_hist[conv_idx][h]);
-                            }
-                            block
-                        })
-                        .collect();
-                    let mut ext: Vec<&[f32]> = Vec::with_capacity(kw - 1 + acts.len());
-                    for h in hist_blocks.iter() {
-                        ext.push(h);
-                    }
-                    for a in acts.iter() {
-                        ext.push(a);
-                    }
-                    assert_eq!(
-                        acts.len() % stride,
-                        0,
-                        "chunk length {} not divisible by stride {stride}",
-                        acts.len()
-                    );
-                    let t_out = acts.len() / stride;
-                    let mut outs: Vec<Vec<f32>> = Vec::with_capacity(t_out);
-                    let mut buf = Vec::new();
-                    for o in 0..t_out {
-                        let win = &ext[o * stride..o * stride + kw];
-                        ops::conv_step_batch(
-                            cw, cb, win, batch, *in_ch, *out_ch, *kw, *w, &mut buf,
-                        );
-                        ops::relu_inplace(&mut buf);
-                        if *residual {
-                            debug_assert_eq!(*stride, 1);
-                            for (v, x) in buf.iter_mut().zip(win[kw - 1].iter()) {
-                                *v += x;
-                            }
-                        }
-                        outs.push(buf.clone());
-                    }
-                    // Scatter the last kw-1 ext blocks back into per-lane
-                    // histories.
-                    let total = ext.len();
-                    let tail: Vec<Vec<f32>> =
-                        ext[total - (kw - 1)..].iter().map(|s| s.to_vec()).collect();
-                    drop(ext);
-                    for (lane, st) in states.iter_mut().enumerate() {
-                        let hist = &mut st.conv_hist[conv_idx];
-                        for (h, block) in tail.iter().enumerate() {
-                            hist[h].clear();
-                            hist[h].extend_from_slice(&block[lane * d_in..(lane + 1) * d_in]);
-                        }
-                    }
-                    conv_idx += 1;
-                    acts = outs;
-                }
-                (
-                    Layer::Fc { residual, relu, .. },
-                    LayerWeights::Fc { w: fw, b: fb },
-                ) => {
-                    let mut buf = Vec::new();
-                    for t in acts.iter_mut() {
-                        ops::fc_batch(fw, fb, t, batch, &mut buf);
-                        if *relu {
-                            ops::relu_inplace(&mut buf);
-                        }
-                        if *residual {
-                            for (v, x) in buf.iter_mut().zip(t.iter()) {
-                                *v += x;
-                            }
-                        }
-                        std::mem::swap(t, &mut buf);
-                    }
-                }
-                (Layer::LayerNorm { .. }, LayerWeights::LayerNorm { g, b }) => {
-                    for t in acts.iter_mut() {
-                        ops::layer_norm_batch(g, b, t, batch, LN_EPS);
-                    }
-                }
-                _ => unreachable!("layer/weights mismatch"),
-            }
-        }
-        // Log-softmax over tokens, de-interleave to lane-major output.
-        let tokens = self.cfg.tokens;
-        let vps = acts.len();
-        let mut out = vec![0.0f32; batch * vps * tokens];
-        for (t_idx, t) in acts.iter_mut().enumerate() {
-            ops::log_softmax_batch(t, batch);
-            for lane in 0..batch {
-                let src = &t[lane * tokens..(lane + 1) * tokens];
-                let dst = (lane * vps + t_idx) * tokens;
-                out[dst..dst + tokens].copy_from_slice(src);
-            }
-        }
+        let mut sc = Scratch::default();
+        let mut out = Vec::new();
+        self.step_batch_into(states, feats, &mut sc, &mut out);
         out
+    }
+
+    /// Allocation-free batched step: all transient buffers come from `sc`
+    /// and the result is written into `out` (resized and fully
+    /// overwritten). After one warm-up call with the same shapes, this
+    /// performs zero heap allocations (`tests/alloc_free.rs`).
+    pub fn step_batch_into<S: LaneStates + ?Sized>(
+        &self,
+        states: &mut S,
+        feats: &[f32],
+        sc: &mut Scratch,
+        out: &mut Vec<f32>,
+    ) {
+        step_batch_driver(&self.cfg, &self.layers, states, feats, sc, out);
     }
 
     /// Offline full-sequence forward: chunk the features into decoding
@@ -383,10 +477,19 @@ impl TdsModel {
         let fps = self.cfg.frames_per_step();
         let n_frames = feats.len() / n_mels;
         let mut state = self.state();
+        let mut sc = Scratch::default();
+        let mut step_out = Vec::new();
         let mut out = Vec::new();
         let mut f = 0;
         while f + fps <= n_frames {
-            out.extend(self.step(&mut state, &feats[f * n_mels..(f + fps) * n_mels]));
+            let mut lanes = [&mut state];
+            self.step_batch_into(
+                &mut lanes[..],
+                &feats[f * n_mels..(f + fps) * n_mels],
+                &mut sc,
+                &mut step_out,
+            );
+            out.extend_from_slice(&step_out);
             f += fps;
         }
         out
@@ -466,7 +569,8 @@ mod tests {
     fn step_batch_is_bit_identical_to_scalar_lanes() {
         // Three lanes with different histories and inputs, stepped twice:
         // the fused pass must reproduce each scalar lane exactly (==, not
-        // approx — the batched ops replay the scalar op order).
+        // approx — scalar and batched execution share one driver and the
+        // tiled kernels preserve per-output reduction order).
         let m = tiny();
         let batch = 3;
         let f = m.cfg.frames_per_step() * m.cfg.n_mels;
@@ -509,6 +613,34 @@ mod tests {
     }
 
     #[test]
+    fn scratch_reuse_is_stable_across_steps() {
+        // After one warm-up step, repeated steps with the same shapes must
+        // not move or regrow any scratch buffer — the pointer/capacity
+        // fingerprint stays fixed (the scratch-arena reuse contract).
+        let m = tiny();
+        let batch = 4;
+        let f = m.cfg.frames_per_step() * m.cfg.n_mels;
+        let mut rng = crate::util::rng::Rng::new(31);
+        let mut states: Vec<TdsState> = (0..batch).map(|_| m.state()).collect();
+        let mut sc = Scratch::default();
+        let mut out = Vec::new();
+        let feats: Vec<f32> = (0..batch * f).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let mut refs: Vec<&mut TdsState> = states.iter_mut().collect();
+        m.step_batch_into(&mut refs[..], &feats, &mut sc, &mut out);
+        let fp = sc.fingerprint();
+        let out_fp = (out.as_ptr() as usize, out.capacity());
+        for _ in 0..5 {
+            m.step_batch_into(&mut refs[..], &feats, &mut sc, &mut out);
+            assert_eq!(sc.fingerprint(), fp, "scratch buffer reallocated");
+            assert_eq!(
+                (out.as_ptr() as usize, out.capacity()),
+                out_fp,
+                "output buffer reallocated"
+            );
+        }
+    }
+
+    #[test]
     fn from_weights_rejects_bad_dims() {
         let cfg = ModelConfig::tiny_tds();
         let good = TdsModel::random(cfg.clone(), 1);
@@ -536,7 +668,7 @@ mod tests {
         // One (expensive-ish) smoke test that the 79-layer paper topology
         // actually executes. Random weights; just shape/finiteness.
         let cfg = ModelConfig::paper_tds();
-        let cfg = ModelConfig { quantized: false, ..cfg };
+        let cfg = ModelConfig { precision: crate::config::Precision::F32, ..cfg };
         let m = TdsModel::random(cfg, 3);
         let mut st = m.state();
         let feats = vec![0.05f32; m.cfg.frames_per_step() * m.cfg.n_mels];

@@ -5,7 +5,7 @@ pub mod accel;
 pub mod model;
 
 pub use accel::AccelConfig;
-pub use model::{Group, Layer, ModelConfig};
+pub use model::{Group, Layer, ModelConfig, Precision};
 
 use std::path::{Path, PathBuf};
 

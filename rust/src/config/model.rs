@@ -68,8 +68,8 @@ impl Layer {
     /// Model-data bytes for this layer as stored in model memory.
     /// The paper quantizes weights to 8 bits (the MAC unit consumes 8-bit
     /// vectors), so int8 ⇒ 1 byte/param; the functional f32 path uses 4.
-    pub fn model_bytes(&self, quantized: bool) -> usize {
-        self.params() * if quantized { 1 } else { 4 }
+    pub fn model_bytes(&self, precision: Precision) -> usize {
+        self.params() * precision.bytes_per_weight()
     }
 
     /// Multiply-accumulates needed to produce ONE output timestep.
@@ -111,6 +111,35 @@ impl Layer {
     }
 }
 
+/// Numeric precision of the stored model weights — the `config` knob
+/// behind both halves of the system: the native engine selects between
+/// [`crate::am::TdsModel`] (f32) and [`crate::am::QuantizedTdsModel`]
+/// (int8 weights, f32 accumulate), and the accelerator simulator derives
+/// weight-traffic bytes from it (int8 ⇒ 4× less model-data bandwidth,
+/// the paper's §3.4 MAC-unit assumption).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    /// 32-bit float weights (the functional reference path).
+    F32,
+    /// 8-bit affine-quantized weights, per-output-row scale/zero-point
+    /// (the paper's deployment path).
+    Int8,
+}
+
+impl Precision {
+    /// Bytes one weight occupies in model memory / DMA traffic.
+    pub fn bytes_per_weight(self) -> usize {
+        match self {
+            Precision::F32 => 4,
+            Precision::Int8 => 1,
+        }
+    }
+
+    pub fn is_quantized(self) -> bool {
+        matches!(self, Precision::Int8)
+    }
+}
+
 /// One TDS group: `blocks` TDS blocks at `channels` channels, entered
 /// through a standalone subsampling conv.
 #[derive(Debug, Clone, PartialEq)]
@@ -143,8 +172,8 @@ pub struct ModelConfig {
     pub final_conv_kw: Option<usize>,
     /// Output tokens (9000 word-pieces in the paper; blank = id 0).
     pub tokens: usize,
-    /// Whether model data is int8-quantized (paper) or f32 (functional).
-    pub quantized: bool,
+    /// Weight precision: int8-quantized (paper) or f32 (functional).
+    pub precision: Precision,
 }
 
 impl ModelConfig {
@@ -167,7 +196,7 @@ impl ModelConfig {
             ],
             final_conv_kw: Some(11),
             tokens: 9000,
-            quantized: true,
+            precision: Precision::Int8,
         }
     }
 
@@ -187,7 +216,7 @@ impl ModelConfig {
             ],
             final_conv_kw: None,
             tokens: 27,
-            quantized: false,
+            precision: Precision::F32,
         }
     }
 
@@ -315,7 +344,7 @@ impl ModelConfig {
 
     /// Total model-data bytes.
     pub fn model_bytes(&self) -> usize {
-        self.layers().iter().map(|l| l.model_bytes(self.quantized)).sum()
+        self.layers().iter().map(|l| l.model_bytes(self.precision)).sum()
     }
 }
 
@@ -350,7 +379,7 @@ mod tests {
             .layers()
             .iter()
             .filter(|l| matches!(l, Layer::Fc { .. }))
-            .map(|l| l.model_bytes(true))
+            .map(|l| l.model_bytes(Precision::Int8))
             .collect();
         let max_hidden_fc = fc_bytes[..fc_bytes.len() - 1].iter().max().unwrap();
         assert!(
@@ -367,7 +396,7 @@ mod tests {
         let m = ModelConfig::paper_tds();
         for l in m.layers() {
             if matches!(l, Layer::Conv { .. }) {
-                let kb = l.model_bytes(true) / 1024;
+                let kb = l.model_bytes(Precision::Int8) / 1024;
                 assert!(kb < 8, "conv layer {} is {kb} KB", l.name());
             }
         }

@@ -20,10 +20,33 @@ use crate::config::DecoderConfig;
 use crate::lexicon::{Lexicon, BLANK, ROOT};
 use crate::lm::{LmState, NgramLm};
 use anyhow::Result;
-pub use prune::{PruneStats, Pruner};
+use std::borrow::Cow;
+pub use prune::{KeyMap, PruneStats, Pruner};
 
 /// Sentinel for "no backtrack entry".
 const NO_BACK: u32 = u32::MAX;
+
+/// Reusable buffers for hypothesis expansion + pruning: the candidate
+/// list, the merge map and the survivor list live here and are recycled
+/// across frames (and lanes), so a warmed scratch makes
+/// [`BeamDecoder::step_with`] allocation-free apart from the per-utterance
+/// backtrack arena (which grows amortized-O(log) per word committed).
+#[derive(Debug, Default)]
+pub struct DecodeScratch {
+    cands: Vec<Hyp>,
+    map: KeyMap<Hyp>,
+    survivors: Vec<Hyp>,
+}
+
+impl DecodeScratch {
+    /// Pointer/capacity fingerprint of the candidate buffer (scratch
+    /// reuse tests; the survivor buffer intentionally swaps with
+    /// `DecodeState::hyps` each frame, so it is not part of the
+    /// fingerprint).
+    pub fn fingerprint(&self) -> (usize, usize) {
+        (self.cands.as_ptr() as usize, self.cands.capacity())
+    }
+}
 
 /// One transcription hypothesis — the §3.5 record: identifying hash
 /// (derived from the state tuple), score, and the programmer-defined
@@ -76,21 +99,45 @@ pub struct BeamDecoder<'a> {
     pub lex: &'a Lexicon,
     pub lm: &'a NgramLm,
     pub cfg: DecoderConfig,
-    /// lexicon word id → LM word id (unk for OOV-in-LM).
-    word_lm_ids: Vec<u32>,
+    /// lexicon word id → LM word id (unk for OOV-in-LM). Borrowed when
+    /// the caller (the engine) caches the O(vocabulary) mapping so that
+    /// constructing a decoder per batch drain stays allocation-free.
+    word_lm_ids: Cow<'a, [u32]>,
 }
 
 impl<'a> BeamDecoder<'a> {
     pub fn new(lex: &'a Lexicon, lm: &'a NgramLm, cfg: DecoderConfig) -> Result<Self> {
-        cfg.validate()?;
+        let ids = Self::word_lm_ids(lex, lm)?;
+        Self::with_word_ids(lex, lm, cfg, Cow::Owned(ids))
+    }
+
+    /// Compute the lexicon-word → LM-word mapping (O(vocabulary); cache
+    /// it if you construct decoders in a hot loop).
+    pub fn word_lm_ids(lex: &Lexicon, lm: &NgramLm) -> Result<Vec<u32>> {
         let unk = lm
             .word_id(crate::lm::UNK)
             .ok_or_else(|| anyhow::anyhow!("LM missing <unk>"))?;
-        let word_lm_ids = lex
+        Ok(lex
             .words
             .iter()
             .map(|w| lm.word_id(w).unwrap_or(unk))
-            .collect();
+            .collect())
+    }
+
+    /// Build with a precomputed word-id mapping (borrowed: no allocation).
+    pub fn with_word_ids(
+        lex: &'a Lexicon,
+        lm: &'a NgramLm,
+        cfg: DecoderConfig,
+        word_lm_ids: Cow<'a, [u32]>,
+    ) -> Result<Self> {
+        cfg.validate()?;
+        anyhow::ensure!(
+            word_lm_ids.len() == lex.words.len(),
+            "word-id mapping covers {} words, lexicon has {}",
+            word_lm_ids.len(),
+            lex.words.len()
+        );
         Ok(BeamDecoder { lex, lm, cfg, word_lm_ids })
     }
 
@@ -112,8 +159,11 @@ impl<'a> BeamDecoder<'a> {
 
     /// Expand all hypotheses with one acoustic frame of token
     /// log-probabilities, then sort + prune (the hypothesis unit's job).
+    /// Allocates a fresh scratch; hot loops should hold a
+    /// [`DecodeScratch`] and call [`Self::step_with`].
     pub fn step(&self, state: &mut DecodeState, logp: &[f32]) {
-        self.expand_and_prune(state, logp);
+        let mut sc = DecodeScratch::default();
+        self.step_with(state, logp, &mut sc);
     }
 
     /// Advance `B = states.len()` independent per-lane decode states over a
@@ -125,15 +175,23 @@ impl<'a> BeamDecoder<'a> {
     pub fn step_batch(&self, states: &mut [&mut DecodeState], logps: &[f32]) {
         let tokens = self.lex.tokens.len();
         debug_assert_eq!(logps.len(), states.len() * tokens);
+        let mut sc = DecodeScratch::default();
         for (lane, state) in states.iter_mut().enumerate() {
-            self.expand_and_prune(state, &logps[lane * tokens..(lane + 1) * tokens]);
+            self.step_with(state, &logps[lane * tokens..(lane + 1) * tokens], &mut sc);
         }
     }
 
-    /// One frame of hypothesis expansion + prune for a single lane.
-    fn expand_and_prune(&self, state: &mut DecodeState, logp: &[f32]) {
+    /// One frame of hypothesis expansion + prune through a reusable
+    /// scratch: candidates, the merge map and the survivor buffer all
+    /// come from `sc`, so a warmed scratch makes the steady state
+    /// allocation-free (the per-utterance backtrack arena is the only
+    /// amortized-growth container). Identical results to [`Self::step`]:
+    /// pruning is a deterministic total order.
+    pub fn step_with(&self, state: &mut DecodeState, logp: &[f32], sc: &mut DecodeScratch) {
         debug_assert_eq!(logp.len(), self.lex.tokens.len());
-        let mut cands: Vec<Hyp> = Vec::with_capacity(state.hyps.len() * 8);
+        let DecodeScratch { cands, map, survivors } = sc;
+        cands.clear();
+        cands.reserve(state.hyps.len() * 8);
         for h in &state.hyps {
             // (1) blank.
             cands.push(Hyp {
@@ -197,7 +255,10 @@ impl<'a> BeamDecoder<'a> {
             beam: self.cfg.beam,
             max_hyps: self.cfg.max_hyps,
         };
-        state.hyps = pruner.prune(cands, &mut state.stats);
+        pruner.prune_into(cands, map, survivors, &mut state.stats);
+        // Survivors become the live set; the old live set's buffer is
+        // recycled as next frame's survivor scratch.
+        std::mem::swap(&mut state.hyps, survivors);
     }
 
     /// Extract the best transcription: commit any word completed at the
@@ -458,6 +519,65 @@ mod tests {
             assert_eq!(ts.text, tb.text);
             assert_eq!(ts.score, tb.score);
         }
+    }
+
+    #[test]
+    fn step_with_shared_scratch_matches_fresh_scratch_steps() {
+        // One reused scratch across many frames and two interleaved lanes
+        // must give exactly the per-frame results of fresh-scratch steps,
+        // and the candidate buffer must stop reallocating once warmed.
+        let (lex, lm) = fixtures();
+        let a = lex.tokens.id("a").unwrap();
+        let b = lex.tokens.id("b").unwrap();
+        let c = lex.tokens.id("c").unwrap();
+        let dec = BeamDecoder::new(&lex, &lm, DecoderConfig::default()).unwrap();
+        let tokens = lex.tokens.len();
+        let path = [a, b, BLANK, b, a, c, BLANK, a, b, c, a, BLANK];
+        let frames = frames_for(&path, tokens);
+        let mut fresh = dec.start();
+        let mut reused = dec.start();
+        let mut sc = DecodeScratch::default();
+        // Pass 1 (warm-up): shared scratch must match fresh-scratch steps.
+        for (i, row) in frames.chunks(tokens).enumerate() {
+            dec.step(&mut fresh, row);
+            dec.step_with(&mut reused, row, &mut sc);
+            assert_eq!(fresh.hyps, reused.hyps, "frame {i} diverged");
+        }
+        assert_eq!(dec.finish(&fresh).text, dec.finish(&reused).text);
+        // Pass 2: identical frames through the warmed scratch — the
+        // candidate buffer must never reallocate.
+        let fp = sc.fingerprint();
+        let mut second = dec.start();
+        for (i, row) in frames.chunks(tokens).enumerate() {
+            dec.step_with(&mut second, row, &mut sc);
+            assert_eq!(fp, sc.fingerprint(), "frame {i} reallocated");
+        }
+        assert_eq!(second.hyps, reused.hyps);
+    }
+
+    #[test]
+    fn with_word_ids_borrowed_matches_new() {
+        let (lex, lm) = fixtures();
+        let ids = BeamDecoder::word_lm_ids(&lex, &lm).unwrap();
+        let owned = BeamDecoder::new(&lex, &lm, DecoderConfig::default()).unwrap();
+        let borrowed = BeamDecoder::with_word_ids(
+            &lex,
+            &lm,
+            DecoderConfig::default(),
+            std::borrow::Cow::Borrowed(&ids),
+        )
+        .unwrap();
+        let a = lex.tokens.id("a").unwrap();
+        let b = lex.tokens.id("b").unwrap();
+        let frames = frames_for(&[a, a, b, b], lex.tokens.len());
+        let mut s1 = owned.start();
+        let mut s2 = borrowed.start();
+        for row in frames.chunks(lex.tokens.len()) {
+            owned.step(&mut s1, row);
+            borrowed.step(&mut s2, row);
+        }
+        assert_eq!(owned.finish(&s1).text, borrowed.finish(&s2).text);
+        assert_eq!(owned.finish(&s1).score, borrowed.finish(&s2).score);
     }
 
     #[test]

@@ -28,7 +28,8 @@ impl Hasher for KeyHasher {
     }
 }
 
-type KeyMap<V> = HashMap<u64, V, BuildHasherDefault<KeyHasher>>;
+/// Hash map keyed by 64-bit hypothesis state keys (fast non-crypto hash).
+pub type KeyMap<V> = HashMap<u64, V, BuildHasherDefault<KeyHasher>>;
 
 /// Pruning parameters (hardware: `ConfigureBeamWidth` + memory size).
 #[derive(Debug, Clone, Copy)]
@@ -74,18 +75,41 @@ impl PruneStats {
 impl Pruner {
     /// Merge → beam → capacity. Returns the surviving set sorted by
     /// descending score (the hypothesis unit keeps them sorted).
-    pub fn prune(&self, cands: Vec<Hyp>, stats: &mut PruneStats) -> Vec<Hyp> {
+    /// Convenience wrapper over [`Self::prune_into`] that allocates its
+    /// working set per call; hot loops should hold a
+    /// [`super::DecodeScratch`] and go through `prune_into`.
+    pub fn prune(&self, mut cands: Vec<Hyp>, stats: &mut PruneStats) -> Vec<Hyp> {
+        let mut map = KeyMap::default();
+        let mut out = Vec::new();
+        self.prune_into(&mut cands, &mut map, &mut out, stats);
+        out
+    }
+
+    /// Allocation-free merge → beam → capacity: candidates are drained
+    /// from `cands`, merged through the reusable `map` (cleared, capacity
+    /// kept) and the survivors written into `out`, sorted by descending
+    /// score with `state_key` as the tie-break — a total order, so the
+    /// result is independent of hash-map iteration order (and therefore
+    /// of the map's inherited capacity).
+    pub fn prune_into(
+        &self,
+        cands: &mut Vec<Hyp>,
+        map: &mut KeyMap<Hyp>,
+        out: &mut Vec<Hyp>,
+        stats: &mut PruneStats,
+    ) {
         stats.rounds += 1;
         stats.generated += cands.len() as u64;
+        out.clear();
         if cands.is_empty() {
-            return cands;
+            return;
         }
         // Merge duplicates by state key, keeping the max score.
-        let mut best: KeyMap<Hyp> =
-            KeyMap::with_capacity_and_hasher(cands.len(), Default::default());
+        map.clear();
+        map.reserve(cands.len());
         let mut merged = 0u64;
-        for h in cands {
-            match best.entry(h.state_key()) {
+        for h in cands.drain(..) {
+            match map.entry(h.state_key()) {
                 std::collections::hash_map::Entry::Occupied(mut e) => {
                     merged += 1;
                     if h.score > e.get().score {
@@ -98,21 +122,25 @@ impl Pruner {
             }
         }
         stats.merged += merged;
-        let mut survivors: Vec<Hyp> = best.into_values().collect();
+        out.extend(map.drain().map(|(_, h)| h));
         // Score beam relative to the best candidate.
-        let top = survivors.iter().map(|h| h.score).fold(f32::MIN, f32::max);
+        let top = out.iter().map(|h| h.score).fold(f32::MIN, f32::max);
         let floor = top - self.beam;
-        let before = survivors.len();
-        survivors.retain(|h| h.score >= floor);
-        stats.beam_pruned += (before - survivors.len()) as u64;
-        // Capacity: keep the max_hyps best.
-        survivors.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
-        if survivors.len() > self.max_hyps {
-            stats.capacity_pruned += (survivors.len() - self.max_hyps) as u64;
-            survivors.truncate(self.max_hyps);
+        let before = out.len();
+        out.retain(|h| h.score >= floor);
+        stats.beam_pruned += (before - out.len()) as u64;
+        // Capacity: keep the max_hyps best (deterministic total order).
+        out.sort_by(|a, b| {
+            b.score
+                .partial_cmp(&a.score)
+                .unwrap()
+                .then_with(|| a.state_key().cmp(&b.state_key()))
+        });
+        if out.len() > self.max_hyps {
+            stats.capacity_pruned += (out.len() - self.max_hyps) as u64;
+            out.truncate(self.max_hyps);
         }
-        stats.peak_live = stats.peak_live.max(survivors.len() as u64);
-        survivors
+        stats.peak_live = stats.peak_live.max(out.len() as u64);
     }
 }
 
@@ -219,6 +247,49 @@ mod tests {
             crate::prop_assert!(keys.len() == out.len(), "duplicate states survive");
             Ok(())
         });
+    }
+
+    #[test]
+    fn prune_into_reuses_buffers_and_matches_prune() {
+        // Same survivors as the allocating wrapper regardless of the
+        // scratch map's inherited capacity (total-order sort), and no
+        // buffer regrowth once warmed.
+        let p = Pruner { beam: 8.0, max_hyps: 6 };
+        let mut rng = crate::util::rng::Rng::new(44);
+        let mut map = KeyMap::default();
+        let mut out = Vec::new();
+        // Warm-up round: 40 candidates with all-distinct state keys grows
+        // map and survivor buffer to their high-water mark.
+        let mut warm: Vec<Hyp> =
+            (0..40).map(|i| hyp(-(i as f32) * 0.01, i, 0, 0)).collect();
+        p.prune_into(&mut warm, &mut map, &mut out, &mut PruneStats::default());
+        let fp = (out.as_ptr() as usize, out.capacity());
+        for round in 0..10 {
+            // ≤ 40 candidates over ≤ 54 possible keys but at most 40
+            // occupied — never exceeds the warmed capacity.
+            let cands: Vec<Hyp> = (0..40)
+                .map(|_| {
+                    hyp(
+                        rng.uniform(-10.0, 0.0),
+                        rng.below(6) as u32,
+                        rng.below(3) as u32,
+                        rng.below(3) as u32,
+                    )
+                })
+                .collect();
+            let mut s1 = PruneStats::default();
+            let mut s2 = PruneStats::default();
+            let reference = p.prune(cands.clone(), &mut s1);
+            let mut scratch_cands = cands;
+            p.prune_into(&mut scratch_cands, &mut map, &mut out, &mut s2);
+            assert_eq!(reference, out, "round {round} diverged");
+            assert_eq!(s1, s2);
+            assert_eq!(
+                fp,
+                (out.as_ptr() as usize, out.capacity()),
+                "survivor buffer reallocated after warm-up (round {round})"
+            );
+        }
     }
 
     #[test]

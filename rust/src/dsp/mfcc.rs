@@ -121,15 +121,28 @@ impl Mfcc {
     /// Extract all complete frames; returns a (frames × n_mels) row-major
     /// matrix.
     pub fn extract(&self, samples: &[f32]) -> Vec<f32> {
-        let n_frames = self.frames_in(samples.len());
-        let mut feats = Vec::with_capacity(n_frames * self.n_mels);
+        let mut feats = Vec::with_capacity(self.frames_in(samples.len()) * self.n_mels);
         let mut frame = Vec::with_capacity(self.n_mels);
         let mut scratch = Scratch::default();
-        for f in 0..n_frames {
-            self.frame_scratch(samples, f * self.hop_len, &mut scratch, &mut frame);
-            feats.extend_from_slice(&frame);
-        }
+        self.extract_into(samples, &mut scratch, &mut frame, &mut feats);
         feats
+    }
+
+    /// Allocation-free [`Self::extract`]: **appends** all complete frames
+    /// to `out` through caller-owned scratch buffers (the engine's
+    /// batched step gathers several lanes into one `out` this way).
+    pub fn extract_into(
+        &self,
+        samples: &[f32],
+        scratch: &mut Scratch,
+        frame: &mut Vec<f32>,
+        out: &mut Vec<f32>,
+    ) {
+        let n_frames = self.frames_in(samples.len());
+        for f in 0..n_frames {
+            self.frame_scratch(samples, f * self.hop_len, scratch, frame);
+            out.extend_from_slice(frame);
+        }
     }
 }
 

@@ -215,6 +215,29 @@ mod tests {
     use crate::config::ModelConfig;
 
     #[test]
+    fn int8_weights_cut_dma_traffic_and_step_energy() {
+        // The Precision knob must show up in the power model: the f32
+        // variant streams ≈4× the weight bytes (LayerNorm params are f32
+        // in both), so its per-step DMA energy — and total energy — is
+        // strictly higher.
+        let accel = AccelConfig::paper();
+        let m8 = ModelConfig::paper_tds();
+        let m32 = ModelConfig {
+            precision: crate::config::Precision::F32,
+            ..ModelConfig::paper_tds()
+        };
+        let r8 = simulate_step(&m8, &accel, &HypWorkload::default(), SimMode::Ideal);
+        let r32 = simulate_step(&m32, &accel, &HypWorkload::default(), SimMode::Ideal);
+        assert!(
+            r32.dma_bytes > 3 * r8.dma_bytes,
+            "f32 dma {} !≫ int8 dma {}",
+            r32.dma_bytes,
+            r8.dma_bytes
+        );
+        assert!(step_energy_j(&r32, &accel) > step_energy_j(&r8, &accel));
+    }
+
+    #[test]
     fn total_area_matches_paper() {
         // §5.3: "the total area is 11.68 mm²".
         let b = ChipBudget::for_config(&AccelConfig::paper());

@@ -73,7 +73,7 @@ pub fn fig9(model: &ModelConfig) -> (Table, String) {
     let mut conv_items = Vec::new();
     let mut fc_items = Vec::new();
     for layer in model.layers() {
-        let kb = layer.model_bytes(model.quantized) as f64 / 1024.0;
+        let kb = layer.model_bytes(model.precision) as f64 / 1024.0;
         match &layer {
             Layer::Conv { .. } => {
                 t.row(&[layer.name().into(), "conv".into(), format!("{kb:.2}")]);

@@ -70,7 +70,7 @@ impl Meta {
             groups,
             final_conv_kw: m.get("final_conv_kw").and_then(Json::as_usize),
             tokens: req_num("tokens")?,
-            quantized: false,
+            precision: crate::config::Precision::F32,
         };
         let params = j
             .get("params")

@@ -1,0 +1,108 @@
+//! Counting-allocator proof that the AM hot path is allocation-free in
+//! steady state: after one warm-up step that grows the scratch arena to
+//! its high-water mark, `step_batch_into` must perform ZERO heap
+//! allocations per fused step — for both the f32 and the int8 model.
+//!
+//! This file intentionally holds a SINGLE `#[test]` function: the
+//! counting `#[global_allocator]` is process-wide, and libtest runs
+//! tests in one binary concurrently; a second test would pollute the
+//! counter. Engine-level steady-state reuse is asserted separately via
+//! pointer/capacity fingerprints (see `coordinator::engine` and
+//! `decoder` unit tests), because a full engine step includes the
+//! per-utterance backtrack arena, which legitimately grows
+//! (amortized-O(log) reallocations per utterance) as words are
+//! committed.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use asrpu::am::{QuantizedTdsModel, Scratch, TdsModel, TdsState};
+use asrpu::config::ModelConfig;
+use asrpu::util::rng::Rng;
+
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOC_CALLS.load(Ordering::Relaxed)
+}
+
+fn run_steady_state(label: &str, step: &mut dyn FnMut(), warmups: usize, measured: usize) {
+    for _ in 0..warmups {
+        step();
+    }
+    let before = allocs();
+    for _ in 0..measured {
+        step();
+    }
+    let during = allocs() - before;
+    assert_eq!(
+        during, 0,
+        "{label}: {during} heap allocations across {measured} steady-state steps"
+    );
+}
+
+#[test]
+fn steady_state_am_step_batch_is_allocation_free() {
+    let batch = 4;
+    let f32_model = TdsModel::random(ModelConfig::tiny_tds(), 7);
+    let int8_model = QuantizedTdsModel::from_model(&f32_model).unwrap();
+    let f = f32_model.cfg.frames_per_step() * f32_model.cfg.n_mels;
+    let mut rng = Rng::new(99);
+    let feats: Vec<f32> = (0..batch * f).map(|_| rng.uniform(-1.0, 1.0)).collect();
+
+    // f32 path.
+    {
+        let mut states: Vec<TdsState> = (0..batch).map(|_| f32_model.state()).collect();
+        let mut refs: Vec<&mut TdsState> = states.iter_mut().collect();
+        let mut sc = Scratch::default();
+        let mut out = Vec::new();
+        run_steady_state(
+            "f32 step_batch_into",
+            &mut || f32_model.step_batch_into(&mut refs[..], &feats, &mut sc, &mut out),
+            2,
+            8,
+        );
+        assert!(!out.is_empty());
+    }
+
+    // int8 path (extra scratch user: the per-lane/window partial sums).
+    {
+        let mut states: Vec<TdsState> = (0..batch).map(|_| int8_model.state()).collect();
+        let mut refs: Vec<&mut TdsState> = states.iter_mut().collect();
+        let mut sc = Scratch::default();
+        let mut out = Vec::new();
+        run_steady_state(
+            "int8 step_batch_into",
+            &mut || int8_model.step_batch_into(&mut refs[..], &feats, &mut sc, &mut out),
+            2,
+            8,
+        );
+        assert!(!out.is_empty());
+    }
+}

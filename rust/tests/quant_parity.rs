@@ -1,0 +1,164 @@
+//! Int8 quantization parity: the bounded-error contract of the
+//! `Precision::Int8` serving path.
+//!
+//! Two levels of guarantee, both asserted here:
+//!  1. **Weight-level (hard bound):** per-row quantize→dequantize error
+//!     stays within the documented `INT8_MAX_ROW_REL_ERR` bound for any
+//!     weight distribution (property test).
+//!  2. **Transcript-level:** on synthesized utterances, int8 decoding
+//!     picks the same transcript as f32 whenever the f32 decode is
+//!     confident relative to the *measured* logit divergence — and the
+//!     measured divergence itself must stay small. (With random tiny
+//!     models some utterances decode near a tie; demanding equality
+//!     there would test tie-breaking luck, not quantization quality.)
+
+use asrpu::am::quant::{dequantize, quantize_rows, INT8_MAX_ROW_REL_ERR};
+use asrpu::am::{QuantizedTdsModel, TdsModel};
+use asrpu::config::{DecoderConfig, ModelConfig, Precision};
+use asrpu::coordinator::Engine;
+use asrpu::synth::Synthesizer;
+use asrpu::util::prop;
+use asrpu::util::rng::Rng;
+
+#[test]
+fn quantize_dequantize_rel_err_within_documented_bound() {
+    prop::check("int8-roundtrip-bound", 60, |g| {
+        let rows = 1 + g.index(12);
+        let cols = 1 + g.index(200);
+        // Mix of scales per row, including near-zero and skewed rows.
+        let mut w = Vec::with_capacity(rows * cols);
+        for _ in 0..rows {
+            let mag = g.rng.uniform(0.0, 3.0) + 1e-4;
+            let skew = g.rng.uniform(-1.0, 1.0);
+            for _ in 0..cols {
+                w.push(g.rng.uniform(-mag, mag) + skew * mag);
+            }
+        }
+        let qw = quantize_rows(&w, rows, cols);
+        for r in 0..rows {
+            let row = &w[r * cols..(r + 1) * cols];
+            let amax = row.iter().fold(0.0f32, |a, v| a.max(v.abs()));
+            let bound = INT8_MAX_ROW_REL_ERR * amax.max(f32::EPSILON) + 1e-7;
+            for c in 0..cols {
+                let deq = dequantize(&qw, r, cols, c);
+                asrpu::prop_assert!(
+                    (deq - row[c]).abs() <= bound,
+                    "row {r} col {c}: |{} - {}| > {bound}",
+                    deq,
+                    row[c]
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn quantized_model_bit_exact_batch_parity_holds_too() {
+    // The int8 path inherits the batched-vs-scalar bit-exactness contract
+    // (same driver, same per-output accumulation order).
+    let model = TdsModel::random(ModelConfig::tiny_tds(), 33);
+    let qm = QuantizedTdsModel::from_model(&model).unwrap();
+    let f = qm.cfg.frames_per_step() * qm.cfg.n_mels;
+    prop::check("int8-batch-parity", 8, |g| {
+        let batch = 1 + g.index(5);
+        let mut scalar_states: Vec<_> = (0..batch).map(|_| qm.state()).collect();
+        let mut batch_states: Vec<_> = (0..batch).map(|_| qm.state()).collect();
+        for _ in 0..2 {
+            let feats = g.vec_of(batch * f, |r| r.uniform(-1.0, 1.0));
+            let mut refs: Vec<_> = batch_states.iter_mut().collect();
+            let fused = qm.step_batch(&mut refs, &feats);
+            let lane_out = fused.len() / batch;
+            for (l, st) in scalar_states.iter_mut().enumerate() {
+                let out = qm.step(st, &feats[l * f..(l + 1) * f]);
+                asrpu::prop_assert!(
+                    out == fused[l * lane_out..(l + 1) * lane_out],
+                    "int8 lane {l} diverged at batch {batch}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Decode one utterance collecting logits; return (text, logits, margin)
+/// where margin is the final top-2 live-hypothesis score gap.
+fn decode_collect(engine: &Engine, samples: &[f32]) -> (String, Vec<f32>, f32) {
+    let mut s = engine.open(true).unwrap();
+    engine.feed(&mut s, samples).unwrap();
+    let t = engine.finish(&mut s).unwrap();
+    // With fewer than two live hypotheses every competitor fell at least
+    // a full beam below the winner — use the beam as the (conservative)
+    // gap rather than infinity.
+    let margin = match s.decode.hyps.len() {
+        0 | 1 => engine.dec_cfg.beam,
+        _ => s.decode.hyps[0].score - s.decode.hyps[1].score,
+    };
+    (t.text, s.logits.take().unwrap(), margin)
+}
+
+#[test]
+fn int8_decode_matches_f32_transcripts_on_synthesized_utterances() {
+    let model = TdsModel::random(ModelConfig::tiny_tds(), 11);
+    let f32_engine = Engine::native(model.clone(), DecoderConfig::default()).unwrap();
+    let int8_engine =
+        Engine::native_with_precision(model, Precision::Int8, DecoderConfig::default()).unwrap();
+    assert_eq!(int8_engine.model_cfg.precision, Precision::Int8);
+    let synth = Synthesizer::default();
+    let seeds = [3u64, 9, 27, 41, 55, 68];
+    let mut matches = 0usize;
+    for &seed in &seeds {
+        let mut rng = Rng::new(seed);
+        let words: Vec<u32> = vec![(seed % 10) as u32, ((seed + 4) % 10) as u32];
+        let u = synth.render(&words, &mut rng);
+        let (text_f, logits_f, margin) = decode_collect(&f32_engine, &u.samples);
+        let (text_q, logits_q, _) = decode_collect(&int8_engine, &u.samples);
+        assert_eq!(logits_f.len(), logits_q.len(), "seed {seed}: logit shapes");
+        // Accumulated logit divergence over the whole utterance: an upper
+        // bound on the score drift any single hypothesis path can suffer.
+        let tokens = f32_engine.model_cfg.tokens;
+        let drift: f32 = logits_f
+            .chunks(tokens)
+            .zip(logits_q.chunks(tokens))
+            .map(|(a, b)| {
+                a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max)
+            })
+            .sum();
+        // Per-frame divergence must stay small in absolute terms.
+        let frames = logits_f.len() / tokens;
+        assert!(
+            drift / frames as f32 <= 0.5,
+            "seed {seed}: mean per-frame int8 logit drift {} too large",
+            drift / frames as f32
+        );
+        if margin > 2.0 * drift + 1e-3 {
+            // The f32 decode is confident beyond any possible int8 score
+            // perturbation: the transcripts MUST agree.
+            assert_eq!(text_f, text_q, "seed {seed}: confident transcript flipped");
+        }
+        if text_f == text_q {
+            matches += 1;
+        }
+    }
+    // Transcript agreement must be the norm, not the exception — a
+    // minority of genuinely near-tie utterances may flip without
+    // indicting the quantizer.
+    assert!(
+        matches * 3 >= seeds.len() * 2,
+        "int8 matched only {matches}/{} f32 transcripts",
+        seeds.len()
+    );
+}
+
+#[test]
+fn int8_model_reports_quarter_weight_bytes() {
+    // Cross-layer consistency: the functional int8 model's footprint and
+    // the config-level accounting agree on the 4× weight shrink.
+    let cfg = ModelConfig::tiny_tds();
+    let model = TdsModel::random(cfg.clone(), 5);
+    let qm = QuantizedTdsModel::from_model(&model).unwrap();
+    let f32_cfg_bytes = cfg.model_bytes();
+    let int8_cfg_bytes = qm.cfg.model_bytes();
+    assert_eq!(cfg.precision, Precision::F32);
+    assert_eq!(int8_cfg_bytes * 4, f32_cfg_bytes);
+}
