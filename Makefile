@@ -1,0 +1,38 @@
+# ASRPU reproduction — build-time targets.
+#
+# `make artifacts` trains the tiny TDS model (python/compile) and exports
+# the AOT artifacts the Rust runtime consumes:
+#   artifacts/model_step.hlo.txt  streaming step HLO text
+#   artifacts/mfcc.hlo.txt        MFCC front-end HLO text
+#   artifacts/weights.bin         tensor container (util/tensor_io)
+#   artifacts/meta.json           geometry, parameter order, metrics
+# Without them the artifact integration tests
+# (rust/tests/cross_layer.rs, rust/tests/e2e_artifacts.rs, the xla half
+# of rust/tests/builder_api.rs) and the xla-backed examples/benches skip
+# gracefully.
+
+PYTHON ?= python3
+ARTIFACTS := artifacts
+
+.PHONY: artifacts test bench fmt lint clean-artifacts
+
+artifacts: $(ARTIFACTS)/meta.json
+
+$(ARTIFACTS)/meta.json: python/compile/*.py
+	cd python && $(PYTHON) -m compile.aot --out-dir ../$(ARTIFACTS)
+
+# The repo's tier-1 gate.
+test:
+	cd rust && cargo build --release && cargo test -q
+
+bench:
+	cd rust && cargo bench
+
+fmt:
+	cd rust && cargo fmt
+
+lint:
+	cd rust && cargo fmt --check && cargo clippy --all-targets -- -D warnings
+
+clean-artifacts:
+	rm -rf $(ARTIFACTS)

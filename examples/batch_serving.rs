@@ -22,10 +22,11 @@ fn main() -> anyhow::Result<()> {
     let max_batch = args.usize_or("batch", BatchConfig::default().max_batch)?;
     let seed = args.usize_or("seed", 42)? as u64;
 
-    let engine = Engine::native(
-        TdsModel::random(ModelConfig::tiny_tds(), 1),
-        DecoderConfig::default(),
-    )?;
+    let engine = Engine::builder()
+        .native(TdsModel::random(ModelConfig::tiny_tds(), 1))
+        .decoder(DecoderConfig::default())
+        .batch(BatchConfig { max_batch, ..BatchConfig::default() })
+        .build()?;
     let step_len = engine.model_cfg.step_len;
 
     // N utterances of varying length — sessions will join and drain the

@@ -30,7 +30,10 @@ fn main() -> anyhow::Result<()> {
     let model = ModelConfig::paper_tds();
 
     // Noise robustness at the default beam (context for the sweep).
-    let engine = Engine::from_artifacts(&rt, &artifacts_dir(), DecoderConfig::default())?;
+    let engine = Engine::builder()
+        .artifacts(&rt, artifacts_dir())
+        .decoder(DecoderConfig::default())
+        .build()?;
     let mut tn = Table::new(
         "ABL2a — noise robustness (default beam 14, greedy vs beam)",
         &["Noise σ", "Beam WER", "Greedy WER", "Sent acc"],
@@ -75,7 +78,10 @@ fn main() -> anyhow::Result<()> {
         (20.0, 384),
     ] {
         let dec = DecoderConfig { beam, max_hyps, ..Default::default() };
-        let engine = Engine::from_artifacts(&rt, &artifacts_dir(), dec)?;
+        let engine = Engine::builder()
+            .artifacts(&rt, artifacts_dir())
+            .decoder(dec)
+            .build()?;
         let synth = Synthesizer { noise_std: SWEEP_NOISE, ..Default::default() };
         let mut rng = Rng::new(4242); // same corpus for every beam point
         let mut wer = WerAccum::default();

@@ -28,7 +28,10 @@ fn main() -> anyhow::Result<()> {
         "artifacts missing — run `make artifacts` first"
     );
     let rt = Runtime::cpu()?;
-    let engine = Engine::from_artifacts(&rt, &artifacts_dir(), DecoderConfig::default())?;
+    let engine = Engine::builder()
+        .artifacts(&rt, artifacts_dir())
+        .decoder(DecoderConfig::default())
+        .build()?;
     let synth = Synthesizer::default();
     let mut rng = Rng::new(SEED);
 

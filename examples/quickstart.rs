@@ -14,16 +14,20 @@ use asrpu::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
     // 1. An engine: MFCC front-end + TDS acoustic model + CTC beam search
-    //    with lexicon and n-gram LM.
+    //    with lexicon and n-gram LM, assembled through the builder (the
+    //    single construction path).
     let engine = if artifacts_dir().join("meta.json").exists() {
         let rt = Runtime::cpu()?;
-        Engine::from_artifacts(&rt, &artifacts_dir(), DecoderConfig::default())?
+        Engine::builder()
+            .artifacts(&rt, artifacts_dir())
+            .decoder(DecoderConfig::default())
+            .build()?
     } else {
         eprintln!("(artifacts missing — native backend with random weights)");
-        Engine::native(
-            asrpu::am::TdsModel::random(ModelConfig::tiny_tds(), 1),
-            DecoderConfig::default(),
-        )?
+        Engine::builder()
+            .native(asrpu::am::TdsModel::random(ModelConfig::tiny_tds(), 1))
+            .decoder(DecoderConfig::default())
+            .build()?
     };
 
     // 2. A test utterance from the synthetic-speech protocol.

@@ -20,19 +20,19 @@ fn main() -> anyhow::Result<()> {
     let server = Server::start(
         "127.0.0.1:0",
         || {
-            if artifacts_dir().join("meta.json").exists() {
+            let builder = if artifacts_dir().join("meta.json").exists() {
                 let rt = Runtime::cpu()?;
-                Engine::from_artifacts(&rt, &artifacts_dir(), DecoderConfig::default())
+                Engine::builder().artifacts(&rt, artifacts_dir())
             } else {
                 eprintln!("(artifacts missing — native backend with random weights)");
-                Engine::native(
-                    asrpu::am::TdsModel::random(ModelConfig::tiny_tds(), 1),
-                    DecoderConfig::default(),
-                )
-            }
+                Engine::builder().native(asrpu::am::TdsModel::random(ModelConfig::tiny_tds(), 1))
+            };
+            Ok(builder
+                .decoder(DecoderConfig::default())
+                .batch(BatchConfig::default())
+                .build()?)
         },
         64,
-        BatchConfig::default(),
     )?;
     println!("server on {}", server.addr);
 

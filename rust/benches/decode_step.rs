@@ -14,11 +14,11 @@ fn main() {
     let u = Synthesizer::default().render(&[1, 2, 3, 4], &mut rng);
     let chunk: Vec<f32> = u.samples[..1520].to_vec();
 
-    let native = Engine::native(
-        TdsModel::random(ModelConfig::tiny_tds(), 5),
-        DecoderConfig::default(),
-    )
-    .unwrap();
+    let native = Engine::builder()
+        .native(TdsModel::random(ModelConfig::tiny_tds(), 5))
+        .decoder(DecoderConfig::default())
+        .build()
+        .unwrap();
     b.run("engine/native/step", || {
         let mut s = native.open(false).unwrap();
         native.feed(&mut s, &chunk).unwrap()
@@ -29,7 +29,11 @@ fn main() {
 
     if artifacts_dir().join("meta.json").exists() {
         let rt = Runtime::cpu().unwrap();
-        let xla = Engine::from_artifacts(&rt, &artifacts_dir(), DecoderConfig::default()).unwrap();
+        let xla = Engine::builder()
+            .artifacts(&rt, artifacts_dir())
+            .decoder(DecoderConfig::default())
+            .build()
+            .unwrap();
         b.run("engine/xla/step", || {
             let mut s = xla.open(false).unwrap();
             xla.feed(&mut s, &chunk).unwrap()

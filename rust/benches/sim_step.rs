@@ -3,7 +3,7 @@
 //! design-space sweeps (§Perf L3 target: ≥10k steps/s).
 use asrpu::accel::{build_step_kernels, simulate_step, HypWorkload, SimMode};
 use asrpu::bench::Bench;
-use asrpu::config::{AccelConfig, ModelConfig};
+use asrpu::config::{AccelConfig, ModelConfig, PipelineDesc};
 use asrpu::power::ChipBudget;
 
 fn main() {
@@ -11,7 +11,8 @@ fn main() {
     let model = ModelConfig::paper_tds();
     let accel = AccelConfig::paper();
     let hyp = HypWorkload::default();
-    b.run("sim/build_kernels/paper", || build_step_kernels(&model, &accel, &hyp, 1).len());
+    let pipe = PipelineDesc::for_model(&model);
+    b.run("sim/build_kernels/paper", || build_step_kernels(&pipe, &accel, &hyp, 1).len());
     let r = b.run("sim/step/ideal", || {
         simulate_step(&model, &accel, &hyp, SimMode::Ideal).total_cycles
     });

@@ -10,7 +10,7 @@
 //!   bandwidth) and setup-thread serialization, exposing stalls the
 //!   Fig. 7 pipelining is designed to hide.
 
-use crate::config::{AccelConfig, Layer, ModelConfig};
+use crate::config::{AccelConfig, Layer, ModelConfig, PipelineDesc};
 
 use super::kernels::{build_step_kernels, HypWorkload, KernelClass, KernelExec, SETUP_INSTRS};
 use super::memory::{hyp_expansion_miss_rate, GraphWorkload};
@@ -137,8 +137,23 @@ pub fn simulate_step_batched(
     mode: SimMode,
     batch: usize,
 ) -> StepReport {
-    let kernels = build_step_kernels(model, accel, hyp, batch);
-    simulate_kernels(&kernels, model, accel, mode)
+    simulate_pipeline(&PipelineDesc::for_model(model), accel, hyp, mode, batch)
+}
+
+/// Simulate one decoding step of an explicit stage description — the
+/// entry point the engine-visible pipeline flows through: the kernel
+/// program is derived from the same [`PipelineDesc`] the functional
+/// engine executes, so simulator timing always describes the program
+/// actually being served.
+pub fn simulate_pipeline(
+    pipe: &PipelineDesc,
+    accel: &AccelConfig,
+    hyp: &HypWorkload,
+    mode: SimMode,
+    batch: usize,
+) -> StepReport {
+    let kernels = build_step_kernels(pipe, accel, hyp, batch);
+    simulate_kernels(&kernels, &pipe.model, accel, mode)
 }
 
 /// Simulate a given kernel sequence (exposed for ablations).

@@ -10,7 +10,7 @@
 //! memory are split into neuron subsets (§5.2). The hypothesis-expansion
 //! kernel runs one thread per live hypothesis, once per acoustic vector.
 
-use crate::config::{AccelConfig, Layer, ModelConfig};
+use crate::config::{AccelConfig, Layer, PipelineDesc, StageDesc};
 
 /// Loop-body overhead per iteration: compare + conditional jump + index
 /// update (§5.1's example loop shape).
@@ -130,9 +130,13 @@ impl Default for HypWorkload {
     }
 }
 
-/// Build the full decoding-step kernel sequence for a model on a given
-/// accelerator config: MFCC, the 79 AM kernels (FC kernels split to fit
-/// model memory, §5.2), then `vectors_per_step` hypothesis expansions.
+/// Build the decoding-step kernel sequence by *deriving* it from the
+/// shared stage description ([`PipelineDesc`]) — the same ordered stage
+/// list the functional engine executes (`coordinator::Engine::pipeline`),
+/// so the simulator's program and the engine's pipeline cannot drift
+/// apart. Per stage: MFCC (one thread per output frame), one kernel per
+/// AM layer (FC kernels split to fit model memory, §5.2), then the
+/// hypothesis-expansion repetitions.
 ///
 /// `batch` is the number of concurrent audio streams fused into the step
 /// (the coordinator's lane-batched serving, `coordinator::Batcher`). Each
@@ -143,94 +147,105 @@ impl Default for HypWorkload {
 /// PE-pool utilization on the small layers whose thread count alone
 /// cannot fill the pool.
 pub fn build_step_kernels(
-    model: &ModelConfig,
+    pipe: &PipelineDesc,
     accel: &AccelConfig,
     hyp: &HypWorkload,
     batch: usize,
 ) -> Vec<KernelExec> {
     assert!(batch >= 1, "batch factor must be at least 1");
     let batch = batch as u64;
+    let model = &pipe.model;
     let v = accel.mac_vector_width as u64;
     let mut kernels = Vec::new();
-    // Feature extraction: one thread per output frame.
-    kernels.push(KernelExec {
-        name: "feat.mfcc".into(),
-        class: KernelClass::FeatureExtraction,
-        threads: model.frames_per_step() as u64,
-        instr_per_thread: mfcc_thread_instrs(
-            model.win_len as u64,
-            model.win_len.next_power_of_two() as u64,
-            model.n_mels as u64,
-        ),
-        model_bytes: 0,
-        smem_bytes: (model.samples_per_step() * 4 + model.frames_per_step() * model.n_mels * 4)
-            as u64,
-    });
-    // Acoustic model layers. Track each layer's temporal rate.
-    let mut rate_div = 1usize; // output timesteps = frames / rate_div
-    for layer in model.layers() {
-        let bytes_per_elem = model.precision.bytes_per_weight();
-        match &layer {
-            Layer::Conv { out_ch, stride, w, in_ch, kw, .. } => {
-                rate_div *= stride;
-                let t_out = (model.frames_per_step() / rate_div) as u64;
+    // Temporal rate through the AM stages: output timesteps = frames /
+    // rate_div after each strided conv.
+    let mut rate_div = 1usize;
+    for stage in &pipe.stages {
+        match stage {
+            StageDesc::Features => {
                 kernels.push(KernelExec {
-                    name: layer.name().to_string(),
-                    class: KernelClass::Conv,
-                    threads: (out_ch * w) as u64 * t_out,
-                    instr_per_thread: dot_thread_instrs(layer.dot_len() as u64, v),
-                    model_bytes: layer.model_bytes(model.precision) as u64,
-                    smem_bytes: ((in_ch * w * kw + out_ch * w) * bytes_per_elem) as u64 * t_out,
+                    name: stage.name(),
+                    class: KernelClass::FeatureExtraction,
+                    threads: model.frames_per_step() as u64,
+                    instr_per_thread: mfcc_thread_instrs(
+                        model.win_len as u64,
+                        model.win_len.next_power_of_two() as u64,
+                        model.n_mels as u64,
+                    ),
+                    model_bytes: 0,
+                    smem_bytes: (model.samples_per_step() * 4
+                        + model.frames_per_step() * model.n_mels * 4)
+                        as u64,
                 });
             }
-            Layer::Fc { in_dim, out_dim, .. } => {
-                let t_out = (model.frames_per_step() / rate_div) as u64;
-                let bytes = layer.model_bytes(model.precision) as u64;
-                // §5.2: split kernels larger than model memory into neuron
-                // subsets, each fitting.
-                let splits = bytes.div_ceil(accel.model_mem_bytes as u64).max(1);
-                let neurons_per = (*out_dim as u64).div_ceil(splits);
-                for s in 0..splits {
-                    let n = neurons_per.min(*out_dim as u64 - s * neurons_per);
-                    let name = if splits == 1 {
-                        layer.name().to_string()
-                    } else {
-                        format!("{}[{}/{}]", layer.name(), s, splits)
-                    };
+            StageDesc::AmLayer(layer) => {
+                let bytes_per_elem = model.precision.bytes_per_weight();
+                match layer {
+                    Layer::Conv { out_ch, stride, w, in_ch, kw, .. } => {
+                        rate_div *= stride;
+                        let t_out = (model.frames_per_step() / rate_div) as u64;
+                        kernels.push(KernelExec {
+                            name: layer.name().to_string(),
+                            class: KernelClass::Conv,
+                            threads: (out_ch * w) as u64 * t_out,
+                            instr_per_thread: dot_thread_instrs(layer.dot_len() as u64, v),
+                            model_bytes: layer.model_bytes(model.precision) as u64,
+                            smem_bytes: ((in_ch * w * kw + out_ch * w) * bytes_per_elem) as u64
+                                * t_out,
+                        });
+                    }
+                    Layer::Fc { in_dim, out_dim, .. } => {
+                        let t_out = (model.frames_per_step() / rate_div) as u64;
+                        let bytes = layer.model_bytes(model.precision) as u64;
+                        // §5.2: split kernels larger than model memory into
+                        // neuron subsets, each fitting.
+                        let splits = bytes.div_ceil(accel.model_mem_bytes as u64).max(1);
+                        let neurons_per = (*out_dim as u64).div_ceil(splits);
+                        for s in 0..splits {
+                            let n = neurons_per.min(*out_dim as u64 - s * neurons_per);
+                            let name = if splits == 1 {
+                                layer.name().to_string()
+                            } else {
+                                format!("{}[{}/{}]", layer.name(), s, splits)
+                            };
+                            kernels.push(KernelExec {
+                                name,
+                                class: KernelClass::Fc,
+                                threads: n * t_out,
+                                instr_per_thread: dot_thread_instrs(*in_dim as u64, v),
+                                model_bytes: n * (*in_dim as u64 + 1) * bytes_per_elem as u64,
+                                smem_bytes: ((*in_dim + *out_dim) * bytes_per_elem) as u64 * t_out,
+                            });
+                        }
+                    }
+                    Layer::LayerNorm { dim, .. } => {
+                        let t_out = (model.frames_per_step() / rate_div) as u64;
+                        kernels.push(KernelExec {
+                            name: layer.name().to_string(),
+                            class: KernelClass::LayerNorm,
+                            threads: t_out,
+                            instr_per_thread: layernorm_thread_instrs(*dim as u64),
+                            model_bytes: (2 * dim * 4) as u64,
+                            smem_bytes: (2 * dim * 4) as u64 * t_out,
+                        });
+                    }
+                }
+            }
+            StageDesc::HypExpansion { repeats } => {
+                // Once per acoustic vector (Fig. 6).
+                let instr = hyp_expansion_thread_instrs(hyp.avg_children, hyp.word_commit_frac);
+                for rep in 0..*repeats {
                     kernels.push(KernelExec {
-                        name,
-                        class: KernelClass::Fc,
-                        threads: n * t_out,
-                        instr_per_thread: dot_thread_instrs(*in_dim as u64, v),
-                        model_bytes: n * (*in_dim as u64 + 1) * bytes_per_elem as u64,
-                        smem_bytes: ((*in_dim + *out_dim) * bytes_per_elem) as u64 * t_out,
+                        name: format!("hyp.expand[{rep}]"),
+                        class: KernelClass::HypExpansion,
+                        threads: hyp.n_hyps,
+                        instr_per_thread: instr,
+                        model_bytes: 0,
+                        smem_bytes: hyp.n_hyps * accel.hyp_record_bytes as u64 * 2,
                     });
                 }
             }
-            Layer::LayerNorm { dim, .. } => {
-                let t_out = (model.frames_per_step() / rate_div) as u64;
-                kernels.push(KernelExec {
-                    name: layer.name().to_string(),
-                    class: KernelClass::LayerNorm,
-                    threads: t_out,
-                    instr_per_thread: layernorm_thread_instrs(*dim as u64),
-                    model_bytes: (2 * dim * 4) as u64,
-                    smem_bytes: (2 * dim * 4) as u64 * t_out,
-                });
-            }
         }
-    }
-    // Hypothesis expansion: once per acoustic vector (Fig. 6).
-    let instr = hyp_expansion_thread_instrs(hyp.avg_children, hyp.word_commit_frac);
-    for rep in 0..model.vectors_per_step() {
-        kernels.push(KernelExec {
-            name: format!("hyp.expand[{rep}]"),
-            class: KernelClass::HypExpansion,
-            threads: hyp.n_hyps,
-            instr_per_thread: instr,
-            model_bytes: 0,
-            smem_bytes: hyp.n_hyps * accel.hyp_record_bytes as u64 * 2,
-        });
     }
     // Lane-batching: every stream runs its own threads over the same
     // staged model data.
@@ -246,6 +261,11 @@ pub fn build_step_kernels(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::ModelConfig;
+
+    fn pipe(m: &ModelConfig) -> PipelineDesc {
+        PipelineDesc::for_model(m)
+    }
 
     #[test]
     fn dot_instrs_scale_with_length_and_vector_width() {
@@ -262,7 +282,7 @@ mod tests {
     fn paper_step_kernel_inventory() {
         let m = ModelConfig::paper_tds();
         let a = AccelConfig::paper();
-        let ks = build_step_kernels(&m, &a, &HypWorkload::default(), 1);
+        let ks = build_step_kernels(&pipe(&m), &a, &HypWorkload::default(), 1);
         let count = |c: KernelClass| ks.iter().filter(|k| k.class == c).count();
         assert_eq!(count(KernelClass::FeatureExtraction), 1);
         assert_eq!(count(KernelClass::Conv), 18);
@@ -278,7 +298,7 @@ mod tests {
     fn split_kernels_fit_model_memory() {
         let m = ModelConfig::paper_tds();
         let a = AccelConfig::paper();
-        let ks = build_step_kernels(&m, &a, &HypWorkload::default(), 1);
+        let ks = build_step_kernels(&pipe(&m), &a, &HypWorkload::default(), 1);
         for k in &ks {
             assert!(
                 k.model_bytes <= a.model_mem_bytes as u64,
@@ -303,7 +323,7 @@ mod tests {
         // computing 600 neurons."
         let m = ModelConfig::paper_tds();
         let a = AccelConfig::paper();
-        let ks = build_step_kernels(&m, &a, &HypWorkload::default(), 1);
+        let ks = build_step_kernels(&pipe(&m), &a, &HypWorkload::default(), 1);
         let g2_fc: Vec<&KernelExec> =
             ks.iter().filter(|k| k.name.starts_with("g2.b0.fc0")).collect();
         assert_eq!(g2_fc.len(), 2, "1.44 MB FC splits into exactly 2 kernels");
@@ -315,7 +335,7 @@ mod tests {
     fn subsampling_reduces_downstream_threads() {
         let m = ModelConfig::paper_tds();
         let a = AccelConfig::paper();
-        let ks = build_step_kernels(&m, &a, &HypWorkload::default(), 1);
+        let ks = build_step_kernels(&pipe(&m), &a, &HypWorkload::default(), 1);
         let sub = ks.iter().find(|k| k.name == "g0.sub").unwrap();
         let blk = ks.iter().find(|k| k.name == "g0.b0.conv").unwrap();
         // Entry conv emits at stride 2 → 4 timesteps; so does the block.
@@ -327,8 +347,8 @@ mod tests {
     fn batch_factor_scales_threads_not_model_bytes() {
         let m = ModelConfig::paper_tds();
         let a = AccelConfig::paper();
-        let one = build_step_kernels(&m, &a, &HypWorkload::default(), 1);
-        let eight = build_step_kernels(&m, &a, &HypWorkload::default(), 8);
+        let one = build_step_kernels(&pipe(&m), &a, &HypWorkload::default(), 1);
+        let eight = build_step_kernels(&pipe(&m), &a, &HypWorkload::default(), 8);
         assert_eq!(one.len(), eight.len(), "batching adds lanes, not kernels");
         for (x, y) in one.iter().zip(&eight) {
             assert_eq!(y.threads, 8 * x.threads, "{}", x.name);
@@ -347,8 +367,8 @@ mod tests {
         let m32 = ModelConfig { precision: Precision::F32, ..ModelConfig::paper_tds() };
         let a = AccelConfig::paper();
         let hyp = HypWorkload::default();
-        let k8 = build_step_kernels(&m8, &a, &hyp, 1);
-        let k32 = build_step_kernels(&m32, &a, &hyp, 1);
+        let k8 = build_step_kernels(&pipe(&m8), &a, &hyp, 1);
+        let k32 = build_step_kernels(&pipe(&m32), &a, &hyp, 1);
         let weight_bytes = |ks: &[KernelExec]| {
             ks.iter()
                 .filter(|k| matches!(k.class, KernelClass::Conv | KernelClass::Fc))
@@ -381,7 +401,7 @@ mod tests {
         // the same order (50–160 M) for the headline claim to reproduce.
         let m = ModelConfig::paper_tds();
         let a = AccelConfig::paper();
-        let ks = build_step_kernels(&m, &a, &HypWorkload::default(), 1);
+        let ks = build_step_kernels(&pipe(&m), &a, &HypWorkload::default(), 1);
         let total: u64 = ks.iter().map(|k| k.total_instrs()).sum();
         assert!(
             (50_000_000..170_000_000).contains(&total),

@@ -10,7 +10,9 @@ pub mod memory;
 pub mod pool;
 
 pub use command::{AsrpuDevice, Command};
-pub use controller::{simulate_step, simulate_step_batched, SimMode, StepReport};
+pub use controller::{
+    simulate_pipeline, simulate_step, simulate_step_batched, SimMode, StepReport,
+};
 pub use hypunit::HypUnit;
 pub use memory::{Cache, GraphWorkload};
 pub use kernels::{build_step_kernels, HypWorkload, KernelClass, KernelExec};

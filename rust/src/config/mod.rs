@@ -3,9 +3,11 @@
 
 pub mod accel;
 pub mod model;
+pub mod pipeline;
 
 pub use accel::AccelConfig;
 pub use model::{Group, Layer, ModelConfig, Precision};
+pub use pipeline::{PipelineDesc, StageDesc};
 
 use std::path::{Path, PathBuf};
 

@@ -1,0 +1,180 @@
+//! The shared stage/program description of one decoding step — the
+//! paper's "one program per decoder part" made explicit as data.
+//!
+//! ASRPU's programmability story (§3, §4) is that the decoding step is an
+//! ordered sequence of small programs: feature extraction, one kernel per
+//! acoustic-model layer, then a hypothesis-expansion program per acoustic
+//! vector. This module is the single source of truth for that sequence.
+//! Both halves of the repo consume it:
+//!
+//! * the **functional engine** ([`crate::coordinator::Engine::pipeline`])
+//!   executes exactly this stage list per step, and
+//! * the **cycle-approximate simulator**
+//!   ([`crate::accel::build_step_kernels`]) derives its kernel program —
+//!   instruction counts, threads, model-memory staging — from the same
+//!   description,
+//!
+//! so a new workload (a different model topology, a greedy path with no
+//! hypothesis expansion, keyword spotting over a trimmed stage list)
+//! changes one description instead of two hand-maintained programs.
+#![deny(missing_docs)]
+
+use super::model::{Layer, ModelConfig};
+
+/// One stage of the decoding-step pipeline, in execution order.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StageDesc {
+    /// The MFCC front-end: `samples_per_step` audio samples in,
+    /// `frames_per_step × n_mels` feature frames out (one thread per
+    /// output frame on the accelerator).
+    Features,
+    /// One acoustic-model layer program (§4.2: one kernel per layer, one
+    /// thread per output neuron).
+    AmLayer(Layer),
+    /// The hypothesis-expansion program, run once per acoustic score
+    /// vector (Fig. 6) — `repeats` executions per decoding step.
+    HypExpansion {
+        /// Executions per decoding step (`vectors_per_step`).
+        repeats: usize,
+    },
+}
+
+impl StageDesc {
+    /// Short human-readable stage name (kernel naming, introspection).
+    pub fn name(&self) -> String {
+        match self {
+            StageDesc::Features => "feat.mfcc".to_string(),
+            StageDesc::AmLayer(layer) => layer.name().to_string(),
+            StageDesc::HypExpansion { repeats } => format!("hyp.expand×{repeats}"),
+        }
+    }
+}
+
+/// The complete program description of one decoding step for a model:
+/// the model geometry plus the ordered stage list derived from it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PipelineDesc {
+    /// The model geometry every stage is shaped by.
+    pub model: ModelConfig,
+    /// Stages in execution order: features, the AM layers, hypothesis
+    /// expansion.
+    pub stages: Vec<StageDesc>,
+}
+
+impl PipelineDesc {
+    /// The canonical decoding-step pipeline for a model: MFCC features,
+    /// every AM layer in execution order, then one hypothesis expansion
+    /// per acoustic vector.
+    pub fn for_model(model: &ModelConfig) -> Self {
+        let mut stages = Vec::with_capacity(model.layers().len() + 2);
+        stages.push(StageDesc::Features);
+        for layer in model.layers() {
+            stages.push(StageDesc::AmLayer(layer));
+        }
+        stages.push(StageDesc::HypExpansion { repeats: model.vectors_per_step() });
+        PipelineDesc { model: model.clone(), stages }
+    }
+
+    /// Number of acoustic-model layer stages.
+    pub fn am_stage_count(&self) -> usize {
+        self.stages
+            .iter()
+            .filter(|s| matches!(s, StageDesc::AmLayer(_)))
+            .count()
+    }
+
+    /// Total hypothesis-expansion executions per decoding step.
+    pub fn hyp_repeats(&self) -> usize {
+        self.stages
+            .iter()
+            .map(|s| match s {
+                StageDesc::HypExpansion { repeats } => *repeats,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Validate internal consistency: AM stages must chain dimensionally
+    /// from `n_mels` to `tokens` exactly like the model's layer list.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let mut cur = self.model.n_mels;
+        for stage in &self.stages {
+            if let StageDesc::AmLayer(layer) = stage {
+                match layer {
+                    Layer::Conv { in_ch, out_ch, w, .. } => {
+                        anyhow::ensure!(
+                            cur == in_ch * w,
+                            "stage {}: expects {} inputs, pipeline carries {cur}",
+                            layer.name(),
+                            in_ch * w
+                        );
+                        cur = out_ch * w;
+                    }
+                    Layer::Fc { in_dim, out_dim, .. } => {
+                        anyhow::ensure!(
+                            cur == *in_dim,
+                            "stage {}: expects {in_dim} inputs, pipeline carries {cur}",
+                            layer.name()
+                        );
+                        cur = *out_dim;
+                    }
+                    Layer::LayerNorm { dim, .. } => {
+                        anyhow::ensure!(
+                            cur == *dim,
+                            "stage {}: expects {dim} inputs, pipeline carries {cur}",
+                            layer.name()
+                        );
+                    }
+                }
+            }
+        }
+        anyhow::ensure!(
+            cur == self.model.tokens,
+            "pipeline emits {cur} values per vector, model expects {} tokens",
+            self.model.tokens
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonical_pipeline_shape() {
+        let m = ModelConfig::paper_tds();
+        let p = PipelineDesc::for_model(&m);
+        // features + 79 AM kernels + hyp expansion.
+        assert_eq!(p.stages.len(), 1 + 79 + 1);
+        assert_eq!(p.am_stage_count(), 79);
+        assert_eq!(p.hyp_repeats(), m.vectors_per_step());
+        assert_eq!(p.stages[0], StageDesc::Features);
+        assert!(matches!(p.stages.last(), Some(StageDesc::HypExpansion { repeats: 4 })));
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn validation_rejects_broken_chains() {
+        let m = ModelConfig::tiny_tds();
+        let mut p = PipelineDesc::for_model(&m);
+        p.validate().unwrap();
+        // Drop one AM stage: the dimension chain breaks.
+        let idx = p
+            .stages
+            .iter()
+            .position(|s| matches!(s, StageDesc::AmLayer(Layer::Conv { .. })))
+            .unwrap();
+        p.stages.remove(idx);
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn stage_names_are_stable() {
+        let m = ModelConfig::tiny_tds();
+        let p = PipelineDesc::for_model(&m);
+        assert_eq!(p.stages[0].name(), "feat.mfcc");
+        assert_eq!(p.stages[1].name(), "g0.sub");
+        assert_eq!(p.stages.last().unwrap().name(), "hyp.expand×4");
+    }
+}

@@ -1,0 +1,455 @@
+//! The acoustic-model backend contract — the programmability seam of the
+//! engine.
+//!
+//! ASRPU's thesis is that the hardware survives model churn because each
+//! decoder part is *a program*, not a circuit. The serving engine mirrors
+//! that: acoustic scoring is behind the object-safe [`AmBackend`] trait,
+//! so a new model family, a different numeric format or a remote
+//! execution path plugs into [`super::Engine`] without the engine
+//! learning its name. Three implementations ship in-crate:
+//!
+//! * [`NativeBackend`] — the in-crate f32 TDS mirror (`am::TdsModel`);
+//! * [`QuantizedBackend`] — int8 weights with f32 accumulate
+//!   (`am::QuantizedTdsModel`);
+//! * [`XlaBackend`] — the AOT artifacts via PJRT (`runtime::XlaAm`),
+//!   including a default batched step that drains every ready lane
+//!   through the engine's scratch arena (previously the engine
+//!   special-cased XLA into a scalar fallback).
+//!
+//! Contract highlights:
+//!
+//! * **State is opaque.** Sessions hold an [`AmLaneState`] the backend
+//!   created; only the backend downcasts it. Mixing states across
+//!   backends is a programming error and panics with a clear message.
+//! * **Scratch is caller-owned.** Both scoring entry points write through
+//!   a [`StepScratch`] arena and an output buffer owned by the engine, so
+//!   steady-state serving stays allocation-free for the native backends
+//!   (the PJRT path still allocates inside the runtime per step — see
+//!   KNOWN_FAILURES.md).
+//! * **Metadata is queryable.** [`AmBackend::precision`] and
+//!   [`AmBackend::weight_bytes_per_step`] feed the simulator/power
+//!   models and the serving protocol's `config` introspection op.
+#![deny(missing_docs)]
+
+use anyhow::Result;
+use std::any::Any;
+use std::path::Path;
+
+use crate::am::{LaneStates, QuantizedTdsModel, Scratch as AmScratch, TdsModel, TdsState};
+use crate::config::{ModelConfig, Precision};
+use crate::dsp::{mfcc::Scratch as MfccScratch, Mfcc};
+use crate::runtime::xla_am::XlaState;
+use crate::runtime::{Runtime, XlaAm};
+
+/// Type-erased per-session acoustic state. Created by
+/// [`AmBackend::open_state`]; the owning backend downcasts it back in its
+/// scoring entry points.
+pub struct AmLaneState {
+    inner: Box<dyn Any>,
+}
+
+impl AmLaneState {
+    /// Wrap a backend's concrete session state.
+    pub fn new<T: 'static>(state: T) -> Self {
+        AmLaneState { inner: Box::new(state) }
+    }
+
+    /// Recover the concrete state. Panics if the state was created by a
+    /// different backend (sessions are engine-bound; this cannot happen
+    /// through the public API).
+    pub fn downcast_mut<T: 'static>(&mut self) -> &mut T {
+        self.inner
+            .downcast_mut::<T>()
+            .expect("session state does not belong to this backend")
+    }
+}
+
+/// Reusable buffers for one scoring step, owned by the engine and lent to
+/// the backend: feature-extraction scratch plus the AM activation arena.
+/// After warm-up at a given batch shape every buffer is recycled in place
+/// (capacity-fingerprint test in `coordinator::engine`).
+#[derive(Default)]
+pub struct StepScratch {
+    /// AM activation ping-pong / conv gather / int8 partial sums.
+    pub am: AmScratch,
+    /// MFCC frame pipeline scratch.
+    pub mfcc: MfccScratch,
+    /// One-frame staging buffer for the MFCC extractor.
+    pub frame: Vec<f32>,
+    /// Gathered feature frames, lane-major `[B × (frames × n_mels)]`.
+    pub feats: Vec<f32>,
+}
+
+impl StepScratch {
+    /// Pointer/capacity fingerprint — lets tests assert steady-state
+    /// buffer reuse without a counting allocator.
+    pub fn fingerprint(&self) -> ([(usize, usize); 4], (usize, usize), (usize, usize)) {
+        (
+            self.am.fingerprint(),
+            (self.frame.as_ptr() as usize, self.frame.capacity()),
+            (self.feats.as_ptr() as usize, self.feats.capacity()),
+        )
+    }
+}
+
+/// Batched-step view of the ready lanes: buffered audio (read) and
+/// per-lane acoustic state (write), borrowed one lane at a time so the
+/// engine never materializes per-lane reference vectors.
+pub trait AmLanes {
+    /// Number of ready lanes in this fused step.
+    fn lane_count(&self) -> usize;
+    /// One lane's buffered audio, exactly `samples_per_step` samples.
+    fn samples(&self, lane: usize) -> &[f32];
+    /// One lane's acoustic state.
+    fn state(&mut self, lane: usize) -> &mut AmLaneState;
+}
+
+/// An acoustic-scoring backend: everything the engine needs to turn
+/// buffered audio into per-step log-probabilities, plus the metadata the
+/// cost models and the serving protocol introspect.
+///
+/// Object-safe by design — the engine holds `Box<dyn AmBackend>` and new
+/// workloads plug in without touching `coordinator::engine`.
+pub trait AmBackend {
+    /// Stable backend identifier (`native-f32` | `native-int8` | `xla` |
+    /// custom).
+    fn name(&self) -> &'static str;
+
+    /// The model geometry this backend serves.
+    fn model_cfg(&self) -> &ModelConfig;
+
+    /// Weight precision — drives the simulator's DMA-byte accounting and
+    /// the power model (int8 ⇒ 4× less weight traffic, §3.4).
+    fn precision(&self) -> Precision {
+        self.model_cfg().precision
+    }
+
+    /// Model-data bytes staged per decoding step (shared across fused
+    /// lanes) — the DMA-traffic metadata the power model consumes.
+    fn weight_bytes_per_step(&self) -> u64 {
+        self.model_cfg().model_bytes() as u64
+    }
+
+    /// Fresh per-session streaming state (conv histories, device
+    /// buffers, …).
+    fn open_state(&self) -> Result<AmLaneState>;
+
+    /// Score one lane's decoding step: `samples_per_step` audio samples
+    /// in, `vectors_per_step × tokens` log-probs out. `out` is resized
+    /// and fully overwritten; all transients come from `sc`.
+    fn score_step(
+        &self,
+        state: &mut AmLaneState,
+        samples: &[f32],
+        sc: &mut StepScratch,
+        out: &mut Vec<f32>,
+    ) -> Result<()>;
+
+    /// Score one fused decoding step over every ready lane. `out` becomes
+    /// lane-major `[B × (vectors_per_step × tokens)]`, resized and fully
+    /// overwritten. Implementations must keep per-lane results identical
+    /// to [`Self::score_step`] on the same lane alone — batching is a
+    /// throughput decision, never a transcript decision.
+    ///
+    /// **Error contract:** an `Err` poisons the fused step — some lanes'
+    /// acoustic states may already have advanced (e.g. a mid-batch
+    /// device failure on the PJRT path), so callers must treat every
+    /// lane in the batch as unsteppable: finish or discard those
+    /// sessions rather than retrying the same audio against the
+    /// advanced state.
+    fn score_step_batch(
+        &self,
+        lanes: &mut dyn AmLanes,
+        sc: &mut StepScratch,
+        out: &mut Vec<f32>,
+    ) -> Result<()>;
+}
+
+/// Adapter presenting [`AmLanes`] states to the native AM step driver.
+struct ErasedLanes<'a> {
+    lanes: &'a mut dyn AmLanes,
+}
+
+impl LaneStates for ErasedLanes<'_> {
+    fn lane_count(&self) -> usize {
+        self.lanes.lane_count()
+    }
+
+    fn state(&mut self, lane: usize) -> &mut TdsState {
+        self.lanes.state(lane).downcast_mut::<TdsState>()
+    }
+}
+
+/// The in-crate f32 backend: MFCC front-end + native TDS model, fused
+/// over lanes through the register-blocked kernels in `am::gemm`.
+pub struct NativeBackend {
+    model: TdsModel,
+    mfcc: Mfcc,
+}
+
+impl NativeBackend {
+    /// Wrap an in-memory f32 model (front-end geometry derived from its
+    /// config).
+    pub fn new(model: TdsModel) -> Self {
+        let mfcc = Mfcc::for_model(&model.cfg);
+        NativeBackend { model, mfcc }
+    }
+}
+
+impl AmBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native-f32"
+    }
+
+    fn model_cfg(&self) -> &ModelConfig {
+        &self.model.cfg
+    }
+
+    fn open_state(&self) -> Result<AmLaneState> {
+        Ok(AmLaneState::new(self.model.state()))
+    }
+
+    fn score_step(
+        &self,
+        state: &mut AmLaneState,
+        samples: &[f32],
+        sc: &mut StepScratch,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let StepScratch { am, mfcc, frame, feats } = sc;
+        feats.clear();
+        self.mfcc.extract_into(samples, mfcc, frame, feats);
+        let mut lanes = [state.downcast_mut::<TdsState>()];
+        self.model.step_batch_into(&mut lanes[..], feats, am, out);
+        Ok(())
+    }
+
+    fn score_step_batch(
+        &self,
+        lanes: &mut dyn AmLanes,
+        sc: &mut StepScratch,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let StepScratch { am, mfcc, frame, feats } = sc;
+        feats.clear();
+        for i in 0..lanes.lane_count() {
+            self.mfcc.extract_into(lanes.samples(i), mfcc, frame, feats);
+        }
+        debug_assert_eq!(
+            feats.len(),
+            lanes.lane_count() * self.model.cfg.frames_per_step() * self.model.cfg.n_mels
+        );
+        let mut states = ErasedLanes { lanes };
+        self.model.step_batch_into(&mut states, feats, am, out);
+        Ok(())
+    }
+}
+
+/// The int8 backend: per-output-row affine-quantized weights with f32
+/// accumulate (`am::quant`); same streaming state as the f32 backend.
+pub struct QuantizedBackend {
+    model: QuantizedTdsModel,
+    mfcc: Mfcc,
+}
+
+impl QuantizedBackend {
+    /// Wrap an already-quantized model.
+    pub fn new(model: QuantizedTdsModel) -> Self {
+        let mfcc = Mfcc::for_model(&model.cfg);
+        QuantizedBackend { model, mfcc }
+    }
+
+    /// Quantize an f32 model and wrap the result.
+    pub fn quantize(model: &TdsModel) -> Result<Self> {
+        Ok(Self::new(QuantizedTdsModel::from_model(model)?))
+    }
+}
+
+impl AmBackend for QuantizedBackend {
+    fn name(&self) -> &'static str {
+        "native-int8"
+    }
+
+    fn model_cfg(&self) -> &ModelConfig {
+        &self.model.cfg
+    }
+
+    fn open_state(&self) -> Result<AmLaneState> {
+        Ok(AmLaneState::new(self.model.state()))
+    }
+
+    fn score_step(
+        &self,
+        state: &mut AmLaneState,
+        samples: &[f32],
+        sc: &mut StepScratch,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let StepScratch { am, mfcc, frame, feats } = sc;
+        feats.clear();
+        self.mfcc.extract_into(samples, mfcc, frame, feats);
+        let mut lanes = [state.downcast_mut::<TdsState>()];
+        self.model.step_batch_into(&mut lanes[..], feats, am, out);
+        Ok(())
+    }
+
+    fn score_step_batch(
+        &self,
+        lanes: &mut dyn AmLanes,
+        sc: &mut StepScratch,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let StepScratch { am, mfcc, frame, feats } = sc;
+        feats.clear();
+        for i in 0..lanes.lane_count() {
+            self.mfcc.extract_into(lanes.samples(i), mfcc, frame, feats);
+        }
+        let mut states = ErasedLanes { lanes };
+        self.model.step_batch_into(&mut states, feats, am, out);
+        Ok(())
+    }
+}
+
+/// The artifact backend: MFCC and the streaming TDS step both execute as
+/// AOT-compiled XLA computations through PJRT. The batched entry point
+/// drains every ready lane through the caller's output arena — the
+/// engine's fused loop is uniform across backends (the scalar-fallback
+/// special case is gone); what still allocates per step is the PJRT
+/// runtime's own host/device buffers (see KNOWN_FAILURES.md).
+pub struct XlaBackend {
+    am: XlaAm,
+}
+
+impl XlaBackend {
+    /// Wrap a loaded artifact model.
+    pub fn new(am: XlaAm) -> Self {
+        XlaBackend { am }
+    }
+
+    /// Load everything from an artifacts directory.
+    pub fn load(runtime: &Runtime, dir: &Path) -> Result<Self> {
+        Ok(Self::new(XlaAm::load(runtime, dir)?))
+    }
+}
+
+impl AmBackend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn model_cfg(&self) -> &ModelConfig {
+        &self.am.meta.model
+    }
+
+    fn open_state(&self) -> Result<AmLaneState> {
+        Ok(AmLaneState::new(self.am.state()?))
+    }
+
+    fn score_step(
+        &self,
+        state: &mut AmLaneState,
+        samples: &[f32],
+        _sc: &mut StepScratch,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        // The PJRT mfcc path hands back an owned Vec either way; copying
+        // it into scratch would only add a memcpy.
+        let feats = self.am.mfcc(samples)?;
+        out.clear();
+        self.am.step_into(state.downcast_mut::<XlaState>(), &feats, out)?;
+        debug_assert_eq!(
+            out.len(),
+            self.am.meta.model.vectors_per_step() * self.am.meta.model.tokens
+        );
+        Ok(())
+    }
+
+    fn score_step_batch(
+        &self,
+        lanes: &mut dyn AmLanes,
+        _sc: &mut StepScratch,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        out.clear();
+        for i in 0..lanes.lane_count() {
+            let feats = self.am.mfcc(lanes.samples(i))?;
+            self.am.step_into(lanes.state(i).downcast_mut::<XlaState>(), &feats, out)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn native_backend_metadata() {
+        let b = NativeBackend::new(TdsModel::random(ModelConfig::tiny_tds(), 1));
+        assert_eq!(b.name(), "native-f32");
+        assert_eq!(b.precision(), Precision::F32);
+        assert_eq!(b.weight_bytes_per_step(), b.model_cfg().model_bytes() as u64);
+    }
+
+    #[test]
+    fn quantized_backend_reports_int8_and_quarter_bytes() {
+        let model = TdsModel::random(ModelConfig::tiny_tds(), 2);
+        let f32_bytes = NativeBackend::new(model.clone()).weight_bytes_per_step();
+        let q = QuantizedBackend::quantize(&model).unwrap();
+        assert_eq!(q.name(), "native-int8");
+        assert_eq!(q.precision(), Precision::Int8);
+        assert_eq!(4 * q.weight_bytes_per_step(), f32_bytes);
+    }
+
+    #[test]
+    fn scalar_and_batched_scoring_agree_through_the_trait() {
+        // The trait contract: score_step_batch on one lane == score_step.
+        struct OneLane<'a> {
+            samples: &'a [f32],
+            state: &'a mut AmLaneState,
+        }
+        impl AmLanes for OneLane<'_> {
+            fn lane_count(&self) -> usize {
+                1
+            }
+            fn samples(&self, _lane: usize) -> &[f32] {
+                self.samples
+            }
+            fn state(&mut self, _lane: usize) -> &mut AmLaneState {
+                &mut *self.state
+            }
+        }
+        let model = TdsModel::random(ModelConfig::tiny_tds(), 3);
+        let backends: Vec<Box<dyn AmBackend>> = vec![
+            Box::new(NativeBackend::new(model.clone())),
+            Box::new(QuantizedBackend::quantize(&model).unwrap()),
+        ];
+        let mut rng = Rng::new(5);
+        let cfg = model.cfg.clone();
+        let samples: Vec<f32> =
+            (0..cfg.samples_per_step()).map(|_| rng.uniform(-0.5, 0.5)).collect();
+        for b in &backends {
+            let mut sc = StepScratch::default();
+            let mut s1 = b.open_state().unwrap();
+            let mut s2 = b.open_state().unwrap();
+            let mut scalar = Vec::new();
+            b.score_step(&mut s1, &samples, &mut sc, &mut scalar).unwrap();
+            let mut batched = Vec::new();
+            let mut lanes = OneLane { samples: &samples, state: &mut s2 };
+            b.score_step_batch(&mut lanes, &mut sc, &mut batched).unwrap();
+            assert_eq!(scalar, batched, "backend {}", b.name());
+            assert_eq!(scalar.len(), cfg.vectors_per_step() * cfg.tokens);
+        }
+    }
+
+    #[test]
+    fn lane_state_downcast_mismatch_panics() {
+        let r = std::panic::catch_unwind(|| {
+            let mut st = AmLaneState::new(42u32);
+            let _: &mut TdsState = st.downcast_mut();
+        });
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,245 @@
+//! Fluent, validating construction of [`Engine`] — the single way
+//! engines are built (CLI, server, examples, benches and tests all go
+//! through here).
+//!
+//! ```no_run
+//! use asrpu::am::TdsModel;
+//! use asrpu::config::{ModelConfig, Precision};
+//! use asrpu::coordinator::Engine;
+//!
+//! let engine = Engine::builder()
+//!     .native(TdsModel::random(ModelConfig::tiny_tds(), 1))
+//!     .precision(Precision::Int8)
+//!     .beam(10.0)
+//!     .build()
+//!     .unwrap();
+//! # let _ = engine;
+//! ```
+//!
+//! Misconfiguration is reported through the typed [`BuildError`] — never
+//! a panic — so callers (the serve CLI, tests) can branch on what went
+//! wrong.
+#![deny(missing_docs)]
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use crate::am::TdsModel;
+use crate::config::{BatchConfig, DecoderConfig, Precision};
+use crate::decoder::BeamDecoder;
+use crate::lexicon::Lexicon;
+use crate::lm::NgramLm;
+use crate::runtime::Runtime;
+use crate::synth::spec;
+
+use super::backend::{AmBackend, NativeBackend, QuantizedBackend, XlaBackend};
+use super::engine::Engine;
+
+/// Why an [`EngineBuilder`] refused to produce an engine.
+#[derive(Debug, Clone, PartialEq)]
+pub enum BuildError {
+    /// No model / backend was supplied.
+    MissingModel,
+    /// The decoder configuration failed validation.
+    Decoder(String),
+    /// The batching configuration failed validation.
+    Batch(String),
+    /// The requested precision cannot be applied to the chosen backend.
+    Precision(String),
+    /// The model's output tokens don't match the lexicon's token set.
+    TokenMismatch {
+        /// Tokens the acoustic model emits.
+        model_tokens: usize,
+        /// Tokens the lexicon spells words with.
+        lexicon_tokens: usize,
+    },
+    /// The artifacts directory could not be loaded (missing files, a
+    /// crate built without the `xla` feature, PJRT errors, …).
+    Artifacts {
+        /// The directory that was probed.
+        dir: PathBuf,
+        /// Human-readable cause.
+        message: String,
+    },
+    /// Model preparation failed (quantization, LM estimation, word→LM
+    /// mapping).
+    Model(String),
+}
+
+impl fmt::Display for BuildError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            BuildError::MissingModel => {
+                write!(f, "no model configured: call .native(), .artifacts() or .backend()")
+            }
+            BuildError::Decoder(m) => write!(f, "invalid decoder config: {m}"),
+            BuildError::Batch(m) => write!(f, "invalid batch config: {m}"),
+            BuildError::Precision(m) => write!(f, "invalid precision request: {m}"),
+            BuildError::TokenMismatch { model_tokens, lexicon_tokens } => write!(
+                f,
+                "model emits {model_tokens} tokens but lexicon has {lexicon_tokens}"
+            ),
+            BuildError::Artifacts { dir, message } => {
+                write!(f, "loading artifacts from {}: {message}", dir.display())
+            }
+            BuildError::Model(m) => write!(f, "preparing model: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for BuildError {}
+
+/// What the builder will wrap into the engine's backend.
+enum BackendChoice {
+    /// An in-memory f32 model, precision applied at build time.
+    Native(TdsModel),
+    /// A ready backend (XLA artifacts, or a caller-supplied plug-in).
+    Custom(Box<dyn AmBackend>),
+    /// An eagerly-attempted load that failed; surfaced at build().
+    Failed(BuildError),
+}
+
+/// Builder for [`Engine`]: model source, weight precision, search and
+/// batching configuration, lexicon and language model — validated
+/// together at [`EngineBuilder::build`]. Defaults: no model (an error at
+/// build), model-native precision, default decoder/batch config, the
+/// synthetic-protocol lexicon and a corpus-estimated LM.
+#[derive(Default)]
+pub struct EngineBuilder {
+    backend: Option<BackendChoice>,
+    precision: Option<Precision>,
+    decoder: DecoderConfig,
+    batch: BatchConfig,
+    lexicon: Option<Lexicon>,
+    lm: Option<NgramLm>,
+}
+
+impl EngineBuilder {
+    /// Start from defaults (no model; default decoder/batch config;
+    /// synthetic-protocol lexicon and corpus-estimated LM).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Serve an in-memory f32 model through the native backend (the
+    /// [`Self::precision`] knob may still quantize it at build time).
+    pub fn native(mut self, model: TdsModel) -> Self {
+        self.backend = Some(BackendChoice::Native(model));
+        self
+    }
+
+    /// Serve the AOT artifacts in `dir` through the PJRT backend. The
+    /// load happens immediately; failures surface as
+    /// [`BuildError::Artifacts`] from [`Self::build`].
+    pub fn artifacts(mut self, runtime: &Runtime, dir: impl AsRef<Path>) -> Self {
+        let dir = dir.as_ref();
+        self.backend = Some(match XlaBackend::load(runtime, dir) {
+            Ok(b) => BackendChoice::Custom(Box::new(b)),
+            Err(e) => BackendChoice::Failed(BuildError::Artifacts {
+                dir: dir.to_path_buf(),
+                message: format!("{e:#}"),
+            }),
+        });
+        self
+    }
+
+    /// Plug in any [`AmBackend`] implementation — the open end of the
+    /// API: new model families serve without touching the engine.
+    pub fn backend(mut self, backend: Box<dyn AmBackend>) -> Self {
+        self.backend = Some(BackendChoice::Custom(backend));
+        self
+    }
+
+    /// Weight precision for the native backend (`Int8` quantizes the
+    /// supplied f32 model at build time). Requesting a precision a
+    /// custom/XLA backend doesn't already have is a [`BuildError`].
+    pub fn precision(mut self, precision: Precision) -> Self {
+        self.precision = Some(precision);
+        self
+    }
+
+    /// Replace the whole decoder configuration.
+    pub fn decoder(mut self, cfg: DecoderConfig) -> Self {
+        self.decoder = cfg;
+        self
+    }
+
+    /// Convenience: set just the beam width.
+    pub fn beam(mut self, beam: f32) -> Self {
+        self.decoder.beam = beam;
+        self
+    }
+
+    /// Dynamic-batching policy the serving loop will use.
+    pub fn batch(mut self, cfg: BatchConfig) -> Self {
+        self.batch = cfg;
+        self
+    }
+
+    /// Replace the default synthetic-protocol lexicon.
+    pub fn lexicon(mut self, lexicon: Lexicon) -> Self {
+        self.lexicon = Some(lexicon);
+        self
+    }
+
+    /// Replace the default corpus-estimated n-gram language model.
+    pub fn lm(mut self, lm: NgramLm) -> Self {
+        self.lm = Some(lm);
+        self
+    }
+
+    /// Validate everything and assemble the engine.
+    pub fn build(self) -> Result<Engine, BuildError> {
+        // Cheap config validation first — fail fast before any expensive
+        // backend work (int8 quantization is a full pass over the model).
+        self.decoder
+            .validate()
+            .map_err(|e| BuildError::Decoder(format!("{e:#}")))?;
+        self.batch
+            .validate()
+            .map_err(|e| BuildError::Batch(format!("{e:#}")))?;
+        let choice = self.backend.ok_or(BuildError::MissingModel)?;
+        let backend: Box<dyn AmBackend> = match choice {
+            BackendChoice::Failed(e) => return Err(e),
+            BackendChoice::Native(model) => {
+                match self.precision.unwrap_or(model.cfg.precision) {
+                    Precision::F32 => Box::new(NativeBackend::new(model)),
+                    Precision::Int8 => Box::new(
+                        QuantizedBackend::quantize(&model)
+                            .map_err(|e| BuildError::Model(format!("{e:#}")))?,
+                    ),
+                }
+            }
+            BackendChoice::Custom(b) => {
+                if let Some(p) = self.precision {
+                    if p != b.precision() {
+                        return Err(BuildError::Precision(format!(
+                            "backend '{}' serves {:?} weights; requested {p:?} \
+                             (re-quantization applies to .native() models only)",
+                            b.name(),
+                            b.precision()
+                        )));
+                    }
+                }
+                b
+            }
+        };
+        let lexicon = self.lexicon.unwrap_or_else(spec::lexicon);
+        let model_tokens = backend.model_cfg().tokens;
+        if model_tokens != lexicon.tokens.len() {
+            return Err(BuildError::TokenMismatch {
+                model_tokens,
+                lexicon_tokens: lexicon.tokens.len(),
+            });
+        }
+        let lm = match self.lm {
+            Some(lm) => lm,
+            // 2000 sentences, fixed seed — deterministic across builds.
+            None => NgramLm::estimate(&spec::sample_corpus(2000, 7777), 0.4)
+                .map_err(|e| BuildError::Model(format!("{e:#}")))?,
+        };
+        let word_lm_ids = BeamDecoder::word_lm_ids(&lexicon, &lm)
+            .map_err(|e| BuildError::Model(format!("{e:#}")))?;
+        Ok(Engine::assemble(backend, lexicon, lm, self.decoder, self.batch, word_lm_ids))
+    }
+}

@@ -4,28 +4,37 @@
 //! extraction → acoustic scoring → hypothesis expansion), hypotheses are
 //! carried across steps, and `finish` extracts the transcript.
 //!
-//! The acoustic model runs through one of three backends:
-//!  * **Native** — the in-crate f32 mirror (`am::TdsModel`);
-//!  * **Quantized** — int8 weights with f32 accumulate
-//!    (`am::QuantizedTdsModel`), selected via [`Engine::native_with_precision`];
-//!  * **Xla** — the AOT artifacts via PJRT (`runtime::XlaAm`); python is
-//!    never on this path.
+//! The acoustic model runs behind the object-safe
+//! [`AmBackend`](super::backend::AmBackend) trait — the engine never
+//! names a concrete backend. `native-f32`, `native-int8` and `xla`
+//! implementations ship in [`super::backend`]; anything else plugs in
+//! through [`EngineBuilder::backend`]. Construction goes through
+//! [`Engine::builder`] exclusively; the builder validates model, search,
+//! and batching configuration together and reports typed errors.
+//!
+//! The decoding-step *program* the engine executes — features, one stage
+//! per AM layer, hypothesis expansion per acoustic vector — is published
+//! as [`Engine::pipeline`], the same [`PipelineDesc`] the accelerator
+//! simulator derives its kernel program from (`accel::build_step_kernels`),
+//! so functional serving and cycle-approximate simulation share one
+//! source of truth.
 //!
 //! Steady-state allocation discipline: the engine owns one
-//! [`EngineScratch`] arena (AM activation buffers, decoder candidate
-//! buffers, MFCC scratch, the feats/logits/block staging buffers and the
-//! ready-lane index list). After the first fused step at a given batch
-//! shape warms the arena, [`Engine::step_batch`] reuses every arena
-//! buffer in place. The AM half of that claim is proven with a counting
-//! allocator (`tests/alloc_free.rs`, covering `step_batch_into` for both
-//! precisions); the engine and decoder layers are asserted via
-//! pointer/capacity fingerprint tests (`step_batch_scratch_is_reused_
+//! [`EngineScratch`] arena (the backend's [`StepScratch`] — AM activation
+//! buffers, MFCC scratch, feature staging — plus decoder candidate
+//! buffers, the logits/block staging buffers and the ready-lane index
+//! list). After the first fused step at a given batch shape warms the
+//! arena, [`Engine::step_batch`] reuses every arena buffer in place. The
+//! AM half of that claim is proven with a counting allocator
+//! (`tests/alloc_free.rs`); the engine and decoder layers are asserted
+//! via pointer/capacity fingerprint tests (`step_batch_scratch_is_reused_
 //! across_calls` below, and the decoder's two-pass stability test). Two
 //! containers may still legitimately allocate in steady state: each
 //! session's backtrack arena (one entry per committed word,
 //! amortized-O(log) reallocations per utterance) and the decoder
 //! candidate buffer while the live hypothesis set is still growing
-//! toward its high-water mark.
+//! toward its high-water mark. The PJRT backend additionally allocates
+//! inside the runtime per step (see KNOWN_FAILURES.md).
 //!
 //! Frame alignment: decoding step *k* emits feature frames `k·8 … k·8+7`
 //! on the absolute 10 ms grid, which requires 15 ms of lookahead
@@ -37,48 +46,37 @@ use std::borrow::Cow;
 use std::cell::RefCell;
 use std::time::{Duration, Instant};
 
-use crate::am::{LaneStates, QuantizedTdsModel, Scratch as AmScratch, TdsModel, TdsState};
-use crate::config::{BatchConfig, DecoderConfig, ModelConfig, Precision};
+use crate::config::{BatchConfig, DecoderConfig, ModelConfig, PipelineDesc};
 use crate::decoder::{BeamDecoder, DecodeScratch, DecodeState, Transcript};
-use crate::dsp::{mfcc::Scratch as MfccScratch, Mfcc};
 use crate::lexicon::Lexicon;
 use crate::lm::NgramLm;
-use crate::runtime::{Runtime, XlaAm};
-use crate::synth::spec;
 
-/// Acoustic-model backend.
-pub enum Backend {
-    Native { model: TdsModel, mfcc: Mfcc },
-    Quantized { model: QuantizedTdsModel, mfcc: Mfcc },
-    Xla { am: XlaAm },
-}
-
-enum AmState {
-    Native(TdsState),
-    Xla(crate::runtime::xla_am::XlaState),
-}
+use super::backend::{AmBackend, AmLaneState, AmLanes, StepScratch};
+use super::builder::EngineBuilder;
 
 /// Reusable per-engine buffers for the fused step loop. See the module
 /// docs for the ownership story.
 #[derive(Default)]
 struct EngineScratch {
-    am: AmScratch,
+    /// The backend-facing half: AM arena + MFCC scratch + feature staging.
+    step: StepScratch,
     dec: DecodeScratch,
-    mfcc: MfccScratch,
-    frame: Vec<f32>,
-    feats: Vec<f32>,
     logits: Vec<f32>,
     block: Vec<f32>,
     ready: Vec<usize>,
 }
 
-/// The engine: one per process; sessions are cheap.
+/// The engine: one per process; sessions are cheap. Built exclusively
+/// through [`Engine::builder`].
 pub struct Engine {
     pub model_cfg: ModelConfig,
-    backend: Backend,
+    backend: Box<dyn AmBackend>,
     pub lexicon: Lexicon,
     pub lm: NgramLm,
     pub dec_cfg: DecoderConfig,
+    /// Dynamic-batching policy the serving loop derives its [`Batcher`]
+    /// from (validated by the builder).
+    pub batch_cfg: BatchConfig,
     /// Cached lexicon-word → LM-word mapping (O(vocabulary) to build;
     /// decoders borrow it so per-drain construction is allocation-free).
     word_lm_ids: Vec<u32>,
@@ -89,7 +87,8 @@ pub struct Engine {
 pub struct Session {
     /// Buffered samples not yet consumed by a step.
     buf: Vec<f32>,
-    am_state: AmState,
+    /// Backend-owned acoustic state (opaque to the engine).
+    am_state: AmLaneState,
     pub decode: DecodeState,
     /// Collected log-probs (for greedy-baseline comparisons), if enabled.
     pub logits: Option<Vec<f32>>,
@@ -199,113 +198,77 @@ impl Batcher {
     }
 }
 
-/// Borrowed view of the native model for the fused loop.
-enum NativeModel<'a> {
-    F32(&'a TdsModel),
-    Int8(&'a QuantizedTdsModel),
-}
-
-impl NativeModel<'_> {
-    fn step_batch_into<S: LaneStates + ?Sized>(
-        &self,
-        states: &mut S,
-        feats: &[f32],
-        sc: &mut AmScratch,
-        out: &mut Vec<f32>,
-    ) {
-        match self {
-            NativeModel::F32(m) => m.step_batch_into(states, feats, sc, out),
-            NativeModel::Int8(m) => m.step_batch_into(states, feats, sc, out),
-        }
-    }
-}
-
-/// [`LaneStates`] adapter over the ready subset of a session slice — the
-/// AM driver reads/writes per-lane conv histories directly through the
-/// sessions, so the engine never materializes a `Vec<&mut TdsState>`.
+/// [`AmLanes`] view over the ready subset of a session slice — the
+/// backend reads audio and writes per-lane acoustic state directly
+/// through the sessions, so the engine never materializes per-lane
+/// reference vectors.
 struct ReadyLanes<'a, 'b> {
     lanes: &'a mut [&'b mut Session],
     ready: &'a [usize],
+    need: usize,
 }
 
-impl LaneStates for ReadyLanes<'_, '_> {
+impl AmLanes for ReadyLanes<'_, '_> {
     fn lane_count(&self) -> usize {
         self.ready.len()
     }
 
-    fn state(&mut self, lane: usize) -> &mut TdsState {
-        match &mut self.lanes[self.ready[lane]].am_state {
-            AmState::Native(st) => st,
-            AmState::Xla(_) => unreachable!("native fused step on an XLA session"),
-        }
+    fn samples(&self, lane: usize) -> &[f32] {
+        &self.lanes[self.ready[lane]].buf[..self.need]
+    }
+
+    fn state(&mut self, lane: usize) -> &mut AmLaneState {
+        &mut self.lanes[self.ready[lane]].am_state
     }
 }
 
 impl Engine {
-    /// Build with the synthetic-protocol lexicon and an LM estimated
-    /// from the word chain (2000 sentences, fixed seed — deterministic).
-    pub fn with_backend(backend: Backend, dec_cfg: DecoderConfig) -> Result<Self> {
-        let model_cfg = match &backend {
-            Backend::Native { model, .. } => model.cfg.clone(),
-            Backend::Quantized { model, .. } => model.cfg.clone(),
-            Backend::Xla { am } => am.meta.model.clone(),
-        };
-        let lexicon = spec::lexicon();
-        let corpus = spec::sample_corpus(2000, 7777);
-        let lm = NgramLm::estimate(&corpus, 0.4)?;
-        anyhow::ensure!(
-            model_cfg.tokens == lexicon.tokens.len(),
-            "model emits {} tokens but lexicon has {}",
-            model_cfg.tokens,
-            lexicon.tokens.len()
-        );
-        let word_lm_ids = BeamDecoder::word_lm_ids(&lexicon, &lm)?;
-        Ok(Engine {
-            model_cfg,
+    /// Start building an engine — the only construction path. The
+    /// builder supplies the synthetic-protocol lexicon and an LM
+    /// estimated from the word chain (fixed seed — deterministic) unless
+    /// overridden.
+    pub fn builder() -> EngineBuilder {
+        EngineBuilder::new()
+    }
+
+    /// Assemble from pre-validated parts ([`EngineBuilder::build`] only).
+    pub(crate) fn assemble(
+        backend: Box<dyn AmBackend>,
+        lexicon: Lexicon,
+        lm: NgramLm,
+        dec_cfg: DecoderConfig,
+        batch_cfg: BatchConfig,
+        word_lm_ids: Vec<u32>,
+    ) -> Engine {
+        Engine {
+            model_cfg: backend.model_cfg().clone(),
             backend,
             lexicon,
             lm,
             dec_cfg,
+            batch_cfg,
             word_lm_ids,
             scratch: RefCell::new(EngineScratch::default()),
-        })
-    }
-
-    /// Native f32 backend from an in-memory model.
-    pub fn native(model: TdsModel, dec_cfg: DecoderConfig) -> Result<Self> {
-        let mfcc = Mfcc::for_model(&model.cfg);
-        Self::with_backend(Backend::Native { model, mfcc }, dec_cfg)
-    }
-
-    /// Native int8 backend: quantizes the given f32 model (per-output-row
-    /// affine, see `am::quant`) and serves through the int8 kernels.
-    pub fn native_quantized(model: &TdsModel, dec_cfg: DecoderConfig) -> Result<Self> {
-        let quantized = QuantizedTdsModel::from_model(model)?;
-        let mfcc = Mfcc::for_model(&quantized.cfg);
-        Self::with_backend(Backend::Quantized { model: quantized, mfcc }, dec_cfg)
-    }
-
-    /// The `Precision` knob: build the native backend at the requested
-    /// weight precision.
-    pub fn native_with_precision(
-        model: TdsModel,
-        precision: Precision,
-        dec_cfg: DecoderConfig,
-    ) -> Result<Self> {
-        match precision {
-            Precision::F32 => Self::native(model, dec_cfg),
-            Precision::Int8 => Self::native_quantized(&model, dec_cfg),
         }
     }
 
-    /// XLA backend from the artifacts directory.
-    pub fn from_artifacts(
-        runtime: &Runtime,
-        dir: &std::path::Path,
-        dec_cfg: DecoderConfig,
-    ) -> Result<Self> {
-        let am = XlaAm::load(runtime, dir)?;
-        Self::with_backend(Backend::Xla { am }, dec_cfg)
+    /// The acoustic backend being served (name, precision, DMA metadata
+    /// — the serving protocol's `config` op reads this).
+    pub fn backend(&self) -> &dyn AmBackend {
+        self.backend.as_ref()
+    }
+
+    /// The decoding-step program this engine executes, as the shared
+    /// stage description the simulator also consumes
+    /// (`accel::build_step_kernels`): one source of truth for "one
+    /// program per decoder part".
+    pub fn pipeline(&self) -> PipelineDesc {
+        PipelineDesc::for_model(&self.model_cfg)
+    }
+
+    /// A batcher configured with this engine's batching policy.
+    pub fn batcher(&self) -> Batcher {
+        Batcher::new(self.batch_cfg.clone(), &self.model_cfg)
     }
 
     fn decoder(&self) -> Result<BeamDecoder<'_>> {
@@ -320,14 +283,9 @@ impl Engine {
     /// Open a session. `collect_logits` keeps per-frame log-probs for
     /// baseline comparisons (costs memory; off for serving).
     pub fn open(&self, collect_logits: bool) -> Result<Session> {
-        let am_state = match &self.backend {
-            Backend::Native { model, .. } => AmState::Native(model.state()),
-            Backend::Quantized { model, .. } => AmState::Native(model.state()),
-            Backend::Xla { am } => AmState::Xla(am.state()?),
-        };
         Ok(Session {
             buf: Vec::with_capacity(2 * self.model_cfg.samples_per_step()),
-            am_state,
+            am_state: self.backend.open_state()?,
             decode: self.decoder()?.start(),
             logits: if collect_logits { Some(Vec::new()) } else { None },
             metrics: SessionMetrics::default(),
@@ -374,14 +332,19 @@ impl Engine {
 
     /// Run fused decoding steps across every lane with a full step
     /// buffered, repeating until no lane is ready; returns total
-    /// (lane, step) executions. Native lanes (f32 or int8) advance
-    /// through the shared AM step driver + `BeamDecoder::step_with` —
-    /// one weight stream serves all lanes — and per-lane results stay
-    /// bit-identical to scalar [`Self::feed`]. All transient buffers come
-    /// from the engine scratch arena and are reused in place after
-    /// warm-up (see the module docs for the precise allocation story).
-    /// The XLA backend has no batched entry point yet and falls back to
-    /// per-lane scalar steps.
+    /// (lane, step) executions. All lanes advance through the backend's
+    /// batched scoring entry point — one weight stream serves all lanes
+    /// on the native backends — and per-lane results stay identical to
+    /// scalar [`Self::feed`] (bit-identical for native f32/int8). All
+    /// transient buffers come from the engine scratch arena and are
+    /// reused in place after warm-up (see the module docs for the precise
+    /// allocation story).
+    ///
+    /// On `Err` the fused step is poisoned: backend lane states may have
+    /// advanced while no lane's audio was drained, so the batch's
+    /// sessions must be finished or discarded, not retried with the same
+    /// audio (the serving loop reports the failure to every staged feed;
+    /// see `AmBackend::score_step_batch` for the contract).
     pub fn step_batch(&self, lanes: &mut [&mut Session]) -> Result<usize> {
         let need = self.model_cfg.samples_per_step();
         if !lanes.iter().any(|s| s.buf.len() >= need) {
@@ -390,35 +353,12 @@ impl Engine {
         // Built once per drain, and only when at least one step will run.
         let decoder = self.decoder()?;
         let step_len = self.model_cfg.step_len;
-        let (model, mfcc) = match &self.backend {
-            Backend::Native { model, mfcc } => (NativeModel::F32(model), mfcc),
-            Backend::Quantized { model, mfcc } => (NativeModel::Int8(model), mfcc),
-            Backend::Xla { .. } => {
-                // Scalar fallback: drain each lane independently.
-                let mut total = 0usize;
-                loop {
-                    let mut ran = false;
-                    for s in lanes.iter_mut() {
-                        if s.buf.len() >= need {
-                            self.run_step(s, &decoder)?;
-                            s.buf.drain(..step_len);
-                            total += 1;
-                            ran = true;
-                        }
-                    }
-                    if !ran {
-                        return Ok(total);
-                    }
-                }
-            }
-        };
         let tokens = self.model_cfg.tokens;
         let vps = self.model_cfg.vectors_per_step();
         let lane_out = vps * tokens;
         let mut total = 0usize;
         let mut guard = self.scratch.borrow_mut();
-        let EngineScratch { am, dec, mfcc: mfcc_sc, frame, feats, logits, block, ready } =
-            &mut *guard;
+        let EngineScratch { step, dec, logits, block, ready } = &mut *guard;
         loop {
             ready.clear();
             for (i, s) in lanes.iter().enumerate() {
@@ -431,19 +371,13 @@ impl Engine {
             }
             let t0 = Instant::now();
             let b = ready.len();
-            feats.clear();
-            for &i in ready.iter() {
-                mfcc.extract_into(&lanes[i].buf[..need], mfcc_sc, frame, feats);
-            }
-            debug_assert_eq!(
-                feats.len(),
-                b * self.model_cfg.frames_per_step() * self.model_cfg.n_mels
-            );
-            // AM phase: one fused forward pass for all ready lanes.
+            // AM phase: one fused scoring pass over all ready lanes,
+            // whatever the backend.
             {
-                let mut am_lanes = ReadyLanes { lanes: &mut *lanes, ready };
-                model.step_batch_into(&mut am_lanes, feats, am, logits);
+                let mut am_lanes = ReadyLanes { lanes: &mut *lanes, ready, need };
+                self.backend.score_step_batch(&mut am_lanes, step, logits)?;
             }
+            debug_assert_eq!(logits.len(), b * lane_out);
             let t_am = Instant::now();
             for (l, &i) in ready.iter().enumerate() {
                 if let Some(all) = &mut lanes[i].logits {
@@ -492,32 +426,8 @@ impl Engine {
         let t0 = Instant::now();
         let need = self.model_cfg.samples_per_step();
         let mut guard = self.scratch.borrow_mut();
-        let EngineScratch { am, dec, mfcc: mfcc_sc, frame, feats, logits, .. } = &mut *guard;
-        match (&self.backend, &mut s.am_state) {
-            (Backend::Native { model, mfcc }, AmState::Native(state)) => {
-                feats.clear();
-                mfcc.extract_into(&s.buf[..need], mfcc_sc, frame, feats);
-                debug_assert_eq!(
-                    feats.len(),
-                    self.model_cfg.frames_per_step() * self.model_cfg.n_mels
-                );
-                let mut lanes = [&mut *state];
-                model.step_batch_into(&mut lanes[..], feats, am, logits);
-            }
-            (Backend::Quantized { model, mfcc }, AmState::Native(state)) => {
-                feats.clear();
-                mfcc.extract_into(&s.buf[..need], mfcc_sc, frame, feats);
-                let mut lanes = [&mut *state];
-                model.step_batch_into(&mut lanes[..], feats, am, logits);
-            }
-            (Backend::Xla { am: xla }, AmState::Xla(state)) => {
-                let f = xla.mfcc(&s.buf[..need])?;
-                let out = xla.step(state, &f)?;
-                logits.clear();
-                logits.extend_from_slice(&out);
-            }
-            _ => unreachable!("backend/state mismatch"),
-        }
+        let EngineScratch { step, dec, logits, .. } = &mut *guard;
+        self.backend.score_step(&mut s.am_state, &s.buf[..need], step, logits)?;
         let t_am = Instant::now();
         if let Some(all) = &mut s.logits {
             all.extend_from_slice(logits);
@@ -578,14 +488,18 @@ impl Engine {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::am::TdsModel;
+    use crate::config::{Precision, StageDesc};
     use crate::synth::Synthesizer;
     use crate::util::rng::Rng;
 
     fn native_engine() -> Engine {
         // Random weights: decode quality is meaningless, but shapes,
         // streaming and search must all hold together.
-        let model = TdsModel::random(ModelConfig::tiny_tds(), 11);
-        Engine::native(model, DecoderConfig::default()).unwrap()
+        Engine::builder()
+            .native(TdsModel::random(ModelConfig::tiny_tds(), 11))
+            .build()
+            .unwrap()
     }
 
     #[test]
@@ -640,6 +554,20 @@ mod tests {
         assert!(m.steps >= 5, "utterance shorter than expected: {}", m.steps);
         assert!(m.compute_s > 0.0);
         assert!((m.am_s + m.search_s - m.compute_s).abs() < 1e-6);
+    }
+
+    #[test]
+    fn engine_exposes_backend_and_pipeline() {
+        let e = native_engine();
+        assert_eq!(e.backend().name(), "native-f32");
+        assert_eq!(e.backend().precision(), Precision::F32);
+        let p = e.pipeline();
+        assert_eq!(p, PipelineDesc::for_model(&e.model_cfg));
+        p.validate().unwrap();
+        // features + AM layers + hyp expansion, in order.
+        assert_eq!(p.stages.first(), Some(&StageDesc::Features));
+        assert_eq!(p.am_stage_count(), e.model_cfg.layers().len());
+        assert_eq!(p.hyp_repeats(), e.model_cfg.vectors_per_step());
     }
 
     #[test]
@@ -725,8 +653,7 @@ mod tests {
         let fingerprint = |e: &Engine| {
             let sc = e.scratch.borrow();
             (
-                sc.am.fingerprint(),
-                (sc.feats.as_ptr() as usize, sc.feats.capacity()),
+                sc.step.fingerprint(),
                 (sc.logits.as_ptr() as usize, sc.logits.capacity()),
                 (sc.block.as_ptr() as usize, sc.block.capacity()),
                 sc.ready.capacity(),
@@ -746,13 +673,13 @@ mod tests {
     #[test]
     fn quantized_engine_decodes_end_to_end() {
         let model = TdsModel::random(ModelConfig::tiny_tds(), 11);
-        let e = Engine::native_with_precision(
-            model,
-            Precision::Int8,
-            DecoderConfig::default(),
-        )
-        .unwrap();
+        let e = Engine::builder()
+            .native(model)
+            .precision(Precision::Int8)
+            .build()
+            .unwrap();
         assert_eq!(e.model_cfg.precision, Precision::Int8);
+        assert_eq!(e.backend().name(), "native-int8");
         let mut rng = Rng::new(13);
         let u = Synthesizer::default().render(&[2, 5], &mut rng);
         let (t, m) = e.decode_utterance(&u.samples).unwrap();
@@ -792,6 +719,18 @@ mod tests {
 
     fn cfg_wait(model: &ModelConfig) -> std::time::Duration {
         crate::config::BatchConfig { max_batch: 2, max_wait_frames: 8 }.max_wait(model)
+    }
+
+    #[test]
+    fn engine_batcher_uses_built_policy() {
+        let e = Engine::builder()
+            .native(TdsModel::random(ModelConfig::tiny_tds(), 11))
+            .batch(BatchConfig { max_batch: 2, max_wait_frames: 8 })
+            .build()
+            .unwrap();
+        let mut b = e.batcher();
+        assert!(!b.push(1));
+        assert!(b.push(2), "policy max_batch=2 must fill at two lanes");
     }
 
     #[test]

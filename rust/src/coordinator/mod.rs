@@ -1,11 +1,19 @@
-//! Streaming coordinator: the engine (per-session decode pipeline), the
-//! serving front-end (JSON-lines TCP, bounded queue, single device
-//! thread — the §4.1 host-process shape) and serving metrics.
+//! Streaming coordinator: the acoustic-backend contract ([`backend`]),
+//! validated engine construction ([`builder`]), the engine itself (the
+//! per-session decode pipeline), the serving front-end (JSON-lines TCP,
+//! protocol v2, bounded queue, single device thread — the §4.1
+//! host-process shape) and serving metrics.
 
+pub mod backend;
+pub mod builder;
 pub mod engine;
 pub mod metrics;
 pub mod server;
 
-pub use engine::{Backend, Batcher, Engine, Session, SessionMetrics};
+pub use backend::{
+    AmBackend, AmLaneState, AmLanes, NativeBackend, QuantizedBackend, StepScratch, XlaBackend,
+};
+pub use builder::{BuildError, EngineBuilder};
+pub use engine::{Batcher, Engine, Session, SessionMetrics};
 pub use metrics::{LatencyStats, ServeMetrics};
 pub use server::Server;

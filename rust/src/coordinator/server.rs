@@ -4,22 +4,42 @@
 //! ASRPU device), extended with the queueing, backpressure and metrics a
 //! production router needs.
 //!
-//! Protocol (one JSON object per line):
-//!   → {"op":"open"}                                  ← {"session":N}
-//!   → {"op":"feed","session":N,"samples":[...]}      ← {"steps":K,"partial":"..."}
-//!   → {"op":"finish","session":N}                    ← {"text":"...","rtf":X}
-//!   → {"op":"stats"}                                 ← {"summary":"..."}
+//! ## Protocol v2 (one JSON object per line)
+//!
+//!   → {"op":"hello"}                  ← {"proto":2,"server":"asrpu",
+//!                                        "versions":[1,2],"ops":[...]}
+//!   → {"op":"open"}                   ← {"session":N}
+//!   → {"op":"feed","session":N,
+//!      "samples":[...]}               ← {"steps":K,"partial":"..."}
+//!   → {"op":"finish","session":N}     ← {"text":"...","rtf":X,...}
+//!   → {"op":"stats"}                  ← {"summary":"..."}
+//!   → {"op":"config"}                 ← {"proto":2,"backend":"...",
+//!                                        "precision":"...","model":...}
+//!
+//! Errors are structured: `{"error":{"code":"...","message":"..."}}`
+//! with stable machine-readable codes (`bad_request`, `unknown_op`,
+//! `unknown_session`, `backpressure`, `shutdown`, `internal`).
+//!
+//! **v1 compatibility:** the v1 line protocol (open/feed/finish/stats,
+//! no handshake) is a strict subset of v2 — v1 clients keep working
+//! unchanged; they simply never send `hello`/`config`. (v1 returned
+//! errors as a plain string under `"error"`; v2 keeps the `"error"` key
+//! so presence checks still work, and adds the code/message structure.)
 //!
 //! Architecture: connection threads parse requests and enqueue jobs on a
 //! bounded channel (backpressure = immediate error response when full);
-//! a single device thread owns the engine and all session state —
-//! mirroring the serialized DecodingStep semantics of the hardware.
+//! `hello` is answered on the connection thread (static capability data);
+//! everything else serializes through a single device thread that owns
+//! the engine and all session state — mirroring the serialized
+//! DecodingStep semantics of the hardware.
 //!
 //! Feeds drain through the lane-batched execution core: the device loop
 //! stages each feed behind a [`Batcher`] and fuses ready sessions into
 //! one `Engine::step_batch` call. A batch flushes when it is full, when
 //! every open session is already staged (a lone stream never waits), or
-//! when the oldest staged lane exhausts the configured wait budget.
+//! when the oldest staged lane exhausts the configured wait budget. The
+//! batching policy comes from the engine itself
+//! (`EngineBuilder::batch`).
 
 use anyhow::{Context, Result};
 use std::collections::HashMap;
@@ -28,11 +48,50 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc;
 use std::time::Instant;
 
-use crate::config::BatchConfig;
+use crate::config::Precision;
 use crate::util::json::{Json, JsonObj};
 
 use super::engine::{Batcher, Engine, Session};
 use super::metrics::ServeMetrics;
+
+/// Protocol version this server speaks.
+pub const PROTO_VERSION: u64 = 2;
+/// Protocol versions whose request lines the server accepts.
+pub const PROTO_ACCEPTED: &[u64] = &[1, 2];
+/// Ops the server understands.
+pub const OPS: &[&str] = &["hello", "open", "feed", "finish", "stats", "config"];
+
+/// Machine-readable error codes (stable across releases; clients branch
+/// on these, not on message text).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrCode {
+    /// The request line was not valid JSON / missing required fields.
+    BadRequest,
+    /// `op` named something the server does not implement.
+    UnknownOp,
+    /// The referenced session id is not open.
+    UnknownSession,
+    /// The device queue is full; retry later.
+    Backpressure,
+    /// The server is shutting down.
+    Shutdown,
+    /// Engine-side failure (details in the message).
+    Internal,
+}
+
+impl ErrCode {
+    /// The wire string for this code.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrCode::BadRequest => "bad_request",
+            ErrCode::UnknownOp => "unknown_op",
+            ErrCode::UnknownSession => "unknown_session",
+            ErrCode::Backpressure => "backpressure",
+            ErrCode::Shutdown => "shutdown",
+            ErrCode::Internal => "internal",
+        }
+    }
+}
 
 /// A queued unit of device work.
 pub(crate) enum Job {
@@ -40,7 +99,15 @@ pub(crate) enum Job {
     Feed { session: u64, samples: Vec<f32>, enqueued: Instant, reply: mpsc::Sender<Json> },
     Finish { session: u64, reply: mpsc::Sender<Json> },
     Stats { reply: mpsc::Sender<Json> },
+    Config { reply: mpsc::Sender<Json> },
     Shutdown,
+}
+
+/// A parsed request line: either answered on the connection thread or
+/// forwarded to the device loop.
+enum Request {
+    Hello,
+    Job(Job),
 }
 
 /// Server handle (owns the listener thread).
@@ -57,8 +124,59 @@ fn obj(pairs: &[(&str, Json)]) -> Json {
     Json::Obj(o)
 }
 
-fn err_json(msg: &str) -> Json {
-    obj(&[("error", Json::Str(msg.to_string()))])
+/// Structured v2 error: `{"error":{"code":..., "message":...}}`.
+fn err_json(code: ErrCode, msg: &str) -> Json {
+    obj(&[(
+        "error",
+        obj(&[
+            ("code", Json::Str(code.as_str().to_string())),
+            ("message", Json::Str(msg.to_string())),
+        ]),
+    )])
+}
+
+/// The `hello` handshake response (static capability data).
+fn hello_json() -> Json {
+    obj(&[
+        ("proto", Json::Num(PROTO_VERSION as f64)),
+        ("server", Json::Str("asrpu".to_string())),
+        (
+            "versions",
+            Json::Arr(PROTO_ACCEPTED.iter().map(|&v| Json::Num(v as f64)).collect()),
+        ),
+        (
+            "ops",
+            Json::Arr(OPS.iter().map(|o| Json::Str(o.to_string())).collect()),
+        ),
+    ])
+}
+
+/// The `config` introspection response: what this device is serving.
+fn config_json(engine: &Engine) -> Json {
+    let m = &engine.model_cfg;
+    let precision = match engine.backend().precision() {
+        Precision::F32 => "f32",
+        Precision::Int8 => "int8",
+    };
+    obj(&[
+        ("proto", Json::Num(PROTO_VERSION as f64)),
+        ("backend", Json::Str(engine.backend().name().to_string())),
+        ("precision", Json::Str(precision.to_string())),
+        ("model", Json::Str(m.name.clone())),
+        ("tokens", Json::Num(m.tokens as f64)),
+        ("sample_rate", Json::Num(m.sample_rate as f64)),
+        ("samples_per_step", Json::Num(m.samples_per_step() as f64)),
+        ("step_seconds", Json::Num(m.step_seconds())),
+        ("stages", Json::Num(engine.pipeline().stages.len() as f64)),
+        (
+            "weight_bytes_per_step",
+            Json::Num(engine.backend().weight_bytes_per_step() as f64),
+        ),
+        ("max_batch", Json::Num(engine.batch_cfg.max_batch as f64)),
+        ("max_wait_frames", Json::Num(engine.batch_cfg.max_wait_frames as f64)),
+        ("beam", Json::Num(engine.dec_cfg.beam as f64)),
+        ("max_hyps", Json::Num(engine.dec_cfg.max_hyps as f64)),
+    ])
 }
 
 /// A feed waiting for its batch to flush.
@@ -115,7 +233,7 @@ fn flush_batch(
                 return true;
             }
             let resp = match &err {
-                Some(msg) => err_json(msg),
+                Some(msg) => err_json(ErrCode::Internal, msg),
                 None => obj(&[
                     ("steps", Json::Num(steps as f64)),
                     ("partial", Json::Str(partial.clone())),
@@ -129,17 +247,20 @@ fn flush_batch(
     // Staged feeds whose session vanished from the map (finished from
     // another connection mid-batch): answer rather than hang the client.
     for f in staged.drain(..) {
-        let _ = f.reply.send(err_json("session closed before its batch ran"));
+        let _ = f
+            .reply
+            .send(err_json(ErrCode::UnknownSession, "session closed before its batch ran"));
     }
 }
 
 /// Run the device loop over the job channel (blocks). Exposed for
-/// in-process use (tests, examples) without TCP.
-pub(crate) fn device_loop(engine: Engine, jobs: mpsc::Receiver<Job>, batch_cfg: BatchConfig) {
+/// in-process use (tests, examples) without TCP. The batching policy is
+/// the engine's own (`Engine::batcher`).
+pub(crate) fn device_loop(engine: Engine, jobs: mpsc::Receiver<Job>) {
     let mut sessions: HashMap<u64, Session> = HashMap::new();
     let mut next_id: u64 = 1;
     let mut metrics = ServeMetrics::default();
-    let mut batcher = Batcher::new(batch_cfg, &engine.model_cfg);
+    let mut batcher = engine.batcher();
     let mut staged: Vec<StagedFeed> = Vec::new();
     loop {
         // Enforce the wait budget even under sustained job traffic: a
@@ -183,14 +304,14 @@ pub(crate) fn device_loop(engine: Engine, jobs: mpsc::Receiver<Job>, batch_cfg: 
                         metrics.sessions_opened += 1;
                         obj(&[("session", Json::Num(id as f64))])
                     }
-                    Err(e) => err_json(&format!("open failed: {e:#}")),
+                    Err(e) => err_json(ErrCode::Internal, &format!("open failed: {e:#}")),
                 };
                 let _ = reply.send(resp);
             }
             Job::Feed { session, samples, enqueued, reply } => {
                 match sessions.get_mut(&session) {
                     None => {
-                        let _ = reply.send(err_json("unknown session"));
+                        let _ = reply.send(err_json(ErrCode::UnknownSession, "unknown session"));
                     }
                     Some(s) => {
                         engine.push_audio(s, &samples);
@@ -218,7 +339,7 @@ pub(crate) fn device_loop(engine: Engine, jobs: mpsc::Receiver<Job>, batch_cfg: 
                 }
                 batcher.remove(session);
                 let resp = match sessions.remove(&session) {
-                    None => err_json("unknown session"),
+                    None => err_json(ErrCode::UnknownSession, "unknown session"),
                     Some(mut s) => match engine.finish(&mut s) {
                         Ok(t) => {
                             metrics.sessions_finished += 1;
@@ -231,7 +352,7 @@ pub(crate) fn device_loop(engine: Engine, jobs: mpsc::Receiver<Job>, batch_cfg: 
                                 ("batch_occupancy", Json::Num(s.metrics.avg_batch_occupancy())),
                             ])
                         }
-                        Err(e) => err_json(&format!("finish failed: {e:#}")),
+                        Err(e) => err_json(ErrCode::Internal, &format!("finish failed: {e:#}")),
                     },
                 };
                 let _ = reply.send(resp);
@@ -239,38 +360,44 @@ pub(crate) fn device_loop(engine: Engine, jobs: mpsc::Receiver<Job>, batch_cfg: 
             Job::Stats { reply } => {
                 let _ = reply.send(obj(&[("summary", Json::Str(metrics.summary()))]));
             }
+            Job::Config { reply } => {
+                let _ = reply.send(config_json(&engine));
+            }
         }
     }
 }
 
-/// Parse one request line into a job.
-fn parse_request(line: &str, reply: mpsc::Sender<Json>) -> Result<Job, String> {
-    let v = Json::parse(line).map_err(|e| format!("bad json: {e}"))?;
+/// Parse one request line (v1 or v2).
+fn parse_request(line: &str, reply: mpsc::Sender<Json>) -> Result<Request, (ErrCode, String)> {
+    let v = Json::parse(line).map_err(|e| (ErrCode::BadRequest, format!("bad json: {e}")))?;
     let op = v
         .get("op")
         .and_then(Json::as_str)
-        .ok_or_else(|| "missing 'op'".to_string())?;
+        .ok_or_else(|| (ErrCode::BadRequest, "missing 'op'".to_string()))?;
     match op {
-        "open" => Ok(Job::Open { reply }),
-        "stats" => Ok(Job::Stats { reply }),
+        "hello" => Ok(Request::Hello),
+        "open" => Ok(Request::Job(Job::Open { reply })),
+        "stats" => Ok(Request::Job(Job::Stats { reply })),
+        "config" => Ok(Request::Job(Job::Config { reply })),
         "feed" | "finish" => {
             let session = v
                 .get("session")
                 .and_then(Json::as_f64)
-                .ok_or_else(|| "missing 'session'".to_string())? as u64;
+                .ok_or_else(|| (ErrCode::BadRequest, "missing 'session'".to_string()))?
+                as u64;
             if op == "finish" {
-                return Ok(Job::Finish { session, reply });
+                return Ok(Request::Job(Job::Finish { session, reply }));
             }
             let samples = v
                 .get("samples")
                 .and_then(Json::as_arr)
-                .ok_or_else(|| "missing 'samples'".to_string())?
+                .ok_or_else(|| (ErrCode::BadRequest, "missing 'samples'".to_string()))?
                 .iter()
                 .map(|x| x.as_f64().unwrap_or(0.0) as f32)
                 .collect();
-            Ok(Job::Feed { session, samples, enqueued: Instant::now(), reply })
+            Ok(Request::Job(Job::Feed { session, samples, enqueued: Instant::now(), reply }))
         }
-        other => Err(format!("unknown op '{other}'")),
+        other => Err((ErrCode::UnknownOp, format!("unknown op '{other}'"))),
     }
 }
 
@@ -285,13 +412,22 @@ fn handle_conn(stream: TcpStream, jobs: mpsc::SyncSender<Job>) -> Result<()> {
         }
         let (tx, rx) = mpsc::channel();
         let response = match parse_request(&line, tx) {
-            Err(msg) => err_json(&msg),
-            Ok(job) => match jobs.try_send(job) {
-                Err(mpsc::TrySendError::Full(_)) => err_json("backpressure: queue full"),
-                Err(mpsc::TrySendError::Disconnected(_)) => err_json("server shutting down"),
+            Err((code, msg)) => err_json(code, &msg),
+            // Static capability data: answered without touching the
+            // device queue (a handshake must not hit backpressure).
+            Ok(Request::Hello) => hello_json(),
+            Ok(Request::Job(job)) => match jobs.try_send(job) {
+                Err(mpsc::TrySendError::Full(_)) => {
+                    err_json(ErrCode::Backpressure, "queue full")
+                }
+                Err(mpsc::TrySendError::Disconnected(_)) => {
+                    err_json(ErrCode::Shutdown, "server shutting down")
+                }
                 Ok(()) => rx
                     .recv()
-                    .unwrap_or_else(|_| err_json("device loop dropped request")),
+                    .unwrap_or_else(|_| {
+                        err_json(ErrCode::Internal, "device loop dropped request")
+                    }),
             },
         };
         writeln!(writer, "{response}")?;
@@ -302,26 +438,37 @@ fn handle_conn(stream: TcpStream, jobs: mpsc::SyncSender<Job>) -> Result<()> {
 
 impl Server {
     /// Bind and serve. `make_engine` runs on the device thread (PJRT
-    /// handles are not `Send`). `batch` sets the dynamic-batching policy
-    /// feeds drain through. Returns once bound; serving continues on
-    /// background threads.
+    /// handles are not `Send`); the engine carries its own batching
+    /// policy (`EngineBuilder::batch`). Blocks until the engine is built
+    /// so construction errors (builder validation, artifact loading)
+    /// surface here instead of as a silently dead device loop; serving
+    /// then continues on background threads.
     pub fn start(
         addr: &str,
         make_engine: impl FnOnce() -> Result<Engine> + Send + 'static,
         queue_depth: usize,
-        batch: BatchConfig,
     ) -> Result<Server> {
-        batch.validate()?;
         let listener = TcpListener::bind(addr)
             .with_context(|| format!("binding {addr}"))?;
         let local = listener.local_addr()?.to_string();
         let (jobs_tx, jobs_rx) = mpsc::sync_channel::<Job>(queue_depth);
+        let (init_tx, init_rx) = mpsc::channel::<Result<(), String>>();
         std::thread::Builder::new()
             .name("asrpu-device".into())
             .spawn(move || match make_engine() {
-                Ok(engine) => device_loop(engine, jobs_rx, batch),
-                Err(e) => eprintln!("engine init failed: {e:#}"),
+                Ok(engine) => {
+                    let _ = init_tx.send(Ok(()));
+                    device_loop(engine, jobs_rx);
+                }
+                Err(e) => {
+                    let _ = init_tx.send(Err(format!("{e:#}")));
+                }
             })?;
+        match init_rx.recv() {
+            Ok(Ok(())) => {}
+            Ok(Err(msg)) => anyhow::bail!("engine init failed: {msg}"),
+            Err(_) => anyhow::bail!("engine init thread died"),
+        }
         let accept_tx = jobs_tx.clone();
         std::thread::Builder::new()
             .name("asrpu-accept".into())
@@ -345,19 +492,18 @@ impl Server {
 mod tests {
     use super::*;
     use crate::am::TdsModel;
-    use crate::config::{DecoderConfig, ModelConfig};
+    use crate::config::{BatchConfig, ModelConfig};
 
     fn start_test_server() -> Server {
         Server::start(
             "127.0.0.1:0",
             || {
-                Engine::native(
-                    TdsModel::random(ModelConfig::tiny_tds(), 5),
-                    DecoderConfig::default(),
-                )
+                Ok(Engine::builder()
+                    .native(TdsModel::random(ModelConfig::tiny_tds(), 5))
+                    .batch(BatchConfig::default())
+                    .build()?)
             },
             64,
-            BatchConfig::default(),
         )
         .unwrap()
     }
@@ -377,7 +523,9 @@ mod tests {
     }
 
     #[test]
-    fn open_feed_finish_over_tcp() {
+    fn v1_client_open_feed_finish_still_works() {
+        // A v1 client: no hello handshake, v1 ops only. Must work
+        // unchanged against the v2 server.
         let server = start_test_server();
         let samples: Vec<String> = (0..3200).map(|i| format!("{:.4}", (i as f32 * 0.01).sin() * 0.1)).collect();
         let feed = format!(
@@ -399,6 +547,46 @@ mod tests {
         assert!(resps[2].get("text").is_some(), "{:?}", resps[2]);
         let summary = resps[3].get("summary").unwrap().as_str().unwrap().to_string();
         assert!(summary.contains("sessions 1/1"), "{summary}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn hello_reports_capabilities() {
+        let server = start_test_server();
+        let resps = roundtrip(&server.addr, &[r#"{"op":"hello"}"#.to_string()]);
+        assert_eq!(resps[0].get("proto").unwrap().as_f64(), Some(2.0));
+        let versions = resps[0].get("versions").unwrap().as_arr().unwrap();
+        assert_eq!(versions.len(), 2);
+        let ops: Vec<&str> = resps[0]
+            .get("ops")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter_map(Json::as_str)
+            .collect();
+        for op in ["open", "feed", "finish", "stats", "config", "hello"] {
+            assert!(ops.contains(&op), "missing op {op} in {ops:?}");
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn config_introspects_backend_and_policy() {
+        let server = start_test_server();
+        let resps = roundtrip(&server.addr, &[r#"{"op":"config"}"#.to_string()]);
+        let c = &resps[0];
+        assert_eq!(c.get("backend").unwrap().as_str(), Some("native-f32"));
+        assert_eq!(c.get("precision").unwrap().as_str(), Some("f32"));
+        assert_eq!(c.get("model").unwrap().as_str(), Some("tiny-tds"));
+        assert_eq!(c.get("tokens").unwrap().as_f64(), Some(27.0));
+        assert_eq!(
+            c.get("max_batch").unwrap().as_f64(),
+            Some(BatchConfig::default().max_batch as f64)
+        );
+        // Stage count: features + AM layers + hyp expansion.
+        let stages = c.get("stages").unwrap().as_f64().unwrap() as usize;
+        assert_eq!(stages, ModelConfig::tiny_tds().layers().len() + 2);
         server.shutdown();
     }
 
@@ -435,7 +623,7 @@ mod tests {
     }
 
     #[test]
-    fn malformed_requests_get_errors_not_crashes() {
+    fn malformed_requests_get_structured_error_codes() {
         let server = start_test_server();
         let resps = roundtrip(
             &server.addr,
@@ -446,10 +634,41 @@ mod tests {
                 r#"{"op":"finish","session":999}"#.to_string(),
             ],
         );
+        let code = |r: &Json| {
+            r.get("error")
+                .and_then(|e| e.get("code"))
+                .and_then(Json::as_str)
+                .map(str::to_string)
+        };
+        assert_eq!(code(&resps[0]).as_deref(), Some("bad_request"));
+        assert_eq!(code(&resps[1]).as_deref(), Some("unknown_op"));
+        assert_eq!(code(&resps[2]).as_deref(), Some("unknown_session"));
+        assert_eq!(code(&resps[3]).as_deref(), Some("unknown_session"));
+        // v1-style presence check keeps working on structured errors.
         for r in &resps {
             assert!(r.get("error").is_some(), "{r:?}");
         }
         server.shutdown();
+    }
+
+    #[test]
+    fn start_surfaces_engine_construction_errors() {
+        // A misconfigured engine must fail Server::start itself, not
+        // leave a bound server with a dead device loop.
+        let err = Server::start(
+            "127.0.0.1:0",
+            || {
+                Ok(Engine::builder()
+                    .native(TdsModel::random(ModelConfig::tiny_tds(), 5))
+                    .batch(BatchConfig { max_batch: 0, max_wait_frames: 8 })
+                    .build()?)
+            },
+            8,
+        )
+        .err();
+        let msg = format!("{:#}", err.expect("start must fail"));
+        assert!(msg.contains("engine init failed"), "{msg}");
+        assert!(msg.contains("batch"), "{msg}");
     }
 
     #[test]

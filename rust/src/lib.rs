@@ -4,15 +4,21 @@
 //! Two coupled halves share one configuration:
 //!
 //! * a **functional streaming ASR engine** — MFCC front-end ([`dsp`]), a
-//!   time-depth-separable acoustic model executed natively ([`am`]) or via
-//!   AOT-compiled XLA artifacts ([`runtime`]), and a CTC beam-search
-//!   decoder with lexicon trie and n-gram LM ([`decoder`], [`lexicon`],
-//!   [`lm`]), orchestrated by the streaming [`coordinator`] whose
-//!   lane-batched execution core fuses concurrent sessions into shared
-//!   device steps (bit-identical to scalar decoding per lane);
+//!   time-depth-separable acoustic model served through the object-safe
+//!   `AmBackend` trait (native f32 / int8 [`am`], or AOT-compiled XLA
+//!   artifacts via [`runtime`]), and a CTC beam-search decoder with
+//!   lexicon trie and n-gram LM ([`decoder`], [`lexicon`], [`lm`]),
+//!   orchestrated by the streaming [`coordinator`] whose lane-batched
+//!   execution core fuses concurrent sessions into shared device steps
+//!   (bit-identical to scalar decoding per lane). Engines are assembled
+//!   through `Engine::builder()` and served over the v2 JSON-lines
+//!   protocol (hello/config handshake, structured error codes);
 //! * a **cycle-approximate simulator of the ASRPU chip** ([`accel`]) with
 //!   analytical area/power models ([`power`]) that regenerates every table
-//!   and figure from the paper's evaluation ([`report`]).
+//!   and figure from the paper's evaluation ([`report`]). The simulator's
+//!   kernel program is *derived* from the same stage description
+//!   (`config::PipelineDesc`) the engine executes — one source of truth
+//!   for the paper's "one program per decoder part".
 //!
 //! See DESIGN.md for the system inventory and the per-experiment index.
 pub mod accel;

@@ -3,19 +3,27 @@
 //! Subcommands:
 //!   decode    decode synthetic utterances end-to-end (XLA artifacts or
 //!             native backend), report transcripts + WER + RTF
-//!   serve     JSON-lines TCP streaming server (see coordinator::server)
+//!   serve     JSON-lines TCP streaming server, protocol v2
+//!             (hello/open/feed/finish/stats/config with structured
+//!             error codes; v1 lines still accepted — see
+//!             coordinator::server)
 //!   simulate  run the accelerator simulator for N decoding steps
 //!   report    regenerate paper tables/figures: table1 table2 fig9 fig10
 //!             fig11 headline all
 //!   sweep     design-space sweep over PEs / MAC width / frequency
 //!   synth     render a synthetic utterance to raw f32 samples on stdout
+//!
+//! Engines are constructed through `Engine::builder()` exclusively:
+//! `--backend native|xla|auto` picks the model source, `--beam` the
+//! search width, `--batch`/`--batch-wait` the serving batch policy; the
+//! builder validates the combination and reports typed errors.
 
 use anyhow::{bail, Result};
 
 use asrpu::accel::{simulate_step, HypWorkload, SimMode};
 use asrpu::am::TdsModel;
 use asrpu::config::{artifacts_dir, AccelConfig, BatchConfig, DecoderConfig, ModelConfig};
-use asrpu::coordinator::{Engine, Server};
+use asrpu::coordinator::{Engine, EngineBuilder, Server};
 use asrpu::power::ChipBudget;
 use asrpu::report;
 use asrpu::runtime::Runtime;
@@ -56,26 +64,32 @@ fn run(argv: &[String]) -> Result<()> {
     }
 }
 
-fn build_engine(args: &cli::Args) -> Result<Engine> {
+/// A builder configured from the shared CLI flags (`--backend`,
+/// `--beam`); subcommands add their own knobs before `.build()`.
+fn engine_builder(args: &cli::Args) -> Result<EngineBuilder> {
     let beam = args.f64_or("beam", DecoderConfig::default().beam as f64)? as f32;
-    let dec = DecoderConfig { beam, ..Default::default() };
-    match args.str_or("backend", "auto").as_str() {
-        "native" => Engine::native(TdsModel::random(ModelConfig::tiny_tds(), 1), dec),
+    let builder = Engine::builder().beam(beam);
+    Ok(match args.str_or("backend", "auto").as_str() {
+        "native" => builder.native(TdsModel::random(ModelConfig::tiny_tds(), 1)),
         "xla" => {
             let rt = Runtime::cpu()?;
-            Engine::from_artifacts(&rt, &artifacts_dir(), dec)
+            builder.artifacts(&rt, artifacts_dir())
         }
         "auto" => {
             if artifacts_dir().join("meta.json").exists() {
                 let rt = Runtime::cpu()?;
-                Engine::from_artifacts(&rt, &artifacts_dir(), dec)
+                builder.artifacts(&rt, artifacts_dir())
             } else {
                 eprintln!("note: artifacts missing; using native backend with random weights");
-                Engine::native(TdsModel::random(ModelConfig::tiny_tds(), 1), dec)
+                builder.native(TdsModel::random(ModelConfig::tiny_tds(), 1))
             }
         }
         other => bail!("unknown backend '{other}' (native|xla|auto)"),
-    }
+    })
+}
+
+fn build_engine(args: &cli::Args) -> Result<Engine> {
+    Ok(engine_builder(args)?.build()?)
 }
 
 fn cmd_decode(args: &cli::Args) -> Result<()> {
@@ -129,20 +143,22 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
         max_batch: args.usize_or("batch", batch_default.max_batch)?,
         max_wait_frames: args.usize_or("batch-wait", batch_default.max_wait_frames)?,
     };
+    // Fail fast on the CLI thread; the builder re-validates on the
+    // device thread.
+    batch.validate()?;
     let server = Server::start(
         &format!("127.0.0.1:{port}"),
         move || {
             // Rebuild the engine on the device thread (PJRT not Send).
             let argv = vec!["serve".to_string(), "--backend".into(), backend.clone()];
             let args = cli::parse(&argv, VALUE_KEYS)?;
-            build_engine(&args)
+            Ok(engine_builder(&args)?.batch(batch).build()?)
         },
         queue,
-        batch,
     )?;
     println!(
-        "asrpu serving on {} (JSON lines; ops: open/feed/finish/stats; \
-         lane-batched device loop)",
+        "asrpu serving on {} (JSON lines, protocol v2; ops: \
+         hello/open/feed/finish/stats/config; lane-batched device loop)",
         server.addr
     );
     loop {

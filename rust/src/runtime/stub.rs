@@ -55,4 +55,13 @@ impl XlaAm {
     pub fn step(&self, _state: &mut XlaState, _feats: &[f32]) -> Result<Vec<f32>> {
         bail!(NO_XLA)
     }
+
+    pub fn step_into(
+        &self,
+        _state: &mut XlaState,
+        _feats: &[f32],
+        _out: &mut Vec<f32>,
+    ) -> Result<()> {
+        bail!(NO_XLA)
+    }
 }

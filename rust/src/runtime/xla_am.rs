@@ -90,6 +90,22 @@ impl XlaAm {
         literal_to_f32(&out[0])
     }
 
+    /// [`Self::step`] appending the log-probs to a caller-owned buffer —
+    /// the backend trait's arena-friendly entry point: the engine stages
+    /// lane-major batched output through one reused `out` vector. (The
+    /// PJRT execute path itself still allocates host/device buffers per
+    /// step; only the engine-side staging is arena-backed.)
+    pub fn step_into(
+        &self,
+        state: &mut XlaState,
+        feats: &[f32],
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let logits = self.step(state, feats)?;
+        out.extend_from_slice(&logits);
+        Ok(())
+    }
+
     /// One acoustic-scoring step: features in, log-probs out, conv state
     /// advanced in place (device-resident).
     pub fn step(&self, state: &mut XlaState, feats: &[f32]) -> Result<Vec<f32>> {

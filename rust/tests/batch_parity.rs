@@ -184,11 +184,11 @@ fn engine_step_batch_end_to_end_parity() {
     // Whole pipeline: MFCC → AM → beam search. Batched sessions must
     // produce byte-identical transcripts and bit-identical scores to
     // scalar feeds of the same audio.
-    let engine = Engine::native(
-        TdsModel::random(ModelConfig::tiny_tds(), 9),
-        DecoderConfig::default(),
-    )
-    .unwrap();
+    let engine = Engine::builder()
+        .native(TdsModel::random(ModelConfig::tiny_tds(), 9))
+        .decoder(DecoderConfig::default())
+        .build()
+        .unwrap();
     let synth = asrpu::synth::Synthesizer::default();
     let utts: Vec<Vec<f32>> = (0..3u64)
         .map(|i| {

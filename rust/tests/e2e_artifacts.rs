@@ -93,8 +93,11 @@ fn e2e_decodes_synthetic_utterances_with_low_wer() {
         return;
     }
     let rt = Runtime::cpu().unwrap();
-    let engine =
-        Engine::from_artifacts(&rt, &artifacts_dir(), DecoderConfig::default()).unwrap();
+    let engine = Engine::builder()
+        .artifacts(&rt, artifacts_dir())
+        .decoder(DecoderConfig::default())
+        .build()
+        .unwrap();
     let synth = Synthesizer::default();
     let mut rng = Rng::new(2026);
     let mut wer = WerAccum::default();
@@ -122,8 +125,11 @@ fn beam_beats_greedy_baseline() {
         return;
     }
     let rt = Runtime::cpu().unwrap();
-    let engine =
-        Engine::from_artifacts(&rt, &artifacts_dir(), DecoderConfig::default()).unwrap();
+    let engine = Engine::builder()
+        .artifacts(&rt, artifacts_dir())
+        .decoder(DecoderConfig::default())
+        .build()
+        .unwrap();
     let synth = Synthesizer::default();
     let mut rng = Rng::new(555);
     let (mut beam_wer, mut greedy_wer) = (WerAccum::default(), WerAccum::default());

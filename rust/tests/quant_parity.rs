@@ -100,9 +100,17 @@ fn decode_collect(engine: &Engine, samples: &[f32]) -> (String, Vec<f32>, f32) {
 #[test]
 fn int8_decode_matches_f32_transcripts_on_synthesized_utterances() {
     let model = TdsModel::random(ModelConfig::tiny_tds(), 11);
-    let f32_engine = Engine::native(model.clone(), DecoderConfig::default()).unwrap();
-    let int8_engine =
-        Engine::native_with_precision(model, Precision::Int8, DecoderConfig::default()).unwrap();
+    let f32_engine = Engine::builder()
+        .native(model.clone())
+        .decoder(DecoderConfig::default())
+        .build()
+        .unwrap();
+    let int8_engine = Engine::builder()
+        .native(model)
+        .precision(Precision::Int8)
+        .decoder(DecoderConfig::default())
+        .build()
+        .unwrap();
     assert_eq!(int8_engine.model_cfg.precision, Precision::Int8);
     let synth = Synthesizer::default();
     let seeds = [3u64, 9, 27, 41, 55, 68];

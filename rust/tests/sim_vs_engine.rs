@@ -7,7 +7,7 @@ use asrpu::accel::{
     build_step_kernels, simulate_step, AsrpuDevice, Command, HypWorkload, KernelClass,
     SimMode,
 };
-use asrpu::config::{AccelConfig, ModelConfig};
+use asrpu::config::{AccelConfig, ModelConfig, PipelineDesc};
 use asrpu::power::{step_energy_j, ChipBudget};
 use asrpu::util::prop;
 
@@ -118,8 +118,9 @@ fn mac_width_only_affects_dot_product_kernels() {
     let model = ModelConfig::paper_tds();
     let a8 = AccelConfig::paper();
     let a16 = AccelConfig { mac_vector_width: 16, ..AccelConfig::paper() };
-    let k8 = build_step_kernels(&model, &a8, &HypWorkload::default(), 1);
-    let k16 = build_step_kernels(&model, &a16, &HypWorkload::default(), 1);
+    let pipe = PipelineDesc::for_model(&model);
+    let k8 = build_step_kernels(&pipe, &a8, &HypWorkload::default(), 1);
+    let k16 = build_step_kernels(&pipe, &a16, &HypWorkload::default(), 1);
     for (x, y) in k8.iter().zip(&k16) {
         match x.class {
             KernelClass::Conv | KernelClass::Fc => {
