@@ -1,0 +1,130 @@
+//! Sharded multi-worker serving: open N concurrent synthetic sessions
+//! against an in-process `ShardPool` of W device workers sharing one
+//! model, stream their audio from client threads, and verify every
+//! transcript is bit-identical to a plain 1-worker engine — the
+//! cross-shard determinism the serving layer guarantees — before
+//! printing per-shard occupancy/queue metrics.
+//!
+//!     cargo run --release --example sharded_serving [-- --n 16 --workers 4]
+
+use std::time::Instant;
+
+use asrpu::am::TdsModel;
+use asrpu::config::{BatchConfig, ModelConfig, ShardConfig};
+use asrpu::coordinator::{Engine, ShardPool};
+use asrpu::synth::Synthesizer;
+use asrpu::util::cli;
+use asrpu::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = cli::parse(&argv, &["n", "workers", "rebalance", "seed"])?;
+    let n = args.usize_or("n", 16)?;
+    let workers = args.usize_or("workers", 4)?;
+    let rebalance = args.usize_or("rebalance", ShardConfig::default().rebalance_threshold)?;
+    let seed = args.usize_or("seed", 42)? as u64;
+    const MODEL_SEED: u64 = 1;
+
+    // N utterances of varying length.
+    let synth = Synthesizer::default();
+    let mut rng = Rng::new(seed);
+    let utts: Vec<Vec<f32>> = (0..n)
+        .map(|_| synth.render_random(&mut rng).samples)
+        .collect();
+    let total_audio_s: f64 = utts.iter().map(|u| u.len() as f64 / 16_000.0).sum();
+
+    // The 1-worker reference: same weights, scalar decode per utterance.
+    let reference = Engine::builder()
+        .native(TdsModel::random(ModelConfig::tiny_tds(), MODEL_SEED))
+        .build()?;
+    let expected: Vec<String> = utts
+        .iter()
+        .map(|u| Ok(reference.decode_utterance(u)?.0.text))
+        .collect::<anyhow::Result<_>>()?;
+
+    // The sharded pool: W workers over the same (Arc-shared) model.
+    let pool = ShardPool::start(
+        move || {
+            Ok(Engine::builder()
+                .native(TdsModel::random(ModelConfig::tiny_tds(), MODEL_SEED))
+                .batch(BatchConfig::default())
+                .shards(ShardConfig { workers, rebalance_threshold: rebalance })
+                .build()?)
+        },
+        256,
+    )?;
+    println!(
+        "{n} sessions, {total_audio_s:.1}s of audio, {} worker shard(s)",
+        pool.workers()
+    );
+
+    // One client thread per session: open → feed in ~0.5 s chunks →
+    // finish. Feeds from different sessions land on their shards'
+    // batchers and fuse into lane-batched device steps.
+    let t0 = Instant::now();
+    let handles: Vec<_> = utts
+        .iter()
+        .cloned()
+        .enumerate()
+        .map(|(i, audio)| {
+            let client = pool.clone();
+            std::thread::spawn(move || -> anyhow::Result<(usize, u64, String)> {
+                let id = client.open()?;
+                for chunk in audio.chunks(8000) {
+                    client.feed(id, chunk)?;
+                }
+                let done = client.finish(id)?;
+                Ok((i, id, done.text))
+            })
+        })
+        .collect();
+    let mut results: Vec<(usize, u64, String)> = handles
+        .into_iter()
+        .map(|h| h.join().expect("client thread panicked"))
+        .collect::<anyhow::Result<_>>()?;
+    let wall_s = t0.elapsed().as_secs_f64();
+    // Each thread knows which utterance it carried (session ids race
+    // across opens and carry no utterance meaning), so the comparison
+    // is exact and per-utterance, not a multiset check.
+    results.sort_by_key(|(i, _, _)| *i);
+
+    let mut mismatches = 0;
+    for (i, id, text) in &results {
+        let ok = text == &expected[*i];
+        if !ok {
+            mismatches += 1;
+        }
+        println!(
+            "  utt {i:>3} (session {id:>3}): {} \"{}\"",
+            if ok { "ok" } else { "MISMATCH" },
+            text
+        );
+    }
+    anyhow::ensure!(
+        mismatches == 0,
+        "{mismatches} sharded transcript(s) diverged from the 1-worker engine"
+    );
+
+    let stats = pool.stats()?;
+    println!(
+        "aggregate: {total_audio_s:.1}s audio in {:.0}ms wall → {:.1}x real time",
+        wall_s * 1e3,
+        total_audio_s / wall_s
+    );
+    println!(
+        "stats: {}",
+        stats.get("summary").and_then(|s| s.as_str()).unwrap_or("?")
+    );
+    if let Some(shards) = stats.get("shards").and_then(|s| s.as_arr()) {
+        for s in shards {
+            println!(
+                "  shard {}: {}",
+                s.get("shard").and_then(|v| v.as_f64()).unwrap_or(-1.0),
+                s.get("summary").and_then(|v| v.as_str()).unwrap_or("?")
+            );
+        }
+    }
+    pool.shutdown();
+    println!("every transcript bit-identical to the 1-worker engine ✓");
+    Ok(())
+}

@@ -140,6 +140,89 @@ pub fn simulate_step_batched(
     simulate_pipeline(&PipelineDesc::for_model(model), accel, hyp, mode, batch)
 }
 
+/// Result of simulating one fused decoding step sharded across several
+/// workers (see [`simulate_step_sharded`]): each worker device runs its
+/// lane slice in parallel, so the step's wall time is the widest
+/// shard's, while model DMA is replicated per device (each worker
+/// streams its own copy of the shared weights — the consolidation cost
+/// the single-device fused step avoids).
+#[derive(Debug, Clone)]
+pub struct ShardedReport {
+    /// Per-worker step reports, widest shard first (shards with zero
+    /// lanes are omitted — they run nothing).
+    pub per_shard: Vec<StepReport>,
+    /// Lanes per worker, aligned with `per_shard`.
+    pub lanes: Vec<usize>,
+}
+
+impl ShardedReport {
+    /// Total lanes across every worker.
+    pub fn total_lanes(&self) -> usize {
+        self.lanes.iter().sum()
+    }
+
+    /// Wall-clock of the sharded step: workers run in parallel, so the
+    /// critical path is the widest shard's device step.
+    pub fn seconds(&self, accel: &AccelConfig) -> f64 {
+        self.per_shard
+            .iter()
+            .map(|r| r.seconds(accel))
+            .fold(0.0, f64::max)
+    }
+
+    /// Σ instructions across all workers (identical to the one-device
+    /// fused step at the same total batch — sharding moves work, it
+    /// never changes it).
+    pub fn total_instrs(&self) -> u64 {
+        self.per_shard.iter().map(|r| r.total_instrs).sum()
+    }
+
+    /// Σ model-DMA bytes across all workers: each device streams its
+    /// own copy of the weights, so this grows with the shard count.
+    pub fn total_dma_bytes(&self) -> u64 {
+        self.per_shard.iter().map(|r| r.dma_bytes).sum()
+    }
+
+    /// Aggregate real-time factor: the step covers
+    /// `total_lanes × step_seconds` of audio in the critical path's wall
+    /// time.
+    pub fn rtf_aggregate(&self, model: &ModelConfig, accel: &AccelConfig) -> f64 {
+        self.total_lanes() as f64 * model.step_seconds() / self.seconds(accel)
+    }
+}
+
+/// Simulate one fused decoding step of `batch` concurrent streams
+/// sharded across `shards` worker devices — the device-side mirror of
+/// the coordinator's [`ShardPool`](crate::coordinator::ShardPool).
+/// Lanes split as evenly as the router's least-loaded assignment
+/// (`⌈batch/shards⌉` on the first `batch % shards` workers), every
+/// worker's kernel program is derived from the same [`PipelineDesc`] —
+/// sim and engine keep deriving one program — and each worker's device
+/// step is simulated independently.
+pub fn simulate_step_sharded(
+    model: &ModelConfig,
+    accel: &AccelConfig,
+    hyp: &HypWorkload,
+    mode: SimMode,
+    batch: usize,
+    shards: usize,
+) -> ShardedReport {
+    assert!(batch >= 1, "need at least one lane");
+    assert!(shards >= 1, "need at least one shard");
+    let pipe = PipelineDesc::for_model(model);
+    let mut per_shard = Vec::with_capacity(shards);
+    let mut lanes = Vec::with_capacity(shards);
+    for i in 0..shards {
+        let lanes_i = batch / shards + usize::from(i < batch % shards);
+        if lanes_i == 0 {
+            continue;
+        }
+        per_shard.push(simulate_pipeline(&pipe, accel, hyp, mode, lanes_i));
+        lanes.push(lanes_i);
+    }
+    ShardedReport { per_shard, lanes }
+}
+
 /// Simulate one decoding step of an explicit stage description — the
 /// entry point the engine-visible pipeline flows through: the kernel
 /// program is derived from the same [`PipelineDesc`] the functional
@@ -411,5 +494,51 @@ mod tests {
         assert!(four.rtf_batched(&m, &a, 4) > one.rtf(&m, &a));
         // Utilization can only improve when kernels get wider.
         assert!(four.utilization(&a) >= one.utilization(&a) - 1e-9);
+    }
+
+    #[test]
+    fn sharding_splits_work_without_changing_it() {
+        // 8 lanes on one device vs sharded across 2 and 4 workers: the
+        // instruction count is conserved (sharding moves work), the
+        // critical path shrinks (workers run in parallel), and weight
+        // DMA is replicated per device.
+        let (m, a) = paper();
+        let hyp = HypWorkload::default();
+        let one = simulate_step_batched(&m, &a, &hyp, SimMode::Ideal, 8);
+        for shards in [2usize, 4] {
+            let s = simulate_step_sharded(&m, &a, &hyp, SimMode::Ideal, 8, shards);
+            assert_eq!(s.per_shard.len(), shards);
+            assert_eq!(s.total_lanes(), 8);
+            assert_eq!(s.total_instrs(), one.total_instrs, "shards={shards}");
+            assert_eq!(s.total_dma_bytes(), shards as u64 * one.dma_bytes);
+            assert!(
+                s.seconds(&a) < one.seconds(&a),
+                "shards={shards}: {} !< {}",
+                s.seconds(&a),
+                one.seconds(&a)
+            );
+            assert!(s.rtf_aggregate(&m, &a) > one.rtf_batched(&m, &a, 8));
+        }
+    }
+
+    #[test]
+    fn sharding_splits_lanes_like_the_router() {
+        // Uneven split: ⌈/⌉ on the first batch % shards workers, and
+        // empty shards are omitted entirely.
+        let (m, a) = paper();
+        let hyp = HypWorkload::default();
+        let s = simulate_step_sharded(&m, &a, &hyp, SimMode::Ideal, 5, 2);
+        assert_eq!(s.lanes, vec![3, 2]);
+        // Critical path is the widest shard's own step.
+        let widest = simulate_step_batched(&m, &a, &hyp, SimMode::Ideal, 3);
+        assert_eq!(s.per_shard[0].total_cycles, widest.total_cycles);
+        let sparse = simulate_step_sharded(&m, &a, &hyp, SimMode::Ideal, 2, 4);
+        assert_eq!(sparse.lanes, vec![1, 1]);
+        assert_eq!(sparse.per_shard.len(), 2);
+        // One shard degenerates to the plain fused step.
+        let solo = simulate_step_sharded(&m, &a, &hyp, SimMode::Ideal, 4, 1);
+        let fused = simulate_step_batched(&m, &a, &hyp, SimMode::Ideal, 4);
+        assert_eq!(solo.per_shard[0].total_cycles, fused.total_cycles);
+        assert_eq!(solo.total_instrs(), fused.total_instrs);
     }
 }

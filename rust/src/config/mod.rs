@@ -84,6 +84,43 @@ impl BatchConfig {
     }
 }
 
+/// Multi-worker sharding policy for the serving coordinator: how many
+/// device workers the server runs (each with its own `Batcher`, scratch
+/// arenas and acoustic-backend handle over the shared model — the
+/// paper's pool-of-general-purpose-cores shape lifted to the serving
+/// layer) and when the router migrates still-unstarted sessions off a
+/// hot shard.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardConfig {
+    /// Device workers (shards). 1 = the classic single device thread.
+    pub workers: usize,
+    /// Open-session imbalance (hottest − coldest shard) at which the
+    /// router migrates queued sessions — sessions that have not yet run
+    /// a decoding step — toward the cold shard. 0 disables rebalancing.
+    pub rebalance_threshold: usize,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        // One worker preserves the classic single-device-thread serving
+        // loop; a threshold of 2 repairs any imbalance worth repairing
+        // (diff/2 ≥ 1) as soon as it appears.
+        ShardConfig { workers: 1, rebalance_threshold: 2 }
+    }
+}
+
+impl ShardConfig {
+    /// Reject configurations the router cannot run.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.workers >= 1, "need at least one worker shard");
+        anyhow::ensure!(
+            self.workers <= 256,
+            "workers capped at 256 (one OS thread per shard)"
+        );
+        Ok(())
+    }
+}
+
 /// Resolve the artifacts directory: `$ASRPU_ARTIFACTS`, else `artifacts/`
 /// relative to the working directory, else relative to the crate root
 /// (for `cargo test` run from anywhere).
@@ -114,6 +151,17 @@ mod tests {
         let mut d = DecoderConfig::default();
         d.beam = -1.0;
         assert!(d.validate().is_err());
+    }
+
+    #[test]
+    fn shard_config_validation() {
+        let s = ShardConfig::default();
+        s.validate().unwrap();
+        assert_eq!(s.workers, 1, "default must stay the single-device loop");
+        assert!(ShardConfig { workers: 0, ..s.clone() }.validate().is_err());
+        assert!(ShardConfig { workers: 257, ..s.clone() }.validate().is_err());
+        // Rebalancing may be disabled outright.
+        ShardConfig { workers: 4, rebalance_threshold: 0 }.validate().unwrap();
     }
 
     #[test]

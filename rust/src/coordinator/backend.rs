@@ -34,6 +34,7 @@
 use anyhow::Result;
 use std::any::Any;
 use std::path::Path;
+use std::sync::Arc;
 
 use crate::am::{LaneStates, QuantizedTdsModel, Scratch as AmScratch, TdsModel, TdsState};
 use crate::config::{ModelConfig, Precision};
@@ -163,6 +164,20 @@ pub trait AmBackend {
         sc: &mut StepScratch,
         out: &mut Vec<f32>,
     ) -> Result<()>;
+
+    /// Duplicate this backend for another worker shard, sharing the
+    /// immutable model (native backends hold their weights behind an
+    /// `Arc`, so a worker clone costs a refcount, not a weight copy).
+    /// Per-worker mutable state (scratch arenas, session lane states) is
+    /// never shared — each worker brings its own.
+    ///
+    /// Returns `None` when the backend cannot run on another thread
+    /// (PJRT device handles are not `Send`); `EngineBuilder` rejects
+    /// multi-worker [`ShardConfig`](crate::config::ShardConfig)s for
+    /// such backends, so sharded serving paths never observe `None`.
+    fn clone_worker(&self) -> Option<Box<dyn AmBackend + Send>> {
+        None
+    }
 }
 
 /// Adapter presenting [`AmLanes`] states to the native AM step driver.
@@ -181,9 +196,10 @@ impl LaneStates for ErasedLanes<'_> {
 }
 
 /// The in-crate f32 backend: MFCC front-end + native TDS model, fused
-/// over lanes through the register-blocked kernels in `am::gemm`.
+/// over lanes through the register-blocked kernels in `am::gemm`. The
+/// weights live behind an `Arc` so worker shards share one copy.
 pub struct NativeBackend {
-    model: TdsModel,
+    model: Arc<TdsModel>,
     mfcc: Mfcc,
 }
 
@@ -192,7 +208,7 @@ impl NativeBackend {
     /// config).
     pub fn new(model: TdsModel) -> Self {
         let mfcc = Mfcc::for_model(&model.cfg);
-        NativeBackend { model, mfcc }
+        NativeBackend { model: Arc::new(model), mfcc }
     }
 }
 
@@ -243,12 +259,20 @@ impl AmBackend for NativeBackend {
         self.model.step_batch_into(&mut states, feats, am, out);
         Ok(())
     }
+
+    fn clone_worker(&self) -> Option<Box<dyn AmBackend + Send>> {
+        Some(Box::new(NativeBackend {
+            model: Arc::clone(&self.model),
+            mfcc: self.mfcc.clone(),
+        }))
+    }
 }
 
 /// The int8 backend: per-output-row affine-quantized weights with f32
 /// accumulate (`am::quant`); same streaming state as the f32 backend.
+/// Weights live behind an `Arc` so worker shards share one copy.
 pub struct QuantizedBackend {
-    model: QuantizedTdsModel,
+    model: Arc<QuantizedTdsModel>,
     mfcc: Mfcc,
 }
 
@@ -256,7 +280,7 @@ impl QuantizedBackend {
     /// Wrap an already-quantized model.
     pub fn new(model: QuantizedTdsModel) -> Self {
         let mfcc = Mfcc::for_model(&model.cfg);
-        QuantizedBackend { model, mfcc }
+        QuantizedBackend { model: Arc::new(model), mfcc }
     }
 
     /// Quantize an f32 model and wrap the result.
@@ -308,6 +332,13 @@ impl AmBackend for QuantizedBackend {
         self.model.step_batch_into(&mut states, feats, am, out);
         Ok(())
     }
+
+    fn clone_worker(&self) -> Option<Box<dyn AmBackend + Send>> {
+        Some(Box::new(QuantizedBackend {
+            model: Arc::clone(&self.model),
+            mfcc: self.mfcc.clone(),
+        }))
+    }
 }
 
 /// The artifact backend: MFCC and the streaming TDS step both execute as
@@ -316,6 +347,10 @@ impl AmBackend for QuantizedBackend {
 /// engine's fused loop is uniform across backends (the scalar-fallback
 /// special case is gone); what still allocates per step is the PJRT
 /// runtime's own host/device buffers (see KNOWN_FAILURES.md).
+///
+/// PJRT device handles are not `Send`, so this backend keeps the default
+/// [`AmBackend::clone_worker`] (`None`): it serves single-worker only,
+/// and the builder rejects `ShardConfig { workers: >1 }` for it.
 pub struct XlaBackend {
     am: XlaAm,
 }
@@ -441,6 +476,35 @@ mod tests {
             b.score_step_batch(&mut lanes, &mut sc, &mut batched).unwrap();
             assert_eq!(scalar, batched, "backend {}", b.name());
             assert_eq!(scalar.len(), cfg.vectors_per_step() * cfg.tokens);
+        }
+    }
+
+    #[test]
+    fn native_clone_worker_scores_identically() {
+        // A worker clone shares the model and must score bit-identically
+        // to the original backend on the same audio.
+        let model = TdsModel::random(ModelConfig::tiny_tds(), 9);
+        let originals: Vec<Box<dyn AmBackend>> = vec![
+            Box::new(NativeBackend::new(model.clone())),
+            Box::new(QuantizedBackend::quantize(&model).unwrap()),
+        ];
+        let mut rng = Rng::new(8);
+        let samples: Vec<f32> = (0..model.cfg.samples_per_step())
+            .map(|_| rng.uniform(-0.5, 0.5))
+            .collect();
+        for b in &originals {
+            let clone = b.clone_worker().expect("native backends must shard");
+            assert_eq!(clone.name(), b.name());
+            assert_eq!(clone.precision(), b.precision());
+            assert_eq!(clone.weight_bytes_per_step(), b.weight_bytes_per_step());
+            let mut sc = StepScratch::default();
+            let mut out_a = Vec::new();
+            let mut out_b = Vec::new();
+            let mut st_a = b.open_state().unwrap();
+            let mut st_b = clone.open_state().unwrap();
+            b.score_step(&mut st_a, &samples, &mut sc, &mut out_a).unwrap();
+            clone.score_step(&mut st_b, &samples, &mut sc, &mut out_b).unwrap();
+            assert_eq!(out_a, out_b, "backend {}", b.name());
         }
     }
 

@@ -25,7 +25,7 @@ use std::fmt;
 use std::path::{Path, PathBuf};
 
 use crate::am::TdsModel;
-use crate::config::{BatchConfig, DecoderConfig, Precision};
+use crate::config::{BatchConfig, DecoderConfig, Precision, ShardConfig};
 use crate::decoder::BeamDecoder;
 use crate::lexicon::Lexicon;
 use crate::lm::NgramLm;
@@ -44,6 +44,9 @@ pub enum BuildError {
     Decoder(String),
     /// The batching configuration failed validation.
     Batch(String),
+    /// The sharding configuration failed validation, or asks for more
+    /// workers than the chosen backend supports.
+    Shard(String),
     /// The requested precision cannot be applied to the chosen backend.
     Precision(String),
     /// The model's output tokens don't match the lexicon's token set.
@@ -74,6 +77,7 @@ impl fmt::Display for BuildError {
             }
             BuildError::Decoder(m) => write!(f, "invalid decoder config: {m}"),
             BuildError::Batch(m) => write!(f, "invalid batch config: {m}"),
+            BuildError::Shard(m) => write!(f, "invalid shard config: {m}"),
             BuildError::Precision(m) => write!(f, "invalid precision request: {m}"),
             BuildError::TokenMismatch { model_tokens, lexicon_tokens } => write!(
                 f,
@@ -110,6 +114,7 @@ pub struct EngineBuilder {
     precision: Option<Precision>,
     decoder: DecoderConfig,
     batch: BatchConfig,
+    shards: ShardConfig,
     lexicon: Option<Lexicon>,
     lm: Option<NgramLm>,
 }
@@ -176,6 +181,22 @@ impl EngineBuilder {
         self
     }
 
+    /// Multi-worker sharding policy the serving layer will use. Asking
+    /// for more than one worker requires a backend whose
+    /// [`AmBackend::clone_worker`] can duplicate it (the native f32/int8
+    /// backends share their weights behind an `Arc`; the PJRT backend is
+    /// single-worker) — validated at [`Self::build`].
+    pub fn shards(mut self, cfg: ShardConfig) -> Self {
+        self.shards = cfg;
+        self
+    }
+
+    /// Convenience: set just the worker count.
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.shards.workers = workers;
+        self
+    }
+
     /// Replace the default synthetic-protocol lexicon.
     pub fn lexicon(mut self, lexicon: Lexicon) -> Self {
         self.lexicon = Some(lexicon);
@@ -198,6 +219,9 @@ impl EngineBuilder {
         self.batch
             .validate()
             .map_err(|e| BuildError::Batch(format!("{e:#}")))?;
+        self.shards
+            .validate()
+            .map_err(|e| BuildError::Shard(format!("{e:#}")))?;
         let choice = self.backend.ok_or(BuildError::MissingModel)?;
         let backend: Box<dyn AmBackend> = match choice {
             BackendChoice::Failed(e) => return Err(e),
@@ -224,6 +248,16 @@ impl EngineBuilder {
                 b
             }
         };
+        // Multi-worker serving needs a backend every worker thread can
+        // hold a handle to; probe with one (cheap, Arc-refcount) clone.
+        if self.shards.workers > 1 && backend.clone_worker().is_none() {
+            return Err(BuildError::Shard(format!(
+                "backend '{}' cannot serve {} workers: it does not support \
+                 clone_worker() (device handles are thread-bound)",
+                backend.name(),
+                self.shards.workers
+            )));
+        }
         let lexicon = self.lexicon.unwrap_or_else(spec::lexicon);
         let model_tokens = backend.model_cfg().tokens;
         if model_tokens != lexicon.tokens.len() {
@@ -240,6 +274,14 @@ impl EngineBuilder {
         };
         let word_lm_ids = BeamDecoder::word_lm_ids(&lexicon, &lm)
             .map_err(|e| BuildError::Model(format!("{e:#}")))?;
-        Ok(Engine::assemble(backend, lexicon, lm, self.decoder, self.batch, word_lm_ids))
+        Ok(Engine::assemble(
+            backend,
+            lexicon,
+            lm,
+            self.decoder,
+            self.batch,
+            self.shards,
+            word_lm_ids,
+        ))
     }
 }

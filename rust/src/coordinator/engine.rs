@@ -46,7 +46,7 @@ use std::borrow::Cow;
 use std::cell::RefCell;
 use std::time::{Duration, Instant};
 
-use crate::config::{BatchConfig, DecoderConfig, ModelConfig, PipelineDesc};
+use crate::config::{BatchConfig, DecoderConfig, ModelConfig, PipelineDesc, ShardConfig};
 use crate::decoder::{BeamDecoder, DecodeScratch, DecodeState, Transcript};
 use crate::lexicon::Lexicon;
 use crate::lm::NgramLm;
@@ -77,10 +77,50 @@ pub struct Engine {
     /// Dynamic-batching policy the serving loop derives its [`Batcher`]
     /// from (validated by the builder).
     pub batch_cfg: BatchConfig,
+    /// Multi-worker sharding policy the serving layer spawns its
+    /// [`ShardPool`](super::ShardPool) from (validated by the builder:
+    /// `workers > 1` requires a backend that supports
+    /// [`clone_worker`](Self::clone_worker)).
+    pub shard_cfg: ShardConfig,
     /// Cached lexicon-word → LM-word mapping (O(vocabulary) to build;
     /// decoders borrow it so per-drain construction is allocation-free).
     word_lm_ids: Vec<u32>,
     scratch: RefCell<EngineScratch>,
+}
+
+/// Everything a worker thread needs to assemble its own [`Engine`] over
+/// the shared model: the backend clone (weights behind `Arc`), copies of
+/// the lexicon/LM/search configuration, and the cached word→LM mapping.
+///
+/// Unlike the engine itself — whose backend trait object carries no
+/// `Send` bound, because PJRT handles must stay on their build thread —
+/// a seed is `Send`: it is produced by [`Engine::clone_worker`] on the
+/// primary device thread and shipped to the worker thread, which turns
+/// it into that shard's engine with [`WorkerSeed::into_engine`].
+pub struct WorkerSeed {
+    backend: Box<dyn AmBackend + Send>,
+    lexicon: Lexicon,
+    lm: NgramLm,
+    dec_cfg: DecoderConfig,
+    batch_cfg: BatchConfig,
+    shard_cfg: ShardConfig,
+    word_lm_ids: Vec<u32>,
+}
+
+impl WorkerSeed {
+    /// Assemble the worker's engine (fresh scratch arenas; shared
+    /// weights). Call this on the worker's own thread.
+    pub fn into_engine(self) -> Engine {
+        Engine::assemble(
+            self.backend,
+            self.lexicon,
+            self.lm,
+            self.dec_cfg,
+            self.batch_cfg,
+            self.shard_cfg,
+            self.word_lm_ids,
+        )
+    }
 }
 
 /// Per-utterance decoding session.
@@ -93,6 +133,22 @@ pub struct Session {
     /// Collected log-probs (for greedy-baseline comparisons), if enabled.
     pub logits: Option<Vec<f32>>,
     pub metrics: SessionMetrics,
+}
+
+impl Session {
+    /// Dismantle a session that has not run any decoding step yet,
+    /// returning its buffered audio so the router can re-open it on
+    /// another worker shard (transcript-preserving: a fresh session fed
+    /// the same buffer decodes identically). `Err` hands the session
+    /// back when it already started decoding — its acoustic state is
+    /// shard-resident and must not migrate.
+    pub fn into_buffered(self) -> Result<Vec<f32>, Session> {
+        if self.metrics.steps == 0 {
+            Ok(self.buf)
+        } else {
+            Err(self)
+        }
+    }
 }
 
 /// Timing and search statistics for one session.
@@ -154,7 +210,7 @@ impl Batcher {
     /// Stage a session id (idempotent). Returns true if the batch is now
     /// full and should flush.
     pub fn push(&mut self, id: u64) -> bool {
-        if !self.pending.contains(&id) {
+        if !self.contains(id) {
             self.pending.push(id);
         }
         if self.oldest.is_none() {
@@ -173,6 +229,12 @@ impl Batcher {
 
     pub fn is_empty(&self) -> bool {
         self.pending.is_empty()
+    }
+
+    /// Whether `id` is currently staged (the router's migration guard:
+    /// a staged session has a feed reply in flight and must not move).
+    pub fn contains(&self, id: u64) -> bool {
+        self.pending.contains(&id)
     }
 
     /// Remaining wall-clock budget before the pending batch must flush.
@@ -231,13 +293,15 @@ impl Engine {
         EngineBuilder::new()
     }
 
-    /// Assemble from pre-validated parts ([`EngineBuilder::build`] only).
+    /// Assemble from pre-validated parts ([`EngineBuilder::build`] and
+    /// [`WorkerSeed::into_engine`] only).
     pub(crate) fn assemble(
         backend: Box<dyn AmBackend>,
         lexicon: Lexicon,
         lm: NgramLm,
         dec_cfg: DecoderConfig,
         batch_cfg: BatchConfig,
+        shard_cfg: ShardConfig,
         word_lm_ids: Vec<u32>,
     ) -> Engine {
         Engine {
@@ -247,9 +311,29 @@ impl Engine {
             lm,
             dec_cfg,
             batch_cfg,
+            shard_cfg,
             word_lm_ids,
             scratch: RefCell::new(EngineScratch::default()),
         }
+    }
+
+    /// Duplicate this engine for another worker shard: the backend
+    /// shares its immutable model ([`AmBackend::clone_worker`] — an
+    /// `Arc` refcount for the native backends), configuration and the
+    /// cached word→LM mapping are copied, and the worker gets fresh
+    /// scratch arenas. `None` when the backend cannot be duplicated
+    /// (PJRT); the builder rejects `workers > 1` for such backends, so
+    /// sharded construction paths never observe `None` here.
+    pub fn clone_worker(&self) -> Option<WorkerSeed> {
+        Some(WorkerSeed {
+            backend: self.backend.clone_worker()?,
+            lexicon: self.lexicon.clone(),
+            lm: self.lm.clone(),
+            dec_cfg: self.dec_cfg.clone(),
+            batch_cfg: self.batch_cfg.clone(),
+            shard_cfg: self.shard_cfg.clone(),
+            word_lm_ids: self.word_lm_ids.clone(),
+        })
     }
 
     /// The acoustic backend being served (name, precision, DMA metadata
@@ -731,6 +815,34 @@ mod tests {
         let mut b = e.batcher();
         assert!(!b.push(1));
         assert!(b.push(2), "policy max_batch=2 must fill at two lanes");
+    }
+
+    #[test]
+    fn clone_worker_decodes_identically() {
+        // A worker seed assembled into its own engine shares the model
+        // and must produce bit-identical transcripts.
+        let e = native_engine();
+        let w = e.clone_worker().expect("native engines must clone").into_engine();
+        assert_eq!(w.shard_cfg, e.shard_cfg);
+        assert_eq!(w.batch_cfg, e.batch_cfg);
+        let mut rng = Rng::new(21);
+        let u = Synthesizer::default().render(&[3, 6], &mut rng);
+        let (t_a, _) = e.decode_utterance(&u.samples).unwrap();
+        let (t_b, _) = w.decode_utterance(&u.samples).unwrap();
+        assert_eq!(t_a.text, t_b.text);
+        assert_eq!(t_a.score, t_b.score);
+    }
+
+    #[test]
+    fn into_buffered_migrates_only_unstarted_sessions() {
+        let e = native_engine();
+        let mut s = e.open(false).unwrap();
+        e.push_audio(&mut s, &vec![0.25; 1000]);
+        let buf = s.into_buffered().expect("no steps run yet: migratable");
+        assert_eq!(buf.len(), 1000);
+        let mut s = e.open(false).unwrap();
+        e.feed(&mut s, &vec![0.0; 1520]).unwrap();
+        assert!(s.into_buffered().is_err(), "started sessions are pinned");
     }
 
     #[test]

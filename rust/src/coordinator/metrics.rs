@@ -3,18 +3,41 @@
 
 use std::time::Duration;
 
-/// Online latency recorder (stores all samples; serving runs here are
-/// bounded, so simplicity beats a sketch).
+/// Retained latency samples per recorder. Bounds both long-run memory
+/// and the per-snapshot clone cost of sharded stats aggregation;
+/// percentiles describe the most recent window once the cap is hit.
+const MAX_SAMPLES: usize = 4096;
+
+/// Online latency recorder over a bounded sample window (the oldest
+/// samples are overwritten once [`MAX_SAMPLES`] are retained, so a
+/// long-lived server's stats stay O(1) in memory and snapshot cost).
 #[derive(Debug, Clone, Default)]
 pub struct LatencyStats {
     samples_ms: Vec<f64>,
+    /// Overwrite cursor once the window is full.
+    cursor: usize,
 }
 
 impl LatencyStats {
     pub fn record(&mut self, d: Duration) {
-        self.samples_ms.push(d.as_secs_f64() * 1e3);
+        self.record_ms(d.as_secs_f64() * 1e3);
     }
 
+    fn record_ms(&mut self, v: f64) {
+        if self.samples_ms.len() < MAX_SAMPLES {
+            self.samples_ms.push(v);
+        } else {
+            // Cycle over the whole buffer — a recorder grown past the
+            // cap by `merge` still evicts every sample, not just the
+            // first window.
+            let n = self.samples_ms.len();
+            self.samples_ms[self.cursor % n] = v;
+            self.cursor = (self.cursor + 1) % n;
+        }
+    }
+
+    /// Samples currently retained (capped at [`MAX_SAMPLES`] for
+    /// recorders that only `record`; merged aggregates hold the union).
     pub fn count(&self) -> usize {
         self.samples_ms.len()
     }
@@ -39,17 +62,36 @@ impl LatencyStats {
     pub fn max(&self) -> f64 {
         self.samples_ms.iter().cloned().fold(0.0, f64::max)
     }
+
+    /// Fold another recorder's retained samples into this one (shard
+    /// aggregation): the true union, deliberately *not* re-capped —
+    /// otherwise the last-merged shard's window would overwrite every
+    /// earlier shard's and aggregate percentiles would hide slow
+    /// shards. Aggregation recorders are transient (built per stats
+    /// snapshot from ≤ `MAX_SAMPLES` per shard), so the union stays
+    /// bounded by the worker count.
+    pub fn merge(&mut self, other: &LatencyStats) {
+        self.samples_ms.extend_from_slice(&other.samples_ms);
+    }
 }
 
 /// Aggregate serving counters.
 #[derive(Debug, Clone, Default)]
 pub struct ServeMetrics {
+    /// Sessions this worker currently accounts for having opened:
+    /// locally opened plus adopted, minus evicted-away (migration moves
+    /// the count with the session so per-shard opened/finished balance).
     pub sessions_opened: u64,
     pub sessions_finished: u64,
     pub steps_executed: u64,
     pub audio_seconds: f64,
     pub compute_seconds: f64,
+    /// Requests bounced with `backpressure` at this shard's queue
+    /// (counted router-side and folded into stats snapshots).
     pub rejected_backpressure: u64,
+    /// Sessions this worker adopted from a hotter shard (router
+    /// rebalancing; only not-yet-started sessions migrate).
+    pub sessions_adopted: u64,
     /// Queue-wait + execution latency per feed request.
     pub feed_latency: LatencyStats,
     /// Fused device batches executed by the lane-batched core.
@@ -87,11 +129,28 @@ impl ServeMetrics {
         self.batch_latency.record(latency);
     }
 
+    /// Fold a per-shard snapshot into an aggregate: counters add,
+    /// latency samples concatenate (so aggregate percentiles are over
+    /// every shard's requests).
+    pub fn merge(&mut self, other: &ServeMetrics) {
+        self.sessions_opened += other.sessions_opened;
+        self.sessions_finished += other.sessions_finished;
+        self.steps_executed += other.steps_executed;
+        self.audio_seconds += other.audio_seconds;
+        self.compute_seconds += other.compute_seconds;
+        self.rejected_backpressure += other.rejected_backpressure;
+        self.sessions_adopted += other.sessions_adopted;
+        self.feed_latency.merge(&other.feed_latency);
+        self.batches_executed += other.batches_executed;
+        self.batch_lanes += other.batch_lanes;
+        self.batch_latency.merge(&other.batch_latency);
+    }
+
     pub fn summary(&self) -> String {
         format!(
             "sessions {}/{} steps {} audio {:.1}s rtf {:.1}x \
              feed p50 {:.2}ms p99 {:.2}ms max {:.2}ms rejected {} \
-             batches {} occ {:.2} batch p99 {:.2}ms",
+             batches {} occ {:.2} batch p99 {:.2}ms adopted {}",
             self.sessions_finished,
             self.sessions_opened,
             self.steps_executed,
@@ -104,7 +163,64 @@ impl ServeMetrics {
             self.batches_executed,
             self.avg_batch_occupancy(),
             self.batch_latency.percentile(99.0),
+            self.sessions_adopted,
         )
+    }
+}
+
+/// One shard's live status, as reported by its worker loop in response
+/// to a snapshot probe.
+#[derive(Debug, Clone)]
+pub struct ShardSnapshot {
+    /// Shard index (0 = the primary device thread).
+    pub shard: usize,
+    /// Sessions currently open on this shard.
+    pub open_sessions: usize,
+    /// Jobs queued to (or in flight on) this shard's worker.
+    pub queue_depth: usize,
+    /// The shard's serving counters.
+    pub serve: ServeMetrics,
+}
+
+/// Aggregated view over every worker shard — the payload behind the
+/// serving protocol's `stats` op in sharded deployments.
+#[derive(Debug, Clone, Default)]
+pub struct ShardMetrics {
+    /// Per-shard snapshots, in shard order.
+    pub shards: Vec<ShardSnapshot>,
+}
+
+impl ShardMetrics {
+    /// The aggregate counters across all shards.
+    pub fn total(&self) -> ServeMetrics {
+        let mut t = ServeMetrics::default();
+        for s in &self.shards {
+            t.merge(&s.serve);
+        }
+        t
+    }
+
+    /// Open-session imbalance (hottest − coldest shard) — what the
+    /// router's rebalance threshold is compared against.
+    pub fn imbalance(&self) -> usize {
+        let max = self.shards.iter().map(|s| s.open_sessions).max().unwrap_or(0);
+        let min = self.shards.iter().map(|s| s.open_sessions).min().unwrap_or(0);
+        max - min
+    }
+
+    /// One-line aggregate + per-shard occupancy/queue summary.
+    pub fn summary(&self) -> String {
+        let mut out = format!("{} shard(s) | {}", self.shards.len(), self.total().summary());
+        for s in &self.shards {
+            out.push_str(&format!(
+                " | shard{} sessions {} queue {} rtf {:.1}x",
+                s.shard,
+                s.open_sessions,
+                s.queue_depth,
+                s.serve.rtf()
+            ));
+        }
+        out
     }
 }
 
@@ -132,6 +248,49 @@ mod tests {
         let m = ServeMetrics::default();
         assert!(m.rtf().is_infinite());
         assert_eq!(m.avg_batch_occupancy(), 0.0);
+    }
+
+    #[test]
+    fn merge_adds_counters_and_unions_latency() {
+        let mut a = ServeMetrics {
+            sessions_opened: 3,
+            steps_executed: 10,
+            audio_seconds: 1.0,
+            compute_seconds: 0.5,
+            ..ServeMetrics::default()
+        };
+        a.feed_latency.record(Duration::from_millis(2));
+        let mut b = ServeMetrics {
+            sessions_opened: 1,
+            sessions_adopted: 1,
+            audio_seconds: 1.0,
+            compute_seconds: 0.5,
+            ..ServeMetrics::default()
+        };
+        b.feed_latency.record(Duration::from_millis(4));
+        a.merge(&b);
+        assert_eq!(a.sessions_opened, 4);
+        assert_eq!(a.sessions_adopted, 1);
+        assert_eq!(a.feed_latency.count(), 2);
+        assert!((a.rtf() - 2.0).abs() < 1e-9);
+        assert!(a.summary().contains("adopted 1"), "{}", a.summary());
+    }
+
+    #[test]
+    fn shard_metrics_aggregate_and_imbalance() {
+        let snap = |shard, open, steps| ShardSnapshot {
+            shard,
+            open_sessions: open,
+            queue_depth: shard,
+            serve: ServeMetrics { steps_executed: steps, ..ServeMetrics::default() },
+        };
+        let m = ShardMetrics { shards: vec![snap(0, 5, 100), snap(1, 2, 40)] };
+        assert_eq!(m.imbalance(), 3);
+        assert_eq!(m.total().steps_executed, 140);
+        let s = m.summary();
+        assert!(s.starts_with("2 shard(s)"), "{s}");
+        assert!(s.contains("shard1 sessions 2 queue 1"), "{s}");
+        assert_eq!(ShardMetrics::default().imbalance(), 0);
     }
 
     #[test]

@@ -1,19 +1,24 @@
 //! Streaming coordinator: the acoustic-backend contract ([`backend`]),
 //! validated engine construction ([`builder`]), the engine itself (the
-//! per-session decode pipeline), the serving front-end (JSON-lines TCP,
-//! protocol v2, bounded queue, single device thread — the §4.1
-//! host-process shape) and serving metrics.
+//! per-session decode pipeline), the sharded worker pool and session
+//! router ([`shard`] — N device workers over one shared model, with
+//! deterministic assignment and queued-session rebalancing), the
+//! serving front-end (JSON-lines TCP, protocol v2, bounded queue — the
+//! §4.1 host-process shape generalized to a worker pool) and serving
+//! metrics.
 
 pub mod backend;
 pub mod builder;
 pub mod engine;
 pub mod metrics;
 pub mod server;
+pub mod shard;
 
 pub use backend::{
     AmBackend, AmLaneState, AmLanes, NativeBackend, QuantizedBackend, StepScratch, XlaBackend,
 };
 pub use builder::{BuildError, EngineBuilder};
-pub use engine::{Batcher, Engine, Session, SessionMetrics};
-pub use metrics::{LatencyStats, ServeMetrics};
+pub use engine::{Batcher, Engine, Session, SessionMetrics, WorkerSeed};
+pub use metrics::{LatencyStats, ServeMetrics, ShardMetrics, ShardSnapshot};
 pub use server::Server;
+pub use shard::{Finished, ShardPool};

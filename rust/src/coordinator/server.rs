@@ -1,8 +1,8 @@
 //! The serving front-end: a JSON-lines TCP server multiplexing many
-//! streaming sessions onto one engine — the shape of the paper's §4.1
-//! deployment (a host process feeding DecodingStep commands to a single
-//! ASRPU device), extended with the queueing, backpressure and metrics a
-//! production router needs.
+//! streaming sessions onto a sharded pool of device workers — the shape
+//! of the paper's §4.1 deployment (a host process feeding DecodingStep
+//! commands to ASRPU devices), extended with the queueing, backpressure,
+//! sharding and metrics a production router needs.
 //!
 //! ## Protocol v2 (one JSON object per line)
 //!
@@ -12,9 +12,10 @@
 //!   → {"op":"feed","session":N,
 //!      "samples":[...]}               ← {"steps":K,"partial":"..."}
 //!   → {"op":"finish","session":N}     ← {"text":"...","rtf":X,...}
-//!   → {"op":"stats"}                  ← {"summary":"..."}
+//!   → {"op":"stats"}                  ← {"summary":"...","workers":W,
+//!                                        "shards":[...]}
 //!   → {"op":"config"}                 ← {"proto":2,"backend":"...",
-//!                                        "precision":"...","model":...}
+//!                                        "precision":"...","workers":W,...}
 //!
 //! Errors are structured: `{"error":{"code":"...","message":"..."}}`
 //! with stable machine-readable codes (`bad_request`, `unknown_op`,
@@ -26,23 +27,19 @@
 //! errors as a plain string under `"error"`; v2 keeps the `"error"` key
 //! so presence checks still work, and adds the code/message structure.)
 //!
-//! Architecture: connection threads parse requests and enqueue jobs on a
+//! Architecture: connection threads parse requests and enqueue them on a
 //! bounded channel (backpressure = immediate error response when full);
-//! `hello` is answered on the connection thread (static capability data);
-//! everything else serializes through a single device thread that owns
-//! the engine and all session state — mirroring the serialized
-//! DecodingStep semantics of the hardware.
-//!
-//! Feeds drain through the lane-batched execution core: the device loop
-//! stages each feed behind a [`Batcher`] and fuses ready sessions into
-//! one `Engine::step_batch` call. A batch flushes when it is full, when
-//! every open session is already staged (a lone stream never waits), or
-//! when the oldest staged lane exhausts the configured wait budget. The
-//! batching policy comes from the engine itself
-//! (`EngineBuilder::batch`).
+//! `hello` is answered on the connection thread (static capability
+//! data); everything else flows through the
+//! [`ShardPool`](super::ShardPool) router, which assigns sessions to
+//! per-worker shards (`ShardConfig::workers`, each shard its own
+//! lane-batched device loop over the shared model), rebalances queued
+//! sessions off hot shards, answers `stats` by aggregating per-shard
+//! snapshots, and serves `config` from shard 0's engine. With one
+//! worker (the default) this degenerates to exactly the single
+//! serialized device thread of the paper's host loop.
 
 use anyhow::{Context, Result};
-use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc;
@@ -51,8 +48,8 @@ use std::time::Instant;
 use crate::config::Precision;
 use crate::util::json::{Json, JsonObj};
 
-use super::engine::{Batcher, Engine, Session};
-use super::metrics::ServeMetrics;
+use super::engine::Engine;
+use super::shard::{RouterMsg, ShardPool};
 
 /// Protocol version this server speaks.
 pub const PROTO_VERSION: u64 = 2;
@@ -80,6 +77,16 @@ pub enum ErrCode {
 }
 
 impl ErrCode {
+    /// Every code the server can emit (conformance tests sweep this).
+    pub const ALL: &'static [ErrCode] = &[
+        ErrCode::BadRequest,
+        ErrCode::UnknownOp,
+        ErrCode::UnknownSession,
+        ErrCode::Backpressure,
+        ErrCode::Shutdown,
+        ErrCode::Internal,
+    ];
+
     /// The wire string for this code.
     pub fn as_str(self) -> &'static str {
         match self {
@@ -93,30 +100,21 @@ impl ErrCode {
     }
 }
 
-/// A queued unit of device work.
-pub(crate) enum Job {
-    Open { reply: mpsc::Sender<Json> },
-    Feed { session: u64, samples: Vec<f32>, enqueued: Instant, reply: mpsc::Sender<Json> },
-    Finish { session: u64, reply: mpsc::Sender<Json> },
-    Stats { reply: mpsc::Sender<Json> },
-    Config { reply: mpsc::Sender<Json> },
-    Shutdown,
-}
-
 /// A parsed request line: either answered on the connection thread or
-/// forwarded to the device loop.
+/// forwarded to the shard router.
 enum Request {
     Hello,
-    Job(Job),
+    Msg(RouterMsg),
 }
 
-/// Server handle (owns the listener thread).
+/// Server handle (owns the listener + the shard pool behind it).
 pub struct Server {
+    /// The bound address (useful with port 0).
     pub addr: String,
-    jobs: mpsc::SyncSender<Job>,
+    pool: ShardPool,
 }
 
-fn obj(pairs: &[(&str, Json)]) -> Json {
+pub(crate) fn obj(pairs: &[(&str, Json)]) -> Json {
     let mut o = JsonObj::new();
     for (k, v) in pairs {
         o.insert(*k, v.clone());
@@ -124,8 +122,10 @@ fn obj(pairs: &[(&str, Json)]) -> Json {
     Json::Obj(o)
 }
 
-/// Structured v2 error: `{"error":{"code":..., "message":...}}`.
-fn err_json(code: ErrCode, msg: &str) -> Json {
+/// Structured v2 error payload: `{"error":{"code":..., "message":...}}`.
+/// Public so conformance tests (and alternative front-ends) can assert
+/// the exact wire shape of every [`ErrCode`].
+pub fn err_json(code: ErrCode, msg: &str) -> Json {
     obj(&[(
         "error",
         obj(&[
@@ -151,8 +151,10 @@ fn hello_json() -> Json {
     ])
 }
 
-/// The `config` introspection response: what this device is serving.
-fn config_json(engine: &Engine) -> Json {
+/// The `config` introspection response: what this device pool is
+/// serving (answered by shard 0's worker — every shard serves the same
+/// engine configuration by construction).
+pub(crate) fn config_json(engine: &Engine) -> Json {
     let m = &engine.model_cfg;
     let precision = match engine.backend().precision() {
         Precision::F32 => "f32",
@@ -174,197 +176,14 @@ fn config_json(engine: &Engine) -> Json {
         ),
         ("max_batch", Json::Num(engine.batch_cfg.max_batch as f64)),
         ("max_wait_frames", Json::Num(engine.batch_cfg.max_wait_frames as f64)),
+        ("workers", Json::Num(engine.shard_cfg.workers as f64)),
+        (
+            "rebalance_threshold",
+            Json::Num(engine.shard_cfg.rebalance_threshold as f64),
+        ),
         ("beam", Json::Num(engine.dec_cfg.beam as f64)),
         ("max_hyps", Json::Num(engine.dec_cfg.max_hyps as f64)),
     ])
-}
-
-/// A feed waiting for its batch to flush.
-struct StagedFeed {
-    session: u64,
-    reply: mpsc::Sender<Json>,
-    enqueued: Instant,
-}
-
-/// Run the pending batch: pull its sessions out of the map, fuse their
-/// ready steps through `Engine::step_batch`, record occupancy/latency,
-/// then answer every staged feed with its session's step count + partial.
-///
-/// Known coarseness, acceptable at this layer: if one session was fed
-/// twice before the flush (two connections), both replies report the
-/// same since-staging step delta; and a batch-level engine error is
-/// reported to every staged feed in the batch, not just the failing
-/// lane's.
-fn flush_batch(
-    engine: &Engine,
-    sessions: &mut HashMap<u64, Session>,
-    batcher: &mut Batcher,
-    staged: &mut Vec<StagedFeed>,
-    metrics: &mut ServeMetrics,
-) {
-    let ids = batcher.take();
-    // Pull the batch's sessions out of the map so every lane can be
-    // borrowed mutably at once; they go back right after the fused step.
-    let mut lanes: Vec<(u64, Session, usize)> = Vec::with_capacity(ids.len());
-    for id in ids {
-        if let Some(s) = sessions.remove(&id) {
-            let steps_before = s.metrics.steps;
-            lanes.push((id, s, steps_before));
-        }
-    }
-    let occupancy = lanes.iter().filter(|(_, s, _)| engine.ready_steps(s) > 0).count();
-    let t0 = Instant::now();
-    let result = {
-        let mut refs: Vec<&mut Session> = lanes.iter_mut().map(|(_, s, _)| s).collect();
-        engine.step_batch(&mut refs)
-    };
-    if occupancy > 0 {
-        metrics.record_batch(occupancy, t0.elapsed());
-    }
-    let err = result.err().map(|e| format!("feed failed: {e:#}"));
-    for (id, s, steps_before) in lanes {
-        let steps = s.metrics.steps - steps_before;
-        metrics.steps_executed += steps as u64;
-        metrics.audio_seconds += steps as f64 * engine.model_cfg.step_seconds();
-        let partial = engine.partial(&s).map(|t| t.text).unwrap_or_default();
-        sessions.insert(id, s);
-        staged.retain(|f| {
-            if f.session != id {
-                return true;
-            }
-            let resp = match &err {
-                Some(msg) => err_json(ErrCode::Internal, msg),
-                None => obj(&[
-                    ("steps", Json::Num(steps as f64)),
-                    ("partial", Json::Str(partial.clone())),
-                ]),
-            };
-            metrics.feed_latency.record(f.enqueued.elapsed());
-            let _ = f.reply.send(resp);
-            false
-        });
-    }
-    // Staged feeds whose session vanished from the map (finished from
-    // another connection mid-batch): answer rather than hang the client.
-    for f in staged.drain(..) {
-        let _ = f
-            .reply
-            .send(err_json(ErrCode::UnknownSession, "session closed before its batch ran"));
-    }
-}
-
-/// Run the device loop over the job channel (blocks). Exposed for
-/// in-process use (tests, examples) without TCP. The batching policy is
-/// the engine's own (`Engine::batcher`).
-pub(crate) fn device_loop(engine: Engine, jobs: mpsc::Receiver<Job>) {
-    let mut sessions: HashMap<u64, Session> = HashMap::new();
-    let mut next_id: u64 = 1;
-    let mut metrics = ServeMetrics::default();
-    let mut batcher = engine.batcher();
-    let mut staged: Vec<StagedFeed> = Vec::new();
-    loop {
-        // Enforce the wait budget even under sustained job traffic: a
-        // queued message makes recv_timeout return Ok without ever timing
-        // out, so an expired partial batch must flush here, not just on
-        // the Timeout arm.
-        if !staged.is_empty() && batcher.wait_budget().is_zero() {
-            flush_batch(&engine, &mut sessions, &mut batcher, &mut staged, &mut metrics);
-        }
-        // Block for the next job; with feeds staged, cap the wait at the
-        // batcher's remaining budget so a partial batch still flushes.
-        let job = if staged.is_empty() {
-            match jobs.recv() {
-                Ok(j) => j,
-                Err(_) => break,
-            }
-        } else {
-            match jobs.recv_timeout(batcher.wait_budget()) {
-                Ok(j) => j,
-                Err(mpsc::RecvTimeoutError::Timeout) => {
-                    flush_batch(&engine, &mut sessions, &mut batcher, &mut staged, &mut metrics);
-                    continue;
-                }
-                Err(mpsc::RecvTimeoutError::Disconnected) => {
-                    flush_batch(&engine, &mut sessions, &mut batcher, &mut staged, &mut metrics);
-                    break;
-                }
-            }
-        };
-        match job {
-            Job::Shutdown => {
-                flush_batch(&engine, &mut sessions, &mut batcher, &mut staged, &mut metrics);
-                break;
-            }
-            Job::Open { reply } => {
-                let resp = match engine.open(false) {
-                    Ok(s) => {
-                        let id = next_id;
-                        next_id += 1;
-                        sessions.insert(id, s);
-                        metrics.sessions_opened += 1;
-                        obj(&[("session", Json::Num(id as f64))])
-                    }
-                    Err(e) => err_json(ErrCode::Internal, &format!("open failed: {e:#}")),
-                };
-                let _ = reply.send(resp);
-            }
-            Job::Feed { session, samples, enqueued, reply } => {
-                match sessions.get_mut(&session) {
-                    None => {
-                        let _ = reply.send(err_json(ErrCode::UnknownSession, "unknown session"));
-                    }
-                    Some(s) => {
-                        engine.push_audio(s, &samples);
-                        staged.push(StagedFeed { session, reply, enqueued });
-                        // Flush when the batch is full — or when every open
-                        // session is already staged, since no further lane
-                        // can arrive before some staged client unblocks.
-                        if batcher.push(session) || batcher.len() >= sessions.len() {
-                            flush_batch(
-                                &engine,
-                                &mut sessions,
-                                &mut batcher,
-                                &mut staged,
-                                &mut metrics,
-                            );
-                        }
-                    }
-                }
-            }
-            Job::Finish { session, reply } => {
-                // Any staged work (this session's included) runs first so
-                // the transcript covers all fed audio.
-                if !staged.is_empty() {
-                    flush_batch(&engine, &mut sessions, &mut batcher, &mut staged, &mut metrics);
-                }
-                batcher.remove(session);
-                let resp = match sessions.remove(&session) {
-                    None => err_json(ErrCode::UnknownSession, "unknown session"),
-                    Some(mut s) => match engine.finish(&mut s) {
-                        Ok(t) => {
-                            metrics.sessions_finished += 1;
-                            metrics.compute_seconds += s.metrics.compute_s;
-                            obj(&[
-                                ("text", Json::Str(t.text)),
-                                ("score", Json::Num(t.score as f64)),
-                                ("rtf", Json::Num(s.metrics.rtf())),
-                                ("steps", Json::Num(s.metrics.steps as f64)),
-                                ("batch_occupancy", Json::Num(s.metrics.avg_batch_occupancy())),
-                            ])
-                        }
-                        Err(e) => err_json(ErrCode::Internal, &format!("finish failed: {e:#}")),
-                    },
-                };
-                let _ = reply.send(resp);
-            }
-            Job::Stats { reply } => {
-                let _ = reply.send(obj(&[("summary", Json::Str(metrics.summary()))]));
-            }
-            Job::Config { reply } => {
-                let _ = reply.send(config_json(&engine));
-            }
-        }
-    }
 }
 
 /// Parse one request line (v1 or v2).
@@ -376,9 +195,9 @@ fn parse_request(line: &str, reply: mpsc::Sender<Json>) -> Result<Request, (ErrC
         .ok_or_else(|| (ErrCode::BadRequest, "missing 'op'".to_string()))?;
     match op {
         "hello" => Ok(Request::Hello),
-        "open" => Ok(Request::Job(Job::Open { reply })),
-        "stats" => Ok(Request::Job(Job::Stats { reply })),
-        "config" => Ok(Request::Job(Job::Config { reply })),
+        "open" => Ok(Request::Msg(RouterMsg::Open { reply })),
+        "stats" => Ok(Request::Msg(RouterMsg::Stats { reply })),
+        "config" => Ok(Request::Msg(RouterMsg::Config { reply })),
         "feed" | "finish" => {
             let session = v
                 .get("session")
@@ -386,7 +205,7 @@ fn parse_request(line: &str, reply: mpsc::Sender<Json>) -> Result<Request, (ErrC
                 .ok_or_else(|| (ErrCode::BadRequest, "missing 'session'".to_string()))?
                 as u64;
             if op == "finish" {
-                return Ok(Request::Job(Job::Finish { session, reply }));
+                return Ok(Request::Msg(RouterMsg::Finish { session, reply }));
             }
             let samples = v
                 .get("samples")
@@ -395,13 +214,18 @@ fn parse_request(line: &str, reply: mpsc::Sender<Json>) -> Result<Request, (ErrC
                 .iter()
                 .map(|x| x.as_f64().unwrap_or(0.0) as f32)
                 .collect();
-            Ok(Request::Job(Job::Feed { session, samples, enqueued: Instant::now(), reply }))
+            Ok(Request::Msg(RouterMsg::Feed {
+                session,
+                samples,
+                enqueued: Instant::now(),
+                reply,
+            }))
         }
         other => Err((ErrCode::UnknownOp, format!("unknown op '{other}'"))),
     }
 }
 
-fn handle_conn(stream: TcpStream, jobs: mpsc::SyncSender<Job>) -> Result<()> {
+fn handle_conn(stream: TcpStream, jobs: mpsc::SyncSender<RouterMsg>) -> Result<()> {
     let peer = stream.peer_addr().ok();
     let reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
@@ -414,9 +238,9 @@ fn handle_conn(stream: TcpStream, jobs: mpsc::SyncSender<Job>) -> Result<()> {
         let response = match parse_request(&line, tx) {
             Err((code, msg)) => err_json(code, &msg),
             // Static capability data: answered without touching the
-            // device queue (a handshake must not hit backpressure).
+            // router queue (a handshake must not hit backpressure).
             Ok(Request::Hello) => hello_json(),
-            Ok(Request::Job(job)) => match jobs.try_send(job) {
+            Ok(Request::Msg(msg)) => match jobs.try_send(msg) {
                 Err(mpsc::TrySendError::Full(_)) => {
                     err_json(ErrCode::Backpressure, "queue full")
                 }
@@ -437,12 +261,15 @@ fn handle_conn(stream: TcpStream, jobs: mpsc::SyncSender<Job>) -> Result<()> {
 }
 
 impl Server {
-    /// Bind and serve. `make_engine` runs on the device thread (PJRT
-    /// handles are not `Send`); the engine carries its own batching
-    /// policy (`EngineBuilder::batch`). Blocks until the engine is built
-    /// so construction errors (builder validation, artifact loading)
-    /// surface here instead of as a silently dead device loop; serving
-    /// then continues on background threads.
+    /// Bind and serve. `make_engine` runs on shard 0's device thread
+    /// (PJRT handles are not `Send`); the engine carries its own
+    /// batching (`EngineBuilder::batch`) and sharding
+    /// (`EngineBuilder::shards`) policy — with `workers > 1` the pool
+    /// seeds that many device workers from `Engine::clone_worker`.
+    /// Blocks until the engine is built so construction errors (builder
+    /// validation, artifact loading) surface here instead of as a
+    /// silently dead device loop; serving then continues on background
+    /// threads.
     pub fn start(
         addr: &str,
         make_engine: impl FnOnce() -> Result<Engine> + Send + 'static,
@@ -451,40 +278,29 @@ impl Server {
         let listener = TcpListener::bind(addr)
             .with_context(|| format!("binding {addr}"))?;
         let local = listener.local_addr()?.to_string();
-        let (jobs_tx, jobs_rx) = mpsc::sync_channel::<Job>(queue_depth);
-        let (init_tx, init_rx) = mpsc::channel::<Result<(), String>>();
-        std::thread::Builder::new()
-            .name("asrpu-device".into())
-            .spawn(move || match make_engine() {
-                Ok(engine) => {
-                    let _ = init_tx.send(Ok(()));
-                    device_loop(engine, jobs_rx);
-                }
-                Err(e) => {
-                    let _ = init_tx.send(Err(format!("{e:#}")));
-                }
-            })?;
-        match init_rx.recv() {
-            Ok(Ok(())) => {}
-            Ok(Err(msg)) => anyhow::bail!("engine init failed: {msg}"),
-            Err(_) => anyhow::bail!("engine init thread died"),
-        }
-        let accept_tx = jobs_tx.clone();
+        let pool = ShardPool::start(make_engine, queue_depth)?;
+        let accept_pool = pool.sender();
         std::thread::Builder::new()
             .name("asrpu-accept".into())
             .spawn(move || {
                 for stream in listener.incoming().flatten() {
-                    let tx = accept_tx.clone();
+                    let tx = accept_pool.clone();
                     std::thread::spawn(move || {
                         let _ = handle_conn(stream, tx);
                     });
                 }
             })?;
-        Ok(Server { addr: local, jobs: jobs_tx })
+        Ok(Server { addr: local, pool })
     }
 
+    /// Number of device workers serving this endpoint.
+    pub fn workers(&self) -> usize {
+        self.pool.workers()
+    }
+
+    /// Stop the router and every device worker (best-effort).
     pub fn shutdown(&self) {
-        let _ = self.jobs.try_send(Job::Shutdown);
+        self.pool.shutdown();
     }
 }
 
@@ -492,7 +308,7 @@ impl Server {
 mod tests {
     use super::*;
     use crate::am::TdsModel;
-    use crate::config::{BatchConfig, ModelConfig};
+    use crate::config::{BatchConfig, ModelConfig, ShardConfig};
 
     fn start_test_server() -> Server {
         Server::start(
@@ -584,9 +400,68 @@ mod tests {
             c.get("max_batch").unwrap().as_f64(),
             Some(BatchConfig::default().max_batch as f64)
         );
+        // Sharding policy is introspectable (default: one worker).
+        assert_eq!(c.get("workers").unwrap().as_f64(), Some(1.0));
+        assert_eq!(
+            c.get("rebalance_threshold").unwrap().as_f64(),
+            Some(ShardConfig::default().rebalance_threshold as f64)
+        );
         // Stage count: features + AM layers + hyp expansion.
         let stages = c.get("stages").unwrap().as_f64().unwrap() as usize;
         assert_eq!(stages, ModelConfig::tiny_tds().layers().len() + 2);
+        server.shutdown();
+    }
+
+    #[test]
+    fn sharded_server_serves_and_reports_worker_count() {
+        // Two workers behind the same TCP endpoint: sessions open on
+        // different shards, and both stats and config expose the pool.
+        let server = Server::start(
+            "127.0.0.1:0",
+            || {
+                Ok(Engine::builder()
+                    .native(TdsModel::random(ModelConfig::tiny_tds(), 5))
+                    .shards(ShardConfig { workers: 2, rebalance_threshold: 2 })
+                    .build()?)
+            },
+            64,
+        )
+        .unwrap();
+        assert_eq!(server.workers(), 2);
+        let samples: Vec<String> = (0..1600)
+            .map(|i| format!("{:.4}", (i as f32 * 0.01).sin() * 0.1))
+            .collect();
+        let joined = samples.join(",");
+        let resps = roundtrip(
+            &server.addr,
+            &[
+                r#"{"op":"open"}"#.to_string(),
+                r#"{"op":"open"}"#.to_string(),
+                format!(r#"{{"op":"feed","session":1,"samples":[{joined}]}}"#),
+                format!(r#"{{"op":"feed","session":2,"samples":[{joined}]}}"#),
+                r#"{"op":"finish","session":1}"#.to_string(),
+                r#"{"op":"finish","session":2}"#.to_string(),
+                r#"{"op":"config"}"#.to_string(),
+                r#"{"op":"stats"}"#.to_string(),
+            ],
+        );
+        assert_eq!(resps[2].get("steps").unwrap().as_f64(), Some(1.0));
+        assert!(resps[4].get("text").is_some(), "{:?}", resps[4]);
+        assert!(resps[5].get("text").is_some(), "{:?}", resps[5]);
+        assert_eq!(resps[6].get("workers").unwrap().as_f64(), Some(2.0));
+        assert_eq!(resps[7].get("workers").unwrap().as_f64(), Some(2.0));
+        let shards = resps[7].get("shards").unwrap().as_arr().unwrap();
+        assert_eq!(shards.len(), 2);
+        // Deterministic least-loaded assignment: one session per shard.
+        let finished: f64 = shards
+            .iter()
+            .map(|s| {
+                let sum = s.get("summary").unwrap().as_str().unwrap();
+                assert!(sum.contains("sessions 1/1"), "{sum}");
+                1.0
+            })
+            .sum();
+        assert_eq!(finished, 2.0);
         server.shutdown();
     }
 

@@ -1,0 +1,1068 @@
+//! Sharded multi-worker serving: a deterministic session router over a
+//! pool of device workers — the paper's pool-of-general-purpose-cores
+//! thesis (§3) lifted to the serving layer. One coordinator no longer
+//! funnels every session through a single device thread; instead
+//! [`ShardPool`] spawns `ShardConfig::workers` shards, each owning its
+//! own [`Batcher`], scratch arenas and acoustic-backend handle over the
+//! *shared* model ([`Engine::clone_worker`] — weights behind an `Arc`),
+//! and a router thread assigns sessions to shards.
+//!
+//! ## Determinism
+//!
+//! Transcripts are independent of the shard count: per-session decode
+//! state never crosses lanes, `Engine::step_batch` is bit-identical to
+//! scalar decoding for every lane (`tests/batch_parity.rs`), and every
+//! worker serves the same weights — so any partition of a session set
+//! across N identical workers yields exactly the 1-worker transcripts.
+//! `tests/shard_parity.rs` enforces this end to end for N ∈ {2, 4} on
+//! both native backends. *Initial* session→shard assignment is also
+//! deterministic: the router picks the shard with the fewest open
+//! sessions (lowest index on ties) using only router-side state.
+//! Final placement under load is not — whether a rebalance migrates a
+//! fed-but-unstarted session depends on wall-clock batch-flush timing
+//! (a staged feed pins it) — but placement never affects transcripts,
+//! which is the invariant that matters.
+//!
+//! ## Rebalancing
+//!
+//! Only *queued* sessions migrate — sessions that have not yet run a
+//! decoding step, whose acoustic/decoder state is therefore still
+//! pristine ([`Session::into_buffered`]). When the open-session imbalance
+//! between the hottest and coldest shard reaches
+//! `ShardConfig::rebalance_threshold`, the router evicts up to half the
+//! difference from the hot shard and re-opens those sessions (buffered
+//! audio intact) on the cold one. Started sessions are pinned to their
+//! shard: their backend lane state is shard-resident and moving it
+//! would break both `Send`-safety (PJRT) and the allocation story.
+//!
+//! ## Flow control
+//!
+//! Client-facing jobs are forwarded with a non-blocking `try_send`: a
+//! shard whose queue is saturated bounces *its own* requests with
+//! `backpressure` while the router keeps routing for every other shard
+//! (head-of-line isolation). Router-internal transactions (snapshot
+//! probes, evict/adopt migration legs, shutdown) use blocking sends —
+//! they are serialized router work by design, and stats snapshots are
+//! broadcast-then-collect so a stats poll stalls for the busiest single
+//! worker, not the sum over shards.
+//!
+//! The TCP front-end ([`super::Server`]) is a thin protocol layer over
+//! this module; tests and examples drive [`ShardPool`] directly — no
+//! sockets, no JSON text round-trips, which is what lets the parity
+//! suite demand *bit*-identical scores.
+#![deny(missing_docs)]
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+use crate::config::ShardConfig;
+use crate::util::json::Json;
+
+use super::engine::{Batcher, Engine, Session, WorkerSeed};
+use super::metrics::{ServeMetrics, ShardMetrics, ShardSnapshot};
+use super::server::{config_json, err_json, obj, ErrCode};
+
+/// A client-facing request the router dispatches. Both front-ends speak
+/// this: TCP connection threads (`super::Server`) and the in-process
+/// [`ShardPool`] wrappers.
+pub(crate) enum RouterMsg {
+    /// Open a session on the least-loaded shard.
+    Open { reply: mpsc::Sender<Json> },
+    /// Feed audio to an open session (routed to its shard).
+    Feed { session: u64, samples: Vec<f32>, enqueued: Instant, reply: mpsc::Sender<Json> },
+    /// Finish a session and retire its assignment.
+    Finish { session: u64, reply: mpsc::Sender<Json> },
+    /// Aggregate per-shard metrics.
+    Stats { reply: mpsc::Sender<Json> },
+    /// Device/config introspection (served by shard 0).
+    Config { reply: mpsc::Sender<Json> },
+    /// Stop the router and every worker.
+    Shutdown,
+}
+
+/// A unit of work queued to one shard's device worker.
+enum Job {
+    /// Open a session under a router-assigned globally unique id.
+    Open { id: u64, reply: mpsc::Sender<Json> },
+    /// Stage audio + run the lane-batched device loop.
+    Feed { session: u64, samples: Vec<f32>, enqueued: Instant, reply: mpsc::Sender<Json> },
+    /// Flush and extract the transcript.
+    Finish { session: u64, reply: mpsc::Sender<Json> },
+    /// Introspect the engine this worker serves.
+    Config { reply: mpsc::Sender<Json> },
+    /// Report live status (read-only; never flushes).
+    Snapshot { reply: mpsc::Sender<ShardSnapshot> },
+    /// Hand back up to `max` not-yet-started sessions for migration.
+    Evict { max: usize, reply: mpsc::Sender<Vec<(u64, Vec<f32>)>> },
+    /// Re-open a migrated session (buffered audio intact) under its id.
+    /// Replies `Ok(())` on success; a worker that cannot open the
+    /// session hands the buffer back (`Err(buf)`) so the router can
+    /// re-adopt it elsewhere instead of destroying the session.
+    /// `returning` marks a bounce-back to the origin shard after a
+    /// failed migration — re-booked but not counted as adopted.
+    Adopt {
+        id: u64,
+        buf: Vec<f32>,
+        returning: bool,
+        reply: mpsc::Sender<Result<(), Vec<f32>>>,
+    },
+    /// Flush staged work and exit the worker loop.
+    Shutdown,
+}
+
+impl Job {
+    /// The client reply channel this job carries, if any — used to
+    /// bounce the request when its shard's queue is saturated.
+    fn reply(&self) -> Option<&mpsc::Sender<Json>> {
+        match self {
+            Job::Open { reply, .. }
+            | Job::Feed { reply, .. }
+            | Job::Finish { reply, .. }
+            | Job::Config { reply } => Some(reply),
+            Job::Snapshot { .. } | Job::Evict { .. } | Job::Adopt { .. } | Job::Shutdown => None,
+        }
+    }
+}
+
+/// A feed waiting for its batch to flush.
+struct StagedFeed {
+    session: u64,
+    reply: mpsc::Sender<Json>,
+    enqueued: Instant,
+}
+
+/// Run the pending batch: pull its sessions out of the map, fuse their
+/// ready steps through `Engine::step_batch`, record occupancy/latency,
+/// then answer every staged feed with its session's step count + partial.
+///
+/// A batch-level engine error **poisons** the fused step
+/// (`AmBackend::score_step_batch` contract: lane states may have
+/// advanced while no audio drained), so the batch's sessions are
+/// discarded — reinserting them would let a later feed/finish silently
+/// replay consumed audio against advanced state and return a corrupt
+/// transcript as success. Every staged feed gets the `internal` error,
+/// later ops on those ids get `unknown_session`, and the router is
+/// told through the `retire` back-channel to un-book them.
+///
+/// Known coarseness, acceptable at this layer: if one session was fed
+/// twice before the flush (two connections), both replies report the
+/// same since-staging step delta; and a batch-level engine error is
+/// reported to every staged feed in the batch, not just the failing
+/// lane's.
+fn flush_batch(
+    engine: &Engine,
+    sessions: &mut HashMap<u64, Session>,
+    batcher: &mut Batcher,
+    staged: &mut Vec<StagedFeed>,
+    metrics: &mut ServeMetrics,
+    retire: &mpsc::Sender<u64>,
+) {
+    let ids = batcher.take();
+    // Pull the batch's sessions out of the map so every lane can be
+    // borrowed mutably at once; they go back right after the fused step.
+    let mut lanes: Vec<(u64, Session, usize)> = Vec::with_capacity(ids.len());
+    for id in ids {
+        if let Some(s) = sessions.remove(&id) {
+            let steps_before = s.metrics.steps;
+            lanes.push((id, s, steps_before));
+        }
+    }
+    let occupancy = lanes.iter().filter(|(_, s, _)| engine.ready_steps(s) > 0).count();
+    let t0 = Instant::now();
+    let result = {
+        let mut refs: Vec<&mut Session> = lanes.iter_mut().map(|(_, s, _)| s).collect();
+        engine.step_batch(&mut refs)
+    };
+    if occupancy > 0 {
+        metrics.record_batch(occupancy, t0.elapsed());
+    }
+    let err = result.err().map(|e| format!("feed failed: {e:#}"));
+    for (id, s, steps_before) in lanes {
+        let steps = s.metrics.steps - steps_before;
+        metrics.steps_executed += steps as u64;
+        metrics.audio_seconds += steps as f64 * engine.model_cfg.step_seconds();
+        let partial = engine.partial(&s).map(|t| t.text).unwrap_or_default();
+        if err.is_none() {
+            sessions.insert(id, s);
+        } else {
+            // Poisoned: discard the session (see the function docs).
+            let _ = retire.send(id);
+        }
+        staged.retain(|f| {
+            if f.session != id {
+                return true;
+            }
+            let resp = match &err {
+                Some(msg) => err_json(ErrCode::Internal, msg),
+                None => obj(&[
+                    ("steps", Json::Num(steps as f64)),
+                    ("partial", Json::Str(partial.clone())),
+                ]),
+            };
+            metrics.feed_latency.record(f.enqueued.elapsed());
+            let _ = f.reply.send(resp);
+            false
+        });
+    }
+    // Staged feeds whose session vanished from the map (finished from
+    // another connection mid-batch): answer rather than hang the client.
+    for f in staged.drain(..) {
+        let _ = f
+            .reply
+            .send(err_json(ErrCode::UnknownSession, "session closed before its batch ran"));
+    }
+}
+
+/// One shard's device loop: owns its engine, sessions, batcher and
+/// metrics; drains jobs FIFO; never blocks sending (replies and the
+/// `retire` back-channel are unbounded), so the router can always make
+/// progress. The retire channel is deliberately *not* the router's
+/// main queue: workers holding a main-queue sender would keep the
+/// router alive after every client handle dropped (thread leak).
+fn worker_loop(
+    shard: usize,
+    engine: Engine,
+    jobs: mpsc::Receiver<Job>,
+    depth: Arc<AtomicUsize>,
+    retire: mpsc::Sender<u64>,
+) {
+    let mut sessions: HashMap<u64, Session> = HashMap::new();
+    let mut metrics = ServeMetrics::default();
+    let mut batcher = engine.batcher();
+    let mut staged: Vec<StagedFeed> = Vec::new();
+    loop {
+        // Enforce the wait budget even under sustained job traffic: a
+        // queued message makes recv_timeout return Ok without ever timing
+        // out, so an expired partial batch must flush here, not just on
+        // the Timeout arm.
+        if !staged.is_empty() && batcher.wait_budget().is_zero() {
+            flush_batch(&engine, &mut sessions, &mut batcher, &mut staged, &mut metrics, &retire);
+        }
+        // Block for the next job; with feeds staged, cap the wait at the
+        // batcher's remaining budget so a partial batch still flushes.
+        let job = if staged.is_empty() {
+            match jobs.recv() {
+                Ok(j) => j,
+                Err(_) => break,
+            }
+        } else {
+            match jobs.recv_timeout(batcher.wait_budget()) {
+                Ok(j) => j,
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    flush_batch(&engine, &mut sessions, &mut batcher, &mut staged, &mut metrics, &retire);
+                    continue;
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    flush_batch(&engine, &mut sessions, &mut batcher, &mut staged, &mut metrics, &retire);
+                    break;
+                }
+            }
+        };
+        depth.fetch_sub(1, Ordering::Relaxed);
+        match job {
+            Job::Shutdown => {
+                flush_batch(&engine, &mut sessions, &mut batcher, &mut staged, &mut metrics, &retire);
+                break;
+            }
+            Job::Open { id, reply } => {
+                let resp = match engine.open(false) {
+                    Ok(s) => {
+                        sessions.insert(id, s);
+                        metrics.sessions_opened += 1;
+                        obj(&[("session", Json::Num(id as f64))])
+                    }
+                    Err(e) => {
+                        // The router booked this id at dispatch; un-book
+                        // it so failed opens (fallible PJRT open_state)
+                        // don't leak assignments or skew load counts.
+                        let _ = retire.send(id);
+                        err_json(ErrCode::Internal, &format!("open failed: {e:#}"))
+                    }
+                };
+                let _ = reply.send(resp);
+            }
+            Job::Feed { session, samples, enqueued, reply } => {
+                match sessions.get_mut(&session) {
+                    None => {
+                        let _ = reply.send(err_json(ErrCode::UnknownSession, "unknown session"));
+                    }
+                    Some(s) => {
+                        engine.push_audio(s, &samples);
+                        staged.push(StagedFeed { session, reply, enqueued });
+                        // Flush when the batch is full — or when every open
+                        // session on this shard is already staged, since no
+                        // further lane can arrive before some staged client
+                        // unblocks.
+                        if batcher.push(session) || batcher.len() >= sessions.len() {
+                            flush_batch(
+                                &engine,
+                                &mut sessions,
+                                &mut batcher,
+                                &mut staged,
+                                &mut metrics,
+                                &retire,
+                            );
+                        }
+                    }
+                }
+            }
+            Job::Finish { session, reply } => {
+                // Any staged work (this session's included) runs first so
+                // the transcript covers all fed audio.
+                if !staged.is_empty() {
+                    flush_batch(&engine, &mut sessions, &mut batcher, &mut staged, &mut metrics, &retire);
+                }
+                batcher.remove(session);
+                let resp = match sessions.remove(&session) {
+                    None => err_json(ErrCode::UnknownSession, "unknown session"),
+                    Some(mut s) => match engine.finish(&mut s) {
+                        Ok(t) => {
+                            metrics.sessions_finished += 1;
+                            metrics.compute_seconds += s.metrics.compute_s;
+                            obj(&[
+                                ("text", Json::Str(t.text)),
+                                ("score", Json::Num(t.score as f64)),
+                                ("rtf", Json::Num(s.metrics.rtf())),
+                                ("steps", Json::Num(s.metrics.steps as f64)),
+                                ("batch_occupancy", Json::Num(s.metrics.avg_batch_occupancy())),
+                            ])
+                        }
+                        Err(e) => err_json(ErrCode::Internal, &format!("finish failed: {e:#}")),
+                    },
+                };
+                let _ = reply.send(resp);
+            }
+            Job::Config { reply } => {
+                let _ = reply.send(config_json(&engine));
+            }
+            Job::Snapshot { reply } => {
+                let _ = reply.send(ShardSnapshot {
+                    shard,
+                    open_sessions: sessions.len(),
+                    queue_depth: depth.load(Ordering::Relaxed),
+                    serve: metrics.clone(),
+                });
+            }
+            Job::Evict { max, reply } => {
+                // Only sessions that have not started decoding and have
+                // no feed in flight (not staged) may leave this shard.
+                let mut ids: Vec<u64> = sessions
+                    .iter()
+                    .filter(|(id, s)| s.metrics.steps == 0 && !batcher.contains(**id))
+                    .map(|(id, _)| *id)
+                    .collect();
+                ids.sort_unstable();
+                ids.truncate(max);
+                let mut moved = Vec::with_capacity(ids.len());
+                for id in ids {
+                    if let Some(s) = sessions.remove(&id) {
+                        match s.into_buffered() {
+                            Ok(buf) => moved.push((id, buf)),
+                            // Defensive: a pinned session goes back.
+                            Err(s) => {
+                                sessions.insert(id, s);
+                            }
+                        }
+                    }
+                }
+                // The evicted sessions are no longer this shard's opens;
+                // the adopting shard re-counts them, so per-shard
+                // opened/finished stay balanced and the aggregate nets
+                // out (−1 here, +1 there).
+                metrics.sessions_opened -= moved.len() as u64;
+                let _ = reply.send(moved);
+            }
+            Job::Adopt { id, buf, returning, reply } => {
+                let resp = match engine.open(false) {
+                    Ok(mut s) => {
+                        engine.push_audio(&mut s, &buf);
+                        sessions.insert(id, s);
+                        // A bounce-back to the origin shard is not a
+                        // migration — don't report phantom adoptions.
+                        if !returning {
+                            metrics.sessions_adopted += 1;
+                        }
+                        // Adopted sessions count as this shard's opens
+                        // (the evicting shard un-counted them), so this
+                        // shard's eventual finish balances locally.
+                        metrics.sessions_opened += 1;
+                        Ok(())
+                    }
+                    // Hand the buffer back for re-adoption elsewhere.
+                    Err(_) => Err(buf),
+                };
+                let _ = reply.send(resp);
+            }
+        }
+    }
+}
+
+/// One worker's router-side handle.
+struct ShardHandle {
+    tx: mpsc::SyncSender<Job>,
+    depth: Arc<AtomicUsize>,
+}
+
+/// Router state: session→shard assignments plus per-shard load and
+/// liveness, all router-thread-local so *initial* assignment (`pick`)
+/// is a pure function of the request sequence; migration eligibility
+/// additionally depends on worker-side flush timing, so placement
+/// after rebalancing is best-effort, never transcript-affecting.
+/// (Liveness only changes when a worker dies — an abnormal event that
+/// is then surfaced, not hidden.)
+struct Router {
+    shards: Vec<ShardHandle>,
+    /// A worker whose job channel disconnected (thread died). Dead
+    /// shards are excluded from `pick`/`rebalance` so one crashed
+    /// worker does not black-hole new sessions.
+    dead: Vec<bool>,
+    /// Per-shard count of client jobs bounced with `backpressure`
+    /// (router-side; folded into stats snapshots so shed load shows).
+    rejected: Vec<u64>,
+    assign: HashMap<u64, usize>,
+    open_count: Vec<usize>,
+    next_id: u64,
+    rebalance_threshold: usize,
+}
+
+impl Router {
+    /// Forward a router-internal job (snapshot/evict/adopt/shutdown),
+    /// accounting its queue-depth slot. Blocking is acceptable here:
+    /// these jobs are part of a serialized router transaction and the
+    /// worker always drains. A dead worker drops the job (and with it
+    /// any reply sender), which a waiting peer observes as a dropped
+    /// request.
+    fn send(&mut self, shard: usize, job: Job) {
+        let h = &self.shards[shard];
+        h.depth.fetch_add(1, Ordering::Relaxed);
+        if h.tx.send(job).is_err() {
+            h.depth.fetch_sub(1, Ordering::Relaxed);
+            self.dead[shard] = true;
+        }
+    }
+
+    /// Forward a client-facing job without ever blocking the router on
+    /// one saturated shard (head-of-line isolation): a full worker
+    /// queue bounces the request with `backpressure` — the hot shard's
+    /// clients back off while every other shard keeps routing. Returns
+    /// whether the job was enqueued.
+    fn try_send_client(&mut self, shard: usize, job: Job) -> bool {
+        let h = &self.shards[shard];
+        h.depth.fetch_add(1, Ordering::Relaxed);
+        let (bounced, code, msg) = match h.tx.try_send(job) {
+            Ok(()) => return true,
+            Err(mpsc::TrySendError::Full(j)) => {
+                self.rejected[shard] += 1;
+                (j, ErrCode::Backpressure, "shard queue full")
+            }
+            Err(mpsc::TrySendError::Disconnected(j)) => {
+                self.dead[shard] = true;
+                (j, ErrCode::Internal, "shard worker unavailable")
+            }
+        };
+        self.shards[shard].depth.fetch_sub(1, Ordering::Relaxed);
+        if let Some(reply) = bounced.reply() {
+            let _ = reply.send(err_json(code, msg));
+        }
+        false
+    }
+
+    /// Least-loaded *live* shard by open sessions, lowest index on ties
+    /// — deterministic given the open/finish sequence. Falls back to
+    /// shard 0 only when every worker is dead (the open then bounces
+    /// with `internal` rather than silently hanging).
+    fn pick(&self) -> usize {
+        (0..self.shards.len())
+            .filter(|&i| !self.dead[i])
+            .min_by_key(|&i| (self.open_count[i], i))
+            .unwrap_or(0)
+    }
+
+    /// Migrate queued (not-yet-started) sessions off the hottest shard
+    /// when the open-session imbalance reaches the threshold. One
+    /// hot→cold round per trigger bounds the router stall.
+    fn rebalance(&mut self) {
+        let thr = self.rebalance_threshold;
+        if thr == 0 || self.shards.len() < 2 {
+            return;
+        }
+        // Dead shards neither donate (their queue is gone) nor receive.
+        let Some(hot) = (0..self.shards.len())
+            .filter(|&i| !self.dead[i])
+            .max_by_key(|&i| self.open_count[i])
+        else {
+            return;
+        };
+        let cold = self.pick();
+        if self.dead[cold] || hot == cold {
+            return;
+        }
+        let diff = self.open_count[hot] - self.open_count[cold];
+        if diff < thr {
+            return;
+        }
+        let want = diff / 2;
+        if want == 0 {
+            return;
+        }
+        let (tx, rx) = mpsc::channel();
+        self.send(hot, Job::Evict { max: want, reply: tx });
+        let Ok(moved) = rx.recv() else { return };
+        for (id, buf) in moved {
+            match self.adopt_on(cold, id, buf, false) {
+                Ok(()) => {
+                    self.assign.insert(id, cold);
+                    self.open_count[hot] -= 1;
+                    self.open_count[cold] += 1;
+                }
+                // Cold shard refused but returned the buffer: put the
+                // session back where it came from (assignment and
+                // open_count for `hot` are still in place).
+                Err(Some(buf)) => {
+                    if self.adopt_on(hot, id, buf, true).is_err() {
+                        self.assign.remove(&id);
+                        self.open_count[hot] -= 1;
+                    }
+                }
+                // The worker died holding the buffer: the session is
+                // unrecoverable; later ops see unknown_session.
+                Err(None) => {
+                    self.assign.remove(&id);
+                    self.open_count[hot] -= 1;
+                }
+            }
+        }
+    }
+
+    /// Ask `shard` to adopt a migrated session. `Ok(())` on success,
+    /// `Err(Some(buf))` when the worker refused and handed the buffer
+    /// back, `Err(None)` when the worker died with it.
+    fn adopt_on(
+        &mut self,
+        shard: usize,
+        id: u64,
+        buf: Vec<f32>,
+        returning: bool,
+    ) -> Result<(), Option<Vec<f32>>> {
+        let (tx, rx) = mpsc::channel();
+        self.send(shard, Job::Adopt { id, buf, returning, reply: tx });
+        match rx.recv() {
+            Ok(Ok(())) => Ok(()),
+            Ok(Err(buf)) => Err(Some(buf)),
+            Err(_) => Err(None),
+        }
+    }
+
+    /// Probe every worker for its live status. Broadcast first, then
+    /// collect, so the router stalls for the busiest single worker's
+    /// drain (max across shards), not the sum over all of them; workers
+    /// answer snapshots without flushing anything.
+    fn snapshot(&mut self) -> ShardMetrics {
+        let mut pending = Vec::with_capacity(self.shards.len());
+        for i in 0..self.shards.len() {
+            let (tx, rx) = mpsc::channel();
+            self.send(i, Job::Snapshot { reply: tx });
+            pending.push(rx);
+        }
+        let mut shards = Vec::with_capacity(pending.len());
+        for rx in pending {
+            if let Ok(snap) = rx.recv() {
+                shards.push(snap);
+            }
+        }
+        // Workers can't see router-side bounces; fold them in here so
+        // `rejected` in summaries reflects shed load.
+        for snap in shards.iter_mut() {
+            snap.serve.rejected_backpressure += self.rejected[snap.shard];
+        }
+        ShardMetrics { shards }
+    }
+}
+
+/// Render the aggregated stats payload (the `stats` op's response):
+/// a merged summary plus one entry per shard. `workers` is the
+/// configured pool size; a `responding` count below it surfaces dead
+/// workers instead of silently shrinking the report.
+fn stats_json(m: &ShardMetrics, workers: usize) -> Json {
+    let shards: Vec<Json> = m
+        .shards
+        .iter()
+        .map(|s| {
+            obj(&[
+                ("shard", Json::Num(s.shard as f64)),
+                ("sessions", Json::Num(s.open_sessions as f64)),
+                ("queue", Json::Num(s.queue_depth as f64)),
+                ("adopted", Json::Num(s.serve.sessions_adopted as f64)),
+                ("summary", Json::Str(s.serve.summary())),
+            ])
+        })
+        .collect();
+    obj(&[
+        // The human-readable line: aggregate counters plus a per-shard
+        // sessions/queue/rtf appendix (ShardMetrics::summary).
+        ("summary", Json::Str(m.summary())),
+        ("workers", Json::Num(workers as f64)),
+        ("responding", Json::Num(m.shards.len() as f64)),
+        ("imbalance", Json::Num(m.imbalance() as f64)),
+        ("shards", Json::Arr(shards)),
+    ])
+}
+
+/// The router loop: serializes assignment decisions, forwards work, and
+/// answers session-less requests itself. `retire` is the workers'
+/// un-book back-channel (failed opens), drained lazily before each
+/// decision so load counts stay honest.
+fn router_loop(jobs: mpsc::Receiver<RouterMsg>, retire: mpsc::Receiver<u64>, mut r: Router) {
+    loop {
+        let msg = match jobs.recv() {
+            Ok(m) => m,
+            Err(_) => break,
+        };
+        while let Ok(session) = retire.try_recv() {
+            if let Some(shard) = r.assign.remove(&session) {
+                r.open_count[shard] = r.open_count[shard].saturating_sub(1);
+            }
+        }
+        match msg {
+            RouterMsg::Open { reply } => {
+                let id = r.next_id;
+                r.next_id += 1;
+                let shard = r.pick();
+                // Commit the assignment only once the job is enqueued —
+                // a bounced open leaves no phantom session behind. A
+                // worker-side engine.open() failure after enqueue
+                // (fallible PJRT open_state) comes back as a Retire
+                // notification and is un-booked below.
+                if r.try_send_client(shard, Job::Open { id, reply }) {
+                    r.assign.insert(id, shard);
+                    r.open_count[shard] += 1;
+                    r.rebalance();
+                }
+            }
+            RouterMsg::Feed { session, samples, enqueued, reply } => {
+                match r.assign.get(&session) {
+                    None => {
+                        let _ = reply.send(err_json(ErrCode::UnknownSession, "unknown session"));
+                    }
+                    Some(&shard) => {
+                        // A bounce answers the client itself; nothing
+                        // reached the shard, so ordering is preserved.
+                        r.try_send_client(shard, Job::Feed { session, samples, enqueued, reply });
+                    }
+                }
+            }
+            RouterMsg::Finish { session, reply } => match r.assign.get(&session).copied() {
+                None => {
+                    let _ = reply.send(err_json(ErrCode::UnknownSession, "unknown session"));
+                }
+                Some(shard) => {
+                    // Retire the session only if the finish was actually
+                    // enqueued; on a bounce the client retries against a
+                    // still-open session.
+                    if r.try_send_client(shard, Job::Finish { session, reply }) {
+                        r.assign.remove(&session);
+                        r.open_count[shard] -= 1;
+                        r.rebalance();
+                    }
+                }
+            },
+            RouterMsg::Stats { reply } => {
+                let workers = r.shards.len();
+                let snap = r.snapshot();
+                let _ = reply.send(stats_json(&snap, workers));
+            }
+            RouterMsg::Config { reply } => {
+                r.try_send_client(0, Job::Config { reply });
+            }
+            RouterMsg::Shutdown => break,
+        }
+    }
+    // Stop every worker (explicit shutdown, or every client handle
+    // gone); workers flush their staged batches before exiting. Routed
+    // through `send` so queue-depth accounting stays balanced.
+    for i in 0..r.shards.len() {
+        r.send(i, Job::Shutdown);
+    }
+}
+
+/// What shard 0 hands back to [`ShardPool::start`] once the engine is
+/// built: the policy, the worker seeds, and its own job channel.
+struct Init {
+    shard_cfg: ShardConfig,
+    seeds: Vec<WorkerSeed>,
+    tx0: mpsc::SyncSender<Job>,
+    depth0: Arc<AtomicUsize>,
+}
+
+/// A finished session's transcript and serving metrics, as reported by
+/// [`ShardPool::finish`].
+#[derive(Debug, Clone)]
+pub struct Finished {
+    /// The decoded transcript.
+    pub text: String,
+    /// Total hypothesis score (acoustic + LM + penalties).
+    pub score: f64,
+    /// Real-time factor over the session's compute.
+    pub rtf: f64,
+    /// Decoding steps executed.
+    pub steps: usize,
+    /// Mean lanes per fused step this session shared.
+    pub batch_occupancy: f64,
+}
+
+/// In-process handle to a sharded serving stack: a router thread over
+/// `ShardConfig::workers` device workers, each owning its shard of
+/// sessions over the shared model. The TCP [`super::Server`] is a thin
+/// protocol front-end over this; tests and examples drive it directly
+/// (no sockets, no JSON float round-trips — the cross-shard parity
+/// suite needs bit-exact audio in and scores out).
+///
+/// Cloning the pool clones the client handle, not the workers; any
+/// clone may issue requests concurrently.
+#[derive(Clone)]
+pub struct ShardPool {
+    tx: mpsc::SyncSender<RouterMsg>,
+    workers: usize,
+}
+
+impl ShardPool {
+    /// Build the engine on shard 0's thread (PJRT handles are not
+    /// `Send`), seed `engine.shard_cfg.workers - 1` further workers from
+    /// it, and start the router. Blocks until the engine is built so
+    /// construction errors surface here, exactly like `Server::start`.
+    pub fn start(
+        make_engine: impl FnOnce() -> Result<Engine> + Send + 'static,
+        queue_depth: usize,
+    ) -> Result<ShardPool> {
+        let (router_tx, router_rx) = mpsc::sync_channel::<RouterMsg>(queue_depth);
+        let (retire_tx, retire_rx) = mpsc::channel::<u64>();
+        let (init_tx, init_rx) = mpsc::channel::<Result<Init, String>>();
+        let shard0_retire = retire_tx.clone();
+        std::thread::Builder::new()
+            .name("asrpu-shard-0".into())
+            .spawn(move || {
+                let engine = match make_engine() {
+                    Ok(e) => e,
+                    Err(e) => {
+                        let _ = init_tx.send(Err(format!("{e:#}")));
+                        return;
+                    }
+                };
+                let shard_cfg = engine.shard_cfg.clone();
+                let mut seeds = Vec::new();
+                for _ in 1..shard_cfg.workers {
+                    match engine.clone_worker() {
+                        Some(seed) => seeds.push(seed),
+                        // The builder rejects this combination; defend
+                        // against hand-assembled engines anyway.
+                        None => {
+                            let _ = init_tx.send(Err(format!(
+                                "backend '{}' cannot serve {} workers",
+                                engine.backend().name(),
+                                shard_cfg.workers
+                            )));
+                            return;
+                        }
+                    }
+                }
+                let (tx0, rx0) = mpsc::sync_channel::<Job>(queue_depth);
+                let depth0 = Arc::new(AtomicUsize::new(0));
+                let _ = init_tx.send(Ok(Init {
+                    shard_cfg,
+                    seeds,
+                    tx0,
+                    depth0: Arc::clone(&depth0),
+                }));
+                worker_loop(0, engine, rx0, depth0, shard0_retire);
+            })
+            .context("spawning shard 0")?;
+        let init = match init_rx.recv() {
+            Ok(Ok(init)) => init,
+            Ok(Err(msg)) => anyhow::bail!("engine init failed: {msg}"),
+            Err(_) => anyhow::bail!("engine init thread died"),
+        };
+        let mut handles = vec![ShardHandle { tx: init.tx0, depth: init.depth0 }];
+        for (i, seed) in init.seeds.into_iter().enumerate() {
+            let shard = i + 1;
+            let (tx, rx) = mpsc::sync_channel::<Job>(queue_depth);
+            let depth = Arc::new(AtomicUsize::new(0));
+            let worker_depth = Arc::clone(&depth);
+            let worker_retire = retire_tx.clone();
+            std::thread::Builder::new()
+                .name(format!("asrpu-shard-{shard}"))
+                .spawn(move || {
+                    worker_loop(shard, seed.into_engine(), rx, worker_depth, worker_retire)
+                })
+                .with_context(|| format!("spawning shard {shard}"))?;
+            handles.push(ShardHandle { tx, depth });
+        }
+        let workers = handles.len();
+        let router = Router {
+            shards: handles,
+            dead: vec![false; workers],
+            rejected: vec![0; workers],
+            assign: HashMap::new(),
+            open_count: vec![0; workers],
+            next_id: 1,
+            rebalance_threshold: init.shard_cfg.rebalance_threshold,
+        };
+        // The start-scope retire_tx drops here with the function; only
+        // worker clones remain, so the retire channel dies with the
+        // workers, never the other way around.
+        drop(retire_tx);
+        std::thread::Builder::new()
+            .name("asrpu-router".into())
+            .spawn(move || router_loop(router_rx, retire_rx, router))
+            .context("spawning router")?;
+        Ok(ShardPool { tx: router_tx, workers })
+    }
+
+    /// Number of device workers behind this pool.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// A request sender for front-ends that manage their own replies
+    /// (the TCP connection threads).
+    pub(crate) fn sender(&self) -> mpsc::SyncSender<RouterMsg> {
+        self.tx.clone()
+    }
+
+    fn call(&self, make: impl FnOnce(mpsc::Sender<Json>) -> RouterMsg) -> Result<Json> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(make(tx))
+            .map_err(|_| anyhow::anyhow!("pool is shut down"))?;
+        let resp = rx.recv().context("router dropped request")?;
+        Self::ok_or_err(resp)
+    }
+
+    /// Turn a protocol error payload into an `Err` carrying its code.
+    fn ok_or_err(resp: Json) -> Result<Json> {
+        if let Some(e) = resp.get("error") {
+            let code = e.get("code").and_then(Json::as_str).unwrap_or("internal");
+            let msg = e.get("message").and_then(Json::as_str).unwrap_or("");
+            anyhow::bail!("{code}: {msg}");
+        }
+        Ok(resp)
+    }
+
+    /// Open a session; returns its globally unique id.
+    pub fn open(&self) -> Result<u64> {
+        let r = self.call(|reply| RouterMsg::Open { reply })?;
+        r.get("session")
+            .and_then(Json::as_f64)
+            .map(|v| v as u64)
+            .context("malformed open reply")
+    }
+
+    /// Feed audio, blocking until the session's batch flushes; returns
+    /// the steps run since staging and the current partial transcript.
+    pub fn feed(&self, session: u64, samples: &[f32]) -> Result<(usize, String)> {
+        let rx = self.feed_async(session, samples)?;
+        let resp = rx.recv().context("router dropped feed")?;
+        Self::parse_feed(resp)
+    }
+
+    /// Stage a feed without blocking: the receiver yields the reply when
+    /// the session's batch flushes (interpret it with
+    /// [`Self::parse_feed`]). Fan-out callers stage one feed per session
+    /// and then collect, letting the device fuse them into one batch.
+    pub fn feed_async(&self, session: u64, samples: &[f32]) -> Result<mpsc::Receiver<Json>> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(RouterMsg::Feed {
+                session,
+                samples: samples.to_vec(),
+                enqueued: Instant::now(),
+                reply: tx,
+            })
+            .map_err(|_| anyhow::anyhow!("pool is shut down"))?;
+        Ok(rx)
+    }
+
+    /// Interpret a feed reply from [`Self::feed_async`].
+    pub fn parse_feed(resp: Json) -> Result<(usize, String)> {
+        let r = Self::ok_or_err(resp)?;
+        let steps = r
+            .get("steps")
+            .and_then(Json::as_usize)
+            .context("malformed feed reply")?;
+        let partial = r
+            .get("partial")
+            .and_then(Json::as_str)
+            .unwrap_or_default()
+            .to_string();
+        Ok((steps, partial))
+    }
+
+    /// Finish a session: flush remaining audio and return the final
+    /// transcript + metrics.
+    pub fn finish(&self, session: u64) -> Result<Finished> {
+        let r = self.call(|reply| RouterMsg::Finish { session, reply })?;
+        Ok(Finished {
+            text: r
+                .get("text")
+                .and_then(Json::as_str)
+                .context("malformed finish reply")?
+                .to_string(),
+            score: r.get("score").and_then(Json::as_f64).unwrap_or(0.0),
+            rtf: r.get("rtf").and_then(Json::as_f64).unwrap_or(0.0),
+            steps: r.get("steps").and_then(Json::as_usize).unwrap_or(0),
+            batch_occupancy: r.get("batch_occupancy").and_then(Json::as_f64).unwrap_or(0.0),
+        })
+    }
+
+    /// Aggregated per-shard serving metrics (the `stats` op's payload).
+    pub fn stats(&self) -> Result<Json> {
+        self.call(|reply| RouterMsg::Stats { reply })
+    }
+
+    /// Device/config introspection (the `config` op's payload).
+    pub fn config(&self) -> Result<Json> {
+        self.call(|reply| RouterMsg::Config { reply })
+    }
+
+    /// Stop the router and every worker (idempotent). Uses a blocking
+    /// send so the request survives a momentarily full queue — the
+    /// router always drains, so the wait is bounded by one queue's
+    /// in-flight work; a router that already exited is a no-op.
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(RouterMsg::Shutdown);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::am::TdsModel;
+    use crate::config::{BatchConfig, ModelConfig};
+    use crate::synth::Synthesizer;
+    use crate::util::rng::Rng;
+
+    fn pool(workers: usize, threshold: usize) -> ShardPool {
+        ShardPool::start(
+            move || {
+                Ok(Engine::builder()
+                    .native(TdsModel::random(ModelConfig::tiny_tds(), 5))
+                    .batch(BatchConfig::default())
+                    .shards(crate::config::ShardConfig {
+                        workers,
+                        rebalance_threshold: threshold,
+                    })
+                    .build()?)
+            },
+            64,
+        )
+        .unwrap()
+    }
+
+    fn utterance(seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        Synthesizer::default().render(&[1, 4], &mut rng).samples
+    }
+
+    #[test]
+    fn single_worker_pool_round_trip() {
+        let p = pool(1, 2);
+        assert_eq!(p.workers(), 1);
+        let id = p.open().unwrap();
+        let audio = utterance(3);
+        let (steps, _partial) = p.feed(id, &audio).unwrap();
+        assert!(steps > 0);
+        let done = p.finish(id).unwrap();
+        assert!(!done.text.is_empty() || done.steps > 0);
+        let stats = p.stats().unwrap();
+        assert_eq!(stats.get("workers").unwrap().as_f64(), Some(1.0));
+        assert!(p.finish(id).is_err(), "finished session must be unknown");
+        p.shutdown();
+    }
+
+    #[test]
+    fn rebalance_migrates_queued_sessions_deterministically() {
+        // Deterministic assignment (least-open, lowest index on ties):
+        // sessions 1,3 land on shard 0 and 2,4 on shard 1. Finishing 1
+        // and 3 empties shard 0 → imbalance 2 hits the threshold and the
+        // router migrates the lowest queued id (2) to shard 0.
+        let p = pool(2, 2);
+        let ids: Vec<u64> = (0..4).map(|_| p.open().unwrap()).collect();
+        assert_eq!(ids, vec![1, 2, 3, 4]);
+        p.finish(1).unwrap();
+        p.finish(3).unwrap();
+        let stats = p.stats().unwrap();
+        let shards = stats.get("shards").unwrap().as_arr().unwrap();
+        let adopted: f64 = shards
+            .iter()
+            .map(|s| s.get("adopted").unwrap().as_f64().unwrap())
+            .sum();
+        assert_eq!(adopted, 1.0, "exactly one queued session migrates: {stats:?}");
+        assert_eq!(stats.get("imbalance").unwrap().as_f64(), Some(0.0));
+        // The migrated session still decodes exactly like a 1-worker
+        // engine fed the same audio.
+        let reference = Engine::builder()
+            .native(TdsModel::random(ModelConfig::tiny_tds(), 5))
+            .build()
+            .unwrap();
+        for id in [2u64, 4] {
+            let audio = utterance(10 + id);
+            let (t_ref, _) = reference.decode_utterance(&audio).unwrap();
+            p.feed(id, &audio).unwrap();
+            let done = p.finish(id).unwrap();
+            assert_eq!(done.text, t_ref.text, "session {id}");
+            assert_eq!(done.score, t_ref.score as f64, "session {id}");
+        }
+        p.shutdown();
+    }
+
+    #[test]
+    fn started_sessions_are_pinned() {
+        // A session that already ran steps must not migrate even under
+        // imbalance: evict candidates are steps == 0 only.
+        let p = pool(2, 2);
+        let a = p.open().unwrap(); // shard 0
+        let b = p.open().unwrap(); // shard 1
+        let c = p.open().unwrap(); // shard 0
+        // Run steps on every session so all are pinned.
+        for &id in &[a, b, c] {
+            p.feed(id, &utterance(20 + id)).unwrap();
+        }
+        // Finishing b empties shard 1 → imbalance 2, but both shard-0
+        // sessions are pinned: no migration may occur.
+        p.finish(b).unwrap();
+        let stats = p.stats().unwrap();
+        let shards = stats.get("shards").unwrap().as_arr().unwrap();
+        let adopted: f64 = shards
+            .iter()
+            .map(|s| s.get("adopted").unwrap().as_f64().unwrap())
+            .sum();
+        assert_eq!(adopted, 0.0, "pinned sessions must not move: {stats:?}");
+        for id in [a, c] {
+            p.finish(id).unwrap();
+        }
+        p.shutdown();
+    }
+
+    #[test]
+    fn multi_worker_pool_reports_per_shard_stats() {
+        let p = pool(4, 0);
+        let ids: Vec<u64> = (0..8).map(|_| p.open().unwrap()).collect();
+        for &id in &ids {
+            p.feed(id, &utterance(40 + id)).unwrap();
+        }
+        let stats = p.stats().unwrap();
+        assert_eq!(stats.get("workers").unwrap().as_f64(), Some(4.0));
+        let shards = stats.get("shards").unwrap().as_arr().unwrap();
+        assert_eq!(shards.len(), 4);
+        // Deterministic least-loaded assignment: 2 sessions per shard.
+        for s in shards {
+            assert_eq!(s.get("sessions").unwrap().as_f64(), Some(2.0), "{stats:?}");
+        }
+        for &id in &ids {
+            p.finish(id).unwrap();
+        }
+        p.shutdown();
+    }
+}

@@ -10,9 +10,12 @@
 //!   lexicon trie and n-gram LM ([`decoder`], [`lexicon`], [`lm`]),
 //!   orchestrated by the streaming [`coordinator`] whose lane-batched
 //!   execution core fuses concurrent sessions into shared device steps
-//!   (bit-identical to scalar decoding per lane). Engines are assembled
-//!   through `Engine::builder()` and served over the v2 JSON-lines
-//!   protocol (hello/config handshake, structured error codes);
+//!   (bit-identical to scalar decoding per lane), and whose serving
+//!   layer shards sessions across a pool of device workers over one
+//!   `Arc`-shared model (bit-identical to the 1-worker engine —
+//!   `tests/shard_parity.rs`). Engines are assembled through
+//!   `Engine::builder()` and served over the v2 JSON-lines protocol
+//!   (hello/config handshake, structured error codes);
 //! * a **cycle-approximate simulator of the ASRPU chip** ([`accel`]) with
 //!   analytical area/power models ([`power`]) that regenerates every table
 //!   and figure from the paper's evaluation ([`report`]). The simulator's

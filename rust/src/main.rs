@@ -6,8 +6,13 @@
 //!   serve     JSON-lines TCP streaming server, protocol v2
 //!             (hello/open/feed/finish/stats/config with structured
 //!             error codes; v1 lines still accepted — see
-//!             coordinator::server)
-//!   simulate  run the accelerator simulator for N decoding steps
+//!             coordinator::server); `--workers N` shards sessions
+//!             across N device workers over the shared model,
+//!             `--rebalance K` sets the queued-session migration
+//!             threshold
+//!   simulate  run the accelerator simulator for N decoding steps;
+//!             `--batch B --shards S` additionally reports the fused
+//!             step sharded across S worker devices
 //!   report    regenerate paper tables/figures: table1 table2 fig9 fig10
 //!             fig11 headline all
 //!   sweep     design-space sweep over PEs / MAC width / frequency
@@ -20,9 +25,11 @@
 
 use anyhow::{bail, Result};
 
-use asrpu::accel::{simulate_step, HypWorkload, SimMode};
+use asrpu::accel::{simulate_step, simulate_step_sharded, HypWorkload, SimMode};
 use asrpu::am::TdsModel;
-use asrpu::config::{artifacts_dir, AccelConfig, BatchConfig, DecoderConfig, ModelConfig};
+use asrpu::config::{
+    artifacts_dir, AccelConfig, BatchConfig, DecoderConfig, ModelConfig, ShardConfig,
+};
 use asrpu::coordinator::{Engine, EngineBuilder, Server};
 use asrpu::power::ChipBudget;
 use asrpu::report;
@@ -34,7 +41,7 @@ use asrpu::util::table::Table;
 
 const VALUE_KEYS: &[&str] = &[
     "n", "seed", "beam", "port", "pes", "mac", "freq-mhz", "backend", "mode", "steps",
-    "queue", "batch", "batch-wait",
+    "queue", "batch", "batch-wait", "workers", "rebalance", "shards",
 ];
 
 fn main() {
@@ -143,23 +150,31 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
         max_batch: args.usize_or("batch", batch_default.max_batch)?,
         max_wait_frames: args.usize_or("batch-wait", batch_default.max_wait_frames)?,
     };
+    let shard_default = ShardConfig::default();
+    let shards = ShardConfig {
+        workers: args.usize_or("workers", shard_default.workers)?,
+        rebalance_threshold: args
+            .usize_or("rebalance", shard_default.rebalance_threshold)?,
+    };
     // Fail fast on the CLI thread; the builder re-validates on the
     // device thread.
     batch.validate()?;
+    shards.validate()?;
     let server = Server::start(
         &format!("127.0.0.1:{port}"),
         move || {
             // Rebuild the engine on the device thread (PJRT not Send).
             let argv = vec!["serve".to_string(), "--backend".into(), backend.clone()];
             let args = cli::parse(&argv, VALUE_KEYS)?;
-            Ok(engine_builder(&args)?.batch(batch).build()?)
+            Ok(engine_builder(&args)?.batch(batch).shards(shards).build()?)
         },
         queue,
     )?;
     println!(
         "asrpu serving on {} (JSON lines, protocol v2; ops: \
-         hello/open/feed/finish/stats/config; lane-batched device loop)",
-        server.addr
+         hello/open/feed/finish/stats/config; {} lane-batched device worker(s))",
+        server.addr,
+        server.workers()
     );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
@@ -201,6 +216,25 @@ fn cmd_simulate(args: &cli::Args) -> Result<()> {
         steps as f64 * model.step_seconds() * 1e3,
         steps as f64 * ms
     );
+    // Multi-stream serving mapped onto worker devices: report the fused
+    // step sharded across S workers (the coordinator's ShardPool shape).
+    let batch = args.usize_or("batch", 1)?;
+    let shards = args.usize_or("shards", 1)?;
+    anyhow::ensure!(batch >= 1, "need at least one lane (--batch)");
+    anyhow::ensure!(shards >= 1, "need at least one shard (--shards)");
+    if batch > 1 || shards > 1 {
+        let s = simulate_step_sharded(&model, &accel, &HypWorkload::default(), mode, batch, shards);
+        println!(
+            "sharded: {} lanes over {} worker(s) (lanes {:?}): step {:.2} ms, \
+             aggregate rtf {:.2}x, weight DMA {:.1} MB/step",
+            s.total_lanes(),
+            s.per_shard.len(),
+            s.lanes,
+            s.seconds(&accel) * 1e3,
+            s.rtf_aggregate(&model, &accel),
+            s.total_dma_bytes() as f64 / 1e6
+        );
+    }
     Ok(())
 }
 
@@ -296,6 +330,18 @@ mod tests {
     #[test]
     fn simulate_runs() {
         run(&["simulate".to_string()]).unwrap();
+    }
+
+    #[test]
+    fn simulate_sharded_runs() {
+        run(&[
+            "simulate".to_string(),
+            "--batch".into(),
+            "8".into(),
+            "--shards".into(),
+            "2".into(),
+        ])
+        .unwrap();
     }
 
     #[test]

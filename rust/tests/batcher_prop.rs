@@ -1,0 +1,133 @@
+//! Property tests for the serving `Batcher` (`util::prop` style):
+//! staging is an insertion-ordered set (no duplicate ids), `take`
+//! empties and resets the deadline, `remove` deletes, and the wait
+//! budget only ever shrinks toward the deadline while lanes are
+//! pending.
+
+use std::collections::HashSet;
+
+use asrpu::config::{BatchConfig, ModelConfig};
+use asrpu::coordinator::Batcher;
+use asrpu::prop_assert;
+use asrpu::util::prop;
+
+#[test]
+fn batcher_matches_ordered_set_model() {
+    // Model-based property: drive a random push/remove/take/observe
+    // sequence against a reference insertion-ordered unique list.
+    let model_cfg = ModelConfig::tiny_tds();
+    prop::check("batcher-ordered-set", 200, |g| {
+        let max_batch = 1 + g.index(6);
+        let cfg = BatchConfig { max_batch, max_wait_frames: g.index(10) };
+        let max_wait = cfg.max_wait(&model_cfg);
+        let mut b = Batcher::new(cfg, &model_cfg);
+        let mut reference: Vec<u64> = Vec::new();
+        let ops = g.len(1).min(40);
+        for _ in 0..ops {
+            match g.index(4) {
+                0 => {
+                    // push: idempotent staging; reports fullness.
+                    let id = g.index(8) as u64;
+                    let full = b.push(id);
+                    if !reference.contains(&id) {
+                        reference.push(id);
+                    }
+                    prop_assert!(
+                        full == (reference.len() >= max_batch),
+                        "push fullness: got {full}, {} staged of {max_batch}",
+                        reference.len()
+                    );
+                    prop_assert!(b.contains(id), "pushed id {id} not staged");
+                }
+                1 => {
+                    // remove: deletes; an empty batcher resets its clock.
+                    let id = g.index(8) as u64;
+                    b.remove(id);
+                    reference.retain(|&p| p != id);
+                    prop_assert!(!b.contains(id), "removed id {id} still staged");
+                    if reference.is_empty() {
+                        prop_assert!(
+                            b.wait_budget() == max_wait,
+                            "empty batcher must reset its wait budget"
+                        );
+                    }
+                }
+                2 => {
+                    // take: drains everything in insertion order, once.
+                    let ids = b.take();
+                    prop_assert!(
+                        ids == reference,
+                        "take returned {ids:?}, model has {reference:?}"
+                    );
+                    let unique: HashSet<&u64> = ids.iter().collect();
+                    prop_assert!(unique.len() == ids.len(), "duplicate ids in {ids:?}");
+                    reference.clear();
+                    prop_assert!(b.is_empty(), "take must empty the batcher");
+                    prop_assert!(
+                        b.wait_budget() == max_wait,
+                        "take must reset the wait budget"
+                    );
+                }
+                _ => {
+                    // observers agree with the model.
+                    prop_assert!(
+                        b.len() == reference.len(),
+                        "len {} != model {}",
+                        b.len(),
+                        reference.len()
+                    );
+                    prop_assert!(
+                        b.is_empty() == reference.is_empty(),
+                        "is_empty mismatch"
+                    );
+                    prop_assert!(
+                        b.is_full() == (reference.len() >= max_batch),
+                        "is_full mismatch at {} of {max_batch}",
+                        reference.len()
+                    );
+                    prop_assert!(
+                        b.wait_budget() <= max_wait,
+                        "budget above the configured maximum"
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn wait_budget_shrinks_monotonically_toward_deadline() {
+    // Once a lane is staged the clock runs: successive reads never
+    // grow, later pushes never extend the deadline (it belongs to the
+    // *oldest* lane), and the budget hits zero at the deadline.
+    let model_cfg = ModelConfig::tiny_tds();
+    prop::check("batcher-budget-monotone", 8, |g| {
+        let cfg = BatchConfig { max_batch: 64, max_wait_frames: 1 + g.index(3) };
+        let max_wait = cfg.max_wait(&model_cfg);
+        let mut b = Batcher::new(cfg, &model_cfg);
+        prop_assert!(b.wait_budget() == max_wait, "idle batcher has the full budget");
+        b.push(1);
+        let mut prev = b.wait_budget();
+        prop_assert!(prev <= max_wait, "staged budget above maximum");
+        for i in 0..6 {
+            if g.bool() {
+                b.push(2 + i as u64); // lane-mates never extend the deadline
+            }
+            let now = b.wait_budget();
+            prop_assert!(now <= prev, "budget grew: {now:?} > {prev:?}");
+            prev = now;
+        }
+        // Sleep past the deadline: the budget must saturate at zero.
+        std::thread::sleep(max_wait);
+        prop_assert!(
+            b.wait_budget().is_zero(),
+            "budget not exhausted at the deadline: {:?}",
+            b.wait_budget()
+        );
+        // And draining restores the full budget for the next batch.
+        let _ = b.take();
+        prop_assert!(b.wait_budget() == max_wait, "take must re-arm the budget");
+        Ok(())
+    });
+}

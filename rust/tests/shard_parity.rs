@@ -1,0 +1,194 @@
+//! Cross-shard determinism: transcripts produced by an N-worker
+//! `ShardPool` must be **bit-identical** (text AND score) to the
+//! 1-worker engine on the same seeded session set, for both native
+//! backends — the headline invariant of the sharded serving layer.
+//!
+//! Why it must hold: per-session decode state never crosses lanes,
+//! `Engine::step_batch` is bit-identical to scalar decoding for every
+//! lane (`tests/batch_parity.rs`), and every worker shares the same
+//! weights (`Engine::clone_worker` hands out `Arc` clones) — so any
+//! partition of sessions across workers, any batching schedule inside
+//! each worker, and any queued-session migration the router performs
+//! are all transcript-invisible. This suite drives the real router +
+//! worker threads (no sockets: audio goes in as f32, scores come back
+//! un-serialized, so equality really is bit-equality).
+
+use asrpu::am::TdsModel;
+use asrpu::config::{BatchConfig, ModelConfig, Precision, ShardConfig};
+use asrpu::coordinator::{Engine, ShardPool};
+use asrpu::prop_assert;
+use asrpu::synth::Synthesizer;
+use asrpu::util::prop;
+use asrpu::util::rng::Rng;
+
+const MODEL_SEED: u64 = 11;
+
+fn reference_engine(precision: Precision) -> Engine {
+    Engine::builder()
+        .native(TdsModel::random(ModelConfig::tiny_tds(), MODEL_SEED))
+        .precision(precision)
+        .build()
+        .unwrap()
+}
+
+fn pool(precision: Precision, workers: usize) -> ShardPool {
+    ShardPool::start(
+        move || {
+            Ok(Engine::builder()
+                .native(TdsModel::random(ModelConfig::tiny_tds(), MODEL_SEED))
+                .precision(precision)
+                // Small batches + short waits so fused batches actually
+                // form and flush quickly under test traffic.
+                .batch(BatchConfig { max_batch: 4, max_wait_frames: 2 })
+                .shards(ShardConfig { workers, rebalance_threshold: 2 })
+                .build()?)
+        },
+        256,
+    )
+    .unwrap()
+}
+
+fn utterances(n: usize, seed: u64) -> Vec<Vec<f32>> {
+    let synth = Synthesizer::default();
+    (0..n as u64)
+        .map(|i| {
+            let mut rng = Rng::new(seed + i);
+            synth
+                .render(&[(i % 10) as u32, ((i + 3) % 10) as u32], &mut rng)
+                .samples
+        })
+        .collect()
+}
+
+fn reference_transcripts(engine: &Engine, utts: &[Vec<f32>]) -> Vec<(String, f64)> {
+    utts.iter()
+        .map(|u| {
+            let (t, _) = engine.decode_utterance(u).unwrap();
+            (t.text, t.score as f64)
+        })
+        .collect()
+}
+
+/// Decode the session set through a pool: one client thread per
+/// utterance, feeding in `chunk`-sample pieces so lanes join and leave
+/// each shard's ready set at different times. Results come back in
+/// utterance order (each thread knows its own index — session ids race
+/// across threads and carry no utterance meaning).
+fn decode_sharded(pool: &ShardPool, utts: &[Vec<f32>], chunk: usize) -> Vec<(String, f64)> {
+    let handles: Vec<_> = utts
+        .iter()
+        .cloned()
+        .enumerate()
+        .map(|(i, audio)| {
+            let client = pool.clone();
+            std::thread::spawn(move || {
+                let id = client.open().unwrap();
+                for c in audio.chunks(chunk.max(1)) {
+                    client.feed(id, c).unwrap();
+                }
+                let done = client.finish(id).unwrap();
+                (i, done.text, done.score)
+            })
+        })
+        .collect();
+    let mut out = vec![(String::new(), 0.0); utts.len()];
+    for h in handles {
+        let (i, text, score) = h.join().expect("client thread panicked");
+        out[i] = (text, score);
+    }
+    out
+}
+
+#[test]
+fn sharded_transcripts_match_single_worker_bit_exactly() {
+    // The acceptance criterion: N ∈ {2, 4} workers, f32 and int8.
+    for precision in [Precision::F32, Precision::Int8] {
+        let reference = reference_engine(precision);
+        let utts = utterances(8, 40);
+        let expected = reference_transcripts(&reference, &utts);
+        for workers in [2usize, 4] {
+            let p = pool(precision, workers);
+            let got = decode_sharded(&p, &utts, 1000);
+            p.shutdown();
+            for (i, (g, e)) in got.iter().zip(&expected).enumerate() {
+                assert_eq!(
+                    g.0, e.0,
+                    "text diverged: precision {precision:?} workers {workers} utt {i}"
+                );
+                assert_eq!(
+                    g.1, e.1,
+                    "score diverged: precision {precision:?} workers {workers} utt {i}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn shard_parity_property_random_chunking() {
+    // Property form: random session counts, worker counts, chunk sizes
+    // and utterance seeds — parity must hold for every combination.
+    let reference = reference_engine(Precision::F32);
+    prop::check("shard-parity", 4, |g| {
+        let n = 3 + g.index(4);
+        let workers = [2usize, 4][g.index(2)];
+        let chunk = 400 + g.index(4) * 700;
+        let seed = 100 + g.rng.below(1000);
+        let utts = utterances(n, seed);
+        let expected = reference_transcripts(&reference, &utts);
+        let p = pool(Precision::F32, workers);
+        let got = decode_sharded(&p, &utts, chunk);
+        p.shutdown();
+        for (i, (gt, e)) in got.iter().zip(&expected).enumerate() {
+            prop_assert!(
+                gt.0 == e.0 && gt.1 == e.1,
+                "utt {i} diverged (workers {workers}, chunk {chunk}, seed {seed}): \
+                 {:?} != {:?}",
+                gt,
+                e
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn parity_survives_rebalancing_migrations() {
+    // Force the router's migration path and assert it stays
+    // transcript-invisible. Assignment is deterministic (least-open,
+    // lowest index on ties): sessions 1,3,5 → shard 0 and 2,4,6 →
+    // shard 1. Finishing 1,3,5 empties shard 0, the imbalance (3) hits
+    // the threshold (2), and one queued session (the lowest id, 2)
+    // migrates — its buffered-audio handoff must not perturb decoding.
+    let reference = reference_engine(Precision::F32);
+    let p = pool(Precision::F32, 2);
+    let ids: Vec<u64> = (0..6).map(|_| p.open().unwrap()).collect();
+    assert_eq!(ids, vec![1, 2, 3, 4, 5, 6]);
+    // Stage some audio on session 2 *before* it migrates, so the
+    // migration actually carries a buffer.
+    let utts = utterances(3, 900);
+    let head = &utts[0][..800.min(utts[0].len())];
+    p.feed(2, head).unwrap();
+    for id in [1u64, 3, 5] {
+        p.finish(id).unwrap();
+    }
+    let stats = p.stats().unwrap();
+    let adopted: f64 = stats
+        .get("shards")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|s| s.get("adopted").unwrap().as_f64().unwrap())
+        .sum();
+    assert_eq!(adopted, 1.0, "one queued session must migrate: {stats:?}");
+    let expected = reference_transcripts(&reference, &utts);
+    for (u, (id, exp)) in utts.iter().zip([2u64, 4, 6].iter().zip(&expected)) {
+        let rest = if *id == 2 { &u[800.min(u.len())..] } else { &u[..] };
+        p.feed(*id, rest).unwrap();
+        let done = p.finish(*id).unwrap();
+        assert_eq!(done.text, exp.0, "session {id}");
+        assert_eq!(done.score, exp.1, "session {id}");
+    }
+    p.shutdown();
+}
