@@ -18,8 +18,17 @@ ARTIFACTS := artifacts
 
 artifacts: $(ARTIFACTS)/meta.json
 
+# No-op cleanly (with a notice) when JAX is absent: every consumer of
+# the artifacts — the xla-gated tests, examples and benches — already
+# skips gracefully when artifacts/meta.json does not exist, so a
+# JAX-less machine should not turn `make artifacts` into a hard error.
 $(ARTIFACTS)/meta.json: python/compile/*.py
-	cd python && $(PYTHON) -m compile.aot --out-dir ../$(ARTIFACTS)
+	@if $(PYTHON) -c "import jax" 2>/dev/null; then \
+		cd python && $(PYTHON) -m compile.aot --out-dir ../$(ARTIFACTS); \
+	else \
+		echo "make artifacts: JAX not importable by '$(PYTHON)'; skipping artifact export" ; \
+		echo "               (xla-gated tests/examples will skip gracefully without it)"; \
+	fi
 
 # The repo's tier-1 gate.
 test:

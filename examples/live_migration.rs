@@ -1,0 +1,151 @@
+//! Live mid-utterance migration under load: open N streaming sessions
+//! against a `ShardPool`, run every one of them *past* its first
+//! decoding steps, then finish a staggered subset so the router's
+//! rebalancer must move started sessions between shards
+//! (evict → snapshot → adopt → restore). Optionally crash a worker
+//! mid-stream (`--kill`) to demonstrate checkpoint recovery. Every
+//! surviving transcript is verified bit-identical to a plain 1-worker
+//! engine, and the per-shard adopted/migrated/checkpoint counters are
+//! printed.
+//!
+//!     cargo run --release --example live_migration \
+//!         [-- --n 12 --workers 3 --rebalance 2 --kill 1]
+
+use asrpu::am::TdsModel;
+use asrpu::config::{BatchConfig, ModelConfig, ShardConfig};
+use asrpu::coordinator::{Engine, ShardPool};
+use asrpu::synth::Synthesizer;
+use asrpu::util::cli;
+use asrpu::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = cli::parse(&argv, &["n", "workers", "rebalance", "seed", "kill"])?;
+    let n = args.usize_or("n", 12)?;
+    let workers = args.usize_or("workers", 3)?;
+    let rebalance = args.usize_or("rebalance", 2)?;
+    let seed = args.usize_or("seed", 42)? as u64;
+    // --kill S crashes shard S after the first feeding round; pass a
+    // value >= workers (the default) to skip the crash drill.
+    let kill = args.usize_or("kill", usize::MAX)?;
+    const MODEL_SEED: u64 = 1;
+
+    let synth = Synthesizer::default();
+    let mut rng = Rng::new(seed);
+    let utts: Vec<Vec<f32>> = (0..n)
+        .map(|_| synth.render_random(&mut rng).samples)
+        .collect();
+
+    // The 1-worker reference: same weights, scalar decode per utterance.
+    let reference = Engine::builder()
+        .native(TdsModel::random(ModelConfig::tiny_tds(), MODEL_SEED))
+        .build()?;
+    let expected: Vec<String> = utts
+        .iter()
+        .map(|u| Ok(reference.decode_utterance(u)?.0.text))
+        .collect::<anyhow::Result<_>>()?;
+
+    let pool = ShardPool::start(
+        move || {
+            Ok(Engine::builder()
+                .native(TdsModel::random(ModelConfig::tiny_tds(), MODEL_SEED))
+                .batch(BatchConfig { max_batch: 8, max_wait_frames: 0 })
+                .shards(ShardConfig {
+                    workers,
+                    rebalance_threshold: rebalance,
+                    checkpoint_interval: 1,
+                })
+                .build()?)
+        },
+        256,
+    )?;
+    println!(
+        "{n} sessions over {} worker shard(s), rebalance threshold {rebalance}",
+        pool.workers()
+    );
+
+    // Round 1: start every session (first half of its audio) so all of
+    // them are mid-utterance — exactly the population the old
+    // queued-only rebalancer could never move.
+    let ids: Vec<u64> = (0..n).map(|_| pool.open()).collect::<anyhow::Result<_>>()?;
+    for (i, &id) in ids.iter().enumerate() {
+        let half = utts[i].len() / 2;
+        let (steps, _) = pool.feed(id, &utts[i][..half])?;
+        anyhow::ensure!(steps > 0, "session {id} did not start decoding");
+    }
+
+    if kill < workers {
+        let recovered = pool.kill_worker(kill)?;
+        println!("crashed shard {kill}: {recovered} session(s) recovered from checkpoints");
+    }
+
+    // Round 2: finish every third session early. Each finish drains a
+    // shard and trips the imbalance threshold, so the router migrates
+    // *started* sessions toward the cold shards.
+    // (These sessions only ever saw half their audio, so their
+    // transcripts are intentionally not compared against the reference.)
+    let mut done = vec![false; n];
+    for (i, &id) in ids.iter().enumerate().filter(|(i, _)| i % 3 == 0) {
+        pool.finish(id)?;
+        done[i] = true;
+    }
+
+    // Round 3: stream the rest of the audio — much of it now lands on
+    // shards the sessions were migrated to — and verify transcripts.
+    let mut mismatches = 0;
+    for (i, &id) in ids.iter().enumerate() {
+        if done[i] {
+            continue;
+        }
+        let half = utts[i].len() / 2;
+        pool.feed(id, &utts[i][half..])?;
+        let t = pool.finish(id)?;
+        let ok = t.text == expected[i];
+        if !ok {
+            mismatches += 1;
+        }
+        println!(
+            "  utt {i:>3} (session {id:>3}): {} \"{}\"",
+            if ok { "ok" } else { "MISMATCH" },
+            t.text
+        );
+    }
+    anyhow::ensure!(
+        mismatches == 0,
+        "{mismatches} migrated transcript(s) diverged from the 1-worker engine"
+    );
+
+    let stats = pool.stats()?;
+    println!(
+        "recovered sessions: {}",
+        stats.get("recovered").and_then(|v| v.as_f64()).unwrap_or(0.0)
+    );
+    if let Some(shards) = stats.get("shards").and_then(|s| s.as_arr()) {
+        for s in shards {
+            println!(
+                "  shard {:>2}: sessions {:>2}  adopted {:>2}  migrated {:>2}  checkpoints {:>3}",
+                s.get("shard").and_then(|v| v.as_f64()).unwrap_or(-1.0),
+                s.get("sessions").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                s.get("adopted").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                s.get("migrated").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                s.get("checkpoints").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            );
+        }
+    }
+    let adopted: f64 = stats
+        .get("shards")
+        .and_then(|s| s.as_arr())
+        .map(|arr| {
+            arr.iter()
+                .filter_map(|s| s.get("adopted").and_then(|v| v.as_f64()))
+                .sum()
+        })
+        .unwrap_or(0.0);
+    pool.shutdown();
+    println!(
+        "{} live migration(s)/recoveries moved started sessions between shards; \
+         every finished transcript bit-identical to the 1-worker engine ✓",
+        adopted
+    );
+    Ok(())
+}

@@ -48,7 +48,11 @@ fn main() -> anyhow::Result<()> {
             Ok(Engine::builder()
                 .native(TdsModel::random(ModelConfig::tiny_tds(), MODEL_SEED))
                 .batch(BatchConfig::default())
-                .shards(ShardConfig { workers, rebalance_threshold: rebalance })
+                .shards(ShardConfig {
+                    workers,
+                    rebalance_threshold: rebalance,
+                    ..ShardConfig::default()
+                })
                 .build()?)
         },
         256,

@@ -146,6 +146,43 @@ impl TdsState {
         }
         TdsState { conv_hist }
     }
+
+    /// Serialize the conv histories as one `conv{i}` tensor per conv
+    /// layer, shaped `[kw-1, in_ch·w]` — the native half of a session
+    /// snapshot. Deterministic and lossless (f32 payloads are copied
+    /// bit-for-bit), so a restored state streams bit-identically.
+    pub fn write_tensors(&self, tf: &mut TensorFile) {
+        for (i, hist) in self.conv_hist.iter().enumerate() {
+            let rows = hist.len();
+            let d = hist.first().map_or(0, Vec::len);
+            let mut data = Vec::with_capacity(rows * d);
+            for row in hist {
+                data.extend_from_slice(row);
+            }
+            tf.push(Tensor::f32(format!("conv{i}"), vec![rows, d], data));
+        }
+    }
+
+    /// Overwrite this state's conv histories from `conv{i}` tensors,
+    /// validating every shape against the model geometry this state was
+    /// opened with.
+    pub fn read_tensors(&mut self, tf: &TensorFile) -> Result<()> {
+        for (i, hist) in self.conv_hist.iter_mut().enumerate() {
+            let rows = hist.len();
+            let d = hist.first().map_or(0, Vec::len);
+            let t = tf.require(&format!("conv{i}"))?;
+            ensure!(
+                t.dims == vec![rows, d],
+                "state tensor 'conv{i}': dims {:?}, expected [{rows},{d}]",
+                t.dims
+            );
+            let data = t.as_f32()?;
+            for (h, row) in hist.iter_mut().enumerate() {
+                row.copy_from_slice(&data[h * d..(h + 1) * d]);
+            }
+        }
+        Ok(())
+    }
 }
 
 /// One fused decoding step over `B = states.lane_count()` lanes — THE
@@ -638,6 +675,38 @@ mod tests {
                 "output buffer reallocated"
             );
         }
+    }
+
+    #[test]
+    fn state_tensor_roundtrip_streams_bit_identically() {
+        // Step a state, snapshot it through tensors (and the byte
+        // container), restore into a fresh state, then continue both:
+        // outputs and histories must be bit-equal at every step.
+        let m = tiny();
+        let n = m.cfg.frames_per_step() * m.cfg.n_mels;
+        let mut rng = crate::util::rng::Rng::new(17);
+        let warm: Vec<f32> = (0..2 * n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let mut live = m.state();
+        m.step(&mut live, &warm[..n]);
+        m.step(&mut live, &warm[n..]);
+        let mut tf = TensorFile::new();
+        live.write_tensors(&mut tf);
+        let tf = TensorFile::from_bytes(&tf.to_bytes().unwrap()).unwrap();
+        let mut restored = m.state();
+        restored.read_tensors(&tf).unwrap();
+        assert_eq!(live, restored);
+        let next: Vec<f32> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        assert_eq!(m.step(&mut live, &next), m.step(&mut restored, &next));
+        // Shape mismatches are rejected (state from a different model).
+        let other = TdsModel::random(
+            crate::config::ModelConfig {
+                n_mels: m.cfg.n_mels + 2,
+                ..m.cfg.clone()
+            },
+            1,
+        );
+        let mut wrong = other.state();
+        assert!(wrong.read_tensors(&tf).is_err());
     }
 
     #[test]

@@ -95,17 +95,30 @@ pub struct ShardConfig {
     /// Device workers (shards). 1 = the classic single device thread.
     pub workers: usize,
     /// Open-session imbalance (hottest − coldest shard) at which the
-    /// router migrates queued sessions — sessions that have not yet run
-    /// a decoding step — toward the cold shard. 0 disables rebalancing.
+    /// router migrates sessions — live, mid-utterance ones included
+    /// (evict → snapshot → adopt → restore, transcript-bit-identical) —
+    /// toward the cold shard. 0 disables rebalancing.
     pub rebalance_threshold: usize,
+    /// Recovery-checkpoint cadence, in decoding steps: after a batch
+    /// flush, every session that advanced at least this many steps since
+    /// its last checkpoint ships a fresh
+    /// [`SessionSnapshot`](crate::coordinator::SessionSnapshot) to the
+    /// router, which holds it for dead-shard recovery and client
+    /// resume. 1 = checkpoint at
+    /// every flush (the reply a client receives is then always covered —
+    /// its "last acknowledged snapshot"); larger values trade recovery
+    /// rollback window for checkpoint bandwidth; 0 disables checkpoints
+    /// (a dead shard's started sessions are then lost).
+    pub checkpoint_interval: usize,
 }
 
 impl Default for ShardConfig {
     fn default() -> Self {
         // One worker preserves the classic single-device-thread serving
         // loop; a threshold of 2 repairs any imbalance worth repairing
-        // (diff/2 ≥ 1) as soon as it appears.
-        ShardConfig { workers: 1, rebalance_threshold: 2 }
+        // (diff/2 ≥ 1) as soon as it appears; checkpointing every flush
+        // keeps acknowledged audio recoverable by default.
+        ShardConfig { workers: 1, rebalance_threshold: 2, checkpoint_interval: 1 }
     }
 }
 
@@ -158,10 +171,17 @@ mod tests {
         let s = ShardConfig::default();
         s.validate().unwrap();
         assert_eq!(s.workers, 1, "default must stay the single-device loop");
+        assert_eq!(s.checkpoint_interval, 1, "acked audio recoverable by default");
         assert!(ShardConfig { workers: 0, ..s.clone() }.validate().is_err());
         assert!(ShardConfig { workers: 257, ..s.clone() }.validate().is_err());
-        // Rebalancing may be disabled outright.
-        ShardConfig { workers: 4, rebalance_threshold: 0 }.validate().unwrap();
+        // Rebalancing and checkpointing may be disabled outright.
+        ShardConfig {
+            workers: 4,
+            rebalance_threshold: 0,
+            checkpoint_interval: 0,
+        }
+        .validate()
+        .unwrap();
     }
 
     #[test]

@@ -41,6 +41,7 @@ use crate::config::{ModelConfig, Precision};
 use crate::dsp::{mfcc::Scratch as MfccScratch, Mfcc};
 use crate::runtime::xla_am::XlaState;
 use crate::runtime::{Runtime, XlaAm};
+use crate::util::tensor_io::TensorFile;
 
 /// Type-erased per-session acoustic state. Created by
 /// [`AmBackend::open_state`]; the owning backend downcasts it back in its
@@ -165,6 +166,43 @@ pub trait AmBackend {
         out: &mut Vec<f32>,
     ) -> Result<()>;
 
+    /// Whether this backend implements the
+    /// [`Self::snapshot_lane`]/[`Self::restore_lane`] pair. The serving
+    /// layer uses this to refuse state-destroying fallbacks: sessions
+    /// of a backend without snapshots are pinned to their shard, never
+    /// checkpointed, and after a worker crash they are reported lost
+    /// (`unknown_session`) instead of being silently re-opened fresh.
+    fn supports_lane_snapshots(&self) -> bool {
+        false
+    }
+
+    /// Serialize one lane's streaming state into named tensors — the
+    /// acoustic half of a session snapshot (live migration, recovery
+    /// checkpoints, client resume). Tensor names are backend-private;
+    /// the engine namespaces them inside the snapshot container.
+    ///
+    /// Contract: [`Self::restore_lane`] on the written tensors must
+    /// yield a state that scores **bit-identically** to the original
+    /// from the next step onward (`&mut` because device-backed states
+    /// may need a synchronizing download).
+    ///
+    /// Default: unsupported — such a backend's sessions are pinned to
+    /// their shard and never checkpointed; everything else keeps
+    /// working.
+    fn snapshot_lane(&self, state: &mut AmLaneState, tf: &mut TensorFile) -> Result<()> {
+        let _ = (state, tf);
+        anyhow::bail!("backend '{}' does not support lane snapshots", self.name())
+    }
+
+    /// Rebuild a lane state from tensors written by
+    /// [`Self::snapshot_lane`], validating every shape against this
+    /// backend's model geometry. Default: unsupported (see
+    /// [`Self::snapshot_lane`]).
+    fn restore_lane(&self, tf: &TensorFile) -> Result<AmLaneState> {
+        let _ = tf;
+        anyhow::bail!("backend '{}' does not support lane snapshots", self.name())
+    }
+
     /// Duplicate this backend for another worker shard, sharing the
     /// immutable model (native backends hold their weights behind an
     /// `Arc`, so a worker clone costs a refcount, not a weight copy).
@@ -260,6 +298,21 @@ impl AmBackend for NativeBackend {
         Ok(())
     }
 
+    fn supports_lane_snapshots(&self) -> bool {
+        true
+    }
+
+    fn snapshot_lane(&self, state: &mut AmLaneState, tf: &mut TensorFile) -> Result<()> {
+        state.downcast_mut::<TdsState>().write_tensors(tf);
+        Ok(())
+    }
+
+    fn restore_lane(&self, tf: &TensorFile) -> Result<AmLaneState> {
+        let mut st = self.model.state();
+        st.read_tensors(tf)?;
+        Ok(AmLaneState::new(st))
+    }
+
     fn clone_worker(&self) -> Option<Box<dyn AmBackend + Send>> {
         Some(Box::new(NativeBackend {
             model: Arc::clone(&self.model),
@@ -331,6 +384,21 @@ impl AmBackend for QuantizedBackend {
         let mut states = ErasedLanes { lanes };
         self.model.step_batch_into(&mut states, feats, am, out);
         Ok(())
+    }
+
+    fn supports_lane_snapshots(&self) -> bool {
+        true
+    }
+
+    fn snapshot_lane(&self, state: &mut AmLaneState, tf: &mut TensorFile) -> Result<()> {
+        state.downcast_mut::<TdsState>().write_tensors(tf);
+        Ok(())
+    }
+
+    fn restore_lane(&self, tf: &TensorFile) -> Result<AmLaneState> {
+        let mut st = self.model.state();
+        st.read_tensors(tf)?;
+        Ok(AmLaneState::new(st))
     }
 
     fn clone_worker(&self) -> Option<Box<dyn AmBackend + Send>> {
@@ -411,6 +479,24 @@ impl AmBackend for XlaBackend {
             self.am.step_into(lanes.state(i).downcast_mut::<XlaState>(), &feats, out)?;
         }
         Ok(())
+    }
+
+    // Device states snapshot through host-side copies: download on
+    // capture, upload on restore. Slower than the native path but still
+    // bit-exact — the device never rounds its own stored f32 state.
+    // (On the stub runtime the calls fail, but the builder's
+    // single-worker restriction for XLA means nothing migrates there
+    // anyway.)
+    fn supports_lane_snapshots(&self) -> bool {
+        true
+    }
+
+    fn snapshot_lane(&self, state: &mut AmLaneState, tf: &mut TensorFile) -> Result<()> {
+        self.am.snapshot_state(state.downcast_mut::<XlaState>(), tf)
+    }
+
+    fn restore_lane(&self, tf: &TensorFile) -> Result<AmLaneState> {
+        Ok(AmLaneState::new(self.am.restore_state(tf)?))
     }
 }
 
@@ -506,6 +592,79 @@ mod tests {
             clone.score_step(&mut st_b, &samples, &mut sc, &mut out_b).unwrap();
             assert_eq!(out_a, out_b, "backend {}", b.name());
         }
+    }
+
+    #[test]
+    fn native_lane_snapshots_restore_bit_identically() {
+        // Snapshot after one step, restore, then score the same next
+        // step on both: outputs must be bit-equal for f32 and int8.
+        let model = TdsModel::random(ModelConfig::tiny_tds(), 12);
+        let backends: Vec<Box<dyn AmBackend>> = vec![
+            Box::new(NativeBackend::new(model.clone())),
+            Box::new(QuantizedBackend::quantize(&model).unwrap()),
+        ];
+        let mut rng = Rng::new(77);
+        let n = model.cfg.samples_per_step();
+        let first: Vec<f32> = (0..n).map(|_| rng.uniform(-0.5, 0.5)).collect();
+        let second: Vec<f32> = (0..n).map(|_| rng.uniform(-0.5, 0.5)).collect();
+        for b in &backends {
+            let mut sc = StepScratch::default();
+            let mut out = Vec::new();
+            let mut live = b.open_state().unwrap();
+            b.score_step(&mut live, &first, &mut sc, &mut out).unwrap();
+            let mut tf = TensorFile::new();
+            b.snapshot_lane(&mut live, &mut tf).unwrap();
+            let mut restored = b.restore_lane(&tf).unwrap();
+            let mut out_live = Vec::new();
+            let mut out_rest = Vec::new();
+            b.score_step(&mut live, &second, &mut sc, &mut out_live).unwrap();
+            b.score_step(&mut restored, &second, &mut sc, &mut out_rest).unwrap();
+            assert_eq!(out_live, out_rest, "backend {}", b.name());
+        }
+    }
+
+    #[test]
+    fn snapshot_default_is_unsupported() {
+        // A backend that keeps the trait defaults reports "no snapshots"
+        // instead of panicking — its sessions simply stay pinned.
+        struct Opaque(ModelConfig);
+        impl AmBackend for Opaque {
+            fn name(&self) -> &'static str {
+                "opaque"
+            }
+            fn model_cfg(&self) -> &ModelConfig {
+                &self.0
+            }
+            fn open_state(&self) -> Result<AmLaneState> {
+                Ok(AmLaneState::new(()))
+            }
+            fn score_step(
+                &self,
+                _state: &mut AmLaneState,
+                _samples: &[f32],
+                _sc: &mut StepScratch,
+                _out: &mut Vec<f32>,
+            ) -> Result<()> {
+                Ok(())
+            }
+            fn score_step_batch(
+                &self,
+                _lanes: &mut dyn AmLanes,
+                _sc: &mut StepScratch,
+                _out: &mut Vec<f32>,
+            ) -> Result<()> {
+                Ok(())
+            }
+        }
+        let b = Opaque(ModelConfig::tiny_tds());
+        assert!(!b.supports_lane_snapshots(), "default must advertise no support");
+        let mut st = b.open_state().unwrap();
+        let mut tf = TensorFile::new();
+        let err = format!("{:#}", b.snapshot_lane(&mut st, &mut tf).unwrap_err());
+        assert!(err.contains("does not support lane snapshots"), "{err}");
+        assert!(b.restore_lane(&tf).is_err());
+        let native = NativeBackend::new(TdsModel::random(ModelConfig::tiny_tds(), 1));
+        assert!(native.supports_lane_snapshots());
     }
 
     #[test]

@@ -117,6 +117,7 @@ pub struct EngineBuilder {
     shards: ShardConfig,
     lexicon: Option<Lexicon>,
     lm: Option<NgramLm>,
+    fault_after_steps: Option<u64>,
 }
 
 impl EngineBuilder {
@@ -209,6 +210,19 @@ impl EngineBuilder {
         self
     }
 
+    /// Fault-injection hook for tests and conformance suites: after
+    /// `steps` decoding steps the engine's scoring paths fail with an
+    /// injected error, which the serving layer surfaces as the
+    /// `internal` protocol code — otherwise unreachable over a socket,
+    /// because the native backends never fail mid-serve. Defaults to
+    /// off; the `ASRPU_FAULT_AFTER_STEPS` environment variable is the
+    /// env-gated equivalent (read at [`Self::build`], so every
+    /// construction path honors it; this explicit setter wins over it).
+    pub fn fault_after_steps(mut self, steps: u64) -> Self {
+        self.fault_after_steps = Some(steps);
+        self
+    }
+
     /// Validate everything and assemble the engine.
     pub fn build(self) -> Result<Engine, BuildError> {
         // Cheap config validation first — fail fast before any expensive
@@ -274,6 +288,14 @@ impl EngineBuilder {
         };
         let word_lm_ids = BeamDecoder::word_lm_ids(&lexicon, &lm)
             .map_err(|e| BuildError::Model(format!("{e:#}")))?;
+        // Env-gated fault hook: resolved here so every construction path
+        // (new(), default(), struct update) honors it uniformly; the
+        // explicit builder setting takes precedence.
+        let fault_after_steps = self.fault_after_steps.or_else(|| {
+            std::env::var("ASRPU_FAULT_AFTER_STEPS")
+                .ok()
+                .and_then(|v| v.parse().ok())
+        });
         Ok(Engine::assemble(
             backend,
             lexicon,
@@ -282,6 +304,7 @@ impl EngineBuilder {
             self.batch,
             self.shards,
             word_lm_ids,
+            fault_after_steps,
         ))
     }
 }

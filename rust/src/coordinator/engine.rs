@@ -43,16 +43,18 @@
 
 use anyhow::Result;
 use std::borrow::Cow;
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::time::{Duration, Instant};
 
 use crate::config::{BatchConfig, DecoderConfig, ModelConfig, PipelineDesc, ShardConfig};
-use crate::decoder::{BeamDecoder, DecodeScratch, DecodeState, Transcript};
+use crate::decoder::{BeamDecoder, DecodeScratch, DecodeState, DecoderSnapshot, Transcript};
 use crate::lexicon::Lexicon;
 use crate::lm::NgramLm;
+use crate::util::tensor_io::TensorFile;
 
 use super::backend::{AmBackend, AmLaneState, AmLanes, StepScratch};
 use super::builder::EngineBuilder;
+use super::snapshot::SessionSnapshot;
 
 /// Reusable per-engine buffers for the fused step loop. See the module
 /// docs for the ownership story.
@@ -86,6 +88,13 @@ pub struct Engine {
     /// decoders borrow it so per-drain construction is allocation-free).
     word_lm_ids: Vec<u32>,
     scratch: RefCell<EngineScratch>,
+    /// Test/ops fault hook ([`EngineBuilder::fault_after_steps`]): once
+    /// this many decoding steps have executed, every further scoring
+    /// attempt fails — the only way the serving protocol's `internal`
+    /// error is reachable over a real socket with the native backends.
+    fault_after_steps: Option<u64>,
+    /// Steps executed so far (the fault hook's odometer).
+    served_steps: Cell<u64>,
 }
 
 /// Everything a worker thread needs to assemble its own [`Engine`] over
@@ -105,6 +114,7 @@ pub struct WorkerSeed {
     batch_cfg: BatchConfig,
     shard_cfg: ShardConfig,
     word_lm_ids: Vec<u32>,
+    fault_after_steps: Option<u64>,
 }
 
 impl WorkerSeed {
@@ -119,6 +129,7 @@ impl WorkerSeed {
             self.batch_cfg,
             self.shard_cfg,
             self.word_lm_ids,
+            self.fault_after_steps,
         )
     }
 }
@@ -136,19 +147,13 @@ pub struct Session {
 }
 
 impl Session {
-    /// Dismantle a session that has not run any decoding step yet,
-    /// returning its buffered audio so the router can re-open it on
-    /// another worker shard (transcript-preserving: a fresh session fed
-    /// the same buffer decodes identically). `Err` hands the session
-    /// back when it already started decoding — its acoustic state is
-    /// shard-resident and must not migrate.
-    pub fn into_buffered(self) -> Result<Vec<f32>, Session> {
-        if self.metrics.steps == 0 {
-            Ok(self.buf)
-        } else {
-            Err(self)
-        }
+    /// Samples staged but not yet consumed by a decoding step (the
+    /// serving protocol's `resume` op reports this so a reconnecting
+    /// client knows exactly how much audio the server holds).
+    pub fn buffered_samples(&self) -> usize {
+        self.buf.len()
     }
+
 }
 
 /// Timing and search statistics for one session.
@@ -165,6 +170,12 @@ pub struct SessionMetrics {
     /// Σ batch occupancy over those steps (lanes this session shared its
     /// fused steps with, itself included).
     pub batch_lanes: usize,
+    /// Snapshots captured of this session so far. Strictly increasing
+    /// across the session's whole lifetime — restore copies it and the
+    /// next capture increments further — so it orders checkpoints and
+    /// migration snapshots globally (step counts cannot: two captures
+    /// at the same step differ in buffered audio).
+    pub snapshots_taken: usize,
 }
 
 impl SessionMetrics {
@@ -295,6 +306,7 @@ impl Engine {
 
     /// Assemble from pre-validated parts ([`EngineBuilder::build`] and
     /// [`WorkerSeed::into_engine`] only).
+    #[allow(clippy::too_many_arguments)]
     pub(crate) fn assemble(
         backend: Box<dyn AmBackend>,
         lexicon: Lexicon,
@@ -303,6 +315,7 @@ impl Engine {
         batch_cfg: BatchConfig,
         shard_cfg: ShardConfig,
         word_lm_ids: Vec<u32>,
+        fault_after_steps: Option<u64>,
     ) -> Engine {
         Engine {
             model_cfg: backend.model_cfg().clone(),
@@ -314,6 +327,8 @@ impl Engine {
             shard_cfg,
             word_lm_ids,
             scratch: RefCell::new(EngineScratch::default()),
+            fault_after_steps,
+            served_steps: Cell::new(0),
         }
     }
 
@@ -333,6 +348,7 @@ impl Engine {
             batch_cfg: self.batch_cfg.clone(),
             shard_cfg: self.shard_cfg.clone(),
             word_lm_ids: self.word_lm_ids.clone(),
+            fault_after_steps: self.fault_after_steps,
         })
     }
 
@@ -374,6 +390,86 @@ impl Engine {
             logits: if collect_logits { Some(Vec::new()) } else { None },
             metrics: SessionMetrics::default(),
         })
+    }
+
+    /// Capture a session as a relocatable [`SessionSnapshot`]: the
+    /// backend's acoustic lane state, the full decoder state, the
+    /// buffered-but-unconsumed audio and the session counters, stamped
+    /// with this engine's backend and model identity. The session keeps
+    /// decoding; the snapshot is an independent deep copy.
+    ///
+    /// `&mut` because device-backed acoustic states may need a
+    /// synchronizing download. Fails when the backend does not support
+    /// lane snapshots (such sessions are shard-pinned).
+    ///
+    /// The collected-logits baseline buffer (`collect_logits`) is
+    /// deliberately not part of the snapshot: it is a debugging aid,
+    /// unbounded in size, and never enabled by the serving path.
+    pub fn snapshot(&self, s: &mut Session) -> Result<SessionSnapshot> {
+        // Consume a capture sequence number first (even a failed capture
+        // burns one): the serving layer orders checkpoints by it.
+        s.metrics.snapshots_taken += 1;
+        let mut am = TensorFile::new();
+        self.backend.snapshot_lane(&mut s.am_state, &mut am)?;
+        Ok(SessionSnapshot {
+            backend: self.backend.name().to_string(),
+            model: self.model_cfg.name.clone(),
+            buffered: s.buf.clone(),
+            metrics: s.metrics,
+            am,
+            decoder: DecoderSnapshot::capture(&s.decode),
+        })
+    }
+
+    /// Rebuild a session from a snapshot taken by [`Self::snapshot`] on
+    /// an engine serving the same backend and model (validated; weights
+    /// are assumed identical when both names match — worker shards share
+    /// one model by construction). The restored session continues
+    /// decoding bit-identically to the original
+    /// (`tests/snapshot_parity.rs`).
+    pub fn restore(&self, snap: &SessionSnapshot) -> Result<Session> {
+        anyhow::ensure!(
+            snap.backend == self.backend.name(),
+            "snapshot from backend '{}' cannot restore on '{}'",
+            snap.backend,
+            self.backend.name()
+        );
+        anyhow::ensure!(
+            snap.model == self.model_cfg.name,
+            "snapshot of model '{}' cannot restore on '{}'",
+            snap.model,
+            self.model_cfg.name
+        );
+        // A checksum proves transport integrity, not semantic validity:
+        // range-check every decoder id against this engine's resources
+        // so a corrupt-at-source snapshot fails here instead of
+        // panicking mid-decode on the adopting worker.
+        snap.decoder.validate_bounds(
+            self.lexicon.num_nodes(),
+            self.lm.vocab_len(),
+            self.lexicon.words.len(),
+            self.lexicon.tokens.len(),
+        )?;
+        Ok(Session {
+            buf: snap.buffered.clone(),
+            am_state: self.backend.restore_lane(&snap.am)?,
+            decode: snap.decoder.restore(),
+            logits: None,
+            metrics: snap.metrics,
+        })
+    }
+
+    /// The fault hook's gate: fail once the configured step budget is
+    /// spent (no-op in normal operation).
+    fn check_fault(&self) -> Result<()> {
+        if let Some(limit) = self.fault_after_steps {
+            if self.served_steps.get() >= limit {
+                anyhow::bail!(
+                    "injected backend fault after {limit} decoding steps (fault_after_steps hook)"
+                );
+            }
+        }
+        Ok(())
     }
 
     /// Feed audio; runs as many decoding steps as the buffer allows.
@@ -453,6 +549,7 @@ impl Engine {
             if ready.is_empty() {
                 return Ok(total);
             }
+            self.check_fault()?;
             let t0 = Instant::now();
             let b = ready.len();
             // AM phase: one fused scoring pass over all ready lanes,
@@ -487,6 +584,7 @@ impl Engine {
                 }
             }
             let t_end = Instant::now();
+            self.served_steps.set(self.served_steps.get() + b as u64);
             // Fused wall time is shared: attribute an even share per lane
             // so per-session RTF stays meaningful under batching.
             let am_share = (t_am - t0).as_secs_f64() / b as f64;
@@ -507,6 +605,7 @@ impl Engine {
     }
 
     fn run_step(&self, s: &mut Session, decoder: &BeamDecoder) -> Result<()> {
+        self.check_fault()?;
         let t0 = Instant::now();
         let need = self.model_cfg.samples_per_step();
         let mut guard = self.scratch.borrow_mut();
@@ -520,6 +619,7 @@ impl Engine {
             decoder.step_with(&mut s.decode, row, dec);
         }
         let t_end = Instant::now();
+        self.served_steps.set(self.served_steps.get() + 1);
         s.metrics.steps += 1;
         s.metrics.audio_s += self.model_cfg.step_seconds();
         s.metrics.am_s += (t_am - t0).as_secs_f64();
@@ -834,15 +934,68 @@ mod tests {
     }
 
     #[test]
-    fn into_buffered_migrates_only_unstarted_sessions() {
-        let e = native_engine();
+    fn snapshot_restore_mid_utterance_is_transcript_identical() {
+        // Stream half an utterance, snapshot (through the full byte
+        // encoding), restore into a worker-clone engine, finish there:
+        // text AND score must equal the uninterrupted decode. f32 + int8.
+        for precision in [Precision::F32, Precision::Int8] {
+            let e = Engine::builder()
+                .native(TdsModel::random(ModelConfig::tiny_tds(), 11))
+                .precision(precision)
+                .build()
+                .unwrap();
+            let mut rng = Rng::new(31);
+            let u = Synthesizer::default().render(&[2, 7], &mut rng);
+            let (t_ref, _) = e.decode_utterance(&u.samples).unwrap();
+            let mut s = e.open(false).unwrap();
+            let half = u.samples.len() / 2;
+            e.feed(&mut s, &u.samples[..half]).unwrap();
+            assert!(s.metrics.steps > 0, "first half must run steps");
+            let snap = e.snapshot(&mut s).unwrap();
+            let bytes = snap.encode();
+            let snap = crate::coordinator::SessionSnapshot::decode(&bytes).unwrap();
+            let w = e.clone_worker().unwrap().into_engine();
+            let mut r = w.restore(&snap).unwrap();
+            assert_eq!(r.metrics.steps, s.metrics.steps);
+            w.feed(&mut r, &u.samples[half..]).unwrap();
+            let t = w.finish(&mut r).unwrap();
+            assert_eq!(t.text, t_ref.text, "{precision:?}");
+            assert_eq!(t.score, t_ref.score, "{precision:?}");
+        }
+    }
+
+    #[test]
+    fn restore_rejects_mismatched_identity() {
+        let f32_engine = native_engine();
+        let int8_engine = Engine::builder()
+            .native(TdsModel::random(ModelConfig::tiny_tds(), 11))
+            .precision(Precision::Int8)
+            .build()
+            .unwrap();
+        let mut s = f32_engine.open(false).unwrap();
+        f32_engine.feed(&mut s, &vec![0.1; 1520]).unwrap();
+        let snap = f32_engine.snapshot(&mut s).unwrap();
+        let err = format!("{:#}", int8_engine.restore(&snap).unwrap_err());
+        assert!(err.contains("backend"), "{err}");
+    }
+
+    #[test]
+    fn fault_hook_fails_scoring_after_budget() {
+        let e = Engine::builder()
+            .native(TdsModel::random(ModelConfig::tiny_tds(), 11))
+            .fault_after_steps(2)
+            .build()
+            .unwrap();
         let mut s = e.open(false).unwrap();
-        e.push_audio(&mut s, &vec![0.25; 1000]);
-        let buf = s.into_buffered().expect("no steps run yet: migratable");
-        assert_eq!(buf.len(), 1000);
-        let mut s = e.open(false).unwrap();
-        e.feed(&mut s, &vec![0.0; 1520]).unwrap();
-        assert!(s.into_buffered().is_err(), "started sessions are pinned");
+        // Two steps succeed, the third fails with the injected error.
+        assert_eq!(e.feed(&mut s, &vec![0.0; 1520 + 1280]).unwrap(), 2);
+        let err = format!("{:#}", e.feed(&mut s, &vec![0.0; 1280]).unwrap_err());
+        assert!(err.contains("injected backend fault"), "{err}");
+        // The batched path fails identically.
+        let mut t = e.open(false).unwrap();
+        e.push_audio(&mut t, &vec![0.0; 1520]);
+        let mut refs = vec![&mut t];
+        assert!(e.step_batch(&mut refs).is_err());
     }
 
     #[test]

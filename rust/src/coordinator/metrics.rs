@@ -11,11 +11,26 @@ const MAX_SAMPLES: usize = 4096;
 /// Online latency recorder over a bounded sample window (the oldest
 /// samples are overwritten once [`MAX_SAMPLES`] are retained, so a
 /// long-lived server's stats stay O(1) in memory and snapshot cost).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Default)]
 pub struct LatencyStats {
     samples_ms: Vec<f64>,
     /// Overwrite cursor once the window is full.
     cursor: usize,
+}
+
+impl Clone for LatencyStats {
+    fn clone(&self) -> Self {
+        LatencyStats { samples_ms: self.samples_ms.clone(), cursor: self.cursor }
+    }
+
+    /// Capacity-reusing copy: the destination's sample buffer is
+    /// overwritten in place, so the workers' per-flush stats-cache
+    /// publish allocates nothing once the window capacity is warm.
+    fn clone_from(&mut self, source: &Self) {
+        self.samples_ms.clear();
+        self.samples_ms.extend_from_slice(&source.samples_ms);
+        self.cursor = source.cursor;
+    }
 }
 
 impl LatencyStats {
@@ -76,7 +91,7 @@ impl LatencyStats {
 }
 
 /// Aggregate serving counters.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Default)]
 pub struct ServeMetrics {
     /// Sessions this worker currently accounts for having opened:
     /// locally opened plus adopted, minus evicted-away (migration moves
@@ -89,9 +104,16 @@ pub struct ServeMetrics {
     /// Requests bounced with `backpressure` at this shard's queue
     /// (counted router-side and folded into stats snapshots).
     pub rejected_backpressure: u64,
-    /// Sessions this worker adopted from a hotter shard (router
-    /// rebalancing; only not-yet-started sessions migrate).
+    /// Sessions this worker adopted from another shard (rebalancing
+    /// migrations — live, mid-utterance sessions included — and
+    /// dead-shard recovery restores).
     pub sessions_adopted: u64,
+    /// Sessions this worker snapshotted and handed away to a colder
+    /// shard (the evict half of a live migration).
+    pub sessions_migrated_out: u64,
+    /// Recovery checkpoints shipped to the router (cadence:
+    /// `ShardConfig::checkpoint_interval`).
+    pub checkpoints_published: u64,
     /// Queue-wait + execution latency per feed request.
     pub feed_latency: LatencyStats,
     /// Fused device batches executed by the lane-batched core.
@@ -100,6 +122,46 @@ pub struct ServeMetrics {
     pub batch_lanes: u64,
     /// Wall-clock latency of each fused batch (all its steps).
     pub batch_latency: LatencyStats,
+}
+
+impl Clone for ServeMetrics {
+    fn clone(&self) -> Self {
+        ServeMetrics {
+            sessions_opened: self.sessions_opened,
+            sessions_finished: self.sessions_finished,
+            steps_executed: self.steps_executed,
+            audio_seconds: self.audio_seconds,
+            compute_seconds: self.compute_seconds,
+            rejected_backpressure: self.rejected_backpressure,
+            sessions_adopted: self.sessions_adopted,
+            sessions_migrated_out: self.sessions_migrated_out,
+            checkpoints_published: self.checkpoints_published,
+            feed_latency: self.feed_latency.clone(),
+            batch_lanes: self.batch_lanes,
+            batches_executed: self.batches_executed,
+            batch_latency: self.batch_latency.clone(),
+        }
+    }
+
+    /// Capacity-reusing copy (see [`LatencyStats::clone_from`]): the
+    /// workers publish their counters into the shared stats cache after
+    /// every state-changing job, and this keeps that publish free of
+    /// heap allocation in the steady state.
+    fn clone_from(&mut self, source: &Self) {
+        self.sessions_opened = source.sessions_opened;
+        self.sessions_finished = source.sessions_finished;
+        self.steps_executed = source.steps_executed;
+        self.audio_seconds = source.audio_seconds;
+        self.compute_seconds = source.compute_seconds;
+        self.rejected_backpressure = source.rejected_backpressure;
+        self.sessions_adopted = source.sessions_adopted;
+        self.sessions_migrated_out = source.sessions_migrated_out;
+        self.checkpoints_published = source.checkpoints_published;
+        self.feed_latency.clone_from(&source.feed_latency);
+        self.batch_lanes = source.batch_lanes;
+        self.batches_executed = source.batches_executed;
+        self.batch_latency.clone_from(&source.batch_latency);
+    }
 }
 
 impl ServeMetrics {
@@ -140,6 +202,8 @@ impl ServeMetrics {
         self.compute_seconds += other.compute_seconds;
         self.rejected_backpressure += other.rejected_backpressure;
         self.sessions_adopted += other.sessions_adopted;
+        self.sessions_migrated_out += other.sessions_migrated_out;
+        self.checkpoints_published += other.checkpoints_published;
         self.feed_latency.merge(&other.feed_latency);
         self.batches_executed += other.batches_executed;
         self.batch_lanes += other.batch_lanes;
@@ -150,7 +214,7 @@ impl ServeMetrics {
         format!(
             "sessions {}/{} steps {} audio {:.1}s rtf {:.1}x \
              feed p50 {:.2}ms p99 {:.2}ms max {:.2}ms rejected {} \
-             batches {} occ {:.2} batch p99 {:.2}ms adopted {}",
+             batches {} occ {:.2} batch p99 {:.2}ms adopted {} migrated {} ckpt {}",
             self.sessions_finished,
             self.sessions_opened,
             self.steps_executed,
@@ -164,12 +228,16 @@ impl ServeMetrics {
             self.avg_batch_occupancy(),
             self.batch_latency.percentile(99.0),
             self.sessions_adopted,
+            self.sessions_migrated_out,
+            self.checkpoints_published,
         )
     }
 }
 
-/// One shard's live status, as reported by its worker loop in response
-/// to a snapshot probe.
+/// One shard's live status. Workers publish a fresh copy into a shared
+/// per-shard cache after every state-changing job (and before replying
+/// to it), so the router serves `stats` from the caches without ever
+/// waiting on a worker's queue.
 #[derive(Debug, Clone)]
 pub struct ShardSnapshot {
     /// Shard index (0 = the primary device thread).
@@ -180,6 +248,18 @@ pub struct ShardSnapshot {
     pub queue_depth: usize,
     /// The shard's serving counters.
     pub serve: ServeMetrics,
+}
+
+impl ShardSnapshot {
+    /// The initial cache value for a freshly spawned shard.
+    pub fn empty(shard: usize) -> Self {
+        ShardSnapshot {
+            shard,
+            open_sessions: 0,
+            queue_depth: 0,
+            serve: ServeMetrics::default(),
+        }
+    }
 }
 
 /// Aggregated view over every worker shard — the payload behind the

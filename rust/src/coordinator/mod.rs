@@ -1,11 +1,13 @@
 //! Streaming coordinator: the acoustic-backend contract ([`backend`]),
 //! validated engine construction ([`builder`]), the engine itself (the
-//! per-session decode pipeline), the sharded worker pool and session
-//! router ([`shard`] — N device workers over one shared model, with
-//! deterministic assignment and queued-session rebalancing), the
-//! serving front-end (JSON-lines TCP, protocol v2, bounded queue — the
-//! §4.1 host-process shape generalized to a worker pool) and serving
-//! metrics.
+//! per-session decode pipeline), the relocatable session-state object
+//! ([`snapshot`] — the serialized form live migration, recovery
+//! checkpoints and client resume all ship), the sharded worker pool and
+//! session router ([`shard`] — N device workers over one shared model,
+//! with deterministic assignment, live-session rebalancing and
+//! dead-shard recovery), the serving front-end (JSON-lines TCP,
+//! protocol v2, bounded queue — the §4.1 host-process shape generalized
+//! to a worker pool) and serving metrics.
 
 pub mod backend;
 pub mod builder;
@@ -13,6 +15,7 @@ pub mod engine;
 pub mod metrics;
 pub mod server;
 pub mod shard;
+pub mod snapshot;
 
 pub use backend::{
     AmBackend, AmLaneState, AmLanes, NativeBackend, QuantizedBackend, StepScratch, XlaBackend,
@@ -21,4 +24,5 @@ pub use builder::{BuildError, EngineBuilder};
 pub use engine::{Batcher, Engine, Session, SessionMetrics, WorkerSeed};
 pub use metrics::{LatencyStats, ServeMetrics, ShardMetrics, ShardSnapshot};
 pub use server::Server;
-pub use shard::{Finished, ShardPool};
+pub use shard::{Finished, Resumed, ShardPool};
+pub use snapshot::{SessionSnapshot, SNAPSHOT_VERSION};

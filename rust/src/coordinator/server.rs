@@ -12,6 +12,9 @@
 //!   → {"op":"feed","session":N,
 //!      "samples":[...]}               ← {"steps":K,"partial":"..."}
 //!   → {"op":"finish","session":N}     ← {"text":"...","rtf":X,...}
+//!   → {"op":"resume","session":N}     ← {"session":N,"steps":K,
+//!                                        "frames":F,"buffered_samples":B,
+//!                                        "partial":"..."}
 //!   → {"op":"stats"}                  ← {"summary":"...","workers":W,
 //!                                        "shards":[...]}
 //!   → {"op":"config"}                 ← {"proto":2,"backend":"...",
@@ -55,8 +58,12 @@ use super::shard::{RouterMsg, ShardPool};
 pub const PROTO_VERSION: u64 = 2;
 /// Protocol versions whose request lines the server accepts.
 pub const PROTO_ACCEPTED: &[u64] = &[1, 2];
-/// Ops the server understands.
-pub const OPS: &[&str] = &["hello", "open", "feed", "finish", "stats", "config"];
+/// Ops the server understands. `resume` re-attaches a reconnecting
+/// client to its session: the reply reports consumed steps/samples (the
+/// server's acknowledged state, restored from a checkpoint if the
+/// session's worker died) so the client replays only unacknowledged
+/// audio.
+pub const OPS: &[&str] = &["hello", "open", "feed", "finish", "resume", "stats", "config"];
 
 /// Machine-readable error codes (stable across releases; clients branch
 /// on these, not on message text).
@@ -181,6 +188,10 @@ pub(crate) fn config_json(engine: &Engine) -> Json {
             "rebalance_threshold",
             Json::Num(engine.shard_cfg.rebalance_threshold as f64),
         ),
+        (
+            "checkpoint_interval",
+            Json::Num(engine.shard_cfg.checkpoint_interval as f64),
+        ),
         ("beam", Json::Num(engine.dec_cfg.beam as f64)),
         ("max_hyps", Json::Num(engine.dec_cfg.max_hyps as f64)),
     ])
@@ -198,7 +209,7 @@ fn parse_request(line: &str, reply: mpsc::Sender<Json>) -> Result<Request, (ErrC
         "open" => Ok(Request::Msg(RouterMsg::Open { reply })),
         "stats" => Ok(Request::Msg(RouterMsg::Stats { reply })),
         "config" => Ok(Request::Msg(RouterMsg::Config { reply })),
-        "feed" | "finish" => {
+        "feed" | "finish" | "resume" => {
             let session = v
                 .get("session")
                 .and_then(Json::as_f64)
@@ -206,6 +217,9 @@ fn parse_request(line: &str, reply: mpsc::Sender<Json>) -> Result<Request, (ErrC
                 as u64;
             if op == "finish" {
                 return Ok(Request::Msg(RouterMsg::Finish { session, reply }));
+            }
+            if op == "resume" {
+                return Ok(Request::Msg(RouterMsg::Resume { session, reply }));
             }
             let samples = v
                 .get("samples")
@@ -421,7 +435,11 @@ mod tests {
             || {
                 Ok(Engine::builder()
                     .native(TdsModel::random(ModelConfig::tiny_tds(), 5))
-                    .shards(ShardConfig { workers: 2, rebalance_threshold: 2 })
+                    .shards(ShardConfig {
+                        workers: 2,
+                        rebalance_threshold: 2,
+                        ..ShardConfig::default()
+                    })
                     .build()?)
             },
             64,
@@ -494,6 +512,47 @@ mod tests {
         let summary = resps[6].get("summary").unwrap().as_str().unwrap().to_string();
         assert!(summary.contains("batches"), "{summary}");
         assert!(summary.contains("sessions 2/2"), "{summary}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn resume_reattaches_over_the_wire() {
+        // A "reconnecting" client (fresh TCP connection) re-attaches to
+        // its session with `resume` and learns the server's progress.
+        let server = start_test_server();
+        let samples: Vec<String> = (0..3200)
+            .map(|i| format!("{:.4}", (i as f32 * 0.01).sin() * 0.1))
+            .collect();
+        let joined = samples.join(",");
+        let resps = roundtrip(
+            &server.addr,
+            &[
+                r#"{"op":"open"}"#.to_string(),
+                format!(r#"{{"op":"feed","session":1,"samples":[{joined}]}}"#),
+            ],
+        );
+        assert_eq!(resps[1].get("steps").unwrap().as_f64(), Some(2.0));
+        // New connection: resume the same session.
+        let resps2 = roundtrip(
+            &server.addr,
+            &[
+                r#"{"op":"resume","session":1}"#.to_string(),
+                r#"{"op":"resume","session":404}"#.to_string(),
+                r#"{"op":"finish","session":1}"#.to_string(),
+            ],
+        );
+        assert_eq!(resps2[0].get("session").unwrap().as_f64(), Some(1.0));
+        assert_eq!(resps2[0].get("steps").unwrap().as_f64(), Some(2.0));
+        assert!(resps2[0].get("buffered_samples").unwrap().as_f64().unwrap() < 1520.0);
+        assert!(resps2[0].get("partial").is_some());
+        assert_eq!(
+            resps2[1]
+                .get("error")
+                .and_then(|e| e.get("code"))
+                .and_then(Json::as_str),
+            Some("unknown_session")
+        );
+        assert!(resps2[2].get("text").is_some(), "{:?}", resps2[2]);
         server.shutdown();
     }
 

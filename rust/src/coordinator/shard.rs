@@ -1,61 +1,75 @@
 //! Sharded multi-worker serving: a deterministic session router over a
 //! pool of device workers — the paper's pool-of-general-purpose-cores
-//! thesis (§3) lifted to the serving layer. One coordinator no longer
-//! funnels every session through a single device thread; instead
-//! [`ShardPool`] spawns `ShardConfig::workers` shards, each owning its
-//! own [`Batcher`], scratch arenas and acoustic-backend handle over the
-//! *shared* model ([`Engine::clone_worker`] — weights behind an `Arc`),
-//! and a router thread assigns sessions to shards.
+//! thesis (§3) lifted to the serving layer. [`ShardPool`] spawns
+//! `ShardConfig::workers` shards, each owning its own [`Batcher`],
+//! scratch arenas and acoustic-backend handle over the *shared* model
+//! ([`Engine::clone_worker`] — weights behind an `Arc`), and a router
+//! thread assigns sessions to shards.
+//!
+//! ## Sessions are movable state
+//!
+//! Per-session state is no longer shard-resident-by-construction: every
+//! session serializes to a [`SessionSnapshot`] (acoustic lane state +
+//! decoder state + buffered audio + counters, versioned and
+//! checksummed), and three mechanisms ship those bytes:
+//!
+//! * **Live migration** — rebalancing evicts sessions from the hottest
+//!   shard *mid-utterance* (evict → snapshot → adopt → restore), not
+//!   just queued ones; restored sessions continue bit-identically
+//!   (`tests/snapshot_parity.rs`). Only sessions with a feed in flight
+//!   (staged in the batcher) are briefly pinned.
+//! * **Recovery checkpoints** — after each batch flush a worker ships a
+//!   fresh snapshot of every session that advanced
+//!   `ShardConfig::checkpoint_interval` steps (before answering the
+//!   flushed feeds, so an acknowledged feed is always covered by its
+//!   checkpoint). The router retains the latest per session.
+//! * **Dead-shard recovery** — when a worker's job channel disconnects
+//!   (thread death, or the explicit [`ShardPool::kill_worker`] crash
+//!   hook), the router re-adopts its sessions onto surviving shards
+//!   from their checkpoints; never-checkpointed sessions reopen fresh
+//!   (correct under acknowledged-snapshot semantics: no reply ever
+//!   covered their audio). The client request that discovered the death
+//!   is retried once on the session's new shard.
+//!
+//! A disconnected client re-attaches with the protocol's `resume` op:
+//! the reply reports how many steps/samples the server has consumed so
+//! the client can replay only unacknowledged audio.
 //!
 //! ## Determinism
 //!
-//! Transcripts are independent of the shard count: per-session decode
-//! state never crosses lanes, `Engine::step_batch` is bit-identical to
-//! scalar decoding for every lane (`tests/batch_parity.rs`), and every
-//! worker serves the same weights — so any partition of a session set
-//! across N identical workers yields exactly the 1-worker transcripts.
-//! `tests/shard_parity.rs` enforces this end to end for N ∈ {2, 4} on
-//! both native backends. *Initial* session→shard assignment is also
-//! deterministic: the router picks the shard with the fewest open
-//! sessions (lowest index on ties) using only router-side state.
-//! Final placement under load is not — whether a rebalance migrates a
-//! fed-but-unstarted session depends on wall-clock batch-flush timing
-//! (a staged feed pins it) — but placement never affects transcripts,
-//! which is the invariant that matters.
-//!
-//! ## Rebalancing
-//!
-//! Only *queued* sessions migrate — sessions that have not yet run a
-//! decoding step, whose acoustic/decoder state is therefore still
-//! pristine ([`Session::into_buffered`]). When the open-session imbalance
-//! between the hottest and coldest shard reaches
-//! `ShardConfig::rebalance_threshold`, the router evicts up to half the
-//! difference from the hot shard and re-opens those sessions (buffered
-//! audio intact) on the cold one. Started sessions are pinned to their
-//! shard: their backend lane state is shard-resident and moving it
-//! would break both `Send`-safety (PJRT) and the allocation story.
+//! Transcripts are independent of the shard count *and* of migrations:
+//! per-session decode state never crosses lanes, `Engine::step_batch`
+//! is bit-identical to scalar decoding for every lane
+//! (`tests/batch_parity.rs`), every worker serves the same weights, and
+//! snapshot/restore is bit-exact — so any placement history yields
+//! exactly the 1-worker transcripts (`tests/shard_parity.rs`,
+//! `tests/snapshot_parity.rs`). *Initial* session→shard assignment is
+//! deterministic (fewest open sessions, lowest index on ties); final
+//! placement under load depends on wall-clock flush timing but never
+//! affects transcripts.
 //!
 //! ## Flow control
 //!
 //! Client-facing jobs are forwarded with a non-blocking `try_send`: a
 //! shard whose queue is saturated bounces *its own* requests with
 //! `backpressure` while the router keeps routing for every other shard
-//! (head-of-line isolation). Router-internal transactions (snapshot
-//! probes, evict/adopt migration legs, shutdown) use blocking sends —
-//! they are serialized router work by design, and stats snapshots are
-//! broadcast-then-collect so a stats poll stalls for the busiest single
-//! worker, not the sum over shards.
+//! (head-of-line isolation). Router-internal transactions (evict/adopt
+//! migration legs, kill, shutdown) use blocking sends — serialized
+//! router work by design. `stats` no longer waits on any worker at
+//! all: each worker publishes its [`ShardSnapshot`] into a shared cache
+//! after every state-changing job (before replying to it), and the
+//! router aggregates the caches.
 //!
 //! The TCP front-end ([`super::Server`]) is a thin protocol layer over
 //! this module; tests and examples drive [`ShardPool`] directly — no
 //! sockets, no JSON text round-trips, which is what lets the parity
-//! suite demand *bit*-identical scores.
+//! suites demand *bit*-identical scores.
 #![deny(missing_docs)]
 
 use anyhow::{Context, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::Instant;
 
 use crate::config::ShardConfig;
@@ -64,6 +78,7 @@ use crate::util::json::Json;
 use super::engine::{Batcher, Engine, Session, WorkerSeed};
 use super::metrics::{ServeMetrics, ShardMetrics, ShardSnapshot};
 use super::server::{config_json, err_json, obj, ErrCode};
+use super::snapshot::SessionSnapshot;
 
 /// A client-facing request the router dispatches. Both front-ends speak
 /// this: TCP connection threads (`super::Server`) and the in-process
@@ -75,10 +90,15 @@ pub(crate) enum RouterMsg {
     Feed { session: u64, samples: Vec<f32>, enqueued: Instant, reply: mpsc::Sender<Json> },
     /// Finish a session and retire its assignment.
     Finish { session: u64, reply: mpsc::Sender<Json> },
-    /// Aggregate per-shard metrics.
+    /// Re-attach to a session: report consumed steps/samples + partial.
+    Resume { session: u64, reply: mpsc::Sender<Json> },
+    /// Aggregate per-shard metrics (served from the stats caches).
     Stats { reply: mpsc::Sender<Json> },
-    /// Device/config introspection (served by shard 0).
+    /// Device/config introspection (served by the first live shard).
     Config { reply: mpsc::Sender<Json> },
+    /// Crash one worker uncleanly and recover its sessions from their
+    /// checkpoints (test/ops hook behind [`ShardPool::kill_worker`]).
+    Kill { shard: usize, reply: mpsc::Sender<Json> },
     /// Stop the router and every worker.
     Shutdown,
 }
@@ -91,24 +111,31 @@ enum Job {
     Feed { session: u64, samples: Vec<f32>, enqueued: Instant, reply: mpsc::Sender<Json> },
     /// Flush and extract the transcript.
     Finish { session: u64, reply: mpsc::Sender<Json> },
+    /// Report a session's consumed steps/frames/buffer + partial.
+    Resume { session: u64, reply: mpsc::Sender<Json> },
     /// Introspect the engine this worker serves.
     Config { reply: mpsc::Sender<Json> },
-    /// Report live status (read-only; never flushes).
-    Snapshot { reply: mpsc::Sender<ShardSnapshot> },
-    /// Hand back up to `max` not-yet-started sessions for migration.
-    Evict { max: usize, reply: mpsc::Sender<Vec<(u64, Vec<f32>)>> },
-    /// Re-open a migrated session (buffered audio intact) under its id.
-    /// Replies `Ok(())` on success; a worker that cannot open the
-    /// session hands the buffer back (`Err(buf)`) so the router can
-    /// re-adopt it elsewhere instead of destroying the session.
+    /// Snapshot up to `max` migratable sessions off this shard and hand
+    /// back `(id, capture seq, encoded snapshot)` triples for adoption
+    /// elsewhere (the capture sequence number is the freshness tag the
+    /// router's checkpoint store orders by).
+    Evict { max: usize, reply: mpsc::Sender<Vec<(u64, u64, Vec<u8>)>> },
+    /// Restore a migrated/recovered session under its id. `None`
+    /// re-opens fresh (a session that never had a checkpoint).
+    /// `Err(Some(bytes))` hands the snapshot back so the router can
+    /// re-adopt it elsewhere instead of destroying the session;
     /// `returning` marks a bounce-back to the origin shard after a
     /// failed migration — re-booked but not counted as adopted.
     Adopt {
         id: u64,
-        buf: Vec<f32>,
+        snap: Option<Vec<u8>>,
         returning: bool,
-        reply: mpsc::Sender<Result<(), Vec<f32>>>,
+        reply: mpsc::Sender<Result<(), Option<Vec<u8>>>>,
     },
+    /// Simulated crash: exit *without* flushing staged work or shipping
+    /// final checkpoints; ack only after the job queue is dropped so the
+    /// router's recovery observes a definitely-dead worker.
+    Die { ack: mpsc::Sender<()> },
     /// Flush staged work and exit the worker loop.
     Shutdown,
 }
@@ -121,8 +148,20 @@ impl Job {
             Job::Open { reply, .. }
             | Job::Feed { reply, .. }
             | Job::Finish { reply, .. }
+            | Job::Resume { reply, .. }
             | Job::Config { reply } => Some(reply),
-            Job::Snapshot { .. } | Job::Evict { .. } | Job::Adopt { .. } | Job::Shutdown => None,
+            Job::Evict { .. } | Job::Adopt { .. } | Job::Die { .. } | Job::Shutdown => None,
+        }
+    }
+
+    /// The open session this job addresses, if any — how a retried job
+    /// finds its session's new shard after dead-shard recovery.
+    fn session_id(&self) -> Option<u64> {
+        match self {
+            Job::Feed { session, .. }
+            | Job::Finish { session, .. }
+            | Job::Resume { session, .. } => Some(*session),
+            _ => None,
         }
     }
 }
@@ -134,177 +173,304 @@ struct StagedFeed {
     enqueued: Instant,
 }
 
-/// Run the pending batch: pull its sessions out of the map, fuse their
-/// ready steps through `Engine::step_batch`, record occupancy/latency,
-/// then answer every staged feed with its session's step count + partial.
-///
-/// A batch-level engine error **poisons** the fused step
-/// (`AmBackend::score_step_batch` contract: lane states may have
-/// advanced while no audio drained), so the batch's sessions are
-/// discarded — reinserting them would let a later feed/finish silently
-/// replay consumed audio against advanced state and return a corrupt
-/// transcript as success. Every staged feed gets the `internal` error,
-/// later ops on those ids get `unknown_session`, and the router is
-/// told through the `retire` back-channel to un-book them.
-///
-/// Known coarseness, acceptable at this layer: if one session was fed
-/// twice before the flush (two connections), both replies report the
-/// same since-staging step delta; and a batch-level engine error is
-/// reported to every staged feed in the batch, not just the failing
-/// lane's.
-fn flush_batch(
-    engine: &Engine,
-    sessions: &mut HashMap<u64, Session>,
-    batcher: &mut Batcher,
-    staged: &mut Vec<StagedFeed>,
-    metrics: &mut ServeMetrics,
-    retire: &mpsc::Sender<u64>,
-) {
-    let ids = batcher.take();
-    // Pull the batch's sessions out of the map so every lane can be
-    // borrowed mutably at once; they go back right after the fused step.
-    let mut lanes: Vec<(u64, Session, usize)> = Vec::with_capacity(ids.len());
-    for id in ids {
-        if let Some(s) = sessions.remove(&id) {
-            let steps_before = s.metrics.steps;
-            lanes.push((id, s, steps_before));
-        }
-    }
-    let occupancy = lanes.iter().filter(|(_, s, _)| engine.ready_steps(s) > 0).count();
-    let t0 = Instant::now();
-    let result = {
-        let mut refs: Vec<&mut Session> = lanes.iter_mut().map(|(_, s, _)| s).collect();
-        engine.step_batch(&mut refs)
-    };
-    if occupancy > 0 {
-        metrics.record_batch(occupancy, t0.elapsed());
-    }
-    let err = result.err().map(|e| format!("feed failed: {e:#}"));
-    for (id, s, steps_before) in lanes {
-        let steps = s.metrics.steps - steps_before;
-        metrics.steps_executed += steps as u64;
-        metrics.audio_seconds += steps as f64 * engine.model_cfg.step_seconds();
-        let partial = engine.partial(&s).map(|t| t.text).unwrap_or_default();
-        if err.is_none() {
-            sessions.insert(id, s);
-        } else {
-            // Poisoned: discard the session (see the function docs).
-            let _ = retire.send(id);
-        }
-        staged.retain(|f| {
-            if f.session != id {
-                return true;
-            }
-            let resp = match &err {
-                Some(msg) => err_json(ErrCode::Internal, msg),
-                None => obj(&[
-                    ("steps", Json::Num(steps as f64)),
-                    ("partial", Json::Str(partial.clone())),
-                ]),
-            };
-            metrics.feed_latency.record(f.enqueued.elapsed());
-            let _ = f.reply.send(resp);
-            false
-        });
-    }
-    // Staged feeds whose session vanished from the map (finished from
-    // another connection mid-batch): answer rather than hang the client.
-    for f in staged.drain(..) {
-        let _ = f
-            .reply
-            .send(err_json(ErrCode::UnknownSession, "session closed before its batch ran"));
-    }
-}
-
-/// One shard's device loop: owns its engine, sessions, batcher and
-/// metrics; drains jobs FIFO; never blocks sending (replies and the
-/// `retire` back-channel are unbounded), so the router can always make
-/// progress. The retire channel is deliberately *not* the router's
-/// main queue: workers holding a main-queue sender would keep the
-/// router alive after every client handle dropped (thread leak).
-fn worker_loop(
+/// One shard's device loop state: owns its engine, sessions, batcher
+/// and metrics; drains jobs FIFO; never blocks sending (replies and the
+/// retire/checkpoint back-channels are unbounded), so the router can
+/// always make progress. The back-channels are deliberately *not* the
+/// router's main queue: workers holding a main-queue sender would keep
+/// the router alive after every client handle dropped (thread leak).
+struct Worker {
     shard: usize,
     engine: Engine,
-    jobs: mpsc::Receiver<Job>,
     depth: Arc<AtomicUsize>,
+    /// Un-book back-channel (failed opens, poisoned batches).
     retire: mpsc::Sender<u64>,
-) {
-    let mut sessions: HashMap<u64, Session> = HashMap::new();
-    let mut metrics = ServeMetrics::default();
-    let mut batcher = engine.batcher();
-    let mut staged: Vec<StagedFeed> = Vec::new();
-    loop {
-        // Enforce the wait budget even under sustained job traffic: a
-        // queued message makes recv_timeout return Ok without ever timing
-        // out, so an expired partial batch must flush here, not just on
-        // the Timeout arm.
-        if !staged.is_empty() && batcher.wait_budget().is_zero() {
-            flush_batch(&engine, &mut sessions, &mut batcher, &mut staged, &mut metrics, &retire);
+    /// Recovery-checkpoint back-channel: (session, capture sequence
+    /// number, encoded snapshot). The sequence number — strictly
+    /// increasing per session across its whole lifetime, migrations
+    /// included — lets the router ignore an older in-flight checkpoint
+    /// that arrives after a fresher migration snapshot was already
+    /// stored. Empty bytes are a *tombstone*: acknowledged state exists
+    /// that could not be captured, so recovery must drop the session
+    /// rather than reset it.
+    ckpt: mpsc::Sender<(u64, u64, Vec<u8>)>,
+    /// The shared stats cache this worker publishes into.
+    cache: Arc<Mutex<ShardSnapshot>>,
+    sessions: HashMap<u64, Session>,
+    metrics: ServeMetrics,
+    batcher: Batcher,
+    staged: Vec<StagedFeed>,
+    /// Step count at each session's last shipped checkpoint.
+    last_ckpt: HashMap<u64, usize>,
+    ckpt_interval: usize,
+}
+
+impl Worker {
+    fn new(
+        shard: usize,
+        engine: Engine,
+        depth: Arc<AtomicUsize>,
+        retire: mpsc::Sender<u64>,
+        ckpt: mpsc::Sender<(u64, u64, Vec<u8>)>,
+        cache: Arc<Mutex<ShardSnapshot>>,
+    ) -> Worker {
+        let batcher = engine.batcher();
+        let ckpt_interval = engine.shard_cfg.checkpoint_interval;
+        Worker {
+            shard,
+            engine,
+            depth,
+            retire,
+            ckpt,
+            cache,
+            sessions: HashMap::new(),
+            metrics: ServeMetrics::default(),
+            batcher,
+            staged: Vec::new(),
+            last_ckpt: HashMap::new(),
+            ckpt_interval,
         }
-        // Block for the next job; with feeds staged, cap the wait at the
-        // batcher's remaining budget so a partial batch still flushes.
-        let job = if staged.is_empty() {
-            match jobs.recv() {
-                Ok(j) => j,
-                Err(_) => break,
-            }
-        } else {
-            match jobs.recv_timeout(batcher.wait_budget()) {
-                Ok(j) => j,
-                Err(mpsc::RecvTimeoutError::Timeout) => {
-                    flush_batch(&engine, &mut sessions, &mut batcher, &mut staged, &mut metrics, &retire);
-                    continue;
-                }
-                Err(mpsc::RecvTimeoutError::Disconnected) => {
-                    flush_batch(&engine, &mut sessions, &mut batcher, &mut staged, &mut metrics, &retire);
-                    break;
-                }
+    }
+
+    /// Publish this shard's live status into the shared stats cache.
+    /// Called after every state-changing job, *before* its reply, so a
+    /// client that has seen a reply also sees its effect in `stats`.
+    /// The cached snapshot is overwritten in place (`clone_from`
+    /// reuses the latency windows' capacity), so the steady-state
+    /// publish allocates nothing.
+    fn publish(&self) {
+        let mut cached = self.cache.lock().unwrap();
+        cached.shard = self.shard;
+        cached.open_sessions = self.sessions.len();
+        cached.queue_depth = self.depth.load(Ordering::Relaxed);
+        cached.serve.clone_from(&self.metrics);
+    }
+
+    /// Ship a recovery checkpoint if the session advanced at least
+    /// `checkpoint_interval` steps since its last one (a session's first
+    /// flush always checkpoints, so every flushed session is covered;
+    /// interval 1 re-checkpoints at every flush so buffered-audio-only
+    /// changes are captured too). Backends without snapshot support
+    /// never checkpoint — their sessions are pinned and recovery drops
+    /// them. A *transient* capture failure on a snapshot-capable
+    /// backend ships a tombstone instead: the router then knows acked
+    /// state exists that is no longer covered, and a crash drops the
+    /// session rather than resetting it to an older (or fresh) state.
+    fn maybe_checkpoint(&mut self, id: u64, s: &mut Session) {
+        if self.ckpt_interval == 0 || !self.engine.backend().supports_lane_snapshots() {
+            return;
+        }
+        let due = match self.last_ckpt.get(&id) {
+            None => true,
+            Some(&at) => {
+                self.ckpt_interval == 1
+                    || s.metrics.steps.saturating_sub(at) >= self.ckpt_interval
             }
         };
-        depth.fetch_sub(1, Ordering::Relaxed);
-        match job {
-            Job::Shutdown => {
-                flush_batch(&engine, &mut sessions, &mut batcher, &mut staged, &mut metrics, &retire);
-                break;
+        if !due {
+            return;
+        }
+        match self.engine.snapshot(s) {
+            Ok(snap) => {
+                let seq = s.metrics.snapshots_taken as u64;
+                let _ = self.ckpt.send((id, seq, snap.encode()));
+                self.metrics.checkpoints_published += 1;
+                self.last_ckpt.insert(id, s.metrics.steps);
             }
+            Err(_) => {
+                let seq = s.metrics.snapshots_taken as u64;
+                let _ = self.ckpt.send((id, seq, Vec::new()));
+            }
+        }
+    }
+
+    /// Run the pending batch: pull its sessions out of the map, fuse
+    /// their ready steps through `Engine::step_batch`, record
+    /// occupancy/latency, ship due checkpoints, publish the stats
+    /// cache, then answer every staged feed with its session's step
+    /// count + partial — strictly in that order, so an acknowledged feed
+    /// is always covered by an already-enqueued checkpoint.
+    ///
+    /// A batch-level engine error **poisons** the fused step
+    /// (`AmBackend::score_step_batch` contract: lane states may have
+    /// advanced while no audio drained), so the batch's sessions are
+    /// discarded — reinserting them would let a later feed/finish
+    /// silently replay consumed audio against advanced state and return
+    /// a corrupt transcript as success. Every staged feed gets the
+    /// `internal` error, later ops on those ids get `unknown_session`,
+    /// and the router is told through the `retire` back-channel to
+    /// un-book them (which also drops their checkpoints).
+    ///
+    /// Known coarseness, acceptable at this layer: if one session was
+    /// fed twice before the flush (two connections), both replies report
+    /// the same since-staging step delta; and a batch-level engine error
+    /// is reported to every staged feed in the batch, not just the
+    /// failing lane's.
+    fn flush(&mut self) {
+        let ids = self.batcher.take();
+        // Pull the batch's sessions out of the map so every lane can be
+        // borrowed mutably at once; they go back right after the step.
+        let mut lanes: Vec<(u64, Session, usize)> = Vec::with_capacity(ids.len());
+        for id in ids {
+            if let Some(s) = self.sessions.remove(&id) {
+                let steps_before = s.metrics.steps;
+                lanes.push((id, s, steps_before));
+            }
+        }
+        let occupancy = lanes
+            .iter()
+            .filter(|(_, s, _)| self.engine.ready_steps(s) > 0)
+            .count();
+        let t0 = Instant::now();
+        let result = {
+            let mut refs: Vec<&mut Session> = lanes.iter_mut().map(|(_, s, _)| s).collect();
+            self.engine.step_batch(&mut refs)
+        };
+        if occupancy > 0 {
+            self.metrics.record_batch(occupancy, t0.elapsed());
+        }
+        let err = result.err().map(|e| format!("feed failed: {e:#}"));
+        let mut done: Vec<(StagedFeed, Json)> = Vec::new();
+        for (id, mut s, steps_before) in lanes {
+            let steps = s.metrics.steps - steps_before;
+            self.metrics.steps_executed += steps as u64;
+            self.metrics.audio_seconds += steps as f64 * self.engine.model_cfg.step_seconds();
+            let partial = self.engine.partial(&s).map(|t| t.text).unwrap_or_default();
+            if err.is_none() {
+                self.maybe_checkpoint(id, &mut s);
+                self.sessions.insert(id, s);
+            } else {
+                // Poisoned: discard the session (see the method docs).
+                self.last_ckpt.remove(&id);
+                let _ = self.retire.send(id);
+            }
+            let mut i = 0;
+            while i < self.staged.len() {
+                if self.staged[i].session != id {
+                    i += 1;
+                    continue;
+                }
+                let f = self.staged.remove(i);
+                let resp = match &err {
+                    Some(msg) => err_json(ErrCode::Internal, msg),
+                    None => obj(&[
+                        ("steps", Json::Num(steps as f64)),
+                        ("partial", Json::Str(partial.clone())),
+                    ]),
+                };
+                self.metrics.feed_latency.record(f.enqueued.elapsed());
+                done.push((f, resp));
+            }
+        }
+        // Staged feeds whose session vanished from the map (finished
+        // from another connection mid-batch): answer, don't hang.
+        for f in self.staged.drain(..) {
+            done.push((
+                f,
+                err_json(ErrCode::UnknownSession, "session closed before its batch ran"),
+            ));
+        }
+        self.publish();
+        for (f, resp) in done {
+            let _ = f.reply.send(resp);
+        }
+    }
+
+    /// The device loop. Exits when the job channel closes, on
+    /// [`Job::Shutdown`] (clean: flushes staged work), or on
+    /// [`Job::Die`] (crash simulation: drops everything unflushed).
+    fn run(mut self, jobs: mpsc::Receiver<Job>) {
+        let mut die_ack: Option<mpsc::Sender<()>> = None;
+        loop {
+            // Enforce the wait budget even under sustained job traffic:
+            // a queued message makes recv_timeout return Ok without ever
+            // timing out, so an expired partial batch must flush here,
+            // not just on the Timeout arm.
+            if !self.staged.is_empty() && self.batcher.wait_budget().is_zero() {
+                self.flush();
+            }
+            // Block for the next job; with feeds staged, cap the wait at
+            // the batcher's remaining budget so a partial batch still
+            // flushes.
+            let job = if self.staged.is_empty() {
+                match jobs.recv() {
+                    Ok(j) => j,
+                    Err(_) => break,
+                }
+            } else {
+                match jobs.recv_timeout(self.batcher.wait_budget()) {
+                    Ok(j) => j,
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        self.flush();
+                        continue;
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        self.flush();
+                        break;
+                    }
+                }
+            };
+            self.depth.fetch_sub(1, Ordering::Relaxed);
+            match job {
+                Job::Shutdown => {
+                    self.flush();
+                    break;
+                }
+                Job::Die { ack } => {
+                    die_ack = Some(ack);
+                    break;
+                }
+                other => self.handle(other),
+            }
+        }
+        if let Some(ack) = die_ack {
+            // Crash simulation: drop the job queue *first* so every
+            // subsequent router send fails deterministically, then ack.
+            // Staged feeds and sessions die unflushed and unshipped —
+            // exactly what a real worker crash loses.
+            drop(jobs);
+            let _ = ack.send(());
+        }
+    }
+
+    fn handle(&mut self, job: Job) {
+        match job {
+            Job::Shutdown | Job::Die { .. } => unreachable!("handled by the run loop"),
             Job::Open { id, reply } => {
-                let resp = match engine.open(false) {
+                let resp = match self.engine.open(false) {
                     Ok(s) => {
-                        sessions.insert(id, s);
-                        metrics.sessions_opened += 1;
+                        self.sessions.insert(id, s);
+                        self.metrics.sessions_opened += 1;
                         obj(&[("session", Json::Num(id as f64))])
                     }
                     Err(e) => {
                         // The router booked this id at dispatch; un-book
                         // it so failed opens (fallible PJRT open_state)
                         // don't leak assignments or skew load counts.
-                        let _ = retire.send(id);
+                        let _ = self.retire.send(id);
                         err_json(ErrCode::Internal, &format!("open failed: {e:#}"))
                     }
                 };
+                self.publish();
                 let _ = reply.send(resp);
             }
             Job::Feed { session, samples, enqueued, reply } => {
-                match sessions.get_mut(&session) {
+                match self.sessions.get_mut(&session) {
                     None => {
-                        let _ = reply.send(err_json(ErrCode::UnknownSession, "unknown session"));
+                        let _ =
+                            reply.send(err_json(ErrCode::UnknownSession, "unknown session"));
                     }
                     Some(s) => {
-                        engine.push_audio(s, &samples);
-                        staged.push(StagedFeed { session, reply, enqueued });
-                        // Flush when the batch is full — or when every open
-                        // session on this shard is already staged, since no
-                        // further lane can arrive before some staged client
-                        // unblocks.
-                        if batcher.push(session) || batcher.len() >= sessions.len() {
-                            flush_batch(
-                                &engine,
-                                &mut sessions,
-                                &mut batcher,
-                                &mut staged,
-                                &mut metrics,
-                                &retire,
-                            );
+                        self.engine.push_audio(s, &samples);
+                        self.staged.push(StagedFeed { session, reply, enqueued });
+                        // Flush when the batch is full — or when every
+                        // open session on this shard is already staged,
+                        // since no further lane can arrive before some
+                        // staged client unblocks.
+                        if self.batcher.push(session)
+                            || self.batcher.len() >= self.sessions.len()
+                        {
+                            self.flush();
                         }
                     }
                 }
@@ -312,16 +478,17 @@ fn worker_loop(
             Job::Finish { session, reply } => {
                 // Any staged work (this session's included) runs first so
                 // the transcript covers all fed audio.
-                if !staged.is_empty() {
-                    flush_batch(&engine, &mut sessions, &mut batcher, &mut staged, &mut metrics, &retire);
+                if !self.staged.is_empty() {
+                    self.flush();
                 }
-                batcher.remove(session);
-                let resp = match sessions.remove(&session) {
+                self.batcher.remove(session);
+                self.last_ckpt.remove(&session);
+                let resp = match self.sessions.remove(&session) {
                     None => err_json(ErrCode::UnknownSession, "unknown session"),
-                    Some(mut s) => match engine.finish(&mut s) {
+                    Some(mut s) => match self.engine.finish(&mut s) {
                         Ok(t) => {
-                            metrics.sessions_finished += 1;
-                            metrics.compute_seconds += s.metrics.compute_s;
+                            self.metrics.sessions_finished += 1;
+                            self.metrics.compute_seconds += s.metrics.compute_s;
                             obj(&[
                                 ("text", Json::Str(t.text)),
                                 ("score", Json::Num(t.score as f64)),
@@ -333,67 +500,118 @@ fn worker_loop(
                         Err(e) => err_json(ErrCode::Internal, &format!("finish failed: {e:#}")),
                     },
                 };
+                self.publish();
+                let _ = reply.send(resp);
+            }
+            Job::Resume { session, reply } => {
+                // Flush first so the reported progress covers every feed
+                // this worker has accepted (staged audio is un-acked
+                // until its flush replies).
+                if !self.staged.is_empty() {
+                    self.flush();
+                }
+                let resp = match self.sessions.get(&session) {
+                    None => err_json(ErrCode::UnknownSession, "unknown session"),
+                    Some(s) => {
+                        let partial =
+                            self.engine.partial(s).map(|t| t.text).unwrap_or_default();
+                        obj(&[
+                            ("session", Json::Num(session as f64)),
+                            ("steps", Json::Num(s.metrics.steps as f64)),
+                            ("frames", Json::Num(s.decode.frames as f64)),
+                            ("buffered_samples", Json::Num(s.buffered_samples() as f64)),
+                            ("partial", Json::Str(partial)),
+                        ])
+                    }
+                };
                 let _ = reply.send(resp);
             }
             Job::Config { reply } => {
-                let _ = reply.send(config_json(&engine));
-            }
-            Job::Snapshot { reply } => {
-                let _ = reply.send(ShardSnapshot {
-                    shard,
-                    open_sessions: sessions.len(),
-                    queue_depth: depth.load(Ordering::Relaxed),
-                    serve: metrics.clone(),
-                });
+                let _ = reply.send(config_json(&self.engine));
             }
             Job::Evict { max, reply } => {
-                // Only sessions that have not started decoding and have
-                // no feed in flight (not staged) may leave this shard.
-                let mut ids: Vec<u64> = sessions
-                    .iter()
-                    .filter(|(id, s)| s.metrics.steps == 0 && !batcher.contains(**id))
-                    .map(|(id, _)| *id)
+                // Any session without a feed in flight may leave this
+                // shard — mid-utterance ones included: their state
+                // travels as a snapshot. Lowest ids first, so which
+                // sessions migrate is deterministic given the trigger.
+                let mut ids: Vec<u64> = self
+                    .sessions
+                    .keys()
+                    .filter(|id| !self.batcher.contains(**id))
+                    .copied()
                     .collect();
                 ids.sort_unstable();
                 ids.truncate(max);
                 let mut moved = Vec::with_capacity(ids.len());
                 for id in ids {
-                    if let Some(s) = sessions.remove(&id) {
-                        match s.into_buffered() {
-                            Ok(buf) => moved.push((id, buf)),
-                            // Defensive: a pinned session goes back.
-                            Err(s) => {
-                                sessions.insert(id, s);
+                    if let Some(mut s) = self.sessions.remove(&id) {
+                        match self.engine.snapshot(&mut s) {
+                            Ok(snap) => {
+                                moved.push((
+                                    id,
+                                    s.metrics.snapshots_taken as u64,
+                                    snap.encode(),
+                                ));
+                                self.last_ckpt.remove(&id);
+                                self.metrics.sessions_migrated_out += 1;
+                                // The evicted sessions are no longer this
+                                // shard's opens; the adopting shard
+                                // re-counts them, so per-shard
+                                // opened/finished stay balanced and the
+                                // aggregate nets out (−1 here, +1 there).
+                                self.metrics.sessions_opened -= 1;
+                            }
+                            // Un-snapshottable (backend without lane
+                            // snapshots): the session stays pinned here.
+                            Err(_) => {
+                                self.sessions.insert(id, s);
                             }
                         }
                     }
                 }
-                // The evicted sessions are no longer this shard's opens;
-                // the adopting shard re-counts them, so per-shard
-                // opened/finished stay balanced and the aggregate nets
-                // out (−1 here, +1 there).
-                metrics.sessions_opened -= moved.len() as u64;
+                self.publish();
                 let _ = reply.send(moved);
             }
-            Job::Adopt { id, buf, returning, reply } => {
-                let resp = match engine.open(false) {
-                    Ok(mut s) => {
-                        engine.push_audio(&mut s, &buf);
-                        sessions.insert(id, s);
+            Job::Adopt { id, snap, returning, reply } => {
+                let restored = match snap {
+                    Some(bytes) => match SessionSnapshot::decode(&bytes)
+                        .and_then(|sn| self.engine.restore(&sn))
+                    {
+                        Ok(s) => Ok(s),
+                        // Hand the bytes back for re-adoption elsewhere.
+                        Err(_) => Err(Some(bytes)),
+                    },
+                    // No checkpoint ever existed. For a backend with
+                    // snapshot support that means the session never
+                    // flushed a feed, so a fresh open under the same id
+                    // is exact (nothing was ever acknowledged). For a
+                    // backend *without* snapshots it means nothing — the
+                    // session may have decoded for minutes — so refuse
+                    // rather than silently serve a reset transcript as a
+                    // continuation.
+                    None if self.engine.backend().supports_lane_snapshots() => {
+                        self.engine.open(false).map_err(|_| None)
+                    }
+                    None => Err(None),
+                };
+                let resp = match restored {
+                    Ok(s) => {
+                        self.last_ckpt.insert(id, s.metrics.steps);
+                        self.sessions.insert(id, s);
                         // A bounce-back to the origin shard is not a
                         // migration — don't report phantom adoptions.
                         if !returning {
-                            metrics.sessions_adopted += 1;
+                            self.metrics.sessions_adopted += 1;
                         }
                         // Adopted sessions count as this shard's opens
                         // (the evicting shard un-counted them), so this
                         // shard's eventual finish balances locally.
-                        metrics.sessions_opened += 1;
+                        self.metrics.sessions_opened += 1;
                         Ok(())
                     }
-                    // Hand the buffer back for re-adoption elsewhere.
-                    Err(_) => Err(buf),
+                    Err(back) => Err(back),
                 };
+                self.publish();
                 let _ = reply.send(resp);
             }
         }
@@ -404,20 +622,32 @@ fn worker_loop(
 struct ShardHandle {
     tx: mpsc::SyncSender<Job>,
     depth: Arc<AtomicUsize>,
+    /// The worker-published stats cache (non-blocking `stats`).
+    cache: Arc<Mutex<ShardSnapshot>>,
 }
 
-/// Router state: session→shard assignments plus per-shard load and
-/// liveness, all router-thread-local so *initial* assignment (`pick`)
-/// is a pure function of the request sequence; migration eligibility
-/// additionally depends on worker-side flush timing, so placement
-/// after rebalancing is best-effort, never transcript-affecting.
-/// (Liveness only changes when a worker dies — an abnormal event that
-/// is then surfaced, not hidden.)
+/// Outcome of asking a shard to adopt a session.
+enum AdoptOutcome {
+    /// The shard restored the session.
+    Adopted,
+    /// The shard refused; the snapshot bytes came back when possible.
+    Refused(Option<Vec<u8>>),
+    /// The shard died holding the request.
+    Dead,
+}
+
+/// Router state: session→shard assignments, per-shard load and
+/// liveness, and the latest recovery checkpoint per session — all
+/// router-thread-local, so *initial* assignment (`pick`) is a pure
+/// function of the request sequence. Migration/recovery placement
+/// additionally depends on worker-side flush timing, so placement under
+/// load is best-effort — never transcript-affecting, which is the
+/// invariant that matters.
 struct Router {
     shards: Vec<ShardHandle>,
-    /// A worker whose job channel disconnected (thread died). Dead
-    /// shards are excluded from `pick`/`rebalance` so one crashed
-    /// worker does not black-hole new sessions.
+    /// A worker whose job channel disconnected (thread died or was
+    /// killed). Dead shards are excluded from `pick`/`rebalance`, and
+    /// their sessions are re-adopted from checkpoints on discovery.
     dead: Vec<bool>,
     /// Per-shard count of client jobs bounced with `backpressure`
     /// (router-side; folded into stats snapshots so shed load shows).
@@ -426,53 +656,134 @@ struct Router {
     open_count: Vec<usize>,
     next_id: u64,
     rebalance_threshold: usize,
+    checkpoint_interval: usize,
+    /// Freshest encoded [`SessionSnapshot`] per open session, keyed by
+    /// its capture sequence number — strictly increasing per session —
+    /// so an older in-flight checkpoint can never overwrite a newer
+    /// migration snapshot (dropped at finish/retire; unused when
+    /// `checkpoint_interval == 0`). Empty bytes are a tombstone: acked
+    /// state exists that capture could not cover, so recovery drops the
+    /// session instead of restoring something older. What dead-shard
+    /// recovery restores from.
+    checkpoints: HashMap<u64, (u64, Vec<u8>)>,
+    /// Sessions re-adopted off dead shards (surfaced in `stats`).
+    recovered: u64,
+    /// The workers' un-book back-channel (failed opens, poisoned
+    /// batches), drained lazily so load counts stay honest.
+    retire_rx: mpsc::Receiver<u64>,
+    /// The workers' checkpoint back-channel.
+    ckpt_rx: mpsc::Receiver<(u64, u64, Vec<u8>)>,
 }
 
 impl Router {
-    /// Forward a router-internal job (snapshot/evict/adopt/shutdown),
+    /// Fold pending back-channel traffic into router state: retires
+    /// un-book sessions (and drop their checkpoints); checkpoint
+    /// messages update the per-session latest (ignored once a session
+    /// is no longer booked, so finished sessions cannot leak bytes).
+    fn drain_backchannels(&mut self) {
+        while let Ok(session) = self.retire_rx.try_recv() {
+            if let Some(shard) = self.assign.remove(&session) {
+                self.open_count[shard] = self.open_count[shard].saturating_sub(1);
+            }
+            self.checkpoints.remove(&session);
+        }
+        while let Ok((id, seq, snap)) = self.ckpt_rx.try_recv() {
+            if !self.assign.contains_key(&id) {
+                continue;
+            }
+            // Ignore a checkpoint older than what is already stored —
+            // possible when a migration snapshot (captured later) was
+            // recorded while this message was still in flight. The
+            // capture sequence is strictly increasing, so `<` suffices.
+            let stale = matches!(self.checkpoints.get(&id), Some((at, _)) if seq < *at);
+            if !stale {
+                self.checkpoints.insert(id, (seq, snap));
+            }
+        }
+    }
+
+    /// Forward a router-internal job (evict/adopt/die/shutdown),
     /// accounting its queue-depth slot. Blocking is acceptable here:
     /// these jobs are part of a serialized router transaction and the
-    /// worker always drains. A dead worker drops the job (and with it
-    /// any reply sender), which a waiting peer observes as a dropped
-    /// request.
-    fn send(&mut self, shard: usize, job: Job) {
+    /// worker always drains. Returns false (and marks the shard dead)
+    /// when the worker is gone.
+    fn send(&mut self, shard: usize, job: Job) -> bool {
         let h = &self.shards[shard];
         h.depth.fetch_add(1, Ordering::Relaxed);
         if h.tx.send(job).is_err() {
             h.depth.fetch_sub(1, Ordering::Relaxed);
             self.dead[shard] = true;
+            return false;
         }
+        true
     }
 
     /// Forward a client-facing job without ever blocking the router on
     /// one saturated shard (head-of-line isolation): a full worker
     /// queue bounces the request with `backpressure` — the hot shard's
-    /// clients back off while every other shard keeps routing. Returns
-    /// whether the job was enqueued.
-    fn try_send_client(&mut self, shard: usize, job: Job) -> bool {
-        let h = &self.shards[shard];
-        h.depth.fetch_add(1, Ordering::Relaxed);
-        let (bounced, code, msg) = match h.tx.try_send(job) {
-            Ok(()) => return true,
-            Err(mpsc::TrySendError::Full(j)) => {
-                self.rejected[shard] += 1;
-                (j, ErrCode::Backpressure, "shard queue full")
+    /// clients back off while every other shard keeps routing. A *dead*
+    /// shard triggers recovery (its sessions re-adopt from checkpoints
+    /// onto survivors) and the job is retried once on its session's new
+    /// shard. Returns the shard the job was enqueued on.
+    fn route_client(&mut self, shard: usize, job: Job) -> Option<usize> {
+        let mut shard = shard;
+        let mut job = job;
+        for _attempt in 0..2 {
+            if self.dead[shard] {
+                self.recover(shard);
+                match self.reroute(&job) {
+                    Some(s) => shard = s,
+                    None => break,
+                }
             }
-            Err(mpsc::TrySendError::Disconnected(j)) => {
-                self.dead[shard] = true;
-                (j, ErrCode::Internal, "shard worker unavailable")
+            let h = &self.shards[shard];
+            h.depth.fetch_add(1, Ordering::Relaxed);
+            match h.tx.try_send(job) {
+                Ok(()) => return Some(shard),
+                Err(mpsc::TrySendError::Full(j)) => {
+                    self.shards[shard].depth.fetch_sub(1, Ordering::Relaxed);
+                    self.rejected[shard] += 1;
+                    if let Some(reply) = j.reply() {
+                        let _ = reply.send(err_json(ErrCode::Backpressure, "shard queue full"));
+                    }
+                    return None;
+                }
+                Err(mpsc::TrySendError::Disconnected(j)) => {
+                    self.shards[shard].depth.fetch_sub(1, Ordering::Relaxed);
+                    self.dead[shard] = true;
+                    job = j;
+                    // Loop: the dead-shard arm above recovers + reroutes.
+                }
             }
-        };
-        self.shards[shard].depth.fetch_sub(1, Ordering::Relaxed);
-        if let Some(reply) = bounced.reply() {
-            let _ = reply.send(err_json(code, msg));
         }
-        false
+        // Out of retries (or nowhere to reroute): answer the client.
+        let lost_session = job
+            .session_id()
+            .is_some_and(|id| !self.assign.contains_key(&id));
+        if let Some(reply) = job.reply() {
+            let _ = reply.send(if lost_session {
+                err_json(ErrCode::UnknownSession, "session lost with its worker")
+            } else {
+                err_json(ErrCode::Internal, "shard worker unavailable")
+            });
+        }
+        None
+    }
+
+    /// Where to retry a job after recovery: its session's new shard, or
+    /// the least-loaded live shard for session-less jobs. `None` when
+    /// the session was lost or every worker is dead.
+    fn reroute(&self, job: &Job) -> Option<usize> {
+        if let Some(id) = job.session_id() {
+            return self.assign.get(&id).copied();
+        }
+        let s = self.pick();
+        (!self.dead[s]).then_some(s)
     }
 
     /// Least-loaded *live* shard by open sessions, lowest index on ties
     /// — deterministic given the open/finish sequence. Falls back to
-    /// shard 0 only when every worker is dead (the open then bounces
+    /// shard 0 only when every worker is dead (the request then bounces
     /// with `internal` rather than silently hanging).
     fn pick(&self) -> usize {
         (0..self.shards.len())
@@ -481,9 +792,70 @@ impl Router {
             .unwrap_or(0)
     }
 
-    /// Migrate queued (not-yet-started) sessions off the hottest shard
-    /// when the open-session imbalance reaches the threshold. One
-    /// hot→cold round per trigger bounds the router stall.
+    /// The lowest-index live shard (serves `config`).
+    fn first_live(&self) -> usize {
+        (0..self.shards.len()).find(|&i| !self.dead[i]).unwrap_or(0)
+    }
+
+    /// Re-adopt every session assigned to a dead shard onto surviving
+    /// shards, restoring from the latest checkpoint when one exists. A
+    /// session that never shipped a checkpoint re-opens fresh when
+    /// checkpointing is enabled *and* the backend supports snapshots —
+    /// it then provably never flushed a feed, so nothing was ever
+    /// acknowledged for it. Otherwise (checkpointing disabled, or a
+    /// snapshot-less backend, where "no checkpoint" proves nothing) it
+    /// is dropped — later ops report `unknown_session` rather than
+    /// silently serving a reset transcript as a continuation.
+    fn recover(&mut self, dead_shard: usize) {
+        // Pull in checkpoints the worker shipped just before dying.
+        self.drain_backchannels();
+        let mut orphans: Vec<u64> = self
+            .assign
+            .iter()
+            .filter_map(|(&id, &s)| (s == dead_shard).then_some(id))
+            .collect();
+        orphans.sort_unstable();
+        for id in orphans {
+            self.open_count[dead_shard] = self.open_count[dead_shard].saturating_sub(1);
+            let target = self.pick();
+            if self.dead[target] {
+                // No live worker left: the session is unrecoverable.
+                self.assign.remove(&id);
+                self.checkpoints.remove(&id);
+                continue;
+            }
+            let snap = self.checkpoints.get(&id).map(|(_, bytes)| bytes.clone());
+            if snap.is_none() && self.checkpoint_interval == 0 {
+                self.assign.remove(&id);
+                continue;
+            }
+            // A tombstone (empty bytes) means acked state existed that
+            // capture could not cover: drop rather than restore stale
+            // state or reset the session.
+            if matches!(&snap, Some(bytes) if bytes.is_empty()) {
+                self.assign.remove(&id);
+                self.checkpoints.remove(&id);
+                continue;
+            }
+            match self.adopt_on(target, id, snap, false) {
+                AdoptOutcome::Adopted => {
+                    self.assign.insert(id, target);
+                    self.open_count[target] += 1;
+                    self.recovered += 1;
+                }
+                AdoptOutcome::Refused(_) | AdoptOutcome::Dead => {
+                    self.assign.remove(&id);
+                    self.checkpoints.remove(&id);
+                }
+            }
+        }
+    }
+
+    /// Migrate sessions off the hottest shard when the open-session
+    /// imbalance reaches the threshold — live, mid-utterance sessions
+    /// included (their state travels as snapshots; only sessions with a
+    /// feed in flight are briefly pinned). One hot→cold round per
+    /// trigger bounds the router stall.
     fn rebalance(&mut self) {
         let thr = self.rebalance_threshold;
         if thr == 0 || self.shards.len() < 2 {
@@ -509,84 +881,98 @@ impl Router {
             return;
         }
         let (tx, rx) = mpsc::channel();
-        self.send(hot, Job::Evict { max: want, reply: tx });
-        let Ok(moved) = rx.recv() else { return };
-        for (id, buf) in moved {
-            match self.adopt_on(cold, id, buf, false) {
-                Ok(()) => {
+        if !self.send(hot, Job::Evict { max: want, reply: tx }) {
+            return;
+        }
+        let Ok(moved) = rx.recv() else {
+            // The hot worker died holding the evict: recover it.
+            self.dead[hot] = true;
+            self.recover(hot);
+            return;
+        };
+        for (id, seq, bytes) in moved {
+            match self.adopt_on(cold, id, Some(bytes.clone()), false) {
+                AdoptOutcome::Adopted => {
+                    // The evicted snapshot is the freshest state this
+                    // session has — it doubles as its recovery
+                    // checkpoint (when checkpointing is enabled at all).
+                    if self.checkpoint_interval > 0 {
+                        self.checkpoints.insert(id, (seq, bytes));
+                    }
                     self.assign.insert(id, cold);
                     self.open_count[hot] -= 1;
                     self.open_count[cold] += 1;
                 }
-                // Cold shard refused but returned the buffer: put the
-                // session back where it came from (assignment and
-                // open_count for `hot` are still in place).
-                Err(Some(buf)) => {
-                    if self.adopt_on(hot, id, buf, true).is_err() {
-                        self.assign.remove(&id);
-                        self.open_count[hot] -= 1;
+                // Cold shard refused or died: bounce the session back to
+                // its origin from the retained snapshot copy.
+                AdoptOutcome::Refused(_) | AdoptOutcome::Dead => {
+                    if self.checkpoint_interval > 0 {
+                        self.checkpoints.insert(id, (seq, bytes.clone()));
                     }
-                }
-                // The worker died holding the buffer: the session is
-                // unrecoverable; later ops see unknown_session.
-                Err(None) => {
-                    self.assign.remove(&id);
-                    self.open_count[hot] -= 1;
+                    match self.adopt_on(hot, id, Some(bytes), true) {
+                        AdoptOutcome::Adopted => {}
+                        _ => {
+                            // Lost on both legs: unrecoverable.
+                            self.assign.remove(&id);
+                            self.open_count[hot] -= 1;
+                            self.checkpoints.remove(&id);
+                        }
+                    }
                 }
             }
         }
     }
 
-    /// Ask `shard` to adopt a migrated session. `Ok(())` on success,
-    /// `Err(Some(buf))` when the worker refused and handed the buffer
-    /// back, `Err(None)` when the worker died with it.
+    /// Ask `shard` to adopt a session from an optional snapshot.
     fn adopt_on(
         &mut self,
         shard: usize,
         id: u64,
-        buf: Vec<f32>,
+        snap: Option<Vec<u8>>,
         returning: bool,
-    ) -> Result<(), Option<Vec<f32>>> {
+    ) -> AdoptOutcome {
         let (tx, rx) = mpsc::channel();
-        self.send(shard, Job::Adopt { id, buf, returning, reply: tx });
+        if !self.send(shard, Job::Adopt { id, snap, returning, reply: tx }) {
+            return AdoptOutcome::Dead;
+        }
         match rx.recv() {
-            Ok(Ok(())) => Ok(()),
-            Ok(Err(buf)) => Err(Some(buf)),
-            Err(_) => Err(None),
+            Ok(Ok(())) => AdoptOutcome::Adopted,
+            Ok(Err(back)) => AdoptOutcome::Refused(back),
+            Err(_) => {
+                self.dead[shard] = true;
+                AdoptOutcome::Dead
+            }
         }
     }
 
-    /// Probe every worker for its live status. Broadcast first, then
-    /// collect, so the router stalls for the busiest single worker's
-    /// drain (max across shards), not the sum over all of them; workers
-    /// answer snapshots without flushing anything.
-    fn snapshot(&mut self) -> ShardMetrics {
-        let mut pending = Vec::with_capacity(self.shards.len());
-        for i in 0..self.shards.len() {
-            let (tx, rx) = mpsc::channel();
-            self.send(i, Job::Snapshot { reply: tx });
-            pending.push(rx);
-        }
-        let mut shards = Vec::with_capacity(pending.len());
-        for rx in pending {
-            if let Ok(snap) = rx.recv() {
-                shards.push(snap);
+    /// Aggregate the worker-published stats caches — no worker queue is
+    /// touched, so a `stats` poll never waits behind a batch flush
+    /// (this replaces the broadcast-then-collect snapshot probe). Only
+    /// live queue depth is read fresh; dead shards are omitted and
+    /// surface through the `responding` count.
+    fn snapshot(&self) -> ShardMetrics {
+        let mut shards = Vec::with_capacity(self.shards.len());
+        for (i, h) in self.shards.iter().enumerate() {
+            if self.dead[i] {
+                continue;
             }
-        }
-        // Workers can't see router-side bounces; fold them in here so
-        // `rejected` in summaries reflects shed load.
-        for snap in shards.iter_mut() {
-            snap.serve.rejected_backpressure += self.rejected[snap.shard];
+            let mut snap = h.cache.lock().unwrap().clone();
+            snap.queue_depth = h.depth.load(Ordering::Relaxed);
+            // Workers can't see router-side bounces; fold them in here
+            // so `rejected` in summaries reflects shed load.
+            snap.serve.rejected_backpressure += self.rejected[i];
+            shards.push(snap);
         }
         ShardMetrics { shards }
     }
 }
 
 /// Render the aggregated stats payload (the `stats` op's response):
-/// a merged summary plus one entry per shard. `workers` is the
-/// configured pool size; a `responding` count below it surfaces dead
-/// workers instead of silently shrinking the report.
-fn stats_json(m: &ShardMetrics, workers: usize) -> Json {
+/// a merged summary plus one entry per responding shard. `workers` is
+/// the configured pool size; a `responding` count below it surfaces
+/// dead workers instead of silently shrinking the report; `recovered`
+/// counts sessions re-adopted off dead shards.
+fn stats_json(m: &ShardMetrics, workers: usize, recovered: u64) -> Json {
     let shards: Vec<Json> = m
         .shards
         .iter()
@@ -596,6 +982,8 @@ fn stats_json(m: &ShardMetrics, workers: usize) -> Json {
                 ("sessions", Json::Num(s.open_sessions as f64)),
                 ("queue", Json::Num(s.queue_depth as f64)),
                 ("adopted", Json::Num(s.serve.sessions_adopted as f64)),
+                ("migrated", Json::Num(s.serve.sessions_migrated_out as f64)),
+                ("checkpoints", Json::Num(s.serve.checkpoints_published as f64)),
                 ("summary", Json::Str(s.serve.summary())),
             ])
         })
@@ -607,25 +995,21 @@ fn stats_json(m: &ShardMetrics, workers: usize) -> Json {
         ("workers", Json::Num(workers as f64)),
         ("responding", Json::Num(m.shards.len() as f64)),
         ("imbalance", Json::Num(m.imbalance() as f64)),
+        ("recovered", Json::Num(recovered as f64)),
         ("shards", Json::Arr(shards)),
     ])
 }
 
-/// The router loop: serializes assignment decisions, forwards work, and
-/// answers session-less requests itself. `retire` is the workers'
-/// un-book back-channel (failed opens), drained lazily before each
-/// decision so load counts stay honest.
-fn router_loop(jobs: mpsc::Receiver<RouterMsg>, retire: mpsc::Receiver<u64>, mut r: Router) {
+/// The router loop: serializes assignment decisions, forwards work,
+/// answers session-less requests itself, and owns the checkpoint store
+/// dead-shard recovery restores from.
+fn router_loop(jobs: mpsc::Receiver<RouterMsg>, mut r: Router) {
     loop {
         let msg = match jobs.recv() {
             Ok(m) => m,
             Err(_) => break,
         };
-        while let Ok(session) = retire.try_recv() {
-            if let Some(shard) = r.assign.remove(&session) {
-                r.open_count[shard] = r.open_count[shard].saturating_sub(1);
-            }
-        }
+        r.drain_backchannels();
         match msg {
             RouterMsg::Open { reply } => {
                 let id = r.next_id;
@@ -634,23 +1018,23 @@ fn router_loop(jobs: mpsc::Receiver<RouterMsg>, retire: mpsc::Receiver<u64>, mut
                 // Commit the assignment only once the job is enqueued —
                 // a bounced open leaves no phantom session behind. A
                 // worker-side engine.open() failure after enqueue
-                // (fallible PJRT open_state) comes back as a Retire
-                // notification and is un-booked below.
-                if r.try_send_client(shard, Job::Open { id, reply }) {
-                    r.assign.insert(id, shard);
-                    r.open_count[shard] += 1;
+                // (fallible PJRT open_state) comes back as a retire
+                // notification and is un-booked on the next drain.
+                if let Some(actual) = r.route_client(shard, Job::Open { id, reply }) {
+                    r.assign.insert(id, actual);
+                    r.open_count[actual] += 1;
                     r.rebalance();
                 }
             }
             RouterMsg::Feed { session, samples, enqueued, reply } => {
-                match r.assign.get(&session) {
+                match r.assign.get(&session).copied() {
                     None => {
                         let _ = reply.send(err_json(ErrCode::UnknownSession, "unknown session"));
                     }
-                    Some(&shard) => {
+                    Some(shard) => {
                         // A bounce answers the client itself; nothing
                         // reached the shard, so ordering is preserved.
-                        r.try_send_client(shard, Job::Feed { session, samples, enqueued, reply });
+                        r.route_client(shard, Job::Feed { session, samples, enqueued, reply });
                     }
                 }
             }
@@ -660,22 +1044,63 @@ fn router_loop(jobs: mpsc::Receiver<RouterMsg>, retire: mpsc::Receiver<u64>, mut
                 }
                 Some(shard) => {
                     // Retire the session only if the finish was actually
-                    // enqueued; on a bounce the client retries against a
-                    // still-open session.
-                    if r.try_send_client(shard, Job::Finish { session, reply }) {
+                    // enqueued (possibly on a recovery target); on a
+                    // bounce the client retries against a still-open
+                    // session.
+                    if let Some(actual) =
+                        r.route_client(shard, Job::Finish { session, reply })
+                    {
                         r.assign.remove(&session);
-                        r.open_count[shard] -= 1;
+                        r.checkpoints.remove(&session);
+                        r.open_count[actual] = r.open_count[actual].saturating_sub(1);
                         r.rebalance();
                     }
+                }
+            },
+            RouterMsg::Resume { session, reply } => match r.assign.get(&session).copied() {
+                None => {
+                    let _ = reply.send(err_json(
+                        ErrCode::UnknownSession,
+                        "unknown session (never opened, finished, or lost)",
+                    ));
+                }
+                Some(shard) => {
+                    r.route_client(shard, Job::Resume { session, reply });
                 }
             },
             RouterMsg::Stats { reply } => {
                 let workers = r.shards.len();
                 let snap = r.snapshot();
-                let _ = reply.send(stats_json(&snap, workers));
+                let _ = reply.send(stats_json(&snap, workers, r.recovered));
             }
             RouterMsg::Config { reply } => {
-                r.try_send_client(0, Job::Config { reply });
+                let shard = r.first_live();
+                r.route_client(shard, Job::Config { reply });
+            }
+            RouterMsg::Kill { shard, reply } => {
+                if shard >= r.shards.len() {
+                    let _ = reply.send(err_json(
+                        ErrCode::BadRequest,
+                        &format!("no such shard {shard}"),
+                    ));
+                } else {
+                    let before = r.recovered;
+                    if !r.dead[shard] {
+                        let (ack_tx, ack_rx) = mpsc::channel();
+                        if r.send(shard, Job::Die { ack: ack_tx }) {
+                            // Wait until the worker dropped its queue so
+                            // recovery sees a definitely-dead worker (a
+                            // recv error means it was already gone).
+                            let _ = ack_rx.recv();
+                        }
+                        r.dead[shard] = true;
+                        r.recover(shard);
+                    }
+                    let _ = reply.send(obj(&[
+                        ("killed", Json::Num(shard as f64)),
+                        ("recovered", Json::Num((r.recovered - before) as f64)),
+                    ]));
+                }
             }
             RouterMsg::Shutdown => break,
         }
@@ -684,17 +1109,20 @@ fn router_loop(jobs: mpsc::Receiver<RouterMsg>, retire: mpsc::Receiver<u64>, mut
     // gone); workers flush their staged batches before exiting. Routed
     // through `send` so queue-depth accounting stays balanced.
     for i in 0..r.shards.len() {
-        r.send(i, Job::Shutdown);
+        if !r.dead[i] {
+            r.send(i, Job::Shutdown);
+        }
     }
 }
 
 /// What shard 0 hands back to [`ShardPool::start`] once the engine is
-/// built: the policy, the worker seeds, and its own job channel.
+/// built: the policy, the worker seeds, and its own channel/cache set.
 struct Init {
     shard_cfg: ShardConfig,
     seeds: Vec<WorkerSeed>,
     tx0: mpsc::SyncSender<Job>,
     depth0: Arc<AtomicUsize>,
+    cache0: Arc<Mutex<ShardSnapshot>>,
 }
 
 /// A finished session's transcript and serving metrics, as reported by
@@ -711,6 +1139,22 @@ pub struct Finished {
     pub steps: usize,
     /// Mean lanes per fused step this session shared.
     pub batch_occupancy: f64,
+}
+
+/// A live session's progress, as reported by [`ShardPool::resume`] —
+/// what a reconnecting client needs to continue exactly where the
+/// server's acknowledged state left off.
+#[derive(Debug, Clone)]
+pub struct Resumed {
+    /// Decoding steps the server has executed for this session.
+    pub steps: usize,
+    /// Acoustic frames consumed by the decoder.
+    pub frames: usize,
+    /// Samples fed but not yet consumed by a step (held server-side;
+    /// the client must not re-send them).
+    pub buffered_samples: usize,
+    /// Current best partial transcript.
+    pub partial: String,
 }
 
 /// In-process handle to a sharded serving stack: a router thread over
@@ -739,8 +1183,10 @@ impl ShardPool {
     ) -> Result<ShardPool> {
         let (router_tx, router_rx) = mpsc::sync_channel::<RouterMsg>(queue_depth);
         let (retire_tx, retire_rx) = mpsc::channel::<u64>();
+        let (ckpt_tx, ckpt_rx) = mpsc::channel::<(u64, u64, Vec<u8>)>();
         let (init_tx, init_rx) = mpsc::channel::<Result<Init, String>>();
         let shard0_retire = retire_tx.clone();
+        let shard0_ckpt = ckpt_tx.clone();
         std::thread::Builder::new()
             .name("asrpu-shard-0".into())
             .spawn(move || {
@@ -770,13 +1216,16 @@ impl ShardPool {
                 }
                 let (tx0, rx0) = mpsc::sync_channel::<Job>(queue_depth);
                 let depth0 = Arc::new(AtomicUsize::new(0));
+                let cache0 = Arc::new(Mutex::new(ShardSnapshot::empty(0)));
                 let _ = init_tx.send(Ok(Init {
                     shard_cfg,
                     seeds,
-                    tx0,
+                    tx0: tx0.clone(),
                     depth0: Arc::clone(&depth0),
+                    cache0: Arc::clone(&cache0),
                 }));
-                worker_loop(0, engine, rx0, depth0, shard0_retire);
+                drop(tx0);
+                Worker::new(0, engine, depth0, shard0_retire, shard0_ckpt, cache0).run(rx0);
             })
             .context("spawning shard 0")?;
         let init = match init_rx.recv() {
@@ -784,20 +1233,35 @@ impl ShardPool {
             Ok(Err(msg)) => anyhow::bail!("engine init failed: {msg}"),
             Err(_) => anyhow::bail!("engine init thread died"),
         };
-        let mut handles = vec![ShardHandle { tx: init.tx0, depth: init.depth0 }];
+        let mut handles = vec![ShardHandle {
+            tx: init.tx0,
+            depth: init.depth0,
+            cache: init.cache0,
+        }];
         for (i, seed) in init.seeds.into_iter().enumerate() {
             let shard = i + 1;
             let (tx, rx) = mpsc::sync_channel::<Job>(queue_depth);
             let depth = Arc::new(AtomicUsize::new(0));
+            let cache = Arc::new(Mutex::new(ShardSnapshot::empty(shard)));
             let worker_depth = Arc::clone(&depth);
+            let worker_cache = Arc::clone(&cache);
             let worker_retire = retire_tx.clone();
+            let worker_ckpt = ckpt_tx.clone();
             std::thread::Builder::new()
                 .name(format!("asrpu-shard-{shard}"))
                 .spawn(move || {
-                    worker_loop(shard, seed.into_engine(), rx, worker_depth, worker_retire)
+                    Worker::new(
+                        shard,
+                        seed.into_engine(),
+                        worker_depth,
+                        worker_retire,
+                        worker_ckpt,
+                        worker_cache,
+                    )
+                    .run(rx)
                 })
                 .with_context(|| format!("spawning shard {shard}"))?;
-            handles.push(ShardHandle { tx, depth });
+            handles.push(ShardHandle { tx, depth, cache });
         }
         let workers = handles.len();
         let router = Router {
@@ -808,14 +1272,20 @@ impl ShardPool {
             open_count: vec![0; workers],
             next_id: 1,
             rebalance_threshold: init.shard_cfg.rebalance_threshold,
+            checkpoint_interval: init.shard_cfg.checkpoint_interval,
+            checkpoints: HashMap::new(),
+            recovered: 0,
+            retire_rx,
+            ckpt_rx,
         };
-        // The start-scope retire_tx drops here with the function; only
-        // worker clones remain, so the retire channel dies with the
-        // workers, never the other way around.
+        // The start-scope retire/ckpt senders drop here with the
+        // function; only worker clones remain, so the back-channels die
+        // with the workers, never the other way around.
         drop(retire_tx);
+        drop(ckpt_tx);
         std::thread::Builder::new()
             .name("asrpu-router".into())
-            .spawn(move || router_loop(router_rx, retire_rx, router))
+            .spawn(move || router_loop(router_rx, router))
             .context("spawning router")?;
         Ok(ShardPool { tx: router_tx, workers })
     }
@@ -916,7 +1386,43 @@ impl ShardPool {
         })
     }
 
+    /// Re-attach to a session (the protocol's `resume` op): report how
+    /// far the server has decoded so a reconnecting client replays only
+    /// unacknowledged audio. If the session's shard died, recovery runs
+    /// first and the report reflects the restored checkpoint — the
+    /// client's continuation point.
+    pub fn resume(&self, session: u64) -> Result<Resumed> {
+        let r = self.call(|reply| RouterMsg::Resume { session, reply })?;
+        Ok(Resumed {
+            steps: r
+                .get("steps")
+                .and_then(Json::as_usize)
+                .context("malformed resume reply")?,
+            frames: r.get("frames").and_then(Json::as_usize).unwrap_or(0),
+            buffered_samples: r
+                .get("buffered_samples")
+                .and_then(Json::as_usize)
+                .unwrap_or(0),
+            partial: r
+                .get("partial")
+                .and_then(Json::as_str)
+                .unwrap_or_default()
+                .to_string(),
+        })
+    }
+
+    /// Kill one worker *without* letting it flush or checkpoint — the
+    /// dead-shard crash hook behind the recovery tests and fault
+    /// drills. Blocks until the worker is provably gone and its
+    /// sessions have been re-adopted from their checkpoints; returns
+    /// how many sessions recovery restored.
+    pub fn kill_worker(&self, shard: usize) -> Result<usize> {
+        let r = self.call(|reply| RouterMsg::Kill { shard, reply })?;
+        Ok(r.get("recovered").and_then(Json::as_usize).unwrap_or(0))
+    }
+
     /// Aggregated per-shard serving metrics (the `stats` op's payload).
+    /// Served from worker-published caches — never waits on a worker.
     pub fn stats(&self) -> Result<Json> {
         self.call(|reply| RouterMsg::Stats { reply })
     }
@@ -952,6 +1458,7 @@ mod tests {
                     .shards(crate::config::ShardConfig {
                         workers,
                         rebalance_threshold: threshold,
+                        checkpoint_interval: 1,
                     })
                     .build()?)
             },
@@ -960,9 +1467,27 @@ mod tests {
         .unwrap()
     }
 
+    fn reference_engine() -> Engine {
+        Engine::builder()
+            .native(TdsModel::random(ModelConfig::tiny_tds(), 5))
+            .build()
+            .unwrap()
+    }
+
     fn utterance(seed: u64) -> Vec<f32> {
         let mut rng = Rng::new(seed);
         Synthesizer::default().render(&[1, 4], &mut rng).samples
+    }
+
+    fn sum_over_shards(stats: &Json, key: &str) -> f64 {
+        stats
+            .get("shards")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|s| s.get(key).unwrap().as_f64().unwrap())
+            .sum()
     }
 
     #[test]
@@ -986,26 +1511,22 @@ mod tests {
         // Deterministic assignment (least-open, lowest index on ties):
         // sessions 1,3 land on shard 0 and 2,4 on shard 1. Finishing 1
         // and 3 empties shard 0 → imbalance 2 hits the threshold and the
-        // router migrates the lowest queued id (2) to shard 0.
+        // router migrates the lowest eligible id (2) to shard 0.
         let p = pool(2, 2);
         let ids: Vec<u64> = (0..4).map(|_| p.open().unwrap()).collect();
         assert_eq!(ids, vec![1, 2, 3, 4]);
         p.finish(1).unwrap();
         p.finish(3).unwrap();
         let stats = p.stats().unwrap();
-        let shards = stats.get("shards").unwrap().as_arr().unwrap();
-        let adopted: f64 = shards
-            .iter()
-            .map(|s| s.get("adopted").unwrap().as_f64().unwrap())
-            .sum();
-        assert_eq!(adopted, 1.0, "exactly one queued session migrates: {stats:?}");
+        assert_eq!(
+            sum_over_shards(&stats, "adopted"),
+            1.0,
+            "exactly one session migrates: {stats:?}"
+        );
         assert_eq!(stats.get("imbalance").unwrap().as_f64(), Some(0.0));
         // The migrated session still decodes exactly like a 1-worker
         // engine fed the same audio.
-        let reference = Engine::builder()
-            .native(TdsModel::random(ModelConfig::tiny_tds(), 5))
-            .build()
-            .unwrap();
+        let reference = reference_engine();
         for id in [2u64, 4] {
             let audio = utterance(10 + id);
             let (t_ref, _) = reference.decode_utterance(&audio).unwrap();
@@ -1018,30 +1539,110 @@ mod tests {
     }
 
     #[test]
-    fn started_sessions_are_pinned() {
-        // A session that already ran steps must not migrate even under
-        // imbalance: evict candidates are steps == 0 only.
+    fn started_sessions_migrate_live_and_stay_bit_identical() {
+        // The tentpole invariant at the pool level: a session that has
+        // already run decoding steps migrates between shards
+        // (evict → snapshot → adopt → restore) and its final transcript
+        // is bit-identical to an unmigrated decode.
         let p = pool(2, 2);
         let a = p.open().unwrap(); // shard 0
         let b = p.open().unwrap(); // shard 1
         let c = p.open().unwrap(); // shard 0
-        // Run steps on every session so all are pinned.
+        let audio: HashMap<u64, Vec<f32>> =
+            [a, b, c].iter().map(|&id| (id, utterance(20 + id))).collect();
+        // Run steps on every session so all are mid-utterance.
         for &id in &[a, b, c] {
-            p.feed(id, &utterance(20 + id)).unwrap();
+            let half = audio[&id].len() / 2;
+            let (steps, _) = p.feed(id, &audio[&id][..half]).unwrap();
+            assert!(steps > 0, "session {id} must have started");
         }
-        // Finishing b empties shard 1 → imbalance 2, but both shard-0
-        // sessions are pinned: no migration may occur.
+        // Finishing b empties shard 1 → imbalance 2: the lowest-id
+        // shard-0 session (a) migrates live to shard 1.
         p.finish(b).unwrap();
         let stats = p.stats().unwrap();
-        let shards = stats.get("shards").unwrap().as_arr().unwrap();
-        let adopted: f64 = shards
-            .iter()
-            .map(|s| s.get("adopted").unwrap().as_f64().unwrap())
-            .sum();
-        assert_eq!(adopted, 0.0, "pinned sessions must not move: {stats:?}");
+        assert_eq!(
+            sum_over_shards(&stats, "adopted"),
+            1.0,
+            "one live session must migrate: {stats:?}"
+        );
+        assert_eq!(
+            sum_over_shards(&stats, "migrated"),
+            1.0,
+            "the evicting shard must report the hand-off: {stats:?}"
+        );
+        assert!(
+            sum_over_shards(&stats, "checkpoints") >= 3.0,
+            "every flushed session checkpoints: {stats:?}"
+        );
+        let reference = reference_engine();
         for id in [a, c] {
-            p.finish(id).unwrap();
+            let half = audio[&id].len() / 2;
+            let (t_ref, _) = reference.decode_utterance(&audio[&id]).unwrap();
+            p.feed(id, &audio[&id][half..]).unwrap();
+            let done = p.finish(id).unwrap();
+            assert_eq!(done.text, t_ref.text, "session {id}");
+            assert_eq!(done.score, t_ref.score as f64, "session {id}");
         }
+        p.shutdown();
+    }
+
+    #[test]
+    fn killed_worker_sessions_recover_from_checkpoints() {
+        // Crash one worker mid-stream: its sessions re-adopt onto the
+        // survivor from their checkpoints, the in-flight client keeps
+        // going, and transcripts stay bit-identical (every feed was
+        // flushed, so checkpoints cover all acknowledged audio).
+        let p = pool(2, 0); // rebalancing off: placement stays put
+        let a = p.open().unwrap(); // shard 0
+        let b = p.open().unwrap(); // shard 1
+        let audio_a = utterance(70);
+        let audio_b = utterance(71);
+        let half_a = audio_a.len() / 2;
+        let half_b = audio_b.len() / 2;
+        p.feed(a, &audio_a[..half_a]).unwrap();
+        p.feed(b, &audio_b[..half_b]).unwrap();
+        let recovered = p.kill_worker(0).unwrap();
+        assert_eq!(recovered, 1, "shard 0's one session must recover");
+        // Resume reports the restored progress a reconnecting client
+        // would continue from.
+        let res = p.resume(a).unwrap();
+        assert!(res.steps > 0, "recovered session kept its steps");
+        p.feed(a, &audio_a[half_a..]).unwrap();
+        p.feed(b, &audio_b[half_b..]).unwrap();
+        let reference = reference_engine();
+        let (t_a, _) = reference.decode_utterance(&audio_a).unwrap();
+        let (t_b, _) = reference.decode_utterance(&audio_b).unwrap();
+        let done_a = p.finish(a).unwrap();
+        assert_eq!(done_a.text, t_a.text, "recovered session transcript");
+        assert_eq!(done_a.score, t_a.score as f64);
+        let done_b = p.finish(b).unwrap();
+        assert_eq!(done_b.text, t_b.text, "surviving shard unaffected");
+        let stats = p.stats().unwrap();
+        assert_eq!(stats.get("workers").unwrap().as_f64(), Some(2.0));
+        assert_eq!(stats.get("responding").unwrap().as_f64(), Some(1.0));
+        assert_eq!(stats.get("recovered").unwrap().as_f64(), Some(1.0));
+        // Killing an already-dead shard is a harmless no-op.
+        assert_eq!(p.kill_worker(0).unwrap(), 0);
+        p.shutdown();
+    }
+
+    #[test]
+    fn resume_reports_progress_and_unknowns() {
+        let p = pool(1, 2);
+        let id = p.open().unwrap();
+        let res = p.resume(id).unwrap();
+        assert_eq!(res.steps, 0);
+        assert_eq!(res.buffered_samples, 0);
+        let audio = utterance(5);
+        let (steps, _) = p.feed(id, &audio).unwrap();
+        let res = p.resume(id).unwrap();
+        assert_eq!(res.steps, steps);
+        assert!(res.buffered_samples < 1520, "whole steps were consumed");
+        assert_eq!(res.frames, steps * 4, "4 score vectors per step");
+        let err = format!("{:#}", p.resume(999).unwrap_err());
+        assert!(err.contains("unknown_session"), "{err}");
+        p.finish(id).unwrap();
+        assert!(p.resume(id).is_err(), "finished session is gone");
         p.shutdown();
     }
 
@@ -1054,6 +1655,7 @@ mod tests {
         }
         let stats = p.stats().unwrap();
         assert_eq!(stats.get("workers").unwrap().as_f64(), Some(4.0));
+        assert_eq!(stats.get("responding").unwrap().as_f64(), Some(4.0));
         let shards = stats.get("shards").unwrap().as_arr().unwrap();
         assert_eq!(shards.len(), 4);
         // Deterministic least-loaded assignment: 2 sessions per shard.

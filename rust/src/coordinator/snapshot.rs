@@ -1,0 +1,303 @@
+//! The relocatable session-state object: everything one streaming
+//! session is, as data — the refactor that turns shard-resident implicit
+//! state into something the router can move, checkpoint and restore.
+//!
+//! A [`SessionSnapshot`] composes the three state layers every session
+//! carries:
+//!
+//! * **acoustic** — the backend's per-lane streaming state, serialized
+//!   by [`AmBackend::snapshot_lane`](super::backend::AmBackend) into
+//!   named tensors (native: conv histories; XLA: device buffers copied
+//!   to host);
+//! * **decoder** — the beam state as a
+//!   [`DecoderSnapshot`](crate::decoder::DecoderSnapshot) (hypothesis
+//!   set, LM contexts, backtrack arena, pruner stats);
+//! * **engine** — buffered not-yet-consumed audio plus the session's
+//!   step/audio counters ([`SessionMetrics`]).
+//!
+//! Identity is part of the snapshot: the backend name and model name
+//! are recorded and validated on restore, so a snapshot can never be
+//! revived against different weights and silently decode garbage.
+//!
+//! ## Wire format
+//!
+//! ```text
+//! magic    : 8 bytes = b"ASRPUSNP"
+//! version  : u32 le  = SNAPSHOT_VERSION
+//! len      : u64 le  — payload byte length
+//! crc32    : u32 le  — IEEE CRC-32 over the payload
+//! payload  : a util::tensor_io container (deterministic bytes)
+//! ```
+//!
+//! The payload is an ordinary tensor container: `meta.*` identity and
+//! counter tensors, `audio.buffered` (f32 samples), `dec.*` decoder
+//! tensors and `am.*` backend tensors. Encoding is deterministic (the
+//! container preserves order and payload bytes verbatim), decode
+//! verifies magic, version and checksum before parsing, and every
+//! checkpoint/migration in [`super::shard`] ships these exact bytes —
+//! the serialization path is the production path, not a test fixture.
+#![deny(missing_docs)]
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::decoder::DecoderSnapshot;
+use crate::util::tensor_io::{u64_from_words, u64_words, Tensor, TensorFile};
+
+use super::engine::SessionMetrics;
+
+/// Snapshot format version; bumped on any layout change so a newer
+/// server refuses stale checkpoints instead of misparsing them.
+pub const SNAPSHOT_VERSION: u32 = 1;
+
+const MAGIC: &[u8; 8] = b"ASRPUSNP";
+
+/// IEEE CRC-32 (reflected, polynomial 0xEDB88320) — bitwise, no table:
+/// snapshots are kilobytes and checksummed once per checkpoint, so
+/// simplicity beats throughput here.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+/// A complete, self-describing copy of one session's state. Plain data
+/// (`Send`), produced by [`Engine::snapshot`](super::Engine::snapshot)
+/// and consumed by [`Engine::restore`](super::Engine::restore);
+/// [`Self::encode`]/[`Self::decode`] are the byte round-trip shards and
+/// checkpoints ship.
+#[derive(Debug, Clone)]
+pub struct SessionSnapshot {
+    /// Backend that produced the acoustic tensors (`native-f32` | …);
+    /// restore refuses a mismatch.
+    pub backend: String,
+    /// Model name the session was decoding with; restore refuses a
+    /// mismatch.
+    pub model: String,
+    /// Audio staged but not yet consumed by a decoding step.
+    pub buffered: Vec<f32>,
+    /// The session's accumulated step/audio/latency counters.
+    pub metrics: SessionMetrics,
+    /// Backend-defined acoustic lane state (names unprefixed here;
+    /// `am.`-prefixed inside the encoded container).
+    pub am: TensorFile,
+    /// The beam/decoder lane state.
+    pub decoder: DecoderSnapshot,
+}
+
+/// Encode a `u64` as its `[lo, hi]` u32 words.
+fn push_u64(out: &mut Vec<u32>, v: u64) {
+    out.extend_from_slice(&u64_words(v));
+}
+
+/// Encode an `f64` bit pattern as two u32 words (lo, hi) — lossless.
+fn push_f64(out: &mut Vec<u32>, v: f64) {
+    push_u64(out, v.to_bits());
+}
+
+impl SessionSnapshot {
+    /// Serialize to the versioned, checksummed wire format.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut tf = TensorFile::new();
+        let str_tensor = |name: &str, s: &str| {
+            Tensor {
+                name: name.to_string(),
+                dims: vec![s.len()],
+                data: crate::util::tensor_io::TensorData::I8(
+                    s.as_bytes().iter().map(|&b| b as i8).collect(),
+                ),
+            }
+        };
+        tf.push(str_tensor("meta.backend", &self.backend));
+        tf.push(str_tensor("meta.model", &self.model));
+        let m = &self.metrics;
+        let mut counters = Vec::with_capacity(16);
+        push_u64(&mut counters, m.steps as u64);
+        push_u64(&mut counters, m.batched_steps as u64);
+        push_u64(&mut counters, m.batch_lanes as u64);
+        push_u64(&mut counters, m.snapshots_taken as u64);
+        push_f64(&mut counters, m.audio_s);
+        push_f64(&mut counters, m.compute_s);
+        push_f64(&mut counters, m.am_s);
+        push_f64(&mut counters, m.search_s);
+        tf.push(Tensor::u32("meta.metrics", vec![counters.len()], counters));
+        tf.push(Tensor::f32(
+            "audio.buffered",
+            vec![self.buffered.len()],
+            self.buffered.clone(),
+        ));
+        self.decoder.write_tensors(&mut tf);
+        for t in &self.am.tensors {
+            tf.push(Tensor {
+                name: format!("am.{}", t.name),
+                dims: t.dims.clone(),
+                data: t.data.clone(),
+            });
+        }
+        let payload = tf.to_bytes().expect("snapshot tensors must validate");
+        let mut out = Vec::with_capacity(24 + payload.len());
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&SNAPSHOT_VERSION.to_le_bytes());
+        out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        out.extend_from_slice(&crc32(&payload).to_le_bytes());
+        out.extend_from_slice(&payload);
+        out
+    }
+
+    /// Parse and verify (magic, version, length, checksum) an encoded
+    /// snapshot.
+    pub fn decode(bytes: &[u8]) -> Result<SessionSnapshot> {
+        ensure!(bytes.len() >= 24, "snapshot truncated: {} bytes", bytes.len());
+        ensure!(&bytes[..8] == MAGIC, "bad magic: not a session snapshot");
+        let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+        if version != SNAPSHOT_VERSION {
+            bail!("snapshot version {version}, this build reads {SNAPSHOT_VERSION}");
+        }
+        let len = u64::from_le_bytes(bytes[12..20].try_into().unwrap()) as usize;
+        let crc = u32::from_le_bytes(bytes[20..24].try_into().unwrap());
+        let payload = bytes
+            .get(24..24 + len)
+            .context("snapshot payload truncated")?;
+        ensure!(24 + len == bytes.len(), "trailing bytes after snapshot payload");
+        let actual = crc32(payload);
+        ensure!(
+            actual == crc,
+            "snapshot checksum mismatch: stored {crc:#010x}, computed {actual:#010x}"
+        );
+        let tf = TensorFile::from_bytes(payload).context("parsing snapshot payload")?;
+        let read_str = |name: &str| -> Result<String> {
+            let t = tf.require(name)?;
+            let bytes: Vec<u8> = t.as_i8()?.iter().map(|&b| b as u8).collect();
+            String::from_utf8(bytes).with_context(|| format!("{name} not utf-8"))
+        };
+        let backend = read_str("meta.backend")?;
+        let model = read_str("meta.model")?;
+        let counters = tf.require("meta.metrics")?.as_u32()?;
+        ensure!(
+            counters.len() == 16,
+            "snapshot metrics: expected 16 words, got {}",
+            counters.len()
+        );
+        let word = |i: usize| u64_from_words(counters[2 * i], counters[2 * i + 1]);
+        let metrics = SessionMetrics {
+            steps: word(0) as usize,
+            batched_steps: word(1) as usize,
+            batch_lanes: word(2) as usize,
+            snapshots_taken: word(3) as usize,
+            audio_s: f64::from_bits(word(4)),
+            compute_s: f64::from_bits(word(5)),
+            am_s: f64::from_bits(word(6)),
+            search_s: f64::from_bits(word(7)),
+        };
+        let buffered = tf.require("audio.buffered")?.as_f32()?.to_vec();
+        let decoder = DecoderSnapshot::read_tensors(&tf)?;
+        let mut am = TensorFile::new();
+        for t in &tf.tensors {
+            if let Some(name) = t.name.strip_prefix("am.") {
+                am.push(Tensor {
+                    name: name.to_string(),
+                    dims: t.dims.clone(),
+                    data: t.data.clone(),
+                });
+            }
+        }
+        Ok(SessionSnapshot { backend, model, buffered, metrics, am, decoder })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DecoderConfig;
+    use crate::decoder::BeamDecoder;
+
+    #[test]
+    fn crc32_known_vectors() {
+        // The standard IEEE check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    fn sample_snapshot() -> SessionSnapshot {
+        let lex = crate::synth::spec::lexicon();
+        let lm = crate::lm::NgramLm::estimate(
+            &crate::synth::spec::sample_corpus(20, 3),
+            0.4,
+        )
+        .unwrap();
+        let dec = BeamDecoder::new(&lex, &lm, DecoderConfig::default()).unwrap();
+        let state = dec.start();
+        let mut am = TensorFile::new();
+        am.push(Tensor::f32("conv0", vec![2, 3], vec![1., 2., 3., 4., 5., 6.]));
+        SessionSnapshot {
+            backend: "native-f32".into(),
+            model: "tiny-tds".into(),
+            buffered: vec![0.25, -0.5, 0.75],
+            metrics: SessionMetrics {
+                steps: 7,
+                audio_s: 0.56,
+                compute_s: 0.01,
+                am_s: 0.006,
+                search_s: 0.004,
+                batched_steps: 5,
+                batch_lanes: 9,
+                snapshots_taken: 3,
+            },
+            am,
+            decoder: crate::decoder::DecoderSnapshot::capture(&state),
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let snap = sample_snapshot();
+        let bytes = snap.encode();
+        let back = SessionSnapshot::decode(&bytes).unwrap();
+        assert_eq!(back.backend, "native-f32");
+        assert_eq!(back.model, "tiny-tds");
+        assert_eq!(back.buffered, snap.buffered);
+        assert_eq!(back.metrics.steps, 7);
+        assert_eq!(back.metrics.batched_steps, 5);
+        assert_eq!(back.metrics.batch_lanes, 9);
+        assert_eq!(back.metrics.snapshots_taken, 3);
+        assert_eq!(back.metrics.audio_s, 0.56);
+        assert_eq!(back.metrics.compute_s, 0.01);
+        assert_eq!(back.am.get("conv0").unwrap(), snap.am.get("conv0").unwrap());
+        assert_eq!(back.decoder, snap.decoder);
+        // Deterministic: equal snapshots encode to equal bytes.
+        assert_eq!(bytes, back.encode());
+    }
+
+    #[test]
+    fn decode_rejects_corruption() {
+        let snap = sample_snapshot();
+        let good = snap.encode();
+        // Truncation.
+        assert!(SessionSnapshot::decode(&good[..10]).is_err());
+        assert!(SessionSnapshot::decode(&good[..good.len() - 1]).is_err());
+        // Bad magic.
+        let mut bad = good.clone();
+        bad[0] ^= 0xFF;
+        assert!(SessionSnapshot::decode(&bad).is_err());
+        // Unknown version.
+        let mut bad = good.clone();
+        bad[8] = 99;
+        let err = format!("{:#}", SessionSnapshot::decode(&bad).unwrap_err());
+        assert!(err.contains("version"), "{err}");
+        // Payload bit flip → checksum mismatch.
+        let mut bad = good.clone();
+        let n = bad.len();
+        bad[n - 1] ^= 0x01;
+        let err = format!("{:#}", SessionSnapshot::decode(&bad).unwrap_err());
+        assert!(err.contains("checksum"), "{err}");
+        // Trailing garbage.
+        let mut bad = good.clone();
+        bad.push(0);
+        assert!(SessionSnapshot::decode(&bad).is_err());
+    }
+}

@@ -19,7 +19,8 @@ pub mod prune;
 use crate::config::DecoderConfig;
 use crate::lexicon::{Lexicon, BLANK, ROOT};
 use crate::lm::{LmState, NgramLm};
-use anyhow::Result;
+use crate::util::tensor_io::{u64_from_words, u64_words, Tensor, TensorFile};
+use anyhow::{ensure, Result};
 use std::borrow::Cow;
 pub use prune::{KeyMap, PruneStats, Pruner};
 
@@ -92,6 +93,208 @@ pub struct Transcript {
     pub words: Vec<u32>,
     pub text: String,
     pub score: f32,
+}
+
+/// A relocatable copy of one lane's decode state — the per-channel
+/// state object of batched online decoding (Braun et al.) extracted
+/// from [`DecodeState`]: the live hypothesis set (scores, lexicon
+/// nodes, LM contexts, CTC last-tokens, backtrack links), the word
+/// backtrack arena, the frame counter and the accumulated pruner
+/// statistics. Encodes to and from [`TensorFile`] tensors
+/// deterministically, so a snapshot taken on one shard restores
+/// bit-identically on another (`tests/snapshot_parity.rs`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DecoderSnapshot {
+    scores: Vec<f32>,
+    nodes: Vec<u32>,
+    lms: Vec<u32>,
+    last_tokens: Vec<u32>,
+    backs: Vec<u32>,
+    /// Backtrack arena, interleaved `[parent, word]` pairs.
+    arena: Vec<u32>,
+    /// Frame counter + the six `PruneStats` counters, as u64 lo/hi pairs.
+    counters: Vec<u32>,
+}
+
+impl DecoderSnapshot {
+    /// Capture a lane's decode state (a deep copy; the live state keeps
+    /// decoding).
+    pub fn capture(state: &DecodeState) -> Self {
+        let mut snap = DecoderSnapshot {
+            scores: Vec::with_capacity(state.hyps.len()),
+            nodes: Vec::with_capacity(state.hyps.len()),
+            lms: Vec::with_capacity(state.hyps.len()),
+            last_tokens: Vec::with_capacity(state.hyps.len()),
+            backs: Vec::with_capacity(state.hyps.len()),
+            arena: Vec::with_capacity(2 * state.arena.len()),
+            counters: Vec::with_capacity(14),
+        };
+        for h in &state.hyps {
+            snap.scores.push(h.score);
+            snap.nodes.push(h.node);
+            snap.lms.push(h.lm.0);
+            snap.last_tokens.push(h.last_token);
+            snap.backs.push(h.back);
+        }
+        for &(parent, word) in &state.arena {
+            snap.arena.push(parent);
+            snap.arena.push(word);
+        }
+        for v in [
+            state.frames as u64,
+            state.stats.generated,
+            state.stats.merged,
+            state.stats.beam_pruned,
+            state.stats.capacity_pruned,
+            state.stats.peak_live,
+            state.stats.rounds,
+        ] {
+            snap.counters.extend_from_slice(&u64_words(v));
+        }
+        snap
+    }
+
+    /// Rebuild the decode state this snapshot captured.
+    pub fn restore(&self) -> DecodeState {
+        let hyps = self
+            .scores
+            .iter()
+            .zip(&self.nodes)
+            .zip(&self.lms)
+            .zip(&self.last_tokens)
+            .zip(&self.backs)
+            .map(|((((&score, &node), &lm), &last_token), &back)| Hyp {
+                score,
+                node,
+                lm: LmState(lm),
+                last_token,
+                back,
+            })
+            .collect();
+        let arena = self
+            .arena
+            .chunks_exact(2)
+            .map(|p| (p[0], p[1]))
+            .collect();
+        let c = |i: usize| u64_from_words(self.counters[2 * i], self.counters[2 * i + 1]);
+        DecodeState {
+            hyps,
+            arena,
+            frames: c(0) as usize,
+            stats: PruneStats {
+                generated: c(1),
+                merged: c(2),
+                beam_pruned: c(3),
+                capacity_pruned: c(4),
+                peak_live: c(5),
+                rounds: c(6),
+            },
+        }
+    }
+
+    /// Write the snapshot as `dec.*` tensors (scores as f32, ids and
+    /// counters as u32 — lossless both ways).
+    pub fn write_tensors(&self, tf: &mut TensorFile) {
+        let n = self.scores.len();
+        tf.push(Tensor::f32("dec.hyp.score", vec![n], self.scores.clone()));
+        tf.push(Tensor::u32("dec.hyp.node", vec![n], self.nodes.clone()));
+        tf.push(Tensor::u32("dec.hyp.lm", vec![n], self.lms.clone()));
+        tf.push(Tensor::u32("dec.hyp.last", vec![n], self.last_tokens.clone()));
+        tf.push(Tensor::u32("dec.hyp.back", vec![n], self.backs.clone()));
+        tf.push(Tensor::u32(
+            "dec.arena",
+            vec![self.arena.len() / 2, 2],
+            self.arena.clone(),
+        ));
+        tf.push(Tensor::u32(
+            "dec.counters",
+            vec![self.counters.len()],
+            self.counters.clone(),
+        ));
+    }
+
+    /// Read a snapshot back from `dec.*` tensors, validating shapes.
+    pub fn read_tensors(tf: &TensorFile) -> Result<Self> {
+        let scores = tf.require("dec.hyp.score")?.as_f32()?.to_vec();
+        let nodes = tf.require("dec.hyp.node")?.as_u32()?.to_vec();
+        let lms = tf.require("dec.hyp.lm")?.as_u32()?.to_vec();
+        let last_tokens = tf.require("dec.hyp.last")?.as_u32()?.to_vec();
+        let backs = tf.require("dec.hyp.back")?.as_u32()?.to_vec();
+        let n = scores.len();
+        ensure!(
+            nodes.len() == n && lms.len() == n && last_tokens.len() == n && backs.len() == n,
+            "decoder snapshot: ragged hypothesis columns"
+        );
+        let arena = tf.require("dec.arena")?.as_u32()?.to_vec();
+        ensure!(arena.len() % 2 == 0, "decoder snapshot: odd arena payload");
+        let counters = tf.require("dec.counters")?.as_u32()?.to_vec();
+        ensure!(
+            counters.len() == 14,
+            "decoder snapshot: expected 14 counter words, got {}",
+            counters.len()
+        );
+        let arena_len = arena.len() as u64 / 2;
+        for (i, &b) in backs.iter().enumerate() {
+            ensure!(
+                b == NO_BACK || (b as u64) < arena_len,
+                "decoder snapshot: hypothesis {i} backlink {b} outside arena"
+            );
+        }
+        // Arena parents must point strictly earlier (how the live
+        // decoder builds them) — this guarantees backtrack walks
+        // terminate. Structural checks only; the resource-relative id
+        // ranges (trie nodes, LM states, words, tokens) are validated
+        // by [`Self::validate_bounds`] at restore time, where the
+        // decoding resources are known.
+        for (i, pair) in arena.chunks_exact(2).enumerate() {
+            let parent = pair[0];
+            ensure!(
+                parent == NO_BACK || (parent as u64) < i as u64,
+                "decoder snapshot: arena entry {i} parent {parent} not an earlier entry"
+            );
+        }
+        Ok(DecoderSnapshot { scores, nodes, lms, last_tokens, backs, arena, counters })
+    }
+
+    /// Range-check every id against the decoding resources the restored
+    /// state will run against, so a corrupt-but-CRC-valid snapshot can
+    /// never index out of bounds inside the lexicon trie, the LM tables
+    /// or the word list mid-decode. Called by `Engine::restore` with
+    /// its own lexicon/LM dimensions.
+    pub fn validate_bounds(
+        &self,
+        trie_nodes: usize,
+        lm_vocab: usize,
+        lexicon_words: usize,
+        tokens: usize,
+    ) -> Result<()> {
+        for (i, &n) in self.nodes.iter().enumerate() {
+            ensure!(
+                (n as usize) < trie_nodes,
+                "decoder snapshot: hypothesis {i} trie node {n} >= {trie_nodes}"
+            );
+        }
+        for (i, &l) in self.lms.iter().enumerate() {
+            ensure!(
+                (l as usize) < lm_vocab,
+                "decoder snapshot: hypothesis {i} LM state {l} >= {lm_vocab}"
+            );
+        }
+        for (i, &t) in self.last_tokens.iter().enumerate() {
+            ensure!(
+                (t as usize) < tokens,
+                "decoder snapshot: hypothesis {i} last token {t} >= {tokens}"
+            );
+        }
+        for (i, pair) in self.arena.chunks_exact(2).enumerate() {
+            let word = pair[1];
+            ensure!(
+                (word as usize) < lexicon_words,
+                "decoder snapshot: arena entry {i} word {word} >= {lexicon_words}"
+            );
+        }
+        Ok(())
+    }
 }
 
 /// The beam-search decoder.
@@ -635,5 +838,106 @@ mod tests {
             assert!(best <= prev_best + 1e-5);
             prev_best = best;
         }
+    }
+
+    #[test]
+    fn snapshot_mid_decode_restores_bit_identically() {
+        // Snapshot after a prefix of frames, round-trip through tensors,
+        // and continue both the original and the restored state: every
+        // hypothesis, the stats and the final transcript must be equal.
+        let (lex, lm) = fixtures();
+        let a = lex.tokens.id("a").unwrap();
+        let b = lex.tokens.id("b").unwrap();
+        let c = lex.tokens.id("c").unwrap();
+        let dec = BeamDecoder::new(&lex, &lm, DecoderConfig::default()).unwrap();
+        let tokens = lex.tokens.len();
+        let path = [a, b, BLANK, b, a, c, BLANK, a, b, c];
+        let frames = frames_for(&path, tokens);
+        for cut in [1usize, 4, 7] {
+            let mut live = dec.start();
+            for row in frames[..cut * tokens].chunks(tokens) {
+                dec.step(&mut live, row);
+            }
+            let mut tf = TensorFile::new();
+            DecoderSnapshot::capture(&live).write_tensors(&mut tf);
+            // Serialize the container itself too: the snapshot must
+            // survive the byte round-trip shards actually ship.
+            let tf = TensorFile::from_bytes(&tf.to_bytes().unwrap()).unwrap();
+            let mut restored = DecoderSnapshot::read_tensors(&tf).unwrap().restore();
+            assert_eq!(live.hyps, restored.hyps, "cut {cut}");
+            assert_eq!(live.arena, restored.arena, "cut {cut}");
+            assert_eq!(live.stats, restored.stats, "cut {cut}");
+            assert_eq!(live.frames, restored.frames, "cut {cut}");
+            for row in frames[cut * tokens..].chunks(tokens) {
+                dec.step(&mut live, row);
+                dec.step(&mut restored, row);
+            }
+            let t_live = dec.finish(&live);
+            let t_rest = dec.finish(&restored);
+            assert_eq!(t_live.text, t_rest.text, "cut {cut}");
+            assert_eq!(t_live.score, t_rest.score, "cut {cut}");
+        }
+    }
+
+    #[test]
+    fn snapshot_rejects_corrupt_tensors() {
+        let (lex, lm) = fixtures();
+        let dec = BeamDecoder::new(&lex, &lm, DecoderConfig::default()).unwrap();
+        let st = dec.start();
+        let mut tf = TensorFile::new();
+        DecoderSnapshot::capture(&st).write_tensors(&mut tf);
+        assert!(DecoderSnapshot::read_tensors(&tf).is_ok());
+        // Missing column.
+        let mut partial = TensorFile::new();
+        for t in tf.tensors.iter().filter(|t| t.name != "dec.hyp.lm") {
+            partial.push(t.clone());
+        }
+        assert!(DecoderSnapshot::read_tensors(&partial).is_err());
+        // Out-of-range backlink.
+        let mut bad = TensorFile::new();
+        for t in &tf.tensors {
+            if t.name == "dec.hyp.back" {
+                bad.push(Tensor::u32("dec.hyp.back", t.dims.clone(), vec![5]));
+            } else {
+                bad.push(t.clone());
+            }
+        }
+        assert!(DecoderSnapshot::read_tensors(&bad).is_err());
+        // Arena parent that is not an earlier entry (would loop or
+        // index out of bounds during backtracking).
+        let mut bad = TensorFile::new();
+        for t in &tf.tensors {
+            if t.name == "dec.arena" {
+                bad.push(Tensor::u32("dec.arena", vec![1, 2], vec![5, 0]));
+            } else {
+                bad.push(t.clone());
+            }
+        }
+        assert!(DecoderSnapshot::read_tensors(&bad).is_err());
+    }
+
+    #[test]
+    fn snapshot_bounds_validation_catches_out_of_range_ids() {
+        let (lex, lm) = fixtures();
+        let dec = BeamDecoder::new(&lex, &lm, DecoderConfig::default()).unwrap();
+        let mut st = dec.start();
+        let a = lex.tokens.id("a").unwrap();
+        let b = lex.tokens.id("b").unwrap();
+        for row in frames_for(&[a, b], lex.tokens.len()).chunks(lex.tokens.len()) {
+            dec.step(&mut st, row);
+        }
+        let snap = DecoderSnapshot::capture(&st);
+        let (nodes, vocab, words, tokens) = (
+            lex.num_nodes(),
+            lm.vocab_len(),
+            lex.words.len(),
+            lex.tokens.len(),
+        );
+        snap.validate_bounds(nodes, vocab, words, tokens).unwrap();
+        // Shrinking any resource below a used id must fail — the same
+        // check that rejects a snapshot with out-of-range ids.
+        assert!(snap.validate_bounds(1, vocab, words, tokens).is_err());
+        assert!(snap.validate_bounds(nodes, 1, words, tokens).is_err());
+        assert!(snap.validate_bounds(nodes, vocab, words, 1).is_err());
     }
 }

@@ -13,9 +13,13 @@
 //!   (bit-identical to scalar decoding per lane), and whose serving
 //!   layer shards sessions across a pool of device workers over one
 //!   `Arc`-shared model (bit-identical to the 1-worker engine —
-//!   `tests/shard_parity.rs`). Engines are assembled through
-//!   `Engine::builder()` and served over the v2 JSON-lines protocol
-//!   (hello/config handshake, structured error codes);
+//!   `tests/shard_parity.rs`). Per-session state is an explicit,
+//!   serializable `SessionSnapshot`, so sessions migrate live between
+//!   shards, survive worker crashes via recovery checkpoints, and
+//!   resume after client reconnects (`tests/snapshot_parity.rs`).
+//!   Engines are assembled through `Engine::builder()` and served over
+//!   the v2 JSON-lines protocol (hello/config handshake, structured
+//!   error codes, `resume`);
 //! * a **cycle-approximate simulator of the ASRPU chip** ([`accel`]) with
 //!   analytical area/power models ([`power`]) that regenerates every table
 //!   and figure from the paper's evaluation ([`report`]). The simulator's

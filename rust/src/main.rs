@@ -4,12 +4,13 @@
 //!   decode    decode synthetic utterances end-to-end (XLA artifacts or
 //!             native backend), report transcripts + WER + RTF
 //!   serve     JSON-lines TCP streaming server, protocol v2
-//!             (hello/open/feed/finish/stats/config with structured
-//!             error codes; v1 lines still accepted — see
+//!             (hello/open/feed/finish/resume/stats/config with
+//!             structured error codes; v1 lines still accepted — see
 //!             coordinator::server); `--workers N` shards sessions
 //!             across N device workers over the shared model,
-//!             `--rebalance K` sets the queued-session migration
-//!             threshold
+//!             `--rebalance K` sets the live-migration imbalance
+//!             threshold, `--checkpoint K` the recovery-checkpoint
+//!             cadence in decoding steps (0 = off)
 //!   simulate  run the accelerator simulator for N decoding steps;
 //!             `--batch B --shards S` additionally reports the fused
 //!             step sharded across S worker devices
@@ -41,7 +42,7 @@ use asrpu::util::table::Table;
 
 const VALUE_KEYS: &[&str] = &[
     "n", "seed", "beam", "port", "pes", "mac", "freq-mhz", "backend", "mode", "steps",
-    "queue", "batch", "batch-wait", "workers", "rebalance", "shards",
+    "queue", "batch", "batch-wait", "workers", "rebalance", "checkpoint", "shards",
 ];
 
 fn main() {
@@ -155,6 +156,8 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
         workers: args.usize_or("workers", shard_default.workers)?,
         rebalance_threshold: args
             .usize_or("rebalance", shard_default.rebalance_threshold)?,
+        checkpoint_interval: args
+            .usize_or("checkpoint", shard_default.checkpoint_interval)?,
     };
     // Fail fast on the CLI thread; the builder re-validates on the
     // device thread.
@@ -172,7 +175,7 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
     )?;
     println!(
         "asrpu serving on {} (JSON lines, protocol v2; ops: \
-         hello/open/feed/finish/stats/config; {} lane-batched device worker(s))",
+         hello/open/feed/finish/resume/stats/config; {} lane-batched device worker(s))",
         server.addr,
         server.workers()
     );

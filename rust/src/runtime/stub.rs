@@ -9,6 +9,7 @@ use anyhow::{bail, Result};
 use std::path::Path;
 
 use super::meta::Meta;
+use crate::util::tensor_io::TensorFile;
 
 const NO_XLA: &str =
     "built without the `xla` feature: the PJRT artifact runtime is unavailable \
@@ -62,6 +63,14 @@ impl XlaAm {
         _feats: &[f32],
         _out: &mut Vec<f32>,
     ) -> Result<()> {
+        bail!(NO_XLA)
+    }
+
+    pub fn snapshot_state(&self, _state: &XlaState, _tf: &mut TensorFile) -> Result<()> {
+        bail!(NO_XLA)
+    }
+
+    pub fn restore_state(&self, _tf: &TensorFile) -> Result<XlaState> {
         bail!(NO_XLA)
     }
 }

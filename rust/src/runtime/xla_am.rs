@@ -14,7 +14,7 @@
 use anyhow::{ensure, Context, Result};
 use std::path::Path;
 
-use crate::util::tensor_io::TensorFile;
+use crate::util::tensor_io::{Tensor, TensorFile};
 
 use super::meta::Meta;
 use super::{literal_f32, literal_to_f32, Executable, Runtime};
@@ -72,6 +72,52 @@ impl XlaAm {
                     .context("allocating state buffer")
             })
             .collect::<Result<Vec<_>>>()?;
+        Ok(XlaState { states })
+    }
+
+    /// Download the device-resident conv states into host `state{i}`
+    /// tensors — the XLA half of a session snapshot. The device buffers
+    /// stay valid; this is a read-only copy.
+    pub fn snapshot_state(&self, state: &XlaState, tf: &mut TensorFile) -> Result<()> {
+        ensure!(
+            state.states.len() == self.meta.states.len(),
+            "state has {} buffers, meta declares {}",
+            state.states.len(),
+            self.meta.states.len()
+        );
+        for (i, (buf, shape)) in state.states.iter().zip(&self.meta.states).enumerate() {
+            let lit = buf
+                .to_literal_sync()
+                .with_context(|| format!("downloading state buffer {i}"))?;
+            let data = literal_to_f32(&lit)?;
+            ensure!(
+                data.len() == shape.iter().product::<usize>(),
+                "state buffer {i}: {} elements, shape {shape:?}",
+                data.len()
+            );
+            tf.push(Tensor::f32(format!("state{i}"), shape.clone(), data));
+        }
+        Ok(())
+    }
+
+    /// Rebuild a streaming state from host `state{i}` tensors by
+    /// uploading each onto the device — the restore half of a session
+    /// snapshot (live migration / resume for the artifact backend).
+    pub fn restore_state(&self, tf: &TensorFile) -> Result<XlaState> {
+        let mut states = Vec::with_capacity(self.meta.states.len());
+        for (i, shape) in self.meta.states.iter().enumerate() {
+            let t = tf.require(&format!("state{i}"))?;
+            ensure!(
+                &t.dims == shape,
+                "state tensor 'state{i}': dims {:?}, expected {shape:?}",
+                t.dims
+            );
+            states.push(
+                self.client
+                    .buffer_from_host_buffer::<f32>(t.as_f32()?, shape, None)
+                    .with_context(|| format!("uploading state buffer {i}"))?,
+            );
+        }
         Ok(XlaState { states })
     }
 

@@ -11,9 +11,14 @@
 //! per tensor:
 //!   name_len : u32, name : utf-8 bytes
 //!   ndim     : u32, dims : u32 × ndim
-//!   dtype    : u32   (0 = f32, 1 = i8)
-//!   byte_len : u64, data : bytes (f32 little-endian or raw i8)
+//!   dtype    : u32   (0 = f32, 1 = i8, 2 = u32)
+//!   byte_len : u64, data : bytes (f32/u32 little-endian or raw i8)
 //! ```
+//!
+//! The `u32` dtype is Rust-side only (session snapshots in
+//! `coordinator::snapshot` use it for ids and counters); the python
+//! exporter writes f32 weights exclusively, so artifact files never
+//! contain it.
 
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
@@ -21,6 +26,17 @@ use std::io::{Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"ASRPUTNS";
+
+/// Split a `u64` into `[lo, hi]` u32 words — the lossless encoding
+/// 64-bit counters use inside `u32` tensors (session snapshots).
+pub fn u64_words(v: u64) -> [u32; 2] {
+    [v as u32, (v >> 32) as u32]
+}
+
+/// Reassemble a `u64` from its `[lo, hi]` words.
+pub fn u64_from_words(lo: u32, hi: u32) -> u64 {
+    (hi as u64) << 32 | lo as u64
+}
 
 /// A named dense tensor (f32 or i8 payload).
 #[derive(Debug, Clone, PartialEq)]
@@ -34,6 +50,7 @@ pub struct Tensor {
 pub enum TensorData {
     F32(Vec<f32>),
     I8(Vec<i8>),
+    U32(Vec<u32>),
 }
 
 impl Tensor {
@@ -47,6 +64,16 @@ impl Tensor {
         t
     }
 
+    pub fn u32(name: impl Into<String>, dims: Vec<usize>, data: Vec<u32>) -> Self {
+        let t = Tensor {
+            name: name.into(),
+            dims,
+            data: TensorData::U32(data),
+        };
+        t.validate().expect("invalid tensor");
+        t
+    }
+
     pub fn numel(&self) -> usize {
         self.dims.iter().product()
     }
@@ -55,6 +82,7 @@ impl Tensor {
         let len = match &self.data {
             TensorData::F32(v) => v.len(),
             TensorData::I8(v) => v.len(),
+            TensorData::U32(v) => v.len(),
         };
         if len != self.numel() {
             bail!(
@@ -71,7 +99,21 @@ impl Tensor {
     pub fn as_f32(&self) -> Result<&[f32]> {
         match &self.data {
             TensorData::F32(v) => Ok(v),
-            TensorData::I8(_) => bail!("tensor '{}' is i8, expected f32", self.name),
+            _ => bail!("tensor '{}' is not f32", self.name),
+        }
+    }
+
+    pub fn as_u32(&self) -> Result<&[u32]> {
+        match &self.data {
+            TensorData::U32(v) => Ok(v),
+            _ => bail!("tensor '{}' is not u32", self.name),
+        }
+    }
+
+    pub fn as_i8(&self) -> Result<&[i8]> {
+        match &self.data {
+            TensorData::I8(v) => Ok(v),
+            _ => bail!("tensor '{}' is not i8", self.name),
         }
     }
 }
@@ -102,7 +144,11 @@ impl TensorFile {
             .with_context(|| format!("weights file missing tensor '{name}'"))
     }
 
-    pub fn save(&self, path: &Path) -> Result<()> {
+    /// Serialize to the container byte format (the exact bytes
+    /// [`Self::save`] writes; [`Self::from_bytes`] round-trips them).
+    /// Deterministic: tensor order, dims and payload bytes are preserved
+    /// verbatim, so equal files encode to equal bytes.
+    pub fn to_bytes(&self) -> Result<Vec<u8>> {
         let mut buf: Vec<u8> = Vec::new();
         buf.extend_from_slice(MAGIC);
         buf.extend_from_slice(&(self.tensors.len() as u32).to_le_bytes());
@@ -127,8 +173,20 @@ impl TensorFile {
                     buf.extend_from_slice(&(v.len() as u64).to_le_bytes());
                     buf.extend(v.iter().map(|&b| b as u8));
                 }
+                TensorData::U32(v) => {
+                    buf.extend_from_slice(&2u32.to_le_bytes());
+                    buf.extend_from_slice(&((v.len() * 4) as u64).to_le_bytes());
+                    for x in v {
+                        buf.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
             }
         }
+        Ok(buf)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let buf = self.to_bytes()?;
         std::fs::File::create(path)
             .and_then(|mut f| f.write_all(&buf))
             .with_context(|| format!("writing {}", path.display()))
@@ -184,6 +242,17 @@ impl TensorFile {
                     )
                 }
                 1 => TensorData::I8(payload.iter().map(|&b| b as i8).collect()),
+                2 => {
+                    if byte_len % 4 != 0 {
+                        bail!("tensor '{name}': u32 payload not multiple of 4");
+                    }
+                    TensorData::U32(
+                        payload
+                            .chunks_exact(4)
+                            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+                            .collect(),
+                    )
+                }
                 d => bail!("tensor '{name}': unknown dtype {d}"),
             };
             let t = Tensor { name, dims, data };
@@ -219,6 +288,24 @@ mod tests {
         assert_eq!(g.get("w").unwrap(), &f.tensors[0]);
         assert_eq!(g.get("q").unwrap(), &f.tensors[1]);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn u32_roundtrip_through_bytes() {
+        let mut f = TensorFile::new();
+        f.push(Tensor::u32("ids", vec![2, 3], vec![0, 1, u32::MAX, 7, 8, 9]));
+        f.push(Tensor::f32("w", vec![1], vec![0.5]));
+        let bytes = f.to_bytes().unwrap();
+        let g = TensorFile::from_bytes(&bytes).unwrap();
+        assert_eq!(g.get("ids").unwrap(), &f.tensors[0]);
+        assert_eq!(
+            g.get("ids").unwrap().as_u32().unwrap(),
+            &[0, 1, u32::MAX, 7, 8, 9]
+        );
+        assert!(g.get("ids").unwrap().as_f32().is_err());
+        assert!(g.get("w").unwrap().as_u32().is_err());
+        // to_bytes is deterministic (snapshot checksums rely on it).
+        assert_eq!(bytes, g.to_bytes().unwrap());
     }
 
     #[test]

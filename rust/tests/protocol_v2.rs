@@ -1,13 +1,14 @@
 //! Protocol v2 conformance over a real TCP socket: the hello
 //! handshake, config introspection, structured error codes (every
-//! `ErrCode` variant), and the v1 line-protocol fallback.
+//! `ErrCode` variant), the `resume` re-attach op, and the v1
+//! line-protocol fallback.
 //!
-//! Reachability notes: `bad_request`, `unknown_op`, `unknown_session`,
-//! `backpressure` and `shutdown` are all provoked over the wire below.
-//! `internal` only arises from engine-side failures, which the native
-//! backends do not produce in normal operation — its exact wire shape
-//! is asserted through the public `err_json` constructor instead (the
-//! same function the server replies with).
+//! Reachability notes: every code is provoked over the wire below —
+//! `bad_request`, `unknown_op`, `unknown_session`, `backpressure` and
+//! `shutdown` through ordinary traffic, and `internal` through the
+//! engine's fault-injection hook (`EngineBuilder::fault_after_steps`,
+//! env-gated as `ASRPU_FAULT_AFTER_STEPS`), which fails scoring
+//! mid-serve exactly like a backend would.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -213,9 +214,11 @@ fn request_validation_error_codes_over_socket() {
     ] {
         assert_eq!(code_of(&c.call(line)).as_deref(), Some("bad_request"), "{line}");
     }
+    // bad_request: resume without a session id.
+    assert_eq!(code_of(&c.call(r#"{"op":"resume"}"#)).as_deref(), Some("bad_request"));
     // unknown_op.
     assert_eq!(code_of(&c.call(r#"{"op":"decode"}"#)).as_deref(), Some("unknown_op"));
-    // unknown_session: feed and finish against a never-opened id.
+    // unknown_session: feed, finish and resume against a never-opened id.
     assert_eq!(
         code_of(&c.call(r#"{"op":"feed","session":777,"samples":[0.0]}"#)).as_deref(),
         Some("unknown_session")
@@ -224,6 +227,62 @@ fn request_validation_error_codes_over_socket() {
         code_of(&c.call(r#"{"op":"finish","session":777}"#)).as_deref(),
         Some("unknown_session")
     );
+    assert_eq!(
+        code_of(&c.call(r#"{"op":"resume","session":777}"#)).as_deref(),
+        Some("unknown_session")
+    );
+    server.shutdown();
+}
+
+#[test]
+fn internal_error_reachable_over_socket_via_fault_hook() {
+    // A server whose engine is armed to fail after one decoding step:
+    // the first feed succeeds, the second hits the injected fault and
+    // must surface as a structured `internal` error over the wire — the
+    // previously-unreachable code path, now provoked end to end.
+    let server = Server::start(
+        "127.0.0.1:0",
+        || {
+            Ok(Engine::builder()
+                .native(TdsModel::random(ModelConfig::tiny_tds(), 5))
+                .batch(BatchConfig::default())
+                .fault_after_steps(1)
+                .build()?)
+        },
+        64,
+    )
+    .unwrap();
+    let mut c = Client::connect(&server.addr);
+    let opened = c.call(r#"{"op":"open"}"#);
+    let session = opened.get("session").unwrap().as_f64().unwrap() as u64;
+    let samples: Vec<String> = (0..1600)
+        .map(|i| format!("{:.4}", (i as f32 * 0.011).sin() * 0.2))
+        .collect();
+    let joined = samples.join(",");
+    let fed = c.call(&format!(
+        r#"{{"op":"feed","session":{session},"samples":[{joined}]}}"#
+    ));
+    assert_eq!(fed.get("steps").unwrap().as_f64(), Some(1.0), "{fed:?}");
+    let failed = c.call(&format!(
+        r#"{{"op":"feed","session":{session},"samples":[{joined}]}}"#
+    ));
+    assert_eq!(code_of(&failed).as_deref(), Some("internal"), "{failed:?}");
+    let msg = failed
+        .get("error")
+        .unwrap()
+        .get("message")
+        .unwrap()
+        .as_str()
+        .unwrap()
+        .to_string();
+    assert!(msg.contains("injected backend fault"), "{msg}");
+    // The poisoned batch discards its sessions rather than serving
+    // corrupt continuations: later ops report unknown_session.
+    let fin = c.call(&format!(r#"{{"op":"finish","session":{session}}}"#));
+    assert_eq!(code_of(&fin).as_deref(), Some("unknown_session"), "{fin:?}");
+    // The server itself keeps serving (opens still work).
+    let again = c.call(r#"{"op":"open"}"#);
+    assert!(again.get("session").is_some(), "{again:?}");
     server.shutdown();
 }
 

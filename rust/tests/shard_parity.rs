@@ -40,7 +40,11 @@ fn pool(precision: Precision, workers: usize) -> ShardPool {
                 // Small batches + short waits so fused batches actually
                 // form and flush quickly under test traffic.
                 .batch(BatchConfig { max_batch: 4, max_wait_frames: 2 })
-                .shards(ShardConfig { workers, rebalance_threshold: 2 })
+                .shards(ShardConfig {
+                    workers,
+                    rebalance_threshold: 2,
+                    ..ShardConfig::default()
+                })
                 .build()?)
         },
         256,

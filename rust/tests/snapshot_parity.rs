@@ -1,0 +1,264 @@
+//! Snapshot parity: the tentpole invariant of relocatable session
+//! state. A session snapshotted mid-utterance — at *any* step boundary,
+//! through the full encode/decode byte round-trip — and restored on
+//! another engine/shard must finish with a transcript **bit-identical**
+//! (text AND score) to the uninterrupted decode, for both native
+//! backends and any batch shape. On top of the engine-level property,
+//! this suite drives the real router: live migrations under rebalancing
+//! (N ∈ {2, 4} workers, f32 + int8) and a worker killed mid-stream with
+//! every session recovered from its checkpoints.
+
+use asrpu::am::TdsModel;
+use asrpu::config::{BatchConfig, ModelConfig, Precision, ShardConfig};
+use asrpu::coordinator::{Engine, SessionSnapshot, ShardPool};
+use asrpu::prop_assert;
+use asrpu::synth::Synthesizer;
+use asrpu::util::prop;
+use asrpu::util::rng::Rng;
+
+const MODEL_SEED: u64 = 21;
+
+fn engine(precision: Precision) -> Engine {
+    Engine::builder()
+        .native(TdsModel::random(ModelConfig::tiny_tds(), MODEL_SEED))
+        .precision(precision)
+        .build()
+        .unwrap()
+}
+
+fn utterance(seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    Synthesizer::default()
+        .render(&[(seed % 10) as u32, ((seed + 5) % 10) as u32], &mut rng)
+        .samples
+}
+
+/// Randomized snapshot/restore points mid-utterance, B ∈ {1, 4} lanes,
+/// f32 + int8: decode through the batched path, interrupt every lane at
+/// its own random chunk boundary (snapshot → encode → decode → restore
+/// onto a worker-clone engine), finish on the second engine, and demand
+/// bit-identical transcripts vs the uninterrupted scalar decode.
+#[test]
+fn random_snapshot_points_are_transcript_invisible() {
+    for precision in [Precision::F32, Precision::Int8] {
+        let e = engine(precision);
+        let w = e.clone_worker().expect("native engines clone").into_engine();
+        prop::check("snapshot-parity", 4, |g| {
+            let lanes = [1usize, 4][g.index(2)];
+            let seed = 500 + g.rng.below(1000);
+            let utts: Vec<Vec<f32>> =
+                (0..lanes as u64).map(|i| utterance(seed + i)).collect();
+            let expected: Vec<_> = utts
+                .iter()
+                .map(|u| e.decode_utterance(u).unwrap().0)
+                .collect();
+            // Feed in uneven chunks through the fused batch path; each
+            // lane picks its own interruption chunk.
+            let chunk = 700 + g.index(5) * 400;
+            let cut_at: Vec<usize> = (0..lanes)
+                .map(|_| g.rng.below(6) as usize + 1)
+                .collect();
+            let mut live: Vec<Option<asrpu::coordinator::Session>> =
+                (0..lanes).map(|_| Some(e.open(false).unwrap())).collect();
+            let mut moved: Vec<Option<asrpu::coordinator::Session>> =
+                (0..lanes).map(|_| None).collect();
+            let max_len = utts.iter().map(Vec::len).max().unwrap();
+            let mut off = 0;
+            let mut round = 0;
+            while off < max_len {
+                for (lane, u) in utts.iter().enumerate() {
+                    if off >= u.len() {
+                        continue;
+                    }
+                    let end = (off + chunk).min(u.len());
+                    if let Some(s) = live[lane].as_mut() {
+                        e.push_audio(s, &u[off..end]);
+                    } else if let Some(s) = moved[lane].as_mut() {
+                        w.push_audio(s, &u[off..end]);
+                    }
+                }
+                off += chunk;
+                round += 1;
+                {
+                    let mut refs: Vec<&mut asrpu::coordinator::Session> =
+                        live.iter_mut().flatten().collect();
+                    e.step_batch(&mut refs).unwrap();
+                }
+                {
+                    let mut refs: Vec<&mut asrpu::coordinator::Session> =
+                        moved.iter_mut().flatten().collect();
+                    w.step_batch(&mut refs).unwrap();
+                }
+                // Interrupt due lanes: snapshot on `e`, byte round-trip,
+                // restore on `w`.
+                for lane in 0..lanes {
+                    if round == cut_at[lane] {
+                        if let Some(mut s) = live[lane].take() {
+                            let bytes = e.snapshot(&mut s).unwrap().encode();
+                            let snap = SessionSnapshot::decode(&bytes)
+                                .map_err(|err| format!("decode failed: {err:#}"))?;
+                            moved[lane] = Some(
+                                w.restore(&snap)
+                                    .map_err(|err| format!("restore failed: {err:#}"))?,
+                            );
+                        }
+                    }
+                }
+            }
+            for lane in 0..lanes {
+                let t = match (live[lane].as_mut(), moved[lane].as_mut()) {
+                    (Some(s), _) => e.finish(s).unwrap(),
+                    (None, Some(s)) => w.finish(s).unwrap(),
+                    _ => unreachable!(),
+                };
+                prop_assert!(
+                    t.text == expected[lane].text && t.score == expected[lane].score,
+                    "lane {lane} diverged ({precision:?}, chunk {chunk}, seed {seed}): \
+                     {:?} vs {:?}",
+                    (t.text, t.score),
+                    (&expected[lane].text, expected[lane].score)
+                );
+            }
+            Ok(())
+        });
+    }
+}
+
+fn pool(precision: Precision, workers: usize, rebalance: usize) -> ShardPool {
+    ShardPool::start(
+        move || {
+            Ok(Engine::builder()
+                .native(TdsModel::random(ModelConfig::tiny_tds(), MODEL_SEED))
+                .precision(precision)
+                // No batching wait: feeds flush (and checkpoint)
+                // immediately, keeping the suite fast and deterministic.
+                .batch(BatchConfig { max_batch: 8, max_wait_frames: 0 })
+                .shards(ShardConfig {
+                    workers,
+                    rebalance_threshold: rebalance,
+                    checkpoint_interval: 1,
+                })
+                .build()?)
+        },
+        256,
+    )
+    .unwrap()
+}
+
+/// The acceptance criterion: sessions with ≥1 executed decoding step
+/// migrate between shards (N ∈ {2, 4} workers, f32 + int8) and finish
+/// bit-identical to the unmigrated single-engine decode.
+#[test]
+fn live_migration_is_bit_identical_across_worker_counts() {
+    for precision in [Precision::F32, Precision::Int8] {
+        let reference = engine(precision);
+        for workers in [2usize, 4] {
+            let p = pool(precision, workers, 2);
+            // Two sessions per shard, all started (≥1 step each).
+            let n = 2 * workers as u64;
+            let ids: Vec<u64> = (0..n).map(|_| p.open().unwrap()).collect();
+            let utts: Vec<Vec<f32>> =
+                ids.iter().map(|&id| utterance(300 + id)).collect();
+            let halves: Vec<usize> = utts.iter().map(|u| u.len() / 2).collect();
+            for (i, &id) in ids.iter().enumerate() {
+                let (steps, _) = p.feed(id, &utts[i][..halves[i]]).unwrap();
+                assert!(steps > 0, "session {id} must start decoding");
+            }
+            // Finish every session on even-index shards (ids 1, 3, …
+            // alternate shards under least-loaded assignment) — enough
+            // churn that rebalancing must move started sessions.
+            let (to_finish, to_keep): (Vec<_>, Vec<_>) =
+                ids.iter().copied().enumerate().partition(|(i, _)| i % 2 == 0);
+            for &(_, id) in &to_finish {
+                p.finish(id).unwrap();
+            }
+            let stats = p.stats().unwrap();
+            let adopted: f64 = stats
+                .get("shards")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|s| s.get("adopted").unwrap().as_f64().unwrap())
+                .sum();
+            assert!(
+                adopted >= 1.0,
+                "at least one started session must migrate \
+                 ({precision:?}, {workers} workers): {stats:?}"
+            );
+            for &(i, id) in &to_keep {
+                let (t_ref, _) = reference.decode_utterance(&utts[i]).unwrap();
+                p.feed(id, &utts[i][halves[i]..]).unwrap();
+                let done = p.finish(id).unwrap();
+                assert_eq!(
+                    done.text, t_ref.text,
+                    "session {id} text ({precision:?}, {workers} workers)"
+                );
+                assert_eq!(
+                    done.score, t_ref.score as f64,
+                    "session {id} score ({precision:?}, {workers} workers)"
+                );
+            }
+            p.shutdown();
+        }
+    }
+}
+
+/// Kill one worker mid-stream (no flush, no final checkpoints — a real
+/// crash): no session may be lost, every orphan recovers from its
+/// checkpoints onto survivors, and — because every feed had flushed and
+/// checkpointed before its reply — final transcripts stay bit-identical
+/// to the uninterrupted decode. N ∈ {2, 4} workers, f32 + int8.
+#[test]
+fn killed_worker_loses_no_sessions_and_transcripts_match() {
+    for precision in [Precision::F32, Precision::Int8] {
+        let reference = engine(precision);
+        for workers in [2usize, 4] {
+            let p = pool(precision, workers, 0); // rebalancing off
+            let n = 2 * workers as u64;
+            let ids: Vec<u64> = (0..n).map(|_| p.open().unwrap()).collect();
+            let utts: Vec<Vec<f32>> =
+                ids.iter().map(|&id| utterance(800 + id)).collect();
+            let halves: Vec<usize> = utts.iter().map(|u| u.len() / 2).collect();
+            for (i, &id) in ids.iter().enumerate() {
+                let (steps, _) = p.feed(id, &utts[i][..halves[i]]).unwrap();
+                assert!(steps > 0);
+            }
+            // Crash shard 0: its two sessions must re-adopt elsewhere.
+            let recovered = p.kill_worker(0).unwrap();
+            assert_eq!(
+                recovered, 2,
+                "both shard-0 sessions recover ({precision:?}, {workers} workers)"
+            );
+            // Every session — recovered or not — continues and finishes
+            // with the uninterrupted transcript. No session loss.
+            for (i, &id) in ids.iter().enumerate() {
+                let res = p.resume(id).unwrap();
+                assert!(res.steps > 0, "session {id} lost its progress");
+                let (t_ref, _) = reference.decode_utterance(&utts[i]).unwrap();
+                p.feed(id, &utts[i][halves[i]..]).unwrap();
+                let done = p.finish(id).unwrap();
+                assert_eq!(
+                    done.text, t_ref.text,
+                    "session {id} text ({precision:?}, {workers} workers)"
+                );
+                assert_eq!(
+                    done.score, t_ref.score as f64,
+                    "session {id} score ({precision:?}, {workers} workers)"
+                );
+            }
+            let stats = p.stats().unwrap();
+            assert_eq!(
+                stats.get("responding").unwrap().as_f64(),
+                Some(workers as f64 - 1.0),
+                "{stats:?}"
+            );
+            assert_eq!(
+                stats.get("recovered").unwrap().as_f64(),
+                Some(2.0),
+                "{stats:?}"
+            );
+            p.shutdown();
+        }
+    }
+}
