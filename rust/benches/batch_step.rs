@@ -3,19 +3,30 @@
 //!
 //! Two workloads:
 //!  * `tiny` — the end-to-end serving model (AM + beam search), swept
-//!    across the full lane range;
+//!    across the full lane range at the auto-detected kernel ISA;
 //!  * `paper-f32` — the paper-scale acoustic model in f32 (AM only: its
 //!    9000-token output layer has no matching lexicon), where the weight
 //!    matrices dwarf every cache level and batching's
-//!    stream-weights-once behaviour pays the most. The acceptance target
-//!    for this refactor is ≥2× frames/sec at B=16 vs B=1 here.
+//!    stream-weights-once behaviour pays the most, A/B'd across every
+//!    kernel ISA the host supports (`dispatch::with_forced_isa`). The
+//!    acceptance target for the batching refactor is ≥2× frames/sec at
+//!    B=16 vs B=1 here.
+//!
+//! Writes schema-stable rows `{kernel, isa, batch, gmacs}` to
+//! `BENCH_batch_step.json` under `asrpu::bench::bench_dir()`
+//! (`$ASRPU_BENCH_DIR`, default repo root); GMAC/s is derived from
+//! `PipelineDesc::macs_per_step`. The `tiny_am_dec` rows time the beam
+//! search too, so their GMAC/s understates pure AM throughput — useful
+//! as a trajectory, not as a kernel roofline.
 
+use asrpu::am::gemm::dispatch::{self, KernelIsa};
 use asrpu::am::{TdsModel, TdsState};
-use asrpu::bench::Bench;
-use asrpu::config::{DecoderConfig, ModelConfig, Precision};
+use asrpu::bench::{bench_dir, Bench};
+use asrpu::config::{DecoderConfig, ModelConfig, PipelineDesc, Precision};
 use asrpu::decoder::{BeamDecoder, DecodeState};
 use asrpu::lm::NgramLm;
 use asrpu::synth::spec;
+use asrpu::util::json::{Json, JsonObj};
 use asrpu::util::rng::Rng;
 
 /// frames/sec of one fused step at `batch` lanes.
@@ -23,8 +34,20 @@ fn fps(batch: usize, frames_per_step: usize, median_s: f64) -> f64 {
     batch as f64 * frames_per_step as f64 / median_s
 }
 
+/// AM GMAC/s of one fused step at `batch` lanes.
+fn gmacs(batch: usize, macs_per_step: u64, median_s: f64) -> f64 {
+    batch as f64 * macs_per_step as f64 / median_s / 1e9
+}
+
 fn main() {
     let mut rng = Rng::new(11);
+    let detected = dispatch::detect();
+    let mut isas = vec![KernelIsa::Scalar];
+    if detected != KernelIsa::Scalar {
+        isas.push(detected);
+    }
+    // (kernel, isa, batch, gmacs) — the JSON schema, row per measurement.
+    let mut rows: Vec<(String, KernelIsa, usize, f64)> = Vec::new();
 
     // --- tiny serving model: fused AM + decoder step.
     let mut b = Bench::default();
@@ -36,6 +59,7 @@ fn main() {
     let f = cfg.frames_per_step() * cfg.n_mels;
     let tokens = cfg.tokens;
     let vps = cfg.vectors_per_step();
+    let tiny_macs = PipelineDesc::for_model(&cfg).macs_per_step();
     let mut tiny_fps = Vec::new();
     for batch in [1usize, 4, 16, 64] {
         let feats: Vec<f32> = (0..batch * f).map(|_| rng.uniform(-1.0, 1.0)).collect();
@@ -63,24 +87,41 @@ fn main() {
             }
             logits.len()
         });
-        tiny_fps.push((batch, fps(batch, cfg.frames_per_step(), r.median.as_secs_f64())));
+        let secs = r.median.as_secs_f64();
+        tiny_fps.push((batch, fps(batch, cfg.frames_per_step(), secs)));
+        rows.push((
+            "tiny_am_dec".into(),
+            KernelIsa::active(),
+            batch,
+            gmacs(batch, tiny_macs, secs),
+        ));
     }
 
-    // --- paper-scale AM in f32: the memory-bound headline.
+    // --- paper-scale AM in f32: the memory-bound headline, A/B'd per ISA.
     let mut bq = Bench::quick();
     let paper_cfg = ModelConfig { precision: Precision::F32, ..ModelConfig::paper_tds() };
     let fps_frames = paper_cfg.frames_per_step();
+    let paper_macs = PipelineDesc::for_model(&paper_cfg).macs_per_step();
     let paper = TdsModel::random(paper_cfg, 5);
     let pf = paper.cfg.frames_per_step() * paper.cfg.n_mels;
     let mut paper_fps = Vec::new();
     for batch in [1usize, 4, 16] {
         let feats: Vec<f32> = (0..batch * pf).map(|_| rng.uniform(-1.0, 1.0)).collect();
         let mut states: Vec<TdsState> = (0..batch).map(|_| paper.state()).collect();
-        let r = bq.run(&format!("batch/paper-f32/am/B{batch}"), || {
-            let mut refs: Vec<&mut TdsState> = states.iter_mut().collect();
-            paper.step_batch(&mut refs, &feats).len()
-        });
-        paper_fps.push((batch, fps(batch, fps_frames, r.median.as_secs_f64())));
+        for &isa in &isas {
+            let secs = dispatch::with_forced_isa(isa, || {
+                bq.run(&format!("batch/paper-f32/am/{isa}/B{batch}"), || {
+                    let mut refs: Vec<&mut TdsState> = states.iter_mut().collect();
+                    paper.step_batch(&mut refs, &feats).len()
+                })
+                .median
+                .as_secs_f64()
+            });
+            rows.push(("paper_f32_am".into(), isa, batch, gmacs(batch, paper_macs, secs)));
+            if isa == detected {
+                paper_fps.push((batch, fps(batch, fps_frames, secs)));
+            }
+        }
     }
 
     println!("\nframes/sec by lane count (speedup vs B=1):");
@@ -89,5 +130,40 @@ fn main() {
         for &(batch, v) in series {
             println!("  {tag:<14} B={batch:<3} {v:>12.0} f/s   {:>5.2}x", v / base);
         }
+    }
+    if isas.len() > 1 {
+        println!("\npaper-f32 AM scalar → {detected} speedup by lane count:");
+        for batch in [1usize, 4, 16] {
+            let find = |isa: KernelIsa| {
+                rows.iter()
+                    .find(|r| r.0 == "paper_f32_am" && r.1 == isa && r.2 == batch)
+                    .map(|r| r.3)
+            };
+            if let (Some(s), Some(v)) = (find(KernelIsa::Scalar), find(detected)) {
+                println!(
+                    "  B={batch:<3} {s:>8.2} → {v:>8.2} GMAC/s  ({:>5.2}x)",
+                    v / s
+                );
+            }
+        }
+    }
+
+    let mut json_rows = Vec::new();
+    for (kernel, isa, batch, g) in &rows {
+        let mut o = JsonObj::new();
+        o.insert("kernel", Json::Str(kernel.clone()));
+        o.insert("isa", Json::Str(isa.as_str().to_string()));
+        o.insert("batch", Json::Num(*batch as f64));
+        o.insert("gmacs", Json::Num(*g));
+        json_rows.push(Json::Obj(o));
+    }
+    let mut doc = JsonObj::new();
+    doc.insert("bench", Json::Str("batch_step".into()));
+    doc.insert("detected_isa", Json::Str(detected.as_str().to_string()));
+    doc.insert("rows", Json::Arr(json_rows));
+    let path = bench_dir().join("BENCH_batch_step.json");
+    match std::fs::write(&path, Json::Obj(doc).to_pretty()) {
+        Ok(()) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
     }
 }

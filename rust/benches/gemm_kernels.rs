@@ -1,91 +1,182 @@
-//! Bench: the AM micro-kernels head-to-head — naive (reference) vs tiled
-//! (register-blocked 4×4) vs int8 `fc_batch` at a paper-scale FC shape
-//! (1200×1200, the widest hidden FC of §5.2), swept over
-//! B ∈ {1, 4, 16, 64} lanes.
+//! Bench: the AM micro-kernels head-to-head across kernel ISAs — the
+//! naive FC reference (scalar-only baseline) plus the four dispatched
+//! hot kernels (`fc_batch`, `fc_batch_int8`, `conv_steps`,
+//! `conv_steps_int8`) at paper-scale shapes, swept over
+//! B ∈ {1, 4, 16, 64} lanes and forced to every ISA the host supports
+//! via `dispatch::with_forced_isa` (the kernels are bit-identical
+//! across ISAs, so this is a pure throughput A/B).
 //!
-//! Reports GMAC/s per kernel per lane count and the tiled/int8 speedups
-//! over naive, and writes the whole table to `BENCH_gemm.json` at the
-//! repository root (consumed by CHANGES.md / perf tracking).
+//! Prints GMAC/s per kernel/ISA/lane count and the scalar→SIMD speedup
+//! table, and writes schema-stable rows `{kernel, isa, batch, gmacs}`
+//! to `BENCH_gemm.json` under `asrpu::bench::bench_dir()`
+//! (`$ASRPU_BENCH_DIR`, default repo root). CI uploads the file from
+//! every run — the measured perf trajectory.
 
+use asrpu::accel::kernels::peak_gmacs;
 use asrpu::am::gemm;
+use asrpu::am::gemm::dispatch::{self, KernelIsa};
 use asrpu::am::quant::quantize_rows;
-use asrpu::bench::Bench;
+use asrpu::bench::{bench_dir, Bench};
+use asrpu::config::AccelConfig;
 use asrpu::util::json::{Json, JsonObj};
 use asrpu::util::rng::Rng;
 
+/// FC shape: the widest hidden FC of §5.2 (1200×1200).
 const IN_DIM: usize = 1200;
 const OUT_DIM: usize = 1200;
 
-fn gmacs(batch: usize, secs: f64) -> f64 {
+/// Conv shape: a paper-like TDS group geometry — 10 channels over
+/// 80-wide mel rows, kernel width 8, 4 output timesteps, stride 1.
+const IN_CH: usize = 10;
+const OUT_CH: usize = 10;
+const KW: usize = 8;
+const WIDTH: usize = 80;
+const T_OUT: usize = 4;
+
+const BATCHES: [usize; 4] = [1, 4, 16, 64];
+
+fn fc_gmacs(batch: usize, secs: f64) -> f64 {
     (batch * IN_DIM * OUT_DIM) as f64 / secs / 1e9
 }
 
+fn conv_gmacs(batch: usize, secs: f64) -> f64 {
+    (batch * T_OUT * OUT_CH * WIDTH * IN_CH * KW) as f64 / secs / 1e9
+}
+
 fn main() {
+    let detected = dispatch::detect();
+    let mut isas = vec![KernelIsa::Scalar];
+    if detected != KernelIsa::Scalar {
+        isas.push(detected);
+    }
+    println!(
+        "detected kernel ISA: {detected}; device peak {:.0} GMAC/s (paper Table 2)",
+        peak_gmacs(&AccelConfig::paper())
+    );
+
     let mut rng = Rng::new(17);
     let w: Vec<f32> = (0..IN_DIM * OUT_DIM).map(|_| rng.uniform(-0.05, 0.05)).collect();
     let bias: Vec<f32> = (0..OUT_DIM).map(|_| rng.uniform(-0.1, 0.1)).collect();
     let qw = quantize_rows(&w, OUT_DIM, IN_DIM);
+    let cw: Vec<f32> = (0..OUT_CH * IN_CH * KW).map(|_| rng.uniform(-0.2, 0.2)).collect();
+    let cbias: Vec<f32> = (0..OUT_CH).map(|_| rng.uniform(-0.1, 0.1)).collect();
+    let cq = quantize_rows(&cw, OUT_CH, IN_CH * KW);
 
     let mut b = Bench::quick();
-    let mut rows = Vec::new();
-    for batch in [1usize, 4, 16, 64] {
+    // (kernel, isa, batch, gmacs) — the JSON schema, row per measurement.
+    let mut rows: Vec<(String, KernelIsa, usize, f64)> = Vec::new();
+    for batch in BATCHES {
         let xs: Vec<f32> = (0..batch * IN_DIM).map(|_| rng.uniform(-1.0, 1.0)).collect();
         let mut out = vec![0.0f32; batch * OUT_DIM];
         let mut xsum = Vec::new();
+        let ext_len = (KW - 1 + T_OUT) * batch * IN_CH * WIDTH;
+        let ext: Vec<f32> = (0..ext_len).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let mut cout = vec![0.0f32; T_OUT * batch * OUT_CH * WIDTH];
+        let mut wsum = Vec::new();
 
+        // The naive kernel has no SIMD variant — it is the oracle the
+        // dispatched kernels are verified bit-exact against.
         let naive = b
-            .run(&format!("gemm/fc/naive/B{batch}"), || {
+            .run(&format!("gemm/fc_naive/scalar/B{batch}"), || {
                 gemm::fc_batch_naive_into(&w, &bias, &xs, batch, &mut out);
                 out[0]
             })
             .median
             .as_secs_f64();
-        let tiled = b
-            .run(&format!("gemm/fc/tiled/B{batch}"), || {
-                gemm::fc_batch_into(&w, &bias, &xs, batch, &mut out);
-                out[0]
-            })
-            .median
-            .as_secs_f64();
-        let int8 = b
-            .run(&format!("gemm/fc/int8/B{batch}"), || {
-                gemm::fc_batch_int8_into(
-                    &qw.q, &qw.scale, &qw.zp, &bias, &xs, batch, &mut xsum, &mut out,
-                );
-                out[0]
-            })
-            .median
-            .as_secs_f64();
-        rows.push((batch, naive, tiled, int8));
+        rows.push(("fc_naive".into(), KernelIsa::Scalar, batch, fc_gmacs(batch, naive)));
+
+        for &isa in &isas {
+            let fc = dispatch::with_forced_isa(isa, || {
+                b.run(&format!("gemm/fc/{isa}/B{batch}"), || {
+                    gemm::fc_batch_into(&w, &bias, &xs, batch, &mut out);
+                    out[0]
+                })
+                .median
+                .as_secs_f64()
+            });
+            rows.push(("fc".into(), isa, batch, fc_gmacs(batch, fc)));
+
+            let int8 = dispatch::with_forced_isa(isa, || {
+                b.run(&format!("gemm/fc_int8/{isa}/B{batch}"), || {
+                    gemm::fc_batch_int8_into(
+                        &qw.q, &qw.scale, &qw.zp, &bias, &xs, batch, &mut xsum, &mut out,
+                    );
+                    out[0]
+                })
+                .median
+                .as_secs_f64()
+            });
+            rows.push(("fc_int8".into(), isa, batch, fc_gmacs(batch, int8)));
+
+            let conv = dispatch::with_forced_isa(isa, || {
+                b.run(&format!("gemm/conv/{isa}/B{batch}"), || {
+                    gemm::conv_steps_into(
+                        &cw, &cbias, &ext, T_OUT, 1, batch, IN_CH, OUT_CH, KW, WIDTH,
+                        &mut cout,
+                    );
+                    cout[0]
+                })
+                .median
+                .as_secs_f64()
+            });
+            rows.push(("conv".into(), isa, batch, conv_gmacs(batch, conv)));
+
+            let conv8 = dispatch::with_forced_isa(isa, || {
+                b.run(&format!("gemm/conv_int8/{isa}/B{batch}"), || {
+                    gemm::conv_steps_int8_into(
+                        &cq.q, &cq.scale, &cq.zp, &cbias, &ext, T_OUT, 1, batch, IN_CH,
+                        OUT_CH, KW, WIDTH, &mut wsum, &mut cout,
+                    );
+                    cout[0]
+                })
+                .median
+                .as_secs_f64()
+            });
+            rows.push(("conv_int8".into(), isa, batch, conv_gmacs(batch, conv8)));
+        }
     }
 
-    println!("\nGMAC/s by kernel and lane count (speedup vs naive):");
+    if isas.len() > 1 {
+        println!("\nscalar → {detected} speedup by kernel and lane count:");
+        for kernel in ["fc", "fc_int8", "conv", "conv_int8"] {
+            for batch in BATCHES {
+                let find = |isa: KernelIsa| {
+                    rows.iter()
+                        .find(|r| r.0 == kernel && r.1 == isa && r.2 == batch)
+                        .map(|r| r.3)
+                };
+                if let (Some(s), Some(v)) = (find(KernelIsa::Scalar), find(detected)) {
+                    println!(
+                        "  {kernel:<10} B={batch:<3} {s:>8.2} → {v:>8.2} GMAC/s  ({:>5.2}x)",
+                        v / s
+                    );
+                }
+            }
+        }
+    } else {
+        println!("\nscalar only — no SIMD kernel ISA detected on this host");
+    }
+
     let mut json_rows = Vec::new();
-    for &(batch, naive, tiled, int8) in &rows {
-        println!(
-            "  B={batch:<3} naive {:>7.2}   tiled {:>7.2} ({:>5.2}x)   int8 {:>7.2} ({:>5.2}x)",
-            gmacs(batch, naive),
-            gmacs(batch, tiled),
-            naive / tiled,
-            gmacs(batch, int8),
-            naive / int8,
-        );
+    for (kernel, isa, batch, g) in &rows {
         let mut o = JsonObj::new();
-        o.insert("batch", Json::Num(batch as f64));
-        o.insert("naive_gmacs", Json::Num(gmacs(batch, naive)));
-        o.insert("tiled_gmacs", Json::Num(gmacs(batch, tiled)));
-        o.insert("int8_gmacs", Json::Num(gmacs(batch, int8)));
-        o.insert("tiled_speedup", Json::Num(naive / tiled));
-        o.insert("int8_speedup", Json::Num(naive / int8));
+        o.insert("kernel", Json::Str(kernel.clone()));
+        o.insert("isa", Json::Str(isa.as_str().to_string()));
+        o.insert("batch", Json::Num(*batch as f64));
+        o.insert("gmacs", Json::Num(*g));
         json_rows.push(Json::Obj(o));
     }
     let mut doc = JsonObj::new();
     doc.insert("bench", Json::Str("gemm_kernels".into()));
-    doc.insert("shape", Json::Str(format!("fc {OUT_DIM}x{IN_DIM}")));
+    doc.insert("detected_isa", Json::Str(detected.as_str().to_string()));
+    doc.insert(
+        "shapes",
+        Json::Str(format!(
+            "fc {OUT_DIM}x{IN_DIM}; conv {OUT_CH}x{IN_CH}x{KW} w{WIDTH} t{T_OUT}"
+        )),
+    );
     doc.insert("rows", Json::Arr(json_rows));
-    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
-        .join("..")
-        .join("BENCH_gemm.json");
+    let path = bench_dir().join("BENCH_gemm.json");
     match std::fs::write(&path, Json::Obj(doc).to_pretty()) {
         Ok(()) => println!("\nwrote {}", path.display()),
         Err(e) => eprintln!("could not write {}: {e}", path.display()),

@@ -109,6 +109,15 @@ pub fn hyp_expansion_thread_instrs(avg_children: f64, word_commit_frac: f64) -> 
     THREAD_FIXED + fetch + children + blank_repeat
 }
 
+/// Peak multiply-accumulate throughput of the PE pool in GMAC/s: every
+/// PE retires one `mac_vector_width`-wide vector MAC per cycle (§3.4).
+/// The paper configuration (8 PEs × 8-wide @ 500 MHz) peaks at
+/// 32 GMAC/s — the device-side yardstick the host kernel benches
+/// (`benches/gemm_kernels.rs`) report their GMAC/s against.
+pub fn peak_gmacs(accel: &AccelConfig) -> f64 {
+    accel.num_pes as f64 * accel.mac_vector_width as f64 * accel.frequency_hz as f64 / 1e9
+}
+
 /// Hypothesis-expansion workload parameters, either defaults derived
 /// from the synthetic lexicon or measured `PruneStats` from a real run.
 #[derive(Debug, Clone, Copy)]
@@ -407,5 +416,11 @@ mod tests {
             (50_000_000..170_000_000).contains(&total),
             "total step instructions {total}"
         );
+    }
+
+    #[test]
+    fn peak_gmacs_matches_paper_configuration() {
+        // 8 PEs × 8-wide MAC @ 500 MHz = 32 GMAC/s.
+        assert_eq!(peak_gmacs(&AccelConfig::paper()), 32.0);
     }
 }

@@ -27,16 +27,60 @@
 //! `tests` below and `tests/batch_parity.rs` assert this. (rustc does not
 //! contract `a*b + c` to fma without explicit opt-in, so the comparison
 //! is stable across optimization levels.)
+//!
+//! **Runtime SIMD dispatch:** each public entry point routes through
+//! [`dispatch::active`] to either the scalar kernel (`*_scalar_into`,
+//! always available, the oracle) or an explicit `std::arch`
+//! implementation in `simd` — AVX2 on x86_64, NEON on aarch64. The SIMD
+//! kernels vectorize across independent outputs only (batch lanes for
+//! FC, mel-row positions for conv) and use separate mul + add
+//! instructions (never FMA), so they inherit the same parity contract:
+//! every ISA produces bit-identical results, asserted by
+//! `tests/simd_parity.rs`. Force an ISA with `ASRPU_KERNEL_ISA=scalar`
+//! (process-wide) or [`dispatch::with_forced_isa`] (per thread).
+
+pub mod dispatch;
+mod simd;
 
 /// Weight rows per register tile.
 pub const TILE_ROWS: usize = 4;
 /// Lanes (batch columns) per register tile.
 pub const TILE_LANES: usize = 4;
 
-/// Tiled `[batch × out] = [batch × in] · Wᵀ + b`. `xs` is lane-major
-/// `[batch × in_dim]`, `out` must be `batch * bias.len()` long.
+/// Batched `[batch × out] = [batch × in] · Wᵀ + b`, dispatched to the
+/// active ISA (see [`dispatch`]). `xs` is lane-major `[batch × in_dim]`,
+/// `out` must be `batch * bias.len()` long. Bit-identical to
+/// [`fc_batch_scalar_into`] under every ISA.
 pub fn fc_batch_into(w: &[f32], bias: &[f32], xs: &[f32], batch: usize, out: &mut [f32]) {
-    assert!(batch > 0, "fc_batch_into needs at least one lane");
+    match dispatch::active() {
+        #[cfg(target_arch = "x86_64")]
+        dispatch::KernelIsa::Avx2 => {
+            check_fc_shapes(w, bias, xs, batch, out);
+            unsafe { simd::avx2::fc_batch(w, bias, xs, batch, out) }
+        }
+        #[cfg(target_arch = "aarch64")]
+        dispatch::KernelIsa::Neon => {
+            check_fc_shapes(w, bias, xs, batch, out);
+            unsafe { simd::neon::fc_batch(w, bias, xs, batch, out) }
+        }
+        _ => fc_batch_scalar_into(w, bias, xs, batch, out),
+    }
+}
+
+/// Shared shape validation for the FC dispatchers (the SIMD bodies trust
+/// their caller).
+fn check_fc_shapes(w: &[f32], bias: &[f32], xs: &[f32], batch: usize, out: &[f32]) {
+    assert!(batch > 0, "fc kernels need at least one lane");
+    debug_assert_eq!(xs.len() % batch, 0);
+    debug_assert_eq!(w.len(), (xs.len() / batch) * bias.len());
+    debug_assert_eq!(out.len(), batch * bias.len());
+}
+
+/// Tiled scalar `[batch × out] = [batch × in] · Wᵀ + b` — the
+/// register-blocked reference path every SIMD kernel must match
+/// bit-for-bit.
+pub fn fc_batch_scalar_into(w: &[f32], bias: &[f32], xs: &[f32], batch: usize, out: &mut [f32]) {
+    assert!(batch > 0, "fc_batch_scalar_into needs at least one lane");
     let out_dim = bias.len();
     debug_assert_eq!(xs.len() % batch, 0);
     let in_dim = xs.len() / batch;
@@ -158,6 +202,10 @@ pub fn fc_batch_naive_into(w: &[f32], bias: &[f32], xs: &[f32], batch: usize, ou
 /// which is algebraically `Σ dequant(q)·x + bias` with the per-row
 /// constants factored out of the inner loop — the weight stream is one
 /// byte per MAC. `xsum` is a reusable per-lane Σx scratch buffer.
+/// Dispatched to the active ISA; because accumulation is f32 (not i32),
+/// the SIMD paths vectorize across batch lanes — independent outputs —
+/// exactly like the f32 kernel, so results stay bit-identical (`==`) to
+/// [`fc_batch_int8_scalar_into`] under every ISA.
 #[allow(clippy::too_many_arguments)]
 pub fn fc_batch_int8_into(
     q: &[i8],
@@ -169,7 +217,83 @@ pub fn fc_batch_int8_into(
     xsum: &mut Vec<f32>,
     out: &mut [f32],
 ) {
+    match dispatch::active() {
+        #[cfg(target_arch = "x86_64")]
+        dispatch::KernelIsa::Avx2 => {
+            check_fc_int8_shapes(q, scale, zp, bias, xs, batch, out);
+            unsafe { simd::avx2::fc_batch_int8(q, scale, zp, bias, xs, batch, xsum, out) }
+        }
+        #[cfg(target_arch = "aarch64")]
+        dispatch::KernelIsa::Neon => {
+            check_fc_int8_shapes(q, scale, zp, bias, xs, batch, out);
+            unsafe { simd::neon::fc_batch_int8(q, scale, zp, bias, xs, batch, xsum, out) }
+        }
+        _ => fc_batch_int8_scalar_into(q, scale, zp, bias, xs, batch, xsum, out),
+    }
+}
+
+/// Shared shape validation for the int8 FC dispatcher.
+fn check_fc_int8_shapes(
+    q: &[i8],
+    scale: &[f32],
+    zp: &[f32],
+    bias: &[f32],
+    xs: &[f32],
+    batch: usize,
+    out: &[f32],
+) {
     assert!(batch > 0, "fc_batch_int8_into needs at least one lane");
+    debug_assert_eq!(xs.len() % batch, 0);
+    debug_assert_eq!(q.len(), (xs.len() / batch) * bias.len());
+    debug_assert_eq!(scale.len(), bias.len());
+    debug_assert_eq!(zp.len(), bias.len());
+    debug_assert_eq!(out.len(), batch * bias.len());
+}
+
+/// Ragged lane block of the int8 FC — the lanes beyond the last full
+/// SIMD block. Per-lane scalar accumulation with the same per-element op
+/// order as the blocked paths (zero seed, `k` ascending, affine
+/// finalize), shared by the scalar and SIMD kernels.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn fc_int8_lane_edge(
+    row: &[i8],
+    scale_o: f32,
+    zp_o: f32,
+    bias_o: f32,
+    xs: &[f32],
+    xsum: &[f32],
+    in_dim: usize,
+    out_dim: usize,
+    o: usize,
+    l: usize,
+    lanes: usize,
+    out: &mut [f32],
+) {
+    for c in 0..lanes {
+        let x = &xs[(l + c) * in_dim..][..in_dim];
+        let mut acc = 0.0f32;
+        for (&qk, &xk) in row.iter().zip(x) {
+            acc += qk as f32 * xk;
+        }
+        out[(l + c) * out_dim + o] = bias_o + scale_o * (acc - zp_o * xsum[l + c]);
+    }
+}
+
+/// Scalar (lane-blocked) int8 FC — the reference path for
+/// [`fc_batch_int8_into`].
+#[allow(clippy::too_many_arguments)]
+pub fn fc_batch_int8_scalar_into(
+    q: &[i8],
+    scale: &[f32],
+    zp: &[f32],
+    bias: &[f32],
+    xs: &[f32],
+    batch: usize,
+    xsum: &mut Vec<f32>,
+    out: &mut [f32],
+) {
+    assert!(batch > 0, "fc_batch_int8_scalar_into needs at least one lane");
     let out_dim = bias.len();
     debug_assert_eq!(xs.len() % batch, 0);
     let in_dim = xs.len() / batch;
@@ -213,6 +337,9 @@ pub fn fc_batch_int8_into(
 ///
 /// Per output element the reduction order matches [`super::ops::conv_step`]
 /// exactly: bias seed, then `(in_ch, k)` ascending, zero weights skipped.
+/// Dispatched to the active ISA (the SIMD paths vectorize the width
+/// sweep — independent output positions — and keep the same loop nest),
+/// bit-identical to [`conv_steps_scalar_into`] under every ISA.
 #[allow(clippy::too_many_arguments)]
 pub fn conv_steps_into(
     w: &[f32],
@@ -227,7 +354,95 @@ pub fn conv_steps_into(
     width: usize,
     out: &mut [f32],
 ) {
-    assert!(batch > 0, "conv_steps_into needs at least one lane");
+    match dispatch::active() {
+        #[cfg(target_arch = "x86_64")]
+        dispatch::KernelIsa::Avx2 => {
+            check_conv_shapes(
+                w.len(),
+                bias,
+                ext,
+                t_out,
+                stride,
+                batch,
+                in_ch,
+                out_ch,
+                kw,
+                width,
+                out,
+            );
+            unsafe {
+                simd::avx2::conv_steps(
+                    w, bias, ext, t_out, stride, batch, in_ch, out_ch, kw, width, out,
+                )
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        dispatch::KernelIsa::Neon => {
+            check_conv_shapes(
+                w.len(),
+                bias,
+                ext,
+                t_out,
+                stride,
+                batch,
+                in_ch,
+                out_ch,
+                kw,
+                width,
+                out,
+            );
+            unsafe {
+                simd::neon::conv_steps(
+                    w, bias, ext, t_out, stride, batch, in_ch, out_ch, kw, width, out,
+                )
+            }
+        }
+        _ => conv_steps_scalar_into(
+            w, bias, ext, t_out, stride, batch, in_ch, out_ch, kw, width, out,
+        ),
+    }
+}
+
+/// Shared shape validation for the conv dispatchers (`w_len` is the
+/// weight element count, so one helper serves the f32 and int8 forms).
+#[allow(clippy::too_many_arguments)]
+fn check_conv_shapes(
+    w_len: usize,
+    bias: &[f32],
+    ext: &[f32],
+    t_out: usize,
+    stride: usize,
+    batch: usize,
+    in_ch: usize,
+    out_ch: usize,
+    kw: usize,
+    width: usize,
+    out: &[f32],
+) {
+    assert!(batch > 0, "conv kernels need at least one lane");
+    debug_assert_eq!(bias.len(), out_ch);
+    debug_assert_eq!(w_len, out_ch * in_ch * kw);
+    debug_assert_eq!(ext.len(), (kw - 1 + t_out * stride) * batch * in_ch * width);
+    debug_assert_eq!(out.len(), t_out * batch * out_ch * width);
+}
+
+/// Scalar causal temporal convolution — the reference path for
+/// [`conv_steps_into`].
+#[allow(clippy::too_many_arguments)]
+pub fn conv_steps_scalar_into(
+    w: &[f32],
+    bias: &[f32],
+    ext: &[f32],
+    t_out: usize,
+    stride: usize,
+    batch: usize,
+    in_ch: usize,
+    out_ch: usize,
+    kw: usize,
+    width: usize,
+    out: &mut [f32],
+) {
+    assert!(batch > 0, "conv_steps_scalar_into needs at least one lane");
     let d_in = in_ch * width;
     let d_out = out_ch * width;
     let in_block = batch * d_in;
@@ -273,7 +488,10 @@ pub fn conv_steps_into(
 ///
 /// where `W[m] = Σᵢₖ x[i][k][m]` is the per-position window sum, computed
 /// once per timestep into the reusable `wsum` buffer (`batch × width`)
-/// and shared by every output channel.
+/// and shared by every output channel. Dispatched to the active ISA;
+/// accumulation is f32, so the SIMD paths vectorize the width sweep like
+/// the f32 conv and stay bit-identical (`==`) to
+/// [`conv_steps_int8_scalar_into`] under every ISA.
 #[allow(clippy::too_many_arguments)]
 pub fn conv_steps_int8_into(
     q: &[i8],
@@ -291,7 +509,77 @@ pub fn conv_steps_int8_into(
     wsum: &mut Vec<f32>,
     out: &mut [f32],
 ) {
-    assert!(batch > 0, "conv_steps_int8_into needs at least one lane");
+    match dispatch::active() {
+        #[cfg(target_arch = "x86_64")]
+        dispatch::KernelIsa::Avx2 => {
+            check_conv_shapes(
+                q.len(),
+                bias,
+                ext,
+                t_out,
+                stride,
+                batch,
+                in_ch,
+                out_ch,
+                kw,
+                width,
+                out,
+            );
+            unsafe {
+                simd::avx2::conv_steps_int8(
+                    q, scale, zp, bias, ext, t_out, stride, batch, in_ch, out_ch, kw, width,
+                    wsum, out,
+                )
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        dispatch::KernelIsa::Neon => {
+            check_conv_shapes(
+                q.len(),
+                bias,
+                ext,
+                t_out,
+                stride,
+                batch,
+                in_ch,
+                out_ch,
+                kw,
+                width,
+                out,
+            );
+            unsafe {
+                simd::neon::conv_steps_int8(
+                    q, scale, zp, bias, ext, t_out, stride, batch, in_ch, out_ch, kw, width,
+                    wsum, out,
+                )
+            }
+        }
+        _ => conv_steps_int8_scalar_into(
+            q, scale, zp, bias, ext, t_out, stride, batch, in_ch, out_ch, kw, width, wsum, out,
+        ),
+    }
+}
+
+/// Scalar int8 causal temporal convolution — the reference path for
+/// [`conv_steps_int8_into`].
+#[allow(clippy::too_many_arguments)]
+pub fn conv_steps_int8_scalar_into(
+    q: &[i8],
+    scale: &[f32],
+    zp: &[f32],
+    bias: &[f32],
+    ext: &[f32],
+    t_out: usize,
+    stride: usize,
+    batch: usize,
+    in_ch: usize,
+    out_ch: usize,
+    kw: usize,
+    width: usize,
+    wsum: &mut Vec<f32>,
+    out: &mut [f32],
+) {
+    assert!(batch > 0, "conv_steps_int8_scalar_into needs at least one lane");
     let d_in = in_ch * width;
     let d_out = out_ch * width;
     let in_block = batch * d_in;

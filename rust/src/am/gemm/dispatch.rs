@@ -1,0 +1,208 @@
+//! Runtime ISA dispatch for the AM micro-kernels.
+//!
+//! The host ISA is detected **once** per process (`is_x86_feature_detected!`
+//! on x86_64, `is_aarch64_feature_detected!` on aarch64) and every public
+//! kernel in [`super`] (the `am::gemm` module) routes through
+//! [`active`] to either the explicit SIMD implementation in `gemm::simd`
+//! or the scalar register-blocked kernel. Because the SIMD kernels
+//! vectorize only across *independent* outputs (never the reduction
+//! dimension — see the parity contract in `am::gemm`), the ISA choice is
+//! purely a throughput knob: results are bit-identical under every ISA,
+//! which `tests/simd_parity.rs` asserts.
+//!
+//! Two override mechanisms exist, in precedence order:
+//!
+//! 1. a **thread-local** forced ISA installed by [`with_forced_isa`] —
+//!    used by the parity tests and the A/B legs of
+//!    `benches/gemm_kernels.rs`;
+//! 2. the **`ASRPU_KERNEL_ISA`** environment variable
+//!    (`scalar` | `avx2` | `neon`), read once and cached — used by the
+//!    forced-scalar CI matrix leg. An unknown or unsupported-on-this-host
+//!    value falls back to the detected ISA (`scalar` is always honored).
+
+use std::cell::Cell;
+use std::sync::OnceLock;
+
+/// Instruction set the AM kernels dispatch to at runtime.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum KernelIsa {
+    /// Portable register-blocked Rust (the PR 2 kernels) — the oracle
+    /// every SIMD path must match bit-for-bit.
+    Scalar,
+    /// x86_64 AVX2: 256-bit vectors, 8 f32 lanes.
+    Avx2,
+    /// aarch64 NEON: 128-bit vectors, 4 f32 lanes.
+    Neon,
+}
+
+impl KernelIsa {
+    /// Stable lower-case name (the `ASRPU_KERNEL_ISA` vocabulary and the
+    /// `kernel_isa` value in serving `config` / bench JSON rows).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            KernelIsa::Scalar => "scalar",
+            KernelIsa::Avx2 => "avx2",
+            KernelIsa::Neon => "neon",
+        }
+    }
+
+    /// Parse [`Self::as_str`] output (case-insensitive). `None` for
+    /// anything outside the vocabulary.
+    pub fn parse(s: &str) -> Option<KernelIsa> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Some(KernelIsa::Scalar),
+            "avx2" => Some(KernelIsa::Avx2),
+            "neon" => Some(KernelIsa::Neon),
+            _ => None,
+        }
+    }
+
+    /// f32 lanes per vector register (1 for scalar).
+    pub fn simd_lanes(&self) -> usize {
+        match self {
+            KernelIsa::Scalar => 1,
+            KernelIsa::Avx2 => 8,
+            KernelIsa::Neon => 4,
+        }
+    }
+
+    /// The ISA the kernels will use on this thread right now —
+    /// convenience alias for [`active`].
+    pub fn active() -> KernelIsa {
+        active()
+    }
+}
+
+impl std::fmt::Display for KernelIsa {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// The best ISA this host supports (ignores overrides).
+pub fn detect() -> KernelIsa {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            return KernelIsa::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return KernelIsa::Neon;
+        }
+    }
+    KernelIsa::Scalar
+}
+
+/// Whether `isa`'s kernels can actually run on this host. `Scalar` is
+/// always supported; a SIMD ISA only when it is the detected one.
+pub fn supported(isa: KernelIsa) -> bool {
+    isa == KernelIsa::Scalar || isa == detect()
+}
+
+/// Process-wide configured ISA: `ASRPU_KERNEL_ISA` when set, valid and
+/// supported, else [`detect`]. Read once, cached.
+fn configured() -> KernelIsa {
+    static CONFIGURED: OnceLock<KernelIsa> = OnceLock::new();
+    *CONFIGURED.get_or_init(|| match std::env::var("ASRPU_KERNEL_ISA") {
+        Ok(v) if !v.trim().is_empty() => match KernelIsa::parse(&v) {
+            Some(isa) if supported(isa) => isa,
+            _ => detect(),
+        },
+        _ => detect(),
+    })
+}
+
+thread_local! {
+    /// Thread-local override installed by [`with_forced_isa`]. Thread-local
+    /// (not process-wide) so parity tests and bench A/B legs cannot race
+    /// the shard workers, which keep dispatching on their own threads.
+    static FORCED: Cell<Option<KernelIsa>> = const { Cell::new(None) };
+}
+
+/// The ISA the kernels dispatch to on this thread: the
+/// [`with_forced_isa`] override if one is installed, else the
+/// process-wide configured ISA.
+pub fn active() -> KernelIsa {
+    FORCED.with(|f| f.get()).unwrap_or_else(configured)
+}
+
+/// Run `f` with the kernels forced to `isa` on this thread, restoring the
+/// previous override afterwards (also on panic/unwind). An ISA this host
+/// cannot execute is clamped to `Scalar` rather than faulting.
+pub fn with_forced_isa<T>(isa: KernelIsa, f: impl FnOnce() -> T) -> T {
+    let clamped = if supported(isa) { isa } else { KernelIsa::Scalar };
+    struct Restore(Option<KernelIsa>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            FORCED.with(|c| c.set(self.0));
+        }
+    }
+    let _restore = Restore(FORCED.with(|c| c.replace(Some(clamped))));
+    f()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_round_trip() {
+        for isa in [KernelIsa::Scalar, KernelIsa::Avx2, KernelIsa::Neon] {
+            assert_eq!(KernelIsa::parse(isa.as_str()), Some(isa));
+            assert_eq!(KernelIsa::parse(&isa.as_str().to_uppercase()), Some(isa));
+        }
+        assert_eq!(KernelIsa::parse("avx512"), None);
+        assert_eq!(KernelIsa::parse(""), None);
+    }
+
+    #[test]
+    fn lane_widths_match_register_sizes() {
+        assert_eq!(KernelIsa::Scalar.simd_lanes(), 1);
+        assert_eq!(KernelIsa::Avx2.simd_lanes(), 8);
+        assert_eq!(KernelIsa::Neon.simd_lanes(), 4);
+    }
+
+    #[test]
+    fn scalar_is_always_supported_and_detect_is_self_consistent() {
+        assert!(supported(KernelIsa::Scalar));
+        assert!(supported(detect()));
+    }
+
+    #[test]
+    fn forced_isa_applies_and_restores() {
+        let outer = active();
+        with_forced_isa(KernelIsa::Scalar, || {
+            assert_eq!(active(), KernelIsa::Scalar);
+            // Nesting: the inner override wins, then unwinds.
+            with_forced_isa(detect(), || assert_eq!(active(), detect()));
+            assert_eq!(active(), KernelIsa::Scalar);
+        });
+        assert_eq!(active(), outer);
+    }
+
+    #[test]
+    fn forced_isa_restores_on_panic() {
+        let outer = active();
+        let r = std::panic::catch_unwind(|| {
+            with_forced_isa(KernelIsa::Scalar, || panic!("boom"));
+        });
+        assert!(r.is_err());
+        assert_eq!(active(), outer);
+    }
+
+    #[test]
+    fn unsupported_force_clamps_to_scalar() {
+        // At most one of AVX2/NEON is the detected ISA, so the other is
+        // unsupported on every host and must clamp.
+        let foreign = match detect() {
+            KernelIsa::Avx2 => KernelIsa::Neon,
+            _ => KernelIsa::Avx2,
+        };
+        if !supported(foreign) {
+            with_forced_isa(foreign, || assert_eq!(active(), KernelIsa::Scalar));
+        }
+    }
+}

@@ -1,0 +1,677 @@
+//! Explicit `std::arch` SIMD implementations of the AM micro-kernels —
+//! AVX2 (8×f32) on x86_64, NEON (4×f32) on aarch64 — selected at runtime
+//! by [`super::dispatch`].
+//!
+//! **Bit-exactness strategy** (the whole point of this module's shape):
+//! vectors span *independent outputs only* — batch lanes for the FC
+//! kernels, mel-row positions for the conv kernels — never the reduction
+//! (`k`) dimension. Every SIMD lane therefore executes the exact scalar
+//! op sequence for its output element (bias seed, one mul + one add per
+//! `k`, ascending), using separate multiply and add instructions — FMA
+//! would contract the intermediate rounding step and break `==` parity
+//! with the scalar kernels, so `_mm256_fmadd_ps`/`vfmaq_f32` are banned
+//! here. Remainders (batch or width not a multiple of the vector width)
+//! fall back to the scalar edge helpers in [`super`], which share the
+//! same per-element order.
+#![allow(clippy::too_many_arguments)]
+
+#[cfg(target_arch = "x86_64")]
+pub mod avx2 {
+    //! AVX2 kernels. Every function requires the `avx2` target feature at
+    //! runtime; [`super::super::dispatch`] only routes here after
+    //! `is_x86_feature_detected!("avx2")` succeeded.
+
+    use std::arch::x86_64::*;
+
+    /// f32 lanes per 256-bit vector.
+    const LANES: usize = 8;
+    /// Weight rows per FC register tile (matches the scalar kernel).
+    const ROWS: usize = super::super::TILE_ROWS;
+
+    /// Strided gather of `LANES` consecutive batch lanes' activation `k`:
+    /// `[xs[base], xs[base+stride], …]`. Plain indexed loads into a stack
+    /// array, then one vector load — AVX2's hardware gather is slower for
+    /// this stride pattern and complicates bounds reasoning.
+    #[target_feature(enable = "avx2")]
+    unsafe fn gather(xs: &[f32], base: usize, stride: usize) -> __m256 {
+        let mut g = [0.0f32; LANES];
+        for (c, v) in g.iter_mut().enumerate() {
+            *v = xs[base + c * stride];
+        }
+        _mm256_loadu_ps(g.as_ptr())
+    }
+
+    /// `dst[m] += a * src[m]` — one mul + one add per element, the scalar
+    /// width-loop op order, 8 elements per instruction, scalar tail.
+    #[target_feature(enable = "avx2")]
+    unsafe fn axpy(dst: &mut [f32], src: &[f32], a: f32) {
+        let n = dst.len();
+        let av = _mm256_set1_ps(a);
+        let mut m = 0;
+        while m + LANES <= n {
+            let d = _mm256_loadu_ps(dst.as_ptr().add(m));
+            let s = _mm256_loadu_ps(src.as_ptr().add(m));
+            _mm256_storeu_ps(dst.as_mut_ptr().add(m), _mm256_add_ps(d, _mm256_mul_ps(av, s)));
+            m += LANES;
+        }
+        while m < n {
+            dst[m] += a * src[m];
+            m += 1;
+        }
+    }
+
+    /// `dst[m] += src[m]` (the int8 conv's window-sum accumulation).
+    #[target_feature(enable = "avx2")]
+    unsafe fn add_assign(dst: &mut [f32], src: &[f32]) {
+        let n = dst.len();
+        let mut m = 0;
+        while m + LANES <= n {
+            let d = _mm256_loadu_ps(dst.as_ptr().add(m));
+            let s = _mm256_loadu_ps(src.as_ptr().add(m));
+            _mm256_storeu_ps(dst.as_mut_ptr().add(m), _mm256_add_ps(d, s));
+            m += LANES;
+        }
+        while m < n {
+            dst[m] += src[m];
+            m += 1;
+        }
+    }
+
+    /// `dst[m] = bias + scale * (dst[m] - zp * ws[m])` — the int8 conv
+    /// finalize; per element the same mul, sub, mul, add sequence as the
+    /// scalar kernel.
+    #[target_feature(enable = "avx2")]
+    unsafe fn affine(dst: &mut [f32], ws: &[f32], bias: f32, scale: f32, zp: f32) {
+        let n = dst.len();
+        let bv = _mm256_set1_ps(bias);
+        let sv = _mm256_set1_ps(scale);
+        let zv = _mm256_set1_ps(zp);
+        let mut m = 0;
+        while m + LANES <= n {
+            let v = _mm256_loadu_ps(dst.as_ptr().add(m));
+            let s = _mm256_loadu_ps(ws.as_ptr().add(m));
+            let t = _mm256_sub_ps(v, _mm256_mul_ps(zv, s));
+            _mm256_storeu_ps(dst.as_mut_ptr().add(m), _mm256_add_ps(bv, _mm256_mul_ps(sv, t)));
+            m += LANES;
+        }
+        while m < n {
+            dst[m] = bias + scale * (dst[m] - zp * ws[m]);
+            m += 1;
+        }
+    }
+
+    /// Full 4×8 FC register tile: 4 weight rows × 8 batch lanes, one
+    /// accumulator vector per row, shared `k` loop.
+    #[target_feature(enable = "avx2")]
+    unsafe fn fc_tile(
+        w: &[f32],
+        bias: &[f32],
+        xs: &[f32],
+        in_dim: usize,
+        out_dim: usize,
+        o: usize,
+        l: usize,
+        out: &mut [f32],
+    ) {
+        let r0 = &w[o * in_dim..][..in_dim];
+        let r1 = &w[(o + 1) * in_dim..][..in_dim];
+        let r2 = &w[(o + 2) * in_dim..][..in_dim];
+        let r3 = &w[(o + 3) * in_dim..][..in_dim];
+        let mut acc0 = _mm256_set1_ps(bias[o]);
+        let mut acc1 = _mm256_set1_ps(bias[o + 1]);
+        let mut acc2 = _mm256_set1_ps(bias[o + 2]);
+        let mut acc3 = _mm256_set1_ps(bias[o + 3]);
+        for k in 0..in_dim {
+            let xg = gather(xs, l * in_dim + k, in_dim);
+            acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(_mm256_set1_ps(r0[k]), xg));
+            acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(_mm256_set1_ps(r1[k]), xg));
+            acc2 = _mm256_add_ps(acc2, _mm256_mul_ps(_mm256_set1_ps(r2[k]), xg));
+            acc3 = _mm256_add_ps(acc3, _mm256_mul_ps(_mm256_set1_ps(r3[k]), xg));
+        }
+        let mut buf = [0.0f32; LANES];
+        for (r, acc) in [acc0, acc1, acc2, acc3].into_iter().enumerate() {
+            _mm256_storeu_ps(buf.as_mut_ptr(), acc);
+            for (c, v) in buf.iter().enumerate() {
+                out[(l + c) * out_dim + o + r] = *v;
+            }
+        }
+    }
+
+    /// AVX2 [`super::super::fc_batch_into`] body. Shapes must already be
+    /// validated by the dispatcher.
+    ///
+    /// # Safety
+    /// AVX2 must be available on the executing CPU.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn fc_batch(w: &[f32], bias: &[f32], xs: &[f32], batch: usize, out: &mut [f32]) {
+        let out_dim = bias.len();
+        let in_dim = xs.len() / batch;
+        let mut o = 0;
+        while o < out_dim {
+            let rows = ROWS.min(out_dim - o);
+            let mut l = 0;
+            if rows == ROWS {
+                while l + LANES <= batch {
+                    fc_tile(w, bias, xs, in_dim, out_dim, o, l, out);
+                    l += LANES;
+                }
+            }
+            if l < batch {
+                let rem = batch - l;
+                super::super::fc_tile_edge(w, bias, xs, in_dim, out_dim, o, l, rows, rem, out);
+            }
+            o += rows;
+        }
+    }
+
+    /// AVX2 [`super::super::fc_batch_int8_into`] body: per output row,
+    /// 8-lane accumulator blocks over the shared `k` loop; the per-lane
+    /// `Σx` pre-pass and the affine finalize stay scalar (identical
+    /// expressions to the scalar kernel).
+    ///
+    /// # Safety
+    /// AVX2 must be available on the executing CPU.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn fc_batch_int8(
+        q: &[i8],
+        scale: &[f32],
+        zp: &[f32],
+        bias: &[f32],
+        xs: &[f32],
+        batch: usize,
+        xsum: &mut Vec<f32>,
+        out: &mut [f32],
+    ) {
+        let out_dim = bias.len();
+        let in_dim = xs.len() / batch;
+        xsum.clear();
+        xsum.resize(batch, 0.0);
+        for (lane, s) in xsum.iter_mut().enumerate() {
+            *s = xs[lane * in_dim..(lane + 1) * in_dim].iter().sum();
+        }
+        for o in 0..out_dim {
+            let row = &q[o * in_dim..][..in_dim];
+            let mut l = 0;
+            while l + LANES <= batch {
+                let mut acc = _mm256_setzero_ps();
+                for (k, &qk) in row.iter().enumerate() {
+                    let wq = _mm256_set1_ps(qk as f32);
+                    let xg = gather(xs, l * in_dim + k, in_dim);
+                    acc = _mm256_add_ps(acc, _mm256_mul_ps(wq, xg));
+                }
+                let mut buf = [0.0f32; LANES];
+                _mm256_storeu_ps(buf.as_mut_ptr(), acc);
+                for (c, a) in buf.iter().enumerate() {
+                    out[(l + c) * out_dim + o] = bias[o] + scale[o] * (a - zp[o] * xsum[l + c]);
+                }
+                l += LANES;
+            }
+            if l < batch {
+                super::super::fc_int8_lane_edge(
+                    row,
+                    scale[o],
+                    zp[o],
+                    bias[o],
+                    xs,
+                    xsum,
+                    in_dim,
+                    out_dim,
+                    o,
+                    l,
+                    batch - l,
+                    out,
+                );
+            }
+        }
+    }
+
+    /// AVX2 [`super::super::conv_steps_into`] body: identical loop nest to
+    /// the scalar kernel (including the zero-weight skip), with the
+    /// innermost width sweep replaced by [`axpy`].
+    ///
+    /// # Safety
+    /// AVX2 must be available on the executing CPU.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn conv_steps(
+        w: &[f32],
+        bias: &[f32],
+        ext: &[f32],
+        t_out: usize,
+        stride: usize,
+        batch: usize,
+        in_ch: usize,
+        out_ch: usize,
+        kw: usize,
+        width: usize,
+        out: &mut [f32],
+    ) {
+        let d_in = in_ch * width;
+        let d_out = out_ch * width;
+        let in_block = batch * d_in;
+        let out_block = batch * d_out;
+        for t in 0..t_out {
+            let out_t = &mut out[t * out_block..][..out_block];
+            let base = t * stride;
+            for o in 0..out_ch {
+                for lane_out in out_t.chunks_exact_mut(d_out) {
+                    lane_out[o * width..(o + 1) * width].fill(bias[o]);
+                }
+                for i in 0..in_ch {
+                    for k in 0..kw {
+                        let wk = w[(o * in_ch + i) * kw + k];
+                        if wk == 0.0 {
+                            continue;
+                        }
+                        let xblk = &ext[(base + k) * in_block..][..in_block];
+                        for (lane_out, lane_in) in
+                            out_t.chunks_exact_mut(d_out).zip(xblk.chunks_exact(d_in))
+                        {
+                            axpy(
+                                &mut lane_out[o * width..(o + 1) * width],
+                                &lane_in[i * width..(i + 1) * width],
+                                wk,
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// AVX2 [`super::super::conv_steps_int8_into`] body: window sums,
+    /// accumulation and affine finalize all width-vectorized, preserving
+    /// the scalar kernel's per-element op sequence.
+    ///
+    /// # Safety
+    /// AVX2 must be available on the executing CPU.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn conv_steps_int8(
+        q: &[i8],
+        scale: &[f32],
+        zp: &[f32],
+        bias: &[f32],
+        ext: &[f32],
+        t_out: usize,
+        stride: usize,
+        batch: usize,
+        in_ch: usize,
+        out_ch: usize,
+        kw: usize,
+        width: usize,
+        wsum: &mut Vec<f32>,
+        out: &mut [f32],
+    ) {
+        let d_in = in_ch * width;
+        let d_out = out_ch * width;
+        let in_block = batch * d_in;
+        let out_block = batch * d_out;
+        for t in 0..t_out {
+            let out_t = &mut out[t * out_block..][..out_block];
+            let base = t * stride;
+            wsum.clear();
+            wsum.resize(batch * width, 0.0);
+            for i in 0..in_ch {
+                for k in 0..kw {
+                    let xblk = &ext[(base + k) * in_block..][..in_block];
+                    for (ws, lane_in) in wsum.chunks_exact_mut(width).zip(xblk.chunks_exact(d_in))
+                    {
+                        add_assign(ws, &lane_in[i * width..(i + 1) * width]);
+                    }
+                }
+            }
+            for o in 0..out_ch {
+                for lane_out in out_t.chunks_exact_mut(d_out) {
+                    lane_out[o * width..(o + 1) * width].fill(0.0);
+                }
+                for i in 0..in_ch {
+                    for k in 0..kw {
+                        let qk = q[(o * in_ch + i) * kw + k];
+                        if qk == 0 {
+                            continue;
+                        }
+                        let wq = qk as f32;
+                        let xblk = &ext[(base + k) * in_block..][..in_block];
+                        for (lane_out, lane_in) in
+                            out_t.chunks_exact_mut(d_out).zip(xblk.chunks_exact(d_in))
+                        {
+                            axpy(
+                                &mut lane_out[o * width..(o + 1) * width],
+                                &lane_in[i * width..(i + 1) * width],
+                                wq,
+                            );
+                        }
+                    }
+                }
+                for (lane_out, ws) in out_t.chunks_exact_mut(d_out).zip(wsum.chunks_exact(width))
+                {
+                    affine(&mut lane_out[o * width..(o + 1) * width], ws, bias[o], scale[o], zp[o]);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+pub mod neon {
+    //! NEON kernels — the 4-lane mirror of the AVX2 module; same
+    //! bit-exactness strategy (independent outputs only, separate
+    //! mul + add, scalar tails).
+
+    use std::arch::aarch64::*;
+
+    /// f32 lanes per 128-bit vector.
+    const LANES: usize = 4;
+    /// Weight rows per FC register tile (matches the scalar kernel).
+    const ROWS: usize = super::super::TILE_ROWS;
+
+    /// Strided gather of `LANES` consecutive batch lanes' activation `k`.
+    #[target_feature(enable = "neon")]
+    unsafe fn gather(xs: &[f32], base: usize, stride: usize) -> float32x4_t {
+        let g = [
+            xs[base],
+            xs[base + stride],
+            xs[base + 2 * stride],
+            xs[base + 3 * stride],
+        ];
+        vld1q_f32(g.as_ptr())
+    }
+
+    /// `dst[m] += a * src[m]` — scalar op order, 4 elements per
+    /// instruction, scalar tail.
+    #[target_feature(enable = "neon")]
+    unsafe fn axpy(dst: &mut [f32], src: &[f32], a: f32) {
+        let n = dst.len();
+        let av = vdupq_n_f32(a);
+        let mut m = 0;
+        while m + LANES <= n {
+            let d = vld1q_f32(dst.as_ptr().add(m));
+            let s = vld1q_f32(src.as_ptr().add(m));
+            vst1q_f32(dst.as_mut_ptr().add(m), vaddq_f32(d, vmulq_f32(av, s)));
+            m += LANES;
+        }
+        while m < n {
+            dst[m] += a * src[m];
+            m += 1;
+        }
+    }
+
+    /// `dst[m] += src[m]` (the int8 conv's window-sum accumulation).
+    #[target_feature(enable = "neon")]
+    unsafe fn add_assign(dst: &mut [f32], src: &[f32]) {
+        let n = dst.len();
+        let mut m = 0;
+        while m + LANES <= n {
+            let d = vld1q_f32(dst.as_ptr().add(m));
+            let s = vld1q_f32(src.as_ptr().add(m));
+            vst1q_f32(dst.as_mut_ptr().add(m), vaddq_f32(d, s));
+            m += LANES;
+        }
+        while m < n {
+            dst[m] += src[m];
+            m += 1;
+        }
+    }
+
+    /// `dst[m] = bias + scale * (dst[m] - zp * ws[m])` — the int8 conv
+    /// finalize, scalar mul/sub/mul/add order per element.
+    #[target_feature(enable = "neon")]
+    unsafe fn affine(dst: &mut [f32], ws: &[f32], bias: f32, scale: f32, zp: f32) {
+        let n = dst.len();
+        let bv = vdupq_n_f32(bias);
+        let sv = vdupq_n_f32(scale);
+        let zv = vdupq_n_f32(zp);
+        let mut m = 0;
+        while m + LANES <= n {
+            let v = vld1q_f32(dst.as_ptr().add(m));
+            let s = vld1q_f32(ws.as_ptr().add(m));
+            let t = vsubq_f32(v, vmulq_f32(zv, s));
+            vst1q_f32(dst.as_mut_ptr().add(m), vaddq_f32(bv, vmulq_f32(sv, t)));
+            m += LANES;
+        }
+        while m < n {
+            dst[m] = bias + scale * (dst[m] - zp * ws[m]);
+            m += 1;
+        }
+    }
+
+    /// Full 4×4 FC register tile: 4 weight rows × 4 batch lanes.
+    #[target_feature(enable = "neon")]
+    unsafe fn fc_tile(
+        w: &[f32],
+        bias: &[f32],
+        xs: &[f32],
+        in_dim: usize,
+        out_dim: usize,
+        o: usize,
+        l: usize,
+        out: &mut [f32],
+    ) {
+        let r0 = &w[o * in_dim..][..in_dim];
+        let r1 = &w[(o + 1) * in_dim..][..in_dim];
+        let r2 = &w[(o + 2) * in_dim..][..in_dim];
+        let r3 = &w[(o + 3) * in_dim..][..in_dim];
+        let mut acc0 = vdupq_n_f32(bias[o]);
+        let mut acc1 = vdupq_n_f32(bias[o + 1]);
+        let mut acc2 = vdupq_n_f32(bias[o + 2]);
+        let mut acc3 = vdupq_n_f32(bias[o + 3]);
+        for k in 0..in_dim {
+            let xg = gather(xs, l * in_dim + k, in_dim);
+            acc0 = vaddq_f32(acc0, vmulq_f32(vdupq_n_f32(r0[k]), xg));
+            acc1 = vaddq_f32(acc1, vmulq_f32(vdupq_n_f32(r1[k]), xg));
+            acc2 = vaddq_f32(acc2, vmulq_f32(vdupq_n_f32(r2[k]), xg));
+            acc3 = vaddq_f32(acc3, vmulq_f32(vdupq_n_f32(r3[k]), xg));
+        }
+        let mut buf = [0.0f32; LANES];
+        for (r, acc) in [acc0, acc1, acc2, acc3].into_iter().enumerate() {
+            vst1q_f32(buf.as_mut_ptr(), acc);
+            for (c, v) in buf.iter().enumerate() {
+                out[(l + c) * out_dim + o + r] = *v;
+            }
+        }
+    }
+
+    /// NEON [`super::super::fc_batch_into`] body.
+    ///
+    /// # Safety
+    /// NEON must be available on the executing CPU.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn fc_batch(w: &[f32], bias: &[f32], xs: &[f32], batch: usize, out: &mut [f32]) {
+        let out_dim = bias.len();
+        let in_dim = xs.len() / batch;
+        let mut o = 0;
+        while o < out_dim {
+            let rows = ROWS.min(out_dim - o);
+            let mut l = 0;
+            if rows == ROWS {
+                while l + LANES <= batch {
+                    fc_tile(w, bias, xs, in_dim, out_dim, o, l, out);
+                    l += LANES;
+                }
+            }
+            if l < batch {
+                let rem = batch - l;
+                super::super::fc_tile_edge(w, bias, xs, in_dim, out_dim, o, l, rows, rem, out);
+            }
+            o += rows;
+        }
+    }
+
+    /// NEON [`super::super::fc_batch_int8_into`] body.
+    ///
+    /// # Safety
+    /// NEON must be available on the executing CPU.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn fc_batch_int8(
+        q: &[i8],
+        scale: &[f32],
+        zp: &[f32],
+        bias: &[f32],
+        xs: &[f32],
+        batch: usize,
+        xsum: &mut Vec<f32>,
+        out: &mut [f32],
+    ) {
+        let out_dim = bias.len();
+        let in_dim = xs.len() / batch;
+        xsum.clear();
+        xsum.resize(batch, 0.0);
+        for (lane, s) in xsum.iter_mut().enumerate() {
+            *s = xs[lane * in_dim..(lane + 1) * in_dim].iter().sum();
+        }
+        for o in 0..out_dim {
+            let row = &q[o * in_dim..][..in_dim];
+            let mut l = 0;
+            while l + LANES <= batch {
+                let mut acc = vdupq_n_f32(0.0);
+                for (k, &qk) in row.iter().enumerate() {
+                    let wq = vdupq_n_f32(qk as f32);
+                    let xg = gather(xs, l * in_dim + k, in_dim);
+                    acc = vaddq_f32(acc, vmulq_f32(wq, xg));
+                }
+                let mut buf = [0.0f32; LANES];
+                vst1q_f32(buf.as_mut_ptr(), acc);
+                for (c, a) in buf.iter().enumerate() {
+                    out[(l + c) * out_dim + o] = bias[o] + scale[o] * (a - zp[o] * xsum[l + c]);
+                }
+                l += LANES;
+            }
+            if l < batch {
+                super::super::fc_int8_lane_edge(
+                    row,
+                    scale[o],
+                    zp[o],
+                    bias[o],
+                    xs,
+                    xsum,
+                    in_dim,
+                    out_dim,
+                    o,
+                    l,
+                    batch - l,
+                    out,
+                );
+            }
+        }
+    }
+
+    /// NEON [`super::super::conv_steps_into`] body.
+    ///
+    /// # Safety
+    /// NEON must be available on the executing CPU.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn conv_steps(
+        w: &[f32],
+        bias: &[f32],
+        ext: &[f32],
+        t_out: usize,
+        stride: usize,
+        batch: usize,
+        in_ch: usize,
+        out_ch: usize,
+        kw: usize,
+        width: usize,
+        out: &mut [f32],
+    ) {
+        let d_in = in_ch * width;
+        let d_out = out_ch * width;
+        let in_block = batch * d_in;
+        let out_block = batch * d_out;
+        for t in 0..t_out {
+            let out_t = &mut out[t * out_block..][..out_block];
+            let base = t * stride;
+            for o in 0..out_ch {
+                for lane_out in out_t.chunks_exact_mut(d_out) {
+                    lane_out[o * width..(o + 1) * width].fill(bias[o]);
+                }
+                for i in 0..in_ch {
+                    for k in 0..kw {
+                        let wk = w[(o * in_ch + i) * kw + k];
+                        if wk == 0.0 {
+                            continue;
+                        }
+                        let xblk = &ext[(base + k) * in_block..][..in_block];
+                        for (lane_out, lane_in) in
+                            out_t.chunks_exact_mut(d_out).zip(xblk.chunks_exact(d_in))
+                        {
+                            axpy(
+                                &mut lane_out[o * width..(o + 1) * width],
+                                &lane_in[i * width..(i + 1) * width],
+                                wk,
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// NEON [`super::super::conv_steps_int8_into`] body.
+    ///
+    /// # Safety
+    /// NEON must be available on the executing CPU.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn conv_steps_int8(
+        q: &[i8],
+        scale: &[f32],
+        zp: &[f32],
+        bias: &[f32],
+        ext: &[f32],
+        t_out: usize,
+        stride: usize,
+        batch: usize,
+        in_ch: usize,
+        out_ch: usize,
+        kw: usize,
+        width: usize,
+        wsum: &mut Vec<f32>,
+        out: &mut [f32],
+    ) {
+        let d_in = in_ch * width;
+        let d_out = out_ch * width;
+        let in_block = batch * d_in;
+        let out_block = batch * d_out;
+        for t in 0..t_out {
+            let out_t = &mut out[t * out_block..][..out_block];
+            let base = t * stride;
+            wsum.clear();
+            wsum.resize(batch * width, 0.0);
+            for i in 0..in_ch {
+                for k in 0..kw {
+                    let xblk = &ext[(base + k) * in_block..][..in_block];
+                    for (ws, lane_in) in wsum.chunks_exact_mut(width).zip(xblk.chunks_exact(d_in))
+                    {
+                        add_assign(ws, &lane_in[i * width..(i + 1) * width]);
+                    }
+                }
+            }
+            for o in 0..out_ch {
+                for lane_out in out_t.chunks_exact_mut(d_out) {
+                    lane_out[o * width..(o + 1) * width].fill(0.0);
+                }
+                for i in 0..in_ch {
+                    for k in 0..kw {
+                        let qk = q[(o * in_ch + i) * kw + k];
+                        if qk == 0 {
+                            continue;
+                        }
+                        let wq = qk as f32;
+                        let xblk = &ext[(base + k) * in_block..][..in_block];
+                        for (lane_out, lane_in) in
+                            out_t.chunks_exact_mut(d_out).zip(xblk.chunks_exact(d_in))
+                        {
+                            axpy(
+                                &mut lane_out[o * width..(o + 1) * width],
+                                &lane_in[i * width..(i + 1) * width],
+                                wq,
+                            );
+                        }
+                    }
+                }
+                for (lane_out, ws) in out_t.chunks_exact_mut(d_out).zip(wsum.chunks_exact(width))
+                {
+                    affine(&mut lane_out[o * width..(o + 1) * width], ws, bias[o], scale[o], zp[o]);
+                }
+            }
+        }
+    }
+}

@@ -3,15 +3,18 @@
 //! (§2.2, §3.4, §4.2).
 //!
 //! Layering: [`gemm`] holds the register-blocked micro-kernels (f32 and
-//! int8), [`tds`] the streaming step driver and scratch arena shared by
-//! [`TdsModel`] (f32) and [`quant::QuantizedTdsModel`] (int8 weights),
-//! and [`ops`] the naive reference primitives the tiled kernels are
-//! verified bit-exact against.
+//! int8) and their runtime-dispatched AVX2/NEON SIMD variants
+//! ([`gemm::dispatch`] picks the ISA once per process; every ISA is
+//! bit-identical), [`tds`] the streaming step driver and scratch arena
+//! shared by [`TdsModel`] (f32) and [`quant::QuantizedTdsModel`] (int8
+//! weights), and [`ops`] the naive reference primitives the tiled
+//! kernels are verified bit-exact against.
 
 pub mod gemm;
 pub mod ops;
 pub mod quant;
 pub mod tds;
 
+pub use gemm::dispatch::KernelIsa;
 pub use quant::QuantizedTdsModel;
 pub use tds::{LaneStates, Scratch, TdsModel, TdsState};

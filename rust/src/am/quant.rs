@@ -1,7 +1,11 @@
 //! Int8 weight quantization for the TDS acoustic model — the functional
 //! counterpart of the paper's 8-bit MAC-unit assumption (§3.4): weights
 //! are stored as `i8` with **per-output-row** affine parameters, and the
-//! kernels accumulate in f32 ([`super::gemm`]).
+//! kernels accumulate in f32 ([`super::gemm`]). Because accumulation is
+//! f32, the SIMD variants of the int8 kernels vectorize across
+//! independent outputs (never the reduction), so every
+//! [`super::gemm::dispatch::KernelIsa`] produces bit-identical int8
+//! results too.
 //!
 //! Scheme, per weight row `w` (an FC output neuron's inputs, or a conv
 //! output channel's `[in_ch × kw]` taps):

@@ -16,7 +16,9 @@
 //! by a reusable [`Scratch`] arena, conv layers see history + current
 //! timesteps as one contiguous `ext` buffer (windows become slices, not
 //! vectors of pointers), and the dense math runs through the
-//! register-blocked kernels in [`super::gemm`]. A scalar step is the
+//! register-blocked, runtime-ISA-dispatched kernels in [`super::gemm`]
+//! (AVX2/NEON when the host supports them — bit-identical to the scalar
+//! path, see [`super::gemm::dispatch`]). A scalar step is the
 //! B = 1 case of the same driver, so batched-vs-scalar parity is
 //! structural, not merely tested. With a caller-provided `Scratch`
 //! (`step_batch_into`) the steady-state loop performs **zero heap

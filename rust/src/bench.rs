@@ -5,7 +5,20 @@
 //! wall-clock budget and a minimum iteration count are met; report
 //! median / mean / p95 per-iteration time and derived throughput.
 
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
+
+/// Where the bench targets write their machine-readable JSON results:
+/// `$ASRPU_BENCH_DIR` when set and non-empty (CI points it at the
+/// workspace so the files upload as artifacts), else the repository
+/// root (one level above the crate), matching the committed
+/// `BENCH_*.json` convention.
+pub fn bench_dir() -> PathBuf {
+    match std::env::var("ASRPU_BENCH_DIR") {
+        Ok(d) if !d.is_empty() => PathBuf::from(d),
+        _ => Path::new(env!("CARGO_MANIFEST_DIR")).join(".."),
+    }
+}
 
 /// One benchmark result.
 #[derive(Debug, Clone)]
@@ -114,6 +127,16 @@ mod tests {
         });
         assert!(r.iters >= 5);
         assert!(r.median.as_nanos() > 0);
+    }
+
+    #[test]
+    fn bench_dir_defaults_to_repo_root() {
+        // Without the env override the default is crate root/".." —
+        // can't assert the env-var branch here without racing other
+        // tests over the process environment.
+        if std::env::var("ASRPU_BENCH_DIR").is_err() {
+            assert!(bench_dir().ends_with(".."));
+        }
     }
 
     #[test]

@@ -9,6 +9,11 @@ pub use accel::AccelConfig;
 pub use model::{Group, Layer, ModelConfig, Precision};
 pub use pipeline::{PipelineDesc, StageDesc};
 
+/// Re-exported so config consumers (serving introspection, the
+/// simulator's host accounting) can name the host kernel ISA without
+/// reaching into `am::gemm`.
+pub use crate::am::gemm::dispatch::KernelIsa;
+
 use std::path::{Path, PathBuf};
 
 /// Beam-search / decoding parameters (configured through the command

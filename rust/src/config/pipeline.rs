@@ -20,6 +20,7 @@
 #![deny(missing_docs)]
 
 use super::model::{Layer, ModelConfig};
+use crate::am::gemm::dispatch::KernelIsa;
 
 /// One stage of the decoding-step pipeline, in execution order.
 #[derive(Debug, Clone, PartialEq)]
@@ -59,6 +60,12 @@ pub struct PipelineDesc {
     /// Stages in execution order: features, the AM layers, hypothesis
     /// expansion.
     pub stages: Vec<StageDesc>,
+    /// The host AM kernel ISA active when this description was built —
+    /// what [`crate::am::gemm::dispatch::active`] resolved to (runtime
+    /// detection, `ASRPU_KERNEL_ISA`, or a thread-local force). Purely
+    /// throughput accounting: kernels are bit-identical across ISAs, so
+    /// the stage list and every result are unaffected.
+    pub host_isa: KernelIsa,
 }
 
 impl PipelineDesc {
@@ -72,7 +79,7 @@ impl PipelineDesc {
             stages.push(StageDesc::AmLayer(layer));
         }
         stages.push(StageDesc::HypExpansion { repeats: model.vectors_per_step() });
-        PipelineDesc { model: model.clone(), stages }
+        PipelineDesc { model: model.clone(), stages, host_isa: KernelIsa::active() }
     }
 
     /// Number of acoustic-model layer stages.
@@ -92,6 +99,26 @@ impl PipelineDesc {
                 _ => 0,
             })
             .sum()
+    }
+
+    /// Multiply-accumulates one decoding step executes across the AM
+    /// stages, per lane: each layer's per-timestep MACs times the number
+    /// of timesteps it produces in a step (`frames_per_step` divided by
+    /// the strides accumulated so far). This is the numerator the host
+    /// kernel benches use for GMAC/s, and the same MAC count the
+    /// simulator's per-layer kernel programs are sized from.
+    pub fn macs_per_step(&self) -> u64 {
+        let mut t = self.model.frames_per_step();
+        let mut macs = 0u64;
+        for stage in &self.stages {
+            if let StageDesc::AmLayer(layer) = stage {
+                if let Layer::Conv { stride, .. } = layer {
+                    t /= *stride;
+                }
+                macs += layer.macs_per_timestep() as u64 * t as u64;
+            }
+        }
+        macs
     }
 
     /// Validate internal consistency: AM stages must chain dimensionally
@@ -167,6 +194,33 @@ mod tests {
             .unwrap();
         p.stages.remove(idx);
         assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn macs_per_step_counts_strided_timesteps() {
+        // Paper model: the conv/FC MAC volume of one 80 ms step sits in
+        // the tens-to-hundreds of millions (the §5.1 instruction counts
+        // are ~0.75 instruction slots per MAC at vector width 8).
+        let paper = PipelineDesc::for_model(&ModelConfig::paper_tds());
+        let macs = paper.macs_per_step();
+        assert!(
+            (20_000_000..800_000_000).contains(&macs),
+            "paper MACs/step out of band: {macs}"
+        );
+        let tiny = PipelineDesc::for_model(&ModelConfig::tiny_tds());
+        assert!(tiny.macs_per_step() > 0);
+        assert!(tiny.macs_per_step() < macs);
+    }
+
+    #[test]
+    fn host_isa_is_the_dispatch_isa() {
+        use crate::am::gemm::dispatch;
+        let m = ModelConfig::tiny_tds();
+        assert_eq!(PipelineDesc::for_model(&m).host_isa, KernelIsa::active());
+        let forced = dispatch::with_forced_isa(KernelIsa::Scalar, || {
+            PipelineDesc::for_model(&m).host_isa
+        });
+        assert_eq!(forced, KernelIsa::Scalar);
     }
 
     #[test]

@@ -36,7 +36,9 @@ use std::any::Any;
 use std::path::Path;
 use std::sync::Arc;
 
-use crate::am::{LaneStates, QuantizedTdsModel, Scratch as AmScratch, TdsModel, TdsState};
+use crate::am::{
+    KernelIsa, LaneStates, QuantizedTdsModel, Scratch as AmScratch, TdsModel, TdsState,
+};
 use crate::config::{ModelConfig, Precision};
 use crate::dsp::{mfcc::Scratch as MfccScratch, Mfcc};
 use crate::runtime::xla_am::XlaState;
@@ -130,6 +132,18 @@ pub trait AmBackend {
     /// lanes) — the DMA-traffic metadata the power model consumes.
     fn weight_bytes_per_step(&self) -> u64 {
         self.model_cfg().model_bytes() as u64
+    }
+
+    /// The host SIMD ISA this backend's AM kernels dispatch to —
+    /// introspection metadata for the serving `config` op and perf
+    /// accounting. Never a correctness knob: the native kernels are
+    /// bit-identical under every ISA (`tests/simd_parity.rs`). The
+    /// default reports [`KernelIsa::active`], which is right for the
+    /// native backends; backends that do not run the host kernels (XLA
+    /// artifacts execute whatever the AOT compiler emitted) may
+    /// override.
+    fn kernel_isa(&self) -> KernelIsa {
+        KernelIsa::active()
     }
 
     /// Fresh per-session streaming state (conv histories, device
@@ -512,6 +526,8 @@ mod tests {
         assert_eq!(b.name(), "native-f32");
         assert_eq!(b.precision(), Precision::F32);
         assert_eq!(b.weight_bytes_per_step(), b.model_cfg().model_bytes() as u64);
+        // Native backends report whatever the dispatch layer resolved.
+        assert_eq!(b.kernel_isa(), KernelIsa::active());
     }
 
     #[test]

@@ -171,6 +171,10 @@ pub(crate) fn config_json(engine: &Engine) -> Json {
         ("proto", Json::Num(PROTO_VERSION as f64)),
         ("backend", Json::Str(engine.backend().name().to_string())),
         ("precision", Json::Str(precision.to_string())),
+        (
+            "kernel_isa",
+            Json::Str(engine.backend().kernel_isa().as_str().to_string()),
+        ),
         ("model", Json::Str(m.name.clone())),
         ("tokens", Json::Num(m.tokens as f64)),
         ("sample_rate", Json::Num(m.sample_rate as f64)),
@@ -408,6 +412,15 @@ mod tests {
         let c = &resps[0];
         assert_eq!(c.get("backend").unwrap().as_str(), Some("native-f32"));
         assert_eq!(c.get("precision").unwrap().as_str(), Some("f32"));
+        // The host kernel ISA is whatever dispatch resolved for this
+        // process (runtime detection or ASRPU_KERNEL_ISA) — assert it is
+        // present and in-vocabulary rather than pinning a host-dependent
+        // value.
+        let isa = c.get("kernel_isa").unwrap().as_str().unwrap();
+        assert_eq!(
+            crate::am::KernelIsa::parse(isa),
+            Some(crate::am::KernelIsa::active())
+        );
         assert_eq!(c.get("model").unwrap().as_str(), Some("tiny-tds"));
         assert_eq!(c.get("tokens").unwrap().as_f64(), Some(27.0));
         assert_eq!(

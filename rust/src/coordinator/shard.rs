@@ -29,7 +29,14 @@
 //!   from their checkpoints; never-checkpointed sessions reopen fresh
 //!   (correct under acknowledged-snapshot semantics: no reply ever
 //!   covered their audio). The client request that discovered the death
-//!   is retried once on the session's new shard.
+//!   is retried once on the session's new shard; feeds that were staged
+//!   un-acknowledged on a [`ShardPool::kill_worker`] victim ride back
+//!   on the death ack and are *replayed* on their sessions' recovery
+//!   shards (staged audio always postdates the covering checkpoint, so
+//!   the replay is exact and the client's pending request answers
+//!   normally). Worker replies are generation-tagged: once the router
+//!   declares a shard dead, any answer the dying worker still produces
+//!   is dropped rather than racing the recovery path's own answer.
 //!
 //! A disconnected client re-attaches with the protocol's `resume` op:
 //! the reply reports how many steps/samples the server has consumed so
@@ -68,7 +75,7 @@
 
 use anyhow::{Context, Result};
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Instant;
 
@@ -103,18 +110,58 @@ pub(crate) enum RouterMsg {
     Shutdown,
 }
 
+/// A client reply channel, optionally tagged with the generation of the
+/// worker its job was routed to. The router advances a shard's
+/// generation the moment it declares the shard dead
+/// ([`Router::mark_dead`]) — from then on a send through a tag taken
+/// against the older generation is dropped, so a reply the dying worker
+/// still manages to produce can never race the answer the router's
+/// recovery path issues for the same request.
+struct Reply {
+    tx: mpsc::Sender<Json>,
+    guard: Option<(u64, Arc<AtomicU64>)>,
+}
+
+impl Reply {
+    fn new(tx: mpsc::Sender<Json>) -> Reply {
+        Reply { tx, guard: None }
+    }
+
+    /// Tag with the target worker's current generation; a later bump
+    /// (the shard was declared dead) invalidates the tag.
+    fn tag(&mut self, generation: &Arc<AtomicU64>) {
+        self.guard = Some((generation.load(Ordering::SeqCst), Arc::clone(generation)));
+    }
+
+    /// Drop the tag — the router itself is about to answer (bounce,
+    /// out-of-retries, lost-session replay), which is always current.
+    fn untag(&mut self) {
+        self.guard = None;
+    }
+
+    /// Deliver unless the tagged worker generation has moved on.
+    fn send(&self, payload: Json) {
+        if let Some((tagged, cur)) = &self.guard {
+            if cur.load(Ordering::SeqCst) != *tagged {
+                return;
+            }
+        }
+        let _ = self.tx.send(payload);
+    }
+}
+
 /// A unit of work queued to one shard's device worker.
 enum Job {
     /// Open a session under a router-assigned globally unique id.
-    Open { id: u64, reply: mpsc::Sender<Json> },
+    Open { id: u64, reply: Reply },
     /// Stage audio + run the lane-batched device loop.
-    Feed { session: u64, samples: Vec<f32>, enqueued: Instant, reply: mpsc::Sender<Json> },
+    Feed { session: u64, samples: Vec<f32>, enqueued: Instant, reply: Reply },
     /// Flush and extract the transcript.
-    Finish { session: u64, reply: mpsc::Sender<Json> },
+    Finish { session: u64, reply: Reply },
     /// Report a session's consumed steps/frames/buffer + partial.
-    Resume { session: u64, reply: mpsc::Sender<Json> },
+    Resume { session: u64, reply: Reply },
     /// Introspect the engine this worker serves.
-    Config { reply: mpsc::Sender<Json> },
+    Config { reply: Reply },
     /// Snapshot up to `max` migratable sessions off this shard and hand
     /// back `(id, capture seq, encoded snapshot)` triples for adoption
     /// elsewhere (the capture sequence number is the freshness tag the
@@ -134,16 +181,23 @@ enum Job {
     },
     /// Simulated crash: exit *without* flushing staged work or shipping
     /// final checkpoints; ack only after the job queue is dropped so the
-    /// router's recovery observes a definitely-dead worker.
-    Die { ack: mpsc::Sender<()> },
+    /// router's recovery observes a definitely-dead worker. The ack
+    /// carries the feeds that were staged — accepted but never
+    /// acknowledged — at the moment of death, re-packaged as replayable
+    /// [`Job::Feed`]s: their audio arrived *after* the covering
+    /// checkpoints, so the router can replay them on the sessions'
+    /// recovery shards instead of leaving the clients' pending requests
+    /// to bounce.
+    Die { ack: mpsc::Sender<Vec<Job>> },
     /// Flush staged work and exit the worker loop.
     Shutdown,
 }
 
 impl Job {
     /// The client reply channel this job carries, if any — used to
-    /// bounce the request when its shard's queue is saturated.
-    fn reply(&self) -> Option<&mpsc::Sender<Json>> {
+    /// bounce the request when its shard's queue is saturated and to
+    /// (re-)tag the reply with the target worker's generation.
+    fn reply_mut(&mut self) -> Option<&mut Reply> {
         match self {
             Job::Open { reply, .. }
             | Job::Feed { reply, .. }
@@ -166,10 +220,13 @@ impl Job {
     }
 }
 
-/// A feed waiting for its batch to flush.
+/// A feed waiting for its batch to flush. It keeps the audio it staged
+/// so a worker dying before the flush can hand the un-acknowledged feed
+/// back to the router as a replayable job ([`Job::Die`]).
 struct StagedFeed {
     session: u64,
-    reply: mpsc::Sender<Json>,
+    samples: Vec<f32>,
+    reply: Reply,
     enqueued: Instant,
 }
 
@@ -372,7 +429,7 @@ impl Worker {
         }
         self.publish();
         for (f, resp) in done {
-            let _ = f.reply.send(resp);
+            f.reply.send(resp);
         }
     }
 
@@ -380,7 +437,7 @@ impl Worker {
     /// [`Job::Shutdown`] (clean: flushes staged work), or on
     /// [`Job::Die`] (crash simulation: drops everything unflushed).
     fn run(mut self, jobs: mpsc::Receiver<Job>) {
-        let mut die_ack: Option<mpsc::Sender<()>> = None;
+        let mut die_ack: Option<mpsc::Sender<Vec<Job>>> = None;
         loop {
             // Enforce the wait budget even under sustained job traffic:
             // a queued message makes recv_timeout return Ok without ever
@@ -426,10 +483,24 @@ impl Worker {
         if let Some(ack) = die_ack {
             // Crash simulation: drop the job queue *first* so every
             // subsequent router send fails deterministically, then ack.
-            // Staged feeds and sessions die unflushed and unshipped —
-            // exactly what a real worker crash loses.
+            // Sessions die unflushed and unshipped — exactly what a real
+            // worker crash loses — but the staged (un-acknowledged)
+            // feeds ride back on the ack as replayable jobs: their audio
+            // was pushed *after* the covering checkpoints were captured,
+            // so replaying them against the recovered sessions repeats
+            // no audio and loses none.
             drop(jobs);
-            let _ = ack.send(());
+            let orphans: Vec<Job> = self
+                .staged
+                .drain(..)
+                .map(|f| Job::Feed {
+                    session: f.session,
+                    samples: f.samples,
+                    enqueued: f.enqueued,
+                    reply: f.reply,
+                })
+                .collect();
+            let _ = ack.send(orphans);
         }
     }
 
@@ -452,17 +523,16 @@ impl Worker {
                     }
                 };
                 self.publish();
-                let _ = reply.send(resp);
+                reply.send(resp);
             }
             Job::Feed { session, samples, enqueued, reply } => {
                 match self.sessions.get_mut(&session) {
                     None => {
-                        let _ =
-                            reply.send(err_json(ErrCode::UnknownSession, "unknown session"));
+                        reply.send(err_json(ErrCode::UnknownSession, "unknown session"));
                     }
                     Some(s) => {
                         self.engine.push_audio(s, &samples);
-                        self.staged.push(StagedFeed { session, reply, enqueued });
+                        self.staged.push(StagedFeed { session, samples, reply, enqueued });
                         // Flush when the batch is full — or when every
                         // open session on this shard is already staged,
                         // since no further lane can arrive before some
@@ -501,7 +571,7 @@ impl Worker {
                     },
                 };
                 self.publish();
-                let _ = reply.send(resp);
+                reply.send(resp);
             }
             Job::Resume { session, reply } => {
                 // Flush first so the reported progress covers every feed
@@ -524,10 +594,10 @@ impl Worker {
                         ])
                     }
                 };
-                let _ = reply.send(resp);
+                reply.send(resp);
             }
             Job::Config { reply } => {
-                let _ = reply.send(config_json(&self.engine));
+                reply.send(config_json(&self.engine));
             }
             Job::Evict { max, reply } => {
                 // Any session without a feed in flight may leave this
@@ -624,6 +694,11 @@ struct ShardHandle {
     depth: Arc<AtomicUsize>,
     /// The worker-published stats cache (non-blocking `stats`).
     cache: Arc<Mutex<ShardSnapshot>>,
+    /// Worker generation, bumped by [`Router::mark_dead`]: replies
+    /// tagged against an earlier generation are dropped, so a worker
+    /// declared dead can never answer a request the router's recovery
+    /// path already re-answered (or replayed elsewhere).
+    generation: Arc<AtomicU64>,
 }
 
 /// Outcome of asking a shard to adopt a session.
@@ -702,17 +777,28 @@ impl Router {
         }
     }
 
+    /// Declare a shard dead: exclude it from routing and advance its
+    /// worker generation, invalidating every reply tag taken against
+    /// the older generation — any answer the dying worker still
+    /// produces for an in-flight request is dropped instead of racing
+    /// the recovery path's own answer for the same request.
+    fn mark_dead(&mut self, shard: usize) {
+        if !self.dead[shard] {
+            self.dead[shard] = true;
+            self.shards[shard].generation.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+
     /// Forward a router-internal job (evict/adopt/die/shutdown),
     /// accounting its queue-depth slot. Blocking is acceptable here:
     /// these jobs are part of a serialized router transaction and the
     /// worker always drains. Returns false (and marks the shard dead)
     /// when the worker is gone.
     fn send(&mut self, shard: usize, job: Job) -> bool {
-        let h = &self.shards[shard];
-        h.depth.fetch_add(1, Ordering::Relaxed);
-        if h.tx.send(job).is_err() {
-            h.depth.fetch_sub(1, Ordering::Relaxed);
-            self.dead[shard] = true;
+        self.shards[shard].depth.fetch_add(1, Ordering::Relaxed);
+        if self.shards[shard].tx.send(job).is_err() {
+            self.shards[shard].depth.fetch_sub(1, Ordering::Relaxed);
+            self.mark_dead(shard);
             return false;
         }
         true
@@ -736,21 +822,28 @@ impl Router {
                     None => break,
                 }
             }
-            let h = &self.shards[shard];
-            h.depth.fetch_add(1, Ordering::Relaxed);
-            match h.tx.try_send(job) {
+            // Tag the reply with the target worker's generation: should
+            // the router later declare this worker dead, the tag drops
+            // any late answer the worker still produces, leaving the
+            // recovery path's answer (or replay) the only one.
+            if let Some(reply) = job.reply_mut() {
+                reply.tag(&self.shards[shard].generation);
+            }
+            self.shards[shard].depth.fetch_add(1, Ordering::Relaxed);
+            match self.shards[shard].tx.try_send(job) {
                 Ok(()) => return Some(shard),
-                Err(mpsc::TrySendError::Full(j)) => {
+                Err(mpsc::TrySendError::Full(mut j)) => {
                     self.shards[shard].depth.fetch_sub(1, Ordering::Relaxed);
                     self.rejected[shard] += 1;
-                    if let Some(reply) = j.reply() {
-                        let _ = reply.send(err_json(ErrCode::Backpressure, "shard queue full"));
+                    if let Some(reply) = j.reply_mut() {
+                        reply.untag();
+                        reply.send(err_json(ErrCode::Backpressure, "shard queue full"));
                     }
                     return None;
                 }
                 Err(mpsc::TrySendError::Disconnected(j)) => {
                     self.shards[shard].depth.fetch_sub(1, Ordering::Relaxed);
-                    self.dead[shard] = true;
+                    self.mark_dead(shard);
                     job = j;
                     // Loop: the dead-shard arm above recovers + reroutes.
                 }
@@ -760,14 +853,35 @@ impl Router {
         let lost_session = job
             .session_id()
             .is_some_and(|id| !self.assign.contains_key(&id));
-        if let Some(reply) = job.reply() {
-            let _ = reply.send(if lost_session {
+        if let Some(reply) = job.reply_mut() {
+            reply.untag();
+            reply.send(if lost_session {
                 err_json(ErrCode::UnknownSession, "session lost with its worker")
             } else {
                 err_json(ErrCode::Internal, "shard worker unavailable")
             });
         }
         None
+    }
+
+    /// Re-route a job rescued off a dying worker (a staged feed handed
+    /// back through the [`Job::Die`] ack) onto its session's recovery
+    /// shard. The feed's audio was pushed *after* the checkpoint its
+    /// session recovered from, so the replay repeats no audio — the
+    /// client's pending request answers normally instead of bouncing
+    /// with `internal`/`unknown_session`.
+    fn replay(&mut self, mut job: Job) {
+        match self.reroute(&job) {
+            Some(shard) => {
+                self.route_client(shard, job);
+            }
+            None => {
+                if let Some(reply) = job.reply_mut() {
+                    reply.untag();
+                    reply.send(err_json(ErrCode::UnknownSession, "session lost with its worker"));
+                }
+            }
+        }
     }
 
     /// Where to retry a job after recovery: its session's new shard, or
@@ -886,7 +1000,7 @@ impl Router {
         }
         let Ok(moved) = rx.recv() else {
             // The hot worker died holding the evict: recover it.
-            self.dead[hot] = true;
+            self.mark_dead(hot);
             self.recover(hot);
             return;
         };
@@ -939,7 +1053,7 @@ impl Router {
             Ok(Ok(())) => AdoptOutcome::Adopted,
             Ok(Err(back)) => AdoptOutcome::Refused(back),
             Err(_) => {
-                self.dead[shard] = true;
+                self.mark_dead(shard);
                 AdoptOutcome::Dead
             }
         }
@@ -1020,7 +1134,8 @@ fn router_loop(jobs: mpsc::Receiver<RouterMsg>, mut r: Router) {
                 // worker-side engine.open() failure after enqueue
                 // (fallible PJRT open_state) comes back as a retire
                 // notification and is un-booked on the next drain.
-                if let Some(actual) = r.route_client(shard, Job::Open { id, reply }) {
+                let job = Job::Open { id, reply: Reply::new(reply) };
+                if let Some(actual) = r.route_client(shard, job) {
                     r.assign.insert(id, actual);
                     r.open_count[actual] += 1;
                     r.rebalance();
@@ -1034,7 +1149,13 @@ fn router_loop(jobs: mpsc::Receiver<RouterMsg>, mut r: Router) {
                     Some(shard) => {
                         // A bounce answers the client itself; nothing
                         // reached the shard, so ordering is preserved.
-                        r.route_client(shard, Job::Feed { session, samples, enqueued, reply });
+                        let job = Job::Feed {
+                            session,
+                            samples,
+                            enqueued,
+                            reply: Reply::new(reply),
+                        };
+                        r.route_client(shard, job);
                     }
                 }
             }
@@ -1047,9 +1168,8 @@ fn router_loop(jobs: mpsc::Receiver<RouterMsg>, mut r: Router) {
                     // enqueued (possibly on a recovery target); on a
                     // bounce the client retries against a still-open
                     // session.
-                    if let Some(actual) =
-                        r.route_client(shard, Job::Finish { session, reply })
-                    {
+                    let job = Job::Finish { session, reply: Reply::new(reply) };
+                    if let Some(actual) = r.route_client(shard, job) {
                         r.assign.remove(&session);
                         r.checkpoints.remove(&session);
                         r.open_count[actual] = r.open_count[actual].saturating_sub(1);
@@ -1065,7 +1185,8 @@ fn router_loop(jobs: mpsc::Receiver<RouterMsg>, mut r: Router) {
                     ));
                 }
                 Some(shard) => {
-                    r.route_client(shard, Job::Resume { session, reply });
+                    let job = Job::Resume { session, reply: Reply::new(reply) };
+                    r.route_client(shard, job);
                 }
             },
             RouterMsg::Stats { reply } => {
@@ -1075,7 +1196,7 @@ fn router_loop(jobs: mpsc::Receiver<RouterMsg>, mut r: Router) {
             }
             RouterMsg::Config { reply } => {
                 let shard = r.first_live();
-                r.route_client(shard, Job::Config { reply });
+                r.route_client(shard, Job::Config { reply: Reply::new(reply) });
             }
             RouterMsg::Kill { shard, reply } => {
                 if shard >= r.shards.len() {
@@ -1087,14 +1208,27 @@ fn router_loop(jobs: mpsc::Receiver<RouterMsg>, mut r: Router) {
                     let before = r.recovered;
                     if !r.dead[shard] {
                         let (ack_tx, ack_rx) = mpsc::channel();
+                        let mut orphans = Vec::new();
                         if r.send(shard, Job::Die { ack: ack_tx }) {
                             // Wait until the worker dropped its queue so
                             // recovery sees a definitely-dead worker (a
-                            // recv error means it was already gone).
-                            let _ = ack_rx.recv();
+                            // recv error means it was already gone). The
+                            // ack hands back the feeds that were staged
+                            // un-acknowledged at the kill.
+                            if let Ok(staged) = ack_rx.recv() {
+                                orphans = staged;
+                            }
                         }
-                        r.dead[shard] = true;
+                        r.mark_dead(shard);
                         r.recover(shard);
+                        // Replay the rescued feeds on their sessions'
+                        // recovery shards: the staged audio arrived
+                        // after the covering checkpoints, so the replay
+                        // is exact and the clients' pending requests
+                        // answer normally instead of bouncing.
+                        for job in orphans {
+                            r.replay(job);
+                        }
                     }
                     let _ = reply.send(obj(&[
                         ("killed", Json::Num(shard as f64)),
@@ -1237,6 +1371,7 @@ impl ShardPool {
             tx: init.tx0,
             depth: init.depth0,
             cache: init.cache0,
+            generation: Arc::new(AtomicU64::new(0)),
         }];
         for (i, seed) in init.seeds.into_iter().enumerate() {
             let shard = i + 1;
@@ -1261,7 +1396,12 @@ impl ShardPool {
                     .run(rx)
                 })
                 .with_context(|| format!("spawning shard {shard}"))?;
-            handles.push(ShardHandle { tx, depth, cache });
+            handles.push(ShardHandle {
+                tx,
+                depth,
+                cache,
+                generation: Arc::new(AtomicU64::new(0)),
+            });
         }
         let workers = handles.len();
         let router = Router {
@@ -1413,9 +1553,12 @@ impl ShardPool {
 
     /// Kill one worker *without* letting it flush or checkpoint — the
     /// dead-shard crash hook behind the recovery tests and fault
-    /// drills. Blocks until the worker is provably gone and its
-    /// sessions have been re-adopted from their checkpoints; returns
-    /// how many sessions recovery restored.
+    /// drills. Blocks until the worker is provably gone, its sessions
+    /// have been re-adopted from their checkpoints, and the feeds it
+    /// was holding staged (accepted, never acknowledged) have been
+    /// replayed on the recovery shards — those clients' pending
+    /// requests answer normally rather than bouncing. Returns how many
+    /// sessions recovery restored.
     pub fn kill_worker(&self, shard: usize) -> Result<usize> {
         let r = self.call(|reply| RouterMsg::Kill { shard, reply })?;
         Ok(r.get("recovered").and_then(Json::as_usize).unwrap_or(0))
@@ -1623,6 +1766,62 @@ mod tests {
         assert_eq!(stats.get("recovered").unwrap().as_f64(), Some(1.0));
         // Killing an already-dead shard is a harmless no-op.
         assert_eq!(p.kill_worker(0).unwrap(), 0);
+        p.shutdown();
+    }
+
+    #[test]
+    fn kill_worker_replays_in_flight_feeds_without_a_bounce() {
+        // A feed staged (accepted, not yet acknowledged) on a worker at
+        // the moment it is killed must not bounce with
+        // `internal`/`unknown_session`: the Die ack hands the staged
+        // feeds back to the router, which replays them on the sessions'
+        // recovery shards. Staged audio always postdates the covering
+        // checkpoint, so the replay repeats no audio and the final
+        // transcript stays bit-identical.
+        let p = ShardPool::start(
+            move || {
+                Ok(Engine::builder()
+                    .native(TdsModel::random(ModelConfig::tiny_tds(), 5))
+                    // A huge wait budget keeps a partial batch staged
+                    // until the kill lands (no timer-driven flush).
+                    .batch(BatchConfig { max_batch: 8, max_wait_frames: 100_000 })
+                    .shards(crate::config::ShardConfig {
+                        workers: 2,
+                        rebalance_threshold: 0,
+                        checkpoint_interval: 1,
+                    })
+                    .build()?)
+            },
+            64,
+        )
+        .unwrap();
+        let a = p.open().unwrap(); // shard 0
+        let _b = p.open().unwrap(); // shard 1
+        let c = p.open().unwrap(); // shard 0
+        let audio = utterance(80);
+        let half = audio.len() / 2;
+        // Feeds covering both of shard 0's sessions flush (every open
+        // session staged) — and checkpoint, covering all acked audio.
+        let rx_a = p.feed_async(a, &audio[..half]).unwrap();
+        let rx_c = p.feed_async(c, &utterance(81)).unwrap();
+        ShardPool::parse_feed(rx_a.recv().unwrap()).unwrap();
+        ShardPool::parse_feed(rx_c.recv().unwrap()).unwrap();
+        // This feed stays staged: one staged session < two open ones,
+        // and the wait budget never expires.
+        let rx2 = p.feed_async(a, &audio[half..]).unwrap();
+        // The kill is queued behind the feed on both the router and the
+        // shard-0 job queue (FIFO), so the worker stages the feed and
+        // then dies holding it.
+        assert_eq!(p.kill_worker(0).unwrap(), 2, "both sessions recover");
+        // Finishing forces the recovery shard to flush its staged work
+        // (the replayed feed) before extracting the transcript.
+        let done = p.finish(a).unwrap();
+        let replayed = ShardPool::parse_feed(rx2.recv().unwrap());
+        assert!(replayed.is_ok(), "replayed feed bounced: {replayed:?}");
+        let reference = reference_engine();
+        let (t_ref, _) = reference.decode_utterance(&audio).unwrap();
+        assert_eq!(done.text, t_ref.text, "replayed audio decodes bit-identically");
+        assert_eq!(done.score, t_ref.score as f64);
         p.shutdown();
     }
 

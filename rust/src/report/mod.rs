@@ -227,6 +227,17 @@ pub fn headline(model: &ModelConfig, accel: &AccelConfig) -> Table {
         "~0.8 W".into(),
         format!("{:.2} W", budget.total_leakage_w()),
     ]);
+    let isa = crate::am::KernelIsa::active();
+    t.row(&[
+        "Accelerator peak MAC rate".into(),
+        "32 GMAC/s (8 PEs × 8-wide @ 500 MHz)".into(),
+        format!("{:.0} GMAC/s", crate::accel::kernels::peak_gmacs(accel)),
+    ]);
+    t.row(&[
+        "Host AM kernel ISA (engine)".into(),
+        "n/a (ASRPU is the device)".into(),
+        format!("{} ({}×f32)", isa.as_str(), isa.simd_lanes()),
+    ]);
     t
 }
 

@@ -1,0 +1,231 @@
+//! SIMD-vs-scalar kernel parity: the dispatched AVX2/NEON variants of
+//! the four AM hot kernels must be **bit-identical** to the scalar
+//! kernels — not approximately equal. The SIMD paths vectorize across
+//! independent outputs only (never the reduction dimension), so every
+//! per-output accumulator sees exactly the scalar reduction order; int8
+//! kernels accumulate in f32 and get the same treatment, so their
+//! parity is exact `==` too (see DESIGN.md, "Runtime-dispatched SIMD
+//! kernels").
+//!
+//! Shapes are drawn to hit the remainder paths hard: dimensions that
+//! are not multiples of the 8-lane (AVX2) or 4-lane (NEON) registers,
+//! batches across {1, 3, 16, 64}. On a host with no SIMD ISA the
+//! kernel properties degenerate to nothing-to-compare and pass.
+
+use asrpu::am::gemm;
+use asrpu::am::gemm::dispatch::{self, KernelIsa};
+use asrpu::am::TdsModel;
+use asrpu::config::ModelConfig;
+use asrpu::coordinator::Engine;
+use asrpu::prop_assert;
+use asrpu::synth::Synthesizer;
+use asrpu::util::prop;
+use asrpu::util::rng::Rng;
+
+/// The SIMD ISA this host can run, if any. Detection, not `active()`:
+/// the suite must exercise the SIMD paths even when the environment
+/// pins `ASRPU_KERNEL_ISA=scalar` (the per-thread force overrides the
+/// pin, so CI's scalar matrix leg still compares both paths).
+fn simd_isa() -> Option<KernelIsa> {
+    let d = dispatch::detect();
+    (d != KernelIsa::Scalar).then_some(d)
+}
+
+/// Lane counts around and past the register tiles (TILE_ROWS ×
+/// 8/4-lane blocks), including awkward remainders.
+const BATCHES: [usize; 4] = [1, 3, 16, 64];
+
+#[test]
+fn fc_batch_simd_matches_scalar_bit_for_bit() {
+    let Some(isa) = simd_isa() else {
+        eprintln!("no SIMD kernel ISA on this host; nothing to compare");
+        return;
+    };
+    prop::check("simd-fc-parity", 40, |g| {
+        let in_dim = 1 + g.index(50);
+        let out_dim = 1 + g.index(40);
+        let batch = BATCHES[g.index(BATCHES.len())];
+        let w = g.vec_of(in_dim * out_dim, |r| r.uniform(-0.5, 0.5));
+        let bias = g.vec_of(out_dim, |r| r.uniform(-0.2, 0.2));
+        let xs = g.vec_of(batch * in_dim, |r| r.uniform(-1.0, 1.0));
+        let mut out_s = vec![0.0f32; batch * out_dim];
+        let mut out_v = vec![0.0f32; batch * out_dim];
+        dispatch::with_forced_isa(KernelIsa::Scalar, || {
+            gemm::fc_batch_into(&w, &bias, &xs, batch, &mut out_s);
+        });
+        dispatch::with_forced_isa(isa, || {
+            gemm::fc_batch_into(&w, &bias, &xs, batch, &mut out_v);
+        });
+        for (i, (s, v)) in out_s.iter().zip(&out_v).enumerate() {
+            prop_assert!(
+                s.to_bits() == v.to_bits(),
+                "fc {out_dim}x{in_dim} B{batch} out[{i}]: scalar {s} vs {isa} {v}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fc_batch_int8_simd_matches_scalar_exactly() {
+    let Some(isa) = simd_isa() else {
+        eprintln!("no SIMD kernel ISA on this host; nothing to compare");
+        return;
+    };
+    prop::check("simd-fc-int8-parity", 40, |g| {
+        let in_dim = 1 + g.index(50);
+        let out_dim = 1 + g.index(40);
+        let batch = BATCHES[g.index(BATCHES.len())];
+        let q: Vec<i8> = g.vec_of(in_dim * out_dim, |r| r.range_i64(-128, 127) as i8);
+        let scale = g.vec_of(out_dim, |r| r.uniform(0.001, 0.05));
+        let zp: Vec<f32> = g.vec_of(out_dim, |r| r.range_i64(-20, 20) as f32);
+        let bias = g.vec_of(out_dim, |r| r.uniform(-0.2, 0.2));
+        let xs = g.vec_of(batch * in_dim, |r| r.uniform(-1.0, 1.0));
+        let mut xsum_s = Vec::new();
+        let mut xsum_v = Vec::new();
+        let mut out_s = vec![0.0f32; batch * out_dim];
+        let mut out_v = vec![0.0f32; batch * out_dim];
+        dispatch::with_forced_isa(KernelIsa::Scalar, || {
+            gemm::fc_batch_int8_into(
+                &q, &scale, &zp, &bias, &xs, batch, &mut xsum_s, &mut out_s,
+            );
+        });
+        dispatch::with_forced_isa(isa, || {
+            gemm::fc_batch_int8_into(
+                &q, &scale, &zp, &bias, &xs, batch, &mut xsum_v, &mut out_v,
+            );
+        });
+        for (i, (s, v)) in out_s.iter().zip(&out_v).enumerate() {
+            prop_assert!(
+                s.to_bits() == v.to_bits(),
+                "int8 fc {out_dim}x{in_dim} B{batch} out[{i}]: scalar {s} vs {isa} {v}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn conv_steps_simd_matches_scalar_bit_for_bit() {
+    let Some(isa) = simd_isa() else {
+        eprintln!("no SIMD kernel ISA on this host; nothing to compare");
+        return;
+    };
+    prop::check("simd-conv-parity", 30, |g| {
+        let in_ch = 1 + g.index(6);
+        let out_ch = 1 + g.index(6);
+        let kw = 1 + g.index(8);
+        let width = 1 + g.index(33);
+        let t_out = 1 + g.index(4);
+        let stride = 1 + g.index(2);
+        let batch = BATCHES[g.index(BATCHES.len())];
+        // ~20% exact zeros exercise the zero-weight skip both paths share.
+        let w = g.vec_of(out_ch * in_ch * kw, |r| {
+            if r.below(5) == 0 {
+                0.0
+            } else {
+                r.uniform(-0.5, 0.5)
+            }
+        });
+        let bias = g.vec_of(out_ch, |r| r.uniform(-0.2, 0.2));
+        let ext_len = (kw - 1 + t_out * stride) * batch * in_ch * width;
+        let ext = g.vec_of(ext_len, |r| r.uniform(-1.0, 1.0));
+        let mut out_s = vec![0.0f32; t_out * batch * out_ch * width];
+        let mut out_v = out_s.clone();
+        dispatch::with_forced_isa(KernelIsa::Scalar, || {
+            gemm::conv_steps_into(
+                &w, &bias, &ext, t_out, stride, batch, in_ch, out_ch, kw, width,
+                &mut out_s,
+            );
+        });
+        dispatch::with_forced_isa(isa, || {
+            gemm::conv_steps_into(
+                &w, &bias, &ext, t_out, stride, batch, in_ch, out_ch, kw, width,
+                &mut out_v,
+            );
+        });
+        for (i, (s, v)) in out_s.iter().zip(&out_v).enumerate() {
+            prop_assert!(
+                s.to_bits() == v.to_bits(),
+                "conv {out_ch}x{in_ch}x{kw} w{width} t{t_out} s{stride} B{batch} \
+                 out[{i}]: scalar {s} vs {isa} {v}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn conv_steps_int8_simd_matches_scalar_exactly() {
+    let Some(isa) = simd_isa() else {
+        eprintln!("no SIMD kernel ISA on this host; nothing to compare");
+        return;
+    };
+    prop::check("simd-conv-int8-parity", 30, |g| {
+        let in_ch = 1 + g.index(6);
+        let out_ch = 1 + g.index(6);
+        let kw = 1 + g.index(8);
+        let width = 1 + g.index(33);
+        let t_out = 1 + g.index(4);
+        let stride = 1 + g.index(2);
+        let batch = BATCHES[g.index(BATCHES.len())];
+        // Exact-zero quantized weights exercise the zero skip too.
+        let q: Vec<i8> = g.vec_of(out_ch * in_ch * kw, |r| {
+            if r.below(5) == 0 {
+                0
+            } else {
+                r.range_i64(-128, 127) as i8
+            }
+        });
+        let scale = g.vec_of(out_ch, |r| r.uniform(0.001, 0.05));
+        let zp: Vec<f32> = g.vec_of(out_ch, |r| r.range_i64(-20, 20) as f32);
+        let bias = g.vec_of(out_ch, |r| r.uniform(-0.2, 0.2));
+        let ext_len = (kw - 1 + t_out * stride) * batch * in_ch * width;
+        let ext = g.vec_of(ext_len, |r| r.uniform(-1.0, 1.0));
+        let mut wsum_s = Vec::new();
+        let mut wsum_v = Vec::new();
+        let mut out_s = vec![0.0f32; t_out * batch * out_ch * width];
+        let mut out_v = out_s.clone();
+        dispatch::with_forced_isa(KernelIsa::Scalar, || {
+            gemm::conv_steps_int8_into(
+                &q, &scale, &zp, &bias, &ext, t_out, stride, batch, in_ch, out_ch,
+                kw, width, &mut wsum_s, &mut out_s,
+            );
+        });
+        dispatch::with_forced_isa(isa, || {
+            gemm::conv_steps_int8_into(
+                &q, &scale, &zp, &bias, &ext, t_out, stride, batch, in_ch, out_ch,
+                kw, width, &mut wsum_v, &mut out_v,
+            );
+        });
+        for (i, (s, v)) in out_s.iter().zip(&out_v).enumerate() {
+            prop_assert!(
+                s.to_bits() == v.to_bits(),
+                "int8 conv {out_ch}x{in_ch}x{kw} w{width} t{t_out} s{stride} B{batch} \
+                 out[{i}]: scalar {s} vs {isa} {v}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn forced_scalar_engine_transcript_parity() {
+    // End-to-end: a full engine decode is ISA-invariant. Decode the
+    // same audio under the auto-dispatched ISA and under a forced
+    // scalar pin; transcript and score must match exactly. (On a
+    // scalar-only host this degenerates to scalar-vs-scalar — still a
+    // valid determinism check.)
+    let engine = Engine::builder()
+        .native(TdsModel::random(ModelConfig::tiny_tds(), 5))
+        .build()
+        .unwrap();
+    let audio = Synthesizer::default().render(&[1, 4], &mut Rng::new(42)).samples;
+    let (auto_t, _) = engine.decode_utterance(&audio).unwrap();
+    let (scalar_t, _) = dispatch::with_forced_isa(KernelIsa::Scalar, || {
+        engine.decode_utterance(&audio)
+    })
+    .unwrap();
+    assert_eq!(auto_t.text, scalar_t.text, "transcript must be ISA-invariant");
+    assert_eq!(auto_t.score, scalar_t.score, "score must be bit-identical");
+}
