@@ -139,6 +139,165 @@ impl ShardConfig {
     }
 }
 
+/// One rung of the graceful-degradation ladder: while a shard's decode
+/// backlog sits at or above `enter_backlog_steps`, the worker serves
+/// with this rung's (cheaper) search parameters instead of the
+/// configured full-quality `DecoderConfig`.
+///
+/// Backlog is measured in *ready decoding steps* summed over the
+/// shard's open sessions at flush time — a direct real-time-factor
+/// headroom proxy: `backlog × step_seconds` is the audio time the shard
+/// is behind by. Because the count is a pure function of the admitted
+/// feed trace (workers drain their queue FIFO), the rung in effect at
+/// every flush — and therefore every transcript — is deterministic for
+/// a given request trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DegradeLevel {
+    /// Shard decode backlog (ready steps across open sessions) at or
+    /// above which this rung engages. Rungs must be listed in strictly
+    /// increasing threshold order; the deepest rung whose threshold is
+    /// met wins.
+    pub enter_backlog_steps: usize,
+    /// Score beam served at this rung (narrower than the configured
+    /// full-quality beam ⇒ cheaper pruning under load).
+    pub beam: f32,
+    /// Maximum live hypotheses at this rung.
+    pub max_hyps: usize,
+    /// Lane-batch budget cap at this rung: the batcher fuses at most
+    /// `min(BatchConfig::max_batch, max_batch)` lanes. 0 = no extra cap.
+    pub max_batch: usize,
+}
+
+impl DegradeLevel {
+    /// Reject rungs the decoder cannot run.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.enter_backlog_steps >= 1, "degrade threshold must be at least 1");
+        anyhow::ensure!(self.beam > 0.0, "degraded beam must be positive");
+        anyhow::ensure!(self.max_hyps >= 1, "degraded search needs at least one hypothesis");
+        Ok(())
+    }
+}
+
+/// Overload policy for the serving coordinator: when to *refuse* new
+/// sessions (admission control), when to *shed* queued-but-never-started
+/// ones, how hard to *retry* a full shard queue before bouncing the
+/// client, and the graceful-degradation ladder the workers step down
+/// when their decode backlog grows.
+///
+/// The default policy is entirely **off** — unlimited admission, no
+/// shedding, no retries, an empty ladder — preserving the exact serving
+/// behaviour of earlier revisions unless a deployment opts in.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OverloadPolicy {
+    /// Maximum open sessions per shard before new `open` requests are
+    /// rejected with `backpressure` (carrying [`retry_after_ms`]).
+    /// 0 = unlimited (admission control off).
+    ///
+    /// [`retry_after_ms`]: OverloadPolicy::retry_after_ms
+    pub admit_sessions_per_shard: usize,
+    /// Client retry hint, in milliseconds, attached to every
+    /// policy-driven `backpressure` rejection (admission refusals and
+    /// full-queue bounces).
+    pub retry_after_ms: u64,
+    /// When a feed bounces off a saturated shard queue, shed that
+    /// shard's oldest *never started* session (opened, zero audio fed)
+    /// to make room — started sessions are never shed.
+    pub shed_never_started: bool,
+    /// Bounded retries for a shard queue that reports full before the
+    /// client sees `backpressure`. 0 = bounce immediately (classic
+    /// behaviour).
+    pub route_retries: u32,
+    /// Sleep between route retries, in milliseconds (doubled per
+    /// attempt).
+    pub route_backoff_ms: u64,
+    /// Graceful-degradation ladder, strictly ascending by
+    /// `enter_backlog_steps`. Empty = always serve full quality.
+    pub levels: Vec<DegradeLevel>,
+}
+
+impl Default for OverloadPolicy {
+    fn default() -> Self {
+        // Everything off: earlier revisions' serving behaviour, bit for
+        // bit. The 50 ms hint only appears once a limit is configured.
+        OverloadPolicy {
+            admit_sessions_per_shard: 0,
+            retry_after_ms: 50,
+            shed_never_started: false,
+            route_retries: 0,
+            route_backoff_ms: 1,
+            levels: Vec::new(),
+        }
+    }
+}
+
+impl OverloadPolicy {
+    /// Reject ladders the workers cannot step down deterministically.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let mut prev = 0usize;
+        for (i, lvl) in self.levels.iter().enumerate() {
+            lvl.validate()?;
+            anyhow::ensure!(
+                lvl.enter_backlog_steps > prev,
+                "degrade level {i} threshold {} must exceed the previous rung's {prev}",
+                lvl.enter_backlog_steps
+            );
+            prev = lvl.enter_backlog_steps;
+        }
+        Ok(())
+    }
+
+    /// The rung in effect for a given decode backlog: 0 = full quality,
+    /// `n` = `levels[n-1]`. Pure and hysteresis-free, so the level is
+    /// reversible the moment pressure drains.
+    pub fn level_for_backlog(&self, backlog_steps: usize) -> usize {
+        self.levels.iter().take_while(|l| backlog_steps >= l.enter_backlog_steps).count()
+    }
+
+    /// The decoder parameters served at `level` (0 ⇒ `base` unchanged —
+    /// full-quality parity after drain is exact, not approximate).
+    pub fn decoder_at(&self, base: &DecoderConfig, level: usize) -> DecoderConfig {
+        match level.checked_sub(1).and_then(|i| self.levels.get(i)) {
+            None => base.clone(),
+            Some(l) => DecoderConfig { beam: l.beam, max_hyps: l.max_hyps, ..base.clone() },
+        }
+    }
+
+    /// The lane-batch cap at `level`, if that rung tightens one.
+    pub fn batch_cap_at(&self, level: usize) -> Option<usize> {
+        level
+            .checked_sub(1)
+            .and_then(|i| self.levels.get(i))
+            .filter(|l| l.max_batch > 0)
+            .map(|l| l.max_batch)
+    }
+
+    /// A two-rung reference ladder scaled to a batch geometry, used by
+    /// the CLI's `--degrade` flag and the overload test-suites: at
+    /// `base` backlog steps drop to a 2/3 beam and half the hypotheses,
+    /// at `3 × base` halve the beam and quarter the hypotheses while
+    /// also halving the lane budget.
+    pub fn reference_ladder(base: usize, dec: &DecoderConfig, batch: &BatchConfig) -> Self {
+        let base = base.max(1);
+        OverloadPolicy {
+            levels: vec![
+                DegradeLevel {
+                    enter_backlog_steps: base,
+                    beam: dec.beam * 2.0 / 3.0,
+                    max_hyps: (dec.max_hyps / 2).max(1),
+                    max_batch: 0,
+                },
+                DegradeLevel {
+                    enter_backlog_steps: base * 3,
+                    beam: dec.beam / 2.0,
+                    max_hyps: (dec.max_hyps / 4).max(1),
+                    max_batch: (batch.max_batch / 2).max(1),
+                },
+            ],
+            ..OverloadPolicy::default()
+        }
+    }
+}
+
 /// Resolve the artifacts directory: `$ASRPU_ARTIFACTS`, else `artifacts/`
 /// relative to the working directory, else relative to the crate root
 /// (for `cargo test` run from anywhere).
@@ -187,6 +346,68 @@ mod tests {
         }
         .validate()
         .unwrap();
+    }
+
+    #[test]
+    fn overload_policy_default_is_fully_off() {
+        let p = OverloadPolicy::default();
+        p.validate().unwrap();
+        assert_eq!(p.admit_sessions_per_shard, 0, "admission control must default off");
+        assert!(!p.shed_never_started);
+        assert_eq!(p.route_retries, 0);
+        assert!(p.levels.is_empty());
+        // With an empty ladder every backlog maps to full quality.
+        assert_eq!(p.level_for_backlog(0), 0);
+        assert_eq!(p.level_for_backlog(usize::MAX), 0);
+        let dec = DecoderConfig::default();
+        assert_eq!(p.decoder_at(&dec, 0), dec);
+        assert_eq!(p.batch_cap_at(0), None);
+    }
+
+    #[test]
+    fn overload_ladder_levels_are_pure_threshold_steps() {
+        let dec = DecoderConfig::default();
+        let batch = BatchConfig::default();
+        let p = OverloadPolicy::reference_ladder(10, &dec, &batch);
+        p.validate().unwrap();
+        assert_eq!(p.level_for_backlog(9), 0);
+        assert_eq!(p.level_for_backlog(10), 1);
+        assert_eq!(p.level_for_backlog(29), 1);
+        assert_eq!(p.level_for_backlog(30), 2);
+        // Level 0 is exactly the configured decoder — post-drain parity
+        // is bit-exact by construction.
+        assert_eq!(p.decoder_at(&dec, 0), dec);
+        let l1 = p.decoder_at(&dec, 1);
+        assert!(l1.beam < dec.beam && l1.max_hyps < dec.max_hyps);
+        let l2 = p.decoder_at(&dec, 2);
+        assert!(l2.beam < l1.beam && l2.max_hyps <= l1.max_hyps);
+        l1.validate().unwrap();
+        l2.validate().unwrap();
+        assert_eq!(p.batch_cap_at(1), None);
+        assert_eq!(p.batch_cap_at(2), Some(batch.max_batch / 2));
+        // Past the deepest rung the deepest rung stays in effect.
+        assert_eq!(p.level_for_backlog(10_000), 2);
+    }
+
+    #[test]
+    fn overload_policy_validation_rejects_bad_ladders() {
+        let dec = DecoderConfig::default();
+        let batch = BatchConfig::default();
+        let good = OverloadPolicy::reference_ladder(10, &dec, &batch);
+        // Non-increasing thresholds.
+        let mut p = good.clone();
+        p.levels[1].enter_backlog_steps = 10;
+        assert!(p.validate().is_err());
+        // Unservable rung parameters.
+        let mut p = good.clone();
+        p.levels[0].beam = 0.0;
+        assert!(p.validate().is_err());
+        let mut p = good.clone();
+        p.levels[0].max_hyps = 0;
+        assert!(p.validate().is_err());
+        let mut p = good;
+        p.levels[0].enter_backlog_steps = 0;
+        assert!(p.validate().is_err());
     }
 
     #[test]

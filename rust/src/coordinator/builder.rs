@@ -25,7 +25,7 @@ use std::fmt;
 use std::path::{Path, PathBuf};
 
 use crate::am::TdsModel;
-use crate::config::{BatchConfig, DecoderConfig, Precision, ShardConfig};
+use crate::config::{BatchConfig, DecoderConfig, OverloadPolicy, Precision, ShardConfig};
 use crate::decoder::BeamDecoder;
 use crate::lexicon::Lexicon;
 use crate::lm::NgramLm;
@@ -33,7 +33,7 @@ use crate::runtime::Runtime;
 use crate::synth::spec;
 
 use super::backend::{AmBackend, NativeBackend, QuantizedBackend, XlaBackend};
-use super::engine::Engine;
+use super::engine::{Engine, FaultHooks};
 
 /// Why an [`EngineBuilder`] refused to produce an engine.
 #[derive(Debug, Clone, PartialEq)]
@@ -47,6 +47,9 @@ pub enum BuildError {
     /// The sharding configuration failed validation, or asks for more
     /// workers than the chosen backend supports.
     Shard(String),
+    /// The overload policy (admission / degrade ladder) failed
+    /// validation.
+    Overload(String),
     /// The requested precision cannot be applied to the chosen backend.
     Precision(String),
     /// The model's output tokens don't match the lexicon's token set.
@@ -78,6 +81,7 @@ impl fmt::Display for BuildError {
             BuildError::Decoder(m) => write!(f, "invalid decoder config: {m}"),
             BuildError::Batch(m) => write!(f, "invalid batch config: {m}"),
             BuildError::Shard(m) => write!(f, "invalid shard config: {m}"),
+            BuildError::Overload(m) => write!(f, "invalid overload policy: {m}"),
             BuildError::Precision(m) => write!(f, "invalid precision request: {m}"),
             BuildError::TokenMismatch { model_tokens, lexicon_tokens } => write!(
                 f,
@@ -115,9 +119,12 @@ pub struct EngineBuilder {
     decoder: DecoderConfig,
     batch: BatchConfig,
     shards: ShardConfig,
+    overload: OverloadPolicy,
     lexicon: Option<Lexicon>,
     lm: Option<NgramLm>,
     fault_after_steps: Option<u64>,
+    fault_panic_after_steps: Option<u64>,
+    fault_reply_delay_ms: Option<u64>,
 }
 
 impl EngineBuilder {
@@ -198,6 +205,16 @@ impl EngineBuilder {
         self
     }
 
+    /// Overload policy the serving layer will enforce: per-shard
+    /// admission limit with `retry_after_ms` backpressure hints,
+    /// never-started-session shedding, bounded retry/backoff routing and
+    /// the graceful-degradation ladder. Defaults to
+    /// [`OverloadPolicy::default`] — everything off.
+    pub fn overload(mut self, policy: OverloadPolicy) -> Self {
+        self.overload = policy;
+        self
+    }
+
     /// Replace the default synthetic-protocol lexicon.
     pub fn lexicon(mut self, lexicon: Lexicon) -> Self {
         self.lexicon = Some(lexicon);
@@ -223,6 +240,28 @@ impl EngineBuilder {
         self
     }
 
+    /// Fault-injection hook for the liveness supervisor's tests: after
+    /// `steps` decoding steps the engine's scoring path *panics*,
+    /// simulating a worker thread dying spontaneously mid-serve (the
+    /// `kill_worker` drill and real panics then share one recovery
+    /// path). Defaults to off; `ASRPU_FAULT_PANIC_AFTER_STEPS` is the
+    /// env-gated equivalent (read at [`Self::build`]; this explicit
+    /// setter wins over it).
+    pub fn fault_panic_after_steps(mut self, steps: u64) -> Self {
+        self.fault_panic_after_steps = Some(steps);
+        self
+    }
+
+    /// Fault-injection hook for retry/backoff and chaos tests: serving
+    /// workers sleep this long before answering each flushed feed,
+    /// simulating a slow shard. Defaults to off;
+    /// `ASRPU_FAULT_REPLY_DELAY_MS` is the env-gated equivalent (read at
+    /// [`Self::build`]; this explicit setter wins over it).
+    pub fn fault_reply_delay_ms(mut self, millis: u64) -> Self {
+        self.fault_reply_delay_ms = Some(millis);
+        self
+    }
+
     /// Validate everything and assemble the engine.
     pub fn build(self) -> Result<Engine, BuildError> {
         // Cheap config validation first — fail fast before any expensive
@@ -236,6 +275,9 @@ impl EngineBuilder {
         self.shards
             .validate()
             .map_err(|e| BuildError::Shard(format!("{e:#}")))?;
+        self.overload
+            .validate()
+            .map_err(|e| BuildError::Overload(format!("{e:#}")))?;
         let choice = self.backend.ok_or(BuildError::MissingModel)?;
         let backend: Box<dyn AmBackend> = match choice {
             BackendChoice::Failed(e) => return Err(e),
@@ -288,14 +330,19 @@ impl EngineBuilder {
         };
         let word_lm_ids = BeamDecoder::word_lm_ids(&lexicon, &lm)
             .map_err(|e| BuildError::Model(format!("{e:#}")))?;
-        // Env-gated fault hook: resolved here so every construction path
-        // (new(), default(), struct update) honors it uniformly; the
-        // explicit builder setting takes precedence.
-        let fault_after_steps = self.fault_after_steps.or_else(|| {
-            std::env::var("ASRPU_FAULT_AFTER_STEPS")
-                .ok()
-                .and_then(|v| v.parse().ok())
-        });
+        // Env-gated fault hooks: resolved here so every construction
+        // path (new(), default(), struct update) honors them uniformly;
+        // explicit builder settings take precedence.
+        let env_u64 = |name: &str| std::env::var(name).ok().and_then(|v| v.parse().ok());
+        let faults = FaultHooks {
+            after_steps: self.fault_after_steps.or_else(|| env_u64("ASRPU_FAULT_AFTER_STEPS")),
+            panic_after_steps: self
+                .fault_panic_after_steps
+                .or_else(|| env_u64("ASRPU_FAULT_PANIC_AFTER_STEPS")),
+            reply_delay_ms: self
+                .fault_reply_delay_ms
+                .or_else(|| env_u64("ASRPU_FAULT_REPLY_DELAY_MS")),
+        };
         Ok(Engine::assemble(
             backend,
             lexicon,
@@ -303,8 +350,9 @@ impl EngineBuilder {
             self.decoder,
             self.batch,
             self.shards,
+            self.overload,
             word_lm_ids,
-            fault_after_steps,
+            faults,
         ))
     }
 }

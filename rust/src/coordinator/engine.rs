@@ -46,7 +46,9 @@ use std::borrow::Cow;
 use std::cell::{Cell, RefCell};
 use std::time::{Duration, Instant};
 
-use crate::config::{BatchConfig, DecoderConfig, ModelConfig, PipelineDesc, ShardConfig};
+use crate::config::{
+    BatchConfig, DecoderConfig, ModelConfig, OverloadPolicy, PipelineDesc, ShardConfig,
+};
 use crate::decoder::{BeamDecoder, DecodeScratch, DecodeState, DecoderSnapshot, Transcript};
 use crate::lexicon::Lexicon;
 use crate::lm::NgramLm;
@@ -84,17 +86,42 @@ pub struct Engine {
     /// `workers > 1` requires a backend that supports
     /// [`clone_worker`](Self::clone_worker)).
     pub shard_cfg: ShardConfig,
+    /// Overload policy the serving layer consults for admission control,
+    /// shedding, retry/backoff and the graceful-degradation ladder
+    /// (validated by the builder; default = everything off).
+    pub overload: OverloadPolicy,
     /// Cached lexicon-word → LM-word mapping (O(vocabulary) to build;
     /// decoders borrow it so per-drain construction is allocation-free).
     word_lm_ids: Vec<u32>,
     scratch: RefCell<EngineScratch>,
-    /// Test/ops fault hook ([`EngineBuilder::fault_after_steps`]): once
-    /// this many decoding steps have executed, every further scoring
-    /// attempt fails — the only way the serving protocol's `internal`
-    /// error is reachable over a real socket with the native backends.
-    fault_after_steps: Option<u64>,
-    /// Steps executed so far (the fault hook's odometer).
+    /// Test/ops fault-injection hooks (see [`FaultHooks`]).
+    faults: FaultHooks,
+    /// Steps executed so far (the fault hooks' odometer).
     served_steps: Cell<u64>,
+    /// The degrade rung currently in effect (0 = full quality). Set by
+    /// the serving worker from its measured backlog before each drain;
+    /// [`Self::decoder`] serves the rung's search parameters.
+    degrade_level: Cell<usize>,
+}
+
+/// Test/ops fault-injection hooks, resolved by [`EngineBuilder::build`]
+/// from explicit setters or the `ASRPU_FAULT_AFTER_STEPS`,
+/// `ASRPU_FAULT_PANIC_AFTER_STEPS` and `ASRPU_FAULT_REPLY_DELAY_MS`
+/// environment variables. All default to off.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultHooks {
+    /// Once this many decoding steps have executed, every further
+    /// scoring attempt fails with an error — the only way the serving
+    /// protocol's `internal` error is reachable over a real socket with
+    /// the native backends.
+    pub after_steps: Option<u64>,
+    /// Once this many decoding steps have executed, the next scoring
+    /// attempt panics — simulating a worker thread dying spontaneously
+    /// mid-serve (the liveness supervisor's test hook).
+    pub panic_after_steps: Option<u64>,
+    /// Sleep this long before a serving worker answers each flushed
+    /// feed — simulating a slow shard for retry/backoff and chaos tests.
+    pub reply_delay_ms: Option<u64>,
 }
 
 /// Everything a worker thread needs to assemble its own [`Engine`] over
@@ -113,8 +140,9 @@ pub struct WorkerSeed {
     dec_cfg: DecoderConfig,
     batch_cfg: BatchConfig,
     shard_cfg: ShardConfig,
+    overload: OverloadPolicy,
     word_lm_ids: Vec<u32>,
-    fault_after_steps: Option<u64>,
+    faults: FaultHooks,
 }
 
 impl WorkerSeed {
@@ -128,8 +156,9 @@ impl WorkerSeed {
             self.dec_cfg,
             self.batch_cfg,
             self.shard_cfg,
+            self.overload,
             self.word_lm_ids,
-            self.fault_after_steps,
+            self.faults,
         )
     }
 }
@@ -176,6 +205,17 @@ pub struct SessionMetrics {
     /// migration snapshots globally (step counts cannot: two captures
     /// at the same step differ in buffered audio).
     pub snapshots_taken: usize,
+    /// Steps executed while a degrade rung (level > 0) was in effect —
+    /// the per-session record that a transcript was produced (partly)
+    /// under graceful degradation.
+    pub degraded_steps: usize,
+    /// Times the rung in effect changed between this session's
+    /// consecutive steps (initial engagement from full quality counts).
+    pub degrade_transitions: usize,
+    /// The rung in effect at this session's most recent step (0 = full
+    /// quality). Carried through snapshots so a migrated session counts
+    /// its transition onto a differently-loaded shard.
+    pub degrade_level: usize,
 }
 
 impl SessionMetrics {
@@ -210,12 +250,30 @@ pub struct Batcher {
     max_wait: Duration,
     pending: Vec<u64>,
     oldest: Option<Instant>,
+    /// Degrade-ladder lane cap: when set, the batch closes at
+    /// `min(cfg.max_batch, cap)` lanes (tightened batch budget under
+    /// overload; `None` restores the configured policy exactly).
+    cap: Option<usize>,
 }
 
 impl Batcher {
     pub fn new(cfg: BatchConfig, model: &ModelConfig) -> Self {
         let max_wait = cfg.max_wait(model);
-        Batcher { cfg, max_wait, pending: Vec::new(), oldest: None }
+        Batcher { cfg, max_wait, pending: Vec::new(), oldest: None, cap: None }
+    }
+
+    /// Tighten (or restore) the lane budget — the degrade ladder's batch
+    /// half. `None` or a cap ≥ `max_batch` serves the configured policy.
+    pub fn set_cap(&mut self, cap: Option<usize>) {
+        self.cap = cap;
+    }
+
+    /// The lane budget currently in force.
+    pub fn effective_max_batch(&self) -> usize {
+        match self.cap {
+            Some(c) => c.clamp(1, self.cfg.max_batch),
+            None => self.cfg.max_batch,
+        }
     }
 
     /// Stage a session id (idempotent). Returns true if the batch is now
@@ -231,7 +289,7 @@ impl Batcher {
     }
 
     pub fn is_full(&self) -> bool {
-        self.pending.len() >= self.cfg.max_batch
+        self.pending.len() >= self.effective_max_batch()
     }
 
     pub fn len(&self) -> usize {
@@ -314,8 +372,9 @@ impl Engine {
         dec_cfg: DecoderConfig,
         batch_cfg: BatchConfig,
         shard_cfg: ShardConfig,
+        overload: OverloadPolicy,
         word_lm_ids: Vec<u32>,
-        fault_after_steps: Option<u64>,
+        faults: FaultHooks,
     ) -> Engine {
         Engine {
             model_cfg: backend.model_cfg().clone(),
@@ -325,10 +384,12 @@ impl Engine {
             dec_cfg,
             batch_cfg,
             shard_cfg,
+            overload,
             word_lm_ids,
             scratch: RefCell::new(EngineScratch::default()),
-            fault_after_steps,
+            faults,
             served_steps: Cell::new(0),
+            degrade_level: Cell::new(0),
         }
     }
 
@@ -347,8 +408,9 @@ impl Engine {
             dec_cfg: self.dec_cfg.clone(),
             batch_cfg: self.batch_cfg.clone(),
             shard_cfg: self.shard_cfg.clone(),
+            overload: self.overload.clone(),
             word_lm_ids: self.word_lm_ids.clone(),
-            fault_after_steps: self.fault_after_steps,
+            faults: self.faults,
         })
     }
 
@@ -372,12 +434,33 @@ impl Engine {
     }
 
     fn decoder(&self) -> Result<BeamDecoder<'_>> {
+        // At level 0 `decoder_at` returns the configured DecoderConfig
+        // unchanged — post-drain full-quality parity is exact.
         BeamDecoder::with_word_ids(
             &self.lexicon,
             &self.lm,
-            self.dec_cfg.clone(),
+            self.overload.decoder_at(&self.dec_cfg, self.degrade_level.get()),
             Cow::Borrowed(&self.word_lm_ids),
         )
+    }
+
+    /// Step onto (or off) a degrade rung: subsequent decoding steps use
+    /// the rung's search parameters. Levels beyond the ladder clamp to
+    /// the deepest rung; 0 restores the configured full quality exactly.
+    /// The serving worker calls this with
+    /// [`OverloadPolicy::level_for_backlog`] before each drain.
+    pub fn set_degrade_level(&self, level: usize) {
+        self.degrade_level.set(level.min(self.overload.levels.len()));
+    }
+
+    /// The degrade rung currently in effect (0 = full quality).
+    pub fn degrade_level(&self) -> usize {
+        self.degrade_level.get()
+    }
+
+    /// The injected reply delay, if the slow-shard fault hook is armed.
+    pub fn fault_reply_delay(&self) -> Option<Duration> {
+        self.faults.reply_delay_ms.map(Duration::from_millis)
     }
 
     /// Open a session. `collect_logits` keeps per-frame log-probs for
@@ -459,10 +542,19 @@ impl Engine {
         })
     }
 
-    /// The fault hook's gate: fail once the configured step budget is
-    /// spent (no-op in normal operation).
+    /// The fault hooks' gate: panic or fail once the configured step
+    /// budget is spent (no-op in normal operation). The panic hook fires
+    /// first so a worker armed with both dies rather than erroring.
     fn check_fault(&self) -> Result<()> {
-        if let Some(limit) = self.fault_after_steps {
+        if let Some(limit) = self.faults.panic_after_steps {
+            if self.served_steps.get() >= limit {
+                panic!(
+                    "injected worker panic after {limit} decoding steps \
+                     (fault_panic_after_steps hook)"
+                );
+            }
+        }
+        if let Some(limit) = self.faults.after_steps {
             if self.served_steps.get() >= limit {
                 anyhow::bail!(
                     "injected backend fault after {limit} decoding steps (fault_after_steps hook)"
@@ -470,6 +562,19 @@ impl Engine {
             }
         }
         Ok(())
+    }
+
+    /// Record the degrade rung a step executed under into the session's
+    /// metrics (transition count + degraded-step odometer).
+    fn record_degrade(&self, m: &mut SessionMetrics) {
+        let level = self.degrade_level.get();
+        if level != m.degrade_level {
+            m.degrade_transitions += 1;
+            m.degrade_level = level;
+        }
+        if level > 0 {
+            m.degraded_steps += 1;
+        }
     }
 
     /// Feed audio; runs as many decoding steps as the buffer allows.
@@ -592,6 +697,7 @@ impl Engine {
             for &i in ready.iter() {
                 let s = &mut *lanes[i];
                 s.buf.drain(..step_len);
+                self.record_degrade(&mut s.metrics);
                 s.metrics.steps += 1;
                 s.metrics.batched_steps += 1;
                 s.metrics.batch_lanes += b;
@@ -620,6 +726,7 @@ impl Engine {
         }
         let t_end = Instant::now();
         self.served_steps.set(self.served_steps.get() + 1);
+        self.record_degrade(&mut s.metrics);
         s.metrics.steps += 1;
         s.metrics.audio_s += self.model_cfg.step_seconds();
         s.metrics.am_s += (t_am - t0).as_secs_f64();
@@ -996,6 +1103,80 @@ mod tests {
         e.push_audio(&mut t, &vec![0.0; 1520]);
         let mut refs = vec![&mut t];
         assert!(e.step_batch(&mut refs).is_err());
+    }
+
+    #[test]
+    fn degrade_ladder_changes_search_and_restores_bit_exactly() {
+        let dec = DecoderConfig::default();
+        let batch = BatchConfig::default();
+        let e = Engine::builder()
+            .native(TdsModel::random(ModelConfig::tiny_tds(), 11))
+            .overload(OverloadPolicy::reference_ladder(4, &dec, &batch))
+            .build()
+            .unwrap();
+        let mut rng = Rng::new(51);
+        let u = Synthesizer::default().render(&[1, 4, 2], &mut rng);
+        let (t_ref, m_ref) = e.decode_utterance(&u.samples).unwrap();
+        assert_eq!(m_ref.degraded_steps, 0);
+        assert_eq!(m_ref.degrade_transitions, 0);
+        // Deepest rung: every step records as degraded; out-of-ladder
+        // levels clamp.
+        e.set_degrade_level(99);
+        assert_eq!(e.degrade_level(), 2);
+        let (_, m_deg) = e.decode_utterance(&u.samples).unwrap();
+        assert_eq!(m_deg.degraded_steps, m_deg.steps);
+        assert_eq!(m_deg.degrade_transitions, 1);
+        assert_eq!(m_deg.degrade_level, 2);
+        // Back to full quality: bit-identical to the never-degraded run.
+        e.set_degrade_level(0);
+        let (t_back, m_back) = e.decode_utterance(&u.samples).unwrap();
+        assert_eq!(t_back.text, t_ref.text);
+        assert_eq!(t_back.score, t_ref.score);
+        assert_eq!(m_back.degraded_steps, 0);
+    }
+
+    #[test]
+    fn degrade_level_is_inert_without_a_ladder() {
+        // Default policy has no rungs: any level clamps to 0 and serving
+        // stays exactly the configured quality.
+        let e = native_engine();
+        e.set_degrade_level(3);
+        assert_eq!(e.degrade_level(), 0);
+    }
+
+    #[test]
+    fn batcher_cap_tightens_and_restores_lane_budget() {
+        let cfg = crate::config::BatchConfig { max_batch: 4, max_wait_frames: 8 };
+        let mut b = Batcher::new(cfg, &ModelConfig::tiny_tds());
+        assert_eq!(b.effective_max_batch(), 4);
+        b.set_cap(Some(2));
+        assert_eq!(b.effective_max_batch(), 2);
+        assert!(!b.push(1));
+        assert!(b.push(2), "capped batch must close at two lanes");
+        b.take();
+        // A cap wider than the policy, and a zero cap, both clamp.
+        b.set_cap(Some(99));
+        assert_eq!(b.effective_max_batch(), 4);
+        b.set_cap(Some(0));
+        assert_eq!(b.effective_max_batch(), 1);
+        b.set_cap(None);
+        assert_eq!(b.effective_max_batch(), 4);
+    }
+
+    #[test]
+    fn panic_hook_panics_after_budget() {
+        let e = Engine::builder()
+            .native(TdsModel::random(ModelConfig::tiny_tds(), 11))
+            .fault_panic_after_steps(1)
+            .build()
+            .unwrap();
+        let mut s = e.open(false).unwrap();
+        assert_eq!(e.feed(&mut s, &vec![0.0; 1520]).unwrap(), 1);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = e.feed(&mut s, &vec![0.0; 1280]);
+        }));
+        let msg = *caught.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("injected worker panic"), "{msg}");
     }
 
     #[test]

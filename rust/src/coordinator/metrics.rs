@@ -114,6 +114,12 @@ pub struct ServeMetrics {
     /// Recovery checkpoints shipped to the router (cadence:
     /// `ShardConfig::checkpoint_interval`).
     pub checkpoints_published: u64,
+    /// Fused batches executed at a reduced-quality degrade rung
+    /// (overload: the worker's backlog crossed the policy ladder).
+    pub degraded_batches: u64,
+    /// Never-started sessions this worker destroyed on the router's
+    /// overload-shedding notice.
+    pub sessions_shed: u64,
     /// Queue-wait + execution latency per feed request.
     pub feed_latency: LatencyStats,
     /// Fused device batches executed by the lane-batched core.
@@ -136,6 +142,8 @@ impl Clone for ServeMetrics {
             sessions_adopted: self.sessions_adopted,
             sessions_migrated_out: self.sessions_migrated_out,
             checkpoints_published: self.checkpoints_published,
+            degraded_batches: self.degraded_batches,
+            sessions_shed: self.sessions_shed,
             feed_latency: self.feed_latency.clone(),
             batch_lanes: self.batch_lanes,
             batches_executed: self.batches_executed,
@@ -157,6 +165,8 @@ impl Clone for ServeMetrics {
         self.sessions_adopted = source.sessions_adopted;
         self.sessions_migrated_out = source.sessions_migrated_out;
         self.checkpoints_published = source.checkpoints_published;
+        self.degraded_batches = source.degraded_batches;
+        self.sessions_shed = source.sessions_shed;
         self.feed_latency.clone_from(&source.feed_latency);
         self.batch_lanes = source.batch_lanes;
         self.batches_executed = source.batches_executed;
@@ -204,6 +214,8 @@ impl ServeMetrics {
         self.sessions_adopted += other.sessions_adopted;
         self.sessions_migrated_out += other.sessions_migrated_out;
         self.checkpoints_published += other.checkpoints_published;
+        self.degraded_batches += other.degraded_batches;
+        self.sessions_shed += other.sessions_shed;
         self.feed_latency.merge(&other.feed_latency);
         self.batches_executed += other.batches_executed;
         self.batch_lanes += other.batch_lanes;
@@ -214,7 +226,8 @@ impl ServeMetrics {
         format!(
             "sessions {}/{} steps {} audio {:.1}s rtf {:.1}x \
              feed p50 {:.2}ms p99 {:.2}ms max {:.2}ms rejected {} \
-             batches {} occ {:.2} batch p99 {:.2}ms adopted {} migrated {} ckpt {}",
+             batches {} occ {:.2} batch p99 {:.2}ms adopted {} migrated {} ckpt {} \
+             degraded {} shed {}",
             self.sessions_finished,
             self.sessions_opened,
             self.steps_executed,
@@ -230,6 +243,8 @@ impl ServeMetrics {
             self.sessions_adopted,
             self.sessions_migrated_out,
             self.checkpoints_published,
+            self.degraded_batches,
+            self.sessions_shed,
         )
     }
 }
@@ -246,6 +261,11 @@ pub struct ShardSnapshot {
     pub open_sessions: usize,
     /// Jobs queued to (or in flight on) this shard's worker.
     pub queue_depth: usize,
+    /// Monotone publish counter — the worker's heartbeat. A live worker
+    /// under traffic keeps advancing it; a dead or wedged one does not.
+    pub heartbeats: u64,
+    /// The degrade rung the worker last selected (0 = full quality).
+    pub degrade_level: usize,
     /// The shard's serving counters.
     pub serve: ServeMetrics,
 }
@@ -257,6 +277,8 @@ impl ShardSnapshot {
             shard,
             open_sessions: 0,
             queue_depth: 0,
+            heartbeats: 0,
+            degrade_level: 0,
             serve: ServeMetrics::default(),
         }
     }
@@ -362,6 +384,8 @@ mod tests {
             shard,
             open_sessions: open,
             queue_depth: shard,
+            heartbeats: 0,
+            degrade_level: 0,
             serve: ServeMetrics { steps_executed: steps, ..ServeMetrics::default() },
         };
         let m = ShardMetrics { shards: vec![snap(0, 5, 100), snap(1, 2, 40)] };

@@ -7,7 +7,10 @@
 //! with deterministic assignment, live-session rebalancing and
 //! dead-shard recovery), the serving front-end (JSON-lines TCP,
 //! protocol v2, bounded queue — the §4.1 host-process shape generalized
-//! to a worker pool) and serving metrics.
+//! to a worker pool) and serving metrics. Overload resilience —
+//! admission control, load shedding, retry/backoff routing, graceful
+//! degradation and worker liveness supervision — is policy-driven
+//! (`config::OverloadPolicy`, default off) and lives in [`shard`].
 
 pub mod backend;
 pub mod builder;
@@ -21,7 +24,7 @@ pub use backend::{
     AmBackend, AmLaneState, AmLanes, NativeBackend, QuantizedBackend, StepScratch, XlaBackend,
 };
 pub use builder::{BuildError, EngineBuilder};
-pub use engine::{Batcher, Engine, Session, SessionMetrics, WorkerSeed};
+pub use engine::{Batcher, Engine, FaultHooks, Session, SessionMetrics, WorkerSeed};
 pub use metrics::{LatencyStats, ServeMetrics, ShardMetrics, ShardSnapshot};
 pub use server::Server;
 pub use shard::{Finished, Resumed, ShardPool};

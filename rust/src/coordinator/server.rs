@@ -142,6 +142,22 @@ pub fn err_json(code: ErrCode, msg: &str) -> Json {
     )])
 }
 
+/// A `backpressure` error payload carrying the overload policy's
+/// `retry_after_ms` hint inside the error object — how long a
+/// well-behaved client should back off before retrying. Every
+/// policy-driven bounce (admission refusal, saturated shard queue)
+/// carries the hint; presence-of-`error` checks from v1 keep working.
+pub fn backpressure_json(msg: &str, retry_after_ms: u64) -> Json {
+    obj(&[(
+        "error",
+        obj(&[
+            ("code", Json::Str(ErrCode::Backpressure.as_str().to_string())),
+            ("message", Json::Str(msg.to_string())),
+            ("retry_after_ms", Json::Num(retry_after_ms as f64)),
+        ]),
+    )])
+}
+
 /// The `hello` handshake response (static capability data).
 fn hello_json() -> Json {
     obj(&[
@@ -198,6 +214,18 @@ pub(crate) fn config_json(engine: &Engine) -> Json {
         ),
         ("beam", Json::Num(engine.dec_cfg.beam as f64)),
         ("max_hyps", Json::Num(engine.dec_cfg.max_hyps as f64)),
+        (
+            "admit_sessions_per_shard",
+            Json::Num(engine.overload.admit_sessions_per_shard as f64),
+        ),
+        ("retry_after_ms", Json::Num(engine.overload.retry_after_ms as f64)),
+        (
+            "shed_never_started",
+            Json::Num(u64::from(engine.overload.shed_never_started) as f64),
+        ),
+        ("route_retries", Json::Num(engine.overload.route_retries as f64)),
+        ("route_backoff_ms", Json::Num(engine.overload.route_backoff_ms as f64)),
+        ("degrade_levels", Json::Num(engine.overload.levels.len() as f64)),
     ])
 }
 

@@ -55,7 +55,7 @@
 //! placement under load depends on wall-clock flush timing but never
 //! affects transcripts.
 //!
-//! ## Flow control
+//! ## Flow control and overload
 //!
 //! Client-facing jobs are forwarded with a non-blocking `try_send`: a
 //! shard whose queue is saturated bounces *its own* requests with
@@ -67,6 +67,45 @@
 //! after every state-changing job (before replying to it), and the
 //! router aggregates the caches.
 //!
+//! An [`OverloadPolicy`] (default: everything off) layers SLO-aware
+//! control on top:
+//!
+//! * **Admission control** — once a shard would exceed
+//!   `admit_sessions_per_shard` open sessions, new `open`s are refused
+//!   with `backpressure` carrying a `retry_after_ms` hint (every
+//!   policy-driven bounce carries the hint).
+//! * **Retry/backoff routing** — a full (slow, suspect) shard queue is
+//!   retried `route_retries` times with doubling backoff before the
+//!   client sees the bounce; worker *death* is never retried against —
+//!   it is detected and recovered (below).
+//! * **Load shedding** — when a feed still bounces off a saturated
+//!   shard, the shard's oldest *never started* session (opened, zero
+//!   audio fed) is shed to make room; started sessions are never shed.
+//! * **Graceful degradation** — each worker measures its decode backlog
+//!   (ready steps over its open sessions) at every flush and steps
+//!   through the policy's degrade ladder (narrower beam via the
+//!   decoder config, tighter lane budget via the [`Batcher`] cap). The
+//!   backlog is a pure function of the admitted feed trace (FIFO per
+//!   shard), and the ladder is threshold-only (no hysteresis), so the
+//!   rung at every flush — and therefore every transcript — is
+//!   deterministic for a given trace, and full quality returns the
+//!   moment pressure drains (level 0 *is* the configured config).
+//!
+//! ## Liveness supervision
+//!
+//! Worker threads run under `catch_unwind`. A panicking worker closes
+//! its job queue, rescues its staged (accepted, never acknowledged)
+//! feeds and still-queued client jobs, and posts a death report into a
+//! shared [`WorkerLiveness`] slot. The router polls the slots between
+//! messages (and on a short idle timeout), so a *spontaneous* panic is
+//! discovered by the supervisor — not by the next send — and triggers
+//! the same checkpoint re-adoption + staged-feed replay the
+//! [`ShardPool::kill_worker`] drill exercises. The drill itself is now
+//! *implemented as* an injected panic ([`Job::Die`] panics in the
+//! worker loop), so the test path and the real path are one code path.
+//! Workers also publish a heartbeat counter through their
+//! [`ShardSnapshot`] caches (`stats` surfaces it) for observability.
+//!
 //! The TCP front-end ([`super::Server`]) is a thin protocol layer over
 //! this module; tests and examples drive [`ShardPool`] directly — no
 //! sockets, no JSON text round-trips, which is what lets the parity
@@ -75,17 +114,28 @@
 
 use anyhow::{Context, Result};
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
-use std::time::Instant;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
-use crate::config::ShardConfig;
+use crate::config::{OverloadPolicy, ShardConfig};
 use crate::util::json::Json;
 
 use super::engine::{Batcher, Engine, Session, WorkerSeed};
 use super::metrics::{ServeMetrics, ShardMetrics, ShardSnapshot};
-use super::server::{config_json, err_json, obj, ErrCode};
+use super::server::{backpressure_json, config_json, err_json, obj, ErrCode};
 use super::snapshot::SessionSnapshot;
+
+/// How long the router waits for a message before running a supervision
+/// pass anyway — the upper bound on how long a spontaneously-panicked
+/// worker stays undetected on an otherwise idle pool.
+const SUPERVISE_INTERVAL: Duration = Duration::from_millis(25);
+
+/// Upper bound on the kill drill's wait for the victim's death report;
+/// only a wedged worker (stuck in the device backend) can hit it, and
+/// the drill then proceeds exactly as if the staged feeds were lost.
+const KILL_REPORT_WAIT: Duration = Duration::from_secs(10);
 
 /// A client-facing request the router dispatches. Both front-ends speak
 /// this: TCP connection threads (`super::Server`) and the in-process
@@ -179,16 +229,18 @@ enum Job {
         returning: bool,
         reply: mpsc::Sender<Result<(), Option<Vec<u8>>>>,
     },
-    /// Simulated crash: exit *without* flushing staged work or shipping
-    /// final checkpoints; ack only after the job queue is dropped so the
-    /// router's recovery observes a definitely-dead worker. The ack
-    /// carries the feeds that were staged — accepted but never
-    /// acknowledged — at the moment of death, re-packaged as replayable
-    /// [`Job::Feed`]s: their audio arrived *after* the covering
-    /// checkpoints, so the router can replay them on the sessions'
-    /// recovery shards instead of leaving the clients' pending requests
-    /// to bounce.
-    Die { ack: mpsc::Sender<Vec<Job>> },
+    /// Router-initiated overload shedding: destroy a *never started*
+    /// session (opened, zero audio fed) so a saturated shard frees a
+    /// slot. No reply — the router already answered the client whose
+    /// bounced feed triggered the shed, and the victim's owner learns on
+    /// its next request (`unknown_session`).
+    Shed { session: u64 },
+    /// Simulated crash: panic in the worker loop *without* flushing
+    /// staged work or shipping final checkpoints. The panic unwinds into
+    /// the same `catch_unwind` wrapper that catches real worker panics
+    /// ([`run_worker`]), so the kill drill and spontaneous death share
+    /// one rescue/report/recover code path.
+    Die,
     /// Flush staged work and exit the worker loop.
     Shutdown,
 }
@@ -204,7 +256,9 @@ impl Job {
             | Job::Finish { reply, .. }
             | Job::Resume { reply, .. }
             | Job::Config { reply } => Some(reply),
-            Job::Evict { .. } | Job::Adopt { .. } | Job::Die { .. } | Job::Shutdown => None,
+            Job::Evict { .. } | Job::Adopt { .. } | Job::Shed { .. } | Job::Die | Job::Shutdown => {
+                None
+            }
         }
     }
 
@@ -260,6 +314,13 @@ struct Worker {
     /// Step count at each session's last shipped checkpoint.
     last_ckpt: HashMap<u64, usize>,
     ckpt_interval: usize,
+    /// Monotone publish counter, surfaced through the stats cache as
+    /// this worker's heartbeat: a live worker under traffic keeps
+    /// advancing it, a dead or wedged one does not.
+    heartbeats: u64,
+    /// The degrade rung the last [`Worker::apply_degrade`] selected
+    /// (0 = full quality), published through the stats cache.
+    degrade_level: usize,
 }
 
 impl Worker {
@@ -286,6 +347,8 @@ impl Worker {
             staged: Vec::new(),
             last_ckpt: HashMap::new(),
             ckpt_interval,
+            heartbeats: 0,
+            degrade_level: 0,
         }
     }
 
@@ -295,12 +358,35 @@ impl Worker {
     /// The cached snapshot is overwritten in place (`clone_from`
     /// reuses the latency windows' capacity), so the steady-state
     /// publish allocates nothing.
-    fn publish(&self) {
+    fn publish(&mut self) {
+        self.heartbeats += 1;
         let mut cached = self.cache.lock().unwrap();
         cached.shard = self.shard;
         cached.open_sessions = self.sessions.len();
         cached.queue_depth = self.depth.load(Ordering::Relaxed);
+        cached.heartbeats = self.heartbeats;
+        cached.degrade_level = self.degrade_level;
         cached.serve.clone_from(&self.metrics);
+    }
+
+    /// Pick this shard's degrade rung from its current decode backlog
+    /// (ready steps summed over every open session) and apply it to the
+    /// engine's decoder and the batcher's lane budget. The backlog is a
+    /// pure function of the feed trace this worker has accepted (jobs
+    /// drain FIFO), and [`OverloadPolicy::level_for_backlog`] is a
+    /// threshold ladder with no hysteresis — so for a given admitted
+    /// trace the rung at every flush, and therefore every transcript, is
+    /// deterministic, and rung 0 (the configured decoder, untouched)
+    /// returns the moment pressure drains. With no ladder configured
+    /// this is a no-op that always selects rung 0.
+    fn apply_degrade(&mut self) -> usize {
+        let backlog: usize =
+            self.sessions.values().map(|s| self.engine.ready_steps(s)).sum();
+        let level = self.engine.overload.level_for_backlog(backlog);
+        self.engine.set_degrade_level(level);
+        self.batcher.set_cap(self.engine.overload.batch_cap_at(level));
+        self.degrade_level = level;
+        level
     }
 
     /// Ship a recovery checkpoint if the session advanced at least
@@ -364,6 +450,9 @@ impl Worker {
     /// is reported to every staged feed in the batch, not just the
     /// failing lane's.
     fn flush(&mut self) {
+        // Degrade decision first: the rung for this drain is a function
+        // of the backlog *before* it drains.
+        let level = self.apply_degrade();
         let ids = self.batcher.take();
         // Pull the batch's sessions out of the map so every lane can be
         // borrowed mutably at once; they go back right after the step.
@@ -385,6 +474,9 @@ impl Worker {
         };
         if occupancy > 0 {
             self.metrics.record_batch(occupancy, t0.elapsed());
+            if level > 0 {
+                self.metrics.degraded_batches += 1;
+            }
         }
         let err = result.err().map(|e| format!("feed failed: {e:#}"));
         let mut done: Vec<(StagedFeed, Json)> = Vec::new();
@@ -428,16 +520,25 @@ impl Worker {
             ));
         }
         self.publish();
+        // Fault hook: hold the acknowledgements back to widen races for
+        // the chaos suites (no-op unless the reply-delay hook is armed).
+        if !done.is_empty() {
+            if let Some(delay) = self.engine.fault_reply_delay() {
+                std::thread::sleep(delay);
+            }
+        }
         for (f, resp) in done {
             f.reply.send(resp);
         }
     }
 
-    /// The device loop. Exits when the job channel closes, on
-    /// [`Job::Shutdown`] (clean: flushes staged work), or on
-    /// [`Job::Die`] (crash simulation: drops everything unflushed).
-    fn run(mut self, jobs: mpsc::Receiver<Job>) {
-        let mut die_ack: Option<mpsc::Sender<Vec<Job>>> = None;
+    /// The device loop. Exits when the job channel closes or on
+    /// [`Job::Shutdown`] (clean: flushes staged work); **panics** on
+    /// [`Job::Die`] (crash simulation) so the drill exercises the same
+    /// unwind/rescue path a real worker panic takes ([`run_worker`]).
+    /// Borrows the receiver rather than consuming it so the wrapper can
+    /// still reach `self.staged` and the queued jobs after an unwind.
+    fn run(&mut self, jobs: &mpsc::Receiver<Job>) {
         loop {
             // Enforce the wait budget even under sustained job traffic:
             // a queued message makes recv_timeout return Ok without ever
@@ -473,40 +574,15 @@ impl Worker {
                     self.flush();
                     break;
                 }
-                Job::Die { ack } => {
-                    die_ack = Some(ack);
-                    break;
-                }
+                Job::Die => panic!("injected worker kill (kill_worker drill)"),
                 other => self.handle(other),
             }
-        }
-        if let Some(ack) = die_ack {
-            // Crash simulation: drop the job queue *first* so every
-            // subsequent router send fails deterministically, then ack.
-            // Sessions die unflushed and unshipped — exactly what a real
-            // worker crash loses — but the staged (un-acknowledged)
-            // feeds ride back on the ack as replayable jobs: their audio
-            // was pushed *after* the covering checkpoints were captured,
-            // so replaying them against the recovered sessions repeats
-            // no audio and loses none.
-            drop(jobs);
-            let orphans: Vec<Job> = self
-                .staged
-                .drain(..)
-                .map(|f| Job::Feed {
-                    session: f.session,
-                    samples: f.samples,
-                    enqueued: f.enqueued,
-                    reply: f.reply,
-                })
-                .collect();
-            let _ = ack.send(orphans);
         }
     }
 
     fn handle(&mut self, job: Job) {
         match job {
-            Job::Shutdown | Job::Die { .. } => unreachable!("handled by the run loop"),
+            Job::Shutdown | Job::Die => unreachable!("handled by the run loop"),
             Job::Open { id, reply } => {
                 let resp = match self.engine.open(false) {
                     Ok(s) => {
@@ -553,6 +629,11 @@ impl Worker {
                 }
                 self.batcher.remove(session);
                 self.last_ckpt.remove(&session);
+                // Re-pick the rung for the finish drain itself: the
+                // flush above consumed the backlog that justified any
+                // degradation, so an uncontended finish always pads out
+                // at full quality.
+                self.apply_degrade();
                 let resp = match self.sessions.remove(&session) {
                     None => err_json(ErrCode::UnknownSession, "unknown session"),
                     Some(mut s) => match self.engine.finish(&mut s) {
@@ -565,6 +646,11 @@ impl Worker {
                                 ("rtf", Json::Num(s.metrics.rtf())),
                                 ("steps", Json::Num(s.metrics.steps as f64)),
                                 ("batch_occupancy", Json::Num(s.metrics.avg_batch_occupancy())),
+                                ("degraded_steps", Json::Num(s.metrics.degraded_steps as f64)),
+                                (
+                                    "degrade_transitions",
+                                    Json::Num(s.metrics.degrade_transitions as f64),
+                                ),
                             ])
                         }
                         Err(e) => err_json(ErrCode::Internal, &format!("finish failed: {e:#}")),
@@ -684,6 +770,151 @@ impl Worker {
                 self.publish();
                 let _ = reply.send(resp);
             }
+            Job::Shed { session } => {
+                // Overload shedding: the router only sheds sessions it
+                // knows were never fed, so the victim has no staged
+                // audio, no batcher lane with work, and nothing a client
+                // was promised.
+                if self.sessions.remove(&session).is_some() {
+                    self.batcher.remove(session);
+                    self.last_ckpt.remove(&session);
+                    self.metrics.sessions_shed += 1;
+                    // Mirror eviction accounting: the session is no
+                    // longer this shard's open, so opened/finished stay
+                    // balanced (`sessions_shed` keeps the record).
+                    self.metrics.sessions_opened -= 1;
+                    self.publish();
+                }
+            }
+        }
+    }
+}
+
+/// Liveness status a worker thread reports on exit.
+enum LivenessStatus {
+    /// Still running.
+    Live,
+    /// Exited the loop normally (channel closed or [`Job::Shutdown`]).
+    Clean,
+    /// Unwound on a panic — spontaneous or the [`Job::Die`] drill.
+    Panicked,
+}
+
+/// The death-report slot shared between one worker thread and the
+/// router's supervisor. The worker's `catch_unwind` wrapper fills it on
+/// exit; the router polls `take_panic` between messages and the kill
+/// drill blocks on `wait_dead`. The `reported` flag keeps the polling
+/// fast path to one atomic load per shard.
+struct WorkerLiveness {
+    reported: AtomicBool,
+    state: Mutex<(LivenessStatus, Vec<Job>)>,
+    cond: Condvar,
+}
+
+impl WorkerLiveness {
+    fn new() -> WorkerLiveness {
+        WorkerLiveness {
+            reported: AtomicBool::new(false),
+            state: Mutex::new((LivenessStatus::Live, Vec::new())),
+            cond: Condvar::new(),
+        }
+    }
+
+    /// Post the worker's exit status (+ rescued orphan jobs on panic).
+    fn report(&self, status: LivenessStatus, orphans: Vec<Job>) {
+        *self.state.lock().unwrap() = (status, orphans);
+        self.reported.store(true, Ordering::Release);
+        self.cond.notify_all();
+    }
+
+    /// Harvest a panic report exactly once: the rescued orphans come
+    /// back on the first call after the worker reported a panic, and
+    /// the slot is spent from then on. Clean exits return `None`.
+    fn take_panic(&self) -> Option<Vec<Job>> {
+        if !self.reported.load(Ordering::Acquire) {
+            return None;
+        }
+        let mut st = self.state.lock().unwrap();
+        match st.0 {
+            LivenessStatus::Panicked => {
+                st.0 = LivenessStatus::Clean;
+                Some(std::mem::take(&mut st.1))
+            }
+            _ => None,
+        }
+    }
+
+    /// Block until the worker has reported *any* exit, bounded by
+    /// `timeout` — the kill drill's synchronization point.
+    fn wait_dead(&self, timeout: Duration) {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.state.lock().unwrap();
+        while matches!(st.0, LivenessStatus::Live) {
+            let now = Instant::now();
+            if now >= deadline {
+                return;
+            }
+            let (guard, _) = self.cond.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+    }
+}
+
+/// Run one worker to completion under `catch_unwind` and report its
+/// exit through the shared liveness slot. On a panic — a device-layer
+/// bug, the engine's injected-panic fault hook, or the [`Job::Die`]
+/// drill, all one path from here on — the wrapper rescues what the
+/// dying worker can still prove it owes:
+///
+/// * its staged feeds (accepted, never acknowledged — their audio
+///   arrived after the covering checkpoints, so replaying them against
+///   the recovered sessions repeats no audio and loses none), and
+/// * client jobs still queued behind the panic (equally
+///   un-acknowledged; opens are answered from router state by
+///   [`Router::replay`] since recovery re-books them).
+///
+/// The job queue is dropped *before* the report so that by the time the
+/// supervisor sees the panic, every subsequent router send fails
+/// deterministically and no further job can slip into a dead queue.
+fn run_worker(mut worker: Worker, jobs: mpsc::Receiver<Job>, liveness: Arc<WorkerLiveness>) {
+    let result = catch_unwind(AssertUnwindSafe(|| worker.run(&jobs)));
+    match result {
+        Ok(()) => {
+            drop(jobs);
+            liveness.report(LivenessStatus::Clean, Vec::new());
+        }
+        Err(_) => {
+            let mut orphans: Vec<Job> = worker
+                .staged
+                .drain(..)
+                .map(|f| Job::Feed {
+                    session: f.session,
+                    samples: f.samples,
+                    enqueued: f.enqueued,
+                    reply: f.reply,
+                })
+                .collect();
+            // Drain jobs queued behind the panic; router-internal
+            // transactions (evict/adopt) are dropped — their reply
+            // channels closing signals `Dead` to the router's
+            // serialized migration legs.
+            while let Ok(job) = jobs.try_recv() {
+                worker.depth.fetch_sub(1, Ordering::Relaxed);
+                match job {
+                    j @ (Job::Open { .. }
+                    | Job::Feed { .. }
+                    | Job::Finish { .. }
+                    | Job::Resume { .. }
+                    | Job::Config { .. }) => orphans.push(j),
+                    Job::Evict { .. }
+                    | Job::Adopt { .. }
+                    | Job::Shed { .. }
+                    | Job::Die
+                    | Job::Shutdown => {}
+                }
+            }
+            drop(jobs);
+            liveness.report(LivenessStatus::Panicked, orphans);
         }
     }
 }
@@ -699,6 +930,18 @@ struct ShardHandle {
     /// declared dead can never answer a request the router's recovery
     /// path already re-answered (or replayed elsewhere).
     generation: Arc<AtomicU64>,
+    /// The worker thread's death-report slot ([`run_worker`]).
+    liveness: Arc<WorkerLiveness>,
+}
+
+/// One booked session's routing record. `started` flips when the first
+/// feed for the session is enqueued to a worker — overload shedding
+/// only ever targets sessions that never started (opened, zero audio
+/// fed), so nothing a client was promised is ever shed.
+#[derive(Clone, Copy)]
+struct Booked {
+    shard: usize,
+    started: bool,
 }
 
 /// Outcome of asking a shard to adopt a session.
@@ -727,11 +970,25 @@ struct Router {
     /// Per-shard count of client jobs bounced with `backpressure`
     /// (router-side; folded into stats snapshots so shed load shows).
     rejected: Vec<u64>,
-    assign: HashMap<u64, usize>,
+    assign: HashMap<u64, Booked>,
     open_count: Vec<usize>,
     next_id: u64,
     rebalance_threshold: usize,
     checkpoint_interval: usize,
+    /// The pool's overload policy (admission, shedding, retry/backoff,
+    /// degrade ladder). Default is fully off.
+    overload: OverloadPolicy,
+    /// Shed notices that could not be delivered yet: the victim's shard
+    /// queue was full at shed time (that is *why* it was shed), so the
+    /// notice waits for a free slot. Retried on every loop iteration.
+    shed_pending: Vec<(usize, u64)>,
+    /// Sessions shed under overload (router-side; surfaced in `stats`).
+    shed: u64,
+    /// Opens refused by admission control (surfaced in `stats`).
+    admission_rejected: u64,
+    /// Spontaneous worker panics the supervisor detected (the kill
+    /// drill is counted by its own reply, not here).
+    panics_detected: u64,
     /// Freshest encoded [`SessionSnapshot`] per open session, keyed by
     /// its capture sequence number — strictly increasing per session —
     /// so an older in-flight checkpoint can never overwrite a newer
@@ -757,8 +1014,8 @@ impl Router {
     /// is no longer booked, so finished sessions cannot leak bytes).
     fn drain_backchannels(&mut self) {
         while let Ok(session) = self.retire_rx.try_recv() {
-            if let Some(shard) = self.assign.remove(&session) {
-                self.open_count[shard] = self.open_count[shard].saturating_sub(1);
+            if let Some(b) = self.assign.remove(&session) {
+                self.open_count[b.shard] = self.open_count[b.shard].saturating_sub(1);
             }
             self.checkpoints.remove(&session);
         }
@@ -786,6 +1043,86 @@ impl Router {
         if !self.dead[shard] {
             self.dead[shard] = true;
             self.shards[shard].generation.fetch_add(1, Ordering::SeqCst);
+            // Undeliverable shed notices die with the worker.
+            self.shed_pending.retain(|&(s, _)| s != shard);
+        }
+    }
+
+    /// One supervision pass: harvest death reports posted by worker
+    /// `catch_unwind` wrappers ([`run_worker`]) and run the standard
+    /// recovery for each — mark dead, re-adopt its sessions from their
+    /// checkpoints, replay the rescued orphan jobs. This is how a
+    /// *spontaneous* worker panic is discovered (rather than at the
+    /// next send), and it is the same path the kill drill takes.
+    fn supervise(&mut self) {
+        for i in 0..self.shards.len() {
+            if self.dead[i] {
+                continue;
+            }
+            let harvested = self.shards[i].liveness.take_panic();
+            let Some(orphans) = harvested else {
+                continue;
+            };
+            self.panics_detected += 1;
+            self.mark_dead(i);
+            self.recover(i);
+            for job in orphans {
+                self.replay(job);
+            }
+        }
+    }
+
+    /// Shed the oldest *never started* session on a saturated shard
+    /// (lowest id — deterministic given the trace), freeing a slot for
+    /// load that has audio in flight. Router bookkeeping is dropped
+    /// immediately; the worker's notice is delivered when its queue has
+    /// room ([`Router::flush_shed`]). Returns false when the policy is
+    /// off or every session on the shard already started.
+    fn shed_one(&mut self, shard: usize) -> bool {
+        if !self.overload.shed_never_started {
+            return false;
+        }
+        let victim = self
+            .assign
+            .iter()
+            .filter(|(_, b)| b.shard == shard && !b.started)
+            .map(|(&id, _)| id)
+            .min();
+        let Some(id) = victim else {
+            return false;
+        };
+        self.assign.remove(&id);
+        self.open_count[shard] = self.open_count[shard].saturating_sub(1);
+        self.checkpoints.remove(&id);
+        self.shed += 1;
+        self.shed_pending.push((shard, id));
+        self.flush_shed();
+        true
+    }
+
+    /// Best-effort, non-blocking delivery of pending shed notices.
+    fn flush_shed(&mut self) {
+        let mut i = 0;
+        while i < self.shed_pending.len() {
+            let (shard, id) = self.shed_pending[i];
+            if self.dead[shard] {
+                self.shed_pending.remove(i);
+                continue;
+            }
+            self.shards[shard].depth.fetch_add(1, Ordering::Relaxed);
+            match self.shards[shard].tx.try_send(Job::Shed { session: id }) {
+                Ok(()) => {
+                    self.shed_pending.remove(i);
+                }
+                Err(mpsc::TrySendError::Full(_)) => {
+                    self.shards[shard].depth.fetch_sub(1, Ordering::Relaxed);
+                    i += 1;
+                }
+                Err(mpsc::TrySendError::Disconnected(_)) => {
+                    self.shards[shard].depth.fetch_sub(1, Ordering::Relaxed);
+                    self.mark_dead(shard);
+                }
+            }
         }
     }
 
@@ -804,17 +1141,27 @@ impl Router {
         true
     }
 
-    /// Forward a client-facing job without ever blocking the router on
-    /// one saturated shard (head-of-line isolation): a full worker
-    /// queue bounces the request with `backpressure` — the hot shard's
-    /// clients back off while every other shard keeps routing. A *dead*
-    /// shard triggers recovery (its sessions re-adopt from checkpoints
-    /// onto survivors) and the job is retried once on its session's new
-    /// shard. Returns the shard the job was enqueued on.
+    /// Forward a client-facing job without (indefinitely) blocking the
+    /// router on one saturated shard (head-of-line isolation): a full
+    /// worker queue is a *suspect* shard — slow, wedged, or merely busy
+    /// — so it gets the policy's bounded retry-with-backoff
+    /// (`route_retries` × doubling `route_backoff_ms`, default: none)
+    /// and then bounces the request with `backpressure` carrying the
+    /// policy's `retry_after_ms` hint; the hot shard's clients back off
+    /// while every other shard keeps routing. A *dead* shard triggers
+    /// recovery (its sessions re-adopt from checkpoints onto survivors)
+    /// and the job is retried once on its session's new shard. Returns
+    /// the shard the job was enqueued on.
     fn route_client(&mut self, shard: usize, job: Job) -> Option<usize> {
         let mut shard = shard;
         let mut job = job;
-        for _attempt in 0..2 {
+        let mut full_retries = self.overload.route_retries;
+        let mut backoff_ms = self.overload.route_backoff_ms.max(1);
+        // At most two enqueue rounds against *dead* workers (initial +
+        // one post-recovery reroute); Full retries are bounded
+        // separately by the policy's `route_retries` budget.
+        let mut disconnects = 0;
+        while disconnects < 2 {
             if self.dead[shard] {
                 self.recover(shard);
                 match self.reroute(&job) {
@@ -834,16 +1181,36 @@ impl Router {
                 Ok(()) => return Some(shard),
                 Err(mpsc::TrySendError::Full(mut j)) => {
                     self.shards[shard].depth.fetch_sub(1, Ordering::Relaxed);
+                    if full_retries > 0 {
+                        // The stall is bounded (route_retries doublings
+                        // of route_backoff_ms) and opted into by policy:
+                        // trading a brief router pause for not bouncing
+                        // is exactly what the knob means.
+                        full_retries -= 1;
+                        std::thread::sleep(Duration::from_millis(backoff_ms));
+                        backoff_ms = backoff_ms.saturating_mul(2);
+                        job = j;
+                        continue;
+                    }
                     self.rejected[shard] += 1;
+                    // Make room for the load that bounced: shed the
+                    // shard's oldest never-started session (policy-gated).
+                    if matches!(j, Job::Feed { .. }) {
+                        self.shed_one(shard);
+                    }
                     if let Some(reply) = j.reply_mut() {
                         reply.untag();
-                        reply.send(err_json(ErrCode::Backpressure, "shard queue full"));
+                        reply.send(backpressure_json(
+                            "shard queue full",
+                            self.overload.retry_after_ms,
+                        ));
                     }
                     return None;
                 }
                 Err(mpsc::TrySendError::Disconnected(j)) => {
                     self.shards[shard].depth.fetch_sub(1, Ordering::Relaxed);
                     self.mark_dead(shard);
+                    disconnects += 1;
                     job = j;
                     // Loop: the dead-shard arm above recovers + reroutes.
                 }
@@ -864,23 +1231,40 @@ impl Router {
         None
     }
 
-    /// Re-route a job rescued off a dying worker (a staged feed handed
-    /// back through the [`Job::Die`] ack) onto its session's recovery
-    /// shard. The feed's audio was pushed *after* the checkpoint its
-    /// session recovered from, so the replay repeats no audio — the
-    /// client's pending request answers normally instead of bouncing
-    /// with `internal`/`unknown_session`.
-    fn replay(&mut self, mut job: Job) {
-        match self.reroute(&job) {
-            Some(shard) => {
-                self.route_client(shard, job);
+    /// Re-route a job rescued off a dying worker (a staged feed, or a
+    /// client job still queued behind the panic) onto its session's
+    /// recovery shard. A rescued feed's audio was pushed *after* the
+    /// checkpoint its session recovered from, so the replay repeats no
+    /// audio — the client's pending request answers normally instead of
+    /// bouncing with `internal`/`unknown_session`. A rescued *open* was
+    /// never processed by the dead worker, but recovery already
+    /// re-booked its id (fresh open on a survivor — nothing was ever
+    /// acknowledged for it), so it is answered from router state rather
+    /// than opening a duplicate.
+    fn replay(&mut self, job: Job) {
+        match job {
+            Job::Open { id, mut reply } => {
+                reply.untag();
+                reply.send(if self.assign.contains_key(&id) {
+                    obj(&[("session", Json::Num(id as f64))])
+                } else {
+                    err_json(ErrCode::Internal, "session lost with its worker")
+                });
             }
-            None => {
-                if let Some(reply) = job.reply_mut() {
-                    reply.untag();
-                    reply.send(err_json(ErrCode::UnknownSession, "session lost with its worker"));
+            mut job => match self.reroute(&job) {
+                Some(shard) => {
+                    self.route_client(shard, job);
                 }
-            }
+                None => {
+                    if let Some(reply) = job.reply_mut() {
+                        reply.untag();
+                        reply.send(err_json(
+                            ErrCode::UnknownSession,
+                            "session lost with its worker",
+                        ));
+                    }
+                }
+            },
         }
     }
 
@@ -889,7 +1273,7 @@ impl Router {
     /// the session was lost or every worker is dead.
     fn reroute(&self, job: &Job) -> Option<usize> {
         if let Some(id) = job.session_id() {
-            return self.assign.get(&id).copied();
+            return self.assign.get(&id).map(|b| b.shard);
         }
         let s = self.pick();
         (!self.dead[s]).then_some(s)
@@ -926,7 +1310,7 @@ impl Router {
         let mut orphans: Vec<u64> = self
             .assign
             .iter()
-            .filter_map(|(&id, &s)| (s == dead_shard).then_some(id))
+            .filter_map(|(&id, b)| (b.shard == dead_shard).then_some(id))
             .collect();
         orphans.sort_unstable();
         for id in orphans {
@@ -953,7 +1337,8 @@ impl Router {
             }
             match self.adopt_on(target, id, snap, false) {
                 AdoptOutcome::Adopted => {
-                    self.assign.insert(id, target);
+                    let started = self.assign.get(&id).is_some_and(|b| b.started);
+                    self.assign.insert(id, Booked { shard: target, started });
                     self.open_count[target] += 1;
                     self.recovered += 1;
                 }
@@ -1013,7 +1398,8 @@ impl Router {
                     if self.checkpoint_interval > 0 {
                         self.checkpoints.insert(id, (seq, bytes));
                     }
-                    self.assign.insert(id, cold);
+                    let started = self.assign.get(&id).is_some_and(|b| b.started);
+                    self.assign.insert(id, Booked { shard: cold, started });
                     self.open_count[hot] -= 1;
                     self.open_count[cold] += 1;
                 }
@@ -1085,8 +1471,11 @@ impl Router {
 /// a merged summary plus one entry per responding shard. `workers` is
 /// the configured pool size; a `responding` count below it surfaces
 /// dead workers instead of silently shrinking the report; `recovered`
-/// counts sessions re-adopted off dead shards.
-fn stats_json(m: &ShardMetrics, workers: usize, recovered: u64) -> Json {
+/// counts sessions re-adopted off dead shards. The overload/liveness
+/// counters ride along: per shard the current degrade rung, degraded
+/// batch count, shed sessions and heartbeat; pool-wide the admission
+/// rejections, sessions shed, and supervisor-detected panics.
+fn stats_json(m: &ShardMetrics, workers: usize, r: &Router) -> Json {
     let shards: Vec<Json> = m
         .shards
         .iter()
@@ -1098,6 +1487,10 @@ fn stats_json(m: &ShardMetrics, workers: usize, recovered: u64) -> Json {
                 ("adopted", Json::Num(s.serve.sessions_adopted as f64)),
                 ("migrated", Json::Num(s.serve.sessions_migrated_out as f64)),
                 ("checkpoints", Json::Num(s.serve.checkpoints_published as f64)),
+                ("degrade_level", Json::Num(s.degrade_level as f64)),
+                ("degraded_batches", Json::Num(s.serve.degraded_batches as f64)),
+                ("shed", Json::Num(s.serve.sessions_shed as f64)),
+                ("heartbeats", Json::Num(s.heartbeats as f64)),
                 ("summary", Json::Str(s.serve.summary())),
             ])
         })
@@ -1109,26 +1502,52 @@ fn stats_json(m: &ShardMetrics, workers: usize, recovered: u64) -> Json {
         ("workers", Json::Num(workers as f64)),
         ("responding", Json::Num(m.shards.len() as f64)),
         ("imbalance", Json::Num(m.imbalance() as f64)),
-        ("recovered", Json::Num(recovered as f64)),
+        ("recovered", Json::Num(r.recovered as f64)),
+        ("rejected_admission", Json::Num(r.admission_rejected as f64)),
+        ("shed", Json::Num(r.shed as f64)),
+        ("panics_detected", Json::Num(r.panics_detected as f64)),
         ("shards", Json::Arr(shards)),
     ])
 }
 
 /// The router loop: serializes assignment decisions, forwards work,
-/// answers session-less requests itself, and owns the checkpoint store
-/// dead-shard recovery restores from.
+/// answers session-less requests itself, owns the checkpoint store
+/// dead-shard recovery restores from, and doubles as the worker
+/// supervisor — between messages (and on a short idle timeout) it
+/// harvests death reports, so a spontaneously-panicked worker is
+/// recovered even when no client traffic would have touched it.
 fn router_loop(jobs: mpsc::Receiver<RouterMsg>, mut r: Router) {
     loop {
-        let msg = match jobs.recv() {
+        let msg = match jobs.recv_timeout(SUPERVISE_INTERVAL) {
             Ok(m) => m,
-            Err(_) => break,
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                r.supervise();
+                r.flush_shed();
+                continue;
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
         };
+        r.supervise();
         r.drain_backchannels();
+        r.flush_shed();
         match msg {
             RouterMsg::Open { reply } => {
+                let shard = r.pick();
+                // Admission control: refuse new sessions rather than
+                // queue them once every live shard is at the policy's
+                // limit (`pick` is least-loaded, so the picked shard
+                // being full means all of them are).
+                let limit = r.overload.admit_sessions_per_shard;
+                if limit > 0 && r.open_count[shard] >= limit {
+                    r.admission_rejected += 1;
+                    let _ = reply.send(backpressure_json(
+                        "session admission limit reached",
+                        r.overload.retry_after_ms,
+                    ));
+                    continue;
+                }
                 let id = r.next_id;
                 r.next_id += 1;
-                let shard = r.pick();
                 // Commit the assignment only once the job is enqueued —
                 // a bounced open leaves no phantom session behind. A
                 // worker-side engine.open() failure after enqueue
@@ -1136,13 +1555,13 @@ fn router_loop(jobs: mpsc::Receiver<RouterMsg>, mut r: Router) {
                 // notification and is un-booked on the next drain.
                 let job = Job::Open { id, reply: Reply::new(reply) };
                 if let Some(actual) = r.route_client(shard, job) {
-                    r.assign.insert(id, actual);
+                    r.assign.insert(id, Booked { shard: actual, started: false });
                     r.open_count[actual] += 1;
                     r.rebalance();
                 }
             }
             RouterMsg::Feed { session, samples, enqueued, reply } => {
-                match r.assign.get(&session).copied() {
+                match r.assign.get(&session).map(|b| b.shard) {
                     None => {
                         let _ = reply.send(err_json(ErrCode::UnknownSession, "unknown session"));
                     }
@@ -1155,11 +1574,17 @@ fn router_loop(jobs: mpsc::Receiver<RouterMsg>, mut r: Router) {
                             enqueued,
                             reply: Reply::new(reply),
                         };
-                        r.route_client(shard, job);
+                        if r.route_client(shard, job).is_some() {
+                            // Audio is now in flight: from here on the
+                            // session is never a shedding candidate.
+                            if let Some(b) = r.assign.get_mut(&session) {
+                                b.started = true;
+                            }
+                        }
                     }
                 }
             }
-            RouterMsg::Finish { session, reply } => match r.assign.get(&session).copied() {
+            RouterMsg::Finish { session, reply } => match r.assign.get(&session).map(|b| b.shard) {
                 None => {
                     let _ = reply.send(err_json(ErrCode::UnknownSession, "unknown session"));
                 }
@@ -1177,7 +1602,7 @@ fn router_loop(jobs: mpsc::Receiver<RouterMsg>, mut r: Router) {
                     }
                 }
             },
-            RouterMsg::Resume { session, reply } => match r.assign.get(&session).copied() {
+            RouterMsg::Resume { session, reply } => match r.assign.get(&session).map(|b| b.shard) {
                 None => {
                     let _ = reply.send(err_json(
                         ErrCode::UnknownSession,
@@ -1192,7 +1617,7 @@ fn router_loop(jobs: mpsc::Receiver<RouterMsg>, mut r: Router) {
             RouterMsg::Stats { reply } => {
                 let workers = r.shards.len();
                 let snap = r.snapshot();
-                let _ = reply.send(stats_json(&snap, workers, r.recovered));
+                let _ = reply.send(stats_json(&snap, workers, &r));
             }
             RouterMsg::Config { reply } => {
                 let shard = r.first_live();
@@ -1207,18 +1632,18 @@ fn router_loop(jobs: mpsc::Receiver<RouterMsg>, mut r: Router) {
                 } else {
                     let before = r.recovered;
                     if !r.dead[shard] {
-                        let (ack_tx, ack_rx) = mpsc::channel();
-                        let mut orphans = Vec::new();
-                        if r.send(shard, Job::Die { ack: ack_tx }) {
-                            // Wait until the worker dropped its queue so
-                            // recovery sees a definitely-dead worker (a
-                            // recv error means it was already gone). The
-                            // ack hands back the feeds that were staged
-                            // un-acknowledged at the kill.
-                            if let Ok(staged) = ack_rx.recv() {
-                                orphans = staged;
-                            }
+                        // The drill *is* an injected panic: the worker
+                        // panics on the Die job, its catch_unwind
+                        // wrapper rescues the staged feeds and queued
+                        // jobs and posts the death report — the same
+                        // path a spontaneous panic takes. Wait for the
+                        // report (bounded), then run the standard
+                        // supervision step by hand.
+                        if r.send(shard, Job::Die) {
+                            r.shards[shard].liveness.wait_dead(KILL_REPORT_WAIT);
                         }
+                        let orphans =
+                            r.shards[shard].liveness.take_panic().unwrap_or_default();
                         r.mark_dead(shard);
                         r.recover(shard);
                         // Replay the rescued feeds on their sessions'
@@ -1253,10 +1678,12 @@ fn router_loop(jobs: mpsc::Receiver<RouterMsg>, mut r: Router) {
 /// built: the policy, the worker seeds, and its own channel/cache set.
 struct Init {
     shard_cfg: ShardConfig,
+    overload: OverloadPolicy,
     seeds: Vec<WorkerSeed>,
     tx0: mpsc::SyncSender<Job>,
     depth0: Arc<AtomicUsize>,
     cache0: Arc<Mutex<ShardSnapshot>>,
+    live0: Arc<WorkerLiveness>,
 }
 
 /// A finished session's transcript and serving metrics, as reported by
@@ -1273,6 +1700,11 @@ pub struct Finished {
     pub steps: usize,
     /// Mean lanes per fused step this session shared.
     pub batch_occupancy: f64,
+    /// Steps decoded at a reduced-quality degrade rung (0 = the whole
+    /// session ran at full quality).
+    pub degraded_steps: usize,
+    /// Degrade-rung changes observed while this session decoded.
+    pub degrade_transitions: usize,
 }
 
 /// A live session's progress, as reported by [`ShardPool::resume`] —
@@ -1351,15 +1783,20 @@ impl ShardPool {
                 let (tx0, rx0) = mpsc::sync_channel::<Job>(queue_depth);
                 let depth0 = Arc::new(AtomicUsize::new(0));
                 let cache0 = Arc::new(Mutex::new(ShardSnapshot::empty(0)));
+                let live0 = Arc::new(WorkerLiveness::new());
                 let _ = init_tx.send(Ok(Init {
                     shard_cfg,
+                    overload: engine.overload.clone(),
                     seeds,
                     tx0: tx0.clone(),
                     depth0: Arc::clone(&depth0),
                     cache0: Arc::clone(&cache0),
+                    live0: Arc::clone(&live0),
                 }));
                 drop(tx0);
-                Worker::new(0, engine, depth0, shard0_retire, shard0_ckpt, cache0).run(rx0);
+                let worker =
+                    Worker::new(0, engine, depth0, shard0_retire, shard0_ckpt, cache0);
+                run_worker(worker, rx0, live0);
             })
             .context("spawning shard 0")?;
         let init = match init_rx.recv() {
@@ -1372,28 +1809,31 @@ impl ShardPool {
             depth: init.depth0,
             cache: init.cache0,
             generation: Arc::new(AtomicU64::new(0)),
+            liveness: init.live0,
         }];
         for (i, seed) in init.seeds.into_iter().enumerate() {
             let shard = i + 1;
             let (tx, rx) = mpsc::sync_channel::<Job>(queue_depth);
             let depth = Arc::new(AtomicUsize::new(0));
             let cache = Arc::new(Mutex::new(ShardSnapshot::empty(shard)));
+            let liveness = Arc::new(WorkerLiveness::new());
             let worker_depth = Arc::clone(&depth);
             let worker_cache = Arc::clone(&cache);
+            let worker_live = Arc::clone(&liveness);
             let worker_retire = retire_tx.clone();
             let worker_ckpt = ckpt_tx.clone();
             std::thread::Builder::new()
                 .name(format!("asrpu-shard-{shard}"))
                 .spawn(move || {
-                    Worker::new(
+                    let worker = Worker::new(
                         shard,
                         seed.into_engine(),
                         worker_depth,
                         worker_retire,
                         worker_ckpt,
                         worker_cache,
-                    )
-                    .run(rx)
+                    );
+                    run_worker(worker, rx, worker_live)
                 })
                 .with_context(|| format!("spawning shard {shard}"))?;
             handles.push(ShardHandle {
@@ -1401,6 +1841,7 @@ impl ShardPool {
                 depth,
                 cache,
                 generation: Arc::new(AtomicU64::new(0)),
+                liveness,
             });
         }
         let workers = handles.len();
@@ -1413,6 +1854,11 @@ impl ShardPool {
             next_id: 1,
             rebalance_threshold: init.shard_cfg.rebalance_threshold,
             checkpoint_interval: init.shard_cfg.checkpoint_interval,
+            overload: init.overload,
+            shed_pending: Vec::new(),
+            shed: 0,
+            admission_rejected: 0,
+            panics_detected: 0,
             checkpoints: HashMap::new(),
             recovered: 0,
             retire_rx,
@@ -1523,6 +1969,11 @@ impl ShardPool {
             rtf: r.get("rtf").and_then(Json::as_f64).unwrap_or(0.0),
             steps: r.get("steps").and_then(Json::as_usize).unwrap_or(0),
             batch_occupancy: r.get("batch_occupancy").and_then(Json::as_f64).unwrap_or(0.0),
+            degraded_steps: r.get("degraded_steps").and_then(Json::as_usize).unwrap_or(0),
+            degrade_transitions: r
+                .get("degrade_transitions")
+                .and_then(Json::as_usize)
+                .unwrap_or(0),
         })
     }
 
@@ -1865,5 +2316,239 @@ mod tests {
             p.finish(id).unwrap();
         }
         p.shutdown();
+    }
+
+    /// A pool with an overload policy and optional fault hooks —
+    /// `panic_after`/`reply_delay` of 0 leave the hook off.
+    fn overload_pool(
+        workers: usize,
+        queue: usize,
+        overload: crate::config::OverloadPolicy,
+        panic_after: u64,
+        reply_delay: u64,
+    ) -> ShardPool {
+        ShardPool::start(
+            move || {
+                let mut b = Engine::builder()
+                    .native(TdsModel::random(ModelConfig::tiny_tds(), 5))
+                    .batch(BatchConfig::default())
+                    .shards(crate::config::ShardConfig {
+                        workers,
+                        rebalance_threshold: 0,
+                        checkpoint_interval: 1,
+                    })
+                    .overload(overload.clone());
+                if panic_after > 0 {
+                    b = b.fault_panic_after_steps(panic_after);
+                }
+                if reply_delay > 0 {
+                    b = b.fault_reply_delay_ms(reply_delay);
+                }
+                Ok(b.build()?)
+            },
+            queue,
+        )
+        .unwrap()
+    }
+
+    /// Open via the raw router channel, returning the unparsed reply —
+    /// the only way a test can see a rejection's `retry_after_ms`.
+    fn raw_open(p: &ShardPool) -> Json {
+        let (tx, rx) = mpsc::channel();
+        p.sender().send(RouterMsg::Open { reply: tx }).unwrap();
+        rx.recv().unwrap()
+    }
+
+    #[test]
+    fn admission_limit_rejects_opens_with_retry_hint() {
+        let p = overload_pool(
+            1,
+            64,
+            crate::config::OverloadPolicy {
+                admit_sessions_per_shard: 1,
+                retry_after_ms: 75,
+                ..Default::default()
+            },
+            0,
+            0,
+        );
+        let a = p.open().unwrap();
+        // Over the limit: a structured backpressure rejection carrying
+        // the policy's retry hint, not a hang and not a plain error.
+        let resp = raw_open(&p);
+        let e = resp.get("error").expect("over-limit open must be rejected");
+        assert_eq!(e.get("code").and_then(Json::as_str), Some("backpressure"));
+        assert_eq!(e.get("retry_after_ms").and_then(Json::as_f64), Some(75.0));
+        let err = format!("{:#}", p.open().unwrap_err());
+        assert!(err.contains("backpressure"), "{err}");
+        let stats = p.stats().unwrap();
+        assert_eq!(stats.get("rejected_admission").unwrap().as_f64(), Some(2.0));
+        // Admission recovers the moment a session closes.
+        p.finish(a).unwrap();
+        let b = p.open().unwrap();
+        p.finish(b).unwrap();
+        p.shutdown();
+    }
+
+    #[test]
+    fn saturated_shard_sheds_never_started_sessions() {
+        // Queue depth 1 plus a 400 ms reply delay wedges the single
+        // worker inside one flush; jobs sent meanwhile saturate its
+        // queue deterministically.
+        let p = overload_pool(
+            1,
+            1,
+            crate::config::OverloadPolicy {
+                retry_after_ms: 30,
+                shed_never_started: true,
+                ..Default::default()
+            },
+            0,
+            400,
+        );
+        let a = p.open().unwrap();
+        let audio = utterance(60);
+        // The lone open session stages and flushes immediately; the
+        // reply-delay hook now holds the worker for 400 ms.
+        let rx_a1 = p.feed_async(a, &audio).unwrap();
+        std::thread::sleep(Duration::from_millis(100));
+        // B books onto the saturated shard (its Open occupies the one
+        // queue slot) and never feeds.
+        let (tx, rx_open) = mpsc::channel();
+        p.sender().send(RouterMsg::Open { reply: tx }).unwrap();
+        std::thread::sleep(Duration::from_millis(50));
+        // This feed finds the queue full: the policy sheds the oldest
+        // never-started session (B) and bounces the feed with the hint.
+        let rx_a2 = p.feed_async(a, &utterance(61)).unwrap();
+        let bounce = rx_a2.recv().unwrap();
+        let e = bounce.get("error").expect("feed into a full queue must bounce");
+        assert_eq!(e.get("code").and_then(Json::as_str), Some("backpressure"));
+        assert_eq!(e.get("retry_after_ms").and_then(Json::as_f64), Some(30.0));
+        // The first feed still answers normally once the worker wakes,
+        // and the worker-side open of B was processed (then shed).
+        assert!(ShardPool::parse_feed(rx_a1.recv().unwrap()).unwrap().0 > 0);
+        let b = rx_open.recv().unwrap().get("session").and_then(Json::as_f64).unwrap() as u64;
+        // Router-side B is gone: its owner sees unknown_session.
+        let err = format!("{:#}", p.feed(b, &audio).unwrap_err());
+        assert!(err.contains("unknown_session"), "{err}");
+        let stats = p.stats().unwrap();
+        assert_eq!(stats.get("shed").unwrap().as_f64(), Some(1.0), "{stats:?}");
+        // The shed notice reaches the worker once its queue drains.
+        let mut worker_shed = 0.0;
+        for _ in 0..100 {
+            worker_shed = sum_over_shards(&p.stats().unwrap(), "shed");
+            if worker_shed == 1.0 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        assert_eq!(worker_shed, 1.0);
+        // The started session was never shed and finishes normally.
+        p.finish(a).unwrap();
+        p.shutdown();
+    }
+
+    #[test]
+    fn supervisor_recovers_spontaneous_worker_panic_and_replays_feeds() {
+        // Every worker engine panics at its third scoring attempt. Two
+        // acked (and checkpointed) steps run on shard 0; the third feed
+        // kills it mid-flush — *spontaneously*, with no Kill request in
+        // flight. The supervisor must notice on its own, re-adopt the
+        // session from its checkpoint and replay the staged feed so the
+        // in-flight client never sees a bounce.
+        let p = overload_pool(2, 64, crate::config::OverloadPolicy::default(), 2, 0);
+        let a = p.open().unwrap(); // shard 0
+        let b = p.open().unwrap(); // shard 1
+        p.finish(b).unwrap(); // keep the survivor idle (fresh fault budget)
+        let need = 1520; // samples_per_step(tiny_tds)
+        let step = 1280; // step_len
+        assert_eq!(p.feed(a, &vec![0.0; need]).unwrap().0, 1);
+        assert_eq!(p.feed(a, &vec![0.0; step]).unwrap().0, 1);
+        // Third step: the worker thread dies holding this feed staged.
+        let rx = p.feed_async(a, &vec![0.0; step]).unwrap();
+        let replayed = ShardPool::parse_feed(rx.recv().unwrap());
+        assert!(replayed.is_ok(), "replayed feed bounced: {replayed:?}");
+        assert_eq!(replayed.unwrap().0, 1, "exactly the lost step replays");
+        let res = p.resume(a).unwrap();
+        assert_eq!(res.steps, 3, "recovery restored both acked steps");
+        let stats = p.stats().unwrap();
+        assert_eq!(stats.get("responding").unwrap().as_f64(), Some(1.0));
+        assert_eq!(stats.get("recovered").unwrap().as_f64(), Some(1.0));
+        assert_eq!(stats.get("panics_detected").unwrap().as_f64(), Some(1.0));
+        assert!(sum_over_shards(&stats, "heartbeats") >= 1.0, "{stats:?}");
+        // The recovered transcript is bit-identical to an undisturbed
+        // single-engine decode of the same audio.
+        let reference = reference_engine();
+        let (t_ref, _) = reference.decode_utterance(&vec![0.0; need + 2 * step]).unwrap();
+        let done = p.finish(a).unwrap();
+        assert_eq!(done.text, t_ref.text);
+        assert_eq!(done.score, t_ref.score as f64);
+        p.shutdown();
+    }
+
+    #[test]
+    fn degrade_ladder_is_deterministic_and_restores_full_quality() {
+        let base = crate::config::DecoderConfig::default();
+        let overload = crate::config::OverloadPolicy {
+            levels: vec![crate::config::DegradeLevel {
+                enter_backlog_steps: 3,
+                beam: base.beam / 2.0,
+                max_hyps: (base.max_hyps / 2).max(1),
+                max_batch: 1,
+            }],
+            ..Default::default()
+        };
+        let mut rng = Rng::new(90);
+        let burst = Synthesizer::default().render(&[1, 4, 3, 6], &mut rng).samples;
+        assert!(burst.len() >= 1520 + 2 * 1280, "burst must cross the 3-step threshold");
+        let calm = utterance(91);
+        let run = |overload: crate::config::OverloadPolicy| {
+            let p = overload_pool(1, 64, overload, 0, 0);
+            // One oversized feed: the whole backlog is ready at a single
+            // flush, crossing the ladder's threshold.
+            let id = p.open().unwrap();
+            p.feed(id, &burst).unwrap();
+            let stressed = p.finish(id).unwrap();
+            // After the drain, a second session fed gently (≤ 2 ready
+            // steps per flush) must see full quality.
+            let id2 = p.open().unwrap();
+            for chunk in calm.chunks(2560) {
+                p.feed(id2, chunk).unwrap();
+            }
+            let calm_done = p.finish(id2).unwrap();
+            let stats = p.stats().unwrap();
+            p.shutdown();
+            (stressed, calm_done, stats)
+        };
+        let (s1, c1, stats) = run(overload.clone());
+        let (s2, c2, _) = run(overload);
+        // Degradation engaged, was recorded per session, and is a
+        // deterministic function of the admitted trace: two identical
+        // runs agree bit for bit.
+        assert!(s1.degraded_steps > 0, "{s1:?}");
+        assert!(s1.degrade_transitions >= 1, "{s1:?}");
+        assert_eq!(s1.text, s2.text);
+        assert_eq!(s1.score, s2.score);
+        assert_eq!(s1.degraded_steps, s2.degraded_steps);
+        assert_eq!(s1.degrade_transitions, s2.degrade_transitions);
+        assert!(sum_over_shards(&stats, "degraded_batches") >= 1.0, "{stats:?}");
+        assert_eq!(
+            sum_over_shards(&stats, "degrade_level"),
+            0.0,
+            "full quality restored after drain: {stats:?}"
+        );
+        // The gently-fed session never degraded and matches an engine
+        // that has no overload policy at all, bit for bit.
+        assert_eq!(c1.degraded_steps, 0, "{c1:?}");
+        let reference = reference_engine();
+        let mut s = reference.open(false).unwrap();
+        for chunk in calm.chunks(2560) {
+            reference.feed(&mut s, chunk).unwrap();
+        }
+        let t_ref = reference.finish(&mut s).unwrap();
+        assert_eq!(c1.text, t_ref.text);
+        assert_eq!(c1.score, t_ref.score as f64);
+        assert_eq!(c1.text, c2.text);
+        assert_eq!(c1.score, c2.score);
     }
 }

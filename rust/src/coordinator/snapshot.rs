@@ -47,7 +47,9 @@ use super::engine::SessionMetrics;
 
 /// Snapshot format version; bumped on any layout change so a newer
 /// server refuses stale checkpoints instead of misparsing them.
-pub const SNAPSHOT_VERSION: u32 = 1;
+/// Version 2 extended `meta.metrics` with the graceful-degradation
+/// counters (degraded steps, rung transitions, last rung in effect).
+pub const SNAPSHOT_VERSION: u32 = 2;
 
 const MAGIC: &[u8; 8] = b"ASRPUSNP";
 
@@ -116,7 +118,7 @@ impl SessionSnapshot {
         tf.push(str_tensor("meta.backend", &self.backend));
         tf.push(str_tensor("meta.model", &self.model));
         let m = &self.metrics;
-        let mut counters = Vec::with_capacity(16);
+        let mut counters = Vec::with_capacity(22);
         push_u64(&mut counters, m.steps as u64);
         push_u64(&mut counters, m.batched_steps as u64);
         push_u64(&mut counters, m.batch_lanes as u64);
@@ -125,6 +127,9 @@ impl SessionSnapshot {
         push_f64(&mut counters, m.compute_s);
         push_f64(&mut counters, m.am_s);
         push_f64(&mut counters, m.search_s);
+        push_u64(&mut counters, m.degraded_steps as u64);
+        push_u64(&mut counters, m.degrade_transitions as u64);
+        push_u64(&mut counters, m.degrade_level as u64);
         tf.push(Tensor::u32("meta.metrics", vec![counters.len()], counters));
         tf.push(Tensor::f32(
             "audio.buffered",
@@ -179,8 +184,8 @@ impl SessionSnapshot {
         let model = read_str("meta.model")?;
         let counters = tf.require("meta.metrics")?.as_u32()?;
         ensure!(
-            counters.len() == 16,
-            "snapshot metrics: expected 16 words, got {}",
+            counters.len() == 22,
+            "snapshot metrics: expected 22 words, got {}",
             counters.len()
         );
         let word = |i: usize| u64_from_words(counters[2 * i], counters[2 * i + 1]);
@@ -193,6 +198,9 @@ impl SessionSnapshot {
             compute_s: f64::from_bits(word(5)),
             am_s: f64::from_bits(word(6)),
             search_s: f64::from_bits(word(7)),
+            degraded_steps: word(8) as usize,
+            degrade_transitions: word(9) as usize,
+            degrade_level: word(10) as usize,
         };
         let buffered = tf.require("audio.buffered")?.as_f32()?.to_vec();
         let decoder = DecoderSnapshot::read_tensors(&tf)?;
@@ -247,6 +255,9 @@ mod tests {
                 batched_steps: 5,
                 batch_lanes: 9,
                 snapshots_taken: 3,
+                degraded_steps: 2,
+                degrade_transitions: 4,
+                degrade_level: 1,
             },
             am,
             decoder: crate::decoder::DecoderSnapshot::capture(&state),
@@ -265,6 +276,9 @@ mod tests {
         assert_eq!(back.metrics.batched_steps, 5);
         assert_eq!(back.metrics.batch_lanes, 9);
         assert_eq!(back.metrics.snapshots_taken, 3);
+        assert_eq!(back.metrics.degraded_steps, 2);
+        assert_eq!(back.metrics.degrade_transitions, 4);
+        assert_eq!(back.metrics.degrade_level, 1);
         assert_eq!(back.metrics.audio_s, 0.56);
         assert_eq!(back.metrics.compute_s, 0.01);
         assert_eq!(back.am.get("conv0").unwrap(), snap.am.get("conv0").unwrap());

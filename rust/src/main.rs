@@ -10,7 +10,14 @@
 //!             across N device workers over the shared model,
 //!             `--rebalance K` sets the live-migration imbalance
 //!             threshold, `--checkpoint K` the recovery-checkpoint
-//!             cadence in decoding steps (0 = off)
+//!             cadence in decoding steps (0 = off); overload policy:
+//!             `--admit N` caps open sessions per shard (reject with
+//!             backpressure + retry hint), `--retry-after MS` sets the
+//!             hint, `--shed 1` sheds the oldest never-started session
+//!             off a saturated shard, `--route-retries N` /
+//!             `--route-backoff MS` retry full shard queues before
+//!             bouncing, `--degrade B` installs the two-rung reference
+//!             degradation ladder entered at backlog B decode steps
 //!   simulate  run the accelerator simulator for N decoding steps;
 //!             `--batch B --shards S` additionally reports the fused
 //!             step sharded across S worker devices
@@ -29,7 +36,8 @@ use anyhow::{bail, Result};
 use asrpu::accel::{simulate_step, simulate_step_sharded, HypWorkload, SimMode};
 use asrpu::am::TdsModel;
 use asrpu::config::{
-    artifacts_dir, AccelConfig, BatchConfig, DecoderConfig, ModelConfig, ShardConfig,
+    artifacts_dir, AccelConfig, BatchConfig, DecoderConfig, ModelConfig, OverloadPolicy,
+    ShardConfig,
 };
 use asrpu::coordinator::{Engine, EngineBuilder, Server};
 use asrpu::power::ChipBudget;
@@ -43,6 +51,7 @@ use asrpu::util::table::Table;
 const VALUE_KEYS: &[&str] = &[
     "n", "seed", "beam", "port", "pes", "mac", "freq-mhz", "backend", "mode", "steps",
     "queue", "batch", "batch-wait", "workers", "rebalance", "checkpoint", "shards",
+    "admit", "retry-after", "shed", "route-retries", "route-backoff", "degrade",
 ];
 
 fn main() {
@@ -159,17 +168,45 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
         checkpoint_interval: args
             .usize_or("checkpoint", shard_default.checkpoint_interval)?,
     };
+    let overload_default = OverloadPolicy::default();
+    let degrade_base = args.usize_or("degrade", 0)?;
+    let overload = OverloadPolicy {
+        admit_sessions_per_shard: args.usize_or("admit", 0)?,
+        retry_after_ms: args.usize_or("retry-after", overload_default.retry_after_ms as usize)?
+            as u64,
+        shed_never_started: args.usize_or("shed", 0)? != 0,
+        route_retries: args.usize_or("route-retries", 0)? as u32,
+        route_backoff_ms: args
+            .usize_or("route-backoff", overload_default.route_backoff_ms as usize)?
+            as u64,
+        // `--degrade B` installs the reference two-rung ladder scaled to
+        // the configured beam and batch geometry; 0 = full quality only.
+        levels: if degrade_base == 0 {
+            Vec::new()
+        } else {
+            let dec = DecoderConfig {
+                beam: args.f64_or("beam", DecoderConfig::default().beam as f64)? as f32,
+                ..DecoderConfig::default()
+            };
+            OverloadPolicy::reference_ladder(degrade_base, &dec, &batch).levels
+        },
+    };
     // Fail fast on the CLI thread; the builder re-validates on the
     // device thread.
     batch.validate()?;
     shards.validate()?;
+    overload.validate()?;
     let server = Server::start(
         &format!("127.0.0.1:{port}"),
         move || {
             // Rebuild the engine on the device thread (PJRT not Send).
             let argv = vec!["serve".to_string(), "--backend".into(), backend.clone()];
             let args = cli::parse(&argv, VALUE_KEYS)?;
-            Ok(engine_builder(&args)?.batch(batch).shards(shards).build()?)
+            Ok(engine_builder(&args)?
+                .batch(batch)
+                .shards(shards)
+                .overload(overload.clone())
+                .build()?)
         },
         queue,
     )?;

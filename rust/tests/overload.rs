@@ -1,0 +1,253 @@
+//! Overload-resilience conformance over a real TCP socket: SLO-aware
+//! admission control (structured `backpressure` with a `retry_after_ms`
+//! hint), deterministic graceful degradation that restores bit-identical
+//! full quality once pressure drains, and liveness supervision — a
+//! worker dying *spontaneously* (injected engine panic, no kill request
+//! anywhere) is detected by the router's supervisor, its sessions are
+//! re-adopted from checkpoints, and its staged feeds replay so the
+//! in-flight client never sees a bounce.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use asrpu::am::TdsModel;
+use asrpu::config::{BatchConfig, DecoderConfig, DegradeLevel, ModelConfig, OverloadPolicy};
+use asrpu::coordinator::{Engine, Server};
+use asrpu::util::json::Json;
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: &str) -> Client {
+        let stream = TcpStream::connect(addr).unwrap();
+        Client { reader: BufReader::new(stream.try_clone().unwrap()), writer: stream }
+    }
+
+    fn call(&mut self, line: &str) -> Json {
+        writeln!(self.writer, "{line}").unwrap();
+        let mut resp = String::new();
+        self.reader.read_line(&mut resp).unwrap();
+        Json::parse(resp.trim()).unwrap()
+    }
+
+    fn open(&mut self) -> Json {
+        self.call(r#"{"op":"open"}"#)
+    }
+
+    fn feed(&mut self, session: u64, samples: &str) -> Json {
+        self.call(&format!(r#"{{"op":"feed","session":{session},"samples":[{samples}]}}"#))
+    }
+
+    fn finish(&mut self, session: u64) -> Json {
+        self.call(&format!(r#"{{"op":"finish","session":{session}}}"#))
+    }
+}
+
+fn code_of(r: &Json) -> Option<String> {
+    r.get("error")
+        .and_then(|e| e.get("code"))
+        .and_then(Json::as_str)
+        .map(str::to_string)
+}
+
+fn session_of(r: &Json) -> u64 {
+    r.get("session").unwrap().as_f64().unwrap() as u64
+}
+
+/// A deterministic non-silent waveform serialized exactly as it will be
+/// parsed — the reference decode reuses the parsed values, so on-wire
+/// float round-trips cannot break parity assertions.
+fn waveform(n: usize) -> (String, Vec<f32>) {
+    let rendered: Vec<String> =
+        (0..n).map(|i| format!("{:.4}", (i as f32 * 0.017).sin() * 0.25)).collect();
+    let values: Vec<f32> = rendered.iter().map(|s| s.parse().unwrap()).collect();
+    (rendered.join(","), values)
+}
+
+fn server_with(
+    workers: usize,
+    overload: OverloadPolicy,
+    panic_after: u64,
+) -> Server {
+    Server::start(
+        "127.0.0.1:0",
+        move || {
+            let mut b = Engine::builder()
+                .native(TdsModel::random(ModelConfig::tiny_tds(), 5))
+                .batch(BatchConfig::default())
+                .shards(asrpu::config::ShardConfig {
+                    workers,
+                    rebalance_threshold: 0,
+                    checkpoint_interval: 1,
+                })
+                .overload(overload.clone());
+            if panic_after > 0 {
+                b = b.fault_panic_after_steps(panic_after);
+            }
+            Ok(b.build()?)
+        },
+        64,
+    )
+    .unwrap()
+}
+
+fn reference_engine() -> Engine {
+    Engine::builder().native(TdsModel::random(ModelConfig::tiny_tds(), 5)).build().unwrap()
+}
+
+#[test]
+fn admission_limit_bounces_opens_with_retry_hint_on_the_wire() {
+    let server = server_with(
+        1,
+        OverloadPolicy {
+            admit_sessions_per_shard: 1,
+            retry_after_ms: 40,
+            ..Default::default()
+        },
+        0,
+    );
+    let mut c = Client::connect(&server.addr);
+    let first = c.open();
+    let session = session_of(&first);
+    // Past the admit threshold: a structured rejection carrying the
+    // policy's retry hint — the SLO-aware contract a client backs off
+    // on, not a hang and not a dropped connection.
+    let rejected = c.open();
+    assert_eq!(code_of(&rejected).as_deref(), Some("backpressure"), "{rejected:?}");
+    assert_eq!(
+        rejected.get("error").unwrap().get("retry_after_ms").and_then(Json::as_f64),
+        Some(40.0),
+        "{rejected:?}"
+    );
+    let stats = c.call(r#"{"op":"stats"}"#);
+    assert!(
+        stats.get("rejected_admission").unwrap().as_f64().unwrap() >= 1.0,
+        "{stats:?}"
+    );
+    // Admission recovers the moment a session closes.
+    assert!(c.finish(session).get("text").is_some());
+    let reopened = c.open();
+    assert!(reopened.get("session").is_some(), "{reopened:?}");
+    // The policy is introspectable.
+    let cfg = c.call(r#"{"op":"config"}"#);
+    assert_eq!(cfg.get("admit_sessions_per_shard").unwrap().as_f64(), Some(1.0));
+    assert_eq!(cfg.get("retry_after_ms").unwrap().as_f64(), Some(40.0));
+    server.shutdown();
+}
+
+#[test]
+fn degradation_is_deterministic_and_drains_to_bit_identical_full_quality() {
+    let base = DecoderConfig::default();
+    let ladder = OverloadPolicy {
+        levels: vec![DegradeLevel {
+            enter_backlog_steps: 3,
+            beam: base.beam / 2.0,
+            max_hyps: (base.max_hyps / 2).max(1),
+            max_batch: 1,
+        }],
+        ..Default::default()
+    };
+    // 8000 samples arrive in one request: (8000 − 1520) / 1280 + 1 = 6
+    // ready steps at the flush, past the 3-step rung.
+    let (burst, _) = waveform(8000);
+    let (calm, calm_values) = waveform(4080);
+    let run = || {
+        let server = server_with(1, ladder.clone(), 0);
+        let mut c = Client::connect(&server.addr);
+        let s1 = session_of(&c.open());
+        let fed = c.feed(s1, &burst);
+        assert_eq!(fed.get("steps").unwrap().as_f64(), Some(6.0), "{fed:?}");
+        let stressed = c.finish(s1);
+        // After the drain, a gently-fed session (≤ 2 ready steps per
+        // request) must see the configured decoder untouched.
+        let s2 = session_of(&c.open());
+        for chunk in calm.split(',').collect::<Vec<_>>().chunks(2560) {
+            c.feed(s2, &chunk.join(","));
+        }
+        let calm_done = c.finish(s2);
+        let stats = c.call(r#"{"op":"stats"}"#);
+        server.shutdown();
+        (stressed, calm_done, stats)
+    };
+    let (s1, c1, stats) = run();
+    let (s2, c2, _) = run();
+    // The burst really degraded, the per-session accounting says so on
+    // the wire, and two identical admitted traces decode bit for bit
+    // identically — degradation is deterministic, not best-effort.
+    assert!(s1.get("degraded_steps").unwrap().as_f64().unwrap() > 0.0, "{s1:?}");
+    assert!(s1.get("degrade_transitions").unwrap().as_f64().unwrap() >= 1.0, "{s1:?}");
+    assert_eq!(s1.get("text").unwrap().as_str(), s2.get("text").unwrap().as_str());
+    assert_eq!(s1.get("score").unwrap().as_f64(), s2.get("score").unwrap().as_f64());
+    assert_eq!(
+        s1.get("degraded_steps").unwrap().as_f64(),
+        s2.get("degraded_steps").unwrap().as_f64()
+    );
+    // Full quality is *restored*, bit-identically: the calm session
+    // matches an engine that has no overload policy at all.
+    assert_eq!(c1.get("degraded_steps").unwrap().as_f64(), Some(0.0), "{c1:?}");
+    let reference = reference_engine();
+    let (t_ref, _) = reference.decode_utterance(&calm_values).unwrap();
+    assert_eq!(c1.get("text").unwrap().as_str(), Some(t_ref.text.as_str()), "{c1:?}");
+    assert_eq!(c1.get("score").unwrap().as_f64(), Some(t_ref.score as f64));
+    assert_eq!(c1.get("text").unwrap().as_str(), c2.get("text").unwrap().as_str());
+    // The ladder shows up in stats and has fully stepped back down.
+    let shards = stats.get("shards").unwrap().as_arr().unwrap();
+    assert!(
+        shards[0].get("degraded_batches").unwrap().as_f64().unwrap() >= 1.0,
+        "{stats:?}"
+    );
+    assert_eq!(shards[0].get("degrade_level").unwrap().as_f64(), Some(0.0), "{stats:?}");
+}
+
+#[test]
+fn spontaneous_worker_death_recovers_with_zero_acked_feed_loss_on_the_wire() {
+    // Every worker engine is armed to panic at its 4th scoring attempt.
+    // Three acked (and checkpointed) steps run on shard 0; the fourth
+    // feed kills the worker thread mid-flush — spontaneously, with no
+    // kill request anywhere in the system. The supervisor must detect
+    // the death on its own, re-adopt the session from its checkpoint
+    // onto the survivor and replay the staged feed, so the client
+    // blocked on that very request gets its normal answer.
+    let (all, all_values) = waveform(1520 + 3 * 1280);
+    let parts: Vec<&str> = all.split(',').collect();
+    let chunks = [
+        parts[..1520].join(","),
+        parts[1520..2800].join(","),
+        parts[2800..4080].join(","),
+        parts[4080..].join(","),
+    ];
+    let server = server_with(2, OverloadPolicy::default(), 3);
+    let mut c = Client::connect(&server.addr);
+    let a = session_of(&c.open()); // shard 0
+    let b = session_of(&c.open()); // shard 1: keep the survivor's fault budget fresh
+    assert!(c.finish(b).get("text").is_some());
+    for chunk in &chunks[..3] {
+        let fed = c.feed(a, chunk);
+        assert_eq!(fed.get("steps").unwrap().as_f64(), Some(1.0), "{fed:?}");
+    }
+    // The killer feed: acked only after detection + recovery + replay.
+    let replayed = c.feed(a, &chunks[3]);
+    assert_eq!(
+        replayed.get("steps").unwrap().as_f64(),
+        Some(1.0),
+        "staged feed must replay, not bounce: {replayed:?}"
+    );
+    let res = c.call(&format!(r#"{{"op":"resume","session":{a}}}"#));
+    assert_eq!(res.get("steps").unwrap().as_f64(), Some(4.0), "{res:?}");
+    let stats = c.call(r#"{"op":"stats"}"#);
+    assert_eq!(stats.get("workers").unwrap().as_f64(), Some(2.0));
+    assert_eq!(stats.get("responding").unwrap().as_f64(), Some(1.0), "{stats:?}");
+    assert_eq!(stats.get("recovered").unwrap().as_f64(), Some(1.0), "{stats:?}");
+    assert_eq!(stats.get("panics_detected").unwrap().as_f64(), Some(1.0), "{stats:?}");
+    // Zero acknowledged-feed loss, bit for bit: the transcript equals an
+    // undisturbed single-engine decode of everything that was acked.
+    let reference = reference_engine();
+    let (t_ref, _) = reference.decode_utterance(&all_values).unwrap();
+    let done = c.finish(a);
+    assert_eq!(done.get("text").unwrap().as_str(), Some(t_ref.text.as_str()), "{done:?}");
+    assert_eq!(done.get("score").unwrap().as_f64(), Some(t_ref.score as f64));
+    server.shutdown();
+}

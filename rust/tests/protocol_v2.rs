@@ -128,6 +128,12 @@ fn config_introspection_conformance() {
         "rebalance_threshold",
         "beam",
         "max_hyps",
+        "admit_sessions_per_shard",
+        "retry_after_ms",
+        "shed_never_started",
+        "route_retries",
+        "route_backoff_ms",
+        "degrade_levels",
     ] {
         assert!(
             cfg.get(key).and_then(Json::as_f64).is_some(),
@@ -142,6 +148,34 @@ fn config_introspection_conformance() {
     }
     assert_eq!(cfg.get("proto").unwrap().as_f64(), Some(PROTO_VERSION as f64));
     assert!(cfg.get("workers").unwrap().as_f64().unwrap() >= 1.0);
+    server.shutdown();
+}
+
+#[test]
+fn stats_reports_overload_and_liveness_counters() {
+    // The v2 stats payload carries the overload/liveness observability
+    // fields even when the policy is fully off (they read zero) — a
+    // dashboard can rely on the keys unconditionally.
+    let server = start_server(64);
+    let mut c = Client::connect(&server.addr);
+    let stats = c.call(r#"{"op":"stats"}"#);
+    for key in ["rejected_admission", "shed", "panics_detected"] {
+        assert_eq!(
+            stats.get(key).and_then(Json::as_f64),
+            Some(0.0),
+            "stats missing idle counter '{key}': {stats:?}"
+        );
+    }
+    let shards = stats.get("shards").unwrap().as_arr().unwrap();
+    for shard in shards {
+        for key in ["degrade_level", "degraded_batches", "shed", "heartbeats"] {
+            assert!(
+                shard.get(key).and_then(Json::as_f64).is_some(),
+                "per-shard stats missing numeric '{key}': {stats:?}"
+            );
+        }
+        assert_eq!(shard.get("degrade_level").unwrap().as_f64(), Some(0.0));
+    }
     server.shutdown();
 }
 
