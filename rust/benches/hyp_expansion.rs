@@ -1,11 +1,80 @@
 //! Bench: hypothesis expansion + prune — the decoder's per-frame work
 //! (the paper's hypothesis-expansion kernel + hypothesis unit, §4.3).
-use asrpu::bench::Bench;
-use asrpu::config::DecoderConfig;
+//!
+//! Two tiers. The micro tier steps a lone `BeamDecoder` frame at two
+//! beam settings (print-only). The engine tier drives fused
+//! `Engine::step_batch` steps over B ∈ {1, 4, 16} lanes, with lattice
+//! recording off and on (`EngineBuilder::nbest`) — the lane-major
+//! expansion path end to end, lattice overhead measured on identical
+//! audio. It writes schema-stable rows
+//! `{kernel, batch, arcs_per_step, gmacs}` to `BENCH_hyp.json` under
+//! `asrpu::bench::bench_dir()` (`$ASRPU_BENCH_DIR`, default repo
+//! root): `arcs_per_step` is the *measured* per-step candidate-arc
+//! count from the decoder's `PruneStats` (the same counters that feed
+//! the `accel::HypUnit` model), `gmacs` the acoustic-model MAC
+//! throughput sustained while decoding.
+
+use asrpu::am::TdsModel;
+use asrpu::bench::{bench_dir, Bench};
+use asrpu::config::{DecoderConfig, ModelConfig, PipelineDesc};
+use asrpu::coordinator::{Engine, Session};
 use asrpu::decoder::BeamDecoder;
 use asrpu::lm::NgramLm;
 use asrpu::synth::spec;
+use asrpu::util::json::{Json, JsonObj};
 use asrpu::util::rng::Rng;
+
+const BATCHES: [usize; 3] = [1, 4, 16];
+const SAMPLES_PER_STEP: usize = 1280;
+const WINDOW: usize = 1520;
+
+/// One measured engine-tier configuration.
+struct Row {
+    kernel: &'static str,
+    batch: usize,
+    arcs_per_step: f64,
+    gmacs: f64,
+}
+
+/// Bench fused stepping on `engine`: prime every lane, then time
+/// "push one frame per lane + step_batch". Returns the measured row.
+fn bench_engine(b: &mut Bench, kernel: &'static str, engine: &Engine, batch: usize) -> Row {
+    let mut rng = Rng::new(29 + batch as u64);
+    let chunks: Vec<Vec<f32>> = (0..batch)
+        .map(|_| (0..SAMPLES_PER_STEP).map(|_| rng.uniform(-0.3, 0.3)).collect())
+        .collect();
+    let mut sessions: Vec<Session> =
+        (0..batch).map(|_| engine.open(false).unwrap()).collect();
+    // Pre-fill part of the first (wider) feature window so each
+    // benched push of one hop's worth of samples readies exactly one
+    // frame per lane.
+    for (s, c) in sessions.iter_mut().zip(&chunks) {
+        engine.push_audio(s, &c[..WINDOW - SAMPLES_PER_STEP]);
+    }
+    let secs = b
+        .run(&format!("engine/{kernel}/B{batch}"), || {
+            for (s, c) in sessions.iter_mut().zip(&chunks) {
+                engine.push_audio(s, c);
+            }
+            let mut refs: Vec<&mut Session> = sessions.iter_mut().collect();
+            engine.step_batch(&mut refs).unwrap();
+            sessions.iter().map(|s| s.decode.hyps.len()).sum::<usize>()
+        })
+        .median
+        .as_secs_f64();
+    let (mut arcs, mut steps) = (0u64, 0u64);
+    for s in &sessions {
+        arcs += s.decode.stats.generated;
+        steps += s.decode.frames as u64;
+    }
+    let macs = PipelineDesc::for_model(&ModelConfig::tiny_tds()).macs_per_step();
+    Row {
+        kernel,
+        batch,
+        arcs_per_step: arcs as f64 / steps.max(1) as f64,
+        gmacs: macs as f64 * batch as f64 / secs / 1e9,
+    }
+}
 
 fn main() {
     let mut b = Bench::default();
@@ -38,5 +107,49 @@ fn main() {
             dec.step(&mut s, &frames[0]);
             s.hyps.len()
         });
+    }
+
+    // Engine tier: the lane-major batched expansion path, lattice
+    // recording off vs on, identical model seed and audio.
+    let plain = Engine::builder()
+        .native(TdsModel::random(ModelConfig::tiny_tds(), 11))
+        .build()
+        .unwrap();
+    let latt = Engine::builder()
+        .native(TdsModel::random(ModelConfig::tiny_tds(), 11))
+        .nbest(4)
+        .build()
+        .unwrap();
+    let mut rows = Vec::new();
+    for batch in BATCHES {
+        rows.push(bench_engine(&mut b, "step_batch", &plain, batch));
+        rows.push(bench_engine(&mut b, "step_batch_lattice", &latt, batch));
+    }
+
+    println!("\nmeasured expansion workload and sustained AM throughput:");
+    for r in &rows {
+        println!(
+            "  {:<18} B={:<3} {:>8.1} arcs/step  {:>7.3} GMAC/s",
+            r.kernel, r.batch, r.arcs_per_step, r.gmacs
+        );
+    }
+
+    let mut json_rows = Vec::new();
+    for r in &rows {
+        let mut o = JsonObj::new();
+        o.insert("kernel", Json::Str(r.kernel.to_string()));
+        o.insert("batch", Json::Num(r.batch as f64));
+        o.insert("arcs_per_step", Json::Num(r.arcs_per_step));
+        o.insert("gmacs", Json::Num(r.gmacs));
+        json_rows.push(Json::Obj(o));
+    }
+    let mut doc = JsonObj::new();
+    doc.insert("bench", Json::Str("hyp_expansion".into()));
+    doc.insert("model", Json::Str("tiny_tds".into()));
+    doc.insert("rows", Json::Arr(json_rows));
+    let path = bench_dir().join("BENCH_hyp.json");
+    match std::fs::write(&path, Json::Obj(doc).to_pretty()) {
+        Ok(()) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
     }
 }

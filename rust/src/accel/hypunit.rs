@@ -5,7 +5,7 @@
 //! sort over a small SRAM), overlapped with expansion-thread execution.
 
 use crate::config::AccelConfig;
-use crate::decoder::PruneStats;
+use crate::decoder::{ExpandStats, PruneStats};
 
 use super::kernels::HypWorkload;
 
@@ -46,6 +46,18 @@ impl HypUnit {
             kept,
         }
     }
+
+    /// The mean expansion round implied by measured decoder statistics:
+    /// `generated / rounds` candidate arrivals of which everything the
+    /// merge and beam did not reject is within-beam. This is how the
+    /// simulator's unit is driven from a real decode's per-flush
+    /// `PruneStats` instead of synthetic inputs.
+    pub fn round_from_stats(&self, stats: &PruneStats) -> HypUnitRound {
+        let rounds = stats.rounds.max(1);
+        let candidates = stats.generated / rounds;
+        let within = (stats.generated - stats.merged - stats.beam_pruned) / rounds;
+        self.round(candidates, within)
+    }
 }
 
 impl HypWorkload {
@@ -58,6 +70,23 @@ impl HypWorkload {
             avg_children,
             word_commit_frac,
         }
+    }
+
+    /// Derive every workload parameter from measured decoder counters —
+    /// no synthetic inputs. Branching and word-commit fractions come
+    /// from the expansion-side [`ExpandStats`] (advance/commit arcs per
+    /// expanded hypothesis); occupancy comes from the prune-side
+    /// [`PruneStats`], exactly as [`HypWorkload::from_stats`].
+    pub fn from_measured(prune: &PruneStats, expand: &ExpandStats) -> Self {
+        let expanded = expand.expanded.max(1) as f64;
+        let links = expand.advance + expand.commit;
+        let avg_children = links as f64 / expanded;
+        let word_commit_frac = if links == 0 {
+            0.0
+        } else {
+            expand.commit as f64 / links as f64
+        };
+        Self::from_stats(prune, avg_children, word_commit_frac)
     }
 }
 
@@ -114,5 +143,54 @@ mod tests {
         let w = HypWorkload::from_stats(&stats, 5.0, 0.2);
         assert_eq!(w.n_hyps, 40); // survived 400 / 10 rounds
         assert_eq!(w.avg_children, 5.0);
+    }
+
+    #[test]
+    fn workload_from_measured_counters() {
+        let prune = PruneStats {
+            generated: 1000,
+            merged: 100,
+            beam_pruned: 300,
+            capacity_pruned: 200,
+            peak_live: 80,
+            rounds: 10,
+        };
+        let expand = ExpandStats {
+            expanded: 100,
+            blank: 100,
+            repeat: 60,
+            advance: 700,
+            commit: 140,
+        };
+        let w = HypWorkload::from_measured(&prune, &expand);
+        assert_eq!(w.n_hyps, 40);
+        assert!((w.avg_children - 8.4).abs() < 1e-9, "{}", w.avg_children);
+        let frac = 140.0 / 840.0;
+        assert!((w.word_commit_frac - frac).abs() < 1e-9);
+        // Degenerate counters must not divide by zero.
+        let idle = HypWorkload::from_measured(&PruneStats::default(), &ExpandStats::default());
+        assert_eq!(idle.word_commit_frac, 0.0);
+        assert_eq!(idle.avg_children, 0.0);
+    }
+
+    #[test]
+    fn round_from_stats_matches_explicit_round() {
+        let stats = PruneStats {
+            generated: 1000,
+            merged: 100,
+            beam_pruned: 300,
+            capacity_pruned: 200,
+            peak_live: 80,
+            rounds: 10,
+        };
+        let u = HypUnit { capacity: 30 };
+        let r = u.round_from_stats(&stats);
+        // 100 arrivals per round, 60 within beam, capacity 30.
+        assert_eq!(r, u.round(100, 60));
+        assert_eq!(r.kept, 30);
+        assert_eq!(r.overflow, 30);
+        // Zero-round stats are clamped, not divided by zero.
+        let empty = u.round_from_stats(&PruneStats::default());
+        assert_eq!(empty.insert_cycles, 0);
     }
 }

@@ -41,6 +41,9 @@ pub enum KernelClass {
     Fc,
     LayerNorm,
     HypExpansion,
+    /// Second-pass N-best rescoring (finish-time stage; one thread per
+    /// N-best entry walking the higher-order LM).
+    Rescore,
 }
 
 /// One kernel execution request for the pool scheduler.
@@ -107,6 +110,22 @@ pub fn hyp_expansion_thread_instrs(avg_children: f64, word_commit_frac: f64) -> 
     let blank_repeat = 2 * 16u64;
     let children = (avg_children * (per_child + word_commit_frac * per_commit)) as u64;
     THREAD_FIXED + fetch + children + blank_repeat
+}
+
+/// Nominal word count per N-best path the rescoring kernel is sized
+/// for (finish-time second pass; utterance length is unknown at
+/// step-program build time, so the stage uses a fixed average).
+pub const RESCORE_AVG_WORDS: f64 = 12.0;
+
+/// Per-thread cost of rescoring one N-best path under the second-pass
+/// LM: fetch the path record, then per word a trigram-table probe, a
+/// backoff test and an SFU score accumulate, finally the re-rank
+/// insert handshake with the hypothesis unit.
+pub fn rescore_thread_instrs(avg_words: f64) -> u64 {
+    let fetch = 18u64; // path record header + word list base
+    let per_word = 42.0; // context hash, table probe, backoff test, accumulate
+    let emit = 12u64; // sorted re-insert handshake
+    THREAD_FIXED + fetch + (avg_words * per_word) as u64 + emit
 }
 
 /// Peak multiply-accumulate throughput of the PE pool in GMAC/s: every
@@ -254,6 +273,20 @@ pub fn build_step_kernels(
                     });
                 }
             }
+            StageDesc::Rescore { nbest } => {
+                // Finish-time second pass: one thread per N-best path.
+                // Trigram tables stream from external memory, so no
+                // model-memory staging; path records round-trip through
+                // shared memory like hypothesis records do.
+                kernels.push(KernelExec {
+                    name: stage.name(),
+                    class: KernelClass::Rescore,
+                    threads: *nbest as u64,
+                    instr_per_thread: rescore_thread_instrs(RESCORE_AVG_WORDS),
+                    model_bytes: 0,
+                    smem_bytes: *nbest as u64 * accel.hyp_record_bytes as u64 * 2,
+                });
+            }
         }
     }
     // Lane-batching: every stream runs its own threads over the same
@@ -394,6 +427,29 @@ mod tests {
         // precision-independent (the MAC unit is 8-bit wide regardless).
         let instrs = |ks: &[KernelExec]| ks.iter().map(|k| k.total_instrs()).sum::<u64>();
         assert_eq!(instrs(&k8), instrs(&k32));
+    }
+
+    #[test]
+    fn rescore_stage_adds_one_kernel() {
+        let m = ModelConfig::paper_tds();
+        let a = AccelConfig::paper();
+        let mut p = pipe(&m);
+        p.stages.push(StageDesc::Rescore { nbest: 8 });
+        let ks = build_step_kernels(&p, &a, &HypWorkload::default(), 1);
+        let rescore: Vec<&KernelExec> =
+            ks.iter().filter(|k| k.class == KernelClass::Rescore).collect();
+        assert_eq!(rescore.len(), 1);
+        assert_eq!(rescore[0].threads, 8);
+        assert_eq!(rescore[0].model_bytes, 0, "trigram tables stream, no staging");
+        assert_eq!(
+            rescore[0].instr_per_thread,
+            rescore_thread_instrs(RESCORE_AVG_WORDS)
+        );
+        // The rescore program is tiny next to expansion: it must not
+        // perturb the step total materially.
+        let total: u64 = ks.iter().map(|k| k.total_instrs()).sum();
+        let rescore_instrs = rescore[0].total_instrs();
+        assert!(rescore_instrs * 1000 < total);
     }
 
     #[test]

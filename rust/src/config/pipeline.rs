@@ -38,6 +38,15 @@ pub enum StageDesc {
         /// Executions per decoding step (`vectors_per_step`).
         repeats: usize,
     },
+    /// Second-pass LM rescoring of the exact N-best list at utterance
+    /// finish (`decoder::rescore`) — present only when the engine is
+    /// configured with a rescorer ([`EngineBuilder::rescore`]).
+    ///
+    /// [`EngineBuilder::rescore`]: crate::coordinator::EngineBuilder::rescore
+    Rescore {
+        /// N-best paths extracted from the lattice and re-ranked.
+        nbest: usize,
+    },
 }
 
 impl StageDesc {
@@ -47,6 +56,7 @@ impl StageDesc {
             StageDesc::Features => "feat.mfcc".to_string(),
             StageDesc::AmLayer(layer) => layer.name().to_string(),
             StageDesc::HypExpansion { repeats } => format!("hyp.expand×{repeats}"),
+            StageDesc::Rescore { nbest } => format!("lm.rescore×{nbest}"),
         }
     }
 }
@@ -230,5 +240,20 @@ mod tests {
         assert_eq!(p.stages[0].name(), "feat.mfcc");
         assert_eq!(p.stages[1].name(), "g0.sub");
         assert_eq!(p.stages.last().unwrap().name(), "hyp.expand×4");
+        assert_eq!(StageDesc::Rescore { nbest: 8 }.name(), "lm.rescore×8");
+    }
+
+    #[test]
+    fn rescore_stage_is_append_only() {
+        // The canonical pipeline never contains a rescore stage — it is
+        // appended by the engine only when a rescorer is configured —
+        // and appending one keeps the description valid (it neither
+        // consumes nor produces activations in the AM chain).
+        let m = ModelConfig::tiny_tds();
+        let mut p = PipelineDesc::for_model(&m);
+        assert!(!p.stages.iter().any(|s| matches!(s, StageDesc::Rescore { .. })));
+        p.stages.push(StageDesc::Rescore { nbest: 4 });
+        p.validate().unwrap();
+        assert_eq!(p.am_stage_count(), PipelineDesc::for_model(&m).am_stage_count());
     }
 }

@@ -26,7 +26,7 @@ use std::path::{Path, PathBuf};
 
 use crate::am::TdsModel;
 use crate::config::{BatchConfig, DecoderConfig, OverloadPolicy, Precision, ShardConfig};
-use crate::decoder::BeamDecoder;
+use crate::decoder::{BeamDecoder, Rescorer, TrigramLm};
 use crate::lexicon::Lexicon;
 use crate::lm::NgramLm;
 use crate::runtime::Runtime;
@@ -122,6 +122,8 @@ pub struct EngineBuilder {
     overload: OverloadPolicy,
     lexicon: Option<Lexicon>,
     lm: Option<NgramLm>,
+    nbest: usize,
+    rescorer: Option<Rescorer>,
     fault_after_steps: Option<u64>,
     fault_panic_after_steps: Option<u64>,
     fault_reply_delay_ms: Option<u64>,
@@ -224,6 +226,23 @@ impl EngineBuilder {
     /// Replace the default corpus-estimated n-gram language model.
     pub fn lm(mut self, lm: NgramLm) -> Self {
         self.lm = Some(lm);
+        self
+    }
+
+    /// Record an exact lattice per session and serve N-best lists of
+    /// length `n` from [`Engine::nbest`]. `0` turns the lattice
+    /// subsystem off (the default); the search itself — and every
+    /// transcript — is unchanged either way.
+    pub fn nbest(mut self, n: usize) -> Self {
+        self.nbest = n;
+        self
+    }
+
+    /// Rescore the N-best list with a second-pass (trigram) LM at
+    /// utterance finish, weighted by `weight`. Implies
+    /// [`Self::nbest`]`(8)` when no explicit N-best length was set.
+    pub fn rescore(mut self, lm: TrigramLm, weight: f32) -> Self {
+        self.rescorer = Some(Rescorer { lm, weight });
         self
     }
 
@@ -343,6 +362,8 @@ impl EngineBuilder {
                 .fault_reply_delay_ms
                 .or_else(|| env_u64("ASRPU_FAULT_REPLY_DELAY_MS")),
         };
+        // Rescoring consumes the N-best list, so it implies one.
+        let nbest = if self.nbest == 0 && self.rescorer.is_some() { 8 } else { self.nbest };
         Ok(Engine::assemble(
             backend,
             lexicon,
@@ -352,6 +373,8 @@ impl EngineBuilder {
             self.shards,
             self.overload,
             word_lm_ids,
+            nbest,
+            self.rescorer,
             faults,
         ))
     }

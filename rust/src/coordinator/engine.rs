@@ -47,9 +47,12 @@ use std::cell::{Cell, RefCell};
 use std::time::{Duration, Instant};
 
 use crate::config::{
-    BatchConfig, DecoderConfig, ModelConfig, OverloadPolicy, PipelineDesc, ShardConfig,
+    BatchConfig, DecoderConfig, ModelConfig, OverloadPolicy, PipelineDesc, ShardConfig, StageDesc,
 };
-use crate::decoder::{BeamDecoder, DecodeScratch, DecodeState, DecoderSnapshot, Transcript};
+use crate::decoder::{
+    BeamDecoder, DecodeScratch, DecodeState, DecoderSnapshot, NbestEntry, Rescored, Rescorer,
+    Transcript,
+};
 use crate::lexicon::Lexicon;
 use crate::lm::NgramLm;
 use crate::util::tensor_io::TensorFile;
@@ -93,6 +96,12 @@ pub struct Engine {
     /// Cached lexicon-word → LM-word mapping (O(vocabulary) to build;
     /// decoders borrow it so per-drain construction is allocation-free).
     word_lm_ids: Vec<u32>,
+    /// N-best list length served by [`Self::nbest`] (0 = the lattice
+    /// subsystem is off and sessions decode exactly as before).
+    nbest_n: usize,
+    /// Optional second-pass rescorer applied to the N-best list at
+    /// utterance finish ([`EngineBuilder::rescore`]).
+    rescorer: Option<Rescorer>,
     scratch: RefCell<EngineScratch>,
     /// Test/ops fault-injection hooks (see [`FaultHooks`]).
     faults: FaultHooks,
@@ -142,6 +151,8 @@ pub struct WorkerSeed {
     shard_cfg: ShardConfig,
     overload: OverloadPolicy,
     word_lm_ids: Vec<u32>,
+    nbest_n: usize,
+    rescorer: Option<Rescorer>,
     faults: FaultHooks,
 }
 
@@ -158,6 +169,8 @@ impl WorkerSeed {
             self.shard_cfg,
             self.overload,
             self.word_lm_ids,
+            self.nbest_n,
+            self.rescorer,
             self.faults,
         )
     }
@@ -183,6 +196,19 @@ impl Session {
         self.buf.len()
     }
 
+}
+
+/// What [`Engine::nbest`] returns: the 1-best transcript (bit-identical
+/// to [`Engine::finish`]), the exact N-best list from the session's
+/// lattice, and — when the engine carries a rescorer — the second-pass
+/// re-ranking of that list.
+pub struct NbestResult {
+    /// The 1-best transcript, exactly as `finish` would report it.
+    pub transcript: Transcript,
+    /// Exact N-best paths, best first (first-pass scores).
+    pub entries: Vec<NbestEntry>,
+    /// Second-pass re-ranking (present iff a rescorer is configured).
+    pub rescored: Option<Vec<Rescored>>,
 }
 
 /// Timing and search statistics for one session.
@@ -374,6 +400,8 @@ impl Engine {
         shard_cfg: ShardConfig,
         overload: OverloadPolicy,
         word_lm_ids: Vec<u32>,
+        nbest_n: usize,
+        rescorer: Option<Rescorer>,
         faults: FaultHooks,
     ) -> Engine {
         Engine {
@@ -386,6 +414,8 @@ impl Engine {
             shard_cfg,
             overload,
             word_lm_ids,
+            nbest_n,
+            rescorer,
             scratch: RefCell::new(EngineScratch::default()),
             faults,
             served_steps: Cell::new(0),
@@ -410,6 +440,8 @@ impl Engine {
             shard_cfg: self.shard_cfg.clone(),
             overload: self.overload.clone(),
             word_lm_ids: self.word_lm_ids.clone(),
+            nbest_n: self.nbest_n,
+            rescorer: self.rescorer.clone(),
             faults: self.faults,
         })
     }
@@ -423,9 +455,26 @@ impl Engine {
     /// The decoding-step program this engine executes, as the shared
     /// stage description the simulator also consumes
     /// (`accel::build_step_kernels`): one source of truth for "one
-    /// program per decoder part".
+    /// program per decoder part". When a second-pass rescorer is
+    /// configured, the finish-time [`StageDesc::Rescore`] stage appears
+    /// at the end of the list — the simulator sizes its kernel from the
+    /// same description.
     pub fn pipeline(&self) -> PipelineDesc {
-        PipelineDesc::for_model(&self.model_cfg)
+        let mut p = PipelineDesc::for_model(&self.model_cfg);
+        if self.rescorer.is_some() {
+            p.stages.push(StageDesc::Rescore { nbest: self.nbest_n });
+        }
+        p
+    }
+
+    /// The configured N-best list length (0 = lattice subsystem off).
+    pub fn nbest_n(&self) -> usize {
+        self.nbest_n
+    }
+
+    /// The configured second-pass rescorer, if any.
+    pub fn rescorer(&self) -> Option<&Rescorer> {
+        self.rescorer.as_ref()
     }
 
     /// A batcher configured with this engine's batching policy.
@@ -466,10 +515,14 @@ impl Engine {
     /// Open a session. `collect_logits` keeps per-frame log-probs for
     /// baseline comparisons (costs memory; off for serving).
     pub fn open(&self, collect_logits: bool) -> Result<Session> {
+        let mut decode = self.decoder()?.start();
+        if self.nbest_n > 0 {
+            decode.enable_lattice();
+        }
         Ok(Session {
             buf: Vec::with_capacity(2 * self.model_cfg.samples_per_step()),
             am_state: self.backend.open_state()?,
-            decode: self.decoder()?.start(),
+            decode,
             logits: if collect_logits { Some(Vec::new()) } else { None },
             metrics: SessionMetrics::default(),
         })
@@ -533,10 +586,19 @@ impl Engine {
             self.lexicon.words.len(),
             self.lexicon.tokens.len(),
         )?;
+        let mut decode = snap.decoder.restore();
+        // A lattice captured in the snapshot rides along untouched. If
+        // this engine wants one and the snapshot has none (migration
+        // from a pre-lattice shard), seed it from the restored frontier
+        // — N-best covers the words decoded from here on, prefixed by
+        // the already-committed backtrack.
+        if self.nbest_n > 0 {
+            decode.enable_lattice();
+        }
         Ok(Session {
             buf: snap.buffered.clone(),
             am_state: self.backend.restore_lane(&snap.am)?,
-            decode: snap.decoder.restore(),
+            decode,
             logits: None,
             metrics: snap.metrics,
         })
@@ -671,8 +733,12 @@ impl Engine {
                 }
             }
             // Decoder phase: re-block lane-major logits into per-frame
-            // [B × tokens] rows (fully overwritten per frame) and advance
-            // every lane per frame.
+            // [B × tokens] rows (fully overwritten per frame), then
+            // advance all lanes lane-major — expand every lane into one
+            // flat candidate table, then prune each lane's slice with
+            // the same deterministic total-order sort (the offloadable
+            // shape of Braun et al., arXiv:1910.10032; bit-identical to
+            // per-lane stepping).
             block.resize(b * tokens, 0.0);
             for f in 0..vps {
                 for l in 0..b {
@@ -680,12 +746,16 @@ impl Engine {
                     block[l * tokens..(l + 1) * tokens]
                         .copy_from_slice(&logits[src..src + tokens]);
                 }
+                decoder.batch_begin(dec);
                 for (l, &i) in ready.iter().enumerate() {
-                    decoder.step_with(
+                    decoder.batch_expand(
                         &mut lanes[i].decode,
                         &block[l * tokens..(l + 1) * tokens],
                         dec,
                     );
+                }
+                for (l, &i) in ready.iter().enumerate() {
+                    decoder.batch_prune(&mut lanes[i].decode, l, dec);
                 }
             }
             let t_end = Instant::now();
@@ -735,22 +805,51 @@ impl Engine {
         Ok(())
     }
 
-    /// Flush buffered audio (zero-padding to whole steps) and extract the
-    /// final transcript.
-    pub fn finish(&self, s: &mut Session) -> Result<Transcript> {
+    /// Flush buffered audio (zero-padding to whole steps) so the decoder
+    /// state reflects every real sample — the shared front half of
+    /// [`Self::finish`] and [`Self::nbest`].
+    fn drain_padded(&self, s: &mut Session, decoder: &BeamDecoder) -> Result<()> {
         let step_len = self.model_cfg.step_len;
         let lookahead = self.model_cfg.samples_per_step() - step_len;
-        let decoder = self.decoder()?;
         if !s.buf.is_empty() {
             // Pad so every real sample is covered by a step (+ lookahead).
             let target = s.buf.len().div_ceil(step_len) * step_len + lookahead;
             s.buf.resize(target, 0.0);
             while s.buf.len() >= self.model_cfg.samples_per_step() {
-                self.run_step(s, &decoder)?;
+                self.run_step(s, decoder)?;
                 s.buf.drain(..step_len);
             }
         }
+        Ok(())
+    }
+
+    /// Flush buffered audio (zero-padding to whole steps) and extract the
+    /// final transcript.
+    pub fn finish(&self, s: &mut Session) -> Result<Transcript> {
+        let decoder = self.decoder()?;
+        self.drain_padded(s, &decoder)?;
         Ok(decoder.finish(&s.decode))
+    }
+
+    /// Flush buffered audio and extract the transcript **and** the exact
+    /// N-best list (plus the second-pass re-ranking when a rescorer is
+    /// configured). The transcript is the same value [`Self::finish`]
+    /// would return — bit-identical scores — and the N-best's top entry
+    /// matches it. Fails on engines built without
+    /// [`EngineBuilder::nbest`].
+    pub fn nbest(&self, s: &mut Session) -> Result<NbestResult> {
+        anyhow::ensure!(
+            self.nbest_n > 0,
+            "engine built without N-best (EngineBuilder::nbest)"
+        );
+        let decoder = self.decoder()?;
+        self.drain_padded(s, &decoder)?;
+        let transcript = decoder.finish(&s.decode);
+        let entries = decoder.nbest(&s.decode, self.nbest_n);
+        let rescored = self.rescorer.as_ref().map(|r| {
+            r.rescore(&entries, &self.lexicon, &self.lm, self.dec_cfg.lm_weight)
+        });
+        Ok(NbestResult { transcript, entries, rescored })
     }
 
     /// Current best partial transcript (streaming UX, §2.4).
@@ -1177,6 +1276,66 @@ mod tests {
         }));
         let msg = *caught.unwrap_err().downcast::<String>().unwrap();
         assert!(msg.contains("injected worker panic"), "{msg}");
+    }
+
+    #[test]
+    fn nbest_engine_top_entry_matches_finish() {
+        use crate::decoder::TrigramLm;
+        let tri = TrigramLm::estimate(&crate::synth::spec::sample_corpus(200, 7777), 0.4).unwrap();
+        let e = Engine::builder()
+            .native(TdsModel::random(ModelConfig::tiny_tds(), 11))
+            .nbest(4)
+            .rescore(tri, 1.2)
+            .build()
+            .unwrap();
+        assert_eq!(e.nbest_n(), 4);
+        assert!(e.rescorer().is_some());
+        // The pipeline gains exactly one trailing rescore stage.
+        let p = e.pipeline();
+        assert_eq!(p.stages.last(), Some(&StageDesc::Rescore { nbest: 4 }));
+        p.validate().unwrap();
+        // Transcripts are unchanged by the lattice, and the N-best's top
+        // entry is bit-identical to finish.
+        let plain = native_engine();
+        let mut rng = Rng::new(61);
+        let u = Synthesizer::default().render(&[2, 5, 1], &mut rng);
+        let (t_ref, _) = plain.decode_utterance(&u.samples).unwrap();
+        let mut s = e.open(false).unwrap();
+        e.feed(&mut s, &u.samples).unwrap();
+        let r = e.nbest(&mut s).unwrap();
+        assert_eq!(r.transcript.text, t_ref.text);
+        assert_eq!(r.transcript.score, t_ref.score);
+        assert!(!r.entries.is_empty());
+        assert_eq!(r.entries[0].text, t_ref.text);
+        assert_eq!(r.entries[0].score, t_ref.score);
+        let rescored = r.rescored.expect("rescorer configured");
+        assert_eq!(rescored.len(), r.entries.len());
+        // Every second-pass entry keeps its exact first-pass score.
+        for re in &rescored {
+            assert!(r.entries.iter().any(|en| en.score == re.first_pass));
+            assert!(re.second_pass.is_finite());
+        }
+    }
+
+    #[test]
+    fn nbest_requires_configuration() {
+        let e = native_engine();
+        assert_eq!(e.nbest_n(), 0);
+        let mut s = e.open(false).unwrap();
+        let err = format!("{:#}", e.nbest(&mut s).unwrap_err());
+        assert!(err.contains("without N-best"), "{err}");
+    }
+
+    #[test]
+    fn rescore_implies_nbest() {
+        use crate::decoder::TrigramLm;
+        let tri = TrigramLm::estimate(&crate::synth::spec::sample_corpus(50, 7777), 0.4).unwrap();
+        let e = Engine::builder()
+            .native(TdsModel::random(ModelConfig::tiny_tds(), 11))
+            .rescore(tri, 1.0)
+            .build()
+            .unwrap();
+        assert_eq!(e.nbest_n(), 8);
     }
 
     #[test]

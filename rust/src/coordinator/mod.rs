@@ -24,8 +24,8 @@ pub use backend::{
     AmBackend, AmLaneState, AmLanes, NativeBackend, QuantizedBackend, StepScratch, XlaBackend,
 };
 pub use builder::{BuildError, EngineBuilder};
-pub use engine::{Batcher, Engine, FaultHooks, Session, SessionMetrics, WorkerSeed};
+pub use engine::{Batcher, Engine, FaultHooks, NbestResult, Session, SessionMetrics, WorkerSeed};
 pub use metrics::{LatencyStats, ServeMetrics, ShardMetrics, ShardSnapshot};
 pub use server::Server;
-pub use shard::{Finished, Resumed, ShardPool};
+pub use shard::{Finished, NbestFinished, NbestHyp, Resumed, ShardPool};
 pub use snapshot::{SessionSnapshot, SNAPSHOT_VERSION};

@@ -22,7 +22,8 @@
 //!
 //! Errors are structured: `{"error":{"code":"...","message":"..."}}`
 //! with stable machine-readable codes (`bad_request`, `unknown_op`,
-//! `unknown_session`, `backpressure`, `shutdown`, `internal`).
+//! `unknown_session`, `session_shed`, `backpressure`, `shutdown`,
+//! `internal`).
 //!
 //! **v1 compatibility:** the v1 line protocol (open/feed/finish/stats,
 //! no handshake) is a strict subset of v2 — v1 clients keep working
@@ -63,7 +64,8 @@ pub const PROTO_ACCEPTED: &[u64] = &[1, 2];
 /// server's acknowledged state, restored from a checkpoint if the
 /// session's worker died) so the client replays only unacknowledged
 /// audio.
-pub const OPS: &[&str] = &["hello", "open", "feed", "finish", "resume", "stats", "config"];
+pub const OPS: &[&str] =
+    &["hello", "open", "feed", "finish", "resume", "nbest", "stats", "config"];
 
 /// Machine-readable error codes (stable across releases; clients branch
 /// on these, not on message text).
@@ -75,6 +77,10 @@ pub enum ErrCode {
     UnknownOp,
     /// The referenced session id is not open.
     UnknownSession,
+    /// The referenced session was shed by the overload policy before it
+    /// ever decoded (`shed_never_started`): nothing was lost — reopen
+    /// and resend from the start.
+    SessionShed,
     /// The device queue is full; retry later.
     Backpressure,
     /// The server is shutting down.
@@ -89,6 +95,7 @@ impl ErrCode {
         ErrCode::BadRequest,
         ErrCode::UnknownOp,
         ErrCode::UnknownSession,
+        ErrCode::SessionShed,
         ErrCode::Backpressure,
         ErrCode::Shutdown,
         ErrCode::Internal,
@@ -100,6 +107,7 @@ impl ErrCode {
             ErrCode::BadRequest => "bad_request",
             ErrCode::UnknownOp => "unknown_op",
             ErrCode::UnknownSession => "unknown_session",
+            ErrCode::SessionShed => "session_shed",
             ErrCode::Backpressure => "backpressure",
             ErrCode::Shutdown => "shutdown",
             ErrCode::Internal => "internal",
@@ -226,6 +234,11 @@ pub(crate) fn config_json(engine: &Engine) -> Json {
         ("route_retries", Json::Num(engine.overload.route_retries as f64)),
         ("route_backoff_ms", Json::Num(engine.overload.route_backoff_ms as f64)),
         ("degrade_levels", Json::Num(engine.overload.levels.len() as f64)),
+        ("nbest", Json::Num(engine.nbest_n() as f64)),
+        (
+            "rescore",
+            Json::Num(u64::from(engine.rescorer().is_some()) as f64),
+        ),
     ])
 }
 
@@ -241,7 +254,7 @@ fn parse_request(line: &str, reply: mpsc::Sender<Json>) -> Result<Request, (ErrC
         "open" => Ok(Request::Msg(RouterMsg::Open { reply })),
         "stats" => Ok(Request::Msg(RouterMsg::Stats { reply })),
         "config" => Ok(Request::Msg(RouterMsg::Config { reply })),
-        "feed" | "finish" | "resume" => {
+        "feed" | "finish" | "resume" | "nbest" => {
             let session = v
                 .get("session")
                 .and_then(Json::as_f64)
@@ -252,6 +265,9 @@ fn parse_request(line: &str, reply: mpsc::Sender<Json>) -> Result<Request, (ErrC
             }
             if op == "resume" {
                 return Ok(Request::Msg(RouterMsg::Resume { session, reply }));
+            }
+            if op == "nbest" {
+                return Ok(Request::Msg(RouterMsg::Nbest { session, reply }));
             }
             let samples = v
                 .get("samples")
@@ -271,7 +287,11 @@ fn parse_request(line: &str, reply: mpsc::Sender<Json>) -> Result<Request, (ErrC
     }
 }
 
-fn handle_conn(stream: TcpStream, jobs: mpsc::SyncSender<RouterMsg>) -> Result<()> {
+fn handle_conn(
+    stream: TcpStream,
+    jobs: mpsc::SyncSender<RouterMsg>,
+    retry_after_ms: u64,
+) -> Result<()> {
     let peer = stream.peer_addr().ok();
     let reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
@@ -287,8 +307,11 @@ fn handle_conn(stream: TcpStream, jobs: mpsc::SyncSender<RouterMsg>) -> Result<(
             // router queue (a handshake must not hit backpressure).
             Ok(Request::Hello) => hello_json(),
             Ok(Request::Msg(msg)) => match jobs.try_send(msg) {
+                // The conn thread's own bounce carries the same
+                // retry_after_ms hint policy bounces do — one
+                // backpressure shape, wherever the queue saturates.
                 Err(mpsc::TrySendError::Full(_)) => {
-                    err_json(ErrCode::Backpressure, "queue full")
+                    backpressure_json("queue full", retry_after_ms)
                 }
                 Err(mpsc::TrySendError::Disconnected(_)) => {
                     err_json(ErrCode::Shutdown, "server shutting down")
@@ -326,13 +349,17 @@ impl Server {
         let local = listener.local_addr()?.to_string();
         let pool = ShardPool::start(make_engine, queue_depth)?;
         let accept_pool = pool.sender();
+        let retry_hint = pool.retry_after_ms();
         std::thread::Builder::new()
             .name("asrpu-accept".into())
             .spawn(move || {
                 for stream in listener.incoming().flatten() {
                     let tx = accept_pool.clone();
+                    // Each conn thread carries its own copy of the
+                    // policy's retry hint so its queue-full bounce
+                    // matches the router's policy bounces.
                     std::thread::spawn(move || {
-                        let _ = handle_conn(stream, tx);
+                        let _ = handle_conn(stream, tx, retry_hint);
                     });
                 }
             })?;

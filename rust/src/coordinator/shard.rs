@@ -113,7 +113,7 @@
 #![deny(missing_docs)]
 
 use anyhow::{Context, Result};
-use std::collections::HashMap;
+use std::collections::{BTreeSet, HashMap};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
@@ -137,6 +137,11 @@ const SUPERVISE_INTERVAL: Duration = Duration::from_millis(25);
 /// the drill then proceeds exactly as if the staged feeds were lost.
 const KILL_REPORT_WAIT: Duration = Duration::from_secs(10);
 
+/// Cap on remembered shed-victim ids. Session ids are monotone, so
+/// once the set is full the *oldest* notices age out — the clients
+/// least likely to still come asking.
+const SHED_MEMORY: usize = 4096;
+
 /// A client-facing request the router dispatches. Both front-ends speak
 /// this: TCP connection threads (`super::Server`) and the in-process
 /// [`ShardPool`] wrappers.
@@ -147,6 +152,13 @@ pub(crate) enum RouterMsg {
     Feed { session: u64, samples: Vec<f32>, enqueued: Instant, reply: mpsc::Sender<Json> },
     /// Finish a session and retire its assignment.
     Finish { session: u64, reply: mpsc::Sender<Json> },
+    /// Finish a session and return its exact N-best list (with
+    /// second-pass scores when the engine rescores). Unlike `Finish`
+    /// the assignment is not retired at dispatch — the worker un-books
+    /// via the retire back-channel only once it commits to consuming
+    /// the session, so a refusal (engine without N-best) leaves the
+    /// session open.
+    Nbest { session: u64, reply: mpsc::Sender<Json> },
     /// Re-attach to a session: report consumed steps/samples + partial.
     Resume { session: u64, reply: mpsc::Sender<Json> },
     /// Aggregate per-shard metrics (served from the stats caches).
@@ -208,6 +220,9 @@ enum Job {
     Feed { session: u64, samples: Vec<f32>, enqueued: Instant, reply: Reply },
     /// Flush and extract the transcript.
     Finish { session: u64, reply: Reply },
+    /// Flush and extract the transcript plus the exact N-best list
+    /// (rescored when the engine carries a second-pass LM).
+    Nbest { session: u64, reply: Reply },
     /// Report a session's consumed steps/frames/buffer + partial.
     Resume { session: u64, reply: Reply },
     /// Introspect the engine this worker serves.
@@ -233,7 +248,7 @@ enum Job {
     /// session (opened, zero audio fed) so a saturated shard frees a
     /// slot. No reply — the router already answered the client whose
     /// bounced feed triggered the shed, and the victim's owner learns on
-    /// its next request (`unknown_session`).
+    /// its next request (`session_shed`, with a reopen hint).
     Shed { session: u64 },
     /// Simulated crash: panic in the worker loop *without* flushing
     /// staged work or shipping final checkpoints. The panic unwinds into
@@ -254,6 +269,7 @@ impl Job {
             Job::Open { reply, .. }
             | Job::Feed { reply, .. }
             | Job::Finish { reply, .. }
+            | Job::Nbest { reply, .. }
             | Job::Resume { reply, .. }
             | Job::Config { reply } => Some(reply),
             Job::Evict { .. } | Job::Adopt { .. } | Job::Shed { .. } | Job::Die | Job::Shutdown => {
@@ -268,6 +284,7 @@ impl Job {
         match self {
             Job::Feed { session, .. }
             | Job::Finish { session, .. }
+            | Job::Nbest { session, .. }
             | Job::Resume { session, .. } => Some(*session),
             _ => None,
         }
@@ -659,6 +676,73 @@ impl Worker {
                 self.publish();
                 reply.send(resp);
             }
+            Job::Nbest { session, reply } => {
+                // Refused up front on engines without a lattice — the
+                // session stays open and can still `finish` normally.
+                if self.engine.nbest_n() == 0 {
+                    reply.send(err_json(
+                        ErrCode::BadRequest,
+                        "engine built without N-best (serve with --nbest/--rescore)",
+                    ));
+                    return;
+                }
+                // From here this is a finish with a richer reply: drain
+                // staged work so the lattice covers all fed audio, then
+                // pad out uncontended at full quality.
+                if !self.staged.is_empty() {
+                    self.flush();
+                }
+                self.batcher.remove(session);
+                self.last_ckpt.remove(&session);
+                self.apply_degrade();
+                let Some(mut s) = self.sessions.remove(&session) else {
+                    reply.send(err_json(ErrCode::UnknownSession, "unknown session"));
+                    return;
+                };
+                // The session is consumed from here on; un-book it on
+                // the router via the retire back-channel. (Finish
+                // retires at dispatch — the router cannot know in
+                // advance whether an nbest would be refused, so Nbest
+                // retires only once the worker commits to consuming.)
+                let _ = self.retire.send(session);
+                let resp = match self.engine.nbest(&mut s) {
+                    Ok(r) => {
+                        self.metrics.sessions_finished += 1;
+                        self.metrics.compute_seconds += s.metrics.compute_s;
+                        let hyps: Vec<Json> = r
+                            .entries
+                            .iter()
+                            .map(|e| {
+                                // The rescored list is re-ranked by
+                                // second-pass score, so match each
+                                // entry by its word sequence. Without
+                                // a second-pass LM the rescore column
+                                // equals the exact first-pass score.
+                                let second = r
+                                    .rescored
+                                    .as_ref()
+                                    .and_then(|v| v.iter().find(|x| x.words == e.words))
+                                    .map(|x| x.second_pass as f64)
+                                    .unwrap_or(e.score as f64);
+                                obj(&[
+                                    ("text", Json::Str(e.text.clone())),
+                                    ("score", Json::Num(e.score as f64)),
+                                    ("rescore", Json::Num(second)),
+                                ])
+                            })
+                            .collect();
+                        obj(&[
+                            ("text", Json::Str(r.transcript.text)),
+                            ("score", Json::Num(r.transcript.score as f64)),
+                            ("steps", Json::Num(s.metrics.steps as f64)),
+                            ("nbest", Json::Arr(hyps)),
+                        ])
+                    }
+                    Err(e) => err_json(ErrCode::Internal, &format!("nbest failed: {e:#}")),
+                };
+                self.publish();
+                reply.send(resp);
+            }
             Job::Resume { session, reply } => {
                 // Flush first so the reported progress covers every feed
                 // this worker has accepted (staged audio is un-acked
@@ -904,6 +988,7 @@ fn run_worker(mut worker: Worker, jobs: mpsc::Receiver<Job>, liveness: Arc<Worke
                     j @ (Job::Open { .. }
                     | Job::Feed { .. }
                     | Job::Finish { .. }
+                    | Job::Nbest { .. }
                     | Job::Resume { .. }
                     | Job::Config { .. }) => orphans.push(j),
                     Job::Evict { .. }
@@ -984,6 +1069,10 @@ struct Router {
     shed_pending: Vec<(usize, u64)>,
     /// Sessions shed under overload (router-side; surfaced in `stats`).
     shed: u64,
+    /// Ids of shed victims, so the owner's *next* request answers the
+    /// dedicated `session_shed` code (reopen + resend) instead of the
+    /// indistinguishable `unknown_session`. Bounded by [`SHED_MEMORY`].
+    shed_ids: BTreeSet<u64>,
     /// Opens refused by admission control (surfaced in `stats`).
     admission_rejected: u64,
     /// Spontaneous worker panics the supervisor detected (the kill
@@ -1095,6 +1184,10 @@ impl Router {
         self.open_count[shard] = self.open_count[shard].saturating_sub(1);
         self.checkpoints.remove(&id);
         self.shed += 1;
+        self.shed_ids.insert(id);
+        while self.shed_ids.len() > SHED_MEMORY {
+            self.shed_ids.pop_first();
+        }
         self.shed_pending.push((shard, id));
         self.flush_shed();
         true
@@ -1265,6 +1358,20 @@ impl Router {
                     }
                 }
             },
+        }
+    }
+
+    /// The error payload for a session this router has no assignment
+    /// for: shed victims get the dedicated `session_shed` code plus a
+    /// reopen hint; anything else stays `unknown_session`.
+    fn lost_session_json(&self, session: u64, detail: &str) -> Json {
+        if self.shed_ids.contains(&session) {
+            err_json(
+                ErrCode::SessionShed,
+                "session shed under overload before decoding started; reopen and resend",
+            )
+        } else {
+            err_json(ErrCode::UnknownSession, detail)
         }
     }
 
@@ -1563,7 +1670,7 @@ fn router_loop(jobs: mpsc::Receiver<RouterMsg>, mut r: Router) {
             RouterMsg::Feed { session, samples, enqueued, reply } => {
                 match r.assign.get(&session).map(|b| b.shard) {
                     None => {
-                        let _ = reply.send(err_json(ErrCode::UnknownSession, "unknown session"));
+                        let _ = reply.send(r.lost_session_json(session, "unknown session"));
                     }
                     Some(shard) => {
                         // A bounce answers the client itself; nothing
@@ -1586,7 +1693,7 @@ fn router_loop(jobs: mpsc::Receiver<RouterMsg>, mut r: Router) {
             }
             RouterMsg::Finish { session, reply } => match r.assign.get(&session).map(|b| b.shard) {
                 None => {
-                    let _ = reply.send(err_json(ErrCode::UnknownSession, "unknown session"));
+                    let _ = reply.send(r.lost_session_json(session, "unknown session"));
                 }
                 Some(shard) => {
                     // Retire the session only if the finish was actually
@@ -1604,13 +1711,27 @@ fn router_loop(jobs: mpsc::Receiver<RouterMsg>, mut r: Router) {
             },
             RouterMsg::Resume { session, reply } => match r.assign.get(&session).map(|b| b.shard) {
                 None => {
-                    let _ = reply.send(err_json(
-                        ErrCode::UnknownSession,
+                    let _ = reply.send(r.lost_session_json(
+                        session,
                         "unknown session (never opened, finished, or lost)",
                     ));
                 }
                 Some(shard) => {
                     let job = Job::Resume { session, reply: Reply::new(reply) };
+                    r.route_client(shard, job);
+                }
+            },
+            RouterMsg::Nbest { session, reply } => match r.assign.get(&session).map(|b| b.shard) {
+                None => {
+                    let _ = reply.send(r.lost_session_json(session, "unknown session"));
+                }
+                Some(shard) => {
+                    // Unlike Finish, the assignment is NOT retired at
+                    // dispatch: a worker refusing the op (engine built
+                    // without N-best) leaves the session open, so the
+                    // un-booking rides the retire back-channel instead,
+                    // sent by the worker once it consumes the session.
+                    let job = Job::Nbest { session, reply: Reply::new(reply) };
                     r.route_client(shard, job);
                 }
             },
@@ -1707,6 +1828,30 @@ pub struct Finished {
     pub degrade_transitions: usize,
 }
 
+/// One exact N-best hypothesis, as reported by [`ShardPool::nbest`].
+#[derive(Debug, Clone)]
+pub struct NbestHyp {
+    /// The hypothesis text.
+    pub text: String,
+    /// Exact first-pass score (acoustic + LM + penalties).
+    pub score: f64,
+    /// Second-pass score when the engine carries a rescoring LM;
+    /// equals `score` otherwise.
+    pub rescore: f64,
+}
+
+/// A finished session's transcript plus its exact N-best list, as
+/// reported by [`ShardPool::nbest`].
+#[derive(Debug, Clone)]
+pub struct NbestFinished {
+    /// The 1-best transcript — bit-identical to [`ShardPool::finish`].
+    pub text: String,
+    /// The 1-best total score.
+    pub score: f64,
+    /// The exact N-best list, best first.
+    pub hyps: Vec<NbestHyp>,
+}
+
 /// A live session's progress, as reported by [`ShardPool::resume`] —
 /// what a reconnecting client needs to continue exactly where the
 /// server's acknowledged state left off.
@@ -1736,6 +1881,7 @@ pub struct Resumed {
 pub struct ShardPool {
     tx: mpsc::SyncSender<RouterMsg>,
     workers: usize,
+    retry_after_ms: u64,
 }
 
 impl ShardPool {
@@ -1845,6 +1991,7 @@ impl ShardPool {
             });
         }
         let workers = handles.len();
+        let retry_after_ms = init.overload.retry_after_ms;
         let router = Router {
             shards: handles,
             dead: vec![false; workers],
@@ -1857,6 +2004,7 @@ impl ShardPool {
             overload: init.overload,
             shed_pending: Vec::new(),
             shed: 0,
+            shed_ids: BTreeSet::new(),
             admission_rejected: 0,
             panics_detected: 0,
             checkpoints: HashMap::new(),
@@ -1873,12 +2021,20 @@ impl ShardPool {
             .name("asrpu-router".into())
             .spawn(move || router_loop(router_rx, router))
             .context("spawning router")?;
-        Ok(ShardPool { tx: router_tx, workers })
+        Ok(ShardPool { tx: router_tx, workers, retry_after_ms })
     }
 
     /// Number of device workers behind this pool.
     pub fn workers(&self) -> usize {
         self.workers
+    }
+
+    /// The overload policy's client backoff hint, for front-ends that
+    /// bounce work before it ever reaches the router — the TCP conn
+    /// threads' queue-full answer carries the same hint as the policy
+    /// bounces the router itself issues.
+    pub(crate) fn retry_after_ms(&self) -> u64 {
+        self.retry_after_ms
     }
 
     /// A request sender for front-ends that manage their own replies
@@ -1974,6 +2130,40 @@ impl ShardPool {
                 .get("degrade_transitions")
                 .and_then(Json::as_usize)
                 .unwrap_or(0),
+        })
+    }
+
+    /// Finish a session through its lattice: the exact 1-best
+    /// transcript (bit-identical to [`ShardPool::finish`]) plus the
+    /// N-best list, rescored when the engine carries a second-pass LM.
+    /// Errors with `bad_request` on engines built without N-best
+    /// ([`crate::coordinator::EngineBuilder::nbest`]); the session then
+    /// stays open and can still `finish`.
+    pub fn nbest(&self, session: u64) -> Result<NbestFinished> {
+        let r = self.call(|reply| RouterMsg::Nbest { session, reply })?;
+        let hyps = match r.get("nbest") {
+            Some(Json::Arr(items)) => items
+                .iter()
+                .map(|h| NbestHyp {
+                    text: h
+                        .get("text")
+                        .and_then(Json::as_str)
+                        .unwrap_or_default()
+                        .to_string(),
+                    score: h.get("score").and_then(Json::as_f64).unwrap_or(0.0),
+                    rescore: h.get("rescore").and_then(Json::as_f64).unwrap_or(0.0),
+                })
+                .collect(),
+            _ => Vec::new(),
+        };
+        Ok(NbestFinished {
+            text: r
+                .get("text")
+                .and_then(Json::as_str)
+                .context("malformed nbest reply")?
+                .to_string(),
+            score: r.get("score").and_then(Json::as_f64).unwrap_or(0.0),
+            hyps,
         })
     }
 
@@ -2428,9 +2618,14 @@ mod tests {
         // and the worker-side open of B was processed (then shed).
         assert!(ShardPool::parse_feed(rx_a1.recv().unwrap()).unwrap().0 > 0);
         let b = rx_open.recv().unwrap().get("session").and_then(Json::as_f64).unwrap() as u64;
-        // Router-side B is gone: its owner sees unknown_session.
+        // Router-side B is gone — and its owner learns *why*: the
+        // dedicated session_shed code with its reopen hint, not the
+        // indistinguishable unknown_session.
         let err = format!("{:#}", p.feed(b, &audio).unwrap_err());
-        assert!(err.contains("unknown_session"), "{err}");
+        assert!(err.contains("session_shed"), "{err}");
+        assert!(err.contains("reopen"), "{err}");
+        let err = format!("{:#}", p.resume(b).unwrap_err());
+        assert!(err.contains("session_shed"), "{err}");
         let stats = p.stats().unwrap();
         assert_eq!(stats.get("shed").unwrap().as_f64(), Some(1.0), "{stats:?}");
         // The shed notice reaches the worker once its queue drains.

@@ -49,7 +49,9 @@ use super::engine::SessionMetrics;
 /// server refuses stale checkpoints instead of misparsing them.
 /// Version 2 extended `meta.metrics` with the graceful-degradation
 /// counters (degraded steps, rung transitions, last rung in effect).
-pub const SNAPSHOT_VERSION: u32 = 2;
+/// Version 3 widened `dec.counters` from 14 to 24 words (expansion-side
+/// arc counters) and added the optional `dec.lat.*` lattice tensors.
+pub const SNAPSHOT_VERSION: u32 = 3;
 
 const MAGIC: &[u8; 8] = b"ASRPUSNP";
 

@@ -1,0 +1,588 @@
+//! Exact decode lattices — every scored hypothesis-expansion arc the
+//! pruner ever saw, recorded per frame in deterministic order.
+//!
+//! Following the batched exact-lattice decoder of Braun et al.
+//! (arXiv:1910.10032), the lattice keeps not just the surviving
+//! hypotheses but the *arcs between them*: for each frame, one arc per
+//! generated candidate, tagged with the candidate's full path score.
+//! Nodes are the per-frame survivor sets (exactly the hypotheses
+//! [`super::Pruner`] kept, in its deterministic total order), so the
+//! lattice is a DAG whose best path is — by construction —
+//! bit-identical to the 1-best transcript the live beam search
+//! produces. Arcs whose candidate was merged away, beam-pruned or
+//! capacity-pruned survive as *sidetracks*, which is what makes exact
+//! N-best extraction ([`Lattice::nbest_paths`]) and second-pass LM
+//! rescoring ([`super::rescore`]) possible after the fact.
+//!
+//! The whole structure is flat `u32`/`f32` columns (structure of
+//! arrays), so it encodes to [`TensorFile`] tensors losslessly and
+//! rides the CRC-framed `SessionSnapshot` across shards.
+
+use super::prune::KeyMap;
+use super::{Hyp, NO_BACK};
+use crate::util::tensor_io::{Tensor, TensorFile};
+use anyhow::{ensure, Result};
+use std::cmp::Ordering;
+use std::collections::{BTreeSet, BinaryHeap};
+
+/// Sentinel for "no incoming winner arc" (lattice seed nodes).
+pub const NO_ARC: u32 = u32::MAX;
+/// Sentinel word id on arcs that do not commit a word.
+pub const NO_WORD: u32 = u32::MAX;
+/// Sentinel destination for arcs whose candidate did not survive the
+/// frame's prune (merged away, outside the beam, or over capacity).
+pub const PRUNED: u32 = u32::MAX;
+
+/// An arc recorded during expansion, before the frame's prune has
+/// decided which candidates survive (and therefore which node — if
+/// any — the arc lands on).
+#[derive(Debug, Clone, Copy)]
+struct PendingArc {
+    /// Source lattice node (a frontier node of the previous frame).
+    src: u32,
+    /// Word committed by this expansion, or [`NO_WORD`].
+    word: u32,
+    /// Merge key of the candidate — matches survivors to arcs.
+    key: u64,
+    /// Full path score of the candidate.
+    score: f32,
+}
+
+/// A per-session exact lattice, grown one frame at a time by
+/// [`Lattice::pend`] (during expansion) + [`Lattice::commit_frame`]
+/// (after the prune). Column-oriented so snapshots are trivial.
+#[derive(Debug, Clone, Default)]
+pub struct Lattice {
+    // Arc columns (one entry per candidate ever generated, in
+    // generation order — frame-major, then hypothesis order, then
+    // expansion order within a hypothesis).
+    arc_src: Vec<u32>,
+    arc_dst: Vec<u32>,
+    arc_word: Vec<u32>,
+    arc_score: Vec<f32>,
+    arc_frame: Vec<u32>,
+    // Node columns (seed nodes first, then per-frame survivor sets in
+    // the pruner's deterministic order).
+    node_best: Vec<u32>,
+    node_score: Vec<f32>,
+    /// Backtrack-arena links of the seed hypotheses (words committed
+    /// before the lattice started recording); nodes `0..seed_backs.len()`
+    /// are seeds.
+    seed_backs: Vec<u32>,
+    /// Current-frame survivor nodes, aligned with `DecodeState::hyps`.
+    frontier: Vec<u32>,
+    // Per-frame recording scratch (drained by `commit_frame`; never
+    // serialized, excluded from equality).
+    pending: Vec<PendingArc>,
+    index: KeyMap<u32>,
+}
+
+impl PartialEq for Lattice {
+    /// Equality over the persistent lattice only — the per-frame
+    /// recording scratch (`pending`, `index`) is transient state that
+    /// is empty/stale between frames and never serialized.
+    fn eq(&self, other: &Self) -> bool {
+        self.arc_src == other.arc_src
+            && self.arc_dst == other.arc_dst
+            && self.arc_word == other.arc_word
+            && self.arc_score == other.arc_score
+            && self.arc_frame == other.arc_frame
+            && self.node_best == other.node_best
+            && self.node_score == other.node_score
+            && self.seed_backs == other.seed_backs
+            && self.frontier == other.frontier
+    }
+}
+
+/// One path enumerated from the lattice, best-first.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LatticePath {
+    /// Exact completed path score (first-pass: same arithmetic as
+    /// [`super::BeamDecoder::finish`]).
+    pub score: f32,
+    /// Words committed while the lattice was recording, in utterance
+    /// order. Words committed before the seed frame are reachable via
+    /// [`Lattice::seed_back`] + the decode state's backtrack arena.
+    pub words: Vec<u32>,
+    /// Seed node the backward walk terminated at.
+    pub seed: u32,
+}
+
+/// A heap entry in the lazy best-first path enumeration: a total path
+/// score, the node the backward walk has reached, and the words
+/// collected so far (reverse utterance order). `seq` makes heap order
+/// a deterministic total order: ties in score pop in insertion order,
+/// which matches the live decoder's first-wins tie-break.
+#[derive(Debug, Clone)]
+struct Walk {
+    score: f32,
+    seq: u64,
+    cursor: u32,
+    words_rev: Vec<u32>,
+}
+
+impl PartialEq for Walk {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for Walk {}
+impl PartialOrd for Walk {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Walk {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Max-heap: higher score first; equal scores in insertion order.
+        self.score
+            .total_cmp(&other.score)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+impl Lattice {
+    /// Start recording from an existing hypothesis set: one seed node
+    /// per live hypothesis (no incoming arcs), frontier aligned with
+    /// `hyps`. For a fresh utterance this is the single root hypothesis.
+    pub(crate) fn seeded(hyps: &[Hyp]) -> Self {
+        let mut lat = Lattice::default();
+        for (i, h) in hyps.iter().enumerate() {
+            lat.node_best.push(NO_ARC);
+            lat.node_score.push(h.score);
+            lat.seed_backs.push(h.back);
+            lat.frontier.push(i as u32);
+        }
+        lat
+    }
+
+    /// Total recorded arcs (== candidates ever generated while
+    /// recording).
+    pub fn num_arcs(&self) -> usize {
+        self.arc_src.len()
+    }
+
+    /// Total nodes (seeds + per-frame survivors).
+    pub fn num_nodes(&self) -> usize {
+        self.node_best.len()
+    }
+
+    /// Current frontier size (must equal the live hypothesis count).
+    pub fn frontier_len(&self) -> usize {
+        self.frontier.len()
+    }
+
+    /// Backtrack-arena link of seed node `seed` (words committed before
+    /// recording started).
+    pub(crate) fn seed_back(&self, seed: u32) -> u32 {
+        self.seed_backs[seed as usize]
+    }
+
+    /// Record one candidate arc during expansion. `src_hyp` indexes the
+    /// *pre-frame* hypothesis set (== the current frontier); `cand` is
+    /// the fully scored candidate; `word` is the committed word or
+    /// [`NO_WORD`].
+    #[inline]
+    pub(crate) fn pend(&mut self, src_hyp: usize, word: u32, cand: &Hyp) {
+        self.pending.push(PendingArc {
+            src: self.frontier[src_hyp],
+            word,
+            key: cand.state_key(),
+            score: cand.score,
+        });
+    }
+
+    /// Seal one frame: materialize the pending arcs against the frame's
+    /// survivor set. Survivors must be the pruner's output *in its
+    /// deterministic order*, before they are swapped into
+    /// `DecodeState::hyps`. Each survivor becomes a node; each pending
+    /// arc resolves its destination by merge key ([`PRUNED`] if the
+    /// candidate did not survive); the *first* pending arc whose score
+    /// bit-equals the survivor's score becomes the node's winner arc —
+    /// the same first-wins rule the pruner's merge uses, which is what
+    /// keeps the lattice's best path bit-identical to the live search.
+    pub(crate) fn commit_frame(&mut self, frame: u32, survivors: &[Hyp]) {
+        let base = self.node_best.len() as u32;
+        self.index.clear();
+        for (i, h) in survivors.iter().enumerate() {
+            self.index.insert(h.state_key(), i as u32);
+            self.node_best.push(NO_ARC);
+            self.node_score.push(h.score);
+        }
+        let pending = std::mem::take(&mut self.pending);
+        for p in &pending {
+            let arc = self.arc_src.len() as u32;
+            let dst = match self.index.get(&p.key) {
+                Some(&i) => {
+                    let ni = (base + i) as usize;
+                    if self.node_best[ni] == NO_ARC && p.score == self.node_score[ni] {
+                        self.node_best[ni] = arc;
+                    }
+                    base + i
+                }
+                None => PRUNED,
+            };
+            self.arc_src.push(p.src);
+            self.arc_dst.push(dst);
+            self.arc_word.push(p.word);
+            self.arc_score.push(p.score);
+            self.arc_frame.push(frame);
+        }
+        // Hand the (cleared) buffer back so recording stays
+        // allocation-free once warmed.
+        self.pending = pending;
+        self.pending.clear();
+        self.frontier.clear();
+        self.frontier.extend(base..base + survivors.len() as u32);
+        debug_assert!(
+            self.node_best[base as usize..].iter().all(|&b| b != NO_ARC),
+            "every survivor must have a winning arc"
+        );
+    }
+
+    /// Exact N-best path enumeration, lazy best-first (the classic
+    /// sidetrack decomposition): seed the heap with one walk per final
+    /// hypothesis at its completed score, then repeatedly pop the best
+    /// walk, branching into every non-winner incoming arc along its
+    /// remaining winner chain with the exact score delta
+    /// `arc_score − node_score` (≤ 0 by construction). Every lattice
+    /// path has a unique sidetrack decomposition, so each is generated
+    /// at most once; emitted word sequences are deduplicated keeping
+    /// the best-scoring (first-emitted) instance.
+    ///
+    /// `finals[i]` is the completed (`finish`-arithmetic) score of
+    /// frontier hypothesis `i` plus its virtually committed final word,
+    /// if any. The top returned path reproduces
+    /// [`super::BeamDecoder::finish`] exactly — same score bits, same
+    /// words, same tie-break.
+    pub(crate) fn nbest_paths(&self, finals: &[(f32, Option<u32>)], n: usize) -> Vec<LatticePath> {
+        debug_assert_eq!(finals.len(), self.frontier.len());
+        if n == 0 || finals.is_empty() {
+            return Vec::new();
+        }
+        // Non-winner incoming arcs per node (the sidetracks).
+        let mut alts: Vec<Vec<u32>> = vec![Vec::new(); self.node_best.len()];
+        for (a, &d) in self.arc_dst.iter().enumerate() {
+            if d != PRUNED && self.node_best[d as usize] != a as u32 {
+                alts[d as usize].push(a as u32);
+            }
+        }
+        let mut heap = BinaryHeap::new();
+        let mut seq = 0u64;
+        for (i, &(score, word)) in finals.iter().enumerate() {
+            heap.push(Walk {
+                score,
+                seq,
+                cursor: self.frontier[i],
+                words_rev: word.into_iter().collect(),
+            });
+            seq += 1;
+        }
+        let mut out: Vec<LatticePath> = Vec::new();
+        let mut seen: BTreeSet<Vec<u32>> = BTreeSet::new();
+        // Enumeration budget: timing-variant duplicates of the same
+        // word sequence dominate dense lattices, so allow generously
+        // more pops than requested paths before giving up.
+        let pop_cap = n.saturating_mul(64) + 256;
+        let mut pops = 0usize;
+        while let Some(walk) = heap.pop() {
+            pops += 1;
+            let mut words = walk.words_rev;
+            let mut node = walk.cursor;
+            loop {
+                // Branch into each sidetrack entering this node before
+                // following the winner backward: the branched walk
+                // shares this walk's downstream words and re-enters the
+                // lattice at the sidetrack's source.
+                for &a in &alts[node as usize] {
+                    let mut words_rev = words.clone();
+                    if self.arc_word[a as usize] != NO_WORD {
+                        words_rev.push(self.arc_word[a as usize]);
+                    }
+                    heap.push(Walk {
+                        score: walk.score
+                            + (self.arc_score[a as usize] - self.node_score[node as usize]),
+                        seq,
+                        cursor: self.arc_src[a as usize],
+                        words_rev,
+                    });
+                    seq += 1;
+                }
+                let best = self.node_best[node as usize];
+                if best == NO_ARC {
+                    break; // Seed reached; path complete.
+                }
+                if self.arc_word[best as usize] != NO_WORD {
+                    words.push(self.arc_word[best as usize]);
+                }
+                node = self.arc_src[best as usize];
+            }
+            words.reverse();
+            if seen.insert(words.clone()) {
+                out.push(LatticePath { score: walk.score, words, seed: node });
+                if out.len() >= n {
+                    break;
+                }
+            }
+            if pops >= pop_cap {
+                break;
+            }
+        }
+        out
+    }
+
+    /// Write the lattice as `dec.lat.*` tensors (deterministic order;
+    /// lossless both ways).
+    pub(crate) fn write_tensors(&self, tf: &mut TensorFile) {
+        let a = self.arc_src.len();
+        tf.push(Tensor::u32("dec.lat.arc.src", vec![a], self.arc_src.clone()));
+        tf.push(Tensor::u32("dec.lat.arc.dst", vec![a], self.arc_dst.clone()));
+        tf.push(Tensor::u32("dec.lat.arc.word", vec![a], self.arc_word.clone()));
+        tf.push(Tensor::f32("dec.lat.arc.score", vec![a], self.arc_score.clone()));
+        tf.push(Tensor::u32("dec.lat.arc.frame", vec![a], self.arc_frame.clone()));
+        let m = self.node_best.len();
+        tf.push(Tensor::u32("dec.lat.node.best", vec![m], self.node_best.clone()));
+        tf.push(Tensor::f32("dec.lat.node.score", vec![m], self.node_score.clone()));
+        tf.push(Tensor::u32(
+            "dec.lat.seed.back",
+            vec![self.seed_backs.len()],
+            self.seed_backs.clone(),
+        ));
+        tf.push(Tensor::u32(
+            "dec.lat.frontier",
+            vec![self.frontier.len()],
+            self.frontier.clone(),
+        ));
+    }
+
+    /// Read a lattice back from `dec.lat.*` tensors, validating every
+    /// structural invariant a backward walk relies on: column shapes,
+    /// id ranges, strictly-backward arcs (walks terminate), winner-arc
+    /// consistency, and frontier alignment with the hypothesis set
+    /// (`hyps_len`) and seed links with the backtrack arena
+    /// (`arena_len`).
+    pub(crate) fn read_tensors(tf: &TensorFile, hyps_len: usize, arena_len: usize) -> Result<Self> {
+        let arc_src = tf.require("dec.lat.arc.src")?.as_u32()?.to_vec();
+        let arc_dst = tf.require("dec.lat.arc.dst")?.as_u32()?.to_vec();
+        let arc_word = tf.require("dec.lat.arc.word")?.as_u32()?.to_vec();
+        let arc_score = tf.require("dec.lat.arc.score")?.as_f32()?.to_vec();
+        let arc_frame = tf.require("dec.lat.arc.frame")?.as_u32()?.to_vec();
+        let a = arc_src.len();
+        ensure!(
+            arc_dst.len() == a && arc_word.len() == a && arc_score.len() == a
+                && arc_frame.len() == a,
+            "lattice snapshot: ragged arc columns"
+        );
+        let node_best = tf.require("dec.lat.node.best")?.as_u32()?.to_vec();
+        let node_score = tf.require("dec.lat.node.score")?.as_f32()?.to_vec();
+        let m = node_best.len();
+        ensure!(node_score.len() == m, "lattice snapshot: ragged node columns");
+        let seed_backs = tf.require("dec.lat.seed.back")?.as_u32()?.to_vec();
+        ensure!(
+            seed_backs.len() <= m,
+            "lattice snapshot: more seeds than nodes"
+        );
+        let frontier = tf.require("dec.lat.frontier")?.as_u32()?.to_vec();
+        ensure!(
+            frontier.len() == hyps_len,
+            "lattice snapshot: frontier covers {} nodes, state has {hyps_len} hypotheses",
+            frontier.len()
+        );
+        for (i, &b) in seed_backs.iter().enumerate() {
+            ensure!(
+                b == NO_BACK || (b as usize) < arena_len,
+                "lattice snapshot: seed {i} backlink {b} outside arena"
+            );
+        }
+        for (i, &f) in frontier.iter().enumerate() {
+            ensure!(
+                (f as usize) < m,
+                "lattice snapshot: frontier {i} node {f} out of range"
+            );
+        }
+        for i in 0..a {
+            ensure!(
+                (arc_src[i] as usize) < m,
+                "lattice snapshot: arc {i} source {} out of range",
+                arc_src[i]
+            );
+            ensure!(
+                arc_dst[i] == PRUNED
+                    || ((arc_dst[i] as usize) < m && arc_src[i] < arc_dst[i]),
+                "lattice snapshot: arc {i} destination {} not strictly after source",
+                arc_dst[i]
+            );
+        }
+        for (i, &b) in node_best.iter().enumerate() {
+            if i < seed_backs.len() {
+                ensure!(
+                    b == NO_ARC,
+                    "lattice snapshot: seed node {i} has a winner arc"
+                );
+            } else {
+                ensure!(
+                    b != NO_ARC && (b as usize) < a && arc_dst[b as usize] == i as u32,
+                    "lattice snapshot: node {i} winner arc {b} inconsistent"
+                );
+            }
+        }
+        Ok(Lattice {
+            arc_src,
+            arc_dst,
+            arc_word,
+            arc_score,
+            arc_frame,
+            node_best,
+            node_score,
+            seed_backs,
+            frontier,
+            pending: Vec::new(),
+            index: KeyMap::default(),
+        })
+    }
+
+    /// Range-check recorded word ids against the lexicon (the lattice
+    /// leg of [`super::DecoderSnapshot::validate_bounds`]).
+    pub(crate) fn validate_words(&self, lexicon_words: usize) -> Result<()> {
+        for (i, &w) in self.arc_word.iter().enumerate() {
+            ensure!(
+                w == NO_WORD || (w as usize) < lexicon_words,
+                "lattice snapshot: arc {i} word {w} >= {lexicon_words}"
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lm::LmState;
+
+    fn hyp(score: f32, node: u32) -> Hyp {
+        Hyp { score, node, lm: LmState(0), last_token: 0, back: NO_BACK }
+    }
+
+    /// Hand-drive two frames: seed → {A, B} → {C}, with a sidetrack
+    /// into C from B and one pruned candidate per frame.
+    fn two_frame_lattice() -> Lattice {
+        let seed = [hyp(0.0, 0)];
+        let mut lat = Lattice::seeded(&seed);
+        // Frame 1: candidates A(-1, survives), B(-2, survives),
+        // X(-9, pruned).
+        let (a, b, x) = (hyp(-1.0, 1), hyp(-2.0, 2), hyp(-9.0, 3));
+        lat.pend(0, NO_WORD, &a);
+        lat.pend(0, 7, &b);
+        lat.pend(0, NO_WORD, &x);
+        lat.commit_frame(1, &[a, b]);
+        // Frame 2: A→C wins (-3), B→C sidetrack (-4, same state key),
+        // B→Y pruned.
+        let c_from_a = hyp(-3.0, 4);
+        let c_from_b = Hyp { score: -4.0, ..c_from_a };
+        let y = hyp(-8.0, 5);
+        lat.pend(0, 9, &c_from_a);
+        lat.pend(1, NO_WORD, &c_from_b);
+        lat.pend(1, NO_WORD, &y);
+        lat.commit_frame(2, &[c_from_a]);
+        lat
+    }
+
+    #[test]
+    fn commit_resolves_winners_and_pruned_arcs() {
+        let lat = two_frame_lattice();
+        assert_eq!(lat.num_nodes(), 4); // seed + {A,B} + {C}
+        assert_eq!(lat.num_arcs(), 6);
+        assert_eq!(lat.frontier_len(), 1);
+        // Node ids: 0 seed, 1 = A, 2 = B, 3 = C.
+        assert_eq!(lat.node_best[1], 0); // A's winner is arc 0
+        assert_eq!(lat.node_best[2], 1); // B's winner is arc 1
+        assert_eq!(lat.node_best[3], 3); // C's winner is A→C (arc 3)
+        assert_eq!(lat.arc_dst[2], PRUNED);
+        assert_eq!(lat.arc_dst[5], PRUNED);
+        assert_eq!(lat.arc_dst[4], 3); // sidetrack B→C survives as an arc
+    }
+
+    #[test]
+    fn nbest_enumerates_exact_scores_best_first() {
+        let lat = two_frame_lattice();
+        // Final completion adds nothing: finish score == node score.
+        let paths = lat.nbest_paths(&[(-3.0, None)], 4);
+        // Best path: seed→A→C, words [9]. Second: seed→B→C via the
+        // sidetrack, delta = −4 − (−3) = −1 → score −4, words [7].
+        assert_eq!(paths.len(), 2);
+        assert_eq!(paths[0].score, -3.0);
+        assert_eq!(paths[0].words, vec![9]);
+        assert_eq!(paths[0].seed, 0);
+        assert_eq!(paths[1].score, -4.0);
+        assert_eq!(paths[1].words, vec![7]);
+    }
+
+    #[test]
+    fn nbest_includes_virtual_final_word() {
+        let lat = two_frame_lattice();
+        let paths = lat.nbest_paths(&[(-3.5, Some(11))], 2);
+        assert_eq!(paths[0].words, vec![9, 11]);
+        assert_eq!(paths[0].score, -3.5);
+    }
+
+    #[test]
+    fn tensor_round_trip_is_lossless() {
+        let lat = two_frame_lattice();
+        let mut tf = TensorFile::new();
+        lat.write_tensors(&mut tf);
+        let tf = TensorFile::from_bytes(&tf.to_bytes().unwrap()).unwrap();
+        let back = Lattice::read_tensors(&tf, lat.frontier_len(), 0).unwrap();
+        assert_eq!(lat, back);
+    }
+
+    #[test]
+    fn read_rejects_structural_corruption() {
+        let lat = two_frame_lattice();
+        let mut tf = TensorFile::new();
+        lat.write_tensors(&mut tf);
+        // Frontier / hypothesis mismatch.
+        assert!(Lattice::read_tensors(&tf, 2, 0).is_err());
+        // Forward-pointing arc (would make backward walks loop).
+        let mut bad = TensorFile::new();
+        for t in &tf.tensors {
+            if t.name == "dec.lat.arc.src" {
+                let mut src = lat.arc_src.clone();
+                src[3] = 3; // arc 3 is C's winner; C is node 3
+                bad.push(Tensor::u32("dec.lat.arc.src", t.dims.clone(), src));
+            } else {
+                bad.push(t.clone());
+            }
+        }
+        assert!(Lattice::read_tensors(&bad, 1, 0).is_err());
+        // Winner arc pointing at the wrong node.
+        let mut bad = TensorFile::new();
+        for t in &tf.tensors {
+            if t.name == "dec.lat.node.best" {
+                let mut best = lat.node_best.clone();
+                best[3] = 0; // arc 0 lands on node 1, not node 3
+                bad.push(Tensor::u32("dec.lat.node.best", t.dims.clone(), best));
+            } else {
+                bad.push(t.clone());
+            }
+        }
+        assert!(Lattice::read_tensors(&bad, 1, 0).is_err());
+        // Seed backlink outside the arena.
+        assert!(Lattice::read_tensors(&tf, 1, 0).is_ok());
+        let mut bad = TensorFile::new();
+        for t in &tf.tensors {
+            if t.name == "dec.lat.seed.back" {
+                bad.push(Tensor::u32("dec.lat.seed.back", t.dims.clone(), vec![4]));
+            } else {
+                bad.push(t.clone());
+            }
+        }
+        assert!(Lattice::read_tensors(&bad, 1, 0).is_err());
+    }
+
+    #[test]
+    fn word_bounds_are_validated() {
+        let lat = two_frame_lattice();
+        assert!(lat.validate_words(10).is_ok());
+        assert!(lat.validate_words(8).is_err()); // arc word 9 out of range
+    }
+}

@@ -14,7 +14,9 @@
 //! hypothesis-expansion cost model (`accel::kernels`), so timing
 //! experiments see the same search behaviour measured here.
 
+pub mod lattice;
 pub mod prune;
+pub mod rescore;
 
 use crate::config::DecoderConfig;
 use crate::lexicon::{Lexicon, BLANK, ROOT};
@@ -22,7 +24,9 @@ use crate::lm::{LmState, NgramLm};
 use crate::util::tensor_io::{u64_from_words, u64_words, Tensor, TensorFile};
 use anyhow::{ensure, Result};
 use std::borrow::Cow;
+pub use lattice::{Lattice, LatticePath};
 pub use prune::{KeyMap, PruneStats, Pruner};
+pub use rescore::{Rescored, Rescorer, TrigramLm};
 
 /// Sentinel for "no backtrack entry".
 const NO_BACK: u32 = u32::MAX;
@@ -37,6 +41,13 @@ pub struct DecodeScratch {
     cands: Vec<Hyp>,
     map: KeyMap<Hyp>,
     survivors: Vec<Hyp>,
+    /// Lane-major flat candidate table for batched stepping: all lanes'
+    /// candidates for one frame, concatenated in lane order — the
+    /// offloadable shape of the batched exact-lattice decoder
+    /// (arXiv:1910.10032).
+    flat: Vec<Hyp>,
+    /// Exclusive end offset of each lane's slice of `flat`.
+    lane_ends: Vec<usize>,
 }
 
 impl DecodeScratch {
@@ -75,6 +86,33 @@ impl Hyp {
     }
 }
 
+/// Expansion-side counters, one per candidate class the §4.3 kernel
+/// generates — the measured inputs that drive the simulator's
+/// hypothesis-expansion cost model (`accel::kernels::HypWorkload`)
+/// instead of its synthetic defaults.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ExpandStats {
+    /// Hypotheses that entered expansion (Σ live set sizes per frame).
+    pub expanded: u64,
+    /// Blank candidates generated.
+    pub blank: u64,
+    /// CTC-repeat candidates generated.
+    pub repeat: u64,
+    /// Trie-advance candidates generated (including keep-extending
+    /// forks past a completed word).
+    pub advance: u64,
+    /// Word-commit candidates generated (LM transition + arena push).
+    pub commit: u64,
+}
+
+impl ExpandStats {
+    /// Total candidates generated — must equal
+    /// [`PruneStats::generated`] (asserted in tests).
+    pub fn generated(&self) -> u64 {
+        self.blank + self.repeat + self.advance + self.commit
+    }
+}
+
 /// Decoding state carried across acoustic frames (and decoding steps).
 #[derive(Debug, Clone)]
 pub struct DecodeState {
@@ -85,6 +123,38 @@ pub struct DecodeState {
     pub frames: usize,
     /// Accumulated pruning statistics (drives ABL2 + simulator coupling).
     pub stats: PruneStats,
+    /// Accumulated expansion counters (measured simulator inputs).
+    pub expand: ExpandStats,
+    /// Exact lattice, recorded when enabled (boxed: most lanes decode
+    /// 1-best only and pay one pointer).
+    lattice: Option<Box<Lattice>>,
+}
+
+impl DecodeState {
+    /// Start recording an exact lattice from the current hypothesis
+    /// set. Enabled at `start()` time this captures the whole
+    /// utterance; enabling mid-utterance seeds from the live set (words
+    /// committed earlier stay reachable through the backtrack arena).
+    /// Idempotent.
+    pub fn enable_lattice(&mut self) {
+        if self.lattice.is_none() {
+            self.lattice = Some(Box::new(Lattice::seeded(&self.hyps)));
+        }
+    }
+
+    /// The recorded lattice, if recording is enabled.
+    pub fn lattice(&self) -> Option<&Lattice> {
+        self.lattice.as_deref()
+    }
+}
+
+/// One entry of an exact N-best list: first-pass words + score (same
+/// arithmetic as [`Transcript`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NbestEntry {
+    pub words: Vec<u32>,
+    pub text: String,
+    pub score: f32,
 }
 
 /// Final transcription.
@@ -112,8 +182,11 @@ pub struct DecoderSnapshot {
     backs: Vec<u32>,
     /// Backtrack arena, interleaved `[parent, word]` pairs.
     arena: Vec<u32>,
-    /// Frame counter + the six `PruneStats` counters, as u64 lo/hi pairs.
+    /// Frame counter + the six `PruneStats` counters + the five
+    /// `ExpandStats` counters, as u64 lo/hi pairs (24 words).
     counters: Vec<u32>,
+    /// Exact lattice, when the lane was recording one.
+    lattice: Option<Lattice>,
 }
 
 impl DecoderSnapshot {
@@ -127,7 +200,8 @@ impl DecoderSnapshot {
             last_tokens: Vec::with_capacity(state.hyps.len()),
             backs: Vec::with_capacity(state.hyps.len()),
             arena: Vec::with_capacity(2 * state.arena.len()),
-            counters: Vec::with_capacity(14),
+            counters: Vec::with_capacity(24),
+            lattice: state.lattice.as_deref().cloned(),
         };
         for h in &state.hyps {
             snap.scores.push(h.score);
@@ -148,6 +222,11 @@ impl DecoderSnapshot {
             state.stats.capacity_pruned,
             state.stats.peak_live,
             state.stats.rounds,
+            state.expand.expanded,
+            state.expand.blank,
+            state.expand.repeat,
+            state.expand.advance,
+            state.expand.commit,
         ] {
             snap.counters.extend_from_slice(&u64_words(v));
         }
@@ -189,6 +268,14 @@ impl DecoderSnapshot {
                 peak_live: c(5),
                 rounds: c(6),
             },
+            expand: ExpandStats {
+                expanded: c(7),
+                blank: c(8),
+                repeat: c(9),
+                advance: c(10),
+                commit: c(11),
+            },
+            lattice: self.lattice.clone().map(Box::new),
         }
     }
 
@@ -211,6 +298,9 @@ impl DecoderSnapshot {
             vec![self.counters.len()],
             self.counters.clone(),
         ));
+        if let Some(lat) = &self.lattice {
+            lat.write_tensors(tf);
+        }
     }
 
     /// Read a snapshot back from `dec.*` tensors, validating shapes.
@@ -229,8 +319,8 @@ impl DecoderSnapshot {
         ensure!(arena.len() % 2 == 0, "decoder snapshot: odd arena payload");
         let counters = tf.require("dec.counters")?.as_u32()?.to_vec();
         ensure!(
-            counters.len() == 14,
-            "decoder snapshot: expected 14 counter words, got {}",
+            counters.len() == 24,
+            "decoder snapshot: expected 24 counter words, got {}",
             counters.len()
         );
         let arena_len = arena.len() as u64 / 2;
@@ -253,7 +343,14 @@ impl DecoderSnapshot {
                 "decoder snapshot: arena entry {i} parent {parent} not an earlier entry"
             );
         }
-        Ok(DecoderSnapshot { scores, nodes, lms, last_tokens, backs, arena, counters })
+        // The lattice rides along only when the lane recorded one; its
+        // presence is keyed on its node columns.
+        let lattice = if tf.get("dec.lat.node.best").is_some() {
+            Some(Lattice::read_tensors(tf, n, arena_len as usize)?)
+        } else {
+            None
+        };
+        Ok(DecoderSnapshot { scores, nodes, lms, last_tokens, backs, arena, counters, lattice })
     }
 
     /// Range-check every id against the decoding resources the restored
@@ -292,6 +389,9 @@ impl DecoderSnapshot {
                 (word as usize) < lexicon_words,
                 "decoder snapshot: arena entry {i} word {word} >= {lexicon_words}"
             );
+        }
+        if let Some(lat) = &self.lattice {
+            lat.validate_words(lexicon_words)?;
         }
         Ok(())
     }
@@ -357,6 +457,8 @@ impl<'a> BeamDecoder<'a> {
             arena: Vec::new(),
             frames: 0,
             stats: PruneStats::default(),
+            expand: ExpandStats::default(),
+            lattice: None,
         }
     }
 
@@ -371,17 +473,76 @@ impl<'a> BeamDecoder<'a> {
 
     /// Advance `B = states.len()` independent per-lane decode states over a
     /// lane-major `[B × tokens]` logit block — the decoder half of the
-    /// lane-batched execution core. The lexicon trie, LM and word-id
-    /// mapping are borrowed once for the whole block instead of once per
-    /// lane; each lane's expansion + prune is identical to [`Self::step`],
-    /// so batched decoding is bit-identical to B sequential scalar decodes.
+    /// lane-batched execution core. Allocates a fresh scratch; hot loops
+    /// should hold a [`DecodeScratch`] and call [`Self::step_batch_with`].
     pub fn step_batch(&self, states: &mut [&mut DecodeState], logps: &[f32]) {
+        let mut sc = DecodeScratch::default();
+        self.step_batch_with(states, logps, &mut sc);
+    }
+
+    /// Lane-major batched stepping (the offloadable shape of the batched
+    /// exact-lattice decoder, arXiv:1910.10032): phase one expands every
+    /// lane into one flat candidate table (`sc.flat`, lane-major — the
+    /// layout a hypothesis-expansion kernel would score in a single
+    /// launch); phase two prunes each lane's contiguous slice with the
+    /// deterministic total-order sort. Each lane's candidate generation
+    /// order, scores and prune are exactly [`Self::step_with`]'s, so
+    /// batched decoding is bit-identical to B sequential scalar decodes
+    /// (hypothesis sets *and* counters — asserted in tests).
+    pub fn step_batch_with(
+        &self,
+        states: &mut [&mut DecodeState],
+        logps: &[f32],
+        sc: &mut DecodeScratch,
+    ) {
         let tokens = self.lex.tokens.len();
         debug_assert_eq!(logps.len(), states.len() * tokens);
-        let mut sc = DecodeScratch::default();
+        self.batch_begin(sc);
         for (lane, state) in states.iter_mut().enumerate() {
-            self.step_with(state, &logps[lane * tokens..(lane + 1) * tokens], &mut sc);
+            self.batch_expand(state, &logps[lane * tokens..(lane + 1) * tokens], sc);
         }
+        for (lane, state) in states.iter_mut().enumerate() {
+            self.batch_prune(state, lane, sc);
+        }
+    }
+
+    /// Begin a lane-major batched frame: reset the flat candidate table.
+    /// Exposed (with [`Self::batch_expand`] / [`Self::batch_prune`]) so
+    /// callers that cannot hand over a `&mut [&mut DecodeState]` slice —
+    /// the engine walks lanes embedded in larger session objects — can
+    /// still drive the same lane-major path allocation-free.
+    pub fn batch_begin(&self, sc: &mut DecodeScratch) {
+        sc.flat.clear();
+        sc.lane_ends.clear();
+    }
+
+    /// Phase one for one lane: expand its hypotheses into the shared
+    /// flat candidate table. Lanes must be expanded in lane order.
+    pub fn batch_expand(&self, state: &mut DecodeState, logp: &[f32], sc: &mut DecodeScratch) {
+        self.expand_into(state, logp, &mut sc.flat);
+        sc.lane_ends.push(sc.flat.len());
+    }
+
+    /// Phase two for one lane: prune its slice of the flat table and
+    /// swap the survivors in. Callable in any lane order (slices are
+    /// disjoint), but every expanded lane must be pruned exactly once
+    /// before the next [`Self::batch_begin`].
+    pub fn batch_prune(&self, state: &mut DecodeState, lane: usize, sc: &mut DecodeScratch) {
+        let DecodeScratch { cands, map, survivors, flat, lane_ends } = sc;
+        let start = if lane == 0 { 0 } else { lane_ends[lane - 1] };
+        let end = lane_ends[lane];
+        cands.clear();
+        cands.extend_from_slice(&flat[start..end]);
+        state.frames += 1;
+        let pruner = Pruner {
+            beam: self.cfg.beam,
+            max_hyps: self.cfg.max_hyps,
+        };
+        pruner.prune_into(cands, map, survivors, &mut state.stats);
+        if let Some(lat) = state.lattice.as_deref_mut() {
+            lat.commit_frame(state.frames as u32, survivors);
+        }
+        std::mem::swap(&mut state.hyps, survivors);
     }
 
     /// One frame of hypothesis expansion + prune through a reusable
@@ -391,23 +552,58 @@ impl<'a> BeamDecoder<'a> {
     /// amortized-growth container). Identical results to [`Self::step`]:
     /// pruning is a deterministic total order.
     pub fn step_with(&self, state: &mut DecodeState, logp: &[f32], sc: &mut DecodeScratch) {
-        debug_assert_eq!(logp.len(), self.lex.tokens.len());
-        let DecodeScratch { cands, map, survivors } = sc;
+        let DecodeScratch { cands, map, survivors, .. } = sc;
         cands.clear();
+        self.expand_into(state, logp, cands);
+        state.frames += 1;
+        let pruner = Pruner {
+            beam: self.cfg.beam,
+            max_hyps: self.cfg.max_hyps,
+        };
+        pruner.prune_into(cands, map, survivors, &mut state.stats);
+        if let Some(lat) = state.lattice.as_deref_mut() {
+            lat.commit_frame(state.frames as u32, survivors);
+        }
+        // Survivors become the live set; the old live set's buffer is
+        // recycled as next frame's survivor scratch.
+        std::mem::swap(&mut state.hyps, survivors);
+    }
+
+    /// Hypothesis expansion for one lane-frame, appended to `cands` —
+    /// the single source of the §4.3 candidate arithmetic, shared by
+    /// scalar ([`Self::step_with`]) and lane-major ([`Self::batch_expand`])
+    /// stepping so the two are bit-identical by construction. When the
+    /// state records a lattice, every candidate also pends an arc (in
+    /// the same deterministic generation order the pruner sees).
+    fn expand_into(&self, state: &mut DecodeState, logp: &[f32], cands: &mut Vec<Hyp>) {
+        debug_assert_eq!(logp.len(), self.lex.tokens.len());
         cands.reserve(state.hyps.len() * 8);
-        for h in &state.hyps {
+        let DecodeState { hyps, arena, expand, lattice, .. } = state;
+        let mut lat = lattice.as_deref_mut();
+        expand.expanded += hyps.len() as u64;
+        for (src, h) in hyps.iter().enumerate() {
             // (1) blank.
-            cands.push(Hyp {
+            let cand = Hyp {
                 score: h.score + logp[BLANK as usize] + self.cfg.silence_bonus,
                 last_token: BLANK,
                 ..*h
-            });
+            };
+            if let Some(l) = lat.as_deref_mut() {
+                l.pend(src, lattice::NO_WORD, &cand);
+            }
+            cands.push(cand);
+            expand.blank += 1;
             // (2) repeat of the last unit (valid CTC path, no advance).
             if h.last_token != BLANK {
-                cands.push(Hyp {
+                let cand = Hyp {
                     score: h.score + logp[h.last_token as usize],
                     ..*h
-                });
+                };
+                if let Some(l) = lat.as_deref_mut() {
+                    l.pend(src, lattice::NO_WORD, &cand);
+                }
+                cands.push(cand);
+                expand.repeat += 1;
             }
             // (3) advance along every lexicon link.
             for (&tok, &child) in &self.lex.node(h.node).children {
@@ -418,20 +614,27 @@ impl<'a> BeamDecoder<'a> {
                 }
                 let base = h.score + logp[tok as usize];
                 match self.lex.node(child).word {
-                    None => cands.push(Hyp {
-                        score: base,
-                        node: child,
-                        last_token: tok,
-                        ..*h
-                    }),
+                    None => {
+                        let cand = Hyp {
+                            score: base,
+                            node: child,
+                            last_token: tok,
+                            ..*h
+                        };
+                        if let Some(l) = lat.as_deref_mut() {
+                            l.pend(src, lattice::NO_WORD, &cand);
+                        }
+                        cands.push(cand);
+                        expand.advance += 1;
+                    }
                     Some(word) => {
                         // Commit the word: LM transition + word penalty,
                         // return to the trie root for the next word.
                         let lm_word = self.word_lm_ids[word as usize];
                         let (lm_lp, lm_next) = self.lm.score(h.lm, lm_word);
-                        let back = state.arena.len() as u32;
-                        state.arena.push((h.back, word));
-                        cands.push(Hyp {
+                        let back = arena.len() as u32;
+                        arena.push((h.back, word));
+                        let cand = Hyp {
                             score: base
                                 + self.cfg.lm_weight * lm_lp
                                 + self.cfg.word_penalty,
@@ -439,61 +642,71 @@ impl<'a> BeamDecoder<'a> {
                             lm: lm_next,
                             last_token: tok,
                             back,
-                        });
+                        };
+                        if let Some(l) = lat.as_deref_mut() {
+                            l.pend(src, word, &cand);
+                        }
+                        cands.push(cand);
+                        expand.commit += 1;
                         // Keep extending if longer words share this prefix.
                         if !self.lex.node(child).children.is_empty() {
-                            cands.push(Hyp {
+                            let cand = Hyp {
                                 score: base,
                                 node: child,
                                 last_token: tok,
                                 ..*h
-                            });
+                            };
+                            if let Some(l) = lat.as_deref_mut() {
+                                l.pend(src, lattice::NO_WORD, &cand);
+                            }
+                            cands.push(cand);
+                            expand.advance += 1;
                         }
                     }
                 }
             }
         }
-        state.frames += 1;
-        let pruner = Pruner {
-            beam: self.cfg.beam,
-            max_hyps: self.cfg.max_hyps,
-        };
-        pruner.prune_into(cands, map, survivors, &mut state.stats);
-        // Survivors become the live set; the old live set's buffer is
-        // recycled as next frame's survivor scratch.
-        std::mem::swap(&mut state.hyps, survivors);
+    }
+
+    /// Complete one hypothesis at utterance end: commit any word
+    /// finished at its current trie node (LM transition + word penalty),
+    /// then apply the LM sentence-end score. Returns the completed score
+    /// and the virtually committed final word, if any — the exact
+    /// per-hypothesis arithmetic of [`Self::finish`], factored out so
+    /// N-best extraction scores final hypotheses bit-identically.
+    pub fn finish_hyp(&self, h: &Hyp) -> (f32, Option<u32>) {
+        let mut score = h.score;
+        let mut lm = h.lm;
+        let mut final_word = None;
+        if let Some(word) = self.lex.node(h.node).word {
+            let lm_word = self.word_lm_ids[word as usize];
+            let (lm_lp, lm_next) = self.lm.score(lm, lm_word);
+            score += self.cfg.lm_weight * lm_lp + self.cfg.word_penalty;
+            lm = lm_next;
+            final_word = Some(word);
+        }
+        score += self.cfg.lm_weight * self.lm.score_end(lm);
+        (score, final_word)
     }
 
     /// Extract the best transcription: commit any word completed at the
     /// current node, apply the LM sentence-end score, backtrack words.
+    /// Ties keep the first (deterministic-order) hypothesis.
     pub fn finish(&self, state: &DecodeState) -> Transcript {
         let mut best: Option<(f32, Vec<u32>)> = None;
         for h in &state.hyps {
-            let mut score = h.score;
-            let mut back = h.back;
-            let mut lm = h.lm;
-            if let Some(word) = self.lex.node(h.node).word {
-                let lm_word = self.word_lm_ids[word as usize];
-                let (lm_lp, lm_next) = self.lm.score(lm, lm_word);
-                score += self.cfg.lm_weight * lm_lp + self.cfg.word_penalty;
-                lm = lm_next;
-                // Virtual arena entry (not stored; we backtrack manually).
-                let mut words = self.backtrack(state, back);
-                words.push(word);
-                score += self.cfg.lm_weight * self.lm.score_end(lm);
-                match &best {
-                    Some((b, _)) if *b >= score => {}
-                    _ => best = Some((score, words)),
+            let (score, final_word) = self.finish_hyp(h);
+            if let Some((b, _)) = &best {
+                if *b >= score {
+                    continue;
                 }
-                continue;
             }
-            score += self.cfg.lm_weight * self.lm.score_end(lm);
-            let words = self.backtrack(state, back);
-            let _ = &mut back;
-            match &best {
-                Some((b, _)) if *b >= score => {}
-                _ => best = Some((score, words)),
+            let mut words = self.backtrack(state, h.back);
+            if let Some(word) = final_word {
+                // Virtual arena entry (not stored; we backtrack manually).
+                words.push(word);
             }
+            best = Some((score, words));
         }
         let (score, words) = best.unwrap_or((f32::MIN, Vec::new()));
         let text = words
@@ -502,6 +715,61 @@ impl<'a> BeamDecoder<'a> {
             .collect::<Vec<_>>()
             .join(" ");
         Transcript { words, text, score }
+    }
+
+    /// Exact N-best extraction. With a recorded lattice this enumerates
+    /// paths best-first via the sidetrack decomposition
+    /// ([`Lattice::nbest_paths`]): entry 0 is bit-identical to
+    /// [`Self::finish`] (same score, words and tie-break), and every
+    /// entry's score is the exact first-pass score of its path. Without
+    /// a lattice it degrades to ranking the surviving endpoint
+    /// hypotheses (still deterministic, but blind to merged-away
+    /// alternatives). Distinct entries have distinct word sequences.
+    pub fn nbest(&self, state: &DecodeState, n: usize) -> Vec<NbestEntry> {
+        let finals: Vec<(f32, Option<u32>)> =
+            state.hyps.iter().map(|h| self.finish_hyp(h)).collect();
+        let mut out = Vec::new();
+        match state.lattice.as_deref() {
+            Some(lat) => {
+                for p in lat.nbest_paths(&finals, n) {
+                    let mut words = self.backtrack(state, lat.seed_back(p.seed));
+                    words.extend(p.words);
+                    out.push(self.entry(words, p.score));
+                }
+            }
+            None => {
+                let mut order: Vec<usize> = (0..finals.len()).collect();
+                order.sort_by(|&a, &b| finals[b].0.total_cmp(&finals[a].0).then(a.cmp(&b)));
+                let mut seen = std::collections::BTreeSet::new();
+                for i in order {
+                    let (score, final_word) = finals[i];
+                    let mut words = self.backtrack(state, state.hyps[i].back);
+                    if let Some(w) = final_word {
+                        words.push(w);
+                    }
+                    if seen.insert(words.clone()) {
+                        out.push(self.entry(words, score));
+                        if out.len() >= n {
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+        // A dead decode (no hypotheses) still answers like `finish`.
+        if out.is_empty() && n > 0 {
+            out.push(self.entry(Vec::new(), f32::MIN));
+        }
+        out
+    }
+
+    fn entry(&self, words: Vec<u32>, score: f32) -> NbestEntry {
+        let text = words
+            .iter()
+            .map(|&w| self.lex.word_name(w))
+            .collect::<Vec<_>>()
+            .join(" ");
+        NbestEntry { words, text, score }
     }
 
     fn backtrack(&self, state: &DecodeState, mut back: u32) -> Vec<u32> {
@@ -876,6 +1144,174 @@ mod tests {
             let t_rest = dec.finish(&restored);
             assert_eq!(t_live.text, t_rest.text, "cut {cut}");
             assert_eq!(t_live.score, t_rest.score, "cut {cut}");
+        }
+    }
+
+    /// Frames with genuine ambiguity (merges, beam prunes, LM
+    /// tie-breaks) so lattice tests exercise sidetracks, not just a
+    /// single chain.
+    fn ambiguous_frames(lex: &Lexicon) -> Vec<f32> {
+        let a = lex.tokens.id("a").unwrap();
+        let b = lex.tokens.id("b").unwrap();
+        let c = lex.tokens.id("c").unwrap();
+        let tokens = lex.tokens.len();
+        let mut frames = frames_for(&[a, b, BLANK], tokens);
+        let mut row = vec![0.02f32.ln(); tokens];
+        row[b as usize] = 0.48f32.ln();
+        row[c as usize] = 0.48f32.ln();
+        frames.extend(row);
+        frames.extend(frames_for(&[a, BLANK, a, b, c], tokens));
+        frames
+    }
+
+    #[test]
+    fn expand_stats_partition_generated() {
+        let (lex, lm) = fixtures();
+        let dec = BeamDecoder::new(&lex, &lm, DecoderConfig::default()).unwrap();
+        let mut st = dec.start();
+        for row in ambiguous_frames(&lex).chunks(lex.tokens.len()) {
+            dec.step(&mut st, row);
+            assert_eq!(st.expand.generated(), st.stats.generated);
+        }
+        assert!(st.expand.expanded > 0);
+        assert!(st.expand.commit > 0, "test input commits words");
+    }
+
+    #[test]
+    fn lattice_best_path_is_bit_identical_to_finish() {
+        let (lex, lm) = fixtures();
+        let dec = BeamDecoder::new(&lex, &lm, DecoderConfig::default()).unwrap();
+        let mut st = dec.start();
+        st.enable_lattice();
+        for row in ambiguous_frames(&lex).chunks(lex.tokens.len()) {
+            dec.step(&mut st, row);
+        }
+        let lat = st.lattice().expect("recording enabled");
+        assert!(lat.num_arcs() > lat.num_nodes(), "ambiguity must leave sidetracks");
+        let t = dec.finish(&st);
+        let nb = dec.nbest(&st, 5);
+        assert!(nb.len() > 1, "ambiguous input must yield alternatives");
+        assert_eq!(nb[0].words, t.words);
+        assert_eq!(nb[0].text, t.text);
+        assert_eq!(nb[0].score, t.score, "lattice best must be bit-identical");
+        for w in nb.windows(2) {
+            assert!(w[0].score >= w[1].score, "N-best must be sorted");
+            assert_ne!(w[0].words, w[1].words, "entries must be distinct");
+        }
+        assert_eq!(nb, dec.nbest(&st, 5), "N-best must be deterministic");
+    }
+
+    #[test]
+    fn nbest_without_lattice_degrades_to_endpoint_ranking() {
+        let (lex, lm) = fixtures();
+        let dec = BeamDecoder::new(&lex, &lm, DecoderConfig::default()).unwrap();
+        let mut st = dec.start();
+        for row in ambiguous_frames(&lex).chunks(lex.tokens.len()) {
+            dec.step(&mut st, row);
+        }
+        assert!(st.lattice().is_none());
+        let t = dec.finish(&st);
+        let nb = dec.nbest(&st, 3);
+        assert_eq!(nb[0].words, t.words);
+        assert_eq!(nb[0].score, t.score);
+    }
+
+    #[test]
+    fn batched_lattices_match_scalar_lattices() {
+        // Lane-major batched stepping with recording enabled: per-lane
+        // lattices, hypothesis sets, counters and N-best lists must all
+        // equal the scalar decodes'.
+        let (lex, lm) = fixtures();
+        let a = lex.tokens.id("a").unwrap();
+        let b = lex.tokens.id("b").unwrap();
+        let c = lex.tokens.id("c").unwrap();
+        let dec = BeamDecoder::new(&lex, &lm, DecoderConfig::default()).unwrap();
+        let tokens = lex.tokens.len();
+        let lane_paths: Vec<Vec<u32>> = vec![
+            vec![a, b, BLANK, b, a],
+            vec![a, b, c, BLANK, BLANK],
+            vec![b, a, BLANK, a, b],
+        ];
+        let frames: Vec<Vec<f32>> =
+            lane_paths.iter().map(|p| frames_for(p, tokens)).collect();
+        let lanes = lane_paths.len();
+        let mut scalar: Vec<DecodeState> = (0..lanes).map(|_| dec.start()).collect();
+        for st in &mut scalar {
+            st.enable_lattice();
+        }
+        for (lane, st) in scalar.iter_mut().enumerate() {
+            for row in frames[lane].chunks(tokens) {
+                dec.step(st, row);
+            }
+        }
+        let mut batched: Vec<DecodeState> = (0..lanes).map(|_| dec.start()).collect();
+        for st in &mut batched {
+            st.enable_lattice();
+        }
+        let mut sc = DecodeScratch::default();
+        let n_frames = lane_paths[0].len();
+        for f in 0..n_frames {
+            let mut block = Vec::with_capacity(lanes * tokens);
+            for lane_frames in &frames {
+                block.extend_from_slice(&lane_frames[f * tokens..(f + 1) * tokens]);
+            }
+            let mut refs: Vec<&mut DecodeState> = batched.iter_mut().collect();
+            dec.step_batch_with(&mut refs, &block, &mut sc);
+        }
+        for lane in 0..lanes {
+            assert_eq!(scalar[lane].hyps, batched[lane].hyps, "lane {lane} hyps");
+            assert_eq!(scalar[lane].stats, batched[lane].stats, "lane {lane} stats");
+            assert_eq!(scalar[lane].expand, batched[lane].expand, "lane {lane} expand");
+            assert_eq!(
+                scalar[lane].lattice(),
+                batched[lane].lattice(),
+                "lane {lane} lattice"
+            );
+            assert_eq!(
+                dec.nbest(&scalar[lane], 4),
+                dec.nbest(&batched[lane], 4),
+                "lane {lane} nbest"
+            );
+        }
+    }
+
+    #[test]
+    fn lattice_snapshot_round_trip_preserves_nbest() {
+        let (lex, lm) = fixtures();
+        let dec = BeamDecoder::new(&lex, &lm, DecoderConfig::default()).unwrap();
+        let tokens = lex.tokens.len();
+        let frames = ambiguous_frames(&lex);
+        let n_frames = frames.len() / tokens;
+        for cut in [2usize, 5] {
+            let mut live = dec.start();
+            live.enable_lattice();
+            for row in frames[..cut * tokens].chunks(tokens) {
+                dec.step(&mut live, row);
+            }
+            assert!(live.lattice().unwrap().num_arcs() > 0, "cut {cut}: lattice non-empty");
+            let mut tf = TensorFile::new();
+            DecoderSnapshot::capture(&live).write_tensors(&mut tf);
+            let tf = TensorFile::from_bytes(&tf.to_bytes().unwrap()).unwrap();
+            let snap = DecoderSnapshot::read_tensors(&tf).unwrap();
+            snap.validate_bounds(
+                lex.num_nodes(),
+                lm.vocab_len(),
+                lex.words.len(),
+                lex.tokens.len(),
+            )
+            .unwrap();
+            let mut restored = snap.restore();
+            assert_eq!(live.lattice(), restored.lattice(), "cut {cut}");
+            assert_eq!(live.expand, restored.expand, "cut {cut}");
+            for row in frames[cut * tokens..n_frames * tokens].chunks(tokens) {
+                dec.step(&mut live, row);
+                dec.step(&mut restored, row);
+            }
+            assert_eq!(live.lattice(), restored.lattice(), "cut {cut} after continue");
+            let t_live = dec.finish(&live);
+            let t_rest = dec.finish(&restored);
+            assert_eq!(t_live.score, t_rest.score, "cut {cut}");
+            assert_eq!(dec.nbest(&live, 4), dec.nbest(&restored, 4), "cut {cut}");
         }
     }
 

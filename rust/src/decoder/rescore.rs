@@ -1,0 +1,293 @@
+//! Second-pass LM rescoring of exact N-best lists (§4.3's programmable
+//! follow-on stage): the first pass decodes with the cheap bigram
+//! [`NgramLm`] baked into the search, the lattice yields an exact
+//! N-best list, and this module re-ranks it under a higher-order
+//! (trigram) LM — the classic two-pass recipe the exact-lattice
+//! decoder of Braun et al. (arXiv:1910.10032) exists to enable.
+//!
+//! The second-pass score is an exact swap of the LM component:
+//! `second = first − lm_weight·lnP_bigram(words) + weight·lnP_trigram(words)`
+//! where `lnP_bigram(words)` is the full-sentence score of the
+//! first-pass LM. Acoustic scores and word penalties carry over
+//! unchanged. Re-ranking is deterministic: ties in the second-pass
+//! score keep first-pass (rank) order.
+
+use super::NbestEntry;
+use crate::lexicon::Lexicon;
+use crate::lm::{LmState, NgramLm, SENT_END, UNK};
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+/// Backoff trigram LM built over the bigram [`NgramLm`]: seen trigrams
+/// carry absolutely discounted probabilities; unseen trigrams back off
+/// (Katz-style, with the same simplified backoff mass normalization as
+/// the bigram estimator) to the bigram score.
+#[derive(Debug, Clone)]
+pub struct TrigramLm {
+    backoff: NgramLm,
+    /// (u, v, w) → ln p(w | u, v) for seen trigrams.
+    tri_logp: BTreeMap<(u32, u32, u32), f32>,
+    /// (u, v) → ln backoff weight for contexts with seen trigrams.
+    ctx_backoff: BTreeMap<(u32, u32), f32>,
+}
+
+impl TrigramLm {
+    /// Estimate from a corpus of sentences with absolute discounting,
+    /// sharing the vocabulary (and the backoff distribution) with a
+    /// bigram estimated from the same corpus.
+    pub fn estimate(corpus: &[Vec<String>], discount: f64) -> Result<Self> {
+        let backoff = NgramLm::estimate(corpus, discount)?;
+        let start = backoff.start().0;
+        let mut tri_count: BTreeMap<(u32, u32, u32), u64> = BTreeMap::new();
+        let mut ctx_count: BTreeMap<(u32, u32), u64> = BTreeMap::new();
+        for sent in corpus {
+            // Context starts as (<s>, <s>); the sentence end transition
+            // is part of the model, as in the bigram.
+            let (mut u, mut v) = (start, start);
+            for w in sent
+                .iter()
+                .map(String::as_str)
+                .chain(std::iter::once(SENT_END))
+            {
+                let id = backoff
+                    .word_id(w)
+                    .expect("bigram estimator interned every corpus word");
+                *tri_count.entry((u, v, id)).or_default() += 1;
+                *ctx_count.entry((u, v)).or_default() += 1;
+                u = v;
+                v = id;
+            }
+        }
+        let mut tri_logp = BTreeMap::new();
+        let mut ctx_backoff = BTreeMap::new();
+        for (&(u, v), &ct) in &ctx_count {
+            let seen: Vec<(u32, u64)> = tri_count
+                .range((u, v, 0)..=(u, v, u32::MAX))
+                .map(|(&(_, _, w), &c)| (w, c))
+                .collect();
+            for &(w, c) in &seen {
+                let p = (c as f64 - discount).max(1e-10) / ct as f64;
+                tri_logp.insert((u, v, w), p.ln() as f32);
+            }
+            let bo = (discount * seen.len() as f64 / ct as f64).max(1e-10);
+            ctx_backoff.insert((u, v), bo.ln() as f32);
+        }
+        Ok(TrigramLm { backoff, tri_logp, ctx_backoff })
+    }
+
+    /// The shared vocabulary's bigram backoff model.
+    pub fn bigram(&self) -> &NgramLm {
+        &self.backoff
+    }
+
+    /// Number of seen trigrams (reporting).
+    pub fn num_trigrams(&self) -> usize {
+        self.tri_logp.len()
+    }
+
+    /// `ln p(w | u, v)` with backoff to the bigram.
+    pub fn logp(&self, u: u32, v: u32, w: u32) -> f32 {
+        match self.tri_logp.get(&(u, v, w)) {
+            Some(&lp) => lp,
+            None => {
+                self.ctx_backoff.get(&(u, v)).copied().unwrap_or(0.0)
+                    + self.backoff.score(LmState(v), w).0
+            }
+        }
+    }
+
+    /// Log-prob of a whole sentence, `<s> <s> … </s>`, unknown words
+    /// mapped to `<unk>` — the second-pass counterpart of
+    /// [`NgramLm::sentence_logp`].
+    pub fn sentence_logp(&self, sentence: &[&str]) -> f32 {
+        let unk = self.backoff.word_id(UNK).expect("LM missing <unk>");
+        let end = self
+            .backoff
+            .word_id(SENT_END)
+            .expect("LM missing </s>");
+        let start = self.backoff.start().0;
+        let (mut u, mut v) = (start, start);
+        let mut total = 0.0f32;
+        for w in sentence {
+            let id = self.backoff.word_id(w).unwrap_or(unk);
+            total += self.logp(u, v, id);
+            u = v;
+            v = id;
+        }
+        total + self.logp(u, v, end)
+    }
+
+    /// Estimated external-memory footprint of the trigram tables
+    /// (simulator reporting; the bigram's graph is counted separately).
+    pub fn graph_bytes(&self) -> usize {
+        self.tri_logp.len() * 16 + self.ctx_backoff.len() * 12
+    }
+}
+
+/// One N-best entry after the second pass.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Rescored {
+    pub words: Vec<u32>,
+    pub text: String,
+    /// Exact first-pass (search) score of this path.
+    pub first_pass: f32,
+    /// Score after swapping the LM component for the second-pass LM.
+    pub second_pass: f32,
+}
+
+/// A configured second pass: the higher-order LM plus its weight.
+#[derive(Debug, Clone)]
+pub struct Rescorer {
+    pub lm: TrigramLm,
+    /// Weight on the second-pass LM log-prob (replaces the first pass's
+    /// `lm_weight · lnP_bigram` share).
+    pub weight: f32,
+}
+
+impl Rescorer {
+    /// Re-rank an N-best list: swap each entry's first-pass LM
+    /// component (`lm_weight · lnP_bigram`) for
+    /// `weight · lnP_trigram`, then sort by second-pass score
+    /// descending with ties keeping first-pass order. Deterministic for
+    /// a fixed entry order.
+    pub fn rescore(
+        &self,
+        entries: &[NbestEntry],
+        lex: &Lexicon,
+        first_lm: &NgramLm,
+        lm_weight: f32,
+    ) -> Vec<Rescored> {
+        let mut ranked: Vec<(usize, Rescored)> = entries
+            .iter()
+            .enumerate()
+            .map(|(rank, e)| {
+                let names: Vec<&str> =
+                    e.words.iter().map(|&w| lex.word_name(w)).collect();
+                let second = e.score - lm_weight * first_lm.sentence_logp(&names)
+                    + self.weight * self.lm.sentence_logp(&names);
+                (
+                    rank,
+                    Rescored {
+                        words: e.words.clone(),
+                        text: e.text.clone(),
+                        first_pass: e.score,
+                        second_pass: second,
+                    },
+                )
+            })
+            .collect();
+        ranked.sort_by(|a, b| {
+            b.1.second_pass
+                .total_cmp(&a.1.second_pass)
+                .then(a.0.cmp(&b.0))
+        });
+        ranked.into_iter().map(|(_, r)| r).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn corpus() -> Vec<Vec<String>> {
+        // Trigram-distinguishable: after "b", the bigram sees c and d
+        // equally often; only the (·, b) two-word context tells them
+        // apart.
+        let sents = [
+            "a b c", "a b c", "a b c", "x b d", "x b d", "x b d", "a b c", "x b d",
+        ];
+        sents
+            .iter()
+            .map(|s| s.split_whitespace().map(str::to_string).collect())
+            .collect()
+    }
+
+    #[test]
+    fn trigram_separates_contexts_the_bigram_conflates() {
+        let tri = TrigramLm::estimate(&corpus(), 0.4).unwrap();
+        let bi = tri.bigram();
+        // Bigram: p(c|b) == p(d|b) — the histories are identical.
+        let b = bi.word_id("b").unwrap();
+        let c = bi.word_id("c").unwrap();
+        let d = bi.word_id("d").unwrap();
+        let (p_c, _) = bi.score(LmState(b), c);
+        let (p_d, _) = bi.score(LmState(b), d);
+        assert!((p_c - p_d).abs() < 1e-6, "{p_c} vs {p_d}");
+        // Trigram: "a b" predicts c, not d.
+        let tri_margin =
+            tri.sentence_logp(&["a", "b", "c"]) - tri.sentence_logp(&["a", "b", "d"]);
+        let bi_margin = bi.sentence_logp(&["a", "b", "c"]) - bi.sentence_logp(&["a", "b", "d"]);
+        assert!(
+            tri_margin > bi_margin + 0.5,
+            "trigram margin {tri_margin} not above bigram margin {bi_margin}"
+        );
+    }
+
+    #[test]
+    fn unknown_words_score_finitely() {
+        let tri = TrigramLm::estimate(&corpus(), 0.4).unwrap();
+        assert!(tri.sentence_logp(&["zebra", "b", "c"]).is_finite());
+        assert!(tri.sentence_logp(&[]).is_finite());
+    }
+
+    #[test]
+    fn seen_trigrams_are_recorded() {
+        let tri = TrigramLm::estimate(&corpus(), 0.4).unwrap();
+        assert!(tri.num_trigrams() > 0);
+        assert!(tri.graph_bytes() > 0);
+    }
+
+    #[test]
+    fn rescoring_reranks_and_keeps_first_pass_scores() {
+        use crate::lexicon::{Lexicon, TokenSet};
+        // Lexicon over the corpus words so word ids resolve to names.
+        let tokens = TokenSet::new(vec!["a".into(), "b".into(), "c".into(), "d".into(), "x".into()]);
+        let spell = |s: &str| s.chars().map(|c| tokens.id(&c.to_string()).unwrap()).collect();
+        let entries_words: Vec<(String, Vec<u32>)> = ["a", "b", "c", "d", "x"]
+            .iter()
+            .map(|w| (w.to_string(), spell(w)))
+            .collect();
+        let lex = Lexicon::build(tokens, &entries_words).unwrap();
+        let wid = |w: &str| lex.words.iter().position(|x| x == w).unwrap() as u32;
+        let tri = TrigramLm::estimate(&corpus(), 0.4).unwrap();
+        let bi = tri.bigram().clone();
+        let rescorer = Rescorer { lm: tri, weight: 1.2 };
+        // First pass narrowly prefers "a b d" (which the trigram LM
+        // dislikes) over "a b c" (which it strongly prefers).
+        let e1 = NbestEntry {
+            words: vec![wid("a"), wid("b"), wid("d")],
+            text: "a b d".into(),
+            score: -10.0,
+        };
+        let e2 = NbestEntry {
+            words: vec![wid("a"), wid("b"), wid("c")],
+            text: "a b c".into(),
+            score: -10.1,
+        };
+        let out = rescorer.rescore(&[e1.clone(), e2.clone()], &lex, &bi, 1.2);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].text, "a b c", "second pass must promote the trigram-likely path");
+        assert_eq!(out[0].first_pass, -10.1);
+        assert_eq!(out[1].first_pass, -10.0);
+        assert!(out[0].second_pass >= out[1].second_pass);
+        // Deterministic: same inputs, same output.
+        let again = rescorer.rescore(&[e1, e2], &lex, &bi, 1.2);
+        assert_eq!(out, again);
+    }
+
+    #[test]
+    fn rescoring_ties_keep_first_pass_order() {
+        let tri = TrigramLm::estimate(&corpus(), 0.4).unwrap();
+        let bi = tri.bigram().clone();
+        use crate::lexicon::{Lexicon, TokenSet};
+        let tokens = TokenSet::new(vec!["a".into()]);
+        let lex = Lexicon::build(tokens, &[("a".into(), vec![0])]).unwrap();
+        let rescorer = Rescorer { lm: tri, weight: 1.0 };
+        // Identical word sequences → identical second-pass scores; the
+        // first-pass order must be preserved.
+        let e = |score: f32| NbestEntry { words: vec![0], text: "a".into(), score };
+        let out = rescorer.rescore(&[e(-5.0), e(-5.0)], &lex, &bi, 1.0);
+        assert_eq!(out[0].first_pass, -5.0);
+        assert_eq!(out.len(), 2);
+    }
+}

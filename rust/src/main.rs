@@ -2,9 +2,12 @@
 //!
 //! Subcommands:
 //!   decode    decode synthetic utterances end-to-end (XLA artifacts or
-//!             native backend), report transcripts + WER + RTF
+//!             native backend), report transcripts + WER + RTF;
+//!             `--nbest N` records the exact lattice and prints the
+//!             N-best list for the first utterance, `--rescore W` adds
+//!             a trigram second pass at weight W (implies --nbest 8)
 //!   serve     JSON-lines TCP streaming server, protocol v2
-//!             (hello/open/feed/finish/resume/stats/config with
+//!             (hello/open/feed/finish/resume/nbest/stats/config with
 //!             structured error codes; v1 lines still accepted — see
 //!             coordinator::server); `--workers N` shards sessions
 //!             across N device workers over the shared model,
@@ -17,7 +20,9 @@
 //!             off a saturated shard, `--route-retries N` /
 //!             `--route-backoff MS` retry full shard queues before
 //!             bouncing, `--degrade B` installs the two-rung reference
-//!             degradation ladder entered at backlog B decode steps
+//!             degradation ladder entered at backlog B decode steps;
+//!             `--nbest N` / `--rescore W` enable the lattice N-best
+//!             subsystem behind the protocol's `nbest` op
 //!   simulate  run the accelerator simulator for N decoding steps;
 //!             `--batch B --shards S` additionally reports the fused
 //!             step sharded across S worker devices
@@ -40,6 +45,7 @@ use asrpu::config::{
     ShardConfig,
 };
 use asrpu::coordinator::{Engine, EngineBuilder, Server};
+use asrpu::decoder::TrigramLm;
 use asrpu::power::ChipBudget;
 use asrpu::report;
 use asrpu::runtime::Runtime;
@@ -52,6 +58,7 @@ const VALUE_KEYS: &[&str] = &[
     "n", "seed", "beam", "port", "pes", "mac", "freq-mhz", "backend", "mode", "steps",
     "queue", "batch", "batch-wait", "workers", "rebalance", "checkpoint", "shards",
     "admit", "retry-after", "shed", "route-retries", "route-backoff", "degrade",
+    "nbest", "rescore",
 ];
 
 fn main() {
@@ -86,7 +93,7 @@ fn run(argv: &[String]) -> Result<()> {
 fn engine_builder(args: &cli::Args) -> Result<EngineBuilder> {
     let beam = args.f64_or("beam", DecoderConfig::default().beam as f64)? as f32;
     let builder = Engine::builder().beam(beam);
-    Ok(match args.str_or("backend", "auto").as_str() {
+    let builder = match args.str_or("backend", "auto").as_str() {
         "native" => builder.native(TdsModel::random(ModelConfig::tiny_tds(), 1)),
         "xla" => {
             let rt = Runtime::cpu()?;
@@ -102,7 +109,18 @@ fn engine_builder(args: &cli::Args) -> Result<EngineBuilder> {
             }
         }
         other => bail!("unknown backend '{other}' (native|xla|auto)"),
-    })
+    };
+    // Lattice N-best + optional second pass: `--nbest N` turns on exact
+    // lattice recording, `--rescore W` adds a trigram rescorer at weight
+    // W over the same synthetic corpus the first-pass bigram is
+    // estimated from (and implies --nbest 8 when unset).
+    let mut builder = builder.nbest(args.usize_or("nbest", 0)?);
+    let rescore_w = args.f64_or("rescore", 0.0)?;
+    if rescore_w != 0.0 {
+        let tri = TrigramLm::estimate(&spec::sample_corpus(2000, 7777), 0.4)?;
+        builder = builder.rescore(tri, rescore_w as f32);
+    }
+    Ok(builder)
 }
 
 fn build_engine(args: &cli::Args) -> Result<Engine> {
@@ -122,10 +140,24 @@ fn cmd_decode(args: &cli::Args) -> Result<()> {
     );
     let mut total_compute = 0.0;
     let mut total_audio = 0.0;
+    // With --nbest the first utterance's exact N-best list (and second
+    // pass, with --rescore) prints after the table.
+    let mut first_nbest = None;
     for i in 0..n {
         let words = spec::sample_sentence(&mut rng);
         let u = synth.render(&words, &mut rng);
-        let (t, m) = engine.decode_utterance(&u.samples)?;
+        let (t, m) = if engine.nbest_n() > 0 {
+            let mut s = engine.open(false)?;
+            engine.feed(&mut s, &u.samples)?;
+            let r = engine.nbest(&mut s)?;
+            let m = s.metrics;
+            if first_nbest.is_none() {
+                first_nbest = Some((r.entries, r.rescored));
+            }
+            (r.transcript, m)
+        } else {
+            engine.decode_utterance(&u.samples)?
+        };
         let edits = asrpu::synth::edit_distance(&u.words, &t.words);
         wer.add(&u.words, &t.words);
         total_compute += m.compute_s;
@@ -148,6 +180,19 @@ fn cmd_decode(args: &cli::Args) -> Result<()> {
         total_audio / total_compute
     ));
     println!("{}", table.render());
+    if let Some((entries, rescored)) = first_nbest {
+        println!("N-best for utterance 0 (first-pass / second-pass scores):");
+        for (i, e) in entries.iter().enumerate() {
+            // The rescored list is re-ranked by second-pass score;
+            // match this entry by word sequence.
+            let second = rescored
+                .as_ref()
+                .and_then(|v| v.iter().find(|x| x.words == e.words))
+                .map(|x| x.second_pass)
+                .unwrap_or(e.score);
+            println!("  {:>2}.  {:>10.3}  {:>10.3}  {}", i + 1, e.score, second, e.text);
+        }
+    }
     Ok(())
 }
 
@@ -155,6 +200,8 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
     let port = args.usize_or("port", 7700)?;
     let queue = args.usize_or("queue", 128)?;
     let backend = args.str_or("backend", "auto");
+    let nbest = args.usize_or("nbest", 0)?;
+    let rescore = args.f64_or("rescore", 0.0)?;
     let batch_default = BatchConfig::default();
     let batch = BatchConfig {
         max_batch: args.usize_or("batch", batch_default.max_batch)?,
@@ -200,7 +247,15 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
         &format!("127.0.0.1:{port}"),
         move || {
             // Rebuild the engine on the device thread (PJRT not Send).
-            let argv = vec!["serve".to_string(), "--backend".into(), backend.clone()];
+            let argv = vec![
+                "serve".to_string(),
+                "--backend".into(),
+                backend.clone(),
+                "--nbest".into(),
+                nbest.to_string(),
+                "--rescore".into(),
+                rescore.to_string(),
+            ];
             let args = cli::parse(&argv, VALUE_KEYS)?;
             Ok(engine_builder(&args)?
                 .batch(batch)
@@ -212,7 +267,7 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
     )?;
     println!(
         "asrpu serving on {} (JSON lines, protocol v2; ops: \
-         hello/open/feed/finish/resume/stats/config; {} lane-batched device worker(s))",
+         hello/open/feed/finish/resume/nbest/stats/config; {} lane-batched device worker(s))",
         server.addr,
         server.workers()
     );

@@ -173,7 +173,7 @@ pub fn fig11(model: &ModelConfig, accel: &AccelConfig, mode: SimMode) -> (Table,
             KernelClass::Fc | KernelClass::FeatureExtraction => {
                 right.push((k.name.clone(), ms));
             }
-            KernelClass::LayerNorm => {}
+            KernelClass::LayerNorm | KernelClass::Rescore => {}
         }
     }
     let charts = format!(

@@ -1,0 +1,273 @@
+//! Lattice/N-best parity: the exact-lattice subsystem must be
+//! **decode-invisible**. Enabling lattice recording (`EngineBuilder::
+//! nbest`) may not change a single bit of any transcript — text, score,
+//! words — relative to a plain engine, across precisions (f32/int8),
+//! batch widths, and worker counts; and the lattice's own best path
+//! must *be* that transcript, bit-identical. On top of that sit the
+//! subsystem's own guarantees: the N-best list is exactly scored and
+//! deterministic regardless of how lanes arrived, and a mid-utterance
+//! snapshot carries the lattice so a restored session produces the
+//! identical list.
+
+use asrpu::am::TdsModel;
+use asrpu::config::{BatchConfig, ModelConfig, Precision, ShardConfig};
+use asrpu::coordinator::{Engine, Session, SessionSnapshot, ShardPool};
+use asrpu::decoder::TrigramLm;
+use asrpu::synth::{spec, Synthesizer};
+use asrpu::util::rng::Rng;
+
+const MODEL_SEED: u64 = 21;
+
+fn engine(nbest: usize, precision: Precision) -> Engine {
+    Engine::builder()
+        .native(TdsModel::random(ModelConfig::tiny_tds(), MODEL_SEED))
+        .precision(precision)
+        .nbest(nbest)
+        .build()
+        .unwrap()
+}
+
+fn utterances(n: usize, seed: u64) -> Vec<Vec<f32>> {
+    let synth = Synthesizer::default();
+    (0..n as u64)
+        .map(|i| {
+            let mut rng = Rng::new(seed + i);
+            synth
+                .render(&[(i % 10) as u32, ((i + 3) % 10) as u32], &mut rng)
+                .samples
+        })
+        .collect()
+}
+
+/// Decode `utts` as one fused batch on `e` and return each lane's
+/// `Engine::nbest` result, in lane order.
+fn batched_nbest(e: &Engine, utts: &[Vec<f32>]) -> Vec<asrpu::coordinator::NbestResult> {
+    let mut sessions: Vec<Session> = (0..utts.len()).map(|_| e.open(false).unwrap()).collect();
+    for (s, u) in sessions.iter_mut().zip(utts) {
+        e.push_audio(s, u);
+    }
+    let mut refs: Vec<&mut Session> = sessions.iter_mut().collect();
+    e.step_batch(&mut refs).unwrap();
+    sessions.iter_mut().map(|s| e.nbest(s).unwrap()).collect()
+}
+
+#[test]
+fn lattice_best_is_bit_identical_to_legacy_transcript() {
+    // Across f32/int8 and batch widths 1/3/16: the lattice-enabled
+    // engine's transcript AND its lattice's best path both equal the
+    // plain engine's transcript exactly.
+    for precision in [Precision::F32, Precision::Int8] {
+        let plain = engine(0, precision);
+        let latt = engine(4, precision);
+        for batch in [1usize, 3, 16] {
+            let utts = utterances(batch, 500 + batch as u64);
+            let reference: Vec<_> =
+                utts.iter().map(|u| plain.decode_utterance(u).unwrap().0).collect();
+            for (lane, (n, r)) in batched_nbest(&latt, &utts).iter().zip(&reference).enumerate() {
+                let ctx = format!("{precision:?} batch {batch} lane {lane}");
+                assert_eq!(n.transcript.text, r.text, "{ctx}");
+                assert_eq!(n.transcript.score, r.score, "{ctx}");
+                assert_eq!(n.transcript.words, r.words, "{ctx}");
+                let top = &n.entries[0];
+                assert_eq!(top.text, r.text, "{ctx}: lattice best diverged");
+                assert_eq!(top.score, r.score, "{ctx}: lattice best score diverged");
+                assert_eq!(top.words, r.words, "{ctx}");
+                assert!(n.entries.len() <= 4, "{ctx}");
+                for w in n.entries.windows(2) {
+                    assert!(w[0].score >= w[1].score, "{ctx}: N-best not sorted");
+                }
+                assert!(n.rescored.is_none(), "{ctx}: no rescorer configured");
+            }
+        }
+    }
+}
+
+#[test]
+fn nbest_is_deterministic_under_shuffled_arrival_order() {
+    // The same utterance decoded alone, as the first lane of a batch,
+    // and as the last lane of a differently-ordered batch must produce
+    // the identical N-best list — texts, word ids and bit-equal scores.
+    let latt = engine(6, Precision::F32);
+    let target = utterances(1, 900).pop().unwrap();
+    let decoys = utterances(3, 950);
+
+    let nbest_at = |pos: usize, decoy_order: &[usize]| -> Vec<(Vec<u32>, String, f32)> {
+        let total = decoy_order.len() + 1;
+        let mut sessions: Vec<Session> =
+            (0..total).map(|_| latt.open(false).unwrap()).collect();
+        let mut di = 0;
+        for (i, s) in sessions.iter_mut().enumerate() {
+            if i == pos {
+                latt.push_audio(s, &target);
+            } else {
+                latt.push_audio(s, &decoys[decoy_order[di]]);
+                di += 1;
+            }
+        }
+        let mut refs: Vec<&mut Session> = sessions.iter_mut().collect();
+        latt.step_batch(&mut refs).unwrap();
+        let r = latt.nbest(&mut sessions[pos]).unwrap();
+        r.entries.iter().map(|e| (e.words.clone(), e.text.clone(), e.score)).collect()
+    };
+
+    let mut alone = latt.open(false).unwrap();
+    latt.feed(&mut alone, &target).unwrap();
+    let solo: Vec<_> = latt
+        .nbest(&mut alone)
+        .unwrap()
+        .entries
+        .iter()
+        .map(|e| (e.words.clone(), e.text.clone(), e.score))
+        .collect();
+    assert!(!solo.is_empty());
+    assert_eq!(solo, nbest_at(0, &[0, 1, 2]), "target-first batch diverged");
+    assert_eq!(solo, nbest_at(3, &[2, 0, 1]), "target-last shuffled batch diverged");
+}
+
+#[test]
+fn snapshot_carries_a_nonempty_mid_utterance_lattice() {
+    // Snapshot a session halfway through an utterance (lattice already
+    // populated), round-trip the encoded bytes, and finish both the
+    // original and the restored session on the remaining audio: the
+    // transcripts and full N-best lists must be identical.
+    let latt = engine(4, Precision::F32);
+    let synth = Synthesizer::default();
+    let mut rng = Rng::new(4242);
+    let u = synth.render(&[1, 4, 7, 2], &mut rng).samples;
+
+    let mut s = latt.open(false).unwrap();
+    let half = u.len() / 2;
+    latt.feed(&mut s, &u[..half]).unwrap();
+    let arcs = s.decode.lattice().map(|l| l.num_arcs()).unwrap_or(0);
+    assert!(arcs > 0, "half an utterance must have recorded arcs");
+
+    let bytes = latt.snapshot(&mut s).unwrap().encode();
+    let mut restored = latt.restore(&SessionSnapshot::decode(&bytes).unwrap()).unwrap();
+    assert_eq!(
+        restored.decode.lattice().map(|l| l.num_arcs()),
+        Some(arcs),
+        "restored lattice lost arcs"
+    );
+
+    latt.feed(&mut s, &u[half..]).unwrap();
+    latt.feed(&mut restored, &u[half..]).unwrap();
+    let a = latt.nbest(&mut s).unwrap();
+    let b = latt.nbest(&mut restored).unwrap();
+    assert_eq!(a.transcript.text, b.transcript.text);
+    assert_eq!(a.transcript.score, b.transcript.score);
+    assert_eq!(a.entries.len(), b.entries.len());
+    for (x, y) in a.entries.iter().zip(&b.entries) {
+        assert_eq!(x.words, y.words);
+        assert_eq!(x.text, y.text);
+        assert_eq!(x.score, y.score);
+    }
+}
+
+fn nbest_pool(workers: usize) -> ShardPool {
+    ShardPool::start(
+        move || {
+            Ok(Engine::builder()
+                .native(TdsModel::random(ModelConfig::tiny_tds(), MODEL_SEED))
+                .nbest(4)
+                // Small batches + short waits so fused batches actually
+                // form under test traffic.
+                .batch(BatchConfig { max_batch: 4, max_wait_frames: 2 })
+                .shards(ShardConfig {
+                    workers,
+                    rebalance_threshold: 2,
+                    ..ShardConfig::default()
+                })
+                .build()?)
+        },
+        256,
+    )
+    .unwrap()
+}
+
+#[test]
+fn sharded_nbest_matches_single_engine_reference() {
+    // N-best through the real router/worker threads, 1 and 4 shards:
+    // the 1-best half of every reply is bit-identical to the plain
+    // single-engine decode, and the N-best top entry is that 1-best.
+    let plain = engine(0, Precision::F32);
+    let utts = utterances(6, 777);
+    let reference: Vec<_> = utts.iter().map(|u| plain.decode_utterance(u).unwrap().0).collect();
+    for workers in [1usize, 4] {
+        let pool = nbest_pool(workers);
+        let ids: Vec<u64> = utts.iter().map(|_| pool.open().unwrap()).collect();
+        // Round-robin chunked feeding so lanes join and leave each
+        // shard's ready set at different times.
+        let chunk = 1600;
+        let mut offs = vec![0usize; utts.len()];
+        loop {
+            let mut any = false;
+            for (i, u) in utts.iter().enumerate() {
+                if offs[i] < u.len() {
+                    let end = (offs[i] + chunk).min(u.len());
+                    pool.feed(ids[i], &u[offs[i]..end]).unwrap();
+                    offs[i] = end;
+                    any = true;
+                }
+            }
+            if !any {
+                break;
+            }
+        }
+        for (i, id) in ids.iter().enumerate() {
+            let r = pool.nbest(*id).unwrap();
+            assert_eq!(r.text, reference[i].text, "workers {workers}, utt {i}");
+            assert_eq!(r.score, reference[i].score as f64, "workers {workers}, utt {i}");
+            assert!(!r.hyps.is_empty());
+            assert_eq!(r.hyps[0].text, r.text);
+            assert_eq!(r.hyps[0].score, r.score);
+            // No rescorer: the rescore column mirrors the first pass.
+            for h in &r.hyps {
+                assert_eq!(h.rescore, h.score);
+            }
+        }
+        pool.shutdown();
+    }
+}
+
+#[test]
+fn sharded_nbest_reports_second_pass_when_rescoring() {
+    let pool = ShardPool::start(
+        || {
+            let tri = TrigramLm::estimate(&spec::sample_corpus(300, 7777), 0.4)?;
+            Ok(Engine::builder()
+                .native(TdsModel::random(ModelConfig::tiny_tds(), MODEL_SEED))
+                .nbest(3)
+                .rescore(tri, 1.1)
+                .build()?)
+        },
+        64,
+    )
+    .unwrap();
+    let u = utterances(1, 31).pop().unwrap();
+    let id = pool.open().unwrap();
+    pool.feed(id, &u).unwrap();
+    let r = pool.nbest(id).unwrap();
+    assert!(!r.hyps.is_empty());
+    assert_eq!(r.hyps[0].text, r.text, "top entry must match the transcript");
+    for h in &r.hyps {
+        assert!(h.rescore.is_finite());
+    }
+    // An engine built *without* N-best refuses the op and keeps the
+    // session alive — `finish` still works afterwards.
+    let no_latt = ShardPool::start(
+        || {
+            Ok(Engine::builder()
+                .native(TdsModel::random(ModelConfig::tiny_tds(), MODEL_SEED))
+                .build()?)
+        },
+        64,
+    )
+    .unwrap();
+    let id2 = no_latt.open().unwrap();
+    no_latt.feed(id2, &u).unwrap();
+    let err = format!("{:#}", no_latt.nbest(id2).unwrap_err());
+    assert!(err.contains("bad_request"), "{err}");
+    no_latt.finish(id2).unwrap();
+    pool.shutdown();
+    no_latt.shutdown();
+}

@@ -5,17 +5,19 @@
 //!
 //! Reachability notes: every code is provoked over the wire below —
 //! `bad_request`, `unknown_op`, `unknown_session`, `backpressure` and
-//! `shutdown` through ordinary traffic, and `internal` through the
-//! engine's fault-injection hook (`EngineBuilder::fault_after_steps`,
-//! env-gated as `ASRPU_FAULT_AFTER_STEPS`), which fails scoring
-//! mid-serve exactly like a backend would.
+//! `shutdown` through ordinary traffic, `session_shed` by saturating a
+//! one-slot shard under the shed-never-started overload policy, and
+//! `internal` through the engine's fault-injection hook
+//! (`EngineBuilder::fault_after_steps`, env-gated as
+//! `ASRPU_FAULT_AFTER_STEPS`), which fails scoring mid-serve exactly
+//! like a backend would.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::time::Duration;
 
 use asrpu::am::TdsModel;
-use asrpu::config::{BatchConfig, ModelConfig};
+use asrpu::config::{BatchConfig, ModelConfig, OverloadPolicy, ShardConfig};
 use asrpu::coordinator::server::{err_json, ErrCode, OPS, PROTO_ACCEPTED, PROTO_VERSION};
 use asrpu::coordinator::{Engine, Server};
 use asrpu::util::json::Json;
@@ -134,6 +136,8 @@ fn config_introspection_conformance() {
         "route_retries",
         "route_backoff_ms",
         "degrade_levels",
+        "nbest",
+        "rescore",
     ] {
         assert!(
             cfg.get(key).and_then(Json::as_f64).is_some(),
@@ -213,6 +217,7 @@ fn error_code_wire_shapes_are_stable() {
         (ErrCode::BadRequest, "bad_request"),
         (ErrCode::UnknownOp, "unknown_op"),
         (ErrCode::UnknownSession, "unknown_session"),
+        (ErrCode::SessionShed, "session_shed"),
         (ErrCode::Backpressure, "backpressure"),
         (ErrCode::Shutdown, "shutdown"),
         (ErrCode::Internal, "internal"),
@@ -265,6 +270,142 @@ fn request_validation_error_codes_over_socket() {
         code_of(&c.call(r#"{"op":"resume","session":777}"#)).as_deref(),
         Some("unknown_session")
     );
+    server.shutdown();
+}
+
+#[test]
+fn nbest_op_over_socket() {
+    // A lattice-enabled server answers `nbest` with the transcript plus
+    // an exactly-scored hypothesis list; a server built without N-best
+    // refuses the op with `bad_request` and keeps the session alive.
+    let server = Server::start(
+        "127.0.0.1:0",
+        || {
+            Ok(Engine::builder()
+                .native(TdsModel::random(ModelConfig::tiny_tds(), 5))
+                .batch(BatchConfig::default())
+                .nbest(3)
+                .build()?)
+        },
+        64,
+    )
+    .unwrap();
+    let mut c = Client::connect(&server.addr);
+    let opened = c.call(r#"{"op":"open"}"#);
+    let session = opened.get("session").unwrap().as_f64().unwrap() as u64;
+    let samples: Vec<String> = (0..1520 + 9 * 1280)
+        .map(|i| format!("{:.4}", (i as f32 * 0.013).sin() * 0.3))
+        .collect();
+    c.call(&format!(
+        r#"{{"op":"feed","session":{session},"samples":[{}]}}"#,
+        samples.join(",")
+    ));
+    let r = c.call(&format!(r#"{{"op":"nbest","session":{session}}}"#));
+    let text = r.get("text").unwrap().as_str().unwrap().to_string();
+    let score = r.get("score").unwrap().as_f64().unwrap();
+    let hyps = r.get("nbest").unwrap().as_arr().unwrap();
+    assert!(!hyps.is_empty() && hyps.len() <= 3, "{r:?}");
+    assert_eq!(hyps[0].get("text").unwrap().as_str(), Some(text.as_str()));
+    assert_eq!(hyps[0].get("score").unwrap().as_f64(), Some(score));
+    let mut prev = f64::INFINITY;
+    for h in hyps {
+        let s = h.get("score").unwrap().as_f64().unwrap();
+        assert!(s <= prev, "N-best not sorted: {r:?}");
+        prev = s;
+        // No rescorer configured: the second-pass column mirrors the
+        // first pass.
+        assert_eq!(h.get("rescore").unwrap().as_f64(), Some(s));
+    }
+    // The session is consumed, exactly like finish.
+    let gone = c.call(&format!(r#"{{"op":"nbest","session":{session}}}"#));
+    assert_eq!(code_of(&gone).as_deref(), Some("unknown_session"), "{gone:?}");
+    server.shutdown();
+
+    // Without a lattice the op is refused up front — and the refusal
+    // does NOT consume the session.
+    let plain = start_server(64);
+    let mut c = Client::connect(&plain.addr);
+    let opened = c.call(r#"{"op":"open"}"#);
+    let session = opened.get("session").unwrap().as_f64().unwrap() as u64;
+    let refused = c.call(&format!(r#"{{"op":"nbest","session":{session}}}"#));
+    assert_eq!(code_of(&refused).as_deref(), Some("bad_request"), "{refused:?}");
+    let done = c.call(&format!(r#"{{"op":"finish","session":{session}}}"#));
+    assert!(done.get("text").is_some(), "refusal must not consume the session: {done:?}");
+    plain.shutdown();
+}
+
+#[test]
+fn shed_victims_get_session_shed_over_socket() {
+    // The socket-level twin of the router's shed test: one worker, one
+    // queue slot, a 400 ms reply delay wedging it mid-flush. Session B
+    // books onto the saturated shard and never feeds; the next feed
+    // finds the queue full and the policy sheds B. B's owner must then
+    // learn the *dedicated* code — `session_shed`, with a reopen hint —
+    // not an indistinguishable `unknown_session`.
+    let server = Server::start(
+        "127.0.0.1:0",
+        || {
+            Ok(Engine::builder()
+                .native(TdsModel::random(ModelConfig::tiny_tds(), 5))
+                .batch(BatchConfig::default())
+                .shards(ShardConfig {
+                    workers: 1,
+                    rebalance_threshold: 0,
+                    checkpoint_interval: 1,
+                })
+                .overload(OverloadPolicy {
+                    retry_after_ms: 30,
+                    shed_never_started: true,
+                    ..Default::default()
+                })
+                .fault_reply_delay_ms(400)
+                .build()?)
+        },
+        1,
+    )
+    .unwrap();
+    let mut a = Client::connect(&server.addr);
+    let opened = a.call(r#"{"op":"open"}"#);
+    let sess_a = opened.get("session").unwrap().as_f64().unwrap() as u64;
+    // 30 decoding steps of silence; the reply-delay hook then holds the
+    // worker for 400 ms after the flush.
+    let zeros = vec!["0"; 1520 + 29 * 1280].join(",");
+    a.send(&format!(r#"{{"op":"feed","session":{sess_a},"samples":[{zeros}]}}"#));
+    std::thread::sleep(Duration::from_millis(100));
+    // B's open lands in the wedged shard's one queue slot.
+    let mut b = Client::connect(&server.addr);
+    b.send(r#"{"op":"open"}"#);
+    std::thread::sleep(Duration::from_millis(50));
+    // A second feed (separate connection: conn threads are serial)
+    // finds the queue full; the policy sheds never-started B and
+    // bounces the feed with the structured retry hint.
+    let mut a2 = Client::connect(&server.addr);
+    let short = vec!["0"; 1600].join(",");
+    let bounced =
+        a2.call(&format!(r#"{{"op":"feed","session":{sess_a},"samples":[{short}]}}"#));
+    assert_eq!(code_of(&bounced).as_deref(), Some("backpressure"), "{bounced:?}");
+    assert_eq!(
+        bounced.get("error").unwrap().get("retry_after_ms").and_then(Json::as_f64),
+        Some(30.0),
+        "{bounced:?}"
+    );
+    // The wedged feed completes once the worker wakes; B's open reply
+    // arrives with its (already shed) session id.
+    assert_eq!(a.recv().get("steps").unwrap().as_f64(), Some(30.0));
+    let sess_b = b.recv().get("session").unwrap().as_f64().unwrap() as u64;
+    for line in [
+        format!(r#"{{"op":"feed","session":{sess_b},"samples":[{short}]}}"#),
+        format!(r#"{{"op":"finish","session":{sess_b}}}"#),
+        format!(r#"{{"op":"resume","session":{sess_b}}}"#),
+    ] {
+        let r = b.call(&line);
+        assert_eq!(code_of(&r).as_deref(), Some("session_shed"), "{line}: {r:?}");
+        let msg = r.get("error").unwrap().get("message").unwrap().as_str().unwrap();
+        assert!(msg.contains("reopen"), "shed notice must carry a reopen hint: {msg}");
+    }
+    // The survivor still finishes normally.
+    let done = a.call(&format!(r#"{{"op":"finish","session":{sess_a}}}"#));
+    assert!(done.get("text").is_some(), "{done:?}");
     server.shutdown();
 }
 

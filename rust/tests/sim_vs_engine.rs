@@ -152,6 +152,51 @@ fn hypothesis_workload_scales_hyp_phase_only() {
 }
 
 #[test]
+fn measured_engine_stats_drive_hyp_unit_rounds() {
+    // The HypUnit model is fed from *measured* per-session arc counts
+    // (the decoder's PruneStats/ExpandStats), not synthetic workloads:
+    // a real decode's counters parameterize both the step simulator's
+    // hyp phase and the unit's insert-sort round model.
+    use asrpu::accel::HypUnit;
+    use asrpu::am::TdsModel;
+    use asrpu::coordinator::Engine;
+
+    let engine = Engine::builder()
+        .native(TdsModel::random(ModelConfig::tiny_tds(), 3))
+        .build()
+        .unwrap();
+    let mut s = engine.open(false).unwrap();
+    let samples: Vec<f32> =
+        (0..1520 + 9 * 1280).map(|i| (i as f32 * 0.013).sin() * 0.3).collect();
+    engine.feed(&mut s, &samples).unwrap();
+    let prune = s.decode.stats;
+    let expand = s.decode.expand;
+    assert!(prune.generated > 0 && prune.rounds > 0, "{prune:?}");
+    assert_eq!(expand.generated(), prune.generated, "expansion/prune books disagree");
+
+    let hyp = HypWorkload::from_measured(&prune, &expand);
+    assert!(hyp.n_hyps > 0, "{hyp:?}");
+    assert!(hyp.avg_children > 0.0, "{hyp:?}");
+    assert!((0.0..=1.0).contains(&hyp.word_commit_frac), "{hyp:?}");
+    let model = ModelConfig::paper_tds();
+    let accel = AccelConfig::paper();
+    let sim = simulate_step(&model, &accel, &hyp, SimMode::Ideal);
+    assert!(sim.hyp_cycles > 0);
+
+    let unit = HypUnit::new(&accel);
+    let round = unit.round_from_stats(&prune);
+    assert!(round.insert_cycles > 0);
+    assert_eq!(
+        round.insert_cycles,
+        unit.round(
+            prune.generated / prune.rounds,
+            (prune.generated - prune.merged - prune.beam_pruned) / prune.rounds
+        )
+        .insert_cycles
+    );
+}
+
+#[test]
 fn area_power_budget_consistent_across_sweep() {
     for pes in [1, 4, 8, 16] {
         for mem_kb in [256usize, 512, 1024, 2048] {
