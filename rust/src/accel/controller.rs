@@ -209,11 +209,36 @@ pub fn simulate_step_sharded(
 ) -> ShardedReport {
     assert!(batch >= 1, "need at least one lane");
     assert!(shards >= 1, "need at least one shard");
+    let lanes_per_shard: Vec<usize> = (0..shards)
+        .map(|i| batch / shards + usize::from(i < batch % shards))
+        .collect();
+    simulate_step_elastic(model, accel, hyp, mode, &lanes_per_shard)
+}
+
+/// Simulate one fused decoding step over an *explicit* lane-per-worker
+/// topology — the device-side mirror of the elastic
+/// [`ShardPool`](crate::coordinator::ShardPool), whose worker count and
+/// per-shard session load change at runtime (`pool add` / `pool drain`).
+/// Unlike [`simulate_step_sharded`]'s even split, `lanes_per_shard`
+/// carries whatever shape the pool is in mid-scale: a draining shard
+/// tapers through ever-smaller entries, a freshly added worker starts
+/// small. Zero-lane entries are skipped (an empty worker runs nothing);
+/// at least one entry must be non-zero.
+pub fn simulate_step_elastic(
+    model: &ModelConfig,
+    accel: &AccelConfig,
+    hyp: &HypWorkload,
+    mode: SimMode,
+    lanes_per_shard: &[usize],
+) -> ShardedReport {
+    assert!(
+        lanes_per_shard.iter().any(|&l| l > 0),
+        "need at least one lane on some shard"
+    );
     let pipe = PipelineDesc::for_model(model);
-    let mut per_shard = Vec::with_capacity(shards);
-    let mut lanes = Vec::with_capacity(shards);
-    for i in 0..shards {
-        let lanes_i = batch / shards + usize::from(i < batch % shards);
+    let mut per_shard = Vec::with_capacity(lanes_per_shard.len());
+    let mut lanes = Vec::with_capacity(lanes_per_shard.len());
+    for &lanes_i in lanes_per_shard {
         if lanes_i == 0 {
             continue;
         }
@@ -519,6 +544,34 @@ mod tests {
             );
             assert!(s.rtf_aggregate(&m, &a) > one.rtf_batched(&m, &a, 8));
         }
+    }
+
+    #[test]
+    fn elastic_topology_conserves_work_at_any_shape() {
+        // Mid-scale shapes (a draining shard tapering, a fresh worker
+        // ramping) conserve instructions vs the fused step at the same
+        // total lanes, replicate weight DMA once per *occupied* worker,
+        // and reduce to the even split when the shape is even.
+        let (m, a) = paper();
+        let hyp = HypWorkload::default();
+        let one = simulate_step_batched(&m, &a, &hyp, SimMode::Ideal, 8);
+        for shape in [vec![5, 2, 1], vec![1, 0, 7], vec![8], vec![2, 2, 2, 2]] {
+            let s = simulate_step_elastic(&m, &a, &hyp, SimMode::Ideal, &shape);
+            let occupied = shape.iter().filter(|&&l| l > 0).count();
+            assert_eq!(s.total_lanes(), 8, "{shape:?}");
+            assert_eq!(s.per_shard.len(), occupied, "{shape:?}");
+            assert_eq!(s.total_instrs(), one.total_instrs, "{shape:?}");
+            assert_eq!(s.total_dma_bytes(), occupied as u64 * one.dma_bytes, "{shape:?}");
+        }
+        let even = simulate_step_sharded(&m, &a, &hyp, SimMode::Ideal, 8, 4);
+        let explicit = simulate_step_elastic(&m, &a, &hyp, SimMode::Ideal, &[2, 2, 2, 2]);
+        assert_eq!(even.lanes, explicit.lanes);
+        assert_eq!(even.total_instrs(), explicit.total_instrs());
+        assert_eq!(
+            even.seconds(&a).to_bits(),
+            explicit.seconds(&a).to_bits(),
+            "even split must be the elastic path bit for bit"
+        );
     }
 
     #[test]

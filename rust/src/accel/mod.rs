@@ -11,8 +11,8 @@ pub mod pool;
 
 pub use command::{AsrpuDevice, Command};
 pub use controller::{
-    simulate_pipeline, simulate_step, simulate_step_batched, simulate_step_sharded, ShardedReport,
-    SimMode, StepReport,
+    simulate_pipeline, simulate_step, simulate_step_batched, simulate_step_elastic,
+    simulate_step_sharded, ShardedReport, SimMode, StepReport,
 };
 pub use hypunit::HypUnit;
 pub use memory::{Cache, GraphWorkload};

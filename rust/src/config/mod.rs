@@ -115,6 +115,18 @@ pub struct ShardConfig {
     /// rollback window for checkpoint bandwidth; 0 disables checkpoints
     /// (a dead shard's started sessions are then lost).
     pub checkpoint_interval: usize,
+    /// Elasticity ceiling: the maximum *concurrently serving* workers
+    /// the pool may grow to via the runtime `pool add` op. Retired
+    /// (drained) workers do not count against it, so unlimited
+    /// add/drain churn cycles stay legal. 0 = the pool is static at
+    /// `workers` (elasticity off); otherwise must be ≥ `workers`.
+    pub max_workers: usize,
+    /// Wall-clock budget, in milliseconds, for a runtime `pool drain`
+    /// to migrate every live session off the draining worker. Past the
+    /// deadline the drain aborts and the worker reverts to serving
+    /// (nothing is lost — migration is pipelined against live traffic
+    /// either way).
+    pub drain_deadline_ms: u64,
 }
 
 impl Default for ShardConfig {
@@ -122,8 +134,16 @@ impl Default for ShardConfig {
         // One worker preserves the classic single-device-thread serving
         // loop; a threshold of 2 repairs any imbalance worth repairing
         // (diff/2 ≥ 1) as soon as it appears; checkpointing every flush
-        // keeps acknowledged audio recoverable by default.
-        ShardConfig { workers: 1, rebalance_threshold: 2, checkpoint_interval: 1 }
+        // keeps acknowledged audio recoverable by default. Elasticity is
+        // off (max_workers 0) — the pool behaves exactly like earlier
+        // revisions unless a deployment opts in.
+        ShardConfig {
+            workers: 1,
+            rebalance_threshold: 2,
+            checkpoint_interval: 1,
+            max_workers: 0,
+            drain_deadline_ms: 5_000,
+        }
     }
 }
 
@@ -135,7 +155,33 @@ impl ShardConfig {
             self.workers <= 256,
             "workers capped at 256 (one OS thread per shard)"
         );
+        if self.max_workers != 0 {
+            anyhow::ensure!(
+                self.max_workers >= self.workers,
+                "max_workers ({}) must be at least the initial worker count ({})",
+                self.max_workers,
+                self.workers
+            );
+            anyhow::ensure!(
+                self.max_workers <= 256,
+                "max_workers capped at 256 (one OS thread per shard)"
+            );
+        }
+        anyhow::ensure!(
+            self.drain_deadline_ms >= 1,
+            "drain_deadline_ms must be at least 1"
+        );
         Ok(())
+    }
+
+    /// The concurrent-worker ceiling the router enforces: `max_workers`
+    /// when elasticity is on, else the static `workers` count.
+    pub fn effective_max_workers(&self) -> usize {
+        if self.max_workers == 0 {
+            self.workers
+        } else {
+            self.max_workers
+        }
     }
 }
 
@@ -207,9 +253,16 @@ pub struct OverloadPolicy {
     /// client sees `backpressure`. 0 = bounce immediately (classic
     /// behaviour).
     pub route_retries: u32,
-    /// Sleep between route retries, in milliseconds (doubled per
-    /// attempt).
+    /// Delay between route retries, in milliseconds (doubled per
+    /// attempt). Retries are parked on a per-shard deferred-retry queue
+    /// drained by the supervisor tick — the router thread never sleeps.
     pub route_backoff_ms: u64,
+    /// How many shed session ids the router remembers so a returning
+    /// client gets the dedicated `session_shed` notice (with its reopen
+    /// hint) instead of a bare `unknown_session`. Oldest ids are
+    /// evicted first (ids are monotone); evictions are surfaced in
+    /// `stats` as `shed_evicted`. Must be ≥ 1.
+    pub shed_memory: usize,
     /// Graceful-degradation ladder, strictly ascending by
     /// `enter_backlog_steps`. Empty = always serve full quality.
     pub levels: Vec<DegradeLevel>,
@@ -218,13 +271,15 @@ pub struct OverloadPolicy {
 impl Default for OverloadPolicy {
     fn default() -> Self {
         // Everything off: earlier revisions' serving behaviour, bit for
-        // bit. The 50 ms hint only appears once a limit is configured.
+        // bit. The 50 ms hint only appears once a limit is configured;
+        // 4096 remembered shed ids matches the former hard constant.
         OverloadPolicy {
             admit_sessions_per_shard: 0,
             retry_after_ms: 50,
             shed_never_started: false,
             route_retries: 0,
             route_backoff_ms: 1,
+            shed_memory: 4096,
             levels: Vec::new(),
         }
     }
@@ -233,6 +288,11 @@ impl Default for OverloadPolicy {
 impl OverloadPolicy {
     /// Reject ladders the workers cannot step down deterministically.
     pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.shed_memory >= 1,
+            "shed_memory must be at least 1 (the router needs somewhere \
+             to remember a shed id)"
+        );
         let mut prev = 0usize;
         for (i, lvl) in self.levels.iter().enumerate() {
             lvl.validate()?;
@@ -343,9 +403,22 @@ mod tests {
             workers: 4,
             rebalance_threshold: 0,
             checkpoint_interval: 0,
+            ..s.clone()
         }
         .validate()
         .unwrap();
+        // Elasticity defaults off: the effective ceiling is the static
+        // worker count.
+        assert_eq!(s.max_workers, 0, "elasticity must default off");
+        assert_eq!(s.effective_max_workers(), s.workers);
+        let elastic = ShardConfig { workers: 2, max_workers: 8, ..s.clone() };
+        elastic.validate().unwrap();
+        assert_eq!(elastic.effective_max_workers(), 8);
+        // A ceiling below the initial worker count is unservable, as is
+        // one past the thread cap or a zero drain budget.
+        assert!(ShardConfig { workers: 4, max_workers: 2, ..s.clone() }.validate().is_err());
+        assert!(ShardConfig { max_workers: 257, ..s.clone() }.validate().is_err());
+        assert!(ShardConfig { drain_deadline_ms: 0, ..s.clone() }.validate().is_err());
     }
 
     #[test]
@@ -355,6 +428,8 @@ mod tests {
         assert_eq!(p.admit_sessions_per_shard, 0, "admission control must default off");
         assert!(!p.shed_never_started);
         assert_eq!(p.route_retries, 0);
+        assert_eq!(p.shed_memory, 4096, "default matches the former hard constant");
+        assert!(OverloadPolicy { shed_memory: 0, ..p.clone() }.validate().is_err());
         assert!(p.levels.is_empty());
         // With an empty ladder every backlog maps to full quality.
         assert_eq!(p.level_for_backlog(0), 0);

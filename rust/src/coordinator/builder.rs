@@ -127,6 +127,7 @@ pub struct EngineBuilder {
     fault_after_steps: Option<u64>,
     fault_panic_after_steps: Option<u64>,
     fault_reply_delay_ms: Option<u64>,
+    fault_teardown_delay_ms: Option<u64>,
 }
 
 impl EngineBuilder {
@@ -281,6 +282,17 @@ impl EngineBuilder {
         self
     }
 
+    /// Fault-injection hook for the supervisor's teardown-window tests:
+    /// a dying worker sleeps this long between catching its panic and
+    /// reporting death to the liveness slot, so a test can land jobs on
+    /// the already-torn-down channel deterministically. Defaults to off;
+    /// `ASRPU_FAULT_TEARDOWN_DELAY_MS` is the env-gated equivalent (read
+    /// at [`Self::build`]; this explicit setter wins over it).
+    pub fn fault_teardown_delay_ms(mut self, millis: u64) -> Self {
+        self.fault_teardown_delay_ms = Some(millis);
+        self
+    }
+
     /// Validate everything and assemble the engine.
     pub fn build(self) -> Result<Engine, BuildError> {
         // Cheap config validation first — fail fast before any expensive
@@ -323,14 +335,16 @@ impl EngineBuilder {
                 b
             }
         };
-        // Multi-worker serving needs a backend every worker thread can
-        // hold a handle to; probe with one (cheap, Arc-refcount) clone.
-        if self.shards.workers > 1 && backend.clone_worker().is_none() {
+        // Multi-worker serving — including a static single worker that
+        // may *scale up* at runtime (max_workers > 1) — needs a backend
+        // every worker thread can hold a handle to; probe with one
+        // (cheap, Arc-refcount) clone.
+        if self.shards.effective_max_workers() > 1 && backend.clone_worker().is_none() {
             return Err(BuildError::Shard(format!(
                 "backend '{}' cannot serve {} workers: it does not support \
                  clone_worker() (device handles are thread-bound)",
                 backend.name(),
-                self.shards.workers
+                self.shards.effective_max_workers()
             )));
         }
         let lexicon = self.lexicon.unwrap_or_else(spec::lexicon);
@@ -361,6 +375,9 @@ impl EngineBuilder {
             reply_delay_ms: self
                 .fault_reply_delay_ms
                 .or_else(|| env_u64("ASRPU_FAULT_REPLY_DELAY_MS")),
+            teardown_delay_ms: self
+                .fault_teardown_delay_ms
+                .or_else(|| env_u64("ASRPU_FAULT_TEARDOWN_DELAY_MS")),
         };
         // Rescoring consumes the N-best list, so it implies one.
         let nbest = if self.nbest == 0 && self.rescorer.is_some() { 8 } else { self.nbest };

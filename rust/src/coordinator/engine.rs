@@ -115,8 +115,9 @@ pub struct Engine {
 
 /// Test/ops fault-injection hooks, resolved by [`EngineBuilder::build`]
 /// from explicit setters or the `ASRPU_FAULT_AFTER_STEPS`,
-/// `ASRPU_FAULT_PANIC_AFTER_STEPS` and `ASRPU_FAULT_REPLY_DELAY_MS`
-/// environment variables. All default to off.
+/// `ASRPU_FAULT_PANIC_AFTER_STEPS`, `ASRPU_FAULT_REPLY_DELAY_MS` and
+/// `ASRPU_FAULT_TEARDOWN_DELAY_MS` environment variables. All default
+/// to off.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct FaultHooks {
     /// Once this many decoding steps have executed, every further
@@ -131,6 +132,11 @@ pub struct FaultHooks {
     /// Sleep this long before a serving worker answers each flushed
     /// feed — simulating a slow shard for retry/backoff and chaos tests.
     pub reply_delay_ms: Option<u64>,
+    /// Sleep this long between a serving worker's panic being caught and
+    /// its death report reaching the liveness slot — holding the
+    /// teardown window open so tests can land jobs on the dying channel
+    /// deterministically.
+    pub teardown_delay_ms: Option<u64>,
 }
 
 /// Everything a worker thread needs to assemble its own [`Engine`] over
@@ -157,6 +163,27 @@ pub struct WorkerSeed {
 }
 
 impl WorkerSeed {
+    /// Duplicate this seed without consuming it: the elastic pool's
+    /// router keeps one template seed and mints a fresh seed from it for
+    /// every runtime `add_worker`, so scale-up never needs a device
+    /// thread in the loop. `None` when the backend cannot be duplicated
+    /// (the same backends for which [`Engine::clone_worker`] is `None`).
+    pub fn clone_seed(&self) -> Option<WorkerSeed> {
+        Some(WorkerSeed {
+            backend: self.backend.clone_worker()?,
+            lexicon: self.lexicon.clone(),
+            lm: self.lm.clone(),
+            dec_cfg: self.dec_cfg.clone(),
+            batch_cfg: self.batch_cfg.clone(),
+            shard_cfg: self.shard_cfg.clone(),
+            overload: self.overload.clone(),
+            word_lm_ids: self.word_lm_ids.clone(),
+            nbest_n: self.nbest_n,
+            rescorer: self.rescorer.clone(),
+            faults: self.faults,
+        })
+    }
+
     /// Assemble the worker's engine (fresh scratch arenas; shared
     /// weights). Call this on the worker's own thread.
     pub fn into_engine(self) -> Engine {
@@ -510,6 +537,13 @@ impl Engine {
     /// The injected reply delay, if the slow-shard fault hook is armed.
     pub fn fault_reply_delay(&self) -> Option<Duration> {
         self.faults.reply_delay_ms.map(Duration::from_millis)
+    }
+
+    /// The injected teardown delay, if the slow-teardown fault hook is
+    /// armed (holds a dying worker's death report back so tests can hit
+    /// the teardown window deterministically).
+    pub fn fault_teardown_delay(&self) -> Option<Duration> {
+        self.faults.teardown_delay_ms.map(Duration::from_millis)
     }
 
     /// Open a session. `collect_logits` keeps per-frame log-probs for

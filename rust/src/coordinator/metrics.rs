@@ -249,6 +249,37 @@ impl ServeMetrics {
     }
 }
 
+/// Where a worker shard is in its elastic lifecycle. The router stamps
+/// this into each stats snapshot; the per-shard caches themselves only
+/// ever describe a live worker's counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardLifecycle {
+    /// Serving normally: accepts new sessions and jobs.
+    Active,
+    /// Draining: still serves its existing sessions (jobs flow) but the
+    /// router places no *new* sessions on it while its live sessions
+    /// pipeline-migrate off.
+    Draining,
+    /// Drained and shut down cleanly; the slot is never reused and the
+    /// shard no longer counts against the concurrent-worker ceiling.
+    Retired,
+    /// The worker thread died (panic or channel teardown); its sessions
+    /// were re-adopted onto survivors from their checkpoints.
+    Dead,
+}
+
+impl ShardLifecycle {
+    /// The wire string `stats` reports for this state.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ShardLifecycle::Active => "active",
+            ShardLifecycle::Draining => "draining",
+            ShardLifecycle::Retired => "retired",
+            ShardLifecycle::Dead => "dead",
+        }
+    }
+}
+
 /// One shard's live status. Workers publish a fresh copy into a shared
 /// per-shard cache after every state-changing job (and before replying
 /// to it), so the router serves `stats` from the caches without ever
@@ -266,6 +297,9 @@ pub struct ShardSnapshot {
     pub heartbeats: u64,
     /// The degrade rung the worker last selected (0 = full quality).
     pub degrade_level: usize,
+    /// The shard's elastic lifecycle state (stamped by the router when
+    /// it assembles the stats payload; workers always publish `Active`).
+    pub lifecycle: ShardLifecycle,
     /// The shard's serving counters.
     pub serve: ServeMetrics,
 }
@@ -279,6 +313,7 @@ impl ShardSnapshot {
             queue_depth: 0,
             heartbeats: 0,
             degrade_level: 0,
+            lifecycle: ShardLifecycle::Active,
             serve: ServeMetrics::default(),
         }
     }
@@ -386,6 +421,7 @@ mod tests {
             queue_depth: shard,
             heartbeats: 0,
             degrade_level: 0,
+            lifecycle: ShardLifecycle::Active,
             serve: ServeMetrics { steps_executed: steps, ..ServeMetrics::default() },
         };
         let m = ShardMetrics { shards: vec![snap(0, 5, 100), snap(1, 2, 40)] };

@@ -19,6 +19,12 @@
 //!                                        "shards":[...]}
 //!   → {"op":"config"}                 ← {"proto":2,"backend":"...",
 //!                                        "precision":"...","workers":W,...}
+//!   → {"op":"pool","action":"add"}    ← {"shard":N,"workers":W}
+//!   → {"op":"pool","action":"drain",
+//!      "shard":N}                      ← {"shard":N,"state":"retired",
+//!                                        "migrated":M}
+//!   → {"op":"pool","action":"status"} ← {"workers":W,"max_workers":M,
+//!                                        "draining":D,"shards":[...]}
 //!
 //! Errors are structured: `{"error":{"code":"...","message":"..."}}`
 //! with stable machine-readable codes (`bad_request`, `unknown_op`,
@@ -63,9 +69,11 @@ pub const PROTO_ACCEPTED: &[u64] = &[1, 2];
 /// client to its session: the reply reports consumed steps/samples (the
 /// server's acknowledged state, restored from a checkpoint if the
 /// session's worker died) so the client replays only unacknowledged
-/// audio.
+/// audio. `pool` is the elastic-pool control surface: `add` scales a
+/// worker up, `drain` migrates a shard empty and retires it, `status`
+/// reports every shard's lifecycle.
 pub const OPS: &[&str] =
-    &["hello", "open", "feed", "finish", "resume", "nbest", "stats", "config"];
+    &["hello", "open", "feed", "finish", "resume", "nbest", "stats", "config", "pool"];
 
 /// Machine-readable error codes (stable across releases; clients branch
 /// on these, not on message text).
@@ -213,6 +221,14 @@ pub(crate) fn config_json(engine: &Engine) -> Json {
         ("max_wait_frames", Json::Num(engine.batch_cfg.max_wait_frames as f64)),
         ("workers", Json::Num(engine.shard_cfg.workers as f64)),
         (
+            "max_workers",
+            Json::Num(engine.shard_cfg.effective_max_workers() as f64),
+        ),
+        (
+            "drain_deadline_ms",
+            Json::Num(engine.shard_cfg.drain_deadline_ms as f64),
+        ),
+        (
             "rebalance_threshold",
             Json::Num(engine.shard_cfg.rebalance_threshold as f64),
         ),
@@ -231,6 +247,7 @@ pub(crate) fn config_json(engine: &Engine) -> Json {
             "shed_never_started",
             Json::Num(u64::from(engine.overload.shed_never_started) as f64),
         ),
+        ("shed_memory", Json::Num(engine.overload.shed_memory as f64)),
         ("route_retries", Json::Num(engine.overload.route_retries as f64)),
         ("route_backoff_ms", Json::Num(engine.overload.route_backoff_ms as f64)),
         ("degrade_levels", Json::Num(engine.overload.levels.len() as f64)),
@@ -282,6 +299,28 @@ fn parse_request(line: &str, reply: mpsc::Sender<Json>) -> Result<Request, (ErrC
                 enqueued: Instant::now(),
                 reply,
             }))
+        }
+        "pool" => {
+            let action = v
+                .get("action")
+                .and_then(Json::as_str)
+                .ok_or_else(|| (ErrCode::BadRequest, "missing 'action'".to_string()))?;
+            match action {
+                "add" => Ok(Request::Msg(RouterMsg::PoolAdd { reply })),
+                "status" => Ok(Request::Msg(RouterMsg::PoolStatus { reply })),
+                "drain" => {
+                    let shard = v
+                        .get("shard")
+                        .and_then(Json::as_f64)
+                        .ok_or_else(|| (ErrCode::BadRequest, "missing 'shard'".to_string()))?
+                        as usize;
+                    Ok(Request::Msg(RouterMsg::PoolDrain { shard, reply }))
+                }
+                other => Err((
+                    ErrCode::BadRequest,
+                    format!("unknown pool action '{other}' (expected add|drain|status)"),
+                )),
+            }
         }
         other => Err((ErrCode::UnknownOp, format!("unknown op '{other}'"))),
     }

@@ -60,12 +60,40 @@
 //! Client-facing jobs are forwarded with a non-blocking `try_send`: a
 //! shard whose queue is saturated bounces *its own* requests with
 //! `backpressure` while the router keeps routing for every other shard
-//! (head-of-line isolation). Router-internal transactions (evict/adopt
-//! migration legs, kill, shutdown) use blocking sends — serialized
-//! router work by design. `stats` no longer waits on any worker at
-//! all: each worker publishes its [`ShardSnapshot`] into a shared cache
-//! after every state-changing job (before replying to it), and the
-//! router aggregates the caches.
+//! (head-of-line isolation). Router-internal migration work is fully
+//! asynchronous: evict and adopt are fire-and-forget jobs whose
+//! completions come back on a dedicated [`MigrEvent`] back-channel, so
+//! the router never blocks on a worker round-trip (the only blocking
+//! the router ever does is a queue-space wait when *dispatching* an
+//! internal job, which is bounded by one queue's in-flight work, not by
+//! a worker's answer). `stats` never waits on any worker at all: each
+//! worker publishes its [`ShardSnapshot`] into a shared cache after
+//! every state-changing job (before replying to it), and the router
+//! aggregates the caches.
+//!
+//! ## Elastic pool
+//!
+//! The pool is elastic at runtime when `ShardConfig::max_workers`
+//! allows it ([`ShardPool::add_worker`] / [`ShardPool::drain_worker`]):
+//!
+//! * **Scale up** — the router holds one *template* [`WorkerSeed`]
+//!   cloned from the engine at startup and mints a fresh seed from it
+//!   ([`WorkerSeed::clone_seed`]) for every added worker, so scale-up
+//!   never touches a serving thread. New shards append at the next
+//!   index; retired indices are never reused.
+//! * **Drain (scale down / rolling swap)** — a draining shard stops
+//!   accepting *new* sessions but keeps serving its current ones while
+//!   the router pipeline-migrates them off in small evict batches over
+//!   the PR 5 snapshot path, concurrently with live traffic. Once the
+//!   last session has moved the worker gets a clean `Shutdown` and the
+//!   shard is marked retired. A drain that cannot finish by
+//!   `ShardConfig::drain_deadline_ms` aborts and reverts the shard to
+//!   active — sessions already migrated stay where they landed.
+//!
+//! Sessions with a migration leg in flight are *parked*: their client
+//! jobs queue in arrival order inside the router and replay on the
+//! destination shard the moment the adopt completes, so migration is
+//! invisible to clients (same replies, bit-identical transcripts).
 //!
 //! An [`OverloadPolicy`] (default: everything off) layers SLO-aware
 //! control on top:
@@ -76,8 +104,12 @@
 //!   policy-driven bounce carries the hint).
 //! * **Retry/backoff routing** — a full (slow, suspect) shard queue is
 //!   retried `route_retries` times with doubling backoff before the
-//!   client sees the bounce; worker *death* is never retried against —
-//!   it is detected and recovered (below).
+//!   client sees the bounce. The waiting happens on a per-shard
+//!   *deferred-retry queue* drained by the 25 ms supervisor tick — the
+//!   router thread never sleeps, and per-session FIFO order is
+//!   preserved (a job for a session with deferred work joins the back
+//!   of the queue instead of overtaking it). Worker *death* is never
+//!   retried against — it is detected and recovered (below).
 //! * **Load shedding** — when a feed still bounces off a saturated
 //!   shard, the shard's oldest *never started* session (opened, zero
 //!   audio fed) is shed to make room; started sessions are never shed.
@@ -113,17 +145,17 @@
 #![deny(missing_docs)]
 
 use anyhow::{Context, Result};
-use std::collections::{BTreeSet, HashMap};
+use std::collections::{BTreeSet, HashMap, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::config::{OverloadPolicy, ShardConfig};
 use crate::util::json::Json;
 
 use super::engine::{Batcher, Engine, Session, WorkerSeed};
-use super::metrics::{ServeMetrics, ShardMetrics, ShardSnapshot};
+use super::metrics::{ServeMetrics, ShardLifecycle, ShardMetrics, ShardSnapshot};
 use super::server::{backpressure_json, config_json, err_json, obj, ErrCode};
 use super::snapshot::SessionSnapshot;
 
@@ -137,10 +169,11 @@ const SUPERVISE_INTERVAL: Duration = Duration::from_millis(25);
 /// the drill then proceeds exactly as if the staged feeds were lost.
 const KILL_REPORT_WAIT: Duration = Duration::from_secs(10);
 
-/// Cap on remembered shed-victim ids. Session ids are monotone, so
-/// once the set is full the *oldest* notices age out — the clients
-/// least likely to still come asking.
-const SHED_MEMORY: usize = 4096;
+/// How many sessions one drain-driven evict batch asks a worker to
+/// snapshot at once. Small enough that the draining worker keeps
+/// serving between batches (migration is pipelined with traffic), large
+/// enough that a drain converges in a few supervisor ticks.
+const DRAIN_EVICT_BATCH: usize = 8;
 
 /// A client-facing request the router dispatches. Both front-ends speak
 /// this: TCP connection threads (`super::Server`) and the in-process
@@ -168,6 +201,16 @@ pub(crate) enum RouterMsg {
     /// Crash one worker uncleanly and recover its sessions from their
     /// checkpoints (test/ops hook behind [`ShardPool::kill_worker`]).
     Kill { shard: usize, reply: mpsc::Sender<Json> },
+    /// Add one worker to the pool, seeded from the router's template
+    /// seed (elastic scale-up; bounded by `ShardConfig::max_workers`).
+    PoolAdd { reply: mpsc::Sender<Json> },
+    /// Drain one worker: stop assigning new sessions to it, migrate its
+    /// live sessions off concurrently with serving, then retire it.
+    /// The reply arrives when the drain finishes (or aborts on its
+    /// deadline) — the router itself never waits.
+    PoolDrain { shard: usize, reply: mpsc::Sender<Json> },
+    /// Report every shard's lifecycle + load (the `pool` op's `status`).
+    PoolStatus { reply: mpsc::Sender<Json> },
     /// Stop the router and every worker.
     Shutdown,
 }
@@ -227,23 +270,22 @@ enum Job {
     Resume { session: u64, reply: Reply },
     /// Introspect the engine this worker serves.
     Config { reply: Reply },
-    /// Snapshot up to `max` migratable sessions off this shard and hand
-    /// back `(id, capture seq, encoded snapshot)` triples for adoption
-    /// elsewhere (the capture sequence number is the freshness tag the
-    /// router's checkpoint store orders by).
-    Evict { max: usize, reply: mpsc::Sender<Vec<(u64, u64, Vec<u8>)>> },
+    /// Snapshot the named sessions off this shard for adoption
+    /// elsewhere. Asynchronous: the worker answers with
+    /// [`MigrEvent::Evicted`] on the migration back-channel, carrying
+    /// `(id, capture seq, encoded snapshot)` triples for the sessions
+    /// it could capture and the ids it kept (pinned in the batcher,
+    /// already gone, or un-snapshottable) — never a blocking
+    /// round-trip on the router.
+    Evict { ids: Vec<u64>, token: u64 },
     /// Restore a migrated/recovered session under its id. `None`
     /// re-opens fresh (a session that never had a checkpoint).
-    /// `Err(Some(bytes))` hands the snapshot back so the router can
-    /// re-adopt it elsewhere instead of destroying the session;
-    /// `returning` marks a bounce-back to the origin shard after a
-    /// failed migration — re-booked but not counted as adopted.
-    Adopt {
-        id: u64,
-        snap: Option<Vec<u8>>,
-        returning: bool,
-        reply: mpsc::Sender<Result<(), Option<Vec<u8>>>>,
-    },
+    /// Asynchronous: the worker answers with [`MigrEvent::Adopted`];
+    /// a refusal hands the snapshot back so the router can re-adopt it
+    /// elsewhere instead of destroying the session. `returning` marks a
+    /// bounce-back to the origin shard after a failed migration —
+    /// re-booked but not counted as adopted.
+    Adopt { id: u64, snap: Option<Vec<u8>>, returning: bool, token: u64 },
     /// Router-initiated overload shedding: destroy a *never started*
     /// session (opened, zero audio fed) so a saturated shard frees a
     /// slot. No reply — the router already answered the client whose
@@ -291,6 +333,24 @@ impl Job {
     }
 }
 
+/// A migration-leg completion, posted by a worker on the unbounded
+/// migration back-channel. The `token` names the [`Job::Evict`] /
+/// [`Job::Adopt`] leg the router issued, so the router (which drains
+/// this channel between messages and on every supervisor tick) can
+/// resolve the leg without ever having waited on it.
+enum MigrEvent {
+    /// An evict batch ran on `shard`: `moved` sessions were captured
+    /// (id, capture seq, encoded snapshot) and left the worker; `kept`
+    /// ids stayed (pinned in the batcher, not resident, or not
+    /// snapshottable) and remain served by the origin.
+    Evicted { shard: usize, token: u64, moved: Vec<(u64, u64, Vec<u8>)>, kept: Vec<u64> },
+    /// An adopt ran on `shard` for session `id`. `Ok(())` means the
+    /// session is live there; `Err(Some(bytes))` hands the snapshot
+    /// back for adoption elsewhere; `Err(None)` means the session could
+    /// not be restored and no state survived.
+    Adopted { shard: usize, token: u64, id: u64, outcome: Result<(), Option<Vec<u8>>> },
+}
+
 /// A feed waiting for its batch to flush. It keeps the audio it staged
 /// so a worker dying before the flush can hand the un-acknowledged feed
 /// back to the router as a replayable job ([`Job::Die`]).
@@ -322,6 +382,10 @@ struct Worker {
     /// that could not be captured, so recovery must drop the session
     /// rather than reset it.
     ckpt: mpsc::Sender<(u64, u64, Vec<u8>)>,
+    /// Migration back-channel: evict/adopt completions ([`MigrEvent`])
+    /// flow back to the router here instead of over per-job reply
+    /// channels, which is what makes migration legs asynchronous.
+    migr: mpsc::Sender<MigrEvent>,
     /// The shared stats cache this worker publishes into.
     cache: Arc<Mutex<ShardSnapshot>>,
     sessions: HashMap<u64, Session>,
@@ -347,6 +411,7 @@ impl Worker {
         depth: Arc<AtomicUsize>,
         retire: mpsc::Sender<u64>,
         ckpt: mpsc::Sender<(u64, u64, Vec<u8>)>,
+        migr: mpsc::Sender<MigrEvent>,
         cache: Arc<Mutex<ShardSnapshot>>,
     ) -> Worker {
         let batcher = engine.batcher();
@@ -357,6 +422,7 @@ impl Worker {
             depth,
             retire,
             ckpt,
+            migr,
             cache,
             sessions: HashMap::new(),
             metrics: ServeMetrics::default(),
@@ -769,50 +835,49 @@ impl Worker {
             Job::Config { reply } => {
                 reply.send(config_json(&self.engine));
             }
-            Job::Evict { max, reply } => {
+            Job::Evict { ids, token } => {
                 // Any session without a feed in flight may leave this
                 // shard — mid-utterance ones included: their state
-                // travels as a snapshot. Lowest ids first, so which
-                // sessions migrate is deterministic given the trigger.
-                let mut ids: Vec<u64> = self
-                    .sessions
-                    .keys()
-                    .filter(|id| !self.batcher.contains(**id))
-                    .copied()
-                    .collect();
-                ids.sort_unstable();
-                ids.truncate(max);
+                // travels as a snapshot. Sessions pinned in the batcher
+                // (a feed is staged), already gone, or un-snapshottable
+                // are *kept* and reported back, so the router can retry
+                // them in a later batch.
                 let mut moved = Vec::with_capacity(ids.len());
+                let mut kept = Vec::new();
                 for id in ids {
-                    if let Some(mut s) = self.sessions.remove(&id) {
-                        match self.engine.snapshot(&mut s) {
-                            Ok(snap) => {
-                                moved.push((
-                                    id,
-                                    s.metrics.snapshots_taken as u64,
-                                    snap.encode(),
-                                ));
-                                self.last_ckpt.remove(&id);
-                                self.metrics.sessions_migrated_out += 1;
-                                // The evicted sessions are no longer this
-                                // shard's opens; the adopting shard
-                                // re-counts them, so per-shard
-                                // opened/finished stay balanced and the
-                                // aggregate nets out (−1 here, +1 there).
-                                self.metrics.sessions_opened -= 1;
-                            }
-                            // Un-snapshottable (backend without lane
-                            // snapshots): the session stays pinned here.
-                            Err(_) => {
-                                self.sessions.insert(id, s);
-                            }
+                    if self.batcher.contains(id) {
+                        kept.push(id);
+                        continue;
+                    }
+                    let Some(mut s) = self.sessions.remove(&id) else {
+                        kept.push(id);
+                        continue;
+                    };
+                    match self.engine.snapshot(&mut s) {
+                        Ok(snap) => {
+                            moved.push((id, s.metrics.snapshots_taken as u64, snap.encode()));
+                            self.last_ckpt.remove(&id);
+                            self.metrics.sessions_migrated_out += 1;
+                            // The evicted sessions are no longer this
+                            // shard's opens; the adopting shard
+                            // re-counts them, so per-shard
+                            // opened/finished stay balanced and the
+                            // aggregate nets out (−1 here, +1 there).
+                            self.metrics.sessions_opened -= 1;
+                        }
+                        // Un-snapshottable (backend without lane
+                        // snapshots): the session stays pinned here.
+                        Err(_) => {
+                            self.sessions.insert(id, s);
+                            kept.push(id);
                         }
                     }
                 }
                 self.publish();
-                let _ = reply.send(moved);
+                let _ =
+                    self.migr.send(MigrEvent::Evicted { shard: self.shard, token, moved, kept });
             }
-            Job::Adopt { id, snap, returning, reply } => {
+            Job::Adopt { id, snap, returning, token } => {
                 let restored = match snap {
                     Some(bytes) => match SessionSnapshot::decode(&bytes)
                         .and_then(|sn| self.engine.restore(&sn))
@@ -834,7 +899,7 @@ impl Worker {
                     }
                     None => Err(None),
                 };
-                let resp = match restored {
+                let outcome = match restored {
                     Ok(s) => {
                         self.last_ckpt.insert(id, s.metrics.steps);
                         self.sessions.insert(id, s);
@@ -852,7 +917,8 @@ impl Worker {
                     Err(back) => Err(back),
                 };
                 self.publish();
-                let _ = reply.send(resp);
+                let _ =
+                    self.migr.send(MigrEvent::Adopted { shard: self.shard, token, id, outcome });
             }
             Job::Shed { session } => {
                 // Overload shedding: the router only sheds sessions it
@@ -886,35 +952,56 @@ enum LivenessStatus {
 
 /// The death-report slot shared between one worker thread and the
 /// router's supervisor. The worker's `catch_unwind` wrapper fills it on
-/// exit; the router polls `take_panic` between messages and the kill
-/// drill blocks on `wait_dead`. The `reported` flag keeps the polling
-/// fast path to one atomic load per shard.
+/// exit; the router polls `take_panic` between messages and on the
+/// supervisor tick (the kill drill is now discovered the same way — no
+/// caller ever blocks on this slot). The `reported` flag keeps the
+/// polling fast path to one atomic load per shard.
+///
+/// Besides the rescued orphan jobs, a panic report hands over the
+/// worker's *job receiver* itself. The dying thread's drain and its
+/// report are not atomic: a job `try_send`-accepted into the queue
+/// after the drain but before the router harvests the report used to
+/// be destroyed with the channel and bounce to its client. Keeping the
+/// receiver alive inside the slot closes that teardown window — the
+/// router (the only sender) drains the limbo jobs into the same
+/// orphan-replay path, so those clients get their normal replies.
 struct WorkerLiveness {
     reported: AtomicBool,
-    state: Mutex<(LivenessStatus, Vec<Job>)>,
-    cond: Condvar,
+    state: Mutex<(LivenessStatus, Vec<Job>, Option<mpsc::Receiver<Job>>)>,
 }
 
 impl WorkerLiveness {
     fn new() -> WorkerLiveness {
         WorkerLiveness {
             reported: AtomicBool::new(false),
-            state: Mutex::new((LivenessStatus::Live, Vec::new())),
-            cond: Condvar::new(),
+            state: Mutex::new((LivenessStatus::Live, Vec::new(), None)),
         }
     }
 
-    /// Post the worker's exit status (+ rescued orphan jobs on panic).
-    fn report(&self, status: LivenessStatus, orphans: Vec<Job>) {
-        *self.state.lock().unwrap() = (status, orphans);
+    /// Post the worker's exit status (+ rescued orphan jobs and the
+    /// still-open job receiver on panic).
+    fn report(
+        &self,
+        status: LivenessStatus,
+        orphans: Vec<Job>,
+        limbo: Option<mpsc::Receiver<Job>>,
+    ) {
+        *self.state.lock().unwrap() = (status, orphans, limbo);
         self.reported.store(true, Ordering::Release);
-        self.cond.notify_all();
     }
 
-    /// Harvest a panic report exactly once: the rescued orphans come
-    /// back on the first call after the worker reported a panic, and
-    /// the slot is spent from then on. Clean exits return `None`.
-    fn take_panic(&self) -> Option<Vec<Job>> {
+    /// Whether an unharvested panic report is waiting (cheap peek: one
+    /// atomic load on the fast path).
+    fn panicked(&self) -> bool {
+        self.reported.load(Ordering::Acquire)
+            && matches!(self.state.lock().unwrap().0, LivenessStatus::Panicked)
+    }
+
+    /// Harvest a panic report exactly once: the rescued orphans and the
+    /// limbo receiver come back on the first call after the worker
+    /// reported a panic, and the slot is spent from then on. Clean
+    /// exits return `None`.
+    fn take_panic(&self) -> Option<(Vec<Job>, Option<mpsc::Receiver<Job>>)> {
         if !self.reported.load(Ordering::Acquire) {
             return None;
         }
@@ -922,24 +1009,9 @@ impl WorkerLiveness {
         match st.0 {
             LivenessStatus::Panicked => {
                 st.0 = LivenessStatus::Clean;
-                Some(std::mem::take(&mut st.1))
+                Some((std::mem::take(&mut st.1), st.2.take()))
             }
             _ => None,
-        }
-    }
-
-    /// Block until the worker has reported *any* exit, bounded by
-    /// `timeout` — the kill drill's synchronization point.
-    fn wait_dead(&self, timeout: Duration) {
-        let deadline = Instant::now() + timeout;
-        let mut st = self.state.lock().unwrap();
-        while matches!(st.0, LivenessStatus::Live) {
-            let now = Instant::now();
-            if now >= deadline {
-                return;
-            }
-            let (guard, _) = self.cond.wait_timeout(st, deadline - now).unwrap();
-            st = guard;
         }
     }
 }
@@ -957,15 +1029,19 @@ impl WorkerLiveness {
 ///   un-acknowledged; opens are answered from router state by
 ///   [`Router::replay`] since recovery re-books them).
 ///
-/// The job queue is dropped *before* the report so that by the time the
-/// supervisor sees the panic, every subsequent router send fails
-/// deterministically and no further job can slip into a dead queue.
+/// The job *receiver* rides the report into the liveness slot instead
+/// of being dropped: the drain above and the report are not atomic, so
+/// a job the router `try_send`-accepts in between would otherwise be
+/// destroyed by the channel teardown and bounce to its client. The
+/// router (the only sender) drains the limbo receiver when it harvests
+/// the report, then drops it — from that point every further send
+/// fails deterministically and the dead-route path takes over.
 fn run_worker(mut worker: Worker, jobs: mpsc::Receiver<Job>, liveness: Arc<WorkerLiveness>) {
     let result = catch_unwind(AssertUnwindSafe(|| worker.run(&jobs)));
     match result {
         Ok(()) => {
             drop(jobs);
-            liveness.report(LivenessStatus::Clean, Vec::new());
+            liveness.report(LivenessStatus::Clean, Vec::new(), None);
         }
         Err(_) => {
             let mut orphans: Vec<Job> = worker
@@ -979,9 +1055,9 @@ fn run_worker(mut worker: Worker, jobs: mpsc::Receiver<Job>, liveness: Arc<Worke
                 })
                 .collect();
             // Drain jobs queued behind the panic; router-internal
-            // transactions (evict/adopt) are dropped — their reply
-            // channels closing signals `Dead` to the router's
-            // serialized migration legs.
+            // transactions (evict/adopt/shed) are dropped — the router
+            // resolves their migration legs itself when it declares
+            // this shard dead.
             while let Ok(job) = jobs.try_recv() {
                 worker.depth.fetch_sub(1, Ordering::Relaxed);
                 match job {
@@ -998,8 +1074,13 @@ fn run_worker(mut worker: Worker, jobs: mpsc::Receiver<Job>, liveness: Arc<Worke
                     | Job::Shutdown => {}
                 }
             }
-            drop(jobs);
-            liveness.report(LivenessStatus::Panicked, orphans);
+            // Fault hook: widen the drain→report teardown window so the
+            // chaos suites can land a job in the limbo channel (no-op
+            // unless armed).
+            if let Some(delay) = worker.engine.fault_teardown_delay() {
+                std::thread::sleep(delay);
+            }
+            liveness.report(LivenessStatus::Panicked, orphans, Some(jobs));
         }
     }
 }
@@ -1029,14 +1110,92 @@ struct Booked {
     started: bool,
 }
 
-/// Outcome of asking a shard to adopt a session.
-enum AdoptOutcome {
-    /// The shard restored the session.
-    Adopted,
-    /// The shard refused; the snapshot bytes came back when possible.
-    Refused(Option<Vec<u8>>),
-    /// The shard died holding the request.
-    Dead,
+/// Router bookkeeping a client job carries: applied only once the job
+/// is actually enqueued on a worker (never while it waits on the
+/// deferred-retry queue), so assignment state mirrors what a worker
+/// will eventually observe.
+enum Commit {
+    /// Book the session on the dispatch shard.
+    Open(u64),
+    /// Mark the session started (no longer a shed candidate).
+    Feed(u64),
+    /// Retire the session's booking and checkpoint.
+    Finish(u64),
+    /// No router bookkeeping.
+    None,
+}
+
+impl Commit {
+    fn of(job: &Job) -> Commit {
+        match job {
+            Job::Open { id, .. } => Commit::Open(*id),
+            Job::Feed { session, .. } => Commit::Feed(*session),
+            Job::Finish { session, .. } => Commit::Finish(*session),
+            _ => Commit::None,
+        }
+    }
+}
+
+/// A migration leg the router has issued but not yet seen complete,
+/// keyed by its token. Tracked so a worker death mid-leg can be
+/// resolved (the completion event will never arrive).
+enum Leg {
+    /// An evict batch in flight on `shard`; `ids` are parked.
+    Evict { shard: usize, ids: Vec<u64> },
+    /// An adopt of `id` in flight on shard `to`; `origin` is the shard
+    /// the session is still assigned to (a dead shard for recovery
+    /// legs), `returning` a bounce-back to the origin.
+    Adopt { id: u64, to: usize, origin: usize, returning: bool },
+}
+
+/// An adopt the router wants to issue but has not dispatched yet —
+/// either freshly produced by an evict completion, or bounced off a
+/// full/dead target. Dispatch is retried on every pump.
+struct PendingAdopt {
+    id: u64,
+    snap: Option<Vec<u8>>,
+    /// Forced target (a bounce-back to the origin); `None` picks the
+    /// least-loaded active shard at dispatch time.
+    to: Option<usize>,
+    origin: usize,
+    returning: bool,
+}
+
+/// A client job whose shard queue was full, parked on the deferred
+/// retry queue instead of sleeping the router thread. Re-dispatched by
+/// the supervisor tick once `not_before` passes.
+struct Deferred {
+    /// The shard the job last targeted (sessions re-resolve through
+    /// `assign` at pump time; this is the fallback for session-less
+    /// jobs).
+    shard: usize,
+    job: Job,
+    attempts_left: u32,
+    backoff_ms: u64,
+    not_before: Instant,
+}
+
+/// One in-progress drain ([`ShardPool::drain_worker`]).
+struct DrainState {
+    deadline: Instant,
+    reply: mpsc::Sender<Json>,
+    /// Sessions migrated off the draining shard so far.
+    migrated: u64,
+}
+
+/// One in-progress kill drill ([`ShardPool::kill_worker`]): the reply
+/// is deferred until the victim's death report is harvested and every
+/// recovery adopt it triggered has resolved.
+struct KillState {
+    reply: mpsc::Sender<Json>,
+    /// Give up waiting for the death report after this instant and
+    /// recover as if the staged feeds were lost (wedged worker).
+    deadline: Instant,
+    /// Recovery adopts still in flight (None until the death report is
+    /// harvested and recovery legs are issued).
+    pending: Option<usize>,
+    /// Sessions recovered for this drill so far.
+    recovered: u64,
 }
 
 /// Router state: session→shard assignments, per-shard load and
@@ -1048,10 +1207,13 @@ enum AdoptOutcome {
 /// invariant that matters.
 struct Router {
     shards: Vec<ShardHandle>,
-    /// A worker whose job channel disconnected (thread died or was
-    /// killed). Dead shards are excluded from `pick`/`rebalance`, and
-    /// their sessions are re-adopted from checkpoints on discovery.
-    dead: Vec<bool>,
+    /// Per-shard lifecycle. `Active` shards take new sessions;
+    /// `Draining` shards keep serving their current sessions but take
+    /// no new ones while migration empties them; `Retired` shards shut
+    /// down cleanly after a drain; `Dead` shards lost their worker and
+    /// had their sessions re-adopted from checkpoints on discovery.
+    /// Only `Active` shards are `pick`/`rebalance` targets.
+    life: Vec<ShardLifecycle>,
     /// Per-shard count of client jobs bounced with `backpressure`
     /// (router-side; folded into stats snapshots so shed load shows).
     rejected: Vec<u64>,
@@ -1071,8 +1233,12 @@ struct Router {
     shed: u64,
     /// Ids of shed victims, so the owner's *next* request answers the
     /// dedicated `session_shed` code (reopen + resend) instead of the
-    /// indistinguishable `unknown_session`. Bounded by [`SHED_MEMORY`].
+    /// indistinguishable `unknown_session`. Bounded by the policy's
+    /// `shed_memory`; evictions are counted in `shed_evicted`.
     shed_ids: BTreeSet<u64>,
+    /// Shed-id notices evicted from the bounded `shed_ids` set
+    /// (surfaced in `stats` so the capacity limit is observable).
+    shed_evicted: u64,
     /// Opens refused by admission control (surfaced in `stats`).
     admission_rejected: u64,
     /// Spontaneous worker panics the supervisor detected (the kill
@@ -1094,6 +1260,48 @@ struct Router {
     retire_rx: mpsc::Receiver<u64>,
     /// The workers' checkpoint back-channel.
     ckpt_rx: mpsc::Receiver<(u64, u64, Vec<u8>)>,
+    /// The workers' migration back-channel: async evict/adopt
+    /// completions ([`MigrEvent`]).
+    migr_rx: mpsc::Receiver<MigrEvent>,
+    /// Template seed for elastic scale-up: [`WorkerSeed::clone_seed`]
+    /// mints a fresh seed per [`RouterMsg::PoolAdd`]. `None` when the
+    /// backend cannot clone workers (add_worker then errors).
+    template: Option<WorkerSeed>,
+    /// Sender clones handed to runtime-added workers.
+    retire_tx: mpsc::Sender<u64>,
+    /// Sender clone handed to runtime-added workers.
+    ckpt_tx: mpsc::Sender<(u64, u64, Vec<u8>)>,
+    /// Sender clone handed to runtime-added workers.
+    migr_tx: mpsc::Sender<MigrEvent>,
+    /// Job-queue capacity for runtime-added workers (same as startup).
+    queue_depth: usize,
+    /// Ceiling on concurrently live workers (`effective_max_workers`).
+    max_workers: usize,
+    /// Per-drain time budget before the drain aborts.
+    drain_deadline: Duration,
+    /// In-progress drains, by shard.
+    drains: HashMap<usize, DrainState>,
+    /// In-progress kill drills, by shard (reply deferred until the
+    /// death report is harvested and recovery resolves).
+    kills: HashMap<usize, KillState>,
+    /// Outstanding migration legs by token.
+    legs: HashMap<u64, Leg>,
+    /// Token source for migration legs.
+    next_token: u64,
+    /// Jobs for sessions with a migration leg in flight, queued in
+    /// arrival order and replayed on the destination once the leg
+    /// resolves — migration is invisible to clients.
+    parked: HashMap<u64, Vec<Job>>,
+    /// Adopts awaiting dispatch (produced by evict completions, or
+    /// bounced off a full target); pumped on every tick and message.
+    pending_adopts: Vec<PendingAdopt>,
+    /// The deferred-retry queue: jobs whose shard queue was full wait
+    /// here (instead of sleeping the router) and re-dispatch on the
+    /// supervisor tick, in arrival order, preserving per-session FIFO.
+    deferred: VecDeque<Deferred>,
+    /// Per-session count of deferred jobs, so later jobs for the same
+    /// session queue behind them rather than overtaking.
+    deferred_count: HashMap<u64, usize>,
 }
 
 impl Router {
@@ -1121,6 +1329,19 @@ impl Router {
                 self.checkpoints.insert(id, (seq, snap));
             }
         }
+        let mut events = Vec::new();
+        while let Ok(ev) = self.migr_rx.try_recv() {
+            events.push(ev);
+        }
+        for ev in events {
+            self.handle_migr_event(ev);
+        }
+    }
+
+    /// Whether shard `i` still has a worker behind it (active or
+    /// draining — a draining shard serves its residents to the end).
+    fn is_live(&self, i: usize) -> bool {
+        matches!(self.life[i], ShardLifecycle::Active | ShardLifecycle::Draining)
     }
 
     /// Declare a shard dead: exclude it from routing and advance its
@@ -1129,36 +1350,111 @@ impl Router {
     /// produces for an in-flight request is dropped instead of racing
     /// the recovery path's own answer for the same request.
     fn mark_dead(&mut self, shard: usize) {
-        if !self.dead[shard] {
-            self.dead[shard] = true;
+        if self.is_live(shard) {
+            self.life[shard] = ShardLifecycle::Dead;
             self.shards[shard].generation.fetch_add(1, Ordering::SeqCst);
             // Undeliverable shed notices die with the worker.
             self.shed_pending.retain(|&(s, _)| s != shard);
         }
     }
 
-    /// One supervision pass: harvest death reports posted by worker
-    /// `catch_unwind` wrappers ([`run_worker`]) and run the standard
-    /// recovery for each — mark dead, re-adopt its sessions from their
-    /// checkpoints, replay the rescued orphan jobs. This is how a
-    /// *spontaneous* worker panic is discovered (rather than at the
-    /// next send), and it is the same path the kill drill takes.
-    fn supervise(&mut self) {
-        for i in 0..self.shards.len() {
-            if self.dead[i] {
-                continue;
-            }
-            let harvested = self.shards[i].liveness.take_panic();
-            let Some(orphans) = harvested else {
-                continue;
-            };
+    /// Full death handling for a shard whose worker is known gone
+    /// (panicked per its liveness slot, or its job channel
+    /// disconnected): harvest the death report, mark the shard dead,
+    /// resolve every migration leg the dead worker was holding, abort
+    /// any drain of it, and start asynchronous recovery of its
+    /// sessions. Idempotent — a second discovery is a no-op.
+    fn handle_death(&mut self, shard: usize) {
+        if !self.is_live(shard) {
+            return;
+        }
+        let (orphans, limbo) =
+            self.shards[shard].liveness.take_panic().unwrap_or((Vec::new(), None));
+        // The kill drill is counted by its own reply, not here.
+        if !self.kills.contains_key(&shard) {
             self.panics_detected += 1;
-            self.mark_dead(i);
-            self.recover(i);
-            for job in orphans {
-                self.replay(job);
+        }
+        self.mark_dead(shard);
+        self.resolve_legs_for_dead(shard);
+        if let Some(d) = self.drains.remove(&shard) {
+            let _ = d
+                .reply
+                .send(err_json(ErrCode::Internal, &format!("shard {shard} died while draining")));
+        }
+        self.recover(shard, orphans, limbo);
+    }
+
+    /// Resolve migration legs that can never complete because `shard`'s
+    /// worker died holding them: an evict batch dies with its sessions
+    /// still parked (recovery re-adopts them from checkpoints); an
+    /// adopt into the dead shard is re-issued elsewhere from the
+    /// retained snapshot copy.
+    fn resolve_legs_for_dead(&mut self, shard: usize) {
+        let tokens: Vec<u64> = self
+            .legs
+            .iter()
+            .filter(|(_, l)| match l {
+                Leg::Evict { shard: s, .. } => *s == shard,
+                Leg::Adopt { to, .. } => *to == shard,
+            })
+            .map(|(&t, _)| t)
+            .collect();
+        for t in tokens {
+            match self.legs.remove(&t) {
+                Some(Leg::Adopt { id, origin, .. }) => {
+                    let snap = self
+                        .checkpoints
+                        .get(&id)
+                        .map(|(_, b)| b.clone())
+                        .filter(|b| !b.is_empty());
+                    self.pending_adopts.push(PendingAdopt {
+                        id,
+                        snap,
+                        to: None,
+                        origin,
+                        returning: false,
+                    });
+                }
+                // Evicted sessions stay parked; they are still assigned
+                // to the dead shard, so recovery picks them up.
+                Some(Leg::Evict { .. }) | None => {}
             }
         }
+        for p in &mut self.pending_adopts {
+            if p.to == Some(shard) {
+                p.to = None;
+                p.returning = false;
+            }
+        }
+    }
+
+    /// One supervision pass: harvest death reports posted by worker
+    /// `catch_unwind` wrappers ([`run_worker`]) and run the standard
+    /// recovery for each — this is how a *spontaneous* worker panic is
+    /// discovered (rather than at the next send), and the kill drill
+    /// takes the same path. The pass also drives everything deferred:
+    /// retry queues, pending adopts, drain progress, and kill drills
+    /// whose victim never reported (wedged worker).
+    fn supervise(&mut self) {
+        let now = Instant::now();
+        for i in 0..self.shards.len() {
+            if !self.is_live(i) {
+                continue;
+            }
+            if self.shards[i].liveness.panicked() {
+                self.handle_death(i);
+            } else if matches!(
+                self.kills.get(&i),
+                Some(k) if k.pending.is_none() && now >= k.deadline
+            ) {
+                // The victim never reported (wedged in the device
+                // backend): proceed as if its staged feeds were lost.
+                self.handle_death(i);
+            }
+        }
+        self.pump_deferred();
+        self.pump_pending_adopts();
+        self.advance_drains();
     }
 
     /// Shed the oldest *never started* session on a saturated shard
@@ -1171,10 +1467,13 @@ impl Router {
         if !self.overload.shed_never_started {
             return false;
         }
+        // A session with a migration leg in flight is not a candidate:
+        // its worker-side state is in transit and the shed notice would
+        // chase it across shards.
         let victim = self
             .assign
             .iter()
-            .filter(|(_, b)| b.shard == shard && !b.started)
+            .filter(|&(id, b)| b.shard == shard && !b.started && !self.parked.contains_key(id))
             .map(|(&id, _)| id)
             .min();
         let Some(id) = victim else {
@@ -1185,8 +1484,13 @@ impl Router {
         self.checkpoints.remove(&id);
         self.shed += 1;
         self.shed_ids.insert(id);
-        while self.shed_ids.len() > SHED_MEMORY {
+        // Session ids are monotone, so the *oldest* notices age out of
+        // the bounded set — the clients least likely to still come
+        // asking. Evictions are counted so the policy's `shed_memory`
+        // limit is observable in `stats`.
+        while self.shed_ids.len() > self.overload.shed_memory {
             self.shed_ids.pop_first();
+            self.shed_evicted += 1;
         }
         self.shed_pending.push((shard, id));
         self.flush_shed();
@@ -1198,7 +1502,7 @@ impl Router {
         let mut i = 0;
         while i < self.shed_pending.len() {
             let (shard, id) = self.shed_pending[i];
-            if self.dead[shard] {
+            if !self.is_live(shard) {
                 self.shed_pending.remove(i);
                 continue;
             }
@@ -1213,53 +1517,111 @@ impl Router {
                 }
                 Err(mpsc::TrySendError::Disconnected(_)) => {
                     self.shards[shard].depth.fetch_sub(1, Ordering::Relaxed);
-                    self.mark_dead(shard);
+                    self.handle_death(shard);
                 }
             }
         }
     }
 
-    /// Forward a router-internal job (evict/adopt/die/shutdown),
-    /// accounting its queue-depth slot. Blocking is acceptable here:
-    /// these jobs are part of a serialized router transaction and the
-    /// worker always drains. Returns false (and marks the shard dead)
-    /// when the worker is gone.
+    /// Forward a router-internal control job (die/shutdown), accounting
+    /// its queue-depth slot. The send may block on *queue space* — a
+    /// bounded wait on a live worker draining, never on a worker's
+    /// answer (migration legs are asynchronous and go through
+    /// `try_send`). Returns false (and runs death handling) when the
+    /// worker is gone.
     fn send(&mut self, shard: usize, job: Job) -> bool {
         self.shards[shard].depth.fetch_add(1, Ordering::Relaxed);
         if self.shards[shard].tx.send(job).is_err() {
             self.shards[shard].depth.fetch_sub(1, Ordering::Relaxed);
-            self.mark_dead(shard);
+            self.handle_death(shard);
             return false;
         }
         true
     }
 
-    /// Forward a client-facing job without (indefinitely) blocking the
-    /// router on one saturated shard (head-of-line isolation): a full
-    /// worker queue is a *suspect* shard — slow, wedged, or merely busy
-    /// — so it gets the policy's bounded retry-with-backoff
-    /// (`route_retries` × doubling `route_backoff_ms`, default: none)
-    /// and then bounces the request with `backpressure` carrying the
-    /// policy's `retry_after_ms` hint; the hot shard's clients back off
-    /// while every other shard keeps routing. A *dead* shard triggers
-    /// recovery (its sessions re-adopt from checkpoints onto survivors)
-    /// and the job is retried once on its session's new shard. Returns
-    /// the shard the job was enqueued on.
-    fn route_client(&mut self, shard: usize, job: Job) -> Option<usize> {
+    /// Router bookkeeping owed the moment a job truly lands on a
+    /// worker's queue — deferred alongside the job itself when the job
+    /// waits on the retry queue, so a bounced open leaves no phantom
+    /// session and a deferred finish retires only once dispatched.
+    fn commit(&mut self, shard: usize, c: Commit) {
+        match c {
+            Commit::Open(id) => {
+                self.assign.insert(id, Booked { shard, started: false });
+                self.open_count[shard] += 1;
+                self.rebalance();
+            }
+            Commit::Feed(id) => {
+                // Audio is now in flight: from here on the session is
+                // never a shedding candidate.
+                if let Some(b) = self.assign.get_mut(&id) {
+                    b.started = true;
+                }
+            }
+            Commit::Finish(id) => {
+                self.assign.remove(&id);
+                self.checkpoints.remove(&id);
+                self.open_count[shard] = self.open_count[shard].saturating_sub(1);
+                self.rebalance();
+            }
+            Commit::None => {}
+        }
+    }
+
+    /// Forward a client-facing job without ever blocking or sleeping
+    /// the router (head-of-line isolation): a full worker queue is a
+    /// *suspect* shard — slow, wedged, or merely busy — so the job
+    /// parks on the shard's deferred-retry queue for the policy's
+    /// bounded retry-with-backoff (`route_retries` × doubling
+    /// `route_backoff_ms`, default: none, driven by the supervisor
+    /// tick) and then bounces with `backpressure` carrying the policy's
+    /// `retry_after_ms` hint. A *dead* shard triggers asynchronous
+    /// recovery; jobs for a session mid-recovery (or mid-migration)
+    /// park behind its leg and replay on the destination shard.
+    fn dispatch(&mut self, shard: usize, job: Job, attempts_left: u32, backoff_ms: u64) {
+        // FIFO guard: a session with deferred work must not have a
+        // newer job overtake it — the newcomer joins the back of the
+        // deferred queue instead.
+        if let Some(id) = job.session_id() {
+            if self.deferred_count.get(&id).copied().unwrap_or(0) > 0 {
+                self.defer(shard, job, attempts_left, backoff_ms, false);
+                return;
+            }
+        }
+        self.dispatch_now(shard, job, attempts_left, backoff_ms, false);
+    }
+
+    /// The dispatch core, without the FIFO guard — the pump calls this
+    /// directly for the *oldest* deferred job of a session (guarding it
+    /// against its own siblings would re-queue it behind them). A
+    /// re-deferral from here goes to the queue `front` when asked, so a
+    /// pumped job keeps its place.
+    fn dispatch_now(
+        &mut self,
+        shard: usize,
+        job: Job,
+        attempts_left: u32,
+        backoff_ms: u64,
+        retry_front: bool,
+    ) {
         let mut shard = shard;
         let mut job = job;
-        let mut full_retries = self.overload.route_retries;
-        let mut backoff_ms = self.overload.route_backoff_ms.max(1);
         // At most two enqueue rounds against *dead* workers (initial +
         // one post-recovery reroute); Full retries are bounded
-        // separately by the policy's `route_retries` budget.
+        // separately by the deferred queue's `attempts_left` budget.
         let mut disconnects = 0;
         while disconnects < 2 {
-            if self.dead[shard] {
-                self.recover(shard);
+            if let Some(id) = job.session_id() {
+                // A session mid-migration/recovery: queue in arrival
+                // order behind its leg; the adopt completion replays.
+                if self.parked.contains_key(&id) {
+                    self.parked.get_mut(&id).unwrap().push(job);
+                    return;
+                }
+            }
+            if !self.is_live(shard) {
                 match self.reroute(&job) {
-                    Some(s) => shard = s,
-                    None => break,
+                    Some(s) if self.is_live(s) => shard = s,
+                    _ => break,
                 }
             }
             // Tag the reply with the target worker's generation: should
@@ -1269,22 +1631,20 @@ impl Router {
             if let Some(reply) = job.reply_mut() {
                 reply.tag(&self.shards[shard].generation);
             }
+            let commit = Commit::of(&job);
             self.shards[shard].depth.fetch_add(1, Ordering::Relaxed);
             match self.shards[shard].tx.try_send(job) {
-                Ok(()) => return Some(shard),
-                Err(mpsc::TrySendError::Full(mut j)) => {
+                Ok(()) => {
+                    self.commit(shard, commit);
+                    return;
+                }
+                Err(mpsc::TrySendError::Full(j)) => {
                     self.shards[shard].depth.fetch_sub(1, Ordering::Relaxed);
-                    if full_retries > 0 {
-                        // The stall is bounded (route_retries doublings
-                        // of route_backoff_ms) and opted into by policy:
-                        // trading a brief router pause for not bouncing
-                        // is exactly what the knob means.
-                        full_retries -= 1;
-                        std::thread::sleep(Duration::from_millis(backoff_ms));
-                        backoff_ms = backoff_ms.saturating_mul(2);
-                        job = j;
-                        continue;
+                    if attempts_left > 0 {
+                        self.defer(shard, j, attempts_left, backoff_ms, retry_front);
+                        return;
                     }
+                    let mut j = j;
                     self.rejected[shard] += 1;
                     // Make room for the load that bounced: shed the
                     // shard's oldest never-started session (policy-gated).
@@ -1298,30 +1658,127 @@ impl Router {
                             self.overload.retry_after_ms,
                         ));
                     }
-                    return None;
+                    return;
                 }
                 Err(mpsc::TrySendError::Disconnected(j)) => {
                     self.shards[shard].depth.fetch_sub(1, Ordering::Relaxed);
-                    self.mark_dead(shard);
+                    self.handle_death(shard);
                     disconnects += 1;
                     job = j;
-                    // Loop: the dead-shard arm above recovers + reroutes.
+                    // Loop: the parked arm (recovery parked the
+                    // session) or the dead-shard reroute takes over.
                 }
             }
         }
-        // Out of retries (or nowhere to reroute): answer the client.
-        let lost_session = job
-            .session_id()
-            .is_some_and(|id| !self.assign.contains_key(&id));
+        // Nowhere to route: answer the client.
+        let payload = match job.session_id() {
+            Some(id) if !self.assign.contains_key(&id) => {
+                self.lost_session_json(id, "session lost with its worker")
+            }
+            _ => err_json(ErrCode::Internal, "shard worker unavailable"),
+        };
         if let Some(reply) = job.reply_mut() {
             reply.untag();
-            reply.send(if lost_session {
-                err_json(ErrCode::UnknownSession, "session lost with its worker")
-            } else {
-                err_json(ErrCode::Internal, "shard worker unavailable")
-            });
+            reply.send(payload);
         }
-        None
+    }
+
+    /// Park a job on the deferred-retry queue; the supervisor tick
+    /// re-dispatches it once its backoff passes. `front` re-queues a
+    /// pumped job at its old position instead of behind its siblings.
+    fn defer(
+        &mut self,
+        shard: usize,
+        mut job: Job,
+        attempts_left: u32,
+        backoff_ms: u64,
+        front: bool,
+    ) {
+        if let Some(reply) = job.reply_mut() {
+            reply.untag();
+        }
+        if let Some(id) = job.session_id() {
+            *self.deferred_count.entry(id).or_insert(0) += 1;
+        }
+        let d = Deferred {
+            shard,
+            job,
+            attempts_left,
+            backoff_ms,
+            not_before: Instant::now() + Duration::from_millis(backoff_ms),
+        };
+        if front {
+            self.deferred.push_front(d);
+        } else {
+            self.deferred.push_back(d);
+        }
+    }
+
+    /// Re-dispatch deferred jobs whose backoff has passed, in arrival
+    /// order. Each retry spends one unit of the attempt budget and
+    /// doubles the backoff — exactly the schedule the old in-thread
+    /// sleep implemented, without ever sleeping the router. Per-session
+    /// FIFO: at most one job per session is released per pump (its
+    /// oldest), later siblings hold their queue positions; parked
+    /// sessions hold everything until their migration leg resolves.
+    fn pump_deferred(&mut self) {
+        if self.deferred.is_empty() {
+            return;
+        }
+        let now = Instant::now();
+        let mut held: BTreeSet<u64> = BTreeSet::new();
+        let pending = std::mem::take(&mut self.deferred);
+        let mut rest: VecDeque<Deferred> = VecDeque::with_capacity(pending.len());
+        for d in pending {
+            let sid = d.job.session_id();
+            let blocked =
+                sid.is_some_and(|id| held.contains(&id) || self.parked.contains_key(&id));
+            if blocked || d.not_before > now {
+                if let Some(id) = sid {
+                    held.insert(id);
+                }
+                rest.push_back(d);
+                continue;
+            }
+            if let Some(id) = sid {
+                held.insert(id);
+                if let Some(c) = self.deferred_count.get_mut(&id) {
+                    *c -= 1;
+                    if *c == 0 {
+                        self.deferred_count.remove(&id);
+                    }
+                }
+            }
+            // Route fresh: the session may have migrated (or been
+            // lost/shed) while the job waited.
+            let target = match sid {
+                Some(id) => match self.assign.get(&id) {
+                    Some(b) => b.shard,
+                    None => {
+                        let payload = self.lost_session_json(id, "unknown session");
+                        let mut job = d.job;
+                        if let Some(reply) = job.reply_mut() {
+                            reply.untag();
+                            reply.send(payload);
+                        }
+                        continue;
+                    }
+                },
+                None if matches!(d.job, Job::Open { .. }) => self.pick(),
+                None => d.shard,
+            };
+            self.dispatch_now(
+                target,
+                d.job,
+                d.attempts_left - 1,
+                d.backoff_ms.saturating_mul(2),
+                true,
+            );
+        }
+        // Re-deferred jobs sit at the queue head (one per session, so
+        // head order within a session is preserved); the not-yet-due
+        // tail goes back behind them.
+        self.deferred.extend(rest);
     }
 
     /// Re-route a job rescued off a dying worker (a staged feed, or a
@@ -1344,20 +1801,32 @@ impl Router {
                     err_json(ErrCode::Internal, "session lost with its worker")
                 });
             }
-            mut job => match self.reroute(&job) {
-                Some(shard) => {
-                    self.route_client(shard, job);
-                }
-                None => {
-                    if let Some(reply) = job.reply_mut() {
-                        reply.untag();
-                        reply.send(err_json(
-                            ErrCode::UnknownSession,
-                            "session lost with its worker",
-                        ));
+            mut job => {
+                if let Some(id) = job.session_id() {
+                    // The session's recovery adopt is still in flight:
+                    // queue behind it; the completion replays in order.
+                    if self.parked.contains_key(&id) {
+                        self.parked.get_mut(&id).unwrap().push(job);
+                        return;
                     }
                 }
-            },
+                match self.reroute(&job) {
+                    Some(shard) => {
+                        let backoff = self.overload.route_backoff_ms.max(1);
+                        self.dispatch(shard, job, self.overload.route_retries, backoff);
+                    }
+                    None => {
+                        let payload = match job.session_id() {
+                            Some(id) => self.lost_session_json(id, "session lost with its worker"),
+                            None => err_json(ErrCode::Internal, "shard worker unavailable"),
+                        };
+                        if let Some(reply) = job.reply_mut() {
+                            reply.untag();
+                            reply.send(payload);
+                        }
+                    }
+                }
+            }
         }
     }
 
@@ -1383,99 +1852,170 @@ impl Router {
             return self.assign.get(&id).map(|b| b.shard);
         }
         let s = self.pick();
-        (!self.dead[s]).then_some(s)
+        self.is_live(s).then_some(s)
     }
 
-    /// Least-loaded *live* shard by open sessions, lowest index on ties
-    /// — deterministic given the open/finish sequence. Falls back to
-    /// shard 0 only when every worker is dead (the request then bounces
-    /// with `internal` rather than silently hanging).
+    /// Least-loaded *active* shard by open sessions, lowest index on
+    /// ties — deterministic given the open/finish sequence. Draining
+    /// shards take no new placements. Falls back to shard 0 only when
+    /// no worker is active (the request then bounces with `internal`
+    /// rather than silently hanging).
     fn pick(&self) -> usize {
         (0..self.shards.len())
-            .filter(|&i| !self.dead[i])
+            .filter(|&i| self.life[i] == ShardLifecycle::Active)
             .min_by_key(|&i| (self.open_count[i], i))
             .unwrap_or(0)
     }
 
     /// The lowest-index live shard (serves `config`).
     fn first_live(&self) -> usize {
-        (0..self.shards.len()).find(|&i| !self.dead[i]).unwrap_or(0)
+        (0..self.shards.len()).find(|&i| self.is_live(i)).unwrap_or(0)
     }
 
-    /// Re-adopt every session assigned to a dead shard onto surviving
-    /// shards, restoring from the latest checkpoint when one exists. A
-    /// session that never shipped a checkpoint re-opens fresh when
+    /// Drop every trace of a session and answer any jobs parked behind
+    /// its migration/recovery leg with the lost-session payload.
+    fn lose_session(&mut self, id: u64, detail: &str) {
+        if let Some(b) = self.assign.remove(&id) {
+            self.open_count[b.shard] = self.open_count[b.shard].saturating_sub(1);
+        }
+        self.checkpoints.remove(&id);
+        self.deferred_count.remove(&id);
+        if let Some(jobs) = self.parked.remove(&id) {
+            for mut job in jobs {
+                let payload = self.lost_session_json(id, detail);
+                if let Some(reply) = job.reply_mut() {
+                    reply.untag();
+                    reply.send(payload);
+                }
+            }
+        }
+    }
+
+    /// Whether a session has an adopt leg in flight or queued — such a
+    /// session must not be re-adopted by recovery or picked for another
+    /// migration until its current leg resolves.
+    fn migrating(&self, id: u64) -> bool {
+        self.pending_adopts.iter().any(|p| p.id == id)
+            || self
+                .legs
+                .values()
+                .any(|l| matches!(l, Leg::Adopt { id: lid, .. } if *lid == id))
+    }
+
+    /// Queue re-adoption of every session assigned to a dead shard,
+    /// restoring from the latest checkpoint when one exists. A session
+    /// that never shipped a checkpoint re-opens fresh when
     /// checkpointing is enabled *and* the backend supports snapshots —
     /// it then provably never flushed a feed, so nothing was ever
     /// acknowledged for it. Otherwise (checkpointing disabled, or a
     /// snapshot-less backend, where "no checkpoint" proves nothing) it
     /// is dropped — later ops report `unknown_session` rather than
     /// silently serving a reset transcript as a continuation.
-    fn recover(&mut self, dead_shard: usize) {
+    ///
+    /// Recovery is *pipelined*: adopts queue as [`PendingAdopt`]s and
+    /// dispatch without waiting for worker replies, so a dead shard
+    /// never stalls routing for the live ones. `orphans` are the client
+    /// jobs rescued off the dying worker's queue, `limbo` whatever was
+    /// still in its channel when the death report posted — both replay
+    /// onto the sessions' recovery shards (parking behind in-flight
+    /// adopts), so the clients' pending requests answer normally.
+    fn recover(
+        &mut self,
+        dead_shard: usize,
+        orphans: Vec<Job>,
+        limbo: Option<mpsc::Receiver<Job>>,
+    ) {
         // Pull in checkpoints the worker shipped just before dying.
         self.drain_backchannels();
-        let mut orphans: Vec<u64> = self
+        let mut orphans = orphans;
+        if let Some(rx) = limbo {
+            // Jobs enqueued in the teardown window between the panic
+            // and the report: drain them here so their clients get the
+            // same replay treatment as the rescued staged feeds.
+            while let Ok(job) = rx.try_recv() {
+                self.shards[dead_shard].depth.fetch_sub(1, Ordering::Relaxed);
+                match job {
+                    Job::Open { .. }
+                    | Job::Feed { .. }
+                    | Job::Finish { .. }
+                    | Job::Nbest { .. }
+                    | Job::Resume { .. }
+                    | Job::Config { .. } => orphans.push(job),
+                    // Internal jobs have no client waiting; legs were
+                    // already resolved by `resolve_legs_for_dead`.
+                    _ => {}
+                }
+            }
+        }
+        let mut ids: Vec<u64> = self
             .assign
             .iter()
             .filter_map(|(&id, b)| (b.shard == dead_shard).then_some(id))
             .collect();
-        orphans.sort_unstable();
-        for id in orphans {
-            self.open_count[dead_shard] = self.open_count[dead_shard].saturating_sub(1);
-            let target = self.pick();
-            if self.dead[target] {
-                // No live worker left: the session is unrecoverable.
-                self.assign.remove(&id);
-                self.checkpoints.remove(&id);
+        ids.sort_unstable();
+        let mut pends = 0usize;
+        for id in ids {
+            // A session with an adopt already in flight (it was mid-
+            // migration when its origin died) resolves through that
+            // leg's completion, not through recovery.
+            if self.migrating(id) {
                 continue;
             }
+            self.parked.entry(id).or_default();
             let snap = self.checkpoints.get(&id).map(|(_, bytes)| bytes.clone());
-            if snap.is_none() && self.checkpoint_interval == 0 {
-                self.assign.remove(&id);
+            let lost = (snap.is_none() && self.checkpoint_interval == 0)
+                // A tombstone (empty bytes) means acked state existed
+                // that capture could not cover: drop rather than
+                // restore stale state or reset the session.
+                || matches!(&snap, Some(bytes) if bytes.is_empty());
+            if lost {
+                self.lose_session(id, "session lost with its worker");
                 continue;
             }
-            // A tombstone (empty bytes) means acked state existed that
-            // capture could not cover: drop rather than restore stale
-            // state or reset the session.
-            if matches!(&snap, Some(bytes) if bytes.is_empty()) {
-                self.assign.remove(&id);
-                self.checkpoints.remove(&id);
-                continue;
-            }
-            match self.adopt_on(target, id, snap, false) {
-                AdoptOutcome::Adopted => {
-                    let started = self.assign.get(&id).is_some_and(|b| b.started);
-                    self.assign.insert(id, Booked { shard: target, started });
-                    self.open_count[target] += 1;
-                    self.recovered += 1;
-                }
-                AdoptOutcome::Refused(_) | AdoptOutcome::Dead => {
-                    self.assign.remove(&id);
-                    self.checkpoints.remove(&id);
-                }
-            }
+            self.pending_adopts.push(PendingAdopt {
+                id,
+                snap,
+                to: None,
+                origin: dead_shard,
+                returning: false,
+            });
+            pends += 1;
         }
+        if let Some(k) = self.kills.get_mut(&dead_shard) {
+            k.pending = Some(pends);
+        }
+        for job in orphans {
+            self.replay(job);
+        }
+        self.pump_pending_adopts();
+        self.finish_kill(dead_shard);
     }
 
     /// Migrate sessions off the hottest shard when the open-session
     /// imbalance reaches the threshold — live, mid-utterance sessions
     /// included (their state travels as snapshots; only sessions with a
-    /// feed in flight are briefly pinned). One hot→cold round per
-    /// trigger bounds the router stall.
+    /// feed in flight are briefly pinned). Rounds are serialized by the
+    /// in-flight leg guard rather than by blocking: a new round starts
+    /// only once the previous one's legs have resolved, so the async
+    /// open-count lag can never trigger an over-migration storm.
     fn rebalance(&mut self) {
         let thr = self.rebalance_threshold;
         if thr == 0 || self.shards.len() < 2 {
             return;
         }
-        // Dead shards neither donate (their queue is gone) nor receive.
+        if !self.legs.is_empty() || !self.pending_adopts.is_empty() {
+            return;
+        }
+        // Only active shards donate and receive: draining shards empty
+        // through their own path, dead ones have no queue.
         let Some(hot) = (0..self.shards.len())
-            .filter(|&i| !self.dead[i])
+            .filter(|&i| self.life[i] == ShardLifecycle::Active)
             .max_by_key(|&i| self.open_count[i])
         else {
             return;
         };
         let cold = self.pick();
-        if self.dead[cold] || hot == cold {
+        if self.life[cold] != ShardLifecycle::Active || hot == cold {
             return;
         }
         let diff = self.open_count[hot] - self.open_count[cold];
@@ -1486,70 +2026,440 @@ impl Router {
         if want == 0 {
             return;
         }
-        let (tx, rx) = mpsc::channel();
-        if !self.send(hot, Job::Evict { max: want, reply: tx }) {
-            return;
+        let mut ids: Vec<u64> = self
+            .assign
+            .iter()
+            .filter_map(|(&id, b)| (b.shard == hot).then_some(id))
+            .filter(|&id| {
+                !self.parked.contains_key(&id)
+                    && !self.deferred_count.contains_key(&id)
+                    && !self.migrating(id)
+            })
+            .collect();
+        ids.sort_unstable();
+        ids.truncate(want);
+        if !ids.is_empty() {
+            self.issue_evict(hot, ids);
         }
-        let Ok(moved) = rx.recv() else {
-            // The hot worker died holding the evict: recover it.
-            self.mark_dead(hot);
-            self.recover(hot);
-            return;
-        };
-        for (id, seq, bytes) in moved {
-            match self.adopt_on(cold, id, Some(bytes.clone()), false) {
-                AdoptOutcome::Adopted => {
+    }
+
+    /// Issue an evict batch to `shard`, parking the named sessions so
+    /// their client jobs queue in order behind the migration. The
+    /// worker answers on the migration back-channel; nothing blocks.
+    fn issue_evict(&mut self, shard: usize, ids: Vec<u64>) {
+        let token = self.next_token;
+        self.next_token += 1;
+        let fresh: Vec<u64> = ids
+            .iter()
+            .copied()
+            .filter(|id| !self.parked.contains_key(id))
+            .collect();
+        for &id in &fresh {
+            self.parked.insert(id, Vec::new());
+        }
+        self.shards[shard].depth.fetch_add(1, Ordering::Relaxed);
+        match self.shards[shard].tx.try_send(Job::Evict { ids: ids.clone(), token }) {
+            Ok(()) => {
+                self.legs.insert(token, Leg::Evict { shard, ids });
+            }
+            Err(mpsc::TrySendError::Full(_)) => {
+                // The hot shard's queue is full: skip this round; the
+                // next rebalance trigger (or supervisor tick) retries.
+                self.shards[shard].depth.fetch_sub(1, Ordering::Relaxed);
+                for id in fresh {
+                    self.unpark(id);
+                }
+            }
+            Err(mpsc::TrySendError::Disconnected(_)) => {
+                self.shards[shard].depth.fetch_sub(1, Ordering::Relaxed);
+                for id in fresh {
+                    if let Some(jobs) = self.parked.remove(&id) {
+                        debug_assert!(jobs.is_empty());
+                    }
+                }
+                self.handle_death(shard);
+            }
+        }
+    }
+
+    /// Dispatch queued adopts to their targets (forced origin for a
+    /// bounce-back, least-loaded active shard otherwise). An adopt that
+    /// cannot dispatch (full target queue, no active shard) stays
+    /// queued for the next pump; a dead forced target falls back to a
+    /// fresh pick on a later pump via `resolve_legs_for_dead`.
+    fn pump_pending_adopts(&mut self) {
+        let pends = std::mem::take(&mut self.pending_adopts);
+        for p in pends {
+            if !self.assign.contains_key(&p.id) {
+                // The session finished or was lost while the adopt
+                // waited (e.g. a shed) — nothing to place.
+                if self.life[p.origin] == ShardLifecycle::Dead {
+                    self.note_kill_leg_resolved(p.origin);
+                }
+                self.lose_session(p.id, "unknown session");
+                continue;
+            }
+            let to = match p.to {
+                Some(t) if self.is_live(t) => Some(t),
+                Some(_) => None,
+                None => {
+                    let t = self.pick();
+                    (self.life[t] == ShardLifecycle::Active).then_some(t)
+                }
+            };
+            let Some(to) = to else {
+                if self.life[p.origin] == ShardLifecycle::Dead && p.to.is_none() {
+                    // No active shard left to recover onto.
+                    let origin = p.origin;
+                    self.note_kill_leg_resolved(origin);
+                    self.lose_session(p.id, "session lost with its worker");
+                } else if p.to.is_some() {
+                    // Bounce-back target died: the session's only state
+                    // is the snapshot we still hold — requeue for a
+                    // fresh pick.
+                    self.pending_adopts.push(PendingAdopt { to: None, returning: false, ..p });
+                } else {
+                    self.pending_adopts.push(p);
+                }
+                continue;
+            };
+            let token = self.next_token;
+            self.next_token += 1;
+            self.parked.entry(p.id).or_default();
+            self.shards[to].depth.fetch_add(1, Ordering::Relaxed);
+            let job = Job::Adopt { id: p.id, snap: p.snap.clone(), returning: p.returning, token };
+            match self.shards[to].tx.try_send(job) {
+                Ok(()) => {
+                    self.legs.insert(
+                        token,
+                        Leg::Adopt { id: p.id, to, origin: p.origin, returning: p.returning },
+                    );
+                }
+                Err(mpsc::TrySendError::Full(_)) => {
+                    self.shards[to].depth.fetch_sub(1, Ordering::Relaxed);
+                    self.pending_adopts.push(p);
+                }
+                Err(mpsc::TrySendError::Disconnected(_)) => {
+                    self.shards[to].depth.fetch_sub(1, Ordering::Relaxed);
+                    self.pending_adopts.push(p);
+                    self.handle_death(to);
+                }
+            }
+        }
+    }
+
+    /// Apply a migration completion event from a worker back-channel.
+    fn handle_migr_event(&mut self, ev: MigrEvent) {
+        match ev {
+            MigrEvent::Evicted { shard, token, moved, kept } => {
+                if self.legs.remove(&token).is_none() {
+                    // Stale: the shard was declared dead mid-leg and
+                    // the leg already resolved.
+                    return;
+                }
+                for id in kept {
+                    self.unpark(id);
+                }
+                for (id, seq, bytes) in moved {
+                    if !self.assign.contains_key(&id) {
+                        // Un-booked while the evict ran (retired by the
+                        // worker, or shed): answer anything parked and
+                        // drop the state.
+                        self.lose_session(id, "unknown session");
+                        continue;
+                    }
                     // The evicted snapshot is the freshest state this
                     // session has — it doubles as its recovery
                     // checkpoint (when checkpointing is enabled at all).
                     if self.checkpoint_interval > 0 {
-                        self.checkpoints.insert(id, (seq, bytes));
-                    }
-                    let started = self.assign.get(&id).is_some_and(|b| b.started);
-                    self.assign.insert(id, Booked { shard: cold, started });
-                    self.open_count[hot] -= 1;
-                    self.open_count[cold] += 1;
-                }
-                // Cold shard refused or died: bounce the session back to
-                // its origin from the retained snapshot copy.
-                AdoptOutcome::Refused(_) | AdoptOutcome::Dead => {
-                    if self.checkpoint_interval > 0 {
                         self.checkpoints.insert(id, (seq, bytes.clone()));
                     }
-                    match self.adopt_on(hot, id, Some(bytes), true) {
-                        AdoptOutcome::Adopted => {}
-                        _ => {
-                            // Lost on both legs: unrecoverable.
-                            self.assign.remove(&id);
-                            self.open_count[hot] -= 1;
-                            self.checkpoints.remove(&id);
+                    self.pending_adopts.push(PendingAdopt {
+                        id,
+                        snap: Some(bytes),
+                        to: None,
+                        origin: shard,
+                        returning: false,
+                    });
+                }
+                self.pump_pending_adopts();
+            }
+            MigrEvent::Adopted { shard, token, id, outcome } => {
+                let Some(Leg::Adopt { origin, returning, .. }) = self.legs.remove(&token) else {
+                    return;
+                };
+                match outcome {
+                    Ok(()) => {
+                        let started = self.assign.get(&id).is_some_and(|b| b.started);
+                        let prior = self.assign.insert(id, Booked { shard, started });
+                        match prior {
+                            Some(b) if b.shard != shard => {
+                                self.open_count[b.shard] =
+                                    self.open_count[b.shard].saturating_sub(1);
+                                self.open_count[shard] += 1;
+                            }
+                            Some(_) => {}
+                            None => self.open_count[shard] += 1,
                         }
+                        if self.life[origin] == ShardLifecycle::Dead {
+                            self.recovered += 1;
+                            if let Some(k) = self.kills.get_mut(&origin) {
+                                k.recovered += 1;
+                            }
+                            self.note_kill_leg_resolved(origin);
+                        } else if !returning && origin != shard {
+                            if let Some(d) = self.drains.get_mut(&origin) {
+                                d.migrated += 1;
+                            }
+                        }
+                        self.unpark(id);
+                    }
+                    Err(back) => {
+                        if returning {
+                            // Lost on both legs: unrecoverable.
+                            self.lose_session(id, "session lost in migration");
+                        } else if self.life[origin] == ShardLifecycle::Dead {
+                            // A recovery adopt was refused (snapshot-
+                            // less backend): the session is gone.
+                            self.note_kill_leg_resolved(origin);
+                            self.lose_session(id, "session lost with its worker");
+                        } else {
+                            // Target refused or handed the snapshot
+                            // back: bounce the session to its origin.
+                            let snap = back.or_else(|| {
+                                self.checkpoints
+                                    .get(&id)
+                                    .map(|(_, b)| b.clone())
+                                    .filter(|b| !b.is_empty())
+                            });
+                            match snap {
+                                None => self.lose_session(id, "session lost in migration"),
+                                Some(bytes) => self.pending_adopts.push(PendingAdopt {
+                                    id,
+                                    snap: Some(bytes),
+                                    to: Some(origin),
+                                    origin,
+                                    returning: true,
+                                }),
+                            }
+                        }
+                        self.pump_pending_adopts();
                     }
                 }
             }
         }
     }
 
-    /// Ask `shard` to adopt a session from an optional snapshot.
-    fn adopt_on(
-        &mut self,
-        shard: usize,
-        id: u64,
-        snap: Option<Vec<u8>>,
-        returning: bool,
-    ) -> AdoptOutcome {
-        let (tx, rx) = mpsc::channel();
-        if !self.send(shard, Job::Adopt { id, snap, returning, reply: tx }) {
-            return AdoptOutcome::Dead;
-        }
-        match rx.recv() {
-            Ok(Ok(())) => AdoptOutcome::Adopted,
-            Ok(Err(back)) => AdoptOutcome::Refused(back),
-            Err(_) => {
-                self.mark_dead(shard);
-                AdoptOutcome::Dead
+    /// One recovery adopt for a killed shard resolved: decrement its
+    /// drill's pending count and answer the drill when it hits zero.
+    fn note_kill_leg_resolved(&mut self, origin: usize) {
+        if let Some(k) = self.kills.get_mut(&origin) {
+            if let Some(p) = k.pending.as_mut() {
+                *p = p.saturating_sub(1);
             }
         }
+        self.finish_kill(origin);
+    }
+
+    /// Answer a kill drill whose recovery has fully resolved.
+    fn finish_kill(&mut self, shard: usize) {
+        let done = matches!(self.kills.get(&shard), Some(k) if k.pending == Some(0));
+        if done {
+            let k = self.kills.remove(&shard).unwrap();
+            let _ = k.reply.send(obj(&[
+                ("killed", Json::Num(shard as f64)),
+                ("recovered", Json::Num(k.recovered as f64)),
+            ]));
+        }
+    }
+
+    /// Release a session's parked jobs back into routing, in arrival
+    /// order, after its migration/recovery leg resolved.
+    fn unpark(&mut self, id: u64) {
+        let Some(jobs) = self.parked.remove(&id) else {
+            return;
+        };
+        for mut job in jobs {
+            match self.reroute(&job) {
+                Some(shard) => {
+                    let backoff = self.overload.route_backoff_ms.max(1);
+                    self.dispatch(shard, job, self.overload.route_retries, backoff);
+                }
+                None => {
+                    let payload = self.lost_session_json(id, "session lost with its worker");
+                    if let Some(reply) = job.reply_mut() {
+                        reply.untag();
+                        reply.send(payload);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Advance every in-progress drain (supervisor tick).
+    fn advance_drains(&mut self) {
+        let shards: Vec<usize> = self.drains.keys().copied().collect();
+        for shard in shards {
+            self.advance_drain(shard);
+        }
+    }
+
+    /// One drain step for `shard`: retire it once empty, revert it to
+    /// active past the deadline, otherwise evict the next resident
+    /// batch — at most one batch in flight per tick, so the pool keeps
+    /// serving while the drain pipelines.
+    fn advance_drain(&mut self, shard: usize) {
+        if self.life[shard] != ShardLifecycle::Draining {
+            return;
+        }
+        let busy = self.legs.values().any(|l| match l {
+            Leg::Evict { shard: s, .. } => *s == shard,
+            Leg::Adopt { to, origin, .. } => *to == shard || *origin == shard,
+        }) || self
+            .pending_adopts
+            .iter()
+            .any(|p| p.origin == shard || p.to == Some(shard));
+        let mut resident: Vec<u64> = self
+            .assign
+            .iter()
+            .filter_map(|(&id, b)| (b.shard == shard).then_some(id))
+            .collect();
+        resident.sort_unstable();
+        // Deferred jobs never pin a drain: session jobs re-resolve
+        // through `assign` at pump time (and a session with deferred
+        // work is still resident here anyway), session-less ones
+        // reroute off a retired shard on dispatch.
+        if resident.is_empty() && !busy {
+            let d = self.drains.remove(&shard).unwrap();
+            // Retire *before* the shutdown send so `send`'s failure
+            // path cannot re-mark the shard (it is no longer live).
+            self.life[shard] = ShardLifecycle::Retired;
+            self.shards[shard].depth.fetch_add(1, Ordering::Relaxed);
+            if self.shards[shard].tx.try_send(Job::Shutdown).is_err() {
+                self.shards[shard].depth.fetch_sub(1, Ordering::Relaxed);
+            }
+            let _ = d.reply.send(obj(&[
+                ("shard", Json::Num(shard as f64)),
+                ("state", Json::Str("retired".into())),
+                ("migrated", Json::Num(d.migrated as f64)),
+            ]));
+            return;
+        }
+        if Instant::now() >= self.drains[&shard].deadline {
+            let d = self.drains.remove(&shard).unwrap();
+            self.life[shard] = ShardLifecycle::Active;
+            let _ = d.reply.send(err_json(
+                ErrCode::Internal,
+                &format!("drain deadline exceeded on shard {shard}; reverted to active"),
+            ));
+            return;
+        }
+        if busy {
+            return;
+        }
+        let ids: Vec<u64> = resident
+            .into_iter()
+            .filter(|&id| {
+                !self.parked.contains_key(&id)
+                    && !self.deferred_count.contains_key(&id)
+                    && !self.migrating(id)
+            })
+            .take(DRAIN_EVICT_BATCH)
+            .collect();
+        if !ids.is_empty() {
+            self.issue_evict(shard, ids);
+        }
+    }
+
+    /// Add a worker to the pool at runtime, seeded from the engine
+    /// template shard 0 minted at startup. Answers the `pool add`
+    /// request with the new shard index and live worker count.
+    fn add_worker(&mut self, reply: &mpsc::Sender<Json>) {
+        let live = (0..self.shards.len()).filter(|&i| self.is_live(i)).count();
+        if live >= self.max_workers {
+            let _ = reply.send(err_json(
+                ErrCode::BadRequest,
+                &format!("pool is at max_workers ({})", self.max_workers),
+            ));
+            return;
+        }
+        let Some(seed) = self.template.as_ref().and_then(|t| t.clone_seed()) else {
+            let _ = reply.send(err_json(
+                ErrCode::BadRequest,
+                "backend cannot clone workers (no elastic scale-up)",
+            ));
+            return;
+        };
+        let shard = self.shards.len();
+        let (tx, rx) = mpsc::sync_channel::<Job>(self.queue_depth);
+        let depth = Arc::new(AtomicUsize::new(0));
+        let cache = Arc::new(Mutex::new(ShardSnapshot::empty(shard)));
+        let liveness = Arc::new(WorkerLiveness::new());
+        let worker_depth = Arc::clone(&depth);
+        let worker_cache = Arc::clone(&cache);
+        let worker_live = Arc::clone(&liveness);
+        let worker_retire = self.retire_tx.clone();
+        let worker_ckpt = self.ckpt_tx.clone();
+        let worker_migr = self.migr_tx.clone();
+        let spawned = std::thread::Builder::new()
+            .name(format!("asrpu-shard-{shard}"))
+            .spawn(move || {
+                let worker = Worker::new(
+                    shard,
+                    seed.into_engine(),
+                    worker_depth,
+                    worker_retire,
+                    worker_ckpt,
+                    worker_migr,
+                    worker_cache,
+                );
+                run_worker(worker, rx, worker_live)
+            });
+        if spawned.is_err() {
+            let _ = reply.send(err_json(
+                ErrCode::Internal,
+                &format!("spawning shard {shard} failed"),
+            ));
+            return;
+        }
+        self.shards.push(ShardHandle {
+            tx,
+            depth,
+            cache,
+            generation: Arc::new(AtomicU64::new(0)),
+            liveness,
+        });
+        self.life.push(ShardLifecycle::Active);
+        self.open_count.push(0);
+        self.rejected.push(0);
+        let _ = reply.send(obj(&[
+            ("shard", Json::Num(shard as f64)),
+            ("workers", Json::Num((live + 1) as f64)),
+        ]));
+    }
+
+    /// The `pool status` payload: pool-wide worker counts plus one
+    /// entry per shard with its lifecycle, session count and queue
+    /// depth (dead and retired shards included, so operators see the
+    /// full history of the pool's shape).
+    fn pool_status_json(&self) -> Json {
+        let shards: Vec<Json> = (0..self.shards.len())
+            .map(|i| {
+                obj(&[
+                    ("shard", Json::Num(i as f64)),
+                    ("lifecycle", Json::Str(self.life[i].as_str().to_string())),
+                    ("sessions", Json::Num(self.open_count[i] as f64)),
+                    ("queue", Json::Num(self.shards[i].depth.load(Ordering::Relaxed) as f64)),
+                ])
+            })
+            .collect();
+        let live = (0..self.shards.len()).filter(|&i| self.is_live(i)).count();
+        obj(&[
+            ("workers", Json::Num(live as f64)),
+            ("max_workers", Json::Num(self.max_workers as f64)),
+            ("draining", Json::Num(self.drains.len() as f64)),
+            ("shards", Json::Arr(shards)),
+        ])
     }
 
     /// Aggregate the worker-published stats caches — no worker queue is
@@ -1560,11 +2470,12 @@ impl Router {
     fn snapshot(&self) -> ShardMetrics {
         let mut shards = Vec::with_capacity(self.shards.len());
         for (i, h) in self.shards.iter().enumerate() {
-            if self.dead[i] {
+            if !self.is_live(i) {
                 continue;
             }
             let mut snap = h.cache.lock().unwrap().clone();
             snap.queue_depth = h.depth.load(Ordering::Relaxed);
+            snap.lifecycle = self.life[i];
             // Workers can't see router-side bounces; fold them in here
             // so `rejected` in summaries reflects shed load.
             snap.serve.rejected_backpressure += self.rejected[i];
@@ -1598,6 +2509,7 @@ fn stats_json(m: &ShardMetrics, workers: usize, r: &Router) -> Json {
                 ("degraded_batches", Json::Num(s.serve.degraded_batches as f64)),
                 ("shed", Json::Num(s.serve.sessions_shed as f64)),
                 ("heartbeats", Json::Num(s.heartbeats as f64)),
+                ("lifecycle", Json::Str(s.lifecycle.as_str().to_string())),
                 ("summary", Json::Str(s.serve.summary())),
             ])
         })
@@ -1612,7 +2524,12 @@ fn stats_json(m: &ShardMetrics, workers: usize, r: &Router) -> Json {
         ("recovered", Json::Num(r.recovered as f64)),
         ("rejected_admission", Json::Num(r.admission_rejected as f64)),
         ("shed", Json::Num(r.shed as f64)),
+        ("shed_evicted", Json::Num(r.shed_evicted as f64)),
         ("panics_detected", Json::Num(r.panics_detected as f64)),
+        (
+            "retired",
+            Json::Num(r.life.iter().filter(|&&l| l == ShardLifecycle::Retired).count() as f64),
+        ),
         ("shards", Json::Arr(shards)),
     ])
 }
@@ -1640,8 +2557,15 @@ fn router_loop(jobs: mpsc::Receiver<RouterMsg>, mut r: Router) {
         match msg {
             RouterMsg::Open { reply } => {
                 let shard = r.pick();
+                if r.life[shard] != ShardLifecycle::Active {
+                    let _ = reply.send(err_json(
+                        ErrCode::Internal,
+                        "no active worker to open a session on",
+                    ));
+                    continue;
+                }
                 // Admission control: refuse new sessions rather than
-                // queue them once every live shard is at the policy's
+                // queue them once every active shard is at the policy's
                 // limit (`pick` is least-loaded, so the picked shard
                 // being full means all of them are).
                 let limit = r.overload.admit_sessions_per_shard;
@@ -1655,17 +2579,15 @@ fn router_loop(jobs: mpsc::Receiver<RouterMsg>, mut r: Router) {
                 }
                 let id = r.next_id;
                 r.next_id += 1;
-                // Commit the assignment only once the job is enqueued —
-                // a bounced open leaves no phantom session behind. A
-                // worker-side engine.open() failure after enqueue
-                // (fallible PJRT open_state) comes back as a retire
-                // notification and is un-booked on the next drain.
+                // The assignment commits only once the job is enqueued
+                // (`Commit::Open`) — a bounced open leaves no phantom
+                // session behind. A worker-side engine.open() failure
+                // after enqueue (fallible PJRT open_state) comes back
+                // as a retire notification and is un-booked on the next
+                // drain.
                 let job = Job::Open { id, reply: Reply::new(reply) };
-                if let Some(actual) = r.route_client(shard, job) {
-                    r.assign.insert(id, Booked { shard: actual, started: false });
-                    r.open_count[actual] += 1;
-                    r.rebalance();
-                }
+                let backoff = r.overload.route_backoff_ms.max(1);
+                r.dispatch(shard, job, r.overload.route_retries, backoff);
             }
             RouterMsg::Feed { session, samples, enqueued, reply } => {
                 match r.assign.get(&session).map(|b| b.shard) {
@@ -1675,19 +2597,15 @@ fn router_loop(jobs: mpsc::Receiver<RouterMsg>, mut r: Router) {
                     Some(shard) => {
                         // A bounce answers the client itself; nothing
                         // reached the shard, so ordering is preserved.
+                        // `started` flips at enqueue (`Commit::Feed`).
                         let job = Job::Feed {
                             session,
                             samples,
                             enqueued,
                             reply: Reply::new(reply),
                         };
-                        if r.route_client(shard, job).is_some() {
-                            // Audio is now in flight: from here on the
-                            // session is never a shedding candidate.
-                            if let Some(b) = r.assign.get_mut(&session) {
-                                b.started = true;
-                            }
-                        }
+                        let backoff = r.overload.route_backoff_ms.max(1);
+                        r.dispatch(shard, job, r.overload.route_retries, backoff);
                     }
                 }
             }
@@ -1696,17 +2614,13 @@ fn router_loop(jobs: mpsc::Receiver<RouterMsg>, mut r: Router) {
                     let _ = reply.send(r.lost_session_json(session, "unknown session"));
                 }
                 Some(shard) => {
-                    // Retire the session only if the finish was actually
-                    // enqueued (possibly on a recovery target); on a
-                    // bounce the client retries against a still-open
-                    // session.
+                    // The session retires only once the finish is
+                    // actually enqueued (`Commit::Finish`, possibly on
+                    // a recovery target); on a bounce the client
+                    // retries against a still-open session.
                     let job = Job::Finish { session, reply: Reply::new(reply) };
-                    if let Some(actual) = r.route_client(shard, job) {
-                        r.assign.remove(&session);
-                        r.checkpoints.remove(&session);
-                        r.open_count[actual] = r.open_count[actual].saturating_sub(1);
-                        r.rebalance();
-                    }
+                    let backoff = r.overload.route_backoff_ms.max(1);
+                    r.dispatch(shard, job, r.overload.route_retries, backoff);
                 }
             },
             RouterMsg::Resume { session, reply } => match r.assign.get(&session).map(|b| b.shard) {
@@ -1718,7 +2632,8 @@ fn router_loop(jobs: mpsc::Receiver<RouterMsg>, mut r: Router) {
                 }
                 Some(shard) => {
                     let job = Job::Resume { session, reply: Reply::new(reply) };
-                    r.route_client(shard, job);
+                    let backoff = r.overload.route_backoff_ms.max(1);
+                    r.dispatch(shard, job, r.overload.route_retries, backoff);
                 }
             },
             RouterMsg::Nbest { session, reply } => match r.assign.get(&session).map(|b| b.shard) {
@@ -1732,17 +2647,24 @@ fn router_loop(jobs: mpsc::Receiver<RouterMsg>, mut r: Router) {
                     // un-booking rides the retire back-channel instead,
                     // sent by the worker once it consumes the session.
                     let job = Job::Nbest { session, reply: Reply::new(reply) };
-                    r.route_client(shard, job);
+                    let backoff = r.overload.route_backoff_ms.max(1);
+                    r.dispatch(shard, job, r.overload.route_retries, backoff);
                 }
             },
             RouterMsg::Stats { reply } => {
-                let workers = r.shards.len();
+                let workers = r
+                    .life
+                    .iter()
+                    .filter(|&&l| l != ShardLifecycle::Retired)
+                    .count();
                 let snap = r.snapshot();
                 let _ = reply.send(stats_json(&snap, workers, &r));
             }
             RouterMsg::Config { reply } => {
                 let shard = r.first_live();
-                r.route_client(shard, Job::Config { reply: Reply::new(reply) });
+                let backoff = r.overload.route_backoff_ms.max(1);
+                let job = Job::Config { reply: Reply::new(reply) };
+                r.dispatch(shard, job, r.overload.route_retries, backoff);
             }
             RouterMsg::Kill { shard, reply } => {
                 if shard >= r.shards.len() {
@@ -1750,37 +2672,81 @@ fn router_loop(jobs: mpsc::Receiver<RouterMsg>, mut r: Router) {
                         ErrCode::BadRequest,
                         &format!("no such shard {shard}"),
                     ));
-                } else {
-                    let before = r.recovered;
-                    if !r.dead[shard] {
-                        // The drill *is* an injected panic: the worker
-                        // panics on the Die job, its catch_unwind
-                        // wrapper rescues the staged feeds and queued
-                        // jobs and posts the death report — the same
-                        // path a spontaneous panic takes. Wait for the
-                        // report (bounded), then run the standard
-                        // supervision step by hand.
-                        if r.send(shard, Job::Die) {
-                            r.shards[shard].liveness.wait_dead(KILL_REPORT_WAIT);
-                        }
-                        let orphans =
-                            r.shards[shard].liveness.take_panic().unwrap_or_default();
-                        r.mark_dead(shard);
-                        r.recover(shard);
-                        // Replay the rescued feeds on their sessions'
-                        // recovery shards: the staged audio arrived
-                        // after the covering checkpoints, so the replay
-                        // is exact and the clients' pending requests
-                        // answer normally instead of bouncing.
-                        for job in orphans {
-                            r.replay(job);
-                        }
-                    }
+                } else if !r.is_live(shard) {
+                    // Already dead or retired: nothing to drill.
                     let _ = reply.send(obj(&[
                         ("killed", Json::Num(shard as f64)),
-                        ("recovered", Json::Num((r.recovered - before) as f64)),
+                        ("recovered", Json::Num(0.0)),
                     ]));
+                } else if r.kills.contains_key(&shard) {
+                    let _ = reply.send(err_json(
+                        ErrCode::BadRequest,
+                        &format!("kill already in progress on shard {shard}"),
+                    ));
+                } else {
+                    // The drill *is* an injected panic: the worker
+                    // panics on the Die job, its catch_unwind wrapper
+                    // rescues the staged feeds and queued jobs and
+                    // posts the death report — the same path a
+                    // spontaneous panic takes. The reply is deferred:
+                    // the supervisor harvests the report (or gives up
+                    // at the deadline) and `finish_kill` answers once
+                    // every recovery adopt has resolved.
+                    r.kills.insert(
+                        shard,
+                        KillState {
+                            reply,
+                            deadline: Instant::now() + KILL_REPORT_WAIT,
+                            pending: None,
+                            recovered: 0,
+                        },
+                    );
+                    r.send(shard, Job::Die);
                 }
+            }
+            RouterMsg::PoolAdd { reply } => r.add_worker(&reply),
+            RouterMsg::PoolDrain { shard, reply } => {
+                if shard >= r.shards.len() {
+                    let _ = reply.send(err_json(
+                        ErrCode::BadRequest,
+                        &format!("no such shard {shard}"),
+                    ));
+                } else if r.life[shard] != ShardLifecycle::Active {
+                    let _ = reply.send(err_json(
+                        ErrCode::BadRequest,
+                        &format!(
+                            "shard {shard} is {} and cannot drain",
+                            r.life[shard].as_str()
+                        ),
+                    ));
+                } else if r
+                    .life
+                    .iter()
+                    .filter(|&&l| l == ShardLifecycle::Active)
+                    .count()
+                    < 2
+                {
+                    let _ = reply.send(err_json(
+                        ErrCode::BadRequest,
+                        "cannot drain the last active worker",
+                    ));
+                } else {
+                    r.life[shard] = ShardLifecycle::Draining;
+                    r.drains.insert(
+                        shard,
+                        DrainState {
+                            deadline: Instant::now() + r.drain_deadline,
+                            reply,
+                            migrated: 0,
+                        },
+                    );
+                    // Start the first evict batch immediately; the
+                    // supervisor tick pipelines the rest.
+                    r.advance_drain(shard);
+                }
+            }
+            RouterMsg::PoolStatus { reply } => {
+                let _ = reply.send(r.pool_status_json());
             }
             RouterMsg::Shutdown => break,
         }
@@ -1789,7 +2755,7 @@ fn router_loop(jobs: mpsc::Receiver<RouterMsg>, mut r: Router) {
     // gone); workers flush their staged batches before exiting. Routed
     // through `send` so queue-depth accounting stays balanced.
     for i in 0..r.shards.len() {
-        if !r.dead[i] {
+        if r.is_live(i) {
             r.send(i, Job::Shutdown);
         }
     }
@@ -1801,6 +2767,10 @@ struct Init {
     shard_cfg: ShardConfig,
     overload: OverloadPolicy,
     seeds: Vec<WorkerSeed>,
+    /// Seed template for runtime `pool add` scale-up — minted only when
+    /// the config's worker ceiling leaves room to grow and the backend
+    /// supports cloning.
+    template: Option<WorkerSeed>,
     tx0: mpsc::SyncSender<Job>,
     depth0: Arc<AtomicUsize>,
     cache0: Arc<Mutex<ShardSnapshot>>,
@@ -1896,9 +2866,11 @@ impl ShardPool {
         let (router_tx, router_rx) = mpsc::sync_channel::<RouterMsg>(queue_depth);
         let (retire_tx, retire_rx) = mpsc::channel::<u64>();
         let (ckpt_tx, ckpt_rx) = mpsc::channel::<(u64, u64, Vec<u8>)>();
+        let (migr_tx, migr_rx) = mpsc::channel::<MigrEvent>();
         let (init_tx, init_rx) = mpsc::channel::<Result<Init, String>>();
         let shard0_retire = retire_tx.clone();
         let shard0_ckpt = ckpt_tx.clone();
+        let shard0_migr = migr_tx.clone();
         std::thread::Builder::new()
             .name("asrpu-shard-0".into())
             .spawn(move || {
@@ -1926,6 +2898,14 @@ impl ShardPool {
                         }
                     }
                 }
+                // The elastic-scale-up template: one extra seed, minted
+                // only when the ceiling leaves room to grow (cloning
+                // costs a model handle) and the backend supports it.
+                let template = if shard_cfg.effective_max_workers() > shard_cfg.workers {
+                    engine.clone_worker()
+                } else {
+                    None
+                };
                 let (tx0, rx0) = mpsc::sync_channel::<Job>(queue_depth);
                 let depth0 = Arc::new(AtomicUsize::new(0));
                 let cache0 = Arc::new(Mutex::new(ShardSnapshot::empty(0)));
@@ -1934,6 +2914,7 @@ impl ShardPool {
                     shard_cfg,
                     overload: engine.overload.clone(),
                     seeds,
+                    template,
                     tx0: tx0.clone(),
                     depth0: Arc::clone(&depth0),
                     cache0: Arc::clone(&cache0),
@@ -1941,7 +2922,7 @@ impl ShardPool {
                 }));
                 drop(tx0);
                 let worker =
-                    Worker::new(0, engine, depth0, shard0_retire, shard0_ckpt, cache0);
+                    Worker::new(0, engine, depth0, shard0_retire, shard0_ckpt, shard0_migr, cache0);
                 run_worker(worker, rx0, live0);
             })
             .context("spawning shard 0")?;
@@ -1968,6 +2949,7 @@ impl ShardPool {
             let worker_live = Arc::clone(&liveness);
             let worker_retire = retire_tx.clone();
             let worker_ckpt = ckpt_tx.clone();
+            let worker_migr = migr_tx.clone();
             std::thread::Builder::new()
                 .name(format!("asrpu-shard-{shard}"))
                 .spawn(move || {
@@ -1977,6 +2959,7 @@ impl ShardPool {
                         worker_depth,
                         worker_retire,
                         worker_ckpt,
+                        worker_migr,
                         worker_cache,
                     );
                     run_worker(worker, rx, worker_live)
@@ -1994,7 +2977,7 @@ impl ShardPool {
         let retry_after_ms = init.overload.retry_after_ms;
         let router = Router {
             shards: handles,
-            dead: vec![false; workers],
+            life: vec![ShardLifecycle::Active; workers],
             rejected: vec![0; workers],
             assign: HashMap::new(),
             open_count: vec![0; workers],
@@ -2005,18 +2988,33 @@ impl ShardPool {
             shed_pending: Vec::new(),
             shed: 0,
             shed_ids: BTreeSet::new(),
+            shed_evicted: 0,
             admission_rejected: 0,
             panics_detected: 0,
             checkpoints: HashMap::new(),
             recovered: 0,
             retire_rx,
             ckpt_rx,
+            migr_rx,
+            template: init.template,
+            // The router retains the back-channel senders so it can
+            // mint them into runtime-added workers; the channels die
+            // with the router, which outlives every worker.
+            retire_tx,
+            ckpt_tx,
+            migr_tx,
+            queue_depth,
+            max_workers: init.shard_cfg.effective_max_workers(),
+            drain_deadline: Duration::from_millis(init.shard_cfg.drain_deadline_ms),
+            drains: HashMap::new(),
+            kills: HashMap::new(),
+            legs: HashMap::new(),
+            next_token: 1,
+            parked: HashMap::new(),
+            pending_adopts: Vec::new(),
+            deferred: VecDeque::new(),
+            deferred_count: HashMap::new(),
         };
-        // The start-scope retire/ckpt senders drop here with the
-        // function; only worker clones remain, so the back-channels die
-        // with the workers, never the other way around.
-        drop(retire_tx);
-        drop(ckpt_tx);
         std::thread::Builder::new()
             .name("asrpu-router".into())
             .spawn(move || router_loop(router_rx, router))
@@ -2024,9 +3022,40 @@ impl ShardPool {
         Ok(ShardPool { tx: router_tx, workers, retry_after_ms })
     }
 
-    /// Number of device workers behind this pool.
+    /// Number of device workers the pool *started* with. The live
+    /// count changes at runtime via [`Self::add_worker`] and
+    /// [`Self::drain_worker`]; see [`Self::pool_status`].
     pub fn workers(&self) -> usize {
         self.workers
+    }
+
+    /// Add a worker at runtime, seeded from the startup engine
+    /// template. Returns the new shard's index. Errors when the pool
+    /// is already at `max_workers` live workers, or when the engine's
+    /// backend cannot clone workers (elasticity requires it).
+    pub fn add_worker(&self) -> Result<usize> {
+        let r = self.call(|reply| RouterMsg::PoolAdd { reply })?;
+        r.get("shard")
+            .and_then(Json::as_usize)
+            .context("malformed pool add reply")
+    }
+
+    /// Drain a worker at runtime: it stops taking new sessions, its
+    /// live sessions pipeline-migrate onto the remaining active workers
+    /// (bit-identically — state travels as snapshots), and the worker
+    /// retires once empty. Blocks until the drain completes (returns
+    /// the number of sessions migrated off) or its deadline aborts it.
+    pub fn drain_worker(&self, shard: usize) -> Result<usize> {
+        let r = self.call(|reply| RouterMsg::PoolDrain { shard, reply })?;
+        r.get("migrated")
+            .and_then(Json::as_usize)
+            .context("malformed pool drain reply")
+    }
+
+    /// The pool's current shape: live/max worker counts, in-progress
+    /// drains, and per-shard lifecycle, session count and queue depth.
+    pub fn pool_status(&self) -> Result<Json> {
+        self.call(|reply| RouterMsg::PoolStatus { reply })
     }
 
     /// The overload policy's client backoff hint, for front-ends that
@@ -2243,6 +3272,7 @@ mod tests {
                         workers,
                         rebalance_threshold: threshold,
                         checkpoint_interval: 1,
+                        ..Default::default()
                     })
                     .build()?)
             },
@@ -2430,6 +3460,7 @@ mod tests {
                         workers: 2,
                         rebalance_threshold: 0,
                         checkpoint_interval: 1,
+                        ..Default::default()
                     })
                     .build()?)
             },
@@ -2526,6 +3557,7 @@ mod tests {
                         workers,
                         rebalance_threshold: 0,
                         checkpoint_interval: 1,
+                        ..Default::default()
                     })
                     .overload(overload.clone());
                 if panic_after > 0 {

@@ -22,7 +22,11 @@
 //!             bouncing, `--degrade B` installs the two-rung reference
 //!             degradation ladder entered at backlog B decode steps;
 //!             `--nbest N` / `--rescore W` enable the lattice N-best
-//!             subsystem behind the protocol's `nbest` op
+//!             subsystem behind the protocol's `nbest` op;
+//!             `--max-workers N` caps the elastic pool (the `pool` op's
+//!             `add` action scales up to it at runtime, `drain`
+//!             migrates a shard empty and retires it), `--drain MS`
+//!             bounds how long a drain migrates before reverting
 //!   simulate  run the accelerator simulator for N decoding steps;
 //!             `--batch B --shards S` additionally reports the fused
 //!             step sharded across S worker devices
@@ -58,7 +62,7 @@ const VALUE_KEYS: &[&str] = &[
     "n", "seed", "beam", "port", "pes", "mac", "freq-mhz", "backend", "mode", "steps",
     "queue", "batch", "batch-wait", "workers", "rebalance", "checkpoint", "shards",
     "admit", "retry-after", "shed", "route-retries", "route-backoff", "degrade",
-    "nbest", "rescore",
+    "nbest", "rescore", "max-workers", "drain",
 ];
 
 fn main() {
@@ -196,10 +200,30 @@ fn cmd_decode(args: &cli::Args) -> Result<()> {
     Ok(())
 }
 
+/// The argv `serve` rebuilds its engine from on the device thread (PJRT
+/// handles are not `Send`, so the engine cannot cross threads — its
+/// *recipe* does). Every engine-shaping flag must be threaded through
+/// here: dropping one silently respawns a default-configured engine.
+/// `--beam` was exactly such a drop (KNOWN_FAILURES, fixed in PR 9).
+fn respawn_argv(backend: &str, beam: f64, nbest: usize, rescore: f64) -> Vec<String> {
+    vec![
+        "serve".to_string(),
+        "--backend".into(),
+        backend.to_string(),
+        "--beam".into(),
+        beam.to_string(),
+        "--nbest".into(),
+        nbest.to_string(),
+        "--rescore".into(),
+        rescore.to_string(),
+    ]
+}
+
 fn cmd_serve(args: &cli::Args) -> Result<()> {
     let port = args.usize_or("port", 7700)?;
     let queue = args.usize_or("queue", 128)?;
     let backend = args.str_or("backend", "auto");
+    let beam = args.f64_or("beam", DecoderConfig::default().beam as f64)?;
     let nbest = args.usize_or("nbest", 0)?;
     let rescore = args.f64_or("rescore", 0.0)?;
     let batch_default = BatchConfig::default();
@@ -214,6 +238,10 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
             .usize_or("rebalance", shard_default.rebalance_threshold)?,
         checkpoint_interval: args
             .usize_or("checkpoint", shard_default.checkpoint_interval)?,
+        max_workers: args.usize_or("max-workers", shard_default.max_workers)?,
+        drain_deadline_ms: args
+            .usize_or("drain", shard_default.drain_deadline_ms as usize)?
+            as u64,
     };
     let overload_default = OverloadPolicy::default();
     let degrade_base = args.usize_or("degrade", 0)?;
@@ -222,6 +250,7 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
         retry_after_ms: args.usize_or("retry-after", overload_default.retry_after_ms as usize)?
             as u64,
         shed_never_started: args.usize_or("shed", 0)? != 0,
+        shed_memory: overload_default.shed_memory,
         route_retries: args.usize_or("route-retries", 0)? as u32,
         route_backoff_ms: args
             .usize_or("route-backoff", overload_default.route_backoff_ms as usize)?
@@ -247,15 +276,7 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
         &format!("127.0.0.1:{port}"),
         move || {
             // Rebuild the engine on the device thread (PJRT not Send).
-            let argv = vec![
-                "serve".to_string(),
-                "--backend".into(),
-                backend.clone(),
-                "--nbest".into(),
-                nbest.to_string(),
-                "--rescore".into(),
-                rescore.to_string(),
-            ];
+            let argv = respawn_argv(&backend, beam, nbest, rescore);
             let args = cli::parse(&argv, VALUE_KEYS)?;
             Ok(engine_builder(&args)?
                 .batch(batch)
@@ -267,7 +288,8 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
     )?;
     println!(
         "asrpu serving on {} (JSON lines, protocol v2; ops: \
-         hello/open/feed/finish/resume/nbest/stats/config; {} lane-batched device worker(s))",
+         hello/open/feed/finish/resume/nbest/stats/config/pool; \
+         {} lane-batched device worker(s))",
         server.addr,
         server.workers()
     );
@@ -437,6 +459,20 @@ mod tests {
             "2".into(),
         ])
         .unwrap();
+    }
+
+    #[test]
+    fn respawn_argv_preserves_custom_beam() {
+        // Regression (KNOWN_FAILURES, PR 8): the device-thread respawn
+        // argv dropped `--beam`, so `serve --beam 6` rebuilt an engine
+        // at the default width. The rebuilt engine must carry the
+        // custom beam exactly.
+        let custom = 6.5f64;
+        assert_ne!(custom as f32, DecoderConfig::default().beam);
+        let argv = respawn_argv("native", custom, 0, 0.0);
+        let args = cli::parse(&argv, VALUE_KEYS).unwrap();
+        let engine = engine_builder(&args).unwrap().build().unwrap();
+        assert_eq!(engine.dec_cfg.beam, custom as f32);
     }
 
     #[test]

@@ -113,6 +113,7 @@ fn chaos_soak_loses_no_acknowledged_feeds() {
                     workers: 2,
                     rebalance_threshold: 0,
                     checkpoint_interval: 1,
+                    ..ShardConfig::default()
                 })
                 .overload(OverloadPolicy::default())
                 .fault_panic_after_steps(20)
@@ -169,5 +170,183 @@ fn chaos_soak_loses_no_acknowledged_feeds() {
     assert_eq!(stats.get("responding").unwrap().as_f64(), Some(1.0), "{stats:?}");
     assert_eq!(stats.get("panics_detected").unwrap().as_f64(), Some(1.0), "{stats:?}");
     assert_eq!(stats.get("recovered").unwrap().as_f64(), Some(1.0), "{stats:?}");
+    server.shutdown();
+}
+
+/// One feed of `n` zero samples, asserting it is acknowledged; returns
+/// the acked step count.
+fn feed_zeros(c: &mut Client, id: u64, n: usize) -> f64 {
+    let zeros = vec!["0"; n].join(",");
+    let fed = c.call(&format!(r#"{{"op":"feed","session":{id},"samples":[{zeros}]}}"#));
+    let steps = fed.get("steps").and_then(Json::as_f64);
+    assert!(steps.is_some(), "feed lost for session {id}: {fed:?}");
+    steps.unwrap()
+}
+
+#[test]
+fn teardown_window_jobs_replay_after_death() {
+    // The dying worker's death report is artificially delayed (fault
+    // hook) so a job can land in the dead shard's channel *between* the
+    // panic-time queue rescue and the router observing the death — the
+    // PR 7 teardown window. The liveness report carries the dying
+    // channel's receiver, and the router drains it into the same orphan
+    // replay as the rescued jobs: the client blocked on that feed gets
+    // its normal ack, never a one-shot bounce.
+    let server = Server::start(
+        "127.0.0.1:0",
+        || {
+            Ok(Engine::builder()
+                .native(TdsModel::random(ModelConfig::tiny_tds(), 5))
+                .batch(BatchConfig::default())
+                .shards(ShardConfig {
+                    workers: 2,
+                    rebalance_threshold: 0,
+                    checkpoint_interval: 1,
+                    ..ShardConfig::default()
+                })
+                .overload(OverloadPolicy::default())
+                .fault_panic_after_steps(5)
+                .fault_teardown_delay_ms(400)
+                .build()?)
+        },
+        64,
+    )
+    .unwrap();
+
+    // Placement by open order: a → shard 0, filler → shard 1,
+    // b → shard 0 (the session whose feed lands in the window).
+    let mut main = Client::connect(&server.addr);
+    let a = main.open();
+    let filler = main.open();
+    let b = main.open();
+    assert_eq!((a, filler, b), (1, 2, 3));
+
+    // Exhaust shard 0's five-step fault budget on `a`.
+    assert_eq!(feed_zeros(&mut main, a, STEP_SAMPLES), 1.0);
+    for _ in 0..4 {
+        assert_eq!(feed_zeros(&mut main, a, STEP_LEN), 1.0);
+    }
+    // The killer feed panics the worker mid-flush; its client blocks
+    // until recovery replays the staged feed on the survivor.
+    let addr = server.addr.clone();
+    let killer = std::thread::spawn(move || {
+        let mut c = Client::connect(&addr);
+        feed_zeros(&mut c, a, STEP_LEN)
+    });
+    // While the dying worker sleeps in its widened teardown window, a
+    // feed for `b` goes into the doomed channel. Whatever the exact
+    // interleaving (limbo, rescued from the queue, or post-recovery
+    // reroute), it must be acknowledged with its step — never bounced.
+    std::thread::sleep(std::time::Duration::from_millis(100));
+    assert_eq!(feed_zeros(&mut main, b, STEP_SAMPLES), 1.0);
+    assert_eq!(killer.join().expect("killer client panicked"), 1.0);
+
+    let res = main.call(&format!(r#"{{"op":"resume","session":{a}}}"#));
+    assert_eq!(res.get("steps").and_then(Json::as_f64), Some(6.0), "{res:?}");
+    let reference =
+        Engine::builder().native(TdsModel::random(ModelConfig::tiny_tds(), 5)).build().unwrap();
+    check_finish(&mut main, &reference, a, 6);
+    check_finish(&mut main, &reference, b, 1);
+    let stats = main.call(r#"{"op":"stats"}"#);
+    assert_eq!(stats.get("responding").unwrap().as_f64(), Some(1.0), "{stats:?}");
+    assert_eq!(stats.get("panics_detected").unwrap().as_f64(), Some(1.0), "{stats:?}");
+    server.shutdown();
+}
+
+#[test]
+fn churn_soak_add_drain_cycles_lose_nothing() {
+    // Elastic churn as the chaos source: while four clients stream on
+    // shard 0, the pool repeatedly scales up (`pool add`), takes a live
+    // session onto the new worker, and drains it away again mid-
+    // utterance. The same contract as the panic soak: every feed is
+    // acked, every transcript is bit-identical to the undisturbed
+    // single-engine decode, and the pool lands back on one worker.
+    let server = Server::start(
+        "127.0.0.1:0",
+        || {
+            Ok(Engine::builder()
+                .native(TdsModel::random(ModelConfig::tiny_tds(), 5))
+                .batch(BatchConfig::default())
+                .shards(ShardConfig {
+                    workers: 1,
+                    rebalance_threshold: 0,
+                    checkpoint_interval: 1,
+                    max_workers: 3,
+                    ..ShardConfig::default()
+                })
+                .overload(OverloadPolicy::default())
+                .build()?)
+        },
+        64,
+    )
+    .unwrap();
+
+    // Open every long-lived session before the first add so placement
+    // is a pure function of open order: all of them book shard 0. The
+    // pin keeps shard 0 strictly busier than a fresh worker, so each
+    // cycle's churn session deterministically books the new shard.
+    let mut main = Client::connect(&server.addr);
+    let pin = main.open();
+    let streamer_ids: Vec<u64> = (0..4).map(|_| main.open()).collect();
+    assert_eq!(pin, 1);
+    assert_eq!(streamer_ids, vec![2, 3, 4, 5]);
+
+    let reference =
+        Engine::builder().native(TdsModel::random(ModelConfig::tiny_tds(), 5)).build().unwrap();
+    let streamers: Vec<_> = streamer_ids
+        .iter()
+        .map(|&id| {
+            let addr = server.addr.clone();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&addr);
+                let acked = stream(&mut c, id, 6, 500 + id);
+                (c, id, acked)
+            })
+        })
+        .collect();
+
+    // Three add → serve → drain cycles against the streaming load.
+    let mut churn = Client::connect(&server.addr);
+    for cycle in 0..3u64 {
+        let added = churn.call(r#"{"op":"pool","action":"add"}"#);
+        let shard = added.get("shard").and_then(Json::as_f64).expect("add refused") as usize;
+        assert_eq!(shard, cycle as usize + 1, "{added:?}");
+        // The churn session books the fresh (empty) worker, decodes two
+        // acked steps there, survives the drain's live migration back
+        // to shard 0, and decodes two more.
+        let id = churn.open();
+        assert_eq!(feed_zeros(&mut churn, id, STEP_SAMPLES + STEP_LEN), 2.0);
+        let drained =
+            churn.call(&format!(r#"{{"op":"pool","action":"drain","shard":{shard}}}"#));
+        assert_eq!(drained.get("state").and_then(Json::as_str), Some("retired"), "{drained:?}");
+        assert_eq!(drained.get("migrated").and_then(Json::as_f64), Some(1.0), "{drained:?}");
+        assert_eq!(feed_zeros(&mut churn, id, 2 * STEP_LEN), 2.0);
+        check_finish(&mut churn, &reference, id, 4);
+    }
+
+    for s in streamers {
+        let (mut c, id, acked) = s.join().expect("streamer panicked");
+        assert_eq!(acked, 6.0, "session {id} acked-step ledger");
+        check_finish(&mut c, &reference, id, 6);
+    }
+    assert_eq!(feed_zeros(&mut main, pin, STEP_SAMPLES), 1.0);
+    check_finish(&mut main, &reference, pin, 1);
+
+    // The pool is back to one worker, with the churn history visible.
+    let status = churn.call(r#"{"op":"pool","action":"status"}"#);
+    assert_eq!(status.get("workers").unwrap().as_f64(), Some(1.0), "{status:?}");
+    assert_eq!(status.get("draining").unwrap().as_f64(), Some(0.0), "{status:?}");
+    let lifecycles: Vec<&str> = status
+        .get("shards")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|s| s.get("lifecycle").unwrap().as_str().unwrap())
+        .collect();
+    assert_eq!(lifecycles, vec!["active", "retired", "retired", "retired"]);
+    let stats = churn.call(r#"{"op":"stats"}"#);
+    assert_eq!(stats.get("workers").unwrap().as_f64(), Some(1.0), "{stats:?}");
+    assert_eq!(stats.get("retired").unwrap().as_f64(), Some(3.0), "{stats:?}");
     server.shutdown();
 }

@@ -1,0 +1,281 @@
+//! Elastic-pool invariants (PR 9): the worker count changes *while the
+//! pool serves* — `add_worker` scales up from the startup engine
+//! template, `drain_worker` pipeline-migrates a shard empty and retires
+//! it — and none of it may be visible in a transcript. Every scenario
+//! here decodes the same audio through a pool whose shape churns
+//! mid-utterance and asserts the result is **bit-identical** (text AND
+//! exact score) to the static 1-worker engine, for f32 and int8.
+//!
+//! Why it must hold: sessions travel between shards as full state
+//! snapshots (the PR 5 evict → snapshot → adopt → restore path), every
+//! worker decodes from the same shared weights, and per-session decode
+//! state never crosses lanes — so adding a worker, migrating onto it,
+//! and retiring the donor are all transcript-invisible by construction.
+//! These tests drive the real router + worker threads (no sockets, no
+//! serialization), so equality really is bit-equality.
+
+use asrpu::am::TdsModel;
+use asrpu::config::{BatchConfig, ModelConfig, Precision, ShardConfig};
+use asrpu::coordinator::{Engine, ShardPool};
+use asrpu::synth::Synthesizer;
+use asrpu::util::rng::Rng;
+
+const MODEL_SEED: u64 = 17;
+
+fn reference_engine(precision: Precision) -> Engine {
+    Engine::builder()
+        .native(TdsModel::random(ModelConfig::tiny_tds(), MODEL_SEED))
+        .precision(precision)
+        .build()
+        .unwrap()
+}
+
+fn pool(precision: Precision, workers: usize, max_workers: usize) -> ShardPool {
+    ShardPool::start(
+        move || {
+            Ok(Engine::builder()
+                .native(TdsModel::random(ModelConfig::tiny_tds(), MODEL_SEED))
+                .precision(precision)
+                .batch(BatchConfig { max_batch: 4, max_wait_frames: 2 })
+                .shards(ShardConfig {
+                    workers,
+                    rebalance_threshold: 0,
+                    checkpoint_interval: 1,
+                    max_workers,
+                    ..ShardConfig::default()
+                })
+                .build()?)
+        },
+        256,
+    )
+    .unwrap()
+}
+
+fn utterances(n: usize, seed: u64) -> Vec<Vec<f32>> {
+    let synth = Synthesizer::default();
+    (0..n as u64)
+        .map(|i| {
+            let mut rng = Rng::new(seed + i);
+            synth
+                .render(&[(i % 10) as u32, ((i + 5) % 10) as u32], &mut rng)
+                .samples
+        })
+        .collect()
+}
+
+fn reference_transcripts(precision: Precision, utts: &[Vec<f32>]) -> Vec<(String, f64)> {
+    let engine = reference_engine(precision);
+    utts.iter()
+        .map(|u| {
+            let (t, _) = engine.decode_utterance(u).unwrap();
+            (t.text, t.score as f64)
+        })
+        .collect()
+}
+
+/// Per-shard lifecycle strings from `pool status`, indexed by shard.
+fn lifecycles(p: &ShardPool) -> Vec<String> {
+    p.pool_status()
+        .unwrap()
+        .get("shards")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|s| s.get("lifecycle").unwrap().as_str().unwrap().to_string())
+        .collect()
+}
+
+#[test]
+fn scale_up_1_to_4_under_live_load_stays_bit_identical() {
+    // Start with one worker, scale to four while eight client threads
+    // are mid-utterance. Sessions opened before the adds stay put;
+    // later opens land on the new workers; transcripts never notice.
+    let p = pool(Precision::F32, 1, 4);
+    assert_eq!(p.workers(), 1);
+    let utts = utterances(8, 300);
+    let expected = reference_transcripts(Precision::F32, &utts);
+    let handles: Vec<_> = utts
+        .iter()
+        .cloned()
+        .enumerate()
+        .map(|(i, audio)| {
+            let client = p.clone();
+            std::thread::spawn(move || {
+                let id = client.open().unwrap();
+                for c in audio.chunks(900) {
+                    client.feed(id, c).unwrap();
+                }
+                let done = client.finish(id).unwrap();
+                (i, done.text, done.score)
+            })
+        })
+        .collect();
+    // Scale up while the clients stream.
+    for expect_shard in [1usize, 2, 3] {
+        assert_eq!(p.add_worker().unwrap(), expect_shard);
+    }
+    // The pool is at its ceiling: a fourth add must be refused, not
+    // spawn worker five.
+    let err = format!("{:#}", p.add_worker().unwrap_err());
+    assert!(err.contains("max_workers"), "{err}");
+    for h in handles {
+        let (i, text, score) = h.join().expect("client thread panicked");
+        assert_eq!(text, expected[i].0, "utt {i} text diverged during scale-up");
+        assert_eq!(score, expected[i].1, "utt {i} score diverged during scale-up");
+    }
+    let status = p.pool_status().unwrap();
+    assert_eq!(status.get("workers").unwrap().as_f64(), Some(4.0));
+    assert_eq!(status.get("max_workers").unwrap().as_f64(), Some(4.0));
+    assert_eq!(lifecycles(&p), vec!["active"; 4]);
+    // The grown pool serves new sessions on every shard.
+    let late = utterances(4, 900);
+    let late_expected = reference_transcripts(Precision::F32, &late);
+    for (u, e) in late.iter().zip(&late_expected) {
+        let id = p.open().unwrap();
+        p.feed(id, u).unwrap();
+        let done = p.finish(id).unwrap();
+        assert_eq!(done.text, e.0);
+        assert_eq!(done.score, e.1);
+    }
+    p.shutdown();
+}
+
+#[test]
+fn drain_4_to_1_mid_utterance_stays_bit_identical() {
+    // Eight sessions spread over four workers, each fed half its audio;
+    // then shards 3, 2, 1 drain in turn — every resident migrates live,
+    // state travelling as snapshots — and the second half decodes on
+    // the sole survivor. Transcripts must match the static 1-worker
+    // engine bit for bit, in both precisions.
+    for precision in [Precision::F32, Precision::Int8] {
+        let p = pool(precision, 4, 4);
+        let utts = utterances(8, 500);
+        let expected = reference_transcripts(precision, &utts);
+        let ids: Vec<u64> = (0..8).map(|_| p.open().unwrap()).collect();
+        for (id, u) in ids.iter().zip(&utts) {
+            p.feed(*id, &u[..u.len() / 2]).unwrap();
+        }
+        let mut migrated = 0;
+        for shard in [3usize, 2, 1] {
+            migrated += p.drain_worker(shard).unwrap();
+        }
+        assert!(
+            migrated >= 6,
+            "the six sessions opened off shard 0 must migrate at least once: {migrated}"
+        );
+        assert_eq!(lifecycles(&p), vec!["active", "retired", "retired", "retired"]);
+        let status = p.pool_status().unwrap();
+        assert_eq!(status.get("workers").unwrap().as_f64(), Some(1.0));
+        // Draining the last active worker must be refused.
+        let err = format!("{:#}", p.drain_worker(0).unwrap_err());
+        assert!(err.contains("last active"), "{err}");
+        // `stats` reflects the shrunken pool.
+        let stats = p.stats().unwrap();
+        assert_eq!(stats.get("workers").unwrap().as_f64(), Some(1.0), "{stats:?}");
+        assert_eq!(stats.get("retired").unwrap().as_f64(), Some(3.0), "{stats:?}");
+        for (i, (id, u)) in ids.iter().zip(&utts).enumerate() {
+            p.feed(*id, &u[u.len() / 2..]).unwrap();
+            let done = p.finish(*id).unwrap();
+            assert_eq!(done.text, expected[i].0, "{precision:?} utt {i} text diverged");
+            assert_eq!(done.score, expected[i].1, "{precision:?} utt {i} score diverged");
+        }
+        p.shutdown();
+    }
+}
+
+#[test]
+fn kill_during_drain_aborts_the_drain_and_recovers_sessions() {
+    // A worker dying *mid-drain* must abort the drain with a structured
+    // error (not hang its caller), recover the shard's sessions from
+    // their checkpoints — including ones whose evict leg died with the
+    // worker — and keep every transcript bit-identical.
+    let p = pool(Precision::F32, 2, 2);
+    let utts = utterances(6, 700);
+    let expected = reference_transcripts(Precision::F32, &utts);
+    // Deterministic least-loaded assignment: odd ids → shard 0, even →
+    // shard 1.
+    let ids: Vec<u64> = (0..6).map(|_| p.open().unwrap()).collect();
+    for (id, u) in ids.iter().zip(&utts) {
+        p.feed(*id, &u[..u.len() / 2]).unwrap();
+    }
+    // Drain shard 1 from a helper thread (the call blocks until the
+    // drain resolves) and kill the draining worker from this one.
+    let drain_pool = p.clone();
+    let drainer = std::thread::spawn(move || drain_pool.drain_worker(1));
+    let killed = p.kill_worker(1).unwrap();
+    let drained = drainer.join().expect("drain caller panicked");
+    match drained {
+        // The kill landed mid-drain (the drain aborts with the
+        // structured died-while-draining error) — or beat the drain
+        // request entirely (a dead shard cannot start draining).
+        Err(e) => {
+            let msg = format!("{e:#}");
+            assert!(
+                msg.contains("died while draining") || msg.contains("cannot drain"),
+                "{msg}"
+            );
+        }
+        // The drain emptied the shard before the kill processed; the
+        // kill then found a retired (not live) shard and was a no-op.
+        Ok(migrated) => {
+            assert!(migrated > 0, "a completed drain must have migrated sessions");
+            assert_eq!(killed, 0, "killing a retired shard recovers nothing");
+        }
+    }
+    // Either way, every session still finishes bit-identically on the
+    // survivor.
+    for (i, (id, u)) in ids.iter().zip(&utts).enumerate() {
+        p.feed(*id, &u[u.len() / 2..]).unwrap();
+        let done = p.finish(*id).unwrap();
+        assert_eq!(done.text, expected[i].0, "utt {i} text diverged");
+        assert_eq!(done.score, expected[i].1, "utt {i} score diverged");
+    }
+    p.shutdown();
+}
+
+/// One scripted elasticity trace: open under one worker, scale to
+/// three mid-stream, spread later sessions, drain a donor, finish
+/// everything. Returns per-session (text, exact score) in open order.
+fn churn_trace(precision: Precision) -> Vec<(String, f64)> {
+    let p = pool(precision, 1, 3);
+    let utts = utterances(6, 1100);
+    let mut ids = Vec::new();
+    for u in &utts[..3] {
+        let id = p.open().unwrap();
+        p.feed(id, &u[..u.len() / 2]).unwrap();
+        ids.push(id);
+    }
+    assert_eq!(p.add_worker().unwrap(), 1);
+    assert_eq!(p.add_worker().unwrap(), 2);
+    for u in &utts[3..] {
+        let id = p.open().unwrap();
+        p.feed(id, &u[..u.len() / 2]).unwrap();
+        ids.push(id);
+    }
+    // Shard 1 drains: its residents migrate to shards 0 and 2.
+    p.drain_worker(1).unwrap();
+    let mut out = Vec::new();
+    for (id, u) in ids.iter().zip(&utts) {
+        p.feed(*id, &u[u.len() / 2..]).unwrap();
+        let done = p.finish(*id).unwrap();
+        out.push((done.text, done.score));
+    }
+    p.shutdown();
+    out
+}
+
+#[test]
+fn identical_churn_traces_decode_identically_twice() {
+    // Elasticity must not introduce run-to-run nondeterminism: the same
+    // add/drain trace over the same audio yields byte-equal transcripts
+    // and bit-equal scores — and both match the static reference.
+    let one = churn_trace(Precision::F32);
+    let two = churn_trace(Precision::F32);
+    assert_eq!(one, two, "two identical churn traces diverged");
+    let expected = reference_transcripts(Precision::F32, &utterances(6, 1100));
+    for (i, (got, want)) in one.iter().zip(&expected).enumerate() {
+        assert_eq!(got.0, want.0, "utt {i} text diverged from the static engine");
+        assert_eq!(got.1, want.1, "utt {i} score diverged from the static engine");
+    }
+}

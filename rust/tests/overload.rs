@@ -82,6 +82,7 @@ fn server_with(
                     workers,
                     rebalance_threshold: 0,
                     checkpoint_interval: 1,
+                    ..asrpu::config::ShardConfig::default()
                 })
                 .overload(overload.clone());
             if panic_after > 0 {

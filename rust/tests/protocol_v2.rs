@@ -352,6 +352,7 @@ fn shed_victims_get_session_shed_over_socket() {
                     workers: 1,
                     rebalance_threshold: 0,
                     checkpoint_interval: 1,
+                    ..ShardConfig::default()
                 })
                 .overload(OverloadPolicy {
                     retry_after_ms: 30,

@@ -137,6 +137,7 @@ fn pool(precision: Precision, workers: usize, rebalance: usize) -> ShardPool {
                     workers,
                     rebalance_threshold: rebalance,
                     checkpoint_interval: 1,
+                    ..ShardConfig::default()
                 })
                 .build()?)
         },
