@@ -6,6 +6,9 @@
 #   artifacts/mfcc.hlo.txt        MFCC front-end HLO text
 #   artifacts/weights.bin         tensor container (util/tensor_io)
 #   artifacts/meta.json           geometry, parameter order, metrics
+#   artifacts/precision.bin       per-layer weight-format codes from the
+#                                 calibration pass (compile/calibrate.py;
+#                                 `asrpu ... --precision-map @artifacts`)
 # Without them the artifact integration tests
 # (rust/tests/cross_layer.rs, rust/tests/e2e_artifacts.rs, the xla half
 # of rust/tests/builder_api.rs) and the xla-backed examples/benches skip
@@ -24,7 +27,8 @@ artifacts: $(ARTIFACTS)/meta.json
 # JAX-less machine should not turn `make artifacts` into a hard error.
 $(ARTIFACTS)/meta.json: python/compile/*.py
 	@if $(PYTHON) -c "import jax" 2>/dev/null; then \
-		cd python && $(PYTHON) -m compile.aot --out-dir ../$(ARTIFACTS); \
+		cd python && $(PYTHON) -m compile.aot --out-dir ../$(ARTIFACTS) && \
+		$(PYTHON) -m compile.calibrate --artifacts ../$(ARTIFACTS); \
 	else \
 		echo "make artifacts: JAX not importable by '$(PYTHON)'; skipping artifact export" ; \
 		echo "               (xla-gated tests/examples will skip gracefully without it)"; \

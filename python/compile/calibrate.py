@@ -1,0 +1,254 @@
+"""Accelerator-aware per-layer precision calibration (compile side).
+
+Sweeps each conv/FC layer of the trained tiny TDS model over the
+runtime's weight formats {f32, int8, int4, int4_sparse} — fake-quantized
+in numpy on the exact grids of ``rust/src/am/quant.rs`` — measures
+synthetic-corpus token WER with greedy CTC decoding, and assigns every
+layer the cheapest format that keeps end-to-end WER within a budget of
+the f32 baseline.  Cheap here is accelerator cost: the simulator charges
+weight DMA at the resolved width (f32 32 b, int8 8 b, int4 4 b, 2:4
+sparse int4 3 b/weight), so the sweep tries formats dearest-savings
+first.
+
+Output: ``artifacts/precision.bin`` — a u32 tensor ``precision.codes``
+with one format code per ``build_layers`` entry (0=f32 1=int8 2=int4
+3=int4_sparse), loadable from Rust via ``PrecisionMap::from_artifacts``
+(CLI: ``--precision-map @artifacts``).  LayerNorm entries are always 0:
+the runtime keeps LN gain/bias in f32 at every precision.
+
+Run: ``cd python && python -m compile.calibrate --artifacts ../artifacts``
+(needs a trained ``weights.bin``; ``make artifacts`` chains it after the
+AOT export).
+"""
+
+import argparse
+from pathlib import Path
+
+import numpy as np
+
+from .tensor_io import load_tensors, save_tensors
+
+# Format codes shared with PrecisionMap::from_artifacts
+# (rust/src/config/model.rs); bit widths mirror Precision::weight_bits().
+CODES = {"f32": 0, "int8": 1, "int4": 2, "int4_sparse": 3}
+WEIGHT_BITS = {"f32": 32, "int8": 8, "int4": 4, "int4_sparse": 3}
+INT4_GROUP = 32  # rust/src/am/quant.rs::INT4_GROUP
+
+# Formats in descending DMA-savings order — the sweep tries each layer's
+# cheapest format first and widens only when the WER budget forces it.
+SWEEP_ORDER = ["int4_sparse", "int4", "int8"]
+WIDEN = {"int4_sparse": "int4", "int4": "int8", "int8": "f32"}
+
+
+def fake_quant_int8(w):
+    """Per-row affine int8 on the ``quantize_rows`` grid: 256 levels over
+    ``[min(row, 0), max(row, 0)]``."""
+    lo = np.minimum(w.min(axis=1), 0.0)
+    hi = np.maximum(w.max(axis=1), 0.0)
+    s = np.where(hi > lo, (hi - lo) / 255.0, 1.0).astype(np.float32)
+    z = np.round(-128.0 - lo / s)
+    q = np.clip(np.round(w / s[:, None]) + z[:, None], -128.0, 127.0)
+    return ((q - z[:, None]) * s[:, None]).astype(np.float32)
+
+
+def fake_quant_int4(w):
+    """Per-(row, 32-col-group) affine int4 on the ``quantize_rows_int4``
+    grid: 16 levels over ``[min(group, 0), max(group, 0)]``."""
+    out = np.empty_like(w, np.float32)
+    for g0 in range(0, w.shape[1], INT4_GROUP):
+        seg = w[:, g0 : g0 + INT4_GROUP]
+        lo = np.minimum(seg.min(axis=1), 0.0)
+        hi = np.maximum(seg.max(axis=1), 0.0)
+        s = np.where(hi > lo, (hi - lo) / 15.0, 1.0).astype(np.float32)
+        z = np.round(-8.0 - lo / s)
+        q = np.clip(np.round(seg / s[:, None]) + z[:, None], -8.0, 7.0)
+        out[:, g0 : g0 + INT4_GROUP] = (q - z[:, None]) * s[:, None]
+    return out
+
+
+def fake_quant_int4_sparse(w):
+    """2:4 magnitude pruning + per-row symmetric int4 on the
+    ``prune_quantize_rows_2of4`` grid (pruned weights exactly 0.0)."""
+    rows, cols = w.shape
+    pad = (-cols) % 4
+    blocks = np.pad(w, ((0, 0), (0, pad))).reshape(rows, -1, 4)
+    # Keep the 2 largest magnitudes per block, ties to the lower index
+    # (stable sort on descending |w|); padding columns are zeros and
+    # dequantize to zero either way.
+    order = np.argsort(-np.abs(blocks), axis=2, kind="stable")
+    keep = np.zeros(blocks.shape, bool)
+    np.put_along_axis(keep, order[:, :, :2], True, axis=2)
+    kept = np.where(keep, blocks, 0.0)
+    amax = np.abs(kept).reshape(rows, -1).max(axis=1)
+    s = np.where(amax > 0.0, amax / 7.0, 1.0).astype(np.float32)
+    q = np.clip(np.round(kept / s[:, None, None]), -7.0, 7.0)
+    return (q * s[:, None, None]).reshape(rows, -1)[:, :cols].astype(np.float32)
+
+
+FAKE_QUANT = {
+    "f32": lambda w: w,
+    "int8": fake_quant_int8,
+    "int4": fake_quant_int4,
+    "int4_sparse": fake_quant_int4_sparse,
+}
+
+
+def edit_distance(a, b):
+    dp = list(range(len(b) + 1))
+    for i, x in enumerate(a, 1):
+        prev, dp[0] = dp[0], i
+        for j, y in enumerate(b, 1):
+            prev, dp[j] = dp[j], min(dp[j] + 1, dp[j - 1] + 1, prev + (x != y))
+    return dp[-1]
+
+
+def layer_params(layer):
+    """Weight+bias count, mirror of ``Layer::params()``."""
+    if layer.kind == "conv":
+        return layer.out_ch * layer.in_ch * layer.kw + layer.out_ch
+    if layer.kind == "fc":
+        return layer.out_dim * layer.in_dim + layer.out_dim
+    return 2 * layer.dim
+
+
+def with_formats(params, cfg, fmts):
+    """Fake-quantize each conv/FC layer's weight matrix at its assigned
+    format (conv kernels flatten to ``(out_ch, in_ch*kw)`` rows, exactly
+    the matrix the Rust quantizer sees). Biases and LN stay f32."""
+    import jax.numpy as jnp
+
+    from .model import build_layers
+
+    out = dict(params)
+    for layer in build_layers(cfg):
+        fmt = fmts.get(layer.name, "f32")
+        if layer.kind == "ln" or fmt == "f32":
+            continue
+        w = np.asarray(params[f"{layer.name}.w"], np.float32)
+        m = w.reshape(w.shape[0], -1)
+        out[f"{layer.name}.w"] = jnp.asarray(FAKE_QUANT[fmt](m).reshape(w.shape))
+    return out
+
+
+def eval_batch(cfg, mfcc_fn, rng, batch, max_frames):
+    """Held-out batch at the *protocol* noise level (the trainer's batch
+    augments noise up to 20x protocol, which would swamp quantization
+    error)."""
+    from . import data
+
+    sub = cfg.subsample
+    t_ac = max_frames // sub
+    max_samples = (max_frames - 1) * data.HOP + cfg.win_len
+    feats = np.zeros((batch, max_frames, cfg.n_mels), np.float32)
+    labels = np.zeros((batch, t_ac), np.int32)
+    mask = np.zeros((batch, t_ac), np.float32)
+    for i in range(batch):
+        words = data.sample_sentence(rng)
+        samples, frame_labels = data.render(words, rng)
+        padded = np.zeros(max_samples, np.float32)
+        n_s = min(len(samples), max_samples)
+        padded[:n_s] = samples[:n_s]
+        feats[i] = np.asarray(mfcc_fn(padded))
+        n_ac = min(max_frames, len(frame_labels)) // sub
+        labels[i, :n_ac] = frame_labels[: n_ac * sub][sub - 1 :: sub]
+        mask[i, :n_ac] = 1.0
+    return feats, labels, mask
+
+
+def calibrate(cfg, params, eval_fn, budget, log=print):
+    """Greedy per-layer assignment: (1) sensitivity sweep — each layer
+    alone at its cheapest in-budget format; (2) combined repair — while
+    the joint map busts the budget, widen the most sensitive layer."""
+    from .model import build_layers
+
+    base = eval_fn(params)
+    log(f"[calibrate] f32 baseline token WER {base:.4f}, budget +{budget:.4f}")
+    quantizable = [l for l in build_layers(cfg) if l.kind in ("conv", "fc")]
+    choice, sens = {}, {}
+    for layer in quantizable:
+        picked, errs = "f32", {}
+        for fmt in SWEEP_ORDER:
+            e = eval_fn(with_formats(params, cfg, {layer.name: fmt}))
+            errs[fmt] = e
+            if e <= base + budget:
+                picked = fmt
+                break
+        choice[layer.name] = picked
+        sens[layer.name] = errs
+        swept = " ".join(f"{f}={errs[f]:.4f}" for f in SWEEP_ORDER if f in errs)
+        log(f"[calibrate] {layer.name:<14} -> {picked:<12} ({swept})")
+    while True:
+        err = eval_fn(with_formats(params, cfg, choice))
+        if err <= base + budget:
+            break
+        cands = [n for n in choice if choice[n] != "f32"]
+        if not cands:
+            break
+        worst = max(cands, key=lambda n: sens[n].get(choice[n], 0.0))
+        log(
+            f"[calibrate] combined WER {err:.4f} over budget; widening "
+            f"{worst} {choice[worst]} -> {WIDEN[choice[worst]]}"
+        )
+        choice[worst] = WIDEN[choice[worst]]
+    log(f"[calibrate] final map token WER {err:.4f} (baseline {base:.4f})")
+    return base, err, choice
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--artifacts", default="../artifacts")
+    ap.add_argument("--budget", type=float, default=0.02,
+                    help="allowed absolute token-WER increase over the f32 baseline")
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=4321)
+    args = ap.parse_args()
+
+    art = Path(args.artifacts)
+    if not (art / "weights.bin").exists():
+        raise SystemExit(
+            f"calibrate: no {art / 'weights.bin'} — run `make artifacts` "
+            "(the AOT export) first"
+        )
+
+    import jax.numpy as jnp
+
+    from . import ctc
+    from .model import ModelConfig, build_layers, forward_batch
+    from .train import MAX_FRAMES, labels_to_tokens, make_mfcc_fn
+
+    cfg = ModelConfig()
+    params = {n: jnp.asarray(a) for n, a in load_tensors(art / "weights.bin").items()}
+    _, mfcc_fn = make_mfcc_fn(cfg)
+    rng = np.random.default_rng(args.seed)
+    feats, labels, mask = eval_batch(cfg, mfcc_fn, rng, args.batch, MAX_FRAMES)
+    jfeats = jnp.asarray(feats)
+    refs = [labels_to_tokens(labels[i], mask[i]) for i in range(args.batch)]
+
+    def eval_fn(p):
+        logp = np.asarray(forward_batch(p, cfg, jfeats))
+        errs = words = 0
+        for i, ref in enumerate(refs):
+            hyp = ctc.greedy_collapse(logp[i, : int(mask[i].sum())])
+            errs += edit_distance(hyp, ref)
+            words += len(ref)
+        return errs / max(words, 1)
+
+    base, final, choice = calibrate(cfg, params, eval_fn, args.budget)
+
+    layers = build_layers(cfg)
+    codes = np.array(
+        [CODES[choice.get(l.name, "f32")] for l in layers], np.uint32
+    )
+    save_tensors(art / "precision.bin", [("precision.codes", codes)])
+    bits = sum(layer_params(l) * WEIGHT_BITS[choice.get(l.name, "f32")] for l in layers)
+    f32_bits = sum(layer_params(l) * 32 for l in layers)
+    print(
+        f"[calibrate] wrote {art / 'precision.bin'}: weights "
+        f"{f32_bits // 8} B f32 -> {bits // 8} B mixed "
+        f"({f32_bits / max(bits, 1):.1f}x smaller), "
+        f"WER {base:.4f} -> {final:.4f}"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -9,7 +9,7 @@ MAGIC = b"ASRPUTNS"
 
 
 def save_tensors(path, tensors):
-    """tensors: list of (name, np.ndarray[float32 or int8])."""
+    """tensors: list of (name, np.ndarray[float32, int8 or uint32])."""
     out = bytearray()
     out += MAGIC
     out += struct.pack("<I", len(tensors))
@@ -19,6 +19,8 @@ def save_tensors(path, tensors):
             dtype = 0
         elif arr.dtype == np.int8:
             dtype = 1
+        elif arr.dtype == np.uint32:
+            dtype = 2
         else:
             raise ValueError(f"{name}: unsupported dtype {arr.dtype}")
         nb = name.encode()
@@ -56,7 +58,7 @@ def load_tensors(path):
         pos += 12
         raw = data[pos : pos + blen]
         pos += blen
-        np_dtype = np.float32 if dtype == 0 else np.int8
+        np_dtype = {0: np.float32, 1: np.int8, 2: np.uint32}[dtype]
         out[name] = np.frombuffer(raw, np_dtype).reshape(dims)
     assert pos == len(data), "trailing bytes"
     return out

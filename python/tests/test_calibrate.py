@@ -1,0 +1,112 @@
+"""Calibration-pass invariants: the numpy fake-quantizers must honour
+the documented error bounds of their Rust twins (rust/src/am/quant.rs),
+the u32 tensor container must round-trip (the precision.bin payload),
+and format application must leave everything but conv/FC weights alone."""
+
+import numpy as np
+import pytest
+
+from compile.calibrate import (
+    CODES,
+    INT4_GROUP,
+    edit_distance,
+    fake_quant_int4,
+    fake_quant_int4_sparse,
+    fake_quant_int8,
+    with_formats,
+)
+from compile.tensor_io import load_tensors, save_tensors
+
+
+def rand_w(rng, rows, cols, scale=0.7):
+    return (rng.standard_normal((rows, cols)) * scale).astype(np.float32)
+
+
+@pytest.mark.parametrize("rows,cols", [(1, 1), (3, 7), (8, 32), (5, 33), (4, 100)])
+def test_int8_fake_quant_error_bound(rows, cols):
+    rng = np.random.default_rng(rows * 100 + cols)
+    w = rand_w(rng, rows, cols)
+    d = fake_quant_int8(w)
+    # quantize_rows grid: half-step <= max|row| / 255 (INT8_MAX_ROW_REL_ERR).
+    amax = np.abs(w).max(axis=1, keepdims=True)
+    assert (np.abs(d - w) <= amax / 255.0 + 1e-6).all()
+
+
+@pytest.mark.parametrize("rows,cols", [(1, 1), (3, 7), (8, 32), (5, 33), (4, 100)])
+def test_int4_fake_quant_error_bound(rows, cols):
+    rng = np.random.default_rng(rows * 100 + cols + 1)
+    w = rand_w(rng, rows, cols)
+    d = fake_quant_int4(w)
+    # quantize_rows_int4 grid: per-(row, group) half-step <=
+    # max|group| / 15 (INT4_MAX_GROUP_REL_ERR).
+    for g0 in range(0, cols, INT4_GROUP):
+        seg = w[:, g0 : g0 + INT4_GROUP]
+        amax = np.abs(seg).max(axis=1, keepdims=True)
+        assert (np.abs(d[:, g0 : g0 + INT4_GROUP] - seg) <= amax / 15.0 + 1e-6).all()
+
+
+@pytest.mark.parametrize("rows,cols", [(1, 1), (2, 3), (3, 4), (8, 32), (5, 33), (4, 101)])
+def test_sparse_fake_quant_structure_and_bound(rows, cols):
+    rng = np.random.default_rng(rows * 100 + cols + 2)
+    w = rand_w(rng, rows, cols)
+    d = fake_quant_int4_sparse(w)
+    assert d.shape == w.shape
+    kept_amax = np.zeros((rows, 1), np.float32)
+    for b0 in range(0, cols, 4):
+        blk = d[:, b0 : b0 + 4]
+        # 2:4 structure: at most 2 survivors per block, and they are the
+        # block's largest magnitudes (pruned entries are exactly 0.0).
+        assert ((blk != 0.0).sum(axis=1) <= 2).all()
+        src = w[:, b0 : b0 + 4]
+        order = np.argsort(-np.abs(src), axis=1, kind="stable")
+        for r in range(rows):
+            kept = set(np.nonzero(blk[r])[0])
+            assert kept <= set(order[r, :2])
+            kept_amax[r] = max(kept_amax[r], np.abs(src[r, order[r, :2]]).max())
+    # prune_quantize_rows_2of4 grid: kept error <= max|kept in row| / 14
+    # (SPARSE4_MAX_ROW_REL_ERR); zeroed entries are the pruned ones.
+    kept_mask = d != 0.0
+    err = np.abs(d - w)
+    assert (err[kept_mask] <= (kept_amax / 14.0 + 1e-6).repeat(cols, 1)[kept_mask]).all()
+
+
+def test_u32_tensor_roundtrip(tmp_path):
+    codes = np.array([0, 1, 2, 3, 2, 2], np.uint32)
+    p = tmp_path / "precision.bin"
+    save_tensors(p, [("precision.codes", codes)])
+    back = load_tensors(p)["precision.codes"]
+    assert back.dtype == np.uint32
+    assert (back == codes).all()
+    assert set(codes.tolist()) <= set(CODES.values())
+
+
+def test_edit_distance():
+    assert edit_distance([], []) == 0
+    assert edit_distance([1, 2, 3], [1, 2, 3]) == 0
+    assert edit_distance([1, 2, 3], [1, 3]) == 1
+    assert edit_distance([1, 2], [3, 4, 5]) == 3
+    assert edit_distance([], [7]) == 1
+
+
+def test_with_formats_touches_only_selected_weights():
+    import jax
+
+    from compile.model import ModelConfig, build_layers, init_params
+
+    cfg = ModelConfig()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    fc = next(l for l in build_layers(cfg) if l.kind == "fc")
+    out = with_formats(params, cfg, {fc.name: "int4"})
+    assert set(out) == set(params)
+    for name in params:
+        same = np.array_equal(np.asarray(out[name]), np.asarray(params[name]))
+        if name == f"{fc.name}.w":
+            assert not same
+            assert out[name].shape == params[name].shape
+        else:
+            assert same, name
+    # f32 assignment is the identity.
+    ident = with_formats(params, cfg, {fc.name: "f32"})
+    assert all(
+        np.array_equal(np.asarray(ident[n]), np.asarray(params[n])) for n in params
+    )

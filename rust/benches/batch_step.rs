@@ -10,7 +10,10 @@
 //!    stream-weights-once behaviour pays the most, A/B'd across every
 //!    kernel ISA the host supports (`dispatch::with_forced_isa`). The
 //!    acceptance target for the batching refactor is ≥2× frames/sec at
-//!    B=16 vs B=1 here.
+//!    B=16 vs B=1 here. The same model is then re-run with uniformly
+//!    int8, int4, and 2:4-sparse int4 weights at the detected ISA
+//!    (`paper_int8_am` / `paper_int4_am` / `paper_int4_sparse_am` rows)
+//!    — the engine-level view of the below-int8 weight formats.
 //!
 //! Writes schema-stable rows `{kernel, isa, batch, gmacs}` to
 //! `BENCH_batch_step.json` under `asrpu::bench::bench_dir()`
@@ -20,9 +23,9 @@
 //! as a trajectory, not as a kernel roofline.
 
 use asrpu::am::gemm::dispatch::{self, KernelIsa};
-use asrpu::am::{TdsModel, TdsState};
+use asrpu::am::{QuantizedTdsModel, TdsModel, TdsState};
 use asrpu::bench::{bench_dir, Bench};
-use asrpu::config::{DecoderConfig, ModelConfig, PipelineDesc, Precision};
+use asrpu::config::{DecoderConfig, ModelConfig, PipelineDesc, Precision, PrecisionMap};
 use asrpu::decoder::{BeamDecoder, DecodeState};
 use asrpu::lm::NgramLm;
 use asrpu::synth::spec;
@@ -124,6 +127,33 @@ fn main() {
         }
     }
 
+    // --- paper-scale AM with quantized weights: int8 vs the below-int8
+    // formats at the detected ISA — the engine-level weight-format A/B
+    // the compile-side calibration pass banks on.
+    let mut quant_g: Vec<(&str, usize, f64)> = Vec::new();
+    for (tag, prec) in [
+        ("paper_int8_am", Precision::Int8),
+        ("paper_int4_am", Precision::Int4),
+        ("paper_int4_sparse_am", Precision::Int4Sparse),
+    ] {
+        let qm = QuantizedTdsModel::from_model_mixed(&paper, &PrecisionMap::uniform(prec))
+            .expect("paper model quantizes at every precision");
+        for batch in [1usize, 4, 16] {
+            let feats: Vec<f32> = (0..batch * pf).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let mut states: Vec<TdsState> = (0..batch).map(|_| qm.state()).collect();
+            let secs = bq
+                .run(&format!("batch/{tag}/{detected}/B{batch}"), || {
+                    let mut refs: Vec<&mut TdsState> = states.iter_mut().collect();
+                    qm.step_batch(&mut refs, &feats).len()
+                })
+                .median
+                .as_secs_f64();
+            let g = gmacs(batch, paper_macs, secs);
+            rows.push((tag.into(), detected, batch, g));
+            quant_g.push((tag, batch, g));
+        }
+    }
+
     println!("\nframes/sec by lane count (speedup vs B=1):");
     for (tag, series) in [("tiny am+dec", &tiny_fps), ("paper-f32 am", &paper_fps)] {
         let base = series[0].1;
@@ -146,6 +176,16 @@ fn main() {
                 );
             }
         }
+    }
+
+    println!("\npaper AM weight-format A/B at {detected} (GMAC/s, vs f32):");
+    for &(tag, batch, g) in &quant_g {
+        let f32_g = rows
+            .iter()
+            .find(|r| r.0 == "paper_f32_am" && r.1 == detected && r.2 == batch)
+            .map(|r| r.3)
+            .unwrap_or(g);
+        println!("  {tag:<22} B={batch:<3} {g:>8.2} GMAC/s  ({:>5.2}x)", g / f32_g);
     }
 
     let mut json_rows = Vec::new();

@@ -1,21 +1,24 @@
 //! Bench: the AM micro-kernels head-to-head across kernel ISAs — the
-//! naive FC reference (scalar-only baseline) plus the four dispatched
-//! hot kernels (`fc_batch`, `fc_batch_int8`, `conv_steps`,
-//! `conv_steps_int8`) at paper-scale shapes, swept over
-//! B ∈ {1, 4, 16, 64} lanes and forced to every ISA the host supports
-//! via `dispatch::with_forced_isa` (the kernels are bit-identical
-//! across ISAs, so this is a pure throughput A/B).
+//! naive FC reference (scalar-only baseline) plus the dispatched hot
+//! kernels at every weight precision (`fc_batch`, `fc_batch_int8`,
+//! `fc_batch_int4`, `fc_batch_int4_sparse`, `conv_steps`,
+//! `conv_steps_int8`, `conv_steps_int4`, `conv_steps_int4_sparse`) at
+//! paper-scale shapes, swept over B ∈ {1, 4, 16, 64} lanes and forced
+//! to every ISA the host supports via `dispatch::with_forced_isa` (the
+//! kernels are bit-identical across ISAs, so this is a pure throughput
+//! A/B).
 //!
 //! Prints GMAC/s per kernel/ISA/lane count and the scalar→SIMD speedup
 //! table, and writes schema-stable rows `{kernel, isa, batch, gmacs}`
 //! to `BENCH_gemm.json` under `asrpu::bench::bench_dir()`
-//! (`$ASRPU_BENCH_DIR`, default repo root). CI uploads the file from
-//! every run — the measured perf trajectory.
+//! (`$ASRPU_BENCH_DIR`, default repo root), plus the int8-vs-below-int8
+//! subset to `BENCH_quant.json`. CI uploads both files from every run —
+//! the measured perf trajectory.
 
 use asrpu::accel::kernels::peak_gmacs;
 use asrpu::am::gemm;
 use asrpu::am::gemm::dispatch::{self, KernelIsa};
-use asrpu::am::quant::quantize_rows;
+use asrpu::am::quant::{prune_quantize_rows_2of4, quantize_rows, quantize_rows_int4};
 use asrpu::bench::{bench_dir, Bench};
 use asrpu::config::AccelConfig;
 use asrpu::util::json::{Json, JsonObj};
@@ -58,9 +61,13 @@ fn main() {
     let w: Vec<f32> = (0..IN_DIM * OUT_DIM).map(|_| rng.uniform(-0.05, 0.05)).collect();
     let bias: Vec<f32> = (0..OUT_DIM).map(|_| rng.uniform(-0.1, 0.1)).collect();
     let qw = quantize_rows(&w, OUT_DIM, IN_DIM);
+    let qw4 = quantize_rows_int4(&w, OUT_DIM, IN_DIM);
+    let qws = prune_quantize_rows_2of4(&w, OUT_DIM, IN_DIM);
     let cw: Vec<f32> = (0..OUT_CH * IN_CH * KW).map(|_| rng.uniform(-0.2, 0.2)).collect();
     let cbias: Vec<f32> = (0..OUT_CH).map(|_| rng.uniform(-0.1, 0.1)).collect();
     let cq = quantize_rows(&cw, OUT_CH, IN_CH * KW);
+    let cq4 = quantize_rows_int4(&cw, OUT_CH, IN_CH * KW);
+    let cqs = prune_quantize_rows_2of4(&cw, OUT_CH, IN_CH * KW);
 
     let mut b = Bench::quick();
     // (kernel, isa, batch, gmacs) — the JSON schema, row per measurement.
@@ -69,10 +76,12 @@ fn main() {
         let xs: Vec<f32> = (0..batch * IN_DIM).map(|_| rng.uniform(-1.0, 1.0)).collect();
         let mut out = vec![0.0f32; batch * OUT_DIM];
         let mut xsum = Vec::new();
+        let mut gsum = Vec::new();
         let ext_len = (KW - 1 + T_OUT) * batch * IN_CH * WIDTH;
         let ext: Vec<f32> = (0..ext_len).map(|_| rng.uniform(-1.0, 1.0)).collect();
         let mut cout = vec![0.0f32; T_OUT * batch * OUT_CH * WIDTH];
         let mut wsum = Vec::new();
+        let mut tmp = Vec::new();
 
         // The naive kernel has no SIMD variant — it is the oracle the
         // dispatched kernels are verified bit-exact against.
@@ -108,6 +117,31 @@ fn main() {
             });
             rows.push(("fc_int8".into(), isa, batch, fc_gmacs(batch, int8)));
 
+            let int4 = dispatch::with_forced_isa(isa, || {
+                b.run(&format!("gemm/fc_int4/{isa}/B{batch}"), || {
+                    gemm::fc_batch_int4_into(
+                        &qw4.packed, &qw4.scale, &qw4.zp, &bias, &xs, batch, &mut gsum,
+                        &mut out,
+                    );
+                    out[0]
+                })
+                .median
+                .as_secs_f64()
+            });
+            rows.push(("fc_int4".into(), isa, batch, fc_gmacs(batch, int4)));
+
+            let sparse = dispatch::with_forced_isa(isa, || {
+                b.run(&format!("gemm/fc_int4_sparse/{isa}/B{batch}"), || {
+                    gemm::fc_batch_int4_sparse_into(
+                        &qws.vals, &qws.idxs, &qws.scale, &bias, &xs, batch, &mut out,
+                    );
+                    out[0]
+                })
+                .median
+                .as_secs_f64()
+            });
+            rows.push(("fc_int4_sparse".into(), isa, batch, fc_gmacs(batch, sparse)));
+
             let conv = dispatch::with_forced_isa(isa, || {
                 b.run(&format!("gemm/conv/{isa}/B{batch}"), || {
                     gemm::conv_steps_into(
@@ -133,12 +167,42 @@ fn main() {
                 .as_secs_f64()
             });
             rows.push(("conv_int8".into(), isa, batch, conv_gmacs(batch, conv8)));
+
+            let conv4 = dispatch::with_forced_isa(isa, || {
+                b.run(&format!("gemm/conv_int4/{isa}/B{batch}"), || {
+                    gemm::conv_steps_int4_into(
+                        &cq4.packed, &cq4.scale, &cq4.zp, &cbias, &ext, T_OUT, 1, batch,
+                        IN_CH, OUT_CH, KW, WIDTH, &mut tmp, &mut cout,
+                    );
+                    cout[0]
+                })
+                .median
+                .as_secs_f64()
+            });
+            rows.push(("conv_int4".into(), isa, batch, conv_gmacs(batch, conv4)));
+
+            let convs = dispatch::with_forced_isa(isa, || {
+                b.run(&format!("gemm/conv_int4_sparse/{isa}/B{batch}"), || {
+                    gemm::conv_steps_int4_sparse_into(
+                        &cqs.vals, &cqs.idxs, &cqs.scale, &cbias, &ext, T_OUT, 1, batch,
+                        IN_CH, OUT_CH, KW, WIDTH, &mut cout,
+                    );
+                    cout[0]
+                })
+                .median
+                .as_secs_f64()
+            });
+            rows.push(("conv_int4_sparse".into(), isa, batch, conv_gmacs(batch, convs)));
         }
     }
 
     if isas.len() > 1 {
         println!("\nscalar → {detected} speedup by kernel and lane count:");
-        for kernel in ["fc", "fc_int8", "conv", "conv_int8"] {
+        let kernels = [
+            "fc", "fc_int8", "fc_int4", "fc_int4_sparse", "conv", "conv_int8", "conv_int4",
+            "conv_int4_sparse",
+        ];
+        for kernel in kernels {
             for batch in BATCHES {
                 let find = |isa: KernelIsa| {
                     rows.iter()
@@ -180,5 +244,52 @@ fn main() {
     match std::fs::write(&path, Json::Obj(doc).to_pretty()) {
         Ok(()) => println!("\nwrote {}", path.display()),
         Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+
+    // The quantized-weight comparison CI tracks separately: int8 vs the
+    // below-int8 formats, same schema, restricted to the quantized
+    // kernels so the precision trajectory is one small file.
+    let quant = [
+        "fc_int8", "fc_int4", "fc_int4_sparse", "conv_int8", "conv_int4",
+        "conv_int4_sparse",
+    ];
+    println!("\nquantized-weight kernels at {detected} (GMAC/s by lane count):");
+    for kernel in quant {
+        let per_batch: Vec<String> = BATCHES
+            .iter()
+            .filter_map(|&batch| {
+                rows.iter()
+                    .find(|r| r.0 == kernel && r.1 == detected && r.2 == batch)
+                    .map(|r| format!("B{batch} {:.2}", r.3))
+            })
+            .collect();
+        println!("  {kernel:<16} {}", per_batch.join("  "));
+    }
+    let mut quant_rows = Vec::new();
+    for (kernel, isa, batch, g) in &rows {
+        if !quant.contains(&kernel.as_str()) {
+            continue;
+        }
+        let mut o = JsonObj::new();
+        o.insert("kernel", Json::Str(kernel.clone()));
+        o.insert("isa", Json::Str(isa.as_str().to_string()));
+        o.insert("batch", Json::Num(*batch as f64));
+        o.insert("gmacs", Json::Num(*g));
+        quant_rows.push(Json::Obj(o));
+    }
+    let mut qdoc = JsonObj::new();
+    qdoc.insert("bench", Json::Str("gemm_kernels_quant".into()));
+    qdoc.insert("detected_isa", Json::Str(detected.as_str().to_string()));
+    qdoc.insert(
+        "shapes",
+        Json::Str(format!(
+            "fc {OUT_DIM}x{IN_DIM}; conv {OUT_CH}x{IN_CH}x{KW} w{WIDTH} t{T_OUT}"
+        )),
+    );
+    qdoc.insert("rows", Json::Arr(quant_rows));
+    let qpath = bench_dir().join("BENCH_quant.json");
+    match std::fs::write(&qpath, Json::Obj(qdoc).to_pretty()) {
+        Ok(()) => println!("wrote {}", qpath.display()),
+        Err(e) => eprintln!("could not write {}: {e}", qpath.display()),
     }
 }

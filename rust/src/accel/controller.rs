@@ -104,7 +104,7 @@ impl StepReport {
 /// in-flight activation buffers, at int8 activation width for the
 /// quantized paper model.
 pub fn inter_step_state_bytes(model: &ModelConfig) -> u64 {
-    let elem = model.precision.bytes_per_weight() as u64;
+    let elem = model.precision.activation_bytes() as u64;
     let mut bytes = 0u64;
     for layer in model.layers() {
         if let Layer::Conv { in_ch, kw, w, .. } = &layer {
@@ -301,7 +301,8 @@ pub fn simulate_kernels(
             // Track provisional kernel starts to anchor the next issue
             // (refined below in the main loop; good enough for ordering).
             prev_start = sim_now.max(ready);
-            sim_now = prev_start + schedule_uniform(k.threads, k.instr_per_thread, accel.num_pes as u64).makespan;
+            sim_now = prev_start
+                + schedule_uniform(k.threads, k.instr_per_thread, accel.num_pes as u64).makespan;
         }
     }
     // §3.6: during hypothesis expansion the model memory acts as an LRU

@@ -69,6 +69,7 @@ impl HypWorkload {
             n_hyps: stats.mean_live().ceil().max(1.0) as u64,
             avg_children,
             word_commit_frac,
+            ..Default::default()
         }
     }
 

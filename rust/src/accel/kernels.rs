@@ -11,6 +11,7 @@
 //! kernel runs one thread per live hypothesis, once per acoustic vector.
 
 use crate::config::{AccelConfig, Layer, PipelineDesc, StageDesc};
+use crate::decoder::RescoreStats;
 
 /// Loop-body overhead per iteration: compare + conditional jump + index
 /// update (§5.1's example loop shape).
@@ -113,8 +114,11 @@ pub fn hyp_expansion_thread_instrs(avg_children: f64, word_commit_frac: f64) -> 
 }
 
 /// Nominal word count per N-best path the rescoring kernel is sized
-/// for (finish-time second pass; utterance length is unknown at
-/// step-program build time, so the stage uses a fixed average).
+/// for when no list has been measured yet (finish-time second pass;
+/// utterance length is unknown at step-program build time). Once an
+/// engine has served N-best lists, feed its measured
+/// [`RescoreStats`] through [`HypWorkload::with_rescore_stats`] and the
+/// kernel is sized from serving reality instead.
 pub const RESCORE_AVG_WORDS: f64 = 12.0;
 
 /// Per-thread cost of rescoring one N-best path under the second-pass
@@ -147,6 +151,10 @@ pub struct HypWorkload {
     pub avg_children: f64,
     /// Fraction of advanced links that complete a word (LM walk).
     pub word_commit_frac: f64,
+    /// Mean words per N-best path the finish-time rescore kernel is
+    /// sized for ([`RESCORE_AVG_WORDS`] until measured list statistics
+    /// arrive through [`Self::with_rescore_stats`]).
+    pub rescore_avg_words: f64,
 }
 
 impl Default for HypWorkload {
@@ -154,7 +162,24 @@ impl Default for HypWorkload {
         // Paper-scale defaults: beam keeps a few hundred live hypotheses
         // (bounded by the 384-entry hypothesis memory); word-piece
         // lexicon tries have high root branching but shallow interiors.
-        HypWorkload { n_hyps: 256, avg_children: 8.0, word_commit_frac: 0.12 }
+        HypWorkload {
+            n_hyps: 256,
+            avg_children: 8.0,
+            word_commit_frac: 0.12,
+            rescore_avg_words: RESCORE_AVG_WORDS,
+        }
+    }
+}
+
+impl HypWorkload {
+    /// Replace the nominal rescore path length with measured N-best
+    /// statistics from a served engine. Unmeasured (empty) stats keep
+    /// the nominal [`RESCORE_AVG_WORDS`] sizing.
+    pub fn with_rescore_stats(mut self, stats: &RescoreStats) -> Self {
+        if let Some(w) = stats.avg_words() {
+            self.rescore_avg_words = w;
+        }
+        self
     }
 }
 
@@ -207,7 +232,15 @@ pub fn build_step_kernels(
                 });
             }
             StageDesc::AmLayer(layer) => {
-                let bytes_per_elem = model.precision.bytes_per_weight();
+                // Per-layer served precision: the calibration map decides
+                // the width each layer's weights stream at, so weight DMA
+                // is charged at `weight_bits` (3 for 2:4-sparse int4) and
+                // activations at `activation_bytes`. LayerNorm parameters
+                // stay f32 in every configuration (the map never touches
+                // the LN arm below).
+                let prec = pipe.precisions.resolve(layer.name());
+                let act_bytes = prec.activation_bytes();
+                let weight_bits = prec.weight_bits() as u64;
                 match layer {
                     Layer::Conv { out_ch, stride, w, in_ch, kw, .. } => {
                         rate_div *= stride;
@@ -217,14 +250,14 @@ pub fn build_step_kernels(
                             class: KernelClass::Conv,
                             threads: (out_ch * w) as u64 * t_out,
                             instr_per_thread: dot_thread_instrs(layer.dot_len() as u64, v),
-                            model_bytes: layer.model_bytes(model.precision) as u64,
-                            smem_bytes: ((in_ch * w * kw + out_ch * w) * bytes_per_elem) as u64
+                            model_bytes: layer.model_bytes(prec) as u64,
+                            smem_bytes: ((in_ch * w * kw + out_ch * w) * act_bytes) as u64
                                 * t_out,
                         });
                     }
                     Layer::Fc { in_dim, out_dim, .. } => {
                         let t_out = (model.frames_per_step() / rate_div) as u64;
-                        let bytes = layer.model_bytes(model.precision) as u64;
+                        let bytes = layer.model_bytes(prec) as u64;
                         // §5.2: split kernels larger than model memory into
                         // neuron subsets, each fitting.
                         let splits = bytes.div_ceil(accel.model_mem_bytes as u64).max(1);
@@ -241,8 +274,8 @@ pub fn build_step_kernels(
                                 class: KernelClass::Fc,
                                 threads: n * t_out,
                                 instr_per_thread: dot_thread_instrs(*in_dim as u64, v),
-                                model_bytes: n * (*in_dim as u64 + 1) * bytes_per_elem as u64,
-                                smem_bytes: ((*in_dim + *out_dim) * bytes_per_elem) as u64 * t_out,
+                                model_bytes: n * (*in_dim as u64 + 1) * weight_bits / 8,
+                                smem_bytes: ((*in_dim + *out_dim) * act_bytes) as u64 * t_out,
                             });
                         }
                     }
@@ -282,7 +315,7 @@ pub fn build_step_kernels(
                     name: stage.name(),
                     class: KernelClass::Rescore,
                     threads: *nbest as u64,
-                    instr_per_thread: rescore_thread_instrs(RESCORE_AVG_WORDS),
+                    instr_per_thread: rescore_thread_instrs(hyp.rescore_avg_words),
                     model_bytes: 0,
                     smem_bytes: *nbest as u64 * accel.hyp_record_bytes as u64 * 2,
                 });
@@ -427,6 +460,90 @@ mod tests {
         // precision-independent (the MAC unit is 8-bit wide regardless).
         let instrs = |ks: &[KernelExec]| ks.iter().map(|k| k.total_instrs()).sum::<u64>();
         assert_eq!(instrs(&k8), instrs(&k32));
+    }
+
+    #[test]
+    fn int4_at_least_halves_conv_fc_weight_traffic_vs_int8() {
+        use crate::config::{Precision, PrecisionMap};
+        let m = ModelConfig::paper_tds();
+        assert_eq!(m.precision, Precision::Int8);
+        let a = AccelConfig::paper();
+        let hyp = HypWorkload::default();
+        let k8 = build_step_kernels(&pipe(&m), &a, &hyp, 1);
+        let p4 = PipelineDesc::for_model_mixed(&m, PrecisionMap::uniform(Precision::Int4));
+        let k4 = build_step_kernels(&p4, &a, &hyp, 1);
+        // LayerNorm parameters stay f32 at every precision, so the
+        // headline claim is over the layers the map actually narrows.
+        let weight_bytes = |ks: &[KernelExec]| {
+            ks.iter()
+                .filter(|k| matches!(k.class, KernelClass::Conv | KernelClass::Fc))
+                .map(|k| k.model_bytes)
+                .sum::<u64>()
+        };
+        let (b8, b4) = (weight_bytes(&k8), weight_bytes(&k4));
+        assert!(
+            b8 >= 2 * b4,
+            "int8 conv/FC weight DMA {b8} not ≥ 2× int4 {b4}"
+        );
+        // 2:4 sparse (3 bits/weight amortized) narrows further still.
+        let ps =
+            PipelineDesc::for_model_mixed(&m, PrecisionMap::uniform(Precision::Int4Sparse));
+        let ksparse = build_step_kernels(&ps, &a, &hyp, 1);
+        let bs = weight_bytes(&ksparse);
+        assert!(bs < b4, "sparse weight DMA {bs} not below dense int4 {b4}");
+        // Same total compute either way: threads and per-thread cost are
+        // precision-independent (the MAC unit is 8-bit wide regardless).
+        let instrs = |ks: &[KernelExec]| ks.iter().map(|k| k.total_instrs()).sum::<u64>();
+        assert_eq!(instrs(&k8), instrs(&k4));
+        assert_eq!(instrs(&k8), instrs(&ksparse));
+    }
+
+    #[test]
+    fn mixed_map_charges_each_layer_at_its_resolved_width() {
+        use crate::config::{Precision, PrecisionMap};
+        let m = ModelConfig::paper_tds();
+        let a = AccelConfig::paper();
+        let mut map = PrecisionMap::uniform(Precision::Int4);
+        map.set("g0.sub", Precision::F32);
+        map.set("g0.b0.conv", Precision::Int8);
+        let p = PipelineDesc::for_model_mixed(&m, map);
+        let ks = build_step_kernels(&p, &a, &HypWorkload::default(), 1);
+        let layer = |name: &str| m.layers().into_iter().find(|l| l.name() == name).unwrap();
+        let exec = |name: &str| ks.iter().find(|k| k.name == name).unwrap();
+        assert_eq!(
+            exec("g0.sub").model_bytes,
+            layer("g0.sub").model_bytes(Precision::F32) as u64
+        );
+        assert_eq!(
+            exec("g0.b0.conv").model_bytes,
+            layer("g0.b0.conv").model_bytes(Precision::Int8) as u64
+        );
+        // An un-overridden conv streams at the map's int4 default.
+        assert_eq!(
+            exec("g1.b0.conv").model_bytes,
+            layer("g1.b0.conv").model_bytes(Precision::Int4) as u64
+        );
+    }
+
+    #[test]
+    fn rescore_kernel_is_sized_from_measured_nbest_stats() {
+        use crate::decoder::NbestEntry;
+        let entry = |n: usize| NbestEntry { words: vec![0; n], text: String::new(), score: 0.0 };
+        let mut stats = RescoreStats::default();
+        stats.record(&[entry(3), entry(5)]);
+        let hyp = HypWorkload::default().with_rescore_stats(&stats);
+        assert_eq!(hyp.rescore_avg_words, 4.0);
+        let m = ModelConfig::paper_tds();
+        let a = AccelConfig::paper();
+        let mut p = pipe(&m);
+        p.stages.push(StageDesc::Rescore { nbest: 8 });
+        let ks = build_step_kernels(&p, &a, &hyp, 1);
+        let r = ks.iter().find(|k| k.class == KernelClass::Rescore).unwrap();
+        assert_eq!(r.instr_per_thread, rescore_thread_instrs(4.0));
+        assert_ne!(r.instr_per_thread, rescore_thread_instrs(RESCORE_AVG_WORDS));
+        // Unmeasured stats keep the nominal sizing constant.
+        let idle = HypWorkload::default().with_rescore_stats(&RescoreStats::default());
+        assert_eq!(idle.rescore_avg_words, RESCORE_AVG_WORDS);
     }
 
     #[test]

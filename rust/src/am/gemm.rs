@@ -640,6 +640,816 @@ pub fn conv_steps_int8_scalar_into(
     }
 }
 
+use super::quant::INT4_GROUP;
+
+/// The signed 4-bit code at column `k` of a packed row (even columns in
+/// the low nibble — see [`super::quant::Int4Weights`]).
+#[inline(always)]
+pub(crate) fn int4_code_at(row: &[u8], k: usize) -> i32 {
+    let byte = row[k / 2];
+    let nib = if k % 2 == 0 { byte & 0x0f } else { byte >> 4 };
+    nib as i32 - 8
+}
+
+/// Decode one 2:4 sparse block byte pair into its two
+/// `(in-block index, signed value)` slots (see
+/// [`super::quant::SparseInt4Weights`]).
+#[inline(always)]
+pub(crate) fn sparse4_slots(v: u8, ix: u8) -> ((usize, f32), (usize, f32)) {
+    (
+        ((ix & 0x03) as usize, ((v & 0x0f) as i32 - 8) as f32),
+        (((ix >> 2) & 0x03) as usize, ((v >> 4) as i32 - 8) as f32),
+    )
+}
+
+/// Per-(lane, group) activation sums for the int4 FC kernels:
+/// `gsum[l·ng + g] = Σ xs[l][k] over group g`, every lane's groups summed
+/// `k` ascending. Shared by the scalar kernel, the SIMD kernels and the
+/// naive oracle so the affine correction is bit-identical everywhere.
+pub(crate) fn fc_int4_gsums(
+    xs: &[f32],
+    batch: usize,
+    in_dim: usize,
+    ng: usize,
+    gsum: &mut Vec<f32>,
+) {
+    gsum.clear();
+    gsum.resize(batch * ng, 0.0);
+    for l in 0..batch {
+        let x = &xs[l * in_dim..][..in_dim];
+        for g in 0..ng {
+            let seg = &x[g * INT4_GROUP..((g + 1) * INT4_GROUP).min(in_dim)];
+            let mut s = 0.0f32;
+            for &v in seg {
+                s += v;
+            }
+            gsum[l * ng + g] = s;
+        }
+    }
+}
+
+/// Packed-int4 FC with per-(row, group) affine parameters and f32
+/// accumulation:
+///
+/// `y[l][o] = bias[o] + Σ_g scale[o][g] · (Σ_{k∈g} q[o][k]·x[l][k] − zp[o][g] · Σ_{k∈g} x[l][k])`
+///
+/// — the int8 factored form applied per group of [`INT4_GROUP`] columns,
+/// with the weight stream at half a byte per MAC. `gsum` is a reusable
+/// per-(lane, group) Σx scratch buffer (`batch × groups`). Dispatched to
+/// the active ISA; the SIMD paths vectorize across batch lanes only, so
+/// results stay bit-identical (`==`) to [`fc_batch_int4_scalar_into`]
+/// under every ISA.
+#[allow(clippy::too_many_arguments)]
+pub fn fc_batch_int4_into(
+    packed: &[u8],
+    scale: &[f32],
+    zp: &[f32],
+    bias: &[f32],
+    xs: &[f32],
+    batch: usize,
+    gsum: &mut Vec<f32>,
+    out: &mut [f32],
+) {
+    match dispatch::active() {
+        #[cfg(target_arch = "x86_64")]
+        dispatch::KernelIsa::Avx2 => {
+            check_fc_int4_shapes(packed, scale, zp, bias, xs, batch, out);
+            unsafe { simd::avx2::fc_batch_int4(packed, scale, zp, bias, xs, batch, gsum, out) }
+        }
+        #[cfg(target_arch = "aarch64")]
+        dispatch::KernelIsa::Neon => {
+            check_fc_int4_shapes(packed, scale, zp, bias, xs, batch, out);
+            unsafe { simd::neon::fc_batch_int4(packed, scale, zp, bias, xs, batch, gsum, out) }
+        }
+        _ => fc_batch_int4_scalar_into(packed, scale, zp, bias, xs, batch, gsum, out),
+    }
+}
+
+/// Shared shape validation for the int4 FC dispatcher.
+fn check_fc_int4_shapes(
+    packed: &[u8],
+    scale: &[f32],
+    zp: &[f32],
+    bias: &[f32],
+    xs: &[f32],
+    batch: usize,
+    out: &[f32],
+) {
+    assert!(batch > 0, "fc_batch_int4_into needs at least one lane");
+    debug_assert_eq!(xs.len() % batch, 0);
+    let in_dim = xs.len() / batch;
+    let ng = in_dim.div_ceil(INT4_GROUP);
+    debug_assert_eq!(packed.len(), bias.len() * in_dim.div_ceil(2));
+    debug_assert_eq!(scale.len(), bias.len() * ng);
+    debug_assert_eq!(zp.len(), bias.len() * ng);
+    debug_assert_eq!(out.len(), batch * bias.len());
+}
+
+/// Ragged lane block of the int4 FC — the lanes beyond the last full
+/// SIMD block. Per-lane scalar accumulation with the same per-element op
+/// order as the blocked paths (zero group seed, `k` ascending with zero
+/// codes skipped, per-group affine fold, bias finalize), shared by the
+/// scalar and SIMD kernels.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn fc_int4_lane_edge(
+    row: &[u8],
+    scale_o: &[f32],
+    zp_o: &[f32],
+    bias_o: f32,
+    xs: &[f32],
+    gsum: &[f32],
+    in_dim: usize,
+    out_dim: usize,
+    ng: usize,
+    o: usize,
+    l: usize,
+    lanes: usize,
+    out: &mut [f32],
+) {
+    for c in 0..lanes {
+        let x = &xs[(l + c) * in_dim..][..in_dim];
+        let mut acc = 0.0f32;
+        for g in 0..ng {
+            let k_end = ((g + 1) * INT4_GROUP).min(in_dim);
+            let mut gacc = 0.0f32;
+            for k in g * INT4_GROUP..k_end {
+                let q = int4_code_at(row, k);
+                if q == 0 {
+                    continue;
+                }
+                gacc += q as f32 * x[k];
+            }
+            acc += scale_o[g] * (gacc - zp_o[g] * gsum[(l + c) * ng + g]);
+        }
+        out[(l + c) * out_dim + o] = bias_o + acc;
+    }
+}
+
+/// Scalar (lane-blocked) packed-int4 FC — the reference path for
+/// [`fc_batch_int4_into`].
+#[allow(clippy::too_many_arguments)]
+pub fn fc_batch_int4_scalar_into(
+    packed: &[u8],
+    scale: &[f32],
+    zp: &[f32],
+    bias: &[f32],
+    xs: &[f32],
+    batch: usize,
+    gsum: &mut Vec<f32>,
+    out: &mut [f32],
+) {
+    assert!(batch > 0, "fc_batch_int4_scalar_into needs at least one lane");
+    let out_dim = bias.len();
+    debug_assert_eq!(xs.len() % batch, 0);
+    let in_dim = xs.len() / batch;
+    let ng = in_dim.div_ceil(INT4_GROUP);
+    let stride = in_dim.div_ceil(2);
+    debug_assert_eq!(packed.len(), out_dim * stride);
+    debug_assert_eq!(scale.len(), out_dim * ng);
+    debug_assert_eq!(zp.len(), out_dim * ng);
+    debug_assert_eq!(out.len(), batch * out_dim);
+    fc_int4_gsums(xs, batch, in_dim, ng, gsum);
+    for o in 0..out_dim {
+        let row = &packed[o * stride..][..stride];
+        let scale_o = &scale[o * ng..][..ng];
+        let zp_o = &zp[o * ng..][..ng];
+        let mut l = 0;
+        while l < batch {
+            let lanes = TILE_LANES.min(batch - l);
+            fc_int4_lane_edge(
+                row, scale_o, zp_o, bias[o], xs, gsum, in_dim, out_dim, ng, o, l, lanes, out,
+            );
+            l += lanes;
+        }
+    }
+}
+
+/// Reference (naive unpacked) int4 FC — decodes every nibble one output
+/// at a time with the same per-element op order as the blocked kernels.
+/// The bit-exactness oracle for [`fc_batch_int4_into`] on every ISA.
+#[allow(clippy::too_many_arguments)]
+pub fn fc_batch_int4_naive_into(
+    packed: &[u8],
+    scale: &[f32],
+    zp: &[f32],
+    bias: &[f32],
+    xs: &[f32],
+    batch: usize,
+    out: &mut [f32],
+) {
+    assert!(batch > 0);
+    let out_dim = bias.len();
+    let in_dim = xs.len() / batch;
+    let ng = in_dim.div_ceil(INT4_GROUP);
+    let stride = in_dim.div_ceil(2);
+    debug_assert_eq!(out.len(), batch * out_dim);
+    let mut gsum = Vec::new();
+    fc_int4_gsums(xs, batch, in_dim, ng, &mut gsum);
+    for lane in 0..batch {
+        let x = &xs[lane * in_dim..(lane + 1) * in_dim];
+        for o in 0..out_dim {
+            let row = &packed[o * stride..][..stride];
+            let mut acc = 0.0f32;
+            for g in 0..ng {
+                let k_end = ((g + 1) * INT4_GROUP).min(in_dim);
+                let mut gacc = 0.0f32;
+                for k in g * INT4_GROUP..k_end {
+                    let q = int4_code_at(row, k);
+                    if q == 0 {
+                        continue;
+                    }
+                    gacc += q as f32 * x[k];
+                }
+                acc += scale[o * ng + g] * (gacc - zp[o * ng + g] * gsum[lane * ng + g]);
+            }
+            out[lane * out_dim + o] = bias[o] + acc;
+        }
+    }
+}
+
+/// 2:4 structured-sparse int4 FC with per-row symmetric scale:
+///
+/// `y[l][o] = bias[o] + scale[o] · Σ_b (q₀·x[l][4b+i₀] + q₁·x[l][4b+i₁])`
+///
+/// — a fixed 2 MACs per 4-column block with **no per-element branching**
+/// (padding slots carry `q = 0` and an always-in-bounds index, so tail
+/// blocks cost the same two adds). Dispatched to the active ISA; the
+/// SIMD paths vectorize across batch lanes only, bit-identical (`==`) to
+/// [`fc_batch_int4_sparse_scalar_into`] under every ISA.
+#[allow(clippy::too_many_arguments)]
+pub fn fc_batch_int4_sparse_into(
+    vals: &[u8],
+    idxs: &[u8],
+    scale: &[f32],
+    bias: &[f32],
+    xs: &[f32],
+    batch: usize,
+    out: &mut [f32],
+) {
+    match dispatch::active() {
+        #[cfg(target_arch = "x86_64")]
+        dispatch::KernelIsa::Avx2 => {
+            check_fc_sparse_shapes(vals, idxs, scale, bias, xs, batch, out);
+            unsafe { simd::avx2::fc_batch_int4_sparse(vals, idxs, scale, bias, xs, batch, out) }
+        }
+        #[cfg(target_arch = "aarch64")]
+        dispatch::KernelIsa::Neon => {
+            check_fc_sparse_shapes(vals, idxs, scale, bias, xs, batch, out);
+            unsafe { simd::neon::fc_batch_int4_sparse(vals, idxs, scale, bias, xs, batch, out) }
+        }
+        _ => fc_batch_int4_sparse_scalar_into(vals, idxs, scale, bias, xs, batch, out),
+    }
+}
+
+/// Shared shape validation for the sparse FC dispatcher.
+fn check_fc_sparse_shapes(
+    vals: &[u8],
+    idxs: &[u8],
+    scale: &[f32],
+    bias: &[f32],
+    xs: &[f32],
+    batch: usize,
+    out: &[f32],
+) {
+    assert!(batch > 0, "fc_batch_int4_sparse_into needs at least one lane");
+    debug_assert_eq!(xs.len() % batch, 0);
+    let nb = (xs.len() / batch).div_ceil(4);
+    debug_assert_eq!(vals.len(), bias.len() * nb);
+    debug_assert_eq!(idxs.len(), bias.len() * nb);
+    debug_assert_eq!(scale.len(), bias.len());
+    debug_assert_eq!(out.len(), batch * bias.len());
+}
+
+/// Ragged lane block of the sparse FC — per-lane scalar accumulation
+/// with the same per-element op order as the blocked paths (zero seed,
+/// blocks ascending, slot 0 then slot 1, affine finalize), shared by the
+/// scalar and SIMD kernels.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn fc_sparse_lane_edge(
+    row_v: &[u8],
+    row_i: &[u8],
+    scale_o: f32,
+    bias_o: f32,
+    xs: &[f32],
+    in_dim: usize,
+    out_dim: usize,
+    o: usize,
+    l: usize,
+    lanes: usize,
+    out: &mut [f32],
+) {
+    for c in 0..lanes {
+        let x = &xs[(l + c) * in_dim..][..in_dim];
+        let mut acc = 0.0f32;
+        for (b, (&v, &ix)) in row_v.iter().zip(row_i).enumerate() {
+            let ((i0, q0), (i1, q1)) = sparse4_slots(v, ix);
+            let base = b * 4;
+            acc += q0 * x[base + i0];
+            acc += q1 * x[base + i1];
+        }
+        out[(l + c) * out_dim + o] = bias_o + scale_o * acc;
+    }
+}
+
+/// Scalar (lane-blocked) 2:4 sparse FC — the reference path for
+/// [`fc_batch_int4_sparse_into`].
+#[allow(clippy::too_many_arguments)]
+pub fn fc_batch_int4_sparse_scalar_into(
+    vals: &[u8],
+    idxs: &[u8],
+    scale: &[f32],
+    bias: &[f32],
+    xs: &[f32],
+    batch: usize,
+    out: &mut [f32],
+) {
+    assert!(batch > 0, "fc_batch_int4_sparse_scalar_into needs at least one lane");
+    let out_dim = bias.len();
+    debug_assert_eq!(xs.len() % batch, 0);
+    let in_dim = xs.len() / batch;
+    let nb = in_dim.div_ceil(4);
+    debug_assert_eq!(vals.len(), out_dim * nb);
+    debug_assert_eq!(idxs.len(), out_dim * nb);
+    debug_assert_eq!(scale.len(), out_dim);
+    debug_assert_eq!(out.len(), batch * out_dim);
+    for o in 0..out_dim {
+        let row_v = &vals[o * nb..][..nb];
+        let row_i = &idxs[o * nb..][..nb];
+        let mut l = 0;
+        while l < batch {
+            let lanes = TILE_LANES.min(batch - l);
+            fc_sparse_lane_edge(
+                row_v, row_i, scale[o], bias[o], xs, in_dim, out_dim, o, l, lanes, out,
+            );
+            l += lanes;
+        }
+    }
+}
+
+/// Reference (naive unpacked) sparse FC — the bit-exactness oracle for
+/// [`fc_batch_int4_sparse_into`] on every ISA.
+#[allow(clippy::too_many_arguments)]
+pub fn fc_batch_int4_sparse_naive_into(
+    vals: &[u8],
+    idxs: &[u8],
+    scale: &[f32],
+    bias: &[f32],
+    xs: &[f32],
+    batch: usize,
+    out: &mut [f32],
+) {
+    assert!(batch > 0);
+    let out_dim = bias.len();
+    let in_dim = xs.len() / batch;
+    let nb = in_dim.div_ceil(4);
+    debug_assert_eq!(out.len(), batch * out_dim);
+    for lane in 0..batch {
+        let x = &xs[lane * in_dim..(lane + 1) * in_dim];
+        for o in 0..out_dim {
+            let mut acc = 0.0f32;
+            for b in 0..nb {
+                let ((i0, q0), (i1, q1)) = sparse4_slots(vals[o * nb + b], idxs[o * nb + b]);
+                acc += q0 * x[b * 4 + i0];
+                acc += q1 * x[b * 4 + i1];
+            }
+            out[lane * out_dim + o] = bias[o] + scale[o] * acc;
+        }
+    }
+}
+
+/// Packed-int4 causal temporal convolution, per-(channel, group) affine
+/// parameters over the flattened `[in_ch × kw]` tap axis, f32
+/// accumulate:
+///
+/// `y[o][m] = bias[o] + Σ_g scale[o][g] · (Σ_{j∈g} q[o][j]·x[j][m] − zp[o][g]·G[g][m])`
+///
+/// where `j = i·kw + k` is the flat tap index and `G[g][m]` the
+/// per-position per-group window sum, computed once per timestep and
+/// shared by every output channel. `tmp` holds both scratch regions:
+/// `groups × batch × width` of `G` followed by `batch × width` of the
+/// current group partial. Dispatched to the active ISA (the SIMD paths
+/// vectorize the width sweep), bit-identical (`==`) to
+/// [`conv_steps_int4_scalar_into`] under every ISA.
+#[allow(clippy::too_many_arguments)]
+pub fn conv_steps_int4_into(
+    packed: &[u8],
+    scale: &[f32],
+    zp: &[f32],
+    bias: &[f32],
+    ext: &[f32],
+    t_out: usize,
+    stride: usize,
+    batch: usize,
+    in_ch: usize,
+    out_ch: usize,
+    kw: usize,
+    width: usize,
+    tmp: &mut Vec<f32>,
+    out: &mut [f32],
+) {
+    match dispatch::active() {
+        #[cfg(target_arch = "x86_64")]
+        dispatch::KernelIsa::Avx2 => {
+            check_conv_int4_shapes(
+                packed, scale, zp, bias, ext, t_out, stride, batch, in_ch, kw, width, out,
+            );
+            unsafe {
+                simd::avx2::conv_steps_int4(
+                    packed, scale, zp, bias, ext, t_out, stride, batch, in_ch, out_ch, kw,
+                    width, tmp, out,
+                )
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        dispatch::KernelIsa::Neon => {
+            check_conv_int4_shapes(
+                packed, scale, zp, bias, ext, t_out, stride, batch, in_ch, kw, width, out,
+            );
+            unsafe {
+                simd::neon::conv_steps_int4(
+                    packed, scale, zp, bias, ext, t_out, stride, batch, in_ch, out_ch, kw,
+                    width, tmp, out,
+                )
+            }
+        }
+        _ => conv_steps_int4_scalar_into(
+            packed, scale, zp, bias, ext, t_out, stride, batch, in_ch, out_ch, kw, width, tmp,
+            out,
+        ),
+    }
+}
+
+/// Shared shape validation for the int4 conv dispatcher.
+#[allow(clippy::too_many_arguments)]
+fn check_conv_int4_shapes(
+    packed: &[u8],
+    scale: &[f32],
+    zp: &[f32],
+    bias: &[f32],
+    ext: &[f32],
+    t_out: usize,
+    stride: usize,
+    batch: usize,
+    in_ch: usize,
+    kw: usize,
+    width: usize,
+    out: &[f32],
+) {
+    assert!(batch > 0, "conv_steps_int4_into needs at least one lane");
+    let row_len = in_ch * kw;
+    let ng = row_len.div_ceil(INT4_GROUP);
+    debug_assert_eq!(packed.len(), bias.len() * row_len.div_ceil(2));
+    debug_assert_eq!(scale.len(), bias.len() * ng);
+    debug_assert_eq!(zp.len(), bias.len() * ng);
+    debug_assert_eq!(ext.len(), (kw - 1 + t_out * stride) * batch * in_ch * width);
+    debug_assert_eq!(out.len(), t_out * batch * bias.len() * width);
+}
+
+/// Scalar packed-int4 causal temporal convolution — the reference path
+/// for [`conv_steps_int4_into`].
+#[allow(clippy::too_many_arguments)]
+pub fn conv_steps_int4_scalar_into(
+    packed: &[u8],
+    scale: &[f32],
+    zp: &[f32],
+    bias: &[f32],
+    ext: &[f32],
+    t_out: usize,
+    stride: usize,
+    batch: usize,
+    in_ch: usize,
+    out_ch: usize,
+    kw: usize,
+    width: usize,
+    tmp: &mut Vec<f32>,
+    out: &mut [f32],
+) {
+    assert!(batch > 0, "conv_steps_int4_scalar_into needs at least one lane");
+    let d_in = in_ch * width;
+    let d_out = out_ch * width;
+    let in_block = batch * d_in;
+    let out_block = batch * d_out;
+    let row_len = in_ch * kw;
+    let ng = row_len.div_ceil(INT4_GROUP);
+    let stride_b = row_len.div_ceil(2);
+    let pos = batch * width;
+    debug_assert_eq!(packed.len(), out_ch * stride_b);
+    debug_assert_eq!(scale.len(), out_ch * ng);
+    debug_assert_eq!(zp.len(), out_ch * ng);
+    debug_assert_eq!(ext.len(), (kw - 1 + t_out * stride) * in_block);
+    debug_assert_eq!(out.len(), t_out * out_block);
+    for t in 0..t_out {
+        let out_t = &mut out[t * out_block..][..out_block];
+        let base = t * stride;
+        // Per-group window sums (shared across output channels) followed
+        // by the current group's partial accumulator.
+        tmp.clear();
+        tmp.resize((ng + 1) * pos, 0.0);
+        let (gsum, part) = tmp.split_at_mut(ng * pos);
+        for i in 0..in_ch {
+            for k in 0..kw {
+                let g = (i * kw + k) / INT4_GROUP;
+                let gs = &mut gsum[g * pos..][..pos];
+                let xblk = &ext[(base + k) * in_block..][..in_block];
+                for (ws, lane_in) in gs.chunks_exact_mut(width).zip(xblk.chunks_exact(d_in)) {
+                    let src = &lane_in[i * width..(i + 1) * width];
+                    for (s, x) in ws.iter_mut().zip(src) {
+                        *s += x;
+                    }
+                }
+            }
+        }
+        for o in 0..out_ch {
+            let row = &packed[o * stride_b..][..stride_b];
+            for lane_out in out_t.chunks_exact_mut(d_out) {
+                lane_out[o * width..(o + 1) * width].fill(bias[o]);
+            }
+            for g in 0..ng {
+                part.fill(0.0);
+                for j in g * INT4_GROUP..((g + 1) * INT4_GROUP).min(row_len) {
+                    let q = int4_code_at(row, j);
+                    if q == 0 {
+                        continue;
+                    }
+                    let wq = q as f32;
+                    let (i, k) = (j / kw, j % kw);
+                    let xblk = &ext[(base + k) * in_block..][..in_block];
+                    let lanes_in = xblk.chunks_exact(d_in);
+                    for (ps, lane_in) in part.chunks_exact_mut(width).zip(lanes_in) {
+                        let src = &lane_in[i * width..(i + 1) * width];
+                        for (p, x) in ps.iter_mut().zip(src) {
+                            *p += wq * x;
+                        }
+                    }
+                }
+                // Fold this group's affine contribution into the output.
+                let (s_g, z_g) = (scale[o * ng + g], zp[o * ng + g]);
+                let gs = &gsum[g * pos..][..pos];
+                for ((lane_out, ps), ws) in out_t
+                    .chunks_exact_mut(d_out)
+                    .zip(part.chunks_exact(width))
+                    .zip(gs.chunks_exact(width))
+                {
+                    let dst = &mut lane_out[o * width..(o + 1) * width];
+                    for ((v, p), w_) in dst.iter_mut().zip(ps).zip(ws) {
+                        *v += s_g * (p - z_g * w_);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Reference (naive unpacked) int4 conv — per-element decode with the
+/// same op order as the fused kernels. The bit-exactness oracle for
+/// [`conv_steps_int4_into`] on every ISA.
+#[allow(clippy::too_many_arguments)]
+pub fn conv_steps_int4_naive_into(
+    packed: &[u8],
+    scale: &[f32],
+    zp: &[f32],
+    bias: &[f32],
+    ext: &[f32],
+    t_out: usize,
+    stride: usize,
+    batch: usize,
+    in_ch: usize,
+    out_ch: usize,
+    kw: usize,
+    width: usize,
+    out: &mut [f32],
+) {
+    assert!(batch > 0);
+    let d_in = in_ch * width;
+    let d_out = out_ch * width;
+    let in_block = batch * d_in;
+    let out_block = batch * d_out;
+    let row_len = in_ch * kw;
+    let ng = row_len.div_ceil(INT4_GROUP);
+    let stride_b = row_len.div_ceil(2);
+    debug_assert_eq!(out.len(), t_out * out_block);
+    for t in 0..t_out {
+        let base = t * stride;
+        for lane in 0..batch {
+            for o in 0..out_ch {
+                let row = &packed[o * stride_b..][..stride_b];
+                for m in 0..width {
+                    let mut acc = bias[o];
+                    for g in 0..ng {
+                        let mut gacc = 0.0f32;
+                        let mut gs = 0.0f32;
+                        for j in g * INT4_GROUP..((g + 1) * INT4_GROUP).min(row_len) {
+                            let (i, k) = (j / kw, j % kw);
+                            let x = ext[(base + k) * in_block + lane * d_in + i * width + m];
+                            gs += x;
+                            let q = int4_code_at(row, j);
+                            if q != 0 {
+                                gacc += q as f32 * x;
+                            }
+                        }
+                        acc += scale[o * ng + g] * (gacc - zp[o * ng + g] * gs);
+                    }
+                    out[t * out_block + lane * d_out + o * width + m] = acc;
+                }
+            }
+        }
+    }
+}
+
+/// 2:4 structured-sparse int4 causal temporal convolution, per-channel
+/// symmetric scale over the flattened `[in_ch × kw]` tap axis:
+///
+/// `y[o][m] = bias[o] + scale[o] · Σ_b (q₀·x[4b+i₀][m] + q₁·x[4b+i₁][m])`
+///
+/// — a fixed 2 MACs per tap block with no per-element branching (padding
+/// slots carry `q = 0`). Dispatched to the active ISA (the SIMD paths
+/// vectorize the width sweep), bit-identical (`==`) to
+/// [`conv_steps_int4_sparse_scalar_into`] under every ISA.
+#[allow(clippy::too_many_arguments)]
+pub fn conv_steps_int4_sparse_into(
+    vals: &[u8],
+    idxs: &[u8],
+    scale: &[f32],
+    bias: &[f32],
+    ext: &[f32],
+    t_out: usize,
+    stride: usize,
+    batch: usize,
+    in_ch: usize,
+    out_ch: usize,
+    kw: usize,
+    width: usize,
+    out: &mut [f32],
+) {
+    match dispatch::active() {
+        #[cfg(target_arch = "x86_64")]
+        dispatch::KernelIsa::Avx2 => {
+            check_conv_sparse_shapes(
+                vals, idxs, scale, bias, ext, t_out, stride, batch, in_ch, kw, width, out,
+            );
+            unsafe {
+                simd::avx2::conv_steps_int4_sparse(
+                    vals, idxs, scale, bias, ext, t_out, stride, batch, in_ch, out_ch, kw,
+                    width, out,
+                )
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        dispatch::KernelIsa::Neon => {
+            check_conv_sparse_shapes(
+                vals, idxs, scale, bias, ext, t_out, stride, batch, in_ch, kw, width, out,
+            );
+            unsafe {
+                simd::neon::conv_steps_int4_sparse(
+                    vals, idxs, scale, bias, ext, t_out, stride, batch, in_ch, out_ch, kw,
+                    width, out,
+                )
+            }
+        }
+        _ => conv_steps_int4_sparse_scalar_into(
+            vals, idxs, scale, bias, ext, t_out, stride, batch, in_ch, out_ch, kw, width, out,
+        ),
+    }
+}
+
+/// Shared shape validation for the sparse conv dispatcher.
+#[allow(clippy::too_many_arguments)]
+fn check_conv_sparse_shapes(
+    vals: &[u8],
+    idxs: &[u8],
+    scale: &[f32],
+    bias: &[f32],
+    ext: &[f32],
+    t_out: usize,
+    stride: usize,
+    batch: usize,
+    in_ch: usize,
+    kw: usize,
+    width: usize,
+    out: &[f32],
+) {
+    assert!(batch > 0, "conv_steps_int4_sparse_into needs at least one lane");
+    let nb = (in_ch * kw).div_ceil(4);
+    debug_assert_eq!(vals.len(), bias.len() * nb);
+    debug_assert_eq!(idxs.len(), bias.len() * nb);
+    debug_assert_eq!(scale.len(), bias.len());
+    debug_assert_eq!(ext.len(), (kw - 1 + t_out * stride) * batch * in_ch * width);
+    debug_assert_eq!(out.len(), t_out * batch * bias.len() * width);
+}
+
+/// Scalar 2:4 sparse causal temporal convolution — the reference path
+/// for [`conv_steps_int4_sparse_into`].
+#[allow(clippy::too_many_arguments)]
+pub fn conv_steps_int4_sparse_scalar_into(
+    vals: &[u8],
+    idxs: &[u8],
+    scale: &[f32],
+    bias: &[f32],
+    ext: &[f32],
+    t_out: usize,
+    stride: usize,
+    batch: usize,
+    in_ch: usize,
+    out_ch: usize,
+    kw: usize,
+    width: usize,
+    out: &mut [f32],
+) {
+    assert!(batch > 0, "conv_steps_int4_sparse_scalar_into needs at least one lane");
+    let d_in = in_ch * width;
+    let d_out = out_ch * width;
+    let in_block = batch * d_in;
+    let out_block = batch * d_out;
+    let nb = (in_ch * kw).div_ceil(4);
+    debug_assert_eq!(vals.len(), out_ch * nb);
+    debug_assert_eq!(idxs.len(), out_ch * nb);
+    debug_assert_eq!(scale.len(), out_ch);
+    debug_assert_eq!(ext.len(), (kw - 1 + t_out * stride) * in_block);
+    debug_assert_eq!(out.len(), t_out * out_block);
+    for t in 0..t_out {
+        let out_t = &mut out[t * out_block..][..out_block];
+        let base = t * stride;
+        for o in 0..out_ch {
+            for lane_out in out_t.chunks_exact_mut(d_out) {
+                lane_out[o * width..(o + 1) * width].fill(0.0);
+            }
+            for b in 0..nb {
+                let ((i0, q0), (i1, q1)) = sparse4_slots(vals[o * nb + b], idxs[o * nb + b]);
+                for (slot_j, wq) in [(b * 4 + i0, q0), (b * 4 + i1, q1)] {
+                    let (i, k) = (slot_j / kw, slot_j % kw);
+                    let xblk = &ext[(base + k) * in_block..][..in_block];
+                    for (lane_out, lane_in) in
+                        out_t.chunks_exact_mut(d_out).zip(xblk.chunks_exact(d_in))
+                    {
+                        let dst = &mut lane_out[o * width..(o + 1) * width];
+                        let src = &lane_in[i * width..(i + 1) * width];
+                        for (v, x) in dst.iter_mut().zip(src) {
+                            *v += wq * x;
+                        }
+                    }
+                }
+            }
+            // Finalize: apply bias + symmetric scale.
+            for lane_out in out_t.chunks_exact_mut(d_out) {
+                let dst = &mut lane_out[o * width..(o + 1) * width];
+                for v in dst.iter_mut() {
+                    *v = bias[o] + scale[o] * *v;
+                }
+            }
+        }
+    }
+}
+
+/// Reference (naive unpacked) sparse conv — the bit-exactness oracle for
+/// [`conv_steps_int4_sparse_into`] on every ISA.
+#[allow(clippy::too_many_arguments)]
+pub fn conv_steps_int4_sparse_naive_into(
+    vals: &[u8],
+    idxs: &[u8],
+    scale: &[f32],
+    bias: &[f32],
+    ext: &[f32],
+    t_out: usize,
+    stride: usize,
+    batch: usize,
+    in_ch: usize,
+    out_ch: usize,
+    kw: usize,
+    width: usize,
+    out: &mut [f32],
+) {
+    assert!(batch > 0);
+    let d_in = in_ch * width;
+    let d_out = out_ch * width;
+    let in_block = batch * d_in;
+    let out_block = batch * d_out;
+    let nb = (in_ch * kw).div_ceil(4);
+    debug_assert_eq!(out.len(), t_out * out_block);
+    for t in 0..t_out {
+        let base = t * stride;
+        for lane in 0..batch {
+            for o in 0..out_ch {
+                for m in 0..width {
+                    let mut acc = 0.0f32;
+                    for b in 0..nb {
+                        let ((i0, q0), (i1, q1)) =
+                            sparse4_slots(vals[o * nb + b], idxs[o * nb + b]);
+                        for (slot_j, wq) in [(b * 4 + i0, q0), (b * 4 + i1, q1)] {
+                            let (i, k) = (slot_j / kw, slot_j % kw);
+                            acc += wq
+                                * ext[(base + k) * in_block + lane * d_in + i * width + m];
+                        }
+                    }
+                    out[t * out_block + lane * d_out + o * width + m] =
+                        bias[o] + scale[o] * acc;
+                }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -763,6 +1573,148 @@ mod tests {
                     "int8 fc elem {i}: {a} vs {b}"
                 );
             }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn int4_fc_is_bit_exact_vs_naive_oracle() {
+        use crate::am::quant::quantize_rows_int4;
+        prop::check("gemm-int4-fc-vs-naive", 50, |g| {
+            // Remainder-heavy shapes: odd widths, group-boundary crossers.
+            let in_dim = 1 + g.index(80);
+            let out_dim = 1 + g.index(16);
+            let batch = 1 + g.index(10);
+            let w = g.vec_of(in_dim * out_dim, |r| r.uniform(-1.5, 1.5));
+            let qw = quantize_rows_int4(&w, out_dim, in_dim);
+            let bias = g.vec_of(out_dim, |r| r.uniform(-1.0, 1.0));
+            let xs = g.vec_of(batch * in_dim, |r| r.uniform(-2.0, 2.0));
+            let mut gsum = Vec::new();
+            let mut fused = vec![0.0; batch * out_dim];
+            let mut naive = vec![0.0; batch * out_dim];
+            fc_batch_int4_into(
+                &qw.packed, &qw.scale, &qw.zp, &bias, &xs, batch, &mut gsum, &mut fused,
+            );
+            fc_batch_int4_naive_into(&qw.packed, &qw.scale, &qw.zp, &bias, &xs, batch, &mut naive);
+            crate::prop_assert!(fused == naive, "int4 FC diverged from naive oracle");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn int4_fc_tracks_dequantized_reference() {
+        use crate::am::quant::{dequantize_int4, quantize_rows_int4};
+        prop::check("gemm-int4-fc-vs-dequant", 30, |g| {
+            let in_dim = 1 + g.index(70);
+            let out_dim = 1 + g.index(12);
+            let batch = 1 + g.index(5);
+            let w = g.vec_of(in_dim * out_dim, |r| r.uniform(-1.0, 1.0));
+            let qw = quantize_rows_int4(&w, out_dim, in_dim);
+            let bias = g.vec_of(out_dim, |r| r.uniform(-1.0, 1.0));
+            let xs = g.vec_of(batch * in_dim, |r| r.uniform(-2.0, 2.0));
+            let mut gsum = Vec::new();
+            let mut fused = vec![0.0; batch * out_dim];
+            fc_batch_int4_into(
+                &qw.packed, &qw.scale, &qw.zp, &bias, &xs, batch, &mut gsum, &mut fused,
+            );
+            let deq: Vec<f32> = (0..out_dim * in_dim)
+                .map(|idx| dequantize_int4(&qw, idx / in_dim, idx % in_dim))
+                .collect();
+            let mut reference = vec![0.0; batch * out_dim];
+            fc_batch_naive_into(&deq, &bias, &xs, batch, &mut reference);
+            for (i, (a, b)) in fused.iter().zip(&reference).enumerate() {
+                let tol = 1e-3 * (1.0 + a.abs().max(b.abs()));
+                crate::prop_assert!((a - b).abs() <= tol, "int4 fc elem {i}: {a} vs {b}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sparse_fc_is_bit_exact_vs_naive_oracle() {
+        use crate::am::quant::prune_quantize_rows_2of4;
+        prop::check("gemm-sparse-fc-vs-naive", 50, |g| {
+            let in_dim = 1 + g.index(50); // includes ragged 2:4 tails
+            let out_dim = 1 + g.index(16);
+            let batch = 1 + g.index(10);
+            let w = g.vec_of(in_dim * out_dim, |r| r.uniform(-1.5, 1.5));
+            let qw = prune_quantize_rows_2of4(&w, out_dim, in_dim);
+            let bias = g.vec_of(out_dim, |r| r.uniform(-1.0, 1.0));
+            let xs = g.vec_of(batch * in_dim, |r| r.uniform(-2.0, 2.0));
+            let mut fused = vec![0.0; batch * out_dim];
+            let mut naive = vec![0.0; batch * out_dim];
+            fc_batch_int4_sparse_into(&qw.vals, &qw.idxs, &qw.scale, &bias, &xs, batch, &mut fused);
+            fc_batch_int4_sparse_naive_into(
+                &qw.vals, &qw.idxs, &qw.scale, &bias, &xs, batch, &mut naive,
+            );
+            crate::prop_assert!(fused == naive, "sparse FC diverged from naive oracle");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn int4_conv_is_bit_exact_vs_naive_oracle() {
+        use crate::am::quant::quantize_rows_int4;
+        prop::check("gemm-int4-conv-vs-naive", 30, |g| {
+            let in_ch = 1 + g.index(4);
+            let out_ch = 1 + g.index(3);
+            let kw = 1 + g.index(9); // in_ch·kw crosses the 32-col group
+            let width = 1 + g.index(8);
+            let batch = 1 + g.index(5);
+            let stride = 1 + g.index(2);
+            let t_out = 1 + g.index(3);
+            let d_in = in_ch * width;
+            let in_block = batch * d_in;
+            let w = g.vec_of(out_ch * in_ch * kw, |r| r.uniform(-1.0, 1.0));
+            let qw = quantize_rows_int4(&w, out_ch, in_ch * kw);
+            let bias = g.vec_of(out_ch, |r| r.uniform(-0.5, 0.5));
+            let ext = g.vec_of((kw - 1 + t_out * stride) * in_block, |r| r.uniform(-2.0, 2.0));
+            let out_block = batch * out_ch * width;
+            let mut tmp = Vec::new();
+            let mut fused = vec![0.0; t_out * out_block];
+            let mut naive = vec![0.0; t_out * out_block];
+            conv_steps_int4_into(
+                &qw.packed, &qw.scale, &qw.zp, &bias, &ext, t_out, stride, batch, in_ch,
+                out_ch, kw, width, &mut tmp, &mut fused,
+            );
+            conv_steps_int4_naive_into(
+                &qw.packed, &qw.scale, &qw.zp, &bias, &ext, t_out, stride, batch, in_ch,
+                out_ch, kw, width, &mut naive,
+            );
+            crate::prop_assert!(fused == naive, "int4 conv diverged from naive oracle");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sparse_conv_is_bit_exact_vs_naive_oracle() {
+        use crate::am::quant::prune_quantize_rows_2of4;
+        prop::check("gemm-sparse-conv-vs-naive", 30, |g| {
+            let in_ch = 1 + g.index(4);
+            let out_ch = 1 + g.index(3);
+            let kw = 1 + g.index(7); // in_ch·kw includes ragged 2:4 tails
+            let width = 1 + g.index(8);
+            let batch = 1 + g.index(5);
+            let stride = 1 + g.index(2);
+            let t_out = 1 + g.index(3);
+            let d_in = in_ch * width;
+            let in_block = batch * d_in;
+            let w = g.vec_of(out_ch * in_ch * kw, |r| r.uniform(-1.0, 1.0));
+            let qw = prune_quantize_rows_2of4(&w, out_ch, in_ch * kw);
+            let bias = g.vec_of(out_ch, |r| r.uniform(-0.5, 0.5));
+            let ext = g.vec_of((kw - 1 + t_out * stride) * in_block, |r| r.uniform(-2.0, 2.0));
+            let out_block = batch * out_ch * width;
+            let mut fused = vec![0.0; t_out * out_block];
+            let mut naive = vec![0.0; t_out * out_block];
+            conv_steps_int4_sparse_into(
+                &qw.vals, &qw.idxs, &qw.scale, &bias, &ext, t_out, stride, batch, in_ch,
+                out_ch, kw, width, &mut fused,
+            );
+            conv_steps_int4_sparse_naive_into(
+                &qw.vals, &qw.idxs, &qw.scale, &bias, &ext, t_out, stride, batch, in_ch,
+                out_ch, kw, width, &mut naive,
+            );
+            crate::prop_assert!(fused == naive, "sparse conv diverged from naive oracle");
             Ok(())
         });
     }

@@ -21,6 +21,7 @@ pub mod avx2 {
     //! runtime; [`super::super::dispatch`] only routes here after
     //! `is_x86_feature_detected!("avx2")` succeeded.
 
+    use crate::am::quant::INT4_GROUP;
     use std::arch::x86_64::*;
 
     /// f32 lanes per 256-bit vector.
@@ -349,6 +350,310 @@ pub mod avx2 {
             }
         }
     }
+
+    /// `dst[m] += scale * (part[m] - zp * ws[m])` — the int4 conv's
+    /// per-group affine fold; per element the same mul, sub, mul, add
+    /// sequence as the scalar kernel.
+    #[target_feature(enable = "avx2")]
+    unsafe fn group_fold(dst: &mut [f32], part: &[f32], ws: &[f32], scale: f32, zp: f32) {
+        let n = dst.len();
+        let sv = _mm256_set1_ps(scale);
+        let zv = _mm256_set1_ps(zp);
+        let mut m = 0;
+        while m + LANES <= n {
+            let v = _mm256_loadu_ps(dst.as_ptr().add(m));
+            let p = _mm256_loadu_ps(part.as_ptr().add(m));
+            let s = _mm256_loadu_ps(ws.as_ptr().add(m));
+            let t = _mm256_sub_ps(p, _mm256_mul_ps(zv, s));
+            _mm256_storeu_ps(dst.as_mut_ptr().add(m), _mm256_add_ps(v, _mm256_mul_ps(sv, t)));
+            m += LANES;
+        }
+        while m < n {
+            dst[m] += scale * (part[m] - zp * ws[m]);
+            m += 1;
+        }
+    }
+
+    /// `dst[m] = bias + scale * dst[m]` — the sparse conv finalize; per
+    /// element the scalar kernel's mul-then-add sequence.
+    #[target_feature(enable = "avx2")]
+    unsafe fn scale_bias(dst: &mut [f32], bias: f32, scale: f32) {
+        let n = dst.len();
+        let bv = _mm256_set1_ps(bias);
+        let sv = _mm256_set1_ps(scale);
+        let mut m = 0;
+        while m + LANES <= n {
+            let v = _mm256_loadu_ps(dst.as_ptr().add(m));
+            _mm256_storeu_ps(dst.as_mut_ptr().add(m), _mm256_add_ps(bv, _mm256_mul_ps(sv, v)));
+            m += LANES;
+        }
+        while m < n {
+            dst[m] = bias + scale * dst[m];
+            m += 1;
+        }
+    }
+
+    /// AVX2 [`super::super::fc_batch_int4_into`] body: per output row,
+    /// 8-lane accumulator blocks over the grouped `k` loop with the
+    /// per-group affine fold vectorized across lanes; the per-(lane,
+    /// group) `Σx` pre-pass is the shared scalar helper.
+    ///
+    /// # Safety
+    /// AVX2 must be available on the executing CPU.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn fc_batch_int4(
+        packed: &[u8],
+        scale: &[f32],
+        zp: &[f32],
+        bias: &[f32],
+        xs: &[f32],
+        batch: usize,
+        gsum: &mut Vec<f32>,
+        out: &mut [f32],
+    ) {
+        let out_dim = bias.len();
+        let in_dim = xs.len() / batch;
+        let ng = in_dim.div_ceil(INT4_GROUP);
+        let stride = in_dim.div_ceil(2);
+        super::super::fc_int4_gsums(xs, batch, in_dim, ng, gsum);
+        for o in 0..out_dim {
+            let row = &packed[o * stride..][..stride];
+            let scale_o = &scale[o * ng..][..ng];
+            let zp_o = &zp[o * ng..][..ng];
+            let mut l = 0;
+            while l + LANES <= batch {
+                let mut acc = _mm256_setzero_ps();
+                for g in 0..ng {
+                    let k_end = ((g + 1) * INT4_GROUP).min(in_dim);
+                    let mut gacc = _mm256_setzero_ps();
+                    for k in g * INT4_GROUP..k_end {
+                        let q = super::super::int4_code_at(row, k);
+                        if q == 0 {
+                            continue;
+                        }
+                        let wq = _mm256_set1_ps(q as f32);
+                        let xg = gather(xs, l * in_dim + k, in_dim);
+                        gacc = _mm256_add_ps(gacc, _mm256_mul_ps(wq, xg));
+                    }
+                    let gs = gather(gsum, l * ng + g, ng);
+                    let t = _mm256_sub_ps(gacc, _mm256_mul_ps(_mm256_set1_ps(zp_o[g]), gs));
+                    acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_set1_ps(scale_o[g]), t));
+                }
+                let mut buf = [0.0f32; LANES];
+                _mm256_storeu_ps(buf.as_mut_ptr(), _mm256_add_ps(_mm256_set1_ps(bias[o]), acc));
+                for (c, v) in buf.iter().enumerate() {
+                    out[(l + c) * out_dim + o] = *v;
+                }
+                l += LANES;
+            }
+            if l < batch {
+                super::super::fc_int4_lane_edge(
+                    row,
+                    scale_o,
+                    zp_o,
+                    bias[o],
+                    xs,
+                    gsum,
+                    in_dim,
+                    out_dim,
+                    ng,
+                    o,
+                    l,
+                    batch - l,
+                    out,
+                );
+            }
+        }
+    }
+
+    /// AVX2 [`super::super::fc_batch_int4_sparse_into`] body: 8-lane
+    /// accumulator blocks over the fixed 2-MACs-per-block stream, branch
+    /// free like the scalar kernel.
+    ///
+    /// # Safety
+    /// AVX2 must be available on the executing CPU.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn fc_batch_int4_sparse(
+        vals: &[u8],
+        idxs: &[u8],
+        scale: &[f32],
+        bias: &[f32],
+        xs: &[f32],
+        batch: usize,
+        out: &mut [f32],
+    ) {
+        let out_dim = bias.len();
+        let in_dim = xs.len() / batch;
+        let nb = in_dim.div_ceil(4);
+        for o in 0..out_dim {
+            let row_v = &vals[o * nb..][..nb];
+            let row_i = &idxs[o * nb..][..nb];
+            let mut l = 0;
+            while l + LANES <= batch {
+                let mut acc = _mm256_setzero_ps();
+                for (b, (&v, &ix)) in row_v.iter().zip(row_i).enumerate() {
+                    let ((i0, q0), (i1, q1)) = super::super::sparse4_slots(v, ix);
+                    let base = b * 4;
+                    let x0 = gather(xs, l * in_dim + base + i0, in_dim);
+                    acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_set1_ps(q0), x0));
+                    let x1 = gather(xs, l * in_dim + base + i1, in_dim);
+                    acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_set1_ps(q1), x1));
+                }
+                let bv = _mm256_set1_ps(bias[o]);
+                let sv = _mm256_set1_ps(scale[o]);
+                let mut buf = [0.0f32; LANES];
+                _mm256_storeu_ps(buf.as_mut_ptr(), _mm256_add_ps(bv, _mm256_mul_ps(sv, acc)));
+                for (c, v) in buf.iter().enumerate() {
+                    out[(l + c) * out_dim + o] = *v;
+                }
+                l += LANES;
+            }
+            if l < batch {
+                super::super::fc_sparse_lane_edge(
+                    row_v, row_i, scale[o], bias[o], xs, in_dim, out_dim, o, l, batch - l, out,
+                );
+            }
+        }
+    }
+
+    /// AVX2 [`super::super::conv_steps_int4_into`] body: identical loop
+    /// nest to the scalar kernel (group window sums, per-group partial,
+    /// affine fold), with every width sweep vectorized.
+    ///
+    /// # Safety
+    /// AVX2 must be available on the executing CPU.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn conv_steps_int4(
+        packed: &[u8],
+        scale: &[f32],
+        zp: &[f32],
+        bias: &[f32],
+        ext: &[f32],
+        t_out: usize,
+        stride: usize,
+        batch: usize,
+        in_ch: usize,
+        out_ch: usize,
+        kw: usize,
+        width: usize,
+        tmp: &mut Vec<f32>,
+        out: &mut [f32],
+    ) {
+        let d_in = in_ch * width;
+        let d_out = out_ch * width;
+        let in_block = batch * d_in;
+        let out_block = batch * d_out;
+        let row_len = in_ch * kw;
+        let ng = row_len.div_ceil(INT4_GROUP);
+        let stride_b = row_len.div_ceil(2);
+        let pos = batch * width;
+        for t in 0..t_out {
+            let out_t = &mut out[t * out_block..][..out_block];
+            let base = t * stride;
+            tmp.clear();
+            tmp.resize((ng + 1) * pos, 0.0);
+            let (gsum, part) = tmp.split_at_mut(ng * pos);
+            for i in 0..in_ch {
+                for k in 0..kw {
+                    let g = (i * kw + k) / INT4_GROUP;
+                    let gs = &mut gsum[g * pos..][..pos];
+                    let xblk = &ext[(base + k) * in_block..][..in_block];
+                    for (ws, lane_in) in gs.chunks_exact_mut(width).zip(xblk.chunks_exact(d_in)) {
+                        add_assign(ws, &lane_in[i * width..(i + 1) * width]);
+                    }
+                }
+            }
+            for o in 0..out_ch {
+                let row = &packed[o * stride_b..][..stride_b];
+                for lane_out in out_t.chunks_exact_mut(d_out) {
+                    lane_out[o * width..(o + 1) * width].fill(bias[o]);
+                }
+                for g in 0..ng {
+                    part.fill(0.0);
+                    for j in g * INT4_GROUP..((g + 1) * INT4_GROUP).min(row_len) {
+                        let q = super::super::int4_code_at(row, j);
+                        if q == 0 {
+                            continue;
+                        }
+                        let wq = q as f32;
+                        let (i, k) = (j / kw, j % kw);
+                        let xblk = &ext[(base + k) * in_block..][..in_block];
+                        let lanes_in = xblk.chunks_exact(d_in);
+                        for (ps, lane_in) in part.chunks_exact_mut(width).zip(lanes_in) {
+                            axpy(ps, &lane_in[i * width..(i + 1) * width], wq);
+                        }
+                    }
+                    let (s_g, z_g) = (scale[o * ng + g], zp[o * ng + g]);
+                    let gs = &gsum[g * pos..][..pos];
+                    for ((lane_out, ps), ws) in out_t
+                        .chunks_exact_mut(d_out)
+                        .zip(part.chunks_exact(width))
+                        .zip(gs.chunks_exact(width))
+                    {
+                        group_fold(&mut lane_out[o * width..(o + 1) * width], ps, ws, s_g, z_g);
+                    }
+                }
+            }
+        }
+    }
+
+    /// AVX2 [`super::super::conv_steps_int4_sparse_into`] body: identical
+    /// branch-free block loop to the scalar kernel, width sweeps
+    /// vectorized.
+    ///
+    /// # Safety
+    /// AVX2 must be available on the executing CPU.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn conv_steps_int4_sparse(
+        vals: &[u8],
+        idxs: &[u8],
+        scale: &[f32],
+        bias: &[f32],
+        ext: &[f32],
+        t_out: usize,
+        stride: usize,
+        batch: usize,
+        in_ch: usize,
+        out_ch: usize,
+        kw: usize,
+        width: usize,
+        out: &mut [f32],
+    ) {
+        let d_in = in_ch * width;
+        let d_out = out_ch * width;
+        let in_block = batch * d_in;
+        let out_block = batch * d_out;
+        let nb = (in_ch * kw).div_ceil(4);
+        for t in 0..t_out {
+            let out_t = &mut out[t * out_block..][..out_block];
+            let base = t * stride;
+            for o in 0..out_ch {
+                for lane_out in out_t.chunks_exact_mut(d_out) {
+                    lane_out[o * width..(o + 1) * width].fill(0.0);
+                }
+                for b in 0..nb {
+                    let ((i0, q0), (i1, q1)) =
+                        super::super::sparse4_slots(vals[o * nb + b], idxs[o * nb + b]);
+                    for (slot_j, wq) in [(b * 4 + i0, q0), (b * 4 + i1, q1)] {
+                        let (i, k) = (slot_j / kw, slot_j % kw);
+                        let xblk = &ext[(base + k) * in_block..][..in_block];
+                        for (lane_out, lane_in) in
+                            out_t.chunks_exact_mut(d_out).zip(xblk.chunks_exact(d_in))
+                        {
+                            axpy(
+                                &mut lane_out[o * width..(o + 1) * width],
+                                &lane_in[i * width..(i + 1) * width],
+                                wq,
+                            );
+                        }
+                    }
+                }
+                for lane_out in out_t.chunks_exact_mut(d_out) {
+                    scale_bias(&mut lane_out[o * width..(o + 1) * width], bias[o], scale[o]);
+                }
+            }
+        }
+    }
 }
 
 #[cfg(target_arch = "aarch64")]
@@ -357,6 +662,7 @@ pub mod neon {
     //! bit-exactness strategy (independent outputs only, separate
     //! mul + add, scalar tails).
 
+    use crate::am::quant::INT4_GROUP;
     use std::arch::aarch64::*;
 
     /// f32 lanes per 128-bit vector.
@@ -670,6 +976,304 @@ pub mod neon {
                 for (lane_out, ws) in out_t.chunks_exact_mut(d_out).zip(wsum.chunks_exact(width))
                 {
                     affine(&mut lane_out[o * width..(o + 1) * width], ws, bias[o], scale[o], zp[o]);
+                }
+            }
+        }
+    }
+
+    /// `dst[m] += scale * (part[m] - zp * ws[m])` — the int4 conv's
+    /// per-group affine fold, scalar mul/sub/mul/add order per element.
+    #[target_feature(enable = "neon")]
+    unsafe fn group_fold(dst: &mut [f32], part: &[f32], ws: &[f32], scale: f32, zp: f32) {
+        let n = dst.len();
+        let sv = vdupq_n_f32(scale);
+        let zv = vdupq_n_f32(zp);
+        let mut m = 0;
+        while m + LANES <= n {
+            let v = vld1q_f32(dst.as_ptr().add(m));
+            let p = vld1q_f32(part.as_ptr().add(m));
+            let s = vld1q_f32(ws.as_ptr().add(m));
+            let t = vsubq_f32(p, vmulq_f32(zv, s));
+            vst1q_f32(dst.as_mut_ptr().add(m), vaddq_f32(v, vmulq_f32(sv, t)));
+            m += LANES;
+        }
+        while m < n {
+            dst[m] += scale * (part[m] - zp * ws[m]);
+            m += 1;
+        }
+    }
+
+    /// `dst[m] = bias + scale * dst[m]` — the sparse conv finalize,
+    /// scalar mul-then-add order per element.
+    #[target_feature(enable = "neon")]
+    unsafe fn scale_bias(dst: &mut [f32], bias: f32, scale: f32) {
+        let n = dst.len();
+        let bv = vdupq_n_f32(bias);
+        let sv = vdupq_n_f32(scale);
+        let mut m = 0;
+        while m + LANES <= n {
+            let v = vld1q_f32(dst.as_ptr().add(m));
+            vst1q_f32(dst.as_mut_ptr().add(m), vaddq_f32(bv, vmulq_f32(sv, v)));
+            m += LANES;
+        }
+        while m < n {
+            dst[m] = bias + scale * dst[m];
+            m += 1;
+        }
+    }
+
+    /// NEON [`super::super::fc_batch_int4_into`] body — the 4-lane
+    /// mirror of the AVX2 kernel.
+    ///
+    /// # Safety
+    /// NEON must be available on the executing CPU.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn fc_batch_int4(
+        packed: &[u8],
+        scale: &[f32],
+        zp: &[f32],
+        bias: &[f32],
+        xs: &[f32],
+        batch: usize,
+        gsum: &mut Vec<f32>,
+        out: &mut [f32],
+    ) {
+        let out_dim = bias.len();
+        let in_dim = xs.len() / batch;
+        let ng = in_dim.div_ceil(INT4_GROUP);
+        let stride = in_dim.div_ceil(2);
+        super::super::fc_int4_gsums(xs, batch, in_dim, ng, gsum);
+        for o in 0..out_dim {
+            let row = &packed[o * stride..][..stride];
+            let scale_o = &scale[o * ng..][..ng];
+            let zp_o = &zp[o * ng..][..ng];
+            let mut l = 0;
+            while l + LANES <= batch {
+                let mut acc = vdupq_n_f32(0.0);
+                for g in 0..ng {
+                    let k_end = ((g + 1) * INT4_GROUP).min(in_dim);
+                    let mut gacc = vdupq_n_f32(0.0);
+                    for k in g * INT4_GROUP..k_end {
+                        let q = super::super::int4_code_at(row, k);
+                        if q == 0 {
+                            continue;
+                        }
+                        let wq = vdupq_n_f32(q as f32);
+                        let xg = gather(xs, l * in_dim + k, in_dim);
+                        gacc = vaddq_f32(gacc, vmulq_f32(wq, xg));
+                    }
+                    let gs = gather(gsum, l * ng + g, ng);
+                    let t = vsubq_f32(gacc, vmulq_f32(vdupq_n_f32(zp_o[g]), gs));
+                    acc = vaddq_f32(acc, vmulq_f32(vdupq_n_f32(scale_o[g]), t));
+                }
+                let mut buf = [0.0f32; LANES];
+                vst1q_f32(buf.as_mut_ptr(), vaddq_f32(vdupq_n_f32(bias[o]), acc));
+                for (c, v) in buf.iter().enumerate() {
+                    out[(l + c) * out_dim + o] = *v;
+                }
+                l += LANES;
+            }
+            if l < batch {
+                super::super::fc_int4_lane_edge(
+                    row,
+                    scale_o,
+                    zp_o,
+                    bias[o],
+                    xs,
+                    gsum,
+                    in_dim,
+                    out_dim,
+                    ng,
+                    o,
+                    l,
+                    batch - l,
+                    out,
+                );
+            }
+        }
+    }
+
+    /// NEON [`super::super::fc_batch_int4_sparse_into`] body — the
+    /// 4-lane mirror of the AVX2 kernel.
+    ///
+    /// # Safety
+    /// NEON must be available on the executing CPU.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn fc_batch_int4_sparse(
+        vals: &[u8],
+        idxs: &[u8],
+        scale: &[f32],
+        bias: &[f32],
+        xs: &[f32],
+        batch: usize,
+        out: &mut [f32],
+    ) {
+        let out_dim = bias.len();
+        let in_dim = xs.len() / batch;
+        let nb = in_dim.div_ceil(4);
+        for o in 0..out_dim {
+            let row_v = &vals[o * nb..][..nb];
+            let row_i = &idxs[o * nb..][..nb];
+            let mut l = 0;
+            while l + LANES <= batch {
+                let mut acc = vdupq_n_f32(0.0);
+                for (b, (&v, &ix)) in row_v.iter().zip(row_i).enumerate() {
+                    let ((i0, q0), (i1, q1)) = super::super::sparse4_slots(v, ix);
+                    let base = b * 4;
+                    let x0 = gather(xs, l * in_dim + base + i0, in_dim);
+                    acc = vaddq_f32(acc, vmulq_f32(vdupq_n_f32(q0), x0));
+                    let x1 = gather(xs, l * in_dim + base + i1, in_dim);
+                    acc = vaddq_f32(acc, vmulq_f32(vdupq_n_f32(q1), x1));
+                }
+                let bv = vdupq_n_f32(bias[o]);
+                let sv = vdupq_n_f32(scale[o]);
+                let mut buf = [0.0f32; LANES];
+                vst1q_f32(buf.as_mut_ptr(), vaddq_f32(bv, vmulq_f32(sv, acc)));
+                for (c, v) in buf.iter().enumerate() {
+                    out[(l + c) * out_dim + o] = *v;
+                }
+                l += LANES;
+            }
+            if l < batch {
+                super::super::fc_sparse_lane_edge(
+                    row_v, row_i, scale[o], bias[o], xs, in_dim, out_dim, o, l, batch - l, out,
+                );
+            }
+        }
+    }
+
+    /// NEON [`super::super::conv_steps_int4_into`] body — the 4-lane
+    /// mirror of the AVX2 kernel.
+    ///
+    /// # Safety
+    /// NEON must be available on the executing CPU.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn conv_steps_int4(
+        packed: &[u8],
+        scale: &[f32],
+        zp: &[f32],
+        bias: &[f32],
+        ext: &[f32],
+        t_out: usize,
+        stride: usize,
+        batch: usize,
+        in_ch: usize,
+        out_ch: usize,
+        kw: usize,
+        width: usize,
+        tmp: &mut Vec<f32>,
+        out: &mut [f32],
+    ) {
+        let d_in = in_ch * width;
+        let d_out = out_ch * width;
+        let in_block = batch * d_in;
+        let out_block = batch * d_out;
+        let row_len = in_ch * kw;
+        let ng = row_len.div_ceil(INT4_GROUP);
+        let stride_b = row_len.div_ceil(2);
+        let pos = batch * width;
+        for t in 0..t_out {
+            let out_t = &mut out[t * out_block..][..out_block];
+            let base = t * stride;
+            tmp.clear();
+            tmp.resize((ng + 1) * pos, 0.0);
+            let (gsum, part) = tmp.split_at_mut(ng * pos);
+            for i in 0..in_ch {
+                for k in 0..kw {
+                    let g = (i * kw + k) / INT4_GROUP;
+                    let gs = &mut gsum[g * pos..][..pos];
+                    let xblk = &ext[(base + k) * in_block..][..in_block];
+                    for (ws, lane_in) in gs.chunks_exact_mut(width).zip(xblk.chunks_exact(d_in)) {
+                        add_assign(ws, &lane_in[i * width..(i + 1) * width]);
+                    }
+                }
+            }
+            for o in 0..out_ch {
+                let row = &packed[o * stride_b..][..stride_b];
+                for lane_out in out_t.chunks_exact_mut(d_out) {
+                    lane_out[o * width..(o + 1) * width].fill(bias[o]);
+                }
+                for g in 0..ng {
+                    part.fill(0.0);
+                    for j in g * INT4_GROUP..((g + 1) * INT4_GROUP).min(row_len) {
+                        let q = super::super::int4_code_at(row, j);
+                        if q == 0 {
+                            continue;
+                        }
+                        let wq = q as f32;
+                        let (i, k) = (j / kw, j % kw);
+                        let xblk = &ext[(base + k) * in_block..][..in_block];
+                        let lanes_in = xblk.chunks_exact(d_in);
+                        for (ps, lane_in) in part.chunks_exact_mut(width).zip(lanes_in) {
+                            axpy(ps, &lane_in[i * width..(i + 1) * width], wq);
+                        }
+                    }
+                    let (s_g, z_g) = (scale[o * ng + g], zp[o * ng + g]);
+                    let gs = &gsum[g * pos..][..pos];
+                    for ((lane_out, ps), ws) in out_t
+                        .chunks_exact_mut(d_out)
+                        .zip(part.chunks_exact(width))
+                        .zip(gs.chunks_exact(width))
+                    {
+                        group_fold(&mut lane_out[o * width..(o + 1) * width], ps, ws, s_g, z_g);
+                    }
+                }
+            }
+        }
+    }
+
+    /// NEON [`super::super::conv_steps_int4_sparse_into`] body — the
+    /// 4-lane mirror of the AVX2 kernel.
+    ///
+    /// # Safety
+    /// NEON must be available on the executing CPU.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn conv_steps_int4_sparse(
+        vals: &[u8],
+        idxs: &[u8],
+        scale: &[f32],
+        bias: &[f32],
+        ext: &[f32],
+        t_out: usize,
+        stride: usize,
+        batch: usize,
+        in_ch: usize,
+        out_ch: usize,
+        kw: usize,
+        width: usize,
+        out: &mut [f32],
+    ) {
+        let d_in = in_ch * width;
+        let d_out = out_ch * width;
+        let in_block = batch * d_in;
+        let out_block = batch * d_out;
+        let nb = (in_ch * kw).div_ceil(4);
+        for t in 0..t_out {
+            let out_t = &mut out[t * out_block..][..out_block];
+            let base = t * stride;
+            for o in 0..out_ch {
+                for lane_out in out_t.chunks_exact_mut(d_out) {
+                    lane_out[o * width..(o + 1) * width].fill(0.0);
+                }
+                for b in 0..nb {
+                    let ((i0, q0), (i1, q1)) =
+                        super::super::sparse4_slots(vals[o * nb + b], idxs[o * nb + b]);
+                    for (slot_j, wq) in [(b * 4 + i0, q0), (b * 4 + i1, q1)] {
+                        let (i, k) = (slot_j / kw, slot_j % kw);
+                        let xblk = &ext[(base + k) * in_block..][..in_block];
+                        for (lane_out, lane_in) in
+                            out_t.chunks_exact_mut(d_out).zip(xblk.chunks_exact(d_in))
+                        {
+                            axpy(
+                                &mut lane_out[o * width..(o + 1) * width],
+                                &lane_in[i * width..(i + 1) * width],
+                                wq,
+                            );
+                        }
+                    }
+                }
+                for lane_out in out_t.chunks_exact_mut(d_out) {
+                    scale_bias(&mut lane_out[o * width..(o + 1) * width], bias[o], scale[o]);
                 }
             }
         }

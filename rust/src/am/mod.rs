@@ -1,14 +1,16 @@
 //! Acoustic model: native TDS inference (streaming + offline), weight
-//! loading, int8 quantization and the compute kernels it is built from
+//! loading, sub-f32 weight quantization (int8, packed int4, 2:4
+//! structured-sparse int4) and the compute kernels it is built from
 //! (§2.2, §3.4, §4.2).
 //!
 //! Layering: [`gemm`] holds the register-blocked micro-kernels (f32 and
-//! int8) and their runtime-dispatched AVX2/NEON SIMD variants
-//! ([`gemm::dispatch`] picks the ISA once per process; every ISA is
-//! bit-identical), [`tds`] the streaming step driver and scratch arena
-//! shared by [`TdsModel`] (f32) and [`quant::QuantizedTdsModel`] (int8
-//! weights), and [`ops`] the naive reference primitives the tiled
-//! kernels are verified bit-exact against.
+//! every quantized format) and their runtime-dispatched AVX2/NEON SIMD
+//! variants ([`gemm::dispatch`] picks the ISA once per process; every
+//! ISA is bit-identical), [`tds`] the streaming step driver and scratch
+//! arena shared by [`TdsModel`] (f32) and [`quant::QuantizedTdsModel`]
+//! (quantized weights, uniform or mixed per layer), and [`ops`] the
+//! naive reference primitives the tiled kernels are verified bit-exact
+//! against.
 
 pub mod gemm;
 pub mod ops;
@@ -16,5 +18,5 @@ pub mod quant;
 pub mod tds;
 
 pub use gemm::dispatch::KernelIsa;
-pub use quant::QuantizedTdsModel;
+pub use quant::{Int4Weights, QuantizedTdsModel, SparseInt4Weights};
 pub use tds::{LaneStates, Scratch, TdsModel, TdsState};

@@ -24,8 +24,40 @@
 //! [`INT8_MAX_ROW_REL_ERR`], asserted by `tests/quant_parity.rs`.
 //! Activations, biases, layer-norm parameters and all accumulations stay
 //! f32, matching the hardware's f32 special-function path.
+//!
+//! # Below int8
+//!
+//! Two further weight formats halve (or better) the int8 footprint; both
+//! keep f32 accumulation and the bit-exact-across-ISAs property:
+//!
+//! **Packed int4** ([`Int4Weights`]): two weights per byte, affine
+//! parameters per *group* of [`INT4_GROUP`] consecutive columns instead
+//! of per row (16 levels need a tighter range to stay accurate):
+//!
+//! ```text
+//!   per (row, group): lo = min∧0, hi = max∨0, scale = (hi−lo)/15
+//!   zp  = round(−8 − lo/scale)
+//!   q_i = clamp(round(w_i/scale) + zp, −8, 7), stored as (q_i+8) nibble
+//! ```
+//!
+//! Even columns sit in the **low** nibble. Error ≤ `scale/2`, i.e. at
+//! most [`INT4_MAX_GROUP_REL_ERR`] (= 1/15) of the *group's*
+//! largest-magnitude weight.
+//!
+//! **2:4 structured-sparse int4** ([`SparseInt4Weights`]): per 4-column
+//! block the 2 largest-magnitude weights survive (magnitude pruning,
+//! ties to the lower index); each block stores one byte of two 4-bit
+//! values and one byte of two 2-bit in-block indices — 12 bits per 4
+//! weights, with a fixed 2 MACs/block the kernels execute without any
+//! per-element branching. Values are *symmetric* per row
+//! (`scale = max|kept|/7`, `q = clamp(round(w/scale), −7, 7)`, stored as
+//! `q+8`), so pruned weights dequantize to exactly 0.0 and kept weights
+//! err by at most [`SPARSE4_MAX_ROW_REL_ERR`] (= 1/14) of the row's
+//! largest kept magnitude. The pruning error itself (dropping the 2
+//! smallest of each 4) is unbounded pointwise and is what the
+//! compile-side calibration pass budgets against measured WER.
 
-use crate::config::{Layer, ModelConfig, Precision};
+use crate::config::{Layer, ModelConfig, Precision, PrecisionMap};
 use anyhow::Result;
 
 use super::tds::{KernelWeights, LaneStates, Scratch, TdsModel, TdsState};
@@ -72,19 +104,231 @@ pub fn dequantize(qw: &QuantizedWeights, row: usize, cols: usize, col: usize) ->
     (qw.q[row * cols + col] as f32 - qw.zp[row]) * qw.scale[row]
 }
 
-/// Weights for one layer of the quantized model. Conv/FC weights are
-/// int8; biases and LayerNorm parameters stay f32 (they are a vanishing
+/// Columns per int4 quantization group: each group of this many
+/// consecutive columns in a row shares one scale/zero-point pair.
+pub const INT4_GROUP: usize = 32;
+
+/// Documented per-group relative error bound for packed int4: for every
+/// weight `|dequant(quant(w)) − w| ≤ INT4_MAX_GROUP_REL_ERR · max|group|`
+/// (16 levels spanning `[lo, hi] ∋ 0` ⇒ half-step error `≤ (hi−lo)/30
+/// ≤ max|group|·2/30`... conservatively stated as `max|group|/15`, with
+/// a hair of slack for f32 rounding in the quantizer itself).
+pub const INT4_MAX_GROUP_REL_ERR: f32 = 1.0 / 15.0;
+
+/// Documented per-row relative error bound for the *kept* weights of the
+/// 2:4 sparse format: `|dequant(q) − w| ≤ SPARSE4_MAX_ROW_REL_ERR ·
+/// max|kept in row|` (symmetric 15-level grid, half-step = scale/2 =
+/// max|kept|/14). Pruned weights dequantize to exactly 0.0.
+pub const SPARSE4_MAX_ROW_REL_ERR: f32 = 1.0 / 14.0;
+
+/// One packed-int4 weight matrix: `[rows × cols]` 4-bit codes, two per
+/// byte (even column in the low nibble), with affine parameters per
+/// `(row, group-of-[`INT4_GROUP`]-columns)`. `zp` is integral-valued but
+/// stored as f32 because the kernels consume it in f32 accumulation.
+#[derive(Debug, Clone)]
+pub struct Int4Weights {
+    /// Packed codes, row-major, `row_stride()` bytes per row. Code
+    /// `(q+8) ∈ [0, 15]` for signed `q ∈ [−8, 7]`.
+    pub packed: Vec<u8>,
+    /// Per-(row, group) scale, `[rows × groups()]` row-major.
+    pub scale: Vec<f32>,
+    /// Per-(row, group) zero-point, same layout as `scale`.
+    pub zp: Vec<f32>,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl Int4Weights {
+    /// Bytes per packed row.
+    pub fn row_stride(&self) -> usize {
+        self.cols.div_ceil(2)
+    }
+
+    /// Quantization groups per row.
+    pub fn groups(&self) -> usize {
+        self.cols.div_ceil(INT4_GROUP)
+    }
+
+    /// The signed 4-bit code at `(row, col)` (test/diagnostic helper).
+    pub fn code(&self, row: usize, col: usize) -> i32 {
+        let byte = self.packed[row * self.row_stride() + col / 2];
+        let nib = if col % 2 == 0 { byte & 0x0f } else { byte >> 4 };
+        nib as i32 - 8
+    }
+}
+
+/// Quantize a row-major `[rows × cols]` f32 matrix to packed int4, one
+/// affine pair per `(row, group)`.
+pub fn quantize_rows_int4(w: &[f32], rows: usize, cols: usize) -> Int4Weights {
+    assert_eq!(w.len(), rows * cols, "quantize_rows_int4: shape mismatch");
+    let groups = cols.div_ceil(INT4_GROUP).max(1);
+    let stride = cols.div_ceil(2);
+    let mut packed = vec![0u8; rows * stride];
+    let mut scale = Vec::with_capacity(rows * groups);
+    let mut zp = Vec::with_capacity(rows * groups);
+    for (r, row) in w.chunks_exact(cols.max(1)).enumerate() {
+        for g in 0..groups {
+            let seg = &row[g * INT4_GROUP..((g + 1) * INT4_GROUP).min(cols)];
+            let lo = seg.iter().cloned().fold(0.0f32, f32::min);
+            let hi = seg.iter().cloned().fold(0.0f32, f32::max);
+            let s = if hi > lo { (hi - lo) / 15.0 } else { 1.0 };
+            let z = (-8.0 - lo / s).round();
+            scale.push(s);
+            zp.push(z);
+            for (j, &x) in seg.iter().enumerate() {
+                let col = g * INT4_GROUP + j;
+                let q = ((x / s).round() + z).clamp(-8.0, 7.0) as i32;
+                let nib = (q + 8) as u8;
+                let slot = &mut packed[r * stride + col / 2];
+                if col % 2 == 0 {
+                    *slot = (*slot & 0xf0) | nib;
+                } else {
+                    *slot = (*slot & 0x0f) | (nib << 4);
+                }
+            }
+        }
+    }
+    Int4Weights { packed, scale, zp, rows, cols }
+}
+
+/// Dequantize one element of a packed-int4 matrix (test/diagnostic
+/// helper).
+pub fn dequantize_int4(qw: &Int4Weights, row: usize, col: usize) -> f32 {
+    let g = col / INT4_GROUP;
+    let gi = row * qw.groups() + g;
+    (qw.code(row, col) as f32 - qw.zp[gi]) * qw.scale[gi]
+}
+
+/// One 2:4 structured-sparse int4 weight matrix: per 4-column block the
+/// 2 largest-magnitude weights survive as 4-bit symmetric codes plus
+/// 2-bit in-block column indices. Kernels execute a fixed 2 MACs per
+/// block with no per-element branching.
+#[derive(Debug, Clone)]
+pub struct SparseInt4Weights {
+    /// One byte per block: slot-0 code in the low nibble, slot-1 in the
+    /// high nibble. Code `(q+8) ∈ [1, 15]` for signed `q ∈ [−7, 7]`;
+    /// padding slots store code 8 (q = 0).
+    pub vals: Vec<u8>,
+    /// One byte per block: slot-0 in-block column index in bits 0–1,
+    /// slot-1 in bits 2–3. Indices are strictly ascending within a block
+    /// except padding slots, which point at in-block column 0 (always in
+    /// bounds) with a zero value.
+    pub idxs: Vec<u8>,
+    /// Per-row symmetric scale (no zero-point: pruned weights are
+    /// exactly 0.0).
+    pub scale: Vec<f32>,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl SparseInt4Weights {
+    /// 4-column blocks per row.
+    pub fn blocks(&self) -> usize {
+        self.cols.div_ceil(4)
+    }
+
+    /// The two `(in-block index, signed code)` slots of block `b` of
+    /// `row` (test/diagnostic helper).
+    pub fn block(&self, row: usize, b: usize) -> [(usize, i32); 2] {
+        let at = row * self.blocks() + b;
+        let v = self.vals[at];
+        let ix = self.idxs[at];
+        [
+            ((ix & 0x03) as usize, (v & 0x0f) as i32 - 8),
+            (((ix >> 2) & 0x03) as usize, (v >> 4) as i32 - 8),
+        ]
+    }
+}
+
+/// Magnitude-prune a row-major `[rows × cols]` f32 matrix to 2:4 blocks
+/// and quantize the survivors to symmetric int4, one scale per row.
+pub fn prune_quantize_rows_2of4(w: &[f32], rows: usize, cols: usize) -> SparseInt4Weights {
+    assert_eq!(w.len(), rows * cols, "prune_quantize_rows_2of4: shape mismatch");
+    let blocks = cols.div_ceil(4).max(1);
+    let mut vals = Vec::with_capacity(rows * blocks);
+    let mut idxs = Vec::with_capacity(rows * blocks);
+    let mut scale = Vec::with_capacity(rows);
+    for row in w.chunks_exact(cols.max(1)) {
+        // Survivor set first (the scale depends on it): per block, the 2
+        // largest magnitudes, ties to the lower index.
+        let mut kept: Vec<(usize, usize)> = Vec::with_capacity(blocks); // (i0, i1) per block
+        let mut amax = 0.0f32;
+        for b in 0..blocks {
+            let base = b * 4;
+            let len = (cols - base).min(4);
+            let mut order: Vec<usize> = (0..len).collect();
+            order.sort_by(|&a, &c| {
+                row[base + c]
+                    .abs()
+                    .partial_cmp(&row[base + a].abs())
+                    .unwrap()
+                    .then(a.cmp(&c))
+            });
+            let mut pair: Vec<usize> = order.into_iter().take(2).collect();
+            pair.sort_unstable();
+            for &i in &pair {
+                amax = amax.max(row[base + i].abs());
+            }
+            let i0 = pair[0]; // every block covers ≥ 1 real column
+            let i1 = pair.get(1).copied().unwrap_or(0);
+            kept.push((i0, i1));
+        }
+        let s = if amax > 0.0 { amax / 7.0 } else { 1.0 };
+        scale.push(s);
+        for (b, &(i0, i1)) in kept.iter().enumerate() {
+            let base = b * 4;
+            let len = (cols - base).min(4);
+            let code = |i: usize, present: bool| -> u8 {
+                if !present {
+                    return 8; // padding: q = 0 at in-block column 0
+                }
+                let q = (row[base + i] / s).round().clamp(-7.0, 7.0) as i32;
+                (q + 8) as u8
+            };
+            let has1 = len >= 2;
+            vals.push(code(i0, true) | (code(i1, has1) << 4));
+            let ix1 = if has1 { i1 } else { 0 };
+            idxs.push((i0 as u8) | ((ix1 as u8) << 2));
+        }
+    }
+    SparseInt4Weights { vals, idxs, scale, rows, cols }
+}
+
+/// Dequantize one element of a sparse matrix: the kept value at
+/// `(row, col)`, or exactly 0.0 if pruned (test/diagnostic helper).
+pub fn dequantize_sparse(qw: &SparseInt4Weights, row: usize, col: usize) -> f32 {
+    let b = col / 4;
+    let want = col % 4;
+    for (i, q) in qw.block(row, b) {
+        if i == want && q != 0 {
+            return q as f32 * qw.scale[row];
+        }
+    }
+    0.0
+}
+
+/// Weights for one layer of the (possibly mixed-precision) quantized
+/// model. Conv/FC weights are stored at the layer's resolved precision;
+/// biases and LayerNorm parameters stay f32 (they are a vanishing
 /// fraction of the model bytes and feed the f32 accumulate directly).
 #[derive(Debug, Clone)]
 enum QLayerWeights {
+    ConvF32 { w: Vec<f32>, b: Vec<f32> },
+    FcF32 { w: Vec<f32>, b: Vec<f32> },
     Conv { qw: QuantizedWeights, b: Vec<f32> },
     Fc { qw: QuantizedWeights, b: Vec<f32> },
+    ConvI4 { qw: Int4Weights, b: Vec<f32> },
+    FcI4 { qw: Int4Weights, b: Vec<f32> },
+    ConvI4S { qw: SparseInt4Weights, b: Vec<f32> },
+    FcI4S { qw: SparseInt4Weights, b: Vec<f32> },
     LayerNorm { g: Vec<f32>, b: Vec<f32> },
 }
 
 impl super::tds::AsKernel for QLayerWeights {
     fn kernel(&self) -> KernelWeights<'_> {
         match self {
+            QLayerWeights::ConvF32 { w, b } => KernelWeights::ConvF32 { w, b },
+            QLayerWeights::FcF32 { w, b } => KernelWeights::FcF32 { w, b },
             QLayerWeights::Conv { qw, b } => KernelWeights::ConvI8 {
                 q: &qw.q,
                 scale: &qw.scale,
@@ -97,45 +341,92 @@ impl super::tds::AsKernel for QLayerWeights {
                 zp: &qw.zp,
                 b,
             },
+            QLayerWeights::ConvI4 { qw, b } => KernelWeights::ConvI4 { qw, b },
+            QLayerWeights::FcI4 { qw, b } => KernelWeights::FcI4 { qw, b },
+            QLayerWeights::ConvI4S { qw, b } => KernelWeights::ConvI4S { qw, b },
+            QLayerWeights::FcI4S { qw, b } => KernelWeights::FcI4S { qw, b },
             QLayerWeights::LayerNorm { g, b } => KernelWeights::Ln { g, b },
         }
     }
 }
 
-/// The int8-quantized TDS acoustic model. Drop-in for [`TdsModel`] on the
-/// serving path: same streaming [`TdsState`] (activations and conv
-/// history stay f32), same step entry points, ~4× smaller weight
-/// footprint and one-byte-per-MAC weight streams in the hot kernels.
+/// The quantized TDS acoustic model — uniform int8 (the classic path) or
+/// a calibrated per-layer mix of {f32, int8, int4, int4+sparse}. Drop-in
+/// for [`TdsModel`] on the serving path: same streaming [`TdsState`]
+/// (activations and conv history stay f32), same step entry points,
+/// 4–10× smaller weight footprint and sub-byte weight streams in the hot
+/// kernels.
 #[derive(Debug, Clone)]
 pub struct QuantizedTdsModel {
     pub cfg: ModelConfig,
     layers: Vec<(Layer, QLayerWeights)>,
+    precisions: PrecisionMap,
 }
 
 impl QuantizedTdsModel {
-    /// Quantize an f32 model. The config is stamped [`Precision::Int8`]
-    /// so downstream cost models (accel/power) see int8 weight traffic.
+    /// Quantize an f32 model uniformly to int8. The config is stamped
+    /// [`Precision::Int8`] so downstream cost models (accel/power) see
+    /// int8 weight traffic.
     pub fn from_model(model: &TdsModel) -> Result<Self> {
+        Self::from_model_mixed(model, &PrecisionMap::uniform(Precision::Int8))
+    }
+
+    /// Quantize an f32 model with a per-layer precision map (the output
+    /// of the compile-side calibration pass). LayerNorm layers always
+    /// stay f32; conv/FC layers store weights at their resolved
+    /// precision. The config is stamped with the map's default precision
+    /// so scalar consumers see the dominant format.
+    pub fn from_model_mixed(model: &TdsModel, map: &PrecisionMap) -> Result<Self> {
+        map.validate(&model.cfg).map_err(anyhow::Error::msg)?;
         let mut layers = Vec::with_capacity(model.layer_count());
         for idx in 0..model.layer_count() {
             let (layer, view) = model.layer_kernel(idx);
+            let p = map.resolve(layer.name());
             let qlw = match view {
                 KernelWeights::ConvF32 { w, b } => {
                     let Layer::Conv { in_ch, out_ch, kw, .. } = layer else {
                         unreachable!("conv weights on non-conv layer")
                     };
-                    QLayerWeights::Conv {
-                        qw: quantize_rows(w, *out_ch, in_ch * kw),
-                        b: b.to_vec(),
+                    let (rows, cols) = (*out_ch, in_ch * kw);
+                    match p {
+                        Precision::F32 => {
+                            QLayerWeights::ConvF32 { w: w.to_vec(), b: b.to_vec() }
+                        }
+                        Precision::Int8 => QLayerWeights::Conv {
+                            qw: quantize_rows(w, rows, cols),
+                            b: b.to_vec(),
+                        },
+                        Precision::Int4 => QLayerWeights::ConvI4 {
+                            qw: quantize_rows_int4(w, rows, cols),
+                            b: b.to_vec(),
+                        },
+                        Precision::Int4Sparse => QLayerWeights::ConvI4S {
+                            qw: prune_quantize_rows_2of4(w, rows, cols),
+                            b: b.to_vec(),
+                        },
                     }
                 }
                 KernelWeights::FcF32 { w, b } => {
                     let Layer::Fc { in_dim, out_dim, .. } = layer else {
                         unreachable!("fc weights on non-fc layer")
                     };
-                    QLayerWeights::Fc {
-                        qw: quantize_rows(w, *out_dim, *in_dim),
-                        b: b.to_vec(),
+                    let (rows, cols) = (*out_dim, *in_dim);
+                    match p {
+                        Precision::F32 => {
+                            QLayerWeights::FcF32 { w: w.to_vec(), b: b.to_vec() }
+                        }
+                        Precision::Int8 => QLayerWeights::Fc {
+                            qw: quantize_rows(w, rows, cols),
+                            b: b.to_vec(),
+                        },
+                        Precision::Int4 => QLayerWeights::FcI4 {
+                            qw: quantize_rows_int4(w, rows, cols),
+                            b: b.to_vec(),
+                        },
+                        Precision::Int4Sparse => QLayerWeights::FcI4S {
+                            qw: prune_quantize_rows_2of4(w, rows, cols),
+                            b: b.to_vec(),
+                        },
                     }
                 }
                 KernelWeights::Ln { g, b } => QLayerWeights::LayerNorm {
@@ -146,8 +437,13 @@ impl QuantizedTdsModel {
             };
             layers.push((layer.clone(), qlw));
         }
-        let cfg = ModelConfig { precision: Precision::Int8, ..model.cfg.clone() };
-        Ok(QuantizedTdsModel { cfg, layers })
+        let cfg = ModelConfig { precision: map.default, ..model.cfg.clone() };
+        Ok(QuantizedTdsModel { cfg, layers, precisions: map.clone() })
+    }
+
+    /// The per-layer precision map this model was quantized with.
+    pub fn precision_map(&self) -> &PrecisionMap {
+        &self.precisions
     }
 
     /// Fresh streaming state — identical layout to [`TdsModel::state`].
@@ -180,13 +476,23 @@ impl QuantizedTdsModel {
         self.step_batch(&mut lanes, feats)
     }
 
-    /// Total quantized model-data bytes (int8 weights + f32 biases).
+    /// Total stored model-data bytes (quantized weights at their packed
+    /// width, plus f32 biases and quantization parameters).
     pub fn weight_bytes(&self) -> usize {
         self.layers
             .iter()
             .map(|(_, lw)| match lw {
+                QLayerWeights::ConvF32 { w, b } | QLayerWeights::FcF32 { w, b } => {
+                    4 * (w.len() + b.len())
+                }
                 QLayerWeights::Conv { qw, b } | QLayerWeights::Fc { qw, b } => {
                     qw.q.len() + 4 * (b.len() + qw.scale.len() + qw.zp.len())
+                }
+                QLayerWeights::ConvI4 { qw, b } | QLayerWeights::FcI4 { qw, b } => {
+                    qw.packed.len() + 4 * (b.len() + qw.scale.len() + qw.zp.len())
+                }
+                QLayerWeights::ConvI4S { qw, b } | QLayerWeights::FcI4S { qw, b } => {
+                    qw.vals.len() + qw.idxs.len() + 4 * (b.len() + qw.scale.len())
                 }
                 QLayerWeights::LayerNorm { g, b } => 4 * (g.len() + b.len()),
             })
@@ -305,6 +611,188 @@ mod tests {
             (q_bytes as f64) < 0.5 * f32_bytes as f64,
             "int8 model {q_bytes} B not ≪ f32 {f32_bytes} B"
         );
+    }
+
+    #[test]
+    fn int4_roundtrip_within_documented_bound() {
+        prop::check("int4-group-rel-err", 50, |g| {
+            let rows = 1 + g.index(6);
+            let cols = 1 + g.index(80); // crosses group boundaries + odd widths
+            let mag = 0.01 + g.rng.uniform(0.0, 4.0);
+            let w = g.vec_of(rows * cols, |r| r.uniform(-mag, mag));
+            let qw = quantize_rows_int4(&w, rows, cols);
+            for r in 0..rows {
+                let row = &w[r * cols..(r + 1) * cols];
+                for gi in 0..qw.groups() {
+                    let seg = &row[gi * INT4_GROUP..((gi + 1) * INT4_GROUP).min(cols)];
+                    let gmax = seg.iter().fold(0.0f32, |a, v| a.max(v.abs()));
+                    let bound = INT4_MAX_GROUP_REL_ERR * gmax.max(f32::EPSILON) + 1e-7;
+                    for (j, &x) in seg.iter().enumerate() {
+                        let deq = dequantize_int4(&qw, r, gi * INT4_GROUP + j);
+                        crate::prop_assert!(
+                            (deq - x).abs() <= bound,
+                            "row {r} group {gi} col {j}: |{deq} - {x}| > {bound}"
+                        );
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn int4_packing_is_two_nibbles_per_byte() {
+        let w: Vec<f32> = (0..2 * 7).map(|i| i as f32 / 7.0 - 1.0).collect();
+        let qw = quantize_rows_int4(&w, 2, 7);
+        assert_eq!(qw.row_stride(), 4, "7 cols pack into 4 bytes");
+        assert_eq!(qw.packed.len(), 2 * 4);
+        assert_eq!(qw.groups(), 1);
+        assert_eq!(qw.scale.len(), 2);
+        // Codes stay in the signed nibble range.
+        for r in 0..2 {
+            for c in 0..7 {
+                let q = qw.code(r, c);
+                assert!((-8..=7).contains(&q), "code {q} out of nibble range");
+            }
+        }
+        // Zero rows dequantize to exactly zero.
+        let z = quantize_rows_int4(&[0.0; 5], 1, 5);
+        for c in 0..5 {
+            assert_eq!(dequantize_int4(&z, 0, c), 0.0);
+        }
+    }
+
+    #[test]
+    fn sparse_2of4_keeps_two_largest_and_zeroes_rest() {
+        prop::check("sparse-2of4", 50, |g| {
+            let rows = 1 + g.index(6);
+            let cols = 1 + g.index(40); // includes ragged tails
+            let mag = 0.01 + g.rng.uniform(0.0, 4.0);
+            let w = g.vec_of(rows * cols, |r| r.uniform(-mag, mag));
+            let qw = prune_quantize_rows_2of4(&w, rows, cols);
+            for r in 0..rows {
+                let row = &w[r * cols..(r + 1) * cols];
+                // Kept magnitude bound over the whole row.
+                let mut kept_max = 0.0f32;
+                for b in 0..qw.blocks() {
+                    for (i, q) in qw.block(r, b) {
+                        let col = b * 4 + i;
+                        crate::prop_assert!(col < cols, "slot index {col} out of bounds");
+                        if q != 0 {
+                            kept_max = kept_max.max(row[col].abs());
+                        }
+                    }
+                }
+                let bound = SPARSE4_MAX_ROW_REL_ERR * kept_max.max(f32::EPSILON) + 1e-7;
+                for b in 0..qw.blocks() {
+                    let base = b * 4;
+                    let len = (cols - base).min(4);
+                    // The pruned (non-kept) columns dequantize to exactly 0,
+                    // and no block keeps more than 2 columns.
+                    let slots = qw.block(r, b);
+                    let kept: Vec<usize> =
+                        slots.iter().filter(|(_, q)| *q != 0).map(|(i, _)| base + i).collect();
+                    crate::prop_assert!(kept.len() <= 2, "block {b} kept {}", kept.len());
+                    for c in base..base + len {
+                        let deq = dequantize_sparse(&qw, r, c);
+                        if kept.contains(&c) {
+                            crate::prop_assert!(
+                                (deq - row[c]).abs() <= bound,
+                                "kept row {r} col {c}: |{deq} - {}| > {bound}",
+                                row[c]
+                            );
+                        } else {
+                            crate::prop_assert!(deq == 0.0, "pruned col {c} deq {deq} != 0");
+                            // Magnitude pruning: nothing pruned may exceed a
+                            // block survivor (kept codes can round to 0, so
+                            // compare against the block's true top-2 only
+                            // when both survivors are nonzero codes).
+                            if slots.iter().all(|(_, q)| *q != 0) && len == 4 {
+                                let min_kept = slots
+                                    .iter()
+                                    .map(|(i, _)| row[base + i].abs())
+                                    .fold(f32::INFINITY, f32::min);
+                                crate::prop_assert!(
+                                    row[c].abs() <= min_kept + 1e-7,
+                                    "pruned |{}| beats kept {min_kept}",
+                                    row[c]
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn mixed_precision_model_tracks_f32() {
+        let m = TdsModel::random(ModelConfig::tiny_tds(), 13);
+        let mut map = PrecisionMap::uniform(Precision::Int4);
+        map.set("g0.sub", Precision::F32);
+        map.set("output.fc", Precision::Int8);
+        map.set("g1.b0.fc0", Precision::Int4Sparse);
+        let qm = QuantizedTdsModel::from_model_mixed(&m, &map).unwrap();
+        assert_eq!(qm.cfg.precision, Precision::Int4);
+        assert_eq!(qm.precision_map(), &map);
+        let f = m.cfg.frames_per_step() * m.cfg.n_mels;
+        let mut rng = Rng::new(3);
+        let mut st_f = m.state();
+        let mut st_q = qm.state();
+        for _ in 0..3 {
+            let feats: Vec<f32> = (0..f).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let a = m.step(&mut st_f, &feats);
+            let b = qm.step(&mut st_q, &feats);
+            assert_eq!(a.len(), b.len());
+            assert!(b.iter().all(|v| v.is_finite()));
+            // Looser than int8 (4-bit grid + pruning), still recognisably
+            // the same model.
+            let max_diff =
+                a.iter().zip(&b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
+            assert!(max_diff < 2.0, "mixed logits drifted {max_diff} from f32");
+        }
+        // The F32 override really stores f32 weights: bytes sit between
+        // all-int4 and all-f32.
+        let uniform4 = QuantizedTdsModel::from_model_mixed(
+            &m,
+            &PrecisionMap::uniform(Precision::Int4),
+        )
+        .unwrap();
+        assert!(qm.weight_bytes() > uniform4.weight_bytes());
+    }
+
+    #[test]
+    fn int4_weight_bytes_are_roughly_half_of_int8() {
+        let m = TdsModel::random(ModelConfig::tiny_tds(), 11);
+        let q8 = QuantizedTdsModel::from_model(&m).unwrap();
+        let q4 = QuantizedTdsModel::from_model_mixed(
+            &m,
+            &PrecisionMap::uniform(Precision::Int4),
+        )
+        .unwrap();
+        let qs = QuantizedTdsModel::from_model_mixed(
+            &m,
+            &PrecisionMap::uniform(Precision::Int4Sparse),
+        )
+        .unwrap();
+        // Not exactly half (per-group params, f32 biases, LN stays f32),
+        // but well below.
+        assert!(
+            (q4.weight_bytes() as f64) < 0.8 * q8.weight_bytes() as f64,
+            "int4 {} B not ≪ int8 {} B",
+            q4.weight_bytes(),
+            q8.weight_bytes()
+        );
+        assert!(qs.weight_bytes() < q4.weight_bytes());
+    }
+
+    #[test]
+    fn from_model_mixed_rejects_unknown_layer_overrides() {
+        let m = TdsModel::random(ModelConfig::tiny_tds(), 2);
+        let mut map = PrecisionMap::uniform(Precision::Int8);
+        map.set("not.a.layer", Precision::Int4);
+        assert!(QuantizedTdsModel::from_model_mixed(&m, &map).is_err());
     }
 
     #[test]

@@ -31,6 +31,7 @@ use anyhow::{ensure, Context, Result};
 
 use super::gemm;
 use super::ops;
+use super::quant::{Int4Weights, SparseInt4Weights};
 
 const LN_EPS: f32 = 1e-5;
 
@@ -43,13 +44,18 @@ enum LayerWeights {
 }
 
 /// Borrowed view of one layer's weights, dispatching the step driver to
-/// the matching [`super::gemm`] kernel. The int8 variants are produced by
-/// [`super::QuantizedTdsModel`].
+/// the matching [`super::gemm`] kernel. The quantized variants (int8,
+/// packed int4, 2:4 sparse int4) are produced by
+/// [`super::QuantizedTdsModel`], possibly mixed per layer.
 pub(crate) enum KernelWeights<'a> {
     ConvF32 { w: &'a [f32], b: &'a [f32] },
     ConvI8 { q: &'a [i8], scale: &'a [f32], zp: &'a [f32], b: &'a [f32] },
+    ConvI4 { qw: &'a Int4Weights, b: &'a [f32] },
+    ConvI4S { qw: &'a SparseInt4Weights, b: &'a [f32] },
     FcF32 { w: &'a [f32], b: &'a [f32] },
     FcI8 { q: &'a [i8], scale: &'a [f32], zp: &'a [f32], b: &'a [f32] },
+    FcI4 { qw: &'a Int4Weights, b: &'a [f32] },
+    FcI4S { qw: &'a SparseInt4Weights, b: &'a [f32] },
     Ln { g: &'a [f32], b: &'a [f32] },
 }
 
@@ -232,10 +238,7 @@ pub(crate) fn step_batch_driver<S, W>(
     let mut conv_idx = 0;
     for (layer, lw) in layers {
         match (layer, lw.kernel()) {
-            (
-                Layer::Conv { in_ch, out_ch, kw, stride, w: width, residual, .. },
-                kern @ (KernelWeights::ConvF32 { .. } | KernelWeights::ConvI8 { .. }),
-            ) => {
+            (Layer::Conv { in_ch, out_ch, kw, stride, w: width, residual, .. }, kern) => {
                 let d_in = in_ch * width;
                 debug_assert_eq!(cur_d, d_in, "conv {} input dim", layer.name());
                 let in_block = batch * d_in;
@@ -268,7 +271,15 @@ pub(crate) fn step_batch_driver<S, W>(
                         q, scale, zp, b, ext, t_out, *stride, batch, *in_ch, *out_ch, *kw,
                         *width, tmp, next,
                     ),
-                    _ => unreachable!(),
+                    KernelWeights::ConvI4 { qw, b } => gemm::conv_steps_int4_into(
+                        &qw.packed, &qw.scale, &qw.zp, b, ext, t_out, *stride, batch, *in_ch,
+                        *out_ch, *kw, *width, tmp, next,
+                    ),
+                    KernelWeights::ConvI4S { qw, b } => gemm::conv_steps_int4_sparse_into(
+                        &qw.vals, &qw.idxs, &qw.scale, b, ext, t_out, *stride, batch, *in_ch,
+                        *out_ch, *kw, *width, next,
+                    ),
+                    _ => unreachable!("conv layer/weights mismatch"),
                 }
                 ops::relu_inplace(next);
                 if *residual {
@@ -300,10 +311,7 @@ pub(crate) fn step_batch_driver<S, W>(
                 cur_t = t_out;
                 cur_d = d_out;
             }
-            (
-                Layer::Fc { in_dim, out_dim, relu, residual, .. },
-                kern @ (KernelWeights::FcF32 { .. } | KernelWeights::FcI8 { .. }),
-            ) => {
+            (Layer::Fc { in_dim, out_dim, relu, residual, .. }, kern) => {
                 debug_assert_eq!(cur_d, *in_dim, "fc {} input dim", layer.name());
                 let in_block = batch * in_dim;
                 let out_block = batch * out_dim;
@@ -316,7 +324,13 @@ pub(crate) fn step_batch_driver<S, W>(
                         KernelWeights::FcI8 { q, scale, zp, b } => {
                             gemm::fc_batch_int8_into(q, scale, zp, b, xs, batch, tmp, dst)
                         }
-                        _ => unreachable!(),
+                        KernelWeights::FcI4 { qw, b } => gemm::fc_batch_int4_into(
+                            &qw.packed, &qw.scale, &qw.zp, b, xs, batch, tmp, dst,
+                        ),
+                        KernelWeights::FcI4S { qw, b } => gemm::fc_batch_int4_sparse_into(
+                            &qw.vals, &qw.idxs, &qw.scale, b, xs, batch, dst,
+                        ),
+                        _ => unreachable!("fc layer/weights mismatch"),
                     }
                 }
                 if *relu {

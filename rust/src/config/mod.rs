@@ -6,7 +6,7 @@ pub mod model;
 pub mod pipeline;
 
 pub use accel::AccelConfig;
-pub use model::{Group, Layer, ModelConfig, Precision};
+pub use model::{Group, Layer, ModelConfig, Precision, PrecisionMap};
 pub use pipeline::{PipelineDesc, StageDesc};
 
 /// Re-exported so config consumers (serving introspection, the

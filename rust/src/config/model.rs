@@ -65,11 +65,14 @@ impl Layer {
         }
     }
 
-    /// Model-data bytes for this layer as stored in model memory.
-    /// The paper quantizes weights to 8 bits (the MAC unit consumes 8-bit
-    /// vectors), so int8 ⇒ 1 byte/param; the functional f32 path uses 4.
+    /// Model-data bytes for this layer as stored in model memory, from
+    /// the precision's per-weight bit width (floor division — sub-byte
+    /// formats never round a layer *up*, so int4 is at most half of int8
+    /// exactly). The paper quantizes weights to 8 bits (the MAC unit
+    /// consumes 8-bit vectors); the below-int8 formats push further:
+    /// 4 bits packed, or 3 bits effective for 2:4 structured sparsity.
     pub fn model_bytes(&self, precision: Precision) -> usize {
-        self.params() * precision.bytes_per_weight()
+        self.params() * precision.weight_bits() / 8
     }
 
     /// Multiply-accumulates needed to produce ONE output timestep.
@@ -114,9 +117,10 @@ impl Layer {
 /// Numeric precision of the stored model weights — the `config` knob
 /// behind both halves of the system: the native engine selects between
 /// [`crate::am::TdsModel`] (f32) and [`crate::am::QuantizedTdsModel`]
-/// (int8 weights, f32 accumulate), and the accelerator simulator derives
-/// weight-traffic bytes from it (int8 ⇒ 4× less model-data bandwidth,
-/// the paper's §3.4 MAC-unit assumption).
+/// (quantized weights, f32 accumulate), and the accelerator simulator
+/// derives weight-traffic bytes from it (int8 ⇒ 4× less model-data
+/// bandwidth than f32, the paper's §3.4 MAC-unit assumption; the
+/// below-int8 formats halve that again or better).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Precision {
     /// 32-bit float weights (the functional reference path).
@@ -124,19 +128,199 @@ pub enum Precision {
     /// 8-bit affine-quantized weights, per-output-row scale/zero-point
     /// (the paper's deployment path).
     Int8,
+    /// 4-bit affine-quantized weights packed two per byte, per-group
+    /// scale/zero-point (`am::quant::INT4_GROUP` columns per group).
+    Int4,
+    /// 2:4 structured-sparse int4: per 4-weight block the 2 largest-
+    /// magnitude weights survive as 4-bit values plus 2-bit in-block
+    /// indices — 12 bits per 4 weights, 3 bits/weight effective.
+    Int4Sparse,
 }
 
 impl Precision {
-    /// Bytes one weight occupies in model memory / DMA traffic.
-    pub fn bytes_per_weight(self) -> usize {
+    /// Bits one weight occupies in model memory / DMA traffic. Sub-byte
+    /// formats are why this is bits, not bytes: int4 packs two weights
+    /// per byte, and 2:4 sparse stores 12 bits per 4-weight block.
+    pub fn weight_bits(self) -> usize {
+        match self {
+            Precision::F32 => 32,
+            Precision::Int8 => 8,
+            Precision::Int4 => 4,
+            Precision::Int4Sparse => 3,
+        }
+    }
+
+    /// Bytes one *activation* element occupies on-chip (shared memory,
+    /// inter-step state). Quantized deployments move int8 activations
+    /// regardless of how far the weights are compressed.
+    pub fn activation_bytes(self) -> usize {
         match self {
             Precision::F32 => 4,
-            Precision::Int8 => 1,
+            Precision::Int8 | Precision::Int4 | Precision::Int4Sparse => 1,
         }
     }
 
     pub fn is_quantized(self) -> bool {
-        matches!(self, Precision::Int8)
+        !matches!(self, Precision::F32)
+    }
+
+    /// Canonical lowercase token, the inverse of [`Precision::parse`].
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Int8 => "int8",
+            Precision::Int4 => "int4",
+            Precision::Int4Sparse => "int4_sparse",
+        }
+    }
+
+    /// Parse a canonical token (`f32`, `int8`, `int4`, `int4_sparse`).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.trim() {
+            "f32" => Ok(Precision::F32),
+            "int8" => Ok(Precision::Int8),
+            "int4" => Ok(Precision::Int4),
+            "int4_sparse" => Ok(Precision::Int4Sparse),
+            other => Err(format!(
+                "unknown precision '{other}' (expected f32|int8|int4|int4_sparse)"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Per-layer weight-precision assignment: a default for every layer plus
+/// named overrides, the output of the compile-side calibration pass
+/// (`python/compile/calibrate.py`). A uniform map (no overrides) behaves
+/// exactly like the scalar [`Precision`] knob it generalizes.
+///
+/// Overrides are keyed by [`Layer::name`] and applied first-match-wins;
+/// LayerNorm layers always execute in f32 regardless of the map (they
+/// are not MAC work and their 2·dim parameters are noise), which the
+/// accelerator accounting mirrors.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PrecisionMap {
+    /// Precision for any layer without an override.
+    pub default: Precision,
+    /// `(layer name, precision)` overrides, first match wins.
+    pub overrides: Vec<(String, Precision)>,
+}
+
+impl PrecisionMap {
+    /// A map that assigns `p` to every layer.
+    pub fn uniform(p: Precision) -> Self {
+        PrecisionMap { default: p, overrides: Vec::new() }
+    }
+
+    /// Precision for the layer named `name`.
+    pub fn resolve(&self, name: &str) -> Precision {
+        self.overrides
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, p)| *p)
+            .unwrap_or(self.default)
+    }
+
+    /// Add (or replace) an override for `name`.
+    pub fn set(&mut self, name: &str, p: Precision) {
+        if let Some(slot) = self.overrides.iter_mut().find(|(n, _)| n == name) {
+            slot.1 = p;
+        } else {
+            self.overrides.push((name.to_string(), p));
+        }
+    }
+
+    /// True when every layer resolves to the same precision.
+    pub fn is_uniform(&self) -> bool {
+        self.overrides.iter().all(|(_, p)| *p == self.default)
+    }
+
+    /// Parse the CLI/protocol syntax: a default token optionally followed
+    /// by `,name=token` overrides, e.g. `int4,output.fc=int8,g0.sub=f32`.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let mut parts = s.split(',');
+        let default = Precision::parse(parts.next().unwrap_or(""))?;
+        let mut map = PrecisionMap::uniform(default);
+        for part in parts {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (name, tok) = part
+                .split_once('=')
+                .ok_or_else(|| format!("precision override '{part}' is not name=precision"))?;
+            map.set(name.trim(), Precision::parse(tok)?);
+        }
+        Ok(map)
+    }
+
+    /// Load a calibrated per-layer map from `artifacts/precision.bin`
+    /// (written by `python/compile/calibrate.py`): a `tensor_io` file
+    /// whose u32 tensor `precision.codes` holds one code per layer of
+    /// `cfg.layers()`, 0=f32 1=int8 2=int4 3=int4_sparse. The default
+    /// becomes the most common code; the rest become overrides.
+    pub fn from_artifacts(cfg: &ModelConfig, dir: &std::path::Path) -> Result<Self, String> {
+        let tf = crate::util::tensor_io::TensorFile::load(&dir.join("precision.bin"))
+            .map_err(|e| format!("loading precision.bin: {e}"))?;
+        let t = tf
+            .require("precision.codes")
+            .map_err(|e| format!("precision.bin: {e}"))?;
+        let codes = t.as_u32().map_err(|e| format!("precision.codes: {e}"))?;
+        let layers = cfg.layers();
+        if codes.len() != layers.len() {
+            return Err(format!(
+                "precision.codes has {} entries for {} layers",
+                codes.len(),
+                layers.len()
+            ));
+        }
+        let decode = |c: u32| match c {
+            0 => Ok(Precision::F32),
+            1 => Ok(Precision::Int8),
+            2 => Ok(Precision::Int4),
+            3 => Ok(Precision::Int4Sparse),
+            other => Err(format!("precision code {other} out of range")),
+        };
+        let mut counts = [0usize; 4];
+        for &c in codes {
+            decode(c)?;
+            counts[c as usize] += 1;
+        }
+        let default_code =
+            (0..4u32).max_by_key(|&c| counts[c as usize]).unwrap_or(0);
+        let mut map = PrecisionMap::uniform(decode(default_code)?);
+        for (layer, &c) in layers.iter().zip(codes) {
+            if c != default_code {
+                map.set(layer.name(), decode(c)?);
+            }
+        }
+        Ok(map)
+    }
+
+    /// Check every override names a real layer of `cfg`.
+    pub fn validate(&self, cfg: &ModelConfig) -> Result<(), String> {
+        let layers = cfg.layers();
+        for (name, _) in &self.overrides {
+            if !layers.iter().any(|l| l.name() == name) {
+                return Err(format!("precision override for unknown layer '{name}'"));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl std::fmt::Display for PrecisionMap {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.default)?;
+        for (name, p) in &self.overrides {
+            write!(f, ",{name}={p}")?;
+        }
+        Ok(())
     }
 }
 
@@ -410,6 +594,76 @@ mod tests {
         assert_eq!(m.tokens, 27);
         // Small enough to train at build time.
         assert!(m.layers().iter().map(|l| l.params()).sum::<usize>() < 300_000);
+    }
+
+    #[test]
+    fn weight_bits_orders_and_int4_halves_int8() {
+        assert!(Precision::F32.weight_bits() > Precision::Int8.weight_bits());
+        assert!(Precision::Int8.weight_bits() > Precision::Int4.weight_bits());
+        assert!(Precision::Int4.weight_bits() > Precision::Int4Sparse.weight_bits());
+        // Per layer: int8 bytes ≥ 2× int4 bytes (floor math never flips it).
+        for l in ModelConfig::paper_tds().layers() {
+            let b8 = l.model_bytes(Precision::Int8);
+            let b4 = l.model_bytes(Precision::Int4);
+            assert!(b8 >= 2 * b4, "layer {}: int8 {b8} < 2× int4 {b4}", l.name());
+            assert!(l.model_bytes(Precision::Int4Sparse) <= b4);
+        }
+    }
+
+    #[test]
+    fn precision_tokens_round_trip() {
+        for p in [Precision::F32, Precision::Int8, Precision::Int4, Precision::Int4Sparse] {
+            assert_eq!(Precision::parse(p.as_str()), Ok(p));
+        }
+        assert!(Precision::parse("int2").is_err());
+    }
+
+    #[test]
+    fn precision_map_resolve_and_round_trip() {
+        let mut map = PrecisionMap::uniform(Precision::Int4);
+        assert!(map.is_uniform());
+        map.set("output.fc", Precision::Int8);
+        map.set("g0.sub", Precision::F32);
+        map.set("g0.sub", Precision::Int4Sparse); // replace, not append
+        assert!(!map.is_uniform());
+        assert_eq!(map.resolve("output.fc"), Precision::Int8);
+        assert_eq!(map.resolve("g0.sub"), Precision::Int4Sparse);
+        assert_eq!(map.resolve("g1.b0.fc0"), Precision::Int4);
+        let parsed = PrecisionMap::parse(&map.to_string()).unwrap();
+        assert_eq!(parsed, map);
+        assert!(map.validate(&ModelConfig::paper_tds()).is_ok());
+        map.set("no.such.layer", Precision::Int8);
+        assert!(map.validate(&ModelConfig::paper_tds()).is_err());
+        assert!(PrecisionMap::parse("int4,oops").is_err());
+        assert!(PrecisionMap::parse("int3").is_err());
+    }
+
+    #[test]
+    fn precision_map_from_artifacts_codes() {
+        use crate::util::tensor_io::{Tensor, TensorFile};
+        let cfg = ModelConfig::tiny_tds();
+        let n = cfg.layers().len();
+        // Mostly int4, output layer int8, entry conv f32.
+        let mut codes = vec![2u32; n];
+        codes[0] = 0;
+        codes[n - 1] = 1;
+        let dir = std::env::temp_dir().join(format!("asrpu-pmap-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut tf = TensorFile::new();
+        tf.push(Tensor::u32("precision.codes", vec![n], codes));
+        tf.save(&dir.join("precision.bin")).unwrap();
+        let map = PrecisionMap::from_artifacts(&cfg, &dir).unwrap();
+        assert_eq!(map.default, Precision::Int4);
+        let layers = cfg.layers();
+        assert_eq!(map.resolve(layers[0].name()), Precision::F32);
+        assert_eq!(map.resolve(layers[n - 1].name()), Precision::Int8);
+        assert_eq!(map.resolve(layers[1].name()), Precision::Int4);
+        // Wrong length errors.
+        let mut tf = TensorFile::new();
+        tf.push(Tensor::u32("precision.codes", vec![2], vec![2, 2]));
+        tf.save(&dir.join("precision.bin")).unwrap();
+        assert!(PrecisionMap::from_artifacts(&cfg, &dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -19,7 +19,7 @@
 //! changes one description instead of two hand-maintained programs.
 #![deny(missing_docs)]
 
-use super::model::{Layer, ModelConfig};
+use super::model::{Layer, ModelConfig, PrecisionMap};
 use crate::am::gemm::dispatch::KernelIsa;
 
 /// One stage of the decoding-step pipeline, in execution order.
@@ -76,6 +76,12 @@ pub struct PipelineDesc {
     /// throughput accounting: kernels are bit-identical across ISAs, so
     /// the stage list and every result are unaffected.
     pub host_isa: KernelIsa,
+    /// Per-layer weight-precision assignment the AM stages execute at.
+    /// [`PipelineDesc::for_model`] sets it uniform at the model's scalar
+    /// precision; a mixed-precision backend overrides it with its
+    /// calibrated map so the simulator sizes each layer's weight DMA from
+    /// what the engine actually stores.
+    pub precisions: PrecisionMap,
 }
 
 impl PipelineDesc {
@@ -89,7 +95,18 @@ impl PipelineDesc {
             stages.push(StageDesc::AmLayer(layer));
         }
         stages.push(StageDesc::HypExpansion { repeats: model.vectors_per_step() });
-        PipelineDesc { model: model.clone(), stages, host_isa: KernelIsa::active() }
+        PipelineDesc {
+            model: model.clone(),
+            stages,
+            host_isa: KernelIsa::active(),
+            precisions: PrecisionMap::uniform(model.precision),
+        }
+    }
+
+    /// The canonical pipeline with a calibrated per-layer precision map
+    /// in place of the model's uniform scalar precision.
+    pub fn for_model_mixed(model: &ModelConfig, precisions: PrecisionMap) -> Self {
+        PipelineDesc { precisions, ..Self::for_model(model) }
     }
 
     /// Number of acoustic-model layer stages.
@@ -170,6 +187,9 @@ impl PipelineDesc {
             "pipeline emits {cur} values per vector, model expects {} tokens",
             self.model.tokens
         );
+        self.precisions
+            .validate(&self.model)
+            .map_err(|e| anyhow::anyhow!("pipeline precision map: {e}"))?;
         Ok(())
     }
 }
@@ -241,6 +261,24 @@ mod tests {
         assert_eq!(p.stages[1].name(), "g0.sub");
         assert_eq!(p.stages.last().unwrap().name(), "hyp.expand×4");
         assert_eq!(StageDesc::Rescore { nbest: 8 }.name(), "lm.rescore×8");
+    }
+
+    #[test]
+    fn pipeline_carries_precision_map() {
+        use crate::config::{Precision, PrecisionMap};
+        let m = ModelConfig::paper_tds();
+        let p = PipelineDesc::for_model(&m);
+        assert_eq!(p.precisions, PrecisionMap::uniform(Precision::Int8));
+        let mut map = PrecisionMap::uniform(Precision::Int4);
+        map.set("output.fc", Precision::Int8);
+        let mixed = PipelineDesc::for_model_mixed(&m, map.clone());
+        assert_eq!(mixed.precisions, map);
+        assert_eq!(mixed.stages, p.stages, "the map never changes the stage list");
+        mixed.validate().unwrap();
+        // An override naming a nonexistent layer fails validation.
+        let mut bad = PrecisionMap::uniform(Precision::Int4);
+        bad.set("nope", Precision::Int8);
+        assert!(PipelineDesc::for_model_mixed(&m, bad).validate().is_err());
     }
 
     #[test]

@@ -39,7 +39,7 @@ use std::sync::Arc;
 use crate::am::{
     KernelIsa, LaneStates, QuantizedTdsModel, Scratch as AmScratch, TdsModel, TdsState,
 };
-use crate::config::{ModelConfig, Precision};
+use crate::config::{ModelConfig, Precision, PrecisionMap};
 use crate::dsp::{mfcc::Scratch as MfccScratch, Mfcc};
 use crate::runtime::xla_am::XlaState;
 use crate::runtime::{Runtime, XlaAm};
@@ -123,9 +123,19 @@ pub trait AmBackend {
     fn model_cfg(&self) -> &ModelConfig;
 
     /// Weight precision — drives the simulator's DMA-byte accounting and
-    /// the power model (int8 ⇒ 4× less weight traffic, §3.4).
+    /// the power model (int8 ⇒ 4× less weight traffic, §3.4). For a
+    /// mixed-precision backend this is the dominant (default) format;
+    /// [`Self::precision_map`] carries the per-layer assignment.
     fn precision(&self) -> Precision {
         self.model_cfg().precision
+    }
+
+    /// Per-layer weight-precision assignment. Defaults to uniform at
+    /// [`Self::precision`]; backends built from a calibrated map override
+    /// it so the simulator sizes each AM layer's weight DMA from the
+    /// format the backend actually stores.
+    fn precision_map(&self) -> PrecisionMap {
+        PrecisionMap::uniform(self.precision())
     }
 
     /// Model-data bytes staged per decoding step (shared across fused
@@ -335,9 +345,11 @@ impl AmBackend for NativeBackend {
     }
 }
 
-/// The int8 backend: per-output-row affine-quantized weights with f32
-/// accumulate (`am::quant`); same streaming state as the f32 backend.
-/// Weights live behind an `Arc` so worker shards share one copy.
+/// The quantized backend: sub-f32 weights with f32 accumulate
+/// (`am::quant`) — uniform int8, packed int4, 2:4 structured-sparse
+/// int4, or a calibrated per-layer mix; same streaming state as the f32
+/// backend. Weights live behind an `Arc` so worker shards share one
+/// copy.
 pub struct QuantizedBackend {
     model: Arc<QuantizedTdsModel>,
     mfcc: Mfcc,
@@ -350,19 +362,48 @@ impl QuantizedBackend {
         QuantizedBackend { model: Arc::new(model), mfcc }
     }
 
-    /// Quantize an f32 model and wrap the result.
+    /// Quantize an f32 model uniformly to int8 and wrap the result.
     pub fn quantize(model: &TdsModel) -> Result<Self> {
         Ok(Self::new(QuantizedTdsModel::from_model(model)?))
+    }
+
+    /// Quantize an f32 model uniformly to packed int4.
+    pub fn quantize_int4(model: &TdsModel) -> Result<Self> {
+        Self::quantize_mixed(model, &PrecisionMap::uniform(Precision::Int4))
+    }
+
+    /// Prune + quantize an f32 model uniformly to 2:4 sparse int4.
+    pub fn quantize_int4_sparse(model: &TdsModel) -> Result<Self> {
+        Self::quantize_mixed(model, &PrecisionMap::uniform(Precision::Int4Sparse))
+    }
+
+    /// Quantize an f32 model with a calibrated per-layer precision map
+    /// (the output of `python/compile/calibrate.py`).
+    pub fn quantize_mixed(model: &TdsModel, map: &PrecisionMap) -> Result<Self> {
+        Ok(Self::new(QuantizedTdsModel::from_model_mixed(model, map)?))
     }
 }
 
 impl AmBackend for QuantizedBackend {
     fn name(&self) -> &'static str {
-        "native-int8"
+        let map = self.model.precision_map();
+        if !map.is_uniform() {
+            return "native-mixed";
+        }
+        match map.default {
+            Precision::Int8 => "native-int8",
+            Precision::Int4 => "native-int4",
+            Precision::Int4Sparse => "native-int4-sparse",
+            Precision::F32 => "native-mixed",
+        }
     }
 
     fn model_cfg(&self) -> &ModelConfig {
         &self.model.cfg
+    }
+
+    fn precision_map(&self) -> PrecisionMap {
+        self.model.precision_map().clone()
     }
 
     fn open_state(&self) -> Result<AmLaneState> {
@@ -559,9 +600,13 @@ mod tests {
             }
         }
         let model = TdsModel::random(ModelConfig::tiny_tds(), 3);
+        let map = PrecisionMap::parse("int4,output.fc=int8,g0.sub=f32").unwrap();
         let backends: Vec<Box<dyn AmBackend>> = vec![
             Box::new(NativeBackend::new(model.clone())),
             Box::new(QuantizedBackend::quantize(&model).unwrap()),
+            Box::new(QuantizedBackend::quantize_int4(&model).unwrap()),
+            Box::new(QuantizedBackend::quantize_int4_sparse(&model).unwrap()),
+            Box::new(QuantizedBackend::quantize_mixed(&model, &map).unwrap()),
         ];
         let mut rng = Rng::new(5);
         let cfg = model.cfg.clone();
@@ -589,6 +634,8 @@ mod tests {
         let originals: Vec<Box<dyn AmBackend>> = vec![
             Box::new(NativeBackend::new(model.clone())),
             Box::new(QuantizedBackend::quantize(&model).unwrap()),
+            Box::new(QuantizedBackend::quantize_int4(&model).unwrap()),
+            Box::new(QuantizedBackend::quantize_int4_sparse(&model).unwrap()),
         ];
         let mut rng = Rng::new(8);
         let samples: Vec<f32> = (0..model.cfg.samples_per_step())
@@ -615,9 +662,12 @@ mod tests {
         // Snapshot after one step, restore, then score the same next
         // step on both: outputs must be bit-equal for f32 and int8.
         let model = TdsModel::random(ModelConfig::tiny_tds(), 12);
+        let map = PrecisionMap::parse("int4_sparse,output.fc=int8").unwrap();
         let backends: Vec<Box<dyn AmBackend>> = vec![
             Box::new(NativeBackend::new(model.clone())),
             Box::new(QuantizedBackend::quantize(&model).unwrap()),
+            Box::new(QuantizedBackend::quantize_int4(&model).unwrap()),
+            Box::new(QuantizedBackend::quantize_mixed(&model, &map).unwrap()),
         ];
         let mut rng = Rng::new(77);
         let n = model.cfg.samples_per_step();
@@ -637,6 +687,31 @@ mod tests {
             b.score_step(&mut restored, &second, &mut sc, &mut out_rest).unwrap();
             assert_eq!(out_live, out_rest, "backend {}", b.name());
         }
+    }
+
+    #[test]
+    fn below_int8_backends_report_format_metadata() {
+        let model = TdsModel::random(ModelConfig::tiny_tds(), 4);
+        let i4 = QuantizedBackend::quantize_int4(&model).unwrap();
+        assert_eq!(i4.name(), "native-int4");
+        assert_eq!(i4.precision(), Precision::Int4);
+        assert!(i4.precision_map().is_uniform());
+        let sp = QuantizedBackend::quantize_int4_sparse(&model).unwrap();
+        assert_eq!(sp.name(), "native-int4-sparse");
+        assert_eq!(sp.precision(), Precision::Int4Sparse);
+        // Sub-byte formats shrink the headline weight bytes: int4 is at
+        // most half of int8, and 2:4 sparse undercuts packed int4.
+        let i8b = QuantizedBackend::quantize(&model).unwrap().weight_bytes_per_step();
+        assert!(2 * i4.weight_bytes_per_step() <= i8b);
+        assert!(sp.weight_bytes_per_step() < i4.weight_bytes_per_step());
+        let map = PrecisionMap::parse("int4,output.fc=int8,g0.sub=f32").unwrap();
+        let mixed = QuantizedBackend::quantize_mixed(&model, &map).unwrap();
+        assert_eq!(mixed.name(), "native-mixed");
+        assert_eq!(mixed.precision(), Precision::Int4);
+        assert_eq!(mixed.precision_map(), map);
+        // Overrides naming nonexistent layers are rejected up front.
+        let bad = PrecisionMap::parse("int4,nope=int8").unwrap();
+        assert!(QuantizedBackend::quantize_mixed(&model, &bad).is_err());
     }
 
     #[test]

@@ -25,7 +25,9 @@ use std::fmt;
 use std::path::{Path, PathBuf};
 
 use crate::am::TdsModel;
-use crate::config::{BatchConfig, DecoderConfig, OverloadPolicy, Precision, ShardConfig};
+use crate::config::{
+    BatchConfig, DecoderConfig, OverloadPolicy, Precision, PrecisionMap, ShardConfig,
+};
 use crate::decoder::{BeamDecoder, Rescorer, TrigramLm};
 use crate::lexicon::Lexicon;
 use crate::lm::NgramLm;
@@ -116,6 +118,7 @@ enum BackendChoice {
 pub struct EngineBuilder {
     backend: Option<BackendChoice>,
     precision: Option<Precision>,
+    precision_map: Option<PrecisionMap>,
     decoder: DecoderConfig,
     batch: BatchConfig,
     shards: ShardConfig,
@@ -166,11 +169,22 @@ impl EngineBuilder {
         self
     }
 
-    /// Weight precision for the native backend (`Int8` quantizes the
-    /// supplied f32 model at build time). Requesting a precision a
+    /// Weight precision for the native backend (the quantized formats —
+    /// `Int8`, packed `Int4`, 2:4 sparse `Int4Sparse` — are applied to
+    /// the supplied f32 model at build time). Requesting a precision a
     /// custom/XLA backend doesn't already have is a [`BuildError`].
     pub fn precision(mut self, precision: Precision) -> Self {
         self.precision = Some(precision);
+        self
+    }
+
+    /// Per-layer weight-precision map for the native backend (the output
+    /// of the compile-side calibration pass) — quantizes each conv/FC
+    /// layer at its resolved format at build time. Wins over
+    /// [`Self::precision`]; the two conflict unless the scalar precision
+    /// equals the map's default.
+    pub fn precision_map(mut self, map: PrecisionMap) -> Self {
+        self.precision_map = Some(map);
         self
     }
 
@@ -313,12 +327,39 @@ impl EngineBuilder {
         let backend: Box<dyn AmBackend> = match choice {
             BackendChoice::Failed(e) => return Err(e),
             BackendChoice::Native(model) => {
-                match self.precision.unwrap_or(model.cfg.precision) {
-                    Precision::F32 => Box::new(NativeBackend::new(model)),
-                    Precision::Int8 => Box::new(
-                        QuantizedBackend::quantize(&model)
-                            .map_err(|e| BuildError::Model(format!("{e:#}")))?,
-                    ),
+                if let Some(map) = &self.precision_map {
+                    if let Some(p) = self.precision {
+                        if p != map.default {
+                            return Err(BuildError::Precision(format!(
+                                "precision({p}) conflicts with precision_map default {}",
+                                map.default
+                            )));
+                        }
+                    }
+                    if map.is_uniform() && map.default == Precision::F32 {
+                        Box::new(NativeBackend::new(model))
+                    } else {
+                        Box::new(
+                            QuantizedBackend::quantize_mixed(&model, map)
+                                .map_err(|e| BuildError::Model(format!("{e:#}")))?,
+                        )
+                    }
+                } else {
+                    match self.precision.unwrap_or(model.cfg.precision) {
+                        Precision::F32 => Box::new(NativeBackend::new(model)),
+                        Precision::Int8 => Box::new(
+                            QuantizedBackend::quantize(&model)
+                                .map_err(|e| BuildError::Model(format!("{e:#}")))?,
+                        ),
+                        Precision::Int4 => Box::new(
+                            QuantizedBackend::quantize_int4(&model)
+                                .map_err(|e| BuildError::Model(format!("{e:#}")))?,
+                        ),
+                        Precision::Int4Sparse => Box::new(
+                            QuantizedBackend::quantize_int4_sparse(&model)
+                                .map_err(|e| BuildError::Model(format!("{e:#}")))?,
+                        ),
+                    }
                 }
             }
             BackendChoice::Custom(b) => {
@@ -329,6 +370,15 @@ impl EngineBuilder {
                              (re-quantization applies to .native() models only)",
                             b.name(),
                             b.precision()
+                        )));
+                    }
+                }
+                if let Some(map) = &self.precision_map {
+                    if *map != b.precision_map() {
+                        return Err(BuildError::Precision(format!(
+                            "backend '{}' has a fixed per-layer precision map \
+                             (re-calibration applies to .native() models only)",
+                            b.name()
                         )));
                     }
                 }

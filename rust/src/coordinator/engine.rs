@@ -50,8 +50,8 @@ use crate::config::{
     BatchConfig, DecoderConfig, ModelConfig, OverloadPolicy, PipelineDesc, ShardConfig, StageDesc,
 };
 use crate::decoder::{
-    BeamDecoder, DecodeScratch, DecodeState, DecoderSnapshot, NbestEntry, Rescored, Rescorer,
-    Transcript,
+    BeamDecoder, DecodeScratch, DecodeState, DecoderSnapshot, NbestEntry, RescoreStats, Rescored,
+    Rescorer, Transcript,
 };
 use crate::lexicon::Lexicon;
 use crate::lm::NgramLm;
@@ -102,6 +102,10 @@ pub struct Engine {
     /// Optional second-pass rescorer applied to the N-best list at
     /// utterance finish ([`EngineBuilder::rescore`]).
     rescorer: Option<Rescorer>,
+    /// Running statistics over the N-best lists this engine has served —
+    /// the measured input the simulator sizes its rescore kernel from
+    /// (`HypWorkload::with_rescore_stats`) instead of a fixed constant.
+    rescore_stats: Cell<RescoreStats>,
     scratch: RefCell<EngineScratch>,
     /// Test/ops fault-injection hooks (see [`FaultHooks`]).
     faults: FaultHooks,
@@ -443,6 +447,7 @@ impl Engine {
             word_lm_ids,
             nbest_n,
             rescorer,
+            rescore_stats: Cell::new(RescoreStats::default()),
             scratch: RefCell::new(EngineScratch::default()),
             faults,
             served_steps: Cell::new(0),
@@ -485,9 +490,12 @@ impl Engine {
     /// program per decoder part". When a second-pass rescorer is
     /// configured, the finish-time [`StageDesc::Rescore`] stage appears
     /// at the end of the list — the simulator sizes its kernel from the
-    /// same description.
+    /// same description. The backend's per-layer precision map rides
+    /// along ([`PipelineDesc::precisions`]), so the simulator charges
+    /// each layer's weight DMA at the width actually served.
     pub fn pipeline(&self) -> PipelineDesc {
-        let mut p = PipelineDesc::for_model(&self.model_cfg);
+        let mut p =
+            PipelineDesc::for_model_mixed(&self.model_cfg, self.backend.precision_map());
         if self.rescorer.is_some() {
             p.stages.push(StageDesc::Rescore { nbest: self.nbest_n });
         }
@@ -502,6 +510,14 @@ impl Engine {
     /// The configured second-pass rescorer, if any.
     pub fn rescorer(&self) -> Option<&Rescorer> {
         self.rescorer.as_ref()
+    }
+
+    /// Measured statistics over every N-best list this engine has served
+    /// (zeroed at construction; workers measure independently). Feed
+    /// this to `accel::HypWorkload::with_rescore_stats` so the simulated
+    /// rescore cost reflects real utterance lengths.
+    pub fn rescore_stats(&self) -> RescoreStats {
+        self.rescore_stats.get()
     }
 
     /// A batcher configured with this engine's batching policy.
@@ -880,6 +896,9 @@ impl Engine {
         self.drain_padded(s, &decoder)?;
         let transcript = decoder.finish(&s.decode);
         let entries = decoder.nbest(&s.decode, self.nbest_n);
+        let mut stats = self.rescore_stats.get();
+        stats.record(&entries);
+        self.rescore_stats.set(stats);
         let rescored = self.rescorer.as_ref().map(|r| {
             r.rescore(&entries, &self.lexicon, &self.lm, self.dec_cfg.lm_weight)
         });
@@ -1122,6 +1141,36 @@ mod tests {
     }
 
     #[test]
+    fn mixed_precision_engine_decodes_and_publishes_its_map() {
+        use crate::config::PrecisionMap;
+        let map = PrecisionMap::parse("int4,output.fc=int8,g0.sub=f32").unwrap();
+        let e = Engine::builder()
+            .native(TdsModel::random(ModelConfig::tiny_tds(), 11))
+            .precision_map(map.clone())
+            .build()
+            .unwrap();
+        assert_eq!(e.backend().name(), "native-mixed");
+        assert_eq!(e.backend().precision_map(), map);
+        // The published pipeline carries the same per-layer map the
+        // backend serves — the simulator's DMA accounting source.
+        let p = e.pipeline();
+        assert_eq!(p.precisions, map);
+        p.validate().unwrap();
+        // Batched mixed path matches the scalar mixed path exactly.
+        let mut rng = Rng::new(17);
+        let u = Synthesizer::default().render(&[1, 6], &mut rng);
+        let (t_ref, m) = e.decode_utterance(&u.samples).unwrap();
+        assert!(m.steps > 0);
+        let mut s = e.open(false).unwrap();
+        e.push_audio(&mut s, &u.samples);
+        let mut refs = vec![&mut s];
+        e.step_batch(&mut refs).unwrap();
+        let t_batched = e.finish(&mut s).unwrap();
+        assert_eq!(t_ref.text, t_batched.text);
+        assert_eq!(t_ref.score, t_batched.score);
+    }
+
+    #[test]
     fn batcher_policy_full_take_remove() {
         let cfg = crate::config::BatchConfig { max_batch: 2, max_wait_frames: 8 };
         let model = ModelConfig::tiny_tds();
@@ -1177,8 +1226,14 @@ mod tests {
     fn snapshot_restore_mid_utterance_is_transcript_identical() {
         // Stream half an utterance, snapshot (through the full byte
         // encoding), restore into a worker-clone engine, finish there:
-        // text AND score must equal the uninterrupted decode. f32 + int8.
-        for precision in [Precision::F32, Precision::Int8] {
+        // text AND score must equal the uninterrupted decode, for every
+        // served weight format.
+        for precision in [
+            Precision::F32,
+            Precision::Int8,
+            Precision::Int4,
+            Precision::Int4Sparse,
+        ] {
             let e = Engine::builder()
                 .native(TdsModel::random(ModelConfig::tiny_tds(), 11))
                 .precision(precision)
@@ -1344,6 +1399,12 @@ mod tests {
         assert_eq!(r.entries[0].score, t_ref.score);
         let rescored = r.rescored.expect("rescorer configured");
         assert_eq!(rescored.len(), r.entries.len());
+        // Serving the list measured it: the simulator's rescore kernel
+        // can now be sized from reality.
+        let st = e.rescore_stats();
+        assert_eq!(st.lists, 1);
+        assert_eq!(st.entries as usize, r.entries.len());
+        assert!(st.avg_words().is_some());
         // Every second-pass entry keeps its exact first-pass score.
         for re in &rescored {
             assert!(r.entries.iter().any(|en| en.score == re.first_pass));

@@ -55,7 +55,6 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc;
 use std::time::Instant;
 
-use crate::config::Precision;
 use crate::util::json::{Json, JsonObj};
 
 use super::engine::Engine;
@@ -195,14 +194,17 @@ fn hello_json() -> Json {
 /// engine configuration by construction).
 pub(crate) fn config_json(engine: &Engine) -> Json {
     let m = &engine.model_cfg;
-    let precision = match engine.backend().precision() {
-        Precision::F32 => "f32",
-        Precision::Int8 => "int8",
-    };
     obj(&[
         ("proto", Json::Num(PROTO_VERSION as f64)),
         ("backend", Json::Str(engine.backend().name().to_string())),
-        ("precision", Json::Str(precision.to_string())),
+        (
+            "precision",
+            Json::Str(engine.backend().precision().as_str().to_string()),
+        ),
+        (
+            "precisions",
+            Json::Str(engine.backend().precision_map().to_string()),
+        ),
         (
             "kernel_isa",
             Json::Str(engine.backend().kernel_isa().as_str().to_string()),
@@ -455,7 +457,8 @@ mod tests {
         // A v1 client: no hello handshake, v1 ops only. Must work
         // unchanged against the v2 server.
         let server = start_test_server();
-        let samples: Vec<String> = (0..3200).map(|i| format!("{:.4}", (i as f32 * 0.01).sin() * 0.1)).collect();
+        let samples: Vec<String> =
+            (0..3200).map(|i| format!("{:.4}", (i as f32 * 0.01).sin() * 0.1)).collect();
         let feed = format!(
             r#"{{"op":"feed","session":1,"samples":[{}]}}"#,
             samples.join(",")
@@ -506,6 +509,8 @@ mod tests {
         let c = &resps[0];
         assert_eq!(c.get("backend").unwrap().as_str(), Some("native-f32"));
         assert_eq!(c.get("precision").unwrap().as_str(), Some("f32"));
+        // The per-layer map rides along in CLI syntax (uniform here).
+        assert_eq!(c.get("precisions").unwrap().as_str(), Some("f32"));
         // The host kernel ISA is whatever dispatch resolved for this
         // process (runtime detection or ASRPU_KERNEL_ISA) — assert it is
         // present and in-vocabulary rather than pinning a host-dependent

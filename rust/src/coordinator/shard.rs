@@ -1523,12 +1523,13 @@ impl Router {
         }
     }
 
-    /// Forward a router-internal control job (die/shutdown), accounting
-    /// its queue-depth slot. The send may block on *queue space* — a
-    /// bounded wait on a live worker draining, never on a worker's
-    /// answer (migration legs are asynchronous and go through
-    /// `try_send`). Returns false (and runs death handling) when the
-    /// worker is gone.
+    /// Forward the shutdown control job, accounting its queue-depth
+    /// slot. The send may block on *queue space* — a bounded wait on a
+    /// live worker draining, never on a worker's answer — which is
+    /// acceptable only because shutdown is terminal; every other
+    /// control path (including the kill drill, whose target is by
+    /// definition suspect) must use a non-blocking `try_send`. Returns
+    /// false (and runs death handling) when the worker is gone.
     fn send(&mut self, shard: usize, job: Job) -> bool {
         self.shards[shard].depth.fetch_add(1, Ordering::Relaxed);
         if self.shards[shard].tx.send(job).is_err() {
@@ -2692,16 +2693,45 @@ fn router_loop(jobs: mpsc::Receiver<RouterMsg>, mut r: Router) {
                     // the supervisor harvests the report (or gives up
                     // at the deadline) and `finish_kill` answers once
                     // every recovery adopt has resolved.
-                    r.kills.insert(
-                        shard,
-                        KillState {
-                            reply,
-                            deadline: Instant::now() + KILL_REPORT_WAIT,
-                            pending: None,
-                            recovered: 0,
-                        },
-                    );
-                    r.send(shard, Job::Die);
+                    //
+                    // The Die job is enqueued non-blocking: the drill's
+                    // target is by definition a suspect worker, and a
+                    // wedged worker with a full queue must not freeze
+                    // the router (and every client behind it) on a
+                    // blocking send. A full queue bounces the drill
+                    // with `backpressure` — no KillState is left
+                    // behind, so the caller can simply retry.
+                    r.shards[shard].depth.fetch_add(1, Ordering::Relaxed);
+                    match r.shards[shard].tx.try_send(Job::Die) {
+                        Ok(()) => {
+                            r.kills.insert(
+                                shard,
+                                KillState {
+                                    reply,
+                                    deadline: Instant::now() + KILL_REPORT_WAIT,
+                                    pending: None,
+                                    recovered: 0,
+                                },
+                            );
+                        }
+                        Err(mpsc::TrySendError::Full(_)) => {
+                            r.shards[shard].depth.fetch_sub(1, Ordering::Relaxed);
+                            let _ = reply.send(backpressure_json(
+                                &format!("shard {shard} queue full, kill not delivered"),
+                                r.overload.retry_after_ms,
+                            ));
+                        }
+                        Err(mpsc::TrySendError::Disconnected(_)) => {
+                            // Died on its own in the meantime: run the
+                            // usual death handling; nothing to drill.
+                            r.shards[shard].depth.fetch_sub(1, Ordering::Relaxed);
+                            r.handle_death(shard);
+                            let _ = reply.send(obj(&[
+                                ("killed", Json::Num(shard as f64)),
+                                ("recovered", Json::Num(0.0)),
+                            ]));
+                        }
+                    }
                 }
             }
             RouterMsg::PoolAdd { reply } => r.add_worker(&reply),
@@ -3494,6 +3524,65 @@ mod tests {
         let (t_ref, _) = reference.decode_utterance(&audio).unwrap();
         assert_eq!(done.text, t_ref.text, "replayed audio decodes bit-identically");
         assert_eq!(done.score, t_ref.score as f64);
+        p.shutdown();
+    }
+
+    #[test]
+    fn kill_worker_bounces_instead_of_blocking_on_a_wedged_queue() {
+        // Regression (KNOWN_FAILURES residual): the kill drill used a
+        // *blocking* send for the Die job, so killing a wedged worker
+        // whose 1-slot queue was already full froze the router — and
+        // with it every other client — until the worker drained. The
+        // drill must bounce with `backpressure` instead, leave no
+        // half-armed KillState behind, and succeed on a later retry.
+        let p = ShardPool::start(
+            move || {
+                Ok(Engine::builder()
+                    .native(TdsModel::random(ModelConfig::tiny_tds(), 5))
+                    .batch(BatchConfig::default())
+                    // The wedge: the worker sleeps before answering each
+                    // flushed feed, so a second feed parks in its single
+                    // queue slot for the whole window.
+                    .fault_reply_delay_ms(1500)
+                    .shards(crate::config::ShardConfig {
+                        workers: 2,
+                        rebalance_threshold: 0,
+                        checkpoint_interval: 1,
+                        ..Default::default()
+                    })
+                    .build()?)
+            },
+            1, // queue depth 1: one in-flight job wedges the shard
+        )
+        .unwrap();
+        let a = p.open().unwrap(); // shard 0
+        let audio = utterance(90);
+        let half = audio.len() / 2;
+        // Feed 1 occupies the worker (it sleeps inside the drain);
+        // feed 2 then fills the queue slot behind it.
+        let rx1 = p.feed_async(a, &audio[..half]).unwrap();
+        // Let the worker pop feed 1 (and start its sleepy drain) so
+        // feed 2 lands in the queue slot instead of bouncing.
+        std::thread::sleep(std::time::Duration::from_millis(200));
+        let rx2 = p.feed_async(a, &audio[half..]).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(200));
+        // The drill must answer promptly with a structured bounce, not
+        // block the router behind the wedged worker.
+        let t0 = Instant::now();
+        let err = p.kill_worker(0).expect_err("full queue must bounce the drill");
+        assert!(t0.elapsed() < Duration::from_millis(700), "kill blocked the router");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("backpressure"), "{msg}");
+        // The bounced drill armed nothing: both wedged feeds answer
+        // normally once the worker drains.
+        ShardPool::parse_feed(rx1.recv().unwrap()).unwrap();
+        ShardPool::parse_feed(rx2.recv().unwrap()).unwrap();
+        // Retrying against the drained queue completes the drill and
+        // recovers the session from its checkpoints.
+        assert_eq!(p.kill_worker(0).unwrap(), 1, "retry must recover the session");
+        let done = p.finish(a).unwrap();
+        let (t_ref, _) = reference_engine().decode_utterance(&audio).unwrap();
+        assert_eq!(done.text, t_ref.text, "recovered transcript");
         p.shutdown();
     }
 

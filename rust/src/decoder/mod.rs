@@ -26,7 +26,7 @@ use anyhow::{ensure, Result};
 use std::borrow::Cow;
 pub use lattice::{Lattice, LatticePath};
 pub use prune::{KeyMap, PruneStats, Pruner};
-pub use rescore::{Rescored, Rescorer, TrigramLm};
+pub use rescore::{RescoreStats, Rescored, Rescorer, TrigramLm};
 
 /// Sentinel for "no backtrack entry".
 const NO_BACK: u32 = u32::MAX;

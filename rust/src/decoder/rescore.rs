@@ -124,6 +124,43 @@ impl TrigramLm {
     }
 }
 
+/// Running statistics over served N-best lists — the measured
+/// counterpart of the simulator's nominal rescore-path length
+/// (`accel::kernels::RESCORE_AVG_WORDS`). The engine folds every list
+/// it serves into these counters; the simulator sizes its finish-time
+/// rescore kernel from `avg_words` via
+/// `HypWorkload::with_rescore_stats`, so the simulated second-pass cost
+/// tracks real utterance lengths instead of a fixed constant.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RescoreStats {
+    /// N-best lists measured so far.
+    pub lists: u64,
+    /// Total entries across those lists.
+    pub entries: u64,
+    /// Total words across those entries.
+    pub words: u64,
+}
+
+impl RescoreStats {
+    /// Fold one served N-best list into the running totals.
+    pub fn record(&mut self, entries: &[NbestEntry]) {
+        self.lists += 1;
+        self.entries += entries.len() as u64;
+        self.words += entries.iter().map(|e| e.words.len() as u64).sum::<u64>();
+    }
+
+    /// Mean words per N-best path, `None` until at least one non-empty
+    /// list was measured (callers keep their nominal sizing constant).
+    pub fn avg_words(&self) -> Option<f64> {
+        (self.entries > 0).then(|| self.words as f64 / self.entries as f64)
+    }
+
+    /// Mean entries per measured list (reporting).
+    pub fn avg_entries(&self) -> Option<f64> {
+        (self.lists > 0).then(|| self.entries as f64 / self.lists as f64)
+    }
+}
+
 /// One N-best entry after the second pass.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Rescored {
@@ -241,7 +278,8 @@ mod tests {
     fn rescoring_reranks_and_keeps_first_pass_scores() {
         use crate::lexicon::{Lexicon, TokenSet};
         // Lexicon over the corpus words so word ids resolve to names.
-        let tokens = TokenSet::new(vec!["a".into(), "b".into(), "c".into(), "d".into(), "x".into()]);
+        let tokens =
+            TokenSet::new(vec!["a".into(), "b".into(), "c".into(), "d".into(), "x".into()]);
         let spell = |s: &str| s.chars().map(|c| tokens.id(&c.to_string()).unwrap()).collect();
         let entries_words: Vec<(String, Vec<u32>)> = ["a", "b", "c", "d", "x"]
             .iter()
@@ -273,6 +311,24 @@ mod tests {
         // Deterministic: same inputs, same output.
         let again = rescorer.rescore(&[e1, e2], &lex, &bi, 1.2);
         assert_eq!(out, again);
+    }
+
+    #[test]
+    fn rescore_stats_accumulate_and_average() {
+        let e = |n: usize| NbestEntry { words: vec![0; n], text: String::new(), score: 0.0 };
+        let mut st = RescoreStats::default();
+        assert_eq!(st.avg_words(), None);
+        assert_eq!(st.avg_entries(), None);
+        st.record(&[e(3), e(5)]);
+        st.record(&[e(4)]);
+        assert_eq!(st.lists, 2);
+        assert_eq!(st.entries, 3);
+        assert_eq!(st.words, 12);
+        assert_eq!(st.avg_words(), Some(4.0));
+        assert_eq!(st.avg_entries(), Some(1.5));
+        // An empty list counts as a list but leaves the word mean alone.
+        st.record(&[]);
+        assert_eq!(st.avg_words(), Some(4.0));
     }
 
     #[test]

@@ -39,14 +39,19 @@
 //! `--backend native|xla|auto` picks the model source, `--beam` the
 //! search width, `--batch`/`--batch-wait` the serving batch policy; the
 //! builder validates the combination and reports typed errors.
+//! Weight formats (native backend): `--precision f32|int8|int4|
+//! int4_sparse` quantizes every layer uniformly; `--precision-map M`
+//! applies the per-layer calibration output instead, either inline
+//! (`int4,output.fc=int8`) or `@DIR` to load `DIR/precision.bin`
+//! written by `python/compile/calibrate.py`.
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use asrpu::accel::{simulate_step, simulate_step_sharded, HypWorkload, SimMode};
 use asrpu::am::TdsModel;
 use asrpu::config::{
     artifacts_dir, AccelConfig, BatchConfig, DecoderConfig, ModelConfig, OverloadPolicy,
-    ShardConfig,
+    Precision, PrecisionMap, ShardConfig,
 };
 use asrpu::coordinator::{Engine, EngineBuilder, Server};
 use asrpu::decoder::TrigramLm;
@@ -62,7 +67,7 @@ const VALUE_KEYS: &[&str] = &[
     "n", "seed", "beam", "port", "pes", "mac", "freq-mhz", "backend", "mode", "steps",
     "queue", "batch", "batch-wait", "workers", "rebalance", "checkpoint", "shards",
     "admit", "retry-after", "shed", "route-retries", "route-backoff", "degrade",
-    "nbest", "rescore", "max-workers", "drain",
+    "nbest", "rescore", "max-workers", "drain", "precision", "precision-map",
 ];
 
 fn main() {
@@ -123,6 +128,25 @@ fn engine_builder(args: &cli::Args) -> Result<EngineBuilder> {
     if rescore_w != 0.0 {
         let tri = TrigramLm::estimate(&spec::sample_corpus(2000, 7777), 0.4)?;
         builder = builder.rescore(tri, rescore_w as f32);
+    }
+    // Weight formats: `--precision` quantizes every layer of a native
+    // model uniformly; `--precision-map` applies the per-layer
+    // calibration result, inline (`int4,output.fc=int8`) or `@DIR` for
+    // DIR/precision.bin from the compile-side calibration pass.
+    let precision = args.str_or("precision", "");
+    if !precision.is_empty() {
+        builder = builder.precision(Precision::parse(&precision).map_err(|e| anyhow!(e))?);
+    }
+    let pmap = args.str_or("precision-map", "");
+    if !pmap.is_empty() {
+        let map = match pmap.strip_prefix('@') {
+            Some(dir) => {
+                PrecisionMap::from_artifacts(&ModelConfig::tiny_tds(), std::path::Path::new(dir))
+            }
+            None => PrecisionMap::parse(&pmap),
+        }
+        .map_err(|e| anyhow!(e))?;
+        builder = builder.precision_map(map);
     }
     Ok(builder)
 }
@@ -205,8 +229,15 @@ fn cmd_decode(args: &cli::Args) -> Result<()> {
 /// *recipe* does). Every engine-shaping flag must be threaded through
 /// here: dropping one silently respawns a default-configured engine.
 /// `--beam` was exactly such a drop (KNOWN_FAILURES, fixed in PR 9).
-fn respawn_argv(backend: &str, beam: f64, nbest: usize, rescore: f64) -> Vec<String> {
-    vec![
+fn respawn_argv(
+    backend: &str,
+    beam: f64,
+    nbest: usize,
+    rescore: f64,
+    precision: &str,
+    precision_map: &str,
+) -> Vec<String> {
+    let mut argv = vec![
         "serve".to_string(),
         "--backend".into(),
         backend.to_string(),
@@ -216,7 +247,16 @@ fn respawn_argv(backend: &str, beam: f64, nbest: usize, rescore: f64) -> Vec<Str
         nbest.to_string(),
         "--rescore".into(),
         rescore.to_string(),
-    ]
+    ];
+    if !precision.is_empty() {
+        argv.push("--precision".into());
+        argv.push(precision.to_string());
+    }
+    if !precision_map.is_empty() {
+        argv.push("--precision-map".into());
+        argv.push(precision_map.to_string());
+    }
+    argv
 }
 
 fn cmd_serve(args: &cli::Args) -> Result<()> {
@@ -226,6 +266,8 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
     let beam = args.f64_or("beam", DecoderConfig::default().beam as f64)?;
     let nbest = args.usize_or("nbest", 0)?;
     let rescore = args.f64_or("rescore", 0.0)?;
+    let precision = args.str_or("precision", "");
+    let precision_map = args.str_or("precision-map", "");
     let batch_default = BatchConfig::default();
     let batch = BatchConfig {
         max_batch: args.usize_or("batch", batch_default.max_batch)?,
@@ -276,7 +318,7 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
         &format!("127.0.0.1:{port}"),
         move || {
             // Rebuild the engine on the device thread (PJRT not Send).
-            let argv = respawn_argv(&backend, beam, nbest, rescore);
+            let argv = respawn_argv(&backend, beam, nbest, rescore, &precision, &precision_map);
             let args = cli::parse(&argv, VALUE_KEYS)?;
             Ok(engine_builder(&args)?
                 .batch(batch)
@@ -469,10 +511,52 @@ mod tests {
         // custom beam exactly.
         let custom = 6.5f64;
         assert_ne!(custom as f32, DecoderConfig::default().beam);
-        let argv = respawn_argv("native", custom, 0, 0.0);
+        let argv = respawn_argv("native", custom, 0, 0.0, "", "");
         let args = cli::parse(&argv, VALUE_KEYS).unwrap();
         let engine = engine_builder(&args).unwrap().build().unwrap();
         assert_eq!(engine.dec_cfg.beam, custom as f32);
+    }
+
+    #[test]
+    fn precision_flag_quantizes_the_native_backend() {
+        let args = cli::parse(
+            &[
+                "decode".to_string(),
+                "--backend".into(),
+                "native".into(),
+                "--precision".into(),
+                "int4".into(),
+            ],
+            VALUE_KEYS,
+        )
+        .unwrap();
+        let engine = build_engine(&args).unwrap();
+        assert_eq!(engine.backend().name(), "native-int4");
+    }
+
+    #[test]
+    fn respawn_argv_preserves_precision_flags() {
+        // The device-thread respawn must carry every engine-shaping flag
+        // (the `--beam` drop class of bug); a serve with a calibration
+        // map must rebuild the same mixed-precision backend.
+        let argv = respawn_argv("native", 8.0, 0, 0.0, "", "int4,output.fc=int8");
+        let args = cli::parse(&argv, VALUE_KEYS).unwrap();
+        let engine = engine_builder(&args).unwrap().build().unwrap();
+        assert_eq!(engine.backend().name(), "native-mixed");
+        assert_eq!(
+            engine.backend().precision_map(),
+            PrecisionMap::parse("int4,output.fc=int8").unwrap()
+        );
+    }
+
+    #[test]
+    fn bad_precision_flag_errors() {
+        let args = cli::parse(
+            &["decode".to_string(), "--precision".into(), "int2".into()],
+            VALUE_KEYS,
+        )
+        .unwrap();
+        assert!(build_engine(&args).is_err());
     }
 
     #[test]

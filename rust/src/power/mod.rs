@@ -238,6 +238,30 @@ mod tests {
     }
 
     #[test]
+    fn int4_weights_cut_dma_traffic_and_step_energy_below_int8() {
+        // Sub-int8 formats must keep paying off in the power model: the
+        // packed-int4 step streams strictly fewer weight bytes than the
+        // int8 paper config (and 2:4 sparse fewer still), so per-step
+        // DMA energy — and total energy — keeps falling.
+        use crate::accel::simulate_pipeline;
+        use crate::config::{PipelineDesc, Precision, PrecisionMap};
+        let accel = AccelConfig::paper();
+        let m = ModelConfig::paper_tds();
+        let hyp = HypWorkload::default();
+        let step = |p: Precision| {
+            let pipe = PipelineDesc::for_model_mixed(&m, PrecisionMap::uniform(p));
+            simulate_pipeline(&pipe, &accel, &hyp, SimMode::Ideal, 1)
+        };
+        let r8 = step(Precision::Int8);
+        let r4 = step(Precision::Int4);
+        let rs = step(Precision::Int4Sparse);
+        assert!(r4.dma_bytes < r8.dma_bytes, "int4 {} !< int8 {}", r4.dma_bytes, r8.dma_bytes);
+        assert!(rs.dma_bytes < r4.dma_bytes, "sparse {} !< int4 {}", rs.dma_bytes, r4.dma_bytes);
+        assert!(step_energy_j(&r4, &accel) < step_energy_j(&r8, &accel));
+        assert!(step_energy_j(&rs, &accel) < step_energy_j(&r4, &accel));
+    }
+
+    #[test]
     fn total_area_matches_paper() {
         // §5.3: "the total area is 11.68 mm²".
         let b = ChipBudget::for_config(&AccelConfig::paper());

@@ -8,6 +8,7 @@ use asrpu::accel::{build_step_kernels, HypWorkload, KernelClass};
 use asrpu::am::TdsModel;
 use asrpu::config::{
     artifacts_dir, AccelConfig, BatchConfig, DecoderConfig, ModelConfig, PipelineDesc, Precision,
+    PrecisionMap,
 };
 use asrpu::coordinator::{BuildError, Engine, NativeBackend, QuantizedBackend};
 use asrpu::runtime::Runtime;
@@ -66,6 +67,45 @@ fn builder_misconfiguration_returns_typed_errors() {
         .build()
         .err();
     assert!(matches!(err, Some(BuildError::Precision(_))), "{err:?}");
+}
+
+#[test]
+fn precision_map_validation_returns_typed_errors() {
+    let model = TdsModel::random(ModelConfig::tiny_tds(), 3);
+
+    // Scalar precision and map default that disagree.
+    let err = Engine::builder()
+        .native(model.clone())
+        .precision(Precision::Int8)
+        .precision_map(PrecisionMap::uniform(Precision::Int4))
+        .build()
+        .err();
+    assert!(matches!(err, Some(BuildError::Precision(_))), "{err:?}");
+
+    // Agreeing scalar + map default is fine, and a uniform-f32 map is
+    // the plain native backend.
+    let e = Engine::builder()
+        .native(model.clone())
+        .precision(Precision::F32)
+        .precision_map(PrecisionMap::uniform(Precision::F32))
+        .build()
+        .unwrap();
+    assert_eq!(e.backend().name(), "native-f32");
+
+    // Re-calibration request on a ready-made trait-object backend whose
+    // fixed map differs.
+    let err = Engine::builder()
+        .backend(Box::new(NativeBackend::new(model.clone())))
+        .precision_map(PrecisionMap::parse("int4,output.fc=int8").unwrap())
+        .build()
+        .err();
+    assert!(matches!(err, Some(BuildError::Precision(_))), "{err:?}");
+
+    // A map naming a layer the model does not have is a model error.
+    let mut bogus = PrecisionMap::uniform(Precision::Int4);
+    bogus.set("no.such.layer", Precision::Int8);
+    let err = Engine::builder().native(model).precision_map(bogus).build().err();
+    assert!(matches!(err, Some(BuildError::Model(_))), "{err:?}");
 }
 
 #[test]

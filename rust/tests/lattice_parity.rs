@@ -53,10 +53,10 @@ fn batched_nbest(e: &Engine, utts: &[Vec<f32>]) -> Vec<asrpu::coordinator::Nbest
 
 #[test]
 fn lattice_best_is_bit_identical_to_legacy_transcript() {
-    // Across f32/int8 and batch widths 1/3/16: the lattice-enabled
+    // Across f32/int8/int4 and batch widths 1/3/16: the lattice-enabled
     // engine's transcript AND its lattice's best path both equal the
     // plain engine's transcript exactly.
-    for precision in [Precision::F32, Precision::Int8] {
+    for precision in [Precision::F32, Precision::Int8, Precision::Int4] {
         let plain = engine(0, precision);
         let latt = engine(4, precision);
         for batch in [1usize, 3, 16] {

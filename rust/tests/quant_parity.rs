@@ -1,24 +1,50 @@
-//! Int8 quantization parity: the bounded-error contract of the
-//! `Precision::Int8` serving path.
+//! Quantization parity: the bounded-error contracts of the sub-f32
+//! serving paths (`Precision::Int8`, `Int4`, `Int4Sparse`).
 //!
-//! Two levels of guarantee, both asserted here:
-//!  1. **Weight-level (hard bound):** per-row quantize→dequantize error
-//!     stays within the documented `INT8_MAX_ROW_REL_ERR` bound for any
-//!     weight distribution (property test).
-//!  2. **Transcript-level:** on synthesized utterances, int8 decoding
+//! Three levels of guarantee, all asserted here:
+//!  1. **Weight-level (hard bound):** quantize→dequantize error stays
+//!     within the documented bounds (`INT8_MAX_ROW_REL_ERR`,
+//!     `INT4_MAX_GROUP_REL_ERR`, `SPARSE4_MAX_ROW_REL_ERR`) for any
+//!     weight distribution, and 2:4 pruning keeps exactly the two
+//!     largest magnitudes per block (property tests).
+//!  2. **Kernel-level (bit-exact):** the packed int4 and 2:4 sparse
+//!     FC/conv kernels agree bit for bit with the naive unpacked
+//!     oracles under *every* ISA this host can run, across
+//!     remainder-heavy shapes.
+//!  3. **Transcript-level:** on synthesized utterances, int8 decoding
 //!     picks the same transcript as f32 whenever the f32 decode is
-//!     confident relative to the *measured* logit divergence — and the
-//!     measured divergence itself must stay small. (With random tiny
-//!     models some utterances decode near a tie; demanding equality
-//!     there would test tie-breaking luck, not quantization quality.)
+//!     confident relative to the *measured* logit divergence — and a
+//!     mixed int4/sparse/int8 engine decodes ISA-invariantly. (With
+//!     random tiny models some utterances decode near a tie; demanding
+//!     f32 equality there would test tie-breaking luck, not
+//!     quantization quality.)
 
-use asrpu::am::quant::{dequantize, quantize_rows, INT8_MAX_ROW_REL_ERR};
-use asrpu::am::{QuantizedTdsModel, TdsModel};
-use asrpu::config::{DecoderConfig, ModelConfig, Precision};
+use asrpu::accel::{build_step_kernels, HypWorkload, KernelClass};
+use asrpu::am::gemm::dispatch::{self, KernelIsa};
+use asrpu::am::quant::{
+    dequantize, dequantize_int4, dequantize_sparse, prune_quantize_rows_2of4, quantize_rows,
+    quantize_rows_int4, INT4_GROUP, INT4_MAX_GROUP_REL_ERR, INT8_MAX_ROW_REL_ERR,
+    SPARSE4_MAX_ROW_REL_ERR,
+};
+use asrpu::am::{gemm, QuantizedTdsModel, TdsModel};
+use asrpu::config::{
+    AccelConfig, DecoderConfig, ModelConfig, PipelineDesc, Precision, PrecisionMap,
+};
 use asrpu::coordinator::Engine;
 use asrpu::synth::Synthesizer;
 use asrpu::util::prop;
 use asrpu::util::rng::Rng;
+
+/// Every kernel ISA this host can execute: scalar always, plus the
+/// detected SIMD tier when there is one.
+fn isas() -> Vec<KernelIsa> {
+    let mut v = vec![KernelIsa::Scalar];
+    let d = dispatch::detect();
+    if d != KernelIsa::Scalar {
+        v.push(d);
+    }
+    v
+}
 
 #[test]
 fn quantize_dequantize_rel_err_within_documented_bound() {
@@ -156,6 +182,301 @@ fn int8_decode_matches_f32_transcripts_on_synthesized_utterances() {
         "int8 matched only {matches}/{} f32 transcripts",
         seeds.len()
     );
+}
+
+#[test]
+fn int4_quantize_dequantize_rel_err_within_documented_bound() {
+    prop::check("int4-roundtrip-bound", 60, |g| {
+        let rows = 1 + g.index(8);
+        let cols = 1 + g.index(100);
+        let mut w = Vec::with_capacity(rows * cols);
+        for _ in 0..rows {
+            let mag = g.rng.uniform(0.0, 3.0) + 1e-4;
+            let skew = g.rng.uniform(-1.0, 1.0);
+            for _ in 0..cols {
+                w.push(g.rng.uniform(-mag, mag) + skew * mag);
+            }
+        }
+        let qw = quantize_rows_int4(&w, rows, cols);
+        for r in 0..rows {
+            let row = &w[r * cols..(r + 1) * cols];
+            for g0 in (0..cols).step_by(INT4_GROUP) {
+                let seg = &row[g0..(g0 + INT4_GROUP).min(cols)];
+                let amax = seg.iter().fold(0.0f32, |a, v| a.max(v.abs()));
+                let bound = INT4_MAX_GROUP_REL_ERR * amax.max(f32::EPSILON) + 1e-6;
+                for (j, &x) in seg.iter().enumerate() {
+                    let deq = dequantize_int4(&qw, r, g0 + j);
+                    asrpu::prop_assert!(
+                        (deq - x).abs() <= bound,
+                        "row {r} col {}: |{deq} - {x}| > {bound}",
+                        g0 + j
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sparse_prune_keeps_two_largest_per_block_within_documented_bound() {
+    prop::check("sparse-roundtrip-bound", 60, |g| {
+        let rows = 1 + g.index(8);
+        let cols = 1 + g.index(100);
+        let mut w = Vec::with_capacity(rows * cols);
+        for _ in 0..rows {
+            let mag = g.rng.uniform(0.0, 3.0) + 1e-4;
+            for _ in 0..cols {
+                w.push(g.rng.uniform(-mag, mag));
+            }
+        }
+        let qw = prune_quantize_rows_2of4(&w, rows, cols);
+        for r in 0..rows {
+            let row = &w[r * cols..(r + 1) * cols];
+            // Independently re-derive the survivor set: the 2 largest
+            // magnitudes per 4-column block, ties to the lower index.
+            let mut kept = vec![false; cols];
+            let mut amax = 0.0f32;
+            for b in 0..cols.div_ceil(4) {
+                let base = b * 4;
+                let len = (cols - base).min(4);
+                let mut idx: Vec<usize> = (0..len).collect();
+                idx.sort_by(|&a, &c| {
+                    row[base + c]
+                        .abs()
+                        .partial_cmp(&row[base + a].abs())
+                        .unwrap()
+                        .then(a.cmp(&c))
+                });
+                for &i in idx.iter().take(2) {
+                    kept[base + i] = true;
+                    amax = amax.max(row[base + i].abs());
+                }
+            }
+            let bound = SPARSE4_MAX_ROW_REL_ERR * amax.max(f32::EPSILON) + 1e-6;
+            for c in 0..cols {
+                let deq = dequantize_sparse(&qw, r, c);
+                if kept[c] {
+                    asrpu::prop_assert!(
+                        (deq - row[c]).abs() <= bound,
+                        "kept row {r} col {c}: |{deq} - {}| > {bound}",
+                        row[c]
+                    );
+                } else {
+                    asrpu::prop_assert!(
+                        deq == 0.0,
+                        "pruned row {r} col {c} dequantized to {deq}, not exactly 0"
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn int4_fc_kernel_bit_exact_vs_naive_oracle_on_every_isa() {
+    prop::check("int4-fc-oracle", 30, |g| {
+        // Crosses the 32-column group boundary, odd widths (half-filled
+        // pack bytes) and ragged SIMD lane blocks.
+        let in_dim = 1 + g.index(90);
+        let out_dim = 1 + g.index(40);
+        let batch = [1, 3, 16, 64][g.index(4)];
+        let w = g.vec_of(in_dim * out_dim, |r| r.uniform(-0.5, 0.5));
+        let bias = g.vec_of(out_dim, |r| r.uniform(-0.2, 0.2));
+        let qw = quantize_rows_int4(&w, out_dim, in_dim);
+        let xs = g.vec_of(batch * in_dim, |r| r.uniform(-1.0, 1.0));
+        let mut want = vec![0.0f32; batch * out_dim];
+        gemm::fc_batch_int4_naive_into(&qw.packed, &qw.scale, &qw.zp, &bias, &xs, batch, &mut want);
+        for isa in isas() {
+            let mut got = vec![0.0f32; batch * out_dim];
+            let mut gsum = Vec::new();
+            dispatch::with_forced_isa(isa, || {
+                gemm::fc_batch_int4_into(
+                    &qw.packed, &qw.scale, &qw.zp, &bias, &xs, batch, &mut gsum, &mut got,
+                );
+            });
+            for (i, (s, v)) in want.iter().zip(&got).enumerate() {
+                asrpu::prop_assert!(
+                    s.to_bits() == v.to_bits(),
+                    "int4 fc {out_dim}x{in_dim} B{batch} out[{i}]: naive {s} vs {isa} {v}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sparse_fc_kernel_bit_exact_vs_naive_oracle_on_every_isa() {
+    prop::check("sparse-fc-oracle", 30, |g| {
+        let in_dim = 1 + g.index(90);
+        let out_dim = 1 + g.index(40);
+        let batch = [1, 3, 16, 64][g.index(4)];
+        let w = g.vec_of(in_dim * out_dim, |r| r.uniform(-0.5, 0.5));
+        let bias = g.vec_of(out_dim, |r| r.uniform(-0.2, 0.2));
+        let qw = prune_quantize_rows_2of4(&w, out_dim, in_dim);
+        let xs = g.vec_of(batch * in_dim, |r| r.uniform(-1.0, 1.0));
+        let mut want = vec![0.0f32; batch * out_dim];
+        gemm::fc_batch_int4_sparse_naive_into(
+            &qw.vals, &qw.idxs, &qw.scale, &bias, &xs, batch, &mut want,
+        );
+        for isa in isas() {
+            let mut got = vec![0.0f32; batch * out_dim];
+            dispatch::with_forced_isa(isa, || {
+                gemm::fc_batch_int4_sparse_into(
+                    &qw.vals, &qw.idxs, &qw.scale, &bias, &xs, batch, &mut got,
+                );
+            });
+            for (i, (s, v)) in want.iter().zip(&got).enumerate() {
+                asrpu::prop_assert!(
+                    s.to_bits() == v.to_bits(),
+                    "sparse fc {out_dim}x{in_dim} B{batch} out[{i}]: naive {s} vs {isa} {v}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn int4_conv_kernel_bit_exact_vs_naive_oracle_on_every_isa() {
+    prop::check("int4-conv-oracle", 25, |g| {
+        let in_ch = 1 + g.index(3);
+        let out_ch = 1 + g.index(3);
+        let kw = 1 + g.index(5);
+        let width = 1 + g.index(40);
+        let t_out = 1 + g.index(3);
+        let stride = 1 + g.index(2);
+        let batch = [1, 3, 16][g.index(3)];
+        let w = g.vec_of(out_ch * in_ch * kw, |r| r.uniform(-0.5, 0.5));
+        let bias = g.vec_of(out_ch, |r| r.uniform(-0.2, 0.2));
+        let qw = quantize_rows_int4(&w, out_ch, in_ch * kw);
+        let ext_len = (kw - 1 + t_out * stride) * batch * in_ch * width;
+        let ext = g.vec_of(ext_len, |r| r.uniform(-1.0, 1.0));
+        let mut want = vec![0.0f32; t_out * batch * out_ch * width];
+        gemm::conv_steps_int4_naive_into(
+            &qw.packed, &qw.scale, &qw.zp, &bias, &ext, t_out, stride, batch, in_ch, out_ch,
+            kw, width, &mut want,
+        );
+        for isa in isas() {
+            let mut got = vec![0.0f32; want.len()];
+            let mut tmp = Vec::new();
+            dispatch::with_forced_isa(isa, || {
+                gemm::conv_steps_int4_into(
+                    &qw.packed, &qw.scale, &qw.zp, &bias, &ext, t_out, stride, batch, in_ch,
+                    out_ch, kw, width, &mut tmp, &mut got,
+                );
+            });
+            for (i, (s, v)) in want.iter().zip(&got).enumerate() {
+                asrpu::prop_assert!(
+                    s.to_bits() == v.to_bits(),
+                    "int4 conv {out_ch}x{in_ch}x{kw} w{width} B{batch} out[{i}]: \
+                     naive {s} vs {isa} {v}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sparse_conv_kernel_bit_exact_vs_naive_oracle_on_every_isa() {
+    prop::check("sparse-conv-oracle", 25, |g| {
+        let in_ch = 1 + g.index(3);
+        let out_ch = 1 + g.index(3);
+        let kw = 1 + g.index(5);
+        let width = 1 + g.index(40);
+        let t_out = 1 + g.index(3);
+        let stride = 1 + g.index(2);
+        let batch = [1, 3, 16][g.index(3)];
+        let w = g.vec_of(out_ch * in_ch * kw, |r| r.uniform(-0.5, 0.5));
+        let bias = g.vec_of(out_ch, |r| r.uniform(-0.2, 0.2));
+        let qw = prune_quantize_rows_2of4(&w, out_ch, in_ch * kw);
+        let ext_len = (kw - 1 + t_out * stride) * batch * in_ch * width;
+        let ext = g.vec_of(ext_len, |r| r.uniform(-1.0, 1.0));
+        let mut want = vec![0.0f32; t_out * batch * out_ch * width];
+        gemm::conv_steps_int4_sparse_naive_into(
+            &qw.vals, &qw.idxs, &qw.scale, &bias, &ext, t_out, stride, batch, in_ch, out_ch,
+            kw, width, &mut want,
+        );
+        for isa in isas() {
+            let mut got = vec![0.0f32; want.len()];
+            dispatch::with_forced_isa(isa, || {
+                gemm::conv_steps_int4_sparse_into(
+                    &qw.vals, &qw.idxs, &qw.scale, &bias, &ext, t_out, stride, batch, in_ch,
+                    out_ch, kw, width, &mut got,
+                );
+            });
+            for (i, (s, v)) in want.iter().zip(&got).enumerate() {
+                asrpu::prop_assert!(
+                    s.to_bits() == v.to_bits(),
+                    "sparse conv {out_ch}x{in_ch}x{kw} w{width} B{batch} out[{i}]: \
+                     naive {s} vs {isa} {v}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn mixed_precision_transcripts_are_isa_invariant() {
+    // The kernel-level bit-exactness contract composed end to end: a
+    // mixed int4/sparse/int8 engine must produce identical transcripts
+    // under every ISA, because each layer's logits are bit-identical.
+    let d = dispatch::detect();
+    if d == KernelIsa::Scalar {
+        eprintln!("no SIMD kernel ISA on this host; nothing to compare");
+        return;
+    }
+    let map = PrecisionMap::parse("int4,g0.sub=int4_sparse,output.fc=int8").unwrap();
+    let engine = Engine::builder()
+        .native(TdsModel::random(ModelConfig::tiny_tds(), 7))
+        .precision_map(map)
+        .build()
+        .unwrap();
+    let synth = Synthesizer::default();
+    for seed in [1u64, 8, 21] {
+        let mut rng = Rng::new(seed);
+        let words: Vec<u32> = vec![(seed % 10) as u32, ((seed + 3) % 10) as u32];
+        let u = synth.render(&words, &mut rng);
+        let scalar = dispatch::with_forced_isa(KernelIsa::Scalar, || {
+            engine.decode_utterance(&u.samples).unwrap().0.text
+        });
+        let simd = dispatch::with_forced_isa(d, || {
+            engine.decode_utterance(&u.samples).unwrap().0.text
+        });
+        assert_eq!(scalar, simd, "seed {seed}: transcript changed under {d}");
+    }
+}
+
+#[test]
+fn simulator_charges_at_least_half_the_weight_dma_for_int4_vs_int8() {
+    // The acceptance criterion the whole format exists for: on the paper
+    // configuration, serving the AM at int4 must cut the simulator's
+    // per-step weight DMA for the quantizable stages (conv/FC; LN stays
+    // f32) to at most half of int8's, and 2:4 sparsity must cut it
+    // further still.
+    let model = ModelConfig::paper_tds();
+    let accel = AccelConfig::paper();
+    let hyp = HypWorkload::default();
+    let weight_dma = |p: Precision| -> u64 {
+        let pipe = PipelineDesc::for_model_mixed(&model, PrecisionMap::uniform(p));
+        build_step_kernels(&pipe, &accel, &hyp, 1)
+            .iter()
+            .filter(|k| matches!(k.class, KernelClass::Conv | KernelClass::Fc))
+            .map(|k| k.model_bytes)
+            .sum()
+    };
+    let (int8, int4, sparse) = (
+        weight_dma(Precision::Int8),
+        weight_dma(Precision::Int4),
+        weight_dma(Precision::Int4Sparse),
+    );
+    assert!(int8 >= 2 * int4, "int4 DMA {int4} not ≤ half of int8 {int8}");
+    assert!(int4 > sparse, "2:4 sparse DMA {sparse} not below int4 {int4}");
+    assert!(sparse > 0, "sparse stages still stream their kept weights");
 }
 
 #[test]

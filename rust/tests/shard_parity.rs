@@ -105,8 +105,8 @@ fn decode_sharded(pool: &ShardPool, utts: &[Vec<f32>], chunk: usize) -> Vec<(Str
 
 #[test]
 fn sharded_transcripts_match_single_worker_bit_exactly() {
-    // The acceptance criterion: N ∈ {2, 4} workers, f32 and int8.
-    for precision in [Precision::F32, Precision::Int8] {
+    // The acceptance criterion: N ∈ {2, 4} workers, f32/int8/int4.
+    for precision in [Precision::F32, Precision::Int8, Precision::Int4] {
         let reference = reference_engine(precision);
         let utts = utterances(8, 40);
         let expected = reference_transcripts(&reference, &utts);

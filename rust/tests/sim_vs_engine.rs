@@ -40,6 +40,7 @@ fn ideal_is_lower_bound_of_detailed_under_random_configs() {
             n_hyps: 1 + g.index(384) as u64,
             avg_children: 1.0 + g.rng.f64() * 20.0,
             word_commit_frac: g.rng.f64() * 0.5,
+            ..Default::default()
         };
         let ideal = simulate_step(&model, &accel, &hyp, SimMode::Ideal);
         let detailed = simulate_step(&model, &accel, &hyp, SimMode::Detailed);

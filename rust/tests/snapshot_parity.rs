@@ -40,7 +40,7 @@ fn utterance(seed: u64) -> Vec<f32> {
 /// bit-identical transcripts vs the uninterrupted scalar decode.
 #[test]
 fn random_snapshot_points_are_transcript_invisible() {
-    for precision in [Precision::F32, Precision::Int8] {
+    for precision in [Precision::F32, Precision::Int8, Precision::Int4, Precision::Int4Sparse] {
         let e = engine(precision);
         let w = e.clone_worker().expect("native engines clone").into_engine();
         prop::check("snapshot-parity", 4, |g| {
@@ -147,11 +147,11 @@ fn pool(precision: Precision, workers: usize, rebalance: usize) -> ShardPool {
 }
 
 /// The acceptance criterion: sessions with ≥1 executed decoding step
-/// migrate between shards (N ∈ {2, 4} workers, f32 + int8) and finish
+/// migrate between shards (N ∈ {2, 4} workers, f32/int8/int4) and finish
 /// bit-identical to the unmigrated single-engine decode.
 #[test]
 fn live_migration_is_bit_identical_across_worker_counts() {
-    for precision in [Precision::F32, Precision::Int8] {
+    for precision in [Precision::F32, Precision::Int8, Precision::Int4] {
         let reference = engine(precision);
         for workers in [2usize, 4] {
             let p = pool(precision, workers, 2);
@@ -209,10 +209,10 @@ fn live_migration_is_bit_identical_across_worker_counts() {
 /// crash): no session may be lost, every orphan recovers from its
 /// checkpoints onto survivors, and — because every feed had flushed and
 /// checkpointed before its reply — final transcripts stay bit-identical
-/// to the uninterrupted decode. N ∈ {2, 4} workers, f32 + int8.
+/// to the uninterrupted decode. N ∈ {2, 4} workers, f32/int8/sparse-int4.
 #[test]
 fn killed_worker_loses_no_sessions_and_transcripts_match() {
-    for precision in [Precision::F32, Precision::Int8] {
+    for precision in [Precision::F32, Precision::Int8, Precision::Int4Sparse] {
         let reference = engine(precision);
         for workers in [2usize, 4] {
             let p = pool(precision, workers, 0); // rebalancing off
